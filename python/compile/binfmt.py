@@ -1,0 +1,82 @@
+"""Artifact binary tensor format shared with the Rust loaders.
+
+Layout (little-endian):
+
+    magic   4 bytes  b"IMPT"
+    dtype   u8       0=i8 1=i16 2=i32 3=f32 4=i64 5=f64 6=u8
+    rank    u8
+    dims    rank * u32
+    data    prod(dims) * sizeof(dtype), row-major
+
+A companion ``manifest.txt`` carries ``key=value`` metadata lines.
+The format is deliberately dependency-free so the offline Rust side can
+read it with std only (see ``rust/src/data/binfmt.rs``).
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"IMPT"
+
+_DTYPES = {
+    np.dtype(np.int8): 0,
+    np.dtype(np.int16): 1,
+    np.dtype(np.int32): 2,
+    np.dtype(np.float32): 3,
+    np.dtype(np.int64): 4,
+    np.dtype(np.float64): 5,
+    np.dtype(np.uint8): 6,
+}
+_CODES = {v: k for k, v in _DTYPES.items()}
+
+
+def write_tensor(path: str | Path, arr: np.ndarray) -> None:
+    """Serialize a numpy array to the IMPT format."""
+    arr = np.ascontiguousarray(arr)
+    if arr.dtype not in _DTYPES:
+        raise TypeError(f"unsupported dtype {arr.dtype}")
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+        f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+        f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read_tensor(path: str | Path) -> np.ndarray:
+    """Deserialize an IMPT tensor."""
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        dtype_code, rank = struct.unpack("<BB", f.read(2))
+        dims = struct.unpack(f"<{rank}I", f.read(4 * rank))
+        dt = _CODES[dtype_code].newbyteorder("<")
+        n = int(np.prod(dims)) if rank else 1
+        data = np.frombuffer(f.read(n * dt.itemsize), dtype=dt)
+        return data.reshape(dims).astype(_CODES[dtype_code])
+
+
+def write_manifest(path: str | Path, entries: dict) -> None:
+    """Write key=value metadata lines (stable order)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w") as f:
+        for k in sorted(entries):
+            v = entries[k]
+            f.write(f"{k}={v}\n")
+
+
+def read_manifest(path: str | Path) -> dict:
+    out = {}
+    for line in Path(path).read_text().splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        k, _, v = line.partition("=")
+        out[k] = v
+    return out

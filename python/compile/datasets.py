@@ -1,0 +1,180 @@
+"""Synthetic datasets standing in for IMDB+GloVe and MNIST.
+
+The environment has no network access, so the paper's corpora cannot be
+downloaded. These generators produce structurally-equivalent workloads
+(DESIGN.md §1 documents the substitution):
+
+* **Sentiment** — a vocabulary of ``vocab_size`` pseudo-words, each with
+  a fixed 100-d embedding (the "GloVe" stand-in). A latent sentiment
+  direction is planted in embedding space: polar words' embeddings lean
+  ±along it. A review is a variable-length word sequence whose label is
+  the sign of its summed polarity (plus distractor words and noise), so
+  classifying it requires *integrating evidence across the sequence* —
+  the same sequential-memory demand the paper puts on V_MEM.
+
+* **Digits** — procedurally rendered 28×28 glyphs (10 classes) from
+  stroke skeletons with random shift/jitter/noise/thickness, an MNIST
+  stand-in exercising the identical Conv-SNN path.
+
+Everything is deterministic given the seed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+EMB_DIM = 100
+
+
+@dataclass
+class SentimentData:
+    embeddings: np.ndarray  # [vocab, 100] f32
+    polarity: np.ndarray  # [vocab] i8 in {-1, 0, +1}
+    train_seqs: list[np.ndarray]  # word-id arrays
+    train_labels: np.ndarray  # [n] u8 (0/1)
+    test_seqs: list[np.ndarray]
+    test_labels: np.ndarray
+
+
+def make_sentiment(
+    vocab_size: int = 2000,
+    n_train: int = 4000,
+    n_test: int = 1000,
+    min_len: int = 5,
+    max_len: int = 15,
+    polar_frac: float = 0.3,
+    seed: int = 7,
+) -> SentimentData:
+    """Generate the synthetic sentiment corpus."""
+    rng = np.random.default_rng(seed)
+
+    # Embedding table: random base + planted sentiment direction.
+    base = rng.normal(0.0, 0.35, size=(vocab_size, EMB_DIM)).astype(np.float32)
+    direction = rng.normal(0.0, 1.0, size=(EMB_DIM,))
+    direction /= np.linalg.norm(direction)
+    polarity = np.zeros(vocab_size, dtype=np.int8)
+    n_polar = int(vocab_size * polar_frac)
+    polar_ids = rng.choice(vocab_size, size=n_polar, replace=False)
+    signs = rng.choice([-1, 1], size=n_polar)
+    polarity[polar_ids] = signs
+    strength = rng.uniform(0.4, 1.0, size=(vocab_size, 1)).astype(np.float32)
+    emb = base + polarity[:, None] * strength * direction[None, :].astype(np.float32)
+    emb = emb.astype(np.float32)
+
+    neutral_ids = np.where(polarity == 0)[0]
+    pos_ids = np.where(polarity == 1)[0]
+    neg_ids = np.where(polarity == -1)[0]
+
+    def gen_split(n: int):
+        seqs, labels = [], []
+        for _ in range(n):
+            label = int(rng.integers(0, 2))
+            length = int(rng.integers(min_len, max_len + 1))
+            # Draw counts: the labelled class dominates but the other
+            # polarity also appears (mixed evidence must be integrated).
+            n_dom = int(rng.integers(2, max(3, length // 2 + 2)))
+            n_opp = int(rng.integers(0, max(1, n_dom - 1)))
+            n_neu = max(0, length - n_dom - n_opp)
+            dom = pos_ids if label == 1 else neg_ids
+            opp = neg_ids if label == 1 else pos_ids
+            words = np.concatenate(
+                [
+                    rng.choice(dom, size=n_dom),
+                    rng.choice(opp, size=n_opp),
+                    rng.choice(neutral_ids, size=n_neu),
+                ]
+            )
+            rng.shuffle(words)
+            seqs.append(words.astype(np.int32))
+            labels.append(label)
+        return seqs, np.array(labels, dtype=np.uint8)
+
+    train_seqs, train_labels = gen_split(n_train)
+    test_seqs, test_labels = gen_split(n_test)
+    return SentimentData(emb, polarity, train_seqs, train_labels, test_seqs, test_labels)
+
+
+# ---------------------------------------------------------------------------
+# Digits
+# ---------------------------------------------------------------------------
+
+# Stroke skeletons on a 7-point grid (x, y in [0, 1]), one polyline list
+# per digit. Rendered with thickness + jitter into 28×28.
+_SKELETONS: dict[int, list[list[tuple[float, float]]]] = {
+    0: [[(0.3, 0.15), (0.7, 0.15), (0.85, 0.4), (0.85, 0.6), (0.7, 0.85), (0.3, 0.85), (0.15, 0.6), (0.15, 0.4), (0.3, 0.15)]],
+    1: [[(0.35, 0.25), (0.55, 0.12), (0.55, 0.88)], [(0.35, 0.88), (0.75, 0.88)]],
+    2: [[(0.2, 0.3), (0.35, 0.12), (0.65, 0.12), (0.8, 0.3), (0.75, 0.5), (0.2, 0.88), (0.8, 0.88)]],
+    3: [[(0.2, 0.15), (0.75, 0.15), (0.45, 0.45), (0.8, 0.65), (0.7, 0.88), (0.25, 0.9)]],
+    4: [[(0.65, 0.88), (0.65, 0.12), (0.18, 0.6), (0.85, 0.6)]],
+    5: [[(0.8, 0.12), (0.25, 0.12), (0.22, 0.45), (0.65, 0.45), (0.8, 0.65), (0.65, 0.88), (0.2, 0.85)]],
+    6: [[(0.7, 0.12), (0.35, 0.35), (0.2, 0.65), (0.35, 0.88), (0.7, 0.85), (0.8, 0.62), (0.55, 0.5), (0.25, 0.6)]],
+    7: [[(0.18, 0.12), (0.82, 0.12), (0.45, 0.88)]],
+    8: [[(0.5, 0.12), (0.75, 0.28), (0.3, 0.6), (0.25, 0.8), (0.5, 0.9), (0.75, 0.8), (0.3, 0.28), (0.5, 0.12)]],
+    9: [[(0.75, 0.4), (0.5, 0.5), (0.25, 0.38), (0.3, 0.15), (0.6, 0.1), (0.75, 0.3), (0.7, 0.7), (0.5, 0.9)]],
+}
+
+
+def _render_digit(digit: int, rng: np.random.Generator) -> np.ndarray:
+    img = np.zeros((28, 28), dtype=np.float32)
+    dx, dy = rng.uniform(-2.0, 2.0, size=2)
+    scale = rng.uniform(0.85, 1.1)
+    thick = rng.uniform(0.7, 1.4)
+    for stroke in _SKELETONS[digit]:
+        pts = np.array(stroke, dtype=np.float64)
+        pts += rng.normal(0, 0.02, size=pts.shape)  # jitter control points
+        # densify the polyline
+        dense = []
+        for a, b in zip(pts[:-1], pts[1:]):
+            for t in np.linspace(0, 1, 20):
+                dense.append(a + t * (b - a))
+        for p in dense:
+            cx = (p[0] - 0.5) * scale * 24 + 13.5 + dx
+            cy = (p[1] - 0.5) * scale * 24 + 13.5 + dy
+            x0, x1 = int(np.floor(cx - thick)), int(np.ceil(cx + thick))
+            y0, y1 = int(np.floor(cy - thick)), int(np.ceil(cy + thick))
+            for yy in range(max(0, y0), min(28, y1 + 1)):
+                for xx in range(max(0, x0), min(28, x1 + 1)):
+                    d2 = (xx - cx) ** 2 + (yy - cy) ** 2
+                    img[yy, xx] = max(img[yy, xx], float(np.exp(-d2 / (thick**2))))
+    img += rng.normal(0, 0.03, size=img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+@dataclass
+class DigitsData:
+    train_x: np.ndarray  # [n, 28, 28] f32
+    train_y: np.ndarray  # [n] u8
+    test_x: np.ndarray
+    test_y: np.ndarray
+
+
+def make_digits(n_train: int = 3000, n_test: int = 1000, seed: int = 11) -> DigitsData:
+    """Generate the synthetic digit dataset."""
+    rng = np.random.default_rng(seed)
+
+    def split(n):
+        xs = np.zeros((n, 28, 28), dtype=np.float32)
+        ys = np.zeros(n, dtype=np.uint8)
+        for i in range(n):
+            d = int(rng.integers(0, 10))
+            xs[i] = _render_digit(d, rng)
+            ys[i] = d
+        return xs, ys
+
+    train_x, train_y = split(n_train)
+    test_x, test_y = split(n_test)
+    return DigitsData(train_x, train_y, test_x, test_y)
+
+
+def pad_sequences(seqs: list[np.ndarray], max_len: int, pad_id: int = -1):
+    """Pad word-id sequences to [n, max_len] plus a length vector."""
+    n = len(seqs)
+    out = np.full((n, max_len), pad_id, dtype=np.int32)
+    lens = np.zeros(n, dtype=np.int32)
+    for i, s in enumerate(seqs):
+        m = min(len(s), max_len)
+        out[i, :m] = s[:m]
+        lens[i] = m
+    return out, lens

@@ -1,0 +1,83 @@
+"""Pure-jnp oracle for the fused SNN timestep — the correctness
+reference the Pallas kernel (and, via exported test vectors, the Rust
+macro simulator) is validated against.
+
+Semantics are hardware-exact (see DESIGN.md §5):
+
+* membrane potentials live in 11-bit two's complement and *wrap* on
+  overflow (the ripple adder drops the final carry);
+* the threshold comparison itself goes through the same adder, so the
+  spike decision is ``wrap11(V − θ) ≥ 0`` — including the wraparound
+  artifact for deeply-negative V;
+* neuron modes follow the paper's instruction sequences: IF (hard
+  reset), LIF (subtractive leak, hard reset), RMP (soft reset).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+V_BITS = 11
+W_BITS = 6
+
+IF, LIF, RMP = 0, 1, 2
+
+
+def wrap11(x: jnp.ndarray) -> jnp.ndarray:
+    """Wrap int32 values into 11-bit two's complement [-1024, 1023].
+
+    Exactly what an 11-bit ripple-carry adder computes when the final
+    carry-out is dropped.
+    """
+    m = 1 << V_BITS
+    half = m >> 1
+    return ((x % m) + m + half) % m - half
+
+
+def spike_of(v: jnp.ndarray, threshold) -> jnp.ndarray:
+    """Hardware SpikeCheck: sign of the in-array subtraction (wrapped)."""
+    return (wrap11(v - threshold) >= 0).astype(jnp.int32)
+
+
+def snn_step_ref(
+    spikes: jnp.ndarray,  # [B, M] int32 in {0,1}
+    weights: jnp.ndarray,  # [M, N] int32 (6-bit signed values)
+    v: jnp.ndarray,  # [B, N] int32 (11-bit wrapped)
+    threshold: int,
+    mode: int = RMP,
+    leak: int = 0,
+    reset: int = 0,
+):
+    """One fused layer timestep: accumulate → (leak) → threshold → reset.
+
+    Returns ``(v_next, out_spikes)``, both int32, with ``v_next`` in
+    [-1024, 1023]. Accumulate-then-wrap equals the hardware's
+    wrap-after-each-add because wrapping is mod-2^11 arithmetic.
+    """
+    acc = jnp.matmul(spikes, weights, preferred_element_type=jnp.int32)
+    v1 = wrap11(v + acc)
+    if mode == LIF:
+        v1 = wrap11(v1 - leak)
+    s = spike_of(v1, threshold)
+    if mode == RMP:
+        v2 = jnp.where(s == 1, wrap11(v1 - threshold), v1)
+    else:  # IF and LIF share the hard reset
+        v2 = jnp.where(s == 1, jnp.full_like(v1, reset), v1)
+    return v2, s
+
+
+def encoder_step_ref(
+    x_q: jnp.ndarray,  # [B, M] int32 quantized input current
+    v: jnp.ndarray,  # [B, M] int32 (32-bit, off-macro: no 11-bit wrap)
+    threshold,
+):
+    """Direct-input spike encoder step (the network's input layer).
+
+    The encoder is *not* mapped on IMPULSE (the paper: "the input layer
+    acts as spike-encoder"), so its state is plain int32 with RMP-style
+    soft reset and no wraparound.
+    """
+    v1 = v + x_q
+    s = (v1 >= threshold).astype(jnp.int32)
+    v2 = jnp.where(s == 1, v1 - threshold, v1)
+    return v2, s

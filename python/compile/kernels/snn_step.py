@@ -1,0 +1,173 @@
+"""Pallas kernel for the fused SNN layer timestep (Layer 1).
+
+The paper's insight — fuse the recurrent state (V_MEM) with the weights
+so a timestep's accumulate → threshold → reset chain happens *in place*,
+with input-spike sparsity gating the work — maps onto the TPU memory
+hierarchy as a single kernel that keeps the weight tile and the
+membrane-potential tile resident in VMEM and performs the whole update
+without intermediate round-trips to HBM (DESIGN.md §2
+Hardware-Adaptation).
+
+Tiling: the grid walks output-neuron tiles of width ``block_n`` (the
+analogue of the macro's six 12-column fields) and batch tiles of height
+``block_b``. Each program instance sees:
+
+* ``spikes  [block_b, M]`` — the binary input spike slab,
+* ``weights [M, block_n]`` — its weight stripe (VMEM-resident),
+* ``v       [block_b, block_n]`` — its membrane-potential tile,
+
+and writes the updated potentials plus the output spikes. The MXU path
+computes the spike-gated accumulation as an integer matmul (spikes are
+{0,1}, so the matmul *is* the sparsity-masked column sum the silicon
+performs with AccW2V instructions).
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is also what
+``aot.py`` exports for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import IF, LIF, RMP, V_BITS
+
+
+def _wrap11(x):
+    # Bit-twiddled wrap (cheaper than the mod form inside the kernel):
+    # interpret the low 11 bits as two's complement.
+    m = (1 << V_BITS) - 1
+    half = 1 << (V_BITS - 1)
+    return ((x & m) ^ half) - half
+
+
+def _snn_step_kernel(s_ref, w_ref, v_ref, thr_ref, leak_ref, reset_ref,
+                     v_out_ref, s_out_ref, *, mode: int):
+    """One (batch-tile × neuron-tile) fused update."""
+    spikes = s_ref[...]
+    weights = w_ref[...]
+    v = v_ref[...]
+    thr = thr_ref[0, 0]
+    leak = leak_ref[0, 0]
+    reset = reset_ref[0, 0]
+
+    # AccW2V: spike-gated column accumulation == integer matmul on the
+    # {0,1} spike slab. preferred_element_type keeps the MXU path int32.
+    acc = jnp.matmul(spikes, weights, preferred_element_type=jnp.int32)
+    v1 = _wrap11(v + acc)
+    if mode == LIF:
+        v1 = _wrap11(v1 - leak)
+    # SpikeCheck: the comparison itself rides the 11-bit adder.
+    s = (_wrap11(v1 - thr) >= 0).astype(jnp.int32)
+    if mode == RMP:
+        v2 = jnp.where(s == 1, _wrap11(v1 - thr), v1)
+    else:
+        v2 = jnp.where(s == 1, jnp.broadcast_to(reset, v1.shape), v1)
+    v_out_ref[...] = v2
+    s_out_ref[...] = s
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "block_b", "block_n"),
+)
+def snn_step(
+    spikes: jnp.ndarray,  # [B, M] int32 {0,1}
+    weights: jnp.ndarray,  # [M, N] int32
+    v: jnp.ndarray,  # [B, N] int32
+    threshold,
+    mode: int = RMP,
+    leak=0,
+    reset=0,
+    block_b: int = 8,
+    block_n: int = 64,
+):
+    """Fused SNN layer timestep as a Pallas call.
+
+    Returns ``(v_next, out_spikes)``. Matches ``ref.snn_step_ref``
+    bit-exactly for all inputs (hypothesis-swept in the test suite).
+    """
+    b, m = spikes.shape
+    m2, n = weights.shape
+    assert m == m2, f"fan-in mismatch {m} vs {m2}"
+    assert v.shape == (b, n)
+
+    bb = min(block_b, b)
+    bn = min(block_n, n)
+    grid = (pl.cdiv(b, bb), pl.cdiv(n, bn))
+
+    thr_a = jnp.asarray(threshold, jnp.int32).reshape(1, 1)
+    leak_a = jnp.asarray(leak, jnp.int32).reshape(1, 1)
+    reset_a = jnp.asarray(reset, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(_snn_step_kernel, mode=mode)
+    v_next, s_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((m, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+        ],
+        interpret=True,
+    )(spikes, weights, v, thr_a, leak_a, reset_a)
+    return v_next, s_out
+
+
+def _encoder_kernel(x_ref, v_ref, thr_ref, v_out_ref, s_out_ref):
+    x = x_ref[...]
+    v = v_ref[...]
+    thr = thr_ref[0, 0]
+    v1 = v + x
+    s = (v1 >= thr).astype(jnp.int32)
+    v_out_ref[...] = jnp.where(s == 1, v1 - thr, v1)
+    s_out_ref[...] = s
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def encoder_step(
+    x_q: jnp.ndarray,  # [B, M] int32
+    v: jnp.ndarray,  # [B, M] int32
+    threshold,
+    block_b: int = 8,
+):
+    """Direct-input spike-encoder step as a Pallas call (off-macro
+    layer; plain int32, RMP-style soft reset, no 11-bit wrap)."""
+    b, m = x_q.shape
+    bb = min(block_b, b)
+    grid = (pl.cdiv(b, bb),)
+    thr_a = jnp.asarray(threshold, jnp.int32).reshape(1, 1)
+    v_next, s = pl.pallas_call(
+        _encoder_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, m), lambda i: (i, 0)),
+            pl.BlockSpec((bb, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, m), lambda i: (i, 0)),
+            pl.BlockSpec((bb, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+        ],
+        interpret=True,
+    )(x_q, v, thr_a)
+    return v_next, s

@@ -1,0 +1,150 @@
+"""The paper's comparison baseline: a 2-layer LSTM (100→128→128→1,
+no biases — 247,808 ≈ 247.8K parameters, exactly the count the paper
+reports, 8.5× the SNN's 29.3K).
+
+Trained on the same synthetic corpus; its weights and accuracy are
+exported so the Rust baseline (`rust/src/baselines/lstm.rs`) can run
+the identical model for the Fig 9(b) comparison.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .datasets import SentimentData, pad_sequences
+from .snn_train import adam_init, adam_update
+
+HIDDEN = 128
+
+
+def init_lstm_params(key, emb=100, hidden=HIDDEN):
+    ks = jax.random.split(key, 5)
+    glorot = jax.nn.initializers.glorot_uniform()
+    return {
+        # layer 1: input 100 → hidden 128; 4 gates stacked [4H]
+        "wx1": glorot(ks[0], (emb, 4 * hidden), jnp.float32),
+        "wh1": glorot(ks[1], (hidden, 4 * hidden), jnp.float32),
+        # layer 2: 128 → 128
+        "wx2": glorot(ks[2], (hidden, 4 * hidden), jnp.float32),
+        "wh2": glorot(ks[3], (hidden, 4 * hidden), jnp.float32),
+        "w_out": glorot(ks[4], (hidden, 1), jnp.float32),
+    }
+
+
+def count_lstm_params(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+def _cell(x, h, c, wx, wh):
+    z = x @ wx + h @ wh
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f + 1.0), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c = f * c + i * g
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+def lstm_forward(params, emb_seq, mask):
+    """emb_seq: [B, L, 100]; mask: [B, L]. Returns logits [B]."""
+    b, l, _ = emb_seq.shape
+    h1 = jnp.zeros((b, HIDDEN))
+    c1 = jnp.zeros((b, HIDDEN))
+    h2 = jnp.zeros((b, HIDDEN))
+    c2 = jnp.zeros((b, HIDDEN))
+
+    def step(carry, inputs):
+        h1, c1, h2, c2 = carry
+        x, m = inputs
+        nh1, nc1 = _cell(x, h1, c1, params["wx1"], params["wh1"])
+        nh2, nc2 = _cell(nh1, h2, c2, params["wx2"], params["wh2"])
+        m1 = m[:, None]
+        carry = (
+            m1 * nh1 + (1 - m1) * h1,
+            m1 * nc1 + (1 - m1) * c1,
+            m1 * nh2 + (1 - m1) * h2,
+            m1 * nc2 + (1 - m1) * c2,
+        )
+        return carry, None
+
+    (h1, c1, h2, c2), _ = jax.lax.scan(
+        step, (h1, c1, h2, c2), (jnp.swapaxes(emb_seq, 0, 1), jnp.swapaxes(mask, 0, 1))
+    )
+    return (h2 @ params["w_out"])[:, 0]
+
+
+def lstm_loss(params, emb_seq, mask, labels):
+    logits = lstm_forward(params, emb_seq, mask)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    ), logits
+
+
+def train_lstm(
+    data: SentimentData,
+    epochs: int = 5,
+    batch: int = 64,
+    lr: float = 2e-3,
+    max_len: int = 15,
+    seed: int = 1,
+    log=print,
+):
+    key = jax.random.PRNGKey(seed)
+    params = init_lstm_params(key)
+    opt = adam_init(params)
+    seqs, _ = pad_sequences(data.train_seqs, max_len)
+    labels = data.train_labels
+    emb = data.embeddings
+
+    @jax.jit
+    def step(params, opt, e, m, y):
+        (loss, logits), grads = jax.value_and_grad(lstm_loss, has_aux=True)(
+            params, e, m, y
+        )
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        acc = jnp.mean(((logits >= 0).astype(jnp.uint8) == y).astype(jnp.float32))
+        return params, opt, loss, acc
+
+    n = len(seqs)
+    rng = np.random.default_rng(seed)
+    history = []
+    for epoch in range(epochs):
+        order = rng.permutation(n)
+        t0 = time.time()
+        tot_loss, tot_acc, nb = 0.0, 0.0, 0
+        for i in range(0, n - batch + 1, batch):
+            ix = order[i : i + batch]
+            e = emb[np.clip(seqs[ix], 0, None)]
+            m = (seqs[ix] >= 0).astype(np.float32)
+            params, opt, loss, acc = step(
+                params, opt, jnp.asarray(e), jnp.asarray(m), jnp.asarray(labels[ix])
+            )
+            tot_loss += float(loss)
+            tot_acc += float(acc)
+            nb += 1
+        history.append({"epoch": epoch, "loss": tot_loss / nb, "acc": tot_acc / nb})
+        log(
+            f"[lstm] epoch {epoch}: loss={tot_loss/nb:.4f} acc={tot_acc/nb:.4f} "
+            f"({time.time()-t0:.1f}s)"
+        )
+    return params, history
+
+
+def eval_lstm(params, data: SentimentData, max_len: int = 15, batch: int = 200):
+    seqs, _ = pad_sequences(data.test_seqs, max_len)
+    emb = data.embeddings
+    fwd = jax.jit(lstm_forward)
+    correct = 0
+    for i in range(0, len(seqs), batch):
+        sl = seqs[i : i + batch]
+        e = emb[np.clip(sl, 0, None)]
+        m = (sl >= 0).astype(np.float32)
+        logits = fwd(params, jnp.asarray(e), jnp.asarray(m))
+        preds = (np.asarray(logits) >= 0).astype(np.uint8)
+        correct += int((preds == data.test_labels[i : i + batch]).sum())
+    return correct / len(seqs)

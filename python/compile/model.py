@@ -1,0 +1,450 @@
+"""Layer-2 JAX models: the paper's SNNs in float (training) and in
+hardware-exact integer form (inference, calling the Pallas kernel).
+
+Two networks, matching §III of the paper:
+
+* **Sentiment SNN** — input layer (100 neurons, spike encoder), two FC
+  layers (128 RMP neurons each) mapped on IMPULSE, output neuron whose
+  membrane potential integrates evidence across the word sequence
+  (sign ⇒ sentiment). 29.3K trainable parameters.
+* **Digits SNN** — modified LeNet-5: Conv1 3×3 (spike encoder) with 14
+  channels, Conv2/Conv3 3×3×14 (fan-in 126 ≤ 128) and two FC layers
+  mapped on IMPULSE; 10 output neurons integrate class evidence.
+
+The float models use a triangular surrogate gradient (Diet-SNN) with
+trainable per-layer thresholds; RMP (soft-reset) neurons throughout.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.snn_step import encoder_step, snn_step
+
+# ---------------------------------------------------------------------------
+# Surrogate-gradient spike
+# ---------------------------------------------------------------------------
+
+SURROGATE_SCALE = 0.3  # Diet-SNN's linear surrogate scale
+
+
+@jax.custom_vjp
+def spike_fn(v, thr):
+    """Heaviside spike with triangular surrogate derivative."""
+    return (v >= thr).astype(jnp.float32)
+
+
+def _spike_fwd(v, thr):
+    return spike_fn(v, thr), (v, thr)
+
+
+def _spike_bwd(resid, g):
+    v, thr = resid
+    x = (v - thr) / jnp.maximum(thr, 1e-3)
+    grad = SURROGATE_SCALE * jnp.maximum(0.0, 1.0 - jnp.abs(x)) / jnp.maximum(thr, 1e-3)
+    gv = g * grad
+    # thr is a scalar per layer: reduce fully.
+    gthr = jnp.reshape(-jnp.sum(gv), jnp.shape(thr))
+    return gv, gthr
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+def rmp_update(v, x, thr):
+    """Float RMP neuron: integrate, fire, soft-reset. Returns (v', s)."""
+    v1 = v + x
+    s = spike_fn(v1, thr)
+    return v1 - s * thr, s
+
+
+# ---------------------------------------------------------------------------
+# Sentiment network — float training model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SentimentDims:
+    emb: int = 100
+    h1: int = 128
+    h2: int = 128
+    t_word: int = 10  # timesteps per word
+
+
+def init_sentiment_params(key, dims: SentimentDims = SentimentDims()):
+    k1, k2, k3 = jax.random.split(key, 3)
+    glorot = jax.nn.initializers.glorot_uniform()
+    return {
+        "w1": glorot(k1, (dims.emb, dims.h1), jnp.float32),
+        "w2": glorot(k2, (dims.h1, dims.h2), jnp.float32),
+        "w_out": glorot(k3, (dims.h2, 1), jnp.float32) * 0.5,
+        "log_thr_enc": jnp.log(jnp.asarray(1.0)),
+        "log_thr1": jnp.log(jnp.asarray(1.0)),
+        "log_thr2": jnp.log(jnp.asarray(1.0)),
+    }
+
+
+def count_sentiment_params(params) -> int:
+    """Trainable parameter count (the paper reports 29.3K)."""
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+def sentiment_forward_float(params, emb_seq, word_mask, dims: SentimentDims = SentimentDims()):
+    """Run the float SNN over a padded batch of embedded word sequences.
+
+    emb_seq:   [B, L, 100] embeddings (already gathered),
+    word_mask: [B, L] 1.0 for real words, 0.0 for padding.
+
+    Returns (v_out_final [B], aux dict with spike-rate stats and the
+    per-word output-potential trace [B, L]).
+    """
+    b, l, _ = emb_seq.shape
+    thr_e = jnp.exp(params["log_thr_enc"])
+    thr1 = jnp.exp(params["log_thr1"])
+    thr2 = jnp.exp(params["log_thr2"])
+
+    def word_step(carry, inputs):
+        v_e, v1, v2, v_o, ext = carry
+        x, m = inputs  # x: [B, 100], m: [B]
+
+        def tstep(c, _):
+            v_e, v1, v2, v_o, acc, ext = c
+            v_e, s0 = rmp_update(v_e, x * m[:, None], thr_e)
+            v1, s1 = rmp_update(v1, s0 @ params["w1"], thr1)
+            v2, s2 = rmp_update(v2, s1 @ params["w2"], thr2)
+            v_o = v_o + (s2 @ params["w_out"])[:, 0] * m
+            acc = acc + jnp.stack([s0.mean(), s1.mean(), s2.mean()])
+            # track per-layer |V| extremes (drives quantization scales
+            # and the negative-drift penalty)
+            ext = jnp.maximum(
+                ext,
+                jnp.stack(
+                    [jnp.abs(v1).max(), jnp.abs(v2).max(), jnp.abs(v_o).max()]
+                ),
+            )
+            return (v_e, v1, v2, v_o, acc, ext), None
+
+        (v_e, v1, v2, v_o, acc, ext), _ = jax.lax.scan(
+            tstep, (v_e, v1, v2, v_o, jnp.zeros(3), ext), None, length=dims.t_word
+        )
+        return (v_e, v1, v2, v_o, ext), (v_o, acc / dims.t_word)
+
+    init = (
+        jnp.zeros((b, dims.emb)),
+        jnp.zeros((b, dims.h1)),
+        jnp.zeros((b, dims.h2)),
+        jnp.zeros((b,)),
+        jnp.zeros(3),
+    )
+    (v_e, v1, v2, v_o, ext), (v_o_trace, rates) = jax.lax.scan(
+        word_step, init, (jnp.swapaxes(emb_seq, 0, 1), jnp.swapaxes(word_mask, 0, 1))
+    )
+    aux = {
+        "v_out_trace": jnp.swapaxes(v_o_trace, 0, 1),  # [B, L]
+        "spike_rates": rates.mean(axis=0),  # [3]
+        "v_extremes": ext,  # [3] max |V| of v1, v2, v_out
+        "final_v": (v1, v2),
+    }
+    return v_o, aux
+
+
+def sentiment_loss(params, emb_seq, word_mask, labels, rate_penalty=0.02,
+                   drift_penalty=0.01):
+    v_out, aux = sentiment_forward_float(params, emb_seq, word_mask)
+    logits = v_out * 0.5
+    labels_f = labels.astype(jnp.float32)
+    bce = jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels_f + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    # mild spike-rate penalty: pushes toward the paper's ~85% sparsity
+    rate = aux["spike_rates"].mean()
+    # negative-drift penalty: RMP neurons with persistent inhibitory
+    # drive sink without bound in float, but on the macro V wraps at
+    # −1024 and spuriously spikes. Penalize V sinking below −4·θ so the
+    # trained net fits the 11-bit rails after quantization.
+    thr1 = jnp.exp(params["log_thr1"])
+    thr2 = jnp.exp(params["log_thr2"])
+    v1, v2 = aux["final_v"]
+    drift = (
+        jnp.mean(jax.nn.relu(-v1 - 4.0 * thr1))
+        + jnp.mean(jax.nn.relu(-v2 - 4.0 * thr2))
+    )
+    return bce + rate_penalty * rate + drift_penalty * drift, (v_out, aux)
+
+
+# ---------------------------------------------------------------------------
+# Sentiment network — hardware-exact integer inference
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class QuantSentiment:
+    """Quantized model artifact (ints only — what the macro executes)."""
+
+    emb_q: np.ndarray  # [vocab, 100] i32 quantized embeddings
+    w1: np.ndarray  # [100, 128] i32 in [-32, 31]
+    w2: np.ndarray  # [128, 128] i32
+    w_out: np.ndarray  # [128, 1] i32
+    thr_enc: int
+    thr1: int
+    thr2: int
+
+    def params_i8(self):
+        return {
+            "w1": self.w1.astype(np.int8),
+            "w2": self.w2.astype(np.int8),
+            "w_out": self.w_out.astype(np.int8),
+        }
+
+
+def sentiment_step_int(w1, w2, w_out, thr_enc, thr1, thr2, x_q, v_e, v1, v2, v_o):
+    """One hardware-exact timestep of the quantized sentiment SNN.
+
+    All ints. The two FC layers and the output accumulation follow
+    IMPULSE semantics (11-bit wrap, RMP); the encoder is off-macro
+    (plain i32). This is the function AOT-exported to HLO for the Rust
+    runtime, built on the Pallas kernels.
+    """
+    v_e, s0 = encoder_step(x_q, v_e, thr_enc)
+    v1, s1 = snn_step(s0, w1, v1, thr1, mode=ref.RMP)
+    v2, s2 = snn_step(s1, w2, v2, thr2, mode=ref.RMP)
+    # Output neuron: mapped on the macro ⇒ 11-bit wrapped accumulate.
+    acc = jnp.matmul(s2, w_out, preferred_element_type=jnp.int32)
+    v_o = ref.wrap11(v_o + acc)
+    return v_e, v1, v2, v_o, (s0, s1, s2)
+
+
+def sentiment_infer_int(q: QuantSentiment, seqs_padded, lens, t_word=10):
+    """Full integer inference over a padded batch. Returns predictions,
+    the per-word V_out trace, and per-layer spike counts (for Fig 11a).
+    """
+    b, l = seqs_padded.shape
+    w1 = jnp.asarray(q.w1, jnp.int32)
+    w2 = jnp.asarray(q.w2, jnp.int32)
+    w_out = jnp.asarray(q.w_out, jnp.int32)
+    emb = jnp.asarray(q.emb_q, jnp.int32)
+
+    v_e = jnp.zeros((b, emb.shape[1]), jnp.int32)
+    v1 = jnp.zeros((b, w1.shape[1]), jnp.int32)
+    v2 = jnp.zeros((b, w2.shape[1]), jnp.int32)
+    v_o = jnp.zeros((b, 1), jnp.int32)
+
+    ids = jnp.clip(jnp.asarray(seqs_padded, jnp.int32), 0, emb.shape[0] - 1)
+    mask = (jnp.arange(l)[None, :] < jnp.asarray(lens)[:, None]).astype(jnp.int32)
+
+    traces = []
+    spike_counts = np.zeros(3, dtype=np.int64)
+    spike_total = np.zeros(3, dtype=np.int64)
+    for w in range(l):
+        x_q = emb[ids[:, w]] * mask[:, w : w + 1]
+        for _ in range(t_word):
+            v_e, v1, v2, v_o_new, (s0, s1, s2) = sentiment_step_int(
+                w1, w2, w_out, q.thr_enc, q.thr1, q.thr2, x_q, v_e, v1, v2, v_o
+            )
+            # freeze output accumulation on padded words
+            v_o = jnp.where(mask[:, w : w + 1] == 1, v_o_new, v_o)
+            for i, s in enumerate((s0, s1, s2)):
+                sm = np.asarray(s) * np.asarray(mask[:, w : w + 1])
+                spike_counts[i] += sm.sum()
+                spike_total[i] += int(mask[:, w].sum()) * s.shape[1]
+        traces.append(np.asarray(v_o[:, 0]))
+    preds = (np.asarray(v_o[:, 0]) >= 0).astype(np.uint8)
+    sparsity = 1.0 - spike_counts / np.maximum(spike_total, 1)
+    return preds, np.stack(traces, axis=1), sparsity
+
+
+# ---------------------------------------------------------------------------
+# Digits network — float training model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DigitsDims:
+    channels: int = 14
+    fc1: int = 100
+    classes: int = 10
+    t: int = 10
+
+
+def init_digits_params(key, dims: DigitsDims = DigitsDims()):
+    ks = jax.random.split(key, 5)
+    glorot = jax.nn.initializers.glorot_uniform()
+    c = dims.channels
+    return {
+        "k1": glorot(ks[0], (3, 3, 1, c), jnp.float32),
+        "k2": glorot(ks[1], (3, 3, c, c), jnp.float32),
+        "k3": glorot(ks[2], (3, 3, c, c), jnp.float32),
+        "w_fc1": glorot(ks[3], (3 * 3 * c, dims.fc1), jnp.float32),
+        "w_fc2": glorot(ks[4], (dims.fc1, dims.classes), jnp.float32) * 0.5,
+        "log_thr_c1": jnp.log(jnp.asarray(0.5)),
+        "log_thr_c2": jnp.log(jnp.asarray(1.0)),
+        "log_thr_c3": jnp.log(jnp.asarray(1.0)),
+        "log_thr_f1": jnp.log(jnp.asarray(1.0)),
+    }
+
+
+def count_digits_params(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+def _conv(x, k):
+    return jax.lax.conv_general_dilated(
+        x, k, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def digits_forward_float(params, images, dims: DigitsDims = DigitsDims()):
+    """Float digits SNN over T timesteps. images: [B, 28, 28, 1]."""
+    b = images.shape[0]
+    c = dims.channels
+    thr = {k: jnp.exp(params[f"log_thr_{k}"]) for k in ("c1", "c2", "c3", "f1")}
+
+    def tstep(carry, _):
+        v1, v2, v3, vf, vo, acc, ext = carry
+        v1, s1 = rmp_update(v1, _conv(images, params["k1"]), thr["c1"])
+        p1 = _maxpool2(s1)  # [B,14,14,C] binary
+        v2, s2 = rmp_update(v2, _conv(p1, params["k2"]), thr["c2"])
+        p2 = _maxpool2(s2)  # [B,7,7,C]
+        v3, s3 = rmp_update(v3, _conv(p2, params["k3"]), thr["c3"])
+        p3 = _maxpool2(s3)  # [B,3,3,C]
+        flat = p3.reshape(b, -1)
+        vf, sf = rmp_update(vf, flat @ params["w_fc1"], thr["f1"])
+        vo = vo + sf @ params["w_fc2"]
+        acc = acc + jnp.stack([s1.mean(), s2.mean(), s3.mean(), sf.mean()])
+        ext = jnp.maximum(
+            ext,
+            jnp.stack(
+                [
+                    jnp.abs(v2).max(),
+                    jnp.abs(v3).max(),
+                    jnp.abs(vf).max(),
+                    jnp.abs(vo).max(),
+                ]
+            ),
+        )
+        return (v1, v2, v3, vf, vo, acc, ext), None
+
+    init = (
+        jnp.zeros((b, 28, 28, c)),
+        jnp.zeros((b, 14, 14, c)),
+        jnp.zeros((b, 7, 7, c)),
+        jnp.zeros((b, dims.fc1)),
+        jnp.zeros((b, dims.classes)),
+        jnp.zeros(4),
+        jnp.zeros(4),
+    )
+    (v1, v2, v3, vf, vo, acc, ext), _ = jax.lax.scan(tstep, init, None, length=dims.t)
+    return vo, (acc / dims.t, (v2, v3, vf), ext)
+
+
+def digits_loss(params, images, labels, rate_penalty=0.02, drift_penalty=0.01):
+    logits, (rates, finals, ext) = digits_forward_float(params, images)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1])
+    ce = -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=-1))
+    thr = [jnp.exp(params[f"log_thr_{k}"]) for k in ("c2", "c3", "f1")]
+    drift = sum(
+        jnp.mean(jax.nn.relu(-v - 4.0 * t)) for v, t in zip(finals, thr)
+    )
+    return ce + rate_penalty * rates.mean() + drift_penalty * drift, (logits, rates, ext)
+
+
+# ---------------------------------------------------------------------------
+# Digits network — hardware-exact integer inference
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class QuantDigits:
+    k1: np.ndarray  # [3,3,1,C] f32 — encoder conv stays off-macro/float
+    thr_c1_f: float
+    k2: np.ndarray  # [3,3,C,C] i32
+    k3: np.ndarray  # [3,3,C,C] i32
+    w_fc1: np.ndarray  # [126, FC1] i32
+    w_fc2: np.ndarray  # [FC1, 10] i32
+    thr_c2: int
+    thr_c3: int
+    thr_f1: int
+
+
+def _conv_int(x, k):
+    return jax.lax.conv_general_dilated(
+        x,
+        k,
+        (1, 1),
+        "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _maxpool2_int(x):
+    return jax.lax.reduce_window(
+        x, jnp.iinfo(jnp.int32).min, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def digits_infer_int(q: QuantDigits, images, t=10):
+    """Hardware-exact integer inference for the digits SNN.
+
+    Conv1 (the spike encoder) runs in float off-macro, as in the paper;
+    Conv2/Conv3/FC1/FC2 use IMPULSE semantics (11-bit wrap + RMP spike,
+    int weights). Max-pool on binary spikes is a logical OR.
+    Returns (predictions, per-layer sparsity [4]).
+    """
+    b = images.shape[0]
+    c = q.k2.shape[2]
+    x1 = _conv(images, jnp.asarray(q.k1))  # constant input current
+    v1 = jnp.zeros((b, 28, 28, c), jnp.float32)
+    v2 = jnp.zeros((b, 14, 14, c), jnp.int32)
+    v3 = jnp.zeros((b, 7, 7, c), jnp.int32)
+    vf = jnp.zeros((b, q.w_fc1.shape[1]), jnp.int32)
+    vo = jnp.zeros((b, q.w_fc2.shape[1]), jnp.int32)
+
+    k2 = jnp.asarray(q.k2, jnp.int32)
+    k3 = jnp.asarray(q.k3, jnp.int32)
+    wf1 = jnp.asarray(q.w_fc1, jnp.int32)
+    wf2 = jnp.asarray(q.w_fc2, jnp.int32)
+
+    spike_counts = np.zeros(4, dtype=np.int64)
+    spike_total = np.zeros(4, dtype=np.int64)
+    for _ in range(t):
+        # encoder (float, off-macro)
+        v1 = v1 + x1
+        s1 = (v1 >= q.thr_c1_f).astype(jnp.int32)
+        v1 = jnp.where(s1 == 1, v1 - q.thr_c1_f, v1)
+        p1 = _maxpool2_int(s1)
+        # conv2 (on-macro)
+        v2 = ref.wrap11(v2 + _conv_int(p1, k2))
+        s2 = ref.spike_of(v2, q.thr_c2)
+        v2 = jnp.where(s2 == 1, ref.wrap11(v2 - q.thr_c2), v2)
+        p2 = _maxpool2_int(s2)
+        # conv3 (on-macro)
+        v3 = ref.wrap11(v3 + _conv_int(p2, k3))
+        s3 = ref.spike_of(v3, q.thr_c3)
+        v3 = jnp.where(s3 == 1, ref.wrap11(v3 - q.thr_c3), v3)
+        p3 = _maxpool2_int(s3)
+        # fc1 (on-macro)
+        flat = p3.reshape(b, -1)
+        vf = ref.wrap11(vf + jnp.matmul(flat, wf1, preferred_element_type=jnp.int32))
+        sf = ref.spike_of(vf, q.thr_f1)
+        vf = jnp.where(sf == 1, ref.wrap11(vf - q.thr_f1), vf)
+        # output accumulate (on-macro)
+        vo = ref.wrap11(vo + jnp.matmul(sf, wf2, preferred_element_type=jnp.int32))
+        for i, s in enumerate((s1, s2, s3, sf)):
+            spike_counts[i] += int(np.asarray(s).sum())
+            spike_total[i] += int(np.prod(s.shape))
+    preds = np.asarray(jnp.argmax(vo, axis=-1)).astype(np.uint8)
+    sparsity = 1.0 - spike_counts / np.maximum(spike_total, 1)
+    return preds, sparsity

@@ -1,0 +1,117 @@
+"""Quantization from the float SNNs to IMPULSE's 6-bit weight / 11-bit
+membrane-potential format.
+
+Per mapped layer the float computation ``v += s_in @ W_f`` becomes
+``v_q += s_in @ W_q`` with a single scale ``s_l`` per layer:
+
+    W_q = round(W_f · s_l)  ∈ [-32, 31]       (6-bit signed)
+    θ_q = round(θ_f · s_l)                     (11-bit, with headroom)
+
+The scale trades weight resolution against V_MEM headroom: θ_q must
+leave room below the ±1024 rails (wraparound corrupts the comparison,
+see the engine tests), so ``s_l = min(31 / max|W_f|, θ_budget / θ_f)``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .datasets import SentimentData
+from .model import QuantDigits, QuantSentiment
+
+W_MAX = 31
+THETA_BUDGET = 512  # keep θ_q ≤ 512 so |V| stays well under 1024
+V_BUDGET = 960  # calibrated |V| must map inside the ±1024 rails
+X_SCALE = 48.0  # input-current quantization for the (off-macro) encoder
+
+
+def layer_scale(
+    w_f: np.ndarray, thr_f: float | None, v_max_f: float | None = None
+) -> float:
+    """The joint weight/threshold scale for one mapped layer.
+
+    ``thr_f`` is the float threshold (None for threshold-free output
+    layers); ``v_max_f`` is the calibrated maximum |V| observed in float
+    on the training set. The scale must map both inside the 11-bit
+    rails or the macro's wraparound corrupts the dynamics
+    (negative-drift spiking).
+    """
+    wmax = float(np.abs(w_f).max())
+    s = W_MAX / max(wmax, 1e-6)
+    if thr_f is not None:
+        s = min(s, THETA_BUDGET / max(float(thr_f), 1e-6))
+    if v_max_f is not None and v_max_f > 0:
+        s = min(s, V_BUDGET / float(v_max_f))
+    return s
+
+
+def quantize_weights(w_f: np.ndarray, scale: float) -> np.ndarray:
+    return np.clip(np.round(np.asarray(w_f) * scale), -32, 31).astype(np.int32)
+
+
+def quantize_sentiment(
+    params, data: SentimentData, v_extremes=None
+) -> QuantSentiment:
+    """Quantize the trained sentiment SNN.
+
+    ``v_extremes`` — calibrated max |V| per layer (v1, v2, v_out) from a
+    float forward pass over training data; see ``layer_scale``.
+    """
+    w1 = np.asarray(params["w1"])
+    w2 = np.asarray(params["w2"])
+    w_out = np.asarray(params["w_out"])
+    thr_e = float(np.exp(params["log_thr_enc"]))
+    thr1 = float(np.exp(params["log_thr1"]))
+    thr2 = float(np.exp(params["log_thr2"]))
+    ve = [None, None, None] if v_extremes is None else list(v_extremes)
+
+    s1 = layer_scale(w1, thr1, ve[0])
+    s2 = layer_scale(w2, thr2, ve[1])
+    # Output layer has no threshold: the accumulated |V_out| must stay
+    # under the 11-bit rails — the output neuron lives on the macro too.
+    s_out = layer_scale(w_out, None, ve[2])
+
+    emb_q = np.round(data.embeddings * X_SCALE).astype(np.int32)
+    thr_enc_q = max(1, int(round(thr_e * X_SCALE)))
+
+    return QuantSentiment(
+        emb_q=emb_q,
+        w1=quantize_weights(w1, s1),
+        w2=quantize_weights(w2, s2),
+        w_out=quantize_weights(w_out, s_out),
+        thr_enc=thr_enc_q,
+        thr1=max(1, int(round(thr1 * s1))),
+        thr2=max(1, int(round(thr2 * s2))),
+    )
+
+
+def quantize_digits(params, v_extremes=None) -> QuantDigits:
+    """Quantize the trained digits SNN (Conv1 encoder stays float).
+
+    ``v_extremes`` — calibrated max |V| for (conv2, conv3, fc1, out).
+    """
+    k2 = np.asarray(params["k2"])
+    k3 = np.asarray(params["k3"])
+    wf1 = np.asarray(params["w_fc1"])
+    wf2 = np.asarray(params["w_fc2"])
+    thr2 = float(np.exp(params["log_thr_c2"]))
+    thr3 = float(np.exp(params["log_thr_c3"]))
+    thrf = float(np.exp(params["log_thr_f1"]))
+    ve = [None] * 4 if v_extremes is None else list(v_extremes)
+
+    s2 = layer_scale(k2, thr2, ve[0])
+    s3 = layer_scale(k3, thr3, ve[1])
+    sf = layer_scale(wf1, thrf, ve[2])
+    s_out = layer_scale(wf2, None, ve[3])
+
+    return QuantDigits(
+        k1=np.asarray(params["k1"]).astype(np.float32),
+        thr_c1_f=float(np.exp(params["log_thr_c1"])),
+        k2=quantize_weights(k2, s2),
+        k3=quantize_weights(k3, s3),
+        w_fc1=quantize_weights(wf1, sf),
+        w_fc2=quantize_weights(wf2, s_out),
+        thr_c2=max(1, int(round(thr2 * s2))),
+        thr_c3=max(1, int(round(thr3 * s3))),
+        thr_f1=max(1, int(round(thrf * sf))),
+    )

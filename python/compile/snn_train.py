@@ -1,0 +1,184 @@
+"""Surrogate-gradient BPTT training (Diet-SNN-style: threshold and
+weight optimization) with a hand-rolled Adam (optax is not available in
+the offline environment).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .datasets import DigitsData, SentimentData, pad_sequences
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Sentiment training
+# ---------------------------------------------------------------------------
+
+
+def train_sentiment(
+    data: SentimentData,
+    epochs: int = 6,
+    batch: int = 64,
+    lr: float = 2e-3,
+    max_len: int = 15,
+    seed: int = 0,
+    log=print,
+):
+    """Train the sentiment SNN; returns (params, history)."""
+    key = jax.random.PRNGKey(seed)
+    params = model.init_sentiment_params(key)
+    opt = adam_init(params)
+
+    seqs, lens = pad_sequences(data.train_seqs, max_len)
+    labels = data.train_labels
+    emb = data.embeddings
+
+    @jax.jit
+    def step(params, opt, emb_seq, mask, y):
+        (loss, (v_out, aux)), grads = jax.value_and_grad(
+            model.sentiment_loss, has_aux=True
+        )(params, emb_seq, mask, y)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        acc = jnp.mean(((v_out >= 0).astype(jnp.uint8) == y).astype(jnp.float32))
+        return params, opt, loss, acc, aux["spike_rates"]
+
+    n = len(seqs)
+    rng = np.random.default_rng(seed)
+    history = []
+    for epoch in range(epochs):
+        order = rng.permutation(n)
+        t0 = time.time()
+        tot_loss, tot_acc, nb = 0.0, 0.0, 0
+        for i in range(0, n - batch + 1, batch):
+            ix = order[i : i + batch]
+            emb_seq = emb[np.clip(seqs[ix], 0, None)]  # [B, L, 100]
+            mask = (seqs[ix] >= 0).astype(np.float32)
+            params, opt, loss, acc, rates = step(
+                params, opt, jnp.asarray(emb_seq), jnp.asarray(mask), jnp.asarray(labels[ix])
+            )
+            tot_loss += float(loss)
+            tot_acc += float(acc)
+            nb += 1
+        history.append(
+            {
+                "epoch": epoch,
+                "loss": tot_loss / nb,
+                "acc": tot_acc / nb,
+                "secs": time.time() - t0,
+                "spike_rates": [float(r) for r in rates],
+            }
+        )
+        log(
+            f"[sentiment] epoch {epoch}: loss={tot_loss/nb:.4f} "
+            f"acc={tot_acc/nb:.4f} ({time.time()-t0:.1f}s) rates={rates}"
+        )
+    return params, history
+
+
+def eval_sentiment_float(params, data: SentimentData, max_len: int = 15, batch: int = 200):
+    seqs, lens = pad_sequences(data.test_seqs, max_len)
+    emb = data.embeddings
+    correct = 0
+    fwd = jax.jit(lambda p, e, m: model.sentiment_forward_float(p, e, m)[0])
+    for i in range(0, len(seqs), batch):
+        sl = seqs[i : i + batch]
+        emb_seq = emb[np.clip(sl, 0, None)]
+        mask = (sl >= 0).astype(np.float32)
+        v_out = fwd(params, jnp.asarray(emb_seq), jnp.asarray(mask))
+        preds = (np.asarray(v_out) >= 0).astype(np.uint8)
+        correct += int((preds == data.test_labels[i : i + batch]).sum())
+    return correct / len(seqs)
+
+
+# ---------------------------------------------------------------------------
+# Digits training
+# ---------------------------------------------------------------------------
+
+
+def train_digits(
+    data: DigitsData,
+    epochs: int = 4,
+    batch: int = 64,
+    lr: float = 2e-3,
+    seed: int = 0,
+    log=print,
+):
+    key = jax.random.PRNGKey(seed + 100)
+    params = model.init_digits_params(key)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        (loss, (logits, rates, _ext)), grads = jax.value_and_grad(
+            model.digits_loss, has_aux=True
+        )(params, x, y)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return params, opt, loss, acc, rates
+
+    x = data.train_x[..., None]
+    y = data.train_y.astype(np.int32)
+    n = len(y)
+    rng = np.random.default_rng(seed)
+    history = []
+    for epoch in range(epochs):
+        order = rng.permutation(n)
+        t0 = time.time()
+        tot_loss, tot_acc, nb = 0.0, 0.0, 0
+        for i in range(0, n - batch + 1, batch):
+            ix = order[i : i + batch]
+            params, opt, loss, acc, rates = step(
+                params, opt, jnp.asarray(x[ix]), jnp.asarray(y[ix])
+            )
+            tot_loss += float(loss)
+            tot_acc += float(acc)
+            nb += 1
+        history.append(
+            {
+                "epoch": epoch,
+                "loss": tot_loss / nb,
+                "acc": tot_acc / nb,
+                "secs": time.time() - t0,
+            }
+        )
+        log(
+            f"[digits] epoch {epoch}: loss={tot_loss/nb:.4f} acc={tot_acc/nb:.4f} "
+            f"({time.time()-t0:.1f}s) rates={rates}"
+        )
+    return params, history
+
+
+def eval_digits_float(params, data: DigitsData, batch: int = 200):
+    fwd = jax.jit(lambda p, x: model.digits_forward_float(p, x)[0])
+    correct = 0
+    for i in range(0, len(data.test_y), batch):
+        logits = fwd(params, jnp.asarray(data.test_x[i : i + batch][..., None]))
+        preds = np.asarray(jnp.argmax(logits, -1))
+        correct += int((preds == data.test_y[i : i + batch]).sum())
+    return correct / len(data.test_y)

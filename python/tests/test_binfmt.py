@@ -1,0 +1,48 @@
+"""IMPT tensor format + manifest round-trips (the Rust side has the
+mirror suite in rust/src/data/binfmt.rs)."""
+
+import numpy as np
+import pytest
+
+from compile import binfmt
+
+
+@pytest.mark.parametrize(
+    "arr",
+    [
+        np.arange(12, dtype=np.int32).reshape(3, 4) - 6,
+        np.array([-32, 0, 31], dtype=np.int8),
+        np.linspace(-1, 1, 7, dtype=np.float32),
+        np.zeros((2, 2, 2), dtype=np.float64),
+        np.array([3], dtype=np.int64),
+        np.array([[0, 255]], dtype=np.uint8),
+    ],
+)
+def test_tensor_roundtrip(tmp_path, arr):
+    p = tmp_path / "t.bin"
+    binfmt.write_tensor(p, arr)
+    out = binfmt.read_tensor(p)
+    assert out.dtype == arr.dtype
+    assert out.shape == arr.shape
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        binfmt.read_tensor(p)
+
+
+def test_unsupported_dtype_rejected(tmp_path):
+    with pytest.raises(TypeError):
+        binfmt.write_tensor(tmp_path / "x.bin", np.array([1 + 2j]))
+
+
+def test_manifest_roundtrip(tmp_path):
+    p = tmp_path / "m.txt"
+    binfmt.write_manifest(p, {"b": 2, "a": "hello", "acc": 0.87})
+    out = binfmt.read_manifest(p)
+    assert out == {"a": "hello", "b": "2", "acc": "0.87"}
+    # stable (sorted) order
+    assert p.read_text().splitlines()[0].startswith("a=")

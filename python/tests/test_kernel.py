@@ -1,0 +1,135 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, modes, and value ranges; every case must match
+the reference bit-exactly (integer semantics, no tolerance).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.snn_step import encoder_step, snn_step
+
+
+def _rand_case(rng, b, m, n, p_spike):
+    spikes = (rng.random((b, m)) < p_spike).astype(np.int32)
+    weights = rng.integers(-32, 32, size=(m, n)).astype(np.int32)
+    v = rng.integers(-1024, 1024, size=(b, n)).astype(np.int32)
+    return spikes, weights, v
+
+
+@pytest.mark.parametrize("mode", [ref.IF, ref.LIF, ref.RMP])
+def test_kernel_matches_ref_basic(mode):
+    rng = np.random.default_rng(0)
+    spikes, weights, v = _rand_case(rng, 4, 100, 128, 0.15)
+    thr, leak = 200, 3
+    v_ref, s_ref = ref.snn_step_ref(
+        jnp.asarray(spikes), jnp.asarray(weights), jnp.asarray(v),
+        thr, mode=mode, leak=leak,
+    )
+    v_k, s_k = snn_step(
+        jnp.asarray(spikes), jnp.asarray(weights), jnp.asarray(v),
+        thr, mode=mode, leak=leak,
+    )
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_ref))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 9),
+    m=st.integers(1, 130),
+    n=st.integers(1, 130),
+    p=st.floats(0.0, 1.0),
+    thr=st.integers(1, 1023),
+    mode=st.sampled_from([ref.IF, ref.LIF, ref.RMP]),
+    leak=st.integers(0, 16),
+    seed=st.integers(0, 2**31 - 1),
+    block_b=st.sampled_from([1, 3, 8]),
+    block_n=st.sampled_from([16, 64, 128]),
+)
+def test_kernel_matches_ref_swept(b, m, n, p, thr, mode, leak, seed, block_b, block_n):
+    rng = np.random.default_rng(seed)
+    spikes, weights, v = _rand_case(rng, b, m, n, p)
+    v_ref, s_ref = ref.snn_step_ref(
+        jnp.asarray(spikes), jnp.asarray(weights), jnp.asarray(v),
+        thr, mode=mode, leak=leak,
+    )
+    v_k, s_k = snn_step(
+        jnp.asarray(spikes), jnp.asarray(weights), jnp.asarray(v),
+        thr, mode=mode, leak=leak, block_b=block_b, block_n=block_n,
+    )
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_ref))
+
+
+def test_wrap11_semantics():
+    x = jnp.asarray([1023, 1024, -1024, -1025, 2047, 2048, 0], jnp.int32)
+    got = np.asarray(ref.wrap11(x))
+    np.testing.assert_array_equal(got, [1023, -1024, -1024, 1023, -1, 0, 0])
+
+
+def test_spike_includes_wraparound_artifact():
+    # V = -1000, θ = 50: V − θ wraps positive ⇒ hardware spikes.
+    v = jnp.asarray([[-1000]], jnp.int32)
+    s = ref.spike_of(v, 50)
+    assert int(s[0, 0]) == 1
+
+
+def test_rmp_retains_residual():
+    spikes = jnp.zeros((1, 4), jnp.int32)
+    w = jnp.zeros((4, 1), jnp.int32)
+    v = jnp.asarray([[27]], jnp.int32)
+    v2, s = ref.snn_step_ref(spikes, w, v, 10, mode=ref.RMP)
+    assert int(s[0, 0]) == 1 and int(v2[0, 0]) == 17
+
+
+def test_if_hard_reset():
+    spikes = jnp.zeros((1, 4), jnp.int32)
+    w = jnp.zeros((4, 1), jnp.int32)
+    v = jnp.asarray([[27]], jnp.int32)
+    v2, s = ref.snn_step_ref(spikes, w, v, 10, mode=ref.IF)
+    assert int(s[0, 0]) == 1 and int(v2[0, 0]) == 0
+
+
+def test_lif_leak_applied_before_check():
+    spikes = jnp.zeros((1, 1), jnp.int32)
+    w = jnp.zeros((1, 1), jnp.int32)
+    v = jnp.asarray([[10]], jnp.int32)
+    v2, s = ref.snn_step_ref(spikes, w, v, 10, mode=ref.LIF, leak=1)
+    # 10 − 1 = 9 < 10 ⇒ no spike
+    assert int(s[0, 0]) == 0 and int(v2[0, 0]) == 9
+
+
+def test_zero_spikes_only_neuron_dynamics():
+    rng = np.random.default_rng(3)
+    _, weights, v = _rand_case(rng, 2, 50, 30, 0.0)
+    spikes = np.zeros((2, 50), np.int32)
+    v_ref, s_ref = ref.snn_step_ref(
+        jnp.asarray(spikes), jnp.asarray(weights), jnp.asarray(v), 100
+    )
+    v_k, s_k = snn_step(
+        jnp.asarray(spikes), jnp.asarray(weights), jnp.asarray(v), 100
+    )
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_ref))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    m=st.integers(1, 120),
+    thr=st.integers(1, 5000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_encoder_matches_ref(b, m, thr, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-1024, 1024, size=(b, m)).astype(np.int32)
+    v = rng.integers(-4096, 4096, size=(b, m)).astype(np.int32)
+    v_ref, s_ref = ref.encoder_step_ref(jnp.asarray(x), jnp.asarray(v), thr)
+    v_k, s_k = encoder_step(jnp.asarray(x), jnp.asarray(v), thr)
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_ref))

@@ -1,0 +1,100 @@
+"""Model-level tests: parameter counts, float/int consistency, training
+smoke, quantization behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import datasets, lstm_baseline, model, quantize, snn_train
+
+
+def test_sentiment_param_count_matches_paper():
+    params = model.init_sentiment_params(jax.random.PRNGKey(0))
+    # 100·128 + 128·128 + 128 + 3 thresholds = 29,315 ≈ the paper's 29.3K
+    assert model.count_sentiment_params(params) == 29315
+
+
+def test_lstm_param_count_matches_paper():
+    params = lstm_baseline.init_lstm_params(jax.random.PRNGKey(0))
+    # 4(100·128+128²) + 4(2·128²) + 128 = 247,936 ≈ the paper's 247.8K
+    assert lstm_baseline.count_lstm_params(params) == 247936
+    snn = 29315
+    assert abs(247936 / snn - 8.46) < 0.02  # the 8.5× headline
+
+
+def test_float_forward_shapes_and_masking():
+    params = model.init_sentiment_params(jax.random.PRNGKey(1))
+    emb = np.random.default_rng(0).normal(size=(4, 6, 100)).astype(np.float32)
+    mask = np.ones((4, 6), np.float32)
+    mask[2, 3:] = 0.0
+    v_out, aux = model.sentiment_forward_float(params, jnp.asarray(emb), jnp.asarray(mask))
+    assert v_out.shape == (4,)
+    assert aux["v_out_trace"].shape == (4, 6)
+    # masked sample's output is frozen after its last real word
+    tr = np.asarray(aux["v_out_trace"])
+    assert tr[2, 3] == tr[2, 4] == tr[2, 5]
+
+
+def test_training_reduces_loss_quickly():
+    data = datasets.make_sentiment(vocab_size=300, n_train=300, n_test=100, seed=9)
+    params, hist = snn_train.train_sentiment(data, epochs=3, batch=50, log=lambda *_: None)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    acc = snn_train.eval_sentiment_float(params, data)
+    assert acc > 0.6  # well above chance after 2 epochs
+
+
+def test_quantized_matches_float_predictions_mostly():
+    data = datasets.make_sentiment(vocab_size=300, n_train=400, n_test=100, seed=10)
+    params, _ = snn_train.train_sentiment(data, epochs=2, batch=50, log=lambda *_: None)
+    seqs, lens = datasets.pad_sequences(data.test_seqs, 15)
+    emb_seq = data.embeddings[np.clip(seqs, 0, None)]
+    mask = (seqs >= 0).astype(np.float32)
+    v_f, aux = jax.jit(model.sentiment_forward_float)(
+        params, jnp.asarray(emb_seq), jnp.asarray(mask)
+    )
+    cal = [float(x) for x in np.asarray(aux["v_extremes"])]
+    q = quantize.quantize_sentiment(params, data, v_extremes=cal)
+    preds, traces, _ = model.sentiment_infer_int(q, seqs, lens)
+    float_preds = (np.asarray(v_f) >= 0).astype(np.uint8)
+    agreement = (preds == float_preds).mean()
+    assert agreement > 0.8, f"quantized/float agreement {agreement}"
+
+
+def test_quantized_weights_fit_hardware_format():
+    data = datasets.make_sentiment(vocab_size=200, n_train=60, n_test=20, seed=11)
+    params = model.init_sentiment_params(jax.random.PRNGKey(3))
+    q = quantize.quantize_sentiment(params, data, v_extremes=[20.0, 20.0, 10.0])
+    for w in (q.w1, q.w2, q.w_out):
+        assert w.min() >= -32 and w.max() <= 31
+    assert 1 <= q.thr1 <= 1023 and 1 <= q.thr2 <= 1023
+    assert q.thr_enc >= 1
+
+
+def test_layer_scale_constraints():
+    w = np.array([[0.5, -0.25]])
+    # weight-resolution bound
+    assert abs(quantize.layer_scale(w, None) - 62.0) < 1e-6
+    # threshold budget binds
+    s = quantize.layer_scale(w, thr_f=100.0)
+    assert abs(s - quantize.THETA_BUDGET / 100.0) < 1e-9
+    # V-extreme budget binds
+    s = quantize.layer_scale(w, None, v_max_f=1000.0)
+    assert abs(s - quantize.V_BUDGET / 1000.0) < 1e-9
+
+
+def test_digits_forward_shapes():
+    params = model.init_digits_params(jax.random.PRNGKey(2))
+    x = np.random.default_rng(1).random((2, 28, 28, 1)).astype(np.float32)
+    logits, (rates, finals, ext) = model.digits_forward_float(params, jnp.asarray(x))
+    assert logits.shape == (2, 10)
+    assert rates.shape == (4,)
+    assert ext.shape == (4,)
+
+
+def test_int_infer_respects_11bit_range():
+    data = datasets.make_sentiment(vocab_size=200, n_train=60, n_test=30, seed=12)
+    params = model.init_sentiment_params(jax.random.PRNGKey(5))
+    q = quantize.quantize_sentiment(params, data, v_extremes=[10.0, 10.0, 10.0])
+    seqs, lens = datasets.pad_sequences(data.test_seqs[:10], 15)
+    _, traces, _ = model.sentiment_infer_int(q, seqs, lens)
+    assert traces.min() >= -1024 and traces.max() <= 1023

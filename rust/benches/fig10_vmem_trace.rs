@@ -1,0 +1,72 @@
+//! Bench E6 (paper Fig 10): the output neuron's membrane-potential
+//! trajectory over per-word timesteps — positive reviews drift
+//! positive, negative reviews negative; checks sign/label agreement
+//! statistics across a subset.
+
+use impulse::data::{artifacts_available, artifacts_dir, SentimentArtifacts};
+use impulse::macro_sim::MacroConfig;
+use impulse::snn::SentimentNetwork;
+
+fn main() -> impulse::Result<()> {
+    println!("=== Fig 10: output-neuron V_MEM trajectories ===\n");
+    if !artifacts_available() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let a = SentimentArtifacts::load(artifacts_dir())?;
+    let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast())?;
+
+    // exemplary traces, one per class
+    for label in [1u8, 0u8] {
+        let idx = (0..a.test_seqs.len())
+            .find(|&i| a.test_labels[i] == label)
+            .unwrap();
+        let r = net.run_review(&a.test_seqs[idx])?;
+        println!(
+            "{} review #{idx}: V_out after each word:",
+            if label == 1 { "positive" } else { "negative" }
+        );
+        print!("  ");
+        for v in &r.vout_trace {
+            print!("{v:>6} ");
+        }
+        println!();
+        let max = r.vout_trace.iter().map(|v| v.abs()).max().unwrap_or(1).max(1);
+        for &v in &r.vout_trace {
+            let w = ((v.abs() as f64 / max as f64) * 28.0) as usize;
+            if v >= 0 {
+                println!("  {:>29}|{}", "", "#".repeat(w));
+            } else {
+                println!("  {:>width$}{}|", "", "#".repeat(w), width = 29 - w);
+            }
+        }
+        println!();
+    }
+
+    // statistics: final-V sign should track the label (that IS the
+    // classifier); also report how often the sign settles early.
+    let n = 200.min(a.test_seqs.len());
+    let mut agree = 0usize;
+    let mut early_settle = 0usize;
+    for i in 0..n {
+        let r = net.run_review(&a.test_seqs[i])?;
+        let want_pos = a.test_labels[i] == 1;
+        if (r.v_out >= 0) == want_pos {
+            agree += 1;
+        }
+        let half = r.vout_trace.len() / 2;
+        if !r.vout_trace.is_empty()
+            && r.vout_trace[half..].iter().all(|&v| (v >= 0) == (r.v_out >= 0))
+        {
+            early_settle += 1;
+        }
+    }
+    println!("final-V sign matches label: {}/{n} ({:.3})", agree, agree as f64 / n as f64);
+    println!(
+        "sign stable over second half of review: {}/{n} ({:.3}) — V_MEM accumulates evidence",
+        early_settle,
+        early_settle as f64 / n as f64
+    );
+    println!("\nOK");
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Bench E7 (paper Fig 11a): average spike sparsity per layer per
+//! timestep, measured while running the trained network on the macro
+//! pool.
+
+use impulse::bench_harness::Table;
+use impulse::data::{artifacts_available, artifacts_dir, SentimentArtifacts};
+use impulse::macro_sim::MacroConfig;
+use impulse::snn::SentimentNetwork;
+
+fn main() -> impulse::Result<()> {
+    println!("=== Fig 11a: spike sparsity per layer per timestep ===\n");
+    if !artifacts_available() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let a = SentimentArtifacts::load(artifacts_dir())?;
+    let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast())?;
+    let n = 150.min(a.test_seqs.len());
+    for i in 0..n {
+        net.run_review(&a.test_seqs[i])?;
+    }
+    let table = net.tracker.table();
+    let mut t = Table::new(&[
+        "layer", "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10", "mean",
+    ]);
+    for (l, name) in ["input(enc)", "FC1", "FC2"].iter().enumerate() {
+        let mut row: Vec<String> = vec![name.to_string()];
+        for ts in 0..net.tracker.timesteps() {
+            row.push(format!("{:.2}", table[l][ts]));
+        }
+        row.push(format!("{:.3}", net.tracker.layer_sparsity(l)));
+        t.row(&row);
+    }
+    println!("{}", t.render());
+    let overall = net.tracker.overall();
+    println!("overall sparsity: {overall:.3} (paper: ~0.85 → drives the 97.4% EDP saving)");
+    assert!(overall > 0.70, "sparsity collapsed: {overall}");
+    println!("\nOK");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Bench E8 (paper Fig 11b): EDP per neuron per timestep vs input
+//! sparsity — analytic model cross-checked against instruction counts
+//! measured on the simulator; asserts the 97.4 % headline.
+
+use impulse::bench_harness::{Bencher, Table};
+use impulse::energy::{edp_per_neuron_timestep, EnergyModel, SparsitySweep};
+use impulse::isa::NeuronType;
+use impulse::macro_sim::MacroConfig;
+use impulse::snn::{FcLayer, LayerParams};
+use impulse::{NOMINAL_FREQ_HZ, NOMINAL_VDD};
+
+fn main() -> impulse::Result<()> {
+    println!("=== Fig 11b: EDP vs sparsity (RMP, point D) ===\n");
+    let e = EnergyModel::calibrated();
+    let weights: Vec<Vec<i64>> = (0..128)
+        .map(|i| (0..12).map(|j| ((i * 5 + j) % 63) as i64 - 31).collect())
+        .collect();
+
+    let mut t = Table::new(&["sparsity", "EDP model", "EDP measured", "reduction"]);
+    let base = edp_per_neuron_timestep(&e, 0.0, NeuronType::RMP, NOMINAL_VDD, NOMINAL_FREQ_HZ);
+    for pct in (0..=100).step_by(10) {
+        let s = pct as f64 / 100.0;
+        let model = edp_per_neuron_timestep(&e, s, NeuronType::RMP, NOMINAL_VDD, NOMINAL_FREQ_HZ);
+        let mut layer = FcLayer::new(&weights, LayerParams::rmp(200), MacroConfig::fast())?;
+        let n_spikes = ((1.0 - s) * 128.0).round() as usize;
+        let mut spikes = vec![false; 128];
+        for sp in spikes.iter_mut().take(n_spikes) {
+            *sp = true;
+        }
+        layer.step(&spikes)?;
+        let st = layer.stats();
+        let measured = (e.program_energy_j(&st.histogram, NOMINAL_VDD) / 12.0)
+            * (e.delay_s(st.cycles, NOMINAL_FREQ_HZ) / 12.0);
+        let rel = (measured - model.edp).abs() / model.edp;
+        assert!(rel < 0.02, "model vs measured diverge at s={s}: {rel}");
+        t.row(&[
+            format!("{s:.1}"),
+            format!("{:.3e}", model.edp),
+            format!("{measured:.3e}"),
+            format!("-{:.1}%", 100.0 * (1.0 - model.edp / base.edp)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let sweep = SparsitySweep::run(&e, NeuronType::RMP, 100);
+    let headline = sweep.reduction_at(0.85);
+    println!("EDP reduction at 85% sparsity: {:.1}% (paper: 97.4%)", 100.0 * headline);
+    assert!((headline - 0.974).abs() < 0.005);
+
+    println!("\n--- timing: one timestep at 85% vs 0% sparsity ---");
+    let mut b = Bencher::default();
+    for (name, s) in [("timestep @ 85% sparsity", 0.85f64), ("timestep @ 0% sparsity", 0.0f64)] {
+        let mut layer = FcLayer::new(&weights, LayerParams::rmp(200), MacroConfig::fast())?;
+        let n_spikes = ((1.0 - s) * 128.0).round() as usize;
+        let mut spikes = vec![false; 128];
+        for sp in spikes.iter_mut().take(n_spikes) {
+            *sp = true;
+        }
+        b.bench(name, 1, || {
+            layer.step(&spikes).unwrap();
+        });
+    }
+    println!("\nOK");
+    Ok(())
+}

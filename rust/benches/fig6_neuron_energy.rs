@@ -1,0 +1,64 @@
+//! Bench E1 (paper Fig 6): energy per neuron update for IF / LIF / RMP,
+//! measured by executing the actual instruction sequences on the macro
+//! simulator and pricing them with the calibrated model. Also times the
+//! simulator itself.
+
+use impulse::bench_harness::{Bencher, Table};
+use impulse::bitcell::Parity;
+use impulse::energy::EnergyModel;
+use impulse::isa::{neuron_sequence, NeuronType};
+use impulse::macro_sim::{ImpulseMacro, MacroConfig};
+use impulse::mapper::ConstRows;
+use impulse::NOMINAL_VDD;
+
+fn main() -> impulse::Result<()> {
+    println!("=== Fig 6: neuron-update energy (paper: IF 1.81, LIF 2.67, RMP 1.68 pJ) ===\n");
+    let e = EnergyModel::calibrated();
+    let rows = ConstRows::default();
+
+    let mut t = Table::new(&["neuron", "instrs/update", "energy/update (pJ)", "paper (pJ)"]);
+    let paper = [("IF", 1.81), ("LIF", 2.67), ("RMP", 1.68)];
+    for (neuron, (_, pub_pj)) in [NeuronType::IF, NeuronType::LIF, NeuronType::RMP]
+        .into_iter()
+        .zip(paper)
+    {
+        // execute the sequence on a live macro and price its histogram
+        let mut m = ImpulseMacro::new(MacroConfig::fast());
+        m.write_v(0, Parity::Odd, &[10; 6])?;
+        for r in 26..32 {
+            let p = if r % 2 == 0 { Parity::Odd } else { Parity::Even };
+            m.write_v(r, p, &[-3; 6])?;
+        }
+        m.reset_counters();
+        for instr in neuron_sequence(neuron, 0, rows.for_parity(Parity::Odd), Parity::Odd) {
+            m.execute(&instr)?;
+        }
+        let energy_pj = e.program_energy_j(&m.counts(), NOMINAL_VDD) * 1e12;
+        t.row(&[
+            neuron.name().into(),
+            format!("{}", neuron.instructions_per_update()),
+            format!("{energy_pj:.2}"),
+            format!("{pub_pj:.2}"),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("--- simulator timing (bit-level vs fast engine) ---");
+    let mut b = Bencher::default();
+    for (name, cfg) in [
+        ("bit-level neuron update (RMP)", MacroConfig::bit_level()),
+        ("fast-engine neuron update (RMP)", MacroConfig::fast()),
+    ] {
+        let mut m = ImpulseMacro::new(cfg);
+        m.write_v(0, Parity::Odd, &[10; 6])?;
+        m.write_v(28, Parity::Odd, &[-3; 6])?;
+        m.write_v(30, Parity::Odd, &[0; 6])?;
+        let seq = neuron_sequence(NeuronType::RMP, 0, rows.for_parity(Parity::Odd), Parity::Odd);
+        b.bench(name, seq.len() as u64, || {
+            for instr in &seq {
+                m.execute(instr).unwrap();
+            }
+        });
+    }
+    Ok(())
+}

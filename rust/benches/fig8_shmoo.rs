@@ -1,0 +1,43 @@
+//! Bench E3 (paper Fig 8): regenerate the Shmoo grid and verify the
+//! published boundary points pass; times grid generation.
+
+use impulse::bench_harness::Bencher;
+use impulse::energy::{shmoo_boundary, ShmooModel, ShmooPath};
+
+fn main() {
+    println!("=== Fig 8: Shmoo (read/write vs CIM operating windows) ===\n");
+    let m = ShmooModel::calibrated();
+    print!("{}", m.standard_grid().render());
+    println!("             VDD 0.6 → 1.2 V\n");
+
+    println!("published CIM boundary vs model:");
+    for (v, f) in shmoo_boundary() {
+        let fm = m.fmax_hz(ShmooPath::Cim, v);
+        println!(
+            "  {v:.2} V: {:.1} MHz published, {:.1} MHz model ({}",
+            f / 1e6,
+            fm / 1e6,
+            if m.passes(ShmooPath::Cim, v, f * 0.999) {
+                "PASS)"
+            } else {
+                "FAIL)"
+            }
+        );
+        assert!(m.passes(ShmooPath::Cim, v, f * 0.999));
+    }
+    println!("\nCIM window ⊂ read/write window:");
+    for i in 0..7 {
+        let v = 0.6 + 0.1 * i as f64;
+        println!(
+            "  {v:.1} V: R/W {:.0} MHz vs CIM {:.0} MHz",
+            m.fmax_hz(ShmooPath::ReadWrite, v) / 1e6,
+            m.fmax_hz(ShmooPath::Cim, v) / 1e6
+        );
+    }
+
+    let mut b = Bencher::default();
+    b.bench("shmoo grid generation (13×22 points)", 13 * 22, || {
+        let g = m.standard_grid();
+        std::hint::black_box(g.cells.len());
+    });
+}

@@ -1,0 +1,91 @@
+//! Perf bench (EXPERIMENTS.md §Perf): raw simulator throughput —
+//! instructions/second for each engine, layer-step throughput, and
+//! end-to-end review latency on the worker pool. This is the L3 hot
+//! path the optimization pass iterates on.
+
+use impulse::bench_harness::Bencher;
+use impulse::bitcell::Parity;
+use impulse::bits::XorShiftRng;
+use impulse::coordinator::LayerPipeline;
+use impulse::isa::Instruction;
+use impulse::macro_sim::{ImpulseMacro, MacroConfig};
+use impulse::snn::{FcLayer, LayerParams};
+
+fn main() -> impulse::Result<()> {
+    println!("=== macro simulator throughput (L3 hot path) ===\n");
+    let mut b = Bencher::default();
+    let mut rng = XorShiftRng::new(1);
+
+    // raw AccW2V issue rate per engine
+    for (name, cfg) in [
+        ("AccW2V bit-level engine", MacroConfig::bit_level()),
+        ("AccW2V fast engine", MacroConfig::fast()),
+    ] {
+        let mut m = ImpulseMacro::new(cfg);
+        for r in 0..128 {
+            let mut w = [0i64; 12];
+            for x in w.iter_mut() {
+                *x = rng.gen_i64(-32, 31);
+            }
+            m.write_weights(r, &w)?;
+        }
+        m.write_v(0, Parity::Odd, &[0; 6])?;
+        let batch = 1000;
+        b.bench(&format!("{name} (×{batch})"), batch, || {
+            for i in 0..batch {
+                m.execute(&Instruction::AccW2V {
+                    w_row: (i % 128) as usize,
+                    v_src: 0,
+                    v_dst: 0,
+                    parity: Parity::Odd,
+                })
+                .unwrap();
+            }
+        });
+    }
+
+    // full-layer timestep (128→128 = 11 tiles) at paper sparsity
+    let weights: Vec<Vec<i64>> = (0..128)
+        .map(|_| (0..128).map(|_| rng.gen_i64(-31, 31)).collect())
+        .collect();
+    let mut layer = FcLayer::new(&weights, LayerParams::rmp(150), MacroConfig::fast())?;
+    let spikes: Vec<bool> = (0..128).map(|_| rng.gen_bool(0.15)).collect();
+    let n_spk = spikes.iter().filter(|&&s| s).count() as u64;
+    b.bench(
+        &format!("128→128 layer timestep (fast, {n_spk} spikes)"),
+        1,
+        || {
+            layer.step(&spikes).unwrap();
+        },
+    );
+
+    // pipelined vs sequential 3-layer chain
+    let dims = [128usize, 128, 128, 128];
+    let mk_layers = |seed: u64| -> Vec<FcLayer> {
+        let mut r = XorShiftRng::new(seed);
+        dims.windows(2)
+            .map(|d| {
+                let w: Vec<Vec<i64>> = (0..d[0])
+                    .map(|_| (0..d[1]).map(|_| r.gen_i64(-20, 20)).collect())
+                    .collect();
+                FcLayer::new(&w, LayerParams::rmp(150), MacroConfig::fast()).unwrap()
+            })
+            .collect()
+    };
+    let inputs: Vec<Vec<bool>> = (0..40)
+        .map(|_| (0..128).map(|_| rng.gen_bool(0.15)).collect())
+        .collect();
+    let mut seq = LayerPipeline::new(mk_layers(7));
+    b.bench("3-layer chain, sequential (40 steps)", 40, || {
+        seq.reset_state().unwrap();
+        seq.run_sequential(&inputs).unwrap();
+    });
+    let mut pipe = LayerPipeline::new(mk_layers(7));
+    b.bench("3-layer chain, pipelined (40 steps)", 40, || {
+        pipe.reset_state().unwrap();
+        pipe.run_pipelined(&inputs, 4).unwrap();
+    });
+
+    println!("\nderived: fast-engine instruction rate = see above; target ≥1e7 instr/s");
+    Ok(())
+}

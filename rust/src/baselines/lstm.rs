@@ -1,0 +1,177 @@
+//! 2-layer LSTM inference (the paper's sequence-model baseline).
+//!
+//! Architecture matches `python/compile/lstm_baseline.py` exactly:
+//! no biases (4·(mn + n²) per layer → 247,808 ≈ 247.8K parameters for
+//! m=100, n=128, the paper's count), forget-gate +1 bias folded into
+//! the activation, gate order [i, f, g, o].
+
+use crate::data::binfmt::Tensor;
+use crate::Result;
+use anyhow::Context;
+use std::path::Path;
+
+const H: usize = 128;
+
+/// A dense f32 matrix in row-major order.
+#[derive(Clone, Debug)]
+struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    fn from_tensor(t: &Tensor) -> Result<Mat> {
+        anyhow::ensure!(t.shape.len() == 2, "expected rank-2, got {:?}", t.shape);
+        Ok(Mat {
+            rows: t.shape[0],
+            cols: t.shape[1],
+            data: t.to_f32()?,
+        })
+    }
+
+    /// y += xᵀ · M (x: rows, y: cols)
+    fn accum_vec_mul(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.rows);
+        debug_assert_eq!(y.len(), self.cols);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.data[i * self.cols..(i + 1) * self.cols];
+            for (yj, &wij) in y.iter_mut().zip(row) {
+                *yj += xi * wij;
+            }
+        }
+    }
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// The 2-layer LSTM with a linear readout.
+pub struct Lstm {
+    wx1: Mat,
+    wh1: Mat,
+    wx2: Mat,
+    wh2: Mat,
+    w_out: Mat,
+}
+
+impl Lstm {
+    /// Load from the artifact bundle (`artifacts/lstm/*.bin`).
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let d = artifacts_dir.as_ref().join("lstm");
+        let m = |name: &str| -> Result<Mat> {
+            Mat::from_tensor(
+                &Tensor::read(d.join(format!("{name}.bin")))
+                    .with_context(|| format!("lstm weight {name}"))?,
+            )
+        };
+        let lstm = Self {
+            wx1: m("wx1")?,
+            wh1: m("wh1")?,
+            wx2: m("wx2")?,
+            wh2: m("wh2")?,
+            w_out: m("w_out")?,
+        };
+        anyhow::ensure!(lstm.wx1.cols == 4 * H && lstm.wh1.rows == H);
+        Ok(lstm)
+    }
+
+    /// Parameter count (the Fig 9b comparison number).
+    pub fn num_params(&self) -> usize {
+        [&self.wx1, &self.wh1, &self.wx2, &self.wh2, &self.w_out]
+            .iter()
+            .map(|m| m.rows * m.cols)
+            .sum()
+    }
+
+    /// Classify one sequence of embedding vectors. Returns the logit.
+    pub fn run(&self, emb_seq: &[Vec<f32>]) -> f32 {
+        let mut h1 = vec![0f32; H];
+        let mut c1 = vec![0f32; H];
+        let mut h2 = vec![0f32; H];
+        let mut c2 = vec![0f32; H];
+        let mut z = vec![0f32; 4 * H];
+        for x in emb_seq {
+            cell(&self.wx1, &self.wh1, x, &mut h1, &mut c1, &mut z);
+            let h1_snapshot = h1.clone();
+            cell(&self.wx2, &self.wh2, &h1_snapshot, &mut h2, &mut c2, &mut z);
+        }
+        let mut logit = vec![0f32; 1];
+        self.w_out.accum_vec_mul(&h2, &mut logit);
+        logit[0]
+    }
+
+    /// Predicted label.
+    pub fn predict(&self, emb_seq: &[Vec<f32>]) -> u8 {
+        (self.run(emb_seq) >= 0.0) as u8
+    }
+}
+
+fn cell(wx: &Mat, wh: &Mat, x: &[f32], h: &mut [f32], c: &mut [f32], z: &mut [f32]) {
+    z.iter_mut().for_each(|v| *v = 0.0);
+    wx.accum_vec_mul(x, z);
+    wh.accum_vec_mul(h, z);
+    for j in 0..H {
+        let i_g = sigmoid(z[j]);
+        let f_g = sigmoid(z[H + j] + 1.0);
+        let g_g = z[2 * H + j].tanh();
+        let o_g = sigmoid(z[3 * H + j]);
+        c[j] = f_g * c[j] + i_g * g_g;
+        h[j] = o_g * c[j].tanh();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_lstm() -> Lstm {
+        // deterministic small weights exercising every gate
+        let fill = |rows: usize, cols: usize, scale: f32| Mat {
+            rows,
+            cols,
+            data: (0..rows * cols)
+                .map(|i| ((i % 17) as f32 - 8.0) * scale)
+                .collect(),
+        };
+        Lstm {
+            wx1: fill(100, 4 * H, 0.01),
+            wh1: fill(H, 4 * H, 0.01),
+            wx2: fill(H, 4 * H, 0.01),
+            wh2: fill(H, 4 * H, 0.01),
+            w_out: fill(H, 1, 0.05),
+        }
+    }
+
+    #[test]
+    fn param_count_matches_paper() {
+        let l = tiny_lstm();
+        // 4(100·128+128²) + 4(128·128+128²) + 128 = 247,936
+        assert_eq!(l.num_params(), 247_936);
+    }
+
+    #[test]
+    fn run_is_deterministic_and_state_dependent() {
+        let l = tiny_lstm();
+        let seq1: Vec<Vec<f32>> = (0..5)
+            .map(|t| (0..100).map(|i| ((i + t) % 7) as f32 * 0.1).collect())
+            .collect();
+        let a = l.run(&seq1);
+        let b = l.run(&seq1);
+        assert_eq!(a, b);
+        // order matters (sequence memory)
+        let mut seq2 = seq1.clone();
+        seq2.reverse();
+        assert_ne!(l.run(&seq1), l.run(&seq2));
+    }
+
+    #[test]
+    fn empty_sequence_gives_zero_logit() {
+        let l = tiny_lstm();
+        assert_eq!(l.run(&[]), 0.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Comparison baselines:
+//!
+//! - [`lstm`] — the paper's accuracy/parameter-count baseline (2-layer
+//!   LSTM, 247.8K parameters vs the SNN's 29.3K) running the weights
+//!   trained at build time.
+//! - [`vanilla_accel`] — the Fig 2 strawman: a digital SNN accelerator
+//!   with *separate* weight and V_MEM SRAMs (every synaptic event costs
+//!   discrete read/compute/write traffic instead of one fused CIM
+//!   cycle).
+//! - [`table1`] — the published competitor-macro numbers and our
+//!   model's "This Work" columns.
+
+pub mod lstm;
+pub mod table1;
+pub mod vanilla_accel;
+
+pub use lstm::Lstm;
+pub use table1::{table1_rows, MacroRow, THIS_WORK_POINTS};
+pub use vanilla_accel::VanillaAccelModel;

@@ -1,0 +1,242 @@
+//! Table I: comparison with other SNN and digital-CIM macros.
+//!
+//! Competitor rows are the published numbers the paper itself cites;
+//! the "This Work" rows are *computed* from our calibrated models at
+//! the three published operating points, so the harness checks that the
+//! simulation reproduces the paper's own columns.
+
+use crate::energy::{AreaModel, EnergyModel};
+use crate::isa::InstructionKind;
+
+/// One macro's comparison row.
+#[derive(Clone, Debug)]
+pub struct MacroRow {
+    pub name: &'static str,
+    pub technology_nm: u32,
+    pub application: &'static str,
+    pub macro_type: &'static str,
+    pub precision: &'static str,
+    pub bitcell: &'static str,
+    pub read_disturb: Option<bool>,
+    pub flexible_neuron: bool,
+    pub sparsity_support: bool,
+    pub area_mm2: Option<f64>,
+    pub supply_v: f64,
+    pub freq_mhz: f64,
+    pub power_mw: Option<f64>,
+    pub gops_per_mm2: Option<f64>,
+    pub tops_per_w: Option<f64>,
+}
+
+/// The three published "This Work" operating points (labels from
+/// Fig 9a; Table I columns).
+pub const THIS_WORK_POINTS: [(&str, f64, f64); 3] = [
+    ("A", 0.70, 66.67),
+    ("D", 0.85, 200.0),
+    ("G", 1.20, 500.0),
+];
+
+/// Published competitor rows (paper Table I; "-" entries are None).
+pub fn competitor_rows() -> Vec<MacroRow> {
+    vec![
+        MacroRow {
+            name: "VLSI'15 [12]",
+            technology_nm: 28,
+            application: "CAM/Logic",
+            macro_type: "CIM",
+            precision: "-",
+            bitcell: "6T",
+            read_disturb: Some(true),
+            flexible_neuron: false,
+            sparsity_support: false,
+            area_mm2: Some(0.0012),
+            supply_v: 1.0,
+            freq_mhz: 370.0,
+            power_mw: None,
+            gops_per_mm2: None,
+            tops_per_w: None,
+        },
+        MacroRow {
+            name: "CICC'17 [9]",
+            technology_nm: 65,
+            application: "SNN",
+            macro_type: "Time based",
+            precision: "3b/8b",
+            bitcell: "-",
+            read_disturb: None,
+            flexible_neuron: false,
+            sparsity_support: false,
+            area_mm2: Some(0.24),
+            supply_v: 1.2,
+            freq_mhz: 99.0,
+            power_mw: Some(20.48),
+            gops_per_mm2: Some(1.65),
+            tops_per_w: Some(0.019),
+        },
+        MacroRow {
+            name: "CICC'19 [10]",
+            technology_nm: 28,
+            application: "SNN",
+            macro_type: "Digital",
+            precision: "4b/-",
+            bitcell: "6T",
+            read_disturb: Some(false),
+            flexible_neuron: false,
+            sparsity_support: false,
+            area_mm2: Some(0.266),
+            supply_v: 1.1,
+            freq_mhz: 255.0,
+            power_mw: Some(1.023),
+            gops_per_mm2: None,
+            tops_per_w: None,
+        },
+        MacroRow {
+            name: "ISSCC'19 [13]",
+            technology_nm: 28,
+            application: "CNN/FC",
+            macro_type: "CIM",
+            precision: "8b/-",
+            bitcell: "8T",
+            read_disturb: Some(false),
+            flexible_neuron: false,
+            sparsity_support: false,
+            area_mm2: Some(2.7),
+            supply_v: 0.6,
+            freq_mhz: 114.0,
+            power_mw: Some(105.0),
+            gops_per_mm2: Some(27.3),
+            tops_per_w: Some(0.97), // scaled to 65nm, 8b
+        },
+        MacroRow {
+            name: "VLSI'20 [14]",
+            technology_nm: 65,
+            application: "CNN",
+            macro_type: "CIM",
+            precision: "16b/16b",
+            bitcell: "8T",
+            read_disturb: Some(false),
+            flexible_neuron: false,
+            sparsity_support: true,
+            area_mm2: Some(0.377),
+            supply_v: 1.0,
+            freq_mhz: 200.0,
+            power_mw: Some(5.294),
+            gops_per_mm2: Some(8.4),
+            tops_per_w: Some(0.31), // 16b
+        },
+        MacroRow {
+            name: "ASSCC'20 [11]",
+            technology_nm: 65,
+            application: "SNN",
+            macro_type: "Async",
+            precision: "1b/6b",
+            bitcell: "-",
+            read_disturb: None,
+            flexible_neuron: false,
+            sparsity_support: true,
+            area_mm2: Some(1.99),
+            supply_v: 0.5,
+            freq_mhz: 0.07,
+            power_mw: Some(0.0003),
+            gops_per_mm2: None,
+            tops_per_w: Some(0.67), // 6b
+        },
+    ]
+}
+
+/// The full table: competitors + our computed "This Work" rows.
+pub fn table1_rows(energy: &EnergyModel, area: &AreaModel) -> Vec<MacroRow> {
+    let mut rows = competitor_rows();
+    let area_mm2 = area.breakdown().total_mm2();
+    for (label, vdd, freq_mhz) in THIS_WORK_POINTS {
+        let f = freq_mhz * 1e6;
+        let power_w = energy.avg_power_w(vdd, f);
+        rows.push(MacroRow {
+            name: match label {
+                "A" => "This Work (0.7V)",
+                "D" => "This Work (0.85V)",
+                _ => "This Work (1.2V)",
+            },
+            technology_nm: 65,
+            application: "SNN",
+            macro_type: "CIM",
+            precision: "6b/11b (signed)",
+            bitcell: "10T",
+            read_disturb: Some(false),
+            flexible_neuron: true,
+            sparsity_support: true,
+            area_mm2: Some(area_mm2),
+            supply_v: vdd,
+            freq_mhz,
+            power_mw: Some(power_w * 1e3),
+            gops_per_mm2: Some(energy.gops_per_mm2(f, area_mm2)),
+            tops_per_w: Some(energy.tops_per_w(InstructionKind::AccW2V, vdd, f)),
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn this_work_rows_match_published_columns() {
+        let rows = table1_rows(&EnergyModel::calibrated(), &AreaModel::calibrated());
+        let published = [
+            ("This Work (0.7V)", 0.072, 0.75, 0.91),
+            ("This Work (0.85V)", 0.201, 2.24, 0.99),
+            ("This Work (1.2V)", 0.88, 5.61, 0.57),
+        ];
+        for (name, p_mw, gops, tops) in published {
+            let r = rows.iter().find(|r| r.name == name).unwrap();
+            let power = r.power_mw.unwrap();
+            let g = r.gops_per_mm2.unwrap();
+            let t = r.tops_per_w.unwrap();
+            assert!(
+                (power - p_mw).abs() / p_mw < 0.15,
+                "{name} power {power:.3} vs {p_mw}"
+            );
+            assert!((g - gops).abs() / gops < 0.02, "{name} GOPS/mm2 {g:.2} vs {gops}");
+            assert!((t - tops).abs() / tops < 0.15, "{name} TOPS/W {t:.3} vs {tops}");
+        }
+    }
+
+    #[test]
+    fn only_this_work_has_flexible_neuron() {
+        // The paper's qualitative claim: first digital CIM SNN macro
+        // with multiple neuron functionalities.
+        let rows = table1_rows(&EnergyModel::calibrated(), &AreaModel::calibrated());
+        for r in &rows {
+            assert_eq!(r.flexible_neuron, r.name.starts_with("This Work"), "{}", r.name);
+        }
+    }
+
+    #[test]
+    fn efficiency_ratios_vs_competitors() {
+        // §III: [13] has 1.5× and [14] 2.2× lower efficiency (scaled);
+        // we check the same ordering holds in the table.
+        let rows = table1_rows(&EnergyModel::calibrated(), &AreaModel::calibrated());
+        let ours = rows
+            .iter()
+            .find(|r| r.name == "This Work (0.85V)")
+            .unwrap()
+            .tops_per_w
+            .unwrap();
+        for competitor in ["ISSCC'19 [13]", "VLSI'20 [14]", "ASSCC'20 [11]", "CICC'17 [9]"] {
+            let t = rows
+                .iter()
+                .find(|r| r.name == competitor)
+                .unwrap()
+                .tops_per_w
+                .unwrap();
+            assert!(ours > t, "{competitor}: ours {ours:.3} vs {t:.3}");
+        }
+    }
+
+    #[test]
+    fn six_competitors_three_ours() {
+        let rows = table1_rows(&EnergyModel::calibrated(), &AreaModel::calibrated());
+        assert_eq!(rows.len(), 9);
+    }
+}

@@ -1,0 +1,179 @@
+//! Offline micro-benchmark harness (criterion is unavailable in the
+//! offline environment): warmup + timed iterations with robust stats,
+//! plus table formatting for the per-figure benches.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    pub min: Duration,
+    pub throughput_per_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12.3?} median  ±{:>10.3?} MAD  ({:.2e}/s, n={})",
+            self.name, self.median, self.mad, self.throughput_per_s, self.iterations
+        )
+    }
+}
+
+/// Benchmark runner with fixed-budget adaptive iteration counts.
+pub struct Bencher {
+    /// Target wall-clock per benchmark.
+    pub budget: Duration,
+    /// Minimum timed iterations.
+    pub min_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(Duration::from_millis(700))
+    }
+}
+
+impl Bencher {
+    pub fn new(budget: Duration) -> Self {
+        Self {
+            budget,
+            min_iters: 10,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; `work` is the number of logical operations
+    /// per call (for throughput).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, work: u64, mut f: F) -> &BenchResult {
+        // warmup + calibration
+        let t0 = Instant::now();
+        f();
+        let one = t0.elapsed().max(Duration::from_nanos(50));
+        let iters = ((self.budget.as_secs_f64() / one.as_secs_f64()) as u64)
+            .clamp(self.min_iters, 1_000_000);
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let median = samples[samples.len() / 2];
+        let mut devs: Vec<Duration> = samples
+            .iter()
+            .map(|&s| if s > median { s - median } else { median - s })
+            .collect();
+        devs.sort();
+        let mad = devs[devs.len() / 2];
+        let result = BenchResult {
+            name: name.to_string(),
+            iterations: iters,
+            median,
+            mad,
+            min: samples[0],
+            throughput_per_s: work as f64 / median.as_secs_f64(),
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Minimal fixed-width table printer for bench outputs that mirror the
+/// paper's tables/figures.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher::new(Duration::from_millis(20));
+        let mut x = 0u64;
+        let r = b
+            .bench("spin", 1000, || {
+                for i in 0..1000u64 {
+                    x = x.wrapping_add(i * i);
+                }
+            })
+            .clone();
+        assert!(r.iterations >= 10);
+        assert!(r.median >= r.min);
+        assert!(r.throughput_per_s > 0.0);
+        assert!(x != 0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1.00".into()]);
+        t.row(&["longer-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("longer-name"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

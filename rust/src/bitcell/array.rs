@@ -1,0 +1,214 @@
+//! Packed bit-array storage with the 10T dual-row read semantics.
+
+use super::{COLS, COL_MASK};
+
+/// Result of a (possibly dual-row) bitline read.
+///
+/// `or` carries, per column, the OR of all *driven* cells; `and` the AND
+/// over driven cells. `driven` marks columns where at least one enabled
+/// cell is connected. Undriven columns leave both bitlines precharged,
+/// which the sensing stage reports as `(or=0, and=1)` — peripherals must
+/// only be active on driven columns (enforced by the adder config).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DualRead {
+    pub or: u128,
+    pub and: u128,
+    pub driven: u128,
+}
+
+impl DualRead {
+    /// Combine two single-port reads sharing the bitlines.
+    pub fn combine(a: DualRead, b: DualRead) -> DualRead {
+        let driven = a.driven | b.driven;
+        // OR of driven bits: undriven contributes 0.
+        let or = (a.or & a.driven) | (b.or & b.driven);
+        // AND over driven bits: undriven contributes 1 (vacuous).
+        let and = (a.or | !a.driven) & (b.or | !b.driven) & COL_MASK;
+        DualRead { or, and, driven }
+    }
+
+    /// A read with no enabled rows (both bitlines precharged).
+    pub fn idle() -> DualRead {
+        DualRead {
+            or: 0,
+            and: COL_MASK,
+            driven: 0,
+        }
+    }
+
+    /// Per-column XOR of the two operands (valid only on driven columns
+    /// where exactly the intended cells drive).
+    #[inline]
+    pub fn xor(&self) -> u128 {
+        self.or & !self.and
+    }
+}
+
+/// A rows×COLS bit array, one `u128` per row (COLS = 78 ≤ 128).
+///
+/// This is the storage substrate for both W_MEM and V_MEM. It knows
+/// nothing about weights or membrane potentials — the layout module and
+/// the macro give the bits meaning.
+#[derive(Clone, Debug)]
+pub struct BitArray {
+    rows: Vec<u128>,
+}
+
+impl BitArray {
+    /// All-zero array with `rows` rows.
+    pub fn new(rows: usize) -> Self {
+        Self {
+            rows: vec![0u128; rows],
+        }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Raw row bits (low `COLS` bits used).
+    #[inline]
+    pub fn row(&self, r: usize) -> u128 {
+        self.rows[r]
+    }
+
+    /// Overwrite a full row.
+    #[inline]
+    pub fn set_row(&mut self, r: usize, bits: u128) {
+        debug_assert_eq!(bits & !COL_MASK, 0, "bits beyond column {COLS}");
+        self.rows[r] = bits & COL_MASK;
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(c < COLS);
+        (self.rows[r] >> c) & 1 == 1
+    }
+
+    /// Write one bit.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(c < COLS);
+        if v {
+            self.rows[r] |= 1u128 << c;
+        } else {
+            self.rows[r] &= !(1u128 << c);
+        }
+    }
+
+    /// Single-row read through a drive mask: only columns in `mask`
+    /// have cells connected to the fired wordline (RWLo/RWLe interleave
+    /// for W_MEM; full-row for V_MEM).
+    #[inline]
+    pub fn read_masked(&self, r: usize, mask: u128) -> DualRead {
+        let bits = self.rows[r] & mask;
+        DualRead {
+            or: bits,
+            and: (bits | !mask) & COL_MASK,
+            driven: mask & COL_MASK,
+        }
+    }
+
+    /// Masked write: columns in `mask` take `data`'s bit, others keep
+    /// their value (the conditional write driver leaves their bitlines
+    /// precharged).
+    #[inline]
+    pub fn write_masked(&mut self, r: usize, data: u128, mask: u128) {
+        let m = mask & COL_MASK;
+        self.rows[r] = (self.rows[r] & !m) | (data & m);
+    }
+
+    /// Zero every row.
+    pub fn clear(&mut self) {
+        for r in self.rows.iter_mut() {
+            *r = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::XorShiftRng;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut a = BitArray::new(4);
+        a.set(2, 77, true);
+        a.set(2, 0, true);
+        assert!(a.get(2, 77));
+        assert!(a.get(2, 0));
+        assert!(!a.get(2, 38));
+        a.set(2, 77, false);
+        assert!(!a.get(2, 77));
+    }
+
+    #[test]
+    fn dual_read_is_or_and_of_driven_cells() {
+        let mut a = BitArray::new(2);
+        // col0: 1,1 -> or=1 and=1; col1: 1,0 -> or=1 and=0;
+        // col2: 0,0 -> or=0 and=0; col3 driven only in row0: bit=1.
+        a.set(0, 0, true);
+        a.set(1, 0, true);
+        a.set(0, 1, true);
+        a.set(0, 3, true);
+        let ra = a.read_masked(0, 0b1111);
+        let rb = a.read_masked(1, 0b0111);
+        let d = DualRead::combine(ra, rb);
+        assert_eq!(d.or & 0b1111, 0b1011);
+        assert_eq!(d.and & 0b1111, 0b1001); // col3 single-driven: and = bit
+        assert_eq!(d.driven & 0b1111, 0b1111);
+        assert_eq!(d.xor() & 0b1111, 0b0010);
+    }
+
+    #[test]
+    fn undriven_columns_read_precharged() {
+        let a = BitArray::new(1);
+        let d = DualRead::combine(a.read_masked(0, 0), a.read_masked(0, 0));
+        assert_eq!(d, DualRead::idle());
+        assert_eq!(d.or, 0);
+        assert_eq!(d.and, COL_MASK);
+    }
+
+    #[test]
+    fn reads_are_non_destructive() {
+        // 10T property: any sequence of reads leaves the array unchanged.
+        let mut a = BitArray::new(8);
+        let mut rng = XorShiftRng::new(11);
+        for r in 0..8 {
+            a.set_row(r, (rng.next_u64() as u128) & COL_MASK);
+        }
+        let before: Vec<u128> = (0..8).map(|r| a.row(r)).collect();
+        for _ in 0..100 {
+            let r1 = rng.gen_range(8) as usize;
+            let r2 = rng.gen_range(8) as usize;
+            let m = (rng.next_u64() as u128) & COL_MASK;
+            let _ = DualRead::combine(a.read_masked(r1, m), a.read_masked(r2, !m & COL_MASK));
+        }
+        let after: Vec<u128> = (0..8).map(|r| a.row(r)).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn masked_write_only_touches_masked_columns() {
+        let mut a = BitArray::new(1);
+        a.set_row(0, 0b1010_1010);
+        a.write_masked(0, 0b0101_0101, 0b0000_1111);
+        assert_eq!(a.row(0), 0b1010_0101);
+    }
+
+    #[test]
+    fn single_row_read_equals_self_pair() {
+        // Reading one row must look like the row paired with itself:
+        // or = and = bits on driven columns.
+        let mut a = BitArray::new(1);
+        a.set_row(0, 0b1100);
+        let d = a.read_masked(0, 0b1111);
+        assert_eq!(d.or & 0b1111, 0b1100);
+        assert_eq!(d.and & 0b1111, 0b1100);
+        assert_eq!(d.xor(), 0);
+    }
+}

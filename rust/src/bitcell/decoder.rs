@@ -1,0 +1,175 @@
+//! The triple-row decoder.
+//!
+//! IMPULSE's decoder takes up to three addresses per cycle and fires
+//! two read wordlines and one write wordline *simultaneously* — that is
+//! what lets a single cycle read two operand rows through the shared
+//! bitlines, push the sums through the column-peripheral adders, and
+//! write the result back.
+
+use super::{Parity, V_ROWS, W_ROWS};
+use thiserror::Error;
+
+/// A decoded row address within the fused macro.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RowAddr {
+    /// A W_MEM row; which interleaved half is read depends on the cycle
+    /// parity (RWLo vs RWLe).
+    W(usize),
+    /// A V_MEM row (single RWL).
+    V(usize),
+}
+
+impl RowAddr {
+    /// Validate the address against the macro geometry.
+    pub fn validate(&self) -> Result<(), DecodeError> {
+        match *self {
+            RowAddr::W(r) if r >= W_ROWS => Err(DecodeError::WRowOutOfRange(r)),
+            RowAddr::V(r) if r >= V_ROWS => Err(DecodeError::VRowOutOfRange(r)),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Errors from wordline selection.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum DecodeError {
+    #[error("W_MEM row {0} out of range (0..{W_ROWS})")]
+    WRowOutOfRange(usize),
+    #[error("V_MEM row {0} out of range (0..{V_ROWS})")]
+    VRowOutOfRange(usize),
+    #[error("write target must be a V_MEM row, got {0:?}")]
+    WriteToWMem(RowAddr),
+    #[error("CIM reads enable at most two rows")]
+    TooManyReads,
+    #[error("read rows must be distinct when both are V_MEM row {0}")]
+    DuplicateVRead(usize),
+}
+
+/// The set of wordlines fired in one cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WordlineSet {
+    /// Up to two read rows.
+    pub reads: [Option<RowAddr>; 2],
+    /// Optional write row (CIM writes always land in V_MEM — weights
+    /// are written through the normal SRAM write port, not during CIM).
+    pub write: Option<usize>,
+    /// Cycle parity (selects RWLo/RWLe and the field stagger).
+    pub parity: Parity,
+}
+
+/// Functional model of the triple-row decoder: validates and produces a
+/// [`WordlineSet`]. In silicon this is two read decoders and one write
+/// decoder operating in parallel on a shared address bus.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TripleRowDecoder;
+
+impl TripleRowDecoder {
+    /// Decode a (reads, write, parity) request into fired wordlines.
+    pub fn decode(
+        &self,
+        reads: &[RowAddr],
+        write: Option<RowAddr>,
+        parity: Parity,
+    ) -> Result<WordlineSet, DecodeError> {
+        if reads.len() > 2 {
+            return Err(DecodeError::TooManyReads);
+        }
+        for r in reads {
+            r.validate()?;
+        }
+        if reads.len() == 2 {
+            if let (RowAddr::V(a), RowAddr::V(b)) = (reads[0], reads[1]) {
+                if a == b {
+                    return Err(DecodeError::DuplicateVRead(a));
+                }
+            }
+        }
+        let write = match write {
+            None => None,
+            Some(RowAddr::V(r)) => {
+                RowAddr::V(r).validate()?;
+                Some(r)
+            }
+            Some(other) => return Err(DecodeError::WriteToWMem(other)),
+        };
+        let mut rd = [None, None];
+        for (i, r) in reads.iter().enumerate() {
+            rd[i] = Some(*r);
+        }
+        Ok(WordlineSet {
+            reads: rd,
+            write,
+            parity,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_triple_decode() {
+        let d = TripleRowDecoder;
+        let ws = d
+            .decode(
+                &[RowAddr::W(5), RowAddr::V(3)],
+                Some(RowAddr::V(3)),
+                Parity::Odd,
+            )
+            .unwrap();
+        assert_eq!(ws.reads[0], Some(RowAddr::W(5)));
+        assert_eq!(ws.reads[1], Some(RowAddr::V(3)));
+        assert_eq!(ws.write, Some(3));
+        assert_eq!(ws.parity, Parity::Odd);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let d = TripleRowDecoder;
+        assert_eq!(
+            d.decode(&[RowAddr::W(128)], None, Parity::Odd),
+            Err(DecodeError::WRowOutOfRange(128))
+        );
+        assert_eq!(
+            d.decode(&[RowAddr::V(32)], None, Parity::Odd),
+            Err(DecodeError::VRowOutOfRange(32))
+        );
+    }
+
+    #[test]
+    fn rejects_write_to_wmem() {
+        let d = TripleRowDecoder;
+        assert_eq!(
+            d.decode(&[RowAddr::V(0)], Some(RowAddr::W(0)), Parity::Even),
+            Err(DecodeError::WriteToWMem(RowAddr::W(0)))
+        );
+    }
+
+    #[test]
+    fn rejects_three_reads_and_duplicate_v() {
+        let d = TripleRowDecoder;
+        assert_eq!(
+            d.decode(
+                &[RowAddr::V(0), RowAddr::V(1), RowAddr::V(2)],
+                None,
+                Parity::Odd
+            ),
+            Err(DecodeError::TooManyReads)
+        );
+        assert_eq!(
+            d.decode(&[RowAddr::V(7), RowAddr::V(7)], None, Parity::Odd),
+            Err(DecodeError::DuplicateVRead(7))
+        );
+    }
+
+    #[test]
+    fn same_w_row_both_halves_is_legal() {
+        // Reading a W row together with a V row is the AccW2V shape;
+        // reading the same W row twice is silently the same wordline.
+        let d = TripleRowDecoder;
+        assert!(d
+            .decode(&[RowAddr::W(3), RowAddr::W(3)], None, Parity::Even)
+            .is_ok());
+    }
+}

@@ -1,0 +1,266 @@
+//! Staggered data layout: where weights and membrane potentials live
+//! within a row's 78 columns.
+
+use super::{Parity, COLS, FIELD_WIDTH, VALUES_PER_ROW, WEIGHTS_PER_ROW};
+use crate::bits::{from_bits_le, to_bits_le, V_BITS, W_BITS};
+
+/// Bit offset (within a 12-column field) of the "hole" column — the
+/// column that carries the weight sign bit in AccW2V and is therefore
+/// kept `0` in every stored V_MEM value.
+pub const VALUE_HOLE_OFFSET: usize = 5;
+
+/// Base column of value field `g` (0..6) in the given parity.
+#[inline]
+pub fn field_base(g: usize, parity: Parity) -> usize {
+    debug_assert!(g < VALUES_PER_ROW);
+    g * FIELD_WIDTH + parity.stagger()
+}
+
+/// Column-layout helper for one parity: encodes/decodes weights and
+/// 11-bit values to/from packed 78-bit row words.
+#[derive(Clone, Copy, Debug)]
+pub struct FieldLayout {
+    pub parity: Parity,
+}
+
+impl FieldLayout {
+    pub fn new(parity: Parity) -> Self {
+        Self { parity }
+    }
+
+    /// Columns (as a mask) of value field `g`.
+    pub fn field_mask(&self, g: usize) -> u128 {
+        ((1u128 << FIELD_WIDTH) - 1) << field_base(g, self.parity)
+    }
+
+    /// Mask over all six value fields of this parity.
+    pub fn all_fields_mask(&self) -> u128 {
+        (0..VALUES_PER_ROW).fold(0u128, |m, g| m | self.field_mask(g))
+    }
+
+    /// Mask of the hole columns (bit 5 of each field) of this parity.
+    pub fn hole_mask(&self) -> u128 {
+        (0..VALUES_PER_ROW).fold(0u128, |m, g| {
+            m | (1u128 << (field_base(g, self.parity) + VALUE_HOLE_OFFSET))
+        })
+    }
+
+    /// Drive mask of the W_MEM read wordline for this parity: the cells
+    /// of even-indexed weights hang off RWLo (odd parity), odd-indexed
+    /// off RWLe (even parity).
+    pub fn w_drive_mask(&self) -> u128 {
+        let mut m = 0u128;
+        for j in 0..WEIGHTS_PER_ROW {
+            let on_this_parity = match self.parity {
+                Parity::Odd => j % 2 == 0,
+                Parity::Even => j % 2 == 1,
+            };
+            if on_this_parity {
+                m |= ((1u128 << W_BITS) - 1) << (j * W_BITS as usize);
+            }
+        }
+        m
+    }
+
+    /// Encode an 11-bit signed value into its 12-column field position
+    /// (bits 0..4 at field offsets 0..4, bits 5..10 at offsets 6..11;
+    /// offset 5 — the hole — stays 0).
+    pub fn encode_value(&self, g: usize, value: i64) -> u128 {
+        let bits = to_bits_le(value, V_BITS);
+        let base = field_base(g, self.parity);
+        let mut word = 0u128;
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                let off = if i < VALUE_HOLE_OFFSET { i } else { i + 1 };
+                word |= 1u128 << (base + off);
+            }
+        }
+        word
+    }
+
+    /// Decode field `g` of a packed row into an 11-bit signed value.
+    /// The hole column is ignored (asserted 0 in debug builds).
+    pub fn decode_value(&self, row: u128, g: usize) -> i64 {
+        let base = field_base(g, self.parity);
+        debug_assert_eq!(
+            (row >> (base + VALUE_HOLE_OFFSET)) & 1,
+            0,
+            "V_MEM hole column must be 0 (field {g})"
+        );
+        let mut bits = [false; V_BITS as usize];
+        for (i, b) in bits.iter_mut().enumerate() {
+            let off = if i < VALUE_HOLE_OFFSET { i } else { i + 1 };
+            *b = (row >> (base + off)) & 1 == 1;
+        }
+        from_bits_le(&bits)
+    }
+
+    /// Encode a full V_MEM row (six values) into a packed row word.
+    pub fn encode_row(&self, values: &[i64]) -> u128 {
+        assert_eq!(values.len(), VALUES_PER_ROW);
+        values
+            .iter()
+            .enumerate()
+            .fold(0u128, |w, (g, &v)| w | self.encode_value(g, v))
+    }
+
+    /// Decode all six values of a packed row word.
+    pub fn decode_row(&self, row: u128) -> Vec<i64> {
+        (0..VALUES_PER_ROW).map(|g| self.decode_value(row, g)).collect()
+    }
+}
+
+/// Encode one 6-bit signed weight at its column-sequential position
+/// (weight `j` at columns `6j..6j+5`, LSB lowest).
+pub fn encode_weight(j: usize, w: i64) -> u128 {
+    assert!(j < WEIGHTS_PER_ROW);
+    let bits = to_bits_le(w, W_BITS);
+    let base = j * W_BITS as usize;
+    bits.iter()
+        .enumerate()
+        .fold(0u128, |acc, (i, &b)| if b { acc | (1u128 << (base + i)) } else { acc })
+}
+
+/// Decode weight `j` from a packed W_MEM row word.
+pub fn decode_weight(row: u128, j: usize) -> i64 {
+    assert!(j < WEIGHTS_PER_ROW);
+    let base = j * W_BITS as usize;
+    let bits: Vec<bool> = (0..W_BITS as usize)
+        .map(|i| (row >> (base + i)) & 1 == 1)
+        .collect();
+    from_bits_le(&bits)
+}
+
+/// Encode a full W_MEM row of twelve 6-bit weights.
+pub fn encode_weight_row(ws: &[i64]) -> u128 {
+    assert_eq!(ws.len(), WEIGHTS_PER_ROW);
+    ws.iter()
+        .enumerate()
+        .fold(0u128, |acc, (j, &w)| acc | encode_weight(j, w))
+}
+
+/// Decode a full W_MEM row.
+pub fn decode_weight_row(row: u128) -> Vec<i64> {
+    (0..WEIGHTS_PER_ROW).map(|j| decode_weight(row, j)).collect()
+}
+
+/// The weight index accumulated into field `g` during a cycle of the
+/// given parity (odd cycles touch even-indexed weights and vice versa).
+#[inline]
+pub fn weight_index(g: usize, parity: Parity) -> usize {
+    match parity {
+        Parity::Odd => 2 * g,
+        Parity::Even => 2 * g + 1,
+    }
+}
+
+/// Sanity: every field fits within the physical columns.
+pub fn check_geometry() {
+    for parity in Parity::BOTH {
+        for g in 0..VALUES_PER_ROW {
+            assert!(field_base(g, parity) + FIELD_WIDTH <= COLS);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::XorShiftRng;
+
+    #[test]
+    fn value_roundtrip_all() {
+        for parity in Parity::BOTH {
+            let l = FieldLayout::new(parity);
+            for g in 0..VALUES_PER_ROW {
+                for v in [-1024i64, -513, -1, 0, 1, 2, 511, 1023] {
+                    let w = l.encode_value(g, v);
+                    assert_eq!(l.decode_value(w, g), v, "parity={parity:?} g={g} v={v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hole_is_always_zero() {
+        let l = FieldLayout::new(Parity::Odd);
+        let mut rng = XorShiftRng::new(1);
+        for _ in 0..200 {
+            let vals: Vec<i64> = (0..VALUES_PER_ROW).map(|_| rng.gen_i64(-1024, 1023)).collect();
+            let row = l.encode_row(&vals);
+            assert_eq!(row & l.hole_mask(), 0);
+            assert_eq!(l.decode_row(row), vals);
+        }
+    }
+
+    #[test]
+    fn weight_roundtrip_all() {
+        for j in 0..WEIGHTS_PER_ROW {
+            for w in -32..=31 {
+                let row = encode_weight(j, w);
+                assert_eq!(decode_weight(row, j), w);
+            }
+        }
+    }
+
+    #[test]
+    fn weight_row_roundtrip() {
+        let mut rng = XorShiftRng::new(2);
+        for _ in 0..100 {
+            let ws: Vec<i64> = (0..WEIGHTS_PER_ROW).map(|_| rng.gen_i64(-32, 31)).collect();
+            assert_eq!(decode_weight_row(encode_weight_row(&ws)), ws);
+        }
+    }
+
+    #[test]
+    fn weight_sign_column_aligns_with_hole() {
+        // The MSB (sign) column of the weight accumulated into field g
+        // must be exactly the hole column of that field.
+        for parity in Parity::BOTH {
+            for g in 0..VALUES_PER_ROW {
+                let j = weight_index(g, parity);
+                let sign_col = j * W_BITS as usize + (W_BITS as usize - 1);
+                assert_eq!(
+                    sign_col,
+                    field_base(g, parity) + VALUE_HOLE_OFFSET,
+                    "parity={parity:?} g={g} j={j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn w_drive_masks_partition_weight_columns() {
+        let o = FieldLayout::new(Parity::Odd).w_drive_mask();
+        let e = FieldLayout::new(Parity::Even).w_drive_mask();
+        assert_eq!(o & e, 0);
+        assert_eq!(o | e, (1u128 << 72) - 1);
+    }
+
+    #[test]
+    fn field_masks_are_disjoint_and_within_cols() {
+        check_geometry();
+        for parity in Parity::BOTH {
+            let l = FieldLayout::new(parity);
+            let mut seen = 0u128;
+            for g in 0..VALUES_PER_ROW {
+                let m = l.field_mask(g);
+                assert_eq!(seen & m, 0);
+                seen |= m;
+            }
+            assert_eq!(seen, l.all_fields_mask());
+            assert_eq!(seen & !super::super::COL_MASK, 0);
+        }
+    }
+
+    #[test]
+    fn weight_lands_in_low_half_of_its_field() {
+        // Weight j for field g occupies the first 6 columns of the field.
+        for parity in Parity::BOTH {
+            for g in 0..VALUES_PER_ROW {
+                let j = weight_index(g, parity);
+                assert_eq!(j * W_BITS as usize, field_base(g, parity));
+            }
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! 10T-SRAM bitcell array simulation.
+//!
+//! The IMPULSE macro fuses two subarrays on common bitlines:
+//!
+//! - **W_MEM** — 128 rows × 78 columns. Each row stores twelve 6-bit
+//!   signed weights laid out column-sequentially (weight *j* occupies
+//!   columns `6j..6j+5`, LSB at the lowest column). Each row has two
+//!   read wordlines: cells of even-indexed weights connect to **RWLo**
+//!   (fired in *odd* cycles), cells of odd-indexed weights to **RWLe**
+//!   (fired in *even* cycles).
+//! - **V_MEM** — 32 rows × 78 columns with a single RWL per row, each
+//!   row holding six 11-bit signed membrane potentials in 12-column
+//!   fields. Odd-cycle fields start at columns {0,12,…,60}; even-cycle
+//!   fields are staggered by 6 (columns {6,18,…,66}); within a field the
+//!   bit at offset 5 (the column carrying the weight sign in AccW2V) is
+//!   hardware-forced to `0` — the "hole" that makes an 11-bit value
+//!   occupy a 12-column field.
+//!
+//! The 10T cell has a differential read port: an enabled cell pulls RBL
+//! low when it stores `1` and RBLB low when it stores `0`. With two rows
+//! enabled on the same bitlines, RBL therefore senses `NOR(a,b)` and
+//! RBLB senses `¬AND … ` — functionally, after the sensing inverters the
+//! peripherals see `OR` and `AND` of the enabled cells (see
+//! [`crate::periph`]). Reads are non-destructive (no read disturb) —
+//! the decoupled read port never exposes the storage nodes.
+
+mod array;
+mod decoder;
+mod layout;
+
+pub use array::{BitArray, DualRead};
+pub use decoder::{DecodeError, RowAddr, TripleRowDecoder, WordlineSet};
+pub use layout::{
+    check_geometry, decode_weight, decode_weight_row, encode_weight, encode_weight_row,
+    field_base, weight_index, FieldLayout, VALUE_HOLE_OFFSET,
+};
+
+/// Cycle parity selecting which interleaved half of the macro is active.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Parity {
+    /// "Odd" cycle: RWLo fires; fields based at columns {0,12,…,60}.
+    Odd,
+    /// "Even" cycle: RWLe fires; fields based at columns {6,18,…,66}.
+    Even,
+}
+
+impl Parity {
+    /// Column offset the staggered mapping adds in this parity.
+    #[inline]
+    pub fn stagger(self) -> usize {
+        match self {
+            Parity::Odd => 0,
+            Parity::Even => FIELD_WIDTH / 2,
+        }
+    }
+
+    /// The opposite parity.
+    #[inline]
+    pub fn flip(self) -> Parity {
+        match self {
+            Parity::Odd => Parity::Even,
+            Parity::Even => Parity::Odd,
+        }
+    }
+
+    /// Both parities, in instruction-issue order.
+    pub const BOTH: [Parity; 2] = [Parity::Odd, Parity::Even];
+}
+
+/// Number of rows in the weight subarray (= max fan-in of a layer).
+pub const W_ROWS: usize = 128;
+/// Number of rows in the membrane-potential subarray.
+pub const V_ROWS: usize = 32;
+/// Physical bitline columns. 72 weight columns + 6 stagger columns so
+/// the even-cycle fields {6..17, …, 66..77} fit (modelling choice M1 in
+/// DESIGN.md §5 — the paper does not state the physical column count).
+pub const COLS: usize = 78;
+/// Weights stored per W_MEM row (6 per parity).
+pub const WEIGHTS_PER_ROW: usize = 12;
+/// Values (membrane potentials) per V_MEM row per parity.
+pub const VALUES_PER_ROW: usize = 6;
+/// Columns spanned by one accumulate field (11-bit value + sign hole).
+pub const FIELD_WIDTH: usize = 12;
+
+/// Mask with the low `COLS` bits set — every physical column.
+pub const COL_MASK: u128 = (1u128 << COLS) - 1;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_is_consistent() {
+        // 12 weights of 6 bits each = 72 weight columns.
+        assert_eq!(WEIGHTS_PER_ROW * crate::bits::W_BITS as usize, 72);
+        // Even-parity last field must end exactly at the last column.
+        let last_even_field = field_base(VALUES_PER_ROW - 1, Parity::Even);
+        assert_eq!(last_even_field + FIELD_WIDTH, COLS);
+        // Odd-parity fields tile the first 72 columns.
+        let last_odd_field = field_base(VALUES_PER_ROW - 1, Parity::Odd);
+        assert_eq!(last_odd_field + FIELD_WIDTH, 72);
+    }
+
+    #[test]
+    fn parity_helpers() {
+        assert_eq!(Parity::Odd.stagger(), 0);
+        assert_eq!(Parity::Even.stagger(), 6);
+        assert_eq!(Parity::Odd.flip(), Parity::Even);
+        assert_eq!(Parity::Even.flip(), Parity::Odd);
+    }
+}

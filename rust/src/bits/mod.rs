@@ -1,0 +1,166 @@
+//! Fixed-width two's-complement arithmetic and bit-vector utilities.
+//!
+//! Everything the hardware does is defined over small signed fields:
+//! 6-bit weights, 11-bit membrane potentials, with wraparound on
+//! overflow (a ripple-carry adder simply drops the final carry). These
+//! helpers centralize that arithmetic so the bit-level simulator, the
+//! functional golden models, and the artifact loaders all share one
+//! definition.
+
+mod rng;
+mod word;
+
+pub use rng::XorShiftRng;
+pub use word::SignedWord;
+
+/// Number of bits in a stored weight (signed).
+pub const W_BITS: u32 = 6;
+/// Number of bits in a stored membrane potential (signed).
+pub const V_BITS: u32 = 11;
+
+/// Wrap an arbitrary integer into `bits`-bit two's complement
+/// (interpreting the low `bits` bits as a signed value).
+///
+/// This is exactly what a `bits`-wide ripple-carry adder computes when
+/// the final carry-out is dropped.
+#[inline]
+pub fn wrap(value: i64, bits: u32) -> i64 {
+    debug_assert!(bits >= 1 && bits <= 63);
+    let m = 1i64 << bits;
+    let half = m >> 1;
+    ((value % m) + m + half) % m - half
+}
+
+/// Wrap into the 11-bit membrane-potential range [-1024, 1023].
+#[inline]
+pub fn wrap11(value: i64) -> i64 {
+    wrap(value, V_BITS)
+}
+
+/// Wrap into the 6-bit weight range [-32, 31].
+#[inline]
+pub fn wrap6(value: i64) -> i64 {
+    wrap(value, W_BITS)
+}
+
+/// Inclusive range of a `bits`-bit signed field: `(min, max)`.
+#[inline]
+pub fn signed_range(bits: u32) -> (i64, i64) {
+    let half = 1i64 << (bits - 1);
+    (-half, half - 1)
+}
+
+/// True iff `value` is representable in `bits`-bit two's complement.
+#[inline]
+pub fn fits(value: i64, bits: u32) -> bool {
+    let (lo, hi) = signed_range(bits);
+    value >= lo && value <= hi
+}
+
+/// Encode a signed value into its `bits` low-order bits
+/// (two's complement), as a little-endian bit vector (bit 0 = LSB).
+pub fn to_bits_le(value: i64, bits: u32) -> Vec<bool> {
+    debug_assert!(fits(value, bits), "{value} does not fit in {bits} bits");
+    let u = (value as u64) & ((1u64 << bits) - 1);
+    (0..bits).map(|i| (u >> i) & 1 == 1).collect()
+}
+
+/// Decode a little-endian bit vector as a signed two's-complement value.
+pub fn from_bits_le(bits: &[bool]) -> i64 {
+    debug_assert!(!bits.is_empty() && bits.len() <= 63);
+    let mut u: u64 = 0;
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            u |= 1 << i;
+        }
+    }
+    let n = bits.len() as u32;
+    wrap(u as i64, n)
+}
+
+/// Sign-extend a `from`-bit signed value to `to` bits (identity on the
+/// numeric value; asserts it fits).
+#[inline]
+pub fn sext(value: i64, from: u32, to: u32) -> i64 {
+    debug_assert!(fits(value, from));
+    debug_assert!(to >= from);
+    value
+}
+
+/// Saturate (clamp) a value into a `bits`-bit signed range. The silicon
+/// wraps rather than saturates; this exists for the quantizer paths that
+/// deliberately clamp (weight quantization), never for V_MEM updates.
+#[inline]
+pub fn saturate(value: i64, bits: u32) -> i64 {
+    let (lo, hi) = signed_range(bits);
+    value.clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrap_identity_in_range() {
+        for v in -1024..=1023 {
+            assert_eq!(wrap11(v), v);
+        }
+        for v in -32..=31 {
+            assert_eq!(wrap6(v), v);
+        }
+    }
+
+    #[test]
+    fn wrap_overflow_wraps_around() {
+        assert_eq!(wrap11(1024), -1024);
+        assert_eq!(wrap11(-1025), 1023);
+        assert_eq!(wrap11(2048), 0);
+        assert_eq!(wrap11(2047), -1);
+        assert_eq!(wrap6(32), -32);
+        assert_eq!(wrap6(-33), 31);
+    }
+
+    #[test]
+    fn wrap_matches_adder_semantics() {
+        // wrap(a + b) must equal the n-bit ripple add with dropped carry.
+        for a in [-1024i64, -512, -1, 0, 1, 511, 1023] {
+            for b in [-1024i64, -33, -1, 0, 1, 32, 1023] {
+                let m = 1u64 << V_BITS;
+                let ua = (a as u64) & (m - 1);
+                let ub = (b as u64) & (m - 1);
+                let us = (ua + ub) & (m - 1); // drop carry
+                let expect = from_bits_le(
+                    &(0..V_BITS).map(|i| (us >> i) & 1 == 1).collect::<Vec<_>>(),
+                );
+                assert_eq!(wrap11(a + b), expect, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn bits_roundtrip() {
+        for v in -1024..=1023 {
+            assert_eq!(from_bits_le(&to_bits_le(v, V_BITS)), v);
+        }
+        for v in -32..=31 {
+            assert_eq!(from_bits_le(&to_bits_le(v, W_BITS)), v);
+        }
+    }
+
+    #[test]
+    fn signed_range_bounds() {
+        assert_eq!(signed_range(6), (-32, 31));
+        assert_eq!(signed_range(11), (-1024, 1023));
+        assert!(fits(31, 6));
+        assert!(!fits(32, 6));
+        assert!(fits(-1024, 11));
+        assert!(!fits(-1025, 11));
+    }
+
+    #[test]
+    fn saturate_clamps() {
+        assert_eq!(saturate(100, 6), 31);
+        assert_eq!(saturate(-100, 6), -32);
+        assert_eq!(saturate(5, 6), 5);
+    }
+}

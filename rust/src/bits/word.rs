@@ -1,0 +1,133 @@
+//! A self-describing fixed-width signed word.
+
+use super::{fits, signed_range, wrap};
+use std::fmt;
+
+/// A signed two's-complement value carrying its bit width.
+///
+/// Used at module boundaries (mapper → macro, artifact loaders) where
+/// mixing 6-bit weights and 11-bit potentials silently would be a bug.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SignedWord {
+    value: i64,
+    bits: u32,
+}
+
+impl SignedWord {
+    /// Construct, asserting the value fits the width.
+    pub fn new(value: i64, bits: u32) -> Self {
+        assert!(
+            fits(value, bits),
+            "value {value} does not fit in {bits}-bit signed word"
+        );
+        Self { value, bits }
+    }
+
+    /// Construct by wrapping the value into the width.
+    pub fn wrapped(value: i64, bits: u32) -> Self {
+        Self {
+            value: wrap(value, bits),
+            bits,
+        }
+    }
+
+    /// A 6-bit weight word.
+    pub fn weight(value: i64) -> Self {
+        Self::new(value, super::W_BITS)
+    }
+
+    /// An 11-bit membrane-potential word.
+    pub fn vmem(value: i64) -> Self {
+        Self::new(value, super::V_BITS)
+    }
+
+    /// The numeric value.
+    #[inline]
+    pub fn value(&self) -> i64 {
+        self.value
+    }
+
+    /// The bit width.
+    #[inline]
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Wrapping addition at this word's width. Panics if widths differ.
+    pub fn wrapping_add(&self, other: &SignedWord) -> SignedWord {
+        assert_eq!(self.bits, other.bits, "width mismatch in wrapping_add");
+        SignedWord::wrapped(self.value + other.value, self.bits)
+    }
+
+    /// Wrapping addition of a plain integer at this word's width.
+    pub fn wrapping_add_i64(&self, rhs: i64) -> SignedWord {
+        SignedWord::wrapped(self.value + rhs, self.bits)
+    }
+
+    /// The word's range `(min, max)`.
+    pub fn range(&self) -> (i64, i64) {
+        signed_range(self.bits)
+    }
+
+    /// Little-endian bits of the word.
+    pub fn bits_le(&self) -> Vec<bool> {
+        super::to_bits_le(self.value, self.bits)
+    }
+}
+
+impl fmt::Debug for SignedWord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}i{}", self.value, self.bits)
+    }
+}
+
+impl fmt::Display for SignedWord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_read() {
+        let w = SignedWord::weight(-17);
+        assert_eq!(w.value(), -17);
+        assert_eq!(w.bits(), 6);
+        let v = SignedWord::vmem(1000);
+        assert_eq!(v.value(), 1000);
+        assert_eq!(v.bits(), 11);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_panics() {
+        SignedWord::weight(40);
+    }
+
+    #[test]
+    fn wrapping_add_wraps() {
+        let a = SignedWord::vmem(1000);
+        let b = SignedWord::vmem(100);
+        assert_eq!(a.wrapping_add(&b).value(), crate::bits::wrap11(1100));
+        assert_eq!(a.wrapping_add_i64(23).value(), 1023);
+        assert_eq!(a.wrapping_add_i64(24).value(), -1024);
+    }
+
+    #[test]
+    fn bits_le_roundtrip() {
+        for v in [-1024i64, -3, 0, 7, 1023] {
+            let w = SignedWord::vmem(v);
+            assert_eq!(crate::bits::from_bits_le(&w.bits_le()), v);
+        }
+    }
+
+    #[test]
+    fn display_and_debug() {
+        let w = SignedWord::weight(-5);
+        assert_eq!(format!("{w}"), "-5");
+        assert_eq!(format!("{w:?}"), "-5i6");
+    }
+}

@@ -1,0 +1,107 @@
+//! `impulse eval` — evaluate the sentiment test set on the macro pool
+//! (parallel via the coordinator's inference server), with optional
+//! XLA cross-check.
+
+use super::Flags;
+use impulse::coordinator::{InferenceServer, Request};
+use impulse::data::{artifacts_dir, Manifest, SentimentArtifacts};
+use impulse::energy::EnergyModel;
+use impulse::metrics::eng;
+use impulse::runtime::SentimentStepRuntime;
+use impulse::snn::SentimentNetwork;
+use impulse::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args);
+    let cfg = super::run_config(&flags)?;
+    let dir = artifacts_dir();
+    let a = Arc::new(SentimentArtifacts::load(&dir)?);
+    let man = Manifest::read(dir.join("manifest.txt"))?;
+
+    let n = if cfg.max_samples > 0 {
+        cfg.max_samples.min(a.test_seqs.len())
+    } else {
+        a.test_seqs.len()
+    };
+    println!(
+        "evaluating {n} reviews on {} workers (engine {:?})…",
+        cfg.workers, cfg.engine
+    );
+
+    let mac = cfg.macro_config();
+    let a2 = Arc::clone(&a);
+    let server = InferenceServer::start(cfg.workers, move || {
+        SentimentNetwork::from_artifacts(&a2, mac)
+    })?;
+    let t0 = Instant::now();
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            word_ids: a.test_seqs[i].clone(),
+        })
+        .collect();
+    let (responses, stats) = server.run_batch(reqs)?;
+    let wall = t0.elapsed();
+    server.shutdown();
+
+    let correct = responses
+        .iter()
+        .filter(|r| r.pred == a.test_labels[r.id as usize])
+        .count();
+    let acc = correct as f64 / n as f64;
+    println!("\naccuracy        : {acc:.4} ({correct}/{n})");
+    if let Some(m) = man.get_f64("snn_sentiment_quant_acc") {
+        println!("python reference: {m:.4}");
+    }
+    if let Some(l) = man.get_f64("lstm_acc") {
+        println!(
+            "LSTM baseline   : {l:.4} ({} params vs {} → {:.1}×)",
+            man.get("lstm_params").unwrap_or("?"),
+            man.get("snn_sentiment_params").unwrap_or("?"),
+            man.get_f64("lstm_params").unwrap_or(0.0)
+                / man.get_f64("snn_sentiment_params").unwrap_or(1.0)
+        );
+    }
+    println!("wall time       : {wall:?} ({:.1} reviews/s)", n as f64 / wall.as_secs_f64());
+    println!("{}", stats.latency.report("latency"));
+
+    let e = EnergyModel::calibrated();
+    let per_review = stats.total_cycles as f64 / n as f64;
+    println!(
+        "macro cycles    : {} total, {per_review:.0}/review → {} @ {:.0} MHz",
+        stats.total_cycles,
+        eng(per_review / cfg.freq_hz, "s"),
+        cfg.freq_hz / 1e6
+    );
+    // Energy: cycles are overwhelmingly AccW2V + the update sequences;
+    // use the per-kind histogram from a single fresh network for shape.
+    let mut net = SentimentNetwork::from_artifacts(&a, cfg.macro_config())?;
+    net.run_review(&a.test_seqs[0])?;
+    let hist = net.stats().histogram;
+    let e_one = e.program_energy_j(&hist, cfg.vdd);
+    println!(
+        "energy/review   : ≈{} at {:.2} V (first-review histogram)",
+        eng(e_one, "J"),
+        cfg.vdd
+    );
+
+    if flags.has("xla-check") {
+        let k = 8.min(n);
+        println!("\nXLA cross-check on {k} reviews…");
+        let rt = SentimentStepRuntime::load(&dir, a.w1.len(), a.w1[0].len(), a.w2[0].len())?;
+        let mut net = SentimentNetwork::from_artifacts(&a, cfg.macro_config())?;
+        for i in 0..k {
+            let (pred_xla, trace) = rt.run_review(&a.emb_q, &a.test_seqs[i], 10)?;
+            let r = net.run_review(&a.test_seqs[i])?;
+            let t64: Vec<i64> = trace.iter().map(|&v| v as i64).collect();
+            anyhow::ensure!(
+                r.vout_trace == t64 && r.pred == pred_xla,
+                "review {i}: macro-sim and XLA disagree"
+            );
+        }
+        println!("XLA cross-check : OK (bit-exact)");
+    }
+    Ok(())
+}

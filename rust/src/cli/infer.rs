@@ -1,0 +1,77 @@
+//! `impulse infer` — classify one review through the macro pool.
+
+use super::Flags;
+use impulse::data::{artifacts_dir, SentimentArtifacts};
+use impulse::energy::EnergyModel;
+use impulse::metrics::eng;
+use impulse::snn::SentimentNetwork;
+use impulse::Result;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args);
+    let cfg = super::run_config(&flags)?;
+    let a = SentimentArtifacts::load(artifacts_dir())?;
+    let mut net = SentimentNetwork::from_artifacts(&a, cfg.macro_config())?;
+
+    let word_ids: Vec<i64> = if let Some(words) = flags.get("words") {
+        words
+            .split_whitespace()
+            .map(|w| w.parse::<i64>().map_err(|e| anyhow::anyhow!("bad id '{w}': {e}")))
+            .collect::<Result<_>>()?
+    } else {
+        let n = flags.get_usize("sample").unwrap_or(0);
+        anyhow::ensure!(n < a.test_seqs.len(), "sample {n} out of range");
+        a.test_seqs[n].clone()
+    };
+
+    let r = net.run_review(&word_ids)?;
+    println!("prediction : {}", if r.pred == 1 { "POSITIVE" } else { "NEGATIVE" });
+    println!("V_out      : {}", r.v_out);
+    println!("trace      : {:?}", r.vout_trace);
+    println!("CIM cycles : {}", r.cycles);
+    let e = EnergyModel::calibrated();
+    let energy = e.program_energy_j(&net.stats().histogram, cfg.vdd);
+    println!(
+        "energy     : {} at {:.2} V (delay {} at {:.0} MHz)",
+        eng(energy, "J"),
+        cfg.vdd,
+        eng(e.delay_s(r.cycles, cfg.freq_hz), "s"),
+        cfg.freq_hz / 1e6
+    );
+    if let Some(n) = flags.get_usize("sample") {
+        println!("label      : {}", a.test_labels[n]);
+    }
+    Ok(())
+}
+
+/// `impulse trace-vmem` — Fig 10: the output neuron's membrane
+/// potential after each word, rendered as an ASCII trajectory.
+pub fn trace_vmem(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args);
+    let cfg = super::run_config(&flags)?;
+    let a = SentimentArtifacts::load(artifacts_dir())?;
+    let mut net = SentimentNetwork::from_artifacts(&a, cfg.macro_config())?;
+    let n = flags.get_usize("sample").unwrap_or(0);
+    anyhow::ensure!(n < a.test_seqs.len(), "sample {n} out of range");
+    let r = net.run_review(&a.test_seqs[n])?;
+    println!(
+        "review #{n} (label {}): V_out per word → {}",
+        a.test_labels[n],
+        if r.pred == 1 { "POSITIVE" } else { "NEGATIVE" }
+    );
+    let max = r.vout_trace.iter().map(|v| v.abs()).max().unwrap_or(1).max(1);
+    for (w, &v) in r.vout_trace.iter().enumerate() {
+        let width = ((v.abs() as f64 / max as f64) * 28.0) as usize;
+        if v >= 0 {
+            println!("word {w:>2} {v:>6} {:>28}|{}", "", "#".repeat(width));
+        } else {
+            println!(
+                "word {w:>2} {v:>6} {:>pad$}{}|",
+                "",
+                "#".repeat(width),
+                pad = 28 - width
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! `impulse info` — artifact bundle + model summary.
+
+use impulse::data::{artifacts_available, artifacts_dir, Manifest, SentimentArtifacts};
+use impulse::energy::AreaModel;
+use impulse::macro_sim::MacroConfig;
+use impulse::snn::SentimentNetwork;
+use impulse::Result;
+
+pub fn run() -> Result<()> {
+    println!("IMPULSE reproduction — artifact & model summary\n");
+    let dir = artifacts_dir();
+    println!("artifacts dir : {}", dir.display());
+    if !artifacts_available() {
+        println!("artifacts     : NOT BUILT (run `make artifacts`)");
+        return Ok(());
+    }
+    let man = Manifest::read(dir.join("manifest.txt"))?;
+    for key in [
+        "snn_sentiment_params",
+        "snn_sentiment_float_acc",
+        "snn_sentiment_quant_acc",
+        "lstm_params",
+        "lstm_acc",
+        "snn_digits_quant_acc",
+        "build_seconds",
+        "source_digest",
+    ] {
+        if let Some(v) = man.get(key) {
+            println!("{key:<26}: {v}");
+        }
+    }
+    let a = SentimentArtifacts::load(&dir)?;
+    let net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast())?;
+    println!("\nsentiment network:");
+    println!("  mapped params   : {}", net.num_params());
+    println!("  macros (tiles)  : {}", net.num_macros());
+    println!(
+        "  thresholds      : enc={} θ1={} θ2={}",
+        a.thr_enc, a.thr1, a.thr2
+    );
+    let area = AreaModel::calibrated();
+    println!(
+        "  silicon budget  : {:.3} mm² per macro → {:.3} mm² pool",
+        area.breakdown().total_mm2(),
+        area.breakdown().total_mm2() * net.num_macros() as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! CLI subcommand implementations.
+
+pub mod eval;
+pub mod infer;
+pub mod info;
+pub mod report;
+pub mod serve;
+
+use impulse::config::RunConfig;
+use impulse::Result;
+
+/// Tiny flag parser: `--key value` pairs and bare flags.
+pub struct Flags {
+    pairs: Vec<(String, Option<String>)>,
+}
+
+impl Flags {
+    pub fn parse(args: &[String]) -> Flags {
+        let mut pairs = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = args.get(i + 1).filter(|v| !v.starts_with("--")).cloned();
+                if val.is_some() {
+                    i += 1;
+                }
+                pairs.push((key.to_string(), val));
+            }
+            i += 1;
+        }
+        Flags { pairs }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.pairs.iter().any(|(k, _)| k == key)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key)?.parse().ok()
+    }
+
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get(key)?.parse().ok()
+    }
+}
+
+/// Build the run config from `--config` plus flag overrides.
+pub fn run_config(flags: &Flags) -> Result<RunConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(v) = flags.get_f64("vdd") {
+        cfg.vdd = v;
+    }
+    if let Some(f) = flags.get_f64("freq-mhz") {
+        cfg.freq_hz = f * 1e6;
+    }
+    if let Some(w) = flags.get_usize("workers") {
+        cfg.workers = w.max(1);
+    }
+    if let Some(n) = flags.get_usize("max") {
+        cfg.max_samples = n;
+    }
+    Ok(cfg)
+}

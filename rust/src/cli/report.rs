@@ -1,0 +1,198 @@
+//! `impulse report` — regenerate the paper's figures and table.
+
+use super::Flags;
+use impulse::baselines::{table1_rows, VanillaAccelModel};
+use impulse::bench_harness::Table;
+use impulse::energy::{
+    AreaModel, EnergyModel, ShmooModel, SparsitySweep, OPERATING_POINTS,
+};
+use impulse::isa::{InstructionKind, NeuronType};
+use impulse::metrics::eng;
+use impulse::{Result, NOMINAL_FREQ_HZ, NOMINAL_VDD};
+
+pub fn run(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args);
+    if let Some(fig) = flags.get("fig") {
+        match fig {
+            "2" => fig2(),
+            "6" => fig6(),
+            "7" => fig7(),
+            "8" => shmoo()?,
+            "9a" => fig9a(),
+            "11b" => sweep(args)?,
+            other => anyhow::bail!("no figure '{other}' (have 2, 6, 7, 8, 9a, 11b; 9b/10/11a are e2e examples)"),
+        }
+        return Ok(());
+    }
+    if flags.get("table") == Some("1") {
+        table1();
+        return Ok(());
+    }
+    anyhow::bail!("usage: impulse report --fig {{2|6|7|8|9a|11b}} | --table 1")
+}
+
+/// Fig 2: the motivation numbers — fused CIM vs separate-SRAM strawman.
+fn fig2() {
+    let e = EnergyModel::calibrated();
+    let v = VanillaAccelModel::new(&e);
+    println!("Fig 2 — fused W/V CIM vs separate-SRAM accelerator (energy ratio)\n");
+    let mut t = Table::new(&["sparsity", "separate-SRAM (pJ)", "IMPULSE (pJ)", "ratio"]);
+    for s in [0.0, 0.5, 0.85, 0.95] {
+        let van = v.timestep_energy_j(s, NeuronType::RMP, NOMINAL_VDD) * 1e12;
+        let imp = v.impulse_timestep_energy_j(s, NeuronType::RMP, NOMINAL_VDD) * 1e12;
+        t.row(&[
+            format!("{s:.2}"),
+            format!("{van:.2}"),
+            format!("{imp:.2}"),
+            format!("{:.2}×", van / imp),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+/// Fig 6: neuron types, sequences, energy per update.
+fn fig6() {
+    let e = EnergyModel::calibrated();
+    let tbl = e.instr_table(NOMINAL_VDD);
+    println!("Fig 6 — neuron functionality via in-memory instruction sequences");
+    println!("(measured at 200 MHz @ 0.85 V; paper: IF 1.81, LIF 2.67, RMP 1.68 pJ)\n");
+    let mut t = Table::new(&["neuron", "instruction sequence", "energy/update (pJ)"]);
+    t.row(&[
+        "IF".into(),
+        "SpikeCheck; ResetV".into(),
+        format!("{:.2}", tbl.spike_check_pj + tbl.reset_v_pj),
+    ]);
+    t.row(&[
+        "LIF".into(),
+        "AccV2V(-leak); SpikeCheck; ResetV".into(),
+        format!("{:.2}", tbl.acc_v2v_pj + tbl.spike_check_pj + tbl.reset_v_pj),
+    ]);
+    t.row(&[
+        "RMP".into(),
+        "SpikeCheck; AccV2V(-θ, spiked)".into(),
+        format!("{:.2}", tbl.spike_check_pj + tbl.acc_v2v_pj),
+    ]);
+    println!("{}", t.render());
+}
+
+/// Fig 7: area breakdown.
+fn fig7() {
+    let b = AreaModel::calibrated().breakdown();
+    println!("Fig 7 — die area breakdown (65 nm; paper: 0.089 mm², 54.2% memory)\n");
+    let mut t = Table::new(&["component", "area (mm²)", "share"]);
+    let total = b.total_mm2();
+    for (name, a) in [
+        ("10T bitcell arrays (W_MEM+V_MEM)", b.bitcells_mm2),
+        ("reconfigurable column peripherals", b.column_periph_mm2),
+        ("triple-row decoders", b.decoders_mm2),
+        ("control + spike buffers + timing", b.control_mm2),
+    ] {
+        t.row(&[
+            name.into(),
+            format!("{a:.4}"),
+            format!("{:.1}%", 100.0 * a / total),
+        ]);
+    }
+    t.row(&["TOTAL".into(), format!("{total:.3}"), "100%".into()]);
+    println!("{}", t.render());
+    println!("memory area efficiency: {:.1}%", 100.0 * b.memory_efficiency());
+}
+
+/// Fig 8: the Shmoo plot.
+pub fn shmoo() -> Result<()> {
+    let m = ShmooModel::calibrated();
+    println!("Fig 8 — Shmoo ( # = CIM+R/W pass, R = only read/write pass, . = fail )\n");
+    print!("{}", m.standard_grid().render());
+    println!("             VDD 0.6 → 1.2 V (x), frequency ↑ (y)");
+    println!("\nCIM boundary points (published): 0.70V/66.67MHz, 0.85V/200MHz, 1.20V/500MHz");
+    Ok(())
+}
+
+/// Fig 9a: power + efficiency at operating points A–G.
+fn fig9a() {
+    let e = EnergyModel::calibrated();
+    println!("Fig 9a — AccW2V power & energy-efficiency at Shmoo points A–G\n");
+    let mut t = Table::new(&["point", "VDD (V)", "f (MHz)", "power", "TOPS/W", "measured (paper)"]);
+    for p in OPERATING_POINTS {
+        let pw = e.avg_power_w(p.vdd, p.freq_hz);
+        let eff = e.tops_per_w(InstructionKind::AccW2V, p.vdd, p.freq_hz);
+        t.row(&[
+            p.label.into(),
+            format!("{:.2}", p.vdd),
+            format!("{:.2}", p.freq_hz / 1e6),
+            eng(pw, "W"),
+            format!("{eff:.3}"),
+            p.measured_power_w
+                .map(|w| eng(w, "W"))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("per-instruction TOPS/W at point D (paper: 0.99 / 1.18 / 1.02 / 1.22):");
+    for k in InstructionKind::CIM {
+        println!(
+            "  {:<11} {:.3}",
+            k.name(),
+            e.tops_per_w(k, NOMINAL_VDD, NOMINAL_FREQ_HZ)
+        );
+    }
+}
+
+/// Fig 11b: EDP vs sparsity.
+pub fn sweep(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args);
+    let neuron = flags
+        .get("neuron")
+        .map(|s| NeuronType::parse(s).ok_or_else(|| anyhow::anyhow!("bad neuron '{s}'")))
+        .transpose()?
+        .unwrap_or(NeuronType::RMP);
+    let e = EnergyModel::calibrated();
+    let sweep = SparsitySweep::run(&e, neuron, 20);
+    println!("Fig 11b — EDP per neuron per timestep vs input sparsity ({neuron:?})\n");
+    let mut t = Table::new(&["sparsity", "energy (pJ)", "delay (ns)", "EDP (aJ·s ×1e-?)", "vs s=0"]);
+    let base = sweep.points[0].edp;
+    for p in &sweep.points {
+        t.row(&[
+            format!("{:.2}", p.sparsity),
+            format!("{:.3}", p.energy_j * 1e12),
+            format!("{:.3}", p.delay_s * 1e9),
+            format!("{:.4e}", p.edp),
+            format!("-{:.1}%", 100.0 * (1.0 - p.edp / base)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "EDP reduction at 85% sparsity: {:.1}%  (paper: 97.4%)",
+        100.0 * sweep.reduction_at(0.85)
+    );
+    Ok(())
+}
+
+/// Table I.
+fn table1() {
+    let rows = table1_rows(&EnergyModel::calibrated(), &AreaModel::calibrated());
+    println!("Table I — comparison with other SNN and CIM macros\n");
+    let mut t = Table::new(&[
+        "macro", "tech", "app", "type", "precision", "cell", "flex-neuron",
+        "sparsity", "area mm²", "V", "MHz", "mW", "GOPS/mm²", "TOPS/W",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.name.into(),
+            format!("{}nm", r.technology_nm),
+            r.application.into(),
+            r.macro_type.into(),
+            r.precision.into(),
+            r.bitcell.into(),
+            if r.flexible_neuron { "Yes" } else { "No" }.into(),
+            if r.sparsity_support { "Yes" } else { "No" }.into(),
+            r.area_mm2.map(|a| format!("{a:.4}")).unwrap_or("-".into()),
+            format!("{:.2}", r.supply_v),
+            format!("{:.2}", r.freq_mhz),
+            r.power_mw.map(|p| format!("{p:.3}")).unwrap_or("-".into()),
+            r.gops_per_mm2.map(|g| format!("{g:.2}")).unwrap_or("-".into()),
+            r.tops_per_w.map(|t| format!("{t:.3}")).unwrap_or("-".into()),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,96 @@
+//! `impulse serve` — line-oriented inference server.
+//!
+//! Reads one request per line on stdin:
+//!     <id> <word_id> <word_id> …
+//! and writes one response per line on stdout:
+//!     <id> <POSITIVE|NEGATIVE> v_out=<v> cycles=<c> us=<latency>
+//!
+//! Batched through the coordinator's worker pool; `quit` stops.
+
+use super::Flags;
+use impulse::coordinator::{InferenceServer, Request};
+use impulse::data::{artifacts_dir, SentimentArtifacts};
+use impulse::snn::SentimentNetwork;
+use impulse::Result;
+use std::io::{BufRead, Write};
+use std::sync::Arc;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args);
+    let cfg = super::run_config(&flags)?;
+    let a = Arc::new(SentimentArtifacts::load(artifacts_dir())?);
+    let vocab = a.emb_q.len() as i64;
+    let mac = cfg.macro_config();
+    let a2 = Arc::clone(&a);
+    let server = InferenceServer::start(cfg.workers, move || {
+        SentimentNetwork::from_artifacts(&a2, mac)
+    })?;
+    eprintln!(
+        "impulse serve: {} workers ready; send `<id> <word_id>…` lines, `quit` to stop",
+        cfg.workers
+    );
+
+    let stdin = std::io::stdin();
+    let mut stdout = std::io::stdout();
+    let mut pending = 0u64;
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "quit" {
+            break;
+        }
+        let mut it = line.split_whitespace();
+        let id: u64 = match it.next().unwrap().parse() {
+            Ok(v) => v,
+            Err(_) => {
+                eprintln!("bad id in: {line}");
+                continue;
+            }
+        };
+        let word_ids: Vec<i64> = it
+            .filter_map(|w| w.parse::<i64>().ok())
+            .map(|w| w.clamp(0, vocab - 1))
+            .collect();
+        if word_ids.is_empty() {
+            eprintln!("request {id}: no word ids");
+            continue;
+        }
+        server.submit(Request { id, word_ids })?;
+        pending += 1;
+        // drain ready responses opportunistically
+        while server.inflight() < pending {
+            let r = server.recv()?;
+            pending -= 1;
+            writeln!(
+                stdout,
+                "{} {} v_out={} cycles={} us={}",
+                r.id,
+                if r.pred == 1 { "POSITIVE" } else { "NEGATIVE" },
+                r.v_out,
+                r.cycles,
+                r.latency.as_micros()
+            )?;
+        }
+        stdout.flush()?;
+    }
+    // drain the rest
+    while pending > 0 {
+        let r = server.recv()?;
+        pending -= 1;
+        writeln!(
+            stdout,
+            "{} {} v_out={} cycles={} us={}",
+            r.id,
+            if r.pred == 1 { "POSITIVE" } else { "NEGATIVE" },
+            r.v_out,
+            r.cycles,
+            r.latency.as_micros()
+        )?;
+    }
+    stdout.flush()?;
+    server.shutdown();
+    Ok(())
+}

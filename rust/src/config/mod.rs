@@ -1,0 +1,152 @@
+//! Run configuration: a minimal TOML-subset parser (offline — no serde)
+//! plus the typed `RunConfig` used by the CLI and examples.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with
+//! string ("…"), integer, float, and boolean values, and `#` comments.
+
+mod toml_lite;
+
+pub use toml_lite::{TomlDoc, TomlValue};
+
+use crate::macro_sim::{ComparatorMode, Engine, MacroConfig};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Typed run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Supply voltage for energy reporting.
+    pub vdd: f64,
+    /// Clock frequency (Hz).
+    pub freq_hz: f64,
+    /// Execution engine.
+    pub engine: Engine,
+    /// Comparator mode (modelling choice M3).
+    pub comparator: ComparatorMode,
+    /// Worker threads for the coordinator.
+    pub workers: usize,
+    /// Samples to evaluate in e2e runs (0 = all).
+    pub max_samples: usize,
+    /// Timesteps per word (sentiment) / per image (digits).
+    pub timesteps: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            vdd: crate::NOMINAL_VDD,
+            freq_hz: crate::NOMINAL_FREQ_HZ,
+            engine: Engine::Fast,
+            comparator: ComparatorMode::SignBit,
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(16),
+            max_samples: 0,
+            timesteps: 10,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML-subset file; missing keys keep defaults.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let doc = TomlDoc::parse(
+            &std::fs::read_to_string(path.as_ref())
+                .with_context(|| format!("read {}", path.as_ref().display()))?,
+        )?;
+        let mut cfg = Self::default();
+        cfg.apply(&doc)?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed document over the current values.
+    pub fn apply(&mut self, doc: &TomlDoc) -> Result<()> {
+        if let Some(v) = doc.get_f64("macro", "vdd") {
+            self.vdd = v;
+        }
+        if let Some(v) = doc.get_f64("macro", "freq_mhz") {
+            self.freq_hz = v * 1e6;
+        }
+        if let Some(v) = doc.get_str("macro", "engine") {
+            self.engine = match v {
+                "bit" | "bit_level" => Engine::BitLevel,
+                "fast" => Engine::Fast,
+                "lockstep" => Engine::Lockstep,
+                other => anyhow::bail!("unknown engine '{other}'"),
+            };
+        }
+        if let Some(v) = doc.get_str("macro", "comparator") {
+            self.comparator = match v {
+                "sign" | "sign_bit" => ComparatorMode::SignBit,
+                "cout" | "msb_cout" => ComparatorMode::MsbCout,
+                other => anyhow::bail!("unknown comparator '{other}'"),
+            };
+        }
+        if let Some(v) = doc.get_i64("run", "workers") {
+            self.workers = (v.max(1)) as usize;
+        }
+        if let Some(v) = doc.get_i64("run", "max_samples") {
+            self.max_samples = v.max(0) as usize;
+        }
+        if let Some(v) = doc.get_i64("run", "timesteps") {
+            self.timesteps = v.clamp(1, 1000) as usize;
+        }
+        Ok(())
+    }
+
+    /// The macro configuration implied by this run config.
+    pub fn macro_config(&self) -> MacroConfig {
+        MacroConfig {
+            engine: self.engine,
+            comparator: self.comparator,
+            trace: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_nominal_point_d() {
+        let c = RunConfig::default();
+        assert_eq!(c.vdd, 0.85);
+        assert_eq!(c.freq_hz, 200e6);
+        assert!(c.workers >= 1);
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let doc = TomlDoc::parse(
+            r#"
+            [macro]
+            vdd = 1.2
+            freq_mhz = 500.0
+            engine = "lockstep"
+            comparator = "cout"
+            [run]
+            workers = 3
+            max_samples = 100
+            timesteps = 5
+            "#,
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.vdd, 1.2);
+        assert_eq!(c.freq_hz, 500e6);
+        assert_eq!(c.engine, Engine::Lockstep);
+        assert_eq!(c.comparator, ComparatorMode::MsbCout);
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.max_samples, 100);
+        assert_eq!(c.timesteps, 5);
+    }
+
+    #[test]
+    fn bad_enum_value_errors() {
+        let doc = TomlDoc::parse("[macro]\nengine = \"warp\"\n").unwrap();
+        assert!(RunConfig::default().apply(&doc).is_err());
+    }
+}

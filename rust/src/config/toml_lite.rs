@@ -1,0 +1,179 @@
+//! A deliberately small TOML-subset parser: sections, scalar
+//! key-values, comments. Enough for run configs without external deps.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// A parsed document: `section → key → value`. Keys before any section
+/// header land in the "" section.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value", lineno + 1);
+            };
+            let key = k.trim().to_string();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(v.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key)? {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_i64(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key)? {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            bail!("unterminated string");
+        }
+        return Ok(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = TomlDoc::parse(
+            r#"
+            top = 1
+            [a]
+            s = "hello # not a comment"
+            i = -42       # trailing comment
+            f = 2.5
+            b = true
+            [b]
+            x = 0.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_i64("", "top"), Some(1));
+        assert_eq!(doc.get_str("a", "s"), Some("hello # not a comment"));
+        assert_eq!(doc.get_i64("a", "i"), Some(-42));
+        assert_eq!(doc.get_f64("a", "f"), Some(2.5));
+        assert_eq!(doc.get_bool("a", "b"), Some(true));
+        assert_eq!(doc.get_f64("a", "i"), Some(-42.0)); // int→float widening
+        assert_eq!(doc.get("missing", "x"), None);
+        assert_eq!(doc.sections().count(), 3);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("keyonly").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+        assert!(TomlDoc::parse("[]").is_err());
+        assert!(TomlDoc::parse("k = what").is_err());
+    }
+
+    #[test]
+    fn later_keys_override() {
+        let doc = TomlDoc::parse("[a]\nx = 1\nx = 2\n").unwrap();
+        assert_eq!(doc.get_i64("a", "x"), Some(2));
+    }
+}

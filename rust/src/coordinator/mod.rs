@@ -1,0 +1,24 @@
+//! The multi-macro coordinator (Layer 3).
+//!
+//! The paper's contribution is the macro; the coordinator is the
+//! runtime a deployment wraps around a *pool* of such macros
+//! ("scalable to larger networks by employing a distributed
+//! multi-macro architecture"):
+//!
+//! - [`scheduler`] — turns spike activity into per-macro instruction
+//!   streams, exploiting input sparsity (spikes → instructions is the
+//!   macro's energy-proportionality mechanism).
+//! - [`router`] — a request router + worker pool running replicated
+//!   model instances: batched inference with latency accounting (the
+//!   serving-system shape of L3).
+//! - [`pipeline`] — layer-pipelined execution across threads: layer *l*
+//!   processes timestep *t* while layer *l+1* processes *t−1*, matching
+//!   the paper's "mapped successively on IMPULSE" dataflow.
+
+pub mod pipeline;
+pub mod router;
+pub mod scheduler;
+
+pub use pipeline::LayerPipeline;
+pub use router::{InferenceServer, Request, Response, ServerStats};
+pub use scheduler::{SpikeScheduler, TimestepPlan};

@@ -1,0 +1,201 @@
+//! Layer-pipelined execution.
+//!
+//! The paper maps layers "successively on IMPULSE"; with one macro pool
+//! per layer, layer *l* can process timestep *t* while layer *l+1*
+//! processes *t−1* — wavefront pipelining over timesteps. The pipeline
+//! moves spike vectors across thread-backed stages via bounded
+//! channels (backpressure: a slow stage stalls its producer).
+//!
+//! Used by the throughput benches; differential-tested against the
+//! sequential execution order, which must produce identical spikes
+//! (the stages share no state).
+
+use crate::snn::{FcLayer, LayerStats};
+use crate::Result;
+use std::sync::mpsc;
+
+/// A chain of FC layers executed as a thread-per-stage pipeline.
+pub struct LayerPipeline {
+    layers: Vec<FcLayer>,
+}
+
+impl LayerPipeline {
+    pub fn new(layers: Vec<FcLayer>) -> Self {
+        assert!(!layers.is_empty());
+        for pair in layers.windows(2) {
+            assert_eq!(
+                pair[0].width(),
+                pair[1].fan_in(),
+                "layer widths must chain"
+            );
+        }
+        Self { layers }
+    }
+
+    /// Sequential reference execution: feed each timestep through all
+    /// layers in order. Returns the last layer's spike train.
+    pub fn run_sequential(&mut self, inputs: &[Vec<bool>]) -> Result<Vec<Vec<bool>>> {
+        let mut out = Vec::with_capacity(inputs.len());
+        for spikes in inputs {
+            let mut cur = spikes.clone();
+            for layer in self.layers.iter_mut() {
+                cur = layer.step(&cur)?.to_vec();
+            }
+            out.push(cur);
+        }
+        Ok(out)
+    }
+
+    /// Pipelined execution: one thread per layer, bounded channels in
+    /// between. Semantically identical to `run_sequential` (stages are
+    /// stateful but independent); wall-clock approaches
+    /// `max(stage time) · timesteps` instead of `sum(stage time) ·
+    /// timesteps`.
+    pub fn run_pipelined(
+        &mut self,
+        inputs: &[Vec<bool>],
+        channel_depth: usize,
+    ) -> Result<Vec<Vec<bool>>> {
+        let n_layers = self.layers.len();
+        let layers = std::mem::take(&mut self.layers);
+        let (results, layers_back) = std::thread::scope(
+            |scope| -> Result<(Vec<Vec<bool>>, Vec<FcLayer>)> {
+                // Stage channels: input → L0 → L1 → … → collector.
+                let mut senders = Vec::new();
+                let mut receivers = Vec::new();
+                for _ in 0..=n_layers {
+                    let (tx, rx) = mpsc::sync_channel::<Vec<bool>>(channel_depth.max(1));
+                    senders.push(tx);
+                    receivers.push(rx);
+                }
+                let mut handles = Vec::new();
+                let mut rx_iter = receivers.into_iter();
+                let first_rx = rx_iter.next().unwrap();
+                let mut prev_rx = first_rx;
+                // Keep senders[0] for the feeder; hand the rest to stages.
+                let mut tx_iter = senders.into_iter();
+                let feeder_tx = tx_iter.next().unwrap();
+                for mut layer in layers {
+                    let rx = prev_rx;
+                    let tx = tx_iter.next().unwrap();
+                    prev_rx = rx_iter.next().unwrap();
+                    handles.push(scope.spawn(move || -> Result<FcLayer> {
+                        while let Ok(spikes) = rx.recv() {
+                            let out = layer.step(&spikes)?.to_vec();
+                            if tx.send(out).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(layer)
+                    }));
+                }
+                let final_rx = prev_rx;
+                // Feed inputs (blocking on backpressure).
+                let feeder = scope.spawn(move || {
+                    for spikes in inputs {
+                        if feeder_tx.send(spikes.clone()).is_err() {
+                            break;
+                        }
+                    }
+                });
+                let mut results = Vec::with_capacity(inputs.len());
+                for _ in 0..inputs.len() {
+                    results.push(final_rx.recv().map_err(|_| {
+                        anyhow::anyhow!("pipeline stage died before finishing")
+                    })?);
+                }
+                feeder.join().expect("feeder panicked");
+                let mut layers_back = Vec::with_capacity(n_layers);
+                for h in handles {
+                    layers_back.push(h.join().expect("stage panicked")?);
+                }
+                Ok((results, layers_back))
+            },
+        )?;
+        self.layers = layers_back;
+        Ok(results)
+    }
+
+    /// Reset all layer states.
+    pub fn reset_state(&mut self) -> Result<()> {
+        for l in self.layers.iter_mut() {
+            l.reset_state()?;
+        }
+        Ok(())
+    }
+
+    /// Merged stats across stages.
+    pub fn stats(&self) -> LayerStats {
+        let mut s = LayerStats::default();
+        for l in &self.layers {
+            s.merge(&l.stats());
+        }
+        s
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::XorShiftRng;
+    use crate::macro_sim::MacroConfig;
+    use crate::snn::LayerParams;
+
+    fn rand_layers(rng: &mut XorShiftRng, dims: &[usize]) -> Vec<FcLayer> {
+        dims.windows(2)
+            .map(|d| {
+                let w: Vec<Vec<i64>> = (0..d[0])
+                    .map(|_| (0..d[1]).map(|_| rng.gen_i64(-8, 8)).collect())
+                    .collect();
+                FcLayer::new(&w, LayerParams::rmp(50), MacroConfig::fast()).unwrap()
+            })
+            .collect()
+    }
+
+    fn rand_inputs(rng: &mut XorShiftRng, t: usize, m: usize) -> Vec<Vec<bool>> {
+        (0..t)
+            .map(|_| (0..m).map(|_| rng.gen_bool(0.3)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn pipelined_equals_sequential() {
+        let mut rng = XorShiftRng::new(31);
+        let dims = [40, 32, 24, 16];
+        let inputs = rand_inputs(&mut rng, 20, dims[0]);
+
+        let mut seq = LayerPipeline::new(rand_layers(&mut XorShiftRng::new(500), &dims));
+        let want = seq.run_sequential(&inputs).unwrap();
+
+        let mut pipe = LayerPipeline::new(rand_layers(&mut XorShiftRng::new(500), &dims));
+        let got = pipe.run_pipelined(&inputs, 4).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pipeline_reusable_after_run() {
+        let mut rng = XorShiftRng::new(32);
+        let dims = [16, 8];
+        let mut pipe = LayerPipeline::new(rand_layers(&mut rng, &dims));
+        let inputs = rand_inputs(&mut rng, 5, 16);
+        let a = pipe.run_pipelined(&inputs, 2).unwrap();
+        pipe.reset_state().unwrap();
+        let b = pipe.run_pipelined(&inputs, 2).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(pipe.num_layers(), 1);
+        assert!(pipe.stats().cycles > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "chain")]
+    fn mismatched_dims_rejected() {
+        let mut rng = XorShiftRng::new(33);
+        let l1 = rand_layers(&mut rng, &[8, 4]).remove(0);
+        let l2 = rand_layers(&mut rng, &[5, 3]).remove(0);
+        LayerPipeline::new(vec![l1, l2]);
+    }
+}

@@ -1,0 +1,206 @@
+//! Request router + worker pool: batched inference over replicated
+//! model instances (each worker owns a full macro pool), with latency
+//! and energy accounting. This is the deployment shape of L3: the
+//! binary is self-contained, Python never runs on this path.
+
+use crate::metrics::LatencyStats;
+use crate::snn::SentimentNetwork;
+use crate::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// One classification request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub word_ids: Vec<i64>,
+}
+
+/// One classification response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub pred: u8,
+    pub v_out: i64,
+    pub cycles: u64,
+    pub latency: std::time::Duration,
+    pub worker: usize,
+}
+
+/// Aggregated server statistics.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub completed: u64,
+    pub total_cycles: u64,
+    pub latency: LatencyStats,
+}
+
+/// A fixed-pool inference server over replicated sentiment networks.
+pub struct InferenceServer {
+    tx: mpsc::Sender<Request>,
+    rx_out: mpsc::Receiver<Response>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    inflight: Arc<AtomicU64>,
+}
+
+impl InferenceServer {
+    /// Spawn `n_workers` workers, each building its own network replica
+    /// via `factory`.
+    pub fn start<F>(n_workers: usize, factory: F) -> Result<Self>
+    where
+        F: Fn() -> Result<SentimentNetwork> + Send + Sync + 'static,
+    {
+        assert!(n_workers >= 1);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx_out, rx_out) = mpsc::channel::<Response>();
+        let rx = Arc::new(Mutex::new(rx));
+        let factory = Arc::new(factory);
+        let inflight = Arc::new(AtomicU64::new(0));
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let rx = Arc::clone(&rx);
+            let tx_out = tx_out.clone();
+            let factory = Arc::clone(&factory);
+            let inflight = Arc::clone(&inflight);
+            workers.push(std::thread::spawn(move || {
+                let mut net = match factory() {
+                    Ok(n) => n,
+                    Err(e) => {
+                        eprintln!("worker {w}: failed to build network: {e}");
+                        return;
+                    }
+                };
+                loop {
+                    let req = {
+                        let guard = rx.lock().expect("poisoned request queue");
+                        guard.recv()
+                    };
+                    let Ok(req) = req else { break };
+                    let t0 = Instant::now();
+                    let outcome = net.run_review(&req.word_ids);
+                    // decrement before publishing so inflight() == 0 is
+                    // observable once every response has been received
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                    match outcome {
+                        Ok(r) => {
+                            let _ = tx_out.send(Response {
+                                id: req.id,
+                                pred: r.pred,
+                                v_out: r.v_out,
+                                cycles: r.cycles,
+                                latency: t0.elapsed(),
+                                worker: w,
+                            });
+                        }
+                        Err(e) => eprintln!("worker {w}: inference failed: {e}"),
+                    }
+                }
+            }));
+        }
+        Ok(Self {
+            tx,
+            rx_out,
+            workers,
+            inflight,
+        })
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("server shut down"))
+    }
+
+    /// Block for the next response.
+    pub fn recv(&self) -> Result<Response> {
+        Ok(self.rx_out.recv()?)
+    }
+
+    /// Requests submitted but not yet answered.
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Run a whole batch to completion, returning responses ordered by
+    /// request id, plus aggregate stats.
+    pub fn run_batch(&self, reqs: Vec<Request>) -> Result<(Vec<Response>, ServerStats)> {
+        let n = reqs.len();
+        for r in reqs {
+            self.submit(r)?;
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut stats = ServerStats::default();
+        for _ in 0..n {
+            let r = self.recv()?;
+            stats.completed += 1;
+            stats.total_cycles += r.cycles;
+            stats.latency.record(r.latency);
+            out.push(r);
+        }
+        out.sort_by_key(|r| r.id);
+        Ok((out, stats))
+    }
+
+    /// Shut down: drop the queue and join workers.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::macro_sim::MacroConfig;
+
+    fn mini_factory(
+        seed: u64,
+    ) -> impl Fn() -> Result<SentimentNetwork> + Send + Sync + 'static {
+        move || {
+            let a = crate::snn::network::tests::mini_artifacts(seed);
+            SentimentNetwork::from_artifacts(&a, MacroConfig::fast())
+        }
+    }
+
+    #[test]
+    fn batch_completes_with_consistent_results() {
+        let server = InferenceServer::start(3, mini_factory(7)).unwrap();
+        let reqs: Vec<Request> = (0..12)
+            .map(|i| Request {
+                id: i,
+                word_ids: vec![(i as i64) % 20, 3, 5],
+            })
+            .collect();
+        let (responses, stats) = server.run_batch(reqs.clone()).unwrap();
+        assert_eq!(responses.len(), 12);
+        assert_eq!(stats.completed, 12);
+        assert!(stats.total_cycles > 0);
+        assert_eq!(server.inflight(), 0);
+
+        // same request id → same prediction regardless of worker
+        let (responses2, _) = server.run_batch(reqs).unwrap();
+        for (a, b) in responses.iter().zip(&responses2) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.v_out, b.v_out, "req {}: worker replicas must agree", a.id);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn single_worker_serializes() {
+        let server = InferenceServer::start(1, mini_factory(9)).unwrap();
+        let (responses, _) = server
+            .run_batch(vec![
+                Request { id: 0, word_ids: vec![1] },
+                Request { id: 1, word_ids: vec![2] },
+            ])
+            .unwrap();
+        assert!(responses.iter().all(|r| r.worker == 0));
+        server.shutdown();
+    }
+}

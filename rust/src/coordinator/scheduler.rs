@@ -1,0 +1,194 @@
+//! Spike-driven instruction scheduling.
+//!
+//! The scheduler is where the paper's sparsity claim becomes mechanism:
+//! it receives the upstream spike vector and emits AccW2V instructions
+//! *only for spiking inputs*, followed by the neuron-update sequence.
+//! Instruction count — and therefore energy and delay — is proportional
+//! to `(1 − sparsity)`.
+
+use crate::bitcell::Parity;
+use crate::isa::{neuron_sequence, Instruction, NeuronConfigRows, NeuronType, Program};
+
+/// The plan for one timestep of one tile.
+#[derive(Clone, Debug)]
+pub struct TimestepPlan {
+    pub program: Program,
+    pub spikes_in: usize,
+    pub fan_in: usize,
+}
+
+impl TimestepPlan {
+    /// Input sparsity this plan was scheduled under.
+    pub fn sparsity(&self) -> f64 {
+        if self.fan_in == 0 {
+            return 1.0;
+        }
+        1.0 - self.spikes_in as f64 / self.fan_in as f64
+    }
+}
+
+/// Scheduler for one tile (one odd/even V-row pair).
+#[derive(Clone, Debug)]
+pub struct SpikeScheduler {
+    pub v_row_odd: usize,
+    pub v_row_even: usize,
+    pub neuron: NeuronType,
+    pub rows_odd: NeuronConfigRows,
+    pub rows_even: NeuronConfigRows,
+}
+
+impl SpikeScheduler {
+    pub fn for_tile(
+        v_row_odd: usize,
+        v_row_even: usize,
+        neuron: NeuronType,
+        const_rows: crate::mapper::ConstRows,
+    ) -> Self {
+        Self {
+            v_row_odd,
+            v_row_even,
+            neuron,
+            rows_odd: const_rows.for_parity(Parity::Odd),
+            rows_even: const_rows.for_parity(Parity::Even),
+        }
+    }
+
+    /// Schedule one timestep given the upstream spike vector.
+    pub fn schedule(&self, in_spikes: &[bool], with_update: bool) -> TimestepPlan {
+        let mut program = Program::new();
+        let mut spikes_in = 0;
+        for (i, &s) in in_spikes.iter().enumerate() {
+            if !s {
+                continue;
+            }
+            spikes_in += 1;
+            for (parity, v) in [(Parity::Odd, self.v_row_odd), (Parity::Even, self.v_row_even)]
+            {
+                program.push(Instruction::AccW2V {
+                    w_row: i,
+                    v_src: v,
+                    v_dst: v,
+                    parity,
+                });
+            }
+        }
+        if with_update {
+            for (parity, v, rows) in [
+                (Parity::Odd, self.v_row_odd, self.rows_odd),
+                (Parity::Even, self.v_row_even, self.rows_even),
+            ] {
+                for instr in neuron_sequence(self.neuron, v, rows, parity) {
+                    program.push(instr);
+                }
+            }
+        }
+        TimestepPlan {
+            program,
+            spikes_in,
+            fan_in: in_spikes.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::InstructionKind;
+    use crate::mapper::ConstRows;
+    use crate::proptest_lite::{forall_ctx, gen};
+
+    fn sched(neuron: NeuronType) -> SpikeScheduler {
+        SpikeScheduler::for_tile(0, 1, neuron, ConstRows::default())
+    }
+
+    #[test]
+    fn instruction_count_proportional_to_spikes() {
+        let s = sched(NeuronType::RMP);
+        for n_spikes in [0usize, 1, 13, 64, 128] {
+            let mut spikes = vec![false; 128];
+            for i in 0..n_spikes {
+                spikes[i] = true;
+            }
+            let plan = s.schedule(&spikes, true);
+            let h = plan.program.histogram();
+            assert_eq!(
+                h.get(&InstructionKind::AccW2V).copied().unwrap_or(0),
+                2 * n_spikes as u64
+            );
+            // RMP update: 2 SpikeCheck + 2 AccV2V
+            assert_eq!(h[&InstructionKind::SpikeCheck], 2);
+            assert_eq!(plan.program.len() as u64, 2 * n_spikes as u64 + 4);
+        }
+    }
+
+    #[test]
+    fn sparsity_computed_from_plan() {
+        let s = sched(NeuronType::IF);
+        let mut spikes = vec![false; 100];
+        for i in 0..15 {
+            spikes[i] = true;
+        }
+        let plan = s.schedule(&spikes, false);
+        assert!((plan.sparsity() - 0.85).abs() < 1e-9);
+    }
+
+    /// Property: the scheduled program only ever touches the tile's own
+    /// V rows and the constant rows — scheduling cannot corrupt other
+    /// tiles' state (the coordinator's isolation invariant).
+    #[test]
+    fn prop_schedule_touches_only_tile_rows() {
+        let s = sched(NeuronType::LIF);
+        let allowed: std::collections::HashSet<usize> = [
+            0usize, 1, 26, 27, 28, 29, 30, 31,
+        ]
+        .into_iter()
+        .collect();
+        forall_ctx(
+            200,
+            0xBEEF,
+            |rng| { let p = rng.gen_f64(); gen::spikes(rng, 128, p) },
+            |spikes| {
+                let plan = s.schedule(spikes, true);
+                for instr in &plan.program {
+                    let rows: Vec<usize> = match *instr {
+                        Instruction::AccW2V { v_src, v_dst, .. } => vec![v_src, v_dst],
+                        Instruction::AccV2V {
+                            src_a, src_b, dst, ..
+                        } => vec![src_a, src_b, dst],
+                        Instruction::SpikeCheck { v_row, thr_row, .. } => {
+                            vec![v_row, thr_row]
+                        }
+                        Instruction::ResetV { reset_row, dst, .. } => vec![reset_row, dst],
+                        _ => vec![],
+                    };
+                    for r in rows {
+                        if !allowed.contains(&r) {
+                            return Err(format!("instruction {instr:?} touches row {r}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: instruction count is exactly 2·spikes + update cost.
+    #[test]
+    fn prop_cost_model_exact() {
+        let s = sched(NeuronType::RMP);
+        forall_ctx(
+            300,
+            0xCAFE,
+            |rng| { let p = rng.gen_f64(); gen::spikes(rng, 128, p) },
+            |spikes| {
+                let plan = s.schedule(spikes, true);
+                let n = spikes.iter().filter(|&&b| b).count();
+                let expect = 2 * n + 2 * NeuronType::RMP.instructions_per_update();
+                if plan.program.len() != expect {
+                    return Err(format!("{} != {}", plan.program.len(), expect));
+                }
+                Ok(())
+            },
+        );
+    }
+}

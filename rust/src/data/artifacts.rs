@@ -1,0 +1,185 @@
+//! Typed views over the exported artifact bundles.
+
+use super::binfmt::{Manifest, Tensor};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// The quantized sentiment model + its test set.
+#[derive(Clone, Debug)]
+pub struct SentimentArtifacts {
+    /// Quantized embeddings `[vocab][100]` (encoder input currents).
+    pub emb_q: Vec<Vec<i64>>,
+    /// FC1 weights `[100][128]` in [-32, 31].
+    pub w1: Vec<Vec<i64>>,
+    /// FC2 weights `[128][128]`.
+    pub w2: Vec<Vec<i64>>,
+    /// Output weights `[128]` (column vector flattened).
+    pub w_out: Vec<i64>,
+    pub thr_enc: i64,
+    pub thr1: i64,
+    pub thr2: i64,
+    /// Padded test sequences `[n][max_len]` (pad = -1).
+    pub test_seqs: Vec<Vec<i64>>,
+    pub test_lens: Vec<i64>,
+    pub test_labels: Vec<u8>,
+    /// Reference integer V_out traces from the Python int model
+    /// `[32][max_len]` — differential-test fixture.
+    pub ref_vout_traces: Vec<Vec<i64>>,
+    pub ref_preds: Vec<u8>,
+}
+
+impl SentimentArtifacts {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let man = Manifest::read(dir.join("manifest.txt")).context("manifest")?;
+        let s = dir.join("sentiment");
+        let t = |name: &str| Tensor::read(s.join(name));
+        Ok(Self {
+            emb_q: t("emb_q.bin")?.to_matrix_i64()?,
+            w1: t("w1.bin")?.to_matrix_i64()?,
+            w2: t("w2.bin")?.to_matrix_i64()?,
+            w_out: t("w_out.bin")?.to_i64()?,
+            thr_enc: man
+                .get_i64("snn_thr_enc")
+                .context("snn_thr_enc missing")?,
+            thr1: man.get_i64("snn_thr1").context("snn_thr1 missing")?,
+            thr2: man.get_i64("snn_thr2").context("snn_thr2 missing")?,
+            test_seqs: t("test_seqs.bin")?.to_matrix_i64()?,
+            test_lens: t("test_lens.bin")?.to_i64()?,
+            test_labels: t("test_labels.bin")?
+                .to_i64()?
+                .iter()
+                .map(|&v| v as u8)
+                .collect(),
+            ref_vout_traces: t("ref_vout_traces.bin")?.to_matrix_i64()?,
+            ref_preds: t("ref_preds.bin")?
+                .to_i64()?
+                .iter()
+                .map(|&v| v as u8)
+                .collect(),
+        })
+    }
+
+    /// Validate ranges against the hardware formats.
+    pub fn validate(&self) -> Result<()> {
+        for (name, m) in [("w1", &self.w1), ("w2", &self.w2)] {
+            for row in m {
+                for &w in row {
+                    if !crate::bits::fits(w, crate::bits::W_BITS) {
+                        bail!("{name}: weight {w} outside 6-bit range");
+                    }
+                }
+            }
+        }
+        for &w in &self.w_out {
+            if !crate::bits::fits(w, crate::bits::W_BITS) {
+                bail!("w_out: weight {w} outside 6-bit range");
+            }
+        }
+        if self.w1.len() != 100 || self.w1[0].len() != 128 {
+            bail!("w1 shape {:?}x{:?}", self.w1.len(), self.w1[0].len());
+        }
+        if !(1..1024).contains(&self.thr1) || !(1..1024).contains(&self.thr2) {
+            bail!("thresholds out of 11-bit range");
+        }
+        Ok(())
+    }
+}
+
+/// The quantized digits model + test set.
+#[derive(Clone, Debug)]
+pub struct DigitsArtifacts {
+    /// Encoder conv kernel `[3][3][1][C]` flattened (float, off-macro).
+    pub k1: Vec<f32>,
+    pub k1_shape: Vec<usize>,
+    pub thr_c1: f32,
+    /// Conv2 kernel `[3][3][C][C]` flattened (int).
+    pub k2: Vec<i64>,
+    pub k2_shape: Vec<usize>,
+    pub k3: Vec<i64>,
+    pub k3_shape: Vec<usize>,
+    pub w_fc1: Vec<Vec<i64>>,
+    pub w_fc2: Vec<Vec<i64>>,
+    pub thr_c2: i64,
+    pub thr_c3: i64,
+    pub thr_f1: i64,
+    /// Test images `[n][28][28]` flattened per image.
+    pub test_x: Vec<Vec<f32>>,
+    pub test_y: Vec<u8>,
+}
+
+impl DigitsArtifacts {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let d = dir.join("digits");
+        let k1 = Tensor::read(d.join("k1.bin"))?;
+        let k2 = Tensor::read(d.join("k2.bin"))?;
+        let k3 = Tensor::read(d.join("k3.bin"))?;
+        let thr = Tensor::read(d.join("thresholds.bin"))?.to_i64()?;
+        let thr_c1 = Tensor::read(d.join("thr_c1.bin"))?.to_f32()?[0];
+        let tx = Tensor::read(d.join("test_x.bin"))?;
+        let n = tx.shape[0];
+        let img = tx.shape[1] * tx.shape[2];
+        let flat = tx.to_f32()?;
+        Ok(Self {
+            k1_shape: k1.shape.clone(),
+            k1: k1.to_f32()?,
+            thr_c1,
+            k2_shape: k2.shape.clone(),
+            k2: k2.to_i64()?,
+            k3_shape: k3.shape.clone(),
+            k3: k3.to_i64()?,
+            w_fc1: Tensor::read(d.join("w_fc1.bin"))?.to_matrix_i64()?,
+            w_fc2: Tensor::read(d.join("w_fc2.bin"))?.to_matrix_i64()?,
+            thr_c2: thr[0],
+            thr_c3: thr[1],
+            thr_f1: thr[2],
+            test_x: (0..n).map(|i| flat[i * img..(i + 1) * img].to_vec()).collect(),
+            test_y: Tensor::read(d.join("test_y.bin"))?
+                .to_i64()?
+                .iter()
+                .map(|&v| v as u8)
+                .collect(),
+        })
+    }
+}
+
+/// One exported kernel cross-check vector (inputs + oracle outputs of
+/// the fused step, produced by the L1 reference).
+#[derive(Clone, Debug)]
+pub struct KernelVector {
+    pub name: String,
+    pub spikes: Vec<Vec<i64>>,   // [B][M] {0,1}
+    pub weights: Vec<Vec<i64>>,  // [M][N]
+    pub v: Vec<Vec<i64>>,        // [B][N]
+    pub v_next: Vec<Vec<i64>>,   // oracle output
+    pub spikes_out: Vec<Vec<i64>>,
+    pub mode: i64, // 0=IF 1=LIF 2=RMP
+    pub threshold: i64,
+    pub leak: i64,
+}
+
+impl KernelVector {
+    /// Load all exported vectors.
+    pub fn load_all(dir: impl AsRef<Path>) -> Result<Vec<KernelVector>> {
+        let d = dir.as_ref().join("kernel_vectors");
+        let index = std::fs::read_to_string(d.join("index.txt")).context("index.txt")?;
+        let mut out = Vec::new();
+        for name in index.lines().filter(|l| !l.trim().is_empty()) {
+            let t = |suffix: &str| Tensor::read(d.join(format!("{name}_{suffix}.bin")));
+            let meta = t("meta")?.to_i64()?;
+            out.push(KernelVector {
+                name: name.to_string(),
+                spikes: t("spikes")?.to_matrix_i64()?,
+                weights: t("weights")?.to_matrix_i64()?,
+                v: t("v")?.to_matrix_i64()?,
+                v_next: t("v_next")?.to_matrix_i64()?,
+                spikes_out: t("spikes_out")?.to_matrix_i64()?,
+                mode: meta[0],
+                threshold: meta[1],
+                leak: meta[2],
+            });
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,319 @@
+//! Reader/writer for the IMPT tensor format and `key=value` manifests
+//! (see `python/compile/binfmt.py` — the two must stay in lockstep).
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"IMPT";
+
+/// Element type codes (must match the Python side).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    I8 = 0,
+    I16 = 1,
+    I32 = 2,
+    F32 = 3,
+    I64 = 4,
+    F64 = 5,
+    U8 = 6,
+}
+
+impl Dtype {
+    fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => Dtype::I8,
+            1 => Dtype::I16,
+            2 => Dtype::I32,
+            3 => Dtype::F32,
+            4 => Dtype::I64,
+            5 => Dtype::F64,
+            6 => Dtype::U8,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::I8 | Dtype::U8 => 1,
+            Dtype::I16 => 2,
+            Dtype::I32 | Dtype::F32 => 4,
+            Dtype::I64 | Dtype::F64 => 8,
+        }
+    }
+}
+
+/// A loaded tensor: shape + raw little-endian payload, with typed
+/// accessors that convert on demand.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Tensor {
+    /// Read from an IMPT file.
+    pub fn read(path: impl AsRef<Path>) -> Result<Tensor> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let mut hdr = [0u8; 2];
+        f.read_exact(&mut hdr)?;
+        let dtype = Dtype::from_code(hdr[0])?;
+        let rank = hdr[1] as usize;
+        let mut dims = vec![0usize; rank];
+        for d in dims.iter_mut() {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            *d = u32::from_le_bytes(b) as usize;
+        }
+        let n: usize = dims.iter().product::<usize>().max(1);
+        let mut data = vec![0u8; n * dtype.size()];
+        f.read_exact(&mut data)
+            .with_context(|| format!("{}: truncated payload", path.display()))?;
+        Ok(Tensor {
+            dtype,
+            shape: dims,
+            data,
+        })
+    }
+
+    /// Write to an IMPT file (used by the workload generators and the
+    /// Rust-side round-trip tests).
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&[self.dtype as u8, self.shape.len() as u8])?;
+        for &d in &self.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        f.write_all(&self.data)?;
+        Ok(())
+    }
+
+    /// Build from i8 values.
+    pub fn from_i8(shape: Vec<usize>, values: &[i8]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        Tensor {
+            dtype: Dtype::I8,
+            shape,
+            data: values.iter().map(|&v| v as u8).collect(),
+        }
+    }
+
+    /// Build from i32 values.
+    pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        Tensor {
+            dtype: Dtype::I32,
+            shape,
+            data: values.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        }
+    }
+
+    /// Build from f32 values.
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        Tensor {
+            dtype: Dtype::F32,
+            shape,
+            data: values.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Elements widened to i64 (integer dtypes only).
+    pub fn to_i64(&self) -> Result<Vec<i64>> {
+        let n = self.len();
+        let mut out = Vec::with_capacity(n);
+        match self.dtype {
+            Dtype::I8 => out.extend(self.data.iter().map(|&b| b as i8 as i64)),
+            Dtype::U8 => out.extend(self.data.iter().map(|&b| b as i64)),
+            Dtype::I16 => {
+                for c in self.data.chunks_exact(2) {
+                    out.push(i16::from_le_bytes([c[0], c[1]]) as i64);
+                }
+            }
+            Dtype::I32 => {
+                for c in self.data.chunks_exact(4) {
+                    out.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i64);
+                }
+            }
+            Dtype::I64 => {
+                for c in self.data.chunks_exact(8) {
+                    out.push(i64::from_le_bytes(c.try_into().unwrap()));
+                }
+            }
+            _ => bail!("to_i64 on float tensor"),
+        }
+        Ok(out)
+    }
+
+    /// Elements as f32 (float dtypes only).
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.len());
+        match self.dtype {
+            Dtype::F32 => {
+                for c in self.data.chunks_exact(4) {
+                    out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+            }
+            Dtype::F64 => {
+                for c in self.data.chunks_exact(8) {
+                    out.push(f64::from_le_bytes(c.try_into().unwrap()) as f32);
+                }
+            }
+            _ => bail!("to_f32 on integer tensor"),
+        }
+        Ok(out)
+    }
+
+    /// Interpret a rank-2 integer tensor as rows of i64.
+    pub fn to_matrix_i64(&self) -> Result<Vec<Vec<i64>>> {
+        if self.shape.len() != 2 {
+            bail!("expected rank-2, got {:?}", self.shape);
+        }
+        let flat = self.to_i64()?;
+        let (r, c) = (self.shape[0], self.shape[1]);
+        Ok((0..r).map(|i| flat[i * c..(i + 1) * c].to_vec()).collect())
+    }
+}
+
+/// A `key=value` manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: std::collections::BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn read(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        let mut entries = std::collections::BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                entries.insert(k.to_string(), v.to_string());
+            }
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key)?.parse().ok()
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key)?.parse().ok()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("impulse_binfmt_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = Tensor::from_i32(vec![2, 3], &[1, -2, 3, -4, 5, -6]);
+        let p = tmp("a.bin");
+        t.write(&p).unwrap();
+        let r = Tensor::read(&p).unwrap();
+        assert_eq!(r.dtype, Dtype::I32);
+        assert_eq!(r.shape, vec![2, 3]);
+        assert_eq!(r.to_i64().unwrap(), vec![1, -2, 3, -4, 5, -6]);
+        assert_eq!(
+            r.to_matrix_i64().unwrap(),
+            vec![vec![1, -2, 3], vec![-4, 5, -6]]
+        );
+    }
+
+    #[test]
+    fn i8_roundtrip() {
+        let t = Tensor::from_i8(vec![4], &[-32, -1, 0, 31]);
+        let p = tmp("b.bin");
+        t.write(&p).unwrap();
+        let r = Tensor::read(&p).unwrap();
+        assert_eq!(r.to_i64().unwrap(), vec![-32, -1, 0, 31]);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_f32(vec![3], &[1.5, -2.25, 0.0]);
+        let p = tmp("c.bin");
+        t.write(&p).unwrap();
+        let r = Tensor::read(&p).unwrap();
+        assert_eq!(r.to_f32().unwrap(), vec![1.5, -2.25, 0.0]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, b"NOPE aaaa").unwrap();
+        assert!(Tensor::read(&p).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let t = Tensor::from_i32(vec![8], &[0; 8]);
+        let p = tmp("trunc.bin");
+        t.write(&p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 5]).unwrap();
+        assert!(Tensor::read(&p).is_err());
+    }
+
+    #[test]
+    fn type_confusion_rejected() {
+        let t = Tensor::from_f32(vec![2], &[1.0, 2.0]);
+        assert!(t.to_i64().is_err());
+        let t = Tensor::from_i32(vec![2], &[1, 2]);
+        assert!(t.to_f32().is_err());
+    }
+
+    #[test]
+    fn manifest_parse() {
+        let p = tmp("m.txt");
+        std::fs::write(&p, "# comment\nacc=0.88\nn=29315\nname=impulse\n\n").unwrap();
+        let m = Manifest::read(&p).unwrap();
+        assert_eq!(m.get_f64("acc"), Some(0.88));
+        assert_eq!(m.get_i64("n"), Some(29315));
+        assert_eq!(m.get("name"), Some("impulse"));
+        assert_eq!(m.get("missing"), None);
+        assert_eq!(m.keys().count(), 3);
+    }
+}

@@ -1,0 +1,29 @@
+//! Artifact loading: the IMPT binary tensor format, manifests, and the
+//! typed views of the exported model/dataset bundles.
+
+mod artifacts;
+pub mod binfmt;
+
+pub use artifacts::{DigitsArtifacts, KernelVector, SentimentArtifacts};
+pub use binfmt::{Dtype, Manifest, Tensor};
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$IMPULSE_ARTIFACTS`, else
+/// `artifacts/` relative to the working directory, else relative to the
+/// crate root (so tests work from any cwd).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("IMPULSE_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = Path::new("artifacts");
+    if cwd.exists() {
+        return cwd.to_path_buf();
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if the artifact bundle looks complete (manifest present).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}

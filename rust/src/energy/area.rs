@@ -1,0 +1,124 @@
+//! Die-area model (Fig 7): component breakdown calibrated to the
+//! published totals — 0.089 mm² macro area, 54.2 % memory area
+//! efficiency, 65 nm CMOS.
+
+use crate::bitcell::{COLS, V_ROWS, W_ROWS};
+
+/// Published totals.
+pub const TOTAL_AREA_MM2: f64 = 0.089;
+pub const MEMORY_AREA_EFFICIENCY: f64 = 0.542;
+
+/// Component-level area breakdown (mm²).
+#[derive(Clone, Copy, Debug)]
+pub struct AreaBreakdown {
+    pub bitcells_mm2: f64,
+    pub column_periph_mm2: f64,
+    pub decoders_mm2: f64,
+    pub control_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total_mm2(&self) -> f64 {
+        self.bitcells_mm2 + self.column_periph_mm2 + self.decoders_mm2 + self.control_mm2
+    }
+
+    pub fn memory_efficiency(&self) -> f64 {
+        self.bitcells_mm2 / self.total_mm2()
+    }
+}
+
+/// The model: per-10T-bitcell area is derived from the published
+/// totals; peripheral/decoder/control areas use relative transistor
+/// budgets (modelled split — the paper's Fig 7 pie is not numerically
+/// annotated beyond the 54.2 % memory share).
+#[derive(Clone, Debug)]
+pub struct AreaModel {
+    /// 10T bitcell area (µm²).
+    pub bitcell_um2: f64,
+    /// One reconfigurable column peripheral (SINV+BLFA+CMUX+CWD) (µm²).
+    pub column_periph_um2: f64,
+    /// Triple-row decoder + wordline drivers (µm²).
+    pub decoder_um2: f64,
+    /// Control, spike buffers, timing (µm²).
+    pub control_um2: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        Self::calibrated()
+    }
+}
+
+impl AreaModel {
+    /// Calibrate to the published totals.
+    pub fn calibrated() -> Self {
+        let cells = ((W_ROWS + V_ROWS) * COLS) as f64;
+        let mem_mm2 = TOTAL_AREA_MM2 * MEMORY_AREA_EFFICIENCY;
+        let bitcell_um2 = mem_mm2 * 1e6 / cells;
+        // Non-memory split (modelled): column peripherals dominate
+        // (78 chains of SINV+BLFA+CMUX+CWD ≈ 62 %), decoders 18 %,
+        // control/spike-buffers/timing 20 %.
+        let rest_mm2 = TOTAL_AREA_MM2 - mem_mm2;
+        Self {
+            bitcell_um2,
+            column_periph_um2: rest_mm2 * 0.62 * 1e6 / COLS as f64,
+            decoder_um2: rest_mm2 * 0.18 * 1e6,
+            control_um2: rest_mm2 * 0.20 * 1e6,
+        }
+    }
+
+    /// The breakdown for the standard macro geometry.
+    pub fn breakdown(&self) -> AreaBreakdown {
+        let cells = ((W_ROWS + V_ROWS) * COLS) as f64;
+        AreaBreakdown {
+            bitcells_mm2: self.bitcell_um2 * cells / 1e6,
+            column_periph_mm2: self.column_periph_um2 * COLS as f64 / 1e6,
+            decoders_mm2: self.decoder_um2 / 1e6,
+            control_mm2: self.control_um2 / 1e6,
+        }
+    }
+
+    /// Area of a hypothetical macro with different geometry (used by
+    /// the multi-macro scaling analysis).
+    pub fn scaled_macro_mm2(&self, w_rows: usize, v_rows: usize, cols: usize) -> f64 {
+        let cells = ((w_rows + v_rows) * cols) as f64;
+        let periph = self.column_periph_um2 * cols as f64;
+        // decoder grows ~log2(rows), control roughly constant
+        let dec = self.decoder_um2 * ((w_rows + v_rows) as f64).log2()
+            / ((W_ROWS + V_ROWS) as f64).log2();
+        (self.bitcell_um2 * cells + periph + dec + self.control_um2) / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_matches_published_totals() {
+        let b = AreaModel::calibrated().breakdown();
+        assert!((b.total_mm2() - TOTAL_AREA_MM2).abs() < 1e-6);
+        assert!((b.memory_efficiency() - MEMORY_AREA_EFFICIENCY).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bitcell_area_plausible_for_65nm_10t() {
+        // 6T at 65nm ≈ 0.5–1.5 µm²; a 10T CIM cell with dual read ports
+        // lands in the 2–6 µm² band.
+        let m = AreaModel::calibrated();
+        assert!(
+            m.bitcell_um2 > 1.5 && m.bitcell_um2 < 8.0,
+            "{} µm²",
+            m.bitcell_um2
+        );
+    }
+
+    #[test]
+    fn scaled_macro_grows_with_geometry() {
+        let m = AreaModel::calibrated();
+        let base = m.scaled_macro_mm2(W_ROWS, V_ROWS, COLS);
+        let double = m.scaled_macro_mm2(2 * W_ROWS, 2 * V_ROWS, COLS);
+        assert!((base - TOTAL_AREA_MM2).abs() / TOTAL_AREA_MM2 < 0.05);
+        assert!(double > 1.5 * base && double < 2.5 * base);
+    }
+}

@@ -1,0 +1,168 @@
+//! Energy-delay product vs input-spike sparsity (Fig 11b).
+//!
+//! The macro exploits sparsity *architecturally*: the number of input
+//! spikes determines how many AccW2V instructions are issued at all. At
+//! sparsity `s` a 128-input layer issues `2·(1−s)·128` AccW2V cycles
+//! (odd + even) plus the fixed neuron-update sequence per timestep, so
+//! both the energy and the delay scale with `(1−s)` and their product
+//! falls quadratically — 97.4 % at 85 % sparsity, the paper's headline.
+
+use super::model::EnergyModel;
+use crate::isa::{InstructionKind, NeuronType};
+use crate::NOMINAL_VDD;
+use std::collections::BTreeMap;
+
+/// One point of the EDP-vs-sparsity curve.
+#[derive(Clone, Copy, Debug)]
+pub struct EdpPoint {
+    pub sparsity: f64,
+    /// Energy per neuron per timestep (J).
+    pub energy_j: f64,
+    /// Delay per neuron per timestep (s).
+    pub delay_s: f64,
+    /// EDP (J·s).
+    pub edp: f64,
+}
+
+/// Analytic instruction counts for one timestep of a 128-input,
+/// 12-neuron (one V-row pair) layer slice at input sparsity `s`.
+fn timestep_histogram(s: f64, neuron: NeuronType) -> BTreeMap<InstructionKind, u64> {
+    let spikes = ((1.0 - s) * 128.0).round() as u64;
+    let mut h = BTreeMap::new();
+    // one AccW2V per spiking input per parity
+    if spikes > 0 {
+        h.insert(InstructionKind::AccW2V, 2 * spikes);
+    }
+    let (v2v, check, reset) = match neuron {
+        NeuronType::IF => (0, 2, 2),
+        NeuronType::LIF => (2, 2, 2),
+        NeuronType::RMP => (2, 2, 0),
+    };
+    if v2v > 0 {
+        h.insert(InstructionKind::AccV2V, v2v);
+    }
+    h.insert(InstructionKind::SpikeCheck, check);
+    if reset > 0 {
+        h.insert(InstructionKind::ResetV, reset);
+    }
+    h
+}
+
+/// EDP per neuron per timestep at input sparsity `s` (12 neurons share
+/// the odd+even V-row pair).
+pub fn edp_per_neuron_timestep(
+    model: &EnergyModel,
+    s: f64,
+    neuron: NeuronType,
+    vdd: f64,
+    freq_hz: f64,
+) -> EdpPoint {
+    assert!((0.0..=1.0).contains(&s), "sparsity out of range");
+    let h = timestep_histogram(s, neuron);
+    let cycles: u64 = h.values().sum();
+    let neurons = 12.0;
+    let energy_j = model.program_energy_j(&h, vdd) / neurons;
+    let delay_s = model.delay_s(cycles, freq_hz) / neurons;
+    EdpPoint {
+        sparsity: s,
+        energy_j,
+        delay_s,
+        edp: energy_j * delay_s,
+    }
+}
+
+/// A full sparsity sweep (the Fig 11b series).
+#[derive(Clone, Debug)]
+pub struct SparsitySweep {
+    pub points: Vec<EdpPoint>,
+}
+
+impl SparsitySweep {
+    /// Sweep sparsity 0..=1 in `n` steps.
+    pub fn run(model: &EnergyModel, neuron: NeuronType, n: usize) -> Self {
+        let points = (0..=n)
+            .map(|i| {
+                edp_per_neuron_timestep(
+                    model,
+                    i as f64 / n as f64,
+                    neuron,
+                    NOMINAL_VDD,
+                    crate::NOMINAL_FREQ_HZ,
+                )
+            })
+            .collect();
+        Self { points }
+    }
+
+    /// EDP reduction (fraction) at sparsity `s` relative to s = 0.
+    pub fn reduction_at(&self, s: f64) -> f64 {
+        let base = self.points[0].edp;
+        let p = self
+            .points
+            .iter()
+            .min_by(|a, b| {
+                (a.sparsity - s)
+                    .abs()
+                    .partial_cmp(&(b.sparsity - s).abs())
+                    .unwrap()
+            })
+            .unwrap();
+        1.0 - p.edp / base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_97_4_percent_reduction_at_85_sparsity() {
+        let m = EnergyModel::calibrated();
+        let sweep = SparsitySweep::run(&m, NeuronType::RMP, 100);
+        let red = sweep.reduction_at(0.85);
+        assert!(
+            (red - 0.974).abs() < 0.005,
+            "EDP reduction at 85% sparsity: {red:.4} (paper: 0.974)"
+        );
+    }
+
+    #[test]
+    fn edp_monotonically_decreases_with_sparsity() {
+        let m = EnergyModel::calibrated();
+        let sweep = SparsitySweep::run(&m, NeuronType::RMP, 50);
+        for w in sweep.points.windows(2) {
+            assert!(w[1].edp <= w[0].edp);
+        }
+    }
+
+    #[test]
+    fn full_sparsity_costs_only_neuron_updates() {
+        let h = timestep_histogram(1.0, NeuronType::RMP);
+        assert!(!h.contains_key(&InstructionKind::AccW2V));
+        assert_eq!(h[&InstructionKind::SpikeCheck], 2);
+        assert_eq!(h[&InstructionKind::AccV2V], 2);
+    }
+
+    #[test]
+    fn zero_sparsity_issues_all_256_accw2v() {
+        let h = timestep_histogram(0.0, NeuronType::IF);
+        assert_eq!(h[&InstructionKind::AccW2V], 256);
+    }
+
+    #[test]
+    fn lif_costs_more_than_rmp_at_same_sparsity() {
+        let m = EnergyModel::calibrated();
+        let lif = edp_per_neuron_timestep(&m, 0.85, NeuronType::LIF, NOMINAL_VDD, 200e6);
+        let rmp = edp_per_neuron_timestep(&m, 0.85, NeuronType::RMP, NOMINAL_VDD, 200e6);
+        assert!(lif.edp > rmp.edp);
+    }
+
+    #[test]
+    fn quadratic_shape() {
+        // EDP(0.5)/EDP(0) ≈ ((0.5·256+4)/(256+4))² ≈ 0.258
+        let m = EnergyModel::calibrated();
+        let sweep = SparsitySweep::run(&m, NeuronType::RMP, 100);
+        let r = sweep.points[50].edp / sweep.points[0].edp;
+        assert!((r - 0.26).abs() < 0.02, "ratio {r}");
+    }
+}

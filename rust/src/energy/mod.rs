@@ -1,0 +1,28 @@
+//! Silicon-calibrated energy, power, timing, and area models.
+//!
+//! The simulator replaces the paper's silicon measurements with
+//! analytical models whose free parameters are calibrated to the
+//! published numbers (DESIGN.md §1, §6):
+//!
+//! - per-instruction energies at point D (0.85 V / 200 MHz) derived from
+//!   the published per-instruction TOPS/W;
+//! - a two-component power model `P(V,f) = E(V)·f + P_leak(V)` fitted to
+//!   the three published operating points (0.7/0.85/1.2 V columns of
+//!   Table I);
+//! - alpha-power-law Fmax curves for the Shmoo (Fig 8);
+//! - a component area model reproducing Fig 7's breakdown.
+
+mod area;
+mod edp;
+mod model;
+mod shmoo;
+
+pub use area::{AreaBreakdown, AreaModel};
+pub use edp::{edp_per_neuron_timestep, EdpPoint, SparsitySweep};
+pub use model::{EnergyModel, InstrEnergy, OperatingPoint, OPERATING_POINTS};
+pub use shmoo::{ShmooGrid, ShmooModel, ShmooPath};
+
+/// Published CIM Shmoo boundary points `(V, Fmax Hz)` (Table I columns).
+pub fn shmoo_boundary() -> [(f64, f64); 3] {
+    shmoo::CIM_BOUNDARY
+}

@@ -1,0 +1,347 @@
+//! The calibrated power/energy model.
+
+use crate::isa::InstructionKind;
+use crate::NOMINAL_VDD;
+use std::collections::BTreeMap;
+
+/// Published per-instruction energy efficiency at point D
+/// (0.85 V, 200 MHz), in TOPS/W; 1 op ≡ one 11-bit CIM instruction.
+/// (Paper §III: "0.99 TOPS/W for AccW2V … AccV2V, ResetV, and
+/// SpikeCheck achieve 1.18, 1.02, and 1.22 TOPS/W".)
+pub const TOPS_PER_W_AT_D: [(InstructionKind, f64); 4] = [
+    (InstructionKind::AccW2V, 0.99),
+    (InstructionKind::AccV2V, 1.18),
+    (InstructionKind::ResetV, 1.02),
+    (InstructionKind::SpikeCheck, 1.22),
+];
+
+/// One (V, f) operating point with the paper's measured power, from
+/// Table I's three "This Work" columns.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OperatingPoint {
+    pub label: &'static str,
+    pub vdd: f64,
+    pub freq_hz: f64,
+    /// Measured average power from the paper (W); None for the
+    /// intermediate Shmoo points A–G the paper marks but does not
+    /// tabulate.
+    pub measured_power_w: Option<f64>,
+}
+
+/// The Fig 9(a) operating points of interest (A–G). The paper
+/// identifies seven points on the CIM Shmoo boundary but tabulates
+/// power only at the three Table I columns; the intermediate labels
+/// follow the boundary (modelling choice; DESIGN.md §6).
+pub const OPERATING_POINTS: [OperatingPoint; 7] = [
+    OperatingPoint { label: "A", vdd: 0.70, freq_hz: 66.67e6, measured_power_w: Some(0.072e-3) },
+    OperatingPoint { label: "B", vdd: 0.75, freq_hz: 100.0e6, measured_power_w: None },
+    OperatingPoint { label: "C", vdd: 0.80, freq_hz: 150.0e6, measured_power_w: None },
+    OperatingPoint { label: "D", vdd: 0.85, freq_hz: 200.0e6, measured_power_w: Some(0.201e-3) },
+    OperatingPoint { label: "E", vdd: 0.95, freq_hz: 300.0e6, measured_power_w: None },
+    OperatingPoint { label: "F", vdd: 1.05, freq_hz: 400.0e6, measured_power_w: None },
+    OperatingPoint { label: "G", vdd: 1.20, freq_hz: 500.0e6, measured_power_w: Some(0.88e-3) },
+];
+
+/// Per-instruction energy table at a given supply.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct InstrEnergy {
+    pub acc_w2v_pj: f64,
+    pub acc_v2v_pj: f64,
+    pub spike_check_pj: f64,
+    pub reset_v_pj: f64,
+    /// Plain SRAM read/write energy (modelled at 0.8× of ResetV — a
+    /// single-row access without the adder chain).
+    pub sram_rw_pj: f64,
+}
+
+impl InstrEnergy {
+    pub fn of(&self, k: InstructionKind) -> f64 {
+        match k {
+            InstructionKind::AccW2V => self.acc_w2v_pj,
+            InstructionKind::AccV2V => self.acc_v2v_pj,
+            InstructionKind::SpikeCheck => self.spike_check_pj,
+            InstructionKind::ResetV => self.reset_v_pj,
+            InstructionKind::ReadV | InstructionKind::WriteV | InstructionKind::WriteW => {
+                self.sram_rw_pj
+            }
+        }
+    }
+}
+
+/// The calibrated model.
+///
+/// `P(V, f) = E_dyn(V)·f + P_static(V)` with
+/// `E_dyn(V) = (ē − P₀/f₀)·(V/V₀)^γ` and
+/// `P_static(V) = P₀·e^{k(V−V₀)}`, where ē is the total AccW2V energy
+/// per cycle at point D (from the published 0.99 TOPS/W) and f₀ =
+/// 200 MHz. P_static bundles true leakage with frequency-independent
+/// overhead (clock tree, control), so its fitted slope `k` may be
+/// negative — the published measurements have *higher* energy/cycle at
+/// 0.7 V/66.67 MHz than at point D, which only a static component that
+/// does not vanish at low V can reproduce. The three shape parameters
+/// (γ, P₀, k) are fitted by grid search + refinement to the three
+/// published (V, f, P) points.
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    /// Total AccW2V energy per cycle at point D (J).
+    e0: f64,
+    /// Voltage exponent of dynamic energy.
+    gamma: f64,
+    /// Static/overhead power at V₀ (W).
+    leak0: f64,
+    /// Static-power voltage slope (1/V); may be negative (see above).
+    leak_k: f64,
+    /// Per-instruction total energy at point D (J), keyed by kind.
+    instr0: BTreeMap<InstructionKind, f64>,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self::calibrated()
+    }
+}
+
+impl EnergyModel {
+    /// Calibrate against the paper's published numbers.
+    pub fn calibrated() -> Self {
+        // Per-instruction energies at point D from TOPS/W.
+        let mut instr0 = BTreeMap::new();
+        for (k, tops_per_w) in TOPS_PER_W_AT_D {
+            instr0.insert(k, 1e-12 / tops_per_w); // J per op
+        }
+        let e0 = 1e-12 / 0.99; // AccW2V is the headline per-cycle energy
+
+        // Fit (gamma, leak0, leak_k) to the three measured points by
+        // coarse-to-fine grid search on summed squared relative error.
+        let pts: Vec<(f64, f64, f64)> = OPERATING_POINTS
+            .iter()
+            .filter_map(|p| p.measured_power_w.map(|w| (p.vdd, p.freq_hz, w)))
+            .collect();
+        let f0 = crate::NOMINAL_FREQ_HZ;
+        let mut best = (f64::INFINITY, 1.6, 1e-5, 0.0);
+        let search = |g_lo: f64, g_hi: f64, l_lo: f64, l_hi: f64, k_lo: f64, k_hi: f64, n: usize, best: &mut (f64, f64, f64, f64)| {
+            for gi in 0..n {
+                let g = g_lo + (g_hi - g_lo) * gi as f64 / (n - 1) as f64;
+                for li in 0..n {
+                    let l = l_lo + (l_hi - l_lo) * li as f64 / (n - 1) as f64;
+                    let e_dyn0 = e0 - l / f0;
+                    if e_dyn0 <= 0.0 {
+                        continue;
+                    }
+                    for ki in 0..n {
+                        let k = k_lo + (k_hi - k_lo) * ki as f64 / (n - 1) as f64;
+                        let err: f64 = pts
+                            .iter()
+                            .map(|&(v, f, p)| {
+                                let pred = e_dyn0 * (v / NOMINAL_VDD).powf(g) * f
+                                    + l * ((v - NOMINAL_VDD) * k).exp();
+                                ((pred - p) / p).powi(2)
+                            })
+                            .sum();
+                        if err < best.0 {
+                            *best = (err, g, l, k);
+                        }
+                    }
+                }
+            }
+        };
+        search(0.5, 2.4, 1e-7, 1.2e-4, -8.0, 8.0, 49, &mut best);
+        let (_, g, l, k) = best;
+        search(
+            (g - 0.1).max(0.3), g + 0.1,
+            (l * 0.6).max(1e-8), l * 1.4,
+            k - 0.4, k + 0.4,
+            49, &mut best,
+        );
+        let (err, gamma, leak0, leak_k) = best;
+        debug_assert!(err.is_finite());
+
+        Self {
+            e0,
+            gamma,
+            leak0,
+            leak_k,
+            instr0,
+        }
+    }
+
+    /// Fitted voltage exponent.
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+
+    /// Dynamic-energy voltage scaling factor relative to V₀.
+    #[inline]
+    pub fn vscale(&self, vdd: f64) -> f64 {
+        (vdd / NOMINAL_VDD).powf(self.gamma)
+    }
+
+    /// Energy of one instruction at the given supply (J), at the
+    /// nominal V↔f pairing (i.e. the static share is the point-D one,
+    /// scaled with V^γ like the dynamic part). This is the quantity the
+    /// paper's Fig 6 / Fig 11 report; for off-pairing frequencies use
+    /// [`EnergyModel::tops_per_w`], which splits static power out
+    /// explicitly.
+    pub fn instr_energy_j(&self, k: InstructionKind, vdd: f64) -> f64 {
+        let sram = self.instr0[&InstructionKind::ResetV] * 0.8;
+        let base = match k {
+            InstructionKind::ReadV | InstructionKind::WriteV | InstructionKind::WriteW => sram,
+            _ => self.instr0[&k],
+        };
+        base * self.vscale(vdd)
+    }
+
+    /// Dynamic-only energy of one instruction at a supply (J).
+    fn instr_dyn_energy_j(&self, k: InstructionKind, vdd: f64) -> f64 {
+        let static_share = self.leak0 / crate::NOMINAL_FREQ_HZ;
+        (self.instr_energy_j(k, NOMINAL_VDD) - static_share).max(1e-15) * self.vscale(vdd)
+    }
+
+    /// Per-instruction energy table at a supply (pJ).
+    pub fn instr_table(&self, vdd: f64) -> InstrEnergy {
+        InstrEnergy {
+            acc_w2v_pj: self.instr_energy_j(InstructionKind::AccW2V, vdd) * 1e12,
+            acc_v2v_pj: self.instr_energy_j(InstructionKind::AccV2V, vdd) * 1e12,
+            spike_check_pj: self.instr_energy_j(InstructionKind::SpikeCheck, vdd) * 1e12,
+            reset_v_pj: self.instr_energy_j(InstructionKind::ResetV, vdd) * 1e12,
+            sram_rw_pj: self.instr_energy_j(InstructionKind::ReadV, vdd) * 1e12,
+        }
+    }
+
+    /// Static (leakage + fixed-overhead) power at a supply (W).
+    pub fn leakage_w(&self, vdd: f64) -> f64 {
+        self.leak0 * ((vdd - NOMINAL_VDD) * self.leak_k).exp()
+    }
+
+    /// Average power running AccW2V back-to-back at (V, f) (W) — what
+    /// Fig 9(a) plots.
+    pub fn avg_power_w(&self, vdd: f64, freq_hz: f64) -> f64 {
+        let e_dyn0 = self.e0 - self.leak0 / crate::NOMINAL_FREQ_HZ;
+        e_dyn0 * self.vscale(vdd) * freq_hz + self.leakage_w(vdd)
+    }
+
+    /// Energy efficiency for an instruction kind at (V, f) in TOPS/W
+    /// (1 op = one 11-bit instruction), including the static-power
+    /// share of the cycle.
+    pub fn tops_per_w(&self, k: InstructionKind, vdd: f64, freq_hz: f64) -> f64 {
+        let e_cycle = self.instr_dyn_energy_j(k, vdd) + self.leakage_w(vdd) / freq_hz;
+        1e-12 / e_cycle
+    }
+
+    /// Total energy (J) of an instruction histogram at a supply.
+    pub fn program_energy_j(
+        &self,
+        hist: &BTreeMap<InstructionKind, u64>,
+        vdd: f64,
+    ) -> f64 {
+        hist.iter()
+            .map(|(k, &n)| self.instr_energy_j(*k, vdd) * n as f64)
+            .sum()
+    }
+
+    /// Wall-clock (s) of `cycles` at `freq_hz` (every instruction is
+    /// single-cycle).
+    pub fn delay_s(&self, cycles: u64, freq_hz: f64) -> f64 {
+        cycles as f64 / freq_hz
+    }
+
+    /// GOPS/mm² at an operating point given the die area (Table I row).
+    pub fn gops_per_mm2(&self, freq_hz: f64, area_mm2: f64) -> f64 {
+        freq_hz / 1e9 / area_mm2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_d_energies_match_published_tops_per_w() {
+        let m = EnergyModel::calibrated();
+        let t = m.instr_table(NOMINAL_VDD);
+        assert!((t.acc_w2v_pj - 1.0101).abs() < 0.01, "{}", t.acc_w2v_pj);
+        assert!((t.acc_v2v_pj - 0.8475).abs() < 0.01);
+        assert!((t.reset_v_pj - 0.9804).abs() < 0.01);
+        assert!((t.spike_check_pj - 0.8197).abs() < 0.01);
+    }
+
+    #[test]
+    fn fig6_neuron_update_energies() {
+        // IF = SpikeCheck + ResetV ≈ 1.81 pJ; LIF ≈ 2.67; RMP ≈ 1.68.
+        let m = EnergyModel::calibrated();
+        let t = m.instr_table(NOMINAL_VDD);
+        let if_e = t.spike_check_pj + t.reset_v_pj;
+        let lif_e = t.acc_v2v_pj + t.spike_check_pj + t.reset_v_pj;
+        let rmp_e = t.spike_check_pj + t.acc_v2v_pj;
+        assert!((if_e - 1.81).abs() < 0.02, "IF {if_e}");
+        assert!((lif_e - 2.67).abs() < 0.04, "LIF {lif_e}");
+        assert!((rmp_e - 1.68).abs() < 0.02, "RMP {rmp_e}");
+    }
+
+    #[test]
+    fn fitted_power_matches_measured_points() {
+        let m = EnergyModel::calibrated();
+        for p in OPERATING_POINTS {
+            if let Some(meas) = p.measured_power_w {
+                let pred = m.avg_power_w(p.vdd, p.freq_hz);
+                let rel = (pred - meas).abs() / meas;
+                assert!(
+                    rel < 0.15,
+                    "point {}: predicted {:.4} mW vs measured {:.4} mW (rel {rel:.3})",
+                    p.label,
+                    pred * 1e3,
+                    meas * 1e3
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn efficiency_peaks_near_point_d() {
+        // Table I: 0.91 (0.7 V) / 0.99 (0.85 V) / 0.57 (1.2 V) TOPS/W —
+        // point D is the optimum. The model must reproduce the ordering.
+        let m = EnergyModel::calibrated();
+        let eff = |label: &str| {
+            let p = OPERATING_POINTS.iter().find(|p| p.label == label).unwrap();
+            m.tops_per_w(InstructionKind::AccW2V, p.vdd, p.freq_hz)
+        };
+        let (a, d, g) = (eff("A"), eff("D"), eff("G"));
+        assert!(d > a, "D ({d}) should beat A ({a})");
+        assert!(d > g, "D ({d}) should beat G ({g})");
+        assert!((d - 0.99).abs() < 0.12, "D efficiency {d}");
+        assert!(g < 0.75, "G efficiency {g}");
+    }
+
+    #[test]
+    fn energy_scales_with_voltage() {
+        let m = EnergyModel::calibrated();
+        let lo = m.instr_energy_j(InstructionKind::AccW2V, 0.7);
+        let mid = m.instr_energy_j(InstructionKind::AccW2V, 0.85);
+        let hi = m.instr_energy_j(InstructionKind::AccW2V, 1.2);
+        assert!(lo < mid && mid < hi);
+    }
+
+    #[test]
+    fn program_energy_sums_histogram() {
+        let m = EnergyModel::calibrated();
+        let mut h = BTreeMap::new();
+        h.insert(InstructionKind::AccW2V, 10u64);
+        h.insert(InstructionKind::SpikeCheck, 2u64);
+        let e = m.program_energy_j(&h, NOMINAL_VDD) * 1e12;
+        assert!((e - (10.0 * 1.0101 + 2.0 * 0.8197)).abs() < 0.05);
+    }
+
+    #[test]
+    fn delay_is_cycles_over_freq() {
+        let m = EnergyModel::calibrated();
+        assert_eq!(m.delay_s(200, crate::NOMINAL_FREQ_HZ), 1e-6);
+    }
+
+    #[test]
+    fn table1_gops_per_area() {
+        // 200 MHz / 0.089 mm² = 2.24 GOPS/mm² (Table I, point D column).
+        let m = EnergyModel::calibrated();
+        let g = m.gops_per_mm2(200e6, 0.089);
+        assert!((g - 2.247).abs() < 0.01);
+    }
+}

@@ -1,0 +1,181 @@
+//! Instruction definitions and encodings.
+
+use crate::bitcell::Parity;
+use std::fmt;
+
+/// Which fields the conditional write drivers actually drive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WriteMaskMode {
+    /// Unconditional write-back of all six fields.
+    All,
+    /// Only fields whose spike buffer is set (spiked neurons).
+    Spiked,
+}
+
+/// One single-cycle in-memory instruction.
+///
+/// Row addresses: `w_row` indexes W_MEM (0..128); `v_*`, `thr_row`,
+/// `reset_row`, `src_*`, `dst` index V_MEM (0..32). `parity` selects
+/// RWLo/RWLe and the staggered field alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Instruction {
+    /// `V[dst] ← V[src] + sext(W[w_row])` — the synaptic accumulate,
+    /// issued once per input spike per parity.
+    AccW2V {
+        w_row: usize,
+        v_src: usize,
+        v_dst: usize,
+        parity: Parity,
+    },
+    /// `V[dst] ← V[src_a] + V[src_b]`, optionally gated by the spike
+    /// buffers (RMP soft reset uses `Spiked`; LIF leak uses `All`).
+    AccV2V {
+        src_a: usize,
+        src_b: usize,
+        dst: usize,
+        parity: Parity,
+        mask: WriteMaskMode,
+    },
+    /// Compare `V[v_row]` against the threshold row (which stores −θ)
+    /// and latch the per-field comparator outputs into the spike
+    /// buffers. No write.
+    SpikeCheck {
+        v_row: usize,
+        thr_row: usize,
+        parity: Parity,
+    },
+    /// `V[dst] ← V[reset_row]` for spiked fields only (BLFA bypassed;
+    /// sensed reset value goes straight to the CWD).
+    ResetV {
+        reset_row: usize,
+        dst: usize,
+        parity: Parity,
+    },
+    /// Plain SRAM read of a V_MEM row — used by the coordinator to
+    /// drain output-layer potentials. Standard read, not a CIM op.
+    /// Each V_MEM row is dedicated to one parity's staggered alignment
+    /// ("stored in different rows"), so the parity tells the periphery
+    /// how to frame the fields.
+    ReadV { v_row: usize, parity: Parity },
+    /// Plain SRAM write of a V_MEM row (one parity's six values).
+    WriteV { v_row: usize, parity: Parity, values: [i64; 6] },
+    /// Plain SRAM write of a W_MEM row (all twelve weights).
+    WriteW { w_row: usize, weights: [i64; 12] },
+}
+
+/// Instruction kind — the unit of energy/latency accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum InstructionKind {
+    AccW2V,
+    AccV2V,
+    SpikeCheck,
+    ResetV,
+    ReadV,
+    WriteV,
+    WriteW,
+}
+
+impl InstructionKind {
+    /// All CIM instruction kinds (the ones in the paper's Shmoo/energy
+    /// tables).
+    pub const CIM: [InstructionKind; 4] = [
+        InstructionKind::AccW2V,
+        InstructionKind::AccV2V,
+        InstructionKind::SpikeCheck,
+        InstructionKind::ResetV,
+    ];
+
+    /// Stable display name (matches the paper's nomenclature).
+    pub fn name(&self) -> &'static str {
+        match self {
+            InstructionKind::AccW2V => "AccW2V",
+            InstructionKind::AccV2V => "AccV2V",
+            InstructionKind::SpikeCheck => "SpikeCheck",
+            InstructionKind::ResetV => "ResetV",
+            InstructionKind::ReadV => "ReadV",
+            InstructionKind::WriteV => "WriteV",
+            InstructionKind::WriteW => "WriteW",
+        }
+    }
+
+    /// Is this a compute-in-memory instruction (vs a plain SRAM access)?
+    pub fn is_cim(&self) -> bool {
+        matches!(
+            self,
+            InstructionKind::AccW2V
+                | InstructionKind::AccV2V
+                | InstructionKind::SpikeCheck
+                | InstructionKind::ResetV
+        )
+    }
+}
+
+impl fmt::Display for InstructionKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl Instruction {
+    /// The accounting kind of this instruction.
+    pub fn kind(&self) -> InstructionKind {
+        match self {
+            Instruction::AccW2V { .. } => InstructionKind::AccW2V,
+            Instruction::AccV2V { .. } => InstructionKind::AccV2V,
+            Instruction::SpikeCheck { .. } => InstructionKind::SpikeCheck,
+            Instruction::ResetV { .. } => InstructionKind::ResetV,
+            Instruction::ReadV { .. } => InstructionKind::ReadV,
+            Instruction::WriteV { .. } => InstructionKind::WriteV,
+            Instruction::WriteW { .. } => InstructionKind::WriteW,
+        }
+    }
+
+    /// The cycle parity of a CIM instruction (None for plain accesses).
+    pub fn parity(&self) -> Option<Parity> {
+        match self {
+            Instruction::AccW2V { parity, .. }
+            | Instruction::AccV2V { parity, .. }
+            | Instruction::SpikeCheck { parity, .. }
+            | Instruction::ResetV { parity, .. } => Some(*parity),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cim_classification() {
+        assert!(InstructionKind::AccW2V.is_cim());
+        assert!(InstructionKind::SpikeCheck.is_cim());
+        assert!(!InstructionKind::ReadV.is_cim());
+        assert!(!InstructionKind::WriteW.is_cim());
+        assert_eq!(InstructionKind::CIM.len(), 4);
+    }
+
+    #[test]
+    fn parity_accessor() {
+        let i = Instruction::SpikeCheck {
+            v_row: 1,
+            thr_row: 2,
+            parity: Parity::Even,
+        };
+        assert_eq!(i.parity(), Some(Parity::Even));
+        assert_eq!(
+            Instruction::ReadV {
+                v_row: 0,
+                parity: Parity::Odd
+            }
+            .parity(),
+            None
+        );
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(InstructionKind::AccV2V.to_string(), "AccV2V");
+        assert_eq!(InstructionKind::ResetV.to_string(), "ResetV");
+    }
+}

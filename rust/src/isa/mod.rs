@@ -1,0 +1,32 @@
+//! The in-memory SNN instruction set.
+//!
+//! Every CIM instruction is single-cycle and operates on a whole row
+//! (six values) at once. The instruction stream *is* the neuron model:
+//! IF, LIF and RMP neurons are different sequences of the same four
+//! instructions (Fig 5/6 of the paper).
+
+mod instruction;
+mod program;
+mod sequences;
+
+pub use instruction::{Instruction, InstructionKind, WriteMaskMode};
+pub use program::{Program, ProgramBuilder};
+pub use sequences::{neuron_sequence, NeuronConfigRows, NeuronType};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitcell::Parity;
+
+    #[test]
+    fn kind_of_every_instruction() {
+        let i = Instruction::AccW2V {
+            w_row: 0,
+            v_src: 0,
+            v_dst: 0,
+            parity: Parity::Odd,
+        };
+        assert_eq!(i.kind(), InstructionKind::AccW2V);
+        assert_eq!(i.kind().name(), "AccW2V");
+    }
+}

@@ -1,0 +1,139 @@
+//! Instruction streams and a builder for composing them.
+
+use super::{Instruction, InstructionKind};
+use std::collections::BTreeMap;
+
+/// An ordered instruction stream for one macro.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    instrs: Vec<Instruction>,
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_vec(instrs: Vec<Instruction>) -> Self {
+        Self { instrs }
+    }
+
+    #[inline]
+    pub fn push(&mut self, i: Instruction) {
+        self.instrs.push(i);
+    }
+
+    pub fn extend(&mut self, other: &Program) {
+        self.instrs.extend_from_slice(&other.instrs);
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Instruction> {
+        self.instrs.iter()
+    }
+
+    /// Instruction histogram by kind — the input to energy accounting.
+    pub fn histogram(&self) -> BTreeMap<InstructionKind, u64> {
+        let mut h = BTreeMap::new();
+        for i in &self.instrs {
+            *h.entry(i.kind()).or_insert(0u64) += 1;
+        }
+        h
+    }
+
+    /// Number of CIM cycles (each CIM instruction is one cycle).
+    pub fn cim_cycles(&self) -> u64 {
+        self.instrs.iter().filter(|i| i.kind().is_cim()).count() as u64
+    }
+}
+
+impl<'a> IntoIterator for &'a Program {
+    type Item = &'a Instruction;
+    type IntoIter = std::slice::Iter<'a, Instruction>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.instrs.iter()
+    }
+}
+
+/// Fluent builder used by the mapper/scheduler.
+#[derive(Clone, Debug, Default)]
+pub struct ProgramBuilder {
+    p: Program,
+}
+
+impl ProgramBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn instr(mut self, i: Instruction) -> Self {
+        self.p.push(i);
+        self
+    }
+
+    pub fn instrs(mut self, is: impl IntoIterator<Item = Instruction>) -> Self {
+        for i in is {
+            self.p.push(i);
+        }
+        self
+    }
+
+    pub fn build(self) -> Program {
+        self.p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitcell::Parity;
+
+    fn acc(w_row: usize) -> Instruction {
+        Instruction::AccW2V {
+            w_row,
+            v_src: 0,
+            v_dst: 0,
+            parity: Parity::Odd,
+        }
+    }
+
+    #[test]
+    fn histogram_counts_kinds() {
+        let p = ProgramBuilder::new()
+            .instr(acc(0))
+            .instr(acc(1))
+            .instr(Instruction::SpikeCheck {
+                v_row: 0,
+                thr_row: 1,
+                parity: Parity::Odd,
+            })
+            .instr(Instruction::ReadV {
+                v_row: 0,
+                parity: Parity::Odd,
+            })
+            .build();
+        let h = p.histogram();
+        assert_eq!(h[&InstructionKind::AccW2V], 2);
+        assert_eq!(h[&InstructionKind::SpikeCheck], 1);
+        assert_eq!(h[&InstructionKind::ReadV], 1);
+        assert_eq!(p.cim_cycles(), 3);
+        assert_eq!(p.len(), 4);
+    }
+
+    #[test]
+    fn extend_concatenates() {
+        let mut a = Program::from_vec(vec![acc(0)]);
+        let b = Program::from_vec(vec![acc(1), acc(2)]);
+        a.extend(&b);
+        assert_eq!(a.len(), 3);
+    }
+}

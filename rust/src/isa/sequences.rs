@@ -1,0 +1,205 @@
+//! Neuron functionality as instruction sequences (paper Fig 6).
+//!
+//! | Neuron | Sequence                                   |
+//! |--------|--------------------------------------------|
+//! | IF     | SpikeCheck; ResetV                          |
+//! | LIF    | AccV2V (−leak, all); SpikeCheck; ResetV     |
+//! | RMP    | SpikeCheck; AccV2V (−θ, spiked-only)        |
+
+use super::{Instruction, WriteMaskMode};
+use crate::bitcell::Parity;
+
+/// Supported neuron models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NeuronType {
+    /// Integrate-and-fire: hard reset to the reset row's value.
+    IF,
+    /// Leaky integrate-and-fire: subtractive leak each timestep, then
+    /// hard reset on spike.
+    LIF,
+    /// Residual membrane potential: soft reset — θ is subtracted from
+    /// spiking neurons, the residual is retained.
+    RMP,
+}
+
+impl NeuronType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NeuronType::IF => "IF",
+            NeuronType::LIF => "LIF",
+            NeuronType::RMP => "RMP",
+        }
+    }
+
+    /// CIM instructions per neuron update (per parity) — Fig 6's
+    /// sequence lengths.
+    pub fn instructions_per_update(&self) -> usize {
+        match self {
+            NeuronType::IF => 2,
+            NeuronType::LIF => 3,
+            NeuronType::RMP => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NeuronType> {
+        match s.to_ascii_lowercase().as_str() {
+            "if" => Some(NeuronType::IF),
+            "lif" => Some(NeuronType::LIF),
+            "rmp" => Some(NeuronType::RMP),
+            _ => None,
+        }
+    }
+}
+
+/// The V_MEM rows holding a mapped layer's constants for one parity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NeuronConfigRows {
+    /// Row storing −θ (negated threshold).
+    pub neg_threshold: usize,
+    /// Row storing the hard-reset value (usually 0).
+    pub reset: usize,
+    /// Row storing −leak (LIF only; ignored otherwise).
+    pub neg_leak: usize,
+}
+
+/// Emit the end-of-timestep neuron-update sequence for one V_MEM row of
+/// membrane potentials in one parity.
+pub fn neuron_sequence(
+    neuron: NeuronType,
+    v_row: usize,
+    rows: NeuronConfigRows,
+    parity: Parity,
+) -> Vec<Instruction> {
+    match neuron {
+        NeuronType::IF => vec![
+            Instruction::SpikeCheck {
+                v_row,
+                thr_row: rows.neg_threshold,
+                parity,
+            },
+            Instruction::ResetV {
+                reset_row: rows.reset,
+                dst: v_row,
+                parity,
+            },
+        ],
+        NeuronType::LIF => vec![
+            Instruction::AccV2V {
+                src_a: v_row,
+                src_b: rows.neg_leak,
+                dst: v_row,
+                parity,
+                mask: WriteMaskMode::All,
+            },
+            Instruction::SpikeCheck {
+                v_row,
+                thr_row: rows.neg_threshold,
+                parity,
+            },
+            Instruction::ResetV {
+                reset_row: rows.reset,
+                dst: v_row,
+                parity,
+            },
+        ],
+        NeuronType::RMP => vec![
+            Instruction::SpikeCheck {
+                v_row,
+                thr_row: rows.neg_threshold,
+                parity,
+            },
+            Instruction::AccV2V {
+                src_a: v_row,
+                src_b: rows.neg_threshold,
+                dst: v_row,
+                parity,
+                mask: WriteMaskMode::Spiked,
+            },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::InstructionKind;
+
+    const ROWS: NeuronConfigRows = NeuronConfigRows {
+        neg_threshold: 30,
+        reset: 29,
+        neg_leak: 28,
+    };
+
+    fn kinds(n: NeuronType) -> Vec<InstructionKind> {
+        neuron_sequence(n, 0, ROWS, Parity::Odd)
+            .iter()
+            .map(|i| i.kind())
+            .collect()
+    }
+
+    #[test]
+    fn if_sequence_matches_fig6() {
+        assert_eq!(
+            kinds(NeuronType::IF),
+            vec![InstructionKind::SpikeCheck, InstructionKind::ResetV]
+        );
+    }
+
+    #[test]
+    fn lif_sequence_matches_fig6() {
+        assert_eq!(
+            kinds(NeuronType::LIF),
+            vec![
+                InstructionKind::AccV2V,
+                InstructionKind::SpikeCheck,
+                InstructionKind::ResetV
+            ]
+        );
+    }
+
+    #[test]
+    fn rmp_sequence_matches_fig6() {
+        assert_eq!(
+            kinds(NeuronType::RMP),
+            vec![InstructionKind::SpikeCheck, InstructionKind::AccV2V]
+        );
+    }
+
+    #[test]
+    fn rmp_soft_reset_is_spike_gated_subtract_of_theta() {
+        let seq = neuron_sequence(NeuronType::RMP, 3, ROWS, Parity::Even);
+        match seq[1] {
+            Instruction::AccV2V {
+                src_a,
+                src_b,
+                dst,
+                mask,
+                ..
+            } => {
+                assert_eq!(src_a, 3);
+                assert_eq!(src_b, ROWS.neg_threshold);
+                assert_eq!(dst, 3);
+                assert_eq!(mask, WriteMaskMode::Spiked);
+            }
+            ref other => panic!("expected AccV2V, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sequence_lengths_match_instructions_per_update() {
+        for n in [NeuronType::IF, NeuronType::LIF, NeuronType::RMP] {
+            assert_eq!(
+                neuron_sequence(n, 0, ROWS, Parity::Odd).len(),
+                n.instructions_per_update()
+            );
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(NeuronType::parse("rmp"), Some(NeuronType::RMP));
+        assert_eq!(NeuronType::parse("IF"), Some(NeuronType::IF));
+        assert_eq!(NeuronType::parse("Lif"), Some(NeuronType::LIF));
+        assert_eq!(NeuronType::parse("x"), None);
+    }
+}

@@ -1,0 +1,58 @@
+//! IMPULSE — software reproduction of "IMPULSE: A 65nm Digital
+//! Compute-in-Memory Macro with Fused Weights and Membrane Potential for
+//! Spike-based Sequential Learning Tasks" (IEEE SSCL 2021,
+//! 10.1109/LSSC.2021.3092727).
+//!
+//! The crate is organized bottom-up:
+//!
+//! - [`bits`] — fixed-width two's-complement arithmetic and bit vectors.
+//! - [`bitcell`] — 10T-SRAM array simulation (dual-RWL NOR/NAND reads,
+//!   triple-row decoder, fused W_MEM/V_MEM geometry).
+//! - [`periph`] — reconfigurable column peripherals (SINV, BLFA, CMUX,
+//!   CWD, spike buffers) composing the in-array ripple-carry adders.
+//! - [`isa`] — the in-memory SNN instruction set and neuron sequences.
+//! - [`macro_sim`] — the IMPULSE macro: decoder + array + peripherals
+//!   executing instruction streams, with cycle/energy tracing.
+//! - [`neuron`] — functional golden neuron models (IF/LIF/RMP) with
+//!   hardware-exact 11-bit semantics.
+//! - [`mapper`] — FC/Conv layer mapping onto macros (staggered layout).
+//! - [`snn`] — network-level inference engine over mapped macros.
+//! - [`coordinator`] — multi-macro scheduler, spike routing, sparsity-
+//!   aware instruction issue, worker threads.
+//! - [`energy`] — silicon-calibrated power/energy/EDP, Shmoo, and area
+//!   models.
+//! - [`baselines`] — LSTM baseline, non-fused accelerator model, and the
+//!   Table I comparison data.
+//! - [`data`] — artifact (weights/datasets) binary format loaders and
+//!   synthetic dataset mirrors.
+//! - [`runtime`] — PJRT (XLA) client that loads the AOT-compiled JAX
+//!   graphs from `artifacts/*.hlo.txt` for cross-validation.
+//! - [`metrics`], [`config`], [`bench_harness`], [`proptest_lite`] —
+//!   supporting infrastructure (reporting, TOML-subset config, offline
+//!   bench/property-test harnesses).
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod bitcell;
+pub mod bits;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod isa;
+pub mod macro_sim;
+pub mod mapper;
+pub mod metrics;
+pub mod neuron;
+pub mod periph;
+pub mod proptest_lite;
+pub mod runtime;
+pub mod snn;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// The paper's nominal operating point (point D): 0.85 V, 200 MHz.
+pub const NOMINAL_VDD: f64 = 0.85;
+/// Nominal clock frequency in Hz (200 MHz).
+pub const NOMINAL_FREQ_HZ: f64 = 200.0e6;

@@ -1,0 +1,104 @@
+//! Macro configuration.
+
+/// How SpikeCheck turns the MSB column peripheral's outputs into the
+/// spike decision. See DESIGN.md §5, modelling choice M3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ComparatorMode {
+    /// Literal circuit reading of the paper ("checking the COUT from
+    /// [the] MSB column peripheral"): spike ⇔ unsigned carry-out of
+    /// `V + (−θ)`. Equals the signed `V ≥ θ` only for `V ≥ 0`.
+    MsbCout,
+    /// Signed comparison via the MSB *sum* (sign) bit: spike ⇔
+    /// `V − θ ≥ 0` under 11-bit wraparound. What the trained networks
+    /// assume; the default.
+    SignBit,
+}
+
+impl Default for ComparatorMode {
+    fn default() -> Self {
+        ComparatorMode::SignBit
+    }
+}
+
+/// Which execution engine runs the instruction stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Column-by-column peripheral simulation (reference).
+    BitLevel,
+    /// Word-level functional model (fast path; bit-identical).
+    Fast,
+    /// Run both and assert equality after every instruction
+    /// (differential testing / failure injection harness).
+    Lockstep,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::Fast
+    }
+}
+
+/// Configuration of one macro instance.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MacroConfig {
+    pub comparator: ComparatorMode,
+    pub engine: Engine,
+    /// Record a trace event per executed instruction.
+    pub trace: bool,
+}
+
+impl MacroConfig {
+    pub fn bit_level() -> Self {
+        Self {
+            engine: Engine::BitLevel,
+            ..Self::default()
+        }
+    }
+
+    pub fn fast() -> Self {
+        Self {
+            engine: Engine::Fast,
+            ..Self::default()
+        }
+    }
+
+    pub fn lockstep() -> Self {
+        Self {
+            engine: Engine::Lockstep,
+            ..Self::default()
+        }
+    }
+
+    pub fn with_comparator(mut self, c: ComparatorMode) -> Self {
+        self.comparator = c;
+        self
+    }
+
+    pub fn with_trace(mut self, t: bool) -> Self {
+        self.trace = t;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let c = MacroConfig::default();
+        assert_eq!(c.comparator, ComparatorMode::SignBit);
+        assert_eq!(c.engine, Engine::Fast);
+        assert!(!c.trace);
+    }
+
+    #[test]
+    fn builders() {
+        let c = MacroConfig::bit_level()
+            .with_comparator(ComparatorMode::MsbCout)
+            .with_trace(true);
+        assert_eq!(c.engine, Engine::BitLevel);
+        assert_eq!(c.comparator, ComparatorMode::MsbCout);
+        assert!(c.trace);
+    }
+}

@@ -1,0 +1,682 @@
+//! The IMPULSE macro facade and its two execution engines.
+
+use super::{ComparatorMode, Engine, MacroConfig, TraceEvent, Tracer};
+use crate::bitcell::{
+    encode_weight_row, BitArray, DualRead, FieldLayout, Parity, RowAddr, TripleRowDecoder,
+    COL_MASK, VALUES_PER_ROW, V_ROWS, W_ROWS,
+};
+use crate::bits::{wrap11, V_BITS};
+use crate::isa::{Instruction, InstructionKind, WriteMaskMode};
+use crate::periph::{ColumnAdder, ConditionalWriteDriver, SpikeBuffers, WriteGate};
+use anyhow::{bail, Result};
+
+/// Architectural effects of one executed instruction.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ExecOutput {
+    /// Values written back this cycle (post-write row content of the
+    /// destination's active fields), if the instruction wrote.
+    pub written: Option<[i64; 6]>,
+    /// Spike buffer bank contents after this cycle, if it latched them.
+    pub spikes: Option<[bool; 6]>,
+    /// Values read out (ReadV).
+    pub read: Option<[i64; 6]>,
+}
+
+/// Shared per-instruction compute: the comparator decision.
+#[inline]
+fn compare(mode: ComparatorMode, v: i64, neg_thr: i64) -> bool {
+    match mode {
+        ComparatorMode::SignBit => wrap11(v + neg_thr) >= 0,
+        ComparatorMode::MsbCout => {
+            let m = 1i64 << V_BITS;
+            let vu = (v + m) % m;
+            let tu = (neg_thr + m) % m;
+            vu + tu >= m
+        }
+    }
+}
+
+fn parity_ix(p: Parity) -> usize {
+    match p {
+        Parity::Odd => 0,
+        Parity::Even => 1,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bit-level engine
+// ---------------------------------------------------------------------
+
+/// Reference engine: simulates wordlines, bitlines, and every column
+/// peripheral.
+#[derive(Clone, Debug)]
+struct BitLevelEngine {
+    wmem: BitArray,
+    vmem: BitArray,
+    spikebuf: [SpikeBuffers; 2],
+    decoder: TripleRowDecoder,
+    comparator: ComparatorMode,
+}
+
+impl BitLevelEngine {
+    fn new(comparator: ComparatorMode) -> Self {
+        Self {
+            wmem: BitArray::new(W_ROWS),
+            vmem: BitArray::new(V_ROWS),
+            spikebuf: [SpikeBuffers::new(), SpikeBuffers::new()],
+            decoder: TripleRowDecoder,
+            comparator,
+        }
+    }
+
+    fn exec(&mut self, instr: &Instruction) -> Result<ExecOutput> {
+        match *instr {
+            Instruction::AccW2V {
+                w_row,
+                v_src,
+                v_dst,
+                parity,
+            } => {
+                self.decoder.decode(
+                    &[RowAddr::W(w_row), RowAddr::V(v_src)],
+                    Some(RowAddr::V(v_dst)),
+                    parity,
+                )?;
+                let l = FieldLayout::new(parity);
+                let sensed = DualRead::combine(
+                    self.wmem.read_masked(w_row, l.w_drive_mask()),
+                    self.vmem.read_masked(v_src, COL_MASK),
+                );
+                let out = ColumnAdder::for_acc_w2v(parity).propagate(&sensed);
+                let cwd = ConditionalWriteDriver::new(parity);
+                let mask = cwd.drive_mask(WriteGate::AllFields, &[false; 6]);
+                self.vmem.write_masked(v_dst, out.sum, mask);
+                let mut written = [0i64; 6];
+                for g in 0..VALUES_PER_ROW {
+                    written[g] = l.decode_value(self.vmem.row(v_dst), g);
+                }
+                Ok(ExecOutput {
+                    written: Some(written),
+                    ..Default::default()
+                })
+            }
+            Instruction::AccV2V {
+                src_a,
+                src_b,
+                dst,
+                parity,
+                mask,
+            } => {
+                self.decoder.decode(
+                    &[RowAddr::V(src_a), RowAddr::V(src_b)],
+                    Some(RowAddr::V(dst)),
+                    parity,
+                )?;
+                let l = FieldLayout::new(parity);
+                let sensed = DualRead::combine(
+                    self.vmem.read_masked(src_a, COL_MASK),
+                    self.vmem.read_masked(src_b, COL_MASK),
+                );
+                let out = ColumnAdder::for_v_plus_v(parity).propagate(&sensed);
+                let gate = match mask {
+                    WriteMaskMode::All => WriteGate::AllFields,
+                    WriteMaskMode::Spiked => WriteGate::SpikedFields,
+                };
+                let cwd = ConditionalWriteDriver::new(parity);
+                let wmask = cwd.drive_mask(gate, self.spikebuf[parity_ix(parity)].bits());
+                self.vmem.write_masked(dst, out.sum, wmask);
+                let mut written = [0i64; 6];
+                for g in 0..VALUES_PER_ROW {
+                    written[g] = l.decode_value(self.vmem.row(dst), g);
+                }
+                Ok(ExecOutput {
+                    written: Some(written),
+                    ..Default::default()
+                })
+            }
+            Instruction::SpikeCheck {
+                v_row,
+                thr_row,
+                parity,
+            } => {
+                self.decoder
+                    .decode(&[RowAddr::V(v_row), RowAddr::V(thr_row)], None, parity)?;
+                let sensed = DualRead::combine(
+                    self.vmem.read_masked(v_row, COL_MASK),
+                    self.vmem.read_masked(thr_row, COL_MASK),
+                );
+                let out = ColumnAdder::for_v_plus_v(parity).propagate(&sensed);
+                let mut spikes = [false; 6];
+                for g in 0..VALUES_PER_ROW {
+                    spikes[g] = match self.comparator {
+                        // sign bit 0 ⇒ V − θ ≥ 0 ⇒ spike
+                        ComparatorMode::SignBit => !out.fields[g].sign,
+                        ComparatorMode::MsbCout => out.fields[g].msb_cout,
+                    };
+                }
+                self.spikebuf[parity_ix(parity)].latch(spikes);
+                Ok(ExecOutput {
+                    spikes: Some(spikes),
+                    ..Default::default()
+                })
+            }
+            Instruction::ResetV {
+                reset_row,
+                dst,
+                parity,
+            } => {
+                self.decoder
+                    .decode(&[RowAddr::V(reset_row)], Some(RowAddr::V(dst)), parity)?;
+                // BLFA bypassed: the sensed reset value feeds the CWD.
+                let sensed = self.vmem.read_masked(reset_row, COL_MASK);
+                let cwd = ConditionalWriteDriver::new(parity);
+                let wmask =
+                    cwd.drive_mask(WriteGate::SpikedFields, self.spikebuf[parity_ix(parity)].bits());
+                self.vmem.write_masked(dst, sensed.or, wmask);
+                let l = FieldLayout::new(parity);
+                let mut written = [0i64; 6];
+                for g in 0..VALUES_PER_ROW {
+                    written[g] = l.decode_value(self.vmem.row(dst), g);
+                }
+                Ok(ExecOutput {
+                    written: Some(written),
+                    ..Default::default()
+                })
+            }
+            Instruction::ReadV { v_row, parity } => {
+                self.decoder.decode(&[RowAddr::V(v_row)], None, parity)?;
+                let l = FieldLayout::new(parity);
+                let mut read = [0i64; 6];
+                for g in 0..VALUES_PER_ROW {
+                    read[g] = l.decode_value(self.vmem.row(v_row), g);
+                }
+                Ok(ExecOutput {
+                    read: Some(read),
+                    ..Default::default()
+                })
+            }
+            Instruction::WriteV {
+                v_row,
+                parity,
+                values,
+            } => {
+                self.decoder
+                    .decode(&[], Some(RowAddr::V(v_row)), parity)?;
+                let l = FieldLayout::new(parity);
+                let encoded = l.encode_row(&values);
+                self.vmem.write_masked(v_row, encoded, l.all_fields_mask());
+                Ok(ExecOutput {
+                    written: Some(values),
+                    ..Default::default()
+                })
+            }
+            Instruction::WriteW { w_row, weights } => {
+                if w_row >= W_ROWS {
+                    bail!("W row {w_row} out of range");
+                }
+                self.wmem.set_row(w_row, encode_weight_row(&weights));
+                Ok(ExecOutput::default())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fast (word-level) engine
+// ---------------------------------------------------------------------
+
+/// Functional engine: same architectural state (packed rows), word
+/// arithmetic instead of per-column ripple. Weights additionally kept
+/// decoded (written rarely, read on every AccW2V).
+#[derive(Clone, Debug)]
+struct FastEngine {
+    /// Packed V_MEM rows — authoritative, identical format to silicon.
+    vmem: Vec<u128>,
+    /// Decoded weight cache, `w[row][j]`.
+    w: Vec<[i8; 12]>,
+    /// Packed W_MEM rows (kept for digest parity with the bit engine).
+    wmem_packed: Vec<u128>,
+    spikebuf: [SpikeBuffers; 2],
+    comparator: ComparatorMode,
+}
+
+/// Extract field `g` (parity-aligned) of a packed row as an i64 in
+/// [-1024, 1023]: low 5 bits | (top 6 bits << 5), sign-extended.
+#[inline]
+fn extract_field(row: u128, g: usize, parity: Parity) -> i64 {
+    let base = crate::bitcell::field_base(g, parity);
+    let f = ((row >> base) & 0xFFF) as u32;
+    let low = f & 0x1F;
+    let high = (f >> 6) & 0x3F;
+    let u = low | (high << 5); // 11-bit unsigned
+    ((u as i64) << 53) >> 53 // sign-extend from bit 10
+}
+
+/// Encode an 11-bit signed value into its parity-aligned field position.
+#[inline]
+fn insert_field(row: &mut u128, g: usize, parity: Parity, v: i64) {
+    let base = crate::bitcell::field_base(g, parity);
+    let u = (v as u64) & 0x7FF;
+    let f = (u & 0x1F) | ((u >> 5) << 6); // re-open the hole at bit 5
+    *row = (*row & !(0xFFFu128 << base)) | ((f as u128) << base);
+}
+
+impl FastEngine {
+    fn new(comparator: ComparatorMode) -> Self {
+        Self {
+            vmem: vec![0u128; V_ROWS],
+            w: vec![[0i8; 12]; W_ROWS],
+            wmem_packed: vec![0u128; W_ROWS],
+            spikebuf: [SpikeBuffers::new(), SpikeBuffers::new()],
+            comparator,
+        }
+    }
+
+    #[inline]
+    fn check_v(row: usize) -> Result<()> {
+        if row >= V_ROWS {
+            bail!("V row {row} out of range");
+        }
+        Ok(())
+    }
+
+    fn exec(&mut self, instr: &Instruction) -> Result<ExecOutput> {
+        match *instr {
+            Instruction::AccW2V {
+                w_row,
+                v_src,
+                v_dst,
+                parity,
+            } => {
+                if w_row >= W_ROWS {
+                    bail!("W row {w_row} out of range");
+                }
+                Self::check_v(v_src)?;
+                Self::check_v(v_dst)?;
+                let src = self.vmem[v_src];
+                let mut dst = self.vmem[v_dst];
+                let ws = &self.w[w_row];
+                let mut written = [0i64; 6];
+                for g in 0..VALUES_PER_ROW {
+                    let j = crate::bitcell::weight_index(g, parity);
+                    let v = wrap11(extract_field(src, g, parity) + ws[j] as i64);
+                    insert_field(&mut dst, g, parity, v);
+                    written[g] = v;
+                }
+                self.vmem[v_dst] = dst;
+                Ok(ExecOutput {
+                    written: Some(written),
+                    ..Default::default()
+                })
+            }
+            Instruction::AccV2V {
+                src_a,
+                src_b,
+                dst,
+                parity,
+                mask,
+            } => {
+                Self::check_v(src_a)?;
+                Self::check_v(src_b)?;
+                Self::check_v(dst)?;
+                if src_a == src_b {
+                    bail!("AccV2V with identical source rows");
+                }
+                let a = self.vmem[src_a];
+                let b = self.vmem[src_b];
+                let mut d = self.vmem[dst];
+                let spikes = *self.spikebuf[parity_ix(parity)].bits();
+                let mut written = [0i64; 6];
+                for g in 0..VALUES_PER_ROW {
+                    let gate = match mask {
+                        WriteMaskMode::All => true,
+                        WriteMaskMode::Spiked => spikes[g],
+                    };
+                    if gate {
+                        let v = wrap11(
+                            extract_field(a, g, parity) + extract_field(b, g, parity),
+                        );
+                        insert_field(&mut d, g, parity, v);
+                    }
+                    written[g] = extract_field(d, g, parity);
+                }
+                self.vmem[dst] = d;
+                Ok(ExecOutput {
+                    written: Some(written),
+                    ..Default::default()
+                })
+            }
+            Instruction::SpikeCheck {
+                v_row,
+                thr_row,
+                parity,
+            } => {
+                Self::check_v(v_row)?;
+                Self::check_v(thr_row)?;
+                if v_row == thr_row {
+                    bail!("SpikeCheck with v_row == thr_row");
+                }
+                let v = self.vmem[v_row];
+                let t = self.vmem[thr_row];
+                let mut spikes = [false; 6];
+                for g in 0..VALUES_PER_ROW {
+                    spikes[g] = compare(
+                        self.comparator,
+                        extract_field(v, g, parity),
+                        extract_field(t, g, parity),
+                    );
+                }
+                self.spikebuf[parity_ix(parity)].latch(spikes);
+                Ok(ExecOutput {
+                    spikes: Some(spikes),
+                    ..Default::default()
+                })
+            }
+            Instruction::ResetV {
+                reset_row,
+                dst,
+                parity,
+            } => {
+                Self::check_v(reset_row)?;
+                Self::check_v(dst)?;
+                let r = self.vmem[reset_row];
+                let mut d = self.vmem[dst];
+                let spikes = *self.spikebuf[parity_ix(parity)].bits();
+                let l = FieldLayout::new(parity);
+                for g in 0..VALUES_PER_ROW {
+                    if spikes[g] {
+                        let m = l.field_mask(g);
+                        d = (d & !m) | (r & m);
+                    }
+                }
+                self.vmem[dst] = d;
+                let mut written = [0i64; 6];
+                for g in 0..VALUES_PER_ROW {
+                    written[g] = extract_field(d, g, parity);
+                }
+                Ok(ExecOutput {
+                    written: Some(written),
+                    ..Default::default()
+                })
+            }
+            Instruction::ReadV { v_row, parity } => {
+                Self::check_v(v_row)?;
+                let row = self.vmem[v_row];
+                let mut read = [0i64; 6];
+                for g in 0..VALUES_PER_ROW {
+                    read[g] = extract_field(row, g, parity);
+                }
+                Ok(ExecOutput {
+                    read: Some(read),
+                    ..Default::default()
+                })
+            }
+            Instruction::WriteV {
+                v_row,
+                parity,
+                values,
+            } => {
+                Self::check_v(v_row)?;
+                let mut row = self.vmem[v_row];
+                for g in 0..VALUES_PER_ROW {
+                    assert!(
+                        crate::bits::fits(values[g], V_BITS),
+                        "WriteV value {} out of 11-bit range",
+                        values[g]
+                    );
+                    insert_field(&mut row, g, parity, values[g]);
+                }
+                self.vmem[v_row] = row;
+                Ok(ExecOutput {
+                    written: Some(values),
+                    ..Default::default()
+                })
+            }
+            Instruction::WriteW { w_row, weights } => {
+                if w_row >= W_ROWS {
+                    bail!("W row {w_row} out of range");
+                }
+                for (j, &w) in weights.iter().enumerate() {
+                    assert!(
+                        crate::bits::fits(w, crate::bits::W_BITS),
+                        "weight {w} out of 6-bit range"
+                    );
+                    self.w[w_row][j] = w as i8;
+                }
+                self.wmem_packed[w_row] = encode_weight_row(&weights);
+                Ok(ExecOutput::default())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Facade
+// ---------------------------------------------------------------------
+
+/// One IMPULSE macro instance (128×78 W_MEM + 32×78 V_MEM + periphery).
+#[derive(Clone, Debug)]
+pub struct ImpulseMacro {
+    config: MacroConfig,
+    bit: Option<BitLevelEngine>,
+    fast: Option<FastEngine>,
+    cycle: u64,
+    counts: [u64; 7],
+    tracer: Tracer,
+}
+
+impl ImpulseMacro {
+    pub fn new(config: MacroConfig) -> Self {
+        let (bit, fast) = match config.engine {
+            Engine::BitLevel => (Some(BitLevelEngine::new(config.comparator)), None),
+            Engine::Fast => (None, Some(FastEngine::new(config.comparator))),
+            Engine::Lockstep => (
+                Some(BitLevelEngine::new(config.comparator)),
+                Some(FastEngine::new(config.comparator)),
+            ),
+        };
+        Self {
+            config,
+            bit,
+            fast,
+            cycle: 0,
+            counts: [0; 7],
+            tracer: Tracer::default(),
+        }
+    }
+
+    /// Execute one instruction; returns its architectural effects.
+    pub fn execute(&mut self, instr: &Instruction) -> Result<ExecOutput> {
+        let out = match (&mut self.bit, &mut self.fast) {
+            (Some(b), None) => b.exec(instr)?,
+            (None, Some(f)) => f.exec(instr)?,
+            (Some(b), Some(f)) => {
+                let ob = b.exec(instr)?;
+                let of = f.exec(instr)?;
+                if ob != of {
+                    bail!(
+                        "engine divergence on {instr:?}: bit-level {ob:?} vs fast {of:?}"
+                    );
+                }
+                // Compare V_MEM state digests.
+                for r in 0..V_ROWS {
+                    if b.vmem.row(r) != f.vmem[r] {
+                        bail!(
+                            "V_MEM divergence at row {r} after {instr:?}: \
+                             bit={:#x} fast={:#x}",
+                            b.vmem.row(r),
+                            f.vmem[r]
+                        );
+                    }
+                }
+                ob
+            }
+            (None, None) => unreachable!("no engine configured"),
+        };
+        let k = instr.kind();
+        self.counts[kind_ix(k)] += 1;
+        self.cycle += 1;
+        if self.config.trace {
+            self.tracer.record(TraceEvent {
+                cycle: self.cycle,
+                kind: k,
+                parity: instr.parity(),
+                written: out.written,
+                spikes: out.spikes,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Run a whole program, returning the last output.
+    pub fn run(&mut self, program: &crate::isa::Program) -> Result<ExecOutput> {
+        let mut last = ExecOutput::default();
+        for i in program {
+            last = self.execute(i)?;
+        }
+        Ok(last)
+    }
+
+    /// Batched AccW2V: issue one `AccW2V {w_row, v_src: v_row, v_dst:
+    /// v_row, parity}` per entry of `w_rows`, semantically identical to
+    /// the per-instruction loop (mod-2048 accumulation commutes with
+    /// wrapping) but decoding/encoding the V-row fields once.
+    ///
+    /// This is the coordinator's hot path (one call per spiking-input
+    /// burst per tile per timestep); the per-instruction cycle/energy
+    /// accounting is preserved exactly. Falls back to the instruction
+    /// loop on the bit-level/lockstep engines and when tracing.
+    pub fn acc_w2v_batch(
+        &mut self,
+        w_rows: &[usize],
+        v_row: usize,
+        parity: Parity,
+    ) -> Result<()> {
+        let fast_only = self.bit.is_none() && !self.config.trace;
+        if !fast_only {
+            for &w_row in w_rows {
+                self.execute(&Instruction::AccW2V {
+                    w_row,
+                    v_src: v_row,
+                    v_dst: v_row,
+                    parity,
+                })?;
+            }
+            return Ok(());
+        }
+        let f = self.fast.as_mut().expect("fast engine");
+        if v_row >= V_ROWS {
+            bail!("V row {v_row} out of range");
+        }
+        let mut acc = [0i64; VALUES_PER_ROW];
+        for &w_row in w_rows {
+            if w_row >= W_ROWS {
+                bail!("W row {w_row} out of range");
+            }
+            let ws = &f.w[w_row];
+            for (g, a) in acc.iter_mut().enumerate() {
+                *a += ws[crate::bitcell::weight_index(g, parity)] as i64;
+            }
+        }
+        let mut row = f.vmem[v_row];
+        for (g, &a) in acc.iter().enumerate() {
+            let v = wrap11(extract_field(row, g, parity) + a);
+            insert_field(&mut row, g, parity, v);
+        }
+        f.vmem[v_row] = row;
+        self.counts[kind_ix(InstructionKind::AccW2V)] += w_rows.len() as u64;
+        self.cycle += w_rows.len() as u64;
+        Ok(())
+    }
+
+    // ---- convenience accessors -------------------------------------
+
+    /// Program all twelve weights of a W_MEM row.
+    pub fn write_weights(&mut self, w_row: usize, weights: &[i64; 12]) -> Result<()> {
+        self.execute(&Instruction::WriteW {
+            w_row,
+            weights: *weights,
+        })
+        .map(|_| ())
+    }
+
+    /// Program six values of a V_MEM row in the given parity alignment.
+    pub fn write_v(&mut self, v_row: usize, parity: Parity, values: &[i64; 6]) -> Result<()> {
+        self.execute(&Instruction::WriteV {
+            v_row,
+            parity,
+            values: *values,
+        })
+        .map(|_| ())
+    }
+
+    /// Read six values of a V_MEM row (does not count as a CIM cycle
+    /// in the paper's accounting; still counted as ReadV).
+    pub fn read_v(&mut self, v_row: usize, parity: Parity) -> Result<[i64; 6]> {
+        Ok(self
+            .execute(&Instruction::ReadV { v_row, parity })?
+            .read
+            .expect("ReadV returns values"))
+    }
+
+    /// Current spike-buffer bank for a parity.
+    pub fn spikes(&self, parity: Parity) -> [bool; 6] {
+        let ix = parity_ix(parity);
+        match (&self.bit, &self.fast) {
+            (Some(b), _) => *b.spikebuf[ix].bits(),
+            (None, Some(f)) => *f.spikebuf[ix].bits(),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Executed-cycle count.
+    pub fn cycles(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Instruction histogram (indexable by [`InstructionKind`]).
+    pub fn counts(&self) -> std::collections::BTreeMap<InstructionKind, u64> {
+        ALL_KINDS
+            .iter()
+            .zip(self.counts.iter())
+            .filter(|(_, &c)| c > 0)
+            .map(|(k, &c)| (*k, c))
+            .collect()
+    }
+
+    /// Count for a single kind.
+    pub fn count_of(&self, k: InstructionKind) -> u64 {
+        self.counts[kind_ix(k)]
+    }
+
+    /// Reset instruction counters and cycle clock (state preserved).
+    pub fn reset_counters(&mut self) {
+        self.counts = [0; 7];
+        self.cycle = 0;
+        self.tracer.clear();
+    }
+
+    /// Recorded trace (empty unless `config.trace`).
+    pub fn trace(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// The macro configuration.
+    pub fn config(&self) -> &MacroConfig {
+        &self.config
+    }
+}
+
+const ALL_KINDS: [InstructionKind; 7] = [
+    InstructionKind::AccW2V,
+    InstructionKind::AccV2V,
+    InstructionKind::SpikeCheck,
+    InstructionKind::ResetV,
+    InstructionKind::ReadV,
+    InstructionKind::WriteV,
+    InstructionKind::WriteW,
+];
+
+fn kind_ix(k: InstructionKind) -> usize {
+    ALL_KINDS.iter().position(|&x| x == k).unwrap()
+}

@@ -1,0 +1,24 @@
+//! The IMPULSE macro: decoder + fused array + column peripherals
+//! executing in-memory instruction streams.
+//!
+//! Two execution engines share the same architectural state and must be
+//! bit-identical (enforced by differential tests and a `Lockstep`
+//! mode):
+//!
+//! - [`Engine::BitLevel`] — drives the triple-row decoder, senses
+//!   bitlines, ripples carries through each column peripheral exactly
+//!   like the silicon. The reference model.
+//! - [`Engine::Fast`] — word-level functional model (decode → wrap11
+//!   arithmetic → encode). ~40× faster; what the coordinator uses for
+//!   network-scale runs.
+
+mod config;
+mod impulse;
+mod trace;
+
+pub use config::{ComparatorMode, Engine, MacroConfig};
+pub use impulse::{ExecOutput, ImpulseMacro};
+pub use trace::{TraceEvent, Tracer};
+
+#[cfg(test)]
+mod tests;

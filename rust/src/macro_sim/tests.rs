@@ -1,0 +1,430 @@
+//! Differential and behavioural tests of the macro.
+
+use super::*;
+use crate::bitcell::Parity;
+use crate::bits::{wrap11, XorShiftRng};
+use crate::isa::{Instruction, WriteMaskMode};
+
+fn rand_weights(rng: &mut XorShiftRng) -> [i64; 12] {
+    let mut w = [0i64; 12];
+    for x in w.iter_mut() {
+        *x = rng.gen_i64(-32, 31);
+    }
+    w
+}
+
+fn rand_values(rng: &mut XorShiftRng) -> [i64; 6] {
+    let mut v = [0i64; 6];
+    for x in v.iter_mut() {
+        *x = rng.gen_i64(-1024, 1023);
+    }
+    v
+}
+
+fn rand_parity(rng: &mut XorShiftRng) -> Parity {
+    if rng.gen_bool(0.5) {
+        Parity::Odd
+    } else {
+        Parity::Even
+    }
+}
+
+/// Drive a long random CIM instruction stream through the Lockstep
+/// engine: any bit-level vs fast divergence fails inside execute().
+#[test]
+fn engines_agree_on_random_streams() {
+    let mut rng = XorShiftRng::new(0xD1FF);
+    let mut m = ImpulseMacro::new(MacroConfig::lockstep());
+    // Program random weights and V rows.
+    for r in 0..16 {
+        m.write_weights(r, &rand_weights(&mut rng)).unwrap();
+    }
+    for r in 0..8 {
+        let p = if r % 2 == 0 { Parity::Odd } else { Parity::Even };
+        m.write_v(r, p, &rand_values(&mut rng)).unwrap();
+    }
+    for step in 0..2000 {
+        let parity = if rng.gen_bool(0.5) { Parity::Odd } else { Parity::Even };
+        // Keep rows parity-consistent: even rows odd-aligned, odd rows
+        // even-aligned (as the mapper does).
+        let vrow = |rng: &mut XorShiftRng, parity: Parity| -> usize {
+            let base = rng.gen_range(4) as usize * 2;
+            match parity {
+                Parity::Odd => base,
+                Parity::Even => base + 1,
+            }
+        };
+        let choice = rng.gen_range(4);
+        let instr = match choice {
+            0 => Instruction::AccW2V {
+                w_row: rng.gen_range(16) as usize,
+                v_src: vrow(&mut rng, parity),
+                v_dst: vrow(&mut rng, parity),
+                parity,
+            },
+            1 => {
+                let a = vrow(&mut rng, parity);
+                let mut b = vrow(&mut rng, parity);
+                if a == b {
+                    b = if a >= 2 { a - 2 } else { a + 2 };
+                }
+                Instruction::AccV2V {
+                    src_a: a,
+                    src_b: b,
+                    dst: vrow(&mut rng, parity),
+                    parity,
+                    mask: if rng.gen_bool(0.5) {
+                        WriteMaskMode::All
+                    } else {
+                        WriteMaskMode::Spiked
+                    },
+                }
+            }
+            2 => {
+                let a = vrow(&mut rng, parity);
+                let mut b = vrow(&mut rng, parity);
+                if a == b {
+                    b = if a >= 2 { a - 2 } else { a + 2 };
+                }
+                Instruction::SpikeCheck {
+                    v_row: a,
+                    thr_row: b,
+                    parity,
+                }
+            }
+            _ => Instruction::ResetV {
+                reset_row: vrow(&mut rng, parity),
+                dst: vrow(&mut rng, parity),
+                parity,
+            },
+        };
+        m.execute(&instr)
+            .unwrap_or_else(|e| panic!("step {step}: {e}"));
+    }
+    assert_eq!(m.cycles(), 2000 + 16 + 8);
+}
+
+#[test]
+fn acc_w2v_accumulates_weights() {
+    for engine in [MacroConfig::bit_level(), MacroConfig::fast()] {
+        let mut m = ImpulseMacro::new(engine);
+        let weights: [i64; 12] = [1, -2, 3, -4, 5, -6, 7, -8, 9, -10, 11, -12];
+        m.write_weights(0, &weights).unwrap();
+        m.write_v(0, Parity::Odd, &[100, 200, 300, 400, 500, 600]).unwrap();
+        m.write_v(1, Parity::Even, &[-100, -200, -300, -400, -500, -600]).unwrap();
+
+        let out = m
+            .execute(&Instruction::AccW2V {
+                w_row: 0,
+                v_src: 0,
+                v_dst: 0,
+                parity: Parity::Odd,
+            })
+            .unwrap();
+        // odd parity accumulates even-indexed weights 1,3,5,7,9,11
+        assert_eq!(out.written.unwrap(), [101, 203, 305, 407, 509, 611]);
+
+        let out = m
+            .execute(&Instruction::AccW2V {
+                w_row: 0,
+                v_src: 1,
+                v_dst: 1,
+                parity: Parity::Even,
+            })
+            .unwrap();
+        // even parity accumulates odd-indexed weights -2,-4,-6,-8,-10,-12
+        assert_eq!(out.written.unwrap(), [-102, -204, -306, -408, -510, -612]);
+    }
+}
+
+#[test]
+fn spike_check_and_reset_implements_if_neuron() {
+    for cfg in [MacroConfig::bit_level(), MacroConfig::fast()] {
+        let mut m = ImpulseMacro::new(cfg);
+        let theta = 50i64;
+        m.write_v(0, Parity::Odd, &[60, 49, 50, -10, 1000, -1000]).unwrap();
+        m.write_v(1, Parity::Odd, &[-theta; 6]).unwrap(); // −θ row
+        m.write_v(2, Parity::Odd, &[0; 6]).unwrap(); // reset row
+
+        let out = m
+            .execute(&Instruction::SpikeCheck {
+                v_row: 0,
+                thr_row: 1,
+                parity: Parity::Odd,
+            })
+            .unwrap();
+        // Field 5 (V = −1000): V − θ = −1050 underflows the 11-bit adder
+        // and wraps positive → the hardware *does* spike. Trained
+        // networks keep V away from the rails; the artifact is real.
+        assert_eq!(
+            out.spikes.unwrap(),
+            [true, false, true, false, true, true]
+        );
+
+        let out = m
+            .execute(&Instruction::ResetV {
+                reset_row: 2,
+                dst: 0,
+                parity: Parity::Odd,
+            })
+            .unwrap();
+        // spiked fields reset to 0, others keep their potential
+        assert_eq!(out.written.unwrap(), [0, 49, 0, -10, 0, 0]);
+    }
+}
+
+#[test]
+fn rmp_soft_reset_keeps_residual() {
+    for cfg in [MacroConfig::bit_level(), MacroConfig::fast()] {
+        let mut m = ImpulseMacro::new(cfg);
+        let theta = 100i64;
+        m.write_v(0, Parity::Odd, &[150, 99, 100, 730, -5, 1023]).unwrap();
+        m.write_v(1, Parity::Odd, &[-theta; 6]).unwrap();
+
+        m.execute(&Instruction::SpikeCheck {
+            v_row: 0,
+            thr_row: 1,
+            parity: Parity::Odd,
+        })
+        .unwrap();
+        let out = m
+            .execute(&Instruction::AccV2V {
+                src_a: 0,
+                src_b: 1,
+                dst: 0,
+                parity: Parity::Odd,
+                mask: WriteMaskMode::Spiked,
+            })
+            .unwrap();
+        // spiking neurons subtract θ; non-spiking unchanged
+        assert_eq!(out.written.unwrap(), [50, 99, 0, 630, -5, 923]);
+    }
+}
+
+#[test]
+fn lif_leak_applies_to_all_fields() {
+    for cfg in [MacroConfig::bit_level(), MacroConfig::fast()] {
+        let mut m = ImpulseMacro::new(cfg);
+        m.write_v(0, Parity::Even, &[10, 0, -10, 500, -500, 3]).unwrap();
+        m.write_v(1, Parity::Even, &[-2; 6]).unwrap(); // −leak
+        let out = m
+            .execute(&Instruction::AccV2V {
+                src_a: 0,
+                src_b: 1,
+                dst: 0,
+                parity: Parity::Even,
+                mask: WriteMaskMode::All,
+            })
+            .unwrap();
+        assert_eq!(out.written.unwrap(), [8, -2, -12, 498, -502, 1]);
+    }
+}
+
+#[test]
+fn vmem_wraps_at_11_bits() {
+    for cfg in [MacroConfig::bit_level(), MacroConfig::fast()] {
+        let mut m = ImpulseMacro::new(cfg);
+        m.write_weights(0, &[31; 12]).unwrap();
+        m.write_v(0, Parity::Odd, &[1020; 6]).unwrap();
+        let out = m
+            .execute(&Instruction::AccW2V {
+                w_row: 0,
+                v_src: 0,
+                v_dst: 0,
+                parity: Parity::Odd,
+            })
+            .unwrap();
+        assert_eq!(out.written.unwrap(), [wrap11(1051); 6]);
+        assert_eq!(wrap11(1051), -997);
+    }
+}
+
+#[test]
+fn comparator_modes_differ_on_negative_v() {
+    // MsbCout (the literal circuit) spikes on negative V with positive θ
+    // (unsigned wrap); SignBit does not. Documents modelling choice M3.
+    for (mode, expect) in [
+        (ComparatorMode::SignBit, false),
+        (ComparatorMode::MsbCout, true),
+    ] {
+        let mut m = ImpulseMacro::new(MacroConfig::bit_level().with_comparator(mode));
+        m.write_v(0, Parity::Odd, &[-1; 6]).unwrap();
+        m.write_v(1, Parity::Odd, &[-5; 6]).unwrap(); // θ = 5
+        let out = m
+            .execute(&Instruction::SpikeCheck {
+                v_row: 0,
+                thr_row: 1,
+                parity: Parity::Odd,
+            })
+            .unwrap();
+        assert_eq!(out.spikes.unwrap(), [expect; 6], "{mode:?}");
+    }
+}
+
+#[test]
+fn comparator_modes_agree_on_nonnegative_v() {
+    let mut rng = XorShiftRng::new(77);
+    for _ in 0..200 {
+        let v = rng.gen_i64(0, 1023);
+        let theta = rng.gen_i64(1, 512);
+        let mut a = ImpulseMacro::new(
+            MacroConfig::fast().with_comparator(ComparatorMode::SignBit),
+        );
+        let mut b = ImpulseMacro::new(
+            MacroConfig::fast().with_comparator(ComparatorMode::MsbCout),
+        );
+        for m in [&mut a, &mut b] {
+            m.write_v(0, Parity::Odd, &[v; 6]).unwrap();
+            m.write_v(1, Parity::Odd, &[-theta; 6]).unwrap();
+            m.execute(&Instruction::SpikeCheck {
+                v_row: 0,
+                thr_row: 1,
+                parity: Parity::Odd,
+            })
+            .unwrap();
+        }
+        assert_eq!(
+            a.spikes(Parity::Odd),
+            b.spikes(Parity::Odd),
+            "v={v} theta={theta}"
+        );
+    }
+}
+
+#[test]
+fn odd_and_even_rows_are_independent() {
+    // Writing an even-aligned row must not disturb odd-aligned values
+    // in a different row, and CIM ops only touch their parity's fields.
+    let mut m = ImpulseMacro::new(MacroConfig::lockstep());
+    m.write_v(0, Parity::Odd, &[11, 22, 33, 44, 55, 66]).unwrap();
+    m.write_v(1, Parity::Even, &[-11, -22, -33, -44, -55, -66]).unwrap();
+    m.write_weights(0, &[5; 12]).unwrap();
+    m.execute(&Instruction::AccW2V {
+        w_row: 0,
+        v_src: 1,
+        v_dst: 1,
+        parity: Parity::Even,
+    })
+    .unwrap();
+    assert_eq!(m.read_v(0, Parity::Odd).unwrap(), [11, 22, 33, 44, 55, 66]);
+    assert_eq!(
+        m.read_v(1, Parity::Even).unwrap(),
+        [-6, -17, -28, -39, -50, -61]
+    );
+}
+
+#[test]
+fn counters_and_trace() {
+    let mut m = ImpulseMacro::new(MacroConfig::fast().with_trace(true));
+    m.write_v(0, Parity::Odd, &[0; 6]).unwrap();
+    m.write_v(1, Parity::Odd, &[-1; 6]).unwrap();
+    m.write_weights(0, &[1; 12]).unwrap();
+    for _ in 0..5 {
+        m.execute(&Instruction::AccW2V {
+            w_row: 0,
+            v_src: 0,
+            v_dst: 0,
+            parity: Parity::Odd,
+        })
+        .unwrap();
+    }
+    m.execute(&Instruction::SpikeCheck {
+        v_row: 0,
+        thr_row: 1,
+        parity: Parity::Odd,
+    })
+    .unwrap();
+    assert_eq!(m.count_of(crate::isa::InstructionKind::AccW2V), 5);
+    assert_eq!(m.count_of(crate::isa::InstructionKind::SpikeCheck), 1);
+    assert_eq!(m.trace().len(), 9);
+    m.reset_counters();
+    assert_eq!(m.cycles(), 0);
+    assert_eq!(m.trace().len(), 0);
+}
+
+#[test]
+fn out_of_range_rows_error() {
+    let mut m = ImpulseMacro::new(MacroConfig::fast());
+    assert!(m
+        .execute(&Instruction::AccW2V {
+            w_row: 128,
+            v_src: 0,
+            v_dst: 0,
+            parity: Parity::Odd,
+        })
+        .is_err());
+    assert!(m
+        .execute(&Instruction::ReadV {
+            v_row: 32,
+            parity: Parity::Odd
+        })
+        .is_err());
+    let mut b = ImpulseMacro::new(MacroConfig::bit_level());
+    assert!(b
+        .execute(&Instruction::SpikeCheck {
+            v_row: 0,
+            thr_row: 0,
+            parity: Parity::Odd,
+        })
+        .is_err());
+}
+
+/// Sparsity hook: no spikes ⇒ no AccW2V issued ⇒ V unchanged. (The
+/// scheduler-level property; here just the macro-side invariant that
+/// executing zero instructions costs zero cycles.)
+#[test]
+fn idle_macro_burns_no_cycles() {
+    let m = ImpulseMacro::new(MacroConfig::fast());
+    assert_eq!(m.cycles(), 0);
+    assert!(m.counts().is_empty());
+}
+
+/// The batched AccW2V hot path must be bit-identical to the
+/// per-instruction loop (including counters), for random bursts.
+#[test]
+fn acc_w2v_batch_matches_instruction_loop() {
+    let mut rng = XorShiftRng::new(0xBA7C);
+    for _ in 0..100 {
+        let mut fast = ImpulseMacro::new(MacroConfig::fast());
+        let mut reference = ImpulseMacro::new(MacroConfig::bit_level());
+        for r in 0..32 {
+            let w = rand_weights(&mut rng);
+            fast.write_weights(r, &w).unwrap();
+            reference.write_weights(r, &w).unwrap();
+        }
+        let parity = rand_parity(&mut rng);
+        let v0 = rand_values(&mut rng);
+        fast.write_v(0, parity, &v0).unwrap();
+        reference.write_v(0, parity, &v0).unwrap();
+        let burst: Vec<usize> = (0..rng.gen_range(64) as usize)
+            .map(|_| rng.gen_range(32) as usize)
+            .collect();
+        fast.acc_w2v_batch(&burst, 0, parity).unwrap();
+        reference.acc_w2v_batch(&burst, 0, parity).unwrap(); // falls back to loop
+        assert_eq!(
+            fast.read_v(0, parity).unwrap(),
+            reference.read_v(0, parity).unwrap(),
+            "burst {burst:?}"
+        );
+        // accounting identical
+        assert_eq!(
+            fast.count_of(crate::isa::InstructionKind::AccW2V),
+            burst.len() as u64
+        );
+        assert_eq!(
+            fast.count_of(crate::isa::InstructionKind::AccW2V),
+            reference.count_of(crate::isa::InstructionKind::AccW2V)
+        );
+    }
+}
+
+/// Empty burst: no instructions, no cycles, V untouched.
+#[test]
+fn acc_w2v_batch_empty_is_free() {
+    let mut m = ImpulseMacro::new(MacroConfig::fast());
+    m.write_v(0, Parity::Odd, &[7; 6]).unwrap();
+    let c0 = m.cycles();
+    m.acc_w2v_batch(&[], 0, Parity::Odd).unwrap();
+    assert_eq!(m.cycles(), c0);
+    assert_eq!(m.read_v(0, Parity::Odd).unwrap(), [7; 6]);
+}

@@ -1,0 +1,98 @@
+//! Instruction-level tracing.
+
+use crate::bitcell::Parity;
+use crate::isa::InstructionKind;
+
+/// One executed instruction's record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub cycle: u64,
+    pub kind: InstructionKind,
+    pub parity: Option<Parity>,
+    /// Values written back this cycle (per field), if any.
+    pub written: Option<[i64; 6]>,
+    /// Spike buffer contents after this cycle (the active parity bank).
+    pub spikes: Option<[bool; 6]>,
+}
+
+/// Bounded trace recorder (drops oldest beyond `capacity`).
+#[derive(Clone, Debug)]
+pub struct Tracer {
+    events: std::collections::VecDeque<TraceEvent>,
+    capacity: usize,
+    dropped: u64,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new(1 << 16)
+    }
+}
+
+impl Tracer {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            events: std::collections::VecDeque::with_capacity(capacity.min(1024)),
+            capacity,
+            dropped: 0,
+        }
+    }
+
+    pub fn record(&mut self, e: TraceEvent) {
+        if self.events.len() == self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(e);
+    }
+
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn clear(&mut self) {
+        self.events.clear();
+        self.dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cycle: u64) -> TraceEvent {
+        TraceEvent {
+            cycle,
+            kind: InstructionKind::AccW2V,
+            parity: Some(Parity::Odd),
+            written: None,
+            spikes: None,
+        }
+    }
+
+    #[test]
+    fn bounded_with_drop_count() {
+        let mut t = Tracer::new(3);
+        for c in 0..5 {
+            t.record(ev(c));
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dropped(), 2);
+        let cycles: Vec<u64> = t.events().map(|e| e.cycle).collect();
+        assert_eq!(cycles, vec![2, 3, 4]);
+        t.clear();
+        assert!(t.is_empty());
+    }
+}

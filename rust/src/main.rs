@@ -1,0 +1,74 @@
+//! `impulse` — the Layer-3 coordinator binary.
+//!
+//! Self-contained after `make artifacts`: loads the AOT-compiled model
+//! bundle and runs inference, reports, sweeps, and a line-oriented
+//! serve mode, all on the macro simulator. Python is never on this
+//! path.
+//!
+//! Subcommands:
+//!   report   --fig {2|6|7|8|9a|11b} | --table 1   regenerate paper artifacts
+//!   infer    --text "w1 w2 …" | --sample N        classify via the macro pool
+//!   eval     [--max N] [--xla-check]              full test-set evaluation
+//!   serve    [--workers N]                        stdin/stdout request loop
+//!   shmoo                                         print the Fig 8 grid
+//!   sweep    [--neuron rmp|if|lif]                EDP vs sparsity (Fig 11b)
+//!   info                                          artifact + model summary
+
+mod cli;
+
+use impulse::Result;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { &[] } else { &args[1..] };
+    match cmd {
+        "report" => cli::report::run(rest),
+        "infer" => cli::infer::run(rest),
+        "eval" => cli::eval::run(rest),
+        "serve" => cli::serve::run(rest),
+        "shmoo" => cli::report::shmoo(),
+        "sweep" => cli::report::sweep(rest),
+        "trace-vmem" => cli::infer::trace_vmem(rest),
+        "info" => cli::info::run(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print!("{}", HELP);
+            std::process::exit(2);
+        }
+    }
+}
+
+const HELP: &str = r#"impulse — IMPULSE CIM-macro SNN coordinator (SSCL'21 reproduction)
+
+USAGE:
+    impulse <COMMAND> [OPTIONS]
+
+COMMANDS:
+    report --fig {2|6|7|8|9a|11b}   regenerate a paper figure's data
+    report --table 1                regenerate Table I
+    infer --sample N                classify test review N
+    infer --words "id id id"        classify a word-id sequence
+    eval [--max N] [--xla-check]    evaluate the test set on the macro pool
+    serve [--workers N]             line-oriented inference server (stdin)
+    shmoo                           print the Fig 8 Shmoo grid
+    sweep [--neuron rmp|if|lif]     EDP vs sparsity sweep (Fig 11b)
+    trace-vmem [--sample N]         Fig 10: output-neuron V_MEM trajectory
+    info                            artifact bundle + model summary
+    help                            this message
+
+OPTIONS (common):
+    --config FILE                   TOML run config (see configs/)
+    --vdd V --freq-mhz F            operating point for energy reports
+"#;

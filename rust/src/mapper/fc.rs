@@ -1,0 +1,248 @@
+//! Fully-connected layer mapping.
+
+use super::MapError;
+use crate::bitcell::{Parity, V_ROWS, W_ROWS, WEIGHTS_PER_ROW};
+use crate::isa::NeuronConfigRows;
+
+/// Output neurons handled by one macro tile (6 odd-cycle + 6 even).
+pub const OUTPUTS_PER_TILE: usize = WEIGHTS_PER_ROW;
+
+/// The V_MEM rows reserved for per-layer constants, per alignment.
+/// (Rows 26–31; value rows grow from 0.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConstRows {
+    pub neg_leak_odd: usize,
+    pub neg_leak_even: usize,
+    pub neg_thr_odd: usize,
+    pub neg_thr_even: usize,
+    pub reset_odd: usize,
+    pub reset_even: usize,
+}
+
+impl Default for ConstRows {
+    fn default() -> Self {
+        Self {
+            neg_leak_odd: 26,
+            neg_leak_even: 27,
+            neg_thr_odd: 28,
+            neg_thr_even: 29,
+            reset_odd: 30,
+            reset_even: 31,
+        }
+    }
+}
+
+impl ConstRows {
+    /// The neuron-sequence row bundle for one parity.
+    pub fn for_parity(&self, p: Parity) -> NeuronConfigRows {
+        match p {
+            Parity::Odd => NeuronConfigRows {
+                neg_threshold: self.neg_thr_odd,
+                reset: self.reset_odd,
+                neg_leak: self.neg_leak_odd,
+            },
+            Parity::Even => NeuronConfigRows {
+                neg_threshold: self.neg_thr_even,
+                reset: self.reset_even,
+                neg_leak: self.neg_leak_even,
+            },
+        }
+    }
+
+    /// First V row index used by constants (value rows must stay below).
+    pub fn first_row(&self) -> usize {
+        self.neg_leak_odd
+    }
+}
+
+/// One tile: a 128×12 weight block plus one odd/even V-row pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileMapping {
+    pub tile_id: usize,
+    /// First global output neuron this tile covers.
+    pub out_base: usize,
+    /// Number of covered outputs (≤ 12; the last tile may be partial).
+    pub out_count: usize,
+    /// Odd-aligned V row (even weight slots).
+    pub v_row_odd: usize,
+    /// Even-aligned V row (odd weight slots).
+    pub v_row_even: usize,
+}
+
+impl TileMapping {
+    /// Map a local output index (0..out_count) to its (parity, field).
+    #[inline]
+    pub fn slot(&self, local_out: usize) -> (Parity, usize) {
+        debug_assert!(local_out < OUTPUTS_PER_TILE);
+        if local_out % 2 == 0 {
+            (Parity::Odd, local_out / 2)
+        } else {
+            (Parity::Even, local_out / 2)
+        }
+    }
+
+    /// Inverse of [`TileMapping::slot`].
+    #[inline]
+    pub fn local_out(&self, parity: Parity, field: usize) -> usize {
+        match parity {
+            Parity::Odd => 2 * field,
+            Parity::Even => 2 * field + 1,
+        }
+    }
+}
+
+/// A complete FC-layer mapping.
+#[derive(Clone, Debug)]
+pub struct FcLayout {
+    pub fan_in: usize,
+    pub width: usize,
+    pub tiles: Vec<TileMapping>,
+    pub const_rows: ConstRows,
+}
+
+impl FcLayout {
+    /// Map a `fan_in → width` FC layer.
+    pub fn new(fan_in: usize, width: usize) -> Result<Self, MapError> {
+        if fan_in > W_ROWS {
+            return Err(MapError::FanInTooLarge(fan_in));
+        }
+        if width == 0 {
+            return Err(MapError::EmptyLayer);
+        }
+        let const_rows = ConstRows::default();
+        // Each tile needs one odd/even V-row pair; a single-layer FC
+        // tile uses rows 0 and 1 of its own macro.
+        if 2 > const_rows.first_row() {
+            return Err(MapError::VmemOverflow {
+                need: 2,
+                have: const_rows.first_row(),
+            });
+        }
+        debug_assert!(2 <= V_ROWS);
+        let n_tiles = width.div_ceil(OUTPUTS_PER_TILE);
+        let tiles = (0..n_tiles)
+            .map(|t| TileMapping {
+                tile_id: t,
+                out_base: t * OUTPUTS_PER_TILE,
+                out_count: OUTPUTS_PER_TILE.min(width - t * OUTPUTS_PER_TILE),
+                v_row_odd: 0,
+                v_row_even: 1,
+            })
+            .collect();
+        Ok(Self {
+            fan_in,
+            width,
+            tiles,
+            const_rows,
+        })
+    }
+
+    /// The twelve weight values to program into W row `i` of tile `t`,
+    /// taken from a dense `[fan_in][width]` weight matrix. Slots beyond
+    /// the layer width are zero.
+    pub fn tile_row_weights(
+        &self,
+        weights: &[Vec<i64>],
+        tile: &TileMapping,
+        i: usize,
+    ) -> [i64; 12] {
+        let mut out = [0i64; 12];
+        for (slot, o) in out.iter_mut().zip(0..OUTPUTS_PER_TILE) {
+            let global = tile.out_base + o;
+            if global < self.width {
+                *slot = weights[i][global];
+            }
+        }
+        out
+    }
+
+    /// Number of macros this layout occupies.
+    pub fn num_macros(&self) -> usize {
+        self.tiles.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_128x128_uses_11_tiles() {
+        let l = FcLayout::new(128, 128).unwrap();
+        assert_eq!(l.tiles.len(), 11);
+        assert_eq!(l.tiles[10].out_count, 128 - 120);
+        assert_eq!(l.num_macros(), 11);
+    }
+
+    #[test]
+    fn layout_100x128() {
+        let l = FcLayout::new(100, 128).unwrap();
+        assert_eq!(l.fan_in, 100);
+        assert_eq!(l.tiles.len(), 11);
+    }
+
+    #[test]
+    fn fan_in_cap_matches_paper_constraint() {
+        assert_eq!(
+            FcLayout::new(129, 8).unwrap_err(),
+            MapError::FanInTooLarge(129)
+        );
+        assert!(FcLayout::new(128, 8).is_ok());
+        assert_eq!(FcLayout::new(10, 0).unwrap_err(), MapError::EmptyLayer);
+    }
+
+    #[test]
+    fn slot_roundtrip() {
+        let l = FcLayout::new(16, 24).unwrap();
+        let t = &l.tiles[0];
+        for o in 0..OUTPUTS_PER_TILE {
+            let (p, f) = t.slot(o);
+            assert_eq!(t.local_out(p, f), o);
+        }
+        // even local outputs are odd-parity fields
+        assert_eq!(t.slot(0), (Parity::Odd, 0));
+        assert_eq!(t.slot(1), (Parity::Even, 0));
+        assert_eq!(t.slot(10), (Parity::Odd, 5));
+        assert_eq!(t.slot(11), (Parity::Even, 5));
+    }
+
+    #[test]
+    fn tile_row_weights_extracts_block() {
+        let l = FcLayout::new(3, 20).unwrap();
+        // weights[i][o] = 100*i + o (clipped into 6-bit range by test design)
+        let w: Vec<Vec<i64>> = (0..3)
+            .map(|i| (0..20).map(|o| ((i * 7 + o) % 30) as i64 - 15).collect())
+            .collect();
+        let t1 = l.tiles[1]; // outputs 12..20
+        let row = l.tile_row_weights(&w, &t1, 2);
+        for o in 0..8 {
+            assert_eq!(row[o], w[2][12 + o]);
+        }
+        for o in 8..12 {
+            assert_eq!(row[o], 0); // beyond layer width
+        }
+    }
+
+    #[test]
+    fn const_rows_do_not_collide_with_value_rows() {
+        let l = FcLayout::new(64, 12).unwrap();
+        let c = l.const_rows;
+        for t in &l.tiles {
+            assert!(t.v_row_odd < c.first_row());
+            assert!(t.v_row_even < c.first_row());
+        }
+        let rows = [
+            c.neg_leak_odd,
+            c.neg_leak_even,
+            c.neg_thr_odd,
+            c.neg_thr_even,
+            c.reset_odd,
+            c.reset_even,
+        ];
+        let mut dedup = rows.to_vec();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), rows.len());
+        assert!(rows.iter().all(|&r| r < V_ROWS));
+    }
+}

@@ -1,0 +1,32 @@
+//! Mapping neural-network layers onto IMPULSE macros (paper Fig 3b).
+//!
+//! One macro tile holds a 128-input × 12-output weight block: output
+//! neuron *o* (local) lives in weight slot *o* of every W_MEM row —
+//! even slots are accumulated in odd cycles into the odd-aligned V row,
+//! odd slots in even cycles into the even-aligned V row (the staggered
+//! mapping). Constant rows at the top of V_MEM hold −θ, reset, and
+//! −leak per alignment.
+//!
+//! Layers wider than 12 neurons span multiple tiles; fan-in is capped
+//! at 128 — exactly the constraint the paper designs its networks
+//! around ("input channels for Conv layers were kept 14 with 3×3
+//! kernel size to restrict the fan-in to 128").
+
+mod conv;
+mod fc;
+
+pub use conv::{ConvLayout, PixelAssignment};
+pub use fc::{ConstRows, FcLayout, TileMapping, OUTPUTS_PER_TILE};
+
+use thiserror::Error;
+
+/// Mapping errors.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum MapError {
+    #[error("fan-in {0} exceeds the macro's 128 rows (the paper's own constraint; restructure the layer)")]
+    FanInTooLarge(usize),
+    #[error("layer has no outputs")]
+    EmptyLayer,
+    #[error("V_MEM budget exceeded: need {need} value rows, have {have}")]
+    VmemOverflow { need: usize, have: usize },
+}

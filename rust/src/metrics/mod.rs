@@ -1,0 +1,206 @@
+//! Run metrics: counters, latency histograms, and report emission.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// A set of named monotonically-increasing counters.
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    values: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.values.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.values.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.values.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in &other.values {
+            *self.values.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+}
+
+/// Streaming latency statistics (count/mean/min/max + fixed quantile
+/// estimates from a reservoir).
+#[derive(Clone, Debug)]
+pub struct LatencyStats {
+    count: u64,
+    sum: Duration,
+    min: Duration,
+    max: Duration,
+    reservoir: Vec<Duration>,
+    cap: usize,
+    rng_state: u64,
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        Self::new(4096)
+    }
+}
+
+impl LatencyStats {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            count: 0,
+            sum: Duration::ZERO,
+            min: Duration::MAX,
+            max: Duration::ZERO,
+            reservoir: Vec::with_capacity(cap.min(1024)),
+            cap,
+            rng_state: 0x12345678,
+        }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.count += 1;
+        self.sum += d;
+        self.min = self.min.min(d);
+        self.max = self.max.max(d);
+        if self.reservoir.len() < self.cap {
+            self.reservoir.push(d);
+        } else {
+            // reservoir sampling
+            self.rng_state ^= self.rng_state << 13;
+            self.rng_state ^= self.rng_state >> 7;
+            self.rng_state ^= self.rng_state << 17;
+            let j = (self.rng_state % self.count) as usize;
+            if j < self.cap {
+                self.reservoir[j] = d;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        self.sum / self.count as u32
+    }
+
+    pub fn min(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> Duration {
+        self.max
+    }
+
+    /// Quantile estimate from the reservoir (q in [0, 1]).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.reservoir.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut v = self.reservoir.clone();
+        v.sort();
+        let ix = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        v[ix]
+    }
+
+    pub fn report(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:?} p50={:?} p99={:?} min={:?} max={:?}",
+            self.count,
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.99),
+            self.min(),
+            self.max()
+        )
+    }
+}
+
+/// Format a float with engineering notation for reports.
+pub fn eng(value: f64, unit: &str) -> String {
+    let (scale, prefix) = if value == 0.0 {
+        (1.0, "")
+    } else {
+        let exp = value.abs().log10().floor() as i32;
+        match exp {
+            e if e >= 12 => (1e12, "T"),
+            e if e >= 9 => (1e9, "G"),
+            e if e >= 6 => (1e6, "M"),
+            e if e >= 3 => (1e3, "k"),
+            e if e >= 0 => (1.0, ""),
+            e if e >= -3 => (1e-3, "m"),
+            e if e >= -6 => (1e-6, "µ"),
+            e if e >= -9 => (1e-9, "n"),
+            _ => (1e-12, "p"),
+        }
+    };
+    format!("{:.3} {}{}", value / scale, prefix, unit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_merge() {
+        let mut a = Counters::new();
+        a.add("x", 2);
+        a.add("x", 3);
+        let mut b = Counters::new();
+        b.add("x", 5);
+        b.add("y", 1);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 10);
+        assert_eq!(a.get("y"), 1);
+        assert_eq!(a.get("z"), 0);
+        assert_eq!(a.iter().count(), 2);
+    }
+
+    #[test]
+    fn latency_stats_quantiles() {
+        let mut s = LatencyStats::new(1000);
+        for i in 1..=100u64 {
+            s.record(Duration::from_micros(i));
+        }
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.min(), Duration::from_micros(1));
+        assert_eq!(s.max(), Duration::from_micros(100));
+        let p50 = s.quantile(0.5);
+        assert!(p50 >= Duration::from_micros(45) && p50 <= Duration::from_micros(55));
+        assert!(s.report("t").contains("n=100"));
+    }
+
+    #[test]
+    fn latency_reservoir_overflow_safe() {
+        let mut s = LatencyStats::new(16);
+        for i in 0..10_000u64 {
+            s.record(Duration::from_nanos(i % 1000));
+        }
+        assert_eq!(s.count(), 10_000);
+        assert!(s.quantile(0.9) <= Duration::from_nanos(1000));
+    }
+
+    #[test]
+    fn eng_formatting() {
+        assert_eq!(eng(1.0101e-12, "J"), "1.010 pJ");
+        assert_eq!(eng(0.99e12, "OPS/W"), "990.000 GOPS/W");
+        assert_eq!(eng(1.2e12, "OPS/W"), "1.200 TOPS/W");
+        assert_eq!(eng(200e6, "Hz"), "200.000 MHz");
+        assert_eq!(eng(0.0, "x"), "0.000 x");
+    }
+}

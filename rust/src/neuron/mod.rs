@@ -1,0 +1,235 @@
+//! Functional golden neuron models with hardware-exact semantics.
+//!
+//! These are the oracles the macro simulator (and, transitively, the
+//! Pallas kernel via the shared artifact tests) is validated against:
+//! plain Rust integer code implementing the same 11-bit wraparound
+//! accumulate / threshold / reset dynamics, with no bit-level machinery.
+
+use crate::bits::wrap11;
+use crate::isa::NeuronType;
+
+/// Parameters of a neuron population (shared per layer, as on the
+/// macro: one −θ row, one reset row, one −leak row per parity).
+#[derive(Clone, Copy, Debug)]
+pub struct NeuronParams {
+    pub neuron: NeuronType,
+    /// Firing threshold θ (positive).
+    pub threshold: i64,
+    /// Hard-reset value (IF/LIF), usually 0.
+    pub reset: i64,
+    /// Subtractive leak per timestep (LIF), ≥ 0.
+    pub leak: i64,
+}
+
+impl NeuronParams {
+    pub fn if_neuron(threshold: i64) -> Self {
+        Self {
+            neuron: NeuronType::IF,
+            threshold,
+            reset: 0,
+            leak: 0,
+        }
+    }
+
+    pub fn lif_neuron(threshold: i64, leak: i64) -> Self {
+        Self {
+            neuron: NeuronType::LIF,
+            threshold,
+            reset: 0,
+            leak,
+        }
+    }
+
+    pub fn rmp_neuron(threshold: i64) -> Self {
+        Self {
+            neuron: NeuronType::RMP,
+            threshold,
+            reset: 0,
+            leak: 0,
+        }
+    }
+}
+
+/// One neuron's state: its membrane potential (11-bit wrapped).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NeuronState {
+    pub v: i64,
+}
+
+impl NeuronState {
+    /// Accumulate one synaptic weight (an input spike arrived).
+    #[inline]
+    pub fn accumulate(&mut self, weight: i64) {
+        self.v = wrap11(self.v + weight);
+    }
+
+    /// End-of-timestep update. Returns whether the neuron spiked.
+    ///
+    /// Matches the macro's instruction sequences exactly:
+    /// - IF:  spike = V ≥ θ; if spike, V ← reset.
+    /// - LIF: V ← V − leak (wrapped); spike = V ≥ θ; if spike V ← reset.
+    /// - RMP: spike = V ≥ θ; if spike, V ← V − θ (wrapped).
+    pub fn update(&mut self, p: &NeuronParams) -> bool {
+        match p.neuron {
+            NeuronType::IF => {
+                let spike = wrap11(self.v - p.threshold) >= 0;
+                if spike {
+                    self.v = wrap11(p.reset);
+                }
+                spike
+            }
+            NeuronType::LIF => {
+                self.v = wrap11(self.v - p.leak);
+                let spike = wrap11(self.v - p.threshold) >= 0;
+                if spike {
+                    self.v = wrap11(p.reset);
+                }
+                spike
+            }
+            NeuronType::RMP => {
+                let spike = wrap11(self.v - p.threshold) >= 0;
+                if spike {
+                    self.v = wrap11(self.v - p.threshold);
+                }
+                spike
+            }
+        }
+    }
+}
+
+/// A population of neurons driven by a dense weight matrix — the
+/// functional model of one mapped layer (fan-in ≤ 128, any width).
+///
+/// `weights[i][n]` is the 6-bit weight from input `i` to neuron `n`.
+#[derive(Clone, Debug)]
+pub struct GoldenLayer {
+    pub params: NeuronParams,
+    pub weights: Vec<Vec<i64>>,
+    pub state: Vec<NeuronState>,
+}
+
+impl GoldenLayer {
+    pub fn new(params: NeuronParams, weights: Vec<Vec<i64>>) -> Self {
+        let n = weights.first().map(|r| r.len()).unwrap_or(0);
+        assert!(weights.iter().all(|r| r.len() == n));
+        Self {
+            params,
+            weights,
+            state: vec![NeuronState::default(); n],
+        }
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn num_neurons(&self) -> usize {
+        self.state.len()
+    }
+
+    /// Process one timestep: accumulate all spiking inputs, then run the
+    /// neuron update. Returns the output spike vector.
+    pub fn step(&mut self, in_spikes: &[bool]) -> Vec<bool> {
+        assert_eq!(in_spikes.len(), self.num_inputs());
+        for (i, &s) in in_spikes.iter().enumerate() {
+            if s {
+                for (n, st) in self.state.iter_mut().enumerate() {
+                    st.accumulate(self.weights[i][n]);
+                }
+            }
+        }
+        self.state
+            .iter_mut()
+            .map(|st| st.update(&self.params))
+            .collect()
+    }
+
+    /// Current membrane potentials.
+    pub fn potentials(&self) -> Vec<i64> {
+        self.state.iter().map(|s| s.v).collect()
+    }
+
+    /// Reset all membrane potentials to zero.
+    pub fn reset_state(&mut self) {
+        for s in self.state.iter_mut() {
+            *s = NeuronState::default();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn if_neuron_integrates_and_fires() {
+        let p = NeuronParams::if_neuron(10);
+        let mut s = NeuronState::default();
+        s.accumulate(4);
+        assert!(!s.update(&p));
+        assert_eq!(s.v, 4);
+        s.accumulate(7); // v = 11 ≥ 10
+        assert!(s.update(&p));
+        assert_eq!(s.v, 0); // hard reset
+    }
+
+    #[test]
+    fn lif_neuron_leaks() {
+        let p = NeuronParams::lif_neuron(10, 2);
+        let mut s = NeuronState { v: 9 };
+        assert!(!s.update(&p)); // leak first: 7 < 10
+        assert_eq!(s.v, 7);
+        s.accumulate(5); // 12
+        assert!(s.update(&p)); // 12-2=10 ≥ 10 → spike
+        assert_eq!(s.v, 0);
+    }
+
+    #[test]
+    fn rmp_neuron_soft_resets() {
+        let p = NeuronParams::rmp_neuron(10);
+        let mut s = NeuronState { v: 27 };
+        assert!(s.update(&p));
+        assert_eq!(s.v, 17);
+        assert!(s.update(&p));
+        assert_eq!(s.v, 7);
+        assert!(!s.update(&p));
+        assert_eq!(s.v, 7); // residual retained
+    }
+
+    #[test]
+    fn accumulate_wraps() {
+        let mut s = NeuronState { v: 1023 };
+        s.accumulate(1);
+        assert_eq!(s.v, -1024);
+    }
+
+    #[test]
+    fn negative_v_does_not_spike_signed() {
+        let p = NeuronParams::if_neuron(5);
+        let mut s = NeuronState { v: -1 };
+        assert!(!s.update(&p));
+        assert_eq!(s.v, -1);
+    }
+
+    #[test]
+    fn golden_layer_steps() {
+        // 2 inputs, 3 neurons.
+        let w = vec![vec![5, 6, 7], vec![-5, 6, 0]];
+        let mut l = GoldenLayer::new(NeuronParams::if_neuron(10), w);
+        let out = l.step(&[true, true]);
+        // v = [0, 12, 7] → spikes [false, true, false]
+        assert_eq!(out, vec![false, true, false]);
+        assert_eq!(l.potentials(), vec![0, 0, 7]);
+        l.reset_state();
+        assert_eq!(l.potentials(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn no_input_spikes_no_accumulation() {
+        let w = vec![vec![5], vec![9]];
+        let mut l = GoldenLayer::new(NeuronParams::rmp_neuron(100), w);
+        let out = l.step(&[false, false]);
+        assert_eq!(out, vec![false]);
+        assert_eq!(l.potentials(), vec![0]);
+    }
+}

@@ -1,0 +1,284 @@
+//! The reconfigurable ripple-carry adder formed by chaining column
+//! peripherals, bit-accurately.
+//!
+//! Six independent 12-column adders are active per cycle; their spans
+//! depend on the cycle parity (see [`super::column_modes`]). Within a
+//! field the carry ripples LSB → MSB, *skipping* the hole column, whose
+//! peripheral instead latches the sensed weight sign and broadcasts it
+//! to the six upper columns (in-array sign extension of the 6-bit
+//! weight to the 11-bit membrane potential).
+
+use super::blfa::{blfa, blfa_bcast};
+use super::{column_modes, ColumnMode};
+use crate::bitcell::{DualRead, Parity, COLS, VALUES_PER_ROW, VALUE_HOLE_OFFSET};
+
+/// Result of one field's (one value's) add.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FieldResult {
+    /// Carry-out of the MSB column peripheral — the comparator output
+    /// the paper's SpikeCheck uses.
+    pub msb_cout: bool,
+    /// The MSB *sum* bit — the sign of the 11-bit result.
+    pub sign: bool,
+    /// The latched broadcast (weight sign) — diagnostic.
+    pub wsign: bool,
+}
+
+/// Output of a full-array add cycle.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AdderOutput {
+    /// Packed 78-column SUM word (hole columns forced to 0 — the CS
+    /// peripheral writes back `0`, preserving the V_MEM hole invariant).
+    pub sum: u128,
+    /// Per-field comparator/sign outputs.
+    pub fields: [FieldResult; VALUES_PER_ROW],
+}
+
+/// The chained column-peripheral adder for one parity.
+#[derive(Clone, Debug)]
+pub struct ColumnAdder {
+    parity: Parity,
+    modes: [ColumnMode; COLS],
+    /// When true, upper-half columns add the broadcast weight sign
+    /// (AccW2V). When false (AccV2V / SpikeCheck), both operands come
+    /// from cells on every column and the broadcast input is gated off.
+    bcast_enable: bool,
+}
+
+impl ColumnAdder {
+    /// Adder configured for AccW2V (weight-sign broadcast active).
+    pub fn for_acc_w2v(parity: Parity) -> Self {
+        Self {
+            parity,
+            modes: column_modes(parity),
+            bcast_enable: true,
+        }
+    }
+
+    /// Adder configured for V+V operations (AccV2V, SpikeCheck): all
+    /// eleven value columns carry two cells; the hole column carries
+    /// two zeros and is still skipped.
+    pub fn for_v_plus_v(parity: Parity) -> Self {
+        Self {
+            parity,
+            modes: column_modes(parity),
+            bcast_enable: false,
+        }
+    }
+
+    /// The parity this adder is configured for.
+    pub fn parity(&self) -> Parity {
+        self.parity
+    }
+
+    /// Propagate the sensed bitlines through the six chained adders.
+    ///
+    /// This walks column-by-column exactly like the silicon ripple
+    /// chain: per column one BLFA evaluation, with the CMUX selecting
+    /// carry-in 0 (LSB), the previous COUT (CF), or the skipped carry
+    /// (CS → first upper column).
+    pub fn propagate(&self, sensed: &DualRead) -> AdderOutput {
+        let mut sum = 0u128;
+        let mut fields = [FieldResult {
+            msb_cout: false,
+            sign: false,
+            wsign: false,
+        }; VALUES_PER_ROW];
+
+        let mut carry = false;
+        let mut bcast = false;
+        let mut field_idx = 0usize;
+
+        for c in 0..COLS {
+            let or = (sensed.or >> c) & 1 == 1;
+            let and = (sensed.and >> c) & 1 == 1;
+            match self.modes[c] {
+                ColumnMode::Inactive => {}
+                ColumnMode::Lsb => {
+                    let out = blfa(or, and, false);
+                    if out.sum {
+                        sum |= 1u128 << c;
+                    }
+                    carry = out.cout;
+                }
+                ColumnMode::CarryForward => {
+                    let out = blfa(or, and, carry);
+                    if out.sum {
+                        sum |= 1u128 << c;
+                    }
+                    carry = out.cout;
+                }
+                ColumnMode::CarrySkip => {
+                    // The hole column: the only possible driven-high cell
+                    // is the weight sign (V_MEM keeps this bit 0), so the
+                    // sensed OR *is* Wsign. Latch it for broadcast, let
+                    // the carry skip past, write back 0.
+                    debug_assert!(
+                        c >= VALUE_HOLE_OFFSET,
+                        "hole column index underflow"
+                    );
+                    bcast = self.bcast_enable && or;
+                    fields[field_idx].wsign = or;
+                    // carry unchanged (skip); sum bit forced 0.
+                }
+                ColumnMode::CarryForwardBcast => {
+                    // Upper half: single cell (the V bit) + broadcast.
+                    // With one driven cell, or == and == v.
+                    let v = or;
+                    let out = if self.bcast_enable {
+                        blfa_bcast(v, bcast, carry)
+                    } else {
+                        blfa(or, and, carry)
+                    };
+                    if out.sum {
+                        sum |= 1u128 << c;
+                    }
+                    carry = out.cout;
+                }
+                ColumnMode::MsbBcast => {
+                    let v = or;
+                    let out = if self.bcast_enable {
+                        blfa_bcast(v, bcast, carry)
+                    } else {
+                        blfa(or, and, carry)
+                    };
+                    if out.sum {
+                        sum |= 1u128 << c;
+                    }
+                    fields[field_idx].msb_cout = out.cout;
+                    fields[field_idx].sign = out.sum;
+                    field_idx += 1;
+                    carry = false;
+                }
+            }
+        }
+        debug_assert_eq!(field_idx, VALUES_PER_ROW);
+        AdderOutput { sum, fields }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitcell::{encode_weight_row, BitArray, FieldLayout, WEIGHTS_PER_ROW};
+    use crate::bits::{wrap11, XorShiftRng};
+
+    /// Build sensed bitlines for an AccW2V cycle directly from arrays.
+    fn sense_w2v(
+        w: &BitArray,
+        v: &BitArray,
+        w_row: usize,
+        v_row: usize,
+        parity: Parity,
+    ) -> DualRead {
+        let l = FieldLayout::new(parity);
+        DualRead::combine(
+            w.read_masked(w_row, l.w_drive_mask()),
+            v.read_masked(v_row, crate::bitcell::COL_MASK),
+        )
+    }
+
+    #[test]
+    fn acc_w2v_is_v_plus_sext_w_mod_2pow11() {
+        let mut rng = XorShiftRng::new(42);
+        for parity in Parity::BOTH {
+            let l = FieldLayout::new(parity);
+            for _ in 0..300 {
+                let ws: Vec<i64> =
+                    (0..WEIGHTS_PER_ROW).map(|_| rng.gen_i64(-32, 31)).collect();
+                let vs: Vec<i64> = (0..VALUES_PER_ROW).map(|_| rng.gen_i64(-1024, 1023)).collect();
+                let mut wmem = BitArray::new(1);
+                wmem.set_row(0, encode_weight_row(&ws));
+                let mut vmem = BitArray::new(1);
+                vmem.set_row(0, l.encode_row(&vs));
+
+                let sensed = sense_w2v(&wmem, &vmem, 0, 0, parity);
+                let out = ColumnAdder::for_acc_w2v(parity).propagate(&sensed);
+
+                for g in 0..VALUES_PER_ROW {
+                    let j = crate::bitcell::weight_index(g, parity);
+                    let expect = wrap11(vs[g] + ws[j]);
+                    let got = l.decode_value(out.sum, g);
+                    assert_eq!(got, expect, "parity={parity:?} g={g} v={} w={}", vs[g], ws[j]);
+                    // sign bit of result reported per field
+                    assert_eq!(out.fields[g].sign, expect < 0);
+                    assert_eq!(out.fields[g].wsign, ws[j] < 0);
+                }
+                // hole columns stay zero in the written-back sum
+                assert_eq!(out.sum & l.hole_mask(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn v_plus_v_adds_two_vmem_rows() {
+        let mut rng = XorShiftRng::new(7);
+        for parity in Parity::BOTH {
+            let l = FieldLayout::new(parity);
+            for _ in 0..300 {
+                let a: Vec<i64> = (0..VALUES_PER_ROW).map(|_| rng.gen_i64(-1024, 1023)).collect();
+                let b: Vec<i64> = (0..VALUES_PER_ROW).map(|_| rng.gen_i64(-1024, 1023)).collect();
+                let mut vmem = BitArray::new(2);
+                vmem.set_row(0, l.encode_row(&a));
+                vmem.set_row(1, l.encode_row(&b));
+                let sensed = DualRead::combine(
+                    vmem.read_masked(0, crate::bitcell::COL_MASK),
+                    vmem.read_masked(1, crate::bitcell::COL_MASK),
+                );
+                let out = ColumnAdder::for_v_plus_v(parity).propagate(&sensed);
+                for g in 0..VALUES_PER_ROW {
+                    let expect = wrap11(a[g] + b[g]);
+                    assert_eq!(l.decode_value(out.sum, g), expect);
+                    assert_eq!(out.fields[g].sign, expect < 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn msb_cout_is_unsigned_carry() {
+        // COUT of the MSB column = carry out of the 11-bit unsigned add
+        // (the paper's literal comparator signal).
+        let parity = Parity::Odd;
+        let l = FieldLayout::new(parity);
+        let cases = [
+            (100i64, -50i64, true),   // 100 + (2048-50): wraps => carry
+            (10, -50, false),         // 10 + 1998 = 2008 < 2048
+            (-1, -1, true),           // 2047+2047 -> carry
+            (0, 5, false),
+        ];
+        for (va, vb, want_carry) in cases {
+            let mut vmem = BitArray::new(2);
+            vmem.set_row(0, l.encode_row(&[va; 6]));
+            vmem.set_row(1, l.encode_row(&[vb; 6]));
+            let sensed = DualRead::combine(
+                vmem.read_masked(0, crate::bitcell::COL_MASK),
+                vmem.read_masked(1, crate::bitcell::COL_MASK),
+            );
+            let out = ColumnAdder::for_v_plus_v(parity).propagate(&sensed);
+            for g in 0..VALUES_PER_ROW {
+                assert_eq!(
+                    out.fields[g].msb_cout, want_carry,
+                    "va={va} vb={vb} g={g}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn carries_do_not_leak_between_fields() {
+        let parity = Parity::Odd;
+        let l = FieldLayout::new(parity);
+        // Field 0 overflows (max + max); field 1 must still be exact.
+        let mut vmem = BitArray::new(2);
+        vmem.set_row(0, l.encode_row(&[1023, 5, 0, 0, 0, 0]));
+        vmem.set_row(1, l.encode_row(&[1023, 7, 0, 0, 0, 0]));
+        let sensed = DualRead::combine(
+            vmem.read_masked(0, crate::bitcell::COL_MASK),
+            vmem.read_masked(1, crate::bitcell::COL_MASK),
+        );
+        let out = ColumnAdder::for_v_plus_v(parity).propagate(&sensed);
+        assert_eq!(l.decode_value(out.sum, 0), wrap11(2046));
+        assert_eq!(l.decode_value(out.sum, 1), 12);
+    }
+}

@@ -1,0 +1,81 @@
+//! The bitwise-logic full adder (BLFA).
+//!
+//! Unlike a conventional full adder fed by two operand wires, the BLFA
+//! receives the *combined* bitline signals — `OR` and `AND` of the two
+//! cells enabled on its column — plus a ripple carry. That is enough:
+//! `XOR = OR ∧ ¬AND` and `{generate, propagate} = {AND, OR}`.
+
+/// One column-peripheral add step's outputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlfaOut {
+    pub sum: bool,
+    pub cout: bool,
+}
+
+/// Combinational BLFA: given the sensed `or`/`and` of the column's
+/// enabled cells and the carry-in, produce SUM and COUT.
+#[inline]
+pub fn blfa(or: bool, and: bool, cin: bool) -> BlfaOut {
+    debug_assert!(or || !and, "sensed AND=1 with OR=0 is unphysical on a driven column");
+    let xor = or && !and;
+    BlfaOut {
+        sum: xor ^ cin,
+        cout: and || (xor && cin),
+    }
+}
+
+/// BLFA with an extra broadcast operand substituted for the (absent)
+/// second cell. Used by the upper-half columns during AccW2V: the only
+/// cell on the column is the V_MEM bit, so `or == and == v`, and the
+/// carry-skip broadcast supplies the weight-sign as operand `b`.
+#[inline]
+pub fn blfa_bcast(v: bool, bcast: bool, cin: bool) -> BlfaOut {
+    let xor = v ^ bcast;
+    BlfaOut {
+        sum: xor ^ cin,
+        cout: (v && bcast) || (xor && cin),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exhaustive truth-table check against a+b+cin.
+    #[test]
+    fn blfa_matches_full_adder() {
+        for a in [false, true] {
+            for b in [false, true] {
+                for cin in [false, true] {
+                    let or = a || b;
+                    let and = a && b;
+                    let expect = a as u8 + b as u8 + cin as u8;
+                    let out = blfa(or, and, cin);
+                    assert_eq!(out.sum as u8, expect & 1, "a={a} b={b} cin={cin}");
+                    assert_eq!(out.cout as u8, expect >> 1, "a={a} b={b} cin={cin}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blfa_bcast_matches_full_adder() {
+        for v in [false, true] {
+            for w in [false, true] {
+                for cin in [false, true] {
+                    let expect = v as u8 + w as u8 + cin as u8;
+                    let out = blfa_bcast(v, w, cin);
+                    assert_eq!(out.sum as u8, expect & 1);
+                    assert_eq!(out.cout as u8, expect >> 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn unphysical_sense_asserts() {
+        blfa(false, true, false);
+    }
+}

@@ -1,0 +1,104 @@
+//! The conditional write driver (CWD).
+//!
+//! Each column's CWD either actively drives WBL/WBLB with the selected
+//! write-back bit, or leaves both precharged so the enabled WWL cell
+//! keeps its value. The per-column gate comes from the spike buffers
+//! (one buffer gating all 12 columns of its field) or is forced open
+//! for unconditional writes.
+
+use crate::bitcell::{FieldLayout, Parity, VALUES_PER_ROW};
+
+/// What gates the write drivers this cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteGate {
+    /// Drive every active field (unconditional write-back: AccW2V,
+    /// LIF-leak AccV2V).
+    AllFields,
+    /// Drive only fields whose spike buffer is set (ResetV, RMP
+    /// soft-reset AccV2V).
+    SpikedFields,
+    /// Drive only fields whose spike buffer is *clear* (used by the
+    /// inverse-gated variants; not exercised by the paper's sequences
+    /// but the CWD supports it symmetrically).
+    NonSpikedFields,
+}
+
+/// The bank of conditional write drivers for one cycle parity.
+#[derive(Clone, Copy, Debug)]
+pub struct ConditionalWriteDriver {
+    layout: FieldLayout,
+}
+
+impl ConditionalWriteDriver {
+    pub fn new(parity: Parity) -> Self {
+        Self {
+            layout: FieldLayout::new(parity),
+        }
+    }
+
+    /// Compute the column mask actually driven, given the gate mode and
+    /// the spike buffers. Columns outside active fields are never
+    /// driven (their values in other-parity fields must survive).
+    pub fn drive_mask(&self, gate: WriteGate, spikes: &[bool; VALUES_PER_ROW]) -> u128 {
+        let mut mask = 0u128;
+        for g in 0..VALUES_PER_ROW {
+            let write = match gate {
+                WriteGate::AllFields => true,
+                WriteGate::SpikedFields => spikes[g],
+                WriteGate::NonSpikedFields => !spikes[g],
+            };
+            if write {
+                mask |= self.layout.field_mask(g);
+            }
+        }
+        mask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_fields_drives_every_active_column() {
+        for p in Parity::BOTH {
+            let cwd = ConditionalWriteDriver::new(p);
+            let mask = cwd.drive_mask(WriteGate::AllFields, &[false; 6]);
+            assert_eq!(mask, FieldLayout::new(p).all_fields_mask());
+        }
+    }
+
+    #[test]
+    fn spiked_fields_drives_only_set_buffers() {
+        let cwd = ConditionalWriteDriver::new(Parity::Odd);
+        let spikes = [true, false, true, false, false, true];
+        let mask = cwd.drive_mask(WriteGate::SpikedFields, &spikes);
+        let l = FieldLayout::new(Parity::Odd);
+        for g in 0..VALUES_PER_ROW {
+            let fm = l.field_mask(g);
+            if spikes[g] {
+                assert_eq!(mask & fm, fm);
+            } else {
+                assert_eq!(mask & fm, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn non_spiked_is_complement_within_fields() {
+        let cwd = ConditionalWriteDriver::new(Parity::Even);
+        let spikes = [true, true, false, true, false, false];
+        let a = cwd.drive_mask(WriteGate::SpikedFields, &spikes);
+        let b = cwd.drive_mask(WriteGate::NonSpikedFields, &spikes);
+        let l = FieldLayout::new(Parity::Even);
+        assert_eq!(a & b, 0);
+        assert_eq!(a | b, l.all_fields_mask());
+    }
+
+    #[test]
+    fn even_parity_never_drives_low_six_columns() {
+        let cwd = ConditionalWriteDriver::new(Parity::Even);
+        let mask = cwd.drive_mask(WriteGate::AllFields, &[true; 6]);
+        assert_eq!(mask & 0b111111, 0);
+    }
+}

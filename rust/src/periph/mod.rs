@@ -1,0 +1,117 @@
+//! Reconfigurable column peripherals.
+//!
+//! Every bitline pair (RBL/RBLB + WBL/WBLB) terminates in one column
+//! peripheral consisting of:
+//!
+//! - **SINV** — sensing inverters that latch the bitline levels; after
+//!   sensing, the peripheral holds `OR` and `AND` of the cells enabled
+//!   on its column.
+//! - **BLFA** — a bitwise-logic full adder that derives `SUM`/`COUT`
+//!   from the latched `OR`/`AND` plus a ripple carry-in:
+//!   `XOR = OR ∧ ¬AND`, `SUM = XOR ⊕ Cin`, `COUT = AND ∨ (XOR ∧ Cin)`.
+//! - **CMUX** — carry multiplexers that chain BLFAs into ripple-carry
+//!   adders whose *span is reconfigured every cycle*: odd cycles chain
+//!   columns 0–11, 12–23, …; even cycles 6–17, 18–29, … (the staggered
+//!   mapping). Modes: LSB (carry-in 0), CF (carry forward), CS (carry
+//!   *skip*: the hole column forwards its carry untouched and
+//!   broadcasts the sensed weight-sign to the six upper columns — the
+//!   in-array sign extension), MSB (terminates the chain, exporting
+//!   `COUT` and the sum sign to the spike logic).
+//! - **CWD** — conditional write drivers: drive WBL/WBLB with the
+//!   selected write-back value, or leave them precharged so the write
+//!   is suppressed (spike-gated writes in ResetV / soft-reset AccV2V).
+//! - **Spike buffers** — one per value field, set by SpikeCheck,
+//!   consumed as the CWD gate by the following instruction.
+
+mod adder;
+mod blfa;
+mod cwd;
+mod spikebuf;
+
+pub use adder::{AdderOutput, ColumnAdder, FieldResult};
+pub use blfa::{blfa, blfa_bcast, BlfaOut};
+pub use cwd::{ConditionalWriteDriver, WriteGate};
+pub use spikebuf::SpikeBuffers;
+
+use crate::bitcell::{field_base, Parity, FIELD_WIDTH, VALUES_PER_ROW, VALUE_HOLE_OFFSET};
+
+/// Per-column peripheral configuration for one cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ColumnMode {
+    /// Not part of any active adder this cycle (bitlines ignored).
+    Inactive,
+    /// Starts an adder chain: carry-in forced to 0.
+    Lsb,
+    /// Carry forward from the previous column.
+    CarryForward,
+    /// The hole column: skips the ripple carry past itself and latches
+    /// the sensed weight sign for broadcast to the upper columns.
+    CarrySkip,
+    /// Upper-half column receiving the broadcast weight sign as its
+    /// second operand (AccW2V sign extension).
+    CarryForwardBcast,
+    /// Terminates the chain; exports COUT/sign to the spike logic. Also
+    /// receives the broadcast (it is the top of the upper half).
+    MsbBcast,
+}
+
+/// The full 78-column mode vector for a given parity.
+///
+/// Layout per 12-column field `[b..b+12)`:
+/// `Lsb, CF, CF, CF, CF, CS, CFB, CFB, CFB, CFB, CFB, MSB`.
+pub fn column_modes(parity: Parity) -> [ColumnMode; crate::bitcell::COLS] {
+    let mut modes = [ColumnMode::Inactive; crate::bitcell::COLS];
+    for g in 0..VALUES_PER_ROW {
+        let b = field_base(g, parity);
+        modes[b] = ColumnMode::Lsb;
+        for off in 1..VALUE_HOLE_OFFSET {
+            modes[b + off] = ColumnMode::CarryForward;
+        }
+        modes[b + VALUE_HOLE_OFFSET] = ColumnMode::CarrySkip;
+        for off in (VALUE_HOLE_OFFSET + 1)..(FIELD_WIDTH - 1) {
+            modes[b + off] = ColumnMode::CarryForwardBcast;
+        }
+        modes[b + FIELD_WIDTH - 1] = ColumnMode::MsbBcast;
+    }
+    modes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitcell::COLS;
+
+    #[test]
+    fn odd_modes_cover_low_72_columns() {
+        let m = column_modes(Parity::Odd);
+        assert_eq!(m[0], ColumnMode::Lsb);
+        assert_eq!(m[5], ColumnMode::CarrySkip);
+        assert_eq!(m[11], ColumnMode::MsbBcast);
+        assert_eq!(m[12], ColumnMode::Lsb);
+        for c in 72..COLS {
+            assert_eq!(m[c], ColumnMode::Inactive);
+        }
+    }
+
+    #[test]
+    fn even_modes_staggered_by_six() {
+        let m = column_modes(Parity::Even);
+        for c in 0..6 {
+            assert_eq!(m[c], ColumnMode::Inactive, "col {c}");
+        }
+        assert_eq!(m[6], ColumnMode::Lsb);
+        assert_eq!(m[11], ColumnMode::CarrySkip);
+        assert_eq!(m[17], ColumnMode::MsbBcast);
+        assert_eq!(m[77], ColumnMode::MsbBcast);
+    }
+
+    #[test]
+    fn six_adders_per_parity() {
+        for p in Parity::BOTH {
+            let m = column_modes(p);
+            assert_eq!(m.iter().filter(|&&x| x == ColumnMode::Lsb).count(), 6);
+            assert_eq!(m.iter().filter(|&&x| x == ColumnMode::MsbBcast).count(), 6);
+            assert_eq!(m.iter().filter(|&&x| x == ColumnMode::CarrySkip).count(), 6);
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Spike buffers — one latch per value field.
+//!
+//! SpikeCheck writes them from the comparator outputs; the following
+//! instruction (ResetV or soft-reset AccV2V) consumes them as the CWD
+//! gate; the coordinator drains them as the layer's output spikes.
+
+use crate::bitcell::VALUES_PER_ROW;
+
+/// The per-parity spike buffer bank (6 buffers, one per field).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpikeBuffers {
+    bits: [bool; VALUES_PER_ROW],
+}
+
+impl SpikeBuffers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Latch comparator outputs (overwrites all six).
+    pub fn latch(&mut self, outs: [bool; VALUES_PER_ROW]) {
+        self.bits = outs;
+    }
+
+    /// Current buffer contents.
+    #[inline]
+    pub fn bits(&self) -> &[bool; VALUES_PER_ROW] {
+        &self.bits
+    }
+
+    /// Read one buffer.
+    #[inline]
+    pub fn get(&self, g: usize) -> bool {
+        self.bits[g]
+    }
+
+    /// Clear all buffers.
+    pub fn clear(&mut self) {
+        self.bits = [false; VALUES_PER_ROW];
+    }
+
+    /// Number of set buffers.
+    pub fn count(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latch_and_read() {
+        let mut sb = SpikeBuffers::new();
+        assert_eq!(sb.count(), 0);
+        sb.latch([true, false, false, true, true, false]);
+        assert_eq!(sb.count(), 3);
+        assert!(sb.get(0));
+        assert!(!sb.get(1));
+        sb.clear();
+        assert_eq!(sb.count(), 0);
+    }
+
+    #[test]
+    fn latch_overwrites() {
+        let mut sb = SpikeBuffers::new();
+        sb.latch([true; 6]);
+        sb.latch([false, true, false, false, false, false]);
+        assert_eq!(sb.bits(), &[false, true, false, false, false, false]);
+    }
+}

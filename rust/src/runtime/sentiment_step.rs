@@ -1,0 +1,125 @@
+//! The AOT-compiled quantized sentiment timestep
+//! (`artifacts/sentiment_step.hlo.txt`).
+//!
+//! Signature (all int32, batch 1; the weight matrices are passed as
+//! parameters because `as_hlo_text()` elides large constants):
+//!   inputs:  x_q[1,M], v_e[1,M], v1[1,H1], v2[1,H2], v_o[1,1],
+//!            w1[M,H1], w2[H1,H2], w_out[H2,1]
+//!   outputs: (v_e', v1', v2', v_o', s1[1,H1], s2[1,H2])
+
+use super::HloRuntime;
+use crate::Result;
+use anyhow::Context;
+use std::path::Path;
+
+/// Mutable network state carried across timesteps.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepState {
+    pub v_e: Vec<i32>,
+    pub v1: Vec<i32>,
+    pub v2: Vec<i32>,
+    pub v_o: i32,
+}
+
+impl StepState {
+    pub fn zeros(m: usize, h1: usize, h2: usize) -> Self {
+        Self {
+            v_e: vec![0; m],
+            v1: vec![0; h1],
+            v2: vec![0; h2],
+            v_o: 0,
+        }
+    }
+}
+
+/// Output spikes of one executed step.
+#[derive(Clone, Debug)]
+pub struct StepSpikes {
+    pub s1: Vec<i32>,
+    pub s2: Vec<i32>,
+}
+
+/// The compiled step function.
+pub struct SentimentStepRuntime {
+    rt: HloRuntime,
+    pub m: usize,
+    pub h1: usize,
+    pub h2: usize,
+    w1: Vec<i32>,
+    w2: Vec<i32>,
+    w_out: Vec<i32>,
+}
+
+impl SentimentStepRuntime {
+    /// Load from the artifact bundle (HLO text + weight tensors).
+    pub fn load(artifacts_dir: impl AsRef<Path>, m: usize, h1: usize, h2: usize) -> Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        let path = dir.join("sentiment_step.hlo.txt");
+        let flat_i32 = |name: &str| -> Result<Vec<i32>> {
+            Ok(crate::data::Tensor::read(dir.join("sentiment").join(name))?
+                .to_i64()?
+                .iter()
+                .map(|&v| v as i32)
+                .collect())
+        };
+        let w1 = flat_i32("w1.bin")?;
+        let w2 = flat_i32("w2.bin")?;
+        let w_out = flat_i32("w_out.bin")?;
+        anyhow::ensure!(w1.len() == m * h1 && w2.len() == h1 * h2 && w_out.len() == h2);
+        Ok(Self {
+            rt: HloRuntime::load(&path).context("load sentiment step HLO")?,
+            m,
+            h1,
+            h2,
+            w1,
+            w2,
+            w_out,
+        })
+    }
+
+    /// Run one timestep in place; returns the hidden-layer spikes.
+    pub fn step(&self, x_q: &[i32], state: &mut StepState) -> Result<StepSpikes> {
+        anyhow::ensure!(x_q.len() == self.m, "x_q length {}", x_q.len());
+        let outs = self.rt.execute_i32(&[
+            (x_q.to_vec(), vec![1, self.m]),
+            (state.v_e.clone(), vec![1, self.m]),
+            (state.v1.clone(), vec![1, self.h1]),
+            (state.v2.clone(), vec![1, self.h2]),
+            (vec![state.v_o], vec![1, 1]),
+            (self.w1.clone(), vec![self.m, self.h1]),
+            (self.w2.clone(), vec![self.h1, self.h2]),
+            (self.w_out.clone(), vec![self.h2, 1]),
+        ])?;
+        anyhow::ensure!(outs.len() == 6, "expected 6 outputs, got {}", outs.len());
+        state.v_e = outs[0].clone();
+        state.v1 = outs[1].clone();
+        state.v2 = outs[2].clone();
+        state.v_o = outs[3][0];
+        Ok(StepSpikes {
+            s1: outs[4].clone(),
+            s2: outs[5].clone(),
+        })
+    }
+
+    /// Classify a full review through the XLA path.
+    pub fn run_review(
+        &self,
+        emb_q: &[Vec<i64>],
+        word_ids: &[i64],
+        t_word: usize,
+    ) -> Result<(u8, Vec<i32>)> {
+        let mut state = StepState::zeros(self.m, self.h1, self.h2);
+        let mut trace = Vec::new();
+        for &wid in word_ids {
+            if wid < 0 {
+                break;
+            }
+            let x: Vec<i32> = emb_q[wid as usize].iter().map(|&v| v as i32).collect();
+            for _ in 0..t_word {
+                self.step(&x, &mut state)?;
+            }
+            trace.push(state.v_o);
+        }
+        Ok(((state.v_o >= 0) as u8, trace))
+    }
+}

@@ -1,0 +1,290 @@
+//! Convolutional layer executor over a macro pool (paper Fig 3b).
+
+use super::{LayerParams, LayerStats, SpikeMap};
+use crate::bitcell::Parity;
+use crate::isa::neuron_sequence;
+use crate::macro_sim::{ImpulseMacro, MacroConfig};
+use crate::mapper::{ConvLayout, OUTPUTS_PER_TILE};
+use crate::Result;
+
+/// A SAME-padded k×k conv layer distributed across a pool of macros:
+/// kernel weights are replicated into every macro of a channel group;
+/// each macro owns the membrane potentials of up to 13 output pixels.
+pub struct ConvLayer {
+    pub layout: ConvLayout,
+    macros: Vec<ImpulseMacro>,
+    params: LayerParams,
+}
+
+impl ConvLayer {
+    /// Build from a dense kernel `[ky][kx][c_in][c_out]` (flattened,
+    /// 6-bit values).
+    pub fn new(
+        kernel_flat: &[i64],
+        h: usize,
+        w: usize,
+        c_in: usize,
+        c_out: usize,
+        ksize: usize,
+        params: LayerParams,
+        config: MacroConfig,
+    ) -> Result<Self> {
+        let layout = ConvLayout::new(h, w, c_in, c_out, ksize).map_err(anyhow::Error::from)?;
+        assert_eq!(kernel_flat.len(), ksize * ksize * c_in * c_out);
+        let mut macros = Vec::with_capacity(layout.num_macros());
+        for g in 0..layout.n_channel_groups {
+            for _ in 0..layout.macros_per_group() {
+                let mut m = ImpulseMacro::new(config);
+                for ky in 0..ksize {
+                    for kx in 0..ksize {
+                        for c in 0..c_in {
+                            let row = layout.tile_row_weights(kernel_flat, g, ky, kx, c);
+                            m.write_weights(layout.tap_row(ky, kx, c), &row)?;
+                        }
+                    }
+                }
+                let cr = layout.const_rows;
+                for (parity, thr, rst, lk) in [
+                    (Parity::Odd, cr.neg_thr_odd, cr.reset_odd, cr.neg_leak_odd),
+                    (Parity::Even, cr.neg_thr_even, cr.reset_even, cr.neg_leak_even),
+                ] {
+                    m.write_v(thr, parity, &[-params.threshold; 6])?;
+                    m.write_v(rst, parity, &[params.reset; 6])?;
+                    m.write_v(lk, parity, &[-params.leak; 6])?;
+                }
+                // zero all pixel V rows
+                for p in 0..layout.pixels_per_macro {
+                    m.write_v(2 * p, Parity::Odd, &[0; 6])?;
+                    m.write_v(2 * p + 1, Parity::Even, &[0; 6])?;
+                }
+                m.reset_counters();
+                macros.push(m);
+            }
+        }
+        Ok(Self {
+            layout,
+            macros,
+            params,
+        })
+    }
+
+    /// One timestep: returns the output spike map (h × w × c_out).
+    pub fn step(&mut self, input: &SpikeMap) -> Result<SpikeMap> {
+        let l = &self.layout;
+        assert_eq!((input.h, input.w, input.c), (l.h(), l.w(), l.c_in));
+        let mut out = SpikeMap::new(l.h(), l.w(), l.c_out);
+        let mut spiking_rows: Vec<usize> = Vec::with_capacity(l.fan_in());
+        for y in 0..l.h() {
+            for x in 0..l.w() {
+                // spiking taps of this pixel's window (shared across groups)
+                spiking_rows.clear();
+                for (w_row, iy, ix, c) in l.window(y, x) {
+                    if input.get(iy, ix, c) {
+                        spiking_rows.push(w_row);
+                    }
+                }
+                for g in 0..l.n_channel_groups {
+                    let a = l.assign(y, x, g);
+                    let m = &mut self.macros[a.macro_id];
+                    for (parity, v) in
+                        [(Parity::Odd, a.v_row_odd), (Parity::Even, a.v_row_even)]
+                    {
+                        m.acc_w2v_batch(&spiking_rows, v, parity)?;
+                    }
+                    // neuron update for this pixel
+                    for (parity, v) in
+                        [(Parity::Odd, a.v_row_odd), (Parity::Even, a.v_row_even)]
+                    {
+                        let rows = l.const_rows.for_parity(parity);
+                        for instr in neuron_sequence(self.params.neuron, v, rows, parity) {
+                            m.execute(&instr)?;
+                        }
+                        let spikes = m.spikes(parity);
+                        for (field, &sp) in spikes.iter().enumerate() {
+                            let local = match parity {
+                                Parity::Odd => 2 * field,
+                                Parity::Even => 2 * field + 1,
+                            };
+                            let co = g * OUTPUTS_PER_TILE + local;
+                            if co < l.c_out && sp {
+                                out.set(y, x, co, true);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Zero all pixel membrane potentials.
+    pub fn reset_state(&mut self) -> Result<()> {
+        let pixels = self.layout.pixels_per_macro;
+        for m in self.macros.iter_mut() {
+            for p in 0..pixels {
+                m.write_v(2 * p, Parity::Odd, &[0; 6])?;
+                m.write_v(2 * p + 1, Parity::Even, &[0; 6])?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> LayerStats {
+        let mut s = LayerStats::default();
+        for m in &self.macros {
+            s.cycles += m.cycles();
+            for (k, v) in m.counts() {
+                *s.histogram.entry(k).or_insert(0) += v;
+            }
+        }
+        s
+    }
+
+    pub fn reset_counters(&mut self) {
+        for m in self.macros.iter_mut() {
+            m.reset_counters();
+        }
+    }
+
+    pub fn num_macros(&self) -> usize {
+        self.macros.len()
+    }
+}
+
+// Convenience accessors (the layout's field names are h/w-ambiguous).
+impl ConvLayout {
+    pub fn h(&self) -> usize {
+        self.height
+    }
+    pub fn w(&self) -> usize {
+        self.width
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::XorShiftRng;
+    use crate::neuron::{GoldenLayer, NeuronParams};
+
+    /// Golden conv: run each output pixel as an independent golden
+    /// neuron bank over its im2col window.
+    struct GoldenConv {
+        layout: ConvLayout,
+        #[allow(dead_code)]
+        kernel: Vec<i64>,
+        pixels: Vec<GoldenLayer>, // one per output pixel
+    }
+
+    impl GoldenConv {
+        fn new(kernel: Vec<i64>, h: usize, w: usize, c_in: usize, c_out: usize, p: LayerParams) -> Self {
+            let layout = ConvLayout::new(h, w, c_in, c_out, 3).unwrap();
+            let np = NeuronParams {
+                neuron: p.neuron,
+                threshold: p.threshold,
+                reset: p.reset,
+                leak: p.leak,
+            };
+            // weights[tap][co] for the full fan-in (taps = 9*c_in rows)
+            let fan = layout.fan_in();
+            let mut wm = vec![vec![0i64; c_out]; fan];
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    for c in 0..c_in {
+                        for co in 0..c_out {
+                            wm[layout.tap_row(ky, kx, c)][co] =
+                                kernel[((ky * 3 + kx) * c_in + c) * c_out + co];
+                        }
+                    }
+                }
+            }
+            let pixels = (0..h * w)
+                .map(|_| GoldenLayer::new(np, wm.clone()))
+                .collect();
+            Self {
+                layout,
+                kernel,
+                pixels,
+            }
+        }
+
+        fn step(&mut self, input: &SpikeMap) -> SpikeMap {
+            let l = &self.layout;
+            let mut out = SpikeMap::new(l.h(), l.w(), l.c_out);
+            for y in 0..l.h() {
+                for x in 0..l.w() {
+                    let mut in_spikes = vec![false; l.fan_in()];
+                    for (w_row, iy, ix, c) in l.window(y, x) {
+                        in_spikes[w_row] = input.get(iy, ix, c);
+                    }
+                    let s = self.pixels[y * l.w() + x].step(&in_spikes);
+                    for (co, &sp) in s.iter().enumerate() {
+                        out.set(y, x, co, sp);
+                    }
+                }
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn conv_layer_matches_golden_conv() {
+        let mut rng = XorShiftRng::new(99);
+        let (h, w, c_in, c_out) = (5, 5, 3, 14);
+        let n = 9 * c_in * c_out;
+        let kernel: Vec<i64> = (0..n).map(|_| rng.gen_i64(-10, 10)).collect();
+        let p = LayerParams::rmp(40);
+        let mut layer =
+            ConvLayer::new(&kernel, h, w, c_in, c_out, 3, p, MacroConfig::fast()).unwrap();
+        let mut golden = GoldenConv::new(kernel, h, w, c_in, c_out, p);
+        assert_eq!(layer.num_macros(), layer.layout.num_macros());
+        for t in 0..6 {
+            let mut input = SpikeMap::new(h, w, c_in);
+            for y in 0..h {
+                for x in 0..w {
+                    for c in 0..c_in {
+                        input.set(y, x, c, rng.gen_bool(0.25));
+                    }
+                }
+            }
+            let got = layer.step(&input).unwrap();
+            let want = golden.step(&input);
+            assert_eq!(got, want, "t={t}");
+        }
+    }
+
+    #[test]
+    fn silent_input_issues_no_accw2v() {
+        let kernel = vec![1i64; 9 * 2 * 4];
+        let mut layer = ConvLayer::new(
+            &kernel, 4, 4, 2, 4, 3,
+            LayerParams::rmp(100),
+            MacroConfig::fast(),
+        )
+        .unwrap();
+        layer.step(&SpikeMap::new(4, 4, 2)).unwrap();
+        let s = layer.stats();
+        assert_eq!(
+            s.histogram.get(&crate::isa::InstructionKind::AccW2V),
+            None
+        );
+    }
+
+    #[test]
+    fn reset_state_clears_potentials() {
+        let kernel = vec![5i64; 9 * 2 * 2];
+        let mut layer = ConvLayer::new(
+            &kernel, 3, 3, 2, 2, 3,
+            LayerParams::rmp(500),
+            MacroConfig::fast(),
+        )
+        .unwrap();
+        let mut input = SpikeMap::new(3, 3, 2);
+        input.set(1, 1, 0, true);
+        let o1 = layer.step(&input).unwrap();
+        layer.reset_state().unwrap();
+        // after reset, same input must give the same output again
+        let o2 = layer.step(&input).unwrap();
+        assert_eq!(o1, o2);
+    }
+}

@@ -1,0 +1,185 @@
+//! The digits network (modified LeNet-5, paper §III): Conv1 spike
+//! encoder (off-macro) → pool → Conv2 → pool → Conv3 → pool → FC1 →
+//! FC2 (output), with Conv2/Conv3/FC1/FC2 mapped on IMPULSE.
+
+use super::{ConvEncoder, ConvLayer, FcLayer, LayerParams, LayerStats, SparsityTracker};
+use crate::data::DigitsArtifacts;
+use crate::macro_sim::MacroConfig;
+use crate::Result;
+
+/// Result of classifying one image.
+#[derive(Clone, Debug)]
+pub struct DigitsResult {
+    pub pred: u8,
+    /// Final output potentials (10 classes).
+    pub v_out: Vec<i64>,
+    pub cycles: u64,
+}
+
+/// The mapped digits SNN.
+pub struct DigitsNetwork {
+    pub encoder: ConvEncoder,
+    pub conv2: ConvLayer,
+    pub conv3: ConvLayer,
+    pub fc1: FcLayer,
+    pub fc2: FcLayer,
+    pub t: usize,
+    /// Layers tracked: enc(conv1), conv2, conv3, fc1.
+    pub tracker: SparsityTracker,
+}
+
+impl DigitsNetwork {
+    pub fn from_artifacts(a: &DigitsArtifacts, config: MacroConfig) -> Result<Self> {
+        let c = a.k2_shape[2];
+        let t = 10;
+        Ok(Self {
+            encoder: ConvEncoder::new(a.k1.clone(), &a.k1_shape, a.thr_c1, 28, 28),
+            conv2: ConvLayer::new(
+                &a.k2, 14, 14, c, a.k2_shape[3], 3,
+                LayerParams::rmp(a.thr_c2),
+                config,
+            )?,
+            conv3: ConvLayer::new(
+                &a.k3, 7, 7, c, a.k3_shape[3], 3,
+                LayerParams::rmp(a.thr_c3),
+                config,
+            )?,
+            fc1: FcLayer::new(&a.w_fc1, LayerParams::rmp(a.thr_f1), config)?,
+            fc2: FcLayer::new(&a.w_fc2, LayerParams::rmp(1), config)?.output_only(),
+            t,
+            tracker: SparsityTracker::new(4, t),
+        })
+    }
+
+    /// Macros used by the on-macro layers.
+    pub fn num_macros(&self) -> usize {
+        self.conv2.num_macros()
+            + self.conv3.num_macros()
+            + self.fc1.num_macros()
+            + self.fc2.num_macros()
+    }
+
+    pub fn reset_state(&mut self) -> Result<()> {
+        self.conv2.reset_state()?;
+        self.conv3.reset_state()?;
+        self.fc1.reset_state()?;
+        self.fc2.reset_state()?;
+        Ok(())
+    }
+
+    /// Classify one 28×28 image.
+    pub fn run_image(&mut self, image: &[f32]) -> Result<DigitsResult> {
+        self.reset_state()?;
+        self.encoder.set_image(image);
+        let cycles0 = self.total_cycles();
+        for t in 0..self.t {
+            let s1 = self.encoder.step(); // 28×28×C
+            self.tracker
+                .record_counts(0, t, s1.flatten().iter().filter(|&&b| b).count() as u64, s1.len() as u64);
+            let p1 = s1.maxpool2(); // 14×14×C
+            let s2 = self.conv2.step(&p1)?;
+            self.tracker
+                .record_counts(1, t, s2.flatten().iter().filter(|&&b| b).count() as u64, s2.len() as u64);
+            let p2 = s2.maxpool2(); // 7×7×C
+            let s3 = self.conv3.step(&p2)?;
+            self.tracker
+                .record_counts(2, t, s3.flatten().iter().filter(|&&b| b).count() as u64, s3.len() as u64);
+            let p3 = s3.maxpool2(); // 3×3×C
+            let sf = self.fc1.step(&p3.flatten())?.to_vec();
+            self.tracker.record(3, t, &sf);
+            self.fc2.step(&sf)?;
+        }
+        let v_out = self.fc2.potentials()?;
+        let pred = v_out
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, v)| *v)
+            .map(|(i, _)| i as u8)
+            .unwrap_or(0);
+        Ok(DigitsResult {
+            pred,
+            v_out,
+            cycles: self.total_cycles() - cycles0,
+        })
+    }
+
+    pub fn stats(&self) -> LayerStats {
+        let mut s = self.conv2.stats();
+        s.merge(&self.conv3.stats());
+        s.merge(&self.fc1.stats());
+        s.merge(&self.fc2.stats());
+        s
+    }
+
+    fn total_cycles(&self) -> u64 {
+        self.conv2.stats().cycles
+            + self.conv3.stats().cycles
+            + self.fc1.stats().cycles
+            + self.fc2.stats().cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::XorShiftRng;
+    use crate::data::DigitsArtifacts;
+
+    fn mini_digits(seed: u64) -> DigitsArtifacts {
+        let mut rng = XorShiftRng::new(seed);
+        let c = 4usize; // small channel count for test speed
+        let k1: Vec<f32> = (0..9 * c).map(|_| (rng.gen_f64() - 0.3) as f32).collect();
+        let mut kernel = |n: usize| (0..n).map(|_| rng.gen_i64(-8, 8)).collect::<Vec<i64>>();
+        DigitsArtifacts {
+            k1,
+            k1_shape: vec![3, 3, 1, c],
+            thr_c1: 0.8,
+            k2: kernel(9 * c * c),
+            k2_shape: vec![3, 3, c, c],
+            k3: kernel(9 * c * c),
+            k3_shape: vec![3, 3, c, c],
+            w_fc1: (0..9 * c)
+                .map(|_| (0..20).map(|_| rng.gen_i64(-8, 8)).collect())
+                .collect(),
+            w_fc2: (0..20)
+                .map(|_| (0..10).map(|_| rng.gen_i64(-8, 8)).collect())
+                .collect(),
+            thr_c2: 30,
+            thr_c3: 30,
+            thr_f1: 40,
+            test_x: vec![],
+            test_y: vec![],
+        }
+    }
+
+    #[test]
+    fn digits_network_runs_end_to_end() {
+        let a = mini_digits(11);
+        let mut net = DigitsNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let mut rng = XorShiftRng::new(3);
+        let img: Vec<f32> = (0..28 * 28).map(|_| rng.gen_f64() as f32).collect();
+        let r = net.run_image(&img).unwrap();
+        assert!(r.pred < 10);
+        assert_eq!(r.v_out.len(), 10);
+        assert!(r.cycles > 0);
+        // deterministic
+        let r2 = net.run_image(&img).unwrap();
+        assert_eq!(r.v_out, r2.v_out);
+    }
+
+    #[test]
+    fn blank_image_mostly_silent() {
+        let a = mini_digits(12);
+        let mut net = DigitsNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let img = vec![0.0f32; 28 * 28];
+        let r = net.run_image(&img).unwrap();
+        // encoder gets zero current → zero spikes → no AccW2V anywhere
+        let s = net.stats();
+        assert_eq!(
+            s.histogram.get(&crate::isa::InstructionKind::AccW2V),
+            None,
+            "blank image must not fire synapses"
+        );
+        assert!(r.v_out.iter().all(|&v| v == 0));
+    }
+}

@@ -1,0 +1,200 @@
+//! Spike encoders — the network input layers, which live *off* the
+//! macro (paper: "the input layer acts as spike-encoder"; for the conv
+//! net, "the first Conv layer acts as a spike-encoder").
+
+use super::SpikeMap;
+
+/// Direct-input encoder: each of `m` neurons integrates its quantized
+/// input current every timestep and fires with RMP-style soft reset.
+/// Plain i32 state — hardware-exactly matches
+/// `python/compile/kernels/ref.py::encoder_step_ref`.
+#[derive(Clone, Debug)]
+pub struct Encoder {
+    pub threshold: i64,
+    v: Vec<i64>,
+    out: Vec<bool>,
+}
+
+impl Encoder {
+    pub fn new(m: usize, threshold: i64) -> Self {
+        assert!(threshold > 0);
+        Self {
+            threshold,
+            v: vec![0; m],
+            out: vec![false; m],
+        }
+    }
+
+    /// One timestep with input currents `x_q` (length m).
+    pub fn step(&mut self, x_q: &[i64]) -> &[bool] {
+        assert_eq!(x_q.len(), self.v.len());
+        for ((v, &x), o) in self.v.iter_mut().zip(x_q).zip(self.out.iter_mut()) {
+            *v += x;
+            let s = *v >= self.threshold;
+            if s {
+                *v -= self.threshold;
+            }
+            *o = s;
+        }
+        &self.out
+    }
+
+    pub fn reset_state(&mut self) {
+        self.v.iter_mut().for_each(|v| *v = 0);
+        self.out.iter_mut().for_each(|o| *o = false);
+    }
+
+    pub fn potentials(&self) -> &[i64] {
+        &self.v
+    }
+}
+
+/// Conv spike encoder: a float 3×3 SAME convolution whose output is the
+/// constant input current to per-pixel RMP neurons (the digits
+/// network's Conv1).
+#[derive(Clone, Debug)]
+pub struct ConvEncoder {
+    /// Kernel `[ky][kx][1][c_out]` flattened row-major.
+    kernel: Vec<f32>,
+    pub c_out: usize,
+    pub ksize: usize,
+    pub threshold: f32,
+    /// Per-pixel-channel state (f32, off-macro).
+    v: Vec<f32>,
+    h: usize,
+    w: usize,
+    /// Cached input currents for the current image.
+    current: Vec<f32>,
+}
+
+impl ConvEncoder {
+    pub fn new(
+        kernel: Vec<f32>,
+        kernel_shape: &[usize],
+        threshold: f32,
+        h: usize,
+        w: usize,
+    ) -> Self {
+        assert_eq!(kernel_shape.len(), 4);
+        assert_eq!(kernel_shape[2], 1, "encoder expects 1 input channel");
+        let (ksize, c_out) = (kernel_shape[0], kernel_shape[3]);
+        assert_eq!(kernel.len(), ksize * ksize * c_out);
+        Self {
+            kernel,
+            c_out,
+            ksize,
+            threshold,
+            v: vec![0.0; h * w * c_out],
+            h,
+            w,
+            current: vec![0.0; h * w * c_out],
+        }
+    }
+
+    /// Load a new image (h×w floats) and precompute the conv currents.
+    pub fn set_image(&mut self, image: &[f32]) {
+        assert_eq!(image.len(), self.h * self.w);
+        let half = self.ksize / 2;
+        for y in 0..self.h {
+            for x in 0..self.w {
+                for co in 0..self.c_out {
+                    let mut acc = 0.0f32;
+                    for ky in 0..self.ksize {
+                        for kx in 0..self.ksize {
+                            let iy = y as isize + ky as isize - half as isize;
+                            let ix = x as isize + kx as isize - half as isize;
+                            if iy < 0
+                                || ix < 0
+                                || iy >= self.h as isize
+                                || ix >= self.w as isize
+                            {
+                                continue;
+                            }
+                            let pix = image[iy as usize * self.w + ix as usize];
+                            let kidx = (ky * self.ksize + kx) * self.c_out + co;
+                            acc += pix * self.kernel[kidx];
+                        }
+                    }
+                    self.current[(y * self.w + x) * self.c_out + co] = acc;
+                }
+            }
+        }
+        self.v.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// One timestep: integrate the cached currents, fire, soft-reset.
+    pub fn step(&mut self) -> SpikeMap {
+        let mut out = SpikeMap::new(self.h, self.w, self.c_out);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                for co in 0..self.c_out {
+                    let idx = (y * self.w + x) * self.c_out + co;
+                    self.v[idx] += self.current[idx];
+                    if self.v[idx] >= self.threshold {
+                        self.v[idx] -= self.threshold;
+                        out.set(y, x, co, true);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoder_rate_tracks_current() {
+        // current = θ/2 → fires every other step (after the first two).
+        let mut e = Encoder::new(1, 10);
+        let pattern: Vec<bool> = (0..8).map(|_| e.step(&[5])[0]).collect();
+        assert_eq!(pattern, vec![false, true, false, true, false, true, false, true]);
+    }
+
+    #[test]
+    fn encoder_negative_current_never_fires() {
+        let mut e = Encoder::new(2, 10);
+        for _ in 0..20 {
+            let s = e.step(&[-3, 0]);
+            assert_eq!(s, &[false, false]);
+        }
+        assert_eq!(e.potentials()[0], -60);
+        e.reset_state();
+        assert_eq!(e.potentials(), &[0, 0]);
+    }
+
+    #[test]
+    fn encoder_residual_preserved() {
+        let mut e = Encoder::new(1, 10);
+        e.step(&[13]); // v=13 ≥ 10 → fire, residual 3
+        assert_eq!(e.potentials(), &[3]);
+    }
+
+    #[test]
+    fn conv_encoder_identity_kernel() {
+        // 1×1-ish: 3×3 kernel with only center tap = 1, 1 channel.
+        let mut k = vec![0.0f32; 9];
+        k[4] = 1.0; // center (ky=1,kx=1), c_out=1
+        let mut enc = ConvEncoder::new(k, &[3, 3, 1, 1], 0.5, 4, 4);
+        let mut img = vec![0.0f32; 16];
+        img[5] = 1.0; // pixel (1,1)
+        enc.set_image(&img);
+        let s = enc.step();
+        assert!(s.get(1, 1, 0));
+        assert_eq!(s.flatten().iter().filter(|&&b| b).count(), 1);
+    }
+
+    #[test]
+    fn conv_encoder_edge_clipping() {
+        // all-ones kernel, 1 channel: corner pixel sums a 2×2 region.
+        let k = vec![1.0f32; 9];
+        let mut enc = ConvEncoder::new(k, &[3, 3, 1, 1], 3.5, 3, 3);
+        enc.set_image(&[1.0; 9]);
+        let s = enc.step();
+        // corner current = 4 ≥ 3.5 fires; center current = 9 fires
+        assert!(s.get(0, 0, 0));
+        assert!(s.get(1, 1, 0));
+    }
+}

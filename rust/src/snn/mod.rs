@@ -1,0 +1,63 @@
+//! Network-level SNN inference on IMPULSE macro pools.
+//!
+//! Layers own their macros (one per mapped tile), translate spikes into
+//! in-memory instruction streams — issuing AccW2V *only for spiking
+//! inputs*, the macro's sparsity mechanism — and aggregate instruction
+//! histograms for the energy model.
+
+mod conv_layer;
+mod digits;
+mod encoder;
+mod fc_layer;
+pub(crate) mod network;
+mod spikes;
+
+pub use conv_layer::ConvLayer;
+pub use digits::{DigitsNetwork, DigitsResult};
+pub use encoder::{ConvEncoder, Encoder};
+pub use fc_layer::{FcLayer, LayerStats};
+pub use network::{ReviewResult, SentimentNetwork};
+pub use spikes::{SparsityTracker, SpikeMap};
+
+use crate::isa::NeuronType;
+
+/// Integer neuron parameters of a mapped layer (quantized domain).
+#[derive(Clone, Copy, Debug)]
+pub struct LayerParams {
+    pub neuron: NeuronType,
+    /// Firing threshold θ (1..1023).
+    pub threshold: i64,
+    /// Hard-reset value (IF/LIF).
+    pub reset: i64,
+    /// Subtractive leak (LIF).
+    pub leak: i64,
+}
+
+impl LayerParams {
+    pub fn rmp(threshold: i64) -> Self {
+        Self {
+            neuron: NeuronType::RMP,
+            threshold,
+            reset: 0,
+            leak: 0,
+        }
+    }
+
+    pub fn if_(threshold: i64) -> Self {
+        Self {
+            neuron: NeuronType::IF,
+            threshold,
+            reset: 0,
+            leak: 0,
+        }
+    }
+
+    pub fn lif(threshold: i64, leak: i64) -> Self {
+        Self {
+            neuron: NeuronType::LIF,
+            threshold,
+            reset: 0,
+            leak,
+        }
+    }
+}

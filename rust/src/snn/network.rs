@@ -1,0 +1,211 @@
+//! The sentiment network: spike encoder → FC1 → FC2 → output neuron,
+//! processing one word per `t_word` timesteps with V_MEM carrying the
+//! sequence memory (paper §III, Figs 9b/10/11a).
+
+use super::{Encoder, FcLayer, LayerParams, LayerStats, SparsityTracker};
+use crate::data::SentimentArtifacts;
+use crate::macro_sim::MacroConfig;
+use crate::Result;
+
+/// Result of classifying one review.
+#[derive(Clone, Debug)]
+pub struct ReviewResult {
+    /// Predicted label (1 = positive).
+    pub pred: u8,
+    /// Final output-neuron membrane potential.
+    pub v_out: i64,
+    /// V_out after each word (the Fig 10 trace).
+    pub vout_trace: Vec<i64>,
+    /// Total CIM cycles consumed on the macros.
+    pub cycles: u64,
+}
+
+/// The mapped sentiment SNN.
+pub struct SentimentNetwork {
+    emb: Vec<Vec<i64>>,
+    pub encoder: Encoder,
+    pub fc1: FcLayer,
+    pub fc2: FcLayer,
+    pub out: FcLayer,
+    pub t_word: usize,
+    /// Per-layer per-timestep sparsity stats (layers: enc, fc1, fc2).
+    pub tracker: SparsityTracker,
+}
+
+impl SentimentNetwork {
+    /// Build from loaded artifacts.
+    pub fn from_artifacts(a: &SentimentArtifacts, config: MacroConfig) -> Result<Self> {
+        a.validate()?;
+        let w_out: Vec<Vec<i64>> = a.w_out.iter().map(|&w| vec![w]).collect();
+        Ok(Self {
+            emb: a.emb_q.clone(),
+            encoder: Encoder::new(a.w1.len(), a.thr_enc),
+            fc1: FcLayer::new(&a.w1, LayerParams::rmp(a.thr1), config)?,
+            fc2: FcLayer::new(&a.w2, LayerParams::rmp(a.thr2), config)?,
+            out: FcLayer::new(&w_out, LayerParams::rmp(1), config)?.output_only(),
+            t_word: 10,
+            tracker: SparsityTracker::new(3, 10),
+        })
+    }
+
+    /// Total macros across mapped layers.
+    pub fn num_macros(&self) -> usize {
+        self.fc1.num_macros() + self.fc2.num_macros() + self.out.num_macros()
+    }
+
+    /// Trainable-parameter count of the mapped model (paper: 29.3K).
+    pub fn num_params(&self) -> usize {
+        self.fc1.fan_in() * self.fc1.width()
+            + self.fc2.fan_in() * self.fc2.width()
+            + self.out.fan_in() * self.out.width()
+            + 3 // thresholds
+    }
+
+    /// Reset all state for a new review.
+    pub fn reset_state(&mut self) -> Result<()> {
+        self.encoder.reset_state();
+        self.fc1.reset_state()?;
+        self.fc2.reset_state()?;
+        self.out.reset_state()?;
+        Ok(())
+    }
+
+    /// Classify one review (a slice of word ids; ids < 0 are padding
+    /// and terminate the sequence).
+    pub fn run_review(&mut self, word_ids: &[i64]) -> Result<ReviewResult> {
+        self.reset_state()?;
+        let cycles0 = self.total_cycles();
+        let mut vout_trace = Vec::new();
+        for &wid in word_ids {
+            if wid < 0 {
+                break;
+            }
+            let x = &self.emb[wid as usize];
+            for t in 0..self.t_word {
+                // disjoint field borrows: each layer's output slice is
+                // consumed by the next without copying
+                let s0 = self.encoder.step(x);
+                self.tracker.record(0, t, s0);
+                let s1 = self.fc1.step(s0)?;
+                self.tracker.record(1, t, s1);
+                let s2 = self.fc2.step(s1)?;
+                self.tracker.record(2, t, s2);
+                self.out.step(s2)?;
+            }
+            vout_trace.push(self.out.potentials()?[0]);
+        }
+        let v_out = *vout_trace.last().unwrap_or(&0);
+        Ok(ReviewResult {
+            pred: (v_out >= 0) as u8,
+            v_out,
+            vout_trace,
+            cycles: self.total_cycles() - cycles0,
+        })
+    }
+
+    /// Aggregate instruction stats across all mapped layers.
+    pub fn stats(&self) -> LayerStats {
+        let mut s = self.fc1.stats();
+        s.merge(&self.fc2.stats());
+        s.merge(&self.out.stats());
+        s
+    }
+
+    fn total_cycles(&self) -> u64 {
+        self.fc1.stats().cycles + self.fc2.stats().cycles + self.out.stats().cycles
+    }
+
+    /// Reset counters (keeps weights and state).
+    pub fn reset_counters(&mut self) {
+        self.fc1.reset_counters();
+        self.fc2.reset_counters();
+        self.out.reset_counters();
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::bits::XorShiftRng;
+
+    /// Synthetic mini-artifacts for fast tests (no file IO).
+    pub(crate) fn mini_artifacts(seed: u64) -> SentimentArtifacts {
+        let mut rng = XorShiftRng::new(seed);
+        let vocab = 20;
+        let emb_q: Vec<Vec<i64>> = (0..vocab)
+            .map(|_| (0..100).map(|_| rng.gen_i64(-40, 40)).collect())
+            .collect();
+        let w1: Vec<Vec<i64>> = (0..100)
+            .map(|_| (0..128).map(|_| rng.gen_i64(-6, 6)).collect())
+            .collect();
+        let w2: Vec<Vec<i64>> = (0..128)
+            .map(|_| (0..128).map(|_| rng.gen_i64(-6, 6)).collect())
+            .collect();
+        let w_out: Vec<i64> = (0..128).map(|_| rng.gen_i64(-10, 10)).collect();
+        SentimentArtifacts {
+            emb_q,
+            w1,
+            w2,
+            w_out,
+            thr_enc: 60,
+            thr1: 150,
+            thr2: 200,
+            test_seqs: vec![vec![1, 2, 3, -1]],
+            test_lens: vec![3],
+            test_labels: vec![1],
+            ref_vout_traces: vec![],
+            ref_preds: vec![],
+        }
+    }
+
+    #[test]
+    fn network_builds_with_paper_parameter_count() {
+        let a = mini_artifacts(1);
+        let net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        // 100·128 + 128·128 + 128 + 3 = 29315 — the paper's 29.3K.
+        assert_eq!(net.num_params(), 29315);
+        assert_eq!(net.num_macros(), 11 + 11 + 1);
+    }
+
+    #[test]
+    fn run_review_is_deterministic_and_tracks_words() {
+        let a = mini_artifacts(2);
+        let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let r1 = net.run_review(&[3, 7, 5]).unwrap();
+        let r2 = net.run_review(&[3, 7, 5]).unwrap();
+        assert_eq!(r1.vout_trace, r2.vout_trace);
+        assert_eq!(r1.vout_trace.len(), 3);
+        assert!(r1.cycles > 0);
+    }
+
+    #[test]
+    fn padding_terminates_sequence() {
+        let a = mini_artifacts(3);
+        let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let r = net.run_review(&[4, 2, -1, 9, 9]).unwrap();
+        assert_eq!(r.vout_trace.len(), 2);
+    }
+
+    #[test]
+    fn sparsity_tracker_populated() {
+        let a = mini_artifacts(4);
+        let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        net.run_review(&[1, 2, 3, 4]).unwrap();
+        let overall = net.tracker.overall();
+        assert!(overall > 0.3 && overall <= 1.0, "sparsity {overall}");
+    }
+
+    #[test]
+    fn accw2v_count_equals_twice_spike_count() {
+        // The scheduler's sparsity contract: every upstream spike costs
+        // exactly 2 AccW2V per downstream tile-macro.
+        let a = mini_artifacts(5);
+        let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        net.run_review(&[1, 2]).unwrap();
+        let s = net.stats();
+        let acc = s.histogram[&crate::isa::InstructionKind::AccW2V];
+        assert!(acc > 0);
+        // consistency: AccW2V is even (odd+even cycles come in pairs)
+        assert_eq!(acc % 2, 0);
+    }
+}

@@ -1,0 +1,223 @@
+//! Spike containers and sparsity accounting (Fig 11a).
+
+/// A 3-D binary spike volume (height × width × channels), the
+/// inter-layer currency of the conv network.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpikeMap {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    bits: Vec<bool>,
+}
+
+impl SpikeMap {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Self {
+            h,
+            w,
+            c,
+            bits: vec![false; h * w * c],
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> bool {
+        self.bits[(y * self.w + x) * self.c + ch]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: bool) {
+        self.bits[(y * self.w + x) * self.c + ch] = v;
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    /// Fraction of set bits.
+    pub fn density(&self) -> f64 {
+        if self.bits.is_empty() {
+            return 0.0;
+        }
+        self.bits.iter().filter(|&&b| b).count() as f64 / self.bits.len() as f64
+    }
+
+    /// 2×2 max-pool (binary OR — exact on spike maps), VALID padding.
+    pub fn maxpool2(&self) -> SpikeMap {
+        let (oh, ow) = (self.h / 2, self.w / 2);
+        let mut out = SpikeMap::new(oh, ow, self.c);
+        for y in 0..oh {
+            for x in 0..ow {
+                for ch in 0..self.c {
+                    let v = self.get(2 * y, 2 * x, ch)
+                        || self.get(2 * y, 2 * x + 1, ch)
+                        || self.get(2 * y + 1, 2 * x, ch)
+                        || self.get(2 * y + 1, 2 * x + 1, ch);
+                    out.set(y, x, ch, v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Flatten to a plain spike vector (row-major, channel innermost).
+    pub fn flatten(&self) -> Vec<bool> {
+        self.bits.clone()
+    }
+
+    pub fn from_flat(h: usize, w: usize, c: usize, bits: Vec<bool>) -> Self {
+        assert_eq!(bits.len(), h * w * c);
+        Self { h, w, c, bits }
+    }
+}
+
+/// Accumulates per-layer per-timestep spike statistics across a run —
+/// the data behind Fig 11(a).
+#[derive(Clone, Debug)]
+pub struct SparsityTracker {
+    layers: usize,
+    timesteps: usize,
+    /// spikes[layer][t], total[layer][t]
+    spikes: Vec<Vec<u64>>,
+    total: Vec<Vec<u64>>,
+}
+
+impl SparsityTracker {
+    pub fn new(layers: usize, timesteps: usize) -> Self {
+        Self {
+            layers,
+            timesteps,
+            spikes: vec![vec![0; timesteps]; layers],
+            total: vec![vec![0; timesteps]; layers],
+        }
+    }
+
+    /// Record one layer's spike vector at timestep `t` (mod the window;
+    /// for the sentiment net t is the within-word timestep).
+    pub fn record(&mut self, layer: usize, t: usize, spikes: &[bool]) {
+        let t = t % self.timesteps;
+        self.spikes[layer][t] += spikes.iter().filter(|&&s| s).count() as u64;
+        self.total[layer][t] += spikes.len() as u64;
+    }
+
+    /// Record from a count (for map-shaped layers).
+    pub fn record_counts(&mut self, layer: usize, t: usize, fired: u64, total: u64) {
+        let t = t % self.timesteps;
+        self.spikes[layer][t] += fired;
+        self.total[layer][t] += total;
+    }
+
+    /// Sparsity (1 − firing-fraction) of a layer at a timestep.
+    pub fn sparsity(&self, layer: usize, t: usize) -> f64 {
+        let tot = self.total[layer][t];
+        if tot == 0 {
+            return 1.0;
+        }
+        1.0 - self.spikes[layer][t] as f64 / tot as f64
+    }
+
+    /// Mean sparsity of one layer across timesteps.
+    pub fn layer_sparsity(&self, layer: usize) -> f64 {
+        let s: u64 = self.spikes[layer].iter().sum();
+        let t: u64 = self.total[layer].iter().sum();
+        if t == 0 {
+            return 1.0;
+        }
+        1.0 - s as f64 / t as f64
+    }
+
+    /// Overall sparsity across all layers.
+    pub fn overall(&self) -> f64 {
+        let s: u64 = self.spikes.iter().flatten().sum();
+        let t: u64 = self.total.iter().flatten().sum();
+        if t == 0 {
+            return 1.0;
+        }
+        1.0 - s as f64 / t as f64
+    }
+
+    /// The Fig 11(a) series: rows = layers, cols = timesteps.
+    pub fn table(&self) -> Vec<Vec<f64>> {
+        (0..self.layers)
+            .map(|l| (0..self.timesteps).map(|t| self.sparsity(l, t)).collect())
+            .collect()
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn timesteps(&self) -> usize {
+        self.timesteps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spikemap_get_set_density() {
+        let mut m = SpikeMap::new(4, 4, 2);
+        m.set(0, 0, 0, true);
+        m.set(3, 3, 1, true);
+        assert!(m.get(0, 0, 0));
+        assert!(!m.get(0, 0, 1));
+        assert!((m.density() - 2.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn maxpool_is_binary_or() {
+        let mut m = SpikeMap::new(4, 4, 1);
+        m.set(0, 1, 0, true); // window (0,0)
+        m.set(3, 3, 0, true); // window (1,1)
+        let p = m.maxpool2();
+        assert_eq!(p.h, 2);
+        assert!(p.get(0, 0, 0));
+        assert!(!p.get(0, 1, 0));
+        assert!(!p.get(1, 0, 0));
+        assert!(p.get(1, 1, 0));
+    }
+
+    #[test]
+    fn maxpool_odd_dims_floor() {
+        let m = SpikeMap::new(7, 7, 3);
+        let p = m.maxpool2();
+        assert_eq!((p.h, p.w, p.c), (3, 3, 3));
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let mut m = SpikeMap::new(2, 3, 2);
+        m.set(1, 2, 1, true);
+        let f = m.flatten();
+        let m2 = SpikeMap::from_flat(2, 3, 2, f);
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn sparsity_tracker_math() {
+        let mut t = SparsityTracker::new(2, 3);
+        t.record(0, 0, &[true, false, false, false]); // 25% firing
+        t.record(0, 0, &[false, false, false, false]);
+        t.record(1, 2, &[true, true]);
+        assert!((t.sparsity(0, 0) - 0.875).abs() < 1e-12);
+        assert_eq!(t.sparsity(1, 2), 0.0);
+        assert_eq!(t.sparsity(1, 0), 1.0); // nothing recorded
+        assert!((t.layer_sparsity(0) - 0.875).abs() < 1e-12);
+        let table = t.table();
+        assert_eq!(table.len(), 2);
+        assert_eq!(table[0].len(), 3);
+    }
+
+    #[test]
+    fn tracker_timestep_wraps() {
+        let mut t = SparsityTracker::new(1, 10);
+        t.record(0, 13, &[true]); // lands in slot 3
+        assert_eq!(t.sparsity(0, 3), 0.0);
+    }
+}

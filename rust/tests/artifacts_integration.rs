@@ -1,0 +1,210 @@
+//! Integration tests over the AOT artifact bundle: the Rust macro
+//! stack must agree with the Python/Pallas reference *bit-for-bit*, and
+//! the PJRT-executed HLO must agree with both.
+//!
+//! These tests are skipped (with a notice) if `make artifacts` has not
+//! run yet.
+
+use impulse::data::{artifacts_available, artifacts_dir, KernelVector, SentimentArtifacts};
+use impulse::isa::NeuronType;
+use impulse::macro_sim::MacroConfig;
+use impulse::neuron::{GoldenLayer, NeuronParams};
+use impulse::snn::{FcLayer, LayerParams, SentimentNetwork};
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn neuron_of(mode: i64) -> NeuronType {
+    match mode {
+        0 => NeuronType::IF,
+        1 => NeuronType::LIF,
+        _ => NeuronType::RMP,
+    }
+}
+
+/// L1 cross-check: exported Pallas/ref test vectors vs the Rust golden
+/// neuron model.
+#[test]
+fn kernel_vectors_match_golden_model() {
+    require_artifacts!();
+    let vectors = KernelVector::load_all(artifacts_dir()).expect("load kernel vectors");
+    assert!(vectors.len() >= 4, "expected ≥4 vectors");
+    for kv in &vectors {
+        let params = NeuronParams {
+            neuron: neuron_of(kv.mode),
+            threshold: kv.threshold,
+            reset: 0,
+            leak: kv.leak,
+        };
+        for (b, batch_spikes) in kv.spikes.iter().enumerate() {
+            let mut layer = GoldenLayer::new(params, kv.weights.clone());
+            // seed V state
+            for (n, st) in layer.state.iter_mut().enumerate() {
+                st.v = kv.v[b][n];
+            }
+            let in_spikes: Vec<bool> = batch_spikes.iter().map(|&s| s == 1).collect();
+            let out = layer.step(&in_spikes);
+            let got_v = layer.potentials();
+            assert_eq!(got_v, kv.v_next[b], "{}: batch {b} V mismatch", kv.name);
+            let want_s: Vec<bool> = kv.spikes_out[b].iter().map(|&s| s == 1).collect();
+            assert_eq!(out, want_s, "{}: batch {b} spike mismatch", kv.name);
+        }
+    }
+}
+
+/// L1 → macro: the same vectors executed on the *mapped bit-level
+/// macro* (the silicon-faithful path).
+#[test]
+fn kernel_vectors_match_macro_simulation() {
+    require_artifacts!();
+    let vectors = KernelVector::load_all(artifacts_dir()).expect("load kernel vectors");
+    // the bit-level engine is slow; the small vector suffices there,
+    // the rest run on the fast engine (which lib tests prove identical)
+    for kv in &vectors {
+        let cfg = if kv.weights.len() <= 16 {
+            MacroConfig::lockstep()
+        } else {
+            MacroConfig::fast()
+        };
+        let params = LayerParams {
+            neuron: neuron_of(kv.mode),
+            threshold: kv.threshold,
+            reset: 0,
+            leak: kv.leak,
+        };
+        for (b, batch_spikes) in kv.spikes.iter().enumerate() {
+            let mut layer = FcLayer::new(&kv.weights, params, cfg).expect("map layer");
+            // Seed V by replaying: write potentials via an initial
+            // "current injection" is not possible directly, so instead
+            // check from zero state: run one step with the vector's
+            // spikes on zero-V and compare against golden on zero-V.
+            let mut golden = GoldenLayer::new(
+                NeuronParams {
+                    neuron: params.neuron,
+                    threshold: params.threshold,
+                    reset: 0,
+                    leak: params.leak,
+                },
+                kv.weights.clone(),
+            );
+            let in_spikes: Vec<bool> = batch_spikes.iter().map(|&s| s == 1).collect();
+            let got = layer.step(&in_spikes).expect("step").to_vec();
+            let want = golden.step(&in_spikes);
+            assert_eq!(got, want, "{}: batch {b}", kv.name);
+            assert_eq!(
+                layer.potentials().expect("potentials"),
+                golden.potentials(),
+                "{}: batch {b} V",
+                kv.name
+            );
+        }
+    }
+}
+
+/// L2/L3 cross-check: the full sentiment network on the macro simulator
+/// must reproduce the Python integer model's V_out traces exactly.
+#[test]
+fn sentiment_network_matches_python_reference_traces() {
+    require_artifacts!();
+    let a = SentimentArtifacts::load(artifacts_dir()).expect("load sentiment artifacts");
+    a.validate().expect("artifact validation");
+    let mut net =
+        SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).expect("build network");
+    let n_ref = a.ref_vout_traces.len().min(16);
+    for i in 0..n_ref {
+        let r = net.run_review(&a.test_seqs[i]).expect("run review");
+        let want: Vec<i64> = a.ref_vout_traces[i]
+            .iter()
+            .copied()
+            .take(r.vout_trace.len())
+            .collect();
+        assert_eq!(
+            r.vout_trace, want,
+            "review {i}: macro-sim V_out trace diverges from Python reference"
+        );
+        assert_eq!(r.pred, a.ref_preds[i], "review {i} prediction");
+    }
+}
+
+/// Accuracy: the macro-level evaluation must land on the manifest's
+/// quantized accuracy (same data, same semantics → identical).
+#[test]
+fn sentiment_accuracy_matches_manifest() {
+    require_artifacts!();
+    let dir = artifacts_dir();
+    let a = SentimentArtifacts::load(&dir).expect("load artifacts");
+    let man = impulse::data::Manifest::read(dir.join("manifest.txt")).expect("manifest");
+    let expect: f64 = man.get_f64("snn_sentiment_quant_acc").expect("acc key");
+
+    let mut net =
+        SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).expect("build network");
+    let n = 250.min(a.test_seqs.len());
+    let mut correct = 0usize;
+    for i in 0..n {
+        let r = net.run_review(&a.test_seqs[i]).expect("run");
+        if r.pred == a.test_labels[i] {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    // subset vs full-set: allow sampling slack
+    assert!(
+        (acc - expect).abs() < 0.08,
+        "macro accuracy {acc:.4} vs manifest {expect:.4}"
+    );
+}
+
+/// L3 runtime: the PJRT-executed AOT graph must match the macro
+/// simulator exactly (same integers), proving all three layers compose.
+#[test]
+fn pjrt_runtime_matches_macro_simulation() {
+    require_artifacts!();
+    let dir = artifacts_dir();
+    let a = SentimentArtifacts::load(&dir).expect("load artifacts");
+    let rt = impulse::runtime::SentimentStepRuntime::load(
+        &dir,
+        a.w1.len(),
+        a.w1[0].len(),
+        a.w2[0].len(),
+    )
+    .expect("load + compile HLO");
+    let mut net =
+        SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).expect("build network");
+    for i in 0..4.min(a.test_seqs.len()) {
+        let (pred_xla, trace_xla) = rt
+            .run_review(&a.emb_q, &a.test_seqs[i], 10)
+            .expect("xla run");
+        let r = net.run_review(&a.test_seqs[i]).expect("macro run");
+        let trace_xla_i64: Vec<i64> = trace_xla.iter().map(|&v| v as i64).collect();
+        assert_eq!(
+            r.vout_trace, trace_xla_i64,
+            "review {i}: macro vs XLA trace"
+        );
+        assert_eq!(r.pred, pred_xla, "review {i}: prediction");
+    }
+}
+
+/// Sparsity: the network's measured overall sparsity should sit in the
+/// paper's ~85% band (manifest cross-check with tolerance).
+#[test]
+fn sparsity_in_paper_band() {
+    require_artifacts!();
+    let dir = artifacts_dir();
+    let a = SentimentArtifacts::load(&dir).expect("load artifacts");
+    let mut net =
+        SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).expect("build network");
+    for i in 0..50.min(a.test_seqs.len()) {
+        net.run_review(&a.test_seqs[i]).expect("run");
+    }
+    let overall = net.tracker.overall();
+    assert!(
+        overall > 0.75 && overall < 0.995,
+        "overall sparsity {overall:.3} outside plausible band"
+    );
+}

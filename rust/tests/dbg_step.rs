@@ -1,0 +1,18 @@
+use impulse::data::{artifacts_dir, SentimentArtifacts};
+use impulse::runtime::{SentimentStepRuntime, StepState};
+
+#[test]
+fn dbg_one_step() {
+    let dir = artifacts_dir();
+    let a = SentimentArtifacts::load(&dir).unwrap();
+    let rt = SentimentStepRuntime::load(&dir, 100, 128, 128).unwrap();
+    let wid = a.test_seqs[0][0] as usize;
+    let x: Vec<i32> = a.emb_q[wid].iter().map(|&v| v as i32).collect();
+    let mut st = StepState::zeros(100, 128, 128);
+    rt.step(&x, &mut st).unwrap();
+    println!("x[0..6]={:?}", &x[..6]);
+    println!("v_e[0..6]={:?}", &st.v_e[..6]);
+    println!("v1[0..6]={:?}", &st.v1[..6]);
+    println!("v_o={}", st.v_o);
+    println!("thr_enc={} thr1={} thr2={}", a.thr_enc, a.thr1, a.thr2);
+}

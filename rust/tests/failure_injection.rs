@@ -1,0 +1,145 @@
+//! Failure injection: corrupted artifacts, malformed inputs, and
+//! out-of-envelope operation must fail loudly (errors), never silently
+//! corrupt results.
+
+use impulse::bitcell::Parity;
+use impulse::data::binfmt::Tensor;
+use impulse::data::SentimentArtifacts;
+use impulse::energy::{ShmooModel, ShmooPath};
+use impulse::isa::Instruction;
+use impulse::macro_sim::{ImpulseMacro, MacroConfig};
+use impulse::snn::{FcLayer, LayerParams, SentimentNetwork};
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("impulse_failure_tests").join(name);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn corrupted_tensor_file_is_rejected() {
+    let d = tmpdir("corrupt");
+    let p = d.join("t.bin");
+    Tensor::from_i32(vec![4], &[1, 2, 3, 4]).write(&p).unwrap();
+    // truncate mid-payload
+    let bytes = std::fs::read(&p).unwrap();
+    std::fs::write(&p, &bytes[..bytes.len() - 3]).unwrap();
+    assert!(Tensor::read(&p).is_err());
+    // flip the magic
+    let mut bytes2 = bytes.clone();
+    bytes2[0] ^= 0xFF;
+    std::fs::write(&p, &bytes2).unwrap();
+    assert!(Tensor::read(&p).is_err());
+}
+
+#[test]
+fn missing_artifact_bundle_is_a_clean_error() {
+    let d = tmpdir("empty_bundle");
+    let err = SentimentArtifacts::load(&d).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest"), "unexpected error: {msg}");
+}
+
+#[test]
+fn out_of_range_weights_rejected_by_validation() {
+    let d = tmpdir("bad_weights");
+    // minimal bundle with an out-of-range weight
+    std::fs::write(
+        d.join("manifest.txt"),
+        "snn_thr_enc=50\nsnn_thr1=100\nsnn_thr2=100\n",
+    )
+    .unwrap();
+    let s = d.join("sentiment");
+    std::fs::create_dir_all(&s).unwrap();
+    let w1: Vec<i32> = vec![40; 100 * 128]; // 40 > 31: not a 6-bit weight
+    Tensor::from_i32(vec![100, 128], &w1).write(s.join("w1.bin")).unwrap();
+    Tensor::from_i32(vec![128, 128], &vec![0; 128 * 128])
+        .write(s.join("w2.bin"))
+        .unwrap();
+    Tensor::from_i32(vec![128, 1], &vec![0; 128]).write(s.join("w_out.bin")).unwrap();
+    Tensor::from_i32(vec![2, 100], &vec![0; 200]).write(s.join("emb_q.bin")).unwrap();
+    Tensor::from_i32(vec![1, 3], &[0, 1, -1]).write(s.join("test_seqs.bin")).unwrap();
+    Tensor::from_i32(vec![1], &[2]).write(s.join("test_lens.bin")).unwrap();
+    Tensor::from_i32(vec![1], &[1]).write(s.join("test_labels.bin")).unwrap();
+    Tensor::from_i32(vec![0], &[]).write(s.join("polarity.bin")).unwrap();
+    Tensor::from_i32(vec![1, 1], &[0]).write(s.join("ref_vout_traces.bin")).unwrap();
+    Tensor::from_i32(vec![1], &[1]).write(s.join("ref_preds.bin")).unwrap();
+
+    let a = SentimentArtifacts::load(&d).expect("bundle loads");
+    assert!(a.validate().is_err(), "validation must reject 6-bit overflow");
+    // and the network constructor (which validates) must refuse too
+    assert!(SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).is_err());
+}
+
+#[test]
+fn macro_rejects_malformed_instructions() {
+    let mut m = ImpulseMacro::new(MacroConfig::fast());
+    // out-of-range rows
+    assert!(m
+        .execute(&Instruction::AccW2V {
+            w_row: 200,
+            v_src: 0,
+            v_dst: 0,
+            parity: Parity::Odd
+        })
+        .is_err());
+    assert!(m
+        .execute(&Instruction::AccV2V {
+            src_a: 0,
+            src_b: 40,
+            dst: 0,
+            parity: Parity::Odd,
+            mask: impulse::isa::WriteMaskMode::All
+        })
+        .is_err());
+    // duplicate V reads (one wordline cannot fire twice)
+    assert!(m
+        .execute(&Instruction::SpikeCheck {
+            v_row: 3,
+            thr_row: 3,
+            parity: Parity::Even
+        })
+        .is_err());
+    // errors must not corrupt the cycle counter
+    assert_eq!(m.cycles(), 0);
+}
+
+#[test]
+#[should_panic(expected = "fan-in mismatch")]
+fn layer_rejects_wrong_spike_width() {
+    let w = vec![vec![1i64; 4]; 8];
+    let mut layer = FcLayer::new(&w, LayerParams::rmp(10), MacroConfig::fast()).unwrap();
+    let _ = layer.step(&[true; 9]); // 9 != 8
+}
+
+#[test]
+fn fan_in_over_128_is_a_mapping_error() {
+    let w = vec![vec![1i64; 4]; 129];
+    let err = match FcLayer::new(&w, LayerParams::rmp(10), MacroConfig::fast()) {
+        Err(e) => e,
+        Ok(_) => panic!("mapping 129-input layer must fail"),
+    };
+    assert!(format!("{err}").contains("fan-in"), "{err}");
+}
+
+#[test]
+fn operating_outside_shmoo_window_is_detectable() {
+    // The coordinator checks the Shmoo model before accepting a
+    // (V, f) configuration; points beyond the boundary must report
+    // as failing.
+    let shmoo = ShmooModel::calibrated();
+    assert!(!shmoo.passes(ShmooPath::Cim, 0.85, 450.0e6));
+    assert!(!shmoo.passes(ShmooPath::Cim, 0.60, 200.0e6));
+    assert!(shmoo.passes(ShmooPath::Cim, 0.85, 200.0e6));
+    // read/write window is wider but not unbounded
+    assert!(!shmoo.passes(ShmooPath::ReadWrite, 0.60, 500.0e6));
+}
+
+#[test]
+fn writev_out_of_range_value_panics() {
+    let mut m = ImpulseMacro::new(MacroConfig::fast());
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _ = m.write_v(0, Parity::Odd, &[5000; 6]);
+    }));
+    assert!(result.is_err(), "writing a 13-bit value into V_MEM must assert");
+}

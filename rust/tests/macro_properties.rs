@@ -1,0 +1,248 @@
+//! Property-based integration tests: randomized invariants over the
+//! full mapping + macro + scheduler stack (proptest_lite harness).
+
+use impulse::bitcell::Parity;
+use impulse::bits::{wrap11, XorShiftRng};
+use impulse::isa::{Instruction, WriteMaskMode};
+use impulse::macro_sim::{ComparatorMode, ImpulseMacro, MacroConfig};
+use impulse::neuron::{GoldenLayer, NeuronParams};
+use impulse::proptest_lite::{forall_ctx, gen};
+use impulse::snn::{FcLayer, LayerParams};
+
+/// The flagship differential property: for random layers, random spike
+/// trains, and every neuron type, the mapped macro (fast engine) agrees
+/// with the functional golden model on every timestep.
+#[test]
+fn prop_mapped_layer_equals_golden_model() {
+    forall_ctx(
+        40,
+        0xA11CE,
+        |rng| {
+            let m = 1 + rng.gen_range(128) as usize;
+            let n = 1 + rng.gen_range(36) as usize;
+            let w = gen::weight_matrix(rng, m, n);
+            let neuron = match rng.gen_range(3) {
+                0 => LayerParams::if_(rng.gen_i64(1, 400)),
+                1 => LayerParams::lif(rng.gen_i64(1, 400), rng.gen_i64(0, 8)),
+                _ => LayerParams::rmp(rng.gen_i64(1, 400)),
+            };
+            let steps: Vec<Vec<bool>> = (0..12)
+                .map(|_| {
+                    let p = rng.gen_f64();
+                    gen::spikes(rng, m, p)
+                })
+                .collect();
+            (w, neuron, steps)
+        },
+        |(w, neuron, steps)| {
+            let mut layer = FcLayer::new(w, *neuron, MacroConfig::fast())
+                .map_err(|e| e.to_string())?;
+            let mut golden = GoldenLayer::new(
+                NeuronParams {
+                    neuron: neuron.neuron,
+                    threshold: neuron.threshold,
+                    reset: neuron.reset,
+                    leak: neuron.leak,
+                },
+                w.clone(),
+            );
+            for (t, spikes) in steps.iter().enumerate() {
+                let got = layer.step(spikes).map_err(|e| e.to_string())?.to_vec();
+                let want = golden.step(spikes);
+                if got != want {
+                    return Err(format!("spike mismatch at t={t}"));
+                }
+                let gv = layer.potentials().map_err(|e| e.to_string())?;
+                if gv != golden.potentials() {
+                    return Err(format!("V mismatch at t={t}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Bit-level vs fast engine on random raw instruction streams —
+/// heavier-weight version of the lib test, across random geometry.
+#[test]
+fn prop_lockstep_engines_never_diverge() {
+    forall_ctx(
+        10,
+        0x10C4,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = XorShiftRng::new(seed);
+            let mut m = ImpulseMacro::new(MacroConfig::lockstep());
+            for r in 0..8 {
+                let mut w = [0i64; 12];
+                for x in w.iter_mut() {
+                    *x = rng.gen_i64(-32, 31);
+                }
+                m.write_weights(r, &w).map_err(|e| e.to_string())?;
+            }
+            for r in 0..6 {
+                let p = if r % 2 == 0 { Parity::Odd } else { Parity::Even };
+                let mut v = [0i64; 6];
+                for x in v.iter_mut() {
+                    *x = rng.gen_i64(-1024, 1023);
+                }
+                m.write_v(r, p, &v).map_err(|e| e.to_string())?;
+            }
+            for _ in 0..400 {
+                let parity = if rng.gen_bool(0.5) { Parity::Odd } else { Parity::Even };
+                let vrow = |rng: &mut XorShiftRng| {
+                    let base = rng.gen_range(3) as usize * 2;
+                    match parity {
+                        Parity::Odd => base,
+                        Parity::Even => base + 1,
+                    }
+                };
+                let instr = match rng.gen_range(4) {
+                    0 => Instruction::AccW2V {
+                        w_row: rng.gen_range(8) as usize,
+                        v_src: vrow(&mut rng),
+                        v_dst: vrow(&mut rng),
+                        parity,
+                    },
+                    1 => {
+                        let a = vrow(&mut rng);
+                        let b = (a + 2) % 6;
+                        Instruction::AccV2V {
+                            src_a: a,
+                            src_b: b,
+                            dst: vrow(&mut rng),
+                            parity,
+                            mask: if rng.gen_bool(0.5) {
+                                WriteMaskMode::All
+                            } else {
+                                WriteMaskMode::Spiked
+                            },
+                        }
+                    }
+                    2 => {
+                        let a = vrow(&mut rng);
+                        let b = (a + 4) % 6;
+                        Instruction::SpikeCheck {
+                            v_row: a,
+                            thr_row: b,
+                            parity,
+                        }
+                    }
+                    _ => Instruction::ResetV {
+                        reset_row: vrow(&mut rng),
+                        dst: vrow(&mut rng),
+                        parity,
+                    },
+                };
+                // Lockstep mode bails with an error on any divergence.
+                m.execute(&instr).map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Sparsity ⇒ work proportionality at the macro level: doubling the
+/// spike count exactly doubles the AccW2V count.
+#[test]
+fn prop_energy_proportional_to_activity() {
+    forall_ctx(
+        30,
+        0x59A1,
+        |rng| {
+            let m = 16 + rng.gen_range(112) as usize;
+            let w = gen::weight_matrix(rng, m, 12);
+            let k = 1 + rng.gen_range((m / 2) as u64) as usize;
+            (w, m, k)
+        },
+        |(w, m, k)| {
+            let run = |n_spikes: usize| -> Result<u64, String> {
+                let mut layer = FcLayer::new(w, LayerParams::rmp(100), MacroConfig::fast())
+                    .map_err(|e| e.to_string())?;
+                let mut spikes = vec![false; *m];
+                for s in spikes.iter_mut().take(n_spikes) {
+                    *s = true;
+                }
+                layer.step(&spikes).map_err(|e| e.to_string())?;
+                Ok(layer
+                    .stats()
+                    .histogram
+                    .get(&impulse::isa::InstructionKind::AccW2V)
+                    .copied()
+                    .unwrap_or(0))
+            };
+            let half = run(*k)?;
+            let full = run(2 * k)?;
+            if full != 2 * half {
+                return Err(format!("AccW2V {full} != 2×{half}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The wraparound algebra: accumulating any weight sequence through the
+/// macro equals wrap11 of the plain integer sum.
+#[test]
+fn prop_accumulation_is_mod_2048_sum() {
+    forall_ctx(
+        30,
+        0xACC,
+        |rng| {
+            let steps = 1 + rng.gen_range(60) as usize;
+            (0..steps)
+                .map(|_| rng.gen_i64(-32, 31))
+                .collect::<Vec<i64>>()
+        },
+        |ws| {
+            let mut m = ImpulseMacro::new(MacroConfig::fast());
+            m.write_v(0, Parity::Odd, &[0; 6]).map_err(|e| e.to_string())?;
+            let mut expect = 0i64;
+            for &w in ws {
+                m.write_weights(0, &[w; 12]).map_err(|e| e.to_string())?;
+                m.execute(&Instruction::AccW2V {
+                    w_row: 0,
+                    v_src: 0,
+                    v_dst: 0,
+                    parity: Parity::Odd,
+                })
+                .map_err(|e| e.to_string())?;
+                expect = wrap11(expect + w);
+            }
+            let got = m.read_v(0, Parity::Odd).map_err(|e| e.to_string())?;
+            if got != [expect; 6] {
+                return Err(format!("got {got:?}, expect {expect}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// SignBit comparator always equals the signed (wrapped) comparison.
+#[test]
+fn prop_comparator_signbit_is_signed_compare() {
+    forall_ctx(
+        200,
+        0xC093,
+        |rng| (rng.gen_i64(-1024, 1023), rng.gen_i64(1, 512)),
+        |&(v, theta)| {
+            let mut m = ImpulseMacro::new(
+                MacroConfig::fast().with_comparator(ComparatorMode::SignBit),
+            );
+            m.write_v(0, Parity::Odd, &[v; 6]).map_err(|e| e.to_string())?;
+            m.write_v(1, Parity::Odd, &[-theta; 6]).map_err(|e| e.to_string())?;
+            let out = m
+                .execute(&Instruction::SpikeCheck {
+                    v_row: 0,
+                    thr_row: 1,
+                    parity: Parity::Odd,
+                })
+                .map_err(|e| e.to_string())?;
+            let want = wrap11(v - theta) >= 0;
+            if out.spikes.unwrap() != [want; 6] {
+                return Err(format!("v={v} θ={theta}"));
+            }
+            Ok(())
+        },
+    );
+}
