@@ -1,0 +1,66 @@
+"""A tiny deterministic stand-in for the `hypothesis` API surface used
+by the kernel tests, so property sweeps still run (with fixed seeds and
+fewer examples) when hypothesis is not installed in the offline image.
+
+Supported: @settings(max_examples=…, deadline=…), @given(**strategies),
+strategies.integers / floats / sampled_from. Each @given test runs
+`max_examples` cases drawn from a seeded PRNG — deterministic across
+runs, so failures are reproducible.
+"""
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mirrors `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: rng.choice(options))
+
+
+def settings(max_examples=20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._lite_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        # No functools.wraps: pytest must see a zero-argument signature,
+        # not the strategy parameters (it would treat them as fixtures).
+        def wrapper():
+            n = getattr(wrapper, "_lite_max_examples", 20)
+            seed = sum(ord(c) for c in fn.__name__) ^ 0xC0FFEE
+            rng = random.Random(seed)
+            for case in range(n):
+                kwargs = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(**kwargs)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"case {case}: {kwargs!r}: {e}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -6,7 +6,15 @@ the reference bit-exactly (integer semantics, no tolerance).
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is optional in the offline CI image
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in offline CI
+    from _hypothesis_lite import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = False
 
 import jax.numpy as jnp
 

@@ -1,15 +1,17 @@
 //! Perf bench (EXPERIMENTS.md §Perf): raw simulator throughput —
-//! instructions/second for each engine, layer-step throughput, and
-//! end-to-end review latency on the worker pool. This is the L3 hot
-//! path the optimization pass iterates on.
+//! instructions/second for each engine, layer-step throughput,
+//! end-to-end review latency on the worker pool, and the batched
+//! serving engine (requests/sec and cycles/request per micro-batch
+//! size). This is the L3 hot path the optimization pass iterates on.
 
-use impulse::bench_harness::Bencher;
+use impulse::bench_harness::{Bencher, Table};
 use impulse::bitcell::Parity;
 use impulse::bits::XorShiftRng;
 use impulse::coordinator::LayerPipeline;
-use impulse::isa::Instruction;
+use impulse::data::{artifacts_available, artifacts_dir, SentimentArtifacts};
+use impulse::isa::{Instruction, InstructionKind};
 use impulse::macro_sim::{ImpulseMacro, MacroConfig};
-use impulse::snn::{FcLayer, LayerParams};
+use impulse::snn::{FcLayer, LayerParams, SentimentNetwork};
 
 fn main() -> impulse::Result<()> {
     println!("=== macro simulator throughput (L3 hot path) ===\n");
@@ -86,6 +88,113 @@ fn main() -> impulse::Result<()> {
         pipe.run_pipelined(&inputs, 4).unwrap();
     });
 
-    println!("\nderived: fast-engine instruction rate = see above; target ≥1e7 instr/s");
+    // ------------------------------------------------------------------
+    // Batched serving engine: requests/sec and cycles/request at micro-
+    // batch sizes {1, 4, 16, 64}. Batch 1 is the sequential path; wider
+    // batches fuse AccW2V issue across the union of spiking inputs.
+    // ------------------------------------------------------------------
+    println!("\n=== batched inference engine (reviews on the macro pool) ===\n");
+    let a = if artifacts_available() {
+        SentimentArtifacts::load(artifacts_dir())?
+    } else {
+        println!("(artifacts not built — benching on the synthetic bundle)\n");
+        SentimentArtifacts::synthetic(2024)
+    };
+    let vocab = a.emb_q.len() as i64;
+    let n_reqs = 64usize;
+    let reviews: Vec<Vec<i64>> = (0..n_reqs)
+        .map(|i| {
+            if i < a.test_seqs.len() && !a.test_seqs[i].is_empty() {
+                a.test_seqs[i].clone()
+            } else {
+                // deterministic filler sized like a short review
+                (0..6).map(|j| ((i * 13 + j * 7) as i64) % vocab).collect()
+            }
+        })
+        .collect();
+    let refs: Vec<&[i64]> = reviews.iter().map(|r| r.as_slice()).collect();
+
+    // sequential ground truth for the bit-identity check
+    let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast())?;
+    let want: Vec<(u8, i64)> = refs
+        .iter()
+        .map(|r| net.run_review(r).map(|res| (res.pred, res.v_out)))
+        .collect::<impulse::Result<_>>()?;
+
+    // micro-batches wider than the V_MEM lane budget split into chunks
+    // of at most `max_lanes` fused lanes (e.g. batch=16 → 13+3)
+    let max_lanes = net.max_batch_lanes();
+    println!("(fused lane budget: {max_lanes} lanes per chunk)\n");
+    let mut table = Table::new(&[
+        "batch", "lanes", "req/s", "cycles/req", "AccW2V/req", "identical",
+    ]);
+    let mut req_per_s = Vec::new();
+    for &bsz in &[1usize, 4, 16, 64] {
+        // cost accounting + bit-identity on one cold pass
+        net.reset_counters();
+        let mut preds = Vec::with_capacity(n_reqs);
+        if bsz == 1 {
+            for r in &refs {
+                let res = net.run_review(r)?;
+                preds.push((res.pred, res.v_out));
+            }
+        } else {
+            for chunk in refs.chunks(bsz) {
+                for res in net.run_reviews_batched(chunk)? {
+                    preds.push((res.pred, res.v_out));
+                }
+            }
+        }
+        let identical = preds == want;
+        let stats = net.stats();
+        let cycles_per_req = stats.cycles as f64 / n_reqs as f64;
+        let acc_per_req = stats
+            .histogram
+            .get(&InstructionKind::AccW2V)
+            .copied()
+            .unwrap_or(0) as f64
+            / n_reqs as f64;
+
+        // wall-clock requests/sec
+        let r = b
+            .bench(&format!("serve {n_reqs} reviews, batch={bsz}"), n_reqs as u64, || {
+                if bsz == 1 {
+                    for r in &refs {
+                        net.run_review(r).unwrap();
+                    }
+                } else {
+                    for chunk in refs.chunks(bsz) {
+                        net.run_reviews_batched(chunk).unwrap();
+                    }
+                }
+            })
+            .clone();
+        req_per_s.push((bsz, r.throughput_per_s));
+        table.row(&[
+            format!("{bsz}"),
+            format!("{}", bsz.min(max_lanes)),
+            format!("{:.1}", r.throughput_per_s),
+            format!("{cycles_per_req:.0}"),
+            format!("{acc_per_req:.0}"),
+            if identical { "yes".into() } else { "NO".into() },
+        ]);
+        assert!(
+            identical,
+            "batch={bsz}: batched predictions diverge from the sequential path"
+        );
+    }
+    println!("\n{}", table.render());
+    let rps = |b: usize| {
+        req_per_s
+            .iter()
+            .find(|&&(x, _)| x == b)
+            .map(|&(_, v)| v)
+            .unwrap_or(0.0)
+    };
+    println!(
+        "derived: batch=16 vs batch=1 requests/sec speedup = {:.2}x",
+        rps(16) / rps(1)
+    );
+    println!("derived: fast-engine instruction rate = see above; target ≥1e7 instr/s");
     Ok(())
 }

@@ -44,7 +44,10 @@ fn main() {
     // linear bit-precision scaling of [14] 16b→11b as the paper does
     let vlsi20_11b = vlsi20 * 16.0 / 11.0;
     println!("efficiency ratios at point D:");
-    println!("  vs ISSCC'19 [13] (8b, scaled): {:.2}× (paper ~1.5×... both scaled)", ours / isscc);
+    println!(
+        "  vs ISSCC'19 [13] (8b, scaled): {:.2}× (paper ~1.5×... both scaled)",
+        ours / isscc
+    );
     println!("  vs VLSI'20 [14] (11b-scaled): {:.2}× (paper 2.2×)", ours / vlsi20_11b);
     assert!(ours > isscc && ours > vlsi20_11b);
     println!("\nOK");

@@ -32,7 +32,7 @@ pub fn run(args: &[String]) -> Result<()> {
 
     let mac = cfg.macro_config();
     let a2 = Arc::clone(&a);
-    let server = InferenceServer::start(cfg.workers, move || {
+    let server = InferenceServer::start_with(cfg.server_options(), move || {
         SentimentNetwork::from_artifacts(&a2, mac)
     })?;
     let t0 = Instant::now();
@@ -46,12 +46,20 @@ pub fn run(args: &[String]) -> Result<()> {
     let wall = t0.elapsed();
     server.shutdown();
 
+    let failed = responses.iter().filter(|r| r.err.is_some()).count();
+    if failed > 0 {
+        for r in responses.iter().filter(|r| r.err.is_some()).take(5) {
+            eprintln!("review {} failed: {}", r.id, r.err.as_deref().unwrap_or(""));
+        }
+        eprintln!("{failed}/{n} reviews failed; accuracy is over the rest");
+    }
+    let ok = n - failed;
     let correct = responses
         .iter()
-        .filter(|r| r.pred == a.test_labels[r.id as usize])
+        .filter(|r| r.err.is_none() && r.pred == a.test_labels[r.id as usize])
         .count();
-    let acc = correct as f64 / n as f64;
-    println!("\naccuracy        : {acc:.4} ({correct}/{n})");
+    let acc = correct as f64 / ok.max(1) as f64;
+    println!("\naccuracy        : {acc:.4} ({correct}/{ok})");
     if let Some(m) = man.get_f64("snn_sentiment_quant_acc") {
         println!("python reference: {m:.4}");
     }

@@ -67,6 +67,15 @@ pub fn run_config(flags: &Flags) -> Result<RunConfig> {
     if let Some(w) = flags.get_usize("workers") {
         cfg.workers = w.max(1);
     }
+    if let Some(b) = flags.get_usize("batch") {
+        cfg.batch = b.max(1);
+    }
+    if let Some(us) = flags.get_usize("batch-deadline-us") {
+        cfg.batch_deadline_us = us as u64;
+    }
+    if flags.has("pipeline") {
+        cfg.pipeline = true;
+    }
     if let Some(n) = flags.get_usize("max") {
         cfg.max_samples = n;
     }

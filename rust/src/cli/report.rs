@@ -20,7 +20,9 @@ pub fn run(args: &[String]) -> Result<()> {
             "8" => shmoo()?,
             "9a" => fig9a(),
             "11b" => sweep(args)?,
-            other => anyhow::bail!("no figure '{other}' (have 2, 6, 7, 8, 9a, 11b; 9b/10/11a are e2e examples)"),
+            other => anyhow::bail!(
+                "no figure '{other}' (have 2, 6, 7, 8, 9a, 11b; 9b/10/11a are e2e examples)"
+            ),
         }
         return Ok(());
     }
@@ -149,7 +151,9 @@ pub fn sweep(args: &[String]) -> Result<()> {
     let e = EnergyModel::calibrated();
     let sweep = SparsitySweep::run(&e, neuron, 20);
     println!("Fig 11b — EDP per neuron per timestep vs input sparsity ({neuron:?})\n");
-    let mut t = Table::new(&["sparsity", "energy (pJ)", "delay (ns)", "EDP (aJ·s ×1e-?)", "vs s=0"]);
+    let mut t = Table::new(&[
+        "sparsity", "energy (pJ)", "delay (ns)", "EDP (aJ·s ×1e-?)", "vs s=0",
+    ]);
     let base = sweep.points[0].edp;
     for p in &sweep.points {
         t.row(&[

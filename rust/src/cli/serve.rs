@@ -3,35 +3,67 @@
 //! Reads one request per line on stdin:
 //!     <id> <word_id> <word_id> …
 //! and writes one response per line on stdout:
-//!     <id> <POSITIVE|NEGATIVE> v_out=<v> cycles=<c> us=<latency>
+//!     <id> <POSITIVE|NEGATIVE> v_out=<v> cycles=<c> us=<latency> batch=<n>
+//! or, when inference fails for a request:
+//!     <id> ERROR <message>
 //!
-//! Batched through the coordinator's worker pool; `quit` stops.
+//! Requests flow through the coordinator's micro-batching worker pool:
+//! up to `--batch` requests (default 1) are fused into one instruction
+//! stream per tile, waiting at most `--batch-deadline-us` for the
+//! batch to fill; `--pipeline` runs unbatched requests through the
+//! wavefront layer pipeline instead. `quit` stops.
 
 use super::Flags;
-use impulse::coordinator::{InferenceServer, Request};
+use impulse::coordinator::{InferenceServer, Request, Response};
 use impulse::data::{artifacts_dir, SentimentArtifacts};
 use impulse::snn::SentimentNetwork;
 use impulse::Result;
 use std::io::{BufRead, Write};
 use std::sync::Arc;
 
+fn write_response(out: &mut impl Write, r: &Response) -> Result<()> {
+    if let Some(err) = &r.err {
+        writeln!(out, "{} ERROR {}", r.id, err)?;
+        return Ok(());
+    }
+    writeln!(
+        out,
+        "{} {} v_out={} cycles={} us={} batch={}",
+        r.id,
+        if r.pred == 1 { "POSITIVE" } else { "NEGATIVE" },
+        r.v_out,
+        r.cycles,
+        r.latency.as_micros(),
+        r.batch_size,
+    )?;
+    Ok(())
+}
+
 pub fn run(args: &[String]) -> Result<()> {
     let flags = Flags::parse(args);
     let cfg = super::run_config(&flags)?;
     let a = Arc::new(SentimentArtifacts::load(artifacts_dir())?);
     let vocab = a.emb_q.len() as i64;
-    let mac = cfg.macro_config();
     let a2 = Arc::clone(&a);
-    let server = InferenceServer::start(cfg.workers, move || {
-        SentimentNetwork::from_artifacts(&a2, mac)
+    let opts = cfg.server_options();
+    let server = InferenceServer::start_with(opts.clone(), move || {
+        SentimentNetwork::from_artifacts(&a2, cfg.macro_config())
     })?;
     eprintln!(
-        "impulse serve: {} workers ready; send `<id> <word_id>…` lines, `quit` to stop",
-        cfg.workers
+        "impulse serve: {} workers ready (batch {}, deadline {:?}{}); \
+         send `<id> <word_id>…` lines, `quit` to stop",
+        opts.workers,
+        opts.batch_size,
+        opts.batch_deadline,
+        if opts.pipeline { ", pipelined" } else { "" },
     );
 
     let stdin = std::io::stdin();
     let mut stdout = std::io::stdout();
+    // Every submitted request yields exactly one response (errors come
+    // back as Response::err), so a submit/response counter pair is the
+    // drain invariant; ready responses are drained opportunistically
+    // on recv readiness rather than by comparing against inflight().
     let mut pending = 0u64;
     for line in stdin.lock().lines() {
         let line = line?;
@@ -60,19 +92,10 @@ pub fn run(args: &[String]) -> Result<()> {
         }
         server.submit(Request { id, word_ids })?;
         pending += 1;
-        // drain ready responses opportunistically
-        while server.inflight() < pending {
-            let r = server.recv()?;
+        // drain whatever is ready without blocking the input loop
+        while let Some(r) = server.try_recv() {
             pending -= 1;
-            writeln!(
-                stdout,
-                "{} {} v_out={} cycles={} us={}",
-                r.id,
-                if r.pred == 1 { "POSITIVE" } else { "NEGATIVE" },
-                r.v_out,
-                r.cycles,
-                r.latency.as_micros()
-            )?;
+            write_response(&mut stdout, &r)?;
         }
         stdout.flush()?;
     }
@@ -80,15 +103,7 @@ pub fn run(args: &[String]) -> Result<()> {
     while pending > 0 {
         let r = server.recv()?;
         pending -= 1;
-        writeln!(
-            stdout,
-            "{} {} v_out={} cycles={} us={}",
-            r.id,
-            if r.pred == 1 { "POSITIVE" } else { "NEGATIVE" },
-            r.v_out,
-            r.cycles,
-            r.latency.as_micros()
-        )?;
+        write_response(&mut stdout, &r)?;
     }
     stdout.flush()?;
     server.shutdown();

@@ -25,6 +25,12 @@ pub struct RunConfig {
     pub comparator: ComparatorMode,
     /// Worker threads for the coordinator.
     pub workers: usize,
+    /// Max requests fused into one serve micro-batch (1 = no batching).
+    pub batch: usize,
+    /// Micro-batch fill deadline in microseconds.
+    pub batch_deadline_us: u64,
+    /// Pipeline singleton batches across layer-stage threads.
+    pub pipeline: bool,
     /// Samples to evaluate in e2e runs (0 = all).
     pub max_samples: usize,
     /// Timesteps per word (sentiment) / per image (digits).
@@ -42,6 +48,9 @@ impl Default for RunConfig {
                 .map(|n| n.get())
                 .unwrap_or(4)
                 .min(16),
+            batch: 1,
+            batch_deadline_us: 200,
+            pipeline: false,
             max_samples: 0,
             timesteps: 10,
         }
@@ -86,6 +95,15 @@ impl RunConfig {
         if let Some(v) = doc.get_i64("run", "workers") {
             self.workers = (v.max(1)) as usize;
         }
+        if let Some(v) = doc.get_i64("run", "batch") {
+            self.batch = v.max(1) as usize;
+        }
+        if let Some(v) = doc.get_i64("run", "batch_deadline_us") {
+            self.batch_deadline_us = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_bool("run", "pipeline") {
+            self.pipeline = v;
+        }
         if let Some(v) = doc.get_i64("run", "max_samples") {
             self.max_samples = v.max(0) as usize;
         }
@@ -101,6 +119,16 @@ impl RunConfig {
             engine: self.engine,
             comparator: self.comparator,
             trace: false,
+        }
+    }
+
+    /// The server options implied by this run config.
+    pub fn server_options(&self) -> crate::coordinator::ServerOptions {
+        crate::coordinator::ServerOptions {
+            workers: self.workers,
+            batch_size: self.batch.max(1),
+            batch_deadline: std::time::Duration::from_micros(self.batch_deadline_us),
+            pipeline: self.pipeline,
         }
     }
 }
@@ -128,6 +156,9 @@ mod tests {
             comparator = "cout"
             [run]
             workers = 3
+            batch = 16
+            batch_deadline_us = 500
+            pipeline = true
             max_samples = 100
             timesteps = 5
             "#,
@@ -140,8 +171,24 @@ mod tests {
         assert_eq!(c.engine, Engine::Lockstep);
         assert_eq!(c.comparator, ComparatorMode::MsbCout);
         assert_eq!(c.workers, 3);
+        assert_eq!(c.batch, 16);
+        assert_eq!(c.batch_deadline_us, 500);
+        assert!(c.pipeline);
         assert_eq!(c.max_samples, 100);
         assert_eq!(c.timesteps, 5);
+        let opts = c.server_options();
+        assert_eq!(opts.workers, 3);
+        assert_eq!(opts.batch_size, 16);
+        assert_eq!(opts.batch_deadline, std::time::Duration::from_micros(500));
+        assert!(opts.pipeline);
+    }
+
+    #[test]
+    fn batch_defaults_are_unbatched() {
+        let c = RunConfig::default();
+        assert_eq!(c.batch, 1);
+        assert!(!c.pipeline);
+        assert_eq!(c.server_options().batch_size, 1);
     }
 
     #[test]

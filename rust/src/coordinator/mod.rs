@@ -8,17 +8,23 @@
 //! - [`scheduler`] — turns spike activity into per-macro instruction
 //!   streams, exploiting input sparsity (spikes → instructions is the
 //!   macro's energy-proportionality mechanism).
-//! - [`router`] — a request router + worker pool running replicated
-//!   model instances: batched inference with latency accounting (the
-//!   serving-system shape of L3).
+//! - [`router`] — a micro-batching request router + work-stealing
+//!   worker pool running replicated model instances: batches fuse their
+//!   AccW2V issue across requests (union of spiking inputs), and shards
+//!   are assigned by load rather than round-robin (the serving-system
+//!   shape of L3).
 //! - [`pipeline`] — layer-pipelined execution across threads: layer *l*
 //!   processes timestep *t* while layer *l+1* processes *t−1*, matching
-//!   the paper's "mapped successively on IMPULSE" dataflow.
+//!   the paper's "mapped successively on IMPULSE" dataflow. Wired into
+//!   the serve path for singleton batches via
+//!   `SentimentNetwork::run_review_pipelined`.
 
 pub mod pipeline;
 pub mod router;
 pub mod scheduler;
 
-pub use pipeline::LayerPipeline;
-pub use router::{InferenceServer, Request, Response, ServerStats};
-pub use scheduler::{SpikeScheduler, TimestepPlan};
+pub use pipeline::{run_stages, LayerPipeline};
+pub use router::{
+    InferenceServer, Request, Response, ServerOptions, ServerStats, ShardRouter,
+};
+pub use scheduler::{FusedTimestepPlan, SpikeScheduler, TimestepPlan};

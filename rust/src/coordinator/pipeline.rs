@@ -14,6 +14,76 @@ use crate::snn::{FcLayer, LayerStats};
 use crate::Result;
 use std::sync::mpsc;
 
+/// Run `inputs` through a chain of borrowed layer stages, one scoped
+/// thread per stage with bounded channels in between — the wavefront
+/// engine behind both [`LayerPipeline::run_pipelined`] and the serve
+/// path's pipelined reviews
+/// (`SentimentNetwork::run_review_pipelined`). Stage *i* processes
+/// timestep *t* while stage *i+1* processes *t−1*; a slow stage stalls
+/// its producer through channel backpressure.
+///
+/// Semantically identical to stepping each timestep through all stages
+/// in order (stages share no state); wall-clock approaches
+/// `max(stage time) · timesteps` instead of `sum(stage time) ·
+/// timesteps`.
+pub fn run_stages(
+    stages: Vec<&mut FcLayer>,
+    inputs: &[Vec<bool>],
+    channel_depth: usize,
+) -> Result<Vec<Vec<bool>>> {
+    assert!(!stages.is_empty(), "pipeline needs at least one stage");
+    let depth = channel_depth.max(1);
+    let n = inputs.len();
+    std::thread::scope(|scope| -> Result<Vec<Vec<bool>>> {
+        let (feeder_tx, mut prev_rx) = mpsc::sync_channel::<Vec<bool>>(depth);
+        let mut handles = Vec::new();
+        for layer in stages {
+            let (tx, rx_next) = mpsc::sync_channel::<Vec<bool>>(depth);
+            let rx = std::mem::replace(&mut prev_rx, rx_next);
+            handles.push(scope.spawn(move || -> Result<()> {
+                while let Ok(spikes) = rx.recv() {
+                    let out = layer.step(&spikes)?.to_vec();
+                    if tx.send(out).is_err() {
+                        break;
+                    }
+                }
+                Ok(())
+            }));
+        }
+        let final_rx = prev_rx;
+        // Feed inputs (blocking on backpressure) off the collector
+        // thread so bounded channels cannot deadlock.
+        let feeder = scope.spawn(move || {
+            for spikes in inputs {
+                if feeder_tx.send(spikes.clone()).is_err() {
+                    break;
+                }
+            }
+        });
+        let mut results = Vec::with_capacity(n);
+        let mut starved = false;
+        for _ in 0..n {
+            match final_rx.recv() {
+                Ok(v) => results.push(v),
+                Err(_) => {
+                    starved = true;
+                    break;
+                }
+            }
+        }
+        drop(final_rx);
+        feeder.join().expect("feeder panicked");
+        for h in handles {
+            // surfaces the first failing stage's error
+            h.join().expect("stage panicked")?;
+        }
+        if starved {
+            anyhow::bail!("pipeline stage died before finishing");
+        }
+        Ok(results)
+    })
+}
+
 /// A chain of FC layers executed as a thread-per-stage pipeline.
 pub struct LayerPipeline {
     layers: Vec<FcLayer>,
@@ -47,73 +117,14 @@ impl LayerPipeline {
     }
 
     /// Pipelined execution: one thread per layer, bounded channels in
-    /// between. Semantically identical to `run_sequential` (stages are
-    /// stateful but independent); wall-clock approaches
-    /// `max(stage time) · timesteps` instead of `sum(stage time) ·
-    /// timesteps`.
+    /// between (see [`run_stages`]). Semantically identical to
+    /// `run_sequential`.
     pub fn run_pipelined(
         &mut self,
         inputs: &[Vec<bool>],
         channel_depth: usize,
     ) -> Result<Vec<Vec<bool>>> {
-        let n_layers = self.layers.len();
-        let layers = std::mem::take(&mut self.layers);
-        let (results, layers_back) = std::thread::scope(
-            |scope| -> Result<(Vec<Vec<bool>>, Vec<FcLayer>)> {
-                // Stage channels: input → L0 → L1 → … → collector.
-                let mut senders = Vec::new();
-                let mut receivers = Vec::new();
-                for _ in 0..=n_layers {
-                    let (tx, rx) = mpsc::sync_channel::<Vec<bool>>(channel_depth.max(1));
-                    senders.push(tx);
-                    receivers.push(rx);
-                }
-                let mut handles = Vec::new();
-                let mut rx_iter = receivers.into_iter();
-                let first_rx = rx_iter.next().unwrap();
-                let mut prev_rx = first_rx;
-                // Keep senders[0] for the feeder; hand the rest to stages.
-                let mut tx_iter = senders.into_iter();
-                let feeder_tx = tx_iter.next().unwrap();
-                for mut layer in layers {
-                    let rx = prev_rx;
-                    let tx = tx_iter.next().unwrap();
-                    prev_rx = rx_iter.next().unwrap();
-                    handles.push(scope.spawn(move || -> Result<FcLayer> {
-                        while let Ok(spikes) = rx.recv() {
-                            let out = layer.step(&spikes)?.to_vec();
-                            if tx.send(out).is_err() {
-                                break;
-                            }
-                        }
-                        Ok(layer)
-                    }));
-                }
-                let final_rx = prev_rx;
-                // Feed inputs (blocking on backpressure).
-                let feeder = scope.spawn(move || {
-                    for spikes in inputs {
-                        if feeder_tx.send(spikes.clone()).is_err() {
-                            break;
-                        }
-                    }
-                });
-                let mut results = Vec::with_capacity(inputs.len());
-                for _ in 0..inputs.len() {
-                    results.push(final_rx.recv().map_err(|_| {
-                        anyhow::anyhow!("pipeline stage died before finishing")
-                    })?);
-                }
-                feeder.join().expect("feeder panicked");
-                let mut layers_back = Vec::with_capacity(n_layers);
-                for h in handles {
-                    layers_back.push(h.join().expect("stage panicked")?);
-                }
-                Ok((results, layers_back))
-            },
-        )?;
-        self.layers = layers_back;
-        Ok(results)
+        run_stages(self.layers.iter_mut().collect(), inputs, channel_depth)
     }
 
     /// Reset all layer states.

@@ -1,14 +1,28 @@
-//! Request router + worker pool: batched inference over replicated
-//! model instances (each worker owns a full macro pool), with latency
-//! and energy accounting. This is the deployment shape of L3: the
-//! binary is self-contained, Python never runs on this path.
+//! Request router + worker pool: micro-batched inference over
+//! replicated model instances (each worker owns a full macro pool),
+//! with latency and energy accounting. This is the deployment shape of
+//! L3: the binary is self-contained, Python never runs on this path.
+//!
+//! The serve path is three stages:
+//!
+//! 1. **submit** — callers enqueue [`Request`]s on a channel;
+//! 2. **batcher** — a collector thread forms micro-batches of up to
+//!    `batch_size` requests (or whatever arrived within
+//!    `batch_deadline`) and hands each batch to the *least-loaded*
+//!    worker shard;
+//! 3. **workers** — each worker drains its own shard queue and, when
+//!    empty, steals from the most-loaded peer; batches run through
+//!    `SentimentNetwork::run_reviews_batched` (fused union AccW2V
+//!    streams), singleton batches optionally through the wavefront
+//!    pipeline.
 
 use crate::metrics::LatencyStats;
 use crate::snn::SentimentNetwork;
 use crate::Result;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// One classification request.
 #[derive(Clone, Debug)]
@@ -26,6 +40,10 @@ pub struct Response {
     pub cycles: u64,
     pub latency: std::time::Duration,
     pub worker: usize,
+    /// Size of the micro-batch this request was served in.
+    pub batch_size: usize,
+    /// Set when inference failed; the numeric fields are zeroed then.
+    pub err: Option<String>,
 }
 
 /// Aggregated server statistics.
@@ -36,33 +54,197 @@ pub struct ServerStats {
     pub latency: LatencyStats,
 }
 
+/// Serving configuration of an [`InferenceServer`].
+#[derive(Clone, Debug)]
+pub struct ServerOptions {
+    /// Worker threads (each owns a full network replica).
+    pub workers: usize,
+    /// Maximum requests fused into one micro-batch (1 = no batching).
+    pub batch_size: usize,
+    /// How long the batcher waits for a batch to fill once its first
+    /// request arrived.
+    pub batch_deadline: Duration,
+    /// Run singleton batches through the wavefront layer pipeline
+    /// (`run_review_pipelined`) instead of the sequential step order.
+    pub pipeline: bool,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        Self {
+            workers: 1,
+            batch_size: 1,
+            batch_deadline: Duration::from_micros(200),
+            pipeline: false,
+        }
+    }
+}
+
+/// A request queued with its arrival time.
+struct Queued {
+    req: Request,
+    t0: Instant,
+}
+
+/// Load-aware shard queues with work stealing: `push` places an item
+/// on the least-loaded shard, `pop(me)` drains the caller's shard and
+/// steals from the most-loaded peer when it runs dry. One global mutex
+/// — at macro-simulation granularity (milliseconds per batch) the
+/// queue is never the bottleneck.
+pub struct ShardRouter<T> {
+    state: Mutex<ShardState<T>>,
+    cv: Condvar,
+}
+
+struct ShardState<T> {
+    queues: Vec<VecDeque<(T, usize)>>,
+    loads: Vec<usize>,
+    closed: bool,
+}
+
+impl<T> ShardRouter<T> {
+    pub fn new(shards: usize) -> Self {
+        assert!(shards >= 1);
+        Self {
+            state: Mutex::new(ShardState {
+                queues: (0..shards).map(|_| VecDeque::new()).collect(),
+                loads: vec![0; shards],
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue an item of the given weight on the least-loaded shard.
+    pub fn push(&self, item: T, weight: usize) {
+        let mut s = self.state.lock().expect("router poisoned");
+        let shard = s
+            .loads
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &l)| l)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        s.loads[shard] += weight;
+        s.queues[shard].push_back((item, weight));
+        self.cv.notify_one();
+    }
+
+    /// Dequeue for shard `me`: own queue first, then steal from the
+    /// most-loaded peer. Blocks until an item is available or the
+    /// router is closed and fully drained (→ `None`).
+    pub fn pop(&self, me: usize) -> Option<T> {
+        let mut s = self.state.lock().expect("router poisoned");
+        loop {
+            if let Some((item, w)) = s.queues[me].pop_front() {
+                s.loads[me] -= w;
+                return Some(item);
+            }
+            let victim = (0..s.queues.len())
+                .filter(|&i| i != me && !s.queues[i].is_empty())
+                .max_by_key(|&i| s.loads[i]);
+            if let Some(v) = victim {
+                let (item, w) = s.queues[v].pop_front().expect("victim non-empty");
+                s.loads[v] -= w;
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.cv.wait(s).expect("router poisoned");
+        }
+    }
+
+    /// Close the router: queued items still drain, then `pop` returns
+    /// `None` for every shard.
+    pub fn close(&self) {
+        let mut s = self.state.lock().expect("router poisoned");
+        s.closed = true;
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Outstanding weight on one shard (diagnostics).
+    pub fn load(&self, shard: usize) -> usize {
+        self.state.lock().expect("router poisoned").loads[shard]
+    }
+}
+
 /// A fixed-pool inference server over replicated sentiment networks.
 pub struct InferenceServer {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::Sender<Queued>,
     rx_out: mpsc::Receiver<Response>,
+    batcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     inflight: Arc<AtomicU64>,
 }
 
 impl InferenceServer {
-    /// Spawn `n_workers` workers, each building its own network replica
-    /// via `factory`.
+    /// Spawn `n_workers` workers with default (unbatched) options.
     pub fn start<F>(n_workers: usize, factory: F) -> Result<Self>
     where
         F: Fn() -> Result<SentimentNetwork> + Send + Sync + 'static,
     {
-        assert!(n_workers >= 1);
-        let (tx, rx) = mpsc::channel::<Request>();
+        Self::start_with(
+            ServerOptions {
+                workers: n_workers,
+                ..ServerOptions::default()
+            },
+            factory,
+        )
+    }
+
+    /// Spawn the batcher and worker pool described by `opts`, each
+    /// worker building its own network replica via `factory`.
+    pub fn start_with<F>(opts: ServerOptions, factory: F) -> Result<Self>
+    where
+        F: Fn() -> Result<SentimentNetwork> + Send + Sync + 'static,
+    {
+        assert!(opts.workers >= 1);
+        assert!(opts.batch_size >= 1);
+        let (tx, rx) = mpsc::channel::<Queued>();
         let (tx_out, rx_out) = mpsc::channel::<Response>();
-        let rx = Arc::new(Mutex::new(rx));
         let factory = Arc::new(factory);
         let inflight = Arc::new(AtomicU64::new(0));
-        let mut workers = Vec::with_capacity(n_workers);
-        for w in 0..n_workers {
-            let rx = Arc::clone(&rx);
+        let router: Arc<ShardRouter<Vec<Queued>>> = Arc::new(ShardRouter::new(opts.workers));
+
+        let batcher = {
+            let router = Arc::clone(&router);
+            let opts = opts.clone();
+            std::thread::spawn(move || {
+                loop {
+                    let first = match rx.recv() {
+                        Ok(q) => q,
+                        Err(_) => break,
+                    };
+                    let mut batch = vec![first];
+                    if opts.batch_size > 1 {
+                        let deadline = Instant::now() + opts.batch_deadline;
+                        while batch.len() < opts.batch_size {
+                            let rem = deadline.saturating_duration_since(Instant::now());
+                            if rem.is_zero() {
+                                break;
+                            }
+                            match rx.recv_timeout(rem) {
+                                Ok(q) => batch.push(q),
+                                Err(_) => break,
+                            }
+                        }
+                    }
+                    let weight = batch.len();
+                    router.push(batch, weight);
+                }
+                router.close();
+            })
+        };
+
+        let mut workers = Vec::with_capacity(opts.workers);
+        for w in 0..opts.workers {
+            let router = Arc::clone(&router);
             let tx_out = tx_out.clone();
             let factory = Arc::clone(&factory);
             let inflight = Arc::clone(&inflight);
+            let opts = opts.clone();
             workers.push(std::thread::spawn(move || {
                 let mut net = match factory() {
                     Ok(n) => n,
@@ -71,36 +253,15 @@ impl InferenceServer {
                         return;
                     }
                 };
-                loop {
-                    let req = {
-                        let guard = rx.lock().expect("poisoned request queue");
-                        guard.recv()
-                    };
-                    let Ok(req) = req else { break };
-                    let t0 = Instant::now();
-                    let outcome = net.run_review(&req.word_ids);
-                    // decrement before publishing so inflight() == 0 is
-                    // observable once every response has been received
-                    inflight.fetch_sub(1, Ordering::SeqCst);
-                    match outcome {
-                        Ok(r) => {
-                            let _ = tx_out.send(Response {
-                                id: req.id,
-                                pred: r.pred,
-                                v_out: r.v_out,
-                                cycles: r.cycles,
-                                latency: t0.elapsed(),
-                                worker: w,
-                            });
-                        }
-                        Err(e) => eprintln!("worker {w}: inference failed: {e}"),
-                    }
+                while let Some(batch) = router.pop(w) {
+                    serve_batch(&mut net, w, &opts, batch, &tx_out, &inflight);
                 }
             }));
         }
         Ok(Self {
             tx,
             rx_out,
+            batcher: Some(batcher),
             workers,
             inflight,
         })
@@ -110,13 +271,24 @@ impl InferenceServer {
     pub fn submit(&self, req: Request) -> Result<()> {
         self.inflight.fetch_add(1, Ordering::SeqCst);
         self.tx
-            .send(req)
-            .map_err(|_| anyhow::anyhow!("server shut down"))
+            .send(Queued {
+                req,
+                t0: Instant::now(),
+            })
+            .map_err(|_| {
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                anyhow::anyhow!("server shut down")
+            })
     }
 
     /// Block for the next response.
     pub fn recv(&self) -> Result<Response> {
         Ok(self.rx_out.recv()?)
+    }
+
+    /// Non-blocking receive: a ready response, if any.
+    pub fn try_recv(&self) -> Option<Response> {
+        self.rx_out.try_recv().ok()
     }
 
     /// Requests submitted but not yet answered.
@@ -144,11 +316,103 @@ impl InferenceServer {
         Ok((out, stats))
     }
 
-    /// Shut down: drop the queue and join workers.
+    /// Shut down: close the queue, drain the batcher, join workers.
     pub fn shutdown(self) {
         drop(self.tx);
+        if let Some(b) = self.batcher {
+            let _ = b.join();
+        }
         for w in self.workers {
             let _ = w.join();
+        }
+    }
+}
+
+/// Run one micro-batch on a worker's replica and publish one response
+/// per request. Every submitted request yields exactly one response —
+/// inference errors come back with [`Response::err`] set instead of
+/// being dropped (the serve loop's drain bookkeeping relies on this).
+fn serve_batch(
+    net: &mut SentimentNetwork,
+    worker: usize,
+    opts: &ServerOptions,
+    batch: Vec<Queued>,
+    tx_out: &mpsc::Sender<Response>,
+    inflight: &AtomicU64,
+) {
+    let n = batch.len();
+    let outcome = if n == 1 {
+        let r = if opts.pipeline {
+            net.run_review_pipelined(&batch[0].req.word_ids)
+        } else {
+            net.run_review(&batch[0].req.word_ids)
+        };
+        r.map(|r| vec![r])
+    } else {
+        let seqs: Vec<&[i64]> = batch.iter().map(|q| q.req.word_ids.as_slice()).collect();
+        net.run_reviews_batched(&seqs)
+    };
+    match outcome {
+        Ok(results) => {
+            for (q, r) in batch.iter().zip(results) {
+                // decrement before publishing so inflight() == 0 is
+                // observable once every response has been received
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                let _ = tx_out.send(Response {
+                    id: q.req.id,
+                    pred: r.pred,
+                    v_out: r.v_out,
+                    cycles: r.cycles,
+                    latency: q.t0.elapsed(),
+                    worker,
+                    batch_size: n,
+                    err: None,
+                });
+            }
+        }
+        Err(e) if n == 1 => {
+            inflight.fetch_sub(1, Ordering::SeqCst);
+            let _ = tx_out.send(Response {
+                id: batch[0].req.id,
+                pred: 0,
+                v_out: 0,
+                cycles: 0,
+                latency: batch[0].t0.elapsed(),
+                worker,
+                batch_size: 1,
+                err: Some(format!("{e:#}")),
+            });
+        }
+        Err(_) => {
+            // A bad request poisons the fused batch; retry each request
+            // alone so its batchmates still succeed.
+            for q in &batch {
+                let res = net.run_review(&q.req.word_ids);
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                let resp = match res {
+                    Ok(r) => Response {
+                        id: q.req.id,
+                        pred: r.pred,
+                        v_out: r.v_out,
+                        cycles: r.cycles,
+                        latency: q.t0.elapsed(),
+                        worker,
+                        batch_size: 1,
+                        err: None,
+                    },
+                    Err(e) => Response {
+                        id: q.req.id,
+                        pred: 0,
+                        v_out: 0,
+                        cycles: 0,
+                        latency: q.t0.elapsed(),
+                        worker,
+                        batch_size: 1,
+                        err: Some(format!("{e:#}")),
+                    },
+                };
+                let _ = tx_out.send(resp);
+            }
         }
     }
 }
@@ -181,6 +445,7 @@ mod tests {
         assert_eq!(stats.completed, 12);
         assert!(stats.total_cycles > 0);
         assert_eq!(server.inflight(), 0);
+        assert!(responses.iter().all(|r| r.err.is_none()));
 
         // same request id → same prediction regardless of worker
         let (responses2, _) = server.run_batch(reqs).unwrap();
@@ -202,5 +467,123 @@ mod tests {
             .unwrap();
         assert!(responses.iter().all(|r| r.worker == 0));
         server.shutdown();
+    }
+
+    #[test]
+    fn micro_batched_results_match_unbatched() {
+        let reqs: Vec<Request> = (0..20)
+            .map(|i| Request {
+                id: i,
+                word_ids: vec![(i as i64) % 20, (3 * i as i64) % 20, 7],
+            })
+            .collect();
+        let plain = InferenceServer::start(2, mini_factory(11)).unwrap();
+        let (want, _) = plain.run_batch(reqs.clone()).unwrap();
+        plain.shutdown();
+
+        let batched = InferenceServer::start_with(
+            ServerOptions {
+                workers: 2,
+                batch_size: 8,
+                batch_deadline: Duration::from_millis(20),
+                pipeline: false,
+            },
+            mini_factory(11),
+        )
+        .unwrap();
+        let (got, _) = batched.run_batch(reqs).unwrap();
+        assert!(got.iter().any(|r| r.batch_size > 1), "no batch formed");
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.id, w.id);
+            assert_eq!(g.pred, w.pred, "req {}", g.id);
+            assert_eq!(g.v_out, w.v_out, "req {}: batched vs unbatched", g.id);
+        }
+        batched.shutdown();
+    }
+
+    #[test]
+    fn pipelined_singletons_match_sequential() {
+        let reqs: Vec<Request> = (0..6)
+            .map(|i| Request {
+                id: i,
+                word_ids: vec![(i as i64) % 20, 2, 9, 4],
+            })
+            .collect();
+        let plain = InferenceServer::start(1, mini_factory(21)).unwrap();
+        let (want, _) = plain.run_batch(reqs.clone()).unwrap();
+        plain.shutdown();
+
+        let piped = InferenceServer::start_with(
+            ServerOptions {
+                workers: 2,
+                pipeline: true,
+                ..ServerOptions::default()
+            },
+            mini_factory(21),
+        )
+        .unwrap();
+        let (got, _) = piped.run_batch(reqs).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!((g.id, g.pred, g.v_out), (w.id, w.pred, w.v_out));
+        }
+        piped.shutdown();
+    }
+
+    #[test]
+    fn bad_request_yields_error_response_not_a_drop() {
+        let server = InferenceServer::start_with(
+            ServerOptions {
+                workers: 1,
+                batch_size: 4,
+                batch_deadline: Duration::from_millis(10),
+                pipeline: false,
+            },
+            mini_factory(5),
+        )
+        .unwrap();
+        // vocab is 20 in the mini artifacts: id 999 is out of range and
+        // must come back as an error response, not poison its batch.
+        let reqs = vec![
+            Request { id: 0, word_ids: vec![1, 2] },
+            Request { id: 1, word_ids: vec![999] },
+            Request { id: 2, word_ids: vec![3] },
+        ];
+        let (responses, _) = server.run_batch(reqs).unwrap();
+        assert_eq!(responses.len(), 3);
+        assert!(responses[0].err.is_none());
+        assert!(responses[1].err.is_some(), "bad word id must error");
+        assert!(responses[2].err.is_none());
+        assert_eq!(server.inflight(), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shard_router_balances_and_steals() {
+        let r: ShardRouter<u32> = ShardRouter::new(3);
+        r.push(10, 4); // shard 0
+        r.push(20, 1); // shard 1 (least loaded)
+        r.push(30, 1); // shard 2
+        assert_eq!(r.load(0), 4);
+        assert_eq!(r.load(1), 1);
+        // shard 1 drains its own queue first…
+        assert_eq!(r.pop(1), Some(20));
+        // …then steals from the most-loaded peer (shard 0)
+        assert_eq!(r.pop(1), Some(10));
+        assert_eq!(r.load(0), 0);
+        assert_eq!(r.pop(2), Some(30));
+        r.close();
+        assert_eq!(r.pop(0), None);
+    }
+
+    #[test]
+    fn shard_router_blocks_until_close() {
+        let r: Arc<ShardRouter<u8>> = Arc::new(ShardRouter::new(2));
+        let r2 = Arc::clone(&r);
+        let h = std::thread::spawn(move || r2.pop(0));
+        std::thread::sleep(Duration::from_millis(20));
+        r.push(7, 1);
+        assert_eq!(h.join().unwrap(), Some(7));
+        r.close();
+        assert_eq!(r.pop(1), None);
     }
 }

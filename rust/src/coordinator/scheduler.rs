@@ -5,9 +5,16 @@
 //! *only for spiking inputs*, followed by the neuron-update sequence.
 //! Instruction count — and therefore energy and delay — is proportional
 //! to `(1 − sparsity)`.
+//!
+//! Batched serving adds a second axis: a *fused* timestep issues one
+//! AccW2V per input row in the union of spiking inputs across the
+//! batch, broadcast to the spiking lanes' V rows (per-lane write
+//! enable). Cost becomes proportional to the union, amortizing
+//! instruction issue across requests.
 
 use crate::bitcell::Parity;
 use crate::isa::{neuron_sequence, Instruction, NeuronConfigRows, NeuronType, Program};
+use crate::snn::spike_union;
 
 /// The plan for one timestep of one tile.
 #[derive(Clone, Debug)]
@@ -24,6 +31,58 @@ impl TimestepPlan {
             return 1.0;
         }
         1.0 - self.spikes_in as f64 / self.fan_in as f64
+    }
+}
+
+/// The fused (batched) plan for one timestep of one tile: the union of
+/// spiking input rows across batch lanes, with a per-row lane bitmask.
+///
+/// This is the *planning/diagnostic* view of the fused issue —
+/// `rows` is exactly the stream `FcLayer::step_batch` builds for
+/// `ImpulseMacro::acc_w2v_fused` (both go through
+/// [`crate::snn::spike_union`], which keeps the two views consistent),
+/// packaged with the amortization and union-sparsity figures for
+/// cost analysis. The execution path itself calls `spike_union`
+/// directly into a reused scratch buffer rather than allocating a
+/// plan per timestep; nothing on the serve path constructs a plan.
+#[derive(Clone, Debug, Default)]
+pub struct FusedTimestepPlan {
+    /// `(w_row, lane-bitmask)` per union-spiking input row, row order.
+    pub rows: Vec<(usize, u32)>,
+    /// Batch lanes the plan covers (active and inactive).
+    pub lanes: usize,
+    /// Fan-in of the scheduled layer.
+    pub fan_in: usize,
+    /// Total spikes across lanes — the AccW2V count a per-request
+    /// (sequential) issue would pay.
+    pub spikes_total: usize,
+}
+
+impl FusedTimestepPlan {
+    /// AccW2V instructions the fused stream issues (per parity).
+    pub fn union_len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Issue amortization vs per-request scheduling: total spikes per
+    /// fused instruction (≥ 1 when any lane spikes; 2.0 means each
+    /// fused AccW2V serves two lanes on average).
+    pub fn amortization(&self) -> f64 {
+        if self.rows.is_empty() {
+            1.0
+        } else {
+            self.spikes_total as f64 / self.rows.len() as f64
+        }
+    }
+
+    /// Sparsity of the fused stream: `1 − union/fan_in`. This is what
+    /// the macro's energy proportionality sees under batching.
+    pub fn union_sparsity(&self) -> f64 {
+        if self.fan_in == 0 {
+            1.0
+        } else {
+            1.0 - self.rows.len() as f64 / self.fan_in as f64
+        }
     }
 }
 
@@ -86,6 +145,28 @@ impl SpikeScheduler {
             program,
             spikes_in,
             fan_in: in_spikes.len(),
+        }
+    }
+
+    /// Schedule one *fused* timestep for a batch of upstream spike
+    /// vectors: one AccW2V per union-spiking row, lane-masked.
+    /// `active[b]` gates lanes that still have work; every active
+    /// lane's spike vector must have the tile's fan-in.
+    pub fn schedule_fused(&self, batch: &[&[bool]], active: &[bool]) -> FusedTimestepPlan {
+        let fan_in = batch
+            .iter()
+            .zip(active)
+            .filter(|&(_, &a)| a)
+            .map(|(s, _)| s.len())
+            .max()
+            .unwrap_or(0);
+        let mut rows = Vec::new();
+        let spikes_total = spike_union(batch, active, &mut rows);
+        FusedTimestepPlan {
+            rows,
+            lanes: batch.len(),
+            fan_in,
+            spikes_total,
         }
     }
 }
@@ -170,6 +251,53 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn fused_plan_amortizes_shared_spikes() {
+        let s = sched(NeuronType::RMP);
+        // Three lanes spiking on overlapping rows: union is 3 rows,
+        // total is 6 spikes → amortization 2.0.
+        let a = vec![true, true, false, false];
+        let b = vec![true, false, true, false];
+        let c = vec![true, true, true, false];
+        let plan = s.schedule_fused(
+            &[&a[..], &b[..], &c[..]],
+            &[true, true, true],
+        );
+        assert_eq!(plan.union_len(), 3);
+        assert_eq!(plan.spikes_total, 6);
+        assert!((plan.amortization() - 2.0).abs() < 1e-12);
+        assert!((plan.union_sparsity() - 0.25).abs() < 1e-12);
+        assert_eq!(plan.rows[0], (0, 0b111));
+        assert_eq!(plan.rows[1], (1, 0b101));
+        assert_eq!(plan.rows[2], (2, 0b110));
+    }
+
+    #[test]
+    fn fused_plan_single_lane_matches_sequential_schedule() {
+        let s = sched(NeuronType::IF);
+        let mut spikes = vec![false; 64];
+        for i in [3usize, 17, 40] {
+            spikes[i] = true;
+        }
+        let plan = s.schedule(&spikes, false);
+        let fused = s.schedule_fused(&[&spikes[..]], &[true]);
+        assert_eq!(fused.union_len(), plan.spikes_in);
+        assert_eq!(fused.spikes_total, plan.spikes_in);
+        assert!((fused.amortization() - 1.0).abs() < 1e-12);
+        let rows: Vec<usize> = fused.rows.iter().map(|&(r, _)| r).collect();
+        assert_eq!(rows, vec![3, 17, 40]);
+    }
+
+    #[test]
+    fn fused_plan_all_silent_is_empty() {
+        let s = sched(NeuronType::RMP);
+        let quiet = vec![false; 16];
+        let plan = s.schedule_fused(&[&quiet[..], &quiet[..]], &[true, false]);
+        assert_eq!(plan.union_len(), 0);
+        assert_eq!(plan.union_sparsity(), 1.0);
+        assert_eq!(plan.amortization(), 1.0);
     }
 
     /// Property: instruction count is exactly 2·spikes + update cost.

@@ -60,6 +60,40 @@ impl SentimentArtifacts {
         })
     }
 
+    /// A deterministic synthetic bundle with the paper's sentiment
+    /// geometry (100→128→128→1, vocab 20) and in-range 6-bit weights.
+    /// No file IO: used by benches and integration tests when `make
+    /// artifacts` has not run. Not a trained model — predictions are
+    /// meaningful only for differential comparisons.
+    pub fn synthetic(seed: u64) -> Self {
+        let mut rng = crate::bits::XorShiftRng::new(seed);
+        let vocab = 20;
+        let emb_q: Vec<Vec<i64>> = (0..vocab)
+            .map(|_| (0..100).map(|_| rng.gen_i64(-40, 40)).collect())
+            .collect();
+        let w1: Vec<Vec<i64>> = (0..100)
+            .map(|_| (0..128).map(|_| rng.gen_i64(-6, 6)).collect())
+            .collect();
+        let w2: Vec<Vec<i64>> = (0..128)
+            .map(|_| (0..128).map(|_| rng.gen_i64(-6, 6)).collect())
+            .collect();
+        let w_out: Vec<i64> = (0..128).map(|_| rng.gen_i64(-10, 10)).collect();
+        Self {
+            emb_q,
+            w1,
+            w2,
+            w_out,
+            thr_enc: 60,
+            thr1: 150,
+            thr2: 200,
+            test_seqs: vec![vec![1, 2, 3, -1]],
+            test_lens: vec![3],
+            test_labels: vec![1],
+            ref_vout_traces: vec![],
+            ref_preds: vec![],
+        }
+    }
+
     /// Validate ranges against the hardware formats.
     pub fn validate(&self) -> Result<()> {
         for (name, m) in [("w1", &self.w1), ("w2", &self.w2)] {

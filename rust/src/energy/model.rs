@@ -119,7 +119,15 @@ impl EnergyModel {
             .collect();
         let f0 = crate::NOMINAL_FREQ_HZ;
         let mut best = (f64::INFINITY, 1.6, 1e-5, 0.0);
-        let search = |g_lo: f64, g_hi: f64, l_lo: f64, l_hi: f64, k_lo: f64, k_hi: f64, n: usize, best: &mut (f64, f64, f64, f64)| {
+        type Best = (f64, f64, f64, f64);
+        let search = |g_lo: f64,
+                      g_hi: f64,
+                      l_lo: f64,
+                      l_hi: f64,
+                      k_lo: f64,
+                      k_hi: f64,
+                      n: usize,
+                      best: &mut Best| {
             for gi in 0..n {
                 let g = g_lo + (g_hi - g_lo) * gi as f64 / (n - 1) as f64;
                 for li in 0..n {
@@ -148,10 +156,14 @@ impl EnergyModel {
         search(0.5, 2.4, 1e-7, 1.2e-4, -8.0, 8.0, 49, &mut best);
         let (_, g, l, k) = best;
         search(
-            (g - 0.1).max(0.3), g + 0.1,
-            (l * 0.6).max(1e-8), l * 1.4,
-            k - 0.4, k + 0.4,
-            49, &mut best,
+            (g - 0.1).max(0.3),
+            g + 0.1,
+            (l * 0.6).max(1e-8),
+            l * 1.4,
+            k - 0.4,
+            k + 0.4,
+            49,
+            &mut best,
         );
         let (err, gamma, leak0, leak_k) = best;
         debug_assert!(err.is_finite());

@@ -36,6 +36,10 @@ fn compare(mode: ComparatorMode, v: i64, neg_thr: i64) -> bool {
     }
 }
 
+/// Maximum batch lanes a fused AccW2V stream can address (bounded by
+/// the u32 lane mask; the mapper's V_MEM budget is the tighter limit).
+pub const MAX_FUSED_LANES: usize = 32;
+
 fn parity_ix(p: Parity) -> usize {
     match p {
         Parity::Odd => 0,
@@ -170,8 +174,8 @@ impl BitLevelEngine {
                 // BLFA bypassed: the sensed reset value feeds the CWD.
                 let sensed = self.vmem.read_masked(reset_row, COL_MASK);
                 let cwd = ConditionalWriteDriver::new(parity);
-                let wmask =
-                    cwd.drive_mask(WriteGate::SpikedFields, self.spikebuf[parity_ix(parity)].bits());
+                let spiked = self.spikebuf[parity_ix(parity)].bits();
+                let wmask = cwd.drive_mask(WriteGate::SpikedFields, spiked);
                 self.vmem.write_masked(dst, sensed.or, wmask);
                 let l = FieldLayout::new(parity);
                 let mut written = [0i64; 6];
@@ -485,11 +489,12 @@ impl ImpulseMacro {
         }
     }
 
-    /// Execute one instruction; returns its architectural effects.
-    pub fn execute(&mut self, instr: &Instruction) -> Result<ExecOutput> {
-        let out = match (&mut self.bit, &mut self.fast) {
-            (Some(b), None) => b.exec(instr)?,
-            (None, Some(f)) => f.exec(instr)?,
+    /// Run one instruction through the configured engine(s) without
+    /// touching the cycle counters (lockstep mode cross-checks state).
+    fn exec_engines(&mut self, instr: &Instruction) -> Result<ExecOutput> {
+        match (&mut self.bit, &mut self.fast) {
+            (Some(b), None) => b.exec(instr),
+            (None, Some(f)) => f.exec(instr),
             (Some(b), Some(f)) => {
                 let ob = b.exec(instr)?;
                 let of = f.exec(instr)?;
@@ -509,10 +514,15 @@ impl ImpulseMacro {
                         );
                     }
                 }
-                ob
+                Ok(ob)
             }
             (None, None) => unreachable!("no engine configured"),
-        };
+        }
+    }
+
+    /// Execute one instruction; returns its architectural effects.
+    pub fn execute(&mut self, instr: &Instruction) -> Result<ExecOutput> {
+        let out = self.exec_engines(instr)?;
         let k = instr.kind();
         self.counts[kind_ix(k)] += 1;
         self.cycle += 1;
@@ -587,6 +597,177 @@ impl ImpulseMacro {
         self.counts[kind_ix(InstructionKind::AccW2V)] += w_rows.len() as u64;
         self.cycle += w_rows.len() as u64;
         Ok(())
+    }
+
+    /// Fused batched AccW2V stream — the batching counterpart of
+    /// [`ImpulseMacro::acc_w2v_batch`]. `rows` lists each spiking input
+    /// row in the *union across batch lanes*, with a bitmask of the
+    /// lanes whose input spiked; `lane_v_rows[b]` is lane b's membrane
+    /// V row. Each union row is issued as a single instruction whose
+    /// wordline read is broadcast to every masked lane's write-back
+    /// (per-lane write enable), so the AccW2V count — and cycle cost —
+    /// is `rows.len()` regardless of how many lanes latch it. This is
+    /// the peripheral-cost amortization that makes batched inference
+    /// cheaper than per-request issue.
+    ///
+    /// Functionally each lane accumulates exactly its own spiking rows
+    /// (mod-2048 accumulation commutes with wrapping), so results are
+    /// bit-identical to issuing the per-lane instruction streams.
+    pub fn acc_w2v_fused(
+        &mut self,
+        rows: &[(usize, u32)],
+        lane_v_rows: &[usize],
+        parity: Parity,
+    ) -> Result<()> {
+        let lanes = lane_v_rows.len();
+        if lanes > MAX_FUSED_LANES {
+            bail!("fused batch of {lanes} lanes exceeds {MAX_FUSED_LANES}");
+        }
+        for &v in lane_v_rows {
+            if v >= V_ROWS {
+                bail!("V row {v} out of range");
+            }
+        }
+        // Validate the whole stream before touching any state, so a
+        // malformed entry cannot leave earlier rows committed (keeps
+        // post-error state identical across engines).
+        for &(w_row, mask) in rows {
+            if w_row >= W_ROWS {
+                bail!("W row {w_row} out of range");
+            }
+            if lanes < 32 && (mask >> lanes) != 0 {
+                bail!("lane mask {mask:#x} references a lane >= {lanes}");
+            }
+        }
+        let fast_only = self.bit.is_none() && !self.config.trace;
+        if !fast_only {
+            // Bit-level / lockstep / tracing path: run the per-lane
+            // effects through the engines, but keep fused accounting.
+            for &(w_row, mask) in rows {
+                let mut mm = mask;
+                let mut last = ExecOutput::default();
+                while mm != 0 {
+                    let b = mm.trailing_zeros() as usize;
+                    mm &= mm - 1;
+                    let v = lane_v_rows[b];
+                    last = self.exec_engines(&Instruction::AccW2V {
+                        w_row,
+                        v_src: v,
+                        v_dst: v,
+                        parity,
+                    })?;
+                }
+                self.counts[kind_ix(InstructionKind::AccW2V)] += 1;
+                self.cycle += 1;
+                if self.config.trace {
+                    self.tracer.record(TraceEvent {
+                        cycle: self.cycle,
+                        kind: InstructionKind::AccW2V,
+                        parity: Some(parity),
+                        written: last.written,
+                        spikes: None,
+                    });
+                }
+            }
+            return Ok(());
+        }
+        let f = self.fast.as_mut().expect("fast engine");
+        // Per-lane accumulators: the weight row is decoded once per
+        // union entry and fanned out to the masked lanes.
+        let mut acc = [[0i64; VALUES_PER_ROW]; MAX_FUSED_LANES];
+        let mut touched = 0u32;
+        for &(w_row, mask) in rows {
+            let ws = &f.w[w_row];
+            let mut add6 = [0i64; VALUES_PER_ROW];
+            for (g, a) in add6.iter_mut().enumerate() {
+                *a = ws[crate::bitcell::weight_index(g, parity)] as i64;
+            }
+            let mut mm = mask;
+            while mm != 0 {
+                let b = mm.trailing_zeros() as usize;
+                mm &= mm - 1;
+                for (a, &d) in acc[b].iter_mut().zip(add6.iter()) {
+                    *a += d;
+                }
+            }
+            touched |= mask;
+        }
+        let mut mm = touched;
+        while mm != 0 {
+            let b = mm.trailing_zeros() as usize;
+            mm &= mm - 1;
+            let mut row = f.vmem[lane_v_rows[b]];
+            for (g, &a) in acc[b].iter().enumerate() {
+                let v = wrap11(extract_field(row, g, parity) + a);
+                insert_field(&mut row, g, parity, v);
+            }
+            f.vmem[lane_v_rows[b]] = row;
+        }
+        self.counts[kind_ix(InstructionKind::AccW2V)] += rows.len() as u64;
+        self.cycle += rows.len() as u64;
+        Ok(())
+    }
+
+    /// Fused RMP neuron update on one V row: SpikeCheck against the
+    /// negated-threshold row, then the spike-gated AccV2V soft reset —
+    /// the Fig 6 RMP sequence — decoding the operand rows once.
+    /// Semantics, spike-buffer state, and accounting (2 instructions,
+    /// 2 cycles) are identical to issuing the two instructions through
+    /// [`ImpulseMacro::execute`]; this is the batched serve path's hot
+    /// kernel. Falls back to the instruction loop on the
+    /// bit-level/lockstep engines and when tracing.
+    pub fn rmp_update_fused(
+        &mut self,
+        v_row: usize,
+        neg_thr_row: usize,
+        parity: Parity,
+    ) -> Result<[bool; 6]> {
+        let seq = [
+            Instruction::SpikeCheck {
+                v_row,
+                thr_row: neg_thr_row,
+                parity,
+            },
+            Instruction::AccV2V {
+                src_a: v_row,
+                src_b: neg_thr_row,
+                dst: v_row,
+                parity,
+                mask: WriteMaskMode::Spiked,
+            },
+        ];
+        let fast_only = self.bit.is_none() && !self.config.trace;
+        if !fast_only {
+            for instr in &seq {
+                self.execute(instr)?;
+            }
+            return Ok(self.spikes(parity));
+        }
+        let f = self.fast.as_mut().expect("fast engine");
+        if v_row >= V_ROWS || neg_thr_row >= V_ROWS {
+            bail!("V row out of range ({v_row}, {neg_thr_row})");
+        }
+        if v_row == neg_thr_row {
+            bail!("SpikeCheck with v_row == thr_row");
+        }
+        let v = f.vmem[v_row];
+        let t = f.vmem[neg_thr_row];
+        let mut d = v;
+        let mut spikes = [false; 6];
+        for (g, s) in spikes.iter_mut().enumerate() {
+            let vg = extract_field(v, g, parity);
+            let tg = extract_field(t, g, parity);
+            *s = compare(f.comparator, vg, tg);
+            if *s {
+                insert_field(&mut d, g, parity, wrap11(vg + tg));
+            }
+        }
+        f.vmem[v_row] = d;
+        f.spikebuf[parity_ix(parity)].latch(spikes);
+        self.counts[kind_ix(InstructionKind::SpikeCheck)] += 1;
+        self.counts[kind_ix(InstructionKind::AccV2V)] += 1;
+        self.cycle += 2;
+        Ok(spikes)
     }
 
     // ---- convenience accessors -------------------------------------

@@ -17,7 +17,7 @@ mod impulse;
 mod trace;
 
 pub use config::{ComparatorMode, Engine, MacroConfig};
-pub use impulse::{ExecOutput, ImpulseMacro};
+pub use impulse::{ExecOutput, ImpulseMacro, MAX_FUSED_LANES};
 pub use trace::{TraceEvent, Tracer};
 
 #[cfg(test)]

@@ -428,3 +428,121 @@ fn acc_w2v_batch_empty_is_free() {
     assert_eq!(m.cycles(), c0);
     assert_eq!(m.read_v(0, Parity::Odd).unwrap(), [7; 6]);
 }
+
+/// Fused (lane-masked) AccW2V: each lane must accumulate exactly its
+/// own spiking rows, identical to per-lane instruction issue, while
+/// the instruction count is the union length.
+#[test]
+fn acc_w2v_fused_matches_per_lane_issue() {
+    let mut rng = XorShiftRng::new(0xFA5E);
+    for parity in Parity::BOTH {
+        let mut fused = ImpulseMacro::new(MacroConfig::fast());
+        let mut reference = ImpulseMacro::new(MacroConfig::fast());
+        for r in 0..32 {
+            let w = rand_weights(&mut rng);
+            fused.write_weights(r, &w).unwrap();
+            reference.write_weights(r, &w).unwrap();
+        }
+        let lanes = 5usize;
+        let lane_rows: Vec<usize> = (0..lanes)
+            .map(|b| match parity {
+                Parity::Odd => 2 * b,
+                Parity::Even => 2 * b + 1,
+            })
+            .collect();
+        for &v in &lane_rows {
+            fused.write_v(v, parity, &[0; 6]).unwrap();
+            reference.write_v(v, parity, &[0; 6]).unwrap();
+        }
+        fused.reset_counters();
+        reference.reset_counters();
+        // random union with random lane masks
+        let mut rows: Vec<(usize, u32)> = Vec::new();
+        for r in 0..32 {
+            if rng.gen_bool(0.6) {
+                rows.push((r, 1 + rng.gen_range((1u64 << lanes) - 1) as u32));
+            }
+        }
+        fused.acc_w2v_fused(&rows, &lane_rows, parity).unwrap();
+        for (b, &v_row) in lane_rows.iter().enumerate() {
+            let mine: Vec<usize> = rows
+                .iter()
+                .filter(|&&(_, m)| m & (1 << b) != 0)
+                .map(|&(r, _)| r)
+                .collect();
+            reference.acc_w2v_batch(&mine, v_row, parity).unwrap();
+            assert_eq!(
+                fused.read_v(v_row, parity).unwrap(),
+                reference.read_v(v_row, parity).unwrap(),
+                "lane {b} ({parity:?})"
+            );
+        }
+        // fused accounting: one AccW2V per union row
+        assert_eq!(
+            fused.count_of(crate::isa::InstructionKind::AccW2V),
+            rows.len() as u64
+        );
+    }
+}
+
+/// The fused path drives the bit-level engine too (lockstep asserts
+/// per-instruction equality internally) with the same fused counts.
+#[test]
+fn acc_w2v_fused_lockstep_engine_agrees() {
+    let mut rng = XorShiftRng::new(0xBA7C);
+    let mut lock = ImpulseMacro::new(MacroConfig::lockstep());
+    let mut fast = ImpulseMacro::new(MacroConfig::fast());
+    for r in 0..16 {
+        let w = rand_weights(&mut rng);
+        lock.write_weights(r, &w).unwrap();
+        fast.write_weights(r, &w).unwrap();
+    }
+    let lane_rows = [0usize, 2, 4];
+    for &v in &lane_rows {
+        lock.write_v(v, Parity::Odd, &[0; 6]).unwrap();
+        fast.write_v(v, Parity::Odd, &[0; 6]).unwrap();
+    }
+    lock.reset_counters();
+    fast.reset_counters();
+    let rows: Vec<(usize, u32)> = vec![(0, 0b111), (3, 0b010), (7, 0b101), (12, 0b001)];
+    lock.acc_w2v_fused(&rows, &lane_rows, Parity::Odd).unwrap();
+    fast.acc_w2v_fused(&rows, &lane_rows, Parity::Odd).unwrap();
+    for &v in &lane_rows {
+        assert_eq!(
+            lock.read_v(v, Parity::Odd).unwrap(),
+            fast.read_v(v, Parity::Odd).unwrap()
+        );
+    }
+    assert_eq!(lock.cycles(), fast.cycles());
+    assert_eq!(lock.count_of(crate::isa::InstructionKind::AccW2V), 4);
+}
+
+/// Fused issue validation: bad rows, bad lanes, and over-wide masks
+/// are rejected without corrupting the cycle counter.
+#[test]
+fn acc_w2v_fused_rejects_malformed_streams() {
+    let mut m = ImpulseMacro::new(MacroConfig::fast());
+    m.write_v(0, Parity::Odd, &[0; 6]).unwrap();
+    let c0 = m.cycles();
+    assert!(m.acc_w2v_fused(&[(200, 1)], &[0], Parity::Odd).is_err());
+    assert!(m.acc_w2v_fused(&[(0, 0b10)], &[0], Parity::Odd).is_err());
+    assert!(m.acc_w2v_fused(&[(0, 1)], &[99], Parity::Odd).is_err());
+    assert_eq!(m.cycles(), c0);
+    // empty stream is free
+    m.acc_w2v_fused(&[], &[0], Parity::Odd).unwrap();
+    assert_eq!(m.cycles(), c0);
+
+    // a malformed entry later in the stream must not commit earlier
+    // rows on any engine (validation precedes execution)
+    for cfg in [MacroConfig::fast(), MacroConfig::lockstep()] {
+        let mut m = ImpulseMacro::new(cfg);
+        m.write_weights(0, &[7; 12]).unwrap();
+        m.write_v(0, Parity::Odd, &[0; 6]).unwrap();
+        let c0 = m.cycles();
+        assert!(m
+            .acc_w2v_fused(&[(0, 1), (200, 1)], &[0], Parity::Odd)
+            .is_err());
+        assert_eq!(m.cycles(), c0, "{cfg:?}");
+        assert_eq!(m.read_v(0, Parity::Odd).unwrap(), [0; 6], "{cfg:?}");
+    }
+}

@@ -9,7 +9,8 @@
 //!   report   --fig {2|6|7|8|9a|11b} | --table 1   regenerate paper artifacts
 //!   infer    --text "w1 w2 …" | --sample N        classify via the macro pool
 //!   eval     [--max N] [--xla-check]              full test-set evaluation
-//!   serve    [--workers N]                        stdin/stdout request loop
+//!   serve    [--workers N] [--batch B]            stdin/stdout request loop
+//!            [--batch-deadline-us U] [--pipeline]
 //!   shmoo                                         print the Fig 8 grid
 //!   sweep    [--neuron rmp|if|lif]                EDP vs sparsity (Fig 11b)
 //!   info                                          artifact + model summary
@@ -61,7 +62,10 @@ COMMANDS:
     infer --sample N                classify test review N
     infer --words "id id id"        classify a word-id sequence
     eval [--max N] [--xla-check]    evaluate the test set on the macro pool
-    serve [--workers N]             line-oriented inference server (stdin)
+    serve [--workers N] [--batch B] [--batch-deadline-us U] [--pipeline]
+                                    line-oriented inference server (stdin);
+                                    --batch fuses up to B requests into one
+                                    instruction stream per tile
     shmoo                           print the Fig 8 Shmoo grid
     sweep [--neuron rmp|if|lif]     EDP vs sparsity sweep (Fig 11b)
     trace-vmem [--sample N]         Fig 10: output-neuron V_MEM trajectory

@@ -23,7 +23,10 @@ use thiserror::Error;
 /// Mapping errors.
 #[derive(Debug, Error, PartialEq, Eq)]
 pub enum MapError {
-    #[error("fan-in {0} exceeds the macro's 128 rows (the paper's own constraint; restructure the layer)")]
+    #[error(
+        "fan-in {0} exceeds the macro's 128 rows (the paper's own constraint; \
+         restructure the layer)"
+    )]
     FanInTooLarge(usize),
     #[error("layer has no outputs")]
     EmptyLayer,

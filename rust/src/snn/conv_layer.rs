@@ -177,7 +177,14 @@ mod tests {
     }
 
     impl GoldenConv {
-        fn new(kernel: Vec<i64>, h: usize, w: usize, c_in: usize, c_out: usize, p: LayerParams) -> Self {
+        fn new(
+            kernel: Vec<i64>,
+            h: usize,
+            w: usize,
+            c_in: usize,
+            c_out: usize,
+            p: LayerParams,
+        ) -> Self {
             let layout = ConvLayout::new(h, w, c_in, c_out, 3).unwrap();
             let np = NeuronParams {
                 neuron: p.neuron,

@@ -74,16 +74,16 @@ impl DigitsNetwork {
         let cycles0 = self.total_cycles();
         for t in 0..self.t {
             let s1 = self.encoder.step(); // 28×28×C
-            self.tracker
-                .record_counts(0, t, s1.flatten().iter().filter(|&&b| b).count() as u64, s1.len() as u64);
+            let fired1 = s1.flatten().iter().filter(|&&b| b).count() as u64;
+            self.tracker.record_counts(0, t, fired1, s1.len() as u64);
             let p1 = s1.maxpool2(); // 14×14×C
             let s2 = self.conv2.step(&p1)?;
-            self.tracker
-                .record_counts(1, t, s2.flatten().iter().filter(|&&b| b).count() as u64, s2.len() as u64);
+            let fired2 = s2.flatten().iter().filter(|&&b| b).count() as u64;
+            self.tracker.record_counts(1, t, fired2, s2.len() as u64);
             let p2 = s2.maxpool2(); // 7×7×C
             let s3 = self.conv3.step(&p2)?;
-            self.tracker
-                .record_counts(2, t, s3.flatten().iter().filter(|&&b| b).count() as u64, s3.len() as u64);
+            let fired3 = s3.flatten().iter().filter(|&&b| b).count() as u64;
+            self.tracker.record_counts(2, t, fired3, s3.len() as u64);
             let p3 = s3.maxpool2(); // 3×3×C
             let sf = self.fc1.step(&p3.flatten())?.to_vec();
             self.tracker.record(3, t, &sf);

@@ -29,6 +29,13 @@ impl LayerStats {
 /// With `output_only` the layer skips SpikeCheck/reset entirely: its
 /// neurons just integrate (the network's output neurons, read out via
 /// their membrane potentials — paper Fig 10).
+///
+/// Besides the classic one-request [`FcLayer::step`], the layer
+/// supports *batch lanes*: lane `b` keeps its membrane potentials in V
+/// rows `(2b, 2b+1)` of every tile macro (the rows below the constant
+/// block), and [`FcLayer::step_batch`] issues one fused AccW2V stream
+/// per tile covering the union of spiking inputs across lanes. Lane 0
+/// aliases the single-request rows.
 pub struct FcLayer {
     pub layout: FcLayout,
     macros: Vec<ImpulseMacro>,
@@ -41,6 +48,17 @@ pub struct FcLayer {
     /// Precomputed neuron-update sequences per parity (fixed rows).
     seq_odd: Vec<crate::isa::Instruction>,
     seq_even: Vec<crate::isa::Instruction>,
+    /// Configured batch lanes (1 until `begin_batch` widens it).
+    lanes: usize,
+    /// Per-lane neuron-update sequences, `(odd, even)` per lane.
+    lane_seqs: Vec<(Vec<crate::isa::Instruction>, Vec<crate::isa::Instruction>)>,
+    /// Per-lane destination V rows, indexed by lane, per parity.
+    lane_rows_odd: Vec<usize>,
+    lane_rows_even: Vec<usize>,
+    /// Scratch: per-lane output spikes.
+    batch_out: Vec<Vec<bool>>,
+    /// Scratch: fused spike union `(row, lane mask)` of the timestep.
+    union_rows: Vec<(usize, u32)>,
 }
 
 impl FcLayer {
@@ -87,6 +105,12 @@ impl FcLayer {
             output_only: false,
             out_spikes: vec![false; width],
             spiking_rows: Vec::with_capacity(fan_in),
+            lanes: 1,
+            lane_seqs: vec![(seq_odd.clone(), seq_even.clone())],
+            lane_rows_odd: vec![0],
+            lane_rows_even: vec![1],
+            batch_out: vec![vec![false; width]],
+            union_rows: Vec::with_capacity(fan_in),
             seq_odd,
             seq_even,
         })
@@ -145,12 +169,151 @@ impl FcLayer {
         Ok(&self.out_spikes)
     }
 
+    /// Maximum batch lanes this layer can host: one odd/even V-row pair
+    /// per lane in the rows below the constant block.
+    pub fn max_batch_lanes(&self) -> usize {
+        (self.layout.const_rows.first_row() / 2).min(crate::macro_sim::MAX_FUSED_LANES)
+    }
+
+    /// Configured batch lanes (1 unless `begin_batch` widened it).
+    pub fn batch_lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Allocate and zero `lanes` independent batch lanes: lane `b`'s
+    /// membrane potentials live in V rows `(2b, 2b+1)` of every tile
+    /// macro, with per-lane neuron-update sequences against the shared
+    /// constant rows. Lane 0 aliases the classic single-request rows.
+    pub fn begin_batch(&mut self, lanes: usize) -> Result<()> {
+        anyhow::ensure!(
+            lanes >= 1 && lanes <= self.max_batch_lanes(),
+            "batch of {lanes} lanes outside 1..={} (V_MEM budget)",
+            self.max_batch_lanes()
+        );
+        self.lanes = lanes;
+        let c = self.layout.const_rows;
+        self.lane_seqs.clear();
+        self.lane_rows_odd.clear();
+        self.lane_rows_even.clear();
+        for b in 0..lanes {
+            let (v_odd, v_even) = (2 * b, 2 * b + 1);
+            self.lane_rows_odd.push(v_odd);
+            self.lane_rows_even.push(v_even);
+            self.lane_seqs.push((
+                neuron_sequence(self.params.neuron, v_odd, c.for_parity(Parity::Odd), Parity::Odd),
+                neuron_sequence(
+                    self.params.neuron,
+                    v_even,
+                    c.for_parity(Parity::Even),
+                    Parity::Even,
+                ),
+            ));
+        }
+        self.batch_out = vec![vec![false; self.layout.width]; lanes];
+        for m in self.macros.iter_mut() {
+            for b in 0..lanes {
+                m.write_v(2 * b, Parity::Odd, &[0; 6])?;
+                m.write_v(2 * b + 1, Parity::Even, &[0; 6])?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one fused timestep across all batch lanes: one AccW2V per
+    /// tile per parity per *union*-spiking input row (lane-masked
+    /// broadcast — see `ImpulseMacro::acc_w2v_fused`), then the
+    /// per-lane neuron-update sequences. `active[b]` gates lanes that
+    /// still have work; inactive lanes are untouched. Returns per-lane
+    /// output spikes (all-false rows for inactive or output-only
+    /// lanes). Bit-identical per lane to running `step` sequentially.
+    pub fn step_batch(&mut self, batch: &[&[bool]], active: &[bool]) -> Result<&[Vec<bool>]> {
+        let lanes = self.lanes;
+        anyhow::ensure!(
+            batch.len() == lanes && active.len() == lanes,
+            "batch of {} lanes, {} active flags; configured for {lanes} (call begin_batch)",
+            batch.len(),
+            active.len()
+        );
+        for (b, s) in batch.iter().enumerate() {
+            if active[b] {
+                anyhow::ensure!(
+                    s.len() == self.layout.fan_in,
+                    "lane {b}: fan-in {} != {}",
+                    s.len(),
+                    self.layout.fan_in
+                );
+            }
+        }
+        crate::snn::spike_union(batch, active, &mut self.union_rows);
+        for out in self.batch_out.iter_mut() {
+            for s in out.iter_mut() {
+                *s = false;
+            }
+        }
+        for (tile, m) in self.layout.tiles.iter().zip(self.macros.iter_mut()) {
+            m.acc_w2v_fused(&self.union_rows, &self.lane_rows_odd, Parity::Odd)?;
+            m.acc_w2v_fused(&self.union_rows, &self.lane_rows_even, Parity::Even)?;
+            if self.output_only {
+                continue;
+            }
+            let c = self.layout.const_rows;
+            let fuse_rmp = self.params.neuron == crate::isa::NeuronType::RMP;
+            for b in 0..lanes {
+                if !active[b] {
+                    continue;
+                }
+                for parity in Parity::BOTH {
+                    let spikes = if fuse_rmp {
+                        // hot kernel: the two-instruction RMP sequence
+                        // with operand rows decoded once
+                        let thr = match parity {
+                            Parity::Odd => c.neg_thr_odd,
+                            Parity::Even => c.neg_thr_even,
+                        };
+                        m.rmp_update_fused(lane_v_row(b, parity), thr, parity)?
+                    } else {
+                        let (seq_o, seq_e) = &self.lane_seqs[b];
+                        let seq = match parity {
+                            Parity::Odd => seq_o,
+                            Parity::Even => seq_e,
+                        };
+                        for instr in seq.iter() {
+                            m.execute(instr)?;
+                        }
+                        m.spikes(parity)
+                    };
+                    for (field, &sp) in spikes.iter().enumerate() {
+                        let local = tile.local_out(parity, field);
+                        if local < tile.out_count {
+                            self.batch_out[b][tile.out_base + local] = sp;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(&self.batch_out)
+    }
+
+    /// Current membrane potentials of one batch lane's outputs.
+    pub fn lane_potentials(&mut self, lane: usize) -> Result<Vec<i64>> {
+        anyhow::ensure!(
+            lane < self.lanes,
+            "lane {lane} >= configured {} lanes",
+            self.lanes
+        );
+        self.potentials_for(2 * lane, 2 * lane + 1)
+    }
+
     /// Current membrane potentials of all outputs.
     pub fn potentials(&mut self) -> Result<Vec<i64>> {
+        self.potentials_for(0, 1)
+    }
+
+    fn potentials_for(&mut self, v_odd: usize, v_even: usize) -> Result<Vec<i64>> {
         let mut out = vec![0i64; self.layout.width];
         for (tile, m) in self.layout.tiles.iter().zip(self.macros.iter_mut()) {
-            for parity in Parity::BOTH {
-                let vals = m.read_v(tile_v_row(tile, parity), parity)?;
+            for (parity, row) in [(Parity::Odd, v_odd), (Parity::Even, v_even)] {
+                let vals = m.read_v(row, parity)?;
                 for (field, &v) in vals.iter().enumerate() {
                     let local = tile.local_out(parity, field);
                     if local < tile.out_count {
@@ -210,6 +373,16 @@ fn tile_v_row(tile: &crate::mapper::TileMapping, parity: Parity) -> usize {
     match parity {
         Parity::Odd => tile.v_row_odd,
         Parity::Even => tile.v_row_even,
+    }
+}
+
+/// Batch lane `b`'s V row for one parity: the pair `(2b, 2b+1)` below
+/// the constant block (lane 0 aliases the single-request rows).
+#[inline]
+fn lane_v_row(lane: usize, parity: Parity) -> usize {
+    match parity {
+        Parity::Odd => 2 * lane,
+        Parity::Even => 2 * lane + 1,
     }
 }
 
@@ -291,7 +464,7 @@ mod tests {
         let mut rng = XorShiftRng::new(5);
         let w = rand_weights(&mut rng, 32, 12);
         let mut layer = FcLayer::new(&w, LayerParams::rmp(100), MacroConfig::fast()).unwrap();
-        layer.step(&vec![false; 32]).unwrap();
+        layer.step(&[false; 32]).unwrap();
         let s = layer.stats();
         assert_eq!(s.histogram.get(&InstructionKind::AccW2V), None);
         // neuron update still runs: 2 SpikeChecks (odd+even), 2 AccV2V
@@ -335,6 +508,123 @@ mod tests {
         assert!(layer.potentials().unwrap().iter().any(|&v| v != 0));
         layer.reset_state().unwrap();
         assert!(layer.potentials().unwrap().iter().all(|&v| v == 0));
+    }
+
+    /// Batched execution must be bit-identical, lane for lane, to
+    /// running each lane through its own sequential layer — the
+    /// correctness anchor for the fused AccW2V path.
+    #[test]
+    fn step_batch_matches_per_lane_sequential() {
+        let mut rng = XorShiftRng::new(99);
+        for (m_in, n_out, params, lanes) in [
+            (100, 128, LayerParams::rmp(150), 4),
+            (64, 24, LayerParams::if_(100), 13),
+            (32, 17, LayerParams::lif(80, 3), 2),
+        ] {
+            let w = rand_weights(&mut rng, m_in, n_out);
+            let mut batched = FcLayer::new(&w, params, MacroConfig::fast()).unwrap();
+            batched.begin_batch(lanes).unwrap();
+            let mut refs: Vec<FcLayer> = (0..lanes)
+                .map(|_| FcLayer::new(&w, params, MacroConfig::fast()).unwrap())
+                .collect();
+            let active = vec![true; lanes];
+            for t in 0..12 {
+                let spikes: Vec<Vec<bool>> = (0..lanes)
+                    .map(|_| rand_spikes(&mut rng, m_in, 0.25))
+                    .collect();
+                let spike_refs: Vec<&[bool]> = spikes.iter().map(|s| s.as_slice()).collect();
+                let got = batched.step_batch(&spike_refs, &active).unwrap().to_vec();
+                for (b, r) in refs.iter_mut().enumerate() {
+                    let want = r.step(&spikes[b]).unwrap().to_vec();
+                    assert_eq!(got[b], want, "t={t} lane {b} spikes {params:?}");
+                }
+                for (b, r) in refs.iter_mut().enumerate() {
+                    assert_eq!(
+                        batched.lane_potentials(b).unwrap(),
+                        r.potentials().unwrap(),
+                        "t={t} lane {b} potentials"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Same check on the lockstep engine: the fused path must drive the
+    /// bit-level engine through per-lane instruction effects.
+    #[test]
+    fn step_batch_matches_sequential_on_lockstep_engine() {
+        let mut rng = XorShiftRng::new(123);
+        let w = rand_weights(&mut rng, 24, 12);
+        let p = LayerParams::rmp(60);
+        let mut batched = FcLayer::new(&w, p, MacroConfig::lockstep()).unwrap();
+        batched.begin_batch(3).unwrap();
+        let mut refs: Vec<FcLayer> = (0..3)
+            .map(|_| FcLayer::new(&w, p, MacroConfig::lockstep()).unwrap())
+            .collect();
+        for _ in 0..5 {
+            let spikes: Vec<Vec<bool>> =
+                (0..3).map(|_| rand_spikes(&mut rng, 24, 0.3)).collect();
+            let spike_refs: Vec<&[bool]> = spikes.iter().map(|s| s.as_slice()).collect();
+            let got = batched.step_batch(&spike_refs, &[true, true, true]).unwrap().to_vec();
+            for (b, r) in refs.iter_mut().enumerate() {
+                assert_eq!(got[b], r.step(&spikes[b]).unwrap().to_vec(), "lane {b}");
+            }
+        }
+    }
+
+    /// The fused stream's AccW2V count is the union across lanes, not
+    /// the per-lane sum — the batching cost model.
+    #[test]
+    fn step_batch_accw2v_counts_union_not_sum() {
+        let mut rng = XorShiftRng::new(7);
+        let w = rand_weights(&mut rng, 16, 12);
+        let mut layer = FcLayer::new(&w, LayerParams::rmp(100), MacroConfig::fast()).unwrap();
+        layer.begin_batch(4).unwrap();
+        layer.reset_counters();
+        // all four lanes spike on the same 3 rows → union = 3
+        let mut s = vec![false; 16];
+        s[1] = true;
+        s[5] = true;
+        s[9] = true;
+        let refs: Vec<&[bool]> = (0..4).map(|_| s.as_slice()).collect();
+        layer.step_batch(&refs, &[true; 4]).unwrap();
+        let h = layer.stats().histogram;
+        // 3 union rows × 2 parities (one tile), not 12 spikes × 2
+        assert_eq!(h[&InstructionKind::AccW2V], 6);
+        // neuron updates stay per-lane: 4 lanes × 2 SpikeChecks
+        assert_eq!(h[&InstructionKind::SpikeCheck], 8);
+    }
+
+    #[test]
+    fn step_batch_skips_inactive_lanes() {
+        let mut rng = XorShiftRng::new(8);
+        let w = rand_weights(&mut rng, 8, 6);
+        let mut layer = FcLayer::new(&w, LayerParams::rmp(50), MacroConfig::fast()).unwrap();
+        layer.begin_batch(2).unwrap();
+        let s_live = vec![true; 8];
+        let s_dead = vec![true; 8]; // would spike if it were active
+        layer
+            .step_batch(&[&s_live[..], &s_dead[..]], &[true, false])
+            .unwrap();
+        assert!(layer.lane_potentials(0).unwrap().iter().any(|&v| v != 0));
+        assert!(layer.lane_potentials(1).unwrap().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn begin_batch_rejects_overflow_and_resets_lanes() {
+        let w = vec![vec![1i64; 4]; 4];
+        let mut layer = FcLayer::new(&w, LayerParams::rmp(10), MacroConfig::fast()).unwrap();
+        assert_eq!(layer.max_batch_lanes(), 13);
+        assert!(layer.begin_batch(14).is_err());
+        assert!(layer.begin_batch(0).is_err());
+        layer.begin_batch(2).unwrap();
+        assert_eq!(layer.batch_lanes(), 2);
+        let s = vec![true; 4];
+        layer.step_batch(&[&s[..], &s[..]], &[true, true]).unwrap();
+        // re-arming zeroes lane state
+        layer.begin_batch(2).unwrap();
+        assert!(layer.lane_potentials(0).unwrap().iter().all(|&v| v == 0));
+        assert!(layer.lane_potentials(1).unwrap().iter().all(|&v| v == 0));
     }
 
     #[test]

@@ -80,7 +80,12 @@ impl SentimentNetwork {
             if wid < 0 {
                 break;
             }
-            let x = &self.emb[wid as usize];
+            let Some(x) = self.emb.get(wid as usize) else {
+                anyhow::bail!(
+                    "word id {wid} out of range (vocab {})",
+                    self.emb.len()
+                );
+            };
             for t in 0..self.t_word {
                 // disjoint field borrows: each layer's output slice is
                 // consumed by the next without copying
@@ -93,6 +98,166 @@ impl SentimentNetwork {
                 self.out.step(s2)?;
             }
             vout_trace.push(self.out.potentials()?[0]);
+        }
+        let v_out = *vout_trace.last().unwrap_or(&0);
+        Ok(ReviewResult {
+            pred: (v_out >= 0) as u8,
+            v_out,
+            vout_trace,
+            cycles: self.total_cycles() - cycles0,
+        })
+    }
+
+    /// Batch lanes one pass through the macro pool can host (bounded by
+    /// the V_MEM row budget of the mapped layers).
+    pub fn max_batch_lanes(&self) -> usize {
+        self.fc1
+            .max_batch_lanes()
+            .min(self.fc2.max_batch_lanes())
+            .min(self.out.max_batch_lanes())
+    }
+
+    /// Classify a batch of reviews concurrently on the same macro pool:
+    /// each review gets its own membrane-potential lane in every tile,
+    /// and each timestep issues one fused AccW2V stream per tile whose
+    /// instruction count is the *union* of spiking inputs across the
+    /// batch (amortizing issue cost — the batching analogue of the
+    /// paper's sparsity proportionality). Reviews beyond the lane
+    /// budget are processed in chunks.
+    ///
+    /// Predictions and V_out traces are bit-identical to running each
+    /// review through [`SentimentNetwork::run_review`]; per-review
+    /// `cycles` report the amortized chunk cost split evenly.
+    pub fn run_reviews_batched(&mut self, reviews: &[&[i64]]) -> Result<Vec<ReviewResult>> {
+        let max = self.max_batch_lanes();
+        let mut out = Vec::with_capacity(reviews.len());
+        for chunk in reviews.chunks(max) {
+            out.extend(self.run_batch_chunk(chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn run_batch_chunk(&mut self, reviews: &[&[i64]]) -> Result<Vec<ReviewResult>> {
+        let lanes = reviews.len();
+        // effective sequences: cut at the first padding id, bounds-check
+        let mut seqs: Vec<&[i64]> = Vec::with_capacity(lanes);
+        for (b, r) in reviews.iter().enumerate() {
+            let end = r.iter().position(|&w| w < 0).unwrap_or(r.len());
+            let s = &r[..end];
+            for &wid in s {
+                anyhow::ensure!(
+                    (wid as usize) < self.emb.len(),
+                    "lane {b}: word id {wid} out of range (vocab {})",
+                    self.emb.len()
+                );
+            }
+            seqs.push(s);
+        }
+        self.fc1.begin_batch(lanes)?;
+        self.fc2.begin_batch(lanes)?;
+        self.out.begin_batch(lanes)?;
+        let cycles0 = self.total_cycles();
+        let mut encoders: Vec<Encoder> = (0..lanes)
+            .map(|_| {
+                let mut e = self.encoder.clone();
+                e.reset_state();
+                e
+            })
+            .collect();
+        let max_words = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
+        let mut traces: Vec<Vec<i64>> = vec![Vec::new(); lanes];
+        let mut active = vec![false; lanes];
+        let mut enc_out: Vec<Vec<bool>> = vec![vec![false; self.fc1.fan_in()]; lanes];
+        for wi in 0..max_words {
+            for (b, a) in active.iter_mut().enumerate() {
+                *a = wi < seqs[b].len();
+            }
+            for t in 0..self.t_word {
+                for b in 0..lanes {
+                    if !active[b] {
+                        continue;
+                    }
+                    let x = &self.emb[seqs[b][wi] as usize];
+                    let s = encoders[b].step(x);
+                    enc_out[b].copy_from_slice(s);
+                    self.tracker.record(0, t, s);
+                }
+                let in_refs: Vec<&[bool]> = enc_out.iter().map(|v| v.as_slice()).collect();
+                let s1 = self.fc1.step_batch(&in_refs, &active)?;
+                for (b, s) in s1.iter().enumerate() {
+                    if active[b] {
+                        self.tracker.record(1, t, s);
+                    }
+                }
+                let r1: Vec<&[bool]> = s1.iter().map(|v| v.as_slice()).collect();
+                let s2 = self.fc2.step_batch(&r1, &active)?;
+                for (b, s) in s2.iter().enumerate() {
+                    if active[b] {
+                        self.tracker.record(2, t, s);
+                    }
+                }
+                let r2: Vec<&[bool]> = s2.iter().map(|v| v.as_slice()).collect();
+                self.out.step_batch(&r2, &active)?;
+            }
+            for b in 0..lanes {
+                if active[b] {
+                    traces[b].push(self.out.lane_potentials(b)?[0]);
+                }
+            }
+        }
+        let spent = self.total_cycles() - cycles0;
+        let per_review = spent / lanes as u64;
+        Ok(traces
+            .into_iter()
+            .map(|trace| {
+                let v_out = *trace.last().unwrap_or(&0);
+                ReviewResult {
+                    pred: (v_out >= 0) as u8,
+                    v_out,
+                    vout_trace: trace,
+                    cycles: per_review,
+                }
+            })
+            .collect())
+    }
+
+    /// Classify one review with the hidden layers running as wavefront
+    /// pipeline stages (fc1 processes timestep *t* while fc2 processes
+    /// *t−1* — the coordinator's `run_stages` engine on the serve
+    /// path). Spikes and predictions are bit-identical to
+    /// [`SentimentNetwork::run_review`]; the sparsity tracker is not
+    /// updated on this path.
+    pub fn run_review_pipelined(&mut self, word_ids: &[i64]) -> Result<ReviewResult> {
+        self.reset_state()?;
+        let cycles0 = self.total_cycles();
+        // Encode every timestep up front (the encoder lives off-macro
+        // and is cheap); the macro-mapped layers stream behind it.
+        let mut inputs = Vec::new();
+        for &wid in word_ids {
+            if wid < 0 {
+                break;
+            }
+            let Some(x) = self.emb.get(wid as usize) else {
+                anyhow::bail!(
+                    "word id {wid} out of range (vocab {})",
+                    self.emb.len()
+                );
+            };
+            for _ in 0..self.t_word {
+                inputs.push(self.encoder.step(x).to_vec());
+            }
+        }
+        let s2 = crate::coordinator::pipeline::run_stages(
+            vec![&mut self.fc1, &mut self.fc2],
+            &inputs,
+            4,
+        )?;
+        let mut vout_trace = Vec::new();
+        for (i, s) in s2.iter().enumerate() {
+            self.out.step(s)?;
+            if (i + 1) % self.t_word == 0 {
+                vout_trace.push(self.out.potentials()?[0]);
+            }
         }
         let v_out = *vout_trace.last().unwrap_or(&0);
         Ok(ReviewResult {
@@ -126,36 +291,10 @@ impl SentimentNetwork {
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
-    use crate::bits::XorShiftRng;
 
     /// Synthetic mini-artifacts for fast tests (no file IO).
     pub(crate) fn mini_artifacts(seed: u64) -> SentimentArtifacts {
-        let mut rng = XorShiftRng::new(seed);
-        let vocab = 20;
-        let emb_q: Vec<Vec<i64>> = (0..vocab)
-            .map(|_| (0..100).map(|_| rng.gen_i64(-40, 40)).collect())
-            .collect();
-        let w1: Vec<Vec<i64>> = (0..100)
-            .map(|_| (0..128).map(|_| rng.gen_i64(-6, 6)).collect())
-            .collect();
-        let w2: Vec<Vec<i64>> = (0..128)
-            .map(|_| (0..128).map(|_| rng.gen_i64(-6, 6)).collect())
-            .collect();
-        let w_out: Vec<i64> = (0..128).map(|_| rng.gen_i64(-10, 10)).collect();
-        SentimentArtifacts {
-            emb_q,
-            w1,
-            w2,
-            w_out,
-            thr_enc: 60,
-            thr1: 150,
-            thr2: 200,
-            test_seqs: vec![vec![1, 2, 3, -1]],
-            test_lens: vec![3],
-            test_labels: vec![1],
-            ref_vout_traces: vec![],
-            ref_preds: vec![],
-        }
+        SentimentArtifacts::synthetic(seed)
     }
 
     #[test]
@@ -193,6 +332,105 @@ pub(crate) mod tests {
         net.run_review(&[1, 2, 3, 4]).unwrap();
         let overall = net.tracker.overall();
         assert!(overall > 0.3 && overall <= 1.0, "sparsity {overall}");
+    }
+
+    /// The flagship batching differential: a mixed-length batch run
+    /// through the fused lanes must reproduce every review's sequential
+    /// V_out trace and prediction exactly.
+    #[test]
+    fn batched_reviews_bit_identical_to_sequential() {
+        let a = mini_artifacts(6);
+        let reviews: Vec<Vec<i64>> = vec![
+            vec![3, 7, 5],
+            vec![1],
+            vec![4, 2, -1, 9, 9], // padding cuts after two words
+            vec![0, 19, 8, 11, 6],
+            vec![],
+            vec![2, 2, 2],
+        ];
+        let mut seq_net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let want: Vec<ReviewResult> = reviews
+            .iter()
+            .map(|r| seq_net.run_review(r).unwrap())
+            .collect();
+        let mut batch_net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let refs: Vec<&[i64]> = reviews.iter().map(|r| r.as_slice()).collect();
+        let got = batch_net.run_reviews_batched(&refs).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.vout_trace, w.vout_trace, "review {i} trace");
+            assert_eq!(g.pred, w.pred, "review {i} prediction");
+            assert_eq!(g.v_out, w.v_out, "review {i} v_out");
+        }
+    }
+
+    /// Batches wider than the lane budget chunk transparently.
+    #[test]
+    fn batched_reviews_chunk_beyond_lane_budget() {
+        let a = mini_artifacts(10);
+        let reviews: Vec<Vec<i64>> =
+            (0..17).map(|i| vec![i % 20, (i * 3) % 20]).collect();
+        let mut seq_net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let mut batch_net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        assert!(batch_net.max_batch_lanes() < reviews.len());
+        let refs: Vec<&[i64]> = reviews.iter().map(|r| r.as_slice()).collect();
+        let got = batch_net.run_reviews_batched(&refs).unwrap();
+        for (i, r) in reviews.iter().enumerate() {
+            let w = seq_net.run_review(r).unwrap();
+            assert_eq!(got[i].vout_trace, w.vout_trace, "review {i}");
+            assert_eq!(got[i].pred, w.pred, "review {i}");
+        }
+    }
+
+    /// Batching must amortize the AccW2V issue: the fused union stream
+    /// costs fewer cycles per review than sequential processing.
+    #[test]
+    fn batched_reviews_cost_less_per_review() {
+        let a = mini_artifacts(12);
+        let reviews: Vec<Vec<i64>> = (0..8).map(|i| vec![i % 20, (i + 5) % 20]).collect();
+        let refs: Vec<&[i64]> = reviews.iter().map(|r| r.as_slice()).collect();
+
+        let mut seq_net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let seq_cycles: u64 = refs
+            .iter()
+            .map(|r| seq_net.run_review(r).unwrap().cycles)
+            .sum();
+        let mut batch_net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let batch_cycles: u64 = batch_net
+            .run_reviews_batched(&refs)
+            .unwrap()
+            .iter()
+            .map(|r| r.cycles)
+            .sum();
+        assert!(
+            batch_cycles < seq_cycles,
+            "fused batch must amortize AccW2V issue: {batch_cycles} >= {seq_cycles}"
+        );
+    }
+
+    #[test]
+    fn pipelined_review_matches_sequential() {
+        let a = mini_artifacts(8);
+        let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        for ids in [vec![3i64, 7, 5, 1], vec![4], vec![], vec![2, -1, 9]] {
+            let want = net.run_review(&ids).unwrap();
+            let got = net.run_review_pipelined(&ids).unwrap();
+            assert_eq!(got.vout_trace, want.vout_trace, "{ids:?}");
+            assert_eq!(got.pred, want.pred);
+            assert_eq!(got.cycles, want.cycles, "same instruction stream");
+        }
+    }
+
+    #[test]
+    fn out_of_range_word_id_is_an_error_not_a_panic() {
+        let a = mini_artifacts(9);
+        let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        assert!(net.run_review(&[999]).is_err());
+        assert!(net.run_review_pipelined(&[999]).is_err());
+        let refs: Vec<&[i64]> = vec![&[1, 2][..], &[999][..]];
+        assert!(net.run_reviews_batched(&refs).is_err());
+        // the network still works afterwards
+        assert!(net.run_review(&[1, 2]).is_ok());
     }
 
     #[test]

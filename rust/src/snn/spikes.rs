@@ -75,6 +75,44 @@ impl SpikeMap {
     }
 }
 
+/// Build the fused (batched) spike union for one timestep: one
+/// `(row, lane-bitmask)` entry per input row that spikes in at least
+/// one active lane, in row order. `active[b]` gates lanes that still
+/// have work; every active lane's spike vector must share one fan-in.
+/// Returns the total spike count across active lanes — the AccW2V cost
+/// a per-lane (sequential) issue would pay, against which the union
+/// length measures the batching amortization.
+pub fn spike_union(
+    batch: &[&[bool]],
+    active: &[bool],
+    out: &mut Vec<(usize, u32)>,
+) -> usize {
+    assert!(batch.len() <= 32, "lane mask is 32 bits");
+    assert_eq!(batch.len(), active.len());
+    out.clear();
+    let fan_in = batch
+        .iter()
+        .zip(active)
+        .filter(|&(_, &a)| a)
+        .map(|(s, _)| s.len())
+        .max()
+        .unwrap_or(0);
+    let mut total = 0usize;
+    for i in 0..fan_in {
+        let mut mask = 0u32;
+        for (b, (s, &a)) in batch.iter().zip(active).enumerate() {
+            if a && s[i] {
+                mask |= 1 << b;
+                total += 1;
+            }
+        }
+        if mask != 0 {
+            out.push((i, mask));
+        }
+    }
+    total
+}
+
 /// Accumulates per-layer per-timestep spike statistics across a run —
 /// the data behind Fig 11(a).
 #[derive(Clone, Debug)]
@@ -212,6 +250,34 @@ mod tests {
         let table = t.table();
         assert_eq!(table.len(), 2);
         assert_eq!(table[0].len(), 3);
+    }
+
+    #[test]
+    fn spike_union_masks_and_total() {
+        let a = [true, false, true, false];
+        let b = [true, true, false, false];
+        let c = [false, false, false, true];
+        let mut rows = Vec::new();
+        let total = spike_union(&[&a[..], &b[..], &c[..]], &[true, true, true], &mut rows);
+        assert_eq!(total, 5);
+        assert_eq!(rows, vec![(0, 0b011), (1, 0b010), (2, 0b001), (3, 0b100)]);
+    }
+
+    #[test]
+    fn spike_union_skips_inactive_lanes() {
+        let a = [true, true];
+        let b = [true, false];
+        let mut rows = Vec::new();
+        let total = spike_union(&[&a[..], &b[..]], &[false, true], &mut rows);
+        assert_eq!(total, 1);
+        assert_eq!(rows, vec![(0, 0b10)]);
+    }
+
+    #[test]
+    fn spike_union_empty_batch() {
+        let mut rows = vec![(9usize, 1u32)];
+        assert_eq!(spike_union(&[], &[], &mut rows), 0);
+        assert!(rows.is_empty());
     }
 
     #[test]

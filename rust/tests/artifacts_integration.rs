@@ -165,6 +165,10 @@ fn sentiment_accuracy_matches_manifest() {
 #[test]
 fn pjrt_runtime_matches_macro_simulation() {
     require_artifacts!();
+    if !impulse::runtime::xla_available() {
+        eprintln!("SKIP: built without the `xla` feature");
+        return;
+    }
     let dir = artifacts_dir();
     let a = SentimentArtifacts::load(&dir).expect("load artifacts");
     let rt = impulse::runtime::SentimentStepRuntime::load(

@@ -1,8 +1,20 @@
-use impulse::data::{artifacts_dir, SentimentArtifacts};
-use impulse::runtime::{SentimentStepRuntime, StepState};
+//! One-step debug probe of the XLA runtime vs the artifact bundle.
+//! Skips (with a notice) when `make artifacts` has not run or the
+//! crate was built without the `xla` feature.
+
+use impulse::data::{artifacts_available, artifacts_dir, SentimentArtifacts};
+use impulse::runtime::{xla_available, SentimentStepRuntime, StepState};
 
 #[test]
 fn dbg_one_step() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    if !xla_available() {
+        eprintln!("SKIP: built without the `xla` feature");
+        return;
+    }
     let dir = artifacts_dir();
     let a = SentimentArtifacts::load(&dir).unwrap();
     let rt = SentimentStepRuntime::load(&dir, 100, 128, 128).unwrap();

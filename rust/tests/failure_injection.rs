@@ -53,11 +53,11 @@ fn out_of_range_weights_rejected_by_validation() {
     std::fs::create_dir_all(&s).unwrap();
     let w1: Vec<i32> = vec![40; 100 * 128]; // 40 > 31: not a 6-bit weight
     Tensor::from_i32(vec![100, 128], &w1).write(s.join("w1.bin")).unwrap();
-    Tensor::from_i32(vec![128, 128], &vec![0; 128 * 128])
+    Tensor::from_i32(vec![128, 128], &[0; 128 * 128])
         .write(s.join("w2.bin"))
         .unwrap();
-    Tensor::from_i32(vec![128, 1], &vec![0; 128]).write(s.join("w_out.bin")).unwrap();
-    Tensor::from_i32(vec![2, 100], &vec![0; 200]).write(s.join("emb_q.bin")).unwrap();
+    Tensor::from_i32(vec![128, 1], &[0; 128]).write(s.join("w_out.bin")).unwrap();
+    Tensor::from_i32(vec![2, 100], &[0; 200]).write(s.join("emb_q.bin")).unwrap();
     Tensor::from_i32(vec![1, 3], &[0, 1, -1]).write(s.join("test_seqs.bin")).unwrap();
     Tensor::from_i32(vec![1], &[2]).write(s.join("test_lens.bin")).unwrap();
     Tensor::from_i32(vec![1], &[1]).write(s.join("test_labels.bin")).unwrap();

@@ -1,0 +1,180 @@
+//! Integration tests of the serve path: every submitted request gets
+//! exactly one response — across interleaved submits and drains, empty
+//! and clamped word-id edge cases, batching on and off — and the
+//! drain bookkeeping cannot wedge on inference errors (the
+//! `cli/serve.rs` regression: drains key off received responses, not
+//! the inflight counter).
+
+use impulse::coordinator::{InferenceServer, Request, ServerOptions};
+use impulse::data::SentimentArtifacts;
+use impulse::macro_sim::MacroConfig;
+use impulse::snn::SentimentNetwork;
+use std::collections::HashMap;
+use std::time::Duration;
+
+fn factory(
+    seed: u64,
+) -> impl Fn() -> impulse::Result<SentimentNetwork> + Send + Sync + 'static {
+    move || {
+        let a = SentimentArtifacts::synthetic(seed);
+        SentimentNetwork::from_artifacts(&a, MacroConfig::fast())
+    }
+}
+
+/// Mimic the `impulse serve` line loop: submit, opportunistically drain
+/// ready responses, then drain the remainder by received count.
+fn serve_like_loop(
+    server: &InferenceServer,
+    reqs: Vec<Request>,
+) -> Vec<impulse::coordinator::Response> {
+    let mut pending = 0u64;
+    let mut responses = Vec::new();
+    for req in reqs {
+        server.submit(req).unwrap();
+        pending += 1;
+        while let Some(r) = server.try_recv() {
+            pending -= 1;
+            responses.push(r);
+        }
+    }
+    while pending > 0 {
+        let r = server.recv().unwrap();
+        pending -= 1;
+        responses.push(r);
+    }
+    responses
+}
+
+fn check_exactly_one_response_each(opts: ServerOptions, n: u64) {
+    let server = InferenceServer::start_with(opts, factory(42)).unwrap();
+    // interleaved shapes: normal, single-word, long, clamped-at-edge
+    // vocab ids (the synthetic vocab is 20), and an out-of-range id
+    // that must come back as an error response rather than vanish.
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| Request {
+            id: i,
+            word_ids: match i % 5 {
+                0 => vec![(i as i64) % 20, 3, 5],
+                1 => vec![19], // last valid id (clamp target)
+                2 => vec![0, 0, 0, 0, 0, 0, 0, 0],
+                3 => vec![(i as i64) % 20, -1, 7], // padding mid-request
+                _ => vec![999], // out of range → error response
+            },
+        })
+        .collect();
+    let responses = serve_like_loop(&server, reqs);
+    assert_eq!(responses.len(), n as usize, "one response per request");
+    let mut seen: HashMap<u64, u32> = HashMap::new();
+    for r in &responses {
+        *seen.entry(r.id).or_insert(0) += 1;
+        if r.id % 5 == 4 {
+            assert!(r.err.is_some(), "id {} must error (word id 999)", r.id);
+        } else {
+            assert!(r.err.is_none(), "id {} unexpectedly failed: {:?}", r.id, r.err);
+        }
+    }
+    for i in 0..n {
+        assert_eq!(seen.get(&i), Some(&1), "id {i} must answer exactly once");
+    }
+    assert_eq!(server.inflight(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn every_id_answered_once_unbatched() {
+    check_exactly_one_response_each(
+        ServerOptions {
+            workers: 3,
+            ..ServerOptions::default()
+        },
+        25,
+    );
+}
+
+#[test]
+fn every_id_answered_once_batched() {
+    check_exactly_one_response_each(
+        ServerOptions {
+            workers: 2,
+            batch_size: 8,
+            batch_deadline: Duration::from_millis(5),
+            pipeline: false,
+        },
+        25,
+    );
+}
+
+#[test]
+fn every_id_answered_once_pipelined() {
+    check_exactly_one_response_each(
+        ServerOptions {
+            workers: 2,
+            pipeline: true,
+            ..ServerOptions::default()
+        },
+        10,
+    );
+}
+
+/// Batched and unbatched serving must agree bit-for-bit on every
+/// well-formed request (the differential form of the tentpole).
+#[test]
+fn batched_serving_matches_unbatched() {
+    let reqs: Vec<Request> = (0..30)
+        .map(|i| Request {
+            id: i,
+            word_ids: vec![(i as i64) % 20, (7 * i as i64) % 20, 11, (3 * i as i64) % 20],
+        })
+        .collect();
+    let plain = InferenceServer::start(2, factory(7)).unwrap();
+    let (want, _) = plain.run_batch(reqs.clone()).unwrap();
+    plain.shutdown();
+
+    let batched = InferenceServer::start_with(
+        ServerOptions {
+            workers: 2,
+            batch_size: 16,
+            batch_deadline: Duration::from_millis(10),
+            pipeline: false,
+        },
+        factory(7),
+    )
+    .unwrap();
+    let (got, _) = batched.run_batch(reqs).unwrap();
+    batched.shutdown();
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.id, w.id);
+        assert_eq!(g.pred, w.pred, "id {}", g.id);
+        assert_eq!(g.v_out, w.v_out, "id {}: batched vs unbatched v_out", g.id);
+        assert!(g.err.is_none());
+    }
+}
+
+/// The old serve loop compared `inflight() < pending` to decide when to
+/// drain, which wedges when a response is delayed; the rewritten loop
+/// must finish even when all responses arrive after the last submit.
+#[test]
+fn drain_completes_when_responses_lag_submits() {
+    let server = InferenceServer::start_with(
+        ServerOptions {
+            workers: 1,
+            batch_size: 4,
+            // long deadline: responses intentionally lag the submits
+            batch_deadline: Duration::from_millis(50),
+            pipeline: false,
+        },
+        factory(3),
+    )
+    .unwrap();
+    let reqs: Vec<Request> = (0..6)
+        .map(|i| Request {
+            id: i,
+            word_ids: vec![(i as i64) % 20],
+        })
+        .collect();
+    let responses = serve_like_loop(&server, reqs);
+    assert_eq!(responses.len(), 6);
+    assert_eq!(server.inflight(), 0);
+    server.shutdown();
+}
