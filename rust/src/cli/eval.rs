@@ -25,14 +25,28 @@ pub fn run(args: &[String]) -> Result<()> {
     } else {
         a.test_seqs.len()
     };
+    let batching = if cfg.adaptive {
+        "adaptive".to_string()
+    } else if cfg.batch > 1 {
+        format!("batch {}", cfg.batch)
+    } else {
+        "unbatched".to_string()
+    };
     println!(
-        "evaluating {n} reviews on {} workers (engine {:?})…",
+        "evaluating {n} reviews on {} workers (engine {:?}, {batching})…",
         cfg.workers, cfg.engine
     );
 
     let mac = cfg.macro_config();
+    // Built up front: probes the fused-lane budget for adaptive
+    // batching and is reused for the energy histogram below.
+    let mut net = SentimentNetwork::from_artifacts(&a, mac)?;
+    let mut opts = cfg.server_options();
+    if opts.adaptive {
+        opts.adaptive_cap = net.max_batch_lanes();
+    }
     let a2 = Arc::clone(&a);
-    let server = InferenceServer::start_with(cfg.server_options(), move || {
+    let server = InferenceServer::start_with(opts, move || {
         SentimentNetwork::from_artifacts(&a2, mac)
     })?;
     let t0 = Instant::now();
@@ -84,8 +98,7 @@ pub fn run(args: &[String]) -> Result<()> {
         cfg.freq_hz / 1e6
     );
     // Energy: cycles are overwhelmingly AccW2V + the update sequences;
-    // use the per-kind histogram from a single fresh network for shape.
-    let mut net = SentimentNetwork::from_artifacts(&a, cfg.macro_config())?;
+    // use the per-kind histogram of one review on the probe network.
     net.run_review(&a.test_seqs[0])?;
     let hist = net.stats().histogram;
     let e_one = e.program_energy_j(&hist, cfg.vdd);

@@ -76,6 +76,16 @@ pub fn run_config(flags: &Flags) -> Result<RunConfig> {
     if flags.has("pipeline") {
         cfg.pipeline = true;
     }
+    if flags.has("adaptive") {
+        cfg.adaptive = true;
+    }
+    if let Some(addr) = flags.get("listen") {
+        cfg.listen = Some(addr.to_string());
+    }
+    if flags.has("stdio") {
+        // explicit stdio fallback wins over a configured listen addr
+        cfg.listen = None;
+    }
     if let Some(n) = flags.get_usize("max") {
         cfg.max_samples = n;
     }

@@ -1,21 +1,31 @@
-//! `impulse serve` — line-oriented inference server.
+//! `impulse serve` — the inference server front-end.
 //!
-//! Reads one request per line on stdin:
-//!     <id> <word_id> <word_id> …
-//! and writes one response per line on stdout:
-//!     <id> <POSITIVE|NEGATIVE> v_out=<v> cycles=<c> us=<latency> batch=<n>
-//! or, when inference fails for a request:
-//!     <id> ERROR <message>
+//! Two transports over the same [`impulse::serve::ServeCore`] request
+//! path (so a given request answers bit-identically on either):
 //!
-//! Requests flow through the coordinator's micro-batching worker pool:
-//! up to `--batch` requests (default 1) are fused into one instruction
-//! stream per tile, waiting at most `--batch-deadline-us` for the
-//! batch to fill; `--pipeline` runs unbatched requests through the
-//! wavefront layer pipeline instead. `quit` stops.
+//! - `--listen <addr>` (or `[run] listen` in the config): a
+//!   multi-client TCP listener speaking the length-prefixed binary
+//!   frame protocol of `docs/PROTOCOL.md`.
+//! - `--stdio` (the default): one request per line on stdin:
+//!       <id> <word_id> <word_id> …
+//!   answered one per line on stdout:
+//!       <id> <POSITIVE|NEGATIVE> v_out=<v> cycles=<c> us=<latency> batch=<n>
+//!   or, when inference fails for a request:
+//!       <id> ERROR <message>
+//!   `quit` stops.
+//!
+//! Requests flow through the coordinator's micro-batching worker
+//! pool: `--batch B` fuses up to B requests into one instruction
+//! stream per tile (waiting at most `--batch-deadline-us`),
+//! `--adaptive` sizes each batch from the queue depth instead, and
+//! `--pipeline` runs unbatched requests through the wavefront layer
+//! pipeline. Response `cycles` are the request's honest share of its
+//! fused batch (per-request attribution, not an even split).
 
 use super::Flags;
-use impulse::coordinator::{InferenceServer, Request, Response};
+use impulse::coordinator::Response;
 use impulse::data::{artifacts_dir, SentimentArtifacts};
+use impulse::serve::{serve_tcp, ClientSession, ServeCore};
 use impulse::snn::SentimentNetwork;
 use impulse::Result;
 use std::io::{BufRead, Write};
@@ -45,25 +55,59 @@ pub fn run(args: &[String]) -> Result<()> {
     let a = Arc::new(SentimentArtifacts::load(artifacts_dir())?);
     let vocab = a.emb_q.len() as i64;
     let a2 = Arc::clone(&a);
-    let opts = cfg.server_options();
-    let server = InferenceServer::start_with(opts.clone(), move || {
-        SentimentNetwork::from_artifacts(&a2, cfg.macro_config())
-    })?;
-    eprintln!(
-        "impulse serve: {} workers ready (batch {}, deadline {:?}{}); \
-         send `<id> <word_id>…` lines, `quit` to stop",
-        opts.workers,
-        opts.batch_size,
-        opts.batch_deadline,
-        if opts.pipeline { ", pipelined" } else { "" },
-    );
+    let mac = cfg.macro_config();
+    let mut opts = cfg.server_options();
+    if opts.adaptive {
+        // probe the mapped model for its real fused-lane budget so
+        // adaptive batches never exceed what one pass can fuse
+        opts.adaptive_cap = SentimentNetwork::from_artifacts(&a, mac)?.max_batch_lanes();
+    }
+    let core = Arc::new(ServeCore::start_with(opts.clone(), vocab, move || {
+        SentimentNetwork::from_artifacts(&a2, mac)
+    })?);
+    let batching = if opts.adaptive {
+        "adaptive (queue-depth)".to_string()
+    } else {
+        format!("batch {} deadline {:?}", opts.batch_size, opts.batch_deadline)
+    };
+    match cfg.listen.as_deref() {
+        Some(addr) => {
+            let handle = serve_tcp(addr, Arc::clone(&core))?;
+            eprintln!(
+                "impulse serve: {} workers on tcp://{} ({batching}{}); \
+                 binary frame protocol v{} (docs/PROTOCOL.md)",
+                opts.workers,
+                handle.local_addr(),
+                if opts.pipeline { ", pipelined" } else { "" },
+                impulse::serve::PROTOCOL_VERSION,
+            );
+            // Serve until the process is killed or the listener fails.
+            handle.wait();
+        }
+        None => {
+            let session = core.client()?;
+            eprintln!(
+                "impulse serve: {} workers on stdio ({batching}{}); \
+                 send `<id> <word_id>…` lines, `quit` to stop",
+                opts.workers,
+                if opts.pipeline { ", pipelined" } else { "" },
+            );
+            run_stdio(&session)?;
+            drop(session); // release the submit handle before shutdown
+        }
+    }
+    core.shutdown();
+    Ok(())
+}
 
+/// The line-oriented stdin/stdout loop over a shared-core session.
+/// Every submitted request yields exactly one response (errors come
+/// back as [`Response::err`]), so a submit/response counter pair is
+/// the drain invariant; ready responses are drained opportunistically
+/// between submits.
+fn run_stdio(session: &ClientSession) -> Result<()> {
     let stdin = std::io::stdin();
     let mut stdout = std::io::stdout();
-    // Every submitted request yields exactly one response (errors come
-    // back as Response::err), so a submit/response counter pair is the
-    // drain invariant; ready responses are drained opportunistically
-    // on recv readiness rather than by comparing against inflight().
     let mut pending = 0u64;
     for line in stdin.lock().lines() {
         let line = line?;
@@ -82,18 +126,15 @@ pub fn run(args: &[String]) -> Result<()> {
                 continue;
             }
         };
-        let word_ids: Vec<i64> = it
-            .filter_map(|w| w.parse::<i64>().ok())
-            .map(|w| w.clamp(0, vocab - 1))
-            .collect();
+        let word_ids: Vec<i64> = it.filter_map(|w| w.parse::<i64>().ok()).collect();
         if word_ids.is_empty() {
             eprintln!("request {id}: no word ids");
             continue;
         }
-        server.submit(Request { id, word_ids })?;
+        session.submit(id, &word_ids)?;
         pending += 1;
         // drain whatever is ready without blocking the input loop
-        while let Some(r) = server.try_recv() {
+        while let Some(r) = session.try_recv() {
             pending -= 1;
             write_response(&mut stdout, &r)?;
         }
@@ -101,11 +142,10 @@ pub fn run(args: &[String]) -> Result<()> {
     }
     // drain the rest
     while pending > 0 {
-        let r = server.recv()?;
+        let r = session.recv()?;
         pending -= 1;
         write_response(&mut stdout, &r)?;
     }
     stdout.flush()?;
-    server.shutdown();
     Ok(())
 }

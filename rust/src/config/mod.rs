@@ -31,6 +31,11 @@ pub struct RunConfig {
     pub batch_deadline_us: u64,
     /// Pipeline singleton batches across layer-stage threads.
     pub pipeline: bool,
+    /// Queue-depth-driven batch sizing (overrides the fixed `batch`).
+    pub adaptive: bool,
+    /// TCP listen address for `impulse serve` (e.g. `127.0.0.1:7878`);
+    /// `None` keeps the stdio line loop.
+    pub listen: Option<String>,
     /// Samples to evaluate in e2e runs (0 = all).
     pub max_samples: usize,
     /// Timesteps per word (sentiment) / per image (digits).
@@ -51,6 +56,8 @@ impl Default for RunConfig {
             batch: 1,
             batch_deadline_us: 200,
             pipeline: false,
+            adaptive: false,
+            listen: None,
             max_samples: 0,
             timesteps: 10,
         }
@@ -104,6 +111,12 @@ impl RunConfig {
         if let Some(v) = doc.get_bool("run", "pipeline") {
             self.pipeline = v;
         }
+        if let Some(v) = doc.get_bool("run", "adaptive") {
+            self.adaptive = v;
+        }
+        if let Some(v) = doc.get_str("run", "listen") {
+            self.listen = Some(v.to_string());
+        }
         if let Some(v) = doc.get_i64("run", "max_samples") {
             self.max_samples = v.max(0) as usize;
         }
@@ -129,6 +142,8 @@ impl RunConfig {
             batch_size: self.batch.max(1),
             batch_deadline: std::time::Duration::from_micros(self.batch_deadline_us),
             pipeline: self.pipeline,
+            adaptive: self.adaptive,
+            ..crate::coordinator::ServerOptions::default()
         }
     }
 }
@@ -159,6 +174,8 @@ mod tests {
             batch = 16
             batch_deadline_us = 500
             pipeline = true
+            adaptive = true
+            listen = "127.0.0.1:7878"
             max_samples = 100
             timesteps = 5
             "#,
@@ -174,6 +191,8 @@ mod tests {
         assert_eq!(c.batch, 16);
         assert_eq!(c.batch_deadline_us, 500);
         assert!(c.pipeline);
+        assert!(c.adaptive);
+        assert_eq!(c.listen.as_deref(), Some("127.0.0.1:7878"));
         assert_eq!(c.max_samples, 100);
         assert_eq!(c.timesteps, 5);
         let opts = c.server_options();
@@ -181,6 +200,7 @@ mod tests {
         assert_eq!(opts.batch_size, 16);
         assert_eq!(opts.batch_deadline, std::time::Duration::from_micros(500));
         assert!(opts.pipeline);
+        assert!(opts.adaptive);
     }
 
     #[test]
@@ -188,6 +208,8 @@ mod tests {
         let c = RunConfig::default();
         assert_eq!(c.batch, 1);
         assert!(!c.pipeline);
+        assert!(!c.adaptive);
+        assert!(c.listen.is_none());
         assert_eq!(c.server_options().batch_size, 1);
     }
 

@@ -25,6 +25,6 @@ pub mod scheduler;
 
 pub use pipeline::{run_stages, LayerPipeline};
 pub use router::{
-    InferenceServer, Request, Response, ServerOptions, ServerStats, ShardRouter,
+    InferenceServer, Request, Response, ServerOptions, ServerStats, ShardRouter, Submitter,
 };
 pub use scheduler::{FusedTimestepPlan, SpikeScheduler, TimestepPlan};

@@ -6,7 +6,9 @@
 //! moves spike vectors across thread-backed stages via bounded
 //! channels (backpressure: a slow stage stalls its producer).
 //!
-//! Used by the throughput benches; differential-tested against the
+//! Used by the throughput benches and, behind `--pipeline`, by the
+//! serve front-end (`crate::serve`) for singleton batches on both the
+//! TCP and stdio transports; differential-tested against the
 //! sequential execution order, which must produce identical spikes
 //! (the stages share no state).
 

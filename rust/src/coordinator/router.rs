@@ -67,6 +67,19 @@ pub struct ServerOptions {
     /// Run singleton batches through the wavefront layer pipeline
     /// (`run_review_pipelined`) instead of the sequential step order.
     pub pipeline: bool,
+    /// Queue-depth-driven batch sizing: instead of waiting for a fixed
+    /// `batch_size` to fill, each batch fuses exactly the requests
+    /// already queued when its first request is picked up (capped at
+    /// `adaptive_cap`). An idle server answers singletons at minimum
+    /// latency; a backed-up queue fuses wide batches automatically.
+    /// Ignores `batch_size`/`batch_deadline`.
+    pub adaptive: bool,
+    /// Widest batch the adaptive batcher forms. Set this to the
+    /// model's real fused-lane budget
+    /// (`SentimentNetwork::max_batch_lanes`) so backlog spreads across
+    /// workers instead of serializing as chunks on one; always clamped
+    /// to [`crate::macro_sim::MAX_FUSED_LANES`].
+    pub adaptive_cap: usize,
 }
 
 impl Default for ServerOptions {
@@ -76,6 +89,8 @@ impl Default for ServerOptions {
             batch_size: 1,
             batch_deadline: Duration::from_micros(200),
             pipeline: false,
+            adaptive: false,
+            adaptive_cap: crate::macro_sim::MAX_FUSED_LANES,
         }
     }
 }
@@ -84,6 +99,46 @@ impl Default for ServerOptions {
 struct Queued {
     req: Request,
     t0: Instant,
+}
+
+/// Shared submit path of [`InferenceServer`] and [`Submitter`].
+fn submit_inner(
+    tx: &mpsc::Sender<Queued>,
+    inflight: &AtomicU64,
+    req: Request,
+) -> Result<()> {
+    inflight.fetch_add(1, Ordering::SeqCst);
+    tx.send(Queued {
+        req,
+        t0: Instant::now(),
+    })
+    .map_err(|_| {
+        inflight.fetch_sub(1, Ordering::SeqCst);
+        anyhow::anyhow!("server shut down")
+    })
+}
+
+/// A clone-able request-submission handle onto a running
+/// [`InferenceServer`] — the serve front-end's fan-in: every TCP
+/// connection and stdio session holds one. The server's batcher only
+/// winds down once the server *and* every `Submitter` clone are
+/// dropped.
+#[derive(Clone)]
+pub struct Submitter {
+    tx: mpsc::Sender<Queued>,
+    inflight: Arc<AtomicU64>,
+}
+
+impl Submitter {
+    /// Enqueue a request (same contract as [`InferenceServer::submit`]).
+    pub fn submit(&self, req: Request) -> Result<()> {
+        submit_inner(&self.tx, &self.inflight, req)
+    }
+
+    /// Requests submitted but not yet answered (server-wide).
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::SeqCst)
+    }
 }
 
 /// Load-aware shard queues with work stealing: `push` places an item
@@ -211,6 +266,7 @@ impl InferenceServer {
         let batcher = {
             let router = Arc::clone(&router);
             let opts = opts.clone();
+            let cap = opts.adaptive_cap.clamp(1, crate::macro_sim::MAX_FUSED_LANES);
             std::thread::spawn(move || {
                 loop {
                     let first = match rx.recv() {
@@ -218,7 +274,18 @@ impl InferenceServer {
                         Err(_) => break,
                     };
                     let mut batch = vec![first];
-                    if opts.batch_size > 1 {
+                    if opts.adaptive {
+                        // Queue depth drives the batch: fuse whatever
+                        // is already waiting (up to the model's fused
+                        // lane budget) without holding the head
+                        // request back for a deadline.
+                        while batch.len() < cap {
+                            match rx.try_recv() {
+                                Ok(q) => batch.push(q),
+                                Err(_) => break,
+                            }
+                        }
+                    } else if opts.batch_size > 1 {
                         let deadline = Instant::now() + opts.batch_deadline;
                         while batch.len() < opts.batch_size {
                             let rem = deadline.saturating_duration_since(Instant::now());
@@ -269,21 +336,31 @@ impl InferenceServer {
 
     /// Enqueue a request.
     pub fn submit(&self, req: Request) -> Result<()> {
-        self.inflight.fetch_add(1, Ordering::SeqCst);
-        self.tx
-            .send(Queued {
-                req,
-                t0: Instant::now(),
-            })
-            .map_err(|_| {
-                self.inflight.fetch_sub(1, Ordering::SeqCst);
-                anyhow::anyhow!("server shut down")
-            })
+        submit_inner(&self.tx, &self.inflight, req)
+    }
+
+    /// A clone-able submission handle sharing this server's queue —
+    /// the serve front-end hands one to every client session.
+    pub fn submitter(&self) -> Submitter {
+        Submitter {
+            tx: self.tx.clone(),
+            inflight: Arc::clone(&self.inflight),
+        }
     }
 
     /// Block for the next response.
     pub fn recv(&self) -> Result<Response> {
         Ok(self.rx_out.recv()?)
+    }
+
+    /// Block up to `timeout` for the next response. Timeout and
+    /// disconnection (all workers gone) are distinct errors so pollers
+    /// can retry the former and stop on the latter.
+    pub fn recv_timeout(
+        &self,
+        timeout: Duration,
+    ) -> std::result::Result<Response, mpsc::RecvTimeoutError> {
+        self.rx_out.recv_timeout(timeout)
     }
 
     /// Non-blocking receive: a ready response, if any.
@@ -486,7 +563,7 @@ mod tests {
                 workers: 2,
                 batch_size: 8,
                 batch_deadline: Duration::from_millis(20),
-                pipeline: false,
+                ..ServerOptions::default()
             },
             mini_factory(11),
         )
@@ -536,7 +613,7 @@ mod tests {
                 workers: 1,
                 batch_size: 4,
                 batch_deadline: Duration::from_millis(10),
-                pipeline: false,
+                ..ServerOptions::default()
             },
             mini_factory(5),
         )
@@ -553,6 +630,118 @@ mod tests {
         assert!(responses[0].err.is_none());
         assert!(responses[1].err.is_some(), "bad word id must error");
         assert!(responses[2].err.is_none());
+        assert_eq!(server.inflight(), 0);
+        server.shutdown();
+    }
+
+    /// Adaptive batches must stay bit-identical to unbatched serving:
+    /// queue-depth sizing only changes *how many* requests fuse, never
+    /// what any of them computes.
+    #[test]
+    fn adaptive_batching_matches_unbatched() {
+        let reqs: Vec<Request> = (0..24)
+            .map(|i| Request {
+                id: i,
+                word_ids: vec![(i as i64) % 20, (5 * i as i64) % 20, 13],
+            })
+            .collect();
+        let plain = InferenceServer::start(2, mini_factory(31)).unwrap();
+        let (want, _) = plain.run_batch(reqs.clone()).unwrap();
+        plain.shutdown();
+
+        let adaptive = InferenceServer::start_with(
+            ServerOptions {
+                workers: 2,
+                adaptive: true,
+                ..ServerOptions::default()
+            },
+            mini_factory(31),
+        )
+        .unwrap();
+        let (got, _) = adaptive.run_batch(reqs).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.id, w.id);
+            assert_eq!(g.pred, w.pred, "req {}", g.id);
+            assert_eq!(g.v_out, w.v_out, "req {}: adaptive vs unbatched", g.id);
+            assert!(
+                g.batch_size >= 1 && g.batch_size <= crate::macro_sim::MAX_FUSED_LANES,
+                "req {}: batch {} outside the lane cap",
+                g.id,
+                g.batch_size
+            );
+        }
+        adaptive.shutdown();
+    }
+
+    /// The adaptive batcher never forms a batch wider than
+    /// `adaptive_cap` (the model's fused-lane budget), so backlog
+    /// spreads across workers instead of serializing in chunks.
+    #[test]
+    fn adaptive_cap_bounds_batch_width() {
+        let server = InferenceServer::start_with(
+            ServerOptions {
+                workers: 1,
+                adaptive: true,
+                adaptive_cap: 3,
+                ..ServerOptions::default()
+            },
+            mini_factory(23),
+        )
+        .unwrap();
+        let reqs: Vec<Request> = (0..10)
+            .map(|i| Request {
+                id: i,
+                word_ids: vec![(i as i64) % 20],
+            })
+            .collect();
+        let (responses, _) = server.run_batch(reqs).unwrap();
+        assert_eq!(responses.len(), 10);
+        assert!(
+            responses.iter().all(|r| r.batch_size <= 3),
+            "a batch exceeded adaptive_cap"
+        );
+        server.shutdown();
+    }
+
+    /// Submitter clones from many threads all feed the same queue and
+    /// every request is answered exactly once.
+    #[test]
+    fn submitter_clones_fan_into_one_server() {
+        let server = InferenceServer::start_with(
+            ServerOptions {
+                workers: 2,
+                adaptive: true,
+                ..ServerOptions::default()
+            },
+            mini_factory(17),
+        )
+        .unwrap();
+        let n_threads = 4;
+        let per_thread = 6u64;
+        let handles: Vec<_> = (0..n_threads)
+            .map(|t| {
+                let s = server.submitter();
+                std::thread::spawn(move || {
+                    for i in 0..per_thread {
+                        s.submit(Request {
+                            id: t * 100 + i,
+                            word_ids: vec![(i as i64) % 20, 2],
+                        })
+                        .unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = n_threads * per_thread;
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..total {
+            let r = server.recv().unwrap();
+            assert!(r.err.is_none(), "req {} failed: {:?}", r.id, r.err);
+            assert!(seen.insert(r.id), "req {} answered twice", r.id);
+        }
         assert_eq!(server.inflight(), 0);
         server.shutdown();
     }

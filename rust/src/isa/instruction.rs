@@ -22,33 +22,48 @@ pub enum Instruction {
     /// `V[dst] ← V[src] + sext(W[w_row])` — the synaptic accumulate,
     /// issued once per input spike per parity.
     AccW2V {
+        /// W_MEM row holding the presynaptic weights.
         w_row: usize,
+        /// V_MEM row read as the accumulator input.
         v_src: usize,
+        /// V_MEM row written back (usually `v_src`).
         v_dst: usize,
+        /// Cycle parity (RWLo/RWLe) selecting the field alignment.
         parity: Parity,
     },
     /// `V[dst] ← V[src_a] + V[src_b]`, optionally gated by the spike
     /// buffers (RMP soft reset uses `Spiked`; LIF leak uses `All`).
     AccV2V {
+        /// First V_MEM source row.
         src_a: usize,
+        /// Second V_MEM source row (must differ from `src_a`).
         src_b: usize,
+        /// V_MEM destination row.
         dst: usize,
+        /// Cycle parity (RWLo/RWLe) selecting the field alignment.
         parity: Parity,
+        /// Which fields the conditional write drivers actually drive.
         mask: WriteMaskMode,
     },
     /// Compare `V[v_row]` against the threshold row (which stores −θ)
     /// and latch the per-field comparator outputs into the spike
     /// buffers. No write.
     SpikeCheck {
+        /// V_MEM row holding the membrane potentials.
         v_row: usize,
+        /// V_MEM row holding −θ.
         thr_row: usize,
+        /// Cycle parity (RWLo/RWLe) selecting the field alignment.
         parity: Parity,
     },
     /// `V[dst] ← V[reset_row]` for spiked fields only (BLFA bypassed;
     /// sensed reset value goes straight to the CWD).
     ResetV {
+        /// V_MEM row holding the reset constant.
         reset_row: usize,
+        /// V_MEM destination row (the membrane row).
         dst: usize,
+        /// Cycle parity (RWLo/RWLe) selecting the field alignment.
         parity: Parity,
     },
     /// Plain SRAM read of a V_MEM row — used by the coordinator to
@@ -56,22 +71,46 @@ pub enum Instruction {
     /// Each V_MEM row is dedicated to one parity's staggered alignment
     /// ("stored in different rows"), so the parity tells the periphery
     /// how to frame the fields.
-    ReadV { v_row: usize, parity: Parity },
+    ReadV {
+        /// V_MEM row to read.
+        v_row: usize,
+        /// The row's field alignment.
+        parity: Parity,
+    },
     /// Plain SRAM write of a V_MEM row (one parity's six values).
-    WriteV { v_row: usize, parity: Parity, values: [i64; 6] },
+    WriteV {
+        /// V_MEM row to write.
+        v_row: usize,
+        /// The row's field alignment.
+        parity: Parity,
+        /// The six 11-bit values to encode into the row.
+        values: [i64; 6],
+    },
     /// Plain SRAM write of a W_MEM row (all twelve weights).
-    WriteW { w_row: usize, weights: [i64; 12] },
+    WriteW {
+        /// W_MEM row to write.
+        w_row: usize,
+        /// The twelve 6-bit weights, column order.
+        weights: [i64; 12],
+    },
 }
 
 /// Instruction kind — the unit of energy/latency accounting.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum InstructionKind {
+    /// Weight-to-V accumulate (the synaptic CIM op).
     AccW2V,
+    /// V-to-V accumulate (leak, soft reset).
     AccV2V,
+    /// Threshold comparison latching the spike buffers.
     SpikeCheck,
+    /// Spike-gated hard reset from the reset row.
     ResetV,
+    /// Plain SRAM read of a V row.
     ReadV,
+    /// Plain SRAM write of a V row.
     WriteV,
+    /// Plain SRAM write of a W row.
     WriteW,
 }
 

@@ -5,6 +5,8 @@
 //! IF, LIF and RMP neurons are different sequences of the same four
 //! instructions (Fig 5/6 of the paper).
 
+#![warn(missing_docs)]
+
 mod instruction;
 mod program;
 mod sequences;

@@ -10,33 +10,40 @@ pub struct Program {
 }
 
 impl Program {
+    /// An empty program.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Wrap an instruction vector as a program.
     pub fn from_vec(instrs: Vec<Instruction>) -> Self {
         Self { instrs }
     }
 
+    /// Append one instruction.
     #[inline]
     pub fn push(&mut self, i: Instruction) {
         self.instrs.push(i);
     }
 
+    /// Append another program's instructions in order.
     pub fn extend(&mut self, other: &Program) {
         self.instrs.extend_from_slice(&other.instrs);
     }
 
+    /// Number of instructions.
     #[inline]
     pub fn len(&self) -> usize {
         self.instrs.len()
     }
 
+    /// Whether the program has no instructions.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.instrs.is_empty()
     }
 
+    /// Iterate the instructions in issue order.
     pub fn iter(&self) -> impl Iterator<Item = &Instruction> {
         self.instrs.iter()
     }
@@ -71,15 +78,18 @@ pub struct ProgramBuilder {
 }
 
 impl ProgramBuilder {
+    /// Start an empty builder.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one instruction.
     pub fn instr(mut self, i: Instruction) -> Self {
         self.p.push(i);
         self
     }
 
+    /// Append a sequence of instructions in order.
     pub fn instrs(mut self, is: impl IntoIterator<Item = Instruction>) -> Self {
         for i in is {
             self.p.push(i);
@@ -87,6 +97,7 @@ impl ProgramBuilder {
         self
     }
 
+    /// Finish and return the composed program.
     pub fn build(self) -> Program {
         self.p
     }

@@ -23,6 +23,7 @@ pub enum NeuronType {
 }
 
 impl NeuronType {
+    /// Stable display name (paper nomenclature).
     pub fn name(&self) -> &'static str {
         match self {
             NeuronType::IF => "IF",
@@ -41,6 +42,7 @@ impl NeuronType {
         }
     }
 
+    /// Parse a (case-insensitive) neuron name: `if`, `lif`, or `rmp`.
     pub fn parse(s: &str) -> Option<NeuronType> {
         match s.to_ascii_lowercase().as_str() {
             "if" => Some(NeuronType::IF),

@@ -19,6 +19,9 @@
 //! - [`snn`] — network-level inference engine over mapped macros.
 //! - [`coordinator`] — multi-macro scheduler, spike routing, sparsity-
 //!   aware instruction issue, worker threads.
+//! - [`serve`] — the serving front-end: binary frame codec
+//!   (`docs/PROTOCOL.md`), multi-client TCP listener, and the
+//!   transport-agnostic session path shared with the stdio loop.
 //! - [`energy`] — silicon-calibrated power/energy/EDP, Shmoo, and area
 //!   models.
 //! - [`baselines`] — LSTM baseline, non-fused accelerator model, and the
@@ -47,6 +50,7 @@ pub mod neuron;
 pub mod periph;
 pub mod proptest_lite;
 pub mod runtime;
+pub mod serve;
 pub mod snn;
 
 /// Crate-wide result type.

@@ -6,7 +6,7 @@ use crate::bitcell::{
     COL_MASK, VALUES_PER_ROW, V_ROWS, W_ROWS,
 };
 use crate::bits::{wrap11, V_BITS};
-use crate::isa::{Instruction, InstructionKind, WriteMaskMode};
+use crate::isa::{Instruction, InstructionKind, NeuronConfigRows, NeuronType, WriteMaskMode};
 use crate::periph::{ColumnAdder, ConditionalWriteDriver, SpikeBuffers, WriteGate};
 use anyhow::{bail, Result};
 
@@ -768,6 +768,190 @@ impl ImpulseMacro {
         self.counts[kind_ix(InstructionKind::AccV2V)] += 1;
         self.cycle += 2;
         Ok(spikes)
+    }
+
+    /// Fused IF neuron update on one V row: SpikeCheck against the
+    /// negated-threshold row, then the spike-gated hard reset from the
+    /// reset row — the Fig 6 IF sequence — decoding the operand rows
+    /// once. Semantics, spike-buffer state, and accounting
+    /// (2 instructions, 2 cycles) are identical to issuing the two
+    /// instructions through [`ImpulseMacro::execute`]. Falls back to
+    /// the instruction loop on the bit-level/lockstep engines and when
+    /// tracing.
+    pub fn if_update_fused(
+        &mut self,
+        v_row: usize,
+        neg_thr_row: usize,
+        reset_row: usize,
+        parity: Parity,
+    ) -> Result<[bool; 6]> {
+        let seq = [
+            Instruction::SpikeCheck {
+                v_row,
+                thr_row: neg_thr_row,
+                parity,
+            },
+            Instruction::ResetV {
+                reset_row,
+                dst: v_row,
+                parity,
+            },
+        ];
+        let fast_only = self.bit.is_none() && !self.config.trace;
+        if !fast_only {
+            for instr in &seq {
+                self.execute(instr)?;
+            }
+            return Ok(self.spikes(parity));
+        }
+        let f = self.fast.as_mut().expect("fast engine");
+        if v_row >= V_ROWS || neg_thr_row >= V_ROWS || reset_row >= V_ROWS {
+            bail!("V row out of range ({v_row}, {neg_thr_row}, {reset_row})");
+        }
+        if v_row == neg_thr_row {
+            bail!("SpikeCheck with v_row == thr_row");
+        }
+        let v = f.vmem[v_row];
+        let t = f.vmem[neg_thr_row];
+        let r = f.vmem[reset_row];
+        let l = FieldLayout::new(parity);
+        let mut d = v;
+        let mut spikes = [false; 6];
+        for (g, s) in spikes.iter_mut().enumerate() {
+            *s = compare(
+                f.comparator,
+                extract_field(v, g, parity),
+                extract_field(t, g, parity),
+            );
+            if *s {
+                // hard reset: raw field-bit copy, exactly like ResetV
+                let m = l.field_mask(g);
+                d = (d & !m) | (r & m);
+            }
+        }
+        f.vmem[v_row] = d;
+        f.spikebuf[parity_ix(parity)].latch(spikes);
+        self.counts[kind_ix(InstructionKind::SpikeCheck)] += 1;
+        self.counts[kind_ix(InstructionKind::ResetV)] += 1;
+        self.cycle += 2;
+        Ok(spikes)
+    }
+
+    /// Fused LIF neuron update on one V row: the unconditional leak
+    /// AccV2V, SpikeCheck against the negated-threshold row, then the
+    /// spike-gated hard reset — the Fig 6 LIF sequence — decoding the
+    /// operand rows once. Semantics, spike-buffer state, and
+    /// accounting (3 instructions, 3 cycles) are identical to issuing
+    /// the three instructions through [`ImpulseMacro::execute`]. Falls
+    /// back to the instruction loop on the bit-level/lockstep engines
+    /// and when tracing.
+    pub fn lif_update_fused(
+        &mut self,
+        v_row: usize,
+        neg_thr_row: usize,
+        reset_row: usize,
+        neg_leak_row: usize,
+        parity: Parity,
+    ) -> Result<[bool; 6]> {
+        let seq = [
+            Instruction::AccV2V {
+                src_a: v_row,
+                src_b: neg_leak_row,
+                dst: v_row,
+                parity,
+                mask: WriteMaskMode::All,
+            },
+            Instruction::SpikeCheck {
+                v_row,
+                thr_row: neg_thr_row,
+                parity,
+            },
+            Instruction::ResetV {
+                reset_row,
+                dst: v_row,
+                parity,
+            },
+        ];
+        let fast_only = self.bit.is_none() && !self.config.trace;
+        if !fast_only {
+            for instr in &seq {
+                self.execute(instr)?;
+            }
+            return Ok(self.spikes(parity));
+        }
+        let f = self.fast.as_mut().expect("fast engine");
+        if v_row >= V_ROWS || neg_thr_row >= V_ROWS || reset_row >= V_ROWS
+            || neg_leak_row >= V_ROWS
+        {
+            bail!("V row out of range ({v_row}, {neg_thr_row}, {reset_row}, {neg_leak_row})");
+        }
+        if v_row == neg_leak_row {
+            bail!("AccV2V with identical source rows");
+        }
+        if v_row == neg_thr_row {
+            bail!("SpikeCheck with v_row == thr_row");
+        }
+        let v = f.vmem[v_row];
+        let leak = f.vmem[neg_leak_row];
+        let t = f.vmem[neg_thr_row];
+        let r = f.vmem[reset_row];
+        let l = FieldLayout::new(parity);
+        let mut d = v;
+        let mut spikes = [false; 6];
+        for (g, s) in spikes.iter_mut().enumerate() {
+            let leaked = wrap11(
+                extract_field(v, g, parity) + extract_field(leak, g, parity),
+            );
+            *s = compare(f.comparator, leaked, extract_field(t, g, parity));
+            if *s && reset_row != v_row {
+                let m = l.field_mask(g);
+                d = (d & !m) | (r & m);
+            } else {
+                // In the unfused sequence ResetV reads the reset row
+                // *after* the leak AccV2V wrote V — so when reset_row
+                // aliases v_row, the spiked-field "reset" is a
+                // self-copy of the leaked value.
+                insert_field(&mut d, g, parity, leaked);
+            }
+        }
+        f.vmem[v_row] = d;
+        f.spikebuf[parity_ix(parity)].latch(spikes);
+        self.counts[kind_ix(InstructionKind::AccV2V)] += 1;
+        self.counts[kind_ix(InstructionKind::SpikeCheck)] += 1;
+        self.counts[kind_ix(InstructionKind::ResetV)] += 1;
+        self.cycle += 3;
+        Ok(spikes)
+    }
+
+    /// Fused end-of-timestep neuron update for any [`NeuronType`] —
+    /// dispatches to the type's fused kernel
+    /// ([`ImpulseMacro::if_update_fused`],
+    /// [`ImpulseMacro::lif_update_fused`],
+    /// [`ImpulseMacro::rmp_update_fused`]), each bit-identical in
+    /// state, spikes, and accounting to the corresponding
+    /// [`crate::isa::neuron_sequence`] issued instruction by
+    /// instruction. This is the batched serve path's per-lane hot
+    /// kernel.
+    pub fn neuron_update_fused(
+        &mut self,
+        neuron: NeuronType,
+        v_row: usize,
+        rows: NeuronConfigRows,
+        parity: Parity,
+    ) -> Result<[bool; 6]> {
+        match neuron {
+            NeuronType::IF => {
+                self.if_update_fused(v_row, rows.neg_threshold, rows.reset, parity)
+            }
+            NeuronType::LIF => self.lif_update_fused(
+                v_row,
+                rows.neg_threshold,
+                rows.reset,
+                rows.neg_leak,
+                parity,
+            ),
+            NeuronType::RMP => self.rmp_update_fused(v_row, rows.neg_threshold, parity),
+        }
     }
 
     // ---- convenience accessors -------------------------------------

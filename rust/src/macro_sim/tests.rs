@@ -546,3 +546,190 @@ fn acc_w2v_fused_rejects_malformed_streams() {
         assert_eq!(m.read_v(0, Parity::Odd).unwrap(), [0; 6], "{cfg:?}");
     }
 }
+
+/// Each neuron type's fused update kernel must be bit-identical — in
+/// returned spikes, spike-buffer state, membrane state, cycle count,
+/// and instruction histogram — to issuing its Fig 6 sequence from
+/// `isa::sequences` instruction by instruction.
+#[test]
+fn fused_neuron_updates_match_unfused_sequences() {
+    use crate::isa::{neuron_sequence, NeuronConfigRows, NeuronType};
+    let mut rng = XorShiftRng::new(0xF15E);
+    for neuron in [NeuronType::IF, NeuronType::LIF, NeuronType::RMP] {
+        for parity in Parity::BOTH {
+            let (v_row, thr, reset, leak) = match parity {
+                Parity::Odd => (0usize, 28usize, 30usize, 26usize),
+                Parity::Even => (1usize, 29usize, 31usize, 27usize),
+            };
+            let rows = NeuronConfigRows {
+                neg_threshold: thr,
+                reset,
+                neg_leak: leak,
+            };
+            for case in 0..50 {
+                let theta = rng.gen_i64(1, 512);
+                let leak_v = rng.gen_i64(0, 16);
+                let reset_v = rng.gen_i64(-8, 8);
+                let v0 = rand_values(&mut rng);
+                let mut fused = ImpulseMacro::new(MacroConfig::fast());
+                let mut reference = ImpulseMacro::new(MacroConfig::fast());
+                for m in [&mut fused, &mut reference] {
+                    m.write_v(thr, parity, &[-theta; 6]).unwrap();
+                    m.write_v(reset, parity, &[reset_v; 6]).unwrap();
+                    m.write_v(leak, parity, &[-leak_v; 6]).unwrap();
+                    m.write_v(v_row, parity, &v0).unwrap();
+                }
+                let got = fused
+                    .neuron_update_fused(neuron, v_row, rows, parity)
+                    .unwrap();
+                for instr in neuron_sequence(neuron, v_row, rows, parity) {
+                    reference.execute(&instr).unwrap();
+                }
+                let want = reference.spikes(parity);
+                assert_eq!(
+                    got, want,
+                    "case {case}: {neuron:?} {parity:?} v0={v0:?} θ={theta}"
+                );
+                assert_eq!(fused.spikes(parity), want, "{neuron:?} spike buffer");
+                assert_eq!(
+                    fused.read_v(v_row, parity).unwrap(),
+                    reference.read_v(v_row, parity).unwrap(),
+                    "case {case}: {neuron:?} {parity:?} membrane state"
+                );
+                assert_eq!(fused.cycles(), reference.cycles(), "{neuron:?} cycles");
+                assert_eq!(fused.counts(), reference.counts(), "{neuron:?} histogram");
+            }
+        }
+    }
+}
+
+/// On the lockstep engine the fused kernels fall back to instruction
+/// issue (cross-checking bit-level vs fast internally) and must agree
+/// with the fast-engine fused path in state and accounting.
+#[test]
+fn fused_neuron_updates_agree_across_engines() {
+    use crate::isa::{NeuronConfigRows, NeuronType};
+    let mut rng = XorShiftRng::new(0xD0C5);
+    let rows = NeuronConfigRows {
+        neg_threshold: 28,
+        reset: 30,
+        neg_leak: 26,
+    };
+    for neuron in [NeuronType::IF, NeuronType::LIF, NeuronType::RMP] {
+        for _ in 0..10 {
+            let theta = rng.gen_i64(1, 256);
+            let v0 = rand_values(&mut rng);
+            let mut lock = ImpulseMacro::new(MacroConfig::lockstep());
+            let mut fast = ImpulseMacro::new(MacroConfig::fast());
+            for m in [&mut lock, &mut fast] {
+                m.write_v(28, Parity::Odd, &[-theta; 6]).unwrap();
+                m.write_v(30, Parity::Odd, &[0; 6]).unwrap();
+                m.write_v(26, Parity::Odd, &[-3; 6]).unwrap();
+                m.write_v(0, Parity::Odd, &v0).unwrap();
+            }
+            let a = lock.neuron_update_fused(neuron, 0, rows, Parity::Odd).unwrap();
+            let b = fast.neuron_update_fused(neuron, 0, rows, Parity::Odd).unwrap();
+            assert_eq!(a, b, "{neuron:?} spikes");
+            assert_eq!(
+                lock.read_v(0, Parity::Odd).unwrap(),
+                fast.read_v(0, Parity::Odd).unwrap(),
+                "{neuron:?} membrane state"
+            );
+            assert_eq!(lock.cycles(), fast.cycles(), "{neuron:?} cycles");
+        }
+    }
+}
+
+/// Both comparator modes flow through the fused kernels identically to
+/// the unfused sequences (the fused path shares `compare`).
+#[test]
+fn fused_neuron_updates_respect_comparator_mode() {
+    use crate::isa::{neuron_sequence, NeuronConfigRows, NeuronType};
+    let rows = NeuronConfigRows {
+        neg_threshold: 28,
+        reset: 30,
+        neg_leak: 26,
+    };
+    for mode in [ComparatorMode::SignBit, ComparatorMode::MsbCout] {
+        for neuron in [NeuronType::IF, NeuronType::LIF, NeuronType::RMP] {
+            let mut fused = ImpulseMacro::new(MacroConfig::fast().with_comparator(mode));
+            let mut reference =
+                ImpulseMacro::new(MacroConfig::fast().with_comparator(mode));
+            for m in [&mut fused, &mut reference] {
+                m.write_v(28, Parity::Odd, &[-5; 6]).unwrap();
+                m.write_v(30, Parity::Odd, &[0; 6]).unwrap();
+                m.write_v(26, Parity::Odd, &[-1; 6]).unwrap();
+                // straddle the threshold, including a negative V where
+                // the two comparator modes disagree
+                m.write_v(0, Parity::Odd, &[-1, 4, 5, 6, 1000, -1000]).unwrap();
+            }
+            let got = fused
+                .neuron_update_fused(neuron, 0, rows, Parity::Odd)
+                .unwrap();
+            for instr in neuron_sequence(neuron, 0, rows, Parity::Odd) {
+                reference.execute(&instr).unwrap();
+            }
+            assert_eq!(got, reference.spikes(Parity::Odd), "{mode:?} {neuron:?}");
+            assert_eq!(
+                fused.read_v(0, Parity::Odd).unwrap(),
+                reference.read_v(0, Parity::Odd).unwrap(),
+                "{mode:?} {neuron:?}"
+            );
+        }
+    }
+}
+
+/// The fused kernels enforce the same operand-row invariants as the
+/// underlying instructions, without corrupting the cycle counter.
+#[test]
+fn fused_neuron_update_rejects_bad_rows() {
+    let mut m = ImpulseMacro::new(MacroConfig::fast());
+    let c0 = m.cycles();
+    assert!(m.if_update_fused(0, 0, 30, Parity::Odd).is_err()); // v == thr
+    assert!(m.if_update_fused(0, 99, 30, Parity::Odd).is_err());
+    assert!(m.lif_update_fused(0, 28, 30, 0, Parity::Odd).is_err()); // v == leak
+    assert!(m.lif_update_fused(0, 28, 99, 26, Parity::Odd).is_err());
+    assert_eq!(m.cycles(), c0);
+}
+
+/// Aliasing regression: when the reset row *is* the membrane row, the
+/// unfused LIF sequence resets spiked fields to their post-leak value
+/// (ResetV reads the row AccV2V just wrote). The fused kernel must
+/// reproduce that, on the fast and lockstep engines alike.
+#[test]
+fn fused_lif_update_handles_reset_row_aliasing_v_row() {
+    use crate::isa::neuron_sequence;
+    use crate::isa::{NeuronConfigRows, NeuronType};
+    let mut rng = XorShiftRng::new(0xA11A);
+    // reset row aliases the membrane row (row 0)
+    let rows = NeuronConfigRows {
+        neg_threshold: 28,
+        reset: 0,
+        neg_leak: 26,
+    };
+    for cfg in [MacroConfig::fast(), MacroConfig::lockstep()] {
+        for _ in 0..20 {
+            let theta = rng.gen_i64(1, 64);
+            let v0 = rand_values(&mut rng);
+            let mut fused = ImpulseMacro::new(cfg);
+            let mut reference = ImpulseMacro::new(cfg);
+            for m in [&mut fused, &mut reference] {
+                m.write_v(28, Parity::Odd, &[-theta; 6]).unwrap();
+                m.write_v(26, Parity::Odd, &[-5; 6]).unwrap();
+                m.write_v(0, Parity::Odd, &v0).unwrap();
+            }
+            let got = fused
+                .neuron_update_fused(NeuronType::LIF, 0, rows, Parity::Odd)
+                .unwrap();
+            for instr in neuron_sequence(NeuronType::LIF, 0, rows, Parity::Odd) {
+                reference.execute(&instr).unwrap();
+            }
+            assert_eq!(got, reference.spikes(Parity::Odd), "{cfg:?} v0={v0:?}");
+            assert_eq!(
+                fused.read_v(0, Parity::Odd).unwrap(),
+                reference.read_v(0, Parity::Odd).unwrap(),
+                "{cfg:?}: aliased reset must keep the leaked value, v0={v0:?}"
+            );
+        }
+    }
+}

@@ -9,8 +9,10 @@
 //!   report   --fig {2|6|7|8|9a|11b} | --table 1   regenerate paper artifacts
 //!   infer    --text "w1 w2 …" | --sample N        classify via the macro pool
 //!   eval     [--max N] [--xla-check]              full test-set evaluation
-//!   serve    [--workers N] [--batch B]            stdin/stdout request loop
-//!            [--batch-deadline-us U] [--pipeline]
+//!   serve    [--listen ADDR | --stdio]            binary-framed TCP server
+//!            [--workers N] [--batch B]            (docs/PROTOCOL.md) or the
+//!            [--batch-deadline-us U]              stdin/stdout line loop
+//!            [--adaptive] [--pipeline]
 //!   shmoo                                         print the Fig 8 grid
 //!   sweep    [--neuron rmp|if|lif]                EDP vs sparsity (Fig 11b)
 //!   info                                          artifact + model summary
@@ -62,10 +64,16 @@ COMMANDS:
     infer --sample N                classify test review N
     infer --words "id id id"        classify a word-id sequence
     eval [--max N] [--xla-check]    evaluate the test set on the macro pool
-    serve [--workers N] [--batch B] [--batch-deadline-us U] [--pipeline]
-                                    line-oriented inference server (stdin);
-                                    --batch fuses up to B requests into one
-                                    instruction stream per tile
+    serve [--listen ADDR | --stdio] [--workers N] [--batch B]
+          [--batch-deadline-us U] [--adaptive] [--pipeline]
+                                    inference server: --listen serves the
+                                    length-prefixed binary frame protocol
+                                    (docs/PROTOCOL.md) to concurrent TCP
+                                    clients; --stdio (default) keeps the
+                                    line loop. --batch fuses up to B
+                                    requests into one instruction stream
+                                    per tile; --adaptive sizes batches
+                                    from queue depth instead
     shmoo                           print the Fig 8 Shmoo grid
     sweep [--neuron rmp|if|lif]     EDP vs sparsity sweep (Fig 11b)
     trace-vmem [--sample N]         Fig 10: output-neuron V_MEM trajectory

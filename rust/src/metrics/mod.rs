@@ -131,6 +131,55 @@ impl LatencyStats {
     }
 }
 
+/// Split an integer `total` across `weights` proportionally, exactly
+/// (largest-remainder / Hamilton rounding): the returned shares sum to
+/// `total`, each within one unit of its exact quota. Used by the
+/// batched serve path to attribute a fused chunk's cycle spend to the
+/// requests that caused it. Non-positive or all-zero weights fall back
+/// to an even split.
+pub fn apportion(weights: &[f64], total: u64) -> Vec<u64> {
+    if weights.is_empty() {
+        return Vec::new();
+    }
+    let sum: f64 = weights.iter().filter(|w| w.is_finite() && **w > 0.0).sum();
+    let quotas: Vec<f64> = if sum > 0.0 {
+        weights
+            .iter()
+            .map(|&w| {
+                if w.is_finite() && w > 0.0 {
+                    w / sum * total as f64
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    } else {
+        vec![total as f64 / weights.len() as f64; weights.len()]
+    };
+    let mut out: Vec<u64> = quotas.iter().map(|&q| q.floor() as u64).collect();
+    let assigned: u64 = out.iter().sum();
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    // largest fractional part first; index breaks ties deterministically
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - quotas[a].floor();
+        let fb = quotas[b] - quotas[b].floor();
+        fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut left = total.saturating_sub(assigned);
+    let mut k = 0usize;
+    while left > 0 && k < order.len() * 2 {
+        out[order[k % order.len()]] += 1;
+        left -= 1;
+        k += 1;
+    }
+    // floating-point pathologies aside, `left` is 0 here; dump any
+    // residue on the largest-remainder index so the sum stays exact
+    if left > 0 {
+        out[order[0]] += left;
+    }
+    out
+}
+
 /// Format a float with engineering notation for reports.
 pub fn eng(value: f64, unit: &str) -> String {
     let (scale, prefix) = if value == 0.0 {
@@ -193,6 +242,43 @@ mod tests {
         }
         assert_eq!(s.count(), 10_000);
         assert!(s.quantile(0.9) <= Duration::from_nanos(1000));
+    }
+
+    #[test]
+    fn apportion_conserves_and_is_proportional() {
+        let shares = apportion(&[1.0, 1.0, 2.0], 8);
+        assert_eq!(shares.iter().sum::<u64>(), 8);
+        assert_eq!(shares, vec![2, 2, 4]);
+
+        // fractional quotas: sum still exact, each within 1 of quota
+        let w = [3.3, 1.1, 2.2, 0.4];
+        let total = 1001u64;
+        let shares = apportion(&w, total);
+        assert_eq!(shares.iter().sum::<u64>(), total);
+        let sum: f64 = w.iter().sum();
+        for (i, &s) in shares.iter().enumerate() {
+            let quota = w[i] / sum * total as f64;
+            assert!((s as f64 - quota).abs() < 1.0 + 1e-9, "share {i}: {s} vs {quota}");
+        }
+    }
+
+    #[test]
+    fn apportion_zero_weight_lanes_get_nothing() {
+        let shares = apportion(&[5.0, 0.0, 0.0], 7);
+        assert_eq!(shares, vec![7, 0, 0]);
+    }
+
+    #[test]
+    fn apportion_degenerate_inputs() {
+        assert_eq!(apportion(&[], 10), Vec::<u64>::new());
+        // all-zero weights fall back to an even split, still exact
+        let shares = apportion(&[0.0, 0.0, 0.0], 10);
+        assert_eq!(shares.iter().sum::<u64>(), 10);
+        assert!(shares.iter().all(|&s| s >= 3));
+        assert_eq!(apportion(&[1.0], 0), vec![0]);
+        // negative/NaN weights are treated as zero
+        let shares = apportion(&[f64::NAN, -3.0, 2.0], 4);
+        assert_eq!(shares, vec![0, 0, 4]);
     }
 
     #[test]

@@ -5,6 +5,8 @@
 //! plain Rust integer code implementing the same 11-bit wraparound
 //! accumulate / threshold / reset dynamics, with no bit-level machinery.
 
+#![warn(missing_docs)]
+
 use crate::bits::wrap11;
 use crate::isa::NeuronType;
 
@@ -12,6 +14,7 @@ use crate::isa::NeuronType;
 /// macro: one −θ row, one reset row, one −leak row per parity).
 #[derive(Clone, Copy, Debug)]
 pub struct NeuronParams {
+    /// Which update sequence this population runs.
     pub neuron: NeuronType,
     /// Firing threshold θ (positive).
     pub threshold: i64,
@@ -22,6 +25,7 @@ pub struct NeuronParams {
 }
 
 impl NeuronParams {
+    /// Integrate-and-fire with the given threshold (hard reset to 0).
     pub fn if_neuron(threshold: i64) -> Self {
         Self {
             neuron: NeuronType::IF,
@@ -31,6 +35,8 @@ impl NeuronParams {
         }
     }
 
+    /// Leaky integrate-and-fire with the given threshold and
+    /// per-timestep subtractive leak (hard reset to 0).
     pub fn lif_neuron(threshold: i64, leak: i64) -> Self {
         Self {
             neuron: NeuronType::LIF,
@@ -40,6 +46,7 @@ impl NeuronParams {
         }
     }
 
+    /// Residual-membrane-potential neuron: soft reset retains `V − θ`.
     pub fn rmp_neuron(threshold: i64) -> Self {
         Self {
             neuron: NeuronType::RMP,
@@ -53,6 +60,7 @@ impl NeuronParams {
 /// One neuron's state: its membrane potential (11-bit wrapped).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct NeuronState {
+    /// Membrane potential, wrapped to the hardware's 11-bit range.
     pub v: i64,
 }
 
@@ -103,12 +111,17 @@ impl NeuronState {
 /// `weights[i][n]` is the 6-bit weight from input `i` to neuron `n`.
 #[derive(Clone, Debug)]
 pub struct GoldenLayer {
+    /// Shared neuron parameters of the population.
     pub params: NeuronParams,
+    /// Dense weight matrix, `weights[input][neuron]`.
     pub weights: Vec<Vec<i64>>,
+    /// Per-neuron membrane state.
     pub state: Vec<NeuronState>,
 }
 
 impl GoldenLayer {
+    /// Build a layer from parameters and a dense weight matrix (all
+    /// rows must have the same width).
     pub fn new(params: NeuronParams, weights: Vec<Vec<i64>>) -> Self {
         let n = weights.first().map(|r| r.len()).unwrap_or(0);
         assert!(weights.iter().all(|r| r.len() == n));
@@ -119,10 +132,12 @@ impl GoldenLayer {
         }
     }
 
+    /// Layer fan-in (rows of the weight matrix).
     pub fn num_inputs(&self) -> usize {
         self.weights.len()
     }
 
+    /// Number of neurons (columns of the weight matrix).
     pub fn num_neurons(&self) -> usize {
         self.state.len()
     }

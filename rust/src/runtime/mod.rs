@@ -7,7 +7,10 @@
 //!
 //! The runtime serves two roles:
 //! 1. cross-validation — the quantized sentiment step executed through
-//!    XLA must match the macro simulator bit-for-bit;
+//!    XLA must match the macro simulator bit-for-bit (`impulse eval
+//!    --xla-check`), anchoring the whole serving stack — including the
+//!    TCP/stdio front-end in [`crate::serve`] — to the trained JAX
+//!    model;
 //! 2. a reference execution path for the serving examples.
 //!
 //! The PJRT client needs the external `xla` crate, which is not

@@ -1,0 +1,485 @@
+//! The IMPULSE binary frame codec (wire format v1).
+//!
+//! Every message on a framed transport is one length-prefixed frame:
+//!
+//! ```text
+//! offset size field
+//! 0      4    magic "IMP1" (0x49 0x4D 0x50 0x31)
+//! 4      1    protocol version (1)
+//! 5      1    payload type
+//! 6      2    flags (reserved, must be zero in v1), big-endian
+//! 8      8    request id, big-endian
+//! 16     4    payload length N (≤ 1 MiB), big-endian
+//! 20     N    payload
+//! 20+N   4    CRC-32 (IEEE) over bytes [0, 20+N), big-endian
+//! ```
+//!
+//! The byte-exact contract — including decode-error precedence and
+//! worked hex examples — lives in `docs/PROTOCOL.md`; the codec tests
+//! in `rust/tests/frame_codec.rs` pin this module to that document
+//! field-for-field. Change either only in lockstep with the other.
+
+use std::io::Read;
+
+/// The four magic bytes opening every frame (`"IMP1"`).
+pub const MAGIC: [u8; 4] = *b"IMP1";
+
+/// The protocol version this build speaks (and the only one so far).
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Fixed header length: magic + version + type + flags + id + length.
+pub const HEADER_LEN: usize = 20;
+
+/// Trailing checksum length.
+pub const CRC_LEN: usize = 4;
+
+/// Maximum payload length a peer may send (1 MiB). Frames claiming
+/// more are rejected before any payload bytes are buffered.
+pub const MAX_PAYLOAD: usize = 1 << 20;
+
+/// Payload type discriminants (byte 5 of the header).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PayloadType {
+    /// Client → server: version negotiation offer (`[min, max]`).
+    Hello,
+    /// Server → client: accepted protocol version (`[version]`).
+    HelloAck,
+    /// Client → server: word-id sequence to classify.
+    InferRequest,
+    /// Server → client: successful classification result.
+    InferResponse,
+    /// Server → client: request- or connection-level failure.
+    Error,
+}
+
+impl PayloadType {
+    /// Wire encoding of this payload type.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            PayloadType::Hello => 0x01,
+            PayloadType::HelloAck => 0x02,
+            PayloadType::InferRequest => 0x10,
+            PayloadType::InferResponse => 0x11,
+            PayloadType::Error => 0x7F,
+        }
+    }
+
+    /// Decode a wire byte; `None` for unassigned discriminants.
+    pub fn from_u8(b: u8) -> Option<PayloadType> {
+        match b {
+            0x01 => Some(PayloadType::Hello),
+            0x02 => Some(PayloadType::HelloAck),
+            0x10 => Some(PayloadType::InferRequest),
+            0x11 => Some(PayloadType::InferResponse),
+            0x7F => Some(PayloadType::Error),
+            _ => None,
+        }
+    }
+}
+
+/// Error codes carried in [`PayloadType::Error`] payloads (u16).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ErrorCode {
+    /// The stream did not start with the `IMP1` magic.
+    BadMagic,
+    /// No mutually supported protocol version.
+    UnsupportedVersion,
+    /// Frame checksum mismatch (corruption in transit).
+    BadCrc,
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized,
+    /// Payload bytes do not parse as their declared type (or nonzero
+    /// reserved flags, or a type invalid in this direction).
+    Malformed,
+    /// Unassigned payload-type discriminant.
+    UnknownType,
+    /// Inference itself failed; the message carries the cause.
+    InferenceFailed,
+    /// An `InferRequest` carried zero word ids.
+    EmptyRequest,
+    /// Server-side internal failure (e.g. shutting down).
+    Internal,
+}
+
+impl ErrorCode {
+    /// Wire encoding of this error code.
+    pub fn as_u16(self) -> u16 {
+        match self {
+            ErrorCode::BadMagic => 1,
+            ErrorCode::UnsupportedVersion => 2,
+            ErrorCode::BadCrc => 3,
+            ErrorCode::Oversized => 4,
+            ErrorCode::Malformed => 5,
+            ErrorCode::UnknownType => 6,
+            ErrorCode::InferenceFailed => 7,
+            ErrorCode::EmptyRequest => 8,
+            ErrorCode::Internal => 9,
+        }
+    }
+
+    /// Decode a wire code; `None` for unassigned values.
+    pub fn from_u16(v: u16) -> Option<ErrorCode> {
+        match v {
+            1 => Some(ErrorCode::BadMagic),
+            2 => Some(ErrorCode::UnsupportedVersion),
+            3 => Some(ErrorCode::BadCrc),
+            4 => Some(ErrorCode::Oversized),
+            5 => Some(ErrorCode::Malformed),
+            6 => Some(ErrorCode::UnknownType),
+            7 => Some(ErrorCode::InferenceFailed),
+            8 => Some(ErrorCode::EmptyRequest),
+            9 => Some(ErrorCode::Internal),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded frame (header fields + raw payload bytes).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    /// Protocol version byte as sent by the peer. The codec does not
+    /// enforce a version; sessions validate it after negotiation.
+    pub version: u8,
+    /// What the payload bytes encode.
+    pub payload_type: PayloadType,
+    /// Caller-chosen correlation id, echoed verbatim in responses.
+    pub request_id: u64,
+    /// Raw payload bytes (≤ [`MAX_PAYLOAD`]).
+    pub payload: Vec<u8>,
+}
+
+/// A wire-level failure while decoding or reading frames.
+#[derive(Debug)]
+pub enum WireError {
+    /// The first four bytes were not `IMP1`.
+    BadMagic([u8; 4]),
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized(usize),
+    /// Checksum mismatch: `expected` (computed) vs `found` (on wire).
+    BadCrc {
+        /// CRC computed over the received header + payload bytes.
+        expected: u32,
+        /// CRC carried in the frame trailer.
+        found: u32,
+    },
+    /// Unassigned payload-type byte.
+    UnknownType(u8),
+    /// Nonzero reserved flags word.
+    BadFlags(u16),
+    /// The stream ended inside a frame.
+    Truncated,
+    /// Underlying transport error (including read timeouts).
+    Io(std::io::Error),
+}
+
+impl WireError {
+    /// The protocol error code a server reports for this failure.
+    pub fn code(&self) -> ErrorCode {
+        match self {
+            WireError::BadMagic(_) => ErrorCode::BadMagic,
+            WireError::Oversized(_) => ErrorCode::Oversized,
+            WireError::BadCrc { .. } => ErrorCode::BadCrc,
+            WireError::UnknownType(_) => ErrorCode::UnknownType,
+            WireError::BadFlags(_) => ErrorCode::Malformed,
+            WireError::Truncated => ErrorCode::Malformed,
+            WireError::Io(_) => ErrorCode::Internal,
+        }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad magic {m:02X?} (want \"IMP1\")"),
+            WireError::Oversized(n) => {
+                write!(f, "payload of {n} bytes exceeds the {MAX_PAYLOAD}-byte cap")
+            }
+            WireError::BadCrc { expected, found } => {
+                write!(f, "CRC mismatch: computed {expected:#010X}, frame says {found:#010X}")
+            }
+            WireError::UnknownType(b) => write!(f, "unknown payload type {b:#04X}"),
+            WireError::BadFlags(v) => write!(f, "reserved flags must be zero, got {v:#06X}"),
+            WireError::Truncated => write!(f, "stream ended inside a frame"),
+            WireError::Io(e) => write!(f, "transport error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// Outcome of decoding a byte buffer that may hold a partial frame.
+#[derive(Debug)]
+pub enum Decoded {
+    /// A complete frame, plus how many buffer bytes it consumed.
+    Frame(Frame, usize),
+    /// Not enough bytes yet; the frame needs at least this many total.
+    NeedMore(usize),
+}
+
+/// CRC-32 (IEEE 802.3, reflected, `0xEDB88320`) — the same polynomial
+/// as zlib's `crc32`, so `crc32(b"123456789") == 0xCBF43926`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+impl Frame {
+    /// Build a frame with the current [`PROTOCOL_VERSION`].
+    pub fn new(payload_type: PayloadType, request_id: u64, payload: Vec<u8>) -> Frame {
+        Frame {
+            version: PROTOCOL_VERSION,
+            payload_type,
+            request_id,
+            payload,
+        }
+    }
+
+    /// Encoded size of this frame on the wire.
+    pub fn encoded_len(&self) -> usize {
+        HEADER_LEN + self.payload.len() + CRC_LEN
+    }
+
+    /// Serialize to wire bytes (header, payload, CRC trailer).
+    pub fn encode(&self) -> Vec<u8> {
+        assert!(self.payload.len() <= MAX_PAYLOAD, "payload exceeds MAX_PAYLOAD");
+        let mut out = Vec::with_capacity(self.encoded_len());
+        out.extend_from_slice(&MAGIC);
+        out.push(self.version);
+        out.push(self.payload_type.as_u8());
+        out.extend_from_slice(&0u16.to_be_bytes()); // flags
+        out.extend_from_slice(&self.request_id.to_be_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_be_bytes());
+        out.extend_from_slice(&self.payload);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_be_bytes());
+        out
+    }
+
+    /// Write the encoded frame to a transport.
+    pub fn write_to(&self, w: &mut impl std::io::Write) -> std::io::Result<()> {
+        w.write_all(&self.encode())
+    }
+
+    /// Decode one frame from the front of `buf`.
+    ///
+    /// Check order (and therefore error precedence) is part of the
+    /// wire contract: magic → declared length (oversized) → complete
+    /// frame present → CRC → payload type → flags. The CRC is checked
+    /// before the payload-type and flags bytes are interpreted, so a
+    /// corrupted discriminant reports [`WireError::BadCrc`], not
+    /// [`WireError::UnknownType`].
+    pub fn decode(buf: &[u8]) -> Result<Decoded, WireError> {
+        if buf.len() >= 4 && buf[..4] != MAGIC {
+            let mut m = [0u8; 4];
+            m.copy_from_slice(&buf[..4]);
+            return Err(WireError::BadMagic(m));
+        }
+        if buf.len() < HEADER_LEN {
+            return Ok(Decoded::NeedMore(HEADER_LEN));
+        }
+        let len = u32::from_be_bytes([buf[16], buf[17], buf[18], buf[19]]) as usize;
+        if len > MAX_PAYLOAD {
+            return Err(WireError::Oversized(len));
+        }
+        let total = HEADER_LEN + len + CRC_LEN;
+        if buf.len() < total {
+            return Ok(Decoded::NeedMore(total));
+        }
+        let body = &buf[..HEADER_LEN + len];
+        let found = u32::from_be_bytes([
+            buf[HEADER_LEN + len],
+            buf[HEADER_LEN + len + 1],
+            buf[HEADER_LEN + len + 2],
+            buf[HEADER_LEN + len + 3],
+        ]);
+        let expected = crc32(body);
+        if expected != found {
+            return Err(WireError::BadCrc { expected, found });
+        }
+        let payload_type =
+            PayloadType::from_u8(buf[5]).ok_or(WireError::UnknownType(buf[5]))?;
+        let flags = u16::from_be_bytes([buf[6], buf[7]]);
+        if flags != 0 {
+            return Err(WireError::BadFlags(flags));
+        }
+        let request_id = u64::from_be_bytes([
+            buf[8], buf[9], buf[10], buf[11], buf[12], buf[13], buf[14], buf[15],
+        ]);
+        Ok(Decoded::Frame(
+            Frame {
+                version: buf[4],
+                payload_type,
+                request_id,
+                payload: buf[HEADER_LEN..HEADER_LEN + len].to_vec(),
+            },
+            total,
+        ))
+    }
+}
+
+/// Incremental frame reader over any [`Read`] transport.
+///
+/// Keeps a carry buffer across calls, so short reads and read
+/// timeouts (surfaced as [`WireError::Io`]) never lose partial-frame
+/// bytes — callers poll [`FrameReader::next_frame`] again and the
+/// stream resumes where it left off.
+pub struct FrameReader<R: Read> {
+    r: R,
+    buf: Vec<u8>,
+}
+
+impl<R: Read> FrameReader<R> {
+    /// Wrap a transport.
+    pub fn new(r: R) -> FrameReader<R> {
+        FrameReader { r, buf: Vec::with_capacity(4096) }
+    }
+
+    /// Read the next complete frame. `Ok(None)` on a clean EOF at a
+    /// frame boundary; [`WireError::Truncated`] if the stream ends
+    /// mid-frame; [`WireError::Io`] on transport errors (including
+    /// read timeouts — safe to retry).
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, WireError> {
+        loop {
+            match Frame::decode(&self.buf)? {
+                Decoded::Frame(f, used) => {
+                    self.buf.drain(..used);
+                    return Ok(Some(f));
+                }
+                Decoded::NeedMore(_) => {}
+            }
+            let mut chunk = [0u8; 4096];
+            let n = self.r.read(&mut chunk)?;
+            if n == 0 {
+                if self.buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(WireError::Truncated);
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_reference_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let f = Frame::new(PayloadType::InferRequest, 0xDEAD_BEEF, vec![1, 2, 3]);
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), f.encoded_len());
+        match Frame::decode(&bytes).unwrap() {
+            Decoded::Frame(g, used) => {
+                assert_eq!(g, f);
+                assert_eq!(used, bytes.len());
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_wants_more_bytes_for_prefixes() {
+        let bytes = Frame::new(PayloadType::Hello, 1, vec![1, 1]).encode();
+        for cut in 0..bytes.len() {
+            match Frame::decode(&bytes[..cut]).unwrap() {
+                Decoded::NeedMore(n) => assert!(n > cut),
+                Decoded::Frame(..) => panic!("frame from a {cut}-byte prefix"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected_immediately() {
+        let mut bytes = Frame::new(PayloadType::Hello, 1, vec![1, 1]).encode();
+        bytes[0] = b'X';
+        assert!(matches!(Frame::decode(&bytes[..4]), Err(WireError::BadMagic(_))));
+    }
+
+    #[test]
+    fn oversized_rejected_from_header_alone() {
+        let mut bytes = Frame::new(PayloadType::Hello, 1, vec![]).encode();
+        bytes[16..20].copy_from_slice(&((MAX_PAYLOAD as u32) + 1).to_be_bytes());
+        assert!(matches!(
+            Frame::decode(&bytes[..HEADER_LEN]),
+            Err(WireError::Oversized(_))
+        ));
+    }
+
+    #[test]
+    fn corrupt_payload_reports_bad_crc() {
+        let mut bytes = Frame::new(PayloadType::InferRequest, 2, vec![9, 9, 9]).encode();
+        bytes[HEADER_LEN] ^= 0x40;
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::BadCrc { .. })));
+    }
+
+    #[test]
+    fn crc_checked_before_type_and_flags() {
+        // Corrupting the type byte must surface as BadCrc, not
+        // UnknownType — the discriminant is untrusted until the
+        // checksum passes.
+        let mut bytes = Frame::new(PayloadType::Hello, 3, vec![1, 1]).encode();
+        bytes[5] = 0x55; // unassigned type
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::BadCrc { .. })));
+    }
+
+    #[test]
+    fn nonzero_flags_rejected() {
+        // Re-encode with valid CRC but nonzero flags.
+        let f = Frame::new(PayloadType::Hello, 3, vec![1, 1]);
+        let mut bytes = f.encode();
+        bytes[7] = 1;
+        let crc = crc32(&bytes[..bytes.len() - CRC_LEN]);
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&crc.to_be_bytes());
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::BadFlags(1))));
+    }
+
+    #[test]
+    fn reader_reassembles_fragmented_stream() {
+        struct Trickle(Vec<u8>, usize);
+        impl Read for Trickle {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                let n = 3.min(self.0.len() - self.1).min(out.len());
+                out[..n].copy_from_slice(&self.0[self.1..self.1 + n]);
+                self.1 += n;
+                Ok(n)
+            }
+        }
+        let a = Frame::new(PayloadType::InferRequest, 1, vec![0, 1, 0, 0, 0, 5]);
+        let b = Frame::new(PayloadType::Hello, 2, vec![1, 1]);
+        let mut stream = a.encode();
+        stream.extend_from_slice(&b.encode());
+        let mut rd = FrameReader::new(Trickle(stream, 0));
+        assert_eq!(rd.next_frame().unwrap(), Some(a));
+        assert_eq!(rd.next_frame().unwrap(), Some(b));
+        assert_eq!(rd.next_frame().unwrap(), None);
+    }
+
+    #[test]
+    fn reader_flags_mid_frame_eof() {
+        let bytes = Frame::new(PayloadType::Hello, 1, vec![1, 1]).encode();
+        let cut = bytes.len() - 2;
+        let mut rd = FrameReader::new(std::io::Cursor::new(bytes[..cut].to_vec()));
+        assert!(matches!(rd.next_frame(), Err(WireError::Truncated)));
+    }
+}

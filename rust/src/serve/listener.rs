@@ -1,0 +1,263 @@
+//! Multi-client TCP listener for the framed protocol.
+//!
+//! Each accepted connection gets its own [`ClientSession`] over the
+//! shared [`ServeCore`], a reader thread (this connection's spawned
+//! thread) that decodes request frames and submits them, and a
+//! responder thread that streams responses back as they complete —
+//! so a client waiting on one answer never blocks the server from
+//! delivering it, and slow clients never stall other connections.
+//!
+//! Framing errors (bad magic, bad CRC, truncation) are answered with
+//! one `Error` frame and a close: once byte alignment is lost the
+//! stream cannot be resynchronized. Request-level errors (malformed
+//! payload, empty request, inference failure) are answered per
+//! request id and the connection stays up.
+//!
+//! [`ClientSession`]: super::ClientSession
+
+use super::frame::{ErrorCode, Frame, FrameReader, PayloadType, WireError};
+use super::session::{
+    decode_infer_request, error_frame, negotiate, response_frame, ServeCore,
+};
+use crate::Result;
+use std::io::ErrorKind;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// How long blocking reads and response waits poll before rechecking
+/// stop/drain conditions.
+const POLL: Duration = Duration::from_millis(50);
+
+/// A running TCP serving front-end (accept loop + connections).
+pub struct TcpServeHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpServeHandle {
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the accept loop and all connections to wind down, then
+    /// join them. In-flight requests still get their responses.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the accept loop exits (i.e. serve until the
+    /// process is killed or the listener fails).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:7878`, or port `0` for an ephemeral
+/// port) and serve framed requests over the shared core.
+pub fn serve_tcp(addr: &str, core: Arc<ServeCore>) -> Result<TcpServeHandle> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            loop {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if stream.set_nonblocking(false).is_err() {
+                            continue;
+                        }
+                        let core = Arc::clone(&core);
+                        let stop = Arc::clone(&stop);
+                        conns.push(std::thread::spawn(move || {
+                            if let Err(e) = handle_conn(stream, &core, &stop) {
+                                eprintln!("impulse serve: connection error: {e:#}");
+                            }
+                        }));
+                        conns.retain(|h| !h.is_finished());
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(e) => {
+                        eprintln!("impulse serve: accept failed: {e}");
+                        break;
+                    }
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        })
+    };
+    Ok(TcpServeHandle { addr: local, stop, accept: Some(accept) })
+}
+
+/// Serialize whole frames onto the shared write half (the reader and
+/// responder threads both reply; a mutex keeps frames contiguous).
+fn write_frame(w: &Arc<Mutex<TcpStream>>, f: &Frame) -> std::io::Result<()> {
+    let mut g = w.lock().expect("writer poisoned");
+    f.write_to(&mut *g)
+}
+
+/// Drive one connection to completion: read frames until EOF, a
+/// framing error, or server stop; then drain outstanding responses.
+fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(POLL))?;
+    let (sender, responses) = core.client()?.split();
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let done = Arc::new(AtomicBool::new(false));
+    let outstanding = Arc::new(AtomicU64::new(0));
+
+    let responder = {
+        let writer = Arc::clone(&writer);
+        let done = Arc::clone(&done);
+        let outstanding = Arc::clone(&outstanding);
+        std::thread::spawn(move || {
+            loop {
+                match responses.recv_timeout(POLL) {
+                    Ok(r) => {
+                        outstanding.fetch_sub(1, Ordering::SeqCst);
+                        if write_frame(&writer, &response_frame(&r)).is_err() {
+                            break;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        // Exit only once the reader is finished AND
+                        // every accepted request has been answered —
+                        // a server stop must not drop in-flight
+                        // responses (the reader exits on stop, which
+                        // sets `done`; the core drains before its own
+                        // shutdown completes).
+                        if done.load(Ordering::SeqCst)
+                            && outstanding.load(Ordering::SeqCst) == 0
+                        {
+                            break;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        })
+    };
+
+    let mut reader = FrameReader::new(stream);
+    let mut negotiated = super::frame::PROTOCOL_VERSION; // implicit v1 until Hello
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let frame = match reader.next_frame() {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // clean EOF
+            Err(WireError::Io(e))
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => {
+                // Alignment is lost; answer once (request id 0) and close.
+                let _ = write_frame(&writer, &error_frame(0, e.code(), &e.to_string()));
+                break;
+            }
+        };
+        match frame.payload_type {
+            PayloadType::Hello => match negotiate(&frame.payload) {
+                Ok(v) => {
+                    negotiated = v;
+                    let ack = Frame::new(PayloadType::HelloAck, frame.request_id, vec![v]);
+                    if write_frame(&writer, &ack).is_err() {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ =
+                        write_frame(&writer, &error_frame(frame.request_id, e.code, &e.msg));
+                    break; // failed negotiation closes the connection
+                }
+            },
+            PayloadType::InferRequest => {
+                if frame.version != negotiated {
+                    let msg = format!(
+                        "frame version {} after negotiating v{negotiated}",
+                        frame.version
+                    );
+                    let _ = write_frame(
+                        &writer,
+                        &error_frame(frame.request_id, ErrorCode::UnsupportedVersion, &msg),
+                    );
+                    continue;
+                }
+                let ids = match decode_infer_request(&frame.payload) {
+                    Ok(ids) => ids,
+                    Err(e) => {
+                        let _ = write_frame(
+                            &writer,
+                            &error_frame(frame.request_id, e.code, &e.msg),
+                        );
+                        continue;
+                    }
+                };
+                if ids.is_empty() {
+                    let _ = write_frame(
+                        &writer,
+                        &error_frame(frame.request_id, ErrorCode::EmptyRequest, "no word ids"),
+                    );
+                    continue;
+                }
+                // count before submitting: the response may land (and
+                // be decremented by the responder) the instant submit
+                // returns
+                outstanding.fetch_add(1, Ordering::SeqCst);
+                match sender.submit(frame.request_id, &ids) {
+                    Ok(()) => {}
+                    Err(e) => {
+                        outstanding.fetch_sub(1, Ordering::SeqCst);
+                        let _ = write_frame(
+                            &writer,
+                            &error_frame(
+                                frame.request_id,
+                                ErrorCode::Internal,
+                                &format!("{e:#}"),
+                            ),
+                        );
+                        break; // core is shutting down
+                    }
+                }
+            }
+            // Server→client types are invalid from a client.
+            PayloadType::HelloAck | PayloadType::InferResponse | PayloadType::Error => {
+                let _ = write_frame(
+                    &writer,
+                    &error_frame(
+                        frame.request_id,
+                        ErrorCode::Malformed,
+                        &format!("{:?} frames are server-to-client only", frame.payload_type),
+                    ),
+                );
+            }
+        }
+    }
+    done.store(true, Ordering::SeqCst);
+    drop(sender); // release the submission handle before draining
+    let _ = responder.join();
+    if let Ok(w) = writer.lock() {
+        let _ = w.shutdown(Shutdown::Write);
+    }
+    Ok(())
+}

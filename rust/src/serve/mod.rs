@@ -1,0 +1,41 @@
+//! The production serving front-end (Layer 4).
+//!
+//! Turns the coordinator's in-process [`InferenceServer`] into a
+//! network service speaking a versioned, length-prefixed binary
+//! protocol — specified byte-for-byte in `docs/PROTOCOL.md`:
+//!
+//! - [`frame`] — the wire codec: magic/version/type/request-id/CRC-32
+//!   framing, incremental [`FrameReader`], error codes.
+//! - [`session`] — the codec-agnostic request path: [`ServeCore`]
+//!   multiplexes many client sessions onto one batcher/worker pool and
+//!   routes each response back to its submitter; payload codecs; a
+//!   reference [`FrameClient`].
+//! - [`listener`] — the multi-client TCP accept loop
+//!   ([`serve_tcp`]), one reader + one responder thread per
+//!   connection.
+//!
+//! The `impulse serve` CLI fronts this module: `--listen <addr>`
+//! serves the binary protocol over TCP, `--stdio` (the default) keeps
+//! the line-oriented stdin/stdout loop — both over the same
+//! [`ServeCore`] path, so a request answers bit-identically on either
+//! transport.
+//!
+//! [`InferenceServer`]: crate::coordinator::InferenceServer
+
+#![warn(missing_docs)]
+
+pub mod frame;
+pub mod listener;
+pub mod session;
+
+pub use frame::{
+    crc32, Decoded, ErrorCode, Frame, FrameReader, PayloadType, WireError, CRC_LEN,
+    HEADER_LEN, MAGIC, MAX_PAYLOAD, PROTOCOL_VERSION,
+};
+pub use listener::{serve_tcp, TcpServeHandle};
+pub use session::{
+    decode_error, decode_infer_request, decode_infer_response, encode_infer_request,
+    error_frame, error_payload, hello_payload, negotiate, response_frame, ClientSession,
+    FrameClient, PayloadError, ServeCore, SessionSender, WireResponse,
+    MAX_WORDS_PER_REQUEST,
+};

@@ -1,0 +1,575 @@
+//! Transport-agnostic serving sessions and payload codecs.
+//!
+//! [`ServeCore`] wraps the coordinator's [`InferenceServer`] with a
+//! response dispatcher so *many* concurrent clients can share one
+//! batcher/worker pool: every submission is re-keyed onto a private
+//! internal id, and the dispatcher routes each response back to the
+//! session that submitted it with the client's own request id
+//! restored. The TCP listener and the `--stdio` line loop both sit on
+//! this path, which is what makes their results bit-identical.
+//!
+//! This module also owns the payload encodings inside
+//! [`Frame`] payload bytes (hello/ack, infer request/response, error)
+//! — the layouts are specified byte-for-byte in `docs/PROTOCOL.md`.
+
+use super::frame::{ErrorCode, Frame, FrameReader, PayloadType, PROTOCOL_VERSION};
+use crate::coordinator::{InferenceServer, Request, Response, ServerOptions, Submitter};
+use crate::snn::SentimentNetwork;
+use crate::Result;
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// Payload codecs (see docs/PROTOCOL.md §4)
+// ---------------------------------------------------------------------
+
+/// Maximum word ids one `InferRequest` may carry (u16 count field).
+pub const MAX_WORDS_PER_REQUEST: usize = u16::MAX as usize;
+
+/// A payload that failed to parse: the protocol error code to report
+/// plus a human-readable cause.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PayloadError {
+    /// Protocol error code for the `Error` response frame.
+    pub code: ErrorCode,
+    /// Human-readable cause (sent as the error message).
+    pub msg: String,
+}
+
+impl PayloadError {
+    fn new(code: ErrorCode, msg: impl Into<String>) -> PayloadError {
+        PayloadError { code, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for PayloadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}: {}", self.code, self.msg)
+    }
+}
+
+impl std::error::Error for PayloadError {}
+
+/// Decoded `InferResponse` payload (the client-side view of a
+/// [`Response`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireResponse {
+    /// Predicted label (1 = positive).
+    pub pred: u8,
+    /// Final output-neuron membrane potential.
+    pub v_out: i64,
+    /// Macro cycles attributed to this request (honest per-request
+    /// share of its fused batch, not an even split).
+    pub cycles: u64,
+    /// Server-side latency in microseconds (saturating).
+    pub latency_us: u64,
+    /// Micro-batch size this request was served in.
+    pub batch: u16,
+    /// Worker shard that ran the batch.
+    pub worker: u16,
+}
+
+/// Encode a `Hello` payload: the client's supported version range.
+pub fn hello_payload(min_version: u8, max_version: u8) -> Vec<u8> {
+    vec![min_version, max_version]
+}
+
+/// Server-side `Hello` handling: pick the highest mutually supported
+/// version, or report [`ErrorCode::UnsupportedVersion`].
+pub fn negotiate(payload: &[u8]) -> std::result::Result<u8, PayloadError> {
+    if payload.len() != 2 {
+        return Err(PayloadError::new(
+            ErrorCode::Malformed,
+            format!("hello payload must be 2 bytes, got {}", payload.len()),
+        ));
+    }
+    let (min, max) = (payload[0], payload[1]);
+    if min > max {
+        return Err(PayloadError::new(
+            ErrorCode::Malformed,
+            format!("hello version range {min}..{max} is empty"),
+        ));
+    }
+    if min > PROTOCOL_VERSION || max < PROTOCOL_VERSION {
+        return Err(PayloadError::new(
+            ErrorCode::UnsupportedVersion,
+            format!("server speaks v{PROTOCOL_VERSION}, client offers {min}..{max}"),
+        ));
+    }
+    Ok(PROTOCOL_VERSION)
+}
+
+/// Encode an `InferRequest` payload: `count:u16` then `count` i32
+/// word ids, all big-endian. Ids outside i32 range are saturated (the
+/// server clamps into the vocabulary anyway).
+pub fn encode_infer_request(word_ids: &[i64]) -> Vec<u8> {
+    assert!(word_ids.len() <= MAX_WORDS_PER_REQUEST, "too many word ids");
+    let mut out = Vec::with_capacity(2 + 4 * word_ids.len());
+    out.extend_from_slice(&(word_ids.len() as u16).to_be_bytes());
+    for &w in word_ids {
+        out.extend_from_slice(&(w.clamp(i32::MIN as i64, i32::MAX as i64) as i32).to_be_bytes());
+    }
+    out
+}
+
+/// Decode an `InferRequest` payload into word ids.
+pub fn decode_infer_request(payload: &[u8]) -> std::result::Result<Vec<i64>, PayloadError> {
+    if payload.len() < 2 {
+        return Err(PayloadError::new(ErrorCode::Malformed, "missing word count"));
+    }
+    let count = u16::from_be_bytes([payload[0], payload[1]]) as usize;
+    if payload.len() != 2 + 4 * count {
+        return Err(PayloadError::new(
+            ErrorCode::Malformed,
+            format!("{count} word ids need {} payload bytes, got {}", 2 + 4 * count, payload.len()),
+        ));
+    }
+    let mut ids = Vec::with_capacity(count);
+    for i in 0..count {
+        let o = 2 + 4 * i;
+        ids.push(i32::from_be_bytes([
+            payload[o],
+            payload[o + 1],
+            payload[o + 2],
+            payload[o + 3],
+        ]) as i64);
+    }
+    Ok(ids)
+}
+
+/// Encode an `Error` payload: `code:u16`, `msg_len:u16`, UTF-8 bytes.
+pub fn error_payload(code: ErrorCode, msg: &str) -> Vec<u8> {
+    let bytes = msg.as_bytes();
+    let n = bytes.len().min(u16::MAX as usize);
+    let mut out = Vec::with_capacity(4 + n);
+    out.extend_from_slice(&code.as_u16().to_be_bytes());
+    out.extend_from_slice(&(n as u16).to_be_bytes());
+    out.extend_from_slice(&bytes[..n]);
+    out
+}
+
+/// Decode an `Error` payload into `(raw code, message)`.
+pub fn decode_error(payload: &[u8]) -> std::result::Result<(u16, String), PayloadError> {
+    if payload.len() < 4 {
+        return Err(PayloadError::new(ErrorCode::Malformed, "error payload under 4 bytes"));
+    }
+    let code = u16::from_be_bytes([payload[0], payload[1]]);
+    let n = u16::from_be_bytes([payload[2], payload[3]]) as usize;
+    if payload.len() != 4 + n {
+        return Err(PayloadError::new(ErrorCode::Malformed, "error message length mismatch"));
+    }
+    let msg = String::from_utf8_lossy(&payload[4..]).into_owned();
+    Ok((code, msg))
+}
+
+/// Build an `Error` frame for a request id.
+pub fn error_frame(request_id: u64, code: ErrorCode, msg: &str) -> Frame {
+    Frame::new(PayloadType::Error, request_id, error_payload(code, msg))
+}
+
+/// Encode a coordinator [`Response`] as its wire frame: an
+/// `InferResponse` on success, an `Error` frame with
+/// [`ErrorCode::InferenceFailed`] when [`Response::err`] is set.
+pub fn response_frame(r: &Response) -> Frame {
+    if let Some(err) = &r.err {
+        return error_frame(r.id, ErrorCode::InferenceFailed, err);
+    }
+    let mut p = Vec::with_capacity(29);
+    p.push(r.pred);
+    p.extend_from_slice(&r.v_out.to_be_bytes());
+    p.extend_from_slice(&r.cycles.to_be_bytes());
+    let us = u64::try_from(r.latency.as_micros()).unwrap_or(u64::MAX);
+    p.extend_from_slice(&us.to_be_bytes());
+    p.extend_from_slice(&(r.batch_size.min(u16::MAX as usize) as u16).to_be_bytes());
+    p.extend_from_slice(&(r.worker.min(u16::MAX as usize) as u16).to_be_bytes());
+    Frame::new(PayloadType::InferResponse, r.id, p)
+}
+
+/// Decode an `InferResponse` payload.
+pub fn decode_infer_response(
+    payload: &[u8],
+) -> std::result::Result<WireResponse, PayloadError> {
+    if payload.len() != 29 {
+        return Err(PayloadError::new(
+            ErrorCode::Malformed,
+            format!("infer response payload must be 29 bytes, got {}", payload.len()),
+        ));
+    }
+    let be8 = |o: usize| {
+        u64::from_be_bytes([
+            payload[o],
+            payload[o + 1],
+            payload[o + 2],
+            payload[o + 3],
+            payload[o + 4],
+            payload[o + 5],
+            payload[o + 6],
+            payload[o + 7],
+        ])
+    };
+    Ok(WireResponse {
+        pred: payload[0],
+        v_out: be8(1) as i64,
+        cycles: be8(9),
+        latency_us: be8(17),
+        batch: u16::from_be_bytes([payload[25], payload[26]]),
+        worker: u16::from_be_bytes([payload[27], payload[28]]),
+    })
+}
+
+// ---------------------------------------------------------------------
+// ServeCore: many sessions over one inference server
+// ---------------------------------------------------------------------
+
+struct PendingReply {
+    external_id: u64,
+    deliver: Box<dyn FnOnce(Response) + Send>,
+}
+
+type PendingMap = Arc<Mutex<HashMap<u64, PendingReply>>>;
+
+/// The serving front-end core: one shared [`InferenceServer`]
+/// (batcher + work-stealing workers) plus a dispatcher thread that
+/// routes responses back to the submitting [`ClientSession`].
+///
+/// Sessions re-key every request onto a process-unique internal id, so
+/// clients can use any request ids they like — including colliding
+/// ones — and still get exactly one response each, with their own id
+/// echoed back.
+pub struct ServeCore {
+    submitter: Mutex<Option<Submitter>>,
+    pending: PendingMap,
+    next_id: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    vocab: i64,
+}
+
+impl ServeCore {
+    /// Spawn the worker pool and dispatcher. `vocab` is the embedding
+    /// table size; sessions clamp incoming word ids into `[0, vocab)`
+    /// (identically on every transport).
+    pub fn start_with<F>(opts: ServerOptions, vocab: i64, factory: F) -> Result<ServeCore>
+    where
+        F: Fn() -> Result<SentimentNetwork> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(vocab >= 1, "vocabulary must be non-empty");
+        let server = InferenceServer::start_with(opts, factory)?;
+        let submitter = server.submitter();
+        let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let dispatcher = {
+            let pending = Arc::clone(&pending);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                loop {
+                    match server.recv_timeout(Duration::from_millis(25)) {
+                        Ok(mut r) => {
+                            let entry = pending.lock().expect("pending poisoned").remove(&r.id);
+                            if let Some(e) = entry {
+                                r.id = e.external_id;
+                                (e.deliver)(r);
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if stop.load(Ordering::SeqCst)
+                                && pending.lock().expect("pending poisoned").is_empty()
+                            {
+                                break;
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                server.shutdown();
+            })
+        };
+        Ok(ServeCore {
+            submitter: Mutex::new(Some(submitter)),
+            pending,
+            next_id: Arc::new(AtomicU64::new(1)),
+            stop,
+            dispatcher: Mutex::new(Some(dispatcher)),
+            vocab,
+        })
+    }
+
+    /// Open a session (one logical client). Sessions may live on any
+    /// thread; dropping one abandons nothing — in-flight requests
+    /// still drain through the dispatcher.
+    pub fn client(&self) -> Result<ClientSession> {
+        let submitter = self
+            .submitter
+            .lock()
+            .expect("submitter poisoned")
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("serve core is shut down"))?;
+        let (tx, rx) = mpsc::channel();
+        Ok(ClientSession {
+            sender: SessionSender {
+                submitter,
+                pending: Arc::clone(&self.pending),
+                next_id: Arc::clone(&self.next_id),
+                tx,
+                vocab: self.vocab,
+            },
+            rx,
+        })
+    }
+
+    /// Responses not yet routed back to their sessions.
+    pub fn pending(&self) -> usize {
+        self.pending.lock().expect("pending poisoned").len()
+    }
+
+    /// Stop accepting new sessions, drain in-flight requests, and join
+    /// the dispatcher and worker pool. All [`ClientSession`]s (and
+    /// their [`SessionSender`] halves) must be dropped first — the
+    /// worker pool only winds down once every submission handle is
+    /// gone.
+    pub fn shutdown(&self) {
+        self.submitter.lock().expect("submitter poisoned").take();
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.dispatcher.lock().expect("dispatcher poisoned").take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The submit half of a session (usable from a reader thread while
+/// another thread drains responses).
+pub struct SessionSender {
+    submitter: Submitter,
+    pending: PendingMap,
+    next_id: Arc<AtomicU64>,
+    tx: mpsc::Sender<Response>,
+    vocab: i64,
+}
+
+impl SessionSender {
+    /// Submit one request. Word ids are clamped into `[0, vocab)` —
+    /// the same normalization on every transport. Errors if the
+    /// request is empty or the server is shutting down.
+    pub fn submit(&self, external_id: u64, word_ids: &[i64]) -> Result<()> {
+        anyhow::ensure!(!word_ids.is_empty(), "request {external_id}: no word ids");
+        let clamped: Vec<i64> = word_ids.iter().map(|&w| w.clamp(0, self.vocab - 1)).collect();
+        let internal = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let tx = self.tx.clone();
+        self.pending.lock().expect("pending poisoned").insert(
+            internal,
+            PendingReply {
+                external_id,
+                deliver: Box::new(move |r| {
+                    let _ = tx.send(r);
+                }),
+            },
+        );
+        match self.submitter.submit(Request { id: internal, word_ids: clamped }) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.pending.lock().expect("pending poisoned").remove(&internal);
+                Err(e)
+            }
+        }
+    }
+}
+
+/// One logical client of a [`ServeCore`]: submit requests, receive
+/// exactly one [`Response`] per request with the caller's request id.
+pub struct ClientSession {
+    sender: SessionSender,
+    rx: mpsc::Receiver<Response>,
+}
+
+impl ClientSession {
+    /// Submit one request (see [`SessionSender::submit`]).
+    pub fn submit(&self, external_id: u64, word_ids: &[i64]) -> Result<()> {
+        self.sender.submit(external_id, word_ids)
+    }
+
+    /// Block for the next response of this session.
+    pub fn recv(&self) -> Result<Response> {
+        Ok(self.rx.recv()?)
+    }
+
+    /// A ready response, if any (non-blocking).
+    pub fn try_recv(&self) -> Option<Response> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Block up to `timeout` for the next response.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+
+    /// Split into the submit half and the raw response receiver, so a
+    /// reader thread can submit while a writer thread drains (the TCP
+    /// connection shape).
+    pub fn split(self) -> (SessionSender, mpsc::Receiver<Response>) {
+        (self.sender, self.rx)
+    }
+}
+
+// ---------------------------------------------------------------------
+// FrameClient: a minimal blocking client for the binary protocol
+// ---------------------------------------------------------------------
+
+/// A blocking TCP client for the framed protocol — used by the
+/// integration tests and handy as a reference implementation.
+pub struct FrameClient {
+    w: TcpStream,
+    reader: FrameReader<TcpStream>,
+}
+
+impl FrameClient {
+    /// Connect to a framed server.
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<FrameClient> {
+        let w = TcpStream::connect(addr)?;
+        w.set_nodelay(true).ok();
+        let r = w.try_clone()?;
+        Ok(FrameClient { w, reader: FrameReader::new(r) })
+    }
+
+    /// Set the socket read timeout (both halves share the socket).
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
+        self.w.set_read_timeout(d)?;
+        Ok(())
+    }
+
+    /// Negotiate the protocol version (`Hello`/`HelloAck`). Returns
+    /// the version the server chose.
+    pub fn hello(&mut self) -> Result<u8> {
+        Frame::new(PayloadType::Hello, 0, hello_payload(PROTOCOL_VERSION, PROTOCOL_VERSION))
+            .write_to(&mut self.w)?;
+        match self.next_frame()? {
+            Some(f) if f.payload_type == PayloadType::HelloAck => {
+                anyhow::ensure!(f.payload.len() == 1, "hello ack payload must be 1 byte");
+                Ok(f.payload[0])
+            }
+            Some(f) if f.payload_type == PayloadType::Error => {
+                let (code, msg) = decode_error(&f.payload).map_err(anyhow::Error::from)?;
+                anyhow::bail!("server refused hello (code {code}): {msg}")
+            }
+            other => anyhow::bail!("expected HelloAck, got {other:?}"),
+        }
+    }
+
+    /// Send one `InferRequest` (does not wait for the response).
+    pub fn send_infer(&mut self, request_id: u64, word_ids: &[i64]) -> Result<()> {
+        Frame::new(PayloadType::InferRequest, request_id, encode_infer_request(word_ids))
+            .write_to(&mut self.w)?;
+        Ok(())
+    }
+
+    /// Read the next frame from the server (`None` on clean EOF).
+    pub fn next_frame(&mut self) -> Result<Option<Frame>> {
+        self.reader.next_frame().map_err(anyhow::Error::from)
+    }
+
+    /// Read the next `InferResponse`/`Error` frame, decoded. Returns
+    /// the request id and either the response or `(code, message)`.
+    #[allow(clippy::type_complexity)]
+    pub fn next_result(
+        &mut self,
+    ) -> Result<Option<(u64, std::result::Result<WireResponse, (u16, String)>)>> {
+        match self.next_frame()? {
+            None => Ok(None),
+            Some(f) => match f.payload_type {
+                PayloadType::InferResponse => {
+                    let r = decode_infer_response(&f.payload).map_err(anyhow::Error::from)?;
+                    Ok(Some((f.request_id, Ok(r))))
+                }
+                PayloadType::Error => {
+                    let e = decode_error(&f.payload).map_err(anyhow::Error::from)?;
+                    Ok(Some((f.request_id, Err(e))))
+                }
+                other => anyhow::bail!("unexpected frame type {other:?} mid-stream"),
+            },
+        }
+    }
+
+    /// Half-close the write side so the server sees EOF and drains.
+    pub fn finish_writes(&self) -> Result<()> {
+        self.w.shutdown(std::net::Shutdown::Write)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_request_payload_roundtrip() {
+        let ids = vec![0i64, 3, 19, 7];
+        let p = encode_infer_request(&ids);
+        assert_eq!(p.len(), 2 + 4 * ids.len());
+        assert_eq!(decode_infer_request(&p).unwrap(), ids);
+    }
+
+    #[test]
+    fn infer_request_rejects_length_mismatch() {
+        let mut p = encode_infer_request(&[1, 2, 3]);
+        p.pop();
+        let e = decode_infer_request(&p).unwrap_err();
+        assert_eq!(e.code, ErrorCode::Malformed);
+        assert_eq!(decode_infer_request(&[]).unwrap_err().code, ErrorCode::Malformed);
+    }
+
+    #[test]
+    fn error_payload_roundtrip() {
+        let p = error_payload(ErrorCode::EmptyRequest, "no word ids");
+        let (code, msg) = decode_error(&p).unwrap();
+        assert_eq!(code, ErrorCode::EmptyRequest.as_u16());
+        assert_eq!(msg, "no word ids");
+    }
+
+    #[test]
+    fn negotiation_picks_v1_or_refuses() {
+        assert_eq!(negotiate(&hello_payload(1, 1)).unwrap(), 1);
+        assert_eq!(negotiate(&hello_payload(1, 9)).unwrap(), 1);
+        let e = negotiate(&hello_payload(2, 9)).unwrap_err();
+        assert_eq!(e.code, ErrorCode::UnsupportedVersion);
+        assert_eq!(negotiate(&[1]).unwrap_err().code, ErrorCode::Malformed);
+        assert_eq!(negotiate(&hello_payload(3, 1)).unwrap_err().code, ErrorCode::Malformed);
+    }
+
+    #[test]
+    fn response_frame_encodes_success_and_error() {
+        let ok = Response {
+            id: 4,
+            pred: 1,
+            v_out: -17,
+            cycles: 42,
+            latency: Duration::from_micros(181),
+            worker: 2,
+            batch_size: 3,
+            err: None,
+        };
+        let f = response_frame(&ok);
+        assert_eq!(f.payload_type, PayloadType::InferResponse);
+        assert_eq!(f.request_id, 4);
+        let w = decode_infer_response(&f.payload).unwrap();
+        assert_eq!(
+            w,
+            WireResponse {
+                pred: 1,
+                v_out: -17,
+                cycles: 42,
+                latency_us: 181,
+                batch: 3,
+                worker: 2
+            }
+        );
+
+        let bad = Response { err: Some("word id out of range".into()), ..ok };
+        let f = response_frame(&bad);
+        assert_eq!(f.payload_type, PayloadType::Error);
+        let (code, msg) = decode_error(&f.payload).unwrap();
+        assert_eq!(code, ErrorCode::InferenceFailed.as_u16());
+        assert!(msg.contains("out of range"));
+    }
+}

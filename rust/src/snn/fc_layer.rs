@@ -50,8 +50,11 @@ pub struct FcLayer {
     seq_even: Vec<crate::isa::Instruction>,
     /// Configured batch lanes (1 until `begin_batch` widens it).
     lanes: usize,
-    /// Per-lane neuron-update sequences, `(odd, even)` per lane.
-    lane_seqs: Vec<(Vec<crate::isa::Instruction>, Vec<crate::isa::Instruction>)>,
+    /// Per-lane attributed cycles (fractional) since `begin_batch`:
+    /// each fused AccW2V cycle is split across the lanes sharing that
+    /// union row; neuron-update cycles are charged to their own lane.
+    /// Sums exactly to the layer's batched cycle spend.
+    lane_cycles: Vec<f64>,
     /// Per-lane destination V rows, indexed by lane, per parity.
     lane_rows_odd: Vec<usize>,
     lane_rows_even: Vec<usize>,
@@ -106,7 +109,7 @@ impl FcLayer {
             out_spikes: vec![false; width],
             spiking_rows: Vec::with_capacity(fan_in),
             lanes: 1,
-            lane_seqs: vec![(seq_odd.clone(), seq_even.clone())],
+            lane_cycles: vec![0.0],
             lane_rows_odd: vec![0],
             lane_rows_even: vec![1],
             batch_out: vec![vec![false; width]],
@@ -182,8 +185,9 @@ impl FcLayer {
 
     /// Allocate and zero `lanes` independent batch lanes: lane `b`'s
     /// membrane potentials live in V rows `(2b, 2b+1)` of every tile
-    /// macro, with per-lane neuron-update sequences against the shared
-    /// constant rows. Lane 0 aliases the classic single-request rows.
+    /// macro, updated by the fused per-type neuron kernels against the
+    /// shared constant rows. Lane 0 aliases the classic single-request
+    /// rows. Also resets the per-lane cycle attribution.
     pub fn begin_batch(&mut self, lanes: usize) -> Result<()> {
         anyhow::ensure!(
             lanes >= 1 && lanes <= self.max_batch_lanes(),
@@ -191,24 +195,13 @@ impl FcLayer {
             self.max_batch_lanes()
         );
         self.lanes = lanes;
-        let c = self.layout.const_rows;
-        self.lane_seqs.clear();
         self.lane_rows_odd.clear();
         self.lane_rows_even.clear();
         for b in 0..lanes {
-            let (v_odd, v_even) = (2 * b, 2 * b + 1);
-            self.lane_rows_odd.push(v_odd);
-            self.lane_rows_even.push(v_even);
-            self.lane_seqs.push((
-                neuron_sequence(self.params.neuron, v_odd, c.for_parity(Parity::Odd), Parity::Odd),
-                neuron_sequence(
-                    self.params.neuron,
-                    v_even,
-                    c.for_parity(Parity::Even),
-                    Parity::Even,
-                ),
-            ));
+            self.lane_rows_odd.push(2 * b);
+            self.lane_rows_even.push(2 * b + 1);
         }
+        self.lane_cycles = vec![0.0; lanes];
         self.batch_out = vec![vec![false; self.layout.width]; lanes];
         for m in self.macros.iter_mut() {
             for b in 0..lanes {
@@ -250,6 +243,29 @@ impl FcLayer {
                 *s = false;
             }
         }
+        // Honest per-lane cost attribution for this timestep: each
+        // union row costs one AccW2V per tile per parity, split across
+        // the lanes that latch it; the per-lane neuron updates are
+        // charged whole to their lane. Sums exactly to the cycles the
+        // macros record, so a chunk's spend apportions losslessly.
+        let tiles = self.macros.len() as f64;
+        for &(_, mask) in &self.union_rows {
+            let share = 2.0 * tiles / mask.count_ones() as f64;
+            let mut mm = mask;
+            while mm != 0 {
+                let b = mm.trailing_zeros() as usize;
+                mm &= mm - 1;
+                self.lane_cycles[b] += share;
+            }
+        }
+        if !self.output_only {
+            let upd = 2.0 * tiles * self.params.neuron.instructions_per_update() as f64;
+            for (b, &a) in active.iter().enumerate() {
+                if a {
+                    self.lane_cycles[b] += upd;
+                }
+            }
+        }
         for (tile, m) in self.layout.tiles.iter().zip(self.macros.iter_mut()) {
             m.acc_w2v_fused(&self.union_rows, &self.lane_rows_odd, Parity::Odd)?;
             m.acc_w2v_fused(&self.union_rows, &self.lane_rows_even, Parity::Even)?;
@@ -257,31 +273,20 @@ impl FcLayer {
                 continue;
             }
             let c = self.layout.const_rows;
-            let fuse_rmp = self.params.neuron == crate::isa::NeuronType::RMP;
             for b in 0..lanes {
                 if !active[b] {
                     continue;
                 }
                 for parity in Parity::BOTH {
-                    let spikes = if fuse_rmp {
-                        // hot kernel: the two-instruction RMP sequence
-                        // with operand rows decoded once
-                        let thr = match parity {
-                            Parity::Odd => c.neg_thr_odd,
-                            Parity::Even => c.neg_thr_even,
-                        };
-                        m.rmp_update_fused(lane_v_row(b, parity), thr, parity)?
-                    } else {
-                        let (seq_o, seq_e) = &self.lane_seqs[b];
-                        let seq = match parity {
-                            Parity::Odd => seq_o,
-                            Parity::Even => seq_e,
-                        };
-                        for instr in seq.iter() {
-                            m.execute(instr)?;
-                        }
-                        m.spikes(parity)
-                    };
+                    // hot kernel: the neuron-update sequence with its
+                    // operand rows decoded once — fused for all three
+                    // neuron types (IF/LIF/RMP)
+                    let spikes = m.neuron_update_fused(
+                        self.params.neuron,
+                        lane_v_row(b, parity),
+                        c.for_parity(parity),
+                        parity,
+                    )?;
                     for (field, &sp) in spikes.iter().enumerate() {
                         let local = tile.local_out(parity, field);
                         if local < tile.out_count {
@@ -292,6 +297,15 @@ impl FcLayer {
             }
         }
         Ok(&self.batch_out)
+    }
+
+    /// Per-lane attributed cycles accumulated since `begin_batch`:
+    /// lane `b`'s honest share of this layer's batched spend (fused
+    /// AccW2V cycles split across the lanes sharing each union row,
+    /// update cycles charged whole). The sum over lanes equals the
+    /// layer's total batched cycle count exactly.
+    pub fn lane_attributed_cycles(&self) -> &[f64] {
+        &self.lane_cycles
     }
 
     /// Current membrane potentials of one batch lane's outputs.
@@ -593,6 +607,39 @@ mod tests {
         assert_eq!(h[&InstructionKind::AccW2V], 6);
         // neuron updates stay per-lane: 4 lanes × 2 SpikeChecks
         assert_eq!(h[&InstructionKind::SpikeCheck], 8);
+    }
+
+    /// The per-lane cycle attribution must conserve the layer's real
+    /// batched spend exactly (fused cycles split by lane mask, update
+    /// cycles charged whole), with inactive lanes charged nothing.
+    #[test]
+    fn lane_attributed_cycles_conserve_layer_spend() {
+        let mut rng = XorShiftRng::new(44);
+        for params in [
+            LayerParams::rmp(120),
+            LayerParams::if_(90),
+            LayerParams::lif(70, 2),
+        ] {
+            let w = rand_weights(&mut rng, 48, 30); // 3 tiles
+            let mut layer = FcLayer::new(&w, params, MacroConfig::fast()).unwrap();
+            layer.begin_batch(4).unwrap();
+            layer.reset_counters();
+            let active = [true, true, true, false];
+            for _ in 0..6 {
+                let spikes: Vec<Vec<bool>> =
+                    (0..4).map(|_| rand_spikes(&mut rng, 48, 0.3)).collect();
+                let refs: Vec<&[bool]> = spikes.iter().map(|s| s.as_slice()).collect();
+                layer.step_batch(&refs, &active).unwrap();
+            }
+            let attributed: f64 = layer.lane_attributed_cycles().iter().sum();
+            let spent = layer.stats().cycles as f64;
+            assert!(
+                (attributed - spent).abs() < 1e-6,
+                "{params:?}: attributed {attributed} vs spent {spent}"
+            );
+            assert_eq!(layer.lane_attributed_cycles()[3], 0.0, "inactive lane");
+            assert!(layer.lane_attributed_cycles()[..3].iter().all(|&c| c > 0.0));
+        }
     }
 
     #[test]

@@ -16,7 +16,9 @@ pub struct ReviewResult {
     pub v_out: i64,
     /// V_out after each word (the Fig 10 trace).
     pub vout_trace: Vec<i64>,
-    /// Total CIM cycles consumed on the macros.
+    /// CIM cycles attributed to this review: the full macro spend when
+    /// run alone, or an honest per-request share of the fused chunk
+    /// when batched (see [`SentimentNetwork::run_reviews_batched`]).
     pub cycles: u64,
 }
 
@@ -127,7 +129,10 @@ impl SentimentNetwork {
     ///
     /// Predictions and V_out traces are bit-identical to running each
     /// review through [`SentimentNetwork::run_review`]; per-review
-    /// `cycles` report the amortized chunk cost split evenly.
+    /// `cycles` report each request's honest share of its chunk —
+    /// fused (shared) AccW2V cycles split across the lanes that
+    /// latched them, per-lane update/read-out cycles charged whole —
+    /// summing exactly to the chunk's total spend.
     pub fn run_reviews_batched(&mut self, reviews: &[&[i64]]) -> Result<Vec<ReviewResult>> {
         let max = self.max_batch_lanes();
         let mut out = Vec::with_capacity(reviews.len());
@@ -206,16 +211,29 @@ impl SentimentNetwork {
             }
         }
         let spent = self.total_cycles() - cycles0;
-        let per_review = spent / lanes as u64;
+        // Honest per-request attribution: each lane's share of the
+        // fused AccW2V issue (split across the lanes latching each
+        // union row), its own neuron-update cycles, and its read-out
+        // ReadVs — rounded to integers without losing a cycle
+        // (largest-remainder apportionment over the chunk's spend).
+        let fc1 = self.fc1.lane_attributed_cycles();
+        let fc2 = self.fc2.lane_attributed_cycles();
+        let out_l = self.out.lane_attributed_cycles();
+        let readv_per_trace = (2 * self.out.num_macros()) as f64;
+        let weights: Vec<f64> = (0..lanes)
+            .map(|b| fc1[b] + fc2[b] + out_l[b] + traces[b].len() as f64 * readv_per_trace)
+            .collect();
+        let cycles = crate::metrics::apportion(&weights, spent);
         Ok(traces
             .into_iter()
-            .map(|trace| {
+            .zip(cycles)
+            .map(|(trace, cycles)| {
                 let v_out = *trace.last().unwrap_or(&0);
                 ReviewResult {
                     pred: (v_out >= 0) as u8,
                     v_out,
                     vout_trace: trace,
-                    cycles: per_review,
+                    cycles,
                 }
             })
             .collect())
@@ -406,6 +424,39 @@ pub(crate) mod tests {
             batch_cycles < seq_cycles,
             "fused batch must amortize AccW2V issue: {batch_cycles} >= {seq_cycles}"
         );
+    }
+
+    /// Batched `cycles` are an honest per-request attribution, not an
+    /// even split: a singleton batch matches its solo run exactly, an
+    /// empty lane is charged nothing, and longer reviews pay more.
+    #[test]
+    fn batched_cycles_attribute_honestly_not_evenly() {
+        let a = mini_artifacts(14);
+        let long = vec![1i64, 5, 9, 13, 17];
+        let short = vec![2i64];
+        let empty: Vec<i64> = vec![];
+        let mut seq = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let want_long = seq.run_review(&long).unwrap();
+
+        let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let got = net.run_reviews_batched(&[&long[..]]).unwrap();
+        assert_eq!(got[0].cycles, want_long.cycles, "singleton attribution");
+
+        let got = net.run_reviews_batched(&[&long[..], &empty[..]]).unwrap();
+        assert_eq!(got[1].cycles, 0, "empty lane must cost nothing");
+        assert_eq!(
+            got[0].cycles, want_long.cycles,
+            "the sole active lane pays exactly its own work"
+        );
+
+        let got = net.run_reviews_batched(&[&long[..], &short[..]]).unwrap();
+        assert!(
+            got[0].cycles > got[1].cycles,
+            "5 words charged {} vs 1 word charged {}",
+            got[0].cycles,
+            got[1].cycles
+        );
+        assert!(got[1].cycles > 0);
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Frame-codec conformance tests: the worked hex examples of
+//! `docs/PROTOCOL.md` are pinned here byte-for-byte (doc and codec
+//! must change in lockstep), plus property tests for round-tripping
+//! and rejection of truncated/corrupted/oversized frames.
+
+use impulse::proptest_lite::forall_ctx;
+use impulse::serve::{
+    crc32, decode_error, decode_infer_request, decode_infer_response, encode_infer_request,
+    error_payload, hello_payload, Decoded, ErrorCode, Frame, PayloadType, WireError,
+    CRC_LEN, HEADER_LEN, MAX_PAYLOAD, PROTOCOL_VERSION,
+};
+
+fn hex(s: &str) -> Vec<u8> {
+    s.split_whitespace()
+        .map(|b| u8::from_str_radix(b, 16).unwrap())
+        .collect()
+}
+
+fn decode_one(bytes: &[u8]) -> Frame {
+    match Frame::decode(bytes).unwrap() {
+        Decoded::Frame(f, used) => {
+            assert_eq!(used, bytes.len(), "frame must consume the whole example");
+            f
+        }
+        other => panic!("expected a complete frame, got {other:?}"),
+    }
+}
+
+/// PROTOCOL.md §6, example 1: `InferRequest`, request id 7, word ids
+/// [3, 1, 4].
+#[test]
+fn protocol_md_worked_example_request() {
+    let wire = hex(
+        "49 4D 50 31 01 10 00 00 00 00 00 00 00 00 00 07 00 00 00 0E \
+         00 03 00 00 00 03 00 00 00 01 00 00 00 04 70 DD 68 B1",
+    );
+    let f = Frame::new(PayloadType::InferRequest, 7, encode_infer_request(&[3, 1, 4]));
+    assert_eq!(f.encode(), wire, "encoder must produce the documented bytes");
+    let g = decode_one(&wire);
+    assert_eq!(g.version, PROTOCOL_VERSION);
+    assert_eq!(g.payload_type, PayloadType::InferRequest);
+    assert_eq!(g.request_id, 7);
+    assert_eq!(decode_infer_request(&g.payload).unwrap(), vec![3, 1, 4]);
+}
+
+/// PROTOCOL.md §6, example 2: the matching `InferResponse` (pred 1,
+/// v_out 42, cycles 35200, latency 181 µs, batch 1, worker 0).
+#[test]
+fn protocol_md_worked_example_response() {
+    let wire = hex(
+        "49 4D 50 31 01 11 00 00 00 00 00 00 00 00 00 07 00 00 00 1D \
+         01 00 00 00 00 00 00 00 2A 00 00 00 00 00 00 89 80 \
+         00 00 00 00 00 00 00 B5 00 01 00 00 0D AA 3F 31",
+    );
+    let g = decode_one(&wire);
+    assert_eq!(g.payload_type, PayloadType::InferResponse);
+    assert_eq!(g.request_id, 7);
+    let r = decode_infer_response(&g.payload).unwrap();
+    assert_eq!(r.pred, 1);
+    assert_eq!(r.v_out, 42);
+    assert_eq!(r.cycles, 35200);
+    assert_eq!(r.latency_us, 181);
+    assert_eq!(r.batch, 1);
+    assert_eq!(r.worker, 0);
+}
+
+/// PROTOCOL.md §6, examples 3–5: Hello, HelloAck, and an Error frame.
+#[test]
+fn protocol_md_worked_example_handshake_and_error() {
+    let hello_wire = hex(
+        "49 4D 50 31 01 01 00 00 00 00 00 00 00 00 00 00 00 00 00 02 01 01 A2 4A 7D 2B",
+    );
+    assert_eq!(Frame::new(PayloadType::Hello, 0, hello_payload(1, 1)).encode(), hello_wire);
+
+    let ack_wire = hex(
+        "49 4D 50 31 01 02 00 00 00 00 00 00 00 00 00 00 00 00 00 01 01 20 83 CE 35",
+    );
+    assert_eq!(Frame::new(PayloadType::HelloAck, 0, vec![1]).encode(), ack_wire);
+
+    let err_wire = hex(
+        "49 4D 50 31 01 7F 00 00 00 00 00 00 00 00 00 09 00 00 00 18 \
+         00 07 00 14 77 6F 72 64 20 69 64 20 6F 75 74 20 6F 66 20 72 61 6E 67 65 \
+         BD 6F 8B 78",
+    );
+    let f = Frame::new(
+        PayloadType::Error,
+        9,
+        error_payload(ErrorCode::InferenceFailed, "word id out of range"),
+    );
+    assert_eq!(f.encode(), err_wire);
+    let g = decode_one(&err_wire);
+    let (code, msg) = decode_error(&g.payload).unwrap();
+    assert_eq!(code, ErrorCode::InferenceFailed.as_u16());
+    assert_eq!(msg, "word id out of range");
+}
+
+/// PROTOCOL.md §3: the CRC is IEEE 802.3 (zlib-compatible).
+#[test]
+fn crc_is_zlib_compatible() {
+    assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+}
+
+/// Property: any frame round-trips bit-exactly through encode/decode.
+#[test]
+fn prop_roundtrip_random_frames() {
+    let types = [
+        PayloadType::Hello,
+        PayloadType::HelloAck,
+        PayloadType::InferRequest,
+        PayloadType::InferResponse,
+        PayloadType::Error,
+    ];
+    forall_ctx(
+        300,
+        0x0F7A,
+        |rng| {
+            let ty = types[rng.gen_range(types.len() as u64) as usize];
+            let id = rng.next_u64();
+            let n = rng.gen_range(200) as usize;
+            let payload: Vec<u8> = (0..n).map(|_| rng.gen_range(256) as u8).collect();
+            Frame::new(ty, id, payload)
+        },
+        |f| {
+            let bytes = f.encode();
+            match Frame::decode(&bytes) {
+                Ok(Decoded::Frame(g, used)) if g == *f && used == bytes.len() => Ok(()),
+                other => Err(format!("roundtrip failed: {other:?}")),
+            }
+        },
+    );
+}
+
+/// Property: no prefix of a valid frame ever decodes to a frame, and
+/// the codec always asks for at least one more byte than it has.
+#[test]
+fn prop_truncation_never_yields_a_frame() {
+    forall_ctx(
+        100,
+        0x7210,
+        |rng| {
+            let n = rng.gen_range(64) as usize;
+            let payload: Vec<u8> = (0..n).map(|_| rng.gen_range(256) as u8).collect();
+            let cut = rng.gen_range((HEADER_LEN + n + CRC_LEN) as u64) as usize;
+            (Frame::new(PayloadType::InferRequest, rng.next_u64(), payload), cut)
+        },
+        |(f, cut)| {
+            let bytes = f.encode();
+            match Frame::decode(&bytes[..*cut]) {
+                Ok(Decoded::NeedMore(want)) if want > *cut => Ok(()),
+                other => Err(format!("prefix of {cut} bytes gave {other:?}")),
+            }
+        },
+    );
+}
+
+/// Property: flipping any single byte of a frame never yields the
+/// original back; payload-region flips are caught by the CRC.
+#[test]
+fn prop_single_byte_corruption_is_detected() {
+    forall_ctx(
+        60,
+        0xC0DE,
+        |rng| {
+            let n = 1 + rng.gen_range(40) as usize;
+            let payload: Vec<u8> = (0..n).map(|_| rng.gen_range(256) as u8).collect();
+            let f = Frame::new(PayloadType::InferResponse, rng.next_u64(), payload);
+            let pos = rng.gen_range(f.encoded_len() as u64) as usize;
+            let bit = 1u8 << rng.gen_range(8);
+            (f, pos, bit)
+        },
+        |(f, pos, bit)| {
+            let mut bytes = f.encode();
+            bytes[*pos] ^= bit;
+            match Frame::decode(&bytes) {
+                Ok(Decoded::Frame(g, _)) if g == *f => {
+                    Err(format!("flip at {pos} went undetected"))
+                }
+                // a flip in the length field may legitimately ask for
+                // more bytes; anything else must be an error or a
+                // differently-keyed frame (impossible: CRC covers all)
+                _ => Ok(()),
+            }
+        },
+    );
+}
+
+/// Payload-byte corruption specifically reports BadCrc (PROTOCOL.md
+/// §5: the checksum is verified before the payload is interpreted).
+#[test]
+fn payload_corruption_reports_bad_crc() {
+    let f = Frame::new(PayloadType::InferRequest, 11, encode_infer_request(&[5, 6]));
+    for off in HEADER_LEN..HEADER_LEN + f.payload.len() {
+        let mut bytes = f.encode();
+        bytes[off] ^= 0x01;
+        assert!(
+            matches!(Frame::decode(&bytes), Err(WireError::BadCrc { .. })),
+            "offset {off}"
+        );
+    }
+}
+
+/// Frames claiming more than MAX_PAYLOAD are rejected from the header
+/// alone; a maximum-size payload is accepted.
+#[test]
+fn oversized_rejected_max_size_accepted() {
+    let mut bytes = Frame::new(PayloadType::InferRequest, 1, vec![0; 8]).encode();
+    bytes[16..20].copy_from_slice(&((MAX_PAYLOAD as u32) + 1).to_be_bytes());
+    assert!(matches!(
+        Frame::decode(&bytes[..HEADER_LEN]),
+        Err(WireError::Oversized(_))
+    ));
+
+    let big = Frame::new(PayloadType::Error, 2, vec![0xAB; MAX_PAYLOAD]);
+    let wire = big.encode();
+    match Frame::decode(&wire).unwrap() {
+        Decoded::Frame(g, used) => {
+            assert_eq!(used, wire.len());
+            assert_eq!(g.payload.len(), MAX_PAYLOAD);
+        }
+        other => panic!("max-size frame rejected: {other:?}"),
+    }
+}

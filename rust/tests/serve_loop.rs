@@ -98,7 +98,19 @@ fn every_id_answered_once_batched() {
             workers: 2,
             batch_size: 8,
             batch_deadline: Duration::from_millis(5),
-            pipeline: false,
+            ..ServerOptions::default()
+        },
+        25,
+    );
+}
+
+#[test]
+fn every_id_answered_once_adaptive() {
+    check_exactly_one_response_each(
+        ServerOptions {
+            workers: 2,
+            adaptive: true,
+            ..ServerOptions::default()
         },
         25,
     );
@@ -135,7 +147,7 @@ fn batched_serving_matches_unbatched() {
             workers: 2,
             batch_size: 16,
             batch_deadline: Duration::from_millis(10),
-            pipeline: false,
+            ..ServerOptions::default()
         },
         factory(7),
     )
@@ -162,7 +174,7 @@ fn drain_completes_when_responses_lag_submits() {
             batch_size: 4,
             // long deadline: responses intentionally lag the submits
             batch_deadline: Duration::from_millis(50),
-            pipeline: false,
+            ..ServerOptions::default()
         },
         factory(3),
     )

@@ -1,0 +1,232 @@
+//! End-to-end tests of the TCP serving front-end: the binary framed
+//! transport and the stdio-path session must return bit-identical
+//! predictions (the PR's acceptance criterion), concurrent clients
+//! each get exactly one response per request id with no cross-talk,
+//! and protocol violations are answered per the PROTOCOL.md contract.
+
+use impulse::coordinator::{Response, ServerOptions};
+use impulse::data::SentimentArtifacts;
+use impulse::macro_sim::MacroConfig;
+use impulse::serve::{
+    decode_error, hello_payload, serve_tcp, ErrorCode, Frame, FrameClient, FrameReader,
+    PayloadType, ServeCore, TcpServeHandle, WireResponse, PROTOCOL_VERSION,
+};
+use impulse::snn::{ReviewResult, SentimentNetwork};
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+const VOCAB: i64 = 20; // SentimentArtifacts::synthetic vocabulary
+
+fn start_core(seed: u64, opts: ServerOptions) -> (Arc<ServeCore>, TcpServeHandle) {
+    let a = SentimentArtifacts::synthetic(seed);
+    assert_eq!(a.emb_q.len() as i64, VOCAB);
+    let core = Arc::new(
+        ServeCore::start_with(opts, VOCAB, move || {
+            SentimentNetwork::from_artifacts(&a, MacroConfig::fast())
+        })
+        .unwrap(),
+    );
+    let handle = serve_tcp("127.0.0.1:0", Arc::clone(&core)).unwrap();
+    (core, handle)
+}
+
+/// Ground truth for one request: a solo network run with the serve
+/// path's word-id clamping applied by hand.
+fn solo(net: &mut SentimentNetwork, ids: &[i64]) -> ReviewResult {
+    let clamped: Vec<i64> = ids.iter().map(|&w| w.clamp(0, VOCAB - 1)).collect();
+    net.run_review(&clamped).unwrap()
+}
+
+/// The acceptance criterion: a request over TCP with the binary
+/// framing returns a bit-identical prediction to the same request
+/// over the stdio line-loop path (both against the solo ground
+/// truth).
+#[test]
+fn tcp_binary_and_stdio_paths_are_bit_identical() {
+    let seed = 71;
+    let reqs: Vec<Vec<i64>> = vec![
+        vec![3, 7, 5],
+        vec![19],
+        vec![0, 0, 0, 0, 0, 0, 0, 0],
+        vec![999, -5, 7], // clamped into [0, 20) on every transport
+        vec![2, 11, 6, 13, 4],
+    ];
+    let a = SentimentArtifacts::synthetic(seed);
+    let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+    let want: Vec<ReviewResult> = reqs.iter().map(|r| solo(&mut net, r)).collect();
+
+    let (core, handle) = start_core(
+        seed,
+        ServerOptions {
+            workers: 2,
+            batch_size: 4,
+            batch_deadline: Duration::from_millis(5),
+            ..ServerOptions::default()
+        },
+    );
+
+    // --- binary TCP transport ---------------------------------------
+    let mut client = FrameClient::connect(handle.local_addr()).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    assert_eq!(client.hello().unwrap(), PROTOCOL_VERSION);
+    for (i, r) in reqs.iter().enumerate() {
+        client.send_infer(i as u64, r).unwrap();
+    }
+    let mut tcp: HashMap<u64, WireResponse> = HashMap::new();
+    for _ in 0..reqs.len() {
+        let (id, res) = client.next_result().unwrap().expect("stream ended early");
+        let r = res.unwrap_or_else(|(c, m)| panic!("req {id} failed over TCP ({c}): {m}"));
+        assert!(tcp.insert(id, r).is_none(), "req {id} answered twice");
+    }
+    client.finish_writes().unwrap();
+    assert!(client.next_frame().unwrap().is_none(), "server must close after drain");
+
+    // --- stdio-path session (what `impulse serve --stdio` drives) ---
+    let session = core.client().unwrap();
+    for (i, r) in reqs.iter().enumerate() {
+        session.submit(i as u64, r).unwrap();
+    }
+    let mut line: HashMap<u64, Response> = HashMap::new();
+    for _ in 0..reqs.len() {
+        let r = session.recv().unwrap();
+        assert!(line.insert(r.id, r).is_none());
+    }
+    drop(session);
+
+    for (i, w) in want.iter().enumerate() {
+        let t = &tcp[&(i as u64)];
+        let l = &line[&(i as u64)];
+        assert!(l.err.is_none(), "req {i} failed on stdio path: {:?}", l.err);
+        assert_eq!((t.pred, t.v_out), (w.pred, w.v_out), "req {i}: TCP vs solo run");
+        assert_eq!((l.pred, l.v_out), (w.pred, w.v_out), "req {i}: stdio vs solo run");
+        assert!(t.cycles > 0 && l.cycles > 0, "req {i}: missing cost accounting");
+    }
+    handle.stop();
+    core.shutdown();
+}
+
+/// Two concurrent clients — deliberately reusing the same request ids
+/// — each get exactly one response per id, carrying their own
+/// request's result (no cross-connection routing mistakes).
+#[test]
+fn two_clients_exactly_one_response_per_request_id() {
+    let seed = 83;
+    let n = 10u64;
+    let words = |c: i64, i: i64| -> Vec<i64> { vec![(c * 7 + i * 3) % VOCAB, 5] };
+    let a = SentimentArtifacts::synthetic(seed);
+    let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+    let expected: Vec<Vec<ReviewResult>> = (0..2i64)
+        .map(|c| (0..n as i64).map(|i| solo(&mut net, &words(c, i))).collect())
+        .collect();
+    let expected = Arc::new(expected);
+
+    let (core, handle) = start_core(
+        seed,
+        ServerOptions {
+            workers: 2,
+            adaptive: true,
+            ..ServerOptions::default()
+        },
+    );
+    let addr = handle.local_addr();
+    let clients: Vec<_> = (0..2i64)
+        .map(|c| {
+            let expected = Arc::clone(&expected);
+            std::thread::spawn(move || {
+                let mut client = FrameClient::connect(addr).unwrap();
+                client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+                assert_eq!(client.hello().unwrap(), PROTOCOL_VERSION);
+                for i in 0..n {
+                    client.send_infer(i, &words(c, i as i64)).unwrap();
+                }
+                let mut seen: HashMap<u64, WireResponse> = HashMap::new();
+                for _ in 0..n {
+                    let (id, res) =
+                        client.next_result().unwrap().expect("stream ended early");
+                    let r = res.unwrap_or_else(|e| panic!("client {c} req {id}: {e:?}"));
+                    assert!(
+                        seen.insert(id, r).is_none(),
+                        "client {c}: req {id} answered twice"
+                    );
+                }
+                for i in 0..n {
+                    let want = &expected[c as usize][i as usize];
+                    let got = &seen[&i];
+                    assert_eq!(
+                        (got.pred, got.v_out),
+                        (want.pred, want.v_out),
+                        "client {c} req {i}: cross-talk or wrong result"
+                    );
+                }
+                client.finish_writes().unwrap();
+                assert!(client.next_frame().unwrap().is_none());
+            })
+        })
+        .collect();
+    for h in clients {
+        h.join().unwrap();
+    }
+    handle.stop();
+    core.shutdown();
+}
+
+/// A stream that is not framed at all gets one Error frame (BadMagic)
+/// and a close — alignment cannot be recovered.
+#[test]
+fn framing_error_is_answered_then_closed() {
+    let (core, handle) = start_core(5, ServerOptions::default());
+    let mut s = TcpStream::connect(handle.local_addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    s.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+    let mut reader = FrameReader::new(s.try_clone().unwrap());
+    let f = reader.next_frame().unwrap().expect("expected an error frame");
+    assert_eq!(f.payload_type, PayloadType::Error);
+    assert_eq!(f.request_id, 0, "no request id is attributable to a framing error");
+    let (code, _) = decode_error(&f.payload).unwrap();
+    assert_eq!(code, ErrorCode::BadMagic.as_u16());
+    assert!(reader.next_frame().unwrap().is_none(), "connection must close");
+    handle.stop();
+    core.shutdown();
+}
+
+/// An empty request is answered with EmptyRequest and the connection
+/// stays usable (the stream is still frame-aligned).
+#[test]
+fn empty_request_errors_but_connection_survives() {
+    let (core, handle) = start_core(9, ServerOptions::default());
+    let mut client = FrameClient::connect(handle.local_addr()).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    client.send_infer(1, &[]).unwrap();
+    let (id, res) = client.next_result().unwrap().unwrap();
+    assert_eq!(id, 1);
+    assert_eq!(res.unwrap_err().0, ErrorCode::EmptyRequest.as_u16());
+    client.send_infer(2, &[3, 4]).unwrap();
+    let (id, res) = client.next_result().unwrap().unwrap();
+    assert_eq!(id, 2);
+    assert!(res.is_ok(), "stream must still be aligned after a request error");
+    client.finish_writes().unwrap();
+    assert!(client.next_frame().unwrap().is_none());
+    handle.stop();
+    core.shutdown();
+}
+
+/// Version negotiation: an incompatible Hello is refused with
+/// UnsupportedVersion and the connection closes.
+#[test]
+fn unsupported_version_is_refused() {
+    let (core, handle) = start_core(3, ServerOptions::default());
+    let mut s = TcpStream::connect(handle.local_addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    Frame::new(PayloadType::Hello, 0, hello_payload(2, 9)).write_to(&mut s).unwrap();
+    let mut reader = FrameReader::new(s.try_clone().unwrap());
+    let f = reader.next_frame().unwrap().expect("expected an error frame");
+    assert_eq!(f.payload_type, PayloadType::Error);
+    let (code, _) = decode_error(&f.payload).unwrap();
+    assert_eq!(code, ErrorCode::UnsupportedVersion.as_u16());
+    assert!(reader.next_frame().unwrap().is_none(), "connection must close");
+    handle.stop();
+    core.shutdown();
+}
