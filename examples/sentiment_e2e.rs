@@ -56,7 +56,7 @@ fn main() -> impulse::Result<()> {
     })?;
     let t0 = Instant::now();
     let reqs: Vec<Request> = (0..n)
-        .map(|i| Request { id: i as u64, word_ids: a.test_seqs[i].clone() })
+        .map(|i| Request::words(i as u64, a.test_seqs[i].clone()))
         .collect();
     let (responses, _stats) = server.run_batch(reqs)?;
     let wall = t0.elapsed();

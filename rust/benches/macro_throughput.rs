@@ -8,10 +8,10 @@ use impulse::bench_harness::{Bencher, Table};
 use impulse::bitcell::Parity;
 use impulse::bits::XorShiftRng;
 use impulse::coordinator::LayerPipeline;
-use impulse::data::{artifacts_available, artifacts_dir, SentimentArtifacts};
+use impulse::data::{artifacts_available, artifacts_dir, DigitsArtifacts, SentimentArtifacts};
 use impulse::isa::{Instruction, InstructionKind};
 use impulse::macro_sim::{ImpulseMacro, MacroConfig};
-use impulse::snn::{FcLayer, LayerParams, SentimentNetwork};
+use impulse::snn::{DigitsNetwork, FcLayer, LayerParams, SentimentNetwork};
 
 fn main() -> impulse::Result<()> {
     println!("=== macro simulator throughput (L3 hot path) ===\n");
@@ -195,6 +195,83 @@ fn main() -> impulse::Result<()> {
         "derived: batch=16 vs batch=1 requests/sec speedup = {:.2}x",
         rps(16) / rps(1)
     );
+
+    // ------------------------------------------------------------------
+    // Batched digits (conv) inference: cycles/image and req/s at batch
+    // {1, 4, 16} — the ISSUE 3 acceptance numbers. Batched cycles per
+    // image must never exceed sequential (the union AccW2V stream can
+    // only shrink the issue count).
+    // ------------------------------------------------------------------
+    println!("\n=== batched digits inference (conv fused lanes) ===\n");
+    let da = if artifacts_available() {
+        DigitsArtifacts::load(artifacts_dir())?
+    } else {
+        println!("(artifacts not built — benching on the synthetic digits bundle)\n");
+        DigitsArtifacts::synthetic(2024)
+    };
+    let n_imgs = 16usize;
+    let images: Vec<Vec<f32>> = (0..n_imgs)
+        .map(|i| da.test_x[i % da.test_x.len()].clone())
+        .collect();
+    let img_refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+    let mut dnet = DigitsNetwork::from_artifacts(&da, MacroConfig::fast())?;
+    println!("(fused lane budget: {} lanes per chunk)\n", dnet.max_batch_lanes());
+    let want: Vec<(u8, Vec<i64>)> = img_refs
+        .iter()
+        .map(|r| dnet.run_image(r).map(|res| (res.pred, res.v_out)))
+        .collect::<impulse::Result<_>>()?;
+    let mut dtable = Table::new(&["batch", "img/s", "cycles/img", "identical"]);
+    let mut seq_cycles_per_img = f64::MAX;
+    for &bsz in &[1usize, 4, 16] {
+        dnet.reset_counters();
+        let mut preds = Vec::with_capacity(n_imgs);
+        if bsz == 1 {
+            for r in &img_refs {
+                let res = dnet.run_image(r)?;
+                preds.push((res.pred, res.v_out));
+            }
+        } else {
+            for chunk in img_refs.chunks(bsz) {
+                for res in dnet.run_images_batched(chunk)? {
+                    preds.push((res.pred, res.v_out));
+                }
+            }
+        }
+        let identical = preds == want;
+        let cycles_per_img = dnet.stats().cycles as f64 / n_imgs as f64;
+        if bsz == 1 {
+            seq_cycles_per_img = cycles_per_img;
+        }
+        let r = b
+            .bench(&format!("serve {n_imgs} digit images, batch={bsz}"), n_imgs as u64, || {
+                if bsz == 1 {
+                    for r in &img_refs {
+                        dnet.run_image(r).unwrap();
+                    }
+                } else {
+                    for chunk in img_refs.chunks(bsz) {
+                        dnet.run_images_batched(chunk).unwrap();
+                    }
+                }
+            })
+            .clone();
+        dtable.row(&[
+            format!("{bsz}"),
+            format!("{:.1}", r.throughput_per_s),
+            format!("{cycles_per_img:.0}"),
+            if identical { "yes".into() } else { "NO".into() },
+        ]);
+        assert!(
+            identical,
+            "batch={bsz}: batched digits predictions diverge from run_image"
+        );
+        assert!(
+            cycles_per_img <= seq_cycles_per_img + 0.5,
+            "batch={bsz}: {cycles_per_img:.0} cycles/img exceeds sequential \
+             {seq_cycles_per_img:.0}"
+        );
+    }
+    println!("\n{}", dtable.render());
     println!("derived: fast-engine instruction rate = see above; target ≥1e7 instr/s");
     Ok(())
 }

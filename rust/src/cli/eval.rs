@@ -1,19 +1,26 @@
 //! `impulse eval` — evaluate the sentiment test set on the macro pool
 //! (parallel via the coordinator's inference server), with optional
-//! XLA cross-check.
+//! XLA cross-check. `impulse eval digits` evaluates the digits conv
+//! network instead, through the same workload-generic server —
+//! `--batch N` / `--adaptive` fuse images onto batch lanes.
 
 use super::Flags;
 use impulse::coordinator::{InferenceServer, Request};
-use impulse::data::{artifacts_dir, Manifest, SentimentArtifacts};
+use impulse::data::{
+    artifacts_available, artifacts_dir, DigitsArtifacts, Manifest, SentimentArtifacts,
+};
 use impulse::energy::EnergyModel;
 use impulse::metrics::eng;
 use impulse::runtime::SentimentStepRuntime;
-use impulse::snn::SentimentNetwork;
+use impulse::snn::{DigitsNetwork, SentimentNetwork};
 use impulse::Result;
 use std::sync::Arc;
 use std::time::Instant;
 
 pub fn run(args: &[String]) -> Result<()> {
+    if args.first().map(|s| s.as_str()) == Some("digits") {
+        return run_digits(&args[1..]);
+    }
     let flags = Flags::parse(args);
     let cfg = super::run_config(&flags)?;
     let dir = artifacts_dir();
@@ -25,13 +32,7 @@ pub fn run(args: &[String]) -> Result<()> {
     } else {
         a.test_seqs.len()
     };
-    let batching = if cfg.adaptive {
-        "adaptive".to_string()
-    } else if cfg.batch > 1 {
-        format!("batch {}", cfg.batch)
-    } else {
-        "unbatched".to_string()
-    };
+    let batching = cfg.server_options().batching_label();
     println!(
         "evaluating {n} reviews on {} workers (engine {:?}, {batching})…",
         cfg.workers, cfg.engine
@@ -51,10 +52,7 @@ pub fn run(args: &[String]) -> Result<()> {
     })?;
     let t0 = Instant::now();
     let reqs: Vec<Request> = (0..n)
-        .map(|i| Request {
-            id: i as u64,
-            word_ids: a.test_seqs[i].clone(),
-        })
+        .map(|i| Request::words(i as u64, a.test_seqs[i].clone()))
         .collect();
     let (responses, stats) = server.run_batch(reqs)?;
     let wall = t0.elapsed();
@@ -124,5 +122,80 @@ pub fn run(args: &[String]) -> Result<()> {
         }
         println!("XLA cross-check : OK (bit-exact)");
     }
+    Ok(())
+}
+
+/// `impulse eval digits [--max N] [--batch B | --adaptive]` — evaluate
+/// the digits test images through the workload-generic inference
+/// server (fused batch lanes on the conv + FC stack). Falls back to
+/// the synthetic bundle when the compiled artifacts are absent so the
+/// batched conv path can be exercised anywhere.
+fn run_digits(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args);
+    let cfg = super::run_config(&flags)?;
+    let a = Arc::new(if artifacts_available() {
+        DigitsArtifacts::load(artifacts_dir())?
+    } else {
+        eprintln!("(artifacts not built — evaluating on the synthetic digits bundle)");
+        DigitsArtifacts::synthetic(2024)
+    });
+    anyhow::ensure!(!a.test_x.is_empty(), "digits bundle has no test images");
+    let n = if cfg.max_samples > 0 {
+        cfg.max_samples.min(a.test_x.len())
+    } else {
+        a.test_x.len()
+    };
+    let mac = cfg.macro_config();
+    let probe = DigitsNetwork::from_artifacts(&a, mac)?;
+    let mut opts = cfg.server_options();
+    if opts.adaptive {
+        opts.adaptive_cap = probe.max_batch_lanes();
+    }
+    let batching = opts.batching_label();
+    println!(
+        "evaluating {n} digit images on {} workers ({} fused lanes max, {batching})…",
+        cfg.workers,
+        probe.max_batch_lanes()
+    );
+    let a2 = Arc::clone(&a);
+    let server = InferenceServer::start_with(opts, move || {
+        DigitsNetwork::from_artifacts(&a2, mac)
+    })?;
+    let t0 = Instant::now();
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| Request::image(i as u64, 28, 28, a.test_x[i].clone()))
+        .collect();
+    let (responses, stats) = server.run_batch(reqs)?;
+    let wall = t0.elapsed();
+    server.shutdown();
+
+    let failed = responses.iter().filter(|r| r.err.is_some()).count();
+    if failed > 0 {
+        for r in responses.iter().filter(|r| r.err.is_some()).take(5) {
+            eprintln!("image {} failed: {}", r.id, r.err.as_deref().unwrap_or(""));
+        }
+        eprintln!("{failed}/{n} images failed; accuracy is over the rest");
+    }
+    let ok = n - failed;
+    let correct = responses
+        .iter()
+        .filter(|r| r.err.is_none() && r.pred == a.test_y[r.id as usize])
+        .count();
+    println!(
+        "\naccuracy        : {:.4} ({correct}/{ok})",
+        correct as f64 / ok.max(1) as f64
+    );
+    println!(
+        "wall time       : {wall:?} ({:.1} images/s)",
+        n as f64 / wall.as_secs_f64()
+    );
+    println!("{}", stats.latency.report("latency"));
+    let per_image = stats.total_cycles as f64 / n.max(1) as f64;
+    println!(
+        "macro cycles    : {} total, {per_image:.0}/image → {} @ {:.0} MHz",
+        stats.total_cycles,
+        eng(per_image / cfg.freq_hz, "s"),
+        cfg.freq_hz / 1e6
+    );
     Ok(())
 }

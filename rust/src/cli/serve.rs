@@ -5,7 +5,8 @@
 //!
 //! - `--listen <addr>` (or `[run] listen` in the config): a
 //!   multi-client TCP listener speaking the length-prefixed binary
-//!   frame protocol of `docs/PROTOCOL.md`.
+//!   frame protocol of `docs/PROTOCOL.md`. SIGINT/SIGTERM drain
+//!   in-flight requests and exit cleanly.
 //! - `--stdio` (the default): one request per line on stdin:
 //!       <id> <word_id> <word_id> …
 //!   answered one per line on stdout:
@@ -13,6 +14,10 @@
 //!   or, when inference fails for a request:
 //!       <id> ERROR <message>
 //!   `quit` stops.
+//!
+//! `--model digits` serves the digits conv network instead of the
+//! sentiment stack (framed transport only — `DigitsInferRequest`
+//! payloads carry 28×28 images, which the line protocol cannot).
 //!
 //! Requests flow through the coordinator's micro-batching worker
 //! pool: `--batch B` fuses up to B requests into one instruction
@@ -23,66 +28,100 @@
 //! fused batch (per-request attribution, not an even split).
 
 use super::Flags;
-use impulse::coordinator::Response;
-use impulse::data::{artifacts_dir, SentimentArtifacts};
-use impulse::serve::{serve_tcp, ClientSession, ServeCore};
-use impulse::snn::SentimentNetwork;
+use impulse::coordinator::{Response, WorkloadKind};
+use impulse::data::{artifacts_dir, DigitsArtifacts, SentimentArtifacts};
+use impulse::serve::{
+    install_shutdown_handler, serve_tcp, ClientSession, ServeCore, TcpServeHandle,
+};
+use impulse::snn::{DigitsNetwork, SentimentNetwork};
 use impulse::Result;
 use std::io::{BufRead, Write};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn write_response(out: &mut impl Write, r: &Response) -> Result<()> {
     if let Some(err) = &r.err {
         writeln!(out, "{} ERROR {}", r.id, err)?;
         return Ok(());
     }
-    writeln!(
-        out,
-        "{} {} v_out={} cycles={} us={} batch={}",
-        r.id,
-        if r.pred == 1 { "POSITIVE" } else { "NEGATIVE" },
-        r.v_out,
-        r.cycles,
-        r.latency.as_micros(),
-        r.batch_size,
-    )?;
+    match r.kind {
+        WorkloadKind::Sentiment => writeln!(
+            out,
+            "{} {} v_out={} cycles={} us={} batch={}",
+            r.id,
+            if r.pred == 1 { "POSITIVE" } else { "NEGATIVE" },
+            r.v_out,
+            r.cycles,
+            r.latency.as_micros(),
+            r.batch_size,
+        )?,
+        WorkloadKind::Digits => writeln!(
+            out,
+            "{} DIGIT {} v_out={} cycles={} us={} batch={}",
+            r.id,
+            r.pred,
+            r.v_out,
+            r.cycles,
+            r.latency.as_micros(),
+            r.batch_size,
+        )?,
+    }
     Ok(())
 }
 
 pub fn run(args: &[String]) -> Result<()> {
     let flags = Flags::parse(args);
     let cfg = super::run_config(&flags)?;
-    let a = Arc::new(SentimentArtifacts::load(artifacts_dir())?);
-    let vocab = a.emb_q.len() as i64;
-    let a2 = Arc::clone(&a);
     let mac = cfg.macro_config();
     let mut opts = cfg.server_options();
-    if opts.adaptive {
-        // probe the mapped model for its real fused-lane budget so
-        // adaptive batches never exceed what one pass can fuse
-        opts.adaptive_cap = SentimentNetwork::from_artifacts(&a, mac)?.max_batch_lanes();
-    }
-    let core = Arc::new(ServeCore::start_with(opts.clone(), vocab, move || {
-        SentimentNetwork::from_artifacts(&a2, mac)
-    })?);
-    let batching = if opts.adaptive {
-        "adaptive (queue-depth)".to_string()
-    } else {
-        format!("batch {} deadline {:?}", opts.batch_size, opts.batch_deadline)
+    let model = flags.get("model").unwrap_or("sentiment");
+    let core = match model {
+        "sentiment" => {
+            let a = Arc::new(SentimentArtifacts::load(artifacts_dir())?);
+            let vocab = a.emb_q.len() as i64;
+            if opts.adaptive {
+                // probe the mapped model for its real fused-lane budget so
+                // adaptive batches never exceed what one pass can fuse
+                opts.adaptive_cap =
+                    SentimentNetwork::from_artifacts(&a, mac)?.max_batch_lanes();
+            }
+            let a2 = Arc::clone(&a);
+            Arc::new(ServeCore::start_with(opts.clone(), vocab, move || {
+                SentimentNetwork::from_artifacts(&a2, mac)
+            })?)
+        }
+        "digits" => {
+            anyhow::ensure!(
+                cfg.listen.is_some(),
+                "digits serving is framed-protocol only: pass --listen <addr> \
+                 (images do not fit the stdio line protocol)"
+            );
+            let a = Arc::new(DigitsArtifacts::load(artifacts_dir())?);
+            if opts.adaptive {
+                opts.adaptive_cap = DigitsNetwork::from_artifacts(&a, mac)?.max_batch_lanes();
+            }
+            let a2 = Arc::clone(&a);
+            Arc::new(ServeCore::start_with(opts.clone(), 1, move || {
+                DigitsNetwork::from_artifacts(&a2, mac)
+            })?)
+        }
+        other => anyhow::bail!("unknown --model '{other}' (sentiment|digits)"),
     };
+    let batching = opts.batching_label();
     match cfg.listen.as_deref() {
         Some(addr) => {
             let handle = serve_tcp(addr, Arc::clone(&core))?;
             eprintln!(
-                "impulse serve: {} workers on tcp://{} ({batching}{}); \
-                 binary frame protocol v{} (docs/PROTOCOL.md)",
+                "impulse serve: {} {model} workers on tcp://{} ({batching}{}); \
+                 binary frame protocol v{} (docs/PROTOCOL.md); \
+                 SIGINT/SIGTERM drains and exits",
                 opts.workers,
                 handle.local_addr(),
                 if opts.pipeline { ", pipelined" } else { "" },
                 impulse::serve::PROTOCOL_VERSION,
             );
-            // Serve until the process is killed or the listener fails.
-            handle.wait();
+            serve_until_signalled(handle);
         }
         None => {
             let session = core.client()?;
@@ -98,6 +137,22 @@ pub fn run(args: &[String]) -> Result<()> {
     }
     core.shutdown();
     Ok(())
+}
+
+/// Serve until SIGINT/SIGTERM arrives (→ drain and stop) or the
+/// listener fails on its own. This is the graceful-shutdown path:
+/// `TcpServeHandle::stop` winds down the accept loop and joins every
+/// connection, whose responders flush all in-flight responses first.
+fn serve_until_signalled(handle: TcpServeHandle) {
+    let stop = install_shutdown_handler();
+    while !stop.load(Ordering::SeqCst) && !handle.is_finished() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    if stop.load(Ordering::SeqCst) {
+        eprintln!("impulse serve: shutdown signal — draining in-flight requests…");
+    }
+    handle.stop();
+    eprintln!("impulse serve: stopped");
 }
 
 /// The line-oriented stdin/stdout loop over a shared-core session.
@@ -131,8 +186,13 @@ fn run_stdio(session: &ClientSession) -> Result<()> {
             eprintln!("request {id}: no word ids");
             continue;
         }
-        session.submit(id, &word_ids)?;
-        pending += 1;
+        if let Err(e) = session.submit(id, &word_ids) {
+            // e.g. an oversized request — report it like any other
+            // per-request failure and keep the loop alive
+            writeln!(stdout, "{id} ERROR {e:#}")?;
+        } else {
+            pending += 1;
+        }
         // drain whatever is ready without blocking the input loop
         while let Some(r) = session.try_recv() {
             pending -= 1;

@@ -5,6 +5,9 @@
 //! ("scalable to larger networks by employing a distributed
 //! multi-macro architecture"):
 //!
+//! - [`workload`] — the model seam: any [`Workload`] (sentiment FC
+//!   stack, digits conv network, …) with a fused-lane batched path
+//!   serves through the same batcher/router/adaptive machinery.
 //! - [`scheduler`] — turns spike activity into per-macro instruction
 //!   streams, exploiting input sparsity (spikes → instructions is the
 //!   macro's energy-proportionality mechanism).
@@ -22,9 +25,11 @@
 pub mod pipeline;
 pub mod router;
 pub mod scheduler;
+pub mod workload;
 
 pub use pipeline::{run_stages, LayerPipeline};
 pub use router::{
     InferenceServer, Request, Response, ServerOptions, ServerStats, ShardRouter, Submitter,
 };
 pub use scheduler::{FusedTimestepPlan, SpikeScheduler, TimestepPlan};
+pub use workload::{Workload, WorkloadInput, WorkloadKind, WorkloadOutput};

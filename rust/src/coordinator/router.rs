@@ -11,13 +11,17 @@
 //!    `batch_deadline`) and hands each batch to the *least-loaded*
 //!    worker shard;
 //! 3. **workers** — each worker drains its own shard queue and, when
-//!    empty, steals from the most-loaded peer; batches run through
-//!    `SentimentNetwork::run_reviews_batched` (fused union AccW2V
-//!    streams), singleton batches optionally through the wavefront
-//!    pipeline.
+//!    empty, steals from the most-loaded peer; batches run through the
+//!    workload's fused-lane batched path ([`Workload::run_batched`] —
+//!    union AccW2V streams), singleton batches optionally through the
+//!    wavefront pipeline.
+//!
+//! The server is workload-generic: any model implementing
+//! [`Workload`] (today `SentimentNetwork` and `DigitsNetwork`) serves
+//! through the same batcher, shard router, and adaptive sizing.
 
+use super::workload::{Workload, WorkloadInput, WorkloadKind};
 use crate::metrics::LatencyStats;
-use crate::snn::SentimentNetwork;
 use crate::Result;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -28,15 +32,35 @@ use std::time::{Duration, Instant};
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
-    pub word_ids: Vec<i64>,
+    /// The workload-tagged input (word ids or an image).
+    pub input: WorkloadInput,
+}
+
+impl Request {
+    /// A sentiment request over a word-id sequence.
+    pub fn words(id: u64, word_ids: Vec<i64>) -> Request {
+        Request { id, input: WorkloadInput::Words(word_ids) }
+    }
+
+    /// A digits request over an `h`×`w` image (row-major pixels).
+    pub fn image(id: u64, h: usize, w: usize, pixels: Vec<f32>) -> Request {
+        Request { id, input: WorkloadInput::Image { h, w, pixels } }
+    }
 }
 
 /// One classification response.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    /// Which workload family served this request (selects the wire
+    /// encoding on the serve path).
+    pub kind: WorkloadKind,
     pub pred: u8,
+    /// Headline potential (output neuron / winning class).
     pub v_out: i64,
+    /// All output potentials (length 1 for sentiment, 10 for digits;
+    /// empty on errors).
+    pub v_all: Vec<i64>,
     pub cycles: u64,
     pub latency: std::time::Duration,
     pub worker: usize,
@@ -80,6 +104,20 @@ pub struct ServerOptions {
     /// workers instead of serializing as chunks on one; always clamped
     /// to [`crate::macro_sim::MAX_FUSED_LANES`].
     pub adaptive_cap: usize,
+}
+
+impl ServerOptions {
+    /// Human-readable description of the configured batching mode
+    /// (shared by the `eval`/`serve` CLI banners).
+    pub fn batching_label(&self) -> String {
+        if self.adaptive {
+            "adaptive (queue-depth)".to_string()
+        } else if self.batch_size > 1 {
+            format!("batch {} deadline {:?}", self.batch_size, self.batch_deadline)
+        } else {
+            "unbatched".to_string()
+        }
+    }
 }
 
 impl Default for ServerOptions {
@@ -225,7 +263,9 @@ impl<T> ShardRouter<T> {
     }
 }
 
-/// A fixed-pool inference server over replicated sentiment networks.
+/// A fixed-pool inference server over replicated [`Workload`] model
+/// instances (sentiment or digits — the serving machinery is
+/// workload-generic).
 pub struct InferenceServer {
     tx: mpsc::Sender<Queued>,
     rx_out: mpsc::Receiver<Response>,
@@ -236,9 +276,10 @@ pub struct InferenceServer {
 
 impl InferenceServer {
     /// Spawn `n_workers` workers with default (unbatched) options.
-    pub fn start<F>(n_workers: usize, factory: F) -> Result<Self>
+    pub fn start<W, F>(n_workers: usize, factory: F) -> Result<Self>
     where
-        F: Fn() -> Result<SentimentNetwork> + Send + Sync + 'static,
+        W: Workload,
+        F: Fn() -> Result<W> + Send + Sync + 'static,
     {
         Self::start_with(
             ServerOptions {
@@ -250,10 +291,11 @@ impl InferenceServer {
     }
 
     /// Spawn the batcher and worker pool described by `opts`, each
-    /// worker building its own network replica via `factory`.
-    pub fn start_with<F>(opts: ServerOptions, factory: F) -> Result<Self>
+    /// worker building its own model replica via `factory`.
+    pub fn start_with<W, F>(opts: ServerOptions, factory: F) -> Result<Self>
     where
-        F: Fn() -> Result<SentimentNetwork> + Send + Sync + 'static,
+        W: Workload,
+        F: Fn() -> Result<W> + Send + Sync + 'static,
     {
         assert!(opts.workers >= 1);
         assert!(opts.batch_size >= 1);
@@ -409,8 +451,8 @@ impl InferenceServer {
 /// per request. Every submitted request yields exactly one response —
 /// inference errors come back with [`Response::err`] set instead of
 /// being dropped (the serve loop's drain bookkeeping relies on this).
-fn serve_batch(
-    net: &mut SentimentNetwork,
+fn serve_batch<W: Workload>(
+    net: &mut W,
     worker: usize,
     opts: &ServerOptions,
     batch: Vec<Queued>,
@@ -420,14 +462,14 @@ fn serve_batch(
     let n = batch.len();
     let outcome = if n == 1 {
         let r = if opts.pipeline {
-            net.run_review_pipelined(&batch[0].req.word_ids)
+            net.run_one_pipelined(&batch[0].req.input)
         } else {
-            net.run_review(&batch[0].req.word_ids)
+            net.run_one(&batch[0].req.input)
         };
         r.map(|r| vec![r])
     } else {
-        let seqs: Vec<&[i64]> = batch.iter().map(|q| q.req.word_ids.as_slice()).collect();
-        net.run_reviews_batched(&seqs)
+        let inputs: Vec<&WorkloadInput> = batch.iter().map(|q| &q.req.input).collect();
+        net.run_batched(&inputs)
     };
     match outcome {
         Ok(results) => {
@@ -437,8 +479,10 @@ fn serve_batch(
                 inflight.fetch_sub(1, Ordering::SeqCst);
                 let _ = tx_out.send(Response {
                     id: q.req.id,
+                    kind: q.req.input.kind(),
                     pred: r.pred,
                     v_out: r.v_out,
+                    v_all: r.v_all,
                     cycles: r.cycles,
                     latency: q.t0.elapsed(),
                     worker,
@@ -449,44 +493,28 @@ fn serve_batch(
         }
         Err(e) if n == 1 => {
             inflight.fetch_sub(1, Ordering::SeqCst);
-            let _ = tx_out.send(Response {
-                id: batch[0].req.id,
-                pred: 0,
-                v_out: 0,
-                cycles: 0,
-                latency: batch[0].t0.elapsed(),
-                worker,
-                batch_size: 1,
-                err: Some(format!("{e:#}")),
-            });
+            let _ = tx_out.send(err_response(&batch[0], worker, &e));
         }
         Err(_) => {
             // A bad request poisons the fused batch; retry each request
             // alone so its batchmates still succeed.
             for q in &batch {
-                let res = net.run_review(&q.req.word_ids);
+                let res = net.run_one(&q.req.input);
                 inflight.fetch_sub(1, Ordering::SeqCst);
                 let resp = match res {
                     Ok(r) => Response {
                         id: q.req.id,
+                        kind: q.req.input.kind(),
                         pred: r.pred,
                         v_out: r.v_out,
+                        v_all: r.v_all,
                         cycles: r.cycles,
                         latency: q.t0.elapsed(),
                         worker,
                         batch_size: 1,
                         err: None,
                     },
-                    Err(e) => Response {
-                        id: q.req.id,
-                        pred: 0,
-                        v_out: 0,
-                        cycles: 0,
-                        latency: q.t0.elapsed(),
-                        worker,
-                        batch_size: 1,
-                        err: Some(format!("{e:#}")),
-                    },
+                    Err(e) => err_response(q, worker, &e),
                 };
                 let _ = tx_out.send(resp);
             }
@@ -494,10 +522,27 @@ fn serve_batch(
     }
 }
 
+/// An error response for a failed request (numeric fields zeroed).
+fn err_response(q: &Queued, worker: usize, e: &anyhow::Error) -> Response {
+    Response {
+        id: q.req.id,
+        kind: q.req.input.kind(),
+        pred: 0,
+        v_out: 0,
+        v_all: Vec::new(),
+        cycles: 0,
+        latency: q.t0.elapsed(),
+        worker,
+        batch_size: 1,
+        err: Some(format!("{e:#}")),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::macro_sim::MacroConfig;
+    use crate::snn::{DigitsNetwork, SentimentNetwork};
 
     fn mini_factory(
         seed: u64,
@@ -508,14 +553,75 @@ mod tests {
         }
     }
 
+    fn digits_factory(
+        seed: u64,
+    ) -> impl Fn() -> Result<DigitsNetwork> + Send + Sync + 'static {
+        move || {
+            let a = crate::data::DigitsArtifacts::synthetic(seed);
+            DigitsNetwork::from_artifacts(&a, MacroConfig::fast())
+        }
+    }
+
+    /// The workload-generic server must serve the digits conv network
+    /// through the same batcher/worker machinery, bit-identical to
+    /// solo `run_image` runs — including under adaptive batching.
+    #[test]
+    fn digits_workload_serves_batched_and_matches_solo() {
+        let a = crate::data::DigitsArtifacts::synthetic(19);
+        let mut solo = DigitsNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let want: Vec<_> = a
+            .test_x
+            .iter()
+            .take(4)
+            .map(|img| solo.run_image(img).unwrap())
+            .collect();
+
+        let server = InferenceServer::start_with(
+            ServerOptions {
+                workers: 2,
+                adaptive: true,
+                ..ServerOptions::default()
+            },
+            digits_factory(19),
+        )
+        .unwrap();
+        let reqs: Vec<Request> = a
+            .test_x
+            .iter()
+            .take(4)
+            .enumerate()
+            .map(|(i, img)| Request::image(i as u64, 28, 28, img.clone()))
+            .collect();
+        let (responses, stats) = server.run_batch(reqs).unwrap();
+        assert_eq!(stats.completed, 4);
+        for (r, w) in responses.iter().zip(&want) {
+            assert!(r.err.is_none(), "req {} failed: {:?}", r.id, r.err);
+            assert_eq!(r.kind, WorkloadKind::Digits);
+            assert_eq!(r.pred, w.pred, "req {}", r.id);
+            assert_eq!(r.v_all, w.v_out, "req {}: served vs solo potentials", r.id);
+            assert_eq!(r.v_out, w.v_out[w.pred as usize]);
+        }
+        server.shutdown();
+    }
+
+    /// A words request on a digits server errs per request instead of
+    /// wedging the pool (and vice versa the workload seam holds).
+    #[test]
+    fn foreign_input_kind_yields_error_response() {
+        let server = InferenceServer::start(1, digits_factory(3)).unwrap();
+        let (responses, _) = server
+            .run_batch(vec![Request::words(0, vec![1, 2, 3])])
+            .unwrap();
+        assert!(responses[0].err.is_some());
+        assert_eq!(server.inflight(), 0);
+        server.shutdown();
+    }
+
     #[test]
     fn batch_completes_with_consistent_results() {
         let server = InferenceServer::start(3, mini_factory(7)).unwrap();
         let reqs: Vec<Request> = (0..12)
-            .map(|i| Request {
-                id: i,
-                word_ids: vec![(i as i64) % 20, 3, 5],
-            })
+            .map(|i| Request::words(i, vec![(i as i64) % 20, 3, 5]))
             .collect();
         let (responses, stats) = server.run_batch(reqs.clone()).unwrap();
         assert_eq!(responses.len(), 12);
@@ -538,8 +644,8 @@ mod tests {
         let server = InferenceServer::start(1, mini_factory(9)).unwrap();
         let (responses, _) = server
             .run_batch(vec![
-                Request { id: 0, word_ids: vec![1] },
-                Request { id: 1, word_ids: vec![2] },
+                Request::words(0, vec![1]),
+                Request::words(1, vec![2]),
             ])
             .unwrap();
         assert!(responses.iter().all(|r| r.worker == 0));
@@ -549,10 +655,7 @@ mod tests {
     #[test]
     fn micro_batched_results_match_unbatched() {
         let reqs: Vec<Request> = (0..20)
-            .map(|i| Request {
-                id: i,
-                word_ids: vec![(i as i64) % 20, (3 * i as i64) % 20, 7],
-            })
+            .map(|i| Request::words(i, vec![(i as i64) % 20, (3 * i as i64) % 20, 7]))
             .collect();
         let plain = InferenceServer::start(2, mini_factory(11)).unwrap();
         let (want, _) = plain.run_batch(reqs.clone()).unwrap();
@@ -581,10 +684,7 @@ mod tests {
     #[test]
     fn pipelined_singletons_match_sequential() {
         let reqs: Vec<Request> = (0..6)
-            .map(|i| Request {
-                id: i,
-                word_ids: vec![(i as i64) % 20, 2, 9, 4],
-            })
+            .map(|i| Request::words(i, vec![(i as i64) % 20, 2, 9, 4]))
             .collect();
         let plain = InferenceServer::start(1, mini_factory(21)).unwrap();
         let (want, _) = plain.run_batch(reqs.clone()).unwrap();
@@ -621,9 +721,9 @@ mod tests {
         // vocab is 20 in the mini artifacts: id 999 is out of range and
         // must come back as an error response, not poison its batch.
         let reqs = vec![
-            Request { id: 0, word_ids: vec![1, 2] },
-            Request { id: 1, word_ids: vec![999] },
-            Request { id: 2, word_ids: vec![3] },
+            Request::words(0, vec![1, 2]),
+            Request::words(1, vec![999]),
+            Request::words(2, vec![3]),
         ];
         let (responses, _) = server.run_batch(reqs).unwrap();
         assert_eq!(responses.len(), 3);
@@ -640,10 +740,7 @@ mod tests {
     #[test]
     fn adaptive_batching_matches_unbatched() {
         let reqs: Vec<Request> = (0..24)
-            .map(|i| Request {
-                id: i,
-                word_ids: vec![(i as i64) % 20, (5 * i as i64) % 20, 13],
-            })
+            .map(|i| Request::words(i, vec![(i as i64) % 20, (5 * i as i64) % 20, 13]))
             .collect();
         let plain = InferenceServer::start(2, mini_factory(31)).unwrap();
         let (want, _) = plain.run_batch(reqs.clone()).unwrap();
@@ -689,10 +786,7 @@ mod tests {
         )
         .unwrap();
         let reqs: Vec<Request> = (0..10)
-            .map(|i| Request {
-                id: i,
-                word_ids: vec![(i as i64) % 20],
-            })
+            .map(|i| Request::words(i, vec![(i as i64) % 20]))
             .collect();
         let (responses, _) = server.run_batch(reqs).unwrap();
         assert_eq!(responses.len(), 10);
@@ -723,11 +817,8 @@ mod tests {
                 let s = server.submitter();
                 std::thread::spawn(move || {
                     for i in 0..per_thread {
-                        s.submit(Request {
-                            id: t * 100 + i,
-                            word_ids: vec![(i as i64) % 20, 2],
-                        })
-                        .unwrap();
+                        s.submit(Request::words(t * 100 + i, vec![(i as i64) % 20, 2]))
+                            .unwrap();
                     }
                 })
             })

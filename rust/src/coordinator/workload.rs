@@ -1,0 +1,224 @@
+//! The workload abstraction: what the coordinator's batcher and
+//! worker pool need from a servable model.
+//!
+//! PR 1/2 hard-wired the router to `SentimentNetwork`; this trait is
+//! the seam that makes every network with a fused-lane batched path
+//! servable through the same `InferenceServer`/`ShardRouter`/adaptive
+//! sizing machinery. Two workloads ship today: the sentiment FC stack
+//! (word-id sequences) and the digits conv network (28×28 images).
+
+use crate::snn::{DigitsNetwork, SentimentNetwork};
+use crate::Result;
+
+/// One request's input, workload-tagged. The coordinator treats it as
+/// opaque; workloads reject kinds they cannot serve.
+#[derive(Clone, Debug)]
+pub enum WorkloadInput {
+    /// A word-id sequence (sentiment; ids < 0 are padding).
+    Words(Vec<i64>),
+    /// A grayscale image, row-major (digits; 28×28 on the mapped net).
+    Image {
+        /// Image height in pixels.
+        h: usize,
+        /// Image width in pixels.
+        w: usize,
+        /// `h·w` pixel intensities, row-major.
+        pixels: Vec<f32>,
+    },
+}
+
+impl WorkloadInput {
+    /// Which workload family this input belongs to.
+    pub fn kind(&self) -> WorkloadKind {
+        match self {
+            WorkloadInput::Words(_) => WorkloadKind::Sentiment,
+            WorkloadInput::Image { .. } => WorkloadKind::Digits,
+        }
+    }
+}
+
+/// Workload families servable by the coordinator (used to pick the
+/// response wire encoding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    /// Sentiment FC stack: word ids in, binary prediction out.
+    Sentiment,
+    /// Digits conv network: image in, 10-class prediction out.
+    Digits,
+}
+
+/// One request's result in workload-neutral form.
+#[derive(Clone, Debug)]
+pub struct WorkloadOutput {
+    /// Predicted label (sentiment: 1 = positive; digits: 0–9).
+    pub pred: u8,
+    /// Headline potential: the output neuron (sentiment) or the
+    /// winning class (digits).
+    pub v_out: i64,
+    /// All output potentials (length 1 for sentiment, 10 for digits).
+    pub v_all: Vec<i64>,
+    /// Macro cycles attributed to this request (honest share of its
+    /// fused batch).
+    pub cycles: u64,
+}
+
+/// A model servable by the coordinator's micro-batching worker pool:
+/// one request at a time, a whole micro-batch on fused lanes, and the
+/// fused-lane budget the adaptive batcher sizes against. Batched
+/// execution must be bit-identical per lane to `run_one`.
+pub trait Workload: Send + 'static {
+    /// Serve one request.
+    fn run_one(&mut self, input: &WorkloadInput) -> Result<WorkloadOutput>;
+
+    /// Serve one request with layer-pipelined execution, where the
+    /// workload supports it (defaults to [`Workload::run_one`]).
+    fn run_one_pipelined(&mut self, input: &WorkloadInput) -> Result<WorkloadOutput> {
+        self.run_one(input)
+    }
+
+    /// Serve a micro-batch on fused lanes (chunking internally when
+    /// `inputs` exceeds the lane budget).
+    fn run_batched(&mut self, inputs: &[&WorkloadInput]) -> Result<Vec<WorkloadOutput>>;
+
+    /// Widest batch one pass through the macro pool can fuse.
+    fn max_batch_lanes(&self) -> usize;
+}
+
+fn want_words(input: &WorkloadInput) -> Result<&[i64]> {
+    match input {
+        WorkloadInput::Words(ids) => Ok(ids),
+        WorkloadInput::Image { .. } => {
+            anyhow::bail!("sentiment workload cannot serve image requests")
+        }
+    }
+}
+
+impl Workload for SentimentNetwork {
+    fn run_one(&mut self, input: &WorkloadInput) -> Result<WorkloadOutput> {
+        let r = self.run_review(want_words(input)?)?;
+        Ok(WorkloadOutput {
+            pred: r.pred,
+            v_out: r.v_out,
+            v_all: vec![r.v_out],
+            cycles: r.cycles,
+        })
+    }
+
+    fn run_one_pipelined(&mut self, input: &WorkloadInput) -> Result<WorkloadOutput> {
+        let r = self.run_review_pipelined(want_words(input)?)?;
+        Ok(WorkloadOutput {
+            pred: r.pred,
+            v_out: r.v_out,
+            v_all: vec![r.v_out],
+            cycles: r.cycles,
+        })
+    }
+
+    fn run_batched(&mut self, inputs: &[&WorkloadInput]) -> Result<Vec<WorkloadOutput>> {
+        let seqs: Vec<&[i64]> =
+            inputs.iter().map(|i| want_words(i)).collect::<Result<_>>()?;
+        Ok(self
+            .run_reviews_batched(&seqs)?
+            .into_iter()
+            .map(|r| WorkloadOutput {
+                pred: r.pred,
+                v_out: r.v_out,
+                v_all: vec![r.v_out],
+                cycles: r.cycles,
+            })
+            .collect())
+    }
+
+    fn max_batch_lanes(&self) -> usize {
+        SentimentNetwork::max_batch_lanes(self)
+    }
+}
+
+fn want_image(input: &WorkloadInput) -> Result<&[f32]> {
+    match input {
+        WorkloadInput::Image { h, w, pixels } => {
+            anyhow::ensure!(
+                *h == 28 && *w == 28 && pixels.len() == 28 * 28,
+                "digits workload needs 28×28 images, got {h}×{w} ({} pixels)",
+                pixels.len()
+            );
+            Ok(pixels)
+        }
+        WorkloadInput::Words(_) => {
+            anyhow::bail!("digits workload cannot serve word-id requests")
+        }
+    }
+}
+
+impl Workload for DigitsNetwork {
+    fn run_one(&mut self, input: &WorkloadInput) -> Result<WorkloadOutput> {
+        let r = self.run_image(want_image(input)?)?;
+        let v_out = r.v_out[r.pred as usize];
+        Ok(WorkloadOutput {
+            pred: r.pred,
+            v_out,
+            v_all: r.v_out,
+            cycles: r.cycles,
+        })
+    }
+
+    fn run_batched(&mut self, inputs: &[&WorkloadInput]) -> Result<Vec<WorkloadOutput>> {
+        let imgs: Vec<&[f32]> =
+            inputs.iter().map(|i| want_image(i)).collect::<Result<_>>()?;
+        Ok(self
+            .run_images_batched(&imgs)?
+            .into_iter()
+            .map(|r| {
+                let v_out = r.v_out[r.pred as usize];
+                WorkloadOutput {
+                    pred: r.pred,
+                    v_out,
+                    v_all: r.v_out,
+                    cycles: r.cycles,
+                }
+            })
+            .collect())
+    }
+
+    fn max_batch_lanes(&self) -> usize {
+        DigitsNetwork::max_batch_lanes(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DigitsArtifacts, SentimentArtifacts};
+    use crate::macro_sim::MacroConfig;
+
+    #[test]
+    fn workloads_reject_foreign_inputs() {
+        let a = SentimentArtifacts::synthetic(3);
+        let mut s = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let img = WorkloadInput::Image { h: 28, w: 28, pixels: vec![0.0; 28 * 28] };
+        assert!(s.run_one(&img).is_err());
+
+        let d = DigitsArtifacts::synthetic(3);
+        let mut net = DigitsNetwork::from_artifacts(&d, MacroConfig::fast()).unwrap();
+        assert!(net.run_one(&WorkloadInput::Words(vec![1, 2])).is_err());
+        let bad = WorkloadInput::Image { h: 4, w: 4, pixels: vec![0.0; 16] };
+        assert!(net.run_one(&bad).is_err());
+    }
+
+    #[test]
+    fn digits_workload_serves_images_and_reports_lanes() {
+        let d = DigitsArtifacts::synthetic(5);
+        let mut net = DigitsNetwork::from_artifacts(&d, MacroConfig::fast()).unwrap();
+        assert!(net.max_batch_lanes() >= 2);
+        let input = WorkloadInput::Image {
+            h: 28,
+            w: 28,
+            pixels: d.test_x[0].clone(),
+        };
+        let out = Workload::run_one(&mut net, &input).unwrap();
+        assert!(out.pred < 10);
+        assert_eq!(out.v_all.len(), 10);
+        assert_eq!(out.v_out, out.v_all[out.pred as usize]);
+        assert_eq!(input.kind(), WorkloadKind::Digits);
+    }
+}

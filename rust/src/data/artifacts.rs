@@ -143,6 +143,46 @@ pub struct DigitsArtifacts {
 }
 
 impl DigitsArtifacts {
+    /// A deterministic synthetic digits bundle (4 channels instead of
+    /// the paper's 14, for test speed) with a handful of synthetic
+    /// test images — lets the batched digits path run in tests,
+    /// benches, and the CLI without the compiled artifact bundle.
+    pub fn synthetic(seed: u64) -> Self {
+        let mut rng = crate::bits::XorShiftRng::new(seed);
+        let c = 4usize;
+        let k1: Vec<f32> = (0..9 * c).map(|_| (rng.gen_f64() - 0.3) as f32).collect();
+        let mut kernel = |n: usize| (0..n).map(|_| rng.gen_i64(-8, 8)).collect::<Vec<i64>>();
+        let k2 = kernel(9 * c * c);
+        let k3 = kernel(9 * c * c);
+        let w_fc1: Vec<Vec<i64>> = (0..9 * c)
+            .map(|_| (0..20).map(|_| rng.gen_i64(-8, 8)).collect())
+            .collect();
+        let w_fc2: Vec<Vec<i64>> = (0..20)
+            .map(|_| (0..10).map(|_| rng.gen_i64(-8, 8)).collect())
+            .collect();
+        let n_imgs = 8usize;
+        let test_x: Vec<Vec<f32>> = (0..n_imgs)
+            .map(|_| (0..28 * 28).map(|_| rng.gen_f64() as f32).collect())
+            .collect();
+        let test_y: Vec<u8> = (0..n_imgs).map(|_| (rng.gen_i64(0, 9)) as u8).collect();
+        Self {
+            k1,
+            k1_shape: vec![3, 3, 1, c],
+            thr_c1: 0.8,
+            k2,
+            k2_shape: vec![3, 3, c, c],
+            k3,
+            k3_shape: vec![3, 3, c, c],
+            w_fc1,
+            w_fc2,
+            thr_c2: 30,
+            thr_c3: 30,
+            thr_f1: 40,
+            test_x,
+            test_y,
+        }
+    }
+
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref();
         let d = dir.join("digits");

@@ -64,16 +64,23 @@ COMMANDS:
     infer --sample N                classify test review N
     infer --words "id id id"        classify a word-id sequence
     eval [--max N] [--xla-check]    evaluate the test set on the macro pool
-    serve [--listen ADDR | --stdio] [--workers N] [--batch B]
+    eval digits [--max N] [--batch B] [--adaptive]
+                                    evaluate the digits conv network on
+                                    fused batch lanes (the workload-
+                                    generic server path)
+    serve [--listen ADDR | --stdio] [--model sentiment|digits]
+          [--workers N] [--batch B]
           [--batch-deadline-us U] [--adaptive] [--pipeline]
                                     inference server: --listen serves the
                                     length-prefixed binary frame protocol
                                     (docs/PROTOCOL.md) to concurrent TCP
-                                    clients; --stdio (default) keeps the
+                                    clients and drains cleanly on SIGINT/
+                                    SIGTERM; --stdio (default) keeps the
                                     line loop. --batch fuses up to B
                                     requests into one instruction stream
                                     per tile; --adaptive sizes batches
-                                    from queue depth instead
+                                    from queue depth instead; --model
+                                    digits serves 28×28 image payloads
     shmoo                           print the Fig 8 Shmoo grid
     sweep [--neuron rmp|if|lif]     EDP vs sparsity sweep (Fig 11b)
     trace-vmem [--sample N]         Fig 10: output-neuron V_MEM trajectory

@@ -26,6 +26,13 @@ pub struct PixelAssignment {
 }
 
 /// Mapping of one conv layer onto a macro pool.
+///
+/// With `lanes > 1` (see [`ConvLayout::with_lanes`]) each output pixel
+/// owns one odd/even V-row *pair per batch lane* in its macro, so a
+/// fused AccW2V stream can broadcast one weight-row read to every
+/// lane's membrane potential — the conv analogue of the FC batching
+/// lanes. The per-macro pixel budget shrinks accordingly
+/// (`⌊13 / lanes⌋`) and the pool grows to compensate.
 #[derive(Clone, Debug)]
 pub struct ConvLayout {
     pub height: usize,
@@ -35,9 +42,11 @@ pub struct ConvLayout {
     pub ksize: usize,
     /// Channel groups of ≤ 12 output channels (weight slots).
     pub n_channel_groups: usize,
-    /// Pixels per macro (V-row-pair budget).
+    /// Pixels per macro (V-row-pair budget, already divided by lanes).
     pub pixels_per_macro: usize,
     pub const_rows: ConstRows,
+    /// Batch lanes co-resident per pixel (1 = classic layout).
+    lanes: usize,
 }
 
 impl ConvLayout {
@@ -68,7 +77,32 @@ impl ConvLayout {
             n_channel_groups: c_out.div_ceil(OUTPUTS_PER_TILE),
             pixels_per_macro,
             const_rows,
+            lanes: 1,
         })
+    }
+
+    /// The same geometry re-laid-out for `lanes` co-resident batch
+    /// lanes per pixel: pixel slot `p`, lane `b` lives in V-row pair
+    /// `(2(p·lanes + b), 2(p·lanes + b) + 1)`. Errs when the V_MEM
+    /// row budget below the constant block cannot host even one pixel
+    /// at that lane count.
+    pub fn with_lanes(&self, lanes: usize) -> Result<Self, MapError> {
+        let pair_budget = self.const_rows.first_row() / 2;
+        if lanes == 0 || lanes > pair_budget {
+            return Err(MapError::VmemOverflow {
+                need: 2 * lanes.max(1),
+                have: self.const_rows.first_row(),
+            });
+        }
+        let mut l = self.clone();
+        l.lanes = lanes;
+        l.pixels_per_macro = pair_budget / lanes;
+        Ok(l)
+    }
+
+    /// Batch lanes this layout hosts per pixel (1 = classic layout).
+    pub fn lanes(&self) -> usize {
+        self.lanes
     }
 
     /// Fan-in (W rows used).
@@ -92,15 +126,31 @@ impl ConvLayout {
         (ky * self.ksize + kx) * self.c_in + c
     }
 
-    /// The pixel's assignment within a channel group.
+    /// The pixel's assignment within a channel group (lane 0).
     pub fn assign(&self, y: usize, x: usize, group: usize) -> PixelAssignment {
+        self.assign_lane(y, x, group, 0)
+    }
+
+    /// Where batch lane `lane` of pixel (y, x) lives within a channel
+    /// group. All lanes of one pixel share a macro (so a fused AccW2V
+    /// can broadcast one weight read across them); the macro id does
+    /// not depend on the lane.
+    pub fn assign_lane(
+        &self,
+        y: usize,
+        x: usize,
+        group: usize,
+        lane: usize,
+    ) -> PixelAssignment {
+        debug_assert!(lane < self.lanes, "lane {lane} >= {}", self.lanes);
         let p = y * self.width + x;
         let macro_in_group = p / self.pixels_per_macro;
         let slot = p % self.pixels_per_macro;
+        let pair = slot * self.lanes + lane;
         PixelAssignment {
             macro_id: group * self.macros_per_group() + macro_in_group,
-            v_row_odd: 2 * slot,
-            v_row_even: 2 * slot + 1,
+            v_row_odd: 2 * pair,
+            v_row_even: 2 * pair + 1,
         }
     }
 
@@ -213,6 +263,42 @@ mod tests {
         let a0 = l.assign(0, 0, 0);
         // group index 0 only exists here (c_out=4 → 1 group); synthetic:
         assert_eq!(a0.macro_id, 0);
+    }
+
+    #[test]
+    fn lane_layout_shrinks_pixel_budget_and_stays_collision_free() {
+        let base = ConvLayout::new(6, 6, 3, 4, 3).unwrap();
+        assert_eq!(base.lanes(), 1);
+        let l = base.with_lanes(4).unwrap();
+        assert_eq!(l.lanes(), 4);
+        assert_eq!(l.pixels_per_macro, 13 / 4);
+        assert!(l.macros_per_group() > base.macros_per_group());
+        // every (pixel, lane) pair gets a distinct V-row pair below
+        // the constant block, and lanes of one pixel share a macro
+        let mut seen = std::collections::HashSet::new();
+        for y in 0..6 {
+            for x in 0..6 {
+                let m0 = l.assign_lane(y, x, 0, 0).macro_id;
+                for b in 0..4 {
+                    let a = l.assign_lane(y, x, 0, b);
+                    assert_eq!(a.macro_id, m0, "lanes of one pixel must co-reside");
+                    assert_eq!(a.v_row_even, a.v_row_odd + 1);
+                    assert!(a.v_row_even < l.const_rows.first_row());
+                    assert!(seen.insert((a.macro_id, a.v_row_odd)));
+                }
+            }
+        }
+        // lane 0 of the 1-lane layout is the classic assignment
+        let a = base.assign(2, 3, 0);
+        assert_eq!(a, base.assign_lane(2, 3, 0, 0));
+    }
+
+    #[test]
+    fn lane_overflow_rejected() {
+        let l = ConvLayout::new(4, 4, 2, 4, 3).unwrap();
+        assert!(l.with_lanes(0).is_err());
+        assert!(l.with_lanes(14).is_err());
+        assert_eq!(l.with_lanes(13).unwrap().pixels_per_macro, 1);
     }
 
     #[test]

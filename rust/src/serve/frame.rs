@@ -48,6 +48,10 @@ pub enum PayloadType {
     InferRequest,
     /// Server → client: successful classification result.
     InferResponse,
+    /// Client → server: image to classify on the digits workload.
+    DigitsInferRequest,
+    /// Server → client: digits classification result (10-class).
+    DigitsInferResponse,
     /// Server → client: request- or connection-level failure.
     Error,
 }
@@ -60,6 +64,8 @@ impl PayloadType {
             PayloadType::HelloAck => 0x02,
             PayloadType::InferRequest => 0x10,
             PayloadType::InferResponse => 0x11,
+            PayloadType::DigitsInferRequest => 0x12,
+            PayloadType::DigitsInferResponse => 0x13,
             PayloadType::Error => 0x7F,
         }
     }
@@ -71,6 +77,8 @@ impl PayloadType {
             0x02 => Some(PayloadType::HelloAck),
             0x10 => Some(PayloadType::InferRequest),
             0x11 => Some(PayloadType::InferResponse),
+            0x12 => Some(PayloadType::DigitsInferRequest),
+            0x13 => Some(PayloadType::DigitsInferResponse),
             0x7F => Some(PayloadType::Error),
             _ => None,
         }
@@ -99,6 +107,10 @@ pub enum ErrorCode {
     EmptyRequest,
     /// Server-side internal failure (e.g. shutting down).
     Internal,
+    /// The request exceeds a per-request limit (e.g. more than 65 535
+    /// word ids — the u16 count field's ceiling). Rejected instead of
+    /// silently truncating into a wrong-but-valid frame.
+    RequestTooLarge,
 }
 
 impl ErrorCode {
@@ -114,6 +126,7 @@ impl ErrorCode {
             ErrorCode::InferenceFailed => 7,
             ErrorCode::EmptyRequest => 8,
             ErrorCode::Internal => 9,
+            ErrorCode::RequestTooLarge => 10,
         }
     }
 
@@ -129,6 +142,7 @@ impl ErrorCode {
             7 => Some(ErrorCode::InferenceFailed),
             8 => Some(ErrorCode::EmptyRequest),
             9 => Some(ErrorCode::Internal),
+            10 => Some(ErrorCode::RequestTooLarge),
             _ => None,
         }
     }

@@ -17,8 +17,10 @@
 
 use super::frame::{ErrorCode, Frame, FrameReader, PayloadType, WireError};
 use super::session::{
-    decode_infer_request, error_frame, negotiate, response_frame, ServeCore,
+    decode_digits_request, decode_infer_request, error_frame, negotiate, response_frame,
+    ServeCore,
 };
+use crate::coordinator::WorkloadInput;
 use crate::Result;
 use std::io::ErrorKind;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -29,6 +31,15 @@ use std::time::Duration;
 /// How long blocking reads and response waits poll before rechecking
 /// stop/drain conditions.
 const POLL: Duration = Duration::from_millis(50);
+
+/// Upper bound on one blocking socket write. Without it a client that
+/// stops reading (full kernel send buffer) wedges its responder thread
+/// in `write_all` forever — and with it the connection join, the
+/// accept-loop join, and the graceful SIGINT/SIGTERM drain. A client
+/// that cannot absorb a frame within this window is treated as dead
+/// and its connection torn down; slow-but-draining clients are fine
+/// (the timeout applies per write, not per connection).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// A running TCP serving front-end (accept loop + connections).
 pub struct TcpServeHandle {
@@ -58,6 +69,13 @@ impl TcpServeHandle {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
+    }
+
+    /// Whether the accept loop has already exited (e.g. the listener
+    /// failed) — lets a supervisor poll without blocking, as the CLI's
+    /// signal-driven shutdown loop does.
+    pub fn is_finished(&self) -> bool {
+        self.accept.as_ref().map(|h| h.is_finished()).unwrap_or(true)
     }
 }
 
@@ -119,6 +137,7 @@ fn write_frame(w: &Arc<Mutex<TcpStream>>, f: &Frame) -> std::io::Result<()> {
 fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(POLL))?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
     let (sender, responses) = core.client()?.split();
     let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let done = Arc::new(AtomicBool::new(false));
@@ -191,7 +210,7 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
                     break; // failed negotiation closes the connection
                 }
             },
-            PayloadType::InferRequest => {
+            PayloadType::InferRequest | PayloadType::DigitsInferRequest => {
                 if frame.version != negotiated {
                     let msg = format!(
                         "frame version {} after negotiating v{negotiated}",
@@ -203,28 +222,45 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
                     );
                     continue;
                 }
-                let ids = match decode_infer_request(&frame.payload) {
-                    Ok(ids) => ids,
-                    Err(e) => {
-                        let _ = write_frame(
-                            &writer,
-                            &error_frame(frame.request_id, e.code, &e.msg),
-                        );
-                        continue;
-                    }
+                // decode per payload type into the workload-tagged input
+                let input = match frame.payload_type {
+                    PayloadType::InferRequest => match decode_infer_request(&frame.payload) {
+                        Ok(ids) if ids.is_empty() => {
+                            let _ = write_frame(
+                                &writer,
+                                &error_frame(
+                                    frame.request_id,
+                                    ErrorCode::EmptyRequest,
+                                    "no word ids",
+                                ),
+                            );
+                            continue;
+                        }
+                        Ok(ids) => WorkloadInput::Words(ids),
+                        Err(e) => {
+                            let _ = write_frame(
+                                &writer,
+                                &error_frame(frame.request_id, e.code, &e.msg),
+                            );
+                            continue;
+                        }
+                    },
+                    _ => match decode_digits_request(&frame.payload) {
+                        Ok((h, w, pixels)) => WorkloadInput::Image { h, w, pixels },
+                        Err(e) => {
+                            let _ = write_frame(
+                                &writer,
+                                &error_frame(frame.request_id, e.code, &e.msg),
+                            );
+                            continue;
+                        }
+                    },
                 };
-                if ids.is_empty() {
-                    let _ = write_frame(
-                        &writer,
-                        &error_frame(frame.request_id, ErrorCode::EmptyRequest, "no word ids"),
-                    );
-                    continue;
-                }
                 // count before submitting: the response may land (and
                 // be decremented by the responder) the instant submit
                 // returns
                 outstanding.fetch_add(1, Ordering::SeqCst);
-                match sender.submit(frame.request_id, &ids) {
+                match sender.submit_input(frame.request_id, input) {
                     Ok(()) => {}
                     Err(e) => {
                         outstanding.fetch_sub(1, Ordering::SeqCst);
@@ -241,7 +277,10 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
                 }
             }
             // Server→client types are invalid from a client.
-            PayloadType::HelloAck | PayloadType::InferResponse | PayloadType::Error => {
+            PayloadType::HelloAck
+            | PayloadType::InferResponse
+            | PayloadType::DigitsInferResponse
+            | PayloadType::Error => {
                 let _ = write_frame(
                     &writer,
                     &error_frame(

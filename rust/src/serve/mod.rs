@@ -13,6 +13,9 @@
 //! - [`listener`] — the multi-client TCP accept loop
 //!   ([`serve_tcp`]), one reader + one responder thread per
 //!   connection.
+//! - [`signal`] — SIGINT/SIGTERM wiring so `impulse serve --listen`
+//!   drains in-flight requests and exits cleanly
+//!   ([`install_shutdown_handler`]).
 //!
 //! The `impulse serve` CLI fronts this module: `--listen <addr>`
 //! serves the binary protocol over TCP, `--stdio` (the default) keeps
@@ -27,6 +30,7 @@
 pub mod frame;
 pub mod listener;
 pub mod session;
+pub mod signal;
 
 pub use frame::{
     crc32, Decoded, ErrorCode, Frame, FrameReader, PayloadType, WireError, CRC_LEN,
@@ -34,8 +38,10 @@ pub use frame::{
 };
 pub use listener::{serve_tcp, TcpServeHandle};
 pub use session::{
-    decode_error, decode_infer_request, decode_infer_response, encode_infer_request,
-    error_frame, error_payload, hello_payload, negotiate, response_frame, ClientSession,
-    FrameClient, PayloadError, ServeCore, SessionSender, WireResponse,
+    decode_digits_request, decode_digits_response, decode_error, decode_infer_request,
+    decode_infer_response, encode_digits_request, encode_infer_request, error_frame,
+    error_payload, hello_payload, negotiate, response_frame, ClientSession, FrameClient,
+    PayloadError, ServeCore, SessionSender, WireDigitsResponse, WireResponse,
     MAX_WORDS_PER_REQUEST,
 };
+pub use signal::{install_shutdown_handler, shutdown_requested};

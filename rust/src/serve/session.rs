@@ -13,8 +13,10 @@
 //! — the layouts are specified byte-for-byte in `docs/PROTOCOL.md`.
 
 use super::frame::{ErrorCode, Frame, FrameReader, PayloadType, PROTOCOL_VERSION};
-use crate::coordinator::{InferenceServer, Request, Response, ServerOptions, Submitter};
-use crate::snn::SentimentNetwork;
+use crate::coordinator::{
+    InferenceServer, Request, Response, ServerOptions, Submitter, Workload, WorkloadInput,
+    WorkloadKind,
+};
 use crate::Result;
 use std::collections::HashMap;
 use std::net::TcpStream;
@@ -105,14 +107,28 @@ pub fn negotiate(payload: &[u8]) -> std::result::Result<u8, PayloadError> {
 /// Encode an `InferRequest` payload: `count:u16` then `count` i32
 /// word ids, all big-endian. Ids outside i32 range are saturated (the
 /// server clamps into the vocabulary anyway).
-pub fn encode_infer_request(word_ids: &[i64]) -> Vec<u8> {
-    assert!(word_ids.len() <= MAX_WORDS_PER_REQUEST, "too many word ids");
+///
+/// Requests with more than [`MAX_WORDS_PER_REQUEST`] word ids are
+/// rejected with [`ErrorCode::RequestTooLarge`] — writing
+/// `len() as u16` would silently wrap the count and emit a
+/// wrong-but-valid-looking frame the server then rejects as
+/// `Malformed` (or, worse, misparses).
+pub fn encode_infer_request(word_ids: &[i64]) -> std::result::Result<Vec<u8>, PayloadError> {
+    if word_ids.len() > MAX_WORDS_PER_REQUEST {
+        return Err(PayloadError::new(
+            ErrorCode::RequestTooLarge,
+            format!(
+                "{} word ids exceed the {MAX_WORDS_PER_REQUEST}-word request cap",
+                word_ids.len()
+            ),
+        ));
+    }
     let mut out = Vec::with_capacity(2 + 4 * word_ids.len());
     out.extend_from_slice(&(word_ids.len() as u16).to_be_bytes());
     for &w in word_ids {
         out.extend_from_slice(&(w.clamp(i32::MIN as i64, i32::MAX as i64) as i32).to_be_bytes());
     }
-    out
+    Ok(out)
 }
 
 /// Decode an `InferRequest` payload into word ids.
@@ -138,6 +154,128 @@ pub fn decode_infer_request(payload: &[u8]) -> std::result::Result<Vec<i64>, Pay
         ]) as i64);
     }
     Ok(ids)
+}
+
+/// Encode a `DigitsInferRequest` payload: `height:u8`, `width:u8`,
+/// then `height·width` pixels, each an IEEE-754 binary32 big-endian,
+/// row-major (see `docs/PROTOCOL.md` §4.5).
+pub fn encode_digits_request(
+    h: usize,
+    w: usize,
+    pixels: &[f32],
+) -> std::result::Result<Vec<u8>, PayloadError> {
+    if h == 0 || w == 0 {
+        return Err(PayloadError::new(ErrorCode::EmptyRequest, "zero-sized image"));
+    }
+    if h > u8::MAX as usize || w > u8::MAX as usize {
+        return Err(PayloadError::new(
+            ErrorCode::RequestTooLarge,
+            format!("{h}×{w} image exceeds the 255×255 wire cap"),
+        ));
+    }
+    if pixels.len() != h * w {
+        return Err(PayloadError::new(
+            ErrorCode::Malformed,
+            format!("{h}×{w} image needs {} pixels, got {}", h * w, pixels.len()),
+        ));
+    }
+    let mut out = Vec::with_capacity(2 + 4 * pixels.len());
+    out.push(h as u8);
+    out.push(w as u8);
+    for &p in pixels {
+        out.extend_from_slice(&p.to_be_bytes());
+    }
+    Ok(out)
+}
+
+/// Decode a `DigitsInferRequest` payload into `(h, w, pixels)`.
+pub fn decode_digits_request(
+    payload: &[u8],
+) -> std::result::Result<(usize, usize, Vec<f32>), PayloadError> {
+    if payload.len() < 2 {
+        return Err(PayloadError::new(ErrorCode::Malformed, "missing image dimensions"));
+    }
+    let (h, w) = (payload[0] as usize, payload[1] as usize);
+    if h == 0 || w == 0 {
+        return Err(PayloadError::new(ErrorCode::EmptyRequest, "zero-sized image"));
+    }
+    if payload.len() != 2 + 4 * h * w {
+        return Err(PayloadError::new(
+            ErrorCode::Malformed,
+            format!(
+                "{h}×{w} image needs {} payload bytes, got {}",
+                2 + 4 * h * w,
+                payload.len()
+            ),
+        ));
+    }
+    let pixels = (0..h * w)
+        .map(|i| {
+            let o = 2 + 4 * i;
+            f32::from_be_bytes([payload[o], payload[o + 1], payload[o + 2], payload[o + 3]])
+        })
+        .collect();
+    Ok((h, w, pixels))
+}
+
+/// Decoded `DigitsInferResponse` payload (the client-side view of a
+/// digits [`Response`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireDigitsResponse {
+    /// Predicted digit (0–9).
+    pub pred: u8,
+    /// Per-class output potentials (ties resolve to the lowest index).
+    pub v_all: Vec<i64>,
+    /// Macro cycles attributed to this request (honest per-request
+    /// share of its fused batch, not an even split).
+    pub cycles: u64,
+    /// Server-side latency in microseconds (saturating).
+    pub latency_us: u64,
+    /// Micro-batch size this request was served in.
+    pub batch: u16,
+    /// Worker shard that ran the batch.
+    pub worker: u16,
+}
+
+/// Decode a `DigitsInferResponse` payload (`pred:u8`, `n_classes:u8`,
+/// `n_classes` i64 potentials, `cycles:u64`, `latency_us:u64`,
+/// `batch:u16`, `worker:u16` — all big-endian).
+pub fn decode_digits_response(
+    payload: &[u8],
+) -> std::result::Result<WireDigitsResponse, PayloadError> {
+    if payload.len() < 2 {
+        return Err(PayloadError::new(ErrorCode::Malformed, "missing digits header"));
+    }
+    let n = payload[1] as usize;
+    let want = 2 + 8 * n + 20;
+    if payload.len() != want {
+        return Err(PayloadError::new(
+            ErrorCode::Malformed,
+            format!("digits response with {n} classes needs {want} bytes, got {}", payload.len()),
+        ));
+    }
+    let be8 = |o: usize| {
+        u64::from_be_bytes([
+            payload[o],
+            payload[o + 1],
+            payload[o + 2],
+            payload[o + 3],
+            payload[o + 4],
+            payload[o + 5],
+            payload[o + 6],
+            payload[o + 7],
+        ])
+    };
+    let v_all: Vec<i64> = (0..n).map(|i| be8(2 + 8 * i) as i64).collect();
+    let o = 2 + 8 * n;
+    Ok(WireDigitsResponse {
+        pred: payload[0],
+        v_all,
+        cycles: be8(o),
+        latency_us: be8(o + 8),
+        batch: u16::from_be_bytes([payload[o + 16], payload[o + 17]]),
+        worker: u16::from_be_bytes([payload[o + 18], payload[o + 19]]),
+    })
 }
 
 /// Encode an `Error` payload: `code:u16`, `msg_len:u16`, UTF-8 bytes.
@@ -171,21 +309,42 @@ pub fn error_frame(request_id: u64, code: ErrorCode, msg: &str) -> Frame {
 }
 
 /// Encode a coordinator [`Response`] as its wire frame: an
-/// `InferResponse` on success, an `Error` frame with
+/// `InferResponse` (sentiment) or `DigitsInferResponse` (digits) on
+/// success — chosen by [`Response::kind`] — or an `Error` frame with
 /// [`ErrorCode::InferenceFailed`] when [`Response::err`] is set.
 pub fn response_frame(r: &Response) -> Frame {
     if let Some(err) = &r.err {
         return error_frame(r.id, ErrorCode::InferenceFailed, err);
     }
-    let mut p = Vec::with_capacity(29);
-    p.push(r.pred);
-    p.extend_from_slice(&r.v_out.to_be_bytes());
-    p.extend_from_slice(&r.cycles.to_be_bytes());
     let us = u64::try_from(r.latency.as_micros()).unwrap_or(u64::MAX);
-    p.extend_from_slice(&us.to_be_bytes());
-    p.extend_from_slice(&(r.batch_size.min(u16::MAX as usize) as u16).to_be_bytes());
-    p.extend_from_slice(&(r.worker.min(u16::MAX as usize) as u16).to_be_bytes());
-    Frame::new(PayloadType::InferResponse, r.id, p)
+    let batch = (r.batch_size.min(u16::MAX as usize) as u16).to_be_bytes();
+    let worker = (r.worker.min(u16::MAX as usize) as u16).to_be_bytes();
+    match r.kind {
+        WorkloadKind::Sentiment => {
+            let mut p = Vec::with_capacity(29);
+            p.push(r.pred);
+            p.extend_from_slice(&r.v_out.to_be_bytes());
+            p.extend_from_slice(&r.cycles.to_be_bytes());
+            p.extend_from_slice(&us.to_be_bytes());
+            p.extend_from_slice(&batch);
+            p.extend_from_slice(&worker);
+            Frame::new(PayloadType::InferResponse, r.id, p)
+        }
+        WorkloadKind::Digits => {
+            let n = r.v_all.len().min(u8::MAX as usize);
+            let mut p = Vec::with_capacity(2 + 8 * n + 20);
+            p.push(r.pred);
+            p.push(n as u8);
+            for &v in &r.v_all[..n] {
+                p.extend_from_slice(&v.to_be_bytes());
+            }
+            p.extend_from_slice(&r.cycles.to_be_bytes());
+            p.extend_from_slice(&us.to_be_bytes());
+            p.extend_from_slice(&batch);
+            p.extend_from_slice(&worker);
+            Frame::new(PayloadType::DigitsInferResponse, r.id, p)
+        }
+    }
 }
 
 /// Decode an `InferResponse` payload.
@@ -249,12 +408,15 @@ pub struct ServeCore {
 }
 
 impl ServeCore {
-    /// Spawn the worker pool and dispatcher. `vocab` is the embedding
-    /// table size; sessions clamp incoming word ids into `[0, vocab)`
-    /// (identically on every transport).
-    pub fn start_with<F>(opts: ServerOptions, vocab: i64, factory: F) -> Result<ServeCore>
+    /// Spawn the worker pool and dispatcher over any [`Workload`]
+    /// model (sentiment or digits). `vocab` is the embedding table
+    /// size; sessions clamp incoming *word-id* inputs into
+    /// `[0, vocab)` (identically on every transport; image inputs are
+    /// validated for shape instead — pass `1` for image workloads).
+    pub fn start_with<W, F>(opts: ServerOptions, vocab: i64, factory: F) -> Result<ServeCore>
     where
-        F: Fn() -> Result<SentimentNetwork> + Send + Sync + 'static,
+        W: Workload,
+        F: Fn() -> Result<W> + Send + Sync + 'static,
     {
         anyhow::ensure!(vocab >= 1, "vocabulary must be non-empty");
         let server = InferenceServer::start_with(opts, factory)?;
@@ -350,12 +512,40 @@ pub struct SessionSender {
 }
 
 impl SessionSender {
-    /// Submit one request. Word ids are clamped into `[0, vocab)` —
-    /// the same normalization on every transport. Errors if the
-    /// request is empty or the server is shutting down.
+    /// Submit one sentiment request. Word ids are clamped into
+    /// `[0, vocab)` — the same normalization on every transport.
+    /// Errors if the request is empty, exceeds
+    /// [`MAX_WORDS_PER_REQUEST`], or the server is shutting down.
     pub fn submit(&self, external_id: u64, word_ids: &[i64]) -> Result<()> {
-        anyhow::ensure!(!word_ids.is_empty(), "request {external_id}: no word ids");
-        let clamped: Vec<i64> = word_ids.iter().map(|&w| w.clamp(0, self.vocab - 1)).collect();
+        self.submit_input(external_id, WorkloadInput::Words(word_ids.to_vec()))
+    }
+
+    /// Submit one request of any workload kind, with the transport's
+    /// normalization applied: word ids clamped into `[0, vocab)`,
+    /// image shapes validated.
+    pub fn submit_input(&self, external_id: u64, input: WorkloadInput) -> Result<()> {
+        let input = match input {
+            WorkloadInput::Words(ids) => {
+                anyhow::ensure!(!ids.is_empty(), "request {external_id}: no word ids");
+                anyhow::ensure!(
+                    ids.len() <= MAX_WORDS_PER_REQUEST,
+                    "request {external_id}: {} word ids exceed the \
+                     {MAX_WORDS_PER_REQUEST}-word request cap",
+                    ids.len()
+                );
+                WorkloadInput::Words(
+                    ids.iter().map(|&w| w.clamp(0, self.vocab - 1)).collect(),
+                )
+            }
+            WorkloadInput::Image { h, w, pixels } => {
+                anyhow::ensure!(
+                    h > 0 && w > 0 && pixels.len() == h * w,
+                    "request {external_id}: {h}×{w} image with {} pixels",
+                    pixels.len()
+                );
+                WorkloadInput::Image { h, w, pixels }
+            }
+        };
         let internal = self.next_id.fetch_add(1, Ordering::SeqCst);
         let tx = self.tx.clone();
         self.pending.lock().expect("pending poisoned").insert(
@@ -367,7 +557,7 @@ impl SessionSender {
                 }),
             },
         );
-        match self.submitter.submit(Request { id: internal, word_ids: clamped }) {
+        match self.submitter.submit(Request { id: internal, input }) {
             Ok(()) => Ok(()),
             Err(e) => {
                 self.pending.lock().expect("pending poisoned").remove(&internal);
@@ -385,9 +575,15 @@ pub struct ClientSession {
 }
 
 impl ClientSession {
-    /// Submit one request (see [`SessionSender::submit`]).
+    /// Submit one sentiment request (see [`SessionSender::submit`]).
     pub fn submit(&self, external_id: u64, word_ids: &[i64]) -> Result<()> {
         self.sender.submit(external_id, word_ids)
+    }
+
+    /// Submit one request of any workload kind (see
+    /// [`SessionSender::submit_input`]).
+    pub fn submit_input(&self, external_id: u64, input: WorkloadInput) -> Result<()> {
+        self.sender.submit_input(external_id, input)
     }
 
     /// Block for the next response of this session.
@@ -458,8 +654,24 @@ impl FrameClient {
     }
 
     /// Send one `InferRequest` (does not wait for the response).
+    /// Oversized requests (> [`MAX_WORDS_PER_REQUEST`] word ids) are
+    /// rejected client-side before any bytes hit the wire.
     pub fn send_infer(&mut self, request_id: u64, word_ids: &[i64]) -> Result<()> {
-        Frame::new(PayloadType::InferRequest, request_id, encode_infer_request(word_ids))
+        let payload = encode_infer_request(word_ids).map_err(anyhow::Error::from)?;
+        Frame::new(PayloadType::InferRequest, request_id, payload).write_to(&mut self.w)?;
+        Ok(())
+    }
+
+    /// Send one `DigitsInferRequest` (does not wait for the response).
+    pub fn send_digits_infer(
+        &mut self,
+        request_id: u64,
+        h: usize,
+        w: usize,
+        pixels: &[f32],
+    ) -> Result<()> {
+        let payload = encode_digits_request(h, w, pixels).map_err(anyhow::Error::from)?;
+        Frame::new(PayloadType::DigitsInferRequest, request_id, payload)
             .write_to(&mut self.w)?;
         Ok(())
     }
@@ -491,6 +703,29 @@ impl FrameClient {
         }
     }
 
+    /// Read the next `DigitsInferResponse`/`Error` frame, decoded.
+    /// Returns the request id and either the digits response or
+    /// `(code, message)`.
+    #[allow(clippy::type_complexity)]
+    pub fn next_digits_result(
+        &mut self,
+    ) -> Result<Option<(u64, std::result::Result<WireDigitsResponse, (u16, String)>)>> {
+        match self.next_frame()? {
+            None => Ok(None),
+            Some(f) => match f.payload_type {
+                PayloadType::DigitsInferResponse => {
+                    let r = decode_digits_response(&f.payload).map_err(anyhow::Error::from)?;
+                    Ok(Some((f.request_id, Ok(r))))
+                }
+                PayloadType::Error => {
+                    let e = decode_error(&f.payload).map_err(anyhow::Error::from)?;
+                    Ok(Some((f.request_id, Err(e))))
+                }
+                other => anyhow::bail!("unexpected frame type {other:?} mid-stream"),
+            },
+        }
+    }
+
     /// Half-close the write side so the server sees EOF and drains.
     pub fn finish_writes(&self) -> Result<()> {
         self.w.shutdown(std::net::Shutdown::Write)?;
@@ -505,18 +740,99 @@ mod tests {
     #[test]
     fn infer_request_payload_roundtrip() {
         let ids = vec![0i64, 3, 19, 7];
-        let p = encode_infer_request(&ids);
+        let p = encode_infer_request(&ids).unwrap();
         assert_eq!(p.len(), 2 + 4 * ids.len());
         assert_eq!(decode_infer_request(&p).unwrap(), ids);
     }
 
     #[test]
     fn infer_request_rejects_length_mismatch() {
-        let mut p = encode_infer_request(&[1, 2, 3]);
+        let mut p = encode_infer_request(&[1, 2, 3]).unwrap();
         p.pop();
         let e = decode_infer_request(&p).unwrap_err();
         assert_eq!(e.code, ErrorCode::Malformed);
         assert_eq!(decode_infer_request(&[]).unwrap_err().code, ErrorCode::Malformed);
+    }
+
+    /// The u16 count-field boundary: exactly 65 535 word ids encode
+    /// and round-trip; one more is rejected client-side with
+    /// `RequestTooLarge` instead of silently wrapping the count into
+    /// a wrong-but-valid frame.
+    #[test]
+    fn infer_request_boundary_at_u16_count() {
+        let max: Vec<i64> = (0..MAX_WORDS_PER_REQUEST as i64).collect();
+        let p = encode_infer_request(&max).unwrap();
+        assert_eq!(p.len(), 2 + 4 * MAX_WORDS_PER_REQUEST);
+        assert_eq!(u16::from_be_bytes([p[0], p[1]]), u16::MAX);
+        assert_eq!(decode_infer_request(&p).unwrap().len(), MAX_WORDS_PER_REQUEST);
+
+        let over = vec![0i64; MAX_WORDS_PER_REQUEST + 1];
+        let e = encode_infer_request(&over).unwrap_err();
+        assert_eq!(e.code, ErrorCode::RequestTooLarge);
+    }
+
+    #[test]
+    fn digits_request_payload_roundtrip() {
+        let pixels: Vec<f32> = (0..12).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let p = encode_digits_request(3, 4, &pixels).unwrap();
+        assert_eq!(p.len(), 2 + 4 * 12);
+        assert_eq!(decode_digits_request(&p).unwrap(), (3, 4, pixels));
+    }
+
+    #[test]
+    fn digits_request_rejects_bad_shapes() {
+        assert_eq!(
+            encode_digits_request(0, 4, &[]).unwrap_err().code,
+            ErrorCode::EmptyRequest
+        );
+        let big = vec![0.0f32; 90000];
+        assert_eq!(
+            encode_digits_request(300, 300, &big).unwrap_err().code,
+            ErrorCode::RequestTooLarge
+        );
+        assert_eq!(
+            encode_digits_request(2, 2, &[0.0; 3]).unwrap_err().code,
+            ErrorCode::Malformed
+        );
+        let mut p = encode_digits_request(2, 2, &[0.0; 4]).unwrap();
+        p.pop();
+        assert_eq!(decode_digits_request(&p).unwrap_err().code, ErrorCode::Malformed);
+        assert_eq!(decode_digits_request(&[]).unwrap_err().code, ErrorCode::Malformed);
+        assert_eq!(
+            decode_digits_request(&[0, 3]).unwrap_err().code,
+            ErrorCode::EmptyRequest
+        );
+    }
+
+    #[test]
+    fn digits_response_frame_roundtrip() {
+        let r = Response {
+            id: 11,
+            kind: WorkloadKind::Digits,
+            pred: 3,
+            v_out: 40,
+            v_all: vec![0, -5, 12, 40, 7, -2, 0, 3, 9, 1],
+            cycles: 1234,
+            latency: Duration::from_micros(99),
+            worker: 1,
+            batch_size: 4,
+            err: None,
+        };
+        let f = response_frame(&r);
+        assert_eq!(f.payload_type, PayloadType::DigitsInferResponse);
+        assert_eq!(f.request_id, 11);
+        let w = decode_digits_response(&f.payload).unwrap();
+        assert_eq!(
+            w,
+            WireDigitsResponse {
+                pred: 3,
+                v_all: r.v_all.clone(),
+                cycles: 1234,
+                latency_us: 99,
+                batch: 4,
+                worker: 1
+            }
+        );
     }
 
     #[test]
@@ -541,8 +857,10 @@ mod tests {
     fn response_frame_encodes_success_and_error() {
         let ok = Response {
             id: 4,
+            kind: WorkloadKind::Sentiment,
             pred: 1,
             v_out: -17,
+            v_all: vec![-17],
             cycles: 42,
             latency: Duration::from_micros(181),
             worker: 2,

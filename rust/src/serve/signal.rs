@@ -1,0 +1,89 @@
+//! Graceful-shutdown signal wiring for `impulse serve --listen`.
+//!
+//! Installs SIGINT/SIGTERM handlers that only flip a process-global
+//! atomic (the sole async-signal-safe thing a handler may do here);
+//! the CLI's serve loop polls the flag and calls
+//! [`TcpServeHandle::stop`], so in-flight requests drain and every
+//! connection flushes its responses before the process exits —
+//! instead of running until killed.
+//!
+//! Implemented against the raw C `signal(2)` entry point so the
+//! offline build needs no `libc` crate; on non-Unix targets the
+//! handlers are a no-op and the flag simply never fires. A *second*
+//! SIGINT/SIGTERM while the drain is still running restores the
+//! default disposition and re-raises — the operator's force-quit
+//! escape hatch if a connection wedges the drain.
+//!
+//! [`TcpServeHandle::stop`]: super::TcpServeHandle::stop
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Set by the signal handler once SIGINT or SIGTERM arrives.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod ffi {
+    pub const SIGINT: i32 = 2;
+    pub const SIGTERM: i32 = 15;
+    /// `SIG_DFL` — the default signal disposition.
+    pub const SIG_DFL: usize = 0;
+    extern "C" {
+        pub fn signal(signum: i32, handler: usize) -> usize;
+        pub fn raise(signum: i32) -> i32;
+    }
+}
+
+#[cfg(unix)]
+extern "C" fn on_signal(signum: i32) {
+    // A store on an AtomicBool is async-signal-safe; everything else
+    // (allocation, locks, IO) is forbidden in handler context.
+    // `signal`/`raise` are on the POSIX async-signal-safe list.
+    if SHUTDOWN.swap(true, Ordering::SeqCst) {
+        // Second signal while the drain is still running: restore the
+        // default action and re-deliver, so an operator can force-quit
+        // a wedged shutdown with a second Ctrl+C instead of SIGKILL.
+        unsafe {
+            ffi::signal(signum, ffi::SIG_DFL);
+            ffi::raise(signum);
+        }
+    }
+}
+
+/// Install SIGINT/SIGTERM handlers (idempotent) and return the flag
+/// they set. Callers poll the flag and run their own orderly shutdown
+/// — see the `impulse serve` listen loop.
+pub fn install_shutdown_handler() -> &'static AtomicBool {
+    #[cfg(unix)]
+    unsafe {
+        ffi::signal(ffi::SIGINT, on_signal as usize);
+        ffi::signal(ffi::SIGTERM, on_signal as usize);
+    }
+    &SHUTDOWN
+}
+
+/// Whether a shutdown signal has arrived since
+/// [`install_shutdown_handler`] was called.
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    /// The regression the ROADMAP tracked: a delivered SIGTERM must
+    /// reach the drain path. `raise` delivers synchronously to the
+    /// calling thread, so the handler has run by the time it returns.
+    #[test]
+    fn sigterm_sets_the_shutdown_flag() {
+        let flag = install_shutdown_handler();
+        assert!(!flag.load(Ordering::SeqCst), "flag must start clear");
+        unsafe {
+            ffi::raise(ffi::SIGTERM);
+        }
+        assert!(flag.load(Ordering::SeqCst), "SIGTERM must set the flag");
+        assert!(shutdown_requested());
+        // reset so other tests in this binary see a clean flag
+        flag.store(false, Ordering::SeqCst);
+    }
+}

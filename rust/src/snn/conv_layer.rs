@@ -10,10 +10,34 @@ use crate::Result;
 /// A SAME-padded k×k conv layer distributed across a pool of macros:
 /// kernel weights are replicated into every macro of a channel group;
 /// each macro owns the membrane potentials of up to 13 output pixels.
+///
+/// Besides the classic one-image [`ConvLayer::step`], the layer
+/// supports *batch lanes* (the conv counterpart of
+/// [`super::FcLayer::step_batch`]): [`ConvLayer::begin_batch`] re-lays
+/// the pool out so every output pixel keeps one V-row pair per lane in
+/// its macro, and [`ConvLayer::step_batch`] issues one fused AccW2V
+/// stream per pixel window covering the *union* of spiking taps across
+/// lanes (`ImpulseMacro::acc_w2v_fused`), then the per-lane fused
+/// neuron-update kernels. Results are bit-identical per lane to
+/// sequential stepping; the AccW2V cycle cost is the union, not the
+/// per-lane sum.
 pub struct ConvLayer {
     pub layout: ConvLayout,
     macros: Vec<ImpulseMacro>,
     params: LayerParams,
+    /// Kernel kept to reprogram the pool when the lane count changes.
+    kernel_flat: Vec<i64>,
+    config: MacroConfig,
+    /// Per-lane attributed cycles (fractional) since `begin_batch`:
+    /// each fused AccW2V cycle is split across the lanes sharing that
+    /// union row; neuron-update cycles are charged to their own lane.
+    /// Sums exactly to the layer's batched cycle spend.
+    lane_cycles: Vec<f64>,
+    /// Scratch: fused spike union `(w_row, lane mask)` per pixel.
+    union_rows: Vec<(usize, u32)>,
+    /// Scratch: per-lane destination V rows of the current pixel.
+    lane_rows_odd: Vec<usize>,
+    lane_rows_even: Vec<usize>,
 }
 
 impl ConvLayer {
@@ -31,13 +55,38 @@ impl ConvLayer {
     ) -> Result<Self> {
         let layout = ConvLayout::new(h, w, c_in, c_out, ksize).map_err(anyhow::Error::from)?;
         assert_eq!(kernel_flat.len(), ksize * ksize * c_in * c_out);
+        let macros = Self::build_macros(&layout, kernel_flat, params, config)?;
+        Ok(Self {
+            layout,
+            macros,
+            params,
+            kernel_flat: kernel_flat.to_vec(),
+            config,
+            lane_cycles: vec![0.0],
+            union_rows: Vec::new(),
+            lane_rows_odd: vec![0],
+            lane_rows_even: vec![1],
+        })
+    }
+
+    /// Program a macro pool for `layout`: kernel taps replicated into
+    /// every macro of a channel group, constants per parity, all pixel
+    /// (and lane) V rows zeroed. Counters are reset — programming is
+    /// not inference cost.
+    fn build_macros(
+        layout: &ConvLayout,
+        kernel_flat: &[i64],
+        params: LayerParams,
+        config: MacroConfig,
+    ) -> Result<Vec<ImpulseMacro>> {
+        let ksize = layout.ksize;
         let mut macros = Vec::with_capacity(layout.num_macros());
         for g in 0..layout.n_channel_groups {
             for _ in 0..layout.macros_per_group() {
                 let mut m = ImpulseMacro::new(config);
                 for ky in 0..ksize {
                     for kx in 0..ksize {
-                        for c in 0..c_in {
+                        for c in 0..layout.c_in {
                             let row = layout.tile_row_weights(kernel_flat, g, ky, kx, c);
                             m.write_weights(layout.tap_row(ky, kx, c), &row)?;
                         }
@@ -52,8 +101,9 @@ impl ConvLayer {
                     m.write_v(rst, parity, &[params.reset; 6])?;
                     m.write_v(lk, parity, &[-params.leak; 6])?;
                 }
-                // zero all pixel V rows
-                for p in 0..layout.pixels_per_macro {
+                // zero every value row below the constant block (all
+                // pixel slots of all lanes)
+                for p in 0..cr.first_row() / 2 {
                     m.write_v(2 * p, Parity::Odd, &[0; 6])?;
                     m.write_v(2 * p + 1, Parity::Even, &[0; 6])?;
                 }
@@ -61,11 +111,7 @@ impl ConvLayer {
                 macros.push(m);
             }
         }
-        Ok(Self {
-            layout,
-            macros,
-            params,
-        })
+        Ok(macros)
     }
 
     /// One timestep: returns the output spike map (h × w × c_out).
@@ -117,11 +163,172 @@ impl ConvLayer {
         Ok(out)
     }
 
-    /// Zero all pixel membrane potentials.
+    /// Maximum batch lanes this layer can host: one odd/even V-row
+    /// pair per (pixel, lane) in the rows below the constant block,
+    /// with at least one pixel slot left per macro.
+    pub fn max_batch_lanes(&self) -> usize {
+        (self.layout.const_rows.first_row() / 2).min(crate::macro_sim::MAX_FUSED_LANES)
+    }
+
+    /// Configured batch lanes (1 unless `begin_batch` widened it).
+    pub fn batch_lanes(&self) -> usize {
+        self.layout.lanes()
+    }
+
+    /// Allocate and zero `lanes` independent batch lanes: the pool is
+    /// re-laid-out (and reprogrammed, if the lane count changed) so
+    /// every output pixel keeps one V-row pair per lane in its macro
+    /// (`ConvLayout::assign_lane`), shrinking the per-macro pixel
+    /// budget and growing the pool to compensate. Also resets the
+    /// per-lane cycle attribution.
+    pub fn begin_batch(&mut self, lanes: usize) -> Result<()> {
+        anyhow::ensure!(
+            lanes >= 1 && lanes <= self.max_batch_lanes(),
+            "batch of {lanes} lanes outside 1..={} (V_MEM budget)",
+            self.max_batch_lanes()
+        );
+        if lanes != self.layout.lanes() {
+            self.layout = self.layout.with_lanes(lanes).map_err(anyhow::Error::from)?;
+            self.macros =
+                Self::build_macros(&self.layout, &self.kernel_flat, self.params, self.config)?;
+        } else {
+            self.reset_state()?;
+        }
+        self.lane_cycles = vec![0.0; lanes];
+        self.lane_rows_odd = vec![0; lanes];
+        self.lane_rows_even = vec![0; lanes];
+        Ok(())
+    }
+
+    /// Run one fused timestep across all batch lanes: per output
+    /// pixel, one AccW2V per parity per channel group per
+    /// *union*-spiking window tap (lane-masked broadcast — see
+    /// `ImpulseMacro::acc_w2v_fused`), then the per-lane fused
+    /// neuron-update kernels. `active[b]` gates lanes that still have
+    /// work; inactive lanes are untouched (and contribute nothing to
+    /// the union). Returns per-lane output spike maps (all-false for
+    /// inactive lanes). Bit-identical per lane to running `step`
+    /// sequentially.
+    pub fn step_batch(
+        &mut self,
+        batch: &[&SpikeMap],
+        active: &[bool],
+    ) -> Result<Vec<SpikeMap>> {
+        let l = self.layout.clone();
+        let lanes = l.lanes();
+        anyhow::ensure!(
+            batch.len() == lanes && active.len() == lanes,
+            "batch of {} lanes, {} active flags; configured for {lanes} (call begin_batch)",
+            batch.len(),
+            active.len()
+        );
+        for (b, s) in batch.iter().enumerate() {
+            if active[b] {
+                anyhow::ensure!(
+                    (s.h, s.w, s.c) == (l.h(), l.w(), l.c_in),
+                    "lane {b}: input {}×{}×{} != {}×{}×{}",
+                    s.h,
+                    s.w,
+                    s.c,
+                    l.h(),
+                    l.w(),
+                    l.c_in
+                );
+            }
+        }
+        let mut out: Vec<SpikeMap> = (0..lanes)
+            .map(|_| SpikeMap::new(l.h(), l.w(), l.c_out))
+            .collect();
+        let groups = l.n_channel_groups as f64;
+        let upd = 2.0 * groups * self.params.neuron.instructions_per_update() as f64;
+        for y in 0..l.h() {
+            for x in 0..l.w() {
+                // fused union of this pixel's window across lanes
+                self.union_rows.clear();
+                for (w_row, iy, ix, c) in l.window(y, x) {
+                    let mut mask = 0u32;
+                    for (b, s) in batch.iter().enumerate() {
+                        if active[b] && s.get(iy, ix, c) {
+                            mask |= 1 << b;
+                        }
+                    }
+                    if mask != 0 {
+                        self.union_rows.push((w_row, mask));
+                    }
+                }
+                // Honest attribution: each union tap costs one AccW2V
+                // per parity per channel group, split across the lanes
+                // that latch it; updates are charged whole below.
+                for &(_, mask) in &self.union_rows {
+                    let share = 2.0 * groups / mask.count_ones() as f64;
+                    let mut mm = mask;
+                    while mm != 0 {
+                        let b = mm.trailing_zeros() as usize;
+                        mm &= mm - 1;
+                        self.lane_cycles[b] += share;
+                    }
+                }
+                for (b, &a) in active.iter().enumerate() {
+                    if a {
+                        self.lane_cycles[b] += upd;
+                    }
+                }
+                for g in 0..l.n_channel_groups {
+                    for b in 0..lanes {
+                        let a = l.assign_lane(y, x, g, b);
+                        self.lane_rows_odd[b] = a.v_row_odd;
+                        self.lane_rows_even[b] = a.v_row_even;
+                    }
+                    let m = &mut self.macros[l.assign_lane(y, x, g, 0).macro_id];
+                    m.acc_w2v_fused(&self.union_rows, &self.lane_rows_odd, Parity::Odd)?;
+                    m.acc_w2v_fused(&self.union_rows, &self.lane_rows_even, Parity::Even)?;
+                    for b in 0..lanes {
+                        if !active[b] {
+                            continue;
+                        }
+                        for parity in Parity::BOTH {
+                            let v = match parity {
+                                Parity::Odd => self.lane_rows_odd[b],
+                                Parity::Even => self.lane_rows_even[b],
+                            };
+                            let spikes = m.neuron_update_fused(
+                                self.params.neuron,
+                                v,
+                                l.const_rows.for_parity(parity),
+                                parity,
+                            )?;
+                            for (field, &sp) in spikes.iter().enumerate() {
+                                let local = match parity {
+                                    Parity::Odd => 2 * field,
+                                    Parity::Even => 2 * field + 1,
+                                };
+                                let co = g * OUTPUTS_PER_TILE + local;
+                                if co < l.c_out && sp {
+                                    out[b].set(y, x, co, true);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Per-lane attributed cycles accumulated since `begin_batch`:
+    /// lane `b`'s honest share of this layer's batched spend (fused
+    /// AccW2V cycles split across the lanes sharing each union tap,
+    /// update cycles charged whole). The sum over lanes equals the
+    /// layer's total batched cycle count exactly.
+    pub fn lane_attributed_cycles(&self) -> &[f64] {
+        &self.lane_cycles
+    }
+
+    /// Zero all pixel membrane potentials (all lanes).
     pub fn reset_state(&mut self) -> Result<()> {
-        let pixels = self.layout.pixels_per_macro;
+        let pairs = self.layout.pixels_per_macro * self.layout.lanes();
         for m in self.macros.iter_mut() {
-            for p in 0..pixels {
+            for p in 0..pairs {
                 m.write_v(2 * p, Parity::Odd, &[0; 6])?;
                 m.write_v(2 * p + 1, Parity::Even, &[0; 6])?;
             }
@@ -275,6 +482,156 @@ mod tests {
             s.histogram.get(&crate::isa::InstructionKind::AccW2V),
             None
         );
+    }
+
+    fn rand_map(rng: &mut XorShiftRng, h: usize, w: usize, c: usize, p: f64) -> SpikeMap {
+        let mut m = SpikeMap::new(h, w, c);
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    m.set(y, x, ch, rng.gen_bool(p));
+                }
+            }
+        }
+        m
+    }
+
+    /// Batched conv execution must be bit-identical, lane for lane, to
+    /// running each lane through its own sequential layer — the
+    /// correctness anchor for the fused conv AccW2V path.
+    #[test]
+    fn step_batch_matches_per_lane_sequential() {
+        let mut rng = XorShiftRng::new(321);
+        for (params, lanes) in [
+            (LayerParams::rmp(40), 4),
+            (LayerParams::if_(35), 3),
+            (LayerParams::lif(30, 2), 2),
+        ] {
+            let (h, w, c_in, c_out) = (5, 5, 3, 14);
+            let kernel: Vec<i64> =
+                (0..9 * c_in * c_out).map(|_| rng.gen_i64(-10, 10)).collect();
+            let mut batched =
+                ConvLayer::new(&kernel, h, w, c_in, c_out, 3, params, MacroConfig::fast())
+                    .unwrap();
+            batched.begin_batch(lanes).unwrap();
+            let mut refs: Vec<ConvLayer> = (0..lanes)
+                .map(|_| {
+                    ConvLayer::new(&kernel, h, w, c_in, c_out, 3, params, MacroConfig::fast())
+                        .unwrap()
+                })
+                .collect();
+            let active = vec![true; lanes];
+            for t in 0..5 {
+                let inputs: Vec<SpikeMap> = (0..lanes)
+                    .map(|_| rand_map(&mut rng, h, w, c_in, 0.25))
+                    .collect();
+                let in_refs: Vec<&SpikeMap> = inputs.iter().collect();
+                let got = batched.step_batch(&in_refs, &active).unwrap();
+                for (b, r) in refs.iter_mut().enumerate() {
+                    let want = r.step(&inputs[b]).unwrap();
+                    assert_eq!(got[b], want, "t={t} lane {b} {params:?}");
+                }
+            }
+        }
+    }
+
+    /// Same check on the lockstep engine: the fused conv path must
+    /// drive the bit-level engine through per-lane instruction effects.
+    #[test]
+    fn step_batch_matches_sequential_on_lockstep_engine() {
+        let mut rng = XorShiftRng::new(55);
+        let (h, w, c_in, c_out) = (3, 3, 2, 4);
+        let kernel: Vec<i64> = (0..9 * c_in * c_out).map(|_| rng.gen_i64(-8, 8)).collect();
+        let p = LayerParams::rmp(30);
+        let mut batched =
+            ConvLayer::new(&kernel, h, w, c_in, c_out, 3, p, MacroConfig::lockstep()).unwrap();
+        batched.begin_batch(2).unwrap();
+        let mut refs: Vec<ConvLayer> = (0..2)
+            .map(|_| {
+                ConvLayer::new(&kernel, h, w, c_in, c_out, 3, p, MacroConfig::lockstep())
+                    .unwrap()
+            })
+            .collect();
+        for _ in 0..3 {
+            let inputs: Vec<SpikeMap> =
+                (0..2).map(|_| rand_map(&mut rng, h, w, c_in, 0.3)).collect();
+            let in_refs: Vec<&SpikeMap> = inputs.iter().collect();
+            let got = batched.step_batch(&in_refs, &[true, true]).unwrap();
+            for (b, r) in refs.iter_mut().enumerate() {
+                assert_eq!(got[b], r.step(&inputs[b]).unwrap(), "lane {b}");
+            }
+        }
+    }
+
+    /// The fused stream's AccW2V count is the union across lanes, not
+    /// the per-lane sum, and the per-lane attribution conserves the
+    /// layer's real spend exactly.
+    #[test]
+    fn step_batch_accw2v_counts_union_and_attribution_conserves() {
+        let mut rng = XorShiftRng::new(77);
+        let (h, w, c_in, c_out) = (4, 4, 2, 4);
+        let kernel: Vec<i64> = (0..9 * c_in * c_out).map(|_| rng.gen_i64(-8, 8)).collect();
+        let mut layer = ConvLayer::new(
+            &kernel, h, w, c_in, c_out, 3,
+            LayerParams::rmp(50),
+            MacroConfig::fast(),
+        )
+        .unwrap();
+        layer.begin_batch(4).unwrap();
+        layer.reset_counters();
+        // all four lanes share one input map → union == single lane
+        let shared = rand_map(&mut rng, h, w, c_in, 0.4);
+        let refs: Vec<&SpikeMap> = (0..4).map(|_| &shared).collect();
+        let active = [true, true, true, false];
+        layer.step_batch(&refs, &active).unwrap();
+        let s = layer.stats();
+        let acc_fused = s.histogram[&crate::isa::InstructionKind::AccW2V];
+        // a lone sequential lane pays the same AccW2V count
+        let mut solo = ConvLayer::new(
+            &kernel, h, w, c_in, c_out, 3,
+            LayerParams::rmp(50),
+            MacroConfig::fast(),
+        )
+        .unwrap();
+        solo.step(&shared).unwrap();
+        assert_eq!(
+            acc_fused,
+            solo.stats().histogram[&crate::isa::InstructionKind::AccW2V],
+            "fused AccW2V must cost the union, not the per-lane sum"
+        );
+        // attribution conserves the batched spend exactly
+        let attributed: f64 = layer.lane_attributed_cycles().iter().sum();
+        assert!(
+            (attributed - s.cycles as f64).abs() < 1e-6,
+            "attributed {attributed} vs spent {}",
+            s.cycles
+        );
+        assert_eq!(layer.lane_attributed_cycles()[3], 0.0, "inactive lane");
+    }
+
+    #[test]
+    fn begin_batch_rejects_overflow_and_rearms() {
+        let kernel = vec![1i64; 9 * 2 * 4];
+        let mut layer = ConvLayer::new(
+            &kernel, 4, 4, 2, 4, 3,
+            LayerParams::rmp(60),
+            MacroConfig::fast(),
+        )
+        .unwrap();
+        assert_eq!(layer.max_batch_lanes(), 13);
+        assert!(layer.begin_batch(14).is_err());
+        assert!(layer.begin_batch(0).is_err());
+        let base_macros = layer.num_macros();
+        layer.begin_batch(4).unwrap();
+        assert_eq!(layer.batch_lanes(), 4);
+        assert!(layer.num_macros() > base_macros, "pool must grow for lanes");
+        let m = SpikeMap::new(4, 4, 2);
+        let refs: Vec<&SpikeMap> = (0..4).map(|_| &m).collect();
+        layer.step_batch(&refs, &[true; 4]).unwrap();
+        // re-arming at the same width zeroes lane state, no rebuild
+        let n = layer.num_macros();
+        layer.begin_batch(4).unwrap();
+        assert_eq!(layer.num_macros(), n);
     }
 
     #[test]

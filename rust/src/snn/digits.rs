@@ -3,9 +3,23 @@
 //! FC2 (output), with Conv2/Conv3/FC1/FC2 mapped on IMPULSE.
 
 use super::{ConvEncoder, ConvLayer, FcLayer, LayerParams, LayerStats, SparsityTracker};
+use super::SpikeMap;
 use crate::data::DigitsArtifacts;
 use crate::macro_sim::MacroConfig;
 use crate::Result;
+
+/// Lowest-index argmax: on tied potentials the *smallest* class index
+/// wins, matching the Python reference (`numpy.argmax`). `max_by_key`
+/// would return the last maximum — a silent divergence on ties.
+pub(crate) fn argmax_lowest(v: &[i64]) -> u8 {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate().skip(1) {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best as u8
+}
 
 /// Result of classifying one image.
 #[derive(Clone, Debug)]
@@ -90,17 +104,123 @@ impl DigitsNetwork {
             self.fc2.step(&sf)?;
         }
         let v_out = self.fc2.potentials()?;
-        let pred = v_out
-            .iter()
-            .enumerate()
-            .max_by_key(|&(_, v)| *v)
-            .map(|(i, _)| i as u8)
-            .unwrap_or(0);
+        let pred = argmax_lowest(&v_out);
         Ok(DigitsResult {
             pred,
             v_out,
             cycles: self.total_cycles() - cycles0,
         })
+    }
+
+    /// Batch lanes one pass through the macro pool can host (bounded
+    /// by the V_MEM row budget of the mapped layers).
+    pub fn max_batch_lanes(&self) -> usize {
+        self.conv2
+            .max_batch_lanes()
+            .min(self.conv3.max_batch_lanes())
+            .min(self.fc1.max_batch_lanes())
+            .min(self.fc2.max_batch_lanes())
+    }
+
+    /// Classify a batch of images concurrently on the same macro pool:
+    /// each image gets its own membrane-potential lane in every conv
+    /// pixel and FC tile, and each timestep issues one fused AccW2V
+    /// stream per pixel window / tile whose instruction count is the
+    /// *union* of spiking inputs across the batch
+    /// (`ImpulseMacro::acc_w2v_fused`). Images beyond the lane budget
+    /// are processed in chunks.
+    ///
+    /// `v_out` and `pred` are bit-identical to running each image
+    /// through [`DigitsNetwork::run_image`]; per-image `cycles` report
+    /// each request's honest share of its chunk — fused (shared)
+    /// AccW2V cycles split across the lanes that latched them, per-lane
+    /// update/read-out cycles charged whole — summing exactly to the
+    /// chunk's total spend (largest-remainder apportionment).
+    pub fn run_images_batched(&mut self, images: &[&[f32]]) -> Result<Vec<DigitsResult>> {
+        let max = self.max_batch_lanes();
+        let mut out = Vec::with_capacity(images.len());
+        for chunk in images.chunks(max) {
+            out.extend(self.run_batch_chunk(chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn run_batch_chunk(&mut self, images: &[&[f32]]) -> Result<Vec<DigitsResult>> {
+        let lanes = images.len();
+        self.conv2.begin_batch(lanes)?;
+        self.conv3.begin_batch(lanes)?;
+        self.fc1.begin_batch(lanes)?;
+        self.fc2.begin_batch(lanes)?;
+        let cycles0 = self.total_cycles();
+        let mut encoders: Vec<ConvEncoder> = (0..lanes)
+            .map(|b| {
+                let mut e = self.encoder.clone();
+                e.set_image(images[b]);
+                e
+            })
+            .collect();
+        // every image runs the full T timesteps: all lanes stay active
+        let active = vec![true; lanes];
+        let mut fc_in: Vec<Vec<bool>> = vec![Vec::new(); lanes];
+        for t in 0..self.t {
+            let mut p1 = Vec::with_capacity(lanes);
+            for e in encoders.iter_mut() {
+                let s1 = e.step(); // 28×28×C
+                let fired = s1.flatten().iter().filter(|&&b| b).count() as u64;
+                self.tracker.record_counts(0, t, fired, s1.len() as u64);
+                p1.push(s1.maxpool2()); // 14×14×C
+            }
+            let p1_refs: Vec<&SpikeMap> = p1.iter().collect();
+            let s2 = self.conv2.step_batch(&p1_refs, &active)?;
+            for s in &s2 {
+                let fired = s.flatten().iter().filter(|&&b| b).count() as u64;
+                self.tracker.record_counts(1, t, fired, s.len() as u64);
+            }
+            let p2: Vec<SpikeMap> = s2.iter().map(|s| s.maxpool2()).collect(); // 7×7×C
+            let p2_refs: Vec<&SpikeMap> = p2.iter().collect();
+            let s3 = self.conv3.step_batch(&p2_refs, &active)?;
+            for s in &s3 {
+                let fired = s.flatten().iter().filter(|&&b| b).count() as u64;
+                self.tracker.record_counts(2, t, fired, s.len() as u64);
+            }
+            for (b, s) in s3.iter().enumerate() {
+                fc_in[b] = s.maxpool2().flatten(); // 3×3×C
+            }
+            let fc_refs: Vec<&[bool]> = fc_in.iter().map(|v| v.as_slice()).collect();
+            let sf = self.fc1.step_batch(&fc_refs, &active)?;
+            for s in sf {
+                self.tracker.record(3, t, s);
+            }
+            let sf_refs: Vec<&[bool]> = sf.iter().map(|v| v.as_slice()).collect();
+            self.fc2.step_batch(&sf_refs, &active)?;
+        }
+        let mut v_outs = Vec::with_capacity(lanes);
+        for b in 0..lanes {
+            v_outs.push(self.fc2.lane_potentials(b)?);
+        }
+        let spent = self.total_cycles() - cycles0;
+        // Honest per-request attribution: each lane's share of the
+        // fused AccW2V issue, its own neuron-update cycles, and its
+        // read-out ReadVs — rounded to integers without losing a cycle
+        // (largest-remainder apportionment over the chunk's spend).
+        let c2 = self.conv2.lane_attributed_cycles();
+        let c3 = self.conv3.lane_attributed_cycles();
+        let f1 = self.fc1.lane_attributed_cycles();
+        let f2 = self.fc2.lane_attributed_cycles();
+        let readv = (2 * self.fc2.num_macros()) as f64;
+        let weights: Vec<f64> = (0..lanes)
+            .map(|b| c2[b] + c3[b] + f1[b] + f2[b] + readv)
+            .collect();
+        let cycles = crate::metrics::apportion(&weights, spent);
+        Ok(v_outs
+            .into_iter()
+            .zip(cycles)
+            .map(|(v_out, cycles)| DigitsResult {
+                pred: argmax_lowest(&v_out),
+                v_out,
+                cycles,
+            })
+            .collect())
     }
 
     pub fn stats(&self) -> LayerStats {
@@ -117,6 +237,14 @@ impl DigitsNetwork {
             + self.fc1.stats().cycles
             + self.fc2.stats().cycles
     }
+
+    /// Reset instruction counters (keeps weights and state).
+    pub fn reset_counters(&mut self) {
+        self.conv2.reset_counters();
+        self.conv3.reset_counters();
+        self.fc1.reset_counters();
+        self.fc2.reset_counters();
+    }
 }
 
 #[cfg(test)]
@@ -126,30 +254,37 @@ mod tests {
     use crate::data::DigitsArtifacts;
 
     fn mini_digits(seed: u64) -> DigitsArtifacts {
-        let mut rng = XorShiftRng::new(seed);
-        let c = 4usize; // small channel count for test speed
-        let k1: Vec<f32> = (0..9 * c).map(|_| (rng.gen_f64() - 0.3) as f32).collect();
-        let mut kernel = |n: usize| (0..n).map(|_| rng.gen_i64(-8, 8)).collect::<Vec<i64>>();
-        DigitsArtifacts {
-            k1,
-            k1_shape: vec![3, 3, 1, c],
-            thr_c1: 0.8,
-            k2: kernel(9 * c * c),
-            k2_shape: vec![3, 3, c, c],
-            k3: kernel(9 * c * c),
-            k3_shape: vec![3, 3, c, c],
-            w_fc1: (0..9 * c)
-                .map(|_| (0..20).map(|_| rng.gen_i64(-8, 8)).collect())
-                .collect(),
-            w_fc2: (0..20)
-                .map(|_| (0..10).map(|_| rng.gen_i64(-8, 8)).collect())
-                .collect(),
-            thr_c2: 30,
-            thr_c3: 30,
-            thr_f1: 40,
-            test_x: vec![],
-            test_y: vec![],
-        }
+        DigitsArtifacts::synthetic(seed)
+    }
+
+    /// The tie-break contract: tied potentials resolve to the lowest
+    /// class index (matching the Python reference's `argmax`), not the
+    /// last.
+    #[test]
+    fn argmax_ties_break_to_lowest_index() {
+        assert_eq!(argmax_lowest(&[0, 5, 5, 3]), 1);
+        assert_eq!(argmax_lowest(&[7, 5, 7]), 0);
+        assert_eq!(argmax_lowest(&[0; 10]), 0);
+        assert_eq!(argmax_lowest(&[-3, -1, -1]), 1);
+        assert_eq!(argmax_lowest(&[4]), 0);
+    }
+
+    /// A batch of one must reproduce the sequential run exactly —
+    /// including its cycle count (the attribution degenerates to the
+    /// lane's own spend).
+    #[test]
+    fn singleton_batch_matches_run_image_exactly() {
+        let a = mini_digits(21);
+        let mut rng = XorShiftRng::new(4);
+        let img: Vec<f32> = (0..28 * 28).map(|_| rng.gen_f64() as f32).collect();
+        let mut seq = DigitsNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let want = seq.run_image(&img).unwrap();
+        let mut net = DigitsNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let got = net.run_images_batched(&[&img[..]]).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].v_out, want.v_out);
+        assert_eq!(got[0].pred, want.pred);
+        assert_eq!(got[0].cycles, want.cycles, "singleton attribution");
     }
 
     #[test]

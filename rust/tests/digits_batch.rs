@@ -1,0 +1,123 @@
+//! Differential tests of the batched digits (conv) path: fused-lane
+//! execution must be bit-identical to sequential `run_image` across
+//! ragged batch sizes, blank lanes must cost zero AccW2V cycles, and
+//! fused batches must never cost more cycles per image than
+//! sequential processing (the ISSUE 3 acceptance criteria).
+
+use impulse::bits::XorShiftRng;
+use impulse::data::DigitsArtifacts;
+use impulse::isa::InstructionKind;
+use impulse::macro_sim::MacroConfig;
+use impulse::snn::{DigitsNetwork, DigitsResult};
+
+fn rand_images(seed: u64, n: usize) -> Vec<Vec<f32>> {
+    let mut rng = XorShiftRng::new(seed);
+    (0..n)
+        .map(|_| (0..28 * 28).map(|_| rng.gen_f64() as f32).collect())
+        .collect()
+}
+
+fn net(seed: u64) -> DigitsNetwork {
+    let a = DigitsArtifacts::synthetic(seed);
+    DigitsNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap()
+}
+
+fn run_sequential(net: &mut DigitsNetwork, images: &[Vec<f32>]) -> Vec<DigitsResult> {
+    images.iter().map(|img| net.run_image(img).unwrap()).collect()
+}
+
+/// The flagship differential: batched digits inference must reproduce
+/// every image's sequential `v_out` and `pred` exactly, at batch
+/// sizes 1, lane-max, and lane-max+1 (which exercises chunking).
+#[test]
+fn batched_digits_bit_identical_across_ragged_batch_sizes() {
+    let seed = 42;
+    let mut seq_net = net(seed);
+    let mut batch_net = net(seed);
+    let max = batch_net.max_batch_lanes();
+    assert!(max >= 2, "lane budget must allow real batches, got {max}");
+    let images = rand_images(7, max + 1);
+    let want = run_sequential(&mut seq_net, &images);
+    for bsz in [1usize, max, max + 1] {
+        let refs: Vec<&[f32]> = images[..bsz].iter().map(|v| v.as_slice()).collect();
+        let got = batch_net.run_images_batched(&refs).unwrap();
+        assert_eq!(got.len(), bsz);
+        for (i, (g, w)) in got.iter().zip(&want[..bsz]).enumerate() {
+            assert_eq!(g.v_out, w.v_out, "batch {bsz} image {i}: potentials diverged");
+            assert_eq!(g.pred, w.pred, "batch {bsz} image {i}: prediction diverged");
+        }
+    }
+}
+
+/// A blank image in a lane contributes nothing to the spike unions, so
+/// it must cost exactly its solo spend (neuron updates + read-out, no
+/// AccW2V) — and must not change the batch's AccW2V count at all.
+#[test]
+fn blank_lane_costs_zero_accw2v() {
+    let seed = 11;
+    let images = rand_images(3, 1);
+    let blank = vec![0.0f32; 28 * 28];
+
+    let mut solo = net(seed);
+    let want_img = solo.run_image(&images[0]).unwrap();
+    let want_blank = solo.run_image(&blank).unwrap();
+
+    // solo blank: no synapse fires anywhere
+    let mut blank_only = net(seed);
+    blank_only.run_image(&blank).unwrap();
+    assert_eq!(
+        blank_only.stats().histogram.get(&InstructionKind::AccW2V),
+        None,
+        "a blank image must not fire synapses"
+    );
+
+    // batched [img] vs [img, blank]: identical AccW2V spend
+    let mut a = net(seed);
+    a.run_images_batched(&[&images[0]]).unwrap();
+    let acc_one = a.stats().histogram.get(&InstructionKind::AccW2V).copied();
+    let mut b = net(seed);
+    let got = b.run_images_batched(&[&images[0], &blank]).unwrap();
+    let acc_two = b.stats().histogram.get(&InstructionKind::AccW2V).copied();
+    assert_eq!(acc_one, acc_two, "a blank lane must add zero AccW2V cycles");
+
+    // honest attribution: each lane pays exactly its solo spend (the
+    // lanes share no spiking rows, so no union cycle is split)
+    assert_eq!(got[0].v_out, want_img.v_out);
+    assert_eq!(got[1].v_out, want_blank.v_out);
+    assert_eq!(got[0].cycles, want_img.cycles, "image lane attribution");
+    assert_eq!(got[1].cycles, want_blank.cycles, "blank lane attribution");
+}
+
+/// The acceptance criterion on cost: fused batches at {1, 4, 16} must
+/// spend no more macro cycles per image than sequential runs (the
+/// union AccW2V stream can only shrink the issue count), with batch 1
+/// exactly equal.
+#[test]
+fn batched_cycles_per_image_never_exceed_sequential() {
+    let seed = 23;
+    let images = rand_images(9, 16);
+    let mut seq_net = net(seed);
+    let seq: Vec<u64> = run_sequential(&mut seq_net, &images)
+        .iter()
+        .map(|r| r.cycles)
+        .collect();
+    let mut batch_net = net(seed);
+    for bsz in [1usize, 4, 16] {
+        let refs: Vec<&[f32]> = images[..bsz].iter().map(|v| v.as_slice()).collect();
+        let got = batch_net.run_images_batched(&refs).unwrap();
+        let batched: u64 = got.iter().map(|r| r.cycles).sum();
+        let sequential: u64 = seq[..bsz].iter().sum();
+        assert!(
+            batched <= sequential,
+            "batch {bsz}: fused {batched} cycles > sequential {sequential}"
+        );
+        if bsz == 1 {
+            assert_eq!(batched, sequential, "a singleton batch pays its solo cost");
+        } else {
+            assert!(
+                batched < sequential,
+                "batch {bsz}: random images share spikes — fusion must amortize"
+            );
+        }
+    }
+}

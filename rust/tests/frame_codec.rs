@@ -5,9 +5,10 @@
 
 use impulse::proptest_lite::forall_ctx;
 use impulse::serve::{
-    crc32, decode_error, decode_infer_request, decode_infer_response, encode_infer_request,
-    error_payload, hello_payload, Decoded, ErrorCode, Frame, PayloadType, WireError,
-    CRC_LEN, HEADER_LEN, MAX_PAYLOAD, PROTOCOL_VERSION,
+    crc32, decode_digits_request, decode_digits_response, decode_error, decode_infer_request,
+    decode_infer_response, encode_digits_request, encode_infer_request, error_payload,
+    hello_payload, Decoded, ErrorCode, Frame, PayloadType, WireError, CRC_LEN, HEADER_LEN,
+    MAX_PAYLOAD, PROTOCOL_VERSION,
 };
 
 fn hex(s: &str) -> Vec<u8> {
@@ -34,7 +35,7 @@ fn protocol_md_worked_example_request() {
         "49 4D 50 31 01 10 00 00 00 00 00 00 00 00 00 07 00 00 00 0E \
          00 03 00 00 00 03 00 00 00 01 00 00 00 04 70 DD 68 B1",
     );
-    let f = Frame::new(PayloadType::InferRequest, 7, encode_infer_request(&[3, 1, 4]));
+    let f = Frame::new(PayloadType::InferRequest, 7, encode_infer_request(&[3, 1, 4]).unwrap());
     assert_eq!(f.encode(), wire, "encoder must produce the documented bytes");
     let g = decode_one(&wire);
     assert_eq!(g.version, PROTOCOL_VERSION);
@@ -188,7 +189,7 @@ fn prop_single_byte_corruption_is_detected() {
 /// §5: the checksum is verified before the payload is interpreted).
 #[test]
 fn payload_corruption_reports_bad_crc() {
-    let f = Frame::new(PayloadType::InferRequest, 11, encode_infer_request(&[5, 6]));
+    let f = Frame::new(PayloadType::InferRequest, 11, encode_infer_request(&[5, 6]).unwrap());
     for off in HEADER_LEN..HEADER_LEN + f.payload.len() {
         let mut bytes = f.encode();
         bytes[off] ^= 0x01;
@@ -219,4 +220,65 @@ fn oversized_rejected_max_size_accepted() {
         }
         other => panic!("max-size frame rejected: {other:?}"),
     }
+}
+
+/// PROTOCOL.md §6, digits example 1: `DigitsInferRequest`, request id
+/// 12, a 2×2 image `[0.0, 0.5, 1.0, -1.0]`.
+#[test]
+fn protocol_md_worked_example_digits_request() {
+    let wire = hex(
+        "49 4D 50 31 01 12 00 00 00 00 00 00 00 00 00 0C \
+         00 00 00 12 02 02 00 00 00 00 3F 00 00 00 3F 80 \
+         00 00 BF 80 00 00 85 CE EF 12",
+    );
+    let f = Frame::new(
+        PayloadType::DigitsInferRequest,
+        12,
+        encode_digits_request(2, 2, &[0.0, 0.5, 1.0, -1.0]).unwrap(),
+    );
+    assert_eq!(f.encode(), wire, "encoder must produce the documented bytes");
+    let g = decode_one(&wire);
+    assert_eq!(g.payload_type, PayloadType::DigitsInferRequest);
+    assert_eq!(g.request_id, 12);
+    assert_eq!(
+        decode_digits_request(&g.payload).unwrap(),
+        (2, 2, vec![0.0, 0.5, 1.0, -1.0])
+    );
+}
+
+/// PROTOCOL.md §6, digits example 2: the matching
+/// `DigitsInferResponse` (pred 3, ten potentials, cycles 51234,
+/// latency 181 µs, batch 2, worker 1).
+#[test]
+fn protocol_md_worked_example_digits_response() {
+    let wire = hex(
+        "49 4D 50 31 01 13 00 00 00 00 00 00 00 00 00 0C \
+         00 00 00 66 03 0A 00 00 00 00 00 00 00 00 FF FF \
+         FF FF FF FF FF FB 00 00 00 00 00 00 00 0C 00 00 \
+         00 00 00 00 00 28 00 00 00 00 00 00 00 07 FF FF \
+         FF FF FF FF FF FE 00 00 00 00 00 00 00 00 00 00 \
+         00 00 00 00 00 03 00 00 00 00 00 00 00 09 00 00 \
+         00 00 00 00 00 01 00 00 00 00 00 00 C8 22 00 00 \
+         00 00 00 00 00 B5 00 02 00 01 08 98 B3 23",
+    );
+    let g = decode_one(&wire);
+    assert_eq!(g.payload_type, PayloadType::DigitsInferResponse);
+    assert_eq!(g.request_id, 12);
+    let r = decode_digits_response(&g.payload).unwrap();
+    assert_eq!(r.pred, 3);
+    assert_eq!(r.v_all, vec![0, -5, 12, 40, 7, -2, 0, 3, 9, 1]);
+    assert_eq!(r.cycles, 51234);
+    assert_eq!(r.latency_us, 181);
+    assert_eq!((r.batch, r.worker), (2, 1));
+}
+
+/// The new v1 discriminants and error code round-trip on the wire.
+#[test]
+fn digits_discriminants_and_request_too_large_code() {
+    assert_eq!(PayloadType::DigitsInferRequest.as_u8(), 0x12);
+    assert_eq!(PayloadType::DigitsInferResponse.as_u8(), 0x13);
+    assert_eq!(PayloadType::from_u8(0x12), Some(PayloadType::DigitsInferRequest));
+    assert_eq!(PayloadType::from_u8(0x13), Some(PayloadType::DigitsInferResponse));
+    assert_eq!(ErrorCode::RequestTooLarge.as_u16(), 10);
+    assert_eq!(ErrorCode::from_u16(10), Some(ErrorCode::RequestTooLarge));
 }

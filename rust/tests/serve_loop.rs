@@ -51,15 +51,17 @@ fn check_exactly_one_response_each(opts: ServerOptions, n: u64) {
     // vocab ids (the synthetic vocab is 20), and an out-of-range id
     // that must come back as an error response rather than vanish.
     let reqs: Vec<Request> = (0..n)
-        .map(|i| Request {
-            id: i,
-            word_ids: match i % 5 {
-                0 => vec![(i as i64) % 20, 3, 5],
-                1 => vec![19], // last valid id (clamp target)
-                2 => vec![0, 0, 0, 0, 0, 0, 0, 0],
-                3 => vec![(i as i64) % 20, -1, 7], // padding mid-request
-                _ => vec![999], // out of range → error response
-            },
+        .map(|i| {
+            Request::words(
+                i,
+                match i % 5 {
+                    0 => vec![(i as i64) % 20, 3, 5],
+                    1 => vec![19], // last valid id (clamp target)
+                    2 => vec![0, 0, 0, 0, 0, 0, 0, 0],
+                    3 => vec![(i as i64) % 20, -1, 7], // padding mid-request
+                    _ => vec![999], // out of range → error response
+                },
+            )
         })
         .collect();
     let responses = serve_like_loop(&server, reqs);
@@ -133,9 +135,8 @@ fn every_id_answered_once_pipelined() {
 #[test]
 fn batched_serving_matches_unbatched() {
     let reqs: Vec<Request> = (0..30)
-        .map(|i| Request {
-            id: i,
-            word_ids: vec![(i as i64) % 20, (7 * i as i64) % 20, 11, (3 * i as i64) % 20],
+        .map(|i| {
+            Request::words(i, vec![(i as i64) % 20, (7 * i as i64) % 20, 11, (3 * i as i64) % 20])
         })
         .collect();
     let plain = InferenceServer::start(2, factory(7)).unwrap();
@@ -180,10 +181,7 @@ fn drain_completes_when_responses_lag_submits() {
     )
     .unwrap();
     let reqs: Vec<Request> = (0..6)
-        .map(|i| Request {
-            id: i,
-            word_ids: vec![(i as i64) % 20],
-        })
+        .map(|i| Request::words(i, vec![(i as i64) % 20]))
         .collect();
     let responses = serve_like_loop(&server, reqs);
     assert_eq!(responses.len(), 6);

@@ -230,3 +230,84 @@ fn unsupported_version_is_refused() {
     handle.stop();
     core.shutdown();
 }
+
+/// Digits over the framed transport: a fleet of pipelined image
+/// requests served with adaptive batching (fused conv lanes) must be
+/// bit-identical to solo `run_image` runs — batched-vs-sequential
+/// parity through the TCP serve path.
+#[test]
+fn digits_requests_over_tcp_match_solo_runs() {
+    use impulse::data::DigitsArtifacts;
+    use impulse::snn::DigitsNetwork;
+
+    let seed = 47;
+    let a = DigitsArtifacts::synthetic(seed);
+    let mut solo = DigitsNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+    let n = 4usize;
+    let want: Vec<_> = a.test_x[..n]
+        .iter()
+        .map(|img| solo.run_image(img).unwrap())
+        .collect();
+
+    let a2 = a.clone();
+    let core = Arc::new(
+        ServeCore::start_with(
+            ServerOptions {
+                workers: 2,
+                adaptive: true,
+                ..ServerOptions::default()
+            },
+            1,
+            move || DigitsNetwork::from_artifacts(&a2, MacroConfig::fast()),
+        )
+        .unwrap(),
+    );
+    let handle = serve_tcp("127.0.0.1:0", Arc::clone(&core)).unwrap();
+
+    let mut client = FrameClient::connect(handle.local_addr()).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    assert_eq!(client.hello().unwrap(), PROTOCOL_VERSION);
+    for (i, img) in a.test_x[..n].iter().enumerate() {
+        client.send_digits_infer(i as u64, 28, 28, img).unwrap();
+    }
+    let mut seen = HashMap::new();
+    for _ in 0..n {
+        let (id, res) = client.next_digits_result().unwrap().expect("stream ended early");
+        let r = res.unwrap_or_else(|(c, m)| panic!("req {id} failed over TCP ({c}): {m}"));
+        assert!(seen.insert(id, r).is_none(), "req {id} answered twice");
+    }
+    for (i, w) in want.iter().enumerate() {
+        let got = &seen[&(i as u64)];
+        assert_eq!(got.pred, w.pred, "req {i}: TCP vs solo prediction");
+        assert_eq!(got.v_all, w.v_out, "req {i}: TCP vs solo potentials");
+        assert!(got.cycles > 0, "req {i}: missing cost accounting");
+    }
+    // a malformed digits payload (wrong shape for the workload) errors
+    // per request and the connection stays usable
+    client.send_digits_infer(99, 2, 2, &[0.0; 4]).unwrap();
+    let (id, res) = client.next_digits_result().unwrap().unwrap();
+    assert_eq!(id, 99);
+    assert_eq!(res.unwrap_err().0, ErrorCode::InferenceFailed.as_u16());
+    client.finish_writes().unwrap();
+    assert!(client.next_frame().unwrap().is_none(), "server must close after drain");
+    handle.stop();
+    core.shutdown();
+}
+
+/// A `DigitsInferRequest` on a *sentiment* server is answered with an
+/// InferenceFailed error frame (the workload seam), not a hang or a
+/// misparse.
+#[test]
+fn digits_payload_on_sentiment_server_errors_cleanly() {
+    let (core, handle) = start_core(13, ServerOptions::default());
+    let mut client = FrameClient::connect(handle.local_addr()).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    client.send_digits_infer(5, 28, 28, &[0.0; 28 * 28]).unwrap();
+    let (id, res) = client.next_digits_result().unwrap().unwrap();
+    assert_eq!(id, 5);
+    assert_eq!(res.unwrap_err().0, ErrorCode::InferenceFailed.as_u16());
+    client.finish_writes().unwrap();
+    assert!(client.next_frame().unwrap().is_none());
+    handle.stop();
+    core.shutdown();
+}
