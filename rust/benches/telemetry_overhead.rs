@@ -1,0 +1,95 @@
+//! Perf bench: the in-band telemetry hot path. Recording must be
+//! cheap enough to leave on unconditionally — these measurements are
+//! the evidence (single atomic adds per event, a short CAS loop only
+//! for the EDP accumulator) — and snapshot/exposition costs bound what
+//! a scrape or `StatsRequest` does to a loaded server.
+
+use impulse::bench_harness::Bencher;
+use impulse::coordinator::{WorkloadInput, WorkloadKind};
+use impulse::isa::InstructionKind;
+use impulse::serve::encode_stats_response;
+use impulse::telemetry::{Telemetry, TelemetryConfig, Transport};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    println!("=== telemetry hot-path overhead ===\n");
+    let mut b = Bencher::default();
+    let tele = Telemetry::new(TelemetryConfig::default());
+
+    let batch = 1000u64;
+    b.bench(&format!("record_submit (×{batch})"), batch, || {
+        for _ in 0..batch {
+            tele.record_submit(WorkloadKind::Sentiment);
+        }
+    });
+    b.bench(&format!("record_response ok (×{batch})"), batch, || {
+        for _ in 0..batch {
+            tele.record_response(WorkloadKind::Sentiment, 35_200, 35_555, true);
+        }
+    });
+    let words = WorkloadInput::Words((0..64).collect());
+    b.bench(&format!("record_input 64 words (×{batch})"), batch, || {
+        for _ in 0..batch {
+            tele.record_input(&words);
+        }
+    });
+    let image = WorkloadInput::Image { h: 28, w: 28, pixels: vec![0.5; 28 * 28] };
+    b.bench(&format!("record_input 28×28 image (×{batch})"), batch, || {
+        for _ in 0..batch {
+            tele.record_input(&image);
+        }
+    });
+    b.bench(&format!("record_wire tcp (×{batch})"), batch, || {
+        for _ in 0..batch {
+            tele.record_wire(Transport::Tcp, Duration::from_micros(181));
+        }
+    });
+    let mut hist = BTreeMap::new();
+    hist.insert(InstructionKind::AccW2V, 30_000u64);
+    hist.insert(InstructionKind::SpikeCheck, 2_000u64);
+    hist.insert(InstructionKind::ResetV, 2_000u64);
+    b.bench(&format!("record_instr + energy_of (×{batch})"), batch, || {
+        for _ in 0..batch {
+            tele.record_instr(&hist);
+            std::hint::black_box(tele.energy_of(&hist));
+        }
+    });
+
+    // contended: 4 threads hammering one registry
+    let shared = Arc::new(Telemetry::new(TelemetryConfig::default()));
+    b.bench("4-thread contended record (×4000)", 4000, || {
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let t = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        t.record_submit(WorkloadKind::Digits);
+                        t.record_response(WorkloadKind::Digits, 51_234, 51_751, true);
+                        t.record_wire(Transport::Tcp, Duration::from_micros(90));
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+    });
+
+    // read-side costs
+    b.bench("snapshot", 1, || {
+        std::hint::black_box(tele.snapshot());
+    });
+    let snap = tele.snapshot();
+    b.bench("encode_stats_response", 1, || {
+        std::hint::black_box(encode_stats_response(&snap));
+    });
+    b.bench("to_prometheus", 1, || {
+        std::hint::black_box(snap.to_prometheus());
+    });
+
+    let wire = encode_stats_response(&snap);
+    println!("\nStatsResponse payload: {} bytes", wire.len());
+    println!("Prometheus page: {} bytes", snap.to_prometheus().len());
+}

@@ -5,6 +5,7 @@ pub mod infer;
 pub mod info;
 pub mod report;
 pub mod serve;
+pub mod stats;
 
 use impulse::config::RunConfig;
 use impulse::Result;
@@ -85,6 +86,12 @@ pub fn run_config(flags: &Flags) -> Result<RunConfig> {
     if flags.has("stdio") {
         // explicit stdio fallback wins over a configured listen addr
         cfg.listen = None;
+    }
+    if let Some(addr) = flags.get("metrics-listen") {
+        cfg.metrics_listen = Some(addr.to_string());
+    }
+    if let Some(n) = flags.get_usize("queue-soft-limit") {
+        cfg.queue_soft_limit = n as u64;
     }
     if let Some(n) = flags.get_usize("max") {
         cfg.max_samples = n;

@@ -34,6 +34,7 @@ use impulse::serve::{
     install_shutdown_handler, serve_tcp, ClientSession, ServeCore, TcpServeHandle,
 };
 use impulse::snn::{DigitsNetwork, SentimentNetwork};
+use impulse::telemetry::{serve_metrics, Telemetry, Transport};
 use impulse::Result;
 use std::io::{BufRead, Write};
 use std::sync::atomic::Ordering;
@@ -75,6 +76,10 @@ pub fn run(args: &[String]) -> Result<()> {
     let cfg = super::run_config(&flags)?;
     let mac = cfg.macro_config();
     let mut opts = cfg.server_options();
+    // one registry for the whole process: the worker pool, the frame
+    // listener, the stdio loop, and the metrics endpoint all share it
+    let telemetry = Arc::new(Telemetry::new(cfg.telemetry_config()));
+    opts.telemetry = Some(Arc::clone(&telemetry));
     let model = flags.get("model").unwrap_or("sentiment");
     let core = match model {
         "sentiment" => {
@@ -109,17 +114,30 @@ pub fn run(args: &[String]) -> Result<()> {
         other => anyhow::bail!("unknown --model '{other}' (sentiment|digits)"),
     };
     let batching = opts.batching_label();
+    let metrics = match cfg.metrics_listen.as_deref() {
+        Some(addr) => {
+            let h = serve_metrics(addr, Arc::clone(&telemetry))?;
+            eprintln!(
+                "impulse serve: metrics (Prometheus text) on http://{}/metrics",
+                h.local_addr()
+            );
+            Some(h)
+        }
+        None => None,
+    };
     match cfg.listen.as_deref() {
         Some(addr) => {
             let handle = serve_tcp(addr, Arc::clone(&core))?;
             eprintln!(
                 "impulse serve: {} {model} workers on tcp://{} ({batching}{}); \
                  binary frame protocol v{} (docs/PROTOCOL.md); \
+                 `impulse stats {}` for live telemetry; \
                  SIGINT/SIGTERM drains and exits",
                 opts.workers,
                 handle.local_addr(),
                 if opts.pipeline { ", pipelined" } else { "" },
                 impulse::serve::PROTOCOL_VERSION,
+                handle.local_addr(),
             );
             serve_until_signalled(handle);
         }
@@ -131,9 +149,12 @@ pub fn run(args: &[String]) -> Result<()> {
                 opts.workers,
                 if opts.pipeline { ", pipelined" } else { "" },
             );
-            run_stdio(&session)?;
+            run_stdio(&session, &telemetry)?;
             drop(session); // release the submit handle before shutdown
         }
+    }
+    if let Some(h) = metrics {
+        h.stop();
     }
     core.shutdown();
     Ok(())
@@ -159,8 +180,9 @@ fn serve_until_signalled(handle: TcpServeHandle) {
 /// Every submitted request yields exactly one response (errors come
 /// back as [`Response::err`]), so a submit/response counter pair is
 /// the drain invariant; ready responses are drained opportunistically
-/// between submits.
-fn run_stdio(session: &ClientSession) -> Result<()> {
+/// between submits. Delivered responses are recorded on the `stdio`
+/// transport's telemetry latency histogram.
+fn run_stdio(session: &ClientSession, telemetry: &Telemetry) -> Result<()> {
     let stdin = std::io::stdin();
     let mut stdout = std::io::stdout();
     let mut pending = 0u64;
@@ -196,6 +218,7 @@ fn run_stdio(session: &ClientSession) -> Result<()> {
         // drain whatever is ready without blocking the input loop
         while let Some(r) = session.try_recv() {
             pending -= 1;
+            telemetry.record_wire(Transport::Stdio, r.latency);
             write_response(&mut stdout, &r)?;
         }
         stdout.flush()?;
@@ -204,6 +227,7 @@ fn run_stdio(session: &ClientSession) -> Result<()> {
     while pending > 0 {
         let r = session.recv()?;
         pending -= 1;
+        telemetry.record_wire(Transport::Stdio, r.latency);
         write_response(&mut stdout, &r)?;
     }
     stdout.flush()?;

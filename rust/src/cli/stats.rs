@@ -1,0 +1,124 @@
+//! `impulse stats <addr>` — fetch and print a server's live telemetry.
+//!
+//! Connects to a running `impulse serve --listen` instance over the
+//! binary frame protocol, negotiates the backpressure capability,
+//! sends one `StatsRequest` (`0x14`), and renders the `StatsResponse`
+//! (`0x15`) snapshot: per-workload request/energy/EDP counters,
+//! observed input sparsity, instruction issue, batch-lane occupancy,
+//! per-transport latency, and the live backpressure advertisement from
+//! the response frame's flags word.
+
+use super::Flags;
+use impulse::metrics::eng;
+use impulse::serve::{decode_backpressure, FrameClient, CAP_BACKPRESSURE};
+use impulse::telemetry::{instr_from_code, instr_name, kind_name, StatsSnapshot};
+use impulse::Result;
+use std::time::Duration;
+
+/// The first positional (non-flag) argument, skipping each `--key`
+/// together with the value token it consumed.
+fn positional(args: &[String]) -> Option<&String> {
+    let mut i = 0;
+    while i < args.len() {
+        if args[i].starts_with("--") {
+            // skip the flag's value, if it has one (mirrors Flags::parse)
+            if args.get(i + 1).is_some_and(|v| !v.starts_with("--")) {
+                i += 1;
+            }
+        } else {
+            return Some(&args[i]);
+        }
+        i += 1;
+    }
+    None
+}
+
+pub fn run(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args);
+    let addr = positional(args)
+        .ok_or_else(|| anyhow::anyhow!("usage: impulse stats <addr> (e.g. 127.0.0.1:7878)"))?;
+    let timeout = Duration::from_secs_f64(flags.get_f64("timeout-s").unwrap_or(10.0));
+
+    let mut client = FrameClient::connect(addr.as_str())?;
+    client.set_read_timeout(Some(timeout))?;
+    let (version, caps) = client.hello_with_caps(CAP_BACKPRESSURE)?;
+    let (snap, frame_flags) = client.fetch_stats(1)?;
+    client.finish_writes().ok();
+
+    println!("impulse stats — tcp://{addr} (protocol v{version}, caps {caps:#04x})");
+    print_snapshot(&snap, frame_flags);
+    Ok(())
+}
+
+/// Render a snapshot (and the response frame's flags word) for humans.
+fn print_snapshot(s: &StatsSnapshot, frame_flags: u16) {
+    let live = match decode_backpressure(frame_flags) {
+        Some(bp) => format!(
+            " [frame flags: depth {}, {}]",
+            bp.queue_depth,
+            if bp.soft_limited { "SOFT-LIMITED" } else { "clear" }
+        ),
+        None => String::new(),
+    };
+    println!(
+        "queue: depth {} / soft limit {} (backpressure: {}){live}",
+        s.queue_depth,
+        s.queue_soft_limit,
+        if s.soft_limited { "SIGNALLED" } else { "clear" },
+    );
+    println!(
+        "batches: {} ({:.2} lanes occupied on average, {} of {} lane-slots used)",
+        s.batches, s.mean_batch_occupancy(), s.batch_lanes, s.batch_lane_capacity,
+    );
+    for k in &s.kinds {
+        if k.submitted == 0 && k.ok == 0 && k.err == 0 {
+            continue;
+        }
+        println!(
+            "workload {}: submitted {}, ok {}, err {}",
+            kind_name(k.kind),
+            k.submitted,
+            k.ok,
+            k.err
+        );
+        println!(
+            "  cycles {}, energy {}, EDP {}",
+            k.cycles,
+            eng(k.energy_fj as f64 * 1e-15, "J"),
+            eng(k.edp_js, "J·s"),
+        );
+        if k.input_units > 0 {
+            println!(
+                "  input sparsity {:.1}% ({} of {} units active)",
+                k.input_sparsity() * 100.0,
+                k.input_active,
+                k.input_units,
+            );
+        }
+    }
+    let issued: Vec<String> = s
+        .instr
+        .iter()
+        .filter(|(_, n)| *n > 0)
+        .map(|&(code, n)| {
+            let label = instr_from_code(code).map(instr_name).unwrap_or("unknown");
+            format!("{label} {n}")
+        })
+        .collect();
+    if !issued.is_empty() {
+        println!("instructions: {}", issued.join(", "));
+    }
+    for t in &s.transports {
+        if t.count == 0 {
+            continue;
+        }
+        println!(
+            "transport {}: {} served, mean {}, p50 ≤ {}, p99 ≤ {}",
+            t.transport.name(),
+            t.count,
+            eng(t.sum_us as f64 / t.count as f64 * 1e-6, "s"),
+            eng(t.quantile_us(0.5) as f64 * 1e-6, "s"),
+            eng(t.quantile_us(0.99) as f64 * 1e-6, "s"),
+        );
+    }
+}

@@ -36,6 +36,13 @@ pub struct RunConfig {
     /// TCP listen address for `impulse serve` (e.g. `127.0.0.1:7878`);
     /// `None` keeps the stdio line loop.
     pub listen: Option<String>,
+    /// Plaintext metrics exposition address (Prometheus text format)
+    /// for `impulse serve`; `None` disables the endpoint.
+    pub metrics_listen: Option<String>,
+    /// Queue depth at which the server signals backpressure (the
+    /// soft-limit bit in response flags and `StatsResponse`); 0
+    /// signals unconditionally (maintenance/drain mode).
+    pub queue_soft_limit: u64,
     /// Samples to evaluate in e2e runs (0 = all).
     pub max_samples: usize,
     /// Timesteps per word (sentiment) / per image (digits).
@@ -58,6 +65,8 @@ impl Default for RunConfig {
             pipeline: false,
             adaptive: false,
             listen: None,
+            metrics_listen: None,
+            queue_soft_limit: crate::telemetry::DEFAULT_QUEUE_SOFT_LIMIT,
             max_samples: 0,
             timesteps: 10,
         }
@@ -117,6 +126,12 @@ impl RunConfig {
         if let Some(v) = doc.get_str("run", "listen") {
             self.listen = Some(v.to_string());
         }
+        if let Some(v) = doc.get_str("run", "metrics_listen") {
+            self.metrics_listen = Some(v.to_string());
+        }
+        if let Some(v) = doc.get_i64("run", "queue_soft_limit") {
+            self.queue_soft_limit = v.max(0) as u64;
+        }
         if let Some(v) = doc.get_i64("run", "max_samples") {
             self.max_samples = v.max(0) as usize;
         }
@@ -135,7 +150,8 @@ impl RunConfig {
         }
     }
 
-    /// The server options implied by this run config.
+    /// The server options implied by this run config (telemetry is
+    /// wired in by the serve CLI, which owns the registry).
     pub fn server_options(&self) -> crate::coordinator::ServerOptions {
         crate::coordinator::ServerOptions {
             workers: self.workers,
@@ -144,6 +160,17 @@ impl RunConfig {
             pipeline: self.pipeline,
             adaptive: self.adaptive,
             ..crate::coordinator::ServerOptions::default()
+        }
+    }
+
+    /// The telemetry configuration implied by this run config: energy
+    /// attribution at the configured operating point, backpressure at
+    /// the configured soft limit.
+    pub fn telemetry_config(&self) -> crate::telemetry::TelemetryConfig {
+        crate::telemetry::TelemetryConfig {
+            vdd: self.vdd,
+            freq_hz: self.freq_hz,
+            queue_soft_limit: self.queue_soft_limit,
         }
     }
 }
@@ -176,6 +203,8 @@ mod tests {
             pipeline = true
             adaptive = true
             listen = "127.0.0.1:7878"
+            metrics_listen = "127.0.0.1:9200"
+            queue_soft_limit = 64
             max_samples = 100
             timesteps = 5
             "#,
@@ -193,8 +222,14 @@ mod tests {
         assert!(c.pipeline);
         assert!(c.adaptive);
         assert_eq!(c.listen.as_deref(), Some("127.0.0.1:7878"));
+        assert_eq!(c.metrics_listen.as_deref(), Some("127.0.0.1:9200"));
+        assert_eq!(c.queue_soft_limit, 64);
         assert_eq!(c.max_samples, 100);
         assert_eq!(c.timesteps, 5);
+        let t = c.telemetry_config();
+        assert_eq!(t.vdd, 1.2);
+        assert_eq!(t.freq_hz, 500e6);
+        assert_eq!(t.queue_soft_limit, 64);
         let opts = c.server_options();
         assert_eq!(opts.workers, 3);
         assert_eq!(opts.batch_size, 16);

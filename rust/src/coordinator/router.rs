@@ -22,6 +22,7 @@
 
 use super::workload::{Workload, WorkloadInput, WorkloadKind};
 use crate::metrics::LatencyStats;
+use crate::telemetry::Telemetry;
 use crate::Result;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -104,6 +105,12 @@ pub struct ServerOptions {
     /// workers instead of serializing as chunks on one; always clamped
     /// to [`crate::macro_sim::MAX_FUSED_LANES`].
     pub adaptive_cap: usize,
+    /// Live telemetry registry the submit chokepoint and worker pool
+    /// update in-band (per-kind request/response counters, queue
+    /// depth, batch occupancy, instruction and energy attribution).
+    /// `None` (the default) records nothing; `serve::ServeCore`
+    /// always wires one in.
+    pub telemetry: Option<Arc<Telemetry>>,
 }
 
 impl ServerOptions {
@@ -129,6 +136,7 @@ impl Default for ServerOptions {
             pipeline: false,
             adaptive: false,
             adaptive_cap: crate::macro_sim::MAX_FUSED_LANES,
+            telemetry: None,
         }
     }
 }
@@ -139,21 +147,36 @@ struct Queued {
     t0: Instant,
 }
 
-/// Shared submit path of [`InferenceServer`] and [`Submitter`].
+/// Shared submit path of [`InferenceServer`] and [`Submitter`] — the
+/// single chokepoint every transport funnels through, which is what
+/// makes the telemetry submit/queue-depth counters exact.
 fn submit_inner(
     tx: &mpsc::Sender<Queued>,
     inflight: &AtomicU64,
+    telemetry: &Option<Arc<Telemetry>>,
     req: Request,
 ) -> Result<()> {
     inflight.fetch_add(1, Ordering::SeqCst);
-    tx.send(Queued {
+    let kind = req.input.kind();
+    // count the submission *before* it can be answered — a fast worker
+    // must never decrement the depth gauge ahead of the increment —
+    // and roll back if the queue is gone (mirrors `inflight`)
+    if let Some(t) = telemetry {
+        t.record_submit(kind);
+    }
+    match tx.send(Queued {
         req,
         t0: Instant::now(),
-    })
-    .map_err(|_| {
-        inflight.fetch_sub(1, Ordering::SeqCst);
-        anyhow::anyhow!("server shut down")
-    })
+    }) {
+        Ok(()) => Ok(()),
+        Err(_) => {
+            inflight.fetch_sub(1, Ordering::SeqCst);
+            if let Some(t) = telemetry {
+                t.record_submit_rejected(kind);
+            }
+            Err(anyhow::anyhow!("server shut down"))
+        }
+    }
 }
 
 /// A clone-able request-submission handle onto a running
@@ -165,12 +188,13 @@ fn submit_inner(
 pub struct Submitter {
     tx: mpsc::Sender<Queued>,
     inflight: Arc<AtomicU64>,
+    telemetry: Option<Arc<Telemetry>>,
 }
 
 impl Submitter {
     /// Enqueue a request (same contract as [`InferenceServer::submit`]).
     pub fn submit(&self, req: Request) -> Result<()> {
-        submit_inner(&self.tx, &self.inflight, req)
+        submit_inner(&self.tx, &self.inflight, &self.telemetry, req)
     }
 
     /// Requests submitted but not yet answered (server-wide).
@@ -272,6 +296,7 @@ pub struct InferenceServer {
     batcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     inflight: Arc<AtomicU64>,
+    telemetry: Option<Arc<Telemetry>>,
 }
 
 impl InferenceServer {
@@ -362,6 +387,9 @@ impl InferenceServer {
                         return;
                     }
                 };
+                // discard construction-time instruction counts so the
+                // first batch's telemetry delta is inference only
+                let _ = net.take_instr_histogram();
                 while let Some(batch) = router.pop(w) {
                     serve_batch(&mut net, w, &opts, batch, &tx_out, &inflight);
                 }
@@ -373,12 +401,13 @@ impl InferenceServer {
             batcher: Some(batcher),
             workers,
             inflight,
+            telemetry: opts.telemetry,
         })
     }
 
     /// Enqueue a request.
     pub fn submit(&self, req: Request) -> Result<()> {
-        submit_inner(&self.tx, &self.inflight, req)
+        submit_inner(&self.tx, &self.inflight, &self.telemetry, req)
     }
 
     /// A clone-able submission handle sharing this server's queue —
@@ -387,6 +416,7 @@ impl InferenceServer {
         Submitter {
             tx: self.tx.clone(),
             inflight: Arc::clone(&self.inflight),
+            telemetry: self.telemetry.clone(),
         }
     }
 
@@ -447,10 +477,35 @@ impl InferenceServer {
     }
 }
 
+/// Energy in femtojoules, for telemetry's integer accumulators.
+fn joules_to_fj(e: f64) -> u64 {
+    (e * 1e15).round() as u64
+}
+
+/// Drain the worker's instruction counters into telemetry and return
+/// the batch's attributed energy as femtojoules (0 when the workload
+/// does not track histograms).
+fn record_batch_energy<W: Workload>(net: &mut W, tele: &Telemetry) -> u64 {
+    match net.take_instr_histogram() {
+        Some(h) => {
+            tele.record_instr(&h);
+            joules_to_fj(tele.energy_of(&h))
+        }
+        None => 0,
+    }
+}
+
 /// Run one micro-batch on a worker's replica and publish one response
 /// per request. Every submitted request yields exactly one response —
 /// inference errors come back with [`Response::err`] set instead of
 /// being dropped (the serve loop's drain bookkeeping relies on this).
+///
+/// When a telemetry registry is wired in, the batch is accounted
+/// in-band: lane occupancy and observed input sparsity up front, then
+/// the worker's instruction-histogram delta is priced through the
+/// energy model and split across the batch's requests in proportion to
+/// their attributed cycles (`metrics::apportion` — exact, like the
+/// cycle split itself).
 fn serve_batch<W: Workload>(
     net: &mut W,
     worker: usize,
@@ -460,6 +515,13 @@ fn serve_batch<W: Workload>(
     inflight: &AtomicU64,
 ) {
     let n = batch.len();
+    let tele = opts.telemetry.as_deref();
+    if let Some(t) = tele {
+        t.record_batch(n as u64, net.max_batch_lanes() as u64);
+        for q in &batch {
+            t.record_input(&q.req.input);
+        }
+    }
     let outcome = if n == 1 {
         let r = if opts.pipeline {
             net.run_one_pipelined(&batch[0].req.input)
@@ -473,7 +535,16 @@ fn serve_batch<W: Workload>(
     };
     match outcome {
         Ok(results) => {
-            for (q, r) in batch.iter().zip(results) {
+            let energy_fj = tele.map(|t| {
+                let total = record_batch_energy(net, t);
+                let weights: Vec<f64> = results.iter().map(|r| r.cycles as f64).collect();
+                crate::metrics::apportion(&weights, total)
+            });
+            for (i, (q, r)) in batch.iter().zip(results).enumerate() {
+                if let Some(t) = tele {
+                    let e = energy_fj.as_ref().map_or(0, |v| v[i]);
+                    t.record_response(q.req.input.kind(), r.cycles, e, true);
+                }
                 // decrement before publishing so inflight() == 0 is
                 // observable once every response has been received
                 inflight.fetch_sub(1, Ordering::SeqCst);
@@ -492,14 +563,36 @@ fn serve_batch<W: Workload>(
             }
         }
         Err(e) if n == 1 => {
+            if let Some(t) = tele {
+                // the failed attempt's instruction spend is real; fold
+                // it into the error response's attribution
+                let e_fj = record_batch_energy(net, t);
+                t.record_response(batch[0].req.input.kind(), 0, e_fj, false);
+            }
             inflight.fetch_sub(1, Ordering::SeqCst);
             let _ = tx_out.send(err_response(&batch[0], worker, &e));
         }
         Err(_) => {
             // A bad request poisons the fused batch; retry each request
             // alone so its batchmates still succeed.
-            for q in &batch {
+            let poisoned_fj = tele.map_or_else(Vec::new, |t| {
+                // the poisoned fused attempt's spend is real but has no
+                // per-lane cycle attribution — split it evenly so the
+                // energy counters stay consistent with the instruction
+                // counters it was recorded into
+                let total = record_batch_energy(net, t);
+                crate::metrics::apportion(&vec![1.0; n], total)
+            });
+            for (i, q) in batch.iter().enumerate() {
                 let res = net.run_one(&q.req.input);
+                if let Some(t) = tele {
+                    let e_fj =
+                        record_batch_energy(net, t) + poisoned_fj.get(i).copied().unwrap_or(0);
+                    match &res {
+                        Ok(r) => t.record_response(q.req.input.kind(), r.cycles, e_fj, true),
+                        Err(_) => t.record_response(q.req.input.kind(), 0, e_fj, false),
+                    }
+                }
                 inflight.fetch_sub(1, Ordering::SeqCst);
                 let resp = match res {
                     Ok(r) => Response {
@@ -835,6 +928,81 @@ mod tests {
         }
         assert_eq!(server.inflight(), 0);
         server.shutdown();
+    }
+
+    /// With a telemetry registry wired in, the counters account the
+    /// served load exactly: per-kind submissions and outcomes, cycle
+    /// totals conserved against the responses, nonzero energy/EDP,
+    /// batch-lane occupancy summing to the request count, and a
+    /// drained queue-depth gauge.
+    #[test]
+    fn telemetry_accounts_served_batches_exactly() {
+        use crate::isa::InstructionKind;
+        let tele = Arc::new(Telemetry::default());
+        let server = InferenceServer::start_with(
+            ServerOptions {
+                workers: 2,
+                adaptive: true,
+                telemetry: Some(Arc::clone(&tele)),
+                ..ServerOptions::default()
+            },
+            mini_factory(41),
+        )
+        .unwrap();
+        let reqs: Vec<Request> = (0..9)
+            .map(|i| Request::words(i, vec![(i as i64) % 20, 4, 11]))
+            .collect();
+        let (responses, _) = server.run_batch(reqs).unwrap();
+        assert!(responses.iter().all(|r| r.err.is_none()));
+        server.shutdown();
+
+        let s = tele.snapshot();
+        let k = s.kind(WorkloadKind::Sentiment).unwrap();
+        assert_eq!((k.submitted, k.ok, k.err), (9, 9, 0));
+        let total_cycles: u64 = responses.iter().map(|r| r.cycles).sum();
+        assert_eq!(k.cycles, total_cycles, "attributed cycles must be conserved");
+        assert!(k.energy_fj > 0, "served load must attribute energy");
+        assert!(k.edp_js > 0.0, "served load must attribute EDP");
+        assert_eq!(k.input_units, 9 * 3);
+        assert_eq!(k.input_active, 9 * 3, "no padding ids in this load");
+        assert_eq!(s.queue_depth, 0, "gauge must drain with the queue");
+        assert_eq!(s.batch_lanes, 9, "every request occupies exactly one lane");
+        assert!(s.batches >= 1 && s.batches <= 9);
+        assert!(s.batch_lane_capacity >= s.batch_lanes);
+        assert!(
+            s.instr_count(InstructionKind::AccW2V) > 0,
+            "spike-driven AccW2V issue must be visible"
+        );
+        // the digits row stays untouched by a sentiment-only load
+        let d = s.kind(WorkloadKind::Digits).unwrap();
+        assert_eq!((d.submitted, d.ok, d.err), (0, 0, 0));
+    }
+
+    /// Failed requests are accounted as errors (cycles 0) without
+    /// wedging the gauge or the per-kind totals.
+    #[test]
+    fn telemetry_counts_error_responses() {
+        let tele = Arc::new(Telemetry::default());
+        let server = InferenceServer::start_with(
+            ServerOptions {
+                workers: 1,
+                telemetry: Some(Arc::clone(&tele)),
+                ..ServerOptions::default()
+            },
+            mini_factory(43),
+        )
+        .unwrap();
+        // vocab is 20 in the mini artifacts: id 999 fails inference
+        let (responses, _) = server
+            .run_batch(vec![Request::words(0, vec![1, 2]), Request::words(1, vec![999])])
+            .unwrap();
+        assert!(responses[0].err.is_none());
+        assert!(responses[1].err.is_some());
+        server.shutdown();
+        let s = tele.snapshot();
+        let k = s.kind(WorkloadKind::Sentiment).unwrap();
+        assert_eq!((k.submitted, k.ok, k.err), (2, 1, 1));
+        assert_eq!(s.queue_depth, 0);
     }
 
     #[test]

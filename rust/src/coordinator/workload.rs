@@ -7,8 +7,10 @@
 //! sizing machinery. Two workloads ship today: the sentiment FC stack
 //! (word-id sequences) and the digits conv network (28×28 images).
 
+use crate::isa::InstructionKind;
 use crate::snn::{DigitsNetwork, SentimentNetwork};
 use crate::Result;
+use std::collections::BTreeMap;
 
 /// One request's input, workload-tagged. The coordinator treats it as
 /// opaque; workloads reject kinds they cannot serve.
@@ -82,6 +84,18 @@ pub trait Workload: Send + 'static {
 
     /// Widest batch one pass through the macro pool can fuse.
     fn max_batch_lanes(&self) -> usize;
+
+    /// Drain the macro pools' instruction counters accumulated since
+    /// the last call (resetting them), for telemetry's instruction and
+    /// energy accounting. `None` when the workload does not track
+    /// instruction histograms (the default) — telemetry then skips
+    /// energy attribution for its batches. Workloads that implement
+    /// this must only be probed *between* runs: per-run cycle
+    /// accounting inside `run_one`/`run_batched` snapshots its own
+    /// baseline, so a between-runs reset never skews it.
+    fn take_instr_histogram(&mut self) -> Option<BTreeMap<InstructionKind, u64>> {
+        None
+    }
 }
 
 fn want_words(input: &WorkloadInput) -> Result<&[i64]> {
@@ -131,6 +145,12 @@ impl Workload for SentimentNetwork {
 
     fn max_batch_lanes(&self) -> usize {
         SentimentNetwork::max_batch_lanes(self)
+    }
+
+    fn take_instr_histogram(&mut self) -> Option<BTreeMap<InstructionKind, u64>> {
+        let h = self.stats().histogram;
+        self.reset_counters();
+        Some(h)
     }
 }
 
@@ -183,6 +203,12 @@ impl Workload for DigitsNetwork {
     fn max_batch_lanes(&self) -> usize {
         DigitsNetwork::max_batch_lanes(self)
     }
+
+    fn take_instr_histogram(&mut self) -> Option<BTreeMap<InstructionKind, u64>> {
+        let h = self.stats().histogram;
+        self.reset_counters();
+        Some(h)
+    }
 }
 
 #[cfg(test)]
@@ -203,6 +229,26 @@ mod tests {
         assert!(net.run_one(&WorkloadInput::Words(vec![1, 2])).is_err());
         let bad = WorkloadInput::Image { h: 4, w: 4, pixels: vec![0.0; 16] };
         assert!(net.run_one(&bad).is_err());
+    }
+
+    /// `take_instr_histogram` hands telemetry the instruction issue
+    /// since the last call and drains the counters, without touching
+    /// per-run cycle accounting.
+    #[test]
+    fn take_instr_histogram_drains_counters_between_runs() {
+        let a = SentimentArtifacts::synthetic(3);
+        let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let _ = net.take_instr_histogram(); // discard construction writes
+        let input = WorkloadInput::Words(vec![1, 2, 3]);
+        let r1 = net.run_one(&input).unwrap();
+        assert!(r1.cycles > 0);
+        let h = net.take_instr_histogram().expect("sentiment tracks histograms");
+        assert!(h.values().sum::<u64>() > 0, "a run must issue instructions");
+        let drained = net.take_instr_histogram().unwrap();
+        assert_eq!(drained.values().sum::<u64>(), 0, "counters must drain");
+        // cycle accounting is per-run and survives the reset
+        let r2 = net.run_one(&input).unwrap();
+        assert_eq!(r2.cycles, r1.cycles, "reset must not skew per-run cycles");
     }
 
     #[test]

@@ -22,6 +22,9 @@
 //! - [`serve`] — the serving front-end: binary frame codec
 //!   (`docs/PROTOCOL.md`), multi-client TCP listener, and the
 //!   transport-agnostic session path shared with the stdio loop.
+//! - [`telemetry`] — live serving telemetry: the lock-free registry,
+//!   `StatsRequest`/`StatsResponse` snapshots, Prometheus exposition,
+//!   and backpressure signalling.
 //! - [`energy`] — silicon-calibrated power/energy/EDP, Shmoo, and area
 //!   models.
 //! - [`baselines`] — LSTM baseline, non-fused accelerator model, and the
@@ -52,6 +55,7 @@ pub mod proptest_lite;
 pub mod runtime;
 pub mod serve;
 pub mod snn;
+pub mod telemetry;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -13,6 +13,9 @@
 //!            [--workers N] [--batch B]            (docs/PROTOCOL.md) or the
 //!            [--batch-deadline-us U]              stdin/stdout line loop
 //!            [--adaptive] [--pipeline]
+//!            [--metrics-listen ADDR]              Prometheus text endpoint
+//!            [--queue-soft-limit N]               backpressure threshold
+//!   stats    ADDR                                 live telemetry of a server
 //!   shmoo                                         print the Fig 8 grid
 //!   sweep    [--neuron rmp|if|lif]                EDP vs sparsity (Fig 11b)
 //!   info                                          artifact + model summary
@@ -37,6 +40,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "infer" => cli::infer::run(rest),
         "eval" => cli::eval::run(rest),
         "serve" => cli::serve::run(rest),
+        "stats" => cli::stats::run(rest),
         "shmoo" => cli::report::shmoo(),
         "sweep" => cli::report::sweep(rest),
         "trace-vmem" => cli::infer::trace_vmem(rest),
@@ -71,6 +75,7 @@ COMMANDS:
     serve [--listen ADDR | --stdio] [--model sentiment|digits]
           [--workers N] [--batch B]
           [--batch-deadline-us U] [--adaptive] [--pipeline]
+          [--metrics-listen ADDR] [--queue-soft-limit N]
                                     inference server: --listen serves the
                                     length-prefixed binary frame protocol
                                     (docs/PROTOCOL.md) to concurrent TCP
@@ -80,7 +85,16 @@ COMMANDS:
                                     requests into one instruction stream
                                     per tile; --adaptive sizes batches
                                     from queue depth instead; --model
-                                    digits serves 28×28 image payloads
+                                    digits serves 28×28 image payloads.
+                                    --metrics-listen exposes live
+                                    telemetry as Prometheus text;
+                                    --queue-soft-limit sets the depth at
+                                    which responses advertise
+                                    backpressure (0 = always, for drains)
+    stats ADDR                      fetch a running server's live
+                                    telemetry (StatsRequest over the
+                                    frame protocol): requests, energy,
+                                    EDP, sparsity, queue depth, latency
     shmoo                           print the Fig 8 Shmoo grid
     sweep [--neuron rmp|if|lif]     EDP vs sparsity sweep (Fig 11b)
     trace-vmem [--sample N]         Fig 10: output-neuron V_MEM trajectory

@@ -268,6 +268,57 @@ mod tests {
         assert_eq!(shares, vec![7, 0, 0]);
     }
 
+    /// An empty reservoir must yield zero quantiles (and a sane
+    /// report), not a panic or an out-of-bounds index.
+    #[test]
+    fn quantile_on_empty_reservoir_is_zero() {
+        let s = LatencyStats::new(64);
+        assert_eq!(s.count(), 0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(s.quantile(q), Duration::ZERO, "q={q}");
+        }
+        assert_eq!(s.mean(), Duration::ZERO);
+        assert_eq!(s.min(), Duration::ZERO);
+        assert!(s.report("empty").contains("n=0"));
+        // a zero-capacity reservoir never holds samples but must keep
+        // counting and stay quantile-safe
+        let mut z = LatencyStats::new(0);
+        z.record(Duration::from_micros(7));
+        assert_eq!(z.count(), 1);
+        assert_eq!(z.quantile(0.5), Duration::ZERO);
+    }
+
+    /// All-zero weights with a total that does not divide evenly: the
+    /// even-split fallback must still conserve the total exactly, with
+    /// shares within one unit of each other.
+    #[test]
+    fn apportion_all_zero_weights_conserves_uneven_totals() {
+        for (n, total) in [(3usize, 10u64), (7, 11), (4, 1), (5, 0)] {
+            let shares = apportion(&vec![0.0; n], total);
+            assert_eq!(shares.iter().sum::<u64>(), total, "n={n} total={total}");
+            let lo = *shares.iter().min().unwrap();
+            let hi = *shares.iter().max().unwrap();
+            assert!(hi - lo <= 1, "even split must stay within 1: {shares:?}");
+        }
+    }
+
+    /// Totals far larger than the weight sum (the femtojoule-scale
+    /// energy splits telemetry performs): rounding must stay exact and
+    /// proportional even when each quota has a huge integer part.
+    #[test]
+    fn apportion_total_much_larger_than_weight_sum() {
+        let w = [1e-9, 2e-9, 3e-9];
+        let total = 1_000_000_007u64; // prime: every quota is fractional
+        let shares = apportion(&w, total);
+        assert_eq!(shares.iter().sum::<u64>(), total);
+        for (i, &s) in shares.iter().enumerate() {
+            let quota = w[i] / 6e-9 * total as f64;
+            assert!((s as f64 - quota).abs() <= 1.0 + 1e-6, "share {i}: {s} vs {quota}");
+        }
+        // one tiny weight among zeros still takes the whole total
+        assert_eq!(apportion(&[0.0, 1e-300], 42), vec![0, 42]);
+    }
+
     #[test]
     fn apportion_degenerate_inputs() {
         assert_eq!(apportion(&[], 10), Vec::<u64>::new());

@@ -7,7 +7,7 @@
 //! 0      4    magic "IMP1" (0x49 0x4D 0x50 0x31)
 //! 4      1    protocol version (1)
 //! 5      1    payload type
-//! 6      2    flags (reserved, must be zero in v1), big-endian
+//! 6      2    flags (zero, or a telemetry flags word), big-endian
 //! 8      8    request id, big-endian
 //! 16     4    payload length N (≤ 1 MiB), big-endian
 //! 20     N    payload
@@ -37,6 +37,58 @@ pub const CRC_LEN: usize = 4;
 /// more are rejected before any payload bytes are buffered.
 pub const MAX_PAYLOAD: usize = 1 << 20;
 
+// ---------------------------------------------------------------------
+// The flags word (header bytes 6–7)
+// ---------------------------------------------------------------------
+//
+// v1 reserved the word as all-zero. The telemetry subsystem defines
+// the first (and so far only) nonzero use: when bit 15 is set, the
+// word is a backpressure advertisement on a server→client frame. Any
+// other nonzero pattern is still rejected as Malformed, and servers
+// only emit nonzero flags to clients that negotiated the capability in
+// their Hello — so all-zero v1 traffic is preserved byte-for-byte.
+
+/// Flags bit 15: the word carries a telemetry/backpressure
+/// advertisement (server→client only; negotiated via Hello caps).
+pub const FLAG_TELEMETRY: u16 = 0x8000;
+
+/// Flags bit 14: the server's queue depth is at or over its soft
+/// limit — clients should slow their submission rate.
+pub const FLAG_SOFT_LIMIT: u16 = 0x4000;
+
+/// Flags bits 0–13: the server's queue depth, saturating at
+/// [`FLAG_DEPTH_MASK`].
+pub const FLAG_DEPTH_MASK: u16 = 0x3FFF;
+
+/// A decoded backpressure advertisement from a frame's flags word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Backpressure {
+    /// Queue depth at send time (saturated at [`FLAG_DEPTH_MASK`]).
+    pub queue_depth: u16,
+    /// Whether the server asked clients to slow down (soft limit hit).
+    pub soft_limited: bool,
+}
+
+/// Encode a backpressure advertisement into a flags word.
+pub fn encode_backpressure(queue_depth: u64, soft_limited: bool) -> u16 {
+    let depth = queue_depth.min(FLAG_DEPTH_MASK as u64) as u16;
+    let soft = if soft_limited { FLAG_SOFT_LIMIT } else { 0 };
+    FLAG_TELEMETRY | soft | depth
+}
+
+/// Decode a frame's flags word: `None` for the all-zero v1 encoding,
+/// `Some` when the telemetry bit is set. (Words that are neither never
+/// pass [`Frame::decode`].)
+pub fn decode_backpressure(flags: u16) -> Option<Backpressure> {
+    if flags & FLAG_TELEMETRY == 0 {
+        return None;
+    }
+    Some(Backpressure {
+        queue_depth: flags & FLAG_DEPTH_MASK,
+        soft_limited: flags & FLAG_SOFT_LIMIT != 0,
+    })
+}
+
 /// Payload type discriminants (byte 5 of the header).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PayloadType {
@@ -52,6 +104,12 @@ pub enum PayloadType {
     DigitsInferRequest,
     /// Server → client: digits classification result (10-class).
     DigitsInferResponse,
+    /// Client → server: live server-statistics request (empty
+    /// payload).
+    StatsRequest,
+    /// Server → client: telemetry snapshot (see `docs/PROTOCOL.md`
+    /// §4.9).
+    StatsResponse,
     /// Server → client: request- or connection-level failure.
     Error,
 }
@@ -66,6 +124,8 @@ impl PayloadType {
             PayloadType::InferResponse => 0x11,
             PayloadType::DigitsInferRequest => 0x12,
             PayloadType::DigitsInferResponse => 0x13,
+            PayloadType::StatsRequest => 0x14,
+            PayloadType::StatsResponse => 0x15,
             PayloadType::Error => 0x7F,
         }
     }
@@ -79,6 +139,8 @@ impl PayloadType {
             0x11 => Some(PayloadType::InferResponse),
             0x12 => Some(PayloadType::DigitsInferRequest),
             0x13 => Some(PayloadType::DigitsInferResponse),
+            0x14 => Some(PayloadType::StatsRequest),
+            0x15 => Some(PayloadType::StatsResponse),
             0x7F => Some(PayloadType::Error),
             _ => None,
         }
@@ -156,6 +218,11 @@ pub struct Frame {
     pub version: u8,
     /// What the payload bytes encode.
     pub payload_type: PayloadType,
+    /// The flags word: zero (the v1 encoding), or a backpressure
+    /// advertisement with [`FLAG_TELEMETRY`] set (see
+    /// [`decode_backpressure`]). Servers emit nonzero flags only to
+    /// clients that negotiated the capability.
+    pub flags: u16,
     /// Caller-chosen correlation id, echoed verbatim in responses.
     pub request_id: u64,
     /// Raw payload bytes (≤ [`MAX_PAYLOAD`]).
@@ -178,7 +245,8 @@ pub enum WireError {
     },
     /// Unassigned payload-type byte.
     UnknownType(u8),
-    /// Nonzero reserved flags word.
+    /// A nonzero flags word without the telemetry bit — no such
+    /// encoding is assigned.
     BadFlags(u16),
     /// The stream ended inside a frame.
     Truncated,
@@ -212,7 +280,9 @@ impl std::fmt::Display for WireError {
                 write!(f, "CRC mismatch: computed {expected:#010X}, frame says {found:#010X}")
             }
             WireError::UnknownType(b) => write!(f, "unknown payload type {b:#04X}"),
-            WireError::BadFlags(v) => write!(f, "reserved flags must be zero, got {v:#06X}"),
+            WireError::BadFlags(v) => {
+                write!(f, "flags must be zero or a telemetry word, got {v:#06X}")
+            }
             WireError::Truncated => write!(f, "stream ended inside a frame"),
             WireError::Io(e) => write!(f, "transport error: {e}"),
         }
@@ -251,14 +321,24 @@ pub fn crc32(data: &[u8]) -> u32 {
 }
 
 impl Frame {
-    /// Build a frame with the current [`PROTOCOL_VERSION`].
+    /// Build a frame with the current [`PROTOCOL_VERSION`] and the
+    /// all-zero v1 flags word.
     pub fn new(payload_type: PayloadType, request_id: u64, payload: Vec<u8>) -> Frame {
         Frame {
             version: PROTOCOL_VERSION,
             payload_type,
+            flags: 0,
             request_id,
             payload,
         }
+    }
+
+    /// The same frame with its flags word replaced (builder-style;
+    /// used by the listener to stamp backpressure advertisements on
+    /// responses to capability-negotiated clients).
+    pub fn with_flags(mut self, flags: u16) -> Frame {
+        self.flags = flags;
+        self
     }
 
     /// Encoded size of this frame on the wire.
@@ -273,7 +353,7 @@ impl Frame {
         out.extend_from_slice(&MAGIC);
         out.push(self.version);
         out.push(self.payload_type.as_u8());
-        out.extend_from_slice(&0u16.to_be_bytes()); // flags
+        out.extend_from_slice(&self.flags.to_be_bytes());
         out.extend_from_slice(&self.request_id.to_be_bytes());
         out.extend_from_slice(&(self.payload.len() as u32).to_be_bytes());
         out.extend_from_slice(&self.payload);
@@ -294,7 +374,9 @@ impl Frame {
     /// frame present → CRC → payload type → flags. The CRC is checked
     /// before the payload-type and flags bytes are interpreted, so a
     /// corrupted discriminant reports [`WireError::BadCrc`], not
-    /// [`WireError::UnknownType`].
+    /// [`WireError::UnknownType`]. A flags word must be zero or have
+    /// [`FLAG_TELEMETRY`] set; any other nonzero pattern is
+    /// [`WireError::BadFlags`].
     pub fn decode(buf: &[u8]) -> Result<Decoded, WireError> {
         if buf.len() >= 4 && buf[..4] != MAGIC {
             let mut m = [0u8; 4];
@@ -326,7 +408,7 @@ impl Frame {
         let payload_type =
             PayloadType::from_u8(buf[5]).ok_or(WireError::UnknownType(buf[5]))?;
         let flags = u16::from_be_bytes([buf[6], buf[7]]);
-        if flags != 0 {
+        if flags != 0 && flags & FLAG_TELEMETRY == 0 {
             return Err(WireError::BadFlags(flags));
         }
         let request_id = u64::from_be_bytes([
@@ -336,6 +418,7 @@ impl Frame {
             Frame {
                 version: buf[4],
                 payload_type,
+                flags,
                 request_id,
                 payload: buf[HEADER_LEN..HEADER_LEN + len].to_vec(),
             },
@@ -457,8 +540,8 @@ mod tests {
     }
 
     #[test]
-    fn nonzero_flags_rejected() {
-        // Re-encode with valid CRC but nonzero flags.
+    fn nonzero_flags_without_telemetry_bit_rejected() {
+        // Re-encode with valid CRC but an unassigned flags pattern.
         let f = Frame::new(PayloadType::Hello, 3, vec![1, 1]);
         let mut bytes = f.encode();
         bytes[7] = 1;
@@ -466,6 +549,41 @@ mod tests {
         let n = bytes.len();
         bytes[n - 4..].copy_from_slice(&crc.to_be_bytes());
         assert!(matches!(Frame::decode(&bytes), Err(WireError::BadFlags(1))));
+    }
+
+    #[test]
+    fn telemetry_flags_roundtrip_through_the_codec() {
+        let flags = encode_backpressure(37, true);
+        let f = Frame::new(PayloadType::InferResponse, 5, vec![0; 29]).with_flags(flags);
+        let bytes = f.encode();
+        match Frame::decode(&bytes).unwrap() {
+            Decoded::Frame(g, used) => {
+                assert_eq!(used, bytes.len());
+                assert_eq!(g, f);
+                assert_eq!(
+                    decode_backpressure(g.flags),
+                    Some(Backpressure { queue_depth: 37, soft_limited: true })
+                );
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backpressure_word_encoding() {
+        assert_eq!(encode_backpressure(0, false), FLAG_TELEMETRY);
+        assert_eq!(encode_backpressure(3, false), FLAG_TELEMETRY | 3);
+        assert_eq!(encode_backpressure(3, true), FLAG_TELEMETRY | FLAG_SOFT_LIMIT | 3);
+        // depth saturates into the 14-bit field
+        assert_eq!(
+            encode_backpressure(u64::MAX, false) & FLAG_DEPTH_MASK,
+            FLAG_DEPTH_MASK
+        );
+        assert_eq!(decode_backpressure(0), None);
+        assert_eq!(
+            decode_backpressure(FLAG_TELEMETRY | FLAG_SOFT_LIMIT | 9),
+            Some(Backpressure { queue_depth: 9, soft_limited: true })
+        );
     }
 
     #[test]

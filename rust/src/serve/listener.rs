@@ -15,12 +15,13 @@
 //!
 //! [`ClientSession`]: super::ClientSession
 
-use super::frame::{ErrorCode, Frame, FrameReader, PayloadType, WireError};
+use super::frame::{encode_backpressure, ErrorCode, Frame, FrameReader, PayloadType, WireError};
 use super::session::{
-    decode_digits_request, decode_infer_request, error_frame, negotiate, response_frame,
-    ServeCore,
+    decode_digits_request, decode_infer_request, encode_stats_response, error_frame, negotiate,
+    response_frame, ServeCore, CAP_BACKPRESSURE,
 };
 use crate::coordinator::WorkloadInput;
+use crate::telemetry::{Telemetry, Transport};
 use crate::Result;
 use std::io::ErrorKind;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -132,6 +133,17 @@ fn write_frame(w: &Arc<Mutex<TcpStream>>, f: &Frame) -> std::io::Result<()> {
     f.write_to(&mut *g)
 }
 
+/// The flags word for the next server→client frame: a live
+/// backpressure advertisement when the client negotiated
+/// [`CAP_BACKPRESSURE`], the all-zero v1 word otherwise.
+fn frame_flags(bp: &AtomicBool, tele: &Telemetry) -> u16 {
+    if bp.load(Ordering::Relaxed) {
+        encode_backpressure(tele.queue_depth(), tele.soft_limited())
+    } else {
+        0
+    }
+}
+
 /// Drive one connection to completion: read frames until EOF, a
 /// framing error, or server stop; then drain outstanding responses.
 fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> Result<()> {
@@ -142,17 +154,25 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
     let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let done = Arc::new(AtomicBool::new(false));
     let outstanding = Arc::new(AtomicU64::new(0));
+    let tele = Arc::clone(core.telemetry());
+    // whether this client negotiated backpressure advertisements
+    // (reader sets it on an extended Hello; responder stamps flags)
+    let backpressure = Arc::new(AtomicBool::new(false));
 
     let responder = {
         let writer = Arc::clone(&writer);
         let done = Arc::clone(&done);
         let outstanding = Arc::clone(&outstanding);
+        let tele = Arc::clone(&tele);
+        let backpressure = Arc::clone(&backpressure);
         std::thread::spawn(move || {
             loop {
                 match responses.recv_timeout(POLL) {
                     Ok(r) => {
                         outstanding.fetch_sub(1, Ordering::SeqCst);
-                        if write_frame(&writer, &response_frame(&r)).is_err() {
+                        tele.record_wire(Transport::Tcp, r.latency);
+                        let f = response_frame(&r).with_flags(frame_flags(&backpressure, &tele));
+                        if write_frame(&writer, &f).is_err() {
                             break;
                         }
                     }
@@ -197,9 +217,17 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
         };
         match frame.payload_type {
             PayloadType::Hello => match negotiate(&frame.payload) {
-                Ok(v) => {
-                    negotiated = v;
-                    let ack = Frame::new(PayloadType::HelloAck, frame.request_id, vec![v]);
+                Ok(n) => {
+                    negotiated = n.version;
+                    backpressure.store(n.caps & CAP_BACKPRESSURE != 0, Ordering::Relaxed);
+                    // a 2-byte v1 hello gets the pinned 1-byte ack; an
+                    // extended hello gets [version, granted caps]
+                    let ack_payload = if frame.payload.len() == 3 {
+                        vec![n.version, n.caps]
+                    } else {
+                        vec![n.version]
+                    };
+                    let ack = Frame::new(PayloadType::HelloAck, frame.request_id, ack_payload);
                     if write_frame(&writer, &ack).is_err() {
                         break;
                     }
@@ -210,6 +238,41 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
                     break; // failed negotiation closes the connection
                 }
             },
+            PayloadType::StatsRequest => {
+                if frame.version != negotiated {
+                    let msg = format!(
+                        "frame version {} after negotiating v{negotiated}",
+                        frame.version
+                    );
+                    let _ = write_frame(
+                        &writer,
+                        &error_frame(frame.request_id, ErrorCode::UnsupportedVersion, &msg),
+                    );
+                    continue;
+                }
+                if !frame.payload.is_empty() {
+                    let _ = write_frame(
+                        &writer,
+                        &error_frame(
+                            frame.request_id,
+                            ErrorCode::Malformed,
+                            "stats request payload must be empty",
+                        ),
+                    );
+                    continue;
+                }
+                // answered inline from the registry — never queued, so
+                // stats stay responsive under full inference backlog
+                let f = Frame::new(
+                    PayloadType::StatsResponse,
+                    frame.request_id,
+                    encode_stats_response(&tele.snapshot()),
+                )
+                .with_flags(frame_flags(&backpressure, &tele));
+                if write_frame(&writer, &f).is_err() {
+                    break;
+                }
+            }
             PayloadType::InferRequest | PayloadType::DigitsInferRequest => {
                 if frame.version != negotiated {
                     let msg = format!(
@@ -280,6 +343,7 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
             PayloadType::HelloAck
             | PayloadType::InferResponse
             | PayloadType::DigitsInferResponse
+            | PayloadType::StatsResponse
             | PayloadType::Error => {
                 let _ = write_frame(
                     &writer,

@@ -12,7 +12,10 @@
 //!   reference [`FrameClient`].
 //! - [`listener`] — the multi-client TCP accept loop
 //!   ([`serve_tcp`]), one reader + one responder thread per
-//!   connection.
+//!   connection. Serves `StatsRequest` frames inline from the core's
+//!   [`telemetry`](crate::telemetry) registry and stamps backpressure
+//!   advertisements (queue depth + soft-limit bit) into the flags word
+//!   for clients that negotiated [`CAP_BACKPRESSURE`].
 //! - [`signal`] — SIGINT/SIGTERM wiring so `impulse serve --listen`
 //!   drains in-flight requests and exits cleanly
 //!   ([`install_shutdown_handler`]).
@@ -33,15 +36,17 @@ pub mod session;
 pub mod signal;
 
 pub use frame::{
-    crc32, Decoded, ErrorCode, Frame, FrameReader, PayloadType, WireError, CRC_LEN,
-    HEADER_LEN, MAGIC, MAX_PAYLOAD, PROTOCOL_VERSION,
+    crc32, decode_backpressure, encode_backpressure, Backpressure, Decoded, ErrorCode, Frame,
+    FrameReader, PayloadType, WireError, CRC_LEN, FLAG_DEPTH_MASK, FLAG_SOFT_LIMIT,
+    FLAG_TELEMETRY, HEADER_LEN, MAGIC, MAX_PAYLOAD, PROTOCOL_VERSION,
 };
 pub use listener::{serve_tcp, TcpServeHandle};
 pub use session::{
     decode_digits_request, decode_digits_response, decode_error, decode_infer_request,
-    decode_infer_response, encode_digits_request, encode_infer_request, error_frame,
-    error_payload, hello_payload, negotiate, response_frame, ClientSession, FrameClient,
-    PayloadError, ServeCore, SessionSender, WireDigitsResponse, WireResponse,
-    MAX_WORDS_PER_REQUEST,
+    decode_infer_response, decode_stats_response, encode_digits_request, encode_infer_request,
+    encode_stats_request, encode_stats_response, error_frame, error_payload,
+    hello_caps_payload, hello_payload, negotiate, response_frame, ClientSession, FrameClient,
+    Negotiated, PayloadError, ServeCore, SessionSender, WireDigitsResponse, WireResponse,
+    CAP_BACKPRESSURE, MAX_WORDS_PER_REQUEST, SUPPORTED_CAPS,
 };
 pub use signal::{install_shutdown_handler, shutdown_requested};

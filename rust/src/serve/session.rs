@@ -17,6 +17,10 @@ use crate::coordinator::{
     InferenceServer, Request, Response, ServerOptions, Submitter, Workload, WorkloadInput,
     WorkloadKind,
 };
+use crate::telemetry::{
+    kind_code, kind_from_code, KindStats, StatsSnapshot, Telemetry, TelemetryConfig, Transport,
+    TransportStats, STATS_VERSION,
+};
 use crate::Result;
 use std::collections::HashMap;
 use std::net::TcpStream;
@@ -74,18 +78,46 @@ pub struct WireResponse {
     pub worker: u16,
 }
 
+/// Capability bit a client may request in an extended `Hello`: the
+/// server stamps backpressure advertisements (queue depth + soft-limit
+/// bit) into the flags word of its frames on this connection.
+pub const CAP_BACKPRESSURE: u8 = 0x01;
+
+/// All capability bits this server grants; unknown requested bits are
+/// masked off in the `HelloAck`, never granted.
+pub const SUPPORTED_CAPS: u8 = CAP_BACKPRESSURE;
+
+/// Outcome of a successful `Hello` negotiation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Negotiated {
+    /// The protocol version both sides will speak.
+    pub version: u8,
+    /// The capability bits granted (requested ∩ [`SUPPORTED_CAPS`];
+    /// 0 for a 2-byte v1 `Hello`).
+    pub caps: u8,
+}
+
 /// Encode a `Hello` payload: the client's supported version range.
 pub fn hello_payload(min_version: u8, max_version: u8) -> Vec<u8> {
     vec![min_version, max_version]
 }
 
+/// Encode an extended `Hello` payload: version range plus requested
+/// capability bits (e.g. [`CAP_BACKPRESSURE`]).
+pub fn hello_caps_payload(min_version: u8, max_version: u8, caps: u8) -> Vec<u8> {
+    vec![min_version, max_version, caps]
+}
+
 /// Server-side `Hello` handling: pick the highest mutually supported
-/// version, or report [`ErrorCode::UnsupportedVersion`].
-pub fn negotiate(payload: &[u8]) -> std::result::Result<u8, PayloadError> {
-    if payload.len() != 2 {
+/// version (or report [`ErrorCode::UnsupportedVersion`]) and grant the
+/// supported subset of any requested capability bits. A 2-byte payload
+/// is the v1 hello (no capabilities); a 3-byte payload adds the
+/// capability request byte.
+pub fn negotiate(payload: &[u8]) -> std::result::Result<Negotiated, PayloadError> {
+    if payload.len() != 2 && payload.len() != 3 {
         return Err(PayloadError::new(
             ErrorCode::Malformed,
-            format!("hello payload must be 2 bytes, got {}", payload.len()),
+            format!("hello payload must be 2 or 3 bytes, got {}", payload.len()),
         ));
     }
     let (min, max) = (payload[0], payload[1]);
@@ -101,7 +133,8 @@ pub fn negotiate(payload: &[u8]) -> std::result::Result<u8, PayloadError> {
             format!("server speaks v{PROTOCOL_VERSION}, client offers {min}..{max}"),
         ));
     }
-    Ok(PROTOCOL_VERSION)
+    let caps = payload.get(2).copied().unwrap_or(0) & SUPPORTED_CAPS;
+    Ok(Negotiated { version: PROTOCOL_VERSION, caps })
 }
 
 /// Encode an `InferRequest` payload: `count:u16` then `count` i32
@@ -308,6 +341,165 @@ pub fn error_frame(request_id: u64, code: ErrorCode, msg: &str) -> Frame {
     Frame::new(PayloadType::Error, request_id, error_payload(code, msg))
 }
 
+// ---------------------------------------------------------------------
+// Stats payloads (docs/PROTOCOL.md §4.8–4.9)
+// ---------------------------------------------------------------------
+
+/// Encode a `StatsRequest` payload — empty by definition (§4.8).
+pub fn encode_stats_request() -> Vec<u8> {
+    Vec::new()
+}
+
+/// Encode a `StatsResponse` payload from a telemetry snapshot (§4.9):
+/// `stats_version:u8`, `reserved:u8`, the queue/batch globals, then
+/// length-prefixed per-kind, per-instruction, and per-transport
+/// sections — all integers big-endian, EDP as IEEE-754 binary64 bits.
+pub fn encode_stats_response(s: &StatsSnapshot) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + 65 * s.kinds.len() + 9 * s.instr.len());
+    out.push(STATS_VERSION);
+    out.push(0); // reserved
+    out.extend_from_slice(&s.queue_depth.to_be_bytes());
+    out.extend_from_slice(&s.queue_soft_limit.to_be_bytes());
+    out.push(u8::from(s.soft_limited));
+    out.extend_from_slice(&s.batches.to_be_bytes());
+    out.extend_from_slice(&s.batch_lanes.to_be_bytes());
+    out.extend_from_slice(&s.batch_lane_capacity.to_be_bytes());
+    out.push(s.kinds.len().min(u8::MAX as usize) as u8);
+    for k in s.kinds.iter().take(u8::MAX as usize) {
+        out.push(kind_code(k.kind));
+        out.extend_from_slice(&k.submitted.to_be_bytes());
+        out.extend_from_slice(&k.ok.to_be_bytes());
+        out.extend_from_slice(&k.err.to_be_bytes());
+        out.extend_from_slice(&k.cycles.to_be_bytes());
+        out.extend_from_slice(&k.energy_fj.to_be_bytes());
+        out.extend_from_slice(&k.edp_js.to_bits().to_be_bytes());
+        out.extend_from_slice(&k.input_units.to_be_bytes());
+        out.extend_from_slice(&k.input_active.to_be_bytes());
+    }
+    out.push(s.instr.len().min(u8::MAX as usize) as u8);
+    for &(code, n) in s.instr.iter().take(u8::MAX as usize) {
+        out.push(code);
+        out.extend_from_slice(&n.to_be_bytes());
+    }
+    out.push(s.transports.len().min(u8::MAX as usize) as u8);
+    for t in s.transports.iter().take(u8::MAX as usize) {
+        out.push(t.transport.code());
+        out.extend_from_slice(&t.count.to_be_bytes());
+        out.extend_from_slice(&t.sum_us.to_be_bytes());
+        out.push(t.buckets.len().min(u8::MAX as usize) as u8);
+        for &b in t.buckets.iter().take(u8::MAX as usize) {
+            out.extend_from_slice(&b.to_be_bytes());
+        }
+    }
+    out
+}
+
+/// A little big-endian cursor over a stats payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl Cursor<'_> {
+    fn u8(&mut self) -> std::result::Result<u8, PayloadError> {
+        let v = *self
+            .buf
+            .get(self.at)
+            .ok_or_else(|| PayloadError::new(ErrorCode::Malformed, "stats payload truncated"))?;
+        self.at += 1;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> std::result::Result<u64, PayloadError> {
+        let end = self.at + 8;
+        let bytes = self
+            .buf
+            .get(self.at..end)
+            .ok_or_else(|| PayloadError::new(ErrorCode::Malformed, "stats payload truncated"))?;
+        self.at = end;
+        Ok(u64::from_be_bytes(bytes.try_into().expect("8-byte slice")))
+    }
+}
+
+/// Decode a `StatsResponse` payload into a [`StatsSnapshot`] (§4.9).
+pub fn decode_stats_response(
+    payload: &[u8],
+) -> std::result::Result<StatsSnapshot, PayloadError> {
+    let mut c = Cursor { buf: payload, at: 0 };
+    let version = c.u8()?;
+    if version != STATS_VERSION {
+        return Err(PayloadError::new(
+            ErrorCode::Malformed,
+            format!("stats payload version {version}, this build speaks {STATS_VERSION}"),
+        ));
+    }
+    let _reserved = c.u8()?;
+    let queue_depth = c.u64()?;
+    let queue_soft_limit = c.u64()?;
+    let soft_limited = c.u8()? != 0;
+    let batches = c.u64()?;
+    let batch_lanes = c.u64()?;
+    let batch_lane_capacity = c.u64()?;
+    let n_kinds = c.u8()? as usize;
+    let mut kinds = Vec::with_capacity(n_kinds);
+    for _ in 0..n_kinds {
+        let code = c.u8()?;
+        let kind = kind_from_code(code).ok_or_else(|| {
+            PayloadError::new(ErrorCode::Malformed, format!("unknown workload kind {code}"))
+        })?;
+        kinds.push(KindStats {
+            kind,
+            submitted: c.u64()?,
+            ok: c.u64()?,
+            err: c.u64()?,
+            cycles: c.u64()?,
+            energy_fj: c.u64()?,
+            edp_js: f64::from_bits(c.u64()?),
+            input_units: c.u64()?,
+            input_active: c.u64()?,
+        });
+    }
+    let n_instr = c.u8()? as usize;
+    let mut instr = Vec::with_capacity(n_instr);
+    for _ in 0..n_instr {
+        let code = c.u8()?;
+        instr.push((code, c.u64()?));
+    }
+    let n_transports = c.u8()? as usize;
+    let mut transports = Vec::with_capacity(n_transports);
+    for _ in 0..n_transports {
+        let code = c.u8()?;
+        let transport = Transport::from_code(code).ok_or_else(|| {
+            PayloadError::new(ErrorCode::Malformed, format!("unknown transport {code}"))
+        })?;
+        let count = c.u64()?;
+        let sum_us = c.u64()?;
+        let n_buckets = c.u8()? as usize;
+        let mut buckets = Vec::with_capacity(n_buckets);
+        for _ in 0..n_buckets {
+            buckets.push(c.u64()?);
+        }
+        transports.push(TransportStats { transport, count, sum_us, buckets });
+    }
+    if c.at != payload.len() {
+        return Err(PayloadError::new(
+            ErrorCode::Malformed,
+            format!("{} trailing bytes after stats payload", payload.len() - c.at),
+        ));
+    }
+    Ok(StatsSnapshot {
+        queue_depth,
+        queue_soft_limit,
+        soft_limited,
+        batches,
+        batch_lanes,
+        batch_lane_capacity,
+        kinds,
+        instr,
+        transports,
+    })
+}
+
 /// Encode a coordinator [`Response`] as its wire frame: an
 /// `InferResponse` (sentiment) or `DigitsInferResponse` (digits) on
 /// success — chosen by [`Response::kind`] — or an `Error` frame with
@@ -405,6 +597,7 @@ pub struct ServeCore {
     stop: Arc<AtomicBool>,
     dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
     vocab: i64,
+    telemetry: Arc<Telemetry>,
 }
 
 impl ServeCore {
@@ -419,6 +612,18 @@ impl ServeCore {
         F: Fn() -> Result<W> + Send + Sync + 'static,
     {
         anyhow::ensure!(vocab >= 1, "vocabulary must be non-empty");
+        // every serve core has a telemetry registry: use the caller's
+        // (wired through ServerOptions so the worker pool shares it)
+        // or create a default one and hand it to the pool ourselves
+        let mut opts = opts;
+        let telemetry = match &opts.telemetry {
+            Some(t) => Arc::clone(t),
+            None => {
+                let t = Arc::new(Telemetry::new(TelemetryConfig::default()));
+                opts.telemetry = Some(Arc::clone(&t));
+                t
+            }
+        };
         let server = InferenceServer::start_with(opts, factory)?;
         let submitter = server.submitter();
         let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
@@ -456,7 +661,15 @@ impl ServeCore {
             stop,
             dispatcher: Mutex::new(Some(dispatcher)),
             vocab,
+            telemetry,
         })
+    }
+
+    /// The live telemetry registry this core's worker pool updates —
+    /// what `StatsRequest` frames, the metrics endpoint, and the
+    /// backpressure flags word are answered from.
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
     }
 
     /// Open a session (one logical client). Sessions may live on any
@@ -653,6 +866,67 @@ impl FrameClient {
         }
     }
 
+    /// Negotiate version *and* capabilities with an extended 3-byte
+    /// `Hello` (e.g. [`CAP_BACKPRESSURE`]). Returns the negotiated
+    /// `(version, granted caps)` from the 2-byte `HelloAck`.
+    pub fn hello_with_caps(&mut self, caps: u8) -> Result<(u8, u8)> {
+        Frame::new(
+            PayloadType::Hello,
+            0,
+            hello_caps_payload(PROTOCOL_VERSION, PROTOCOL_VERSION, caps),
+        )
+        .write_to(&mut self.w)?;
+        match self.next_frame()? {
+            Some(f) if f.payload_type == PayloadType::HelloAck => {
+                anyhow::ensure!(
+                    f.payload.len() == 2,
+                    "extended hello ack payload must be 2 bytes, got {}",
+                    f.payload.len()
+                );
+                Ok((f.payload[0], f.payload[1]))
+            }
+            Some(f) if f.payload_type == PayloadType::Error => {
+                let (code, msg) = decode_error(&f.payload).map_err(anyhow::Error::from)?;
+                anyhow::bail!("server refused hello (code {code}): {msg}")
+            }
+            other => anyhow::bail!("expected HelloAck, got {other:?}"),
+        }
+    }
+
+    /// Send one `StatsRequest` (does not wait for the response).
+    pub fn send_stats(&mut self, request_id: u64) -> Result<()> {
+        Frame::new(PayloadType::StatsRequest, request_id, encode_stats_request())
+            .write_to(&mut self.w)?;
+        Ok(())
+    }
+
+    /// Request a telemetry snapshot and block for it. Returns the
+    /// snapshot plus the response frame's flags word (a backpressure
+    /// advertisement when [`CAP_BACKPRESSURE`] was negotiated — decode
+    /// with [`super::frame::decode_backpressure`]). Expects a quiet
+    /// connection (the `impulse stats` shape); with inference
+    /// responses in flight, use [`FrameClient::send_stats`] and
+    /// correlate frames yourself.
+    pub fn fetch_stats(&mut self, request_id: u64) -> Result<(StatsSnapshot, u16)> {
+        self.send_stats(request_id)?;
+        match self.next_frame()? {
+            Some(f) if f.payload_type == PayloadType::StatsResponse => {
+                anyhow::ensure!(
+                    f.request_id == request_id,
+                    "stats response for id {} while awaiting {request_id}",
+                    f.request_id
+                );
+                let snap = decode_stats_response(&f.payload).map_err(anyhow::Error::from)?;
+                Ok((snap, f.flags))
+            }
+            Some(f) if f.payload_type == PayloadType::Error => {
+                let (code, msg) = decode_error(&f.payload).map_err(anyhow::Error::from)?;
+                anyhow::bail!("stats request failed (code {code}): {msg}")
+            }
+            other => anyhow::bail!("expected StatsResponse, got {other:?}"),
+        }
+    }
+
     /// Send one `InferRequest` (does not wait for the response).
     /// Oversized requests (> [`MAX_WORDS_PER_REQUEST`] word ids) are
     /// rejected client-side before any bytes hit the wire.
@@ -845,12 +1119,114 @@ mod tests {
 
     #[test]
     fn negotiation_picks_v1_or_refuses() {
-        assert_eq!(negotiate(&hello_payload(1, 1)).unwrap(), 1);
-        assert_eq!(negotiate(&hello_payload(1, 9)).unwrap(), 1);
+        assert_eq!(negotiate(&hello_payload(1, 1)).unwrap(), Negotiated { version: 1, caps: 0 });
+        assert_eq!(negotiate(&hello_payload(1, 9)).unwrap().version, 1);
         let e = negotiate(&hello_payload(2, 9)).unwrap_err();
         assert_eq!(e.code, ErrorCode::UnsupportedVersion);
         assert_eq!(negotiate(&[1]).unwrap_err().code, ErrorCode::Malformed);
+        assert_eq!(negotiate(&[1, 1, 0, 0]).unwrap_err().code, ErrorCode::Malformed);
         assert_eq!(negotiate(&hello_payload(3, 1)).unwrap_err().code, ErrorCode::Malformed);
+    }
+
+    #[test]
+    fn negotiation_grants_only_supported_caps() {
+        // a plain v1 hello grants nothing
+        assert_eq!(negotiate(&hello_payload(1, 1)).unwrap().caps, 0);
+        // requested unknown bits are masked off, never granted
+        let n = negotiate(&hello_caps_payload(1, 1, 0xFF)).unwrap();
+        assert_eq!(n, Negotiated { version: 1, caps: SUPPORTED_CAPS });
+        assert_eq!(negotiate(&hello_caps_payload(1, 1, 0)).unwrap().caps, 0);
+        assert_eq!(
+            negotiate(&hello_caps_payload(1, 1, CAP_BACKPRESSURE)).unwrap().caps,
+            CAP_BACKPRESSURE
+        );
+        // version rules are unchanged by the caps byte
+        let e = negotiate(&hello_caps_payload(2, 9, CAP_BACKPRESSURE)).unwrap_err();
+        assert_eq!(e.code, ErrorCode::UnsupportedVersion);
+    }
+
+    #[test]
+    fn stats_payload_roundtrips() {
+        use crate::telemetry::N_LATENCY_BUCKETS;
+        let snap = StatsSnapshot {
+            queue_depth: 3,
+            queue_soft_limit: 1024,
+            soft_limited: false,
+            batches: 7,
+            batch_lanes: 19,
+            batch_lane_capacity: 91,
+            kinds: vec![
+                KindStats {
+                    submitted: 20,
+                    ok: 18,
+                    err: 2,
+                    cycles: 123_456,
+                    energy_fj: 987_654,
+                    edp_js: 3.25e-12,
+                    input_units: 400,
+                    input_active: 110,
+                    ..KindStats::zero(WorkloadKind::Sentiment)
+                },
+                KindStats::zero(WorkloadKind::Digits),
+            ],
+            instr: vec![(0, 5000), (2, 800), (6, 0)],
+            transports: vec![
+                TransportStats {
+                    transport: Transport::Tcp,
+                    count: 20,
+                    sum_us: 40_000,
+                    buckets: vec![1; N_LATENCY_BUCKETS],
+                },
+                TransportStats {
+                    transport: Transport::Stdio,
+                    count: 0,
+                    sum_us: 0,
+                    buckets: vec![0; N_LATENCY_BUCKETS],
+                },
+            ],
+        };
+        let p = encode_stats_response(&snap);
+        assert_eq!(decode_stats_response(&p).unwrap(), snap);
+        assert!(encode_stats_request().is_empty());
+    }
+
+    #[test]
+    fn stats_payload_rejects_malformed_inputs() {
+        let snap = StatsSnapshot {
+            queue_depth: 0,
+            queue_soft_limit: 0,
+            soft_limited: true,
+            batches: 0,
+            batch_lanes: 0,
+            batch_lane_capacity: 0,
+            kinds: vec![],
+            instr: vec![],
+            transports: vec![],
+        };
+        let p = encode_stats_response(&snap);
+        // truncation anywhere is Malformed
+        for cut in 0..p.len() {
+            assert_eq!(
+                decode_stats_response(&p[..cut]).unwrap_err().code,
+                ErrorCode::Malformed,
+                "cut {cut}"
+            );
+        }
+        // trailing garbage is Malformed
+        let mut long = p.clone();
+        long.push(0);
+        assert_eq!(decode_stats_response(&long).unwrap_err().code, ErrorCode::Malformed);
+        // an unknown stats version is Malformed
+        let mut vers = p.clone();
+        vers[0] = 9;
+        assert_eq!(decode_stats_response(&vers).unwrap_err().code, ErrorCode::Malformed);
+        // an unknown workload-kind code is Malformed
+        let mut bad = encode_stats_response(&StatsSnapshot {
+            kinds: vec![KindStats::zero(WorkloadKind::Sentiment)],
+            ..snap
+        });
+        bad[44] = 99; // the kind code of the first row
+        assert_eq!(decode_stats_response(&bad).unwrap_err().code, ErrorCode::Malformed);
     }
 
     #[test]

@@ -25,9 +25,17 @@ pub struct ConvLayer {
     pub layout: ConvLayout,
     macros: Vec<ImpulseMacro>,
     params: LayerParams,
-    /// Kernel kept to reprogram the pool when the lane count changes.
+    /// Kernel kept to program pools for lane counts not seen before.
     kernel_flat: Vec<i64>,
     config: MacroConfig,
+    /// Programmed pools parked per lane count: switching back to a
+    /// previously-used batch width swaps a pool in (state and counters
+    /// reset — a handful of V-row writes) instead of reprogramming
+    /// every kernel tap. Bounded by `max_batch_lanes` entries.
+    pools: std::collections::HashMap<usize, (ConvLayout, Vec<ImpulseMacro>)>,
+    /// Pool programmings performed by `begin_batch` (cache misses) —
+    /// the serve path's lane-churn cost signal.
+    reprograms: u64,
     /// Per-lane attributed cycles (fractional) since `begin_batch`:
     /// each fused AccW2V cycle is split across the lanes sharing that
     /// union row; neuron-update cycles are charged to their own lane.
@@ -62,6 +70,8 @@ impl ConvLayer {
             params,
             kernel_flat: kernel_flat.to_vec(),
             config,
+            pools: std::collections::HashMap::new(),
+            reprograms: 0,
             lane_cycles: vec![0.0],
             union_rows: Vec::new(),
             lane_rows_odd: vec![0],
@@ -176,11 +186,17 @@ impl ConvLayer {
     }
 
     /// Allocate and zero `lanes` independent batch lanes: the pool is
-    /// re-laid-out (and reprogrammed, if the lane count changed) so
-    /// every output pixel keeps one V-row pair per lane in its macro
-    /// (`ConvLayout::assign_lane`), shrinking the per-macro pixel
-    /// budget and growing the pool to compensate. Also resets the
-    /// per-lane cycle attribution.
+    /// re-laid-out so every output pixel keeps one V-row pair per lane
+    /// in its macro (`ConvLayout::assign_lane`), shrinking the
+    /// per-macro pixel budget and growing the pool to compensate. Also
+    /// resets the per-lane cycle attribution.
+    ///
+    /// Pools are **cached per lane count**: a width served before
+    /// swaps its programmed pool back in (membranes and counters
+    /// reset, kernel taps untouched) instead of reprogramming every
+    /// weight row — serve-path churn between batch widths costs a
+    /// reprogram only the *first* time each width is seen
+    /// ([`ConvLayer::reprograms`] counts the misses).
     pub fn begin_batch(&mut self, lanes: usize) -> Result<()> {
         anyhow::ensure!(
             lanes >= 1 && lanes <= self.max_batch_lanes(),
@@ -188,9 +204,30 @@ impl ConvLayer {
             self.max_batch_lanes()
         );
         if lanes != self.layout.lanes() {
-            self.layout = self.layout.with_lanes(lanes).map_err(anyhow::Error::from)?;
-            self.macros =
-                Self::build_macros(&self.layout, &self.kernel_flat, self.params, self.config)?;
+            let (layout, macros, fresh) = match self.pools.remove(&lanes) {
+                Some((layout, macros)) => (layout, macros, false),
+                None => {
+                    let layout = self.layout.with_lanes(lanes).map_err(anyhow::Error::from)?;
+                    let macros = Self::build_macros(
+                        &layout,
+                        &self.kernel_flat,
+                        self.params,
+                        self.config,
+                    )?;
+                    (layout, macros, true)
+                }
+            };
+            let old_layout = std::mem::replace(&mut self.layout, layout);
+            let old_macros = std::mem::replace(&mut self.macros, macros);
+            self.pools.insert(old_layout.lanes(), (old_layout, old_macros));
+            if fresh {
+                // a freshly-programmed pool is already zeroed with
+                // clean counters (build_macros resets them)
+                self.reprograms += 1;
+            } else {
+                self.reset_counters();
+                self.reset_state()?;
+            }
         } else {
             self.reset_state()?;
         }
@@ -198,6 +235,13 @@ impl ConvLayer {
         self.lane_rows_odd = vec![0; lanes];
         self.lane_rows_even = vec![0; lanes];
         Ok(())
+    }
+
+    /// How many pool programmings `begin_batch` has performed (cache
+    /// misses on the per-lane-count pool cache). Repeating an
+    /// already-seen batch width never increments this.
+    pub fn reprograms(&self) -> u64 {
+        self.reprograms
     }
 
     /// Run one fused timestep across all batch lanes: per output
@@ -632,6 +676,53 @@ mod tests {
         let n = layer.num_macros();
         layer.begin_batch(4).unwrap();
         assert_eq!(layer.num_macros(), n);
+    }
+
+    /// The ROADMAP follow-up: churning between batch widths must not
+    /// reprogram the macro pool when a width repeats — each width
+    /// costs exactly one programming (cache miss), and a swapped-in
+    /// cached pool computes bit-identically to a fresh one.
+    #[test]
+    fn begin_batch_caches_pools_per_lane_count() {
+        let mut rng = XorShiftRng::new(613);
+        let (h, w, c_in, c_out) = (4, 4, 2, 4);
+        let kernel: Vec<i64> = (0..9 * c_in * c_out).map(|_| rng.gen_i64(-8, 8)).collect();
+        let p = LayerParams::rmp(45);
+        let mut layer =
+            ConvLayer::new(&kernel, h, w, c_in, c_out, 3, p, MacroConfig::fast()).unwrap();
+        assert_eq!(layer.reprograms(), 0, "construction is not a begin_batch miss");
+
+        let inputs: Vec<SpikeMap> = (0..3).map(|_| rand_map(&mut rng, h, w, c_in, 0.3)).collect();
+        let run = |layer: &mut ConvLayer, lanes: usize| -> Vec<SpikeMap> {
+            layer.begin_batch(lanes).unwrap();
+            let refs: Vec<&SpikeMap> = inputs.iter().take(lanes).collect();
+            layer.step_batch(&refs, &vec![true; lanes]).unwrap()
+        };
+
+        // first visits miss (one programming each)…
+        let first_w3 = run(&mut layer, 3);
+        assert_eq!(layer.reprograms(), 1);
+        let first_w1 = run(&mut layer, 1);
+        assert_eq!(layer.reprograms(), 1, "the construction pool is cached for width 1");
+        // …revisits hit the cache: no reprogram for a repeated width
+        let again_w3 = run(&mut layer, 3);
+        assert_eq!(layer.reprograms(), 1, "repeating width 3 must not reprogram");
+        let again_w1 = run(&mut layer, 1);
+        assert_eq!(layer.reprograms(), 1, "repeating width 1 must not reprogram");
+        // repeating the *current* width never touches the cache either
+        layer.begin_batch(1).unwrap();
+        assert_eq!(layer.reprograms(), 1);
+
+        // cached pools compute bit-identically to their first use
+        assert_eq!(again_w3, first_w3, "swapped-in width-3 pool must match");
+        assert_eq!(again_w1, first_w1, "swapped-in width-1 pool must match");
+        // and to a never-cached fresh layer
+        let mut fresh =
+            ConvLayer::new(&kernel, h, w, c_in, c_out, 3, p, MacroConfig::fast()).unwrap();
+        assert_eq!(run(&mut fresh, 3), first_w3, "cache must be invisible to results");
+        // a genuinely new width still misses
+        let _ = run(&mut layer, 2);
+        assert_eq!(layer.reprograms(), 2);
     }
 
     #[test]

@@ -1,0 +1,142 @@
+//! The plaintext metrics exposition endpoint (`--metrics-listen`).
+//!
+//! A dedicated thread serves the registry in the Prometheus text
+//! format (version 0.0.4) over bare HTTP — no dependencies, no TLS,
+//! one short-lived connection per scrape. Any `GET` path answers with
+//! the full metrics page ([`StatsSnapshot::to_prometheus`]); anything
+//! else is answered `400` and closed. This endpoint is for scrapers
+//! and `curl`; the request/response path for programs is the
+//! `StatsRequest`/`StatsResponse` frames of the binary protocol.
+//!
+//! [`StatsSnapshot::to_prometheus`]: super::StatsSnapshot::to_prometheus
+
+use super::Telemetry;
+use crate::Result;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A running metrics exposition endpoint.
+pub struct MetricsHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsHandle {
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting scrapes and join the serving thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:9200`, port `0` for ephemeral) and
+/// serve the registry as Prometheus text until
+/// [`MetricsHandle::stop`].
+pub fn serve_metrics(addr: &str, telemetry: Arc<Telemetry>) -> Result<MetricsHandle> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let thread = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            loop {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        // scrapes are tiny and rare: handle inline so a
+                        // single thread bounds resource use
+                        let _ = answer_scrape(stream, &telemetry);
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(e) => {
+                        eprintln!("impulse metrics: accept failed: {e}");
+                        break;
+                    }
+                }
+            }
+        })
+    };
+    Ok(MetricsHandle { addr: local, stop, thread: Some(thread) })
+}
+
+/// Read one HTTP request head and answer it with the metrics page.
+fn answer_scrape(mut stream: TcpStream, telemetry: &Telemetry) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    // read until the end of the request head (or a small cap — the
+    // request body, if any, is irrelevant to a scrape)
+    let mut head = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < 8192 {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&chunk[..n]),
+            Err(_) => break, // timeout or reset: answer what we can
+        }
+    }
+    let is_get = head.starts_with(b"GET ");
+    let (status, body) = if is_get {
+        ("200 OK", telemetry.snapshot().to_prometheus())
+    } else {
+        ("400 Bad Request", "metrics endpoint: GET only\n".to_string())
+    };
+    let response = format!(
+        "HTTP/1.0 {status}\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::WorkloadKind;
+
+    fn http_get(addr: SocketAddr, request: &[u8]) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(request).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn scrape_returns_prometheus_text() {
+        let t = Arc::new(Telemetry::default());
+        t.record_submit(WorkloadKind::Digits);
+        t.record_response(WorkloadKind::Digits, 10, 10, true);
+        let h = serve_metrics("127.0.0.1:0", Arc::clone(&t)).unwrap();
+        let page = http_get(h.local_addr(), b"GET /metrics HTTP/1.0\r\n\r\n");
+        assert!(page.starts_with("HTTP/1.0 200 OK"), "{page}");
+        assert!(page.contains("text/plain; version=0.0.4"));
+        assert!(page.contains("impulse_requests_submitted_total{kind=\"digits\"} 1"));
+        assert!(page.contains("impulse_queue_depth 0"));
+
+        let bad = http_get(h.local_addr(), b"POST /metrics HTTP/1.0\r\n\r\n");
+        assert!(bad.starts_with("HTTP/1.0 400"), "{bad}");
+        h.stop();
+    }
+}

@@ -1,0 +1,250 @@
+//! Lock-free sharded latency histograms.
+//!
+//! A [`ShardedHistogram`] is a fixed set of power-of-two microsecond
+//! buckets striped across several cache-line-aligned shards: recording
+//! touches only the caller's shard (plain relaxed atomic adds — no
+//! locks, no CAS loops), so many worker/responder threads can record
+//! concurrently without bouncing one hot line between cores. Readers
+//! merge the shards into a [`HistogramSummary`] — merged totals are
+//! exact (every recorded sample lands in exactly one shard bucket);
+//! only the *instantaneous* cross-shard view is relaxed.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Number of latency buckets: bucket 0 holds 0 µs exactly, bucket
+/// `i ≥ 1` holds latencies in `[2^(i-1), 2^i)` µs; the last bucket
+/// additionally absorbs everything above its lower bound (~67 s).
+pub const N_LATENCY_BUCKETS: usize = 28;
+
+/// Stripe count. Eight shards comfortably cover the worker + responder
+/// thread counts this server runs; more would only pad the merge.
+const N_SHARDS: usize = 8;
+
+/// One stripe of the histogram, padded to its own cache lines so
+/// adjacent shards never share one.
+#[repr(align(128))]
+#[derive(Debug)]
+struct Shard {
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    buckets: [AtomicU64; N_LATENCY_BUCKETS],
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// The stable per-thread shard index: threads are handed stripes
+/// round-robin on first use, so a given thread always records into the
+/// same shard (no hashing on the hot path).
+fn shard_index() -> usize {
+    use std::cell::Cell;
+    thread_local! {
+        static IDX: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    IDX.with(|c| {
+        let mut v = c.get();
+        if v == usize::MAX {
+            static NEXT: AtomicUsize = AtomicUsize::new(0);
+            v = NEXT.fetch_add(1, Ordering::Relaxed);
+            c.set(v);
+        }
+        v % N_SHARDS
+    })
+}
+
+/// The bucket a latency of `us` microseconds falls into (see
+/// [`N_LATENCY_BUCKETS`] for the bucket boundaries).
+pub fn bucket_index(us: u64) -> usize {
+    if us == 0 {
+        0
+    } else {
+        (64 - us.leading_zeros() as usize).min(N_LATENCY_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` in microseconds (`u64::MAX` for
+/// the final catch-all bucket).
+pub fn bucket_upper_us(i: usize) -> u64 {
+    if i >= N_LATENCY_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Quantile estimate in microseconds over bucketed samples: the
+/// inclusive upper bound of the bucket holding the `q`-th of `count`
+/// samples (0 when empty). Shared by the local [`HistogramSummary`]
+/// and the wire-side transport rows so the two views can never
+/// diverge. A bucket estimate is within 2× of the true value by
+/// construction.
+pub fn quantile_from_buckets(count: u64, buckets: &[u64], q: f64) -> u64 {
+    if count == 0 {
+        return 0;
+    }
+    let rank = (count as f64 * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+    let mut seen = 0u64;
+    for (i, &b) in buckets.iter().enumerate() {
+        seen += b;
+        if seen >= rank {
+            return bucket_upper_us(i);
+        }
+    }
+    bucket_upper_us(N_LATENCY_BUCKETS - 1)
+}
+
+/// A lock-free latency histogram striped across cache-aligned shards.
+#[derive(Debug)]
+pub struct ShardedHistogram {
+    shards: Vec<Shard>,
+}
+
+impl Default for ShardedHistogram {
+    fn default() -> Self {
+        ShardedHistogram::new()
+    }
+}
+
+impl ShardedHistogram {
+    /// An empty histogram.
+    pub fn new() -> ShardedHistogram {
+        ShardedHistogram {
+            shards: (0..N_SHARDS).map(|_| Shard::new()).collect(),
+        }
+    }
+
+    /// Record one latency sample (relaxed atomics on the caller's own
+    /// shard — safe from any number of threads).
+    pub fn record(&self, d: Duration) {
+        let us = u64::try_from(d.as_micros()).unwrap_or(u64::MAX);
+        let s = &self.shards[shard_index()];
+        s.count.fetch_add(1, Ordering::Relaxed);
+        s.sum_us.fetch_add(us, Ordering::Relaxed);
+        s.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Merge all shards into one consistent-enough summary (totals are
+    /// exact for all samples recorded-before the merge began).
+    pub fn merge(&self) -> HistogramSummary {
+        let mut out = HistogramSummary::default();
+        for s in &self.shards {
+            out.count += s.count.load(Ordering::Relaxed);
+            out.sum_us += s.sum_us.load(Ordering::Relaxed);
+            for (o, b) in out.buckets.iter_mut().zip(&s.buckets) {
+                *o += b.load(Ordering::Relaxed);
+            }
+        }
+        out
+    }
+}
+
+/// A merged, read-only view of a [`ShardedHistogram`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSummary {
+    /// Total samples recorded.
+    pub count: u64,
+    /// Sum of all samples in microseconds (saturating per sample).
+    pub sum_us: u64,
+    /// Per-bucket sample counts (see [`bucket_index`]).
+    pub buckets: [u64; N_LATENCY_BUCKETS],
+}
+
+impl HistogramSummary {
+    /// Mean latency in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate in microseconds (see
+    /// [`quantile_from_buckets`]).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        quantile_from_buckets(self.count, &self.buckets, q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_partition_the_axis() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), N_LATENCY_BUCKETS - 1);
+        // every bucket's upper bound lands back in that bucket
+        for i in 1..N_LATENCY_BUCKETS - 1 {
+            assert_eq!(bucket_index(bucket_upper_us(i)), i, "bucket {i}");
+            assert_eq!(bucket_index(bucket_upper_us(i) + 1), i + 1, "bucket {i}+1");
+        }
+    }
+
+    #[test]
+    fn records_merge_exactly() {
+        let h = ShardedHistogram::new();
+        for us in [0u64, 1, 5, 100, 1000, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        let m = h.merge();
+        assert_eq!(m.count, 6);
+        assert_eq!(m.sum_us, 101_106);
+        assert_eq!(m.buckets.iter().sum::<u64>(), 6);
+        assert_eq!(m.buckets[0], 1); // the 0 µs sample
+    }
+
+    #[test]
+    fn concurrent_records_are_all_counted() {
+        let h = std::sync::Arc::new(ShardedHistogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = std::sync::Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(Duration::from_micros(t * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.merge().count, 4000);
+    }
+
+    #[test]
+    fn quantiles_walk_the_buckets() {
+        let h = ShardedHistogram::new();
+        for _ in 0..90 {
+            h.record(Duration::from_micros(10)); // bucket 4 ([8, 16))
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_micros(5000)); // bucket 13
+        }
+        let m = h.merge();
+        assert_eq!(m.quantile_us(0.5), bucket_upper_us(4));
+        assert_eq!(m.quantile_us(0.99), bucket_upper_us(13));
+        assert!(m.mean_us() > 10.0 && m.mean_us() < 5000.0);
+    }
+
+    #[test]
+    fn empty_summary_is_zeroed() {
+        let m = ShardedHistogram::new().merge();
+        assert_eq!(m.count, 0);
+        assert_eq!(m.quantile_us(0.5), 0);
+        assert_eq!(m.mean_us(), 0.0);
+    }
+}

@@ -1,0 +1,48 @@
+//! Live serving telemetry (the always-on counterpart of [`metrics`]).
+//!
+//! The paper's headline claims are *operational* — 0.99 TOPS/W, a
+//! 97.4 % EDP reduction at 85 % input sparsity — so the serving stack
+//! must be able to report them while it runs, not only in offline
+//! reports. This subsystem is the in-band accounting path:
+//!
+//! - [`registry`] — the lock-free [`Telemetry`] registry every worker,
+//!   session, and batcher updates with plain atomic adds: requests and
+//!   responses per workload kind, attributed cycles/energy/EDP
+//!   (through the calibrated [`EnergyModel`] tables), observed input
+//!   sparsity, instruction-issue counters (AccW2V ∝ spikes — the
+//!   macro's energy-proportionality signal), queue depth, and
+//!   batch-lane occupancy.
+//! - [`histogram`] — sharded, cache-line-aligned latency histograms
+//!   (per transport: TCP framing vs the stdio loop).
+//! - [`snapshot`] — the plain [`StatsSnapshot`] view, its stable wire
+//!   codes, and the Prometheus text rendering.
+//! - [`expose`] — the `--metrics-listen` plaintext exposition
+//!   endpoint ([`serve_metrics`]), dependency-free.
+//!
+//! The same snapshot travels three ways: the `StatsRequest` (`0x14`) /
+//! `StatsResponse` (`0x15`) frames of `docs/PROTOCOL.md` (served by
+//! the TCP listener, fetched by `impulse stats <addr>`), the
+//! Prometheus endpoint, and the backpressure flags word the listener
+//! stamps on response frames (queue depth + soft-limit bit) for
+//! clients that negotiated the capability.
+//!
+//! [`metrics`]: crate::metrics
+//! [`EnergyModel`]: crate::energy::EnergyModel
+
+#![warn(missing_docs)]
+
+pub mod expose;
+pub mod histogram;
+pub mod registry;
+pub mod snapshot;
+
+pub use expose::{serve_metrics, MetricsHandle};
+pub use histogram::{
+    bucket_index, bucket_upper_us, HistogramSummary, ShardedHistogram, N_LATENCY_BUCKETS,
+};
+pub use registry::{AtomicF64, Telemetry, TelemetryConfig, DEFAULT_QUEUE_SOFT_LIMIT};
+pub use snapshot::{
+    instr_code, instr_from_code, instr_name, kind_code, kind_from_code, kind_name, KindStats,
+    StatsSnapshot, Transport, TransportStats, ALL_INSTR_KINDS, ALL_KINDS, ALL_TRANSPORTS,
+    STATS_VERSION,
+};

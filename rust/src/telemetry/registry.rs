@@ -1,0 +1,415 @@
+//! The lock-free telemetry registry.
+//!
+//! One [`Telemetry`] instance is shared (via `Arc`) by everything on a
+//! server's serve path — the coordinator's submit chokepoint, every
+//! worker, the TCP responder threads, and the stdio loop. All updates
+//! are single atomic adds (plus one short CAS loop for the f64 EDP
+//! accumulator) on pre-allocated cells: no locks, no allocation, no
+//! map lookups in-band. Reads ([`Telemetry::snapshot`]) merge the
+//! cells into a [`StatsSnapshot`] without stopping writers.
+
+use super::histogram::ShardedHistogram;
+use super::snapshot::{
+    instr_code, kind_code, KindStats, StatsSnapshot, Transport, TransportStats, ALL_INSTR_KINDS,
+    ALL_KINDS, ALL_TRANSPORTS,
+};
+use crate::coordinator::{WorkloadInput, WorkloadKind};
+use crate::energy::EnergyModel;
+use crate::isa::InstructionKind;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Default backpressure soft limit (queued requests) when none is
+/// configured: deep enough that a healthy server never trips it.
+pub const DEFAULT_QUEUE_SOFT_LIMIT: u64 = 1024;
+
+/// An `f64` accumulator over an atomic bit pattern (short CAS loop —
+/// lock-free, used only for the EDP total where integer units would
+/// overflow).
+#[derive(Debug, Default)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    /// Add `d` atomically.
+    pub fn add(&self, d: f64) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                Some((f64::from_bits(bits) + d).to_bits())
+            });
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Static configuration of a [`Telemetry`] registry.
+#[derive(Clone, Copy, Debug)]
+pub struct TelemetryConfig {
+    /// Supply voltage the energy attribution is evaluated at.
+    pub vdd: f64,
+    /// Clock frequency (Hz) used to turn cycles into delay for EDP.
+    pub freq_hz: f64,
+    /// Queue depth at which the server starts signalling backpressure
+    /// (the soft-limit bit in response frame flags and in
+    /// `StatsResponse`). `0` signals **unconditionally** — an
+    /// operator-facing "drain me" mode for maintenance.
+    pub queue_soft_limit: u64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            vdd: crate::NOMINAL_VDD,
+            freq_hz: crate::NOMINAL_FREQ_HZ,
+            queue_soft_limit: DEFAULT_QUEUE_SOFT_LIMIT,
+        }
+    }
+}
+
+/// Per-workload-kind atomic counter cell.
+#[derive(Debug, Default)]
+struct KindCell {
+    submitted: AtomicU64,
+    ok: AtomicU64,
+    err: AtomicU64,
+    cycles: AtomicU64,
+    energy_fj: AtomicU64,
+    edp_js: AtomicF64,
+    input_units: AtomicU64,
+    input_active: AtomicU64,
+}
+
+/// The registry every serve-path component updates in-band.
+///
+/// Counter semantics (all monotonic except the depth gauge):
+///
+/// - **per kind** — submissions, ok/err responses, attributed cycles,
+///   attributed energy (fJ) and EDP (J·s), input units/active units;
+/// - **queue depth** — submitted minus answered (a gauge; drives the
+///   backpressure flags word);
+/// - **batches** — micro-batch count, occupied fused lanes, and the
+///   lane capacity that was available;
+/// - **instructions** — per-[`InstructionKind`] issue counts sampled
+///   from the worker pools' macro counters;
+/// - **per transport** — server-side latency histograms recorded at
+///   response delivery.
+pub struct Telemetry {
+    cfg: TelemetryConfig,
+    /// Per-instruction energy (J) at `cfg.vdd`, indexed by wire code —
+    /// precomputed so recording never touches the energy model.
+    instr_energy_j: [f64; ALL_INSTR_KINDS.len()],
+    kinds: [KindCell; ALL_KINDS.len()],
+    depth: AtomicU64,
+    batches: AtomicU64,
+    batch_lanes: AtomicU64,
+    batch_lane_capacity: AtomicU64,
+    instr: [AtomicU64; ALL_INSTR_KINDS.len()],
+    wire: [ShardedHistogram; ALL_TRANSPORTS.len()],
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry")
+            .field("cfg", &self.cfg)
+            .field("queue_depth", &self.queue_depth())
+            .finish_non_exhaustive()
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::new(TelemetryConfig::default())
+    }
+}
+
+impl Telemetry {
+    /// A zeroed registry attributing energy at the configured
+    /// operating point (calibrates the energy model once, up front).
+    pub fn new(cfg: TelemetryConfig) -> Telemetry {
+        let model = EnergyModel::calibrated();
+        let instr_energy_j =
+            std::array::from_fn(|i| model.instr_energy_j(ALL_INSTR_KINDS[i], cfg.vdd));
+        Telemetry {
+            cfg,
+            instr_energy_j,
+            kinds: std::array::from_fn(|_| KindCell::default()),
+            depth: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_lanes: AtomicU64::new(0),
+            batch_lane_capacity: AtomicU64::new(0),
+            instr: std::array::from_fn(|_| AtomicU64::new(0)),
+            wire: std::array::from_fn(|_| ShardedHistogram::new()),
+        }
+    }
+
+    /// The configuration this registry was built with.
+    pub fn config(&self) -> &TelemetryConfig {
+        &self.cfg
+    }
+
+    fn cell(&self, kind: WorkloadKind) -> &KindCell {
+        &self.kinds[kind_code(kind) as usize]
+    }
+
+    /// Record a request accepted into the queue (the coordinator's
+    /// submit chokepoint calls this — every transport funnels through
+    /// it exactly once per request, *before* the enqueue, so a fast
+    /// worker can never decrement the depth gauge ahead of it).
+    pub fn record_submit(&self, kind: WorkloadKind) {
+        self.cell(kind).submitted.fetch_add(1, Ordering::Relaxed);
+        self.depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Roll back a [`Telemetry::record_submit`] whose enqueue failed
+    /// (server shutting down): the request never entered the queue and
+    /// will never produce a response.
+    pub fn record_submit_rejected(&self, kind: WorkloadKind) {
+        let c = &self.cell(kind).submitted;
+        let _ = c.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(1))
+        });
+        let _ = self
+            .depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| Some(d.saturating_sub(1)));
+    }
+
+    /// Record one published response: outcome, attributed cycles, and
+    /// attributed energy (femtojoules; EDP is derived here from the
+    /// configured clock). Decrements the queue-depth gauge.
+    pub fn record_response(&self, kind: WorkloadKind, cycles: u64, energy_fj: u64, ok: bool) {
+        let c = self.cell(kind);
+        if ok {
+            c.ok.fetch_add(1, Ordering::Relaxed);
+        } else {
+            c.err.fetch_add(1, Ordering::Relaxed);
+        }
+        c.cycles.fetch_add(cycles, Ordering::Relaxed);
+        c.energy_fj.fetch_add(energy_fj, Ordering::Relaxed);
+        if cycles > 0 && energy_fj > 0 {
+            let delay_s = cycles as f64 / self.cfg.freq_hz;
+            c.edp_js.add(energy_fj as f64 * 1e-15 * delay_s);
+        }
+        // saturating decrement: a response must never wrap the gauge
+        // even if its submission predates this registry
+        let _ = self
+            .depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| Some(d.saturating_sub(1)));
+    }
+
+    /// Record the observed input of a request: total units and active
+    /// (spiking-relevant) units — non-padding word ids for sentiment,
+    /// nonzero pixels for digits.
+    pub fn record_input(&self, input: &WorkloadInput) {
+        let (units, active) = match input {
+            WorkloadInput::Words(ids) => (
+                ids.len() as u64,
+                ids.iter().filter(|&&w| w >= 0).count() as u64,
+            ),
+            WorkloadInput::Image { pixels, .. } => (
+                pixels.len() as u64,
+                pixels.iter().filter(|&&p| p != 0.0).count() as u64,
+            ),
+        };
+        let c = self.cell(input.kind());
+        c.input_units.fetch_add(units, Ordering::Relaxed);
+        c.input_active.fetch_add(active, Ordering::Relaxed);
+    }
+
+    /// Record one executed micro-batch: occupied fused lanes and the
+    /// lane capacity the worker had available.
+    pub fn record_batch(&self, lanes: u64, capacity: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_lanes.fetch_add(lanes, Ordering::Relaxed);
+        self.batch_lane_capacity.fetch_add(capacity.max(lanes), Ordering::Relaxed);
+    }
+
+    /// Fold a worker's instruction-histogram delta into the issue
+    /// counters.
+    pub fn record_instr(&self, hist: &BTreeMap<InstructionKind, u64>) {
+        for (&k, &n) in hist {
+            self.instr[instr_code(k) as usize].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Total energy (J) of an instruction histogram at the configured
+    /// supply — the attribution the serve path splits across a fused
+    /// batch's requests in proportion to their cycles.
+    pub fn energy_of(&self, hist: &BTreeMap<InstructionKind, u64>) -> f64 {
+        hist.iter()
+            .map(|(&k, &n)| self.instr_energy_j[instr_code(k) as usize] * n as f64)
+            .sum()
+    }
+
+    /// Record a delivered response's server-side latency on its
+    /// transport.
+    pub fn record_wire(&self, transport: Transport, latency: Duration) {
+        self.wire[transport.code() as usize].record(latency);
+    }
+
+    /// Current queue depth (submitted minus answered).
+    pub fn queue_depth(&self) -> u64 {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Whether backpressure is currently signalled: queue depth at or
+    /// over the soft limit (a limit of 0 signals unconditionally).
+    pub fn soft_limited(&self) -> bool {
+        self.queue_depth() >= self.cfg.queue_soft_limit
+    }
+
+    /// Merge every cell into a plain snapshot (writers keep going;
+    /// totals are exact for everything recorded-before the call).
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let kinds = ALL_KINDS
+            .iter()
+            .map(|&k| {
+                let c = self.cell(k);
+                KindStats {
+                    kind: k,
+                    submitted: c.submitted.load(Ordering::Relaxed),
+                    ok: c.ok.load(Ordering::Relaxed),
+                    err: c.err.load(Ordering::Relaxed),
+                    cycles: c.cycles.load(Ordering::Relaxed),
+                    energy_fj: c.energy_fj.load(Ordering::Relaxed),
+                    edp_js: c.edp_js.get(),
+                    input_units: c.input_units.load(Ordering::Relaxed),
+                    input_active: c.input_active.load(Ordering::Relaxed),
+                }
+            })
+            .collect();
+        let instr = ALL_INSTR_KINDS
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| (instr_code(k), self.instr[i].load(Ordering::Relaxed)))
+            .collect();
+        let transports = ALL_TRANSPORTS
+            .iter()
+            .map(|&t| {
+                let m = self.wire[t.code() as usize].merge();
+                TransportStats {
+                    transport: t,
+                    count: m.count,
+                    sum_us: m.sum_us,
+                    buckets: m.buckets.to_vec(),
+                }
+            })
+            .collect();
+        StatsSnapshot {
+            queue_depth: self.queue_depth(),
+            queue_soft_limit: self.cfg.queue_soft_limit,
+            soft_limited: self.soft_limited(),
+            batches: self.batches.load(Ordering::Relaxed),
+            batch_lanes: self.batch_lanes.load(Ordering::Relaxed),
+            batch_lane_capacity: self.batch_lane_capacity.load(Ordering::Relaxed),
+            kinds,
+            instr,
+            transports,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_and_response_drive_the_depth_gauge() {
+        let t = Telemetry::new(TelemetryConfig { queue_soft_limit: 2, ..Default::default() });
+        assert_eq!(t.queue_depth(), 0);
+        assert!(!t.soft_limited());
+        t.record_submit(WorkloadKind::Sentiment);
+        t.record_submit(WorkloadKind::Sentiment);
+        assert_eq!(t.queue_depth(), 2);
+        assert!(t.soft_limited());
+        t.record_response(WorkloadKind::Sentiment, 100, 50, true);
+        assert_eq!(t.queue_depth(), 1);
+        assert!(!t.soft_limited());
+        // extra responses saturate at zero instead of wrapping
+        t.record_response(WorkloadKind::Sentiment, 0, 0, false);
+        t.record_response(WorkloadKind::Sentiment, 0, 0, false);
+        assert_eq!(t.queue_depth(), 0);
+
+        let s = t.snapshot();
+        let k = s.kind(WorkloadKind::Sentiment).unwrap();
+        assert_eq!((k.submitted, k.ok, k.err), (2, 1, 2));
+        assert_eq!(k.cycles, 100);
+        assert_eq!(k.energy_fj, 50);
+        assert!(k.edp_js > 0.0);
+    }
+
+    #[test]
+    fn soft_limit_zero_signals_unconditionally() {
+        let t = Telemetry::new(TelemetryConfig { queue_soft_limit: 0, ..Default::default() });
+        assert!(t.soft_limited());
+    }
+
+    #[test]
+    fn input_observation_tracks_sparsity_per_kind() {
+        let t = Telemetry::default();
+        t.record_input(&WorkloadInput::Words(vec![3, -1, 7, -1]));
+        t.record_input(&WorkloadInput::Image {
+            h: 2,
+            w: 2,
+            pixels: vec![0.0, 0.5, 0.0, 0.0],
+        });
+        let s = t.snapshot();
+        let w = s.kind(WorkloadKind::Sentiment).unwrap();
+        assert_eq!((w.input_units, w.input_active), (4, 2));
+        let d = s.kind(WorkloadKind::Digits).unwrap();
+        assert_eq!((d.input_units, d.input_active), (4, 1));
+        assert!((d.input_sparsity() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn instruction_histograms_fold_into_energy() {
+        let t = Telemetry::default();
+        let mut h = BTreeMap::new();
+        h.insert(InstructionKind::AccW2V, 10u64);
+        h.insert(InstructionKind::SpikeCheck, 2u64);
+        let e = t.energy_of(&h);
+        // point D: 10 × 1.0101 pJ + 2 × 0.8197 pJ (energy/model.rs)
+        assert!((e * 1e12 - (10.0 * 1.0101 + 2.0 * 0.8197)).abs() < 0.05, "{e}");
+        t.record_instr(&h);
+        let s = t.snapshot();
+        assert_eq!(s.instr_count(InstructionKind::AccW2V), 10);
+        assert_eq!(s.instr_count(InstructionKind::SpikeCheck), 2);
+        assert_eq!(s.instr_count(InstructionKind::WriteW), 0);
+    }
+
+    #[test]
+    fn batches_and_wire_latency_accumulate() {
+        let t = Telemetry::default();
+        t.record_batch(3, 13);
+        t.record_batch(1, 13);
+        t.record_wire(Transport::Tcp, Duration::from_micros(500));
+        t.record_wire(Transport::Stdio, Duration::from_micros(9));
+        let s = t.snapshot();
+        assert_eq!((s.batches, s.batch_lanes, s.batch_lane_capacity), (2, 4, 26));
+        assert_eq!(s.mean_batch_occupancy(), 2.0);
+        assert_eq!(s.transport(Transport::Tcp).unwrap().count, 1);
+        assert_eq!(s.transport(Transport::Stdio).unwrap().sum_us, 9);
+    }
+
+    #[test]
+    fn atomic_f64_accumulates_concurrently() {
+        let a = std::sync::Arc::new(AtomicF64::default());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let a = std::sync::Arc::clone(&a);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        a.add(0.5);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(a.get(), 2000.0);
+    }
+}

@@ -1,0 +1,441 @@
+//! Point-in-time telemetry snapshots and their stable wire codes.
+//!
+//! A [`StatsSnapshot`] is the plain (non-atomic) view a
+//! [`Telemetry`](super::Telemetry) registry produces on demand. It is
+//! what the `StatsResponse` wire payload carries (codec in
+//! `serve::session`, spec in `docs/PROTOCOL.md` §4.9), what the
+//! `--metrics-listen` endpoint renders as Prometheus text, and what
+//! `impulse stats` prints. The numeric codes in this module are wire
+//! contract — change them only in lockstep with `docs/PROTOCOL.md`.
+
+use super::histogram::bucket_upper_us;
+use crate::coordinator::WorkloadKind;
+use crate::isa::InstructionKind;
+
+/// Stats payload format version carried in `StatsResponse` (§4.9).
+pub const STATS_VERSION: u8 = 1;
+
+/// Transports a response can be delivered over (wire codes in §4.9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Transport {
+    /// The binary-framed TCP listener.
+    Tcp,
+    /// The stdio line loop.
+    Stdio,
+}
+
+/// All transports, in wire-code order.
+pub const ALL_TRANSPORTS: [Transport; 2] = [Transport::Tcp, Transport::Stdio];
+
+impl Transport {
+    /// Stable wire code of this transport.
+    pub fn code(self) -> u8 {
+        match self {
+            Transport::Tcp => 0,
+            Transport::Stdio => 1,
+        }
+    }
+
+    /// Decode a wire code; `None` for unassigned values.
+    pub fn from_code(c: u8) -> Option<Transport> {
+        match c {
+            0 => Some(Transport::Tcp),
+            1 => Some(Transport::Stdio),
+            _ => None,
+        }
+    }
+
+    /// Lower-case label used in Prometheus labels and CLI output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Transport::Tcp => "tcp",
+            Transport::Stdio => "stdio",
+        }
+    }
+}
+
+/// All workload kinds, in wire-code order.
+pub const ALL_KINDS: [WorkloadKind; 2] = [WorkloadKind::Sentiment, WorkloadKind::Digits];
+
+/// Stable wire code of a workload kind (§4.9).
+pub fn kind_code(k: WorkloadKind) -> u8 {
+    match k {
+        WorkloadKind::Sentiment => 0,
+        WorkloadKind::Digits => 1,
+    }
+}
+
+/// Decode a workload-kind wire code; `None` for unassigned values.
+pub fn kind_from_code(c: u8) -> Option<WorkloadKind> {
+    match c {
+        0 => Some(WorkloadKind::Sentiment),
+        1 => Some(WorkloadKind::Digits),
+        _ => None,
+    }
+}
+
+/// Lower-case label of a workload kind (Prometheus / CLI).
+pub fn kind_name(k: WorkloadKind) -> &'static str {
+    match k {
+        WorkloadKind::Sentiment => "sentiment",
+        WorkloadKind::Digits => "digits",
+    }
+}
+
+/// All instruction kinds, in wire-code order.
+pub const ALL_INSTR_KINDS: [InstructionKind; 7] = [
+    InstructionKind::AccW2V,
+    InstructionKind::AccV2V,
+    InstructionKind::SpikeCheck,
+    InstructionKind::ResetV,
+    InstructionKind::ReadV,
+    InstructionKind::WriteV,
+    InstructionKind::WriteW,
+];
+
+/// Stable wire code of an instruction kind (§4.9).
+pub fn instr_code(k: InstructionKind) -> u8 {
+    match k {
+        InstructionKind::AccW2V => 0,
+        InstructionKind::AccV2V => 1,
+        InstructionKind::SpikeCheck => 2,
+        InstructionKind::ResetV => 3,
+        InstructionKind::ReadV => 4,
+        InstructionKind::WriteV => 5,
+        InstructionKind::WriteW => 6,
+    }
+}
+
+/// Decode an instruction-kind wire code; `None` for unassigned values.
+pub fn instr_from_code(c: u8) -> Option<InstructionKind> {
+    ALL_INSTR_KINDS.get(c as usize).copied()
+}
+
+/// Lower-case label of an instruction kind (Prometheus / CLI).
+pub fn instr_name(k: InstructionKind) -> &'static str {
+    match k {
+        InstructionKind::AccW2V => "acc_w2v",
+        InstructionKind::AccV2V => "acc_v2v",
+        InstructionKind::SpikeCheck => "spike_check",
+        InstructionKind::ResetV => "reset_v",
+        InstructionKind::ReadV => "read_v",
+        InstructionKind::WriteV => "write_v",
+        InstructionKind::WriteW => "write_w",
+    }
+}
+
+/// Per-workload-kind counters of a [`StatsSnapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct KindStats {
+    /// Which workload family these counters describe.
+    pub kind: WorkloadKind,
+    /// Requests accepted into the queue.
+    pub submitted: u64,
+    /// Successful responses published.
+    pub ok: u64,
+    /// Error responses published.
+    pub err: u64,
+    /// Macro cycles attributed to this kind's responses.
+    pub cycles: u64,
+    /// Energy attributed through `energy::model`, in femtojoules.
+    pub energy_fj: u64,
+    /// Energy–delay product attributed to this kind, in J·s.
+    pub edp_js: f64,
+    /// Input units observed (word-id slots / pixels).
+    pub input_units: u64,
+    /// Input units that were active (non-padding ids / nonzero
+    /// pixels) — `1 − active/units` is the observed input sparsity the
+    /// macro's energy proportionality rides on.
+    pub input_active: u64,
+}
+
+impl KindStats {
+    /// An all-zero row for a kind.
+    pub fn zero(kind: WorkloadKind) -> KindStats {
+        KindStats {
+            kind,
+            submitted: 0,
+            ok: 0,
+            err: 0,
+            cycles: 0,
+            energy_fj: 0,
+            edp_js: 0.0,
+            input_units: 0,
+            input_active: 0,
+        }
+    }
+
+    /// Observed input sparsity in `[0, 1]` (0 when nothing observed).
+    pub fn input_sparsity(&self) -> f64 {
+        if self.input_units == 0 {
+            0.0
+        } else {
+            1.0 - self.input_active as f64 / self.input_units as f64
+        }
+    }
+}
+
+/// Per-transport latency histogram of a [`StatsSnapshot`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Which transport delivered these responses.
+    pub transport: Transport,
+    /// Responses delivered.
+    pub count: u64,
+    /// Sum of server-side latencies in microseconds.
+    pub sum_us: u64,
+    /// Power-of-two latency buckets (see
+    /// [`bucket_index`](super::histogram::bucket_index)).
+    pub buckets: Vec<u64>,
+}
+
+impl TransportStats {
+    /// Quantile estimate in microseconds from the buckets (see
+    /// [`quantile_from_buckets`](super::histogram::quantile_from_buckets)).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        super::histogram::quantile_from_buckets(self.count, &self.buckets, q)
+    }
+}
+
+/// A point-in-time view of a server's telemetry registry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatsSnapshot {
+    /// Requests submitted but not yet answered.
+    pub queue_depth: u64,
+    /// Configured backpressure soft limit (0 = always signalled).
+    pub queue_soft_limit: u64,
+    /// Whether the queue depth is at or over the soft limit.
+    pub soft_limited: bool,
+    /// Micro-batches executed by the worker pool.
+    pub batches: u64,
+    /// Total fused lanes those batches occupied (Σ batch sizes).
+    pub batch_lanes: u64,
+    /// Total fused-lane capacity those batches had available.
+    pub batch_lane_capacity: u64,
+    /// Per-workload-kind counters, in wire-code order.
+    pub kinds: Vec<KindStats>,
+    /// Instruction issue counters as `(wire code, count)` pairs.
+    pub instr: Vec<(u8, u64)>,
+    /// Per-transport latency histograms.
+    pub transports: Vec<TransportStats>,
+}
+
+impl StatsSnapshot {
+    /// Mean fused-lane occupancy per batch (0 when no batches ran).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_lanes as f64 / self.batches as f64
+        }
+    }
+
+    /// The counter row for one workload kind, if present.
+    pub fn kind(&self, k: WorkloadKind) -> Option<&KindStats> {
+        self.kinds.iter().find(|s| s.kind == k)
+    }
+
+    /// The histogram row for one transport, if present.
+    pub fn transport(&self, t: Transport) -> Option<&TransportStats> {
+        self.transports.iter().find(|s| s.transport == t)
+    }
+
+    /// Instruction count by kind (0 when absent).
+    pub fn instr_count(&self, k: InstructionKind) -> u64 {
+        let code = instr_code(k);
+        self.instr
+            .iter()
+            .find(|(c, _)| *c == code)
+            .map(|(_, n)| *n)
+            .unwrap_or(0)
+    }
+
+    /// Render in the Prometheus text exposition format (version
+    /// 0.0.4) — what `--metrics-listen` serves. No dependencies: the
+    /// format is plain `name{labels} value` lines.
+    pub fn to_prometheus(&self) -> String {
+        let mut o = String::with_capacity(4096);
+        let mut put = |line: String| {
+            o.push_str(&line);
+            o.push('\n');
+        };
+        put("# HELP impulse_queue_depth Requests submitted but not yet answered.".into());
+        put("# TYPE impulse_queue_depth gauge".into());
+        put(format!("impulse_queue_depth {}", self.queue_depth));
+        put("# TYPE impulse_queue_soft_limit gauge".into());
+        put(format!("impulse_queue_soft_limit {}", self.queue_soft_limit));
+        put("# HELP impulse_queue_soft_limited 1 when backpressure is signalled.".into());
+        put("# TYPE impulse_queue_soft_limited gauge".into());
+        put(format!("impulse_queue_soft_limited {}", u8::from(self.soft_limited)));
+        put("# TYPE impulse_batches_total counter".into());
+        put(format!("impulse_batches_total {}", self.batches));
+        put("# HELP impulse_batch_lanes_total Fused lanes occupied by batches.".into());
+        put("# TYPE impulse_batch_lanes_total counter".into());
+        put(format!("impulse_batch_lanes_total {}", self.batch_lanes));
+        put("# TYPE impulse_batch_lane_capacity_total counter".into());
+        put(format!("impulse_batch_lane_capacity_total {}", self.batch_lane_capacity));
+
+        put("# TYPE impulse_requests_submitted_total counter".into());
+        put("# TYPE impulse_responses_total counter".into());
+        put("# TYPE impulse_cycles_total counter".into());
+        put("# HELP impulse_energy_joules_total Energy attributed via the energy model.".into());
+        put("# TYPE impulse_energy_joules_total counter".into());
+        put("# TYPE impulse_edp_joule_seconds_total counter".into());
+        put("# TYPE impulse_input_units_total counter".into());
+        put("# TYPE impulse_input_active_total counter".into());
+        for k in &self.kinds {
+            let name = kind_name(k.kind);
+            let kl = format!("{{kind=\"{name}\"}}");
+            put(format!("impulse_requests_submitted_total{kl} {}", k.submitted));
+            put(format!("impulse_responses_total{{kind=\"{name}\",outcome=\"ok\"}} {}", k.ok));
+            put(format!("impulse_responses_total{{kind=\"{name}\",outcome=\"err\"}} {}", k.err));
+            put(format!("impulse_cycles_total{kl} {}", k.cycles));
+            put(format!("impulse_energy_joules_total{kl} {:e}", k.energy_fj as f64 * 1e-15));
+            put(format!("impulse_edp_joule_seconds_total{kl} {:e}", k.edp_js));
+            put(format!("impulse_input_units_total{kl} {}", k.input_units));
+            put(format!("impulse_input_active_total{kl} {}", k.input_active));
+        }
+
+        put("# HELP impulse_instructions_total Macro instructions issued, by kind.".into());
+        put("# TYPE impulse_instructions_total counter".into());
+        for &(code, n) in &self.instr {
+            let label = instr_from_code(code).map(instr_name).unwrap_or("unknown");
+            put(format!("impulse_instructions_total{{instr=\"{label}\"}} {n}"));
+        }
+
+        put("# HELP impulse_request_latency_seconds Server-side latency per transport.".into());
+        put("# TYPE impulse_request_latency_seconds histogram".into());
+        for t in &self.transports {
+            let name = t.transport.name();
+            let mut cum = 0u64;
+            for (i, &b) in t.buckets.iter().enumerate() {
+                cum += b;
+                let le = if bucket_upper_us(i) == u64::MAX {
+                    "+Inf".to_string()
+                } else {
+                    format!("{:e}", (bucket_upper_us(i) + 1) as f64 / 1e6)
+                };
+                put(format!(
+                    "impulse_request_latency_seconds_bucket\
+                     {{transport=\"{name}\",le=\"{le}\"}} {cum}"
+                ));
+            }
+            put(format!(
+                "impulse_request_latency_seconds_sum{{transport=\"{name}\"}} {:e}",
+                t.sum_us as f64 / 1e6
+            ));
+            put(format!(
+                "impulse_request_latency_seconds_count{{transport=\"{name}\"}} {}",
+                t.count
+            ));
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::N_LATENCY_BUCKETS;
+
+    #[test]
+    fn wire_codes_roundtrip() {
+        for k in ALL_KINDS {
+            assert_eq!(kind_from_code(kind_code(k)), Some(k));
+        }
+        assert_eq!(kind_from_code(9), None);
+        for t in ALL_TRANSPORTS {
+            assert_eq!(Transport::from_code(t.code()), Some(t));
+        }
+        assert_eq!(Transport::from_code(7), None);
+        for (i, k) in ALL_INSTR_KINDS.iter().enumerate() {
+            assert_eq!(instr_code(*k) as usize, i);
+            assert_eq!(instr_from_code(i as u8), Some(*k));
+        }
+        assert_eq!(instr_from_code(7), None);
+    }
+
+    #[test]
+    fn sparsity_and_occupancy_derivations() {
+        let mut k = KindStats::zero(WorkloadKind::Sentiment);
+        assert_eq!(k.input_sparsity(), 0.0);
+        k.input_units = 100;
+        k.input_active = 15;
+        assert!((k.input_sparsity() - 0.85).abs() < 1e-12);
+
+        let s = StatsSnapshot {
+            queue_depth: 0,
+            queue_soft_limit: 8,
+            soft_limited: false,
+            batches: 4,
+            batch_lanes: 10,
+            batch_lane_capacity: 52,
+            kinds: vec![k],
+            instr: vec![(0, 42)],
+            transports: vec![],
+        };
+        assert_eq!(s.mean_batch_occupancy(), 2.5);
+        assert_eq!(s.instr_count(InstructionKind::AccW2V), 42);
+        assert_eq!(s.instr_count(InstructionKind::WriteW), 0);
+        assert!(s.kind(WorkloadKind::Sentiment).is_some());
+        assert!(s.kind(WorkloadKind::Digits).is_none());
+    }
+
+    #[test]
+    fn prometheus_rendering_contains_core_series() {
+        let s = StatsSnapshot {
+            queue_depth: 3,
+            queue_soft_limit: 8,
+            soft_limited: false,
+            batches: 2,
+            batch_lanes: 5,
+            batch_lane_capacity: 26,
+            kinds: vec![KindStats {
+                submitted: 5,
+                ok: 4,
+                err: 1,
+                cycles: 999,
+                energy_fj: 1_000_000,
+                edp_js: 2.5e-12,
+                input_units: 80,
+                input_active: 20,
+                ..KindStats::zero(WorkloadKind::Sentiment)
+            }],
+            instr: vec![(0, 123)],
+            transports: vec![TransportStats {
+                transport: Transport::Tcp,
+                count: 5,
+                sum_us: 900,
+                buckets: vec![0; N_LATENCY_BUCKETS],
+            }],
+        };
+        let text = s.to_prometheus();
+        assert!(text.contains("impulse_queue_depth 3"));
+        assert!(text.contains("impulse_requests_submitted_total{kind=\"sentiment\"} 5"));
+        assert!(text.contains("impulse_responses_total{kind=\"sentiment\",outcome=\"err\"} 1"));
+        assert!(text.contains("impulse_instructions_total{instr=\"acc_w2v\"} 123"));
+        assert!(text.contains("impulse_request_latency_seconds_count{transport=\"tcp\"} 5"));
+        assert!(text.contains("le=\"+Inf\"}"));
+        // every non-comment line is `name[{labels}] value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn transport_quantiles_match_histogram_semantics() {
+        let mut buckets = vec![0u64; N_LATENCY_BUCKETS];
+        buckets[4] = 90;
+        buckets[13] = 10;
+        let t = TransportStats { transport: Transport::Tcp, count: 100, sum_us: 0, buckets };
+        assert_eq!(t.quantile_us(0.5), bucket_upper_us(4));
+        assert_eq!(t.quantile_us(0.99), bucket_upper_us(13));
+        let empty = TransportStats {
+            transport: Transport::Stdio,
+            count: 0,
+            sum_us: 0,
+            buckets: vec![0; N_LATENCY_BUCKETS],
+        };
+        assert_eq!(empty.quantile_us(0.5), 0);
+    }
+}

@@ -5,11 +5,15 @@
 
 use impulse::proptest_lite::forall_ctx;
 use impulse::serve::{
-    crc32, decode_digits_request, decode_digits_response, decode_error, decode_infer_request,
-    decode_infer_response, encode_digits_request, encode_infer_request, error_payload,
-    hello_payload, Decoded, ErrorCode, Frame, PayloadType, WireError, CRC_LEN, HEADER_LEN,
-    MAX_PAYLOAD, PROTOCOL_VERSION,
+    crc32, decode_backpressure, decode_digits_request, decode_digits_response, decode_error,
+    decode_infer_request, decode_infer_response, decode_stats_response, encode_backpressure,
+    encode_digits_request, encode_infer_request, encode_stats_request, encode_stats_response,
+    error_payload, hello_caps_payload, hello_payload, Backpressure, Decoded, ErrorCode, Frame,
+    PayloadType, WireError, CRC_LEN, FLAG_SOFT_LIMIT, FLAG_TELEMETRY, HEADER_LEN, MAX_PAYLOAD,
+    PROTOCOL_VERSION,
 };
+use impulse::coordinator::WorkloadKind;
+use impulse::telemetry::{KindStats, StatsSnapshot, Transport, TransportStats};
 
 fn hex(s: &str) -> Vec<u8> {
     s.split_whitespace()
@@ -272,6 +276,188 @@ fn protocol_md_worked_example_digits_response() {
     assert_eq!((r.batch, r.worker), (2, 1));
 }
 
+/// The StatsSnapshot the §6.2 worked examples pin: small but
+/// exercising every section of the payload.
+fn pinned_stats_snapshot() -> StatsSnapshot {
+    StatsSnapshot {
+        queue_depth: 2,
+        queue_soft_limit: 8,
+        soft_limited: false,
+        batches: 3,
+        batch_lanes: 5,
+        batch_lane_capacity: 39,
+        kinds: vec![KindStats {
+            kind: WorkloadKind::Sentiment,
+            submitted: 5,
+            ok: 5,
+            err: 0,
+            cycles: 35200,
+            energy_fj: 35555,
+            edp_js: 1.5,
+            input_units: 15,
+            input_active: 12,
+        }],
+        instr: vec![(0, 1200), (2, 300)],
+        transports: vec![TransportStats {
+            transport: Transport::Tcp,
+            count: 5,
+            sum_us: 905,
+            buckets: vec![0, 1, 3, 1],
+        }],
+    }
+}
+
+/// PROTOCOL.md §6.2, example 1: `StatsRequest`, request id 9, empty
+/// payload.
+#[test]
+fn protocol_md_worked_example_stats_request() {
+    let wire = hex("49 4D 50 31 01 14 00 00 00 00 00 00 00 00 00 09 00 00 00 00 FF AE EF 08");
+    let f = Frame::new(PayloadType::StatsRequest, 9, encode_stats_request());
+    assert_eq!(f.encode(), wire, "encoder must produce the documented bytes");
+    let g = decode_one(&wire);
+    assert_eq!(g.payload_type, PayloadType::StatsRequest);
+    assert_eq!(g.request_id, 9);
+    assert!(g.payload.is_empty());
+}
+
+/// PROTOCOL.md §6.2, example 2: the matching `StatsResponse` with a
+/// backpressure flags word (telemetry + soft-limit bits, depth 2).
+#[test]
+fn protocol_md_worked_example_stats_response() {
+    let wire = hex(
+        "49 4D 50 31 01 15 C0 02 00 00 00 00 00 00 00 09 \
+         00 00 00 B3 01 00 00 00 00 00 00 00 00 02 00 00 \
+         00 00 00 00 00 08 00 00 00 00 00 00 00 00 03 00 \
+         00 00 00 00 00 00 05 00 00 00 00 00 00 00 27 01 \
+         00 00 00 00 00 00 00 00 05 00 00 00 00 00 00 00 \
+         05 00 00 00 00 00 00 00 00 00 00 00 00 00 00 89 \
+         80 00 00 00 00 00 00 8A E3 3F F8 00 00 00 00 00 \
+         00 00 00 00 00 00 00 00 0F 00 00 00 00 00 00 00 \
+         0C 02 00 00 00 00 00 00 00 04 B0 02 00 00 00 00 \
+         00 00 01 2C 01 00 00 00 00 00 00 00 00 05 00 00 \
+         00 00 00 00 03 89 04 00 00 00 00 00 00 00 00 00 \
+         00 00 00 00 00 00 01 00 00 00 00 00 00 00 03 00 \
+         00 00 00 00 00 00 01 88 9C 26 2B",
+    );
+    let snap = pinned_stats_snapshot();
+    let f = Frame::new(PayloadType::StatsResponse, 9, encode_stats_response(&snap))
+        .with_flags(encode_backpressure(2, true));
+    assert_eq!(f.encode(), wire, "encoder must produce the documented bytes");
+    let g = decode_one(&wire);
+    assert_eq!(g.payload_type, PayloadType::StatsResponse);
+    assert_eq!(g.request_id, 9);
+    assert_eq!(g.flags, FLAG_TELEMETRY | FLAG_SOFT_LIMIT | 2);
+    assert_eq!(
+        decode_backpressure(g.flags),
+        Some(Backpressure { queue_depth: 2, soft_limited: true })
+    );
+    assert_eq!(decode_stats_response(&g.payload).unwrap(), snap);
+}
+
+/// PROTOCOL.md §6.2, examples 3–4: the extended (capability) Hello
+/// and its 2-byte HelloAck.
+#[test]
+fn protocol_md_worked_example_extended_hello() {
+    let hello_wire = hex(
+        "49 4D 50 31 01 01 00 00 00 00 00 00 00 00 00 00 \
+         00 00 00 03 01 01 01 B1 A7 0B 43",
+    );
+    assert_eq!(
+        Frame::new(PayloadType::Hello, 0, hello_caps_payload(1, 1, 0x01)).encode(),
+        hello_wire
+    );
+    let ack_wire = hex(
+        "49 4D 50 31 01 02 00 00 00 00 00 00 00 00 00 00 \
+         00 00 00 02 01 01 F1 D0 26 AF",
+    );
+    assert_eq!(Frame::new(PayloadType::HelloAck, 0, vec![1, 1]).encode(), ack_wire);
+}
+
+/// PROTOCOL.md §6.2, example 5: the §6 `InferResponse` re-sent with a
+/// backpressure flags word (depth 3, soft limit clear) — only the
+/// flags bytes and the CRC differ from the pinned v1 frame.
+#[test]
+fn protocol_md_worked_example_flagged_response() {
+    let wire = hex(
+        "49 4D 50 31 01 11 80 03 00 00 00 00 00 00 00 07 \
+         00 00 00 1D 01 00 00 00 00 00 00 00 2A 00 00 00 \
+         00 00 00 89 80 00 00 00 00 00 00 00 B5 00 01 00 \
+         00 65 0D 76 35",
+    );
+    let g = decode_one(&wire);
+    assert_eq!(g.payload_type, PayloadType::InferResponse);
+    assert_eq!(
+        decode_backpressure(g.flags),
+        Some(Backpressure { queue_depth: 3, soft_limited: false })
+    );
+    let r = decode_infer_response(&g.payload).unwrap();
+    assert_eq!((r.pred, r.v_out, r.cycles), (1, 42, 35200));
+    // identical to the §6 frame except bytes 6–7 and the CRC
+    let v1 = hex(
+        "49 4D 50 31 01 11 00 00 00 00 00 00 00 00 00 07 00 00 00 1D \
+         01 00 00 00 00 00 00 00 2A 00 00 00 00 00 00 89 80 \
+         00 00 00 00 00 00 00 B5 00 01 00 00 0D AA 3F 31",
+    );
+    assert_eq!(wire[..6], v1[..6]);
+    assert_eq!(wire[8..wire.len() - CRC_LEN], v1[8..v1.len() - CRC_LEN]);
+}
+
+/// Property: stats payloads round-trip bit-exactly through the codec
+/// for arbitrary counter values.
+#[test]
+fn prop_stats_payload_roundtrips() {
+    forall_ctx(
+        120,
+        0x57A7,
+        |rng| StatsSnapshot {
+            queue_depth: rng.next_u64(),
+            queue_soft_limit: rng.next_u64(),
+            soft_limited: rng.gen_range(2) == 1,
+            batches: rng.next_u64(),
+            batch_lanes: rng.next_u64(),
+            batch_lane_capacity: rng.next_u64(),
+            kinds: vec![
+                KindStats {
+                    kind: WorkloadKind::Sentiment,
+                    submitted: rng.next_u64(),
+                    ok: rng.next_u64(),
+                    err: rng.next_u64(),
+                    cycles: rng.next_u64(),
+                    energy_fj: rng.next_u64(),
+                    edp_js: rng.gen_range(1 << 30) as f64 * 1e-12,
+                    input_units: rng.next_u64(),
+                    input_active: rng.next_u64(),
+                },
+                KindStats {
+                    kind: WorkloadKind::Digits,
+                    submitted: rng.next_u64(),
+                    ok: 0,
+                    err: 0,
+                    cycles: 0,
+                    energy_fj: 0,
+                    edp_js: 0.0,
+                    input_units: 0,
+                    input_active: 0,
+                },
+            ],
+            instr: (0..7).map(|c| (c as u8, rng.next_u64())).collect(),
+            transports: vec![TransportStats {
+                transport: Transport::Stdio,
+                count: rng.next_u64(),
+                sum_us: rng.next_u64(),
+                buckets: (0..rng.gen_range(29) as usize).map(|_| rng.next_u64()).collect(),
+            }],
+        },
+        |snap| {
+            let payload = encode_stats_response(snap);
+            match decode_stats_response(&payload) {
+                Ok(got) if got == *snap => Ok(()),
+                other => Err(format!("roundtrip failed: {other:?}")),
+            }
+        },
+    );
+}
+
 /// The new v1 discriminants and error code round-trip on the wire.
 #[test]
 fn digits_discriminants_and_request_too_large_code() {
@@ -279,6 +465,10 @@ fn digits_discriminants_and_request_too_large_code() {
     assert_eq!(PayloadType::DigitsInferResponse.as_u8(), 0x13);
     assert_eq!(PayloadType::from_u8(0x12), Some(PayloadType::DigitsInferRequest));
     assert_eq!(PayloadType::from_u8(0x13), Some(PayloadType::DigitsInferResponse));
+    assert_eq!(PayloadType::StatsRequest.as_u8(), 0x14);
+    assert_eq!(PayloadType::StatsResponse.as_u8(), 0x15);
+    assert_eq!(PayloadType::from_u8(0x14), Some(PayloadType::StatsRequest));
+    assert_eq!(PayloadType::from_u8(0x15), Some(PayloadType::StatsResponse));
     assert_eq!(ErrorCode::RequestTooLarge.as_u16(), 10);
     assert_eq!(ErrorCode::from_u16(10), Some(ErrorCode::RequestTooLarge));
 }

@@ -1,0 +1,256 @@
+//! End-to-end tests of the live telemetry subsystem: a scripted load
+//! driven through the TCP serve path must be reflected *exactly* in
+//! the `StatsResponse` counters (the PR's acceptance criterion), the
+//! backpressure flags word must round-trip for capability-negotiated
+//! clients while v1 clients keep seeing all-zero flags, and the
+//! Prometheus endpoint must expose the same registry.
+
+use impulse::coordinator::{ServerOptions, WorkloadKind};
+use impulse::data::{DigitsArtifacts, SentimentArtifacts};
+use impulse::isa::InstructionKind;
+use impulse::macro_sim::MacroConfig;
+use impulse::serve::{
+    decode_backpressure, serve_tcp, ErrorCode, FrameClient, PayloadType, ServeCore,
+    TcpServeHandle, CAP_BACKPRESSURE, PROTOCOL_VERSION,
+};
+use impulse::snn::{DigitsNetwork, SentimentNetwork};
+use impulse::telemetry::{serve_metrics, Telemetry, TelemetryConfig, Transport};
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+const VOCAB: i64 = 20; // SentimentArtifacts::synthetic vocabulary
+
+fn start_sentiment(
+    seed: u64,
+    soft_limit: u64,
+) -> (Arc<Telemetry>, Arc<ServeCore>, TcpServeHandle) {
+    let tele = Arc::new(Telemetry::new(TelemetryConfig {
+        queue_soft_limit: soft_limit,
+        ..TelemetryConfig::default()
+    }));
+    let a = SentimentArtifacts::synthetic(seed);
+    let core = Arc::new(
+        ServeCore::start_with(
+            ServerOptions {
+                workers: 2,
+                adaptive: true,
+                telemetry: Some(Arc::clone(&tele)),
+                ..ServerOptions::default()
+            },
+            VOCAB,
+            move || SentimentNetwork::from_artifacts(&a, MacroConfig::fast()),
+        )
+        .unwrap(),
+    );
+    let handle = serve_tcp("127.0.0.1:0", Arc::clone(&core)).unwrap();
+    (tele, core, handle)
+}
+
+fn client(handle: &TcpServeHandle) -> FrameClient {
+    let mut c = FrameClient::connect(handle.local_addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    c
+}
+
+/// The acceptance criterion: drive a scripted load through the TCP
+/// serve path, then the `StatsResponse` counters match the load
+/// exactly — request counts per workload kind, conserved cycle
+/// totals, nonzero energy/EDP, lane occupancy, input-sparsity
+/// accounting, drained queue depth — and the Prometheus endpoint
+/// exposes the same registry.
+#[test]
+fn stats_response_matches_scripted_load_exactly() {
+    let (tele, core, handle) = start_sentiment(71, 1024);
+    let reqs: Vec<Vec<i64>> = vec![
+        vec![3, 7, 5],
+        vec![19],
+        vec![0, 0, 0, 0, 0, 0, 0, 0],
+        vec![2, 11, 6],
+        vec![1, 2, 3, 4, 5],
+    ];
+    let total_words: u64 = reqs.iter().map(|r| r.len() as u64).sum();
+
+    let mut c = client(&handle);
+    assert_eq!(c.hello().unwrap(), PROTOCOL_VERSION);
+    for (i, r) in reqs.iter().enumerate() {
+        c.send_infer(i as u64, r).unwrap();
+    }
+    let mut wire_cycles = 0u64;
+    for _ in 0..reqs.len() {
+        let (id, res) = c.next_result().unwrap().expect("stream ended early");
+        let r = res.unwrap_or_else(|(code, m)| panic!("req {id} failed ({code}): {m}"));
+        wire_cycles += r.cycles;
+    }
+
+    // the stats fetch rides the same connection; a v1 client (no caps
+    // negotiated) must see the all-zero flags word on every frame
+    let (snap, flags) = c.fetch_stats(99).unwrap();
+    assert_eq!(flags, 0, "v1 clients must keep byte-identical all-zero flags");
+
+    let k = snap.kind(WorkloadKind::Sentiment).unwrap();
+    assert_eq!(
+        (k.submitted, k.ok, k.err),
+        (reqs.len() as u64, reqs.len() as u64, 0),
+        "counters must match the scripted load exactly"
+    );
+    assert_eq!(k.cycles, wire_cycles, "attributed cycles conserved against responses");
+    assert!(k.energy_fj > 0, "served load must show nonzero energy");
+    assert!(k.edp_js > 0.0, "served load must show nonzero EDP");
+    assert_eq!(k.input_units, total_words);
+    assert_eq!(k.input_active, total_words, "session-clamped ids are all active");
+    let d = snap.kind(WorkloadKind::Digits).unwrap();
+    assert_eq!((d.submitted, d.ok, d.err), (0, 0, 0), "no digits load was sent");
+
+    assert_eq!(snap.queue_depth, 0, "the queue drained before the stats fetch");
+    assert!(!snap.soft_limited);
+    assert_eq!(snap.batch_lanes, reqs.len() as u64, "one lane per request");
+    assert!(snap.batches >= 1 && snap.batches <= reqs.len() as u64);
+    assert!(snap.batch_lane_capacity >= snap.batch_lanes);
+    assert!(
+        snap.instr_count(InstructionKind::AccW2V) > 0,
+        "AccW2V issue (the spike-proportional work) must be counted"
+    );
+    let tcp = snap.transport(Transport::Tcp).unwrap();
+    assert_eq!(tcp.count, reqs.len() as u64, "one TCP delivery per request");
+    assert_eq!(
+        tcp.buckets.iter().sum::<u64>(),
+        reqs.len() as u64,
+        "every delivery lands in a latency bucket"
+    );
+    let stdio = snap.transport(Transport::Stdio).unwrap();
+    assert_eq!(stdio.count, 0, "no stdio traffic in this test");
+
+    // the Prometheus endpoint serves the same registry
+    let metrics = serve_metrics("127.0.0.1:0", Arc::clone(&tele)).unwrap();
+    let mut s = std::net::TcpStream::connect(metrics.local_addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut page = String::new();
+    s.read_to_string(&mut page).unwrap();
+    assert!(page.contains(&format!(
+        "impulse_requests_submitted_total{{kind=\"sentiment\"}} {}",
+        reqs.len()
+    )));
+    assert!(page.contains("impulse_request_latency_seconds_count{transport=\"tcp\"} 5"));
+    metrics.stop();
+
+    c.finish_writes().unwrap();
+    assert!(c.next_frame().unwrap().is_none());
+    handle.stop();
+    core.shutdown();
+}
+
+/// The backpressure flags word round-trips: a client that negotiates
+/// `CAP_BACKPRESSURE` sees live telemetry flags on response frames
+/// (soft-limit bit forced on via the documented `soft_limit = 0`
+/// drain mode), while a plain v1 client on the same server keeps
+/// receiving all-zero flags.
+#[test]
+fn backpressure_flag_roundtrips_and_v1_clients_are_untouched() {
+    let (_tele, core, handle) = start_sentiment(83, 0);
+
+    let mut negotiated = client(&handle);
+    let (version, caps) = negotiated.hello_with_caps(CAP_BACKPRESSURE).unwrap();
+    assert_eq!(version, PROTOCOL_VERSION);
+    assert_eq!(caps, CAP_BACKPRESSURE, "the server must grant the backpressure cap");
+
+    negotiated.send_infer(1, &[3, 1, 4]).unwrap();
+    let f = negotiated.next_frame().unwrap().expect("expected a response frame");
+    assert_eq!(f.payload_type, PayloadType::InferResponse);
+    let bp = decode_backpressure(f.flags)
+        .expect("negotiated client must receive telemetry flags");
+    assert!(bp.soft_limited, "soft limit 0 signals unconditionally (drain mode)");
+
+    // the StatsResponse carries the advertisement too, and agrees
+    let (snap, flags) = negotiated.fetch_stats(2).unwrap();
+    let bp2 = decode_backpressure(flags).expect("stats frame must carry flags");
+    assert!(bp2.soft_limited);
+    assert!(snap.soft_limited, "snapshot and flags word must agree");
+    assert_eq!(snap.queue_soft_limit, 0);
+
+    // a concurrent plain-v1 client sees byte-identical v1 frames
+    let mut plain = client(&handle);
+    assert_eq!(plain.hello().unwrap(), PROTOCOL_VERSION);
+    plain.send_infer(7, &[5, 5]).unwrap();
+    let g = plain.next_frame().unwrap().expect("expected a response frame");
+    assert_eq!(g.payload_type, PayloadType::InferResponse);
+    assert_eq!(g.flags, 0, "non-negotiated clients must never see nonzero flags");
+
+    negotiated.finish_writes().unwrap();
+    plain.finish_writes().unwrap();
+    assert!(negotiated.next_frame().unwrap().is_none());
+    assert!(plain.next_frame().unwrap().is_none());
+    handle.stop();
+    core.shutdown();
+}
+
+/// A malformed (non-empty) StatsRequest errors per request and the
+/// connection stays usable for a well-formed one.
+#[test]
+fn malformed_stats_request_errors_but_connection_survives() {
+    use impulse::serve::{decode_error, Frame, FrameReader};
+    let (_tele, core, handle) = start_sentiment(5, 1024);
+    let mut raw = std::net::TcpStream::connect(handle.local_addr()).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut reader = FrameReader::new(raw.try_clone().unwrap());
+
+    Frame::new(PayloadType::StatsRequest, 4, vec![1]).write_to(&mut raw).unwrap();
+    let e = reader.next_frame().unwrap().expect("expected an error frame");
+    assert_eq!(e.payload_type, PayloadType::Error);
+    assert_eq!(e.request_id, 4);
+    let (code, _) = decode_error(&e.payload).unwrap();
+    assert_eq!(code, ErrorCode::Malformed.as_u16());
+
+    Frame::new(PayloadType::StatsRequest, 5, vec![]).write_to(&mut raw).unwrap();
+    let ok = reader.next_frame().unwrap().expect("connection must survive");
+    assert_eq!(ok.payload_type, PayloadType::StatsResponse);
+    assert_eq!(ok.request_id, 5);
+
+    raw.shutdown(std::net::Shutdown::Write).unwrap();
+    assert!(reader.next_frame().unwrap().is_none());
+    handle.stop();
+    core.shutdown();
+}
+
+/// Digits requests are accounted under their own workload kind, with
+/// image pixels driving the input-sparsity counters.
+#[test]
+fn digits_load_accounted_under_its_own_kind() {
+    let tele = Arc::new(Telemetry::default());
+    let a = DigitsArtifacts::synthetic(47);
+    let imgs: Vec<Vec<f32>> = a.test_x[..2].to_vec();
+    let a2 = a.clone();
+    let core = Arc::new(
+        ServeCore::start_with(
+            ServerOptions {
+                workers: 1,
+                telemetry: Some(Arc::clone(&tele)),
+                ..ServerOptions::default()
+            },
+            1,
+            move || DigitsNetwork::from_artifacts(&a2, MacroConfig::fast()),
+        )
+        .unwrap(),
+    );
+    let handle = serve_tcp("127.0.0.1:0", Arc::clone(&core)).unwrap();
+    let mut c = client(&handle);
+    for (i, img) in imgs.iter().enumerate() {
+        c.send_digits_infer(i as u64, 28, 28, img).unwrap();
+    }
+    for _ in 0..imgs.len() {
+        let (_, res) = c.next_digits_result().unwrap().expect("stream ended early");
+        res.unwrap_or_else(|(code, m)| panic!("digits request failed ({code}): {m}"));
+    }
+    let (snap, _) = c.fetch_stats(9).unwrap();
+    let d = snap.kind(WorkloadKind::Digits).unwrap();
+    assert_eq!((d.submitted, d.ok, d.err), (2, 2, 0));
+    assert!(d.cycles > 0 && d.energy_fj > 0);
+    assert_eq!(d.input_units, 2 * 28 * 28);
+    assert!(d.input_active <= d.input_units);
+    let s = snap.kind(WorkloadKind::Sentiment).unwrap();
+    assert_eq!(s.submitted, 0);
+    c.finish_writes().unwrap();
+    handle.stop();
+    core.shutdown();
+}
