@@ -1,0 +1,250 @@
+//! `impulse bench` — the machine-readable performance baseline.
+//!
+//! Runs the macro-throughput and sparsity sweeps that gate perf PRs
+//! and (with `--json PATH`) writes the results — req/s, cycles/req,
+//! ns/op per sparsity point, git revision — as JSON. CI runs this on
+//! the synthetic bundles and uploads `BENCH_PR5.json` as an artifact,
+//! so the perf trajectory is tracked from PR 5 onward.
+
+use super::Flags;
+use impulse::bench_harness::{Bencher, Table};
+use impulse::bits::XorShiftRng;
+use impulse::data::{artifacts_available, artifacts_dir, DigitsArtifacts, SentimentArtifacts};
+use impulse::isa::InstructionKind;
+use impulse::macro_sim::MacroConfig;
+use impulse::snn::{DigitsNetwork, FcLayer, LayerParams, SentimentNetwork};
+use impulse::Result;
+use std::time::Duration;
+
+/// One sparsity-sweep measurement (a 128→128 FC layer timestep).
+struct SweepPoint {
+    sparsity: f64,
+    ns_per_step: f64,
+    cycles_per_step: u64,
+    accw2v_per_step: u64,
+}
+
+/// One serving measurement.
+struct ServePoint {
+    workload: &'static str,
+    batch: usize,
+    req_per_s: f64,
+    cycles_per_req: f64,
+}
+
+pub fn run(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args);
+    let budget = if flags.has("quick") {
+        Duration::from_millis(120)
+    } else {
+        Duration::from_millis(400)
+    };
+    let mut b = Bencher::new(budget);
+    let mut rng = XorShiftRng::new(2024);
+
+    // ---- sparsity sweep: FC layer timestep cost vs input sparsity ----
+    println!("=== layer-timestep wall-clock vs input sparsity (128→128 RMP) ===\n");
+    let weights: Vec<Vec<i64>> = (0..128)
+        .map(|_| (0..128).map(|_| rng.gen_i64(-31, 31)).collect())
+        .collect();
+    let mut sweep = Vec::new();
+    let mut t = Table::new(&["sparsity", "ns/step", "cycles/step", "AccW2V/step"]);
+    for &s in &[0.0f64, 0.15, 0.5, 0.85, 1.0] {
+        let mut layer = FcLayer::new(&weights, LayerParams::rmp(150), MacroConfig::fast())?;
+        let spikes: Vec<bool> = (0..128).map(|_| rng.gen_bool(1.0 - s)).collect();
+        layer.reset_counters();
+        layer.step(&spikes)?;
+        let st = layer.stats();
+        let cycles_per_step = st.cycles;
+        let accw2v_per_step = st
+            .histogram
+            .get(&InstructionKind::AccW2V)
+            .copied()
+            .unwrap_or(0);
+        let r = b
+            .bench(&format!("timestep @ {:.0}% sparsity", s * 100.0), 1, || {
+                layer.step(&spikes).unwrap();
+            })
+            .clone();
+        let ns_per_step = r.median.as_secs_f64() * 1e9;
+        t.row(&[
+            format!("{s:.2}"),
+            format!("{ns_per_step:.0}"),
+            format!("{cycles_per_step}"),
+            format!("{accw2v_per_step}"),
+        ]);
+        sweep.push(SweepPoint {
+            sparsity: s,
+            ns_per_step,
+            cycles_per_step,
+            accw2v_per_step,
+        });
+    }
+    println!("{}\n", t.render());
+
+    // ---- serving throughput: sentiment + digits on the macro pool ----
+    println!("=== serving throughput (synthetic bundles unless artifacts built) ===\n");
+    let a = if artifacts_available() {
+        SentimentArtifacts::load(artifacts_dir())?
+    } else {
+        SentimentArtifacts::synthetic(2024)
+    };
+    let vocab = a.emb_q.len() as i64;
+    let n_reqs = 32usize;
+    let reviews: Vec<Vec<i64>> = (0..n_reqs)
+        .map(|i| (0..6).map(|j| ((i * 13 + j * 7) as i64) % vocab).collect())
+        .collect();
+    let refs: Vec<&[i64]> = reviews.iter().map(|r| r.as_slice()).collect();
+    let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast())?;
+    let mut serving = Vec::new();
+    let mut st = Table::new(&["workload", "batch", "req/s", "cycles/req"]);
+    for &bsz in &[1usize, 16] {
+        net.reset_counters();
+        if bsz == 1 {
+            for r in &refs {
+                net.run_review(r)?;
+            }
+        } else {
+            for chunk in refs.chunks(bsz) {
+                net.run_reviews_batched(chunk)?;
+            }
+        }
+        let cycles_per_req = net.stats().cycles as f64 / n_reqs as f64;
+        let r = b
+            .bench(&format!("sentiment batch={bsz}"), n_reqs as u64, || {
+                if bsz == 1 {
+                    for r in &refs {
+                        net.run_review(r).unwrap();
+                    }
+                } else {
+                    for chunk in refs.chunks(bsz) {
+                        net.run_reviews_batched(chunk).unwrap();
+                    }
+                }
+            })
+            .clone();
+        st.row(&[
+            "sentiment".into(),
+            format!("{bsz}"),
+            format!("{:.1}", r.throughput_per_s),
+            format!("{cycles_per_req:.0}"),
+        ]);
+        serving.push(ServePoint {
+            workload: "sentiment",
+            batch: bsz,
+            req_per_s: r.throughput_per_s,
+            cycles_per_req,
+        });
+    }
+    if !flags.has("quick") {
+        let da = if artifacts_available() {
+            DigitsArtifacts::load(artifacts_dir())?
+        } else {
+            DigitsArtifacts::synthetic(2024)
+        };
+        let n_imgs = 8usize;
+        let images: Vec<Vec<f32>> = (0..n_imgs)
+            .map(|i| da.test_x[i % da.test_x.len()].clone())
+            .collect();
+        let img_refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        let mut dnet = DigitsNetwork::from_artifacts(&da, MacroConfig::fast())?;
+        for &bsz in &[1usize, 8] {
+            dnet.reset_counters();
+            if bsz == 1 {
+                for r in &img_refs {
+                    dnet.run_image(r)?;
+                }
+            } else {
+                for chunk in img_refs.chunks(bsz) {
+                    dnet.run_images_batched(chunk)?;
+                }
+            }
+            let cycles_per_req = dnet.stats().cycles as f64 / n_imgs as f64;
+            let r = b
+                .bench(&format!("digits batch={bsz}"), n_imgs as u64, || {
+                    if bsz == 1 {
+                        for r in &img_refs {
+                            dnet.run_image(r).unwrap();
+                        }
+                    } else {
+                        for chunk in img_refs.chunks(bsz) {
+                            dnet.run_images_batched(chunk).unwrap();
+                        }
+                    }
+                })
+                .clone();
+            st.row(&[
+                "digits".into(),
+                format!("{bsz}"),
+                format!("{:.1}", r.throughput_per_s),
+                format!("{cycles_per_req:.0}"),
+            ]);
+            serving.push(ServePoint {
+                workload: "digits",
+                batch: bsz,
+                req_per_s: r.throughput_per_s,
+                cycles_per_req,
+            });
+        }
+    }
+    println!("{}\n", st.render());
+
+    if let Some(path) = flags.get("json") {
+        let json = render_json(&sweep, &serving);
+        std::fs::write(path, &json)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Hand-rolled JSON (no serde in the offline build) — flat schema, no
+/// string content beyond the git revision.
+fn render_json(sweep: &[SweepPoint], serving: &[ServePoint]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"schema\": \"impulse-bench-v1\",\n");
+    out.push_str(&format!("  \"git_rev\": \"{}\",\n", git_rev()));
+    out.push_str("  \"sparsity_sweep\": [\n");
+    for (i, p) in sweep.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"sparsity\": {:.2}, \"ns_per_step\": {:.1}, \
+             \"cycles_per_step\": {}, \"accw2v_per_step\": {}}}{}\n",
+            p.sparsity,
+            p.ns_per_step,
+            p.cycles_per_step,
+            p.accw2v_per_step,
+            if i + 1 < sweep.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"serving\": [\n");
+    for (i, p) in serving.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"batch\": {}, \"req_per_s\": {:.2}, \
+             \"cycles_per_req\": {:.1}}}{}\n",
+            p.workload,
+            p.batch,
+            p.req_per_s,
+            p.cycles_per_req,
+            if i + 1 < serving.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Best-effort revision stamp: CI's `GITHUB_SHA`, else `git
+/// rev-parse`, else "unknown".
+fn git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".into())
+}

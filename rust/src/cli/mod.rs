@@ -1,5 +1,6 @@
 //! CLI subcommand implementations.
 
+pub mod bench;
 pub mod eval;
 pub mod infer;
 pub mod info;

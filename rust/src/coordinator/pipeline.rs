@@ -12,7 +12,7 @@
 //! sequential execution order, which must produce identical spikes
 //! (the stages share no state).
 
-use crate::snn::{FcLayer, LayerStats};
+use crate::snn::{FcLayer, LayerStats, SpikePlane};
 use crate::Result;
 use std::sync::mpsc;
 
@@ -22,7 +22,9 @@ use std::sync::mpsc;
 /// path's pipelined reviews
 /// (`SentimentNetwork::run_review_pipelined`). Stage *i* processes
 /// timestep *t* while stage *i+1* processes *t−1*; a slow stage stalls
-/// its producer through channel backpressure.
+/// its producer through channel backpressure. Spikes move between
+/// stages as packed [`SpikePlane`]s — a 128-wide timestep is two u64
+/// words on the wire, and each stage's gather costs its popcount.
 ///
 /// Semantically identical to stepping each timestep through all stages
 /// in order (stages share no state); wall-clock approaches
@@ -30,21 +32,21 @@ use std::sync::mpsc;
 /// timesteps`.
 pub fn run_stages(
     stages: Vec<&mut FcLayer>,
-    inputs: &[Vec<bool>],
+    inputs: &[SpikePlane],
     channel_depth: usize,
-) -> Result<Vec<Vec<bool>>> {
+) -> Result<Vec<SpikePlane>> {
     assert!(!stages.is_empty(), "pipeline needs at least one stage");
     let depth = channel_depth.max(1);
     let n = inputs.len();
-    std::thread::scope(|scope| -> Result<Vec<Vec<bool>>> {
-        let (feeder_tx, mut prev_rx) = mpsc::sync_channel::<Vec<bool>>(depth);
+    std::thread::scope(|scope| -> Result<Vec<SpikePlane>> {
+        let (feeder_tx, mut prev_rx) = mpsc::sync_channel::<SpikePlane>(depth);
         let mut handles = Vec::new();
         for layer in stages {
-            let (tx, rx_next) = mpsc::sync_channel::<Vec<bool>>(depth);
+            let (tx, rx_next) = mpsc::sync_channel::<SpikePlane>(depth);
             let rx = std::mem::replace(&mut prev_rx, rx_next);
             handles.push(scope.spawn(move || -> Result<()> {
                 while let Ok(spikes) = rx.recv() {
-                    let out = layer.step(&spikes)?.to_vec();
+                    let out = layer.step_plane(&spikes)?.clone();
                     if tx.send(out).is_err() {
                         break;
                     }
@@ -120,13 +122,16 @@ impl LayerPipeline {
 
     /// Pipelined execution: one thread per layer, bounded channels in
     /// between (see [`run_stages`]). Semantically identical to
-    /// `run_sequential`.
+    /// `run_sequential`. Boolean convenience wrapper — the stages
+    /// themselves exchange packed planes.
     pub fn run_pipelined(
         &mut self,
         inputs: &[Vec<bool>],
         channel_depth: usize,
     ) -> Result<Vec<Vec<bool>>> {
-        run_stages(self.layers.iter_mut().collect(), inputs, channel_depth)
+        let planes: Vec<SpikePlane> = inputs.iter().map(|v| SpikePlane::from_bools(v)).collect();
+        let out = run_stages(self.layers.iter_mut().collect(), &planes, channel_depth)?;
+        Ok(out.into_iter().map(|p| p.to_bools()).collect())
     }
 
     /// Reset all layer states.

@@ -37,6 +37,25 @@ impl WorkloadInput {
             WorkloadInput::Image { .. } => WorkloadKind::Digits,
         }
     }
+
+    /// Total and active (spiking-relevant) input units — the telemetry
+    /// sparsity signal: non-padding word ids for sentiment, nonzero
+    /// pixels for digits. The digits count word-packs the nonzero
+    /// flags and popcounts them
+    /// ([`crate::snn::SpikePlane::count_flags`]), allocation-free on
+    /// the submit path.
+    pub fn unit_counts(&self) -> (u64, u64) {
+        match self {
+            WorkloadInput::Words(ids) => (
+                ids.len() as u64,
+                ids.iter().filter(|&&w| w >= 0).count() as u64,
+            ),
+            WorkloadInput::Image { pixels, .. } => {
+                let active = crate::snn::SpikePlane::count_flags(pixels.iter().map(|&p| p != 0.0));
+                (pixels.len() as u64, active as u64)
+            }
+        }
+    }
 }
 
 /// Workload families servable by the coordinator (used to pick the
@@ -216,6 +235,23 @@ mod tests {
     use super::*;
     use crate::data::{DigitsArtifacts, SentimentArtifacts};
     use crate::macro_sim::MacroConfig;
+
+    /// The telemetry sparsity signal: plane-popcounted active units
+    /// must match a direct count on both input kinds.
+    #[test]
+    fn unit_counts_match_direct_counts() {
+        let words = WorkloadInput::Words(vec![3, -1, 7, -1, 0]);
+        assert_eq!(words.unit_counts(), (5, 3));
+        let mut pixels = vec![0.0f32; 130];
+        pixels[0] = 0.5;
+        pixels[63] = -1.0;
+        pixels[64] = 1e-9;
+        pixels[129] = 2.0;
+        let img = WorkloadInput::Image { h: 13, w: 10, pixels };
+        assert_eq!(img.unit_counts(), (130, 4));
+        let empty = WorkloadInput::Words(vec![]);
+        assert_eq!(empty.unit_counts(), (0, 0));
+    }
 
     #[test]
     fn workloads_reject_foreign_inputs() {

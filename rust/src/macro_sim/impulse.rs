@@ -1,9 +1,9 @@
 //! The IMPULSE macro facade and its two execution engines.
 
-use super::{ComparatorMode, Engine, MacroConfig, TraceEvent, Tracer};
+use super::{swar, ComparatorMode, Engine, MacroConfig, TraceEvent, Tracer};
 use crate::bitcell::{
-    encode_weight_row, BitArray, DualRead, FieldLayout, Parity, RowAddr, TripleRowDecoder,
-    COL_MASK, VALUES_PER_ROW, V_ROWS, W_ROWS,
+    encode_weight_row, weight_index, BitArray, DualRead, FieldLayout, Parity, RowAddr,
+    TripleRowDecoder, COL_MASK, FIELD_WIDTH, VALUES_PER_ROW, V_ROWS, W_ROWS,
 };
 use crate::bits::{wrap11, V_BITS};
 use crate::isa::{Instruction, InstructionKind, NeuronConfigRows, NeuronType, WriteMaskMode};
@@ -24,7 +24,7 @@ pub struct ExecOutput {
 
 /// Shared per-instruction compute: the comparator decision.
 #[inline]
-fn compare(mode: ComparatorMode, v: i64, neg_thr: i64) -> bool {
+pub(crate) fn compare(mode: ComparatorMode, v: i64, neg_thr: i64) -> bool {
     match mode {
         ComparatorMode::SignBit => wrap11(v + neg_thr) >= 0,
         ComparatorMode::MsbCout => {
@@ -229,15 +229,19 @@ impl BitLevelEngine {
 // Fast (word-level) engine
 // ---------------------------------------------------------------------
 
-/// Functional engine: same architectural state (packed rows), word
-/// arithmetic instead of per-column ripple. Weights additionally kept
-/// decoded (written rarely, read on every AccW2V).
+/// Functional engine: same architectural state (packed rows), SWAR
+/// word arithmetic (see [`swar`]) instead of per-column ripple — every
+/// V-row instruction touches all six fields in a handful of u128 ops.
+/// Weights additionally kept as per-parity SWAR addend words (written
+/// rarely, read on every AccW2V).
 #[derive(Clone, Debug)]
 struct FastEngine {
     /// Packed V_MEM rows — authoritative, identical format to silicon.
     vmem: Vec<u128>,
-    /// Decoded weight cache, `w[row][j]`.
-    w: Vec<[i8; 12]>,
+    /// Per-parity SWAR weight addends, `w_swar[row][parity_ix]`: lane
+    /// `g` holds the mod-2048 image of the weight AccW2V accumulates
+    /// into field `g` under that parity (stagger-normalized).
+    w_swar: Vec<[u128; 2]>,
     /// Packed W_MEM rows (kept for digest parity with the bit engine).
     wmem_packed: Vec<u128>,
     spikebuf: [SpikeBuffers; 2],
@@ -246,8 +250,10 @@ struct FastEngine {
 
 /// Extract field `g` (parity-aligned) of a packed row as an i64 in
 /// [-1024, 1023]: low 5 bits | (top 6 bits << 5), sign-extended.
+/// Single-field reference path; the engines use [`swar::pack`] +
+/// [`swar::lane`] to extract all six at once.
 #[inline]
-fn extract_field(row: u128, g: usize, parity: Parity) -> i64 {
+pub(crate) fn extract_field(row: u128, g: usize, parity: Parity) -> i64 {
     let base = crate::bitcell::field_base(g, parity);
     let f = ((row >> base) & 0xFFF) as u32;
     let low = f & 0x1F;
@@ -256,9 +262,11 @@ fn extract_field(row: u128, g: usize, parity: Parity) -> i64 {
     ((u as i64) << 53) >> 53 // sign-extend from bit 10
 }
 
-/// Encode an 11-bit signed value into its parity-aligned field position.
+/// Encode an 11-bit signed value into its parity-aligned field
+/// position. Single-field reference path; the engines use
+/// [`swar::unpack`] to re-open all six holes at once.
 #[inline]
-fn insert_field(row: &mut u128, g: usize, parity: Parity, v: i64) {
+pub(crate) fn insert_field(row: &mut u128, g: usize, parity: Parity, v: i64) {
     let base = crate::bitcell::field_base(g, parity);
     let u = (v as u64) & 0x7FF;
     let f = (u & 0x1F) | ((u >> 5) << 6); // re-open the hole at bit 5
@@ -269,10 +277,48 @@ impl FastEngine {
     fn new(comparator: ComparatorMode) -> Self {
         Self {
             vmem: vec![0u128; V_ROWS],
-            w: vec![[0i8; 12]; W_ROWS],
+            w_swar: vec![[0u128; 2]; W_ROWS],
             wmem_packed: vec![0u128; W_ROWS],
             spikebuf: [SpikeBuffers::new(), SpikeBuffers::new()],
             comparator,
+        }
+    }
+
+    /// Prevalidated straight-line runner for a fused union-AccW2V
+    /// stream: the caller (see [`ImpulseMacro::acc_w2v_fused`]) has
+    /// already bounds-checked every weight row, lane mask, and lane V
+    /// row, so this path issues no per-instruction enum dispatch and
+    /// constructs no `Result` or [`ExecOutput`] — per union row it is
+    /// one SWAR add per masked lane, and per touched lane one
+    /// pack/add/unpack round-trip against V_MEM.
+    fn run_accw2v_stream(
+        &mut self,
+        rows: &[(usize, u32)],
+        lane_v_rows: &[usize],
+        parity: Parity,
+    ) {
+        let pix = parity_ix(parity);
+        let st = parity.stagger();
+        let mut acc = [0u128; MAX_FUSED_LANES];
+        let mut touched = 0u32;
+        for &(w_row, mask) in rows {
+            let wsw = self.w_swar[w_row][pix];
+            let mut mm = mask;
+            while mm != 0 {
+                let b = mm.trailing_zeros() as usize;
+                mm &= mm - 1;
+                acc[b] = swar::add_wrap(acc[b], wsw);
+            }
+            touched |= mask;
+        }
+        let mut mm = touched;
+        while mm != 0 {
+            let b = mm.trailing_zeros() as usize;
+            mm &= mm - 1;
+            let row = self.vmem[lane_v_rows[b]];
+            let sum = swar::add_wrap(swar::pack(row >> st), acc[b]);
+            self.vmem[lane_v_rows[b]] =
+                (row & !(swar::FIELD_MASK << st)) | (swar::unpack(sum) << st);
         }
     }
 
@@ -297,17 +343,19 @@ impl FastEngine {
                 }
                 Self::check_v(v_src)?;
                 Self::check_v(v_dst)?;
-                let src = self.vmem[v_src];
-                let mut dst = self.vmem[v_dst];
-                let ws = &self.w[w_row];
+                // SWAR: all six fields accumulate their weight in one
+                // pack → add-wrap → unpack round-trip.
+                let st = parity.stagger();
+                let sum = swar::add_wrap(
+                    swar::pack(self.vmem[v_src] >> st),
+                    self.w_swar[w_row][parity_ix(parity)],
+                );
+                let dst = self.vmem[v_dst];
+                self.vmem[v_dst] = (dst & !(swar::FIELD_MASK << st)) | (swar::unpack(sum) << st);
                 let mut written = [0i64; 6];
-                for g in 0..VALUES_PER_ROW {
-                    let j = crate::bitcell::weight_index(g, parity);
-                    let v = wrap11(extract_field(src, g, parity) + ws[j] as i64);
-                    insert_field(&mut dst, g, parity, v);
-                    written[g] = v;
+                for (g, w) in written.iter_mut().enumerate() {
+                    *w = swar::lane(sum, g);
                 }
-                self.vmem[v_dst] = dst;
                 Ok(ExecOutput {
                     written: Some(written),
                     ..Default::default()
@@ -326,25 +374,25 @@ impl FastEngine {
                 if src_a == src_b {
                     bail!("AccV2V with identical source rows");
                 }
-                let a = self.vmem[src_a];
-                let b = self.vmem[src_b];
-                let mut d = self.vmem[dst];
-                let spikes = *self.spikebuf[parity_ix(parity)].bits();
-                let mut written = [0i64; 6];
-                for g in 0..VALUES_PER_ROW {
-                    let gate = match mask {
-                        WriteMaskMode::All => true,
-                        WriteMaskMode::Spiked => spikes[g],
-                    };
-                    if gate {
-                        let v = wrap11(
-                            extract_field(a, g, parity) + extract_field(b, g, parity),
-                        );
-                        insert_field(&mut d, g, parity, v);
+                let st = parity.stagger();
+                let wrapped = swar::add_wrap(
+                    swar::pack(self.vmem[src_a] >> st),
+                    swar::pack(self.vmem[src_b] >> st),
+                );
+                let gate = match mask {
+                    WriteMaskMode::All => swar::FIELD_MASK << st,
+                    WriteMaskMode::Spiked => {
+                        let spikes = self.spikebuf[parity_ix(parity)].bits();
+                        swar::expand_mask(swar::indicators_from_flags(spikes)) << st
                     }
-                    written[g] = extract_field(d, g, parity);
+                };
+                let d = self.vmem[dst];
+                let new = (d & !gate) | ((swar::unpack(wrapped) << st) & gate);
+                self.vmem[dst] = new;
+                let mut written = [0i64; 6];
+                for (g, w) in written.iter_mut().enumerate() {
+                    *w = extract_field(new, g, parity);
                 }
-                self.vmem[dst] = d;
                 Ok(ExecOutput {
                     written: Some(written),
                     ..Default::default()
@@ -360,15 +408,13 @@ impl FastEngine {
                 if v_row == thr_row {
                     bail!("SpikeCheck with v_row == thr_row");
                 }
-                let v = self.vmem[v_row];
-                let t = self.vmem[thr_row];
+                let st = parity.stagger();
+                let sum = swar::pack(self.vmem[v_row] >> st)
+                    + swar::pack(self.vmem[thr_row] >> st);
+                let ind = swar::spike_indicators(sum, self.comparator);
                 let mut spikes = [false; 6];
-                for g in 0..VALUES_PER_ROW {
-                    spikes[g] = compare(
-                        self.comparator,
-                        extract_field(v, g, parity),
-                        extract_field(t, g, parity),
-                    );
+                for (g, s) in spikes.iter_mut().enumerate() {
+                    *s = swar::indicator(ind, g);
                 }
                 self.spikebuf[parity_ix(parity)].latch(spikes);
                 Ok(ExecOutput {
@@ -383,20 +429,14 @@ impl FastEngine {
             } => {
                 Self::check_v(reset_row)?;
                 Self::check_v(dst)?;
-                let r = self.vmem[reset_row];
-                let mut d = self.vmem[dst];
-                let spikes = *self.spikebuf[parity_ix(parity)].bits();
-                let l = FieldLayout::new(parity);
-                for g in 0..VALUES_PER_ROW {
-                    if spikes[g] {
-                        let m = l.field_mask(g);
-                        d = (d & !m) | (r & m);
-                    }
-                }
+                let st = parity.stagger();
+                let spikes = self.spikebuf[parity_ix(parity)].bits();
+                let gate = swar::expand_mask(swar::indicators_from_flags(spikes)) << st;
+                let d = (self.vmem[dst] & !gate) | (self.vmem[reset_row] & gate);
                 self.vmem[dst] = d;
                 let mut written = [0i64; 6];
-                for g in 0..VALUES_PER_ROW {
-                    written[g] = extract_field(d, g, parity);
+                for (g, w) in written.iter_mut().enumerate() {
+                    *w = extract_field(d, g, parity);
                 }
                 Ok(ExecOutput {
                     written: Some(written),
@@ -405,10 +445,10 @@ impl FastEngine {
             }
             Instruction::ReadV { v_row, parity } => {
                 Self::check_v(v_row)?;
-                let row = self.vmem[v_row];
+                let lanes = swar::pack(self.vmem[v_row] >> parity.stagger());
                 let mut read = [0i64; 6];
-                for g in 0..VALUES_PER_ROW {
-                    read[g] = extract_field(row, g, parity);
+                for (g, r) in read.iter_mut().enumerate() {
+                    *r = swar::lane(lanes, g);
                 }
                 Ok(ExecOutput {
                     read: Some(read),
@@ -440,13 +480,20 @@ impl FastEngine {
                 if w_row >= W_ROWS {
                     bail!("W row {w_row} out of range");
                 }
-                for (j, &w) in weights.iter().enumerate() {
+                for &w in weights.iter() {
                     assert!(
                         crate::bits::fits(w, crate::bits::W_BITS),
                         "weight {w} out of 6-bit range"
                     );
-                    self.w[w_row][j] = w as i8;
                 }
+                let mut sw = [0u128; 2];
+                for (pix, parity) in Parity::BOTH.iter().enumerate() {
+                    for g in 0..VALUES_PER_ROW {
+                        let w = weights[weight_index(g, *parity)];
+                        sw[pix] |= (((w as u64) & 0x7FF) as u128) << (g * FIELD_WIDTH);
+                    }
+                }
+                self.w_swar[w_row] = sw;
                 self.wmem_packed[w_row] = encode_weight_row(&weights);
                 Ok(ExecOutput::default())
             }
@@ -578,22 +625,21 @@ impl ImpulseMacro {
         if v_row >= V_ROWS {
             bail!("V row {v_row} out of range");
         }
-        let mut acc = [0i64; VALUES_PER_ROW];
+        // SWAR accumulation: one add-wrap per spiking row folds all six
+        // fields' weights at once (mod-2048 per add commutes with the
+        // single final wrap of the scalar path).
+        let pix = parity_ix(parity);
+        let mut acc = 0u128;
         for &w_row in w_rows {
             if w_row >= W_ROWS {
                 bail!("W row {w_row} out of range");
             }
-            let ws = &f.w[w_row];
-            for (g, a) in acc.iter_mut().enumerate() {
-                *a += ws[crate::bitcell::weight_index(g, parity)] as i64;
-            }
+            acc = swar::add_wrap(acc, f.w_swar[w_row][pix]);
         }
-        let mut row = f.vmem[v_row];
-        for (g, &a) in acc.iter().enumerate() {
-            let v = wrap11(extract_field(row, g, parity) + a);
-            insert_field(&mut row, g, parity, v);
-        }
-        f.vmem[v_row] = row;
+        let st = parity.stagger();
+        let row = f.vmem[v_row];
+        let sum = swar::add_wrap(swar::pack(row >> st), acc);
+        f.vmem[v_row] = (row & !(swar::FIELD_MASK << st)) | (swar::unpack(sum) << st);
         self.counts[kind_ix(InstructionKind::AccW2V)] += w_rows.len() as u64;
         self.cycle += w_rows.len() as u64;
         Ok(())
@@ -671,38 +717,11 @@ impl ImpulseMacro {
             }
             return Ok(());
         }
+        // Straight-line SWAR runner: the stream above is fully
+        // validated, so no further dispatch or per-instruction output
+        // happens on this path.
         let f = self.fast.as_mut().expect("fast engine");
-        // Per-lane accumulators: the weight row is decoded once per
-        // union entry and fanned out to the masked lanes.
-        let mut acc = [[0i64; VALUES_PER_ROW]; MAX_FUSED_LANES];
-        let mut touched = 0u32;
-        for &(w_row, mask) in rows {
-            let ws = &f.w[w_row];
-            let mut add6 = [0i64; VALUES_PER_ROW];
-            for (g, a) in add6.iter_mut().enumerate() {
-                *a = ws[crate::bitcell::weight_index(g, parity)] as i64;
-            }
-            let mut mm = mask;
-            while mm != 0 {
-                let b = mm.trailing_zeros() as usize;
-                mm &= mm - 1;
-                for (a, &d) in acc[b].iter_mut().zip(add6.iter()) {
-                    *a += d;
-                }
-            }
-            touched |= mask;
-        }
-        let mut mm = touched;
-        while mm != 0 {
-            let b = mm.trailing_zeros() as usize;
-            mm &= mm - 1;
-            let mut row = f.vmem[lane_v_rows[b]];
-            for (g, &a) in acc[b].iter().enumerate() {
-                let v = wrap11(extract_field(row, g, parity) + a);
-                insert_field(&mut row, g, parity, v);
-            }
-            f.vmem[lane_v_rows[b]] = row;
-        }
+        f.run_accw2v_stream(rows, lane_v_rows, parity);
         self.counts[kind_ix(InstructionKind::AccW2V)] += rows.len() as u64;
         self.cycle += rows.len() as u64;
         Ok(())
@@ -750,19 +769,20 @@ impl ImpulseMacro {
         if v_row == neg_thr_row {
             bail!("SpikeCheck with v_row == thr_row");
         }
+        // SWAR: one lane-wise add yields both the spike decision (sign
+        // or carry-guard bit per lane) and the soft-reset sum; spiking
+        // lanes select the wrapped sum via the expanded gate mask.
+        let st = parity.stagger();
         let v = f.vmem[v_row];
-        let t = f.vmem[neg_thr_row];
-        let mut d = v;
+        let sum = swar::pack(v >> st) + swar::pack(f.vmem[neg_thr_row] >> st);
+        let ind = swar::spike_indicators(sum, f.comparator);
+        let gate = swar::expand_mask(ind) << st;
+        let stored = swar::unpack(sum & swar::VAL_MASK) << st;
+        f.vmem[v_row] = (v & !gate) | (stored & gate);
         let mut spikes = [false; 6];
         for (g, s) in spikes.iter_mut().enumerate() {
-            let vg = extract_field(v, g, parity);
-            let tg = extract_field(t, g, parity);
-            *s = compare(f.comparator, vg, tg);
-            if *s {
-                insert_field(&mut d, g, parity, wrap11(vg + tg));
-            }
+            *s = swar::indicator(ind, g);
         }
-        f.vmem[v_row] = d;
         f.spikebuf[parity_ix(parity)].latch(spikes);
         self.counts[kind_ix(InstructionKind::SpikeCheck)] += 1;
         self.counts[kind_ix(InstructionKind::AccV2V)] += 1;
@@ -811,25 +831,19 @@ impl ImpulseMacro {
         if v_row == neg_thr_row {
             bail!("SpikeCheck with v_row == thr_row");
         }
+        // SWAR: spike decision per lane from one add; hard reset is a
+        // raw field-bit copy of the reset row under the expanded gate,
+        // exactly like ResetV.
+        let st = parity.stagger();
         let v = f.vmem[v_row];
-        let t = f.vmem[neg_thr_row];
-        let r = f.vmem[reset_row];
-        let l = FieldLayout::new(parity);
-        let mut d = v;
+        let sum = swar::pack(v >> st) + swar::pack(f.vmem[neg_thr_row] >> st);
+        let ind = swar::spike_indicators(sum, f.comparator);
+        let gate = swar::expand_mask(ind) << st;
+        f.vmem[v_row] = (v & !gate) | (f.vmem[reset_row] & gate);
         let mut spikes = [false; 6];
         for (g, s) in spikes.iter_mut().enumerate() {
-            *s = compare(
-                f.comparator,
-                extract_field(v, g, parity),
-                extract_field(t, g, parity),
-            );
-            if *s {
-                // hard reset: raw field-bit copy, exactly like ResetV
-                let m = l.field_mask(g);
-                d = (d & !m) | (r & m);
-            }
+            *s = swar::indicator(ind, g);
         }
-        f.vmem[v_row] = d;
         f.spikebuf[parity_ix(parity)].latch(spikes);
         self.counts[kind_ix(InstructionKind::SpikeCheck)] += 1;
         self.counts[kind_ix(InstructionKind::ResetV)] += 1;
@@ -891,30 +905,31 @@ impl ImpulseMacro {
         if v_row == neg_thr_row {
             bail!("SpikeCheck with v_row == thr_row");
         }
+        // SWAR: leak all six lanes with one add-wrap, derive the spike
+        // decision from a second lane-wise add, then hard-reset the
+        // spiking lanes by raw field-bit copy. In the unfused sequence
+        // ResetV reads the reset row *after* the leak AccV2V wrote V —
+        // so when reset_row aliases v_row, the spiked-field "reset" is
+        // a self-copy of the leaked value (gate suppressed).
+        let st = parity.stagger();
         let v = f.vmem[v_row];
-        let leak = f.vmem[neg_leak_row];
-        let t = f.vmem[neg_thr_row];
-        let r = f.vmem[reset_row];
-        let l = FieldLayout::new(parity);
-        let mut d = v;
-        let mut spikes = [false; 6];
-        for (g, s) in spikes.iter_mut().enumerate() {
-            let leaked = wrap11(
-                extract_field(v, g, parity) + extract_field(leak, g, parity),
-            );
-            *s = compare(f.comparator, leaked, extract_field(t, g, parity));
-            if *s && reset_row != v_row {
-                let m = l.field_mask(g);
-                d = (d & !m) | (r & m);
-            } else {
-                // In the unfused sequence ResetV reads the reset row
-                // *after* the leak AccV2V wrote V — so when reset_row
-                // aliases v_row, the spiked-field "reset" is a
-                // self-copy of the leaked value.
-                insert_field(&mut d, g, parity, leaked);
-            }
+        let leaked = swar::add_wrap(
+            swar::pack(v >> st),
+            swar::pack(f.vmem[neg_leak_row] >> st),
+        );
+        let sum = leaked + swar::pack(f.vmem[neg_thr_row] >> st);
+        let ind = swar::spike_indicators(sum, f.comparator);
+        let fields = swar::FIELD_MASK << st;
+        let mut d = (v & !fields) | (swar::unpack(leaked) << st);
+        if reset_row != v_row {
+            let gate = swar::expand_mask(ind) << st;
+            d = (d & !gate) | (f.vmem[reset_row] & gate);
         }
         f.vmem[v_row] = d;
+        let mut spikes = [false; 6];
+        for (g, s) in spikes.iter_mut().enumerate() {
+            *s = swar::indicator(ind, g);
+        }
         f.spikebuf[parity_ix(parity)].latch(spikes);
         self.counts[kind_ix(InstructionKind::AccV2V)] += 1;
         self.counts[kind_ix(InstructionKind::SpikeCheck)] += 1;

@@ -14,6 +14,7 @@
 
 mod config;
 mod impulse;
+pub mod swar;
 mod trace;
 
 pub use config::{ComparatorMode, Engine, MacroConfig};

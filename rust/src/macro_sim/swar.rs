@@ -1,0 +1,295 @@
+//! SWAR (SIMD-within-a-register) arithmetic over the six 11-bit value
+//! fields of a packed V_MEM row.
+//!
+//! A V_MEM row stores six membrane potentials in 12-column fields at
+//! stride [`FIELD_WIDTH`], based at the parity's stagger offset. Within
+//! a field the 11 value bits occupy offsets {0..4, 6..11}; offset 5 —
+//! the hole column that carries the weight sign bit during AccW2V — is
+//! hardware-forced to 0. Because a field is exactly one bit wider than
+//! the value it stores, *closing the hole* ([`pack`]) leaves one
+//! carry-guard bit at the top of every 12-bit lane: two 11-bit
+//! operands sum to at most `0x7FF + 0x7FF = 0xFFE`, so a plain `u128`
+//! add never carries across lanes, and one AND with [`VAL_MASK`] wraps
+//! all six sums mod 2048 at once ([`add_wrap`]). The fast engine
+//! executes AccW2V / AccV2V / SpikeCheck on all six fields per
+//! instruction this way — two shifts, two masks, one add — instead of
+//! six extract-field/insert-field round-trips.
+//!
+//! All helpers operate on *stagger-normalized* rows (`row >>
+//! parity.stagger()`); callers shift back when writing to V_MEM.
+
+use super::ComparatorMode;
+use crate::bitcell::{FIELD_WIDTH, VALUES_PER_ROW};
+
+/// Replicate a ≤ 12-bit per-lane pattern into all six field lanes.
+const fn rep(v: u128) -> u128 {
+    let mut m = 0u128;
+    let mut g = 0;
+    while g < VALUES_PER_ROW {
+        m |= v << (g * FIELD_WIDTH);
+        g += 1;
+    }
+    m
+}
+
+/// Low 5 value bits of every lane (field offsets 0..4).
+pub const LOW5: u128 = rep(0x01F);
+/// Stored high 6 value bits of every lane (field offsets 6..11).
+pub const HI6_STORED: u128 = rep(0xFC0);
+/// Hole-closed high 6 value bits of every lane (offsets 5..10).
+pub const HI6_PACKED: u128 = rep(0x7E0);
+/// All 12 field bits of every lane.
+pub const FIELD_MASK: u128 = rep(0xFFF);
+/// The 11 value bits of every hole-closed lane — the per-lane mod-2048
+/// wrap mask. Bit 11 of each lane is the carry guard it clears.
+pub const VAL_MASK: u128 = rep(0x7FF);
+/// Bit 0 of every lane (the indicator position).
+pub const LANE_LSB: u128 = rep(1);
+
+/// Close the hole of every field of a stagger-normalized row, leaving
+/// six 11-bit unsigned (mod-2048) values in 12-bit lanes with one
+/// carry-guard bit each.
+#[inline]
+pub fn pack(row: u128) -> u128 {
+    (row & LOW5) | ((row >> 1) & HI6_PACKED)
+}
+
+/// Re-open the hole: the inverse of [`pack`] for lane values within
+/// [`VAL_MASK`]. The hole bit of every produced field is 0, preserving
+/// the stored-row invariant.
+#[inline]
+pub fn unpack(vals: u128) -> u128 {
+    (vals & LOW5) | ((vals << 1) & HI6_STORED)
+}
+
+/// Add two packed operands lane-wise and wrap every lane mod 2048 —
+/// the six-field AccW2V/AccV2V adder. Each lane's carry lands in its
+/// own guard bit and is cleared by the wrap mask; lanes never
+/// interact.
+#[inline]
+pub fn add_wrap(a: u128, b: u128) -> u128 {
+    (a + b) & VAL_MASK
+}
+
+/// Lane `g` of a packed word as a sign-extended 11-bit value in
+/// [-1024, 1023].
+#[inline]
+pub fn lane(vals: u128, g: usize) -> i64 {
+    let u = ((vals >> (g * FIELD_WIDTH)) as u64) & 0x7FF;
+    ((u as i64) << 53) >> 53
+}
+
+/// Pack six 11-bit signed values into lanes (their mod-2048 images).
+/// Test/bring-up helper — the engines build packed words with
+/// [`pack`].
+pub fn from_lanes(vals: &[i64; VALUES_PER_ROW]) -> u128 {
+    let mut w = 0u128;
+    for (g, &v) in vals.iter().enumerate() {
+        w |= (((v as u64) & 0x7FF) as u128) << (g * FIELD_WIDTH);
+    }
+    w
+}
+
+/// Expand a per-lane indicator word (bit 0 of each lane, as produced
+/// by [`spike_indicators`]) into a full-field write mask — `0xFFF` in
+/// every indicated lane. Lanes are exactly 12 bits wide, so the
+/// multiply cannot carry between lanes.
+#[inline]
+pub fn expand_mask(ind: u128) -> u128 {
+    ind * 0xFFF
+}
+
+/// Per-lane spike indicators of a SpikeCheck, from the *unwrapped*
+/// lane-wise sum `pack(v) + pack(−θ)`:
+///
+/// - [`ComparatorMode::SignBit`]: spike ⇔ sign bit (bit 10) of the
+///   wrapped sum is 0 — masking the guard bit never changes bit 10.
+/// - [`ComparatorMode::MsbCout`]: spike ⇔ unsigned carry out of the
+///   11-bit add, i.e. the guard bit (bit 11) itself.
+#[inline]
+pub fn spike_indicators(sum: u128, mode: ComparatorMode) -> u128 {
+    match mode {
+        ComparatorMode::SignBit => (!(sum >> 10)) & LANE_LSB,
+        ComparatorMode::MsbCout => (sum >> 11) & LANE_LSB,
+    }
+}
+
+/// Indicator word with bit 0 of lane `g` set for every `true` flag —
+/// the bridge from the spike-buffer bank to [`expand_mask`].
+#[inline]
+pub fn indicators_from_flags(flags: &[bool; VALUES_PER_ROW]) -> u128 {
+    let mut ind = 0u128;
+    for (g, &f) in flags.iter().enumerate() {
+        ind |= (f as u128) << (g * FIELD_WIDTH);
+    }
+    ind
+}
+
+/// Read the indicator bit of lane `g`.
+#[inline]
+pub fn indicator(ind: u128, g: usize) -> bool {
+    (ind >> (g * FIELD_WIDTH)) & 1 == 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitcell::{FieldLayout, Parity};
+    use crate::bits::wrap11;
+    use crate::proptest_lite::forall_ctx;
+
+    /// Six values hitting the carry-guard edges (±1024, ±1023, 0) more
+    /// often than uniform sampling would.
+    fn edgy_values(rng: &mut crate::bits::XorShiftRng) -> [i64; 6] {
+        let edges = [-1024i64, -1023, -1, 0, 1, 1022, 1023];
+        let mut v = [0i64; 6];
+        for x in v.iter_mut() {
+            *x = if rng.gen_bool(0.4) {
+                edges[rng.gen_i64(0, edges.len() as i64 - 1) as usize]
+            } else {
+                rng.gen_i64(-1024, 1023)
+            };
+        }
+        v
+    }
+
+    #[test]
+    fn pack_unpack_roundtrips_encoded_rows() {
+        forall_ctx(
+            300,
+            0x5174,
+            |rng| {
+                let parity = if rng.gen_bool(0.5) {
+                    Parity::Odd
+                } else {
+                    Parity::Even
+                };
+                (edgy_values(rng), parity)
+            },
+            |&(vals, parity)| {
+                let l = FieldLayout::new(parity);
+                let row = l.encode_row(&vals);
+                let st = parity.stagger();
+                let packed = pack(row >> st);
+                for (g, &v) in vals.iter().enumerate() {
+                    if lane(packed, g) != v {
+                        return Err(format!("lane {g}: {} != {v}", lane(packed, g)));
+                    }
+                }
+                if (unpack(packed) << st) != row {
+                    return Err("unpack is not the inverse of pack".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The headline property: the SWAR six-field adder is bit-identical
+    /// to per-field extract/insert arithmetic (`wrap11` per field),
+    /// for random rows of both parities including the carry-guard edge
+    /// values ±1024/±1023.
+    #[test]
+    fn swar_adder_matches_per_field_wrap11() {
+        forall_ctx(
+            500,
+            0xADD5,
+            |rng| {
+                let parity = if rng.gen_bool(0.5) {
+                    Parity::Odd
+                } else {
+                    Parity::Even
+                };
+                (edgy_values(rng), edgy_values(rng), parity)
+            },
+            |&(a, b, parity)| {
+                let l = FieldLayout::new(parity);
+                let st = parity.stagger();
+                let pa = pack(l.encode_row(&a) >> st);
+                let pb = pack(l.encode_row(&b) >> st);
+                let sum = add_wrap(pa, pb);
+                for g in 0..6 {
+                    let want = wrap11(a[g] + b[g]);
+                    let got = lane(sum, g);
+                    if got != want {
+                        return Err(format!("f{g}: {} + {} -> {got}, want {want}", a[g], b[g]));
+                    }
+                }
+                // and the re-packed row decodes to the same values
+                let row = unpack(sum) << st;
+                for g in 0..6 {
+                    if l.decode_value(row, g) != wrap11(a[g] + b[g]) {
+                        return Err(format!("re-packed field {g} diverges"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Repeated SWAR accumulation (the AccW2V stream pattern: wrap
+    /// after every add) equals a single wrap of the i64 sum.
+    #[test]
+    fn chained_adds_commute_with_wrapping() {
+        forall_ctx(
+            200,
+            0xCAB1,
+            |rng| {
+                let n = rng.gen_i64(1, 20) as usize;
+                (0..n).map(|_| edgy_values(rng)).collect::<Vec<[i64; 6]>>()
+            },
+            |terms| {
+                let mut acc = 0u128;
+                for t in terms {
+                    acc = add_wrap(acc, from_lanes(t));
+                }
+                for g in 0..6 {
+                    let want = wrap11(terms.iter().map(|t| t[g]).sum());
+                    if lane(acc, g) != want {
+                        return Err(format!("field {g}: {} != {want}", lane(acc, g)));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn spike_indicators_match_scalar_comparator() {
+        forall_ctx(
+            400,
+            0x59CC,
+            |rng| (edgy_values(rng), edgy_values(rng)),
+            |&(v, t)| {
+                let pv = from_lanes(&v);
+                let pt = from_lanes(&t);
+                let sum = pv + pt;
+                for mode in [ComparatorMode::SignBit, ComparatorMode::MsbCout] {
+                    let ind = spike_indicators(sum, mode);
+                    for g in 0..6 {
+                        let want = super::super::impulse::compare(mode, v[g], t[g]);
+                        if indicator(ind, g) != want {
+                            return Err(format!("{mode:?} field {g}: v={} t={}", v[g], t[g]));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn expand_mask_covers_indicated_lanes_exactly() {
+        for bits in 0..64u32 {
+            let mut flags = [false; 6];
+            for (g, f) in flags.iter_mut().enumerate() {
+                *f = (bits >> g) & 1 == 1;
+            }
+            let m = expand_mask(indicators_from_flags(&flags));
+            for (g, &f) in flags.iter().enumerate() {
+                let lane_bits = (m >> (g * FIELD_WIDTH)) & 0xFFF;
+                assert_eq!(lane_bits, if f { 0xFFF } else { 0 }, "bits={bits:#x} g={g}");
+            }
+            assert_eq!(m & !FIELD_MASK, 0);
+        }
+    }
+}

@@ -733,3 +733,119 @@ fn fused_lif_update_handles_reset_row_aliasing_v_row() {
         }
     }
 }
+
+/// PR 5 proptest: the SWAR six-field adder must match per-field
+/// `extract_field`/`insert_field` arithmetic exactly — random rows,
+/// both parities, with the carry-guard edge values ±1024/±1023 mixed
+/// in. The per-field path is the pre-SWAR reference implementation.
+#[test]
+fn swar_adder_matches_extract_insert_fields() {
+    use super::impulse::{extract_field, insert_field};
+    crate::proptest_lite::forall_ctx(
+        400,
+        0x5A5A,
+        |rng| {
+            let edge = [-1024i64, -1023, 1022, 1023, 0];
+            let mut a = [0i64; 6];
+            let mut b = [0i64; 6];
+            for x in a.iter_mut().chain(b.iter_mut()) {
+                *x = if rng.gen_bool(0.35) {
+                    edge[rng.gen_i64(0, 4) as usize]
+                } else {
+                    rng.gen_i64(-1024, 1023)
+                };
+            }
+            (a, b, rand_parity(rng))
+        },
+        |&(a, b, parity)| {
+            let st = parity.stagger();
+            // build the stored rows field by field (reference encode)
+            let mut row_a = 0u128;
+            let mut row_b = 0u128;
+            for g in 0..6 {
+                insert_field(&mut row_a, g, parity, a[g]);
+                insert_field(&mut row_b, g, parity, b[g]);
+            }
+            // SWAR: pack both, add-wrap, unpack
+            let sum = swar::add_wrap(swar::pack(row_a >> st), swar::pack(row_b >> st));
+            let swar_row = swar::unpack(sum) << st;
+            // reference: per-field extract → wrap11 → insert
+            let mut want_row = 0u128;
+            for g in 0..6 {
+                let w = wrap11(
+                    extract_field(row_a, g, parity) + extract_field(row_b, g, parity),
+                );
+                insert_field(&mut want_row, g, parity, w);
+            }
+            if swar_row != want_row {
+                return Err(format!("SWAR row {swar_row:#x} != per-field row {want_row:#x}"));
+            }
+            for g in 0..6 {
+                let want = wrap11(a[g] + b[g]);
+                if extract_field(swar_row, g, parity) != want {
+                    return Err(format!("field {g}: want {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The straight-line stream runner behind `acc_w2v_fused` must be
+/// bit-identical to issuing the same union stream one `execute` at a
+/// time on a second fast-engine macro (weights and state shared).
+#[test]
+fn accw2v_stream_runner_matches_instruction_dispatch() {
+    let mut rng = XorShiftRng::new(0x57A7);
+    for _ in 0..20 {
+        let mut fused = ImpulseMacro::new(MacroConfig::fast());
+        let mut reference = ImpulseMacro::new(MacroConfig::fast());
+        for r in 0..32 {
+            let w = rand_weights(&mut rng);
+            fused.write_weights(r, &w).unwrap();
+            reference.write_weights(r, &w).unwrap();
+        }
+        let lanes = rng.gen_i64(1, 8) as usize;
+        let lane_rows: Vec<usize> = (0..lanes).map(|b| 2 * b).collect();
+        for &v in &lane_rows {
+            let v0 = rand_values(&mut rng);
+            fused.write_v(v, Parity::Odd, &v0).unwrap();
+            reference.write_v(v, Parity::Odd, &v0).unwrap();
+        }
+        let n_rows = rng.gen_i64(0, 24) as usize;
+        let rows: Vec<(usize, u32)> = (0..n_rows)
+            .map(|_| {
+                let mask = (rng.gen_range(1u64 << lanes) as u32).max(1);
+                (rng.gen_i64(0, 31) as usize, mask)
+            })
+            .collect();
+        fused.acc_w2v_fused(&rows, &lane_rows, Parity::Odd).unwrap();
+        for &(w_row, mask) in &rows {
+            let mut mm = mask;
+            while mm != 0 {
+                let b = mm.trailing_zeros() as usize;
+                mm &= mm - 1;
+                reference
+                    .execute(&Instruction::AccW2V {
+                        w_row,
+                        v_src: lane_rows[b],
+                        v_dst: lane_rows[b],
+                        parity: Parity::Odd,
+                    })
+                    .unwrap();
+            }
+        }
+        for &v in &lane_rows {
+            assert_eq!(
+                fused.read_v(v, Parity::Odd).unwrap(),
+                reference.read_v(v, Parity::Odd).unwrap(),
+                "lane row {v}"
+            );
+        }
+        // fused accounting stays at one AccW2V per union row
+        assert_eq!(
+            fused.count_of(crate::isa::InstructionKind::AccW2V),
+            rows.len() as u64
+        );
+    }
+}

@@ -9,6 +9,7 @@
 //!   report   --fig {2|6|7|8|9a|11b} | --table 1   regenerate paper artifacts
 //!   infer    --text "w1 w2 …" | --sample N        classify via the macro pool
 //!   eval     [--max N] [--xla-check]              full test-set evaluation
+//!   bench    [--json PATH] [--quick]              perf sweeps → BENCH_PR5.json
 //!   serve    [--listen ADDR | --stdio]            binary-framed TCP server
 //!            [--workers N] [--batch B]            (docs/PROTOCOL.md) or the
 //!            [--batch-deadline-us U]              stdin/stdout line loop
@@ -39,6 +40,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "report" => cli::report::run(rest),
         "infer" => cli::infer::run(rest),
         "eval" => cli::eval::run(rest),
+        "bench" => cli::bench::run(rest),
         "serve" => cli::serve::run(rest),
         "stats" => cli::stats::run(rest),
         "shmoo" => cli::report::shmoo(),
@@ -68,6 +70,11 @@ COMMANDS:
     infer --sample N                classify test review N
     infer --words "id id id"        classify a word-id sequence
     eval [--max N] [--xla-check]    evaluate the test set on the macro pool
+    bench [--json PATH] [--quick]   macro-throughput + sparsity sweeps;
+                                    --json writes machine-readable
+                                    results (req/s, cycles/req, ns/op,
+                                    git rev) for the perf trajectory
+                                    (BENCH_PR5.json)
     eval digits [--max N] [--batch B] [--adaptive]
                                     evaluate the digits conv network on
                                     fused batch lanes (the workload-

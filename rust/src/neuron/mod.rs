@@ -159,6 +159,23 @@ impl GoldenLayer {
             .collect()
     }
 
+    /// Process one timestep from a packed spike plane — semantically
+    /// identical to [`GoldenLayer::step`], visiting only the *set*
+    /// inputs. The oracle counterpart of the mapped layers'
+    /// plane-native paths.
+    pub fn step_plane(&mut self, in_spikes: &crate::snn::SpikePlane) -> Vec<bool> {
+        assert_eq!(in_spikes.len(), self.num_inputs());
+        for i in in_spikes.iter_ones() {
+            for (n, st) in self.state.iter_mut().enumerate() {
+                st.accumulate(self.weights[i][n]);
+            }
+        }
+        self.state
+            .iter_mut()
+            .map(|st| st.update(&self.params))
+            .collect()
+    }
+
     /// Current membrane potentials.
     pub fn potentials(&self) -> Vec<i64> {
         self.state.iter().map(|s| s.v).collect()
@@ -237,6 +254,18 @@ mod tests {
         assert_eq!(l.potentials(), vec![0, 0, 7]);
         l.reset_state();
         assert_eq!(l.potentials(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn golden_step_plane_matches_step() {
+        let w = vec![vec![5, 6, 7], vec![-5, 6, 0]];
+        let mut a = GoldenLayer::new(NeuronParams::if_neuron(10), w.clone());
+        let mut b = GoldenLayer::new(NeuronParams::if_neuron(10), w);
+        for bits in [[true, true], [false, true], [false, false]] {
+            let plane = crate::snn::SpikePlane::from_bools(&bits);
+            assert_eq!(a.step(&bits), b.step_plane(&plane));
+            assert_eq!(a.potentials(), b.potentials());
+        }
     }
 
     #[test]

@@ -231,9 +231,17 @@ impl ConvLayer {
         } else {
             self.reset_state()?;
         }
-        self.lane_cycles = vec![0.0; lanes];
-        self.lane_rows_odd = vec![0; lanes];
-        self.lane_rows_even = vec![0; lanes];
+        // scratch reuse: re-arming at an unchanged width allocates
+        // nothing (mirror of the FC layer's buffer discipline)
+        if self.lane_cycles.len() == lanes {
+            self.lane_cycles.fill(0.0);
+        } else {
+            self.lane_cycles = vec![0.0; lanes];
+        }
+        if self.lane_rows_odd.len() != lanes {
+            self.lane_rows_odd = vec![0; lanes];
+            self.lane_rows_even = vec![0; lanes];
+        }
         Ok(())
     }
 
@@ -285,15 +293,34 @@ impl ConvLayer {
             .collect();
         let groups = l.n_channel_groups as f64;
         let upd = 2.0 * groups * self.params.neuron.instructions_per_update() as f64;
+        // per-lane channel-run words of the window position currently
+        // being probed (window taps iterate channels innermost, so one
+        // packed fetch per (iy, ix) per lane covers all its taps);
+        // `bits_at` reads at most 64 bits, so wider channel counts
+        // (possible only for 1×1 kernels) fall back to per-bit probes
+        let run_ok = l.c_in <= 64;
+        let mut runs = [0u64; 32];
         for y in 0..l.h() {
             for x in 0..l.w() {
                 // fused union of this pixel's window across lanes
                 self.union_rows.clear();
                 for (w_row, iy, ix, c) in l.window(y, x) {
                     let mut mask = 0u32;
-                    for (b, s) in batch.iter().enumerate() {
-                        if active[b] && s.get(iy, ix, c) {
-                            mask |= 1 << b;
+                    if run_ok {
+                        if c == 0 {
+                            let start = (iy * l.w() + ix) * l.c_in;
+                            for (b, (s, &a)) in batch.iter().zip(active).enumerate() {
+                                runs[b] = if a { s.plane().bits_at(start, l.c_in) } else { 0 };
+                            }
+                        }
+                        for (b, r) in runs[..lanes].iter().enumerate() {
+                            mask |= (((r >> c) & 1) as u32) << b;
+                        }
+                    } else {
+                        for (b, (s, &a)) in batch.iter().zip(active).enumerate() {
+                            if a && s.get(iy, ix, c) {
+                                mask |= 1 << b;
+                            }
                         }
                     }
                     if mask != 0 {
@@ -651,6 +678,34 @@ mod tests {
             s.cycles
         );
         assert_eq!(layer.lane_attributed_cycles()[3], 0.0, "inactive lane");
+    }
+
+    /// Channel counts beyond `bits_at`'s 64-bit run (possible only for
+    /// 1×1 kernels) must take the per-bit fallback and stay
+    /// bit-identical to sequential stepping.
+    #[test]
+    fn step_batch_wide_channels_falls_back_to_per_bit_probes() {
+        let mut rng = XorShiftRng::new(408);
+        let (h, w, c_in, c_out) = (2, 2, 80, 4);
+        let kernel: Vec<i64> = (0..c_in * c_out).map(|_| rng.gen_i64(-8, 8)).collect();
+        let p = LayerParams::rmp(30);
+        let mut batched =
+            ConvLayer::new(&kernel, h, w, c_in, c_out, 1, p, MacroConfig::fast()).unwrap();
+        batched.begin_batch(2).unwrap();
+        let mut refs: Vec<ConvLayer> = (0..2)
+            .map(|_| {
+                ConvLayer::new(&kernel, h, w, c_in, c_out, 1, p, MacroConfig::fast()).unwrap()
+            })
+            .collect();
+        for t in 0..4 {
+            let inputs: Vec<SpikeMap> =
+                (0..2).map(|_| rand_map(&mut rng, h, w, c_in, 0.3)).collect();
+            let in_refs: Vec<&SpikeMap> = inputs.iter().collect();
+            let got = batched.step_batch(&in_refs, &[true, true]).unwrap();
+            for (b, r) in refs.iter_mut().enumerate() {
+                assert_eq!(got[b], r.step(&inputs[b]).unwrap(), "t={t} lane {b}");
+            }
+        }
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! FC2 (output), with Conv2/Conv3/FC1/FC2 mapped on IMPULSE.
 
 use super::{ConvEncoder, ConvLayer, FcLayer, LayerParams, LayerStats, SparsityTracker};
-use super::SpikeMap;
+use super::{SpikeMap, SpikePlane};
 use crate::data::DigitsArtifacts;
 use crate::macro_sim::MacroConfig;
 use crate::Result;
@@ -88,20 +88,17 @@ impl DigitsNetwork {
         let cycles0 = self.total_cycles();
         for t in 0..self.t {
             let s1 = self.encoder.step(); // 28×28×C
-            let fired1 = s1.flatten().iter().filter(|&&b| b).count() as u64;
-            self.tracker.record_counts(0, t, fired1, s1.len() as u64);
+            self.tracker.record_counts(0, t, s1.count_ones() as u64, s1.len() as u64);
             let p1 = s1.maxpool2(); // 14×14×C
             let s2 = self.conv2.step(&p1)?;
-            let fired2 = s2.flatten().iter().filter(|&&b| b).count() as u64;
-            self.tracker.record_counts(1, t, fired2, s2.len() as u64);
+            self.tracker.record_counts(1, t, s2.count_ones() as u64, s2.len() as u64);
             let p2 = s2.maxpool2(); // 7×7×C
             let s3 = self.conv3.step(&p2)?;
-            let fired3 = s3.flatten().iter().filter(|&&b| b).count() as u64;
-            self.tracker.record_counts(2, t, fired3, s3.len() as u64);
+            self.tracker.record_counts(2, t, s3.count_ones() as u64, s3.len() as u64);
             let p3 = s3.maxpool2(); // 3×3×C
-            let sf = self.fc1.step(&p3.flatten())?.to_vec();
-            self.tracker.record(3, t, &sf);
-            self.fc2.step(&sf)?;
+            let sf = self.fc1.step_plane(p3.plane())?;
+            self.tracker.record_plane(3, t, sf);
+            self.fc2.step_plane(sf)?;
         }
         let v_out = self.fc2.potentials()?;
         let pred = argmax_lowest(&v_out);
@@ -161,38 +158,33 @@ impl DigitsNetwork {
             .collect();
         // every image runs the full T timesteps: all lanes stay active
         let active = vec![true; lanes];
-        let mut fc_in: Vec<Vec<bool>> = vec![Vec::new(); lanes];
+        let mut fc_in: Vec<SpikePlane> = vec![SpikePlane::default(); lanes];
         for t in 0..self.t {
             let mut p1 = Vec::with_capacity(lanes);
             for e in encoders.iter_mut() {
                 let s1 = e.step(); // 28×28×C
-                let fired = s1.flatten().iter().filter(|&&b| b).count() as u64;
-                self.tracker.record_counts(0, t, fired, s1.len() as u64);
+                self.tracker.record_counts(0, t, s1.count_ones() as u64, s1.len() as u64);
                 p1.push(s1.maxpool2()); // 14×14×C
             }
             let p1_refs: Vec<&SpikeMap> = p1.iter().collect();
             let s2 = self.conv2.step_batch(&p1_refs, &active)?;
             for s in &s2 {
-                let fired = s.flatten().iter().filter(|&&b| b).count() as u64;
-                self.tracker.record_counts(1, t, fired, s.len() as u64);
+                self.tracker.record_counts(1, t, s.count_ones() as u64, s.len() as u64);
             }
             let p2: Vec<SpikeMap> = s2.iter().map(|s| s.maxpool2()).collect(); // 7×7×C
             let p2_refs: Vec<&SpikeMap> = p2.iter().collect();
             let s3 = self.conv3.step_batch(&p2_refs, &active)?;
             for s in &s3 {
-                let fired = s.flatten().iter().filter(|&&b| b).count() as u64;
-                self.tracker.record_counts(2, t, fired, s.len() as u64);
+                self.tracker.record_counts(2, t, s.count_ones() as u64, s.len() as u64);
             }
             for (b, s) in s3.iter().enumerate() {
-                fc_in[b] = s.maxpool2().flatten(); // 3×3×C
+                fc_in[b] = s.maxpool2().into_plane(); // 3×3×C, stays packed
             }
-            let fc_refs: Vec<&[bool]> = fc_in.iter().map(|v| v.as_slice()).collect();
-            let sf = self.fc1.step_batch(&fc_refs, &active)?;
+            let sf = self.fc1.step_batch_planes(&fc_in, &active)?;
             for s in sf {
-                self.tracker.record(3, t, s);
+                self.tracker.record_plane(3, t, s);
             }
-            let sf_refs: Vec<&[bool]> = sf.iter().map(|v| v.as_slice()).collect();
-            self.fc2.step_batch(&sf_refs, &active)?;
+            self.fc2.step_batch_planes(sf, &active)?;
         }
         let mut v_outs = Vec::with_capacity(lanes);
         for b in 0..lanes {

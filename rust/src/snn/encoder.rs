@@ -2,7 +2,7 @@
 //! macro (paper: "the input layer acts as spike-encoder"; for the conv
 //! net, "the first Conv layer acts as a spike-encoder").
 
-use super::SpikeMap;
+use super::{SpikeMap, SpikePlane};
 
 /// Direct-input encoder: each of `m` neurons integrates its quantized
 /// input current every timestep and fires with RMP-style soft reset.
@@ -13,6 +13,9 @@ pub struct Encoder {
     pub threshold: i64,
     v: Vec<i64>,
     out: Vec<bool>,
+    /// Output spikes in packed form — what the macro-side layers
+    /// consume on the plane-native paths.
+    out_plane: SpikePlane,
 }
 
 impl Encoder {
@@ -22,26 +25,39 @@ impl Encoder {
             threshold,
             v: vec![0; m],
             out: vec![false; m],
+            out_plane: SpikePlane::new(m),
         }
     }
 
-    /// One timestep with input currents `x_q` (length m).
-    pub fn step(&mut self, x_q: &[i64]) -> &[bool] {
+    /// One timestep with input currents `x_q` (length m), producing
+    /// the packed spike plane the downstream layers iterate by
+    /// popcount. The integration itself is inherently O(m); everything
+    /// after this point costs O(active spikes).
+    pub fn step_plane(&mut self, x_q: &[i64]) -> &SpikePlane {
         assert_eq!(x_q.len(), self.v.len());
-        for ((v, &x), o) in self.v.iter_mut().zip(x_q).zip(self.out.iter_mut()) {
+        self.out_plane.clear();
+        for (i, (v, &x)) in self.v.iter_mut().zip(x_q).enumerate() {
             *v += x;
-            let s = *v >= self.threshold;
-            if s {
+            if *v >= self.threshold {
                 *v -= self.threshold;
+                self.out_plane.set(i, true);
             }
-            *o = s;
         }
+        &self.out_plane
+    }
+
+    /// One timestep with input currents `x_q` (length m). Boolean view
+    /// of [`Encoder::step_plane`].
+    pub fn step(&mut self, x_q: &[i64]) -> &[bool] {
+        self.step_plane(x_q);
+        self.out_plane.write_bools(&mut self.out);
         &self.out
     }
 
     pub fn reset_state(&mut self) {
         self.v.iter_mut().for_each(|v| *v = 0);
         self.out.iter_mut().for_each(|o| *o = false);
+        self.out_plane.clear();
     }
 
     pub fn potentials(&self) -> &[i64] {
@@ -163,6 +179,19 @@ mod tests {
         assert_eq!(e.potentials()[0], -60);
         e.reset_state();
         assert_eq!(e.potentials(), &[0, 0]);
+    }
+
+    #[test]
+    fn step_plane_matches_step() {
+        let mut a = Encoder::new(5, 10);
+        let mut b = Encoder::new(5, 10);
+        for t in 0..20i64 {
+            let x: Vec<i64> = (0..5).map(|i| (t * 3 + i) % 13 - 3).collect();
+            let want = a.step(&x).to_vec();
+            let got = b.step_plane(&x).to_bools();
+            assert_eq!(got, want, "t={t}");
+            assert_eq!(a.potentials(), b.potentials());
+        }
     }
 
     #[test]

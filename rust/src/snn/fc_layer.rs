@@ -1,6 +1,6 @@
 //! Fully-connected layer executor.
 
-use super::LayerParams;
+use super::{LayerParams, SpikePlane};
 use crate::bitcell::Parity;
 use crate::isa::{neuron_sequence, InstructionKind};
 use crate::macro_sim::{ImpulseMacro, MacroConfig};
@@ -43,6 +43,8 @@ pub struct FcLayer {
     output_only: bool,
     /// Scratch: spike staging buffer reused across timesteps.
     out_spikes: Vec<bool>,
+    /// Scratch: packed view of `out_spikes` for the plane-native path.
+    out_plane: SpikePlane,
     /// Scratch: spiking input rows of the current timestep.
     spiking_rows: Vec<usize>,
     /// Precomputed neuron-update sequences per parity (fixed rows).
@@ -58,8 +60,13 @@ pub struct FcLayer {
     /// Per-lane destination V rows, indexed by lane, per parity.
     lane_rows_odd: Vec<usize>,
     lane_rows_even: Vec<usize>,
-    /// Scratch: per-lane output spikes.
+    /// Scratch: per-lane output spikes (boolean view).
     batch_out: Vec<Vec<bool>>,
+    /// Scratch: per-lane output spikes in packed form.
+    batch_planes: Vec<SpikePlane>,
+    /// Scratch: packed per-lane inputs for the boolean `step_batch`
+    /// wrapper (sized lazily, reused across timesteps).
+    in_planes: Vec<SpikePlane>,
     /// Scratch: fused spike union `(row, lane mask)` of the timestep.
     union_rows: Vec<(usize, u32)>,
 }
@@ -107,12 +114,15 @@ impl FcLayer {
             params,
             output_only: false,
             out_spikes: vec![false; width],
+            out_plane: SpikePlane::new(width),
             spiking_rows: Vec::with_capacity(fan_in),
             lanes: 1,
             lane_cycles: vec![0.0],
             lane_rows_odd: vec![0],
             lane_rows_even: vec![1],
             batch_out: vec![vec![false; width]],
+            batch_planes: vec![SpikePlane::new(width)],
+            in_planes: Vec::new(),
             union_rows: Vec::with_capacity(fan_in),
             seq_odd,
             seq_even,
@@ -145,6 +155,26 @@ impl FcLayer {
                 self.spiking_rows.push(i);
             }
         }
+        self.step_gathered()?;
+        Ok(&self.out_spikes)
+    }
+
+    /// Plane-native timestep: identical contract to [`FcLayer::step`],
+    /// but the spiking-row gather iterates only *set* bits
+    /// (`trailing_zeros` over the packed words) — O(popcount) instead
+    /// of O(fan-in).
+    pub fn step_plane(&mut self, input: &SpikePlane) -> Result<&SpikePlane> {
+        assert_eq!(input.len(), self.layout.fan_in, "fan-in mismatch");
+        self.spiking_rows.clear();
+        self.spiking_rows.extend(input.iter_ones());
+        self.step_gathered()?;
+        self.out_plane.fill_from_bools(&self.out_spikes);
+        Ok(&self.out_plane)
+    }
+
+    /// Shared body of `step`/`step_plane`: issue the gathered spiking
+    /// rows and the neuron updates, staging output spikes.
+    fn step_gathered(&mut self) -> Result<()> {
         for (tile, m) in self.layout.tiles.iter().zip(self.macros.iter_mut()) {
             // 1. sparsity-gated synaptic accumulation (batched hot path)
             for parity in Parity::BOTH {
@@ -169,7 +199,7 @@ impl FcLayer {
                 }
             }
         }
-        Ok(&self.out_spikes)
+        Ok(())
     }
 
     /// Maximum batch lanes this layer can host: one odd/even V-row pair
@@ -188,6 +218,10 @@ impl FcLayer {
     /// macro, updated by the fused per-type neuron kernels against the
     /// shared constant rows. Lane 0 aliases the classic single-request
     /// rows. Also resets the per-lane cycle attribution.
+    ///
+    /// Scratch buffers (`lane_cycles`, `batch_out`, the packed
+    /// planes) are reused whenever the lane count is unchanged —
+    /// re-arming a batch of the same width allocates nothing.
     pub fn begin_batch(&mut self, lanes: usize) -> Result<()> {
         anyhow::ensure!(
             lanes >= 1 && lanes <= self.max_batch_lanes(),
@@ -201,8 +235,26 @@ impl FcLayer {
             self.lane_rows_odd.push(2 * b);
             self.lane_rows_even.push(2 * b + 1);
         }
-        self.lane_cycles = vec![0.0; lanes];
-        self.batch_out = vec![vec![false; self.layout.width]; lanes];
+        let width = self.layout.width;
+        if self.lane_cycles.len() == lanes {
+            self.lane_cycles.fill(0.0);
+        } else {
+            self.lane_cycles = vec![0.0; lanes];
+        }
+        if self.batch_out.len() == lanes {
+            for out in self.batch_out.iter_mut() {
+                out.fill(false);
+            }
+        } else {
+            self.batch_out = vec![vec![false; width]; lanes];
+        }
+        if self.batch_planes.len() == lanes {
+            for p in self.batch_planes.iter_mut() {
+                p.reset(width);
+            }
+        } else {
+            self.batch_planes = (0..lanes).map(|_| SpikePlane::new(width)).collect();
+        }
         for m in self.macros.iter_mut() {
             for b in 0..lanes {
                 m.write_v(2 * b, Parity::Odd, &[0; 6])?;
@@ -219,7 +271,48 @@ impl FcLayer {
     /// still have work; inactive lanes are untouched. Returns per-lane
     /// output spikes (all-false rows for inactive or output-only
     /// lanes). Bit-identical per lane to running `step` sequentially.
+    ///
+    /// Boolean wrapper over [`FcLayer::step_batch_planes`] — inputs
+    /// are packed into reused scratch planes, outputs expanded back.
     pub fn step_batch(&mut self, batch: &[&[bool]], active: &[bool]) -> Result<&[Vec<bool>]> {
+        let lanes = self.lanes;
+        anyhow::ensure!(
+            batch.len() == lanes && active.len() == lanes,
+            "batch of {} lanes, {} active flags; configured for {lanes} (call begin_batch)",
+            batch.len(),
+            active.len()
+        );
+        let fan_in = self.layout.fan_in;
+        let mut in_planes = std::mem::take(&mut self.in_planes);
+        if in_planes.len() != lanes {
+            in_planes = (0..lanes).map(|_| SpikePlane::new(fan_in)).collect();
+        }
+        for ((p, s), &a) in in_planes.iter_mut().zip(batch).zip(active) {
+            if a {
+                p.fill_from_bools(s);
+            } else {
+                p.reset(fan_in);
+            }
+        }
+        let res = self.step_batch_planes(&in_planes, active).map(|_| ());
+        self.in_planes = in_planes;
+        res?;
+        for (out, plane) in self.batch_out.iter_mut().zip(&self.batch_planes) {
+            plane.write_bools(out);
+        }
+        Ok(&self.batch_out)
+    }
+
+    /// Plane-native fused timestep — the serve path's hot loop. Same
+    /// contract as [`FcLayer::step_batch`], but the batch union is
+    /// computed word-at-a-time over the packed lanes
+    /// ([`crate::snn::spike_union_planes`]) and outputs stay packed,
+    /// so per-timestep cost scales with the active spike count.
+    pub fn step_batch_planes(
+        &mut self,
+        batch: &[SpikePlane],
+        active: &[bool],
+    ) -> Result<&[SpikePlane]> {
         let lanes = self.lanes;
         anyhow::ensure!(
             batch.len() == lanes && active.len() == lanes,
@@ -237,11 +330,9 @@ impl FcLayer {
                 );
             }
         }
-        crate::snn::spike_union(batch, active, &mut self.union_rows);
-        for out in self.batch_out.iter_mut() {
-            for s in out.iter_mut() {
-                *s = false;
-            }
+        crate::snn::spike_union_planes(batch, active, &mut self.union_rows);
+        for out in self.batch_planes.iter_mut() {
+            out.clear();
         }
         // Honest per-lane cost attribution for this timestep: each
         // union row costs one AccW2V per tile per parity, split across
@@ -289,14 +380,14 @@ impl FcLayer {
                     )?;
                     for (field, &sp) in spikes.iter().enumerate() {
                         let local = tile.local_out(parity, field);
-                        if local < tile.out_count {
-                            self.batch_out[b][tile.out_base + local] = sp;
+                        if local < tile.out_count && sp {
+                            self.batch_planes[b].set(tile.out_base + local, true);
                         }
                     }
                 }
             }
         }
-        Ok(&self.batch_out)
+        Ok(&self.batch_planes)
     }
 
     /// Per-lane attributed cycles accumulated since `begin_batch`:
@@ -349,6 +440,7 @@ impl FcLayer {
         for s in self.out_spikes.iter_mut() {
             *s = false;
         }
+        self.out_plane.clear();
         Ok(())
     }
 
@@ -640,6 +732,111 @@ mod tests {
             assert_eq!(layer.lane_attributed_cycles()[3], 0.0, "inactive lane");
             assert!(layer.lane_attributed_cycles()[..3].iter().all(|&c| c > 0.0));
         }
+    }
+
+    /// PR 5 differential: the plane-native batch path must be
+    /// bit-identical to the boolean `&[bool]` path at input sparsities
+    /// {0.0, 0.15, 0.85, 1.0} — outputs, potentials, cycle spend, and
+    /// per-lane attribution alike.
+    #[test]
+    fn step_batch_planes_matches_bool_path_at_sparsities() {
+        use crate::snn::SpikePlane;
+        let mut rng = XorShiftRng::new(5150);
+        for &sparsity in &[0.0f64, 0.15, 0.85, 1.0] {
+            let w = rand_weights(&mut rng, 100, 30);
+            let params = LayerParams::rmp(120);
+            let lanes = 4;
+            let mut bool_layer = FcLayer::new(&w, params, MacroConfig::fast()).unwrap();
+            bool_layer.begin_batch(lanes).unwrap();
+            let mut plane_layer = FcLayer::new(&w, params, MacroConfig::fast()).unwrap();
+            plane_layer.begin_batch(lanes).unwrap();
+            let active = vec![true; lanes];
+            for t in 0..8 {
+                let spikes: Vec<Vec<bool>> = (0..lanes)
+                    .map(|_| rand_spikes(&mut rng, 100, 1.0 - sparsity))
+                    .collect();
+                let planes: Vec<SpikePlane> =
+                    spikes.iter().map(|s| SpikePlane::from_bools(s)).collect();
+                let refs: Vec<&[bool]> = spikes.iter().map(|s| s.as_slice()).collect();
+                let want = bool_layer.step_batch(&refs, &active).unwrap().to_vec();
+                let got: Vec<Vec<bool>> = plane_layer
+                    .step_batch_planes(&planes, &active)
+                    .unwrap()
+                    .iter()
+                    .map(|p| p.to_bools())
+                    .collect();
+                assert_eq!(got, want, "s={sparsity} t={t}");
+                for b in 0..lanes {
+                    assert_eq!(
+                        plane_layer.lane_potentials(b).unwrap(),
+                        bool_layer.lane_potentials(b).unwrap(),
+                        "s={sparsity} t={t} lane {b}"
+                    );
+                }
+            }
+            assert_eq!(
+                plane_layer.stats().cycles,
+                bool_layer.stats().cycles,
+                "s={sparsity}: plane path must issue the identical stream"
+            );
+            assert_eq!(
+                plane_layer.lane_attributed_cycles(),
+                bool_layer.lane_attributed_cycles(),
+                "s={sparsity}"
+            );
+        }
+    }
+
+    /// Sequential plane stepping must match the boolean path exactly
+    /// (same gather → same instruction stream → same spikes).
+    #[test]
+    fn step_plane_matches_step() {
+        let mut rng = XorShiftRng::new(616);
+        let w = rand_weights(&mut rng, 64, 20);
+        for params in [
+            LayerParams::rmp(90),
+            LayerParams::if_(70),
+            LayerParams::lif(60, 2),
+        ] {
+            let mut a = FcLayer::new(&w, params, MacroConfig::fast()).unwrap();
+            let mut b = FcLayer::new(&w, params, MacroConfig::fast()).unwrap();
+            for t in 0..10 {
+                let spikes = rand_spikes(&mut rng, 64, 0.25);
+                let want = a.step(&spikes).unwrap().to_vec();
+                let got = b
+                    .step_plane(&crate::snn::SpikePlane::from_bools(&spikes))
+                    .unwrap()
+                    .to_bools();
+                assert_eq!(got, want, "{params:?} t={t}");
+            }
+            assert_eq!(a.potentials().unwrap(), b.potentials().unwrap());
+            assert_eq!(a.stats().cycles, b.stats().cycles);
+        }
+    }
+
+    /// Re-arming a batch at the same width must not grow the scratch
+    /// buffers — the PR 5 allocation-churn fix (buffers are reused, so
+    /// results stay bit-identical across re-arms).
+    #[test]
+    fn begin_batch_reuses_scratch_across_rearms() {
+        let mut rng = XorShiftRng::new(99182);
+        let w = rand_weights(&mut rng, 32, 12);
+        let mut layer = FcLayer::new(&w, LayerParams::rmp(80), MacroConfig::fast()).unwrap();
+        let spikes: Vec<Vec<bool>> = (0..3).map(|_| rand_spikes(&mut rng, 32, 0.3)).collect();
+        let refs: Vec<&[bool]> = spikes.iter().map(|s| s.as_slice()).collect();
+        layer.begin_batch(3).unwrap();
+        let first = layer.step_batch(&refs, &[true; 3]).unwrap().to_vec();
+        // repeated re-arms at the same width reuse every buffer and
+        // reproduce the run exactly
+        for _ in 0..3 {
+            layer.begin_batch(3).unwrap();
+            let again = layer.step_batch(&refs, &[true; 3]).unwrap().to_vec();
+            assert_eq!(again, first);
+        }
+        // width change still reshapes correctly
+        layer.begin_batch(2).unwrap();
+        let two = layer.step_batch(&refs[..2], &[true; 2]).unwrap();
+        assert_eq!(two.len(), 2);
     }
 
     #[test]

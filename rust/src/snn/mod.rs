@@ -17,7 +17,7 @@ pub use digits::{DigitsNetwork, DigitsResult};
 pub use encoder::{ConvEncoder, Encoder};
 pub use fc_layer::{FcLayer, LayerStats};
 pub use network::{ReviewResult, SentimentNetwork};
-pub use spikes::{spike_union, SparsityTracker, SpikeMap};
+pub use spikes::{spike_union, spike_union_planes, Ones, SparsityTracker, SpikeMap, SpikePlane};
 
 use crate::isa::NeuronType;
 

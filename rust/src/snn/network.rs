@@ -2,7 +2,7 @@
 //! processing one word per `t_word` timesteps with V_MEM carrying the
 //! sequence memory (paper §III, Figs 9b/10/11a).
 
-use super::{Encoder, FcLayer, LayerParams, LayerStats, SparsityTracker};
+use super::{Encoder, FcLayer, LayerParams, LayerStats, SparsityTracker, SpikePlane};
 use crate::data::SentimentArtifacts;
 use crate::macro_sim::MacroConfig;
 use crate::Result;
@@ -89,15 +89,16 @@ impl SentimentNetwork {
                 );
             };
             for t in 0..self.t_word {
-                // disjoint field borrows: each layer's output slice is
-                // consumed by the next without copying
-                let s0 = self.encoder.step(x);
-                self.tracker.record(0, t, s0);
-                let s1 = self.fc1.step(s0)?;
-                self.tracker.record(1, t, s1);
-                let s2 = self.fc2.step(s1)?;
-                self.tracker.record(2, t, s2);
-                self.out.step(s2)?;
+                // disjoint field borrows: each layer's packed output
+                // plane is consumed by the next without copying, and
+                // sparsity accounting is one popcount per layer
+                let s0 = self.encoder.step_plane(x);
+                self.tracker.record_plane(0, t, s0);
+                let s1 = self.fc1.step_plane(s0)?;
+                self.tracker.record_plane(1, t, s1);
+                let s2 = self.fc2.step_plane(s1)?;
+                self.tracker.record_plane(2, t, s2);
+                self.out.step_plane(s2)?;
             }
             vout_trace.push(self.out.potentials()?[0]);
         }
@@ -172,7 +173,9 @@ impl SentimentNetwork {
         let max_words = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
         let mut traces: Vec<Vec<i64>> = vec![Vec::new(); lanes];
         let mut active = vec![false; lanes];
-        let mut enc_out: Vec<Vec<bool>> = vec![vec![false; self.fc1.fan_in()]; lanes];
+        // packed per-lane encoder outputs, reused every timestep — no
+        // per-call `Vec<&[bool]>` staging
+        let mut enc_out: Vec<SpikePlane> = vec![SpikePlane::new(self.fc1.fan_in()); lanes];
         for wi in 0..max_words {
             for (b, a) in active.iter_mut().enumerate() {
                 *a = wi < seqs[b].len();
@@ -183,26 +186,23 @@ impl SentimentNetwork {
                         continue;
                     }
                     let x = &self.emb[seqs[b][wi] as usize];
-                    let s = encoders[b].step(x);
-                    enc_out[b].copy_from_slice(s);
-                    self.tracker.record(0, t, s);
+                    let s = encoders[b].step_plane(x);
+                    enc_out[b].clone_from(s);
+                    self.tracker.record_plane(0, t, s);
                 }
-                let in_refs: Vec<&[bool]> = enc_out.iter().map(|v| v.as_slice()).collect();
-                let s1 = self.fc1.step_batch(&in_refs, &active)?;
+                let s1 = self.fc1.step_batch_planes(&enc_out, &active)?;
                 for (b, s) in s1.iter().enumerate() {
                     if active[b] {
-                        self.tracker.record(1, t, s);
+                        self.tracker.record_plane(1, t, s);
                     }
                 }
-                let r1: Vec<&[bool]> = s1.iter().map(|v| v.as_slice()).collect();
-                let s2 = self.fc2.step_batch(&r1, &active)?;
+                let s2 = self.fc2.step_batch_planes(s1, &active)?;
                 for (b, s) in s2.iter().enumerate() {
                     if active[b] {
-                        self.tracker.record(2, t, s);
+                        self.tracker.record_plane(2, t, s);
                     }
                 }
-                let r2: Vec<&[bool]> = s2.iter().map(|v| v.as_slice()).collect();
-                self.out.step_batch(&r2, &active)?;
+                self.out.step_batch_planes(s2, &active)?;
             }
             for b in 0..lanes {
                 if active[b] {
@@ -262,7 +262,7 @@ impl SentimentNetwork {
                 );
             };
             for _ in 0..self.t_word {
-                inputs.push(self.encoder.step(x).to_vec());
+                inputs.push(self.encoder.step_plane(x).clone());
             }
         }
         let s2 = crate::coordinator::pipeline::run_stages(
@@ -272,7 +272,7 @@ impl SentimentNetwork {
         )?;
         let mut vout_trace = Vec::new();
         for (i, s) in s2.iter().enumerate() {
-            self.out.step(s)?;
+            self.out.step_plane(s)?;
             if (i + 1) % self.t_word == 0 {
                 vout_trace.push(self.out.potentials()?[0]);
             }

@@ -1,13 +1,244 @@
 //! Spike containers and sparsity accounting (Fig 11a).
+//!
+//! The serving stack's spike currency is the packed [`SpikePlane`]:
+//! one bit per input/neuron in u64 words, iterated over *active*
+//! indices via `trailing_zeros` and counted via popcount. Everything
+//! downstream of the encoders — layer steps, batch unions, sparsity
+//! tracking — costs O(popcount), mirroring the macro's skip-on-zero
+//! AccW2V issue (paper Fig 11b), instead of O(width) per timestep.
+
+/// A packed spike bitset: one bit per unit, 64 units per word.
+///
+/// Invariant: bits at index ≥ `len` are always zero, so popcounts and
+/// word-level unions never see phantom spikes.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SpikePlane {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl SpikePlane {
+    /// An all-silent plane of `len` units.
+    pub fn new(len: usize) -> Self {
+        Self {
+            len,
+            words: vec![0; len.div_ceil(64)],
+        }
+    }
+
+    /// Number of units (bits) in the plane.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the plane has zero units.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read one spike bit. Panics on out-of-range indices (matching
+    /// `Vec<bool>` indexing — an index bug must not read the padded
+    /// tail of the last word as silence).
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len, "index {i} out of {}", self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Write one spike bit.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.len, "index {i} out of {}", self.len);
+        let w = &mut self.words[i >> 6];
+        let m = 1u64 << (i & 63);
+        if v {
+            *w |= m;
+        } else {
+            *w &= !m;
+        }
+    }
+
+    /// Silence every unit (length unchanged).
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Reset to `len` silent units, reusing the allocation when it
+    /// fits — the scratch-buffer discipline of the batch paths.
+    pub fn reset(&mut self, len: usize) {
+        self.len = len;
+        self.words.clear();
+        self.words.resize(len.div_ceil(64), 0);
+    }
+
+    /// Number of set bits — the active-spike count feeding the
+    /// sparsity trackers and telemetry counters.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Fraction of set bits.
+    pub fn density(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        self.count_ones() as f64 / self.len as f64
+    }
+
+    /// Overwrite from a boolean spike vector (resizing to match).
+    pub fn fill_from_bools(&mut self, bits: &[bool]) {
+        self.reset(bits.len());
+        for (w, chunk) in self.words.iter_mut().zip(bits.chunks(64)) {
+            let mut x = 0u64;
+            for (j, &b) in chunk.iter().enumerate() {
+                x |= (b as u64) << j;
+            }
+            *w = x;
+        }
+    }
+
+    /// Build from a boolean spike vector.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut p = Self::default();
+        p.fill_from_bools(bits);
+        p
+    }
+
+    /// Popcount an iterator of flags (e.g. "pixel is nonzero") via
+    /// word packing, without materializing a plane — the
+    /// allocation-free counter behind telemetry's sparsity counters.
+    pub fn count_flags<I: IntoIterator<Item = bool>>(flags: I) -> usize {
+        let mut cur = 0u64;
+        let mut n = 0usize;
+        let mut total = 0usize;
+        for f in flags {
+            cur |= (f as u64) << (n & 63);
+            n += 1;
+            if n & 63 == 0 {
+                total += cur.count_ones() as usize;
+                cur = 0;
+            }
+        }
+        total + cur.count_ones() as usize
+    }
+
+    /// Pack an iterator of flags (e.g. "pixel is nonzero") into plane
+    /// words.
+    pub fn from_flags<I: IntoIterator<Item = bool>>(flags: I) -> Self {
+        let mut words = Vec::new();
+        let mut cur = 0u64;
+        let mut n = 0usize;
+        for f in flags {
+            cur |= (f as u64) << (n & 63);
+            n += 1;
+            if n & 63 == 0 {
+                words.push(cur);
+                cur = 0;
+            }
+        }
+        if n & 63 != 0 {
+            words.push(cur);
+        }
+        Self { len: n, words }
+    }
+
+    /// Expand into a pre-sized boolean slice (lengths must match).
+    pub fn write_bools(&self, out: &mut [bool]) {
+        assert_eq!(out.len(), self.len, "length mismatch");
+        for (chunk, &w) in out.chunks_mut(64).zip(&self.words) {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o = (w >> j) & 1 == 1;
+            }
+        }
+    }
+
+    /// Expand into a boolean spike vector.
+    pub fn to_bools(&self) -> Vec<bool> {
+        let mut out = vec![false; self.len];
+        self.write_bools(&mut out);
+        out
+    }
+
+    /// OR another plane of the same length into this one.
+    pub fn or_assign(&mut self, other: &SpikePlane) {
+        assert_eq!(self.len, other.len, "length mismatch");
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// The backing words (low bit of word 0 is unit 0).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Read up to 64 consecutive bits starting at `start` (may span a
+    /// word boundary). Used by the conv union to fetch a pixel's whole
+    /// channel run in one probe.
+    #[inline]
+    pub fn bits_at(&self, start: usize, n: usize) -> u64 {
+        debug_assert!((1..=64).contains(&n));
+        debug_assert!(start + n <= self.len);
+        let wi = start >> 6;
+        let off = start & 63;
+        let lo = self.words[wi] >> off;
+        let x = if off != 0 && wi + 1 < self.words.len() {
+            lo | (self.words[wi + 1] << (64 - off))
+        } else {
+            lo
+        };
+        if n == 64 {
+            x
+        } else {
+            x & ((1u64 << n) - 1)
+        }
+    }
+
+    /// Iterate the indices of set bits in ascending order — cost
+    /// proportional to the popcount, via `trailing_zeros`.
+    pub fn iter_ones(&self) -> Ones<'_> {
+        Ones {
+            words: &self.words,
+            wi: 0,
+            cur: self.words.first().copied().unwrap_or(0),
+        }
+    }
+}
+
+/// Iterator over the set-bit indices of a [`SpikePlane`].
+pub struct Ones<'a> {
+    words: &'a [u64],
+    wi: usize,
+    cur: u64,
+}
+
+impl Iterator for Ones<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        while self.cur == 0 {
+            self.wi += 1;
+            if self.wi >= self.words.len() {
+                return None;
+            }
+            self.cur = self.words[self.wi];
+        }
+        let b = self.cur.trailing_zeros() as usize;
+        self.cur &= self.cur - 1;
+        Some((self.wi << 6) | b)
+    }
+}
 
 /// A 3-D binary spike volume (height × width × channels), the
-/// inter-layer currency of the conv network.
+/// inter-layer currency of the conv network — backed by a packed
+/// [`SpikePlane`] (row-major, channel innermost).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SpikeMap {
     pub h: usize,
     pub w: usize,
     pub c: usize,
-    bits: Vec<bool>,
+    plane: SpikePlane,
 }
 
 impl SpikeMap {
@@ -16,34 +247,59 @@ impl SpikeMap {
             h,
             w,
             c,
-            bits: vec![false; h * w * c],
+            plane: SpikePlane::new(h * w * c),
         }
+    }
+
+    #[inline]
+    fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
+        (y * self.w + x) * self.c + ch
     }
 
     #[inline]
     pub fn get(&self, y: usize, x: usize, ch: usize) -> bool {
-        self.bits[(y * self.w + x) * self.c + ch]
+        self.plane.get(self.idx(y, x, ch))
     }
 
     #[inline]
     pub fn set(&mut self, y: usize, x: usize, ch: usize, v: bool) {
-        self.bits[(y * self.w + x) * self.c + ch] = v;
+        let i = self.idx(y, x, ch);
+        self.plane.set(i, v);
     }
 
     pub fn len(&self) -> usize {
-        self.bits.len()
+        self.plane.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.bits.is_empty()
+        self.plane.is_empty()
+    }
+
+    /// Number of set bits (one word-popcount pass, no iteration).
+    pub fn count_ones(&self) -> usize {
+        self.plane.count_ones()
     }
 
     /// Fraction of set bits.
     pub fn density(&self) -> f64 {
-        if self.bits.is_empty() {
-            return 0.0;
-        }
-        self.bits.iter().filter(|&&b| b).count() as f64 / self.bits.len() as f64
+        self.plane.density()
+    }
+
+    /// The packed backing plane.
+    pub fn plane(&self) -> &SpikePlane {
+        &self.plane
+    }
+
+    /// Consume into the packed backing plane (e.g. to feed an FC layer
+    /// after the final pool without a boolean detour).
+    pub fn into_plane(self) -> SpikePlane {
+        self.plane
+    }
+
+    /// Rebuild from a packed plane of matching volume.
+    pub fn from_plane(h: usize, w: usize, c: usize, plane: SpikePlane) -> Self {
+        assert_eq!(plane.len(), h * w * c);
+        Self { h, w, c, plane }
     }
 
     /// 2×2 max-pool (binary OR — exact on spike maps), VALID padding.
@@ -66,12 +322,17 @@ impl SpikeMap {
 
     /// Flatten to a plain spike vector (row-major, channel innermost).
     pub fn flatten(&self) -> Vec<bool> {
-        self.bits.clone()
+        self.plane.to_bools()
     }
 
     pub fn from_flat(h: usize, w: usize, c: usize, bits: Vec<bool>) -> Self {
         assert_eq!(bits.len(), h * w * c);
-        Self { h, w, c, bits }
+        Self {
+            h,
+            w,
+            c,
+            plane: SpikePlane::from_bools(&bits),
+        }
     }
 }
 
@@ -113,6 +374,54 @@ pub fn spike_union(
     total
 }
 
+/// Plane-native fused spike union — the same contract as
+/// [`spike_union`], but word-at-a-time: lanes are OR-ed 64 rows per
+/// op, spike totals come from popcounts, and only rows set in the
+/// union word are visited (via `trailing_zeros`). Cost scales with
+/// the number of active spikes, not the fan-in.
+pub fn spike_union_planes(
+    batch: &[SpikePlane],
+    active: &[bool],
+    out: &mut Vec<(usize, u32)>,
+) -> usize {
+    assert!(batch.len() <= 32, "lane mask is 32 bits");
+    assert_eq!(batch.len(), active.len());
+    out.clear();
+    let n_words = batch
+        .iter()
+        .zip(active)
+        .filter(|&(_, &a)| a)
+        .map(|(p, _)| p.words.len())
+        .max()
+        .unwrap_or(0);
+    let mut total = 0usize;
+    let mut lane_words = [0u64; 32];
+    for wi in 0..n_words {
+        let mut union = 0u64;
+        for (b, (p, &a)) in batch.iter().zip(active).enumerate() {
+            let w = if a {
+                p.words.get(wi).copied().unwrap_or(0)
+            } else {
+                0
+            };
+            lane_words[b] = w;
+            union |= w;
+            total += w.count_ones() as usize;
+        }
+        let mut u = union;
+        while u != 0 {
+            let bit = u.trailing_zeros() as usize;
+            u &= u - 1;
+            let mut mask = 0u32;
+            for (b, lw) in lane_words[..batch.len()].iter().enumerate() {
+                mask |= (((lw >> bit) & 1) as u32) << b;
+            }
+            out.push(((wi << 6) | bit, mask));
+        }
+    }
+    total
+}
+
 /// Accumulates per-layer per-timestep spike statistics across a run —
 /// the data behind Fig 11(a).
 #[derive(Clone, Debug)]
@@ -140,6 +449,12 @@ impl SparsityTracker {
         let t = t % self.timesteps;
         self.spikes[layer][t] += spikes.iter().filter(|&&s| s).count() as u64;
         self.total[layer][t] += spikes.len() as u64;
+    }
+
+    /// Record one layer's packed spike plane at timestep `t` — one
+    /// popcount pass, the batch paths' accounting hook.
+    pub fn record_plane(&mut self, layer: usize, t: usize, spikes: &SpikePlane) {
+        self.record_counts(layer, t, spikes.count_ones() as u64, spikes.len() as u64);
     }
 
     /// Record from a count (for map-shaped layers).
@@ -197,6 +512,7 @@ impl SparsityTracker {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bits::XorShiftRng;
 
     #[test]
     fn spikemap_get_set_density() {
@@ -206,6 +522,7 @@ mod tests {
         assert!(m.get(0, 0, 0));
         assert!(!m.get(0, 0, 1));
         assert!((m.density() - 2.0 / 32.0).abs() < 1e-12);
+        assert_eq!(m.count_ones(), 2);
     }
 
     #[test]
@@ -238,6 +555,88 @@ mod tests {
     }
 
     #[test]
+    fn plane_bools_roundtrip_and_counts() {
+        let mut rng = XorShiftRng::new(11);
+        for len in [0usize, 1, 63, 64, 65, 100, 128, 200] {
+            let bits: Vec<bool> = (0..len).map(|_| rng.gen_bool(0.3)).collect();
+            let p = SpikePlane::from_bools(&bits);
+            assert_eq!(p.len(), len);
+            assert_eq!(p.to_bools(), bits);
+            assert_eq!(
+                p.count_ones(),
+                bits.iter().filter(|&&b| b).count(),
+                "len={len}"
+            );
+            let ones: Vec<usize> = p.iter_ones().collect();
+            let want: Vec<usize> = bits
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b)
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(ones, want, "len={len}");
+            for (i, &b) in bits.iter().enumerate() {
+                assert_eq!(p.get(i), b);
+            }
+        }
+    }
+
+    #[test]
+    fn plane_set_clear_reset() {
+        let mut p = SpikePlane::new(70);
+        p.set(0, true);
+        p.set(69, true);
+        assert_eq!(p.count_ones(), 2);
+        p.set(0, false);
+        assert_eq!(p.iter_ones().collect::<Vec<_>>(), vec![69]);
+        p.clear();
+        assert_eq!(p.count_ones(), 0);
+        assert_eq!(p.len(), 70);
+        p.reset(3);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.count_ones(), 0);
+    }
+
+    #[test]
+    fn plane_or_assign_and_from_flags() {
+        let a = SpikePlane::from_bools(&[true, false, true, false]);
+        let mut b = SpikePlane::from_bools(&[false, false, true, true]);
+        b.or_assign(&a);
+        assert_eq!(b.to_bools(), vec![true, false, true, true]);
+        let f = SpikePlane::from_flags([1.0f32, 0.0, -2.0, 0.0].iter().map(|&x| x != 0.0));
+        assert_eq!(f.len(), 4);
+        assert_eq!(f.count_ones(), 2);
+    }
+
+    /// The allocation-free flag counter must agree with a direct count
+    /// across word boundaries.
+    #[test]
+    fn count_flags_matches_direct_count() {
+        let mut rng = XorShiftRng::new(31);
+        for len in [0usize, 1, 63, 64, 65, 129, 200] {
+            let bits: Vec<bool> = (0..len).map(|_| rng.gen_bool(0.4)).collect();
+            assert_eq!(
+                SpikePlane::count_flags(bits.iter().copied()),
+                bits.iter().filter(|&&b| b).count(),
+                "len={len}"
+            );
+        }
+    }
+
+    #[test]
+    fn plane_bits_at_spans_words() {
+        let mut bits = vec![false; 130];
+        bits[60] = true;
+        bits[64] = true;
+        bits[70] = true;
+        let p = SpikePlane::from_bools(&bits);
+        // run of 14 starting at 58: bits 60, 64, 70 → offsets 2, 6, 12
+        assert_eq!(p.bits_at(58, 14), (1 << 2) | (1 << 6) | (1 << 12));
+        assert_eq!(p.bits_at(64, 7), 1 | (1 << 6));
+        assert_eq!(p.bits_at(0, 64), 1 << 60);
+    }
+
+    #[test]
     fn sparsity_tracker_math() {
         let mut t = SparsityTracker::new(2, 3);
         t.record(0, 0, &[true, false, false, false]); // 25% firing
@@ -250,6 +649,16 @@ mod tests {
         let table = t.table();
         assert_eq!(table.len(), 2);
         assert_eq!(table[0].len(), 3);
+    }
+
+    #[test]
+    fn tracker_record_plane_matches_record() {
+        let bits = [true, false, true, false, false];
+        let mut a = SparsityTracker::new(1, 4);
+        a.record(0, 1, &bits);
+        let mut b = SparsityTracker::new(1, 4);
+        b.record_plane(0, 1, &SpikePlane::from_bools(&bits));
+        assert_eq!(a.sparsity(0, 1), b.sparsity(0, 1));
     }
 
     #[test]
@@ -277,6 +686,37 @@ mod tests {
     fn spike_union_empty_batch() {
         let mut rows = vec![(9usize, 1u32)];
         assert_eq!(spike_union(&[], &[], &mut rows), 0);
+        assert!(rows.is_empty());
+    }
+
+    /// The plane union must agree with the boolean reference on random
+    /// batches across word boundaries and activity patterns.
+    #[test]
+    fn spike_union_planes_matches_bool_reference() {
+        let mut rng = XorShiftRng::new(2025);
+        for &fan_in in &[1usize, 17, 64, 65, 128, 190] {
+            for &lanes in &[1usize, 2, 7, 13] {
+                let bools: Vec<Vec<bool>> = (0..lanes)
+                    .map(|_| (0..fan_in).map(|_| rng.gen_bool(0.2)).collect())
+                    .collect();
+                let active: Vec<bool> = (0..lanes).map(|_| rng.gen_bool(0.8)).collect();
+                let planes: Vec<SpikePlane> =
+                    bools.iter().map(|b| SpikePlane::from_bools(b)).collect();
+                let refs: Vec<&[bool]> = bools.iter().map(|b| b.as_slice()).collect();
+                let mut want_rows = Vec::new();
+                let want_total = spike_union(&refs, &active, &mut want_rows);
+                let mut got_rows = Vec::new();
+                let got_total = spike_union_planes(&planes, &active, &mut got_rows);
+                assert_eq!(got_total, want_total, "fan_in={fan_in} lanes={lanes}");
+                assert_eq!(got_rows, want_rows, "fan_in={fan_in} lanes={lanes}");
+            }
+        }
+    }
+
+    #[test]
+    fn spike_union_planes_empty_batch() {
+        let mut rows = vec![(9usize, 1u32)];
+        assert_eq!(spike_union_planes(&[], &[], &mut rows), 0);
         assert!(rows.is_empty());
     }
 

@@ -202,19 +202,19 @@ impl Telemetry {
 
     /// Record the observed input of a request: total units and active
     /// (spiking-relevant) units — non-padding word ids for sentiment,
-    /// nonzero pixels for digits.
+    /// nonzero pixels for digits. Counts come from
+    /// [`WorkloadInput::unit_counts`], which word-packs and popcounts
+    /// the image path's nonzero flags (`SpikePlane::count_flags`)
+    /// rather than branch-counting booleans on every submit.
     pub fn record_input(&self, input: &WorkloadInput) {
-        let (units, active) = match input {
-            WorkloadInput::Words(ids) => (
-                ids.len() as u64,
-                ids.iter().filter(|&&w| w >= 0).count() as u64,
-            ),
-            WorkloadInput::Image { pixels, .. } => (
-                pixels.len() as u64,
-                pixels.iter().filter(|&&p| p != 0.0).count() as u64,
-            ),
-        };
-        let c = self.cell(input.kind());
+        let (units, active) = input.unit_counts();
+        self.record_input_counts(input.kind(), units, active);
+    }
+
+    /// Record precomputed input-sparsity counts (e.g. from a decode
+    /// path that already holds a packed plane).
+    pub fn record_input_counts(&self, kind: WorkloadKind, units: u64, active: u64) {
+        let c = self.cell(kind);
         c.input_units.fetch_add(units, Ordering::Relaxed);
         c.input_active.fetch_add(active, Ordering::Relaxed);
     }
