@@ -2,9 +2,10 @@
 //!
 //! Runs the macro-throughput and sparsity sweeps that gate perf PRs
 //! and (with `--json PATH`) writes the results — req/s, cycles/req,
-//! ns/op per sparsity point, git revision — as JSON. CI runs this on
-//! the synthetic bundles and uploads `BENCH_PR5.json` as an artifact,
-//! so the perf trajectory is tracked from PR 5 onward.
+//! ns/op per sparsity point, streaming-session throughput, git
+//! revision — as JSON. CI runs this on the synthetic bundles and
+//! uploads `BENCH_PR6.json` as an artifact, so the perf trajectory is
+//! tracked from PR 5 onward.
 
 use super::Flags;
 use impulse::bench_harness::{Bencher, Table};
@@ -30,6 +31,14 @@ struct ServePoint {
     batch: usize,
     req_per_s: f64,
     cycles_per_req: f64,
+}
+
+/// One streaming-session measurement (pinned-membrane path).
+struct StreamPoint {
+    workload: &'static str,
+    sparsity: f64,
+    streams_per_s: f64,
+    ns_per_append: f64,
 }
 
 pub fn run(args: &[String]) -> Result<()> {
@@ -189,8 +198,92 @@ pub fn run(args: &[String]) -> Result<()> {
     }
     println!("{}\n", st.render());
 
+    // ---- streaming sessions: the pinned-membrane serve path ----
+    println!("=== streaming sessions (membrane pinned across appends) ===\n");
+    let mut streaming = Vec::new();
+    let mut tt = Table::new(&["workload", "sparsity", "streams/s", "ns/append"]);
+    {
+        // sentiment: 6-word sessions, then steady-state single-word
+        // appends on one long-lived stream (word inputs are dense —
+        // sparsity 0)
+        let session_ids: Vec<i64> = (0..6).map(|j| (j * 7) as i64 % vocab).collect();
+        let mut snet = SentimentNetwork::from_artifacts(&a, MacroConfig::fast())?;
+        let r = b
+            .bench("sentiment stream session", 1, || {
+                snet.begin_stream().unwrap();
+                for &w in &session_ids {
+                    snet.stream_words(&[w]).unwrap();
+                }
+                snet.stream_read_out();
+            })
+            .clone();
+        let streams_per_s = r.throughput_per_s;
+        snet.begin_stream()?;
+        let ra = b
+            .bench("sentiment stream append", 1, || {
+                snet.stream_words(&[3]).unwrap();
+            })
+            .clone();
+        let ns_per_append = ra.median.as_secs_f64() * 1e9;
+        tt.row(&[
+            "sentiment".into(),
+            "0.00".into(),
+            format!("{streams_per_s:.1}"),
+            format!("{ns_per_append:.0}"),
+        ]);
+        streaming.push(StreamPoint {
+            workload: "sentiment",
+            sparsity: 0.0,
+            streams_per_s,
+            ns_per_append,
+        });
+    }
+    if !flags.has("quick") {
+        // digits: one image frame per append at 85% pixel sparsity —
+        // the paper's operating point for the energy claims
+        let da = if artifacts_available() {
+            DigitsArtifacts::load(artifacts_dir())?
+        } else {
+            DigitsArtifacts::synthetic(2024)
+        };
+        let frame: Vec<f32> = (0..28 * 28)
+            .map(|i| if (i * 13) % 100 < 15 { 0.8 } else { 0.0 })
+            .collect();
+        let mut dnet = DigitsNetwork::from_artifacts(&da, MacroConfig::fast())?;
+        let r = b
+            .bench("digits stream session", 1, || {
+                dnet.begin_stream().unwrap();
+                dnet.stream_image_step(&frame).unwrap();
+                dnet.stream_image_step(&frame).unwrap();
+                dnet.stream_read_out().unwrap();
+            })
+            .clone();
+        let streams_per_s = r.throughput_per_s;
+        dnet.begin_stream()?;
+        dnet.stream_image_step(&frame)?; // prime the frame cache
+        let ra = b
+            .bench("digits stream append", 1, || {
+                dnet.stream_image_step(&frame).unwrap();
+            })
+            .clone();
+        let ns_per_append = ra.median.as_secs_f64() * 1e9;
+        tt.row(&[
+            "digits".into(),
+            "0.85".into(),
+            format!("{streams_per_s:.1}"),
+            format!("{ns_per_append:.0}"),
+        ]);
+        streaming.push(StreamPoint {
+            workload: "digits",
+            sparsity: 0.85,
+            streams_per_s,
+            ns_per_append,
+        });
+    }
+    println!("{}\n", tt.render());
+
     if let Some(path) = flags.get("json") {
-        let json = render_json(&sweep, &serving);
+        let json = render_json(&sweep, &serving, &streaming);
         std::fs::write(path, &json)?;
         println!("wrote {path}");
     }
@@ -199,7 +292,7 @@ pub fn run(args: &[String]) -> Result<()> {
 
 /// Hand-rolled JSON (no serde in the offline build) — flat schema, no
 /// string content beyond the git revision.
-fn render_json(sweep: &[SweepPoint], serving: &[ServePoint]) -> String {
+fn render_json(sweep: &[SweepPoint], serving: &[ServePoint], streaming: &[StreamPoint]) -> String {
     let mut out = String::from("{\n");
     out.push_str("  \"schema\": \"impulse-bench-v1\",\n");
     out.push_str(&format!("  \"git_rev\": \"{}\",\n", git_rev()));
@@ -226,6 +319,19 @@ fn render_json(sweep: &[SweepPoint], serving: &[ServePoint]) -> String {
             p.req_per_s,
             p.cycles_per_req,
             if i + 1 < serving.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"streaming\": [\n");
+    for (i, p) in streaming.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"sparsity\": {:.2}, \"streams_per_s\": {:.2}, \
+             \"ns_per_append\": {:.1}}}{}\n",
+            p.workload,
+            p.sparsity,
+            p.streams_per_s,
+            p.ns_per_append,
+            if i + 1 < streaming.len() { "," } else { "" }
         ));
     }
     out.push_str("  ]\n}\n");

@@ -1,28 +1,47 @@
 //! `impulse infer` — classify one review through the macro pool.
+//!
+//! `--stream` switches to the session-pinned streaming path: the
+//! review is appended word-by-word over the framed protocol to a
+//! server that keeps the membrane potentials pinned between appends
+//! (an ephemeral in-process one by default, or `--addr <host:port>`
+//! for a running `impulse serve --listen`). The final prediction is
+//! bit-identical to the one-shot path on the same ids.
 
 use super::Flags;
+use impulse::coordinator::WorkloadInput;
 use impulse::data::{artifacts_dir, SentimentArtifacts};
 use impulse::energy::EnergyModel;
 use impulse::metrics::eng;
+use impulse::serve::{serve_tcp, FrameClient, ServeCore, TcpServeHandle, CAP_BACKPRESSURE};
 use impulse::snn::SentimentNetwork;
 use impulse::Result;
+use std::sync::Arc;
+use std::time::Duration;
 
-pub fn run(args: &[String]) -> Result<()> {
-    let flags = Flags::parse(args);
-    let cfg = super::run_config(&flags)?;
-    let a = SentimentArtifacts::load(artifacts_dir())?;
-    let mut net = SentimentNetwork::from_artifacts(&a, cfg.macro_config())?;
-
-    let word_ids: Vec<i64> = if let Some(words) = flags.get("words") {
+/// The review to classify: explicit `--words`, or test sample
+/// `--sample N` (default 0).
+fn review_ids(flags: &Flags, a: &SentimentArtifacts) -> Result<Vec<i64>> {
+    if let Some(words) = flags.get("words") {
         words
             .split_whitespace()
             .map(|w| w.parse::<i64>().map_err(|e| anyhow::anyhow!("bad id '{w}': {e}")))
-            .collect::<Result<_>>()?
+            .collect::<Result<_>>()
     } else {
         let n = flags.get_usize("sample").unwrap_or(0);
         anyhow::ensure!(n < a.test_seqs.len(), "sample {n} out of range");
-        a.test_seqs[n].clone()
-    };
+        Ok(a.test_seqs[n].clone())
+    }
+}
+
+pub fn run(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args);
+    if flags.has("stream") {
+        return run_stream(&flags);
+    }
+    let cfg = super::run_config(&flags)?;
+    let a = SentimentArtifacts::load(artifacts_dir())?;
+    let mut net = SentimentNetwork::from_artifacts(&a, cfg.macro_config())?;
+    let word_ids = review_ids(&flags, &a)?;
 
     let r = net.run_review(&word_ids)?;
     println!("prediction : {}", if r.pred == 1 { "POSITIVE" } else { "NEGATIVE" });
@@ -40,6 +59,68 @@ pub fn run(args: &[String]) -> Result<()> {
     );
     if let Some(n) = flags.get_usize("sample") {
         println!("label      : {}", a.test_labels[n]);
+    }
+    Ok(())
+}
+
+/// `impulse infer --stream` — append the review word-by-word to a
+/// pinned streaming session and read the running prediction out after
+/// every chunk.
+fn run_stream(flags: &Flags) -> Result<()> {
+    let cfg = super::run_config(flags)?;
+    let a = Arc::new(SentimentArtifacts::load(artifacts_dir())?);
+    let word_ids = review_ids(flags, &a)?;
+    anyhow::ensure!(!word_ids.is_empty(), "nothing to stream");
+
+    // --addr streams against a running server; otherwise spin an
+    // ephemeral in-process one on a loopback port
+    let mut local: Option<(Arc<ServeCore>, TcpServeHandle)> = None;
+    let addr = match flags.get("addr") {
+        Some(addr) => addr.to_string(),
+        None => {
+            let mac = cfg.macro_config();
+            let vocab = a.emb_q.len() as i64;
+            let a2 = Arc::clone(&a);
+            let core = Arc::new(ServeCore::start_with(cfg.server_options(), vocab, move || {
+                SentimentNetwork::from_artifacts(&a2, mac)
+            })?);
+            let handle = serve_tcp("127.0.0.1:0", Arc::clone(&core))?;
+            let addr = handle.local_addr().to_string();
+            local = Some((core, handle));
+            addr
+        }
+    };
+
+    let mut client = FrameClient::connect(addr.as_str())?;
+    let (ver, caps) = client.hello_with_caps(CAP_BACKPRESSURE)?;
+    if caps & CAP_BACKPRESSURE != 0 {
+        // back off between appends when the server signals soft-limit
+        client.enable_pacing(Duration::from_micros(500), Duration::from_millis(50));
+    }
+    let h = client.stream_open()?;
+    println!("stream     : id {} on lane {} of {addr} (protocol v{ver})", h.id(), h.lane());
+    for (i, &wid) in word_ids.iter().enumerate() {
+        let ack = client.stream_append(&h, &WorkloadInput::Words(vec![wid]))?;
+        let out = client.stream_read_out(&h)?;
+        println!(
+            "word {i:>3} id {wid:>6} → {} v_out={} cycles={}",
+            if out.pred == 1 { "POSITIVE" } else { "NEGATIVE" },
+            out.v_out,
+            ack.cycles,
+        );
+    }
+    let fin = client.stream_close(&h)?;
+    println!(
+        "final      : {} cycles across {} words (membrane pinned server-side)",
+        fin.cycles,
+        word_ids.len(),
+    );
+    if let Some(n) = flags.get_usize("sample") {
+        println!("label      : {}", a.test_labels[n]);
+    }
+    if let Some((core, handle)) = local {
+        handle.stop();
+        core.shutdown();
     }
     Ok(())
 }

@@ -94,6 +94,12 @@ pub fn run_config(flags: &Flags) -> Result<RunConfig> {
     if let Some(n) = flags.get_usize("queue-soft-limit") {
         cfg.queue_soft_limit = n as u64;
     }
+    if let Some(n) = flags.get_usize("max-streams") {
+        cfg.max_streams = n.max(1);
+    }
+    if let Some(n) = flags.get_usize("stream-ttl-s") {
+        cfg.stream_ttl_s = (n as u64).max(1);
+    }
     if let Some(n) = flags.get_usize("max") {
         cfg.max_samples = n;
     }

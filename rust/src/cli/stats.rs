@@ -42,7 +42,7 @@ pub fn run(args: &[String]) -> Result<()> {
     let mut client = FrameClient::connect(addr.as_str())?;
     client.set_read_timeout(Some(timeout))?;
     let (version, caps) = client.hello_with_caps(CAP_BACKPRESSURE)?;
-    let (snap, frame_flags) = client.fetch_stats(1)?;
+    let (snap, frame_flags) = client.stats()?;
     client.finish_writes().ok();
 
     println!("impulse stats — tcp://{addr} (protocol v{version}, caps {caps:#04x})");

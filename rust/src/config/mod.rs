@@ -43,6 +43,11 @@ pub struct RunConfig {
     /// soft-limit bit in response flags and `StatsResponse`); 0
     /// signals unconditionally (maintenance/drain mode).
     pub queue_soft_limit: u64,
+    /// Most streaming sessions `impulse serve` pins at once; opens
+    /// past the cap are rejected with `StreamLimit`.
+    pub max_streams: usize,
+    /// Idle seconds before a streaming session is TTL-evicted.
+    pub stream_ttl_s: u64,
     /// Samples to evaluate in e2e runs (0 = all).
     pub max_samples: usize,
     /// Timesteps per word (sentiment) / per image (digits).
@@ -67,6 +72,8 @@ impl Default for RunConfig {
             listen: None,
             metrics_listen: None,
             queue_soft_limit: crate::telemetry::DEFAULT_QUEUE_SOFT_LIMIT,
+            max_streams: 8,
+            stream_ttl_s: 120,
             max_samples: 0,
             timesteps: 10,
         }
@@ -132,6 +139,12 @@ impl RunConfig {
         if let Some(v) = doc.get_i64("run", "queue_soft_limit") {
             self.queue_soft_limit = v.max(0) as u64;
         }
+        if let Some(v) = doc.get_i64("run", "max_streams") {
+            self.max_streams = v.max(1) as usize;
+        }
+        if let Some(v) = doc.get_i64("run", "stream_ttl_s") {
+            self.stream_ttl_s = v.max(1) as u64;
+        }
         if let Some(v) = doc.get_i64("run", "max_samples") {
             self.max_samples = v.max(0) as usize;
         }
@@ -159,6 +172,8 @@ impl RunConfig {
             batch_deadline: std::time::Duration::from_micros(self.batch_deadline_us),
             pipeline: self.pipeline,
             adaptive: self.adaptive,
+            max_streams: self.max_streams,
+            stream_ttl: std::time::Duration::from_secs(self.stream_ttl_s),
             ..crate::coordinator::ServerOptions::default()
         }
     }
@@ -205,6 +220,8 @@ mod tests {
             listen = "127.0.0.1:7878"
             metrics_listen = "127.0.0.1:9200"
             queue_soft_limit = 64
+            max_streams = 3
+            stream_ttl_s = 15
             max_samples = 100
             timesteps = 5
             "#,
@@ -224,6 +241,8 @@ mod tests {
         assert_eq!(c.listen.as_deref(), Some("127.0.0.1:7878"));
         assert_eq!(c.metrics_listen.as_deref(), Some("127.0.0.1:9200"));
         assert_eq!(c.queue_soft_limit, 64);
+        assert_eq!(c.max_streams, 3);
+        assert_eq!(c.stream_ttl_s, 15);
         assert_eq!(c.max_samples, 100);
         assert_eq!(c.timesteps, 5);
         let t = c.telemetry_config();
@@ -236,6 +255,8 @@ mod tests {
         assert_eq!(opts.batch_deadline, std::time::Duration::from_micros(500));
         assert!(opts.pipeline);
         assert!(opts.adaptive);
+        assert_eq!(opts.max_streams, 3);
+        assert_eq!(opts.stream_ttl, std::time::Duration::from_secs(15));
     }
 
     #[test]

@@ -111,6 +111,13 @@ pub struct ServerOptions {
     /// `None` (the default) records nothing; `serve::ServeCore`
     /// always wires one in.
     pub telemetry: Option<Arc<Telemetry>>,
+    /// Most streaming sessions (`serve::StreamTable`) live at once —
+    /// each pins an engine replica's membrane state, so the cap bounds
+    /// pinned memory. Opens past it are rejected with `StreamLimit`.
+    pub max_streams: usize,
+    /// Idle time after which a streaming session is evicted (swept by
+    /// the TCP accept loop and lazily by every stream operation).
+    pub stream_ttl: Duration,
 }
 
 impl ServerOptions {
@@ -137,6 +144,8 @@ impl Default for ServerOptions {
             adaptive: false,
             adaptive_cap: crate::macro_sim::MAX_FUSED_LANES,
             telemetry: None,
+            max_streams: 8,
+            stream_ttl: Duration::from_secs(120),
         }
     }
 }

@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 
 /// One request's input, workload-tagged. The coordinator treats it as
 /// opaque; workloads reject kinds they cannot serve.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum WorkloadInput {
     /// A word-id sequence (sentiment; ids < 0 are padding).
     Words(Vec<i64>),
@@ -69,7 +69,7 @@ pub enum WorkloadKind {
 }
 
 /// One request's result in workload-neutral form.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct WorkloadOutput {
     /// Predicted label (sentiment: 1 = positive; digits: 0–9).
     pub pred: u8,
@@ -114,6 +114,35 @@ pub trait Workload: Send + 'static {
     /// baseline, so a between-runs reset never skews it.
     fn take_instr_histogram(&mut self) -> Option<BTreeMap<InstructionKind, u64>> {
         None
+    }
+
+    /// Which workload family this engine serves — picks the response
+    /// wire encoding for stream read-outs.
+    fn kind(&self) -> WorkloadKind;
+
+    /// Begin a pinned-membrane streaming session: reset layer state
+    /// and zero the session's cycle attribution. A streaming engine
+    /// serves one session at a time — the serve-side stream table
+    /// gives each stream its own engine lane.
+    fn begin_stream(&mut self) -> Result<()> {
+        anyhow::bail!("this workload does not support streaming sessions")
+    }
+
+    /// Integrate one chunk into the pinned membrane state: word ids
+    /// advance a sentiment stream word-by-word, one image frame is one
+    /// membrane timestep for digits. Returns the session's cumulative
+    /// macro cycles since [`Workload::begin_stream`].
+    fn step_stream(&mut self, chunk: &WorkloadInput) -> Result<u64> {
+        let _ = chunk;
+        anyhow::bail!("this workload does not support streaming sessions")
+    }
+
+    /// Read the current prediction out of the pinned membrane state
+    /// without ending the session. Chunked [`Workload::step_stream`]s
+    /// followed by one `read_out` are bit-identical to
+    /// [`Workload::run_one`] on the concatenated input.
+    fn read_out(&mut self) -> Result<WorkloadOutput> {
+        anyhow::bail!("this workload does not support streaming sessions")
     }
 }
 
@@ -171,6 +200,23 @@ impl Workload for SentimentNetwork {
         self.reset_counters();
         Some(h)
     }
+
+    fn kind(&self) -> WorkloadKind {
+        WorkloadKind::Sentiment
+    }
+
+    fn begin_stream(&mut self) -> Result<()> {
+        SentimentNetwork::begin_stream(self)
+    }
+
+    fn step_stream(&mut self, chunk: &WorkloadInput) -> Result<u64> {
+        self.stream_words(want_words(chunk)?)
+    }
+
+    fn read_out(&mut self) -> Result<WorkloadOutput> {
+        let (pred, v_out, cycles) = self.stream_read_out();
+        Ok(WorkloadOutput { pred, v_out, v_all: vec![v_out], cycles })
+    }
 }
 
 fn want_image(input: &WorkloadInput) -> Result<&[f32]> {
@@ -227,6 +273,24 @@ impl Workload for DigitsNetwork {
         let h = self.stats().histogram;
         self.reset_counters();
         Some(h)
+    }
+
+    fn kind(&self) -> WorkloadKind {
+        WorkloadKind::Digits
+    }
+
+    fn begin_stream(&mut self) -> Result<()> {
+        DigitsNetwork::begin_stream(self)
+    }
+
+    fn step_stream(&mut self, chunk: &WorkloadInput) -> Result<u64> {
+        self.stream_image_step(want_image(chunk)?)
+    }
+
+    fn read_out(&mut self) -> Result<WorkloadOutput> {
+        let (pred, v_all, cycles) = self.stream_read_out()?;
+        let v_out = v_all[pred as usize];
+        Ok(WorkloadOutput { pred, v_out, v_all, cycles })
     }
 }
 

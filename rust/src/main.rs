@@ -8,8 +8,10 @@
 //! Subcommands:
 //!   report   --fig {2|6|7|8|9a|11b} | --table 1   regenerate paper artifacts
 //!   infer    --text "w1 w2 …" | --sample N        classify via the macro pool
+//!            [--stream [--addr ADDR]]             …or word-by-word over a
+//!                                                 pinned streaming session
 //!   eval     [--max N] [--xla-check]              full test-set evaluation
-//!   bench    [--json PATH] [--quick]              perf sweeps → BENCH_PR5.json
+//!   bench    [--json PATH] [--quick]              perf sweeps → BENCH_PR6.json
 //!   serve    [--listen ADDR | --stdio]            binary-framed TCP server
 //!            [--workers N] [--batch B]            (docs/PROTOCOL.md) or the
 //!            [--batch-deadline-us U]              stdin/stdout line loop
@@ -69,12 +71,17 @@ COMMANDS:
     report --table 1                regenerate Table I
     infer --sample N                classify test review N
     infer --words "id id id"        classify a word-id sequence
+    infer --stream [--addr ADDR]    stream the review word-by-word over a
+                                    session-pinned membrane (StreamOpen/
+                                    StreamAppend frames; ephemeral local
+                                    server unless --addr targets a running
+                                    impulse serve --listen)
     eval [--max N] [--xla-check]    evaluate the test set on the macro pool
-    bench [--json PATH] [--quick]   macro-throughput + sparsity sweeps;
-                                    --json writes machine-readable
+    bench [--json PATH] [--quick]   macro-throughput + sparsity + streaming
+                                    sweeps; --json writes machine-readable
                                     results (req/s, cycles/req, ns/op,
-                                    git rev) for the perf trajectory
-                                    (BENCH_PR5.json)
+                                    streams/s, git rev) for the perf
+                                    trajectory (BENCH_PR6.json)
     eval digits [--max N] [--batch B] [--adaptive]
                                     evaluate the digits conv network on
                                     fused batch lanes (the workload-
@@ -83,6 +90,7 @@ COMMANDS:
           [--workers N] [--batch B]
           [--batch-deadline-us U] [--adaptive] [--pipeline]
           [--metrics-listen ADDR] [--queue-soft-limit N]
+          [--max-streams N] [--stream-ttl-s S]
                                     inference server: --listen serves the
                                     length-prefixed binary frame protocol
                                     (docs/PROTOCOL.md) to concurrent TCP
@@ -97,7 +105,10 @@ COMMANDS:
                                     telemetry as Prometheus text;
                                     --queue-soft-limit sets the depth at
                                     which responses advertise
-                                    backpressure (0 = always, for drains)
+                                    backpressure (0 = always, for drains);
+                                    --max-streams caps concurrent pinned
+                                    streaming sessions, --stream-ttl-s
+                                    their idle eviction time
     stats ADDR                      fetch a running server's live
                                     telemetry (StatsRequest over the
                                     frame protocol): requests, energy,

@@ -110,6 +110,20 @@ pub enum PayloadType {
     /// Server → client: telemetry snapshot (see `docs/PROTOCOL.md`
     /// §4.9).
     StatsResponse,
+    /// Client → server: open a streaming session pinned to this
+    /// frame's request id (empty payload; `docs/PROTOCOL.md` §4.10).
+    StreamOpen,
+    /// Client → server: append one input chunk (words or an image
+    /// frame) to an open stream (§4.11).
+    StreamAppend,
+    /// Client → server: read the stream's running prediction without
+    /// disturbing its pinned membrane state (§4.12).
+    StreamReadOut,
+    /// Client → server: close a stream and free its lane (§4.13).
+    StreamClose,
+    /// Server → client: acknowledgement of a stream open/append/close
+    /// (op, stream id, lane, accumulated cycles — §4.14).
+    StreamAck,
     /// Server → client: request- or connection-level failure.
     Error,
 }
@@ -126,6 +140,11 @@ impl PayloadType {
             PayloadType::DigitsInferResponse => 0x13,
             PayloadType::StatsRequest => 0x14,
             PayloadType::StatsResponse => 0x15,
+            PayloadType::StreamOpen => 0x16,
+            PayloadType::StreamAppend => 0x17,
+            PayloadType::StreamReadOut => 0x18,
+            PayloadType::StreamClose => 0x19,
+            PayloadType::StreamAck => 0x1A,
             PayloadType::Error => 0x7F,
         }
     }
@@ -141,6 +160,11 @@ impl PayloadType {
             0x13 => Some(PayloadType::DigitsInferResponse),
             0x14 => Some(PayloadType::StatsRequest),
             0x15 => Some(PayloadType::StatsResponse),
+            0x16 => Some(PayloadType::StreamOpen),
+            0x17 => Some(PayloadType::StreamAppend),
+            0x18 => Some(PayloadType::StreamReadOut),
+            0x19 => Some(PayloadType::StreamClose),
+            0x1A => Some(PayloadType::StreamAck),
             0x7F => Some(PayloadType::Error),
             _ => None,
         }
@@ -173,6 +197,13 @@ pub enum ErrorCode {
     /// word ids — the u16 count field's ceiling). Rejected instead of
     /// silently truncating into a wrong-but-valid frame.
     RequestTooLarge,
+    /// The referenced stream id is unknown on this connection — never
+    /// opened, already closed, or evicted by the TTL sweep. The
+    /// connection stays usable.
+    StreamExpired,
+    /// The server's stream table is full (`--max-streams`); the open
+    /// was rejected. The connection stays usable.
+    StreamLimit,
 }
 
 impl ErrorCode {
@@ -189,6 +220,8 @@ impl ErrorCode {
             ErrorCode::EmptyRequest => 8,
             ErrorCode::Internal => 9,
             ErrorCode::RequestTooLarge => 10,
+            ErrorCode::StreamExpired => 11,
+            ErrorCode::StreamLimit => 12,
         }
     }
 
@@ -205,6 +238,8 @@ impl ErrorCode {
             8 => Some(ErrorCode::EmptyRequest),
             9 => Some(ErrorCode::Internal),
             10 => Some(ErrorCode::RequestTooLarge),
+            11 => Some(ErrorCode::StreamExpired),
+            12 => Some(ErrorCode::StreamLimit),
             _ => None,
         }
     }

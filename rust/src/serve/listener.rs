@@ -17,17 +17,18 @@
 
 use super::frame::{encode_backpressure, ErrorCode, Frame, FrameReader, PayloadType, WireError};
 use super::session::{
-    decode_digits_request, decode_infer_request, encode_stats_response, error_frame, negotiate,
-    response_frame, ServeCore, CAP_BACKPRESSURE,
+    decode_digits_request, decode_infer_request, decode_stream_append, decode_stream_ref,
+    encode_stats_response, encode_stream_ack, error_frame, negotiate, response_frame, ServeCore,
+    WireDigitsResponse, WirePayload, WireResponse, CAP_BACKPRESSURE,
 };
-use crate::coordinator::WorkloadInput;
+use crate::coordinator::{WorkloadInput, WorkloadKind};
 use crate::telemetry::{Telemetry, Transport};
 use crate::Result;
 use std::io::ErrorKind;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How long blocking reads and response waits poll before rechecking
 /// stop/drain conditions.
@@ -110,6 +111,9 @@ pub fn serve_tcp(addr: &str, core: Arc<ServeCore>) -> Result<TcpServeHandle> {
                         conns.retain(|h| !h.is_finished());
                     }
                     Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        // idle tick: reap streaming sessions whose
+                        // clients vanished without closing
+                        core.streams().sweep();
                         std::thread::sleep(Duration::from_millis(20));
                     }
                     Err(e) => {
@@ -121,6 +125,8 @@ pub fn serve_tcp(addr: &str, core: Arc<ServeCore>) -> Result<TcpServeHandle> {
             for c in conns {
                 let _ = c.join();
             }
+            // final sweep so a stop/drain never strands pinned lanes
+            core.streams().sweep();
         })
     };
     Ok(TcpServeHandle { addr: local, stop, accept: Some(accept) })
@@ -151,6 +157,8 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
     stream.set_read_timeout(Some(POLL))?;
     stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
     let (sender, responses) = core.client()?.split();
+    // stream ids are per-connection: take a connection id for scoping
+    let conn_id = core.next_conn_id();
     let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let done = Arc::new(AtomicBool::new(false));
     let outstanding = Arc::new(AtomicU64::new(0));
@@ -339,11 +347,37 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
                     }
                 }
             }
+            PayloadType::StreamOpen
+            | PayloadType::StreamAppend
+            | PayloadType::StreamReadOut
+            | PayloadType::StreamClose => {
+                if frame.version != negotiated {
+                    let msg = format!(
+                        "frame version {} after negotiating v{negotiated}",
+                        frame.version
+                    );
+                    let _ = write_frame(
+                        &writer,
+                        &error_frame(frame.request_id, ErrorCode::UnsupportedVersion, &msg),
+                    );
+                    continue;
+                }
+                // stream ops bypass the batcher queue (a chunk must
+                // integrate into *its* pinned lane) and are answered
+                // inline; errors keep the connection up
+                let answer = stream_op(core, conn_id, &frame, &tele);
+                if write_frame(&writer, &answer.with_flags(frame_flags(&backpressure, &tele)))
+                    .is_err()
+                {
+                    break;
+                }
+            }
             // Server→client types are invalid from a client.
             PayloadType::HelloAck
             | PayloadType::InferResponse
             | PayloadType::DigitsInferResponse
             | PayloadType::StatsResponse
+            | PayloadType::StreamAck
             | PayloadType::Error => {
                 let _ = write_frame(
                     &writer,
@@ -359,8 +393,96 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
     done.store(true, Ordering::SeqCst);
     drop(sender); // release the submission handle before draining
     let _ = responder.join();
+    // a vanished connection releases its pinned lanes immediately —
+    // no stream outlives its transport
+    core.streams().close_conn(conn_id);
     if let Ok(w) = writer.lock() {
         let _ = w.shutdown(Shutdown::Write);
     }
     Ok(())
+}
+
+/// Answer one stream-payload frame inline against the core's stream
+/// table, scoped to this connection's id. Always produces exactly one
+/// frame (a `StreamAck`, a read-out response, or an `Error`); stream
+/// errors keep the connection up — only this stream dies.
+fn stream_op(core: &ServeCore, conn_id: u64, frame: &Frame, tele: &Telemetry) -> Frame {
+    let id = frame.request_id;
+    let streams = core.streams();
+    match frame.payload_type {
+        PayloadType::StreamOpen => {
+            if !frame.payload.is_empty() {
+                return error_frame(id, ErrorCode::Malformed, "stream open payload must be empty");
+            }
+            // the open frame's request id becomes the stream id
+            match streams.open(conn_id, id) {
+                Ok(ack) => Frame::new(PayloadType::StreamAck, id, encode_stream_ack(&ack)),
+                Err(e) => error_frame(id, e.code, &e.msg),
+            }
+        }
+        PayloadType::StreamAppend => {
+            let (sid, chunk) = match decode_stream_append(&frame.payload) {
+                Ok(v) => v,
+                Err(e) => return error_frame(id, e.code, &e.msg),
+            };
+            let t0 = Instant::now();
+            match streams.append(conn_id, sid, &chunk) {
+                Ok(ack) => {
+                    tele.record_wire(Transport::Tcp, t0.elapsed());
+                    Frame::new(PayloadType::StreamAck, id, encode_stream_ack(&ack))
+                }
+                Err(e) => error_frame(id, e.code, &e.msg),
+            }
+        }
+        PayloadType::StreamReadOut => {
+            let sid = match decode_stream_ref(&frame.payload) {
+                Ok(v) => v,
+                Err(e) => return error_frame(id, e.code, &e.msg),
+            };
+            let t0 = Instant::now();
+            match streams.read_out(conn_id, sid) {
+                Ok((out, kind, _lane)) => {
+                    let latency = t0.elapsed();
+                    tele.record_wire(Transport::Tcp, latency);
+                    let latency_us = u64::try_from(latency.as_micros()).unwrap_or(u64::MAX);
+                    // a read-out answers in the one-shot response
+                    // encoding for its kind: stream-unaware tooling
+                    // can decode it
+                    match kind {
+                        WorkloadKind::Sentiment => WireResponse {
+                            pred: out.pred,
+                            v_out: out.v_out,
+                            cycles: out.cycles,
+                            latency_us,
+                            batch: 1,
+                            worker: 0,
+                        }
+                        .frame(id),
+                        WorkloadKind::Digits => WireDigitsResponse {
+                            pred: out.pred,
+                            v_all: out.v_all,
+                            cycles: out.cycles,
+                            latency_us,
+                            batch: 1,
+                            worker: 0,
+                        }
+                        .frame(id),
+                    }
+                    .expect("stream read-out response encoding is infallible")
+                }
+                Err(e) => error_frame(id, e.code, &e.msg),
+            }
+        }
+        PayloadType::StreamClose => {
+            let sid = match decode_stream_ref(&frame.payload) {
+                Ok(v) => v,
+                Err(e) => return error_frame(id, e.code, &e.msg),
+            };
+            match streams.close(conn_id, sid) {
+                Ok(ack) => Frame::new(PayloadType::StreamAck, id, encode_stream_ack(&ack)),
+                Err(e) => error_frame(id, e.code, &e.msg),
+            }
+        }
+        _ => error_frame(id, ErrorCode::Internal, "not a stream payload"),
+    }
 }

@@ -8,8 +8,12 @@
 //!   framing, incremental [`FrameReader`], error codes.
 //! - [`session`] — the codec-agnostic request path: [`ServeCore`]
 //!   multiplexes many client sessions onto one batcher/worker pool and
-//!   routes each response back to its submitter; payload codecs; a
-//!   reference [`FrameClient`].
+//!   routes each response back to its submitter; payload codecs (the
+//!   [`WirePayload`] trait); a reference [`FrameClient`] with a typed
+//!   `call`/`wait` surface and stream methods.
+//! - [`stream`] — the [`StreamTable`]: membrane state pinned to a
+//!   client stream id across `StreamAppend` frames, with a TTL sweep
+//!   and a max-streams cap.
 //! - [`listener`] — the multi-client TCP accept loop
 //!   ([`serve_tcp`]), one reader + one responder thread per
 //!   connection. Serves `StatsRequest` frames inline from the core's
@@ -34,6 +38,7 @@ pub mod frame;
 pub mod listener;
 pub mod session;
 pub mod signal;
+pub mod stream;
 
 pub use frame::{
     crc32, decode_backpressure, encode_backpressure, Backpressure, Decoded, ErrorCode, Frame,
@@ -43,10 +48,16 @@ pub use frame::{
 pub use listener::{serve_tcp, TcpServeHandle};
 pub use session::{
     decode_digits_request, decode_digits_response, decode_error, decode_infer_request,
-    decode_infer_response, decode_stats_response, encode_digits_request, encode_infer_request,
-    encode_stats_request, encode_stats_response, error_frame, error_payload,
-    hello_caps_payload, hello_payload, negotiate, response_frame, ClientSession, FrameClient,
-    Negotiated, PayloadError, ServeCore, SessionSender, WireDigitsResponse, WireResponse,
-    CAP_BACKPRESSURE, MAX_WORDS_PER_REQUEST, SUPPORTED_CAPS,
+    decode_infer_response, decode_stats_response, decode_stream_ack, decode_stream_append,
+    decode_stream_ref, encode_digits_request, encode_infer_request, encode_stats_request,
+    encode_stats_response, encode_stream_ack, encode_stream_append, encode_stream_ref,
+    error_frame, error_payload, hello_caps_payload, hello_payload, negotiate, response_frame,
+    ClientSession, FrameClient, ImagePayload, Negotiated, Pacer, PayloadError, Pending,
+    ServeCore, ServerError, SessionSender, StreamAppendPayload, StreamClosePayload,
+    StreamHandle, StreamOpenPayload, StreamReadOutPayload, WireDigitsResponse, WirePayload,
+    WireResponse, WireStreamAck, WordsPayload, CAP_BACKPRESSURE, MAX_WORDS_PER_REQUEST,
+    STREAM_KIND_IMAGE, STREAM_KIND_WORDS, STREAM_OP_APPEND, STREAM_OP_CLOSE, STREAM_OP_OPEN,
+    SUPPORTED_CAPS,
 };
 pub use signal::{install_shutdown_handler, shutdown_requested};
+pub use stream::{EngineFactory, StreamError, StreamTable};

@@ -1,0 +1,512 @@
+//! The server-side stream session table: membrane state pinned to a
+//! client stream id.
+//!
+//! A one-shot request carries its whole input and the lane's membrane
+//! potentials die with the response. A *stream* keeps them alive: the
+//! client opens a session, appends input chunks as they arrive (words
+//! for sentiment, image frames for digits), reads predictions out
+//! mid-stream, and closes when done. Between appends the session's
+//! engine — and with it every layer's VMEM contents — stays pinned in
+//! this table, keyed by `(connection id, stream id)`.
+//!
+//! Design points:
+//!
+//! - **One engine per live stream.** Streaming engines are stateful,
+//!   so a stream owns an engine *lane* exclusively until it closes or
+//!   expires. Closed lanes keep their engine pooled for the next open
+//!   ([`Workload::begin_stream`] fully resets it), so steady-state
+//!   traffic never rebuilds a network.
+//! - **Appends compute under the table lock.** Stream traffic bypasses
+//!   the batcher queue (chunks must integrate into *this* lane's
+//!   membrane, not any free lane), and a per-chunk step is micro-
+//!   seconds of SWAR work — a mutex hold that short beats per-stream
+//!   worker threads. Telemetry's queue-depth gauge is untouched for
+//!   the same reason: stream ops never enter the queue.
+//! - **Eviction is lazy plus swept.** Every table op first evicts
+//!   sessions idle past the TTL, and the TCP accept loop calls
+//!   [`StreamTable::sweep`] on its idle ticks so abandoned sessions
+//!   are reaped even when no other client is talking — including
+//!   during a SIGTERM drain. A capped session count bounds pinned
+//!   memory; opens past the cap are rejected with
+//!   [`ErrorCode::StreamLimit`].
+
+use super::frame::ErrorCode;
+use super::session::{WireStreamAck, STREAM_OP_APPEND, STREAM_OP_CLOSE, STREAM_OP_OPEN};
+use crate::coordinator::{Workload, WorkloadInput, WorkloadKind, WorkloadOutput};
+use crate::telemetry::Telemetry;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Builds a fresh streaming engine for a lane (the serve core wraps
+/// its workload factory into this form).
+pub type EngineFactory = Box<dyn Fn() -> crate::Result<Box<dyn Workload>> + Send + Sync>;
+
+/// A stream-table operation failure, carrying the wire error code the
+/// listener answers with.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamError {
+    /// Protocol error code for the `Error` frame.
+    pub code: ErrorCode,
+    /// Human-readable detail (travels in the error payload).
+    pub msg: String,
+}
+
+impl StreamError {
+    fn new(code: ErrorCode, msg: impl Into<String>) -> StreamError {
+        StreamError { code, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "stream error ({:?}): {}", self.code, self.msg)
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// The live half of a lane: who owns it and how fresh it is.
+struct StreamOwner {
+    conn: u64,
+    id: u64,
+    last_used: Instant,
+    appends: u64,
+    cycles: u64,
+}
+
+/// One engine slot. `engine` survives its owner (pooled for reuse);
+/// `owner` is `Some` only while a stream is live on the lane.
+struct Lane {
+    engine: Option<Box<dyn Workload>>,
+    owner: Option<StreamOwner>,
+}
+
+struct TableInner {
+    lanes: Vec<Lane>,
+    /// `(connection id, stream id)` → lane index.
+    by_key: HashMap<(u64, u64), usize>,
+}
+
+/// The session table a [`ServeCore`](super::ServeCore) owns: every
+/// transport connection that speaks the stream payloads routes them
+/// here.
+pub struct StreamTable {
+    inner: Mutex<TableInner>,
+    factory: EngineFactory,
+    max_streams: usize,
+    ttl: Duration,
+    vocab: i64,
+    telemetry: Arc<Telemetry>,
+}
+
+impl std::fmt::Debug for StreamTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamTable")
+            .field("max_streams", &self.max_streams)
+            .field("ttl", &self.ttl)
+            .field("active", &self.active())
+            .finish_non_exhaustive()
+    }
+}
+
+impl StreamTable {
+    /// An empty table. `vocab` drives the same word-id clamp the
+    /// one-shot submit path applies, so a streamed review sees exactly
+    /// the ids a one-shot request of the concatenation would.
+    pub fn new(
+        factory: EngineFactory,
+        max_streams: usize,
+        ttl: Duration,
+        vocab: i64,
+        telemetry: Arc<Telemetry>,
+    ) -> StreamTable {
+        StreamTable {
+            inner: Mutex::new(TableInner { lanes: Vec::new(), by_key: HashMap::new() }),
+            factory,
+            max_streams: max_streams.max(1),
+            ttl,
+            vocab,
+            telemetry,
+        }
+    }
+
+    /// Number of live (open, unexpired) streams.
+    pub fn active(&self) -> usize {
+        self.lock().by_key.len()
+    }
+
+    /// Open a stream: claim a lane, reset its engine's membrane state,
+    /// and pin it to `(conn, stream_id)`. Fails with
+    /// [`ErrorCode::StreamLimit`] at the session cap and
+    /// [`ErrorCode::Malformed`] on a duplicate open.
+    pub fn open(&self, conn: u64, stream_id: u64) -> Result<WireStreamAck, StreamError> {
+        let mut t = self.lock();
+        self.sweep_locked(&mut t, Instant::now());
+        let key = (conn, stream_id);
+        if t.by_key.contains_key(&key) {
+            return Err(StreamError::new(
+                ErrorCode::Malformed,
+                format!("stream {stream_id} is already open on this connection"),
+            ));
+        }
+        if t.by_key.len() >= self.max_streams {
+            self.telemetry.record_stream_rejected();
+            return Err(StreamError::new(
+                ErrorCode::StreamLimit,
+                format!("stream limit reached ({} live sessions)", self.max_streams),
+            ));
+        }
+        let lane = match t.lanes.iter().position(|l| l.owner.is_none()) {
+            Some(i) => i,
+            None => {
+                t.lanes.push(Lane { engine: None, owner: None });
+                t.lanes.len() - 1
+            }
+        };
+        if t.lanes[lane].engine.is_none() {
+            let engine = (self.factory)().map_err(|e| {
+                StreamError::new(ErrorCode::Internal, format!("engine construction failed: {e:#}"))
+            })?;
+            t.lanes[lane].engine = Some(engine);
+        }
+        let engine = t.lanes[lane].engine.as_mut().expect("lane engine just ensured");
+        engine.begin_stream().map_err(|e| {
+            StreamError::new(ErrorCode::Internal, format!("stream begin failed: {e:#}"))
+        })?;
+        t.lanes[lane].owner = Some(StreamOwner {
+            conn,
+            id: stream_id,
+            last_used: Instant::now(),
+            appends: 0,
+            cycles: 0,
+        });
+        t.by_key.insert(key, lane);
+        self.telemetry.record_stream_open();
+        Ok(WireStreamAck { op: STREAM_OP_OPEN, stream_id, lane: lane as u16, cycles: 0 })
+    }
+
+    /// Integrate one chunk into a live stream's pinned membrane state.
+    /// The chunk gets the submit path's input normalization (word ids
+    /// clamped into `[0, vocab)`); the ack reports the session's
+    /// cumulative cycles. A step failure is fatal to the stream: the
+    /// lane is evicted (its engine discarded — membrane state is
+    /// undefined after a mid-step error).
+    pub fn append(
+        &self,
+        conn: u64,
+        stream_id: u64,
+        chunk: &WorkloadInput,
+    ) -> Result<WireStreamAck, StreamError> {
+        let chunk = self.normalize(chunk);
+        let mut t = self.lock();
+        self.sweep_locked(&mut t, Instant::now());
+        let key = (conn, stream_id);
+        let lane = *t.by_key.get(&key).ok_or_else(|| expired(stream_id))?;
+        let engine = t.lanes[lane].engine.as_mut().expect("live lane has an engine");
+        let cycles = match engine.step_stream(&chunk) {
+            Ok(c) => c,
+            Err(e) => {
+                t.lanes[lane].engine = None;
+                t.lanes[lane].owner = None;
+                t.by_key.remove(&key);
+                self.telemetry.record_stream_closed();
+                return Err(StreamError::new(
+                    ErrorCode::InferenceFailed,
+                    format!("stream append failed: {e:#}"),
+                ));
+            }
+        };
+        let owner = t.lanes[lane].owner.as_mut().expect("live lane has an owner");
+        owner.last_used = Instant::now();
+        owner.appends += 1;
+        owner.cycles = cycles;
+        self.telemetry.record_stream_append();
+        self.telemetry.record_input(&chunk);
+        Ok(WireStreamAck { op: STREAM_OP_APPEND, stream_id, lane: lane as u16, cycles })
+    }
+
+    /// Read the current prediction out of a live stream without ending
+    /// it. Returns the output, the workload kind (picks the response
+    /// wire encoding), and the lane index.
+    pub fn read_out(
+        &self,
+        conn: u64,
+        stream_id: u64,
+    ) -> Result<(WorkloadOutput, WorkloadKind, u16), StreamError> {
+        let mut t = self.lock();
+        self.sweep_locked(&mut t, Instant::now());
+        let key = (conn, stream_id);
+        let lane = *t.by_key.get(&key).ok_or_else(|| expired(stream_id))?;
+        let engine = t.lanes[lane].engine.as_mut().expect("live lane has an engine");
+        let kind = engine.kind();
+        let out = match engine.read_out() {
+            Ok(o) => o,
+            Err(e) => {
+                t.lanes[lane].engine = None;
+                t.lanes[lane].owner = None;
+                t.by_key.remove(&key);
+                self.telemetry.record_stream_closed();
+                return Err(StreamError::new(
+                    ErrorCode::InferenceFailed,
+                    format!("stream read-out failed: {e:#}"),
+                ));
+            }
+        };
+        let owner = t.lanes[lane].owner.as_mut().expect("live lane has an owner");
+        owner.last_used = Instant::now();
+        owner.cycles = out.cycles;
+        Ok((out, kind, lane as u16))
+    }
+
+    /// Close a stream: release the lane (the engine stays pooled for
+    /// the next open). The ack carries the session's final cumulative
+    /// cycles.
+    pub fn close(&self, conn: u64, stream_id: u64) -> Result<WireStreamAck, StreamError> {
+        let mut t = self.lock();
+        self.sweep_locked(&mut t, Instant::now());
+        let key = (conn, stream_id);
+        let lane = *t.by_key.get(&key).ok_or_else(|| expired(stream_id))?;
+        let owner = t.lanes[lane].owner.take().expect("live lane has an owner");
+        t.by_key.remove(&key);
+        self.telemetry.record_stream_closed();
+        Ok(WireStreamAck {
+            op: STREAM_OP_CLOSE,
+            stream_id,
+            lane: lane as u16,
+            cycles: owner.cycles,
+        })
+    }
+
+    /// Evict every stream idle past the TTL (engines stay pooled —
+    /// [`Workload::begin_stream`] resets them on reuse). The TCP
+    /// accept loop calls this on idle ticks and during shutdown drain;
+    /// every table op also runs it first, so expiry is enforced even
+    /// without a sweeper.
+    pub fn sweep(&self) {
+        let mut t = self.lock();
+        self.sweep_locked(&mut t, Instant::now());
+    }
+
+    /// Release every stream owned by connection `conn` (counted as
+    /// closed, not expired): called when a transport connection ends
+    /// so its sessions never linger until the TTL.
+    pub fn close_conn(&self, conn: u64) {
+        let mut t = self.lock();
+        let keys: Vec<(u64, u64)> = t.by_key.keys().filter(|k| k.0 == conn).copied().collect();
+        for key in keys {
+            if let Some(lane) = t.by_key.remove(&key) {
+                t.lanes[lane].owner = None;
+                self.telemetry.record_stream_closed();
+            }
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, TableInner> {
+        self.inner.lock().expect("stream table poisoned")
+    }
+
+    fn sweep_locked(&self, t: &mut TableInner, now: Instant) {
+        let ttl = self.ttl;
+        let dead: Vec<(u64, u64)> = t
+            .lanes
+            .iter()
+            .filter_map(|l| l.owner.as_ref())
+            .filter(|o| now.duration_since(o.last_used) >= ttl)
+            .map(|o| (o.conn, o.id))
+            .collect();
+        for key in dead {
+            if let Some(lane) = t.by_key.remove(&key) {
+                t.lanes[lane].owner = None;
+                self.telemetry.record_stream_expired();
+            }
+        }
+    }
+
+    /// The submit path's input normalization, applied per chunk.
+    fn normalize(&self, chunk: &WorkloadInput) -> WorkloadInput {
+        match chunk {
+            WorkloadInput::Words(ids) => {
+                WorkloadInput::Words(ids.iter().map(|&w| w.clamp(0, self.vocab - 1)).collect())
+            }
+            img @ WorkloadInput::Image { .. } => img.clone(),
+        }
+    }
+}
+
+/// The error for a stream id with no live table entry. Unknown, closed
+/// and TTL-evicted streams are deliberately indistinguishable on the
+/// wire: the client's recovery is the same (re-open and replay).
+fn expired(id: u64) -> StreamError {
+    StreamError::new(ErrorCode::StreamExpired, format!("stream {id} is unknown, closed, or expired"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::TelemetryConfig;
+
+    /// A deterministic streaming engine for table-logic tests: cycles
+    /// = units integrated so far, read-out exposes the running sum of
+    /// word ids.
+    struct MockEngine {
+        sum: i64,
+        steps: u64,
+        begun: bool,
+    }
+
+    impl Workload for MockEngine {
+        fn run_one(&mut self, _input: &WorkloadInput) -> crate::Result<WorkloadOutput> {
+            anyhow::bail!("mock engine is stream-only")
+        }
+
+        fn run_batched(&mut self, _inputs: &[&WorkloadInput]) -> crate::Result<Vec<WorkloadOutput>> {
+            anyhow::bail!("mock engine is stream-only")
+        }
+
+        fn max_batch_lanes(&self) -> usize {
+            1
+        }
+
+        fn kind(&self) -> WorkloadKind {
+            WorkloadKind::Sentiment
+        }
+
+        fn begin_stream(&mut self) -> crate::Result<()> {
+            self.sum = 0;
+            self.steps = 0;
+            self.begun = true;
+            Ok(())
+        }
+
+        fn step_stream(&mut self, chunk: &WorkloadInput) -> crate::Result<u64> {
+            anyhow::ensure!(self.begun, "step before begin");
+            match chunk {
+                WorkloadInput::Words(ids) => {
+                    self.sum += ids.iter().sum::<i64>();
+                    self.steps += ids.len() as u64;
+                }
+                WorkloadInput::Image { .. } => anyhow::bail!("mock step rejects images"),
+            }
+            Ok(self.steps)
+        }
+
+        fn read_out(&mut self) -> crate::Result<WorkloadOutput> {
+            Ok(WorkloadOutput {
+                pred: u8::from(self.sum >= 0),
+                v_out: self.sum,
+                v_all: vec![self.sum],
+                cycles: self.steps,
+            })
+        }
+    }
+
+    fn table(max_streams: usize, ttl: Duration) -> StreamTable {
+        StreamTable::new(
+            Box::new(|| Ok(Box::new(MockEngine { sum: 0, steps: 0, begun: false }) as Box<dyn Workload>)),
+            max_streams,
+            ttl,
+            100,
+            Arc::new(Telemetry::new(TelemetryConfig::default())),
+        )
+    }
+
+    fn words(ids: &[i64]) -> WorkloadInput {
+        WorkloadInput::Words(ids.to_vec())
+    }
+
+    #[test]
+    fn open_append_read_close_pins_state_per_key() {
+        let t = table(4, Duration::from_secs(60));
+        let a = t.open(1, 10).unwrap();
+        assert_eq!((a.op, a.stream_id, a.cycles), (STREAM_OP_OPEN, 10, 0));
+        // a second stream on the same connection gets its own lane
+        let b = t.open(1, 11).unwrap();
+        assert_ne!(a.lane, b.lane);
+        assert_eq!(t.active(), 2);
+
+        t.append(1, 10, &words(&[2, 3])).unwrap();
+        t.append(1, 11, &words(&[40])).unwrap();
+        let ack = t.append(1, 10, &words(&[5])).unwrap();
+        assert_eq!(ack.cycles, 3); // cumulative across appends
+
+        let (out, kind, lane) = t.read_out(1, 10).unwrap();
+        assert_eq!(kind, WorkloadKind::Sentiment);
+        assert_eq!(lane, a.lane);
+        assert_eq!(out.v_out, 10); // 2+3+5: state pinned, not mixed with stream 11
+        assert_eq!(t.read_out(1, 11).unwrap().0.v_out, 40);
+
+        let fin = t.close(1, 10).unwrap();
+        assert_eq!((fin.op, fin.cycles), (STREAM_OP_CLOSE, 3));
+        assert_eq!(t.active(), 1);
+        // operations on the closed stream now fail as expired
+        assert_eq!(t.append(1, 10, &words(&[1])).unwrap_err().code, ErrorCode::StreamExpired);
+    }
+
+    #[test]
+    fn word_ids_get_the_submit_path_clamp() {
+        let t = table(1, Duration::from_secs(60));
+        t.open(1, 1).unwrap();
+        // vocab is 100: -5 clamps to 0, 10_000 clamps to 99
+        t.append(1, 1, &words(&[-5, 10_000])).unwrap();
+        assert_eq!(t.read_out(1, 1).unwrap().0.v_out, 99);
+    }
+
+    #[test]
+    fn cap_rejects_and_close_frees_a_slot() {
+        let t = table(2, Duration::from_secs(60));
+        t.open(1, 1).unwrap();
+        t.open(2, 1).unwrap(); // same stream id, different connection: distinct key
+        let err = t.open(1, 2).unwrap_err();
+        assert_eq!(err.code, ErrorCode::StreamLimit);
+        // duplicate open of a live key is malformed, not a cap hit
+        assert_eq!(t.open(1, 1).unwrap_err().code, ErrorCode::Malformed);
+        t.close(2, 1).unwrap();
+        t.open(1, 2).unwrap();
+        let s = t.telemetry.stream_stats();
+        assert_eq!((s.opened, s.rejected, s.active), (3, 1, 2));
+    }
+
+    #[test]
+    fn ttl_sweep_evicts_idle_streams_and_pools_engines() {
+        let t = table(2, Duration::from_millis(20));
+        let a = t.open(1, 1).unwrap();
+        t.append(1, 1, &words(&[7])).unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        t.sweep();
+        assert_eq!(t.active(), 0);
+        assert_eq!(t.read_out(1, 1).unwrap_err().code, ErrorCode::StreamExpired);
+        let s = t.telemetry.stream_stats();
+        assert_eq!((s.expired, s.active), (1, 0));
+        // the lane's engine was pooled and fully reset by the reopen
+        let b = t.open(1, 1).unwrap();
+        assert_eq!(b.lane, a.lane);
+        assert_eq!(t.read_out(1, 1).unwrap().0.v_out, 0);
+    }
+
+    #[test]
+    fn connection_end_releases_its_streams_only() {
+        let t = table(4, Duration::from_secs(60));
+        t.open(1, 1).unwrap();
+        t.open(1, 2).unwrap();
+        t.open(2, 1).unwrap();
+        t.close_conn(1);
+        assert_eq!(t.active(), 1);
+        assert!(t.read_out(2, 1).is_ok());
+        let s = t.telemetry.stream_stats();
+        assert_eq!((s.closed, s.expired), (2, 0));
+    }
+
+    #[test]
+    fn step_failure_evicts_the_stream_and_discards_the_engine() {
+        let t = table(1, Duration::from_secs(60));
+        t.open(1, 1).unwrap();
+        let img = WorkloadInput::Image { h: 1, w: 1, pixels: vec![1.0] };
+        let err = t.append(1, 1, &img).unwrap_err();
+        assert_eq!(err.code, ErrorCode::InferenceFailed);
+        assert_eq!(t.active(), 0);
+        // the lane is reusable with a freshly built engine
+        t.open(1, 1).unwrap();
+        assert_eq!(t.read_out(1, 1).unwrap().0.v_out, 0);
+    }
+}

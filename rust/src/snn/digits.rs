@@ -40,6 +40,11 @@ pub struct DigitsNetwork {
     pub t: usize,
     /// Layers tracked: enc(conv1), conv2, conv3, fc1.
     pub tracker: SparsityTracker,
+    // streaming-session state: set by `begin_stream`, advanced by
+    // `stream_image_step`, read by `stream_read_out`
+    stream_img: Option<Vec<f32>>,
+    stream_t: usize,
+    stream_cycles0: u64,
 }
 
 impl DigitsNetwork {
@@ -62,6 +67,9 @@ impl DigitsNetwork {
             fc2: FcLayer::new(&a.w_fc2, LayerParams::rmp(1), config)?.output_only(),
             t,
             tracker: SparsityTracker::new(4, t),
+            stream_img: None,
+            stream_t: 0,
+            stream_cycles0: 0,
         })
     }
 
@@ -107,6 +115,60 @@ impl DigitsNetwork {
             v_out,
             cycles: self.total_cycles() - cycles0,
         })
+    }
+
+    /// Begin a pinned-membrane streaming session: reset the mapped
+    /// layers and zero the session's cycle attribution. The encoder is
+    /// primed lazily by the first [`DigitsNetwork::stream_image_step`]
+    /// (matching [`DigitsNetwork::run_image`]'s `set_image`).
+    pub fn begin_stream(&mut self) -> Result<()> {
+        self.reset_state()?;
+        self.stream_img = None;
+        self.stream_t = 0;
+        self.stream_cycles0 = self.total_cycles();
+        Ok(())
+    }
+
+    /// Integrate one image frame for one membrane timestep — exactly
+    /// one iteration of the [`DigitsNetwork::run_image`] loop, so `t`
+    /// appends of the same frame followed by one read-out are
+    /// bit-identical (prediction, potentials, *and* cycles) to the
+    /// one-shot run, however the appends are grouped. A
+    /// pixel-identical frame keeps integrating the encoder's membrane
+    /// (the one-shot path); a *new* frame re-primes the encoder
+    /// (`set_image` zeroes its membrane) while the downstream
+    /// Conv/FC membranes persist — the event-frame stream shape.
+    /// Returns cumulative session macro cycles.
+    pub fn stream_image_step(&mut self, image: &[f32]) -> Result<u64> {
+        if self.stream_img.as_deref() != Some(image) {
+            self.encoder.set_image(image);
+            self.stream_img = Some(image.to_vec());
+        }
+        let t = self.stream_t;
+        let s1 = self.encoder.step(); // 28×28×C
+        self.tracker.record_counts(0, t, s1.count_ones() as u64, s1.len() as u64);
+        let p1 = s1.maxpool2(); // 14×14×C
+        let s2 = self.conv2.step(&p1)?;
+        self.tracker.record_counts(1, t, s2.count_ones() as u64, s2.len() as u64);
+        let p2 = s2.maxpool2(); // 7×7×C
+        let s3 = self.conv3.step(&p2)?;
+        self.tracker.record_counts(2, t, s3.count_ones() as u64, s3.len() as u64);
+        let p3 = s3.maxpool2(); // 3×3×C
+        let sf = self.fc1.step_plane(p3.plane())?;
+        self.tracker.record_plane(3, t, sf);
+        self.fc2.step_plane(sf)?;
+        self.stream_t += 1;
+        Ok(self.total_cycles() - self.stream_cycles0)
+    }
+
+    /// Read `(pred, v_all, cycles)` out of the pinned membrane state
+    /// without disturbing it. Costs the same read-out ReadVs the
+    /// one-shot path spends once at its end — call it once per stream
+    /// for exact cycle identity (every call adds one read's cycles).
+    pub fn stream_read_out(&mut self) -> Result<(u8, Vec<i64>, u64)> {
+        let v_all = self.fc2.potentials()?;
+        let pred = argmax_lowest(&v_all);
+        Ok((pred, v_all, self.total_cycles() - self.stream_cycles0))
     }
 
     /// Batch lanes one pass through the macro pool can host (bounded
@@ -292,6 +354,33 @@ mod tests {
         // deterministic
         let r2 = net.run_image(&img).unwrap();
         assert_eq!(r.v_out, r2.v_out);
+    }
+
+    /// The streaming differential: per-timestep appends of the same
+    /// frame, split into two groups at every boundary, must be
+    /// bit-identical (prediction, potentials, and cycles) to the
+    /// one-shot run.
+    #[test]
+    fn streamed_image_bit_identical_to_one_shot_at_every_split() {
+        let a = mini_digits(13);
+        let mut rng = XorShiftRng::new(5);
+        let img: Vec<f32> = (0..28 * 28).map(|_| rng.gen_f64() as f32).collect();
+        let mut net = DigitsNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let want = net.run_image(&img).unwrap();
+        let t = net.t;
+        for split in 0..=t {
+            net.begin_stream().unwrap();
+            for _ in 0..split {
+                net.stream_image_step(&img).unwrap();
+            }
+            for _ in split..t {
+                net.stream_image_step(&img).unwrap();
+            }
+            let (pred, v_all, cycles) = net.stream_read_out().unwrap();
+            assert_eq!(pred, want.pred, "split {split}");
+            assert_eq!(v_all, want.v_out, "split {split}");
+            assert_eq!(cycles, want.cycles, "split {split}");
+        }
     }
 
     #[test]

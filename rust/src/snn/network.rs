@@ -32,6 +32,11 @@ pub struct SentimentNetwork {
     pub t_word: usize,
     /// Per-layer per-timestep sparsity stats (layers: enc, fc1, fc2).
     pub tracker: SparsityTracker,
+    // streaming-session state: set by `begin_stream`, advanced by
+    // `stream_words`, read by `stream_read_out`
+    stream_ended: bool,
+    stream_last_v: i64,
+    stream_cycles0: u64,
 }
 
 impl SentimentNetwork {
@@ -47,6 +52,9 @@ impl SentimentNetwork {
             out: FcLayer::new(&w_out, LayerParams::rmp(1), config)?.output_only(),
             t_word: 10,
             tracker: SparsityTracker::new(3, 10),
+            stream_ended: false,
+            stream_last_v: 0,
+            stream_cycles0: 0,
         })
     }
 
@@ -109,6 +117,66 @@ impl SentimentNetwork {
             vout_trace,
             cycles: self.total_cycles() - cycles0,
         })
+    }
+
+    /// Begin a pinned-membrane streaming session: reset all layer
+    /// state and zero the session's cycle attribution. The serve-side
+    /// stream table calls this when a `StreamOpen` claims a lane.
+    pub fn begin_stream(&mut self) -> Result<()> {
+        self.reset_state()?;
+        self.stream_ended = false;
+        self.stream_last_v = 0;
+        self.stream_cycles0 = self.total_cycles();
+        Ok(())
+    }
+
+    /// Advance the stream by a chunk of word ids — exactly the
+    /// [`SentimentNetwork::run_review`] inner loop, so chunked appends
+    /// followed by a read-out are bit-identical (prediction, V_out,
+    /// *and* cycles) to the one-shot run on the concatenated ids. A
+    /// padding id (< 0) ends the sequence: it and all later words are
+    /// ignored, as in the one-shot path. An out-of-range id errors
+    /// mid-chunk after earlier words were integrated (appends are not
+    /// transactional). Returns cumulative session macro cycles.
+    pub fn stream_words(&mut self, word_ids: &[i64]) -> Result<u64> {
+        for &wid in word_ids {
+            if self.stream_ended {
+                break;
+            }
+            if wid < 0 {
+                self.stream_ended = true;
+                break;
+            }
+            let Some(x) = self.emb.get(wid as usize) else {
+                anyhow::bail!(
+                    "word id {wid} out of range (vocab {})",
+                    self.emb.len()
+                );
+            };
+            for t in 0..self.t_word {
+                let s0 = self.encoder.step_plane(x);
+                self.tracker.record_plane(0, t, s0);
+                let s1 = self.fc1.step_plane(s0)?;
+                self.tracker.record_plane(1, t, s1);
+                let s2 = self.fc2.step_plane(s1)?;
+                self.tracker.record_plane(2, t, s2);
+                self.out.step_plane(s2)?;
+            }
+            // the costed per-word V read, same as the one-shot trace —
+            // this is what makes the later read-out free
+            self.stream_last_v = self.out.potentials()?[0];
+        }
+        Ok(self.total_cycles() - self.stream_cycles0)
+    }
+
+    /// Read `(pred, v_out, cycles)` out of the pinned membrane state
+    /// without disturbing it. Free of macro cycles: the costed V read
+    /// already happened per word inside
+    /// [`SentimentNetwork::stream_words`], mirroring the one-shot
+    /// trace read, so read-outs never skew cycle identity.
+    pub fn stream_read_out(&self) -> (u8, i64, u64) {
+        let v = self.stream_last_v;
+        ((v >= 0) as u8, v, self.total_cycles() - self.stream_cycles0)
     }
 
     /// Batch lanes one pass through the macro pool can host (bounded by
@@ -457,6 +525,35 @@ pub(crate) mod tests {
             got[1].cycles
         );
         assert!(got[1].cycles > 0);
+    }
+
+    /// The streaming differential: the same review split at every
+    /// chunk boundary must be bit-identical (prediction, V_out, and
+    /// cycles) to the one-shot run.
+    #[test]
+    fn streamed_review_bit_identical_to_one_shot_at_every_split() {
+        let a = mini_artifacts(7);
+        let ids = vec![3i64, 7, 5, 1, 9];
+        let mut net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+        let want = net.run_review(&ids).unwrap();
+        for split in 0..=ids.len() {
+            net.begin_stream().unwrap();
+            net.stream_words(&ids[..split]).unwrap();
+            let cycles = net.stream_words(&ids[split..]).unwrap();
+            let (pred, v_out, c2) = net.stream_read_out();
+            assert_eq!(pred, want.pred, "split {split}");
+            assert_eq!(v_out, want.v_out, "split {split}");
+            assert_eq!(cycles, want.cycles, "split {split}");
+            assert_eq!(c2, want.cycles, "read-out must be cycle-free");
+        }
+        // padding mid-stream ends the sequence like the one-shot path
+        let want = net.run_review(&[4, 2, -1, 9]).unwrap();
+        net.begin_stream().unwrap();
+        net.stream_words(&[4, 2]).unwrap();
+        net.stream_words(&[-1]).unwrap();
+        net.stream_words(&[9]).unwrap();
+        let (pred, v_out, cycles) = net.stream_read_out();
+        assert_eq!((pred, v_out, cycles), (want.pred, want.v_out, want.cycles));
     }
 
     #[test]

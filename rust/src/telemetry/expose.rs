@@ -93,7 +93,11 @@ fn answer_scrape(mut stream: TcpStream, telemetry: &Telemetry) -> std::io::Resul
     }
     let is_get = head.starts_with(b"GET ");
     let (status, body) = if is_get {
-        ("200 OK", telemetry.snapshot().to_prometheus())
+        // the pinned StatsSnapshot page, plus the stream-session
+        // counters (registry-only — not part of the stats wire struct)
+        let mut page = telemetry.snapshot().to_prometheus();
+        page.push_str(&telemetry.stream_stats().to_prometheus());
+        ("200 OK", page)
     } else {
         ("400 Bad Request", "metrics endpoint: GET only\n".to_string())
     };
@@ -134,6 +138,7 @@ mod tests {
         assert!(page.contains("text/plain; version=0.0.4"));
         assert!(page.contains("impulse_requests_submitted_total{kind=\"digits\"} 1"));
         assert!(page.contains("impulse_queue_depth 0"));
+        assert!(page.contains("impulse_streams_active 0"));
 
         let bad = http_get(h.local_addr(), b"POST /metrics HTTP/1.0\r\n\r\n");
         assert!(bad.starts_with("HTTP/1.0 400"), "{bad}");

@@ -40,7 +40,7 @@ pub use expose::{serve_metrics, MetricsHandle};
 pub use histogram::{
     bucket_index, bucket_upper_us, HistogramSummary, ShardedHistogram, N_LATENCY_BUCKETS,
 };
-pub use registry::{AtomicF64, Telemetry, TelemetryConfig, DEFAULT_QUEUE_SOFT_LIMIT};
+pub use registry::{AtomicF64, StreamStats, Telemetry, TelemetryConfig, DEFAULT_QUEUE_SOFT_LIMIT};
 pub use snapshot::{
     instr_code, instr_from_code, instr_name, kind_code, kind_from_code, kind_name, KindStats,
     StatsSnapshot, Transport, TransportStats, ALL_INSTR_KINDS, ALL_KINDS, ALL_TRANSPORTS,

@@ -70,6 +70,65 @@ impl Default for TelemetryConfig {
     }
 }
 
+/// A point-in-time view of the streaming-session counters.
+///
+/// These live alongside (not inside) [`StatsSnapshot`] — the stats
+/// wire struct is pinned by the frame-codec tests, so stream metrics
+/// are surfaced through [`Telemetry::stream_stats`] and the Prometheus
+/// scrape page instead of the `StatsResponse` payload.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StreamStats {
+    /// Streams opened (monotonic).
+    pub opened: u64,
+    /// Streams closed by their client, or reaped when its connection
+    /// ended (monotonic).
+    pub closed: u64,
+    /// Streams evicted by the idle-TTL sweep (monotonic).
+    pub expired: u64,
+    /// Opens rejected by the max-streams cap (monotonic).
+    pub rejected: u64,
+    /// Chunks appended across all streams (monotonic).
+    pub appends: u64,
+    /// Streams currently pinning a lane's membrane state (gauge).
+    pub active: u64,
+}
+
+impl StreamStats {
+    /// Prometheus text-format lines for these counters (each sample
+    /// line is exactly `name value`, matching the scrape page format).
+    pub fn to_prometheus(&self) -> String {
+        format!(
+            "# HELP impulse_streams_active Streams currently pinning a lane's membrane state.\n\
+             # TYPE impulse_streams_active gauge\n\
+             impulse_streams_active {}\n\
+             # TYPE impulse_streams_opened_total counter\n\
+             impulse_streams_opened_total {}\n\
+             # TYPE impulse_streams_closed_total counter\n\
+             impulse_streams_closed_total {}\n\
+             # HELP impulse_streams_expired_total Streams evicted by the idle-TTL sweep.\n\
+             # TYPE impulse_streams_expired_total counter\n\
+             impulse_streams_expired_total {}\n\
+             # HELP impulse_streams_rejected_total Opens rejected by the max-streams cap.\n\
+             # TYPE impulse_streams_rejected_total counter\n\
+             impulse_streams_rejected_total {}\n\
+             # TYPE impulse_stream_appends_total counter\n\
+             impulse_stream_appends_total {}\n",
+            self.active, self.opened, self.closed, self.expired, self.rejected, self.appends,
+        )
+    }
+}
+
+/// Atomic cells behind [`StreamStats`].
+#[derive(Debug, Default)]
+struct StreamCells {
+    opened: AtomicU64,
+    closed: AtomicU64,
+    expired: AtomicU64,
+    rejected: AtomicU64,
+    appends: AtomicU64,
+    active: AtomicU64,
+}
+
 /// Per-workload-kind atomic counter cell.
 #[derive(Debug, Default)]
 struct KindCell {
@@ -109,6 +168,7 @@ pub struct Telemetry {
     batch_lane_capacity: AtomicU64,
     instr: [AtomicU64; ALL_INSTR_KINDS.len()],
     wire: [ShardedHistogram; ALL_TRANSPORTS.len()],
+    streams: StreamCells,
 }
 
 impl std::fmt::Debug for Telemetry {
@@ -143,6 +203,7 @@ impl Telemetry {
             batch_lane_capacity: AtomicU64::new(0),
             instr: std::array::from_fn(|_| AtomicU64::new(0)),
             wire: std::array::from_fn(|_| ShardedHistogram::new()),
+            streams: StreamCells::default(),
         }
     }
 
@@ -248,6 +309,58 @@ impl Telemetry {
     /// transport.
     pub fn record_wire(&self, transport: Transport, latency: Duration) {
         self.wire[transport.code() as usize].record(latency);
+    }
+
+    /// Record a stream session claiming a lane (raises the active
+    /// gauge).
+    pub fn record_stream_open(&self) {
+        self.streams.opened.fetch_add(1, Ordering::Relaxed);
+        self.streams.active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a stream released by its client (or reaped because its
+    /// connection ended).
+    pub fn record_stream_closed(&self) {
+        self.streams.closed.fetch_add(1, Ordering::Relaxed);
+        self.stream_gauge_down();
+    }
+
+    /// Record a stream evicted by the idle-TTL sweep.
+    pub fn record_stream_expired(&self) {
+        self.streams.expired.fetch_add(1, Ordering::Relaxed);
+        self.stream_gauge_down();
+    }
+
+    /// Record a stream open rejected by the max-streams cap (the
+    /// active gauge is untouched — no lane was claimed).
+    pub fn record_stream_rejected(&self) {
+        self.streams.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one chunk appended to a live stream.
+    pub fn record_stream_append(&self) {
+        self.streams.appends.fetch_add(1, Ordering::Relaxed);
+    }
+
+    // saturating decrement: mirrors the queue-depth gauge so a stray
+    // release can never wrap the active count
+    fn stream_gauge_down(&self) {
+        let _ = self
+            .streams
+            .active
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
+    }
+
+    /// Current streaming-session counters.
+    pub fn stream_stats(&self) -> StreamStats {
+        StreamStats {
+            opened: self.streams.opened.load(Ordering::Relaxed),
+            closed: self.streams.closed.load(Ordering::Relaxed),
+            expired: self.streams.expired.load(Ordering::Relaxed),
+            rejected: self.streams.rejected.load(Ordering::Relaxed),
+            appends: self.streams.appends.load(Ordering::Relaxed),
+            active: self.streams.active.load(Ordering::Relaxed),
+        }
     }
 
     /// Current queue depth (submitted minus answered).
@@ -392,6 +505,33 @@ mod tests {
         assert_eq!(s.mean_batch_occupancy(), 2.0);
         assert_eq!(s.transport(Transport::Tcp).unwrap().count, 1);
         assert_eq!(s.transport(Transport::Stdio).unwrap().sum_us, 9);
+    }
+
+    #[test]
+    fn stream_counters_drive_the_active_gauge() {
+        let t = Telemetry::default();
+        assert_eq!(t.stream_stats(), StreamStats::default());
+        t.record_stream_open();
+        t.record_stream_open();
+        t.record_stream_append();
+        t.record_stream_append();
+        t.record_stream_append();
+        t.record_stream_rejected();
+        t.record_stream_closed();
+        t.record_stream_expired();
+        let s = t.stream_stats();
+        assert_eq!((s.opened, s.closed, s.expired), (2, 1, 1));
+        assert_eq!((s.rejected, s.appends, s.active), (1, 3, 0));
+        // extra releases saturate at zero instead of wrapping
+        t.record_stream_closed();
+        assert_eq!(t.stream_stats().active, 0);
+
+        let page = s.to_prometheus();
+        assert!(page.contains("impulse_streams_opened_total 2"), "{page}");
+        assert!(page.contains("impulse_streams_active 0"), "{page}");
+        for line in page.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad sample line: {line}");
+        }
     }
 
     #[test]

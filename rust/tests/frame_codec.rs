@@ -6,13 +6,15 @@
 use impulse::proptest_lite::forall_ctx;
 use impulse::serve::{
     crc32, decode_backpressure, decode_digits_request, decode_digits_response, decode_error,
-    decode_infer_request, decode_infer_response, decode_stats_response, encode_backpressure,
-    encode_digits_request, encode_infer_request, encode_stats_request, encode_stats_response,
-    error_payload, hello_caps_payload, hello_payload, Backpressure, Decoded, ErrorCode, Frame,
-    PayloadType, WireError, CRC_LEN, FLAG_SOFT_LIMIT, FLAG_TELEMETRY, HEADER_LEN, MAX_PAYLOAD,
-    PROTOCOL_VERSION,
+    decode_infer_request, decode_infer_response, decode_stats_response, decode_stream_ack,
+    decode_stream_append, decode_stream_ref, encode_backpressure, encode_digits_request,
+    encode_infer_request, encode_stats_request, encode_stats_response, encode_stream_ack,
+    encode_stream_append, encode_stream_ref, error_payload, hello_caps_payload, hello_payload,
+    Backpressure, Decoded, ErrorCode, Frame, PayloadType, WireError, WireStreamAck, CRC_LEN,
+    FLAG_SOFT_LIMIT, FLAG_TELEMETRY, HEADER_LEN, MAX_PAYLOAD, PROTOCOL_VERSION, STREAM_OP_APPEND,
+    STREAM_OP_CLOSE, STREAM_OP_OPEN,
 };
-use impulse::coordinator::WorkloadKind;
+use impulse::coordinator::{WorkloadInput, WorkloadKind};
 use impulse::telemetry::{KindStats, StatsSnapshot, Transport, TransportStats};
 
 fn hex(s: &str) -> Vec<u8> {
@@ -452,6 +454,213 @@ fn prop_stats_payload_roundtrips() {
             let payload = encode_stats_response(snap);
             match decode_stats_response(&payload) {
                 Ok(got) if got == *snap => Ok(()),
+                other => Err(format!("roundtrip failed: {other:?}")),
+            }
+        },
+    );
+}
+
+/// PROTOCOL.md §6.3, example 1: `StreamOpen`, request id 21 (the
+/// request id becomes the stream id), empty payload — and the
+/// matching `StreamAck` (op 0, stream 21, lane 0, cycles 0).
+#[test]
+fn protocol_md_worked_example_stream_open_and_ack() {
+    let open_wire = hex(
+        "49 4D 50 31 01 16 00 00 00 00 00 00 00 00 00 15 \
+         00 00 00 00 F2 38 24 1A",
+    );
+    let f = Frame::new(PayloadType::StreamOpen, 21, Vec::new());
+    assert_eq!(f.encode(), open_wire, "encoder must produce the documented bytes");
+    let g = decode_one(&open_wire);
+    assert_eq!(g.payload_type, PayloadType::StreamOpen);
+    assert_eq!(g.request_id, 21);
+    assert!(g.payload.is_empty());
+
+    let ack_wire = hex(
+        "49 4D 50 31 01 1A 00 00 00 00 00 00 00 00 00 15 \
+         00 00 00 13 00 00 00 00 00 00 00 00 15 00 00 00 \
+         00 00 00 00 00 00 00 C4 CC 5C FF",
+    );
+    let ack = WireStreamAck { op: STREAM_OP_OPEN, stream_id: 21, lane: 0, cycles: 0 };
+    assert_eq!(Frame::new(PayloadType::StreamAck, 21, encode_stream_ack(&ack)).encode(), ack_wire);
+    let g = decode_one(&ack_wire);
+    assert_eq!(g.payload_type, PayloadType::StreamAck);
+    assert_eq!(decode_stream_ack(&g.payload).unwrap(), ack);
+}
+
+/// PROTOCOL.md §6.3, example 2: `StreamAppend` of word ids [3, 1, 4]
+/// to stream 21 — the body after the 9-byte stream header is
+/// byte-for-byte the §4.4 one-shot request layout — and the matching
+/// `StreamAck` (op 1, cumulative cycles 35200).
+#[test]
+fn protocol_md_worked_example_stream_append_words() {
+    let wire = hex(
+        "49 4D 50 31 01 17 00 00 00 00 00 00 00 00 00 16 \
+         00 00 00 17 00 00 00 00 00 00 00 15 00 00 03 00 \
+         00 00 03 00 00 00 01 00 00 00 04 3E F1 8C 7B",
+    );
+    let chunk = WorkloadInput::Words(vec![3, 1, 4]);
+    let payload = encode_stream_append(21, &chunk).unwrap();
+    assert_eq!(Frame::new(PayloadType::StreamAppend, 22, payload).encode(), wire);
+    let g = decode_one(&wire);
+    assert_eq!(g.payload_type, PayloadType::StreamAppend);
+    assert_eq!(g.request_id, 22);
+    assert_eq!(decode_stream_append(&g.payload).unwrap(), (21, chunk));
+    // the embedded body is exactly the one-shot encoding
+    assert_eq!(g.payload[9..], encode_infer_request(&[3, 1, 4]).unwrap());
+
+    let ack_wire = hex(
+        "49 4D 50 31 01 1A 00 00 00 00 00 00 00 00 00 16 \
+         00 00 00 13 01 00 00 00 00 00 00 00 15 00 00 00 \
+         00 00 00 00 00 89 80 4C C9 D5 AD",
+    );
+    let ack = WireStreamAck { op: STREAM_OP_APPEND, stream_id: 21, lane: 0, cycles: 35200 };
+    assert_eq!(Frame::new(PayloadType::StreamAck, 22, encode_stream_ack(&ack)).encode(), ack_wire);
+    assert_eq!(decode_stream_ack(&decode_one(&ack_wire).payload).unwrap(), ack);
+}
+
+/// PROTOCOL.md §6.3, example 3: `StreamAppend` of one 2×2 image frame
+/// (kind byte 1, §4.5 body layout) to stream 21.
+#[test]
+fn protocol_md_worked_example_stream_append_image() {
+    let wire = hex(
+        "49 4D 50 31 01 17 00 00 00 00 00 00 00 00 00 17 \
+         00 00 00 1B 00 00 00 00 00 00 00 15 01 02 02 00 \
+         00 00 00 3F 00 00 00 3F 80 00 00 BF 80 00 00 5F \
+         F2 77 CB",
+    );
+    let chunk = WorkloadInput::Image { h: 2, w: 2, pixels: vec![0.0, 0.5, 1.0, -1.0] };
+    let payload = encode_stream_append(21, &chunk).unwrap();
+    assert_eq!(Frame::new(PayloadType::StreamAppend, 23, payload).encode(), wire);
+    let g = decode_one(&wire);
+    assert_eq!(decode_stream_append(&g.payload).unwrap(), (21, chunk));
+    assert_eq!(g.payload[9..], encode_digits_request(2, 2, &[0.0, 0.5, 1.0, -1.0]).unwrap());
+}
+
+/// PROTOCOL.md §6.3, examples 4–6: `StreamReadOut` and `StreamClose`
+/// both carry the bare 8-byte stream id; the close is acknowledged
+/// with the session's final cumulative cycles.
+#[test]
+fn protocol_md_worked_example_stream_read_out_and_close() {
+    let readout_wire = hex(
+        "49 4D 50 31 01 18 00 00 00 00 00 00 00 00 00 18 \
+         00 00 00 08 00 00 00 00 00 00 00 15 15 2C 7E 29",
+    );
+    let f = Frame::new(PayloadType::StreamReadOut, 24, encode_stream_ref(21));
+    assert_eq!(f.encode(), readout_wire, "encoder must produce the documented bytes");
+    let g = decode_one(&readout_wire);
+    assert_eq!(g.payload_type, PayloadType::StreamReadOut);
+    assert_eq!(decode_stream_ref(&g.payload).unwrap(), 21);
+
+    let close_wire = hex(
+        "49 4D 50 31 01 19 00 00 00 00 00 00 00 00 00 19 \
+         00 00 00 08 00 00 00 00 00 00 00 15 53 C9 4D 78",
+    );
+    assert_eq!(Frame::new(PayloadType::StreamClose, 25, encode_stream_ref(21)).encode(), close_wire);
+    assert_eq!(decode_one(&close_wire).payload_type, PayloadType::StreamClose);
+
+    let ack_wire = hex(
+        "49 4D 50 31 01 1A 00 00 00 00 00 00 00 00 00 19 \
+         00 00 00 13 02 00 00 00 00 00 00 00 15 00 00 00 \
+         00 00 00 00 00 89 80 0C 8A 58 CD",
+    );
+    let ack = WireStreamAck { op: STREAM_OP_CLOSE, stream_id: 21, lane: 0, cycles: 35200 };
+    assert_eq!(Frame::new(PayloadType::StreamAck, 25, encode_stream_ack(&ack)).encode(), ack_wire);
+    assert_eq!(decode_stream_ack(&decode_one(&ack_wire).payload).unwrap(), ack);
+}
+
+/// PROTOCOL.md §6.3, example 7: the `Error` frame answering an
+/// operation on an unknown/expired stream (code 11, `StreamExpired`).
+#[test]
+fn protocol_md_worked_example_stream_expired_error() {
+    let wire = hex(
+        "49 4D 50 31 01 7F 00 00 00 00 00 00 00 00 00 18 \
+         00 00 00 2C 00 0B 00 28 73 74 72 65 61 6D 20 32 \
+         31 20 69 73 20 75 6E 6B 6E 6F 77 6E 2C 20 63 6C \
+         6F 73 65 64 2C 20 6F 72 20 65 78 70 69 72 65 64 \
+         E7 33 1C 31",
+    );
+    let f = Frame::new(
+        PayloadType::Error,
+        24,
+        error_payload(ErrorCode::StreamExpired, "stream 21 is unknown, closed, or expired"),
+    );
+    assert_eq!(f.encode(), wire);
+    let (code, msg) = decode_error(&decode_one(&wire).payload).unwrap();
+    assert_eq!(code, ErrorCode::StreamExpired.as_u16());
+    assert_eq!(msg, "stream 21 is unknown, closed, or expired");
+}
+
+/// Stream payload codecs reject malformed inputs with the right codes.
+#[test]
+fn stream_payload_rejection() {
+    // append: under 9 bytes / unknown kind byte
+    assert_eq!(decode_stream_append(&[0; 8]).unwrap_err().code, ErrorCode::Malformed);
+    let mut p = encode_stream_append(1, &WorkloadInput::Words(vec![2])).unwrap();
+    p[8] = 9; // no such chunk kind
+    assert_eq!(decode_stream_append(&p).unwrap_err().code, ErrorCode::Malformed);
+    // ref: must be exactly 8 bytes
+    assert_eq!(decode_stream_ref(&[0; 7]).unwrap_err().code, ErrorCode::Malformed);
+    assert_eq!(decode_stream_ref(&[0; 9]).unwrap_err().code, ErrorCode::Malformed);
+    // ack: must be exactly 19 bytes with a known op byte
+    assert_eq!(decode_stream_ack(&[0; 18]).unwrap_err().code, ErrorCode::Malformed);
+    let mut a = encode_stream_ack(&WireStreamAck {
+        op: STREAM_OP_OPEN,
+        stream_id: 1,
+        lane: 0,
+        cycles: 0,
+    });
+    a[0] = 3; // op byte past StreamClose
+    assert_eq!(decode_stream_ack(&a).unwrap_err().code, ErrorCode::Malformed);
+}
+
+/// The stream discriminants and error codes are pinned on the wire.
+#[test]
+fn stream_discriminants_and_error_codes() {
+    assert_eq!(PayloadType::StreamOpen.as_u8(), 0x16);
+    assert_eq!(PayloadType::StreamAppend.as_u8(), 0x17);
+    assert_eq!(PayloadType::StreamReadOut.as_u8(), 0x18);
+    assert_eq!(PayloadType::StreamClose.as_u8(), 0x19);
+    assert_eq!(PayloadType::StreamAck.as_u8(), 0x1A);
+    assert_eq!(PayloadType::from_u8(0x16), Some(PayloadType::StreamOpen));
+    assert_eq!(PayloadType::from_u8(0x17), Some(PayloadType::StreamAppend));
+    assert_eq!(PayloadType::from_u8(0x18), Some(PayloadType::StreamReadOut));
+    assert_eq!(PayloadType::from_u8(0x19), Some(PayloadType::StreamClose));
+    assert_eq!(PayloadType::from_u8(0x1A), Some(PayloadType::StreamAck));
+    assert_eq!(ErrorCode::StreamExpired.as_u16(), 11);
+    assert_eq!(ErrorCode::StreamLimit.as_u16(), 12);
+    assert_eq!(ErrorCode::from_u16(11), Some(ErrorCode::StreamExpired));
+    assert_eq!(ErrorCode::from_u16(12), Some(ErrorCode::StreamLimit));
+}
+
+/// Property: stream append payloads round-trip for both chunk kinds.
+#[test]
+fn prop_stream_append_roundtrips() {
+    forall_ctx(
+        120,
+        0x5EED,
+        |rng| {
+            let stream_id = rng.next_u64();
+            let chunk = if rng.gen_range(2) == 0 {
+                let n = 1 + rng.gen_range(24) as usize;
+                WorkloadInput::Words(
+                    (0..n).map(|_| rng.gen_range(30_000) as i64).collect(),
+                )
+            } else {
+                let h = 1 + rng.gen_range(6) as usize;
+                let w = 1 + rng.gen_range(6) as usize;
+                WorkloadInput::Image {
+                    h,
+                    w,
+                    pixels: (0..h * w).map(|_| rng.gen_range(256) as f32 / 255.0).collect(),
+                }
+            };
+            (stream_id, chunk)
+        },
+        |(stream_id, chunk)| {
+            let p = encode_stream_append(*stream_id, chunk).map_err(|e| e.to_string())?;
+            match decode_stream_append(&p) {
+                Ok((sid, got)) if sid == *stream_id && got == *chunk => Ok(()),
                 other => Err(format!("roundtrip failed: {other:?}")),
             }
         },

@@ -1,0 +1,343 @@
+//! End-to-end tests of streaming stateful sessions over the TCP
+//! front-end: membrane state pinned to a stream id must make chunked
+//! appends bit-identical to the one-shot path at *every* split point
+//! (the PR's acceptance criterion), eviction must free lanes on TTL
+//! expiry / connection EOF / the session cap, a shutdown drain must
+//! never wedge on abandoned sessions, and the client's adaptive pacer
+//! must react to soft-limit advertisements.
+
+use impulse::coordinator::{ServerOptions, WorkloadInput, WorkloadOutput};
+use impulse::data::{DigitsArtifacts, SentimentArtifacts};
+use impulse::macro_sim::MacroConfig;
+use impulse::serve::{
+    encode_backpressure, serve_tcp, ErrorCode, Frame, FrameClient, FrameReader, PayloadType,
+    ServeCore, ServerError, TcpServeHandle, WirePayload, WireResponse, CAP_BACKPRESSURE,
+    PROTOCOL_VERSION,
+};
+use impulse::snn::{DigitsNetwork, SentimentNetwork};
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const VOCAB: i64 = 20; // SentimentArtifacts::synthetic vocabulary
+
+fn start_core(seed: u64, opts: ServerOptions) -> (Arc<ServeCore>, TcpServeHandle) {
+    let a = SentimentArtifacts::synthetic(seed);
+    let core = Arc::new(
+        ServeCore::start_with(opts, VOCAB, move || {
+            SentimentNetwork::from_artifacts(&a, MacroConfig::fast())
+        })
+        .unwrap(),
+    );
+    let handle = serve_tcp("127.0.0.1:0", Arc::clone(&core)).unwrap();
+    (core, handle)
+}
+
+fn connect(handle: &TcpServeHandle) -> FrameClient {
+    let mut client = FrameClient::connect(handle.local_addr()).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    assert_eq!(client.hello().unwrap(), PROTOCOL_VERSION);
+    client
+}
+
+fn words(ids: &[i64]) -> WorkloadInput {
+    WorkloadInput::Words(ids.to_vec())
+}
+
+fn stream_code(e: &anyhow::Error) -> ErrorCode {
+    e.downcast_ref::<ServerError>()
+        .unwrap_or_else(|| panic!("expected a ServerError, got: {e:#}"))
+        .error_code()
+        .expect("server sent an unknown error code")
+}
+
+/// The tentpole acceptance criterion, sentiment: for *every* split
+/// point of a review, appending the two chunks to a pinned stream and
+/// reading out is bit-identical (pred, v_out, cycles) to the one-shot
+/// request on the same connection — and so is fully word-by-word
+/// streaming.
+#[test]
+fn sentiment_stream_matches_one_shot_at_every_split() {
+    // out-of-range ids included: the stream path must apply the same
+    // [0, VOCAB) clamp the one-shot submit path does
+    let seed = 71;
+    let ids: Vec<i64> = vec![3, 7, 999, -5, 0, 12, 19, 4];
+    let a = SentimentArtifacts::synthetic(seed);
+    let mut solo = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+    let clamped: Vec<i64> = ids.iter().map(|&w| w.clamp(0, VOCAB - 1)).collect();
+    let want = solo.run_review(&clamped).unwrap();
+
+    let (core, handle) = start_core(seed, ServerOptions::default());
+    let mut client = connect(&handle);
+
+    // the one-shot serve path agrees with the solo ground truth
+    let p = client.call(&words(&ids)).unwrap();
+    let oneshot = client.wait(&p).unwrap();
+    assert_eq!((oneshot.pred, oneshot.v_out), (want.pred, want.v_out), "one-shot vs solo");
+
+    for split in 1..ids.len() {
+        let h = client.stream_open().unwrap();
+        let a1 = client.stream_append(&h, &words(&ids[..split])).unwrap();
+        let a2 = client.stream_append(&h, &words(&ids[split..])).unwrap();
+        assert!(
+            a2.cycles > a1.cycles,
+            "split {split}: append acks must report cumulative cycles"
+        );
+        let out = client.stream_read_out(&h).unwrap();
+        assert_eq!(
+            (out.pred, out.v_out, out.cycles),
+            (want.pred, want.v_out, want.cycles),
+            "split at word {split}: streamed ≠ one-shot"
+        );
+        let fin = client.stream_close(&h).unwrap();
+        assert!(fin.cycles > 0, "split {split}: close ack lost the cycle total");
+    }
+
+    // fully incremental: one word per append
+    let h = client.stream_open().unwrap();
+    for w in &ids {
+        client.stream_append(&h, &words(&[*w])).unwrap();
+    }
+    let out = client.stream_read_out(&h).unwrap();
+    assert_eq!(
+        (out.pred, out.v_out, out.cycles),
+        (want.pred, want.v_out, want.cycles),
+        "word-by-word streamed ≠ one-shot"
+    );
+    client.stream_close(&h).unwrap();
+
+    handle.stop();
+    core.shutdown();
+}
+
+/// The tentpole acceptance criterion, digits: appending the image
+/// frame once per membrane timestep reproduces the one-shot
+/// `run_image` bit-for-bit, both against a solo network and against
+/// the one-shot serve path.
+#[test]
+fn digits_stream_matches_one_shot_per_timestep() {
+    let a = DigitsArtifacts::synthetic(47);
+    let mut solo = DigitsNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+    let t = solo.t;
+    let img = a.test_x[0].clone();
+    let want = solo.run_image(&img).unwrap();
+
+    let a2 = a.clone();
+    let core = Arc::new(
+        ServeCore::start_with(ServerOptions::default(), 1, move || {
+            DigitsNetwork::from_artifacts(&a2, MacroConfig::fast())
+        })
+        .unwrap(),
+    );
+    let handle = serve_tcp("127.0.0.1:0", Arc::clone(&core)).unwrap();
+    let mut client = connect(&handle);
+
+    let input = WorkloadInput::Image { h: 28, w: 28, pixels: img.clone() };
+    let p = client.call(&input).unwrap();
+    let oneshot: WorkloadOutput = client.wait(&p).unwrap();
+    assert_eq!(oneshot.pred, want.pred, "one-shot serve vs solo prediction");
+    assert_eq!(oneshot.v_all, want.v_out, "one-shot serve vs solo potentials");
+
+    let h = client.stream_open().unwrap();
+    for step in 0..t {
+        let ack = client.stream_append(&h, &input).unwrap();
+        assert!(ack.cycles > 0, "timestep {step}: no cost attributed");
+    }
+    let out = client.stream_read_out(&h).unwrap();
+    assert_eq!(
+        (out.pred, &out.v_all, out.cycles),
+        (want.pred, &want.v_out, want.cycles),
+        "per-timestep streamed ≠ one-shot"
+    );
+    client.stream_close(&h).unwrap();
+
+    handle.stop();
+    core.shutdown();
+}
+
+/// TTL expiry: an idle stream is evicted, later operations on it are
+/// answered with `StreamExpired` (code 11), and the freed lane is
+/// reusable by a fresh open.
+#[test]
+fn idle_stream_expires_and_frees_its_lane() {
+    let (core, handle) = start_core(5, ServerOptions {
+        max_streams: 1,
+        stream_ttl: Duration::from_millis(25),
+        ..ServerOptions::default()
+    });
+    let mut client = connect(&handle);
+
+    let h = client.stream_open().unwrap();
+    client.stream_append(&h, &words(&[3])).unwrap();
+    std::thread::sleep(Duration::from_millis(80));
+
+    let err = client.stream_append(&h, &words(&[4])).unwrap_err();
+    assert_eq!(stream_code(&err), ErrorCode::StreamExpired);
+    // the connection survives a stream error, and the lane is free
+    // again: with max_streams = 1 this open only succeeds post-evict
+    let h2 = client.stream_open().unwrap();
+    client.stream_append(&h2, &words(&[3])).unwrap();
+    assert!(client.stream_read_out(&h2).unwrap().cycles > 0);
+    client.stream_close(&h2).unwrap();
+
+    let s = core.telemetry().stream_stats();
+    assert!(s.expired >= 1, "eviction must be counted: {s:?}");
+    handle.stop();
+    core.shutdown();
+}
+
+/// The session cap: the N+1th concurrent open is refused with
+/// `StreamLimit` (code 12); closing one stream frees a slot.
+#[test]
+fn stream_cap_rejects_excess_opens() {
+    let seed = 9;
+    let a = SentimentArtifacts::synthetic(seed);
+    let mut solo = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+    let w1 = solo.run_review(&[2]).unwrap();
+    let w2 = solo.run_review(&[9, 9]).unwrap();
+
+    let (core, handle) = start_core(seed, ServerOptions {
+        max_streams: 2,
+        ..ServerOptions::default()
+    });
+    let mut client = connect(&handle);
+
+    let h1 = client.stream_open().unwrap();
+    let h2 = client.stream_open().unwrap();
+    let err = client.stream_open().unwrap_err();
+    assert_eq!(stream_code(&err), ErrorCode::StreamLimit);
+
+    // both live streams still work, each bit-identical to its own
+    // solo run — interleaved appends never leak across lanes
+    client.stream_append(&h1, &words(&[2])).unwrap();
+    client.stream_append(&h2, &words(&[9])).unwrap();
+    client.stream_append(&h2, &words(&[9])).unwrap();
+    let o1 = client.stream_read_out(&h1).unwrap();
+    let o2 = client.stream_read_out(&h2).unwrap();
+    assert_eq!((o1.pred, o1.v_out, o1.cycles), (w1.pred, w1.v_out, w1.cycles), "h1 vs solo");
+    assert_eq!((o2.pred, o2.v_out, o2.cycles), (w2.pred, w2.v_out, w2.cycles), "h2 vs solo");
+
+    client.stream_close(&h1).unwrap();
+    let h3 = client.stream_open().unwrap();
+    client.stream_close(&h3).unwrap();
+    client.stream_close(&h2).unwrap();
+
+    let s = core.telemetry().stream_stats();
+    assert_eq!((s.opened, s.rejected, s.active), (3, 1, 0), "{s:?}");
+    handle.stop();
+    core.shutdown();
+}
+
+/// Streams are keyed per connection: another client cannot read or
+/// close a stream it does not own, even knowing its id.
+#[test]
+fn streams_are_scoped_to_their_connection() {
+    let (core, handle) = start_core(13, ServerOptions::default());
+    let mut owner = connect(&handle);
+    let mut intruder = connect(&handle);
+
+    let h = owner.stream_open().unwrap();
+    owner.stream_append(&h, &words(&[7])).unwrap();
+
+    let err = intruder.stream_read_out(&h).unwrap_err();
+    assert_eq!(stream_code(&err), ErrorCode::StreamExpired);
+    let err = intruder.stream_close(&h).unwrap_err();
+    assert_eq!(stream_code(&err), ErrorCode::StreamExpired);
+
+    // the owner's session is untouched by the failed intrusion
+    assert!(owner.stream_read_out(&h).unwrap().cycles > 0);
+    owner.stream_close(&h).unwrap();
+    handle.stop();
+    core.shutdown();
+}
+
+/// Abandoned sessions: a client that vanishes without closing its
+/// streams releases them on connection EOF, and a stop/drain with
+/// recently-pinned lanes completes without wedging.
+#[test]
+fn abandoned_streams_are_released_and_drain_never_wedges() {
+    let (core, handle) = start_core(17, ServerOptions::default());
+    {
+        let mut client = connect(&handle);
+        let h1 = client.stream_open().unwrap();
+        let h2 = client.stream_open().unwrap();
+        client.stream_append(&h1, &words(&[3])).unwrap();
+        client.stream_append(&h2, &words(&[5])).unwrap();
+        assert_eq!(core.streams().active(), 2);
+        // drop without stream_close: the socket close is the only signal
+    }
+    let gone_by = Instant::now() + Duration::from_secs(30);
+    while core.streams().active() > 0 {
+        assert!(Instant::now() < gone_by, "connection EOF never released its streams");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let s = core.telemetry().stream_stats();
+    assert_eq!((s.opened, s.closed, s.active), (2, 2, 0), "{s:?}");
+
+    // a second wave of pinned sessions, then an immediate drain: the
+    // listener's final sweep must not strand them or hang the join
+    let mut client = connect(&handle);
+    let h = client.stream_open().unwrap();
+    client.stream_append(&h, &words(&[4])).unwrap();
+    drop(client);
+    handle.stop();
+    core.shutdown();
+    assert_eq!(core.streams().active(), 0, "drain left a pinned lane behind");
+}
+
+/// The opt-in adaptive pacer, against a scripted server: soft-limit
+/// advertisements grow the inter-request delay multiplicatively from
+/// its base, a clear advertisement decays it, and the delay is capped.
+#[test]
+fn client_pacing_follows_soft_limit_advertisements() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // soft-limited twice, then clear, then soft-limited again (the
+    // fourth response checks growth restarts from the decayed value,
+    // not from the base)
+    let script = [
+        encode_backpressure(5, true),
+        encode_backpressure(6, true),
+        encode_backpressure(0, false),
+        encode_backpressure(7, true),
+    ];
+    let server = std::thread::spawn(move || {
+        let (s, _) = listener.accept().unwrap();
+        let mut w = s.try_clone().unwrap();
+        let mut r = FrameReader::new(s);
+        let f = r.next_frame().unwrap().expect("expected a hello");
+        assert_eq!(f.payload_type, PayloadType::Hello);
+        Frame::new(PayloadType::HelloAck, 0, vec![PROTOCOL_VERSION, CAP_BACKPRESSURE])
+            .write_to(&mut w)
+            .unwrap();
+        for flags in script {
+            let f = r.next_frame().unwrap().expect("expected an infer request");
+            assert_eq!(f.payload_type, PayloadType::InferRequest);
+            let resp =
+                WireResponse { pred: 1, v_out: 7, cycles: 10, latency_us: 5, batch: 1, worker: 0 };
+            resp.frame(f.request_id).unwrap().with_flags(flags).write_to(&mut w).unwrap();
+        }
+    });
+
+    let mut client = FrameClient::connect(addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    assert_eq!(
+        client.hello_with_caps(CAP_BACKPRESSURE).unwrap(),
+        (PROTOCOL_VERSION, CAP_BACKPRESSURE)
+    );
+    let (base, max) = (Duration::from_millis(1), Duration::from_millis(4));
+    client.enable_pacing(base, max);
+    assert_eq!(client.pacing_delay(), Duration::ZERO, "no delay before any advertisement");
+
+    let mut roundtrip = |want: Duration| {
+        let p = client.call(&words(&[1])).unwrap();
+        client.wait(&p).unwrap();
+        assert_eq!(client.pacing_delay(), want);
+    };
+    roundtrip(base); // first soft-limit arms the base delay
+    roundtrip(base * 2); // second doubles it
+    roundtrip(base); // clear halves it
+    roundtrip(base * 2); // growth resumes from the decayed value
+
+    server.join().unwrap();
+}

@@ -4,6 +4,11 @@
 //! each get exactly one response per request id with no cross-talk,
 //! and protocol violations are answered per the PROTOCOL.md contract.
 
+// These tests deliberately drive the original per-workload client
+// calls (`send_infer`/`next_result`, …): they pin the compatibility
+// guarantee that pre-stream clients keep working unchanged.
+#![allow(deprecated)]
+
 use impulse::coordinator::{Response, ServerOptions};
 use impulse::data::SentimentArtifacts;
 use impulse::macro_sim::MacroConfig;

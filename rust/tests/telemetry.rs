@@ -5,6 +5,10 @@
 //! clients while v1 clients keep seeing all-zero flags, and the
 //! Prometheus endpoint must expose the same registry.
 
+// The scripted load drives the original per-workload client calls on
+// purpose: pre-stream clients must keep producing identical counters.
+#![allow(deprecated)]
+
 use impulse::coordinator::{ServerOptions, WorkloadKind};
 use impulse::data::{DigitsArtifacts, SentimentArtifacts};
 use impulse::isa::InstructionKind;
