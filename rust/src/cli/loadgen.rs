@@ -1,0 +1,74 @@
+//! `impulse loadgen` — drive a scripted traffic scenario at a live
+//! server and assert its latency/throughput/error envelope.
+//!
+//! The scenario is a builtin name (`smoke`, `burst`, `ramp`, `mixed`,
+//! `stream`, `slowloris`, `fuzz`) or a path to a TOML scenario file
+//! (`docs/REPLAY.md` documents the format). The target server is any
+//! running `impulse serve --listen` instance; the envelope's p99 check
+//! reads the server's own `StatsRequest` telemetry, as a delta across
+//! the run. Exits nonzero when the envelope is violated.
+
+use impulse::replay::loadgen::{run_scenario, Scenario, BUILTIN_SCENARIOS};
+use impulse::Result;
+use std::path::Path;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let flags = super::Flags::parse(args);
+    let which = args.first().filter(|a| !a.starts_with("--")).ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: impulse loadgen <scenario> --addr HOST:PORT\n  builtin scenarios: {}",
+            BUILTIN_SCENARIOS.join(", ")
+        )
+    })?;
+    let addr = flags.get("addr").unwrap_or("127.0.0.1:7878");
+    let scenario = match Scenario::builtin(which) {
+        Some(s) => s,
+        None if Path::new(which).exists() => Scenario::from_file(Path::new(which))?,
+        None => anyhow::bail!(
+            "unknown scenario '{which}' (builtins: {}; or pass a scenario TOML path)",
+            BUILTIN_SCENARIOS.join(", ")
+        ),
+    };
+    eprintln!(
+        "impulse loadgen: scenario '{}' (seed {}) against {addr}: {} conn × {} req, \
+         {} stream(s)/conn × {} append(s), mix_digits {:.2}, ramp {}ms, \
+         {} slow-loris, {} fuzz frame(s)",
+        scenario.name,
+        scenario.seed,
+        scenario.connections,
+        scenario.requests_per_conn,
+        scenario.streams_per_conn,
+        scenario.appends_per_stream,
+        scenario.mix_digits,
+        scenario.ramp_ms,
+        scenario.slow_loris,
+        scenario.fuzz_frames,
+    );
+    let report = run_scenario(addr, &scenario)?;
+    println!(
+        "loadgen '{}': {} ok, {} error frame(s), {} transport error(s); \
+         error rate {:.3}, p99 {}us, {:.1} op/s",
+        scenario.name,
+        report.ok,
+        report.errors,
+        report.transport_errors,
+        report.error_rate(),
+        report.p99_us,
+        report.throughput_rps,
+    );
+    if report.is_ok() {
+        println!(
+            "envelope OK (min_ok {}, max_error_rate {:.3}{})",
+            scenario.envelope.min_ok,
+            scenario.envelope.max_error_rate,
+            if scenario.envelope.max_p99_us > 0 {
+                format!(", max_p99 {}us", scenario.envelope.max_p99_us)
+            } else {
+                String::new()
+            }
+        );
+        Ok(())
+    } else {
+        anyhow::bail!("envelope VIOLATED:\n  {}", report.violations.join("\n  "))
+    }
+}

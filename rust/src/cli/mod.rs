@@ -4,6 +4,8 @@ pub mod bench;
 pub mod eval;
 pub mod infer;
 pub mod info;
+pub mod loadgen;
+pub mod replay;
 pub mod report;
 pub mod serve;
 pub mod stats;

@@ -1,0 +1,121 @@
+//! `impulse replay` — re-execute a recorded capture and verify
+//! determinism.
+//!
+//! Loads a capture written by `impulse serve --record <dir>`, rebuilds
+//! a serve core from the capture's metadata (model, artifact source,
+//! engine, comparator, timesteps — pinned to one worker, no batching,
+//! exactly as the recorder ran), replays every connection's inbound
+//! bytes through a real TCP listener, and diffs response frames and
+//! V-digest checkpoints against the recording. Exits nonzero on the
+//! first divergence.
+//!
+//! `--engine fast|bit|lockstep` overrides the recorded engine: a
+//! capture recorded on the SWAR fast path must replay bit-identically
+//! on the bit-level engine (and vice versa) — the cross-engine
+//! equivalence claim, now checkable on real recorded traffic.
+
+use super::serve::parse_engine;
+use super::Flags;
+use impulse::config::RunConfig;
+use impulse::data::{artifacts_dir, DigitsArtifacts, SentimentArtifacts};
+use impulse::macro_sim::ComparatorMode;
+use impulse::replay::{runner::replay_capture, Capture};
+use impulse::serve::ServeCore;
+use impulse::snn::{DigitsNetwork, SentimentNetwork};
+use impulse::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let dir = args
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("usage: impulse replay <capture-dir> [--engine fast|bit|lockstep]")
+        })?;
+    let flags = Flags::parse(args);
+    let capture = Capture::load(Path::new(dir))?;
+    let core = core_for(&capture, &flags)?;
+    eprintln!(
+        "impulse replay: {} events from {dir} ({} / {} / engine {})",
+        capture.events.len(),
+        capture.meta_value("model").unwrap_or("sentiment"),
+        capture.meta_value("source").unwrap_or("artifacts"),
+        flags
+            .get("engine")
+            .unwrap_or_else(|| capture.meta_value("engine").unwrap_or("fast")),
+    );
+    let report = replay_capture(&capture, &core)?;
+    core.shutdown();
+    println!(
+        "replayed {} connection(s): {} bytes in, {} response frame(s) and {} V-digest(s) compared",
+        report.connections, report.bytes_in, report.frames_out, report.digests
+    );
+    match report.divergence {
+        None => {
+            println!("replay OK: bit-identical to the recording");
+            Ok(())
+        }
+        Some(d) => anyhow::bail!("replay DIVERGED: {d}"),
+    }
+}
+
+/// Rebuild the serving core a capture was recorded against, from its
+/// metadata (with `--engine` as the one allowed override).
+fn core_for(capture: &Capture, flags: &Flags) -> Result<Arc<ServeCore>> {
+    let mut cfg = RunConfig {
+        workers: 1,
+        batch: 1,
+        adaptive: false,
+        pipeline: false,
+        ..RunConfig::default()
+    };
+    if let Some(v) = capture.meta_value("engine") {
+        cfg.engine = parse_engine(v)?;
+    }
+    if let Some(v) = flags.get("engine") {
+        cfg.engine = parse_engine(v)?;
+    }
+    if let Some(v) = capture.meta_value("comparator") {
+        cfg.comparator = match v {
+            "sign" | "sign_bit" => ComparatorMode::SignBit,
+            "cout" | "msb_cout" => ComparatorMode::MsbCout,
+            other => anyhow::bail!("capture names unknown comparator '{other}'"),
+        };
+    }
+    if let Some(v) = capture.meta_value("timesteps") {
+        cfg.timesteps = v
+            .parse()
+            .map_err(|e| anyhow::anyhow!("capture timesteps '{v}': {e}"))?;
+    }
+    let mac = cfg.macro_config();
+    let mut opts = cfg.server_options();
+    opts.capture_digests = true;
+    let synthetic = match capture.meta_value("source") {
+        Some(s) if s.starts_with("synthetic:") => Some(
+            s["synthetic:".len()..]
+                .parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("capture source '{s}': {e}"))?,
+        ),
+        _ => None,
+    };
+    let core = match capture.meta_value("model").unwrap_or("sentiment") {
+        "sentiment" => {
+            let a = Arc::new(match synthetic {
+                Some(seed) => SentimentArtifacts::synthetic(seed),
+                None => SentimentArtifacts::load(artifacts_dir())?,
+            });
+            let vocab = a.emb_q.len() as i64;
+            ServeCore::start_with(opts, vocab, move || SentimentNetwork::from_artifacts(&a, mac))?
+        }
+        "digits" => {
+            let a = Arc::new(match synthetic {
+                Some(seed) => DigitsArtifacts::synthetic(seed),
+                None => DigitsArtifacts::load(artifacts_dir())?,
+            });
+            ServeCore::start_with(opts, 1, move || DigitsNetwork::from_artifacts(&a, mac))?
+        }
+        other => anyhow::bail!("capture names unknown model '{other}'"),
+    };
+    Ok(Arc::new(core))
+}

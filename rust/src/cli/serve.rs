@@ -30,6 +30,8 @@
 use super::Flags;
 use impulse::coordinator::{Response, WorkloadKind};
 use impulse::data::{artifacts_dir, DigitsArtifacts, SentimentArtifacts};
+use impulse::macro_sim::{ComparatorMode, Engine};
+use impulse::replay::Recorder;
 use impulse::serve::{
     install_shutdown_handler, serve_tcp, ClientSession, ServeCore, TcpServeHandle,
 };
@@ -37,6 +39,7 @@ use impulse::snn::{DigitsNetwork, SentimentNetwork};
 use impulse::telemetry::{serve_metrics, Telemetry, Transport};
 use impulse::Result;
 use std::io::{BufRead, Write};
+use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
@@ -71,19 +74,75 @@ fn write_response(out: &mut impl Write, r: &Response) -> Result<()> {
     Ok(())
 }
 
+/// The capture-metadata name of an engine (`docs/REPLAY.md`; also the
+/// `--engine` flag's accepted values).
+pub(crate) fn engine_name(e: Engine) -> &'static str {
+    match e {
+        Engine::Fast => "fast",
+        Engine::BitLevel => "bit",
+        Engine::Lockstep => "lockstep",
+    }
+}
+
+/// Parse an `--engine` flag value (the same names `[macro] engine`
+/// accepts in config files).
+pub(crate) fn parse_engine(v: &str) -> Result<Engine> {
+    Ok(match v {
+        "fast" => Engine::Fast,
+        "bit" | "bit_level" => Engine::BitLevel,
+        "lockstep" => Engine::Lockstep,
+        other => anyhow::bail!("unknown engine '{other}' (fast|bit|lockstep)"),
+    })
+}
+
+/// The capture-metadata name of a comparator mode.
+pub(crate) fn comparator_name(c: ComparatorMode) -> &'static str {
+    match c {
+        ComparatorMode::SignBit => "sign",
+        ComparatorMode::MsbCout => "cout",
+    }
+}
+
 pub fn run(args: &[String]) -> Result<()> {
     let flags = Flags::parse(args);
-    let cfg = super::run_config(&flags)?;
+    let mut cfg = super::run_config(&flags)?;
+    if let Some(v) = flags.get("engine") {
+        cfg.engine = parse_engine(v)?;
+    }
+    // --record <dir>: tap every connection's wire traffic and
+    // per-request V-digests into a capture (docs/REPLAY.md). The
+    // capture must be re-executable, so scheduling nondeterminism is
+    // pinned down: one worker, no batching, no pipelining.
+    let record_dir = flags.get("record").map(PathBuf::from);
+    if record_dir.is_some() {
+        anyhow::ensure!(
+            cfg.listen.is_some(),
+            "--record requires --listen <addr>: recording taps the TCP transport"
+        );
+        cfg.workers = 1;
+        cfg.batch = 1;
+        cfg.adaptive = false;
+        cfg.pipeline = false;
+    }
     let mac = cfg.macro_config();
     let mut opts = cfg.server_options();
+    opts.capture_digests = record_dir.is_some();
     // one registry for the whole process: the worker pool, the frame
     // listener, the stdio loop, and the metrics endpoint all share it
     let telemetry = Arc::new(Telemetry::new(cfg.telemetry_config()));
     opts.telemetry = Some(Arc::clone(&telemetry));
     let model = flags.get("model").unwrap_or("sentiment");
+    // --synthetic SEED serves the deterministic synthetic bundle
+    // instead of the compiled artifacts: meaningful only for
+    // differential work (record/replay, loadgen CI) — predictions are
+    // not a trained model's
+    let synthetic = flags.get_usize("synthetic").map(|s| s as u64);
     let core = match model {
         "sentiment" => {
-            let a = Arc::new(SentimentArtifacts::load(artifacts_dir())?);
+            let a = Arc::new(match synthetic {
+                Some(seed) => SentimentArtifacts::synthetic(seed),
+                None => SentimentArtifacts::load(artifacts_dir())?,
+            });
             let vocab = a.emb_q.len() as i64;
             if opts.adaptive {
                 // probe the mapped model for its real fused-lane budget so
@@ -102,7 +161,10 @@ pub fn run(args: &[String]) -> Result<()> {
                 "digits serving is framed-protocol only: pass --listen <addr> \
                  (images do not fit the stdio line protocol)"
             );
-            let a = Arc::new(DigitsArtifacts::load(artifacts_dir())?);
+            let a = Arc::new(match synthetic {
+                Some(seed) => DigitsArtifacts::synthetic(seed),
+                None => DigitsArtifacts::load(artifacts_dir())?,
+            });
             if opts.adaptive {
                 opts.adaptive_cap = DigitsNetwork::from_artifacts(&a, mac)?.max_batch_lanes();
             }
@@ -112,6 +174,38 @@ pub fn run(args: &[String]) -> Result<()> {
             })?)
         }
         other => anyhow::bail!("unknown --model '{other}' (sentiment|digits)"),
+    };
+    // attach the recorder before the listener starts so the very
+    // first accepted connection is already tapped
+    let recorder = match &record_dir {
+        Some(dir) => {
+            let source = match synthetic {
+                Some(seed) => format!("synthetic:{seed}"),
+                None => "artifacts".to_string(),
+            };
+            let meta: Vec<(String, String)> = [
+                ("protocol", impulse::serve::PROTOCOL_VERSION.to_string()),
+                ("model", model.to_string()),
+                ("source", source),
+                ("engine", engine_name(cfg.engine).to_string()),
+                ("comparator", comparator_name(cfg.comparator).to_string()),
+                ("timesteps", cfg.timesteps.to_string()),
+            ]
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect();
+            let (rec, path) = Recorder::to_dir(dir, &meta)?;
+            let rec = Arc::new(rec);
+            core.set_recorder(Arc::clone(&rec));
+            eprintln!(
+                "impulse serve: recording wire traffic + V-digests to {} \
+                 (replay with `impulse replay {}`)",
+                path.display(),
+                dir.display()
+            );
+            Some(rec)
+        }
+        None => None,
     };
     let batching = opts.batching_label();
     let metrics = match cfg.metrics_listen.as_deref() {
@@ -157,6 +251,10 @@ pub fn run(args: &[String]) -> Result<()> {
         h.stop();
     }
     core.shutdown();
+    if let Some(rec) = recorder {
+        rec.flush()?;
+        eprintln!("impulse serve: capture complete ({} events)", rec.len());
+    }
     Ok(())
 }
 

@@ -69,6 +69,13 @@ pub struct Response {
     pub batch_size: usize,
     /// Set when inference failed; the numeric fields are zeroed then.
     pub err: Option<String>,
+    /// Post-request V_MEM digest of the worker replica that served
+    /// this request ([`Workload::v_digest`]), captured only when
+    /// [`ServerOptions::capture_digests`] is on and the workload
+    /// exposes membrane state. `None` on error responses. Never
+    /// serialized onto the wire — this is the record/replay
+    /// checkpoint's server-side tap.
+    pub v_digest: Option<u64>,
 }
 
 /// Aggregated server statistics.
@@ -118,6 +125,11 @@ pub struct ServerOptions {
     /// Idle time after which a streaming session is evicted (swept by
     /// the TCP accept loop and lazily by every stream operation).
     pub stream_ttl: Duration,
+    /// Capture a [`Workload::v_digest`] after every served request and
+    /// carry it on [`Response::v_digest`]. Off by default (a digest
+    /// walks every macro's V_MEM); `impulse serve --record` and the
+    /// replay runner turn it on.
+    pub capture_digests: bool,
 }
 
 impl ServerOptions {
@@ -146,6 +158,7 @@ impl Default for ServerOptions {
             telemetry: None,
             max_streams: 8,
             stream_ttl: Duration::from_secs(120),
+            capture_digests: false,
         }
     }
 }
@@ -544,6 +557,11 @@ fn serve_batch<W: Workload>(
     };
     match outcome {
         Ok(results) => {
+            // One digest per batch: a fused batch finishes atomically,
+            // so every member observes the same post-batch V_MEM. In
+            // record mode batches are forced to width 1, making this
+            // the exact post-request checkpoint.
+            let v_digest = if opts.capture_digests { net.v_digest() } else { None };
             let energy_fj = tele.map(|t| {
                 let total = record_batch_energy(net, t);
                 let weights: Vec<f64> = results.iter().map(|r| r.cycles as f64).collect();
@@ -568,6 +586,7 @@ fn serve_batch<W: Workload>(
                     worker,
                     batch_size: n,
                     err: None,
+                    v_digest,
                 });
             }
         }
@@ -615,6 +634,7 @@ fn serve_batch<W: Workload>(
                         worker,
                         batch_size: 1,
                         err: None,
+                        v_digest: if opts.capture_digests { net.v_digest() } else { None },
                     },
                     Err(e) => err_response(q, worker, &e),
                 };
@@ -637,6 +657,7 @@ fn err_response(q: &Queued, worker: usize, e: &anyhow::Error) -> Response {
         worker,
         batch_size: 1,
         err: Some(format!("{e:#}")),
+        v_digest: None,
     }
 }
 

@@ -144,6 +144,15 @@ pub trait Workload: Send + 'static {
     fn read_out(&mut self) -> Result<WorkloadOutput> {
         anyhow::bail!("this workload does not support streaming sessions")
     }
+
+    /// FNV-1a digest of the workload's current V_MEM state — the
+    /// record/replay checkpoint (`docs/REPLAY.md`). Must be a pure
+    /// state read: no instruction issued, no counter moved. `None`
+    /// (the default) when the workload does not expose membrane state;
+    /// recording then captures wire bytes only.
+    fn v_digest(&self) -> Option<u64> {
+        None
+    }
 }
 
 fn want_words(input: &WorkloadInput) -> Result<&[i64]> {
@@ -216,6 +225,10 @@ impl Workload for SentimentNetwork {
     fn read_out(&mut self) -> Result<WorkloadOutput> {
         let (pred, v_out, cycles) = self.stream_read_out();
         Ok(WorkloadOutput { pred, v_out, v_all: vec![v_out], cycles })
+    }
+
+    fn v_digest(&self) -> Option<u64> {
+        Some(SentimentNetwork::v_digest(self))
     }
 }
 
@@ -291,6 +304,10 @@ impl Workload for DigitsNetwork {
         let (pred, v_all, cycles) = self.stream_read_out()?;
         let v_out = v_all[pred as usize];
         Ok(WorkloadOutput { pred, v_out, v_all, cycles })
+    }
+
+    fn v_digest(&self) -> Option<u64> {
+        Some(DigitsNetwork::v_digest(self))
     }
 }
 

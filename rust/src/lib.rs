@@ -25,6 +25,9 @@
 //! - [`telemetry`] — live serving telemetry: the lock-free registry,
 //!   `StatsRequest`/`StatsResponse` snapshots, Prometheus exposition,
 //!   and backpressure signalling.
+//! - [`replay`] — deterministic record/replay of serve traffic (wire
+//!   taps + per-request V_MEM digests, `docs/REPLAY.md`) and the
+//!   scripted scenario load generator.
 //! - [`energy`] — silicon-calibrated power/energy/EDP, Shmoo, and area
 //!   models.
 //! - [`baselines`] — LSTM baseline, non-fused accelerator model, and the
@@ -52,6 +55,7 @@ pub mod metrics;
 pub mod neuron;
 pub mod periph;
 pub mod proptest_lite;
+pub mod replay;
 pub mod runtime;
 pub mod serve;
 pub mod snn;

@@ -1045,6 +1045,27 @@ impl ImpulseMacro {
     pub fn config(&self) -> &MacroConfig {
         &self.config
     }
+
+    /// Fold this macro's V_MEM rows into an FNV-1a digest accumulator.
+    ///
+    /// Reads engine state directly — no instruction is issued, so the
+    /// cycle clock, instruction counters, and trace are untouched; a
+    /// digest taken between requests observes exactly the membrane
+    /// state the next request starts from. In lockstep mode the fast
+    /// engine is read (exec_engines already proved both agree).
+    pub fn fold_vmem_digest(&self, h: &mut u64) {
+        for r in 0..V_ROWS {
+            let row = match (&self.fast, &self.bit) {
+                (Some(f), _) => f.vmem[r],
+                (None, Some(b)) => b.vmem.row(r),
+                (None, None) => unreachable!("no engine configured"),
+            };
+            for b in row.to_le_bytes() {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(0x100_0000_01B3);
+            }
+        }
+    }
 }
 
 const ALL_KINDS: [InstructionKind; 7] = [

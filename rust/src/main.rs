@@ -18,6 +18,11 @@
 //!            [--adaptive] [--pipeline]
 //!            [--metrics-listen ADDR]              Prometheus text endpoint
 //!            [--queue-soft-limit N]               backpressure threshold
+//!            [--record DIR] [--synthetic SEED]    deterministic capture mode
+//!   replay   DIR [--engine fast|bit|lockstep]     re-execute a capture, diff
+//!                                                 frames + V-digests
+//!   loadgen  SCENARIO --addr ADDR                 scripted load + envelope
+//!                                                 assertions via telemetry
 //!   stats    ADDR                                 live telemetry of a server
 //!   shmoo                                         print the Fig 8 grid
 //!   sweep    [--neuron rmp|if|lif]                EDP vs sparsity (Fig 11b)
@@ -44,6 +49,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "eval" => cli::eval::run(rest),
         "bench" => cli::bench::run(rest),
         "serve" => cli::serve::run(rest),
+        "replay" => cli::replay::run(rest),
+        "loadgen" => cli::loadgen::run(rest),
         "stats" => cli::stats::run(rest),
         "shmoo" => cli::report::shmoo(),
         "sweep" => cli::report::sweep(rest),
@@ -108,7 +115,30 @@ COMMANDS:
                                     backpressure (0 = always, for drains);
                                     --max-streams caps concurrent pinned
                                     streaming sessions, --stream-ttl-s
-                                    their idle eviction time
+                                    their idle eviction time.
+                                    --record DIR taps every connection's
+                                    wire traffic + per-request V_MEM
+                                    digests into DIR/capture.imp1cap
+                                    (forces 1 worker, no batching);
+                                    --synthetic SEED serves the
+                                    deterministic synthetic bundle
+                                    instead of compiled artifacts;
+                                    --engine overrides the execution
+                                    engine (fast|bit|lockstep)
+    replay DIR [--engine E]         re-execute a capture against a core
+                                    rebuilt from its metadata; diffs
+                                    response frames and V-digests,
+                                    exits nonzero on divergence
+                                    (docs/REPLAY.md). --engine replays
+                                    on a different engine — cross-
+                                    engine bit-identity on recorded
+                                    traffic
+    loadgen SCENARIO --addr ADDR    drive a scripted scenario (smoke,
+                                    burst, ramp, mixed, stream,
+                                    slowloris, fuzz, or a TOML file) at
+                                    a live server; asserts min-ok /
+                                    error-rate / p99 envelopes via the
+                                    server's own StatsRequest telemetry
     stats ADDR                      fetch a running server's live
                                     telemetry (StatsRequest over the
                                     frame protocol): requests, energy,

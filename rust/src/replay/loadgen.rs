@@ -1,0 +1,658 @@
+//! Scripted scenario load generation against a live framed server.
+//!
+//! `impulse loadgen <scenario>` drives a mix of one-shot inference,
+//! streaming sessions with randomized chunk splits, slow-loris
+//! trickle connections, and malformed-frame fuzz at a running
+//! `impulse serve --listen` instance, then asserts an **envelope** —
+//! minimum completed requests, maximum error rate, maximum p99
+//! latency — read back over the wire via the `StatsRequest` (0x14)
+//! telemetry the server already exposes. The p99 check uses the
+//! *delta* of the TCP transport histogram across the run, so a
+//! long-lived server's history does not pollute the measurement.
+//!
+//! Scenarios are deterministic: every random choice (request mix,
+//! chunk sizes, fuzz mutations) flows from the scenario seed through
+//! [`XorShiftRng`], so a failing run reproduces with the same seed.
+
+use crate::bits::XorShiftRng;
+use crate::config::TomlDoc;
+use crate::coordinator::WorkloadInput;
+use crate::serve::{FrameClient, ServerError};
+use crate::telemetry::{Transport, TransportStats};
+use crate::Result;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+pub use crate::telemetry::StatsSnapshot;
+
+/// Pass/fail bounds a scenario run is held to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Envelope {
+    /// Minimum successfully answered requests (one-shot + stream ops).
+    pub min_ok: u64,
+    /// Maximum tolerated error fraction over all attempted operations
+    /// (server-answered error frames and transport failures alike).
+    pub max_error_rate: f64,
+    /// Maximum tolerated server-side p99 latency in microseconds, per
+    /// the TCP transport histogram delta; `0` disables the check.
+    pub max_p99_us: u64,
+}
+
+impl Default for Envelope {
+    fn default() -> Envelope {
+        Envelope { min_ok: 1, max_error_rate: 0.0, max_p99_us: 0 }
+    }
+}
+
+/// One scripted traffic scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Display name (also the builtin lookup key).
+    pub name: String,
+    /// Seed for every random choice the scenario makes.
+    pub seed: u64,
+    /// Concurrent request connections.
+    pub connections: usize,
+    /// One-shot inference requests per connection.
+    pub requests_per_conn: usize,
+    /// Fraction of one-shot requests sent as `DigitsInferRequest`
+    /// (the rest are sentiment word requests). Against a single-model
+    /// server the foreign kind is *expected* to answer an error frame;
+    /// the envelope's error budget accounts for it.
+    pub mix_digits: f64,
+    /// Streaming sessions per connection (words appended in chunks of
+    /// random length, one read-out, then close).
+    pub streams_per_conn: usize,
+    /// Chunk appends per streaming session.
+    pub appends_per_stream: usize,
+    /// Stagger connection start times across this window (0 = all at
+    /// once, i.e. a burst).
+    pub ramp_ms: u64,
+    /// Extra slow-loris connections: a valid request trickled
+    /// byte-by-byte. The server must still answer it — and must keep
+    /// serving everyone else meanwhile.
+    pub slow_loris: usize,
+    /// Malformed frames to throw at the server (seeded mutations of a
+    /// valid frame). Each must be answered with an error frame or a
+    /// clean close — never a hang — and the server must stay live.
+    pub fuzz_frames: usize,
+    /// The pass/fail bounds.
+    pub envelope: Envelope,
+}
+
+impl Default for Scenario {
+    fn default() -> Scenario {
+        Scenario {
+            name: "smoke".to_string(),
+            seed: 7,
+            connections: 2,
+            requests_per_conn: 8,
+            mix_digits: 0.0,
+            streams_per_conn: 1,
+            appends_per_stream: 4,
+            ramp_ms: 0,
+            slow_loris: 0,
+            fuzz_frames: 0,
+            envelope: Envelope { min_ok: 16, max_error_rate: 0.0, max_p99_us: 0 },
+        }
+    }
+}
+
+/// Builtin scenario names, in presentation order.
+pub const BUILTIN_SCENARIOS: [&str; 7] =
+    ["smoke", "burst", "ramp", "mixed", "stream", "slowloris", "fuzz"];
+
+impl Scenario {
+    /// Look up a builtin scenario by name.
+    pub fn builtin(name: &str) -> Option<Scenario> {
+        let base = Scenario::default();
+        let s = match name {
+            "smoke" => base,
+            "burst" => Scenario {
+                name: "burst".into(),
+                connections: 8,
+                requests_per_conn: 25,
+                streams_per_conn: 0,
+                envelope: Envelope { min_ok: 200, max_error_rate: 0.0, max_p99_us: 0 },
+                ..base
+            },
+            "ramp" => Scenario {
+                name: "ramp".into(),
+                connections: 4,
+                requests_per_conn: 15,
+                ramp_ms: 500,
+                envelope: Envelope { min_ok: 60, max_error_rate: 0.0, max_p99_us: 0 },
+                ..base
+            },
+            "mixed" => Scenario {
+                name: "mixed".into(),
+                connections: 4,
+                requests_per_conn: 12,
+                mix_digits: 0.5,
+                streams_per_conn: 2,
+                // ~half the one-shots target the kind the server does
+                // not host and are answered with error frames
+                envelope: Envelope { min_ok: 24, max_error_rate: 0.65, max_p99_us: 0 },
+                ..base
+            },
+            "stream" => Scenario {
+                name: "stream".into(),
+                connections: 2,
+                requests_per_conn: 0,
+                streams_per_conn: 4,
+                appends_per_stream: 16,
+                envelope: Envelope { min_ok: 100, max_error_rate: 0.0, max_p99_us: 0 },
+                ..base
+            },
+            "slowloris" => Scenario {
+                name: "slowloris".into(),
+                connections: 2,
+                requests_per_conn: 6,
+                slow_loris: 4,
+                envelope: Envelope { min_ok: 12, max_error_rate: 0.0, max_p99_us: 0 },
+                ..base
+            },
+            "fuzz" => Scenario {
+                name: "fuzz".into(),
+                connections: 2,
+                requests_per_conn: 6,
+                streams_per_conn: 0,
+                fuzz_frames: 64,
+                envelope: Envelope { min_ok: 12, max_error_rate: 0.0, max_p99_us: 0 },
+                ..base
+            },
+            _ => return None,
+        };
+        Some(s)
+    }
+
+    /// Load a scenario from a TOML file (`[scenario]` + `[envelope]`
+    /// sections; every key optional, defaulting to the smoke
+    /// scenario — the format is documented in `docs/REPLAY.md`).
+    pub fn from_file(path: &std::path::Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading scenario {}: {e}", path.display()))?;
+        let doc = TomlDoc::parse(&text)?;
+        let mut s = Scenario::default();
+        let sec = "scenario";
+        if let Some(v) = doc.get_str(sec, "name") {
+            s.name = v.to_string();
+        }
+        let usize_of = |v: i64| usize::try_from(v).unwrap_or(0);
+        if let Some(v) = doc.get_i64(sec, "seed") {
+            s.seed = v as u64;
+        }
+        if let Some(v) = doc.get_i64(sec, "connections") {
+            s.connections = usize_of(v);
+        }
+        if let Some(v) = doc.get_i64(sec, "requests_per_conn") {
+            s.requests_per_conn = usize_of(v);
+        }
+        if let Some(v) = doc.get_f64(sec, "mix_digits") {
+            s.mix_digits = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = doc.get_i64(sec, "streams_per_conn") {
+            s.streams_per_conn = usize_of(v);
+        }
+        if let Some(v) = doc.get_i64(sec, "appends_per_stream") {
+            s.appends_per_stream = usize_of(v);
+        }
+        if let Some(v) = doc.get_i64(sec, "ramp_ms") {
+            s.ramp_ms = v as u64;
+        }
+        if let Some(v) = doc.get_i64(sec, "slow_loris") {
+            s.slow_loris = usize_of(v);
+        }
+        if let Some(v) = doc.get_i64(sec, "fuzz_frames") {
+            s.fuzz_frames = usize_of(v);
+        }
+        if let Some(v) = doc.get_i64("envelope", "min_ok") {
+            s.envelope.min_ok = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_f64("envelope", "max_error_rate") {
+            s.envelope.max_error_rate = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = doc.get_i64("envelope", "max_p99_us") {
+            s.envelope.max_p99_us = v.max(0) as u64;
+        }
+        Ok(s)
+    }
+}
+
+/// The outcome of one scenario run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenReport {
+    /// Successfully answered operations (inference + stream ops +
+    /// slow-loris completions).
+    pub ok: u64,
+    /// Server-answered error frames (the protocol's per-request error
+    /// path — the connection survived).
+    pub errors: u64,
+    /// Transport-level failures (connect refused, unexpected close,
+    /// undecodable response).
+    pub transport_errors: u64,
+    /// Server-side p99 latency in microseconds over the run, from the
+    /// TCP transport histogram delta (0 when nothing was measured).
+    pub p99_us: u64,
+    /// Completed operations per wall-clock second.
+    pub throughput_rps: f64,
+    /// Envelope violations, empty on a passing run.
+    pub violations: Vec<String>,
+}
+
+impl LoadgenReport {
+    /// Whether the run stayed inside its envelope.
+    pub fn is_ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// All attempted operations.
+    pub fn attempted(&self) -> u64 {
+        self.ok + self.errors + self.transport_errors
+    }
+
+    /// Errors (both classes) as a fraction of attempts (0 when none).
+    pub fn error_rate(&self) -> f64 {
+        if self.attempted() == 0 {
+            0.0
+        } else {
+            (self.errors + self.transport_errors) as f64 / self.attempted() as f64
+        }
+    }
+}
+
+/// Per-thread tally folded into the report at join time.
+#[derive(Clone, Copy, Debug, Default)]
+struct Tally {
+    ok: u64,
+    errors: u64,
+    transport: u64,
+}
+
+impl Tally {
+    /// Classify one operation outcome: an `Err` carrying a
+    /// [`ServerError`] is a served error frame, anything else a
+    /// transport failure.
+    fn count<T>(&mut self, r: &Result<T>) {
+        match r {
+            Ok(_) => self.ok += 1,
+            Err(e) if e.downcast_ref::<ServerError>().is_some() => self.errors += 1,
+            Err(_) => self.transport += 1,
+        }
+    }
+}
+
+/// A deterministic sentiment request: 1–8 word ids in `[0, 20)` (the
+/// synthetic vocabulary).
+fn random_words(rng: &mut XorShiftRng) -> Vec<i64> {
+    let n = 1 + rng.gen_range(8) as usize;
+    (0..n).map(|_| rng.gen_range(20) as i64).collect()
+}
+
+/// A deterministic sparse 28×28 image (~10% active pixels), the shape
+/// the digits workload requires.
+fn random_image(rng: &mut XorShiftRng) -> WorkloadInput {
+    let pixels = (0..784)
+        .map(|_| if rng.gen_bool(0.1) { 1.0 } else { 0.0 })
+        .collect();
+    WorkloadInput::Image { h: 28, w: 28, pixels }
+}
+
+/// Run one request connection: `requests_per_conn` one-shot calls in
+/// the scenario's kind mix, then `streams_per_conn` streaming sessions
+/// with random chunk splits.
+fn run_conn(addr: &str, sc: &Scenario, idx: usize) -> Tally {
+    let mut tally = Tally::default();
+    let mut rng = XorShiftRng::new(sc.seed ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut client = match FrameClient::connect(addr) {
+        Ok(c) => c,
+        Err(_) => {
+            tally.transport += 1;
+            return tally;
+        }
+    };
+    if client.hello().is_err() {
+        tally.transport += 1;
+        return tally;
+    }
+    for _ in 0..sc.requests_per_conn {
+        let input = if rng.gen_f64() < sc.mix_digits {
+            random_image(&mut rng)
+        } else {
+            WorkloadInput::Words(random_words(&mut rng))
+        };
+        let outcome = client.call(&input).and_then(|p| client.wait(&p));
+        tally.count(&outcome);
+    }
+    for _ in 0..sc.streams_per_conn {
+        let h = match client.stream_open() {
+            Ok(h) => {
+                tally.ok += 1;
+                h
+            }
+            Err(e) => {
+                tally.count::<()>(&Err(e));
+                continue;
+            }
+        };
+        for _ in 0..sc.appends_per_stream {
+            // random chunk split: 1–4 word ids per append
+            let n = 1 + rng.gen_range(4) as usize;
+            let chunk =
+                WorkloadInput::Words((0..n).map(|_| rng.gen_range(20) as i64).collect());
+            let outcome = client.stream_append(&h, &chunk);
+            tally.count(&outcome);
+        }
+        tally.count(&client.stream_read_out(&h));
+        tally.count(&client.stream_close(&h));
+    }
+    tally
+}
+
+/// A slow-loris connection: one valid request trickled byte-by-byte.
+/// A correct server answers once the frame completes; its other
+/// clients never notice.
+fn run_slow_loris(addr: &str, sc: &Scenario, idx: usize) -> Tally {
+    let mut tally = Tally::default();
+    let mut rng =
+        XorShiftRng::new(sc.seed ^ 0x510F ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let outcome = slow_loris_once(addr, &mut rng);
+    tally.count(&outcome);
+    tally
+}
+
+/// Trickle one valid request byte-by-byte and require its answer.
+fn slow_loris_once(addr: &str, rng: &mut XorShiftRng) -> Result<()> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_nodelay(true).ok();
+    s.set_read_timeout(Some(Duration::from_secs(20)))?;
+    let words = random_words(rng);
+    let payload = crate::serve::encode_infer_request(&words).map_err(anyhow::Error::from)?;
+    let frame =
+        crate::serve::Frame::new(crate::serve::PayloadType::InferRequest, 1, payload).encode();
+    for b in frame {
+        s.write_all(&[b])?;
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // the server must answer the completed frame
+    let mut reader = crate::serve::FrameReader::new(s);
+    let f = reader
+        .next_frame()
+        .map_err(anyhow::Error::from)?
+        .ok_or_else(|| anyhow::anyhow!("connection closed before the trickled answer"))?;
+    anyhow::ensure!(
+        f.payload_type == crate::serve::PayloadType::InferResponse,
+        "trickled request answered with {:?}",
+        f.payload_type
+    );
+    Ok(())
+}
+
+/// Throw seeded malformed frames at the server. Every mutation must be
+/// answered with an error frame or a clean close — a hang or a panic
+/// fails the scenario as a transport error. Fuzz outcomes do not count
+/// toward `ok`/`errors`: the envelope judges the legitimate traffic.
+fn run_fuzz(addr: &str, sc: &Scenario) -> Tally {
+    let mut tally = Tally::default();
+    let mut rng = XorShiftRng::new(sc.seed ^ 0xF0_22);
+    for _ in 0..sc.fuzz_frames {
+        let outcome = fuzz_once(addr, &mut rng);
+        if outcome.is_err() {
+            tally.transport += 1;
+        }
+    }
+    tally
+}
+
+/// One fuzz shot: mutate a valid frame, send it, and require an error
+/// frame or EOF within the timeout.
+fn fuzz_once(addr: &str, rng: &mut XorShiftRng) -> Result<()> {
+    let payload = crate::serve::encode_infer_request(&[1, 2, 3]).map_err(anyhow::Error::from)?;
+    let mut bytes =
+        crate::serve::Frame::new(crate::serve::PayloadType::InferRequest, 9, payload).encode();
+    match rng.gen_range(4) {
+        0 => {
+            // truncate mid-frame
+            let keep = 1 + rng.gen_range(bytes.len() as u64 - 1) as usize;
+            bytes.truncate(keep);
+        }
+        1 => {
+            // flip one byte anywhere (magic, version, type, CRC, …)
+            let i = rng.gen_range(bytes.len() as u64) as usize;
+            bytes[i] ^= 1 << rng.gen_range(8);
+        }
+        2 => {
+            // oversized length prefix
+            let n = (crate::serve::MAX_PAYLOAD as u32) + 1 + rng.gen_range(1 << 16) as u32;
+            bytes[16..20].copy_from_slice(&n.to_be_bytes());
+        }
+        _ => {
+            // unknown payload type
+            bytes[5] = 0x20 + rng.gen_range(0x5F) as u8;
+        }
+    }
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(10)))?;
+    s.write_all(&bytes)?;
+    let _ = s.shutdown(std::net::Shutdown::Write);
+    // drain: either an error frame arrives or the server closes; a
+    // read timeout means the connection wedged — the one failure mode
+    let mut buf = [0u8; 1024];
+    loop {
+        match s.read(&mut buf) {
+            Ok(0) => return Ok(()),
+            Ok(_) => continue,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                anyhow::bail!("server neither answered nor closed a malformed-frame connection")
+            }
+            Err(_) => return Ok(()),
+        }
+    }
+}
+
+/// The TCP transport histogram delta between two snapshots (so a
+/// long-lived server's history does not pollute this run's envelope).
+fn tcp_delta(before: &StatsSnapshot, after: &StatsSnapshot) -> Option<TransportStats> {
+    let b = before.transport(Transport::Tcp);
+    let a = after.transport(Transport::Tcp)?;
+    let (b_count, b_sum, b_buckets) = match b {
+        Some(b) => (b.count, b.sum_us, b.buckets.clone()),
+        None => (0, 0, vec![0; a.buckets.len()]),
+    };
+    Some(TransportStats {
+        transport: Transport::Tcp,
+        count: a.count.saturating_sub(b_count),
+        sum_us: a.sum_us.saturating_sub(b_sum),
+        buckets: a
+            .buckets
+            .iter()
+            .zip(b_buckets.iter().chain(std::iter::repeat(&0)))
+            .map(|(x, y)| x.saturating_sub(*y))
+            .collect(),
+    })
+}
+
+/// Drive `scenario` at the server on `addr` and judge the run against
+/// its envelope. The report's `violations` list is empty on a pass;
+/// the CLI exits nonzero otherwise.
+pub fn run_scenario(addr: &str, scenario: &Scenario) -> Result<LoadgenReport> {
+    let mut stats_client = FrameClient::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e} (is `impulse serve` up?)"))?;
+    stats_client.hello()?;
+    let (before, _) = stats_client.stats()?;
+
+    let t0 = Instant::now();
+    let mut threads: Vec<std::thread::JoinHandle<Tally>> = Vec::new();
+    for idx in 0..scenario.connections {
+        let addr = addr.to_string();
+        let sc = scenario.clone();
+        threads.push(std::thread::spawn(move || {
+            if sc.ramp_ms > 0 && sc.connections > 1 {
+                // stagger starts across the ramp window
+                let delay = sc.ramp_ms * idx as u64 / sc.connections as u64;
+                std::thread::sleep(Duration::from_millis(delay));
+            }
+            run_conn(&addr, &sc, idx)
+        }));
+    }
+    for idx in 0..scenario.slow_loris {
+        let addr = addr.to_string();
+        let sc = scenario.clone();
+        threads.push(std::thread::spawn(move || run_slow_loris(&addr, &sc, idx)));
+    }
+    if scenario.fuzz_frames > 0 {
+        let addr = addr.to_string();
+        let sc = scenario.clone();
+        threads.push(std::thread::spawn(move || run_fuzz(&addr, &sc)));
+    }
+
+    let mut total = Tally::default();
+    for t in threads {
+        let tally = t.join().map_err(|_| anyhow::anyhow!("scenario worker panicked"))?;
+        total.ok += tally.ok;
+        total.errors += tally.errors;
+        total.transport += tally.transport;
+    }
+    let elapsed = t0.elapsed();
+
+    // liveness probe: after fuzz/slow-loris abuse a fresh client must
+    // still be served normally
+    let mut probe = FrameClient::connect(addr)?;
+    probe.hello()?;
+    let pending = probe.call(&WorkloadInput::Words(vec![1, 2, 3]))?;
+    let live = probe.wait(&pending);
+    match live {
+        Ok(_) => total.ok += 1,
+        Err(ref e) if e.downcast_ref::<ServerError>().is_some() => total.errors += 1,
+        Err(_) => total.transport += 1,
+    }
+
+    let (after, _) = stats_client.stats()?;
+    let p99_us = tcp_delta(&before, &after).map(|d| d.quantile_us(0.99)).unwrap_or(0);
+
+    let mut report = LoadgenReport {
+        ok: total.ok,
+        errors: total.errors,
+        transport_errors: total.transport,
+        p99_us,
+        throughput_rps: total.ok as f64 / elapsed.as_secs_f64().max(1e-9),
+        violations: Vec::new(),
+    };
+    let env = &scenario.envelope;
+    if report.ok < env.min_ok {
+        report.violations.push(format!(
+            "completed {} operations, envelope requires >= {}",
+            report.ok, env.min_ok
+        ));
+    }
+    if report.error_rate() > env.max_error_rate {
+        report.violations.push(format!(
+            "error rate {:.3} ({} errors + {} transport over {} attempts) exceeds envelope {:.3}",
+            report.error_rate(),
+            report.errors,
+            report.transport_errors,
+            report.attempted(),
+            env.max_error_rate
+        ));
+    }
+    if env.max_p99_us > 0 && report.p99_us > env.max_p99_us {
+        report.violations.push(format!(
+            "p99 latency {}us exceeds envelope {}us",
+            report.p99_us, env.max_p99_us
+        ));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_and_unknown_does_not() {
+        for name in BUILTIN_SCENARIOS {
+            let s = Scenario::builtin(name).expect(name);
+            assert_eq!(s.name, name);
+            assert!(s.envelope.min_ok >= 1);
+        }
+        assert!(Scenario::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn scenario_file_overrides_defaults() {
+        let dir = std::env::temp_dir().join(format!("impulse-ldg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("scenario.toml");
+        std::fs::write(
+            &path,
+            "[scenario]\nname = \"custom\"\nseed = 99\nconnections = 3\nmix_digits = 0.25\n\
+             fuzz_frames = 5\n\n[envelope]\nmin_ok = 4\nmax_error_rate = 0.5\nmax_p99_us = 1000\n",
+        )
+        .unwrap();
+        let s = Scenario::from_file(&path).unwrap();
+        assert_eq!(s.name, "custom");
+        assert_eq!(s.seed, 99);
+        assert_eq!(s.connections, 3);
+        assert!((s.mix_digits - 0.25).abs() < 1e-12);
+        assert_eq!(s.fuzz_frames, 5);
+        assert_eq!(s.envelope.min_ok, 4);
+        assert!((s.envelope.max_error_rate - 0.5).abs() < 1e-12);
+        assert_eq!(s.envelope.max_p99_us, 1000);
+        // unspecified keys keep the smoke defaults
+        assert_eq!(s.requests_per_conn, Scenario::default().requests_per_conn);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn report_math_and_envelope_accessors() {
+        let r = LoadgenReport {
+            ok: 8,
+            errors: 1,
+            transport_errors: 1,
+            p99_us: 500,
+            throughput_rps: 100.0,
+            violations: vec![],
+        };
+        assert!(r.is_ok());
+        assert_eq!(r.attempted(), 10);
+        assert!((r.error_rate() - 0.2).abs() < 1e-12);
+        let empty = LoadgenReport::default();
+        assert_eq!(empty.error_rate(), 0.0);
+    }
+
+    #[test]
+    fn tcp_delta_subtracts_history() {
+        let row = |count: u64, b4: u64| TransportStats {
+            transport: Transport::Tcp,
+            count,
+            sum_us: count * 10,
+            buckets: {
+                let mut b = vec![0u64; 28];
+                b[4] = b4;
+                b
+            },
+        };
+        let before = StatsSnapshot {
+            queue_depth: 0,
+            queue_soft_limit: 0,
+            soft_limited: false,
+            batches: 0,
+            batch_lanes: 0,
+            batch_lane_capacity: 0,
+            kinds: vec![],
+            instr: vec![],
+            transports: vec![row(10, 10)],
+        };
+        let mut after = before.clone();
+        after.transports = vec![row(25, 25)];
+        let d = tcp_delta(&before, &after).unwrap();
+        assert_eq!(d.count, 15);
+        assert_eq!(d.buckets[4], 15);
+        // all fifteen new samples sit in bucket 4
+        assert_eq!(d.quantile_us(0.99), crate::telemetry::bucket_upper_us(4));
+    }
+}

@@ -1,0 +1,484 @@
+//! Deterministic record/replay for the serving stack.
+//!
+//! The macro's claim to fame is bit-exact digital CIM arithmetic, and
+//! the repo pins that claim with differential tests (SWAR vs
+//! bit-level, chunked vs one-shot, batched vs sequential). This module
+//! turns the same guarantee into an *operational tool*:
+//!
+//! * **Recording** (`impulse serve --record <dir>`) taps every TCP
+//!   connection server-side: inbound bytes (below the frame decoder,
+//!   so malformed traffic is captured verbatim), outbound frames (in
+//!   wire order), and a per-request **V-digest** — an FNV-1a hash of
+//!   every mapped macro's V_MEM rows taken right after the request
+//!   finished ([`crate::coordinator::Workload::v_digest`]). Nothing
+//!   changes on the wire; recording is invisible to clients.
+//! * **Replay** (`impulse replay <dir>`, [`runner::replay_capture`])
+//!   re-executes a capture through a fresh [`ServeCore`] and diffs
+//!   response frames and digests, failing loudly on the first
+//!   divergence. This is the safety net refactors of the serve path
+//!   (epoll rewrite, proxy tier) run under.
+//! * **Load generation** (`impulse loadgen <scenario>`,
+//!   [`loadgen::run_scenario`]) drives scripted traffic — burst, ramp,
+//!   mixed kinds, streaming with random chunk splits, slow-loris,
+//!   malformed-frame fuzz — against a live server and asserts
+//!   latency/throughput/error envelopes read back via the `0x14`
+//!   stats telemetry.
+//!
+//! The capture format and digest definition are specified in
+//! `docs/REPLAY.md`.
+//!
+//! [`ServeCore`]: crate::serve::ServeCore
+
+pub mod loadgen;
+pub mod runner;
+
+use crate::Result;
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// FNV-1a 64-bit offset basis — the digest accumulator's start value.
+pub const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x100_0000_01B3;
+
+/// Fold bytes into a running FNV-1a 64 accumulator (seed with
+/// [`FNV_OFFSET`]).
+pub fn fold_bytes(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// File name a directory capture is written to.
+pub const CAPTURE_FILE: &str = "capture.imp1cap";
+
+/// First line of every capture file.
+pub const CAPTURE_HEADER: &str = "IMPULSE-CAPTURE v1";
+
+/// One recorded event, in capture order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// Raw bytes read from a client socket (below the frame decoder,
+    /// so undecodable traffic is captured verbatim).
+    BytesIn {
+        /// The connection these bytes arrived on.
+        conn: u64,
+        /// The bytes, exactly as read.
+        bytes: Vec<u8>,
+    },
+    /// One encoded frame written to a client socket, in wire order.
+    FrameOut {
+        /// The connection the frame was written to.
+        conn: u64,
+        /// The full encoded frame (header, payload, CRC).
+        bytes: Vec<u8>,
+    },
+    /// A post-request V_MEM digest checkpoint.
+    Digest {
+        /// The connection whose request produced this checkpoint.
+        conn: u64,
+        /// The client's request id the checkpoint belongs to.
+        request_id: u64,
+        /// FNV-1a digest of the serving engine's V_MEM rows.
+        digest: u64,
+    },
+}
+
+/// A loaded (or in-memory) capture: metadata plus the event log.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Capture {
+    /// `(key, value)` metadata lines, in file order (model, engine,
+    /// artifact provenance — whatever the recorder chose to note).
+    pub meta: Vec<(String, String)>,
+    /// The recorded events, in capture order.
+    pub events: Vec<Event>,
+}
+
+impl Capture {
+    /// First metadata value for `key`, if present.
+    pub fn meta_value(&self, key: &str) -> Option<&str> {
+        self.meta
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Serialize to the line-oriented capture text format.
+    pub fn to_text(&self) -> String {
+        let mut o = String::new();
+        o.push_str(CAPTURE_HEADER);
+        o.push('\n');
+        for (k, v) in &self.meta {
+            o.push_str(&format!("meta {k} {v}\n"));
+        }
+        for e in &self.events {
+            o.push_str(&event_line(e));
+        }
+        o
+    }
+
+    /// Parse the capture text format (strict: unknown or malformed
+    /// lines are errors, so a truncated or tampered capture cannot
+    /// silently replay as a shorter run).
+    pub fn from_text(text: &str) -> Result<Capture> {
+        let mut lines = text.lines();
+        let head = lines.next().unwrap_or("");
+        anyhow::ensure!(
+            head == CAPTURE_HEADER,
+            "not a capture file: first line {head:?} (want {CAPTURE_HEADER:?})"
+        );
+        let mut cap = Capture::default();
+        for (ix, line) in lines.enumerate() {
+            let n = ix + 2; // 1-based, after the header
+            if line.is_empty() {
+                continue;
+            }
+            let (tag, rest) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow::anyhow!("capture line {n}: no fields in {line:?}"))?;
+            match tag {
+                "meta" => {
+                    let (k, v) = rest.split_once(' ').unwrap_or((rest, ""));
+                    cap.meta.push((k.to_string(), v.to_string()));
+                }
+                "I" | "O" => {
+                    let (conn, hex) = rest
+                        .split_once(' ')
+                        .ok_or_else(|| anyhow::anyhow!("capture line {n}: missing bytes"))?;
+                    let conn: u64 = conn
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("capture line {n}: bad conn id: {e}"))?;
+                    let bytes = unhex(hex)
+                        .map_err(|e| anyhow::anyhow!("capture line {n}: {e}"))?;
+                    cap.events.push(if tag == "I" {
+                        Event::BytesIn { conn, bytes }
+                    } else {
+                        Event::FrameOut { conn, bytes }
+                    });
+                }
+                "D" => {
+                    let mut f = rest.split(' ');
+                    let parse = |s: Option<&str>, what: &str| -> Result<u64> {
+                        let s =
+                            s.ok_or_else(|| anyhow::anyhow!("capture line {n}: missing {what}"))?;
+                        u64::from_str_radix(s.trim_start_matches("0x"), 16)
+                            .map_err(|e| anyhow::anyhow!("capture line {n}: bad {what}: {e}"))
+                    };
+                    let conn = f
+                        .next()
+                        .and_then(|s| s.parse::<u64>().ok())
+                        .ok_or_else(|| anyhow::anyhow!("capture line {n}: bad conn id"))?;
+                    let request_id = f
+                        .next()
+                        .and_then(|s| s.parse::<u64>().ok())
+                        .ok_or_else(|| anyhow::anyhow!("capture line {n}: bad request id"))?;
+                    let digest = parse(f.next(), "digest")?;
+                    anyhow::ensure!(f.next().is_none(), "capture line {n}: trailing fields");
+                    cap.events.push(Event::Digest { conn, request_id, digest });
+                }
+                other => anyhow::bail!("capture line {n}: unknown tag {other:?}"),
+            }
+        }
+        Ok(cap)
+    }
+
+    /// Write the capture to a file (see [`Capture::to_text`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_text())?;
+        Ok(())
+    }
+
+    /// Load a capture from a file, or from `<path>/capture.imp1cap`
+    /// when `path` is a directory (the `--record <dir>` layout).
+    pub fn load(path: &Path) -> Result<Capture> {
+        let file = if path.is_dir() { path.join(CAPTURE_FILE) } else { path.to_path_buf() };
+        let text = std::fs::read_to_string(&file)
+            .map_err(|e| anyhow::anyhow!("reading capture {}: {e}", file.display()))?;
+        Self::from_text(&text)
+    }
+}
+
+/// One capture event as its file line (with trailing newline).
+fn event_line(e: &Event) -> String {
+    match e {
+        Event::BytesIn { conn, bytes } => format!("I {conn} {}\n", hex(bytes)),
+        Event::FrameOut { conn, bytes } => format!("O {conn} {}\n", hex(bytes)),
+        Event::Digest { conn, request_id, digest } => {
+            format!("D {conn} {request_id} {digest:016x}\n")
+        }
+    }
+}
+
+/// Lowercase hex encoding.
+pub fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// Decode lowercase/uppercase hex (even length required).
+pub fn unhex(s: &str) -> Result<Vec<u8>> {
+    anyhow::ensure!(s.len() % 2 == 0, "odd hex length {}", s.len());
+    (0..s.len() / 2)
+        .map(|i| {
+            u8::from_str_radix(&s[2 * i..2 * i + 2], 16)
+                .map_err(|e| anyhow::anyhow!("bad hex at {}: {e}", 2 * i))
+        })
+        .collect()
+}
+
+struct RecorderInner {
+    meta: Vec<(String, String)>,
+    events: Vec<Event>,
+    file: Option<BufWriter<std::fs::File>>,
+}
+
+/// A thread-safe capture sink the serve path records into.
+///
+/// Events are kept in memory (for [`Recorder::capture`]) and, when the
+/// recorder was opened with [`Recorder::to_dir`], written through to
+/// the capture file line-by-line so a crash mid-run still leaves a
+/// usable prefix on disk.
+pub struct Recorder {
+    inner: Mutex<RecorderInner>,
+}
+
+impl Recorder {
+    /// An in-memory recorder (the replay runner's comparison sink).
+    pub fn in_memory() -> Recorder {
+        Recorder {
+            inner: Mutex::new(RecorderInner { meta: Vec::new(), events: Vec::new(), file: None }),
+        }
+    }
+
+    /// A write-through recorder at `<dir>/capture.imp1cap` (directory
+    /// created if needed), with the given metadata written up front.
+    pub fn to_dir(dir: &Path, meta: &[(String, String)]) -> Result<(Recorder, PathBuf)> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(CAPTURE_FILE);
+        let mut w = BufWriter::new(std::fs::File::create(&path)?);
+        writeln!(w, "{CAPTURE_HEADER}")?;
+        for (k, v) in meta {
+            writeln!(w, "meta {k} {v}")?;
+        }
+        w.flush()?;
+        Ok((
+            Recorder {
+                inner: Mutex::new(RecorderInner {
+                    meta: meta.to_vec(),
+                    events: Vec::new(),
+                    file: Some(w),
+                }),
+            },
+            path,
+        ))
+    }
+
+    fn push(&self, e: Event) {
+        let mut g = self.inner.lock().expect("recorder poisoned");
+        if let Some(f) = g.file.as_mut() {
+            let _ = f.write_all(event_line(&e).as_bytes());
+        }
+        g.events.push(e);
+    }
+
+    /// Record raw inbound bytes from a connection.
+    pub fn bytes_in(&self, conn: u64, bytes: &[u8]) {
+        self.push(Event::BytesIn { conn, bytes: bytes.to_vec() });
+    }
+
+    /// Record one encoded outbound frame (call under the connection's
+    /// write lock so capture order matches wire order).
+    pub fn frame_out(&self, conn: u64, bytes: &[u8]) {
+        self.push(Event::FrameOut { conn, bytes: bytes.to_vec() });
+    }
+
+    /// Record a post-request V-digest checkpoint.
+    pub fn digest(&self, conn: u64, request_id: u64, digest: u64) {
+        self.push(Event::Digest { conn, request_id, digest });
+    }
+
+    /// Snapshot the recording as a [`Capture`].
+    pub fn capture(&self) -> Capture {
+        let g = self.inner.lock().expect("recorder poisoned");
+        Capture { meta: g.meta.clone(), events: g.events.clone() }
+    }
+
+    /// Number of events recorded so far.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("recorder poisoned").events.len()
+    }
+
+    /// Whether nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flush the write-through file, if any.
+    pub fn flush(&self) -> Result<()> {
+        let mut g = self.inner.lock().expect("recorder poisoned");
+        if let Some(f) = g.file.as_mut() {
+            f.flush()?;
+        }
+        Ok(())
+    }
+}
+
+/// A [`Read`] adapter that tees every chunk read into a [`Recorder`]
+/// as [`Event::BytesIn`]. With no tap attached it is a transparent
+/// passthrough, so the listener wraps every connection in one
+/// unconditionally.
+pub struct TapRead<R> {
+    inner: R,
+    tap: Option<(Arc<Recorder>, u64)>,
+}
+
+impl<R: Read> TapRead<R> {
+    /// Wrap a transport; `tap` is `(recorder, connection id)`.
+    pub fn new(inner: R, tap: Option<(Arc<Recorder>, u64)>) -> TapRead<R> {
+        TapRead { inner, tap }
+    }
+}
+
+impl<R: Read> Read for TapRead<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        if n > 0 {
+            if let Some((rec, conn)) = &self.tap {
+                rec.bytes_in(*conn, &buf[..n]);
+            }
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_reference_vectors() {
+        // Published FNV-1a 64 vectors.
+        let mut h = FNV_OFFSET;
+        fold_bytes(&mut h, b"");
+        assert_eq!(h, 0xCBF2_9CE4_8422_2325);
+        let mut h = FNV_OFFSET;
+        fold_bytes(&mut h, b"a");
+        assert_eq!(h, 0xAF63_DC4C_8601_EC8C);
+        let mut h = FNV_OFFSET;
+        fold_bytes(&mut h, b"foobar");
+        assert_eq!(h, 0x85944171F73967E8);
+    }
+
+    #[test]
+    fn hex_roundtrip_and_rejects() {
+        assert_eq!(hex(&[0x00, 0xAB, 0xFF]), "00abff");
+        assert_eq!(unhex("00abff").unwrap(), vec![0x00, 0xAB, 0xFF]);
+        assert_eq!(unhex("00ABFF").unwrap(), vec![0x00, 0xAB, 0xFF]);
+        assert_eq!(unhex("").unwrap(), Vec::<u8>::new());
+        assert!(unhex("0").is_err());
+        assert!(unhex("zz").is_err());
+    }
+
+    #[test]
+    fn capture_text_roundtrip() {
+        let cap = Capture {
+            meta: vec![
+                ("model".into(), "sentiment".into()),
+                ("note".into(), "a value with spaces".into()),
+            ],
+            events: vec![
+                Event::BytesIn { conn: 1, bytes: vec![0x49, 0x4D, 0x50, 0x31] },
+                Event::FrameOut { conn: 1, bytes: vec![0xFF, 0x00] },
+                Event::Digest { conn: 1, request_id: 7, digest: 0xDEAD_BEEF_0000_0001 },
+                Event::BytesIn { conn: 2, bytes: vec![] },
+            ],
+        };
+        let text = cap.to_text();
+        let back = Capture::from_text(&text).unwrap();
+        assert_eq!(back, cap);
+        assert_eq!(back.meta_value("model"), Some("sentiment"));
+        assert_eq!(back.meta_value("note"), Some("a value with spaces"));
+        assert_eq!(back.meta_value("absent"), None);
+    }
+
+    #[test]
+    fn capture_parser_rejects_garbage() {
+        assert!(Capture::from_text("").is_err());
+        assert!(Capture::from_text("NOT-A-CAPTURE\n").is_err());
+        let ok = format!("{CAPTURE_HEADER}\nI 1 00ff\n");
+        assert!(Capture::from_text(&ok).is_ok());
+        assert!(Capture::from_text(&format!("{CAPTURE_HEADER}\nX 1 00\n")).is_err());
+        assert!(Capture::from_text(&format!("{CAPTURE_HEADER}\nI one 00\n")).is_err());
+        assert!(Capture::from_text(&format!("{CAPTURE_HEADER}\nI 1 0\n")).is_err());
+        assert!(Capture::from_text(&format!("{CAPTURE_HEADER}\nD 1 2 xyz\n")).is_err());
+        assert!(Capture::from_text(&format!("{CAPTURE_HEADER}\nD 1 2 00 trailing\n")).is_err());
+    }
+
+    #[test]
+    fn recorder_accumulates_and_snapshots() {
+        let rec = Recorder::in_memory();
+        assert!(rec.is_empty());
+        rec.bytes_in(3, &[1, 2, 3]);
+        rec.frame_out(3, &[4, 5]);
+        rec.digest(3, 9, 0x123);
+        assert_eq!(rec.len(), 3);
+        let cap = rec.capture();
+        assert_eq!(cap.events.len(), 3);
+        assert_eq!(cap.events[0], Event::BytesIn { conn: 3, bytes: vec![1, 2, 3] });
+        assert_eq!(cap.events[2], Event::Digest { conn: 3, request_id: 9, digest: 0x123 });
+    }
+
+    #[test]
+    fn recorder_writes_through_to_disk() {
+        let dir = std::env::temp_dir().join(format!("impulse-rec-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let meta = vec![("model".to_string(), "digits".to_string())];
+        let (rec, path) = Recorder::to_dir(&dir, &meta).unwrap();
+        rec.bytes_in(1, &[0xAA]);
+        rec.digest(1, 4, 42);
+        rec.flush().unwrap();
+        let cap = Capture::load(&dir).unwrap();
+        assert_eq!(cap.meta_value("model"), Some("digits"));
+        assert_eq!(cap.events.len(), 2);
+        assert_eq!(Capture::load(&path).unwrap(), cap);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tap_read_tees_and_passes_through() {
+        let rec = Arc::new(Recorder::in_memory());
+        let src = std::io::Cursor::new(vec![9u8, 8, 7, 6]);
+        let mut tap = TapRead::new(src, Some((Arc::clone(&rec), 5)));
+        let mut out = Vec::new();
+        tap.read_to_end(&mut out).unwrap();
+        assert_eq!(out, vec![9, 8, 7, 6]);
+        let cap = rec.capture();
+        let total: Vec<u8> = cap
+            .events
+            .iter()
+            .flat_map(|e| match e {
+                Event::BytesIn { conn, bytes } => {
+                    assert_eq!(*conn, 5);
+                    bytes.clone()
+                }
+                _ => panic!("unexpected event"),
+            })
+            .collect();
+        assert_eq!(total, vec![9, 8, 7, 6]);
+
+        // no tap → pure passthrough, nothing recorded
+        let mut plain = TapRead::new(std::io::Cursor::new(vec![1u8]), None);
+        let mut out = Vec::new();
+        plain.read_to_end(&mut out).unwrap();
+        assert_eq!(out, vec![1]);
+    }
+}

@@ -1,0 +1,385 @@
+//! Re-execute a recorded capture against a fresh serve core and diff
+//! the outcome.
+//!
+//! The runner replays each recorded connection's inbound bytes —
+//! verbatim, at the recorded chunk boundaries — through a real TCP
+//! connection to a real [`serve_tcp`] listener over the caller's
+//! [`ServeCore`], records the re-execution with the same server-side
+//! tap, and diffs the two captures:
+//!
+//! * **Response frames**, keyed `(connection, request id, occurrence)`
+//!   and normalized first (CRC stripped, flags zeroed, and the
+//!   timing/placement fields a scheduler is free to vary — latency,
+//!   batch, worker, lane — masked; stats responses compare envelope
+//!   only). Everything the macro *computed* — predictions, membrane
+//!   potentials, cycle counts, error codes — must match bit-for-bit.
+//! * **V-digests**, keyed the same way: the FNV-1a checkpoints of
+//!   every macro's V_MEM rows must agree exactly. This is the deep
+//!   check — two runs can emit identical wire bytes yet hold different
+//!   hidden state, and the digest catches it.
+//!
+//! Responses are compared by request id, not global order: the
+//! listener's reader thread answers stream ops and stats inline while
+//! the responder thread writes inference responses, so the interleaving
+//! of *different* requests on one connection is scheduling — but the
+//! frames of one request id are ordered, and all content is pinned.
+//!
+//! Connections replay sequentially (the recorder forces one worker and
+//! batch width 1, so request state never spans connections) and are
+//! matched recorded↔replayed by first-appearance order.
+
+use super::{hex, Capture, Event};
+use crate::serve::{serve_tcp, ServeCore, CRC_LEN, HEADER_LEN};
+use crate::Result;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How long the replay client waits on a quiet socket before treating
+/// the connection as finished (covers worst-case inference latency on
+/// a loaded CI runner).
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// The outcome of one [`replay_capture`] run.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayReport {
+    /// Connections replayed.
+    pub connections: usize,
+    /// Total inbound bytes written back to the server.
+    pub bytes_in: usize,
+    /// Outbound frames compared.
+    pub frames_out: usize,
+    /// V-digest checkpoints compared.
+    pub digests: usize,
+    /// First divergence found, if any (human-readable, with hex
+    /// context); `None` means the replay matched the recording.
+    pub divergence: Option<String>,
+}
+
+impl ReplayReport {
+    /// Whether the replay matched the recording everywhere.
+    pub fn is_ok(&self) -> bool {
+        self.divergence.is_none()
+    }
+}
+
+/// Everything recorded for one connection, in event order.
+#[derive(Default)]
+struct ConnLog {
+    /// Inbound byte chunks, at recorded boundaries.
+    inbound: Vec<Vec<u8>>,
+    /// Encoded outbound frames, in wire order.
+    outbound: Vec<Vec<u8>>,
+    /// `(request id, digest)` checkpoints, in record order.
+    digests: Vec<(u64, u64)>,
+}
+
+/// Split a capture into per-connection logs, preserving each
+/// connection's first-appearance order (the recorded↔replayed match
+/// key).
+fn group(cap: &Capture) -> Vec<(u64, ConnLog)> {
+    let mut order: Vec<u64> = Vec::new();
+    let mut logs: BTreeMap<u64, ConnLog> = BTreeMap::new();
+    for e in &cap.events {
+        let conn = match e {
+            Event::BytesIn { conn, .. }
+            | Event::FrameOut { conn, .. }
+            | Event::Digest { conn, .. } => *conn,
+        };
+        if !logs.contains_key(&conn) {
+            order.push(conn);
+            logs.insert(conn, ConnLog::default());
+        }
+        let log = logs.get_mut(&conn).expect("just inserted");
+        match e {
+            Event::BytesIn { bytes, .. } => log.inbound.push(bytes.clone()),
+            Event::FrameOut { bytes, .. } => log.outbound.push(bytes.clone()),
+            Event::Digest { request_id, digest, .. } => log.digests.push((*request_id, *digest)),
+        }
+    }
+    order
+        .into_iter()
+        .map(|c| {
+            let log = logs.remove(&c).expect("grouped above");
+            (c, log)
+        })
+        .collect()
+}
+
+/// Normalize one encoded outbound frame for comparison: strip the CRC
+/// trailer, zero the flags word (live backpressure advertisements),
+/// and mask the fields a replay is allowed to differ in — wall-clock
+/// latency and scheduler placement. Stats responses keep only their
+/// envelope (type + request id): their payload is live telemetry,
+/// nondeterministic by nature.
+fn normalize_frame(bytes: &[u8]) -> Vec<u8> {
+    if bytes.len() < HEADER_LEN + CRC_LEN {
+        return bytes.to_vec(); // never produced by the server; compare raw
+    }
+    let mut b = bytes[..bytes.len() - CRC_LEN].to_vec();
+    b[6] = 0;
+    b[7] = 0;
+    match b[5] {
+        // InferResponse / DigitsInferResponse: the trailing 12 bytes
+        // are latency_us (8) + batch (2) + worker (2)
+        0x11 | 0x13 => {
+            let n = b.len();
+            if n >= HEADER_LEN + 12 {
+                for x in &mut b[n - 12..] {
+                    *x = 0;
+                }
+            }
+        }
+        // StreamAck: bytes 9..11 of the payload are the lane index
+        0x1A => {
+            if b.len() >= HEADER_LEN + 11 {
+                b[HEADER_LEN + 9] = 0;
+                b[HEADER_LEN + 10] = 0;
+            }
+        }
+        // StatsResponse: envelope only
+        0x15 => {
+            b.truncate(HEADER_LEN);
+            for x in &mut b[16..20] {
+                *x = 0;
+            }
+        }
+        _ => {}
+    }
+    b
+}
+
+/// The request id a server-produced frame answers (bytes 8..16 BE).
+fn frame_request_id(bytes: &[u8]) -> u64 {
+    if bytes.len() < 16 {
+        return u64::MAX;
+    }
+    u64::from_be_bytes(bytes[8..16].try_into().expect("8 bytes"))
+}
+
+/// Frames grouped per request id, normalized, in wire order.
+fn frames_by_request(frames: &[Vec<u8>]) -> BTreeMap<u64, Vec<Vec<u8>>> {
+    let mut m: BTreeMap<u64, Vec<Vec<u8>>> = BTreeMap::new();
+    for f in frames {
+        m.entry(frame_request_id(f)).or_default().push(normalize_frame(f));
+    }
+    m
+}
+
+/// Digests grouped per request id, in record order.
+fn digests_by_request(digests: &[(u64, u64)]) -> BTreeMap<u64, Vec<u64>> {
+    let mut m: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+    for (id, d) in digests {
+        m.entry(*id).or_default().push(*d);
+    }
+    m
+}
+
+/// Replay a capture through `core` and diff the re-execution against
+/// the recording. The core must have been built to match the capture's
+/// recording configuration (same model, artifacts, engine, timestep
+/// count — `impulse replay` rebuilds it from the capture metadata) and
+/// must not already have a recorder attached.
+pub fn replay_capture(capture: &Capture, core: &Arc<ServeCore>) -> Result<ReplayReport> {
+    let recorded = group(capture);
+    let rec = Arc::new(super::Recorder::in_memory());
+    core.set_recorder(Arc::clone(&rec));
+    let handle = serve_tcp("127.0.0.1:0", Arc::clone(core))?;
+    let addr = handle.local_addr();
+
+    let mut report = ReplayReport { connections: recorded.len(), ..ReplayReport::default() };
+    for (_conn, log) in &recorded {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(DRAIN_TIMEOUT))?;
+        let mut rx = stream.try_clone()?;
+        // Drain concurrently with writing: without a reader the server
+        // can fill the socket buffer mid-connection and deadlock the
+        // write side. EOF doubles as the completion barrier — the
+        // server shuts down its write half only after the responder
+        // drained every in-flight answer.
+        let drain = std::thread::spawn(move || {
+            let mut buf = [0u8; 4096];
+            loop {
+                match rx.read(&mut buf) {
+                    Ok(0) => break,
+                    Ok(_) => continue,
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::TimedOut =>
+                    {
+                        break // quiet too long: treat as finished
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        let mut tx = stream;
+        for chunk in &log.inbound {
+            report.bytes_in += chunk.len();
+            if tx.write_all(chunk).is_err() {
+                break; // server closed on us (recorded close, fuzz, …)
+            }
+        }
+        let _ = tx.shutdown(Shutdown::Write);
+        drain.join().ok();
+    }
+    handle.stop();
+
+    let replayed = group(&rec.capture());
+    let divergence = diff(&recorded, &replayed, &mut report);
+    report.divergence = divergence;
+    Ok(report)
+}
+
+/// First divergence between the recorded and replayed logs, if any.
+fn diff(
+    recorded: &[(u64, ConnLog)],
+    replayed: &[(u64, ConnLog)],
+    report: &mut ReplayReport,
+) -> Option<String> {
+    if recorded.len() != replayed.len() {
+        return Some(format!(
+            "connection count diverged: recorded {}, replayed {}",
+            recorded.len(),
+            replayed.len()
+        ));
+    }
+    for (ix, ((rc, rlog), (_pc, plog))) in recorded.iter().zip(replayed).enumerate() {
+        let tag = format!("connection {} (recorded id {rc})", ix + 1);
+
+        let want = frames_by_request(&rlog.outbound);
+        let got = frames_by_request(&plog.outbound);
+        for (id, wf) in &want {
+            let gf = got.get(id).map(Vec::as_slice).unwrap_or(&[]);
+            if wf.len() != gf.len() {
+                return Some(format!(
+                    "{tag}, request {id}: recorded {} response frame(s), replay produced {}",
+                    wf.len(),
+                    gf.len()
+                ));
+            }
+            for (occ, (w, g)) in wf.iter().zip(gf).enumerate() {
+                report.frames_out += 1;
+                if w != g {
+                    return Some(format!(
+                        "{tag}, request {id}, frame {}: response bytes diverged\n  recorded  {}\n  replayed  {}",
+                        occ + 1,
+                        hex(w),
+                        hex(g)
+                    ));
+                }
+            }
+        }
+        if let Some(extra) = got.keys().find(|id| !want.contains_key(id)) {
+            return Some(format!(
+                "{tag}: replay produced response frames for request {extra} that were never recorded"
+            ));
+        }
+
+        let want = digests_by_request(&rlog.digests);
+        let got = digests_by_request(&plog.digests);
+        for (id, wd) in &want {
+            let gd = got.get(id).map(Vec::as_slice).unwrap_or(&[]);
+            if wd.len() != gd.len() {
+                return Some(format!(
+                    "{tag}, request {id}: recorded {} V-digest(s), replay produced {}",
+                    wd.len(),
+                    gd.len()
+                ));
+            }
+            for (occ, (w, g)) in wd.iter().zip(gd).enumerate() {
+                report.digests += 1;
+                if w != g {
+                    return Some(format!(
+                        "{tag}, request {id}, checkpoint {}: V-digest diverged: recorded {w:016x}, replayed {g:016x}",
+                        occ + 1
+                    ));
+                }
+            }
+        }
+        if let Some(extra) = got.keys().find(|id| !want.contains_key(id)) {
+            return Some(format!(
+                "{tag}: replay produced V-digests for request {extra} that were never recorded"
+            ));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(ptype: u8, id: u64, payload: &[u8], flags: u16) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"IMP1");
+        b.push(1);
+        b.push(ptype);
+        b.extend_from_slice(&flags.to_be_bytes());
+        b.extend_from_slice(&id.to_be_bytes());
+        b.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        b.extend_from_slice(payload);
+        let crc = crate::serve::crc32(&b);
+        b.extend_from_slice(&crc.to_be_bytes());
+        b
+    }
+
+    #[test]
+    fn normalize_masks_flags_and_timing_fields() {
+        // InferResponse: 29-byte payload, last 12 = latency/batch/worker
+        let mut p1 = vec![1u8; 29];
+        let mut p2 = p1.clone();
+        p1[17..29].copy_from_slice(&[9; 12]);
+        p2[17..29].copy_from_slice(&[3; 12]);
+        let a = normalize_frame(&frame(0x11, 7, &p1, 0x8001));
+        let b = normalize_frame(&frame(0x11, 7, &p2, 0x0000));
+        assert_eq!(a, b);
+        // but the computed fields still compare
+        let mut p3 = p1.clone();
+        p3[0] = 0; // flip the prediction
+        assert_ne!(normalize_frame(&frame(0x11, 7, &p3, 0)), a);
+    }
+
+    #[test]
+    fn normalize_masks_stream_ack_lane_but_not_cycles() {
+        let mut a = vec![0u8; 19];
+        let mut b = vec![0u8; 19];
+        a[9] = 1; // lane 1
+        b[9] = 2; // lane 2
+        let norm = |p: &[u8]| normalize_frame(&frame(0x1A, 3, p, 0));
+        assert_eq!(norm(&a), norm(&b));
+        let mut c = a.clone();
+        c[11] = 99; // cycles differ
+        assert_ne!(norm(&c), norm(&a));
+    }
+
+    #[test]
+    fn normalize_reduces_stats_to_envelope() {
+        let a = normalize_frame(&frame(0x15, 5, &[1, 2, 3], 0));
+        let b = normalize_frame(&frame(0x15, 5, &[9, 9, 9, 9, 9], 0));
+        assert_eq!(a, b);
+        assert_ne!(a, normalize_frame(&frame(0x15, 6, &[1, 2, 3], 0)));
+    }
+
+    #[test]
+    fn grouping_preserves_first_appearance_order() {
+        let cap = Capture {
+            meta: vec![],
+            events: vec![
+                Event::BytesIn { conn: 9, bytes: vec![1] },
+                Event::BytesIn { conn: 2, bytes: vec![2] },
+                Event::FrameOut { conn: 9, bytes: vec![3] },
+                Event::Digest { conn: 2, request_id: 1, digest: 42 },
+            ],
+        };
+        let g = group(&cap);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0].0, 9);
+        assert_eq!(g[1].0, 2);
+        assert_eq!(g[0].1.outbound, vec![vec![3]]);
+        assert_eq!(g[1].1.digests, vec![(1, 42)]);
+    }
+}

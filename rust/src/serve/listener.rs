@@ -22,6 +22,7 @@ use super::session::{
     WireDigitsResponse, WirePayload, WireResponse, CAP_BACKPRESSURE,
 };
 use crate::coordinator::{WorkloadInput, WorkloadKind};
+use crate::replay::{Recorder, TapRead};
 use crate::telemetry::{Telemetry, Transport};
 use crate::Result;
 use std::io::ErrorKind;
@@ -132,11 +133,32 @@ pub fn serve_tcp(addr: &str, core: Arc<ServeCore>) -> Result<TcpServeHandle> {
     Ok(TcpServeHandle { addr: local, stop, accept: Some(accept) })
 }
 
-/// Serialize whole frames onto the shared write half (the reader and
-/// responder threads both reply; a mutex keeps frames contiguous).
-fn write_frame(w: &Arc<Mutex<TcpStream>>, f: &Frame) -> std::io::Result<()> {
-    let mut g = w.lock().expect("writer poisoned");
-    f.write_to(&mut *g)
+/// The shared write half of one connection. The reader and responder
+/// threads both reply; the mutex keeps frames contiguous on the wire.
+/// When a [`Recorder`] is attached the encoded frame is recorded
+/// *inside* the lock, so capture order is exactly wire order.
+#[derive(Clone)]
+struct ConnWriter {
+    stream: Arc<Mutex<TcpStream>>,
+    tap: Option<(Arc<Recorder>, u64)>,
+}
+
+impl ConnWriter {
+    fn write(&self, f: &Frame) -> std::io::Result<()> {
+        use std::io::Write;
+        let bytes = f.encode();
+        let mut g = self.stream.lock().expect("writer poisoned");
+        if let Some((rec, conn)) = &self.tap {
+            rec.frame_out(*conn, &bytes);
+        }
+        g.write_all(&bytes)
+    }
+
+    fn shutdown_write(&self) {
+        if let Ok(g) = self.stream.lock() {
+            let _ = g.shutdown(Shutdown::Write);
+        }
+    }
 }
 
 /// The flags word for the next server→client frame: a live
@@ -159,7 +181,14 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
     let (sender, responses) = core.client()?.split();
     // stream ids are per-connection: take a connection id for scoping
     let conn_id = core.next_conn_id();
-    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    // record/replay tap (docs/REPLAY.md): inbound bytes below the
+    // decoder, outbound frames under the write lock, V-digests per
+    // answered request — all keyed by this connection id
+    let recorder = core.recorder().map(|r| (r, conn_id));
+    let writer = ConnWriter {
+        stream: Arc::new(Mutex::new(stream.try_clone()?)),
+        tap: recorder.clone(),
+    };
     let done = Arc::new(AtomicBool::new(false));
     let outstanding = Arc::new(AtomicU64::new(0));
     let tele = Arc::clone(core.telemetry());
@@ -168,19 +197,23 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
     let backpressure = Arc::new(AtomicBool::new(false));
 
     let responder = {
-        let writer = Arc::clone(&writer);
+        let writer = writer.clone();
         let done = Arc::clone(&done);
         let outstanding = Arc::clone(&outstanding);
         let tele = Arc::clone(&tele);
         let backpressure = Arc::clone(&backpressure);
+        let recorder = recorder.clone();
         std::thread::spawn(move || {
             loop {
                 match responses.recv_timeout(POLL) {
                     Ok(r) => {
                         outstanding.fetch_sub(1, Ordering::SeqCst);
                         tele.record_wire(Transport::Tcp, r.latency);
+                        if let (Some((rec, conn)), Some(d)) = (&recorder, r.v_digest) {
+                            rec.digest(*conn, r.id, d);
+                        }
                         let f = response_frame(&r).with_flags(frame_flags(&backpressure, &tele));
-                        if write_frame(&writer, &f).is_err() {
+                        if writer.write(&f).is_err() {
                             break;
                         }
                     }
@@ -203,7 +236,9 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
         })
     };
 
-    let mut reader = FrameReader::new(stream);
+    // the tap reads *below* the frame decoder: malformed or fuzzed
+    // traffic is captured verbatim, exactly as it arrived
+    let mut reader = FrameReader::new(TapRead::new(stream, recorder.clone()));
     let mut negotiated = super::frame::PROTOCOL_VERSION; // implicit v1 until Hello
     loop {
         if stop.load(Ordering::SeqCst) {
@@ -219,7 +254,7 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
             }
             Err(e) => {
                 // Alignment is lost; answer once (request id 0) and close.
-                let _ = write_frame(&writer, &error_frame(0, e.code(), &e.to_string()));
+                let _ = writer.write(&error_frame(0, e.code(), &e.to_string()));
                 break;
             }
         };
@@ -236,13 +271,12 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
                         vec![n.version]
                     };
                     let ack = Frame::new(PayloadType::HelloAck, frame.request_id, ack_payload);
-                    if write_frame(&writer, &ack).is_err() {
+                    if writer.write(&ack).is_err() {
                         break;
                     }
                 }
                 Err(e) => {
-                    let _ =
-                        write_frame(&writer, &error_frame(frame.request_id, e.code, &e.msg));
+                    let _ = writer.write(&error_frame(frame.request_id, e.code, &e.msg));
                     break; // failed negotiation closes the connection
                 }
             },
@@ -277,7 +311,7 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
                     encode_stats_response(&tele.snapshot()),
                 )
                 .with_flags(frame_flags(&backpressure, &tele));
-                if write_frame(&writer, &f).is_err() {
+                if writer.write(&f).is_err() {
                     break;
                 }
             }
@@ -365,10 +399,9 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
                 // stream ops bypass the batcher queue (a chunk must
                 // integrate into *its* pinned lane) and are answered
                 // inline; errors keep the connection up
-                let answer = stream_op(core, conn_id, &frame, &tele);
-                if write_frame(&writer, &answer.with_flags(frame_flags(&backpressure, &tele)))
-                    .is_err()
-                {
+                let answer = stream_op(core, conn_id, &frame, &tele, recorder.as_ref())
+                    .with_flags(frame_flags(&backpressure, &tele));
+                if writer.write(&answer).is_err() {
                     break;
                 }
             }
@@ -396,9 +429,7 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
     // a vanished connection releases its pinned lanes immediately —
     // no stream outlives its transport
     core.streams().close_conn(conn_id);
-    if let Ok(w) = writer.lock() {
-        let _ = w.shutdown(Shutdown::Write);
-    }
+    writer.shutdown_write();
     Ok(())
 }
 
@@ -406,9 +437,26 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
 /// table, scoped to this connection's id. Always produces exactly one
 /// frame (a `StreamAck`, a read-out response, or an `Error`); stream
 /// errors keep the connection up — only this stream dies.
-fn stream_op(core: &ServeCore, conn_id: u64, frame: &Frame, tele: &Telemetry) -> Frame {
+///
+/// With a recorder attached, every *successful* open/append/read-out
+/// also checkpoints the pinned lane's V-digest under the frame's
+/// request id (close frees the lane, so there is nothing to digest).
+fn stream_op(
+    core: &ServeCore,
+    conn_id: u64,
+    frame: &Frame,
+    tele: &Telemetry,
+    rec: Option<&(Arc<Recorder>, u64)>,
+) -> Frame {
     let id = frame.request_id;
     let streams = core.streams();
+    let checkpoint = |sid: u64| {
+        if let Some((rec, conn)) = rec {
+            if let Some(d) = streams.v_digest(conn_id, sid) {
+                rec.digest(*conn, id, d);
+            }
+        }
+    };
     match frame.payload_type {
         PayloadType::StreamOpen => {
             if !frame.payload.is_empty() {
@@ -416,7 +464,10 @@ fn stream_op(core: &ServeCore, conn_id: u64, frame: &Frame, tele: &Telemetry) ->
             }
             // the open frame's request id becomes the stream id
             match streams.open(conn_id, id) {
-                Ok(ack) => Frame::new(PayloadType::StreamAck, id, encode_stream_ack(&ack)),
+                Ok(ack) => {
+                    checkpoint(id);
+                    Frame::new(PayloadType::StreamAck, id, encode_stream_ack(&ack))
+                }
                 Err(e) => error_frame(id, e.code, &e.msg),
             }
         }
@@ -429,6 +480,7 @@ fn stream_op(core: &ServeCore, conn_id: u64, frame: &Frame, tele: &Telemetry) ->
             match streams.append(conn_id, sid, &chunk) {
                 Ok(ack) => {
                     tele.record_wire(Transport::Tcp, t0.elapsed());
+                    checkpoint(sid);
                     Frame::new(PayloadType::StreamAck, id, encode_stream_ack(&ack))
                 }
                 Err(e) => error_frame(id, e.code, &e.msg),
@@ -444,6 +496,7 @@ fn stream_op(core: &ServeCore, conn_id: u64, frame: &Frame, tele: &Telemetry) ->
                 Ok((out, kind, _lane)) => {
                     let latency = t0.elapsed();
                     tele.record_wire(Transport::Tcp, latency);
+                    checkpoint(sid);
                     let latency_us = u64::try_from(latency.as_micros()).unwrap_or(u64::MAX);
                     // a read-out answers in the one-shot response
                     // encoding for its kind: stream-unaware tooling

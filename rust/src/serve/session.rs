@@ -1043,6 +1043,7 @@ pub struct ServeCore {
     telemetry: Arc<Telemetry>,
     streams: Arc<StreamTable>,
     next_conn: AtomicU64,
+    recorder: Mutex<Option<Arc<crate::replay::Recorder>>>,
 }
 
 impl ServeCore {
@@ -1120,7 +1121,22 @@ impl ServeCore {
             telemetry,
             streams,
             next_conn: AtomicU64::new(1),
+            recorder: Mutex::new(None),
         })
+    }
+
+    /// Attach a wire/digest recorder: every TCP connection accepted
+    /// from now on taps its inbound bytes, outbound frames, and
+    /// per-request V-digests into it (`docs/REPLAY.md`). Recording is
+    /// a server-side tap — nothing changes on the wire.
+    pub fn set_recorder(&self, rec: Arc<crate::replay::Recorder>) {
+        *self.recorder.lock().expect("recorder poisoned") = Some(rec);
+    }
+
+    /// The attached recorder, if any (cloned per connection at accept
+    /// time).
+    pub fn recorder(&self) -> Option<Arc<crate::replay::Recorder>> {
+        self.recorder.lock().expect("recorder poisoned").clone()
     }
 
     /// The stream session table: membrane state pinned per
@@ -1829,6 +1845,7 @@ mod tests {
             worker: 1,
             batch_size: 4,
             err: None,
+            v_digest: None,
         };
         let f = response_frame(&r);
         assert_eq!(f.payload_type, PayloadType::DigitsInferResponse);
@@ -1980,6 +1997,7 @@ mod tests {
             worker: 2,
             batch_size: 3,
             err: None,
+            v_digest: None,
         };
         let f = response_frame(&ok);
         assert_eq!(f.payload_type, PayloadType::InferResponse);

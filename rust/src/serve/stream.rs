@@ -278,6 +278,17 @@ impl StreamTable {
         })
     }
 
+    /// Peek the pinned lane's V-digest ([`Workload::v_digest`]) — the
+    /// record/replay checkpoint for stream traffic. A pure state read:
+    /// `last_used` is *not* refreshed (recording must never extend a
+    /// stream's TTL) and no instruction is issued. `None` when the
+    /// stream is not live or its workload exposes no membrane state.
+    pub fn v_digest(&self, conn: u64, stream_id: u64) -> Option<u64> {
+        let t = self.lock();
+        let lane = *t.by_key.get(&(conn, stream_id))?;
+        t.lanes[lane].engine.as_ref().and_then(|e| e.v_digest())
+    }
+
     /// Evict every stream idle past the TTL (engines stay pooled —
     /// [`Workload::begin_stream`] resets them on reuse). The TCP
     /// accept loop calls this on idle ticks and during shutdown drain;

@@ -427,6 +427,16 @@ impl ConvLayer {
     pub fn num_macros(&self) -> usize {
         self.macros.len()
     }
+
+    /// Fold the active macro pool's V_MEM rows into a running FNV-1a
+    /// digest (see [`ImpulseMacro::fold_vmem_digest`]). Parked pools
+    /// (other batch widths) are excluded: only the active pool's
+    /// membrane state feeds the next request.
+    pub fn fold_vmem_digest(&self, h: &mut u64) {
+        for m in &self.macros {
+            m.fold_vmem_digest(h);
+        }
+    }
 }
 
 // Convenience accessors (the layout's field names are h/w-ambiguous).

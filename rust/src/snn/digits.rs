@@ -292,6 +292,21 @@ impl DigitsNetwork {
             + self.fc2.stats().cycles
     }
 
+    /// FNV-1a digest of every mapped macro's V_MEM rows (conv2 →
+    /// conv3 → fc1 → fc2, tile order within each layer; the off-macro
+    /// encoder holds no V_MEM). A pure state read — no instruction is
+    /// issued and no counter moves — so bit-identical membrane state
+    /// digests identically: the record/replay checkpoint
+    /// (`docs/REPLAY.md`).
+    pub fn v_digest(&self) -> u64 {
+        let mut h = crate::replay::FNV_OFFSET;
+        self.conv2.fold_vmem_digest(&mut h);
+        self.conv3.fold_vmem_digest(&mut h);
+        self.fc1.fold_vmem_digest(&mut h);
+        self.fc2.fold_vmem_digest(&mut h);
+        h
+    }
+
     /// Reset instruction counters (keeps weights and state).
     pub fn reset_counters(&mut self) {
         self.conv2.reset_counters();

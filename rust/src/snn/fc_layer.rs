@@ -468,6 +468,15 @@ impl FcLayer {
         self.macros.len()
     }
 
+    /// Fold every tile's V_MEM rows into a running FNV-1a digest (see
+    /// [`ImpulseMacro::fold_vmem_digest`]); tile order is the mapping
+    /// order, so the digest is stable across runs.
+    pub fn fold_vmem_digest(&self, h: &mut u64) {
+        for m in &self.macros {
+            m.fold_vmem_digest(h);
+        }
+    }
+
     /// The layer's neuron parameters.
     pub fn params(&self) -> LayerParams {
         self.params

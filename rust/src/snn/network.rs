@@ -362,6 +362,19 @@ impl SentimentNetwork {
         s
     }
 
+    /// FNV-1a digest of every mapped macro's V_MEM rows (fc1 → fc2 →
+    /// out, tile order within each layer). A pure state read: no
+    /// instruction is issued and no counter moves, so two runs that
+    /// computed bit-identical membrane state digest identically — the
+    /// record/replay checkpoint (`docs/REPLAY.md`).
+    pub fn v_digest(&self) -> u64 {
+        let mut h = crate::replay::FNV_OFFSET;
+        self.fc1.fold_vmem_digest(&mut h);
+        self.fc2.fold_vmem_digest(&mut h);
+        self.out.fold_vmem_digest(&mut h);
+        h
+    }
+
     fn total_cycles(&self) -> u64 {
         self.fc1.stats().cycles + self.fc2.stats().cycles + self.out.stats().cycles
     }

@@ -1,0 +1,160 @@
+//! The deprecated per-workload client surface (`send_infer` /
+//! `next_result` / `send_digits_infer` / `send_stats`) is frozen, not
+//! abandoned: this test pins that it produces BYTE-IDENTICAL wire
+//! traffic to the typed `call`/`wait` surface, and identical results
+//! against a live server — so pre-stream clients built on the old
+//! calls keep interoperating with servers exercised only through the
+//! typed path.
+
+// Exercising the deprecated surface is this test's entire point.
+#![allow(deprecated)]
+
+use impulse::coordinator::{ServerOptions, WorkloadInput};
+use impulse::data::SentimentArtifacts;
+use impulse::macro_sim::MacroConfig;
+use impulse::serve::{
+    encode_stats_request, serve_tcp, ErrorCode, Frame, FrameClient, PayloadType, ServeCore,
+    ServerError, PROTOCOL_VERSION,
+};
+use impulse::snn::SentimentNetwork;
+use std::io::Read;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+const WORDS: [i64; 4] = [3, 1, 4, 15];
+const IMAGE: [f32; 4] = [0.0, 0.5, 1.0, -1.0];
+
+/// Accept one connection and read exactly `n` bytes off it.
+fn read_n(listener: &TcpListener, n: usize) -> Vec<u8> {
+    let (mut s, _) = listener.accept().unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut buf = vec![0u8; n];
+    s.read_exact(&mut buf).unwrap();
+    buf
+}
+
+/// Wire-level identity: the bytes `call` puts on the socket for a
+/// words and an image request are exactly the bytes `send_infer` /
+/// `send_digits_infer` put there for the same request ids (the typed
+/// surface auto-assigns ids from 1).
+#[test]
+fn typed_call_and_deprecated_sends_are_byte_identical() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    // compute the expected sizes from the documented encoding
+    let want_words = Frame::new(
+        PayloadType::InferRequest,
+        1,
+        impulse::serve::encode_infer_request(&WORDS).unwrap(),
+    )
+    .encode();
+    let want_image = Frame::new(
+        PayloadType::DigitsInferRequest,
+        2,
+        impulse::serve::encode_digits_request(2, 2, &IMAGE).unwrap(),
+    )
+    .encode();
+    let total = want_words.len() + want_image.len();
+
+    // typed surface: ids 1 and 2 are auto-assigned
+    let mut typed = FrameClient::connect(addr).unwrap();
+    typed.call(&WorkloadInput::Words(WORDS.to_vec())).unwrap();
+    typed
+        .call(&WorkloadInput::Image { h: 2, w: 2, pixels: IMAGE.to_vec() })
+        .unwrap();
+    let typed_bytes = read_n(&listener, total);
+    drop(typed);
+
+    // deprecated surface: the same ids passed explicitly
+    let mut old = FrameClient::connect(addr).unwrap();
+    old.send_infer(1, &WORDS).unwrap();
+    old.send_digits_infer(2, 2, 2, &IMAGE).unwrap();
+    let old_bytes = read_n(&listener, total);
+    drop(old);
+
+    assert_eq!(typed_bytes, old_bytes, "typed and deprecated sends differ on the wire");
+    // and both are the documented encoding, not merely equal mistakes
+    assert_eq!(typed_bytes[..want_words.len()], want_words[..]);
+    assert_eq!(typed_bytes[want_words.len()..], want_image[..]);
+}
+
+/// `send_stats` writes exactly the frame the typed `stats` call
+/// writes for the same request id.
+#[test]
+fn deprecated_send_stats_matches_documented_encoding() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let want = Frame::new(PayloadType::StatsRequest, 5, encode_stats_request()).encode();
+
+    let mut old = FrameClient::connect(addr).unwrap();
+    old.send_stats(5).unwrap();
+    let got = read_n(&listener, want.len());
+    drop(old);
+    assert_eq!(got, want);
+}
+
+fn start_server() -> (Arc<ServeCore>, impulse::serve::TcpServeHandle) {
+    let a = SentimentArtifacts::synthetic(53);
+    let vocab = a.emb_q.len() as i64;
+    let core = Arc::new(
+        ServeCore::start_with(ServerOptions::default(), vocab, move || {
+            SentimentNetwork::from_artifacts(&a, MacroConfig::fast())
+        })
+        .unwrap(),
+    );
+    let handle = serve_tcp("127.0.0.1:0", Arc::clone(&core)).unwrap();
+    (core, handle)
+}
+
+/// Behavioral identity against a live server: the deprecated
+/// send/next pair and the typed call/wait pair return the same
+/// prediction, potential, and cycle count for the same request — and
+/// the same error code for a request the workload rejects.
+#[test]
+fn deprecated_and_typed_results_agree_on_a_live_server() {
+    let (core, handle) = start_server();
+    let addr = handle.local_addr();
+
+    // typed surface
+    let mut typed = FrameClient::connect(addr).unwrap();
+    typed.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    assert_eq!(typed.hello().unwrap(), PROTOCOL_VERSION);
+    let p = typed.call(&WorkloadInput::Words(WORDS.to_vec())).unwrap();
+    let out = typed.wait(&p).unwrap();
+    let p = typed
+        .call(&WorkloadInput::Image { h: 28, w: 28, pixels: vec![0.0; 784] })
+        .unwrap();
+    let typed_err = typed.wait(&p).unwrap_err();
+    let typed_code = typed_err
+        .downcast_ref::<ServerError>()
+        .expect("typed rejection carries a ServerError")
+        .code;
+    drop(typed);
+
+    // deprecated surface, fresh connection, same requests
+    let mut old = FrameClient::connect(addr).unwrap();
+    old.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    assert_eq!(old.hello().unwrap(), PROTOCOL_VERSION);
+    old.send_infer(1, &WORDS).unwrap();
+    let (id, res) = old.next_result().unwrap().expect("stream ended early");
+    assert_eq!(id, 1);
+    let r = res.expect("infer must succeed on the deprecated surface");
+    assert_eq!(
+        (r.pred, r.v_out, r.cycles),
+        (out.pred, out.v_out, out.cycles),
+        "deprecated and typed surfaces disagree on the same request"
+    );
+    old.send_digits_infer(2, 28, 28, &[0.0; 784]).unwrap();
+    let (id, res) = old.next_digits_result().unwrap().expect("stream ended early");
+    assert_eq!(id, 2);
+    let (code, _) = res.expect_err("sentiment server must reject an image");
+    assert_eq!(code, typed_code, "rejection code differs between surfaces");
+    assert_eq!(code, ErrorCode::InferenceFailed.as_u16());
+    old.finish_writes().unwrap();
+    assert!(old.next_frame().unwrap().is_none());
+
+    handle.stop();
+    core.shutdown();
+}

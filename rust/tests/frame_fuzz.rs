@@ -1,0 +1,298 @@
+//! Seed-driven mutation fuzzing of the IMP1 frame layer, against both
+//! the pure codec and a live TCP listener. Every case derives from a
+//! pinned seed (printed on failure, so any crash is reproducible):
+//! valid frames are mutated by truncation, bit flips, corrupted magic,
+//! unknown type bytes, bad version bytes, oversized length prefixes,
+//! and flipped CRC trailers. The codec must classify every mutant
+//! without panicking; the server must answer an error frame or drop
+//! the connection cleanly — never hang, never panic, and never leak a
+//! pinned stream lane.
+
+use impulse::bits::XorShiftRng;
+use impulse::coordinator::{ServerOptions, WorkloadInput};
+use impulse::data::SentimentArtifacts;
+use impulse::macro_sim::MacroConfig;
+use impulse::serve::{
+    crc32, encode_digits_request, encode_infer_request, encode_stats_request,
+    encode_stream_append, hello_payload, serve_tcp, Decoded, Frame, FrameClient, FrameReader,
+    PayloadType, ServeCore, TcpServeHandle, WireError, CRC_LEN, MAX_PAYLOAD, PROTOCOL_VERSION,
+};
+use impulse::snn::SentimentNetwork;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+const SEED: u64 = 0xF022_2026;
+
+/// The valid-frame corpus the mutator starts from: every request shape
+/// the listener accepts, covering the one-shot, stats, and stream
+/// surfaces.
+fn corpus() -> Vec<Vec<u8>> {
+    vec![
+        Frame::new(PayloadType::Hello, 0, hello_payload(1, 1)).encode(),
+        Frame::new(PayloadType::InferRequest, 7, encode_infer_request(&[3, 1, 4]).unwrap())
+            .encode(),
+        Frame::new(
+            PayloadType::DigitsInferRequest,
+            8,
+            encode_digits_request(2, 2, &[0.0, 0.5, 1.0, -1.0]).unwrap(),
+        )
+        .encode(),
+        Frame::new(PayloadType::StatsRequest, 9, encode_stats_request()).encode(),
+        Frame::new(PayloadType::StreamOpen, 21, Vec::new()).encode(),
+        Frame::new(
+            PayloadType::StreamAppend,
+            22,
+            encode_stream_append(21, &WorkloadInput::Words(vec![3, 1, 4])).unwrap(),
+        )
+        .encode(),
+    ]
+}
+
+/// Re-stamp the CRC trailer after a deliberate header/payload edit, so
+/// the mutation under test is reached instead of shadowing as BadCrc.
+fn fix_crc(bytes: &mut [u8]) {
+    let body = bytes.len() - CRC_LEN;
+    let crc = crc32(&bytes[..body]);
+    bytes[body..].copy_from_slice(&crc.to_be_bytes());
+}
+
+/// One seeded mutation of a corpus frame. Returns the mutant and a
+/// label for failure messages.
+fn mutate(rng: &mut XorShiftRng, base: &[u8]) -> (Vec<u8>, &'static str) {
+    let mut b = base.to_vec();
+    match rng.gen_range(7) {
+        0 => {
+            // truncation: cut anywhere inside the frame
+            let cut = 1 + rng.gen_range(b.len() as u64 - 1) as usize;
+            b.truncate(cut);
+            (b, "truncated")
+        }
+        1 => {
+            // single bit flip anywhere (header, payload, or CRC)
+            let pos = rng.gen_range(b.len() as u64) as usize;
+            b[pos] ^= 1 << rng.gen_range(8);
+            (b, "bit-flip")
+        }
+        2 => {
+            // oversized declared length, rejected from the header alone
+            let len = (MAX_PAYLOAD as u32) + 1 + rng.gen_range(1 << 20) as u32;
+            b[16..20].copy_from_slice(&len.to_be_bytes());
+            (b, "oversized-length")
+        }
+        3 => {
+            // corrupted magic
+            let pos = rng.gen_range(4) as usize;
+            b[pos] = b[pos].wrapping_add(1 + rng.gen_range(255) as u8);
+            (b, "bad-magic")
+        }
+        4 => {
+            // unassigned payload-type byte, CRC fixed so the type check
+            // itself is what trips
+            b[5] = 0x20 + rng.gen_range(0x5F) as u8;
+            fix_crc(&mut b);
+            (b, "unknown-type")
+        }
+        5 => {
+            // wrong protocol version, CRC fixed
+            b[4] = 2 + rng.gen_range(254) as u8;
+            fix_crc(&mut b);
+            (b, "bad-version")
+        }
+        _ => {
+            // flipped CRC trailer bit
+            let pos = b.len() - CRC_LEN + rng.gen_range(CRC_LEN as u64) as usize;
+            b[pos] ^= 1 << rng.gen_range(8);
+            (b, "flipped-crc")
+        }
+    }
+}
+
+/// The pure codec never panics on a mutant: `Frame::decode` classifies
+/// every case as a frame, a need-more, or a typed `WireError`, and the
+/// incremental reader terminates on the mutant followed by EOF.
+#[test]
+fn fuzz_codec_classifies_every_mutant() {
+    let corpus = corpus();
+    for case in 0..600u64 {
+        let case_seed = SEED ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = XorShiftRng::new(case_seed);
+        let base = &corpus[rng.gen_range(corpus.len() as u64) as usize];
+        let (mutant, label) = mutate(&mut rng, base);
+
+        // one-shot: must return, never panic
+        let _ = Frame::decode(&mutant);
+
+        // incremental: must terminate (frame, clean EOF, or error)
+        let mut rd = FrameReader::new(std::io::Cursor::new(mutant.clone()));
+        for _ in 0..4 {
+            match rd.next_frame() {
+                Ok(Some(_)) => continue,
+                Ok(None) | Err(_) => break,
+            }
+        }
+
+        // mutants that still decode as a frame must at least re-encode
+        // to their own bytes (the codec never "repairs" input):
+        // every mutation class edits covered bytes or the CRC itself
+        if let Ok(Decoded::Frame(f, _)) = Frame::decode(&mutant) {
+            let reencoded = f.encode();
+            assert!(
+                reencoded == mutant || label == "truncated",
+                "case {case} (seed {case_seed:#x}, {label}): \
+                 decoded frame does not re-encode to the mutant bytes"
+            );
+        }
+    }
+}
+
+fn start_server() -> (Arc<ServeCore>, TcpServeHandle) {
+    let a = SentimentArtifacts::synthetic(29);
+    let vocab = a.emb_q.len() as i64;
+    let core = Arc::new(
+        ServeCore::start_with(ServerOptions::default(), vocab, move || {
+            SentimentNetwork::from_artifacts(&a, MacroConfig::fast())
+        })
+        .unwrap(),
+    );
+    let handle = serve_tcp("127.0.0.1:0", Arc::clone(&core)).unwrap();
+    (core, handle)
+}
+
+/// Drain a fuzzed connection to EOF. `Err` if the server wedges: a
+/// read timeout here means the listener neither answered nor closed.
+fn drain(s: &TcpStream) -> Result<Vec<u8>, String> {
+    let mut r = s.try_clone().unwrap();
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match r.read(&mut chunk) {
+            Ok(0) => return Ok(buf),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Err("server wedged: no answer and no close within the read timeout"
+                    .to_string())
+            }
+            // reset/abort while we still hold unread bytes is a close
+            Err(_) => return Ok(buf),
+        }
+    }
+}
+
+/// Whatever the server sent back must be well-formed frames — it never
+/// emits partial or corrupt bytes, even while rejecting garbage.
+fn assert_clean_frames(bytes: &[u8], ctx: &str) {
+    let mut rest = bytes;
+    while !rest.is_empty() {
+        match Frame::decode(rest) {
+            Ok(Decoded::Frame(_, used)) => rest = &rest[used..],
+            other => panic!("{ctx}: server wrote malformed bytes: {other:?}"),
+        }
+    }
+}
+
+/// Live-listener fuzzing: every mutant connection is answered with an
+/// error frame or dropped cleanly (EOF), within the timeout, and the
+/// server keeps serving fresh well-formed clients afterwards.
+#[test]
+fn fuzz_live_listener_never_wedges() {
+    let (core, handle) = start_server();
+    let addr = handle.local_addr();
+    let corpus = corpus();
+
+    for case in 0..48u64 {
+        let case_seed = SEED ^ (1 << 32) ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = XorShiftRng::new(case_seed);
+        let base = &corpus[rng.gen_range(corpus.len() as u64) as usize];
+        let (mutant, label) = mutate(&mut rng, base);
+
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = s.try_clone().unwrap();
+        // a write error just means the server already rejected and
+        // closed — that counts as a clean drop
+        let _ = w.write_all(&mutant);
+        let _ = s.shutdown(Shutdown::Write);
+        let answer = drain(&s).unwrap_or_else(|e| {
+            panic!("case {case} (seed {case_seed:#x}, {label}): {e}")
+        });
+        assert_clean_frames(
+            &answer,
+            &format!("case {case} (seed {case_seed:#x}, {label})"),
+        );
+    }
+
+    // the listener survived 48 garbage connections: a fresh client
+    // still gets served, and no stream lane leaked
+    let mut client = FrameClient::connect(addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    assert_eq!(client.hello().unwrap(), PROTOCOL_VERSION);
+    let p = client.call(&WorkloadInput::Words(vec![1, 2, 3])).unwrap();
+    client.wait(&p).expect("server must still serve after fuzzing");
+    drop(client);
+
+    assert_eq!(core.streams().active(), 0, "fuzzing leaked a pinned stream lane");
+    handle.stop();
+    core.shutdown();
+}
+
+/// Stream-lane accounting under abuse: a connection that OPENS a real
+/// stream and then turns to garbage must still free its lane when the
+/// listener drops it — the eviction path, not just the happy-path
+/// close.
+#[test]
+fn fuzzed_connection_with_open_stream_frees_its_lane() {
+    let (core, handle) = start_server();
+    let addr = handle.local_addr();
+
+    for case in 0..8u64 {
+        let case_seed = SEED ^ (2 << 32) ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = XorShiftRng::new(case_seed);
+
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = s.try_clone().unwrap();
+        // valid open (acked, lane pinned) …
+        w.write_all(&Frame::new(PayloadType::StreamOpen, 21, Vec::new()).encode()).unwrap();
+        let mut rd = FrameReader::new(s.try_clone().unwrap());
+        let ack = rd.next_frame().unwrap().expect("open must be acked");
+        assert_eq!(ack.payload_type, PayloadType::StreamAck, "case {case}");
+        assert!(core.streams().active() >= 1, "case {case}: lane not pinned");
+        // … then garbage on the same connection
+        let base = Frame::new(
+            PayloadType::StreamAppend,
+            22,
+            encode_stream_append(21, &WorkloadInput::Words(vec![5])).unwrap(),
+        )
+        .encode();
+        let (mutant, label) = mutate(&mut rng, &base);
+        let _ = w.write_all(&mutant);
+        let _ = s.shutdown(Shutdown::Write);
+        let answer = drain(&s).unwrap_or_else(|e| {
+            panic!("case {case} (seed {case_seed:#x}, {label}): {e}")
+        });
+        assert_clean_frames(
+            &answer,
+            &format!("case {case} (seed {case_seed:#x}, {label})"),
+        );
+        // connection teardown must have released the pinned lane; the
+        // listener runs close_conn after the reader loop exits, so give
+        // the teardown a bounded moment to land
+        let mut freed = false;
+        for _ in 0..200 {
+            if core.streams().active() == 0 {
+                freed = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(freed, "case {case} (seed {case_seed:#x}, {label}): stream lane leaked");
+    }
+
+    handle.stop();
+    core.shutdown();
+}

@@ -1,0 +1,280 @@
+//! Property tests for the *incremental* frame reader: however a byte
+//! stream is fragmented or coalesced by the transport, `FrameReader`
+//! must decode exactly the frames a one-shot `Frame::decode` loop sees
+//! over the whole buffer — and the error paths (1 MiB cap, CRC
+//! failure, mid-frame EOF) must surface the right `WireError` without
+//! wedging the reader.
+
+use impulse::proptest_lite::forall_ctx;
+use impulse::serve::{
+    encode_infer_request, error_payload, Decoded, ErrorCode, Frame, FrameReader, PayloadType,
+    WireError, CRC_LEN, HEADER_LEN, MAX_PAYLOAD,
+};
+use std::io::Read;
+
+/// A `Read` that hands back the stream in pre-cut chunks, one chunk
+/// per `read` call (never more than one chunk even if the caller's
+/// buffer is larger) — the worst-case short-read transport.
+struct Chunked {
+    chunks: Vec<Vec<u8>>,
+    idx: usize,
+    off: usize,
+}
+
+impl Chunked {
+    fn new(data: &[u8], cuts: &[usize]) -> Chunked {
+        let mut chunks = Vec::new();
+        let mut prev = 0;
+        for &c in cuts {
+            let c = c.min(data.len());
+            if c > prev {
+                chunks.push(data[prev..c].to_vec());
+                prev = c;
+            }
+        }
+        if prev < data.len() {
+            chunks.push(data[prev..].to_vec());
+        }
+        Chunked { chunks, idx: 0, off: 0 }
+    }
+}
+
+impl Read for Chunked {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        while self.idx < self.chunks.len() {
+            let chunk = &self.chunks[self.idx];
+            if self.off < chunk.len() {
+                let n = buf.len().min(chunk.len() - self.off);
+                buf[..n].copy_from_slice(&chunk[self.off..self.off + n]);
+                self.off += n;
+                if self.off == chunk.len() {
+                    self.idx += 1;
+                    self.off = 0;
+                }
+                return Ok(n);
+            }
+            self.idx += 1;
+            self.off = 0;
+        }
+        Ok(0)
+    }
+}
+
+/// Ground truth: decode the whole buffer with one-shot `Frame::decode`.
+fn decode_all(mut bytes: &[u8]) -> Vec<Frame> {
+    let mut out = Vec::new();
+    while !bytes.is_empty() {
+        match Frame::decode(bytes).expect("ground-truth stream is valid") {
+            Decoded::Frame(f, used) => {
+                out.push(f);
+                bytes = &bytes[used..];
+            }
+            other => panic!("ground-truth stream incomplete: {other:?}"),
+        }
+    }
+    out
+}
+
+/// Drain a reader to EOF, collecting frames.
+fn read_all<R: Read>(mut rd: FrameReader<R>) -> Vec<Frame> {
+    let mut out = Vec::new();
+    while let Some(f) = rd.next_frame().expect("valid stream must decode") {
+        out.push(f);
+    }
+    out
+}
+
+/// The pinned PROTOCOL.md §6 worked-example frames, as a wire stream.
+fn pinned_stream() -> Vec<u8> {
+    let frames = [
+        Frame::new(PayloadType::InferRequest, 7, encode_infer_request(&[3, 1, 4]).unwrap()),
+        Frame::new(PayloadType::Hello, 0, vec![1, 1]),
+        Frame::new(
+            PayloadType::Error,
+            9,
+            error_payload(ErrorCode::InferenceFailed, "word id out of range"),
+        ),
+        Frame::new(PayloadType::StreamOpen, 21, Vec::new()),
+    ];
+    let mut wire = Vec::new();
+    for f in &frames {
+        wire.extend_from_slice(&f.encode());
+    }
+    wire
+}
+
+/// Exhaustive: the pinned stream split at EVERY single byte boundary
+/// decodes identically to the one-shot decode.
+#[test]
+fn pinned_frames_split_at_every_byte_boundary() {
+    let wire = pinned_stream();
+    let want = decode_all(&wire);
+    assert_eq!(want.len(), 4);
+    for cut in 1..wire.len() {
+        let got = read_all(FrameReader::new(Chunked::new(&wire, &[cut])));
+        assert_eq!(got, want, "split at byte {cut} changed the decode");
+    }
+}
+
+/// Property: random multi-frame streams under random fragmentation
+/// (including 1-byte trickles and cuts inside headers, payloads, and
+/// CRC trailers) decode identically to the one-shot decode.
+#[test]
+fn prop_random_fragmentation_matches_one_shot() {
+    let types = [
+        PayloadType::Hello,
+        PayloadType::InferRequest,
+        PayloadType::InferResponse,
+        PayloadType::StreamAppend,
+        PayloadType::Error,
+    ];
+    forall_ctx(
+        150,
+        0xF4A6,
+        |rng| {
+            let n_frames = 1 + rng.gen_range(5) as usize;
+            let mut wire = Vec::new();
+            for _ in 0..n_frames {
+                let ty = types[rng.gen_range(types.len() as u64) as usize];
+                let len = rng.gen_range(120) as usize;
+                let payload: Vec<u8> = (0..len).map(|_| rng.gen_range(256) as u8).collect();
+                wire.extend_from_slice(&Frame::new(ty, rng.next_u64(), payload).encode());
+            }
+            let n_cuts = rng.gen_range(12) as usize;
+            let mut cuts: Vec<usize> =
+                (0..n_cuts).map(|_| 1 + rng.gen_range(wire.len() as u64 - 1) as usize).collect();
+            cuts.sort_unstable();
+            cuts.dedup();
+            (wire, cuts)
+        },
+        |(wire, cuts)| {
+            let want = decode_all(wire);
+            let got = read_all(FrameReader::new(Chunked::new(wire, cuts)));
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("fragmented decode differs: {} vs {} frames", got.len(), want.len()))
+            }
+        },
+    );
+}
+
+/// Property: frames arriving COALESCED (several frames per read, plus
+/// a trailing partial that completes later) decode identically too —
+/// the carry buffer must handle more-than-one-frame chunks.
+#[test]
+fn prop_coalesced_chunks_match_one_shot() {
+    forall_ctx(
+        100,
+        0xC0A7,
+        |rng| {
+            let n_frames = 2 + rng.gen_range(4) as usize;
+            let mut wire = Vec::new();
+            for _ in 0..n_frames {
+                let len = rng.gen_range(60) as usize;
+                let payload: Vec<u8> = (0..len).map(|_| rng.gen_range(256) as u8).collect();
+                wire.extend_from_slice(
+                    &Frame::new(PayloadType::InferRequest, rng.next_u64(), payload).encode(),
+                );
+            }
+            // one cut mid-frame, so some read returns 2+ whole frames
+            // plus a partial frame that a later read completes
+            let cut = 1 + rng.gen_range(wire.len() as u64 - 1) as usize;
+            (wire, vec![cut])
+        },
+        |(wire, cuts)| {
+            let want = decode_all(wire);
+            let got = read_all(FrameReader::new(Chunked::new(wire, cuts)));
+            if got == want {
+                Ok(())
+            } else {
+                Err("coalesced decode differs from one-shot".to_string())
+            }
+        },
+    );
+}
+
+/// The 1 MiB payload cap: a header claiming `MAX_PAYLOAD + 1` is
+/// rejected with `Oversized` as soon as the header is complete — even
+/// when it arrives a byte at a time — and the reader stays in its
+/// error state (deterministic error, no hang, no panic) instead of
+/// waiting for a payload that will never be accepted.
+#[test]
+fn oversized_header_errors_incrementally_without_wedging() {
+    let mut bytes = Frame::new(PayloadType::InferRequest, 3, vec![0; 4]).encode();
+    bytes[16..20].copy_from_slice(&((MAX_PAYLOAD as u32) + 1).to_be_bytes());
+    let cuts: Vec<usize> = (1..bytes.len()).collect();
+    let mut rd = FrameReader::new(Chunked::new(&bytes, &cuts));
+    assert!(matches!(rd.next_frame(), Err(WireError::Oversized(n)) if n == MAX_PAYLOAD + 1));
+    // the poisoned buffer keeps reporting the same error on re-poll
+    assert!(matches!(rd.next_frame(), Err(WireError::Oversized(_))));
+}
+
+/// CRC failure under fragmentation: a payload-byte flip surfaces as
+/// `BadCrc` once the full frame is buffered, for every split point.
+#[test]
+fn crc_failure_is_reported_at_every_split_point() {
+    let f = Frame::new(PayloadType::InferRequest, 11, encode_infer_request(&[5, 6]).unwrap());
+    let mut bytes = f.encode();
+    bytes[HEADER_LEN + 2] ^= 0x40;
+    for cut in 1..bytes.len() {
+        let mut rd = FrameReader::new(Chunked::new(&bytes, &[cut]));
+        assert!(
+            matches!(rd.next_frame(), Err(WireError::BadCrc { .. })),
+            "split at {cut} did not surface BadCrc"
+        );
+    }
+}
+
+/// Property: EOF placement is always classified correctly — a stream
+/// cut at a frame boundary ends with `Ok(None)`, a stream cut mid-
+/// frame ends with `Truncated`, whatever the fragmentation before it.
+#[test]
+fn prop_eof_classification() {
+    forall_ctx(
+        120,
+        0xE0F5,
+        |rng| {
+            let len = rng.gen_range(40) as usize;
+            let payload: Vec<u8> = (0..len).map(|_| rng.gen_range(256) as u8).collect();
+            let a = Frame::new(PayloadType::InferRequest, 1, payload).encode();
+            let b = Frame::new(PayloadType::Hello, 2, vec![1, 1]).encode();
+            let mut wire = a.clone();
+            wire.extend_from_slice(&b);
+            // cut anywhere in the stream; at a.len() or wire.len() the
+            // EOF is clean, anywhere else it is mid-frame
+            let cut = 1 + rng.gen_range(wire.len() as u64) as usize;
+            let frag = 1 + rng.gen_range(cut as u64) as usize;
+            (wire, a.len(), cut, frag)
+        },
+        |(wire, boundary, cut, frag)| {
+            let mut rd = FrameReader::new(Chunked::new(&wire[..*cut], &[*frag]));
+            let clean = *cut == *boundary || *cut == wire.len();
+            loop {
+                match rd.next_frame() {
+                    Ok(Some(_)) => continue,
+                    Ok(None) if clean => return Ok(()),
+                    Err(WireError::Truncated) if !clean => return Ok(()),
+                    other => {
+                        return Err(format!(
+                            "cut {cut} (boundary {boundary}): got {other:?}, clean={clean}"
+                        ))
+                    }
+                }
+            }
+        },
+    );
+}
+
+/// A frame carrying exactly `MAX_PAYLOAD` bytes decodes fine through
+/// the incremental reader (the cap is a strict `>` bound), fragmented
+/// across several large chunks.
+#[test]
+fn max_size_frame_passes_incrementally() {
+    let f = Frame::new(PayloadType::Error, 2, vec![0xAB; MAX_PAYLOAD]);
+    let wire = f.encode();
+    assert_eq!(wire.len(), HEADER_LEN + MAX_PAYLOAD + CRC_LEN);
+    let cuts = [10, 1000, 300_000, 900_000];
+    let got = read_all(FrameReader::new(Chunked::new(&wire, &cuts)));
+    assert_eq!(got, vec![f]);
+}

@@ -1,0 +1,166 @@
+//! End-to-end record/replay determinism: a mixed capture (handshake,
+//! one-shot sentiment requests, a streaming session, a rejected
+//! cross-workload request) taken against a live TCP server must replay
+//! bit-identically — same response frames, same V-digest checkpoints —
+//! on a fresh core, on BOTH execution engines (the ISSUE's acceptance
+//! criterion), and a tampered capture must be flagged as divergent.
+
+use impulse::coordinator::{ServerOptions, WorkloadInput};
+use impulse::data::SentimentArtifacts;
+use impulse::macro_sim::{Engine, MacroConfig};
+use impulse::replay::runner::replay_capture;
+use impulse::replay::{Capture, Event, Recorder};
+use impulse::serve::{serve_tcp, FrameClient, ServeCore, HEADER_LEN, PROTOCOL_VERSION};
+use impulse::snn::SentimentNetwork;
+use std::sync::Arc;
+use std::time::Duration;
+
+const SEED: u64 = 1071;
+
+/// A serve core in the exact shape `impulse serve --record` pins:
+/// one worker, no batching, digests captured per request.
+fn record_shaped_core(engine: Engine) -> Arc<ServeCore> {
+    let a = SentimentArtifacts::synthetic(SEED);
+    let vocab = a.emb_q.len() as i64;
+    let mac = MacroConfig { engine, ..MacroConfig::default() };
+    let opts = ServerOptions {
+        workers: 1,
+        batch_size: 1,
+        capture_digests: true,
+        ..ServerOptions::default()
+    };
+    Arc::new(
+        ServeCore::start_with(opts, vocab, move || SentimentNetwork::from_artifacts(&a, mac))
+            .unwrap(),
+    )
+}
+
+/// Drive a mixed-traffic session against a recording server and return
+/// the capture: hello, one-shot word requests (including a clamped
+/// out-of-range id), a streaming session with a read-out, and an image
+/// request the sentiment workload must reject with an error frame.
+fn record_session() -> Capture {
+    let core = record_shaped_core(Engine::Fast);
+    let rec = Arc::new(Recorder::in_memory());
+    core.set_recorder(Arc::clone(&rec));
+    let handle = serve_tcp("127.0.0.1:0", Arc::clone(&core)).unwrap();
+
+    let mut client = FrameClient::connect(handle.local_addr()).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    assert_eq!(client.hello().unwrap(), PROTOCOL_VERSION);
+
+    for words in [vec![3i64, 7, 5], vec![19], vec![999, -4, 2, 11]] {
+        let p = client.call(&WorkloadInput::Words(words)).unwrap();
+        client.wait(&p).unwrap();
+    }
+
+    let h = client.stream_open().unwrap();
+    for chunk in [vec![2i64, 9], vec![14], vec![6, 1, 1]] {
+        client.stream_append(&h, &WorkloadInput::Words(chunk)).unwrap();
+    }
+    client.stream_read_out(&h).unwrap();
+    client.stream_close(&h).unwrap();
+
+    // wrong workload kind: answered with an error frame, also recorded
+    let p = client
+        .call(&WorkloadInput::Image { h: 2, w: 2, pixels: vec![0.0, 0.5, 1.0, -1.0] })
+        .unwrap();
+    assert!(client.wait(&p).is_err(), "sentiment server must reject an image");
+
+    client.finish_writes().unwrap();
+    assert!(client.next_frame().unwrap().is_none(), "server must close after drain");
+    handle.stop();
+    core.shutdown();
+    rec.capture()
+}
+
+/// The acceptance criterion: the capture replays bit-identically on a
+/// fresh core with the same engine AND on the bit-level engine (cross-
+/// engine equivalence on real recorded traffic).
+#[test]
+fn mixed_capture_replays_bit_identically_on_both_engines() {
+    let capture = record_session();
+    let digests = capture
+        .events
+        .iter()
+        .filter(|e| matches!(e, Event::Digest { .. }))
+        .count();
+    assert!(
+        digests >= 8,
+        "expected a digest per one-shot + per stream op, got {digests}"
+    );
+
+    for engine in [Engine::Fast, Engine::BitLevel] {
+        let core = record_shaped_core(engine);
+        let report = replay_capture(&capture, &core).unwrap();
+        core.shutdown();
+        assert_eq!(report.connections, 1, "engine {engine:?}");
+        assert!(report.frames_out >= 10, "engine {engine:?}: {report:?}");
+        assert_eq!(report.digests, digests, "engine {engine:?}");
+        assert!(
+            report.is_ok(),
+            "engine {engine:?} diverged: {}",
+            report.divergence.as_deref().unwrap_or("")
+        );
+    }
+}
+
+/// The capture survives the text format round trip (what `--record`
+/// writes and `impulse replay` loads) and still replays clean.
+#[test]
+fn capture_text_round_trip_replays_clean() {
+    let capture = record_session();
+    let reloaded = Capture::from_text(&capture.to_text()).unwrap();
+    assert_eq!(reloaded.events, capture.events);
+
+    let core = record_shaped_core(Engine::Fast);
+    let report = replay_capture(&reloaded, &core).unwrap();
+    core.shutdown();
+    assert!(report.is_ok(), "{:?}", report.divergence);
+}
+
+/// Tamper detection, digest side: flipping one bit of a recorded
+/// V-digest must be reported as a divergence, not silently accepted.
+#[test]
+fn tampered_digest_is_flagged() {
+    let mut capture = record_session();
+    let slot = capture
+        .events
+        .iter_mut()
+        .find_map(|e| match e {
+            Event::Digest { digest, .. } => Some(digest),
+            _ => None,
+        })
+        .expect("capture has digests");
+    *slot ^= 1;
+
+    let core = record_shaped_core(Engine::Fast);
+    let report = replay_capture(&capture, &core).unwrap();
+    core.shutdown();
+    let d = report.divergence.expect("flipped digest must diverge");
+    assert!(d.contains("digest"), "divergence should name the digest: {d}");
+}
+
+/// Tamper detection, frame side: flipping the prediction byte of a
+/// recorded `InferResponse` (a byte the normalizer does NOT mask, as
+/// latency/batch/worker are) must be reported as a divergence.
+#[test]
+fn tampered_response_byte_is_flagged() {
+    let mut capture = record_session();
+    let bytes = capture
+        .events
+        .iter_mut()
+        .find_map(|e| match e {
+            Event::FrameOut { bytes, .. } if bytes.len() > HEADER_LEN && bytes[5] == 0x11 => {
+                Some(bytes)
+            }
+            _ => None,
+        })
+        .expect("capture has an InferResponse frame");
+    bytes[HEADER_LEN] ^= 1; // pred byte
+
+    let core = record_shaped_core(Engine::Fast);
+    let report = replay_capture(&capture, &core).unwrap();
+    core.shutdown();
+    assert!(report.divergence.is_some(), "flipped pred byte must diverge");
+}
