@@ -1,0 +1,113 @@
+//! `impulse check` — static analysis of the built-in ISA streams.
+//!
+//! Runs the shared [`ProgramValidator`] (structural rules + dataflow
+//! linter, see docs/VALIDATION.md) over every instruction stream the
+//! coordinator can emit: the canonical Fig 6 neuron sequences and one
+//! representative tile schedule per layer of both model networks,
+//! built from the deterministic synthetic bundles so no compiled
+//! artifacts are needed. Exits nonzero if any stream produces an
+//! Error-severity diagnostic; warnings are reported but do not fail.
+
+use super::Flags;
+use impulse::bitcell::Parity;
+use impulse::data::{DigitsArtifacts, SentimentArtifacts};
+use impulse::isa::{neuron_sequence, NeuronType, Program, ProgramValidator};
+use impulse::macro_sim::MacroConfig;
+use impulse::mapper::ConstRows;
+use impulse::snn::{DigitsNetwork, SentimentNetwork};
+use impulse::Result;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args);
+    let json = flags.has("json");
+    let model = flags.get("model").unwrap_or("all");
+    let timesteps = flags.get_usize("timesteps").unwrap_or(2).max(1);
+    let seed = flags.get_usize("seed").unwrap_or(7) as u64;
+
+    // (label, program, validator) triples. Neuron sequences are
+    // fragments — constants and membranes live outside the fragment —
+    // so they run with `assume_initialized`; full schedules install
+    // their own state and run strict.
+    let mut streams: Vec<(String, Program, ProgramValidator)> = Vec::new();
+
+    let fragment = ProgramValidator::new().assume_initialized(true);
+    let cr = ConstRows::default();
+    for (ty, name) in [
+        (NeuronType::IF, "if"),
+        (NeuronType::LIF, "lif"),
+        (NeuronType::RMP, "rmp"),
+    ] {
+        for (parity, pname) in [(Parity::Odd, "odd"), (Parity::Even, "even")] {
+            let v_row = match parity {
+                Parity::Odd => 0,
+                Parity::Even => 1,
+            };
+            let seq = neuron_sequence(ty, v_row, cr.for_parity(parity), parity);
+            streams.push((format!("seq/{name}/{pname}"), Program::from_vec(seq), fragment));
+        }
+    }
+
+    let strict = ProgramValidator::new();
+    if model == "all" || model == "sentiment" {
+        let a = SentimentArtifacts::synthetic(seed);
+        let net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast())?;
+        for (label, prog) in net.schedule_programs(timesteps) {
+            streams.push((format!("sentiment/{label}"), prog, strict));
+        }
+    }
+    if model == "all" || model == "digits" {
+        let a = DigitsArtifacts::synthetic(seed);
+        let net = DigitsNetwork::from_artifacts(&a, MacroConfig::fast())?;
+        for (label, prog) in net.schedule_programs(timesteps) {
+            streams.push((format!("digits/{label}"), prog, strict));
+        }
+    }
+    if streams.is_empty() {
+        anyhow::bail!("unknown --model '{model}' (expected sentiment|digits|all)");
+    }
+
+    let mut errors = 0usize;
+    let mut warnings = 0usize;
+    let mut json_entries = Vec::new();
+    for (label, prog, validator) in &streams {
+        let report = validator.validate(prog);
+        errors += report.error_count();
+        warnings += report.warning_count();
+        if json {
+            json_entries.push(format!(
+                "{{\"stream\":\"{label}\",\"report\":{}}}",
+                report.to_json()
+            ));
+        } else {
+            let status = if report.error_count() > 0 {
+                "FAIL"
+            } else if report.warning_count() > 0 {
+                "warn"
+            } else {
+                "ok"
+            };
+            println!(
+                "{status:>4}  {label} ({} instructions, {} errors, {} warnings)",
+                report.instructions(),
+                report.error_count(),
+                report.warning_count(),
+            );
+            for d in report.diagnostics() {
+                println!("      {d}");
+            }
+        }
+    }
+
+    if json {
+        println!("[{}]", json_entries.join(","));
+    } else {
+        println!(
+            "checked {} streams: {errors} errors, {warnings} warnings",
+            streams.len()
+        );
+    }
+    if errors > 0 {
+        anyhow::bail!("validation failed: {errors} error diagnostics");
+    }
+    Ok(())
+}

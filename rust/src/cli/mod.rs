@@ -1,6 +1,7 @@
 //! CLI subcommand implementations.
 
 pub mod bench;
+pub mod check;
 pub mod eval;
 pub mod infer;
 pub mod info;

@@ -10,10 +10,12 @@
 mod instruction;
 mod program;
 mod sequences;
+pub mod verify;
 
 pub use instruction::{Instruction, InstructionKind, WriteMaskMode};
 pub use program::{Program, ProgramBuilder};
 pub use sequences::{neuron_sequence, NeuronConfigRows, NeuronType};
+pub use verify::{ProgramValidator, Report};
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,342 @@
+//! Layer 2 — dataflow hazard analysis.
+//!
+//! A single linear abstract-interpretation pass over the stream. Per
+//! (V row, parity) we track whether the row has been defined and
+//! whether its last store was ever observed; per parity we track the
+//! spike-buffer state (never latched / latched-and-fresh / latched-
+//! but-stale). The lattice is deliberately tiny — IMPULSE streams are
+//! straight-line, so one forward walk is exact, not approximate.
+
+use super::structural::check_instruction;
+use super::{Diagnostic, RuleCode};
+use crate::bitcell::{Parity, V_ROWS};
+use crate::isa::{Instruction, WriteMaskMode};
+
+/// Spike-buffer abstract state for one parity.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SpikeState {
+    /// No `SpikeCheck` has executed yet on this parity.
+    Never,
+    /// A `SpikeCheck` latched the buffer from `checked_row`; `fresh`
+    /// drops to false once that row's membrane is overwritten.
+    Latched { checked_row: usize, fresh: bool },
+}
+
+fn pidx(p: Parity) -> usize {
+    match p {
+        Parity::Odd => 0,
+        Parity::Even => 1,
+    }
+}
+
+struct State {
+    /// Per (parity, row): has the row been written at least once?
+    init: [[bool; V_ROWS]; 2],
+    /// Per (parity, row): index of a store not yet read (dead-store
+    /// candidate), if any.
+    pending_store: [[Option<usize>; V_ROWS]; 2],
+    /// D001 is reported once per (parity, row), not per use.
+    warned_uninit: [[bool; V_ROWS]; 2],
+    spike: [SpikeState; 2],
+    assume_initialized: bool,
+}
+
+impl State {
+    fn new(assume_initialized: bool) -> Self {
+        State {
+            init: [[assume_initialized; V_ROWS]; 2],
+            pending_store: [[None; V_ROWS]; 2],
+            warned_uninit: [[false; V_ROWS]; 2],
+            spike: [SpikeState::Never; 2],
+            assume_initialized,
+        }
+    }
+
+    /// A read of `row` under `parity` at instruction `ix`.
+    fn read(&mut self, ix: usize, parity: Parity, row: usize, diags: &mut Vec<Diagnostic>) {
+        let p = pidx(parity);
+        if !self.init[p][row] && !self.warned_uninit[p][row] {
+            self.warned_uninit[p][row] = true;
+            diags.push(Diagnostic::at(
+                ix,
+                RuleCode::UseBeforeInit,
+                format!("V row {row} ({parity:?}) read before any write"),
+            ));
+        }
+        // the store feeding this read is observed — not dead
+        self.pending_store[p][row] = None;
+    }
+
+    /// A full (unconditional) overwrite of `row` under `parity`.
+    fn write_full(&mut self, ix: usize, parity: Parity, row: usize, diags: &mut Vec<Diagnostic>) {
+        let p = pidx(parity);
+        if let Some(prev) = self.pending_store[p][row] {
+            diags.push(Diagnostic::at(
+                prev,
+                RuleCode::DeadStore,
+                format!(
+                    "store to V row {row} ({parity:?}) is overwritten at #{ix} \
+                     without an intervening read"
+                ),
+            ));
+        }
+        self.init[p][row] = true;
+        self.pending_store[p][row] = Some(ix);
+        self.stale_if_checked(parity, row);
+    }
+
+    /// A spike-gated (partial) write: some fields may survive, so the
+    /// prior value is live — treat as read-modify-write.
+    fn write_gated(&mut self, ix: usize, parity: Parity, row: usize, diags: &mut Vec<Diagnostic>) {
+        self.read(ix, parity, row, diags);
+        let p = pidx(parity);
+        self.init[p][row] = true;
+        self.pending_store[p][row] = Some(ix);
+        self.stale_if_checked(parity, row);
+    }
+
+    /// Overwriting the row the spike buffer was latched from makes
+    /// the buffer stale for subsequent gated ops.
+    fn stale_if_checked(&mut self, parity: Parity, row: usize) {
+        let p = pidx(parity);
+        if let SpikeState::Latched { checked_row, fresh: true } = self.spike[p] {
+            if checked_row == row {
+                self.spike[p] = SpikeState::Latched {
+                    checked_row,
+                    fresh: false,
+                };
+            }
+        }
+    }
+
+    /// Validate the spike buffer before a gated op (`ResetV`,
+    /// `AccV2V` with [`WriteMaskMode::Spiked`]).
+    fn check_gate(&self, ix: usize, parity: Parity, what: &str, diags: &mut Vec<Diagnostic>) {
+        match self.spike[pidx(parity)] {
+            SpikeState::Never => diags.push(Diagnostic::at(
+                ix,
+                RuleCode::GateNeverLatched,
+                format!(
+                    "{what} ({parity:?}) gated on a spike buffer that no \
+                     SpikeCheck has latched"
+                ),
+            )),
+            SpikeState::Latched { checked_row, fresh: false } => diags.push(Diagnostic::at(
+                ix,
+                RuleCode::GateStale,
+                format!(
+                    "{what} ({parity:?}) gated on a spike buffer latched from \
+                     V row {checked_row}, whose membrane has since changed"
+                ),
+            )),
+            SpikeState::Latched { fresh: true, .. } => {}
+        }
+    }
+}
+
+/// Indices at which each (parity, row) pair is used as a `thr_row` or
+/// `reset_row` — the rows the schedule treats as constants.
+fn const_row_uses(instrs: &[Instruction]) -> Vec<(usize, Parity, usize, &'static str)> {
+    let mut uses = Vec::new();
+    for (ix, instr) in instrs.iter().enumerate() {
+        match *instr {
+            Instruction::SpikeCheck { thr_row, parity, .. } => {
+                uses.push((ix, parity, thr_row, "thr_row"));
+            }
+            Instruction::ResetV { reset_row, parity, .. } => {
+                uses.push((ix, parity, reset_row, "reset_row"));
+            }
+            _ => {}
+        }
+    }
+    uses
+}
+
+/// Run the dataflow pass. Instructions that fail structural checks
+/// are skipped (their operands cannot be trusted to index state).
+pub(super) fn check_stream(
+    instrs: &[Instruction],
+    assume_initialized: bool,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let const_uses = const_row_uses(instrs);
+    let mut st = State::new(assume_initialized);
+    for (ix, instr) in instrs.iter().enumerate() {
+        if check_instruction(instr).is_err() {
+            continue;
+        }
+        // D004: a CIM write clobbering a row a later instruction
+        // reads as thr_row/reset_row
+        let cim_write_target: Option<(Parity, usize)> = match *instr {
+            Instruction::AccW2V { v_dst, parity, .. } => Some((parity, v_dst)),
+            Instruction::AccV2V { dst, parity, .. } => Some((parity, dst)),
+            Instruction::ResetV { dst, parity, .. } => Some((parity, dst)),
+            _ => None,
+        };
+        if let Some((parity, row)) = cim_write_target {
+            if let Some(&(use_ix, _, _, role)) = const_uses
+                .iter()
+                .find(|&&(j, p, r, _)| j > ix && p == parity && r == row)
+            {
+                diags.push(Diagnostic::at(
+                    ix,
+                    RuleCode::ConstClobber,
+                    format!(
+                        "write clobbers V row {row} ({parity:?}), used as \
+                         {role} at #{use_ix}"
+                    ),
+                ));
+            }
+        }
+        match *instr {
+            Instruction::AccW2V {
+                v_src,
+                v_dst,
+                parity,
+                ..
+            } => {
+                st.read(ix, parity, v_src, diags);
+                st.write_full(ix, parity, v_dst, diags);
+            }
+            Instruction::AccV2V {
+                src_a,
+                src_b,
+                dst,
+                parity,
+                mask,
+            } => {
+                st.read(ix, parity, src_a, diags);
+                st.read(ix, parity, src_b, diags);
+                match mask {
+                    WriteMaskMode::All => st.write_full(ix, parity, dst, diags),
+                    WriteMaskMode::Spiked => {
+                        st.check_gate(ix, parity, "AccV2V(Spiked)", diags);
+                        st.write_gated(ix, parity, dst, diags);
+                    }
+                }
+            }
+            Instruction::SpikeCheck { v_row, thr_row, parity } => {
+                st.read(ix, parity, v_row, diags);
+                st.read(ix, parity, thr_row, diags);
+                st.spike[pidx(parity)] = SpikeState::Latched {
+                    checked_row: v_row,
+                    fresh: true,
+                };
+            }
+            Instruction::ResetV { reset_row, dst, parity } => {
+                st.check_gate(ix, parity, "ResetV", diags);
+                st.read(ix, parity, reset_row, diags);
+                st.write_gated(ix, parity, dst, diags);
+            }
+            Instruction::ReadV { v_row, parity } => {
+                st.read(ix, parity, v_row, diags);
+            }
+            Instruction::WriteV { v_row, parity, .. } => {
+                // host-side programming; a later overwrite without a
+                // read still counts as a dead store
+                st.write_full(ix, parity, v_row, diags);
+            }
+            Instruction::WriteW { .. } => {}
+        }
+    }
+    // stores still pending at end-of-stream are NOT dead: macro state
+    // persists across programs (streaming sessions read it later).
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitcell::Parity::{Even, Odd};
+
+    fn run(instrs: &[Instruction], assume: bool) -> Vec<Diagnostic> {
+        let mut diags = Vec::new();
+        check_stream(instrs, assume, &mut diags);
+        diags
+    }
+
+    #[test]
+    fn use_before_init_warned_once_per_row() {
+        let p = [
+            Instruction::ReadV { v_row: 3, parity: Odd },
+            Instruction::ReadV { v_row: 3, parity: Odd },
+        ];
+        let diags = run(&p, false);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, RuleCode::UseBeforeInit);
+        assert!(run(&p, true).is_empty());
+    }
+
+    #[test]
+    fn gate_never_latched_is_error() {
+        let p = [Instruction::ResetV {
+            reset_row: 30,
+            dst: 0,
+            parity: Odd,
+        }];
+        let diags = run(&p, true);
+        assert!(diags.iter().any(|d| d.code == RuleCode::GateNeverLatched));
+    }
+
+    #[test]
+    fn gate_goes_stale_when_checked_row_changes() {
+        let p = [
+            Instruction::SpikeCheck { v_row: 0, thr_row: 28, parity: Odd },
+            Instruction::WriteV { v_row: 0, parity: Odd, values: [0; 6] },
+            Instruction::ResetV { reset_row: 30, dst: 0, parity: Odd },
+        ];
+        let diags = run(&p, true);
+        assert!(diags.iter().any(|d| d.code == RuleCode::GateStale));
+        // per-parity isolation: an Even gate is unaffected by Odd latches
+        let q = [
+            Instruction::SpikeCheck { v_row: 0, thr_row: 28, parity: Odd },
+            Instruction::ResetV { reset_row: 31, dst: 1, parity: Even },
+        ];
+        assert!(run(&q, true)
+            .iter()
+            .any(|d| d.code == RuleCode::GateNeverLatched));
+    }
+
+    #[test]
+    fn fresh_gate_sequence_is_clean() {
+        // the IF sequence shape from Fig. 6
+        let p = [
+            Instruction::SpikeCheck { v_row: 0, thr_row: 28, parity: Odd },
+            Instruction::ResetV { reset_row: 30, dst: 0, parity: Odd },
+        ];
+        assert!(run(&p, true).is_empty());
+    }
+
+    #[test]
+    fn const_clobber_is_error() {
+        let p = [
+            Instruction::AccW2V { w_row: 0, v_src: 28, v_dst: 28, parity: Odd },
+            Instruction::SpikeCheck { v_row: 0, thr_row: 28, parity: Odd },
+        ];
+        let diags = run(&p, true);
+        assert!(diags.iter().any(|d| d.code == RuleCode::ConstClobber));
+    }
+
+    #[test]
+    fn dead_store_warned_at_first_store() {
+        let p = [
+            Instruction::WriteV { v_row: 2, parity: Odd, values: [1; 6] },
+            Instruction::WriteV { v_row: 2, parity: Odd, values: [2; 6] },
+            Instruction::ReadV { v_row: 2, parity: Odd },
+        ];
+        let diags = run(&p, true);
+        let dead: Vec<_> = diags
+            .iter()
+            .filter(|d| d.code == RuleCode::DeadStore)
+            .collect();
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].index, Some(0));
+        // a store that is read, then overwritten, is not dead; nor is
+        // a store pending at end-of-stream
+        let q = [
+            Instruction::WriteV { v_row: 2, parity: Odd, values: [1; 6] },
+            Instruction::ReadV { v_row: 2, parity: Odd },
+            Instruction::WriteV { v_row: 2, parity: Odd, values: [2; 6] },
+        ];
+        assert!(run(&q, true).is_empty());
+    }
+}

@@ -1,0 +1,409 @@
+//! Diagnostic types for the static program analyzer: severities,
+//! stable rule codes, per-finding diagnostics, and the report that
+//! renders them for humans and machines.
+
+use std::fmt;
+
+/// How bad a finding is.
+///
+/// `Error` findings describe streams the macro will (or should) refuse
+/// to execute — out-of-range operands, malformed fused streams,
+/// spike-gated writes with nothing latched. `Warn` findings describe
+/// streams that execute but probably don't mean what the emitter
+/// intended — reads of never-written rows, stores no one observes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    /// The program is malformed; engines must reject it.
+    Error,
+    /// The program is executable but suspicious.
+    Warn,
+}
+
+impl Severity {
+    /// Lowercase display name (`error` / `warn`).
+    #[must_use]
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Stable rule codes — the machine-readable identity of each check.
+///
+/// Codes are grouped by analysis layer: `S…` structural (single
+/// instruction + per-row parity binding), `F…` fused-stream
+/// preconditions (the contract of `ImpulseMacro::acc_w2v_fused` /
+/// `FastEngine::run_accw2v_stream`), `D…` dataflow hazards (the linear
+/// abstract-interpretation pass). The full catalog with worked
+/// examples lives in `docs/VALIDATION.md`; codes are append-only and
+/// never renumbered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RuleCode {
+    /// S001 — W_MEM row operand out of range (`w_row >= 128`).
+    WRowRange,
+    /// S002 — V_MEM row operand out of range (`row >= 32`).
+    VRowRange,
+    /// S003 — `AccV2V` with identical source rows (one wordline
+    /// cannot fire twice in a dual-row read).
+    AccV2VSameSrc,
+    /// S004 — `SpikeCheck` comparing a row against itself.
+    SpikeCheckSelf,
+    /// S005 — a V_MEM row touched under both parities; each row is
+    /// dedicated to one staggered field alignment.
+    ParityConflict,
+    /// S006 — a written value exceeds its field width (11-bit V
+    /// values, 6-bit weights).
+    ValueRange,
+    /// F001 — fused stream addresses more lanes than
+    /// [`super::MAX_FUSED_LANES`].
+    FusedLaneCount,
+    /// F002 — a fused lane mask references a lane beyond the lane
+    /// table.
+    FusedMaskWidth,
+    /// F003 — fused union rows not strictly ascending (sorted,
+    /// duplicate-free) as `run_accw2v_stream` assumes.
+    FusedRowOrder,
+    /// F004 — fused lane V rows not pairwise distinct.
+    FusedLaneDup,
+    /// D001 — a V row (in its parity alignment) is read before any
+    /// write defines it.
+    UseBeforeInit,
+    /// D002 — a spike-gated op (`ResetV`, spiked `AccV2V`) issued
+    /// before any `SpikeCheck` latched that parity's buffer.
+    GateNeverLatched,
+    /// D003 — a spike-gated op issued after the checked row was
+    /// rewritten, so the latched buffer is stale for it.
+    GateStale,
+    /// D004 — a CIM write clobbers a row later used as a
+    /// threshold/reset constant.
+    ConstClobber,
+    /// D005 — a full-row store overwritten before anything reads it.
+    DeadStore,
+}
+
+impl RuleCode {
+    /// The stable short code (`S002`, `D003`, …).
+    #[must_use]
+    pub fn code(&self) -> &'static str {
+        match self {
+            RuleCode::WRowRange => "S001",
+            RuleCode::VRowRange => "S002",
+            RuleCode::AccV2VSameSrc => "S003",
+            RuleCode::SpikeCheckSelf => "S004",
+            RuleCode::ParityConflict => "S005",
+            RuleCode::ValueRange => "S006",
+            RuleCode::FusedLaneCount => "F001",
+            RuleCode::FusedMaskWidth => "F002",
+            RuleCode::FusedRowOrder => "F003",
+            RuleCode::FusedLaneDup => "F004",
+            RuleCode::UseBeforeInit => "D001",
+            RuleCode::GateNeverLatched => "D002",
+            RuleCode::GateStale => "D003",
+            RuleCode::ConstClobber => "D004",
+            RuleCode::DeadStore => "D005",
+        }
+    }
+
+    /// The stable kebab-case rule name.
+    #[must_use]
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuleCode::WRowRange => "w-row-range",
+            RuleCode::VRowRange => "v-row-range",
+            RuleCode::AccV2VSameSrc => "accv2v-same-src",
+            RuleCode::SpikeCheckSelf => "spikecheck-self",
+            RuleCode::ParityConflict => "parity-conflict",
+            RuleCode::ValueRange => "value-range",
+            RuleCode::FusedLaneCount => "fused-lane-count",
+            RuleCode::FusedMaskWidth => "fused-mask-width",
+            RuleCode::FusedRowOrder => "fused-row-order",
+            RuleCode::FusedLaneDup => "fused-lane-dup",
+            RuleCode::UseBeforeInit => "use-before-init",
+            RuleCode::GateNeverLatched => "gate-never-latched",
+            RuleCode::GateStale => "gate-stale",
+            RuleCode::ConstClobber => "const-clobber",
+            RuleCode::DeadStore => "dead-store",
+        }
+    }
+
+    /// The severity this rule always reports at.
+    #[must_use]
+    pub fn severity(&self) -> Severity {
+        match self {
+            RuleCode::UseBeforeInit
+            | RuleCode::GateStale
+            | RuleCode::DeadStore => Severity::Warn,
+            _ => Severity::Error,
+        }
+    }
+}
+
+impl fmt::Display for RuleCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} ({})", self.code(), self.name())
+    }
+}
+
+/// One finding: where, how bad, which rule, and a human sentence.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Index of the offending instruction in the analyzed stream
+    /// (`None` for stream-level findings such as a fused lane table
+    /// problem).
+    pub index: Option<usize>,
+    /// Severity ([`RuleCode::severity`] of `code`).
+    pub severity: Severity,
+    /// The stable rule that fired.
+    pub code: RuleCode,
+    /// Human-readable description of this specific finding.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// Build a diagnostic for `code` at instruction `index`.
+    #[must_use]
+    pub fn at(index: usize, code: RuleCode, message: String) -> Self {
+        Self {
+            index: Some(index),
+            severity: code.severity(),
+            code,
+            message,
+        }
+    }
+
+    /// Build a stream-level diagnostic (no instruction index).
+    #[must_use]
+    pub fn stream(code: RuleCode, message: String) -> Self {
+        Self {
+            index: None,
+            severity: code.severity(),
+            code,
+            message,
+        }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.index {
+            Some(ix) => write!(
+                f,
+                "{}[{}] at #{ix}: {} [{}]",
+                self.severity,
+                self.code.code(),
+                self.message,
+                self.code.name()
+            ),
+            None => write!(
+                f,
+                "{}[{}]: {} [{}]",
+                self.severity,
+                self.code.code(),
+                self.message,
+                self.code.name()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Diagnostic {}
+
+/// The outcome of validating one instruction stream.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    instructions: usize,
+    diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    /// Assemble a report over `instructions` analyzed instructions.
+    #[must_use]
+    pub fn new(instructions: usize, mut diags: Vec<Diagnostic>) -> Self {
+        diags.sort_by_key(|d| (d.index.unwrap_or(usize::MAX), d.code));
+        Self {
+            instructions,
+            diags,
+        }
+    }
+
+    /// How many instructions were analyzed.
+    #[must_use]
+    pub fn instructions(&self) -> usize {
+        self.instructions
+    }
+
+    /// All findings, ordered by instruction index.
+    #[must_use]
+    pub fn diagnostics(&self) -> &[Diagnostic] {
+        &self.diags
+    }
+
+    /// Number of `Error`-severity findings.
+    #[must_use]
+    pub fn error_count(&self) -> usize {
+        self.diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .count()
+    }
+
+    /// Number of `Warn`-severity findings.
+    #[must_use]
+    pub fn warning_count(&self) -> usize {
+        self.diags
+            .iter()
+            .filter(|d| d.severity == Severity::Warn)
+            .count()
+    }
+
+    /// No findings at all (neither errors nor warnings).
+    #[must_use]
+    pub fn is_clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// No errors (warnings permitted) — the admission criterion.
+    #[must_use]
+    pub fn passes(&self) -> bool {
+        self.error_count() == 0
+    }
+
+    /// Whether any finding carries the given rule code.
+    #[must_use]
+    pub fn has(&self, code: RuleCode) -> bool {
+        self.diags.iter().any(|d| d.code == code)
+    }
+
+    /// Render the report as a JSON object (hand-rolled — the crate
+    /// carries no serialization dependency; same discipline as the
+    /// bench JSON emitter).
+    #[must_use]
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(128 + 96 * self.diags.len());
+        s.push_str(&format!(
+            "{{\"instructions\":{},\"errors\":{},\"warnings\":{},\"diagnostics\":[",
+            self.instructions,
+            self.error_count(),
+            self.warning_count()
+        ));
+        for (i, d) in self.diags.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            match d.index {
+                Some(ix) => s.push_str(&format!("{{\"index\":{ix},")),
+                None => s.push_str("{\"index\":null,"),
+            }
+            s.push_str(&format!(
+                "\"severity\":\"{}\",\"code\":\"{}\",\"rule\":\"{}\",\"message\":\"{}\"}}",
+                d.severity.name(),
+                d.code.code(),
+                d.code.name(),
+                json_escape(&d.message)
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{} instructions: {} error(s), {} warning(s)",
+            self.instructions,
+            self.error_count(),
+            self.warning_count()
+        )?;
+        for d in &self.diags {
+            writeln!(f, "  {d}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Escape a string for embedding in a JSON string literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_and_unique() {
+        let all = [
+            RuleCode::WRowRange,
+            RuleCode::VRowRange,
+            RuleCode::AccV2VSameSrc,
+            RuleCode::SpikeCheckSelf,
+            RuleCode::ParityConflict,
+            RuleCode::ValueRange,
+            RuleCode::FusedLaneCount,
+            RuleCode::FusedMaskWidth,
+            RuleCode::FusedRowOrder,
+            RuleCode::FusedLaneDup,
+            RuleCode::UseBeforeInit,
+            RuleCode::GateNeverLatched,
+            RuleCode::GateStale,
+            RuleCode::ConstClobber,
+            RuleCode::DeadStore,
+        ];
+        let mut codes: Vec<&str> = all.iter().map(|c| c.code()).collect();
+        codes.sort_unstable();
+        codes.dedup();
+        assert_eq!(codes.len(), all.len(), "rule codes must be unique");
+    }
+
+    #[test]
+    fn report_counts_and_json() {
+        let r = Report::new(
+            5,
+            vec![
+                Diagnostic::at(3, RuleCode::VRowRange, "V row 40 out of range".into()),
+                Diagnostic::at(1, RuleCode::DeadStore, "store \"x\" unread".into()),
+            ],
+        );
+        assert_eq!(r.error_count(), 1);
+        assert_eq!(r.warning_count(), 1);
+        assert!(!r.passes() || r.error_count() == 0);
+        assert!(r.has(RuleCode::VRowRange));
+        // sorted by index
+        assert_eq!(r.diagnostics()[0].index, Some(1));
+        let j = r.to_json();
+        assert!(j.contains("\"errors\":1"), "{j}");
+        assert!(j.contains("\"code\":\"S002\""), "{j}");
+        assert!(j.contains("store \\\"x\\\" unread"), "{j}");
+    }
+
+    #[test]
+    fn display_renders_index_and_code() {
+        let d = Diagnostic::at(7, RuleCode::GateNeverLatched, "ResetV with no latch".into());
+        let s = d.to_string();
+        assert!(s.contains("#7"), "{s}");
+        assert!(s.contains("D002"), "{s}");
+        assert!(s.contains("error"), "{s}");
+    }
+}

@@ -1,0 +1,136 @@
+//! Static program analysis for IMPULSE instruction streams.
+//!
+//! Two layers, one entry point ([`ProgramValidator`]):
+//!
+//! - **Structural** ([`check_instruction`], [`check_fused_stream`]):
+//!   operand range checks against the macro geometry, `AccV2V`
+//!   source aliasing, `SpikeCheck` self-comparison, per-row parity
+//!   binding, and the exact preconditions the fused SWAR runner
+//!   (`FastEngine::run_accw2v_stream`) executes without re-checking.
+//!   These are the same checks `ImpulseMacro::execute` gates every
+//!   instruction on — factored here so the bit-level engine, the fast
+//!   engine, and lockstep all enforce one contract.
+//! - **Dataflow**: a linear abstract-interpretation pass tracking
+//!   per-(V row, parity) def/use state and spike-buffer freshness,
+//!   diagnosing use-before-init, gated ops with a never-latched or
+//!   stale spike buffer, clobbers of threshold/reset rows, and dead
+//!   stores.
+//!
+//! Diagnostics carry a stable [`RuleCode`] (`S…` structural, `F…`
+//! fused-stream, `D…` dataflow), a severity, and the offending
+//! instruction index; a [`Report`] renders them human-readable or as
+//! JSON. See `docs/VALIDATION.md` for the full rule catalog and
+//! `impulse check` for the CLI surface.
+#![warn(clippy::must_use_candidate, clippy::cast_possible_truncation)]
+
+mod dataflow;
+mod diag;
+mod structural;
+
+pub use diag::{Diagnostic, Report, RuleCode, Severity};
+pub use structural::{
+    check_fused_stream, check_instruction, check_instruction_values, check_v_row, check_w_row,
+};
+
+use crate::isa::{Instruction, Program};
+
+/// Maximum lanes a fused union-AccW2V batch may carry: the per-lane
+/// spike masks are `u32` bitsets, and V_MEM pressure caps useful
+/// batch widths well before that.
+pub const MAX_FUSED_LANES: usize = 32;
+
+/// Static analyzer for IMPULSE instruction streams.
+///
+/// ```
+/// use impulse::isa::verify::ProgramValidator;
+/// use impulse::isa::{neuron_sequence, NeuronConfigRows, NeuronType};
+/// use impulse::bitcell::Parity;
+///
+/// let rows = NeuronConfigRows { neg_threshold: 28, reset: 30, neg_leak: 26 };
+/// let seq = neuron_sequence(NeuronType::LIF, 0, rows, Parity::Odd);
+/// let report = ProgramValidator::new()
+///     .assume_initialized(true)
+///     .validate_instrs(&seq);
+/// assert!(report.is_clean(), "{report}");
+/// ```
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProgramValidator {
+    assume_initialized: bool,
+}
+
+impl ProgramValidator {
+    /// A strict validator: V_MEM is assumed uninitialized, so any
+    /// read before a write in the stream is flagged.
+    #[must_use]
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Treat every V row as already initialized — appropriate for
+    /// fragments (e.g. a single timestep's update sequence) that run
+    /// against a macro programmed earlier.
+    #[must_use]
+    pub fn assume_initialized(mut self, yes: bool) -> Self {
+        self.assume_initialized = yes;
+        self
+    }
+
+    /// Validate a [`Program`].
+    #[must_use]
+    pub fn validate(&self, program: &Program) -> Report {
+        let instrs: Vec<Instruction> = program.iter().copied().collect();
+        self.validate_instrs(&instrs)
+    }
+
+    /// Validate a raw instruction slice.
+    #[must_use]
+    pub fn validate_instrs(&self, instrs: &[Instruction]) -> Report {
+        let mut diags = Vec::new();
+        structural::check_stream(instrs, &mut diags);
+        dataflow::check_stream(instrs, self.assume_initialized, &mut diags);
+        Report::new(instrs.len(), diags)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitcell::Parity;
+    use crate::isa::{neuron_sequence, NeuronConfigRows, NeuronType};
+
+    fn rows(parity: Parity) -> NeuronConfigRows {
+        match parity {
+            Parity::Odd => NeuronConfigRows {
+                neg_threshold: 28,
+                reset: 30,
+                neg_leak: 26,
+            },
+            Parity::Even => NeuronConfigRows {
+                neg_threshold: 29,
+                reset: 31,
+                neg_leak: 27,
+            },
+        }
+    }
+
+    #[test]
+    fn neuron_sequences_validate_clean_as_fragments() {
+        for parity in [Parity::Odd, Parity::Even] {
+            for kind in [NeuronType::IF, NeuronType::LIF, NeuronType::RMP] {
+                let seq = neuron_sequence(kind, 0, rows(parity), parity);
+                let report = ProgramValidator::new()
+                    .assume_initialized(true)
+                    .validate_instrs(&seq);
+                assert!(report.is_clean(), "{kind:?}/{parity:?}: {report}");
+            }
+        }
+    }
+
+    #[test]
+    fn strict_mode_flags_uninitialized_fragment() {
+        let seq = neuron_sequence(NeuronType::IF, 0, rows(Parity::Odd), Parity::Odd);
+        let report = ProgramValidator::new().validate_instrs(&seq);
+        assert!(report.has(RuleCode::UseBeforeInit));
+        assert!(report.passes(), "use-before-init is a warning: {report}");
+    }
+}

@@ -1,0 +1,429 @@
+//! Layer 1 — structural checks.
+//!
+//! Single-instruction operand validation (the rules
+//! [`crate::macro_sim::ImpulseMacro::execute`] gates on), per-row
+//! parity-binding consistency across a stream, and the fused-stream
+//! preconditions `run_accw2v_stream` assumes.
+
+use super::{Diagnostic, RuleCode, MAX_FUSED_LANES};
+use crate::bitcell::{Parity, V_ROWS, W_ROWS};
+use crate::bits::{fits, V_BITS, W_BITS};
+use crate::isa::Instruction;
+
+/// Range-check a V_MEM row operand.
+///
+/// # Errors
+/// [`RuleCode::VRowRange`] when `row >= 32`.
+#[inline]
+pub fn check_v_row(row: usize) -> Result<(), Diagnostic> {
+    if row >= V_ROWS {
+        return Err(Diagnostic::stream(
+            RuleCode::VRowRange,
+            format!("V row {row} out of range (V_MEM has {V_ROWS} rows)"),
+        ));
+    }
+    Ok(())
+}
+
+/// Range-check a W_MEM row operand.
+///
+/// # Errors
+/// [`RuleCode::WRowRange`] when `row >= 128`.
+#[inline]
+pub fn check_w_row(row: usize) -> Result<(), Diagnostic> {
+    if row >= W_ROWS {
+        return Err(Diagnostic::stream(
+            RuleCode::WRowRange,
+            format!("W row {row} out of range (W_MEM has {W_ROWS} rows)"),
+        ));
+    }
+    Ok(())
+}
+
+/// Structurally validate one instruction's row operands: every row in
+/// range, `AccV2V` sources distinct, `SpikeCheck` not self-comparing.
+///
+/// This is the shared per-instruction gate: `ImpulseMacro::execute`
+/// calls it before dispatching to any engine, and the program-level
+/// validator applies it to every instruction. Written values are NOT
+/// checked here (the engines assert on those — see
+/// [`check_instruction_values`] for the static version).
+///
+/// # Errors
+/// The first violated rule as a [`Diagnostic`]
+/// ([`RuleCode::WRowRange`], [`RuleCode::VRowRange`],
+/// [`RuleCode::AccV2VSameSrc`], or [`RuleCode::SpikeCheckSelf`]).
+pub fn check_instruction(instr: &Instruction) -> Result<(), Diagnostic> {
+    match *instr {
+        Instruction::AccW2V {
+            w_row,
+            v_src,
+            v_dst,
+            ..
+        } => {
+            check_w_row(w_row)?;
+            check_v_row(v_src)?;
+            check_v_row(v_dst)?;
+        }
+        Instruction::AccV2V {
+            src_a, src_b, dst, ..
+        } => {
+            check_v_row(src_a)?;
+            check_v_row(src_b)?;
+            check_v_row(dst)?;
+            if src_a == src_b {
+                return Err(Diagnostic::stream(
+                    RuleCode::AccV2VSameSrc,
+                    format!("AccV2V with identical source rows ({src_a})"),
+                ));
+            }
+        }
+        Instruction::SpikeCheck { v_row, thr_row, .. } => {
+            check_v_row(v_row)?;
+            check_v_row(thr_row)?;
+            if v_row == thr_row {
+                return Err(Diagnostic::stream(
+                    RuleCode::SpikeCheckSelf,
+                    format!("SpikeCheck with v_row == thr_row ({v_row})"),
+                ));
+            }
+        }
+        Instruction::ResetV { reset_row, dst, .. } => {
+            check_v_row(reset_row)?;
+            check_v_row(dst)?;
+        }
+        Instruction::ReadV { v_row, .. } => check_v_row(v_row)?,
+        Instruction::WriteV { v_row, .. } => check_v_row(v_row)?,
+        Instruction::WriteW { w_row, .. } => check_w_row(w_row)?,
+    }
+    Ok(())
+}
+
+/// Statically check the written values of a `WriteV`/`WriteW`
+/// instruction against their field widths (11-bit V values, 6-bit
+/// weights). The engines enforce the same invariant with asserts at
+/// execution time; the validator reports it as a diagnostic instead
+/// so `impulse check` can flag it without panicking.
+///
+/// # Errors
+/// [`RuleCode::ValueRange`] naming the first offending value.
+pub fn check_instruction_values(instr: &Instruction) -> Result<(), Diagnostic> {
+    match *instr {
+        Instruction::WriteV { values, .. } => {
+            for v in values {
+                if !fits(v, V_BITS) {
+                    return Err(Diagnostic::stream(
+                        RuleCode::ValueRange,
+                        format!("WriteV value {v} exceeds the {V_BITS}-bit field"),
+                    ));
+                }
+            }
+        }
+        Instruction::WriteW { weights, .. } => {
+            for w in weights {
+                if !fits(w, W_BITS) {
+                    return Err(Diagnostic::stream(
+                        RuleCode::ValueRange,
+                        format!("WriteW weight {w} exceeds the {W_BITS}-bit field"),
+                    ));
+                }
+            }
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
+/// Validate the preconditions of a fused union-AccW2V stream — the
+/// exact contract `FastEngine::run_accw2v_stream` executes without
+/// further checks, shared by every engine via
+/// `ImpulseMacro::acc_w2v_fused`:
+///
+/// - at most [`MAX_FUSED_LANES`] lanes, each lane V row in range and
+///   pairwise distinct;
+/// - every union W row in range, strictly ascending (sorted,
+///   duplicate-free — the order `spike_union_planes` emits);
+/// - every lane mask confined to the lane table.
+///
+/// # Errors
+/// The first violated rule as a [`Diagnostic`]; row-level findings
+/// carry the offending entry's position in `rows` as their index.
+pub fn check_fused_stream(
+    rows: &[(usize, u32)],
+    lane_v_rows: &[usize],
+) -> Result<(), Diagnostic> {
+    let lanes = lane_v_rows.len();
+    if lanes > MAX_FUSED_LANES {
+        return Err(Diagnostic::stream(
+            RuleCode::FusedLaneCount,
+            format!("fused batch of {lanes} lanes exceeds {MAX_FUSED_LANES}"),
+        ));
+    }
+    for (b, &v) in lane_v_rows.iter().enumerate() {
+        check_v_row(v)?;
+        if lane_v_rows[..b].contains(&v) {
+            return Err(Diagnostic::stream(
+                RuleCode::FusedLaneDup,
+                format!("lane V row {v} assigned to more than one lane"),
+            ));
+        }
+    }
+    let mut prev: Option<usize> = None;
+    for (i, &(w_row, mask)) in rows.iter().enumerate() {
+        if let Err(mut d) = check_w_row(w_row) {
+            d.index = Some(i);
+            return Err(d);
+        }
+        if lanes < 32 && (mask >> lanes) != 0 {
+            return Err(Diagnostic::at(
+                i,
+                RuleCode::FusedMaskWidth,
+                format!("lane mask {mask:#x} references a lane >= {lanes}"),
+            ));
+        }
+        if let Some(p) = prev {
+            if w_row <= p {
+                return Err(Diagnostic::at(
+                    i,
+                    RuleCode::FusedRowOrder,
+                    format!(
+                        "union rows must be strictly ascending (row {w_row} after {p})"
+                    ),
+                ));
+            }
+        }
+        prev = Some(w_row);
+    }
+    Ok(())
+}
+
+/// The V rows an instruction touches, with the parity alignment it
+/// touches them under (`None` for `WriteW`, which only addresses
+/// W_MEM).
+pub(super) fn v_rows_touched(instr: &Instruction) -> Option<(Parity, [Option<usize>; 3])> {
+    match *instr {
+        Instruction::AccW2V {
+            v_src,
+            v_dst,
+            parity,
+            ..
+        } => Some((parity, [Some(v_src), Some(v_dst), None])),
+        Instruction::AccV2V {
+            src_a,
+            src_b,
+            dst,
+            parity,
+            ..
+        } => Some((parity, [Some(src_a), Some(src_b), Some(dst)])),
+        Instruction::SpikeCheck {
+            v_row,
+            thr_row,
+            parity,
+        } => Some((parity, [Some(v_row), Some(thr_row), None])),
+        Instruction::ResetV {
+            reset_row,
+            dst,
+            parity,
+        } => Some((parity, [Some(reset_row), Some(dst), None])),
+        Instruction::ReadV { v_row, parity } => Some((parity, [Some(v_row), None, None])),
+        Instruction::WriteV { v_row, parity, .. } => {
+            Some((parity, [Some(v_row), None, None]))
+        }
+        Instruction::WriteW { .. } => None,
+    }
+}
+
+/// Run the structural pass over a stream: per-instruction operand
+/// checks, value range checks, and per-row parity-binding consistency
+/// (each V_MEM row is dedicated to one staggered alignment — a row
+/// touched under both parities is flagged once, at its first
+/// conflicting use).
+pub(super) fn check_stream(instrs: &[Instruction], diags: &mut Vec<Diagnostic>) {
+    // first_touch[row] = (parity of first touch, its index);
+    // conflict-reported rows are latched so one bad row doesn't spam.
+    let mut first_touch: [Option<(Parity, usize)>; V_ROWS] = [None; V_ROWS];
+    let mut reported: [bool; V_ROWS] = [false; V_ROWS];
+    for (ix, instr) in instrs.iter().enumerate() {
+        let structurally_ok = match check_instruction(instr) {
+            Ok(()) => true,
+            Err(mut d) => {
+                d.index = Some(ix);
+                diags.push(d);
+                false
+            }
+        };
+        if let Err(mut d) = check_instruction_values(instr) {
+            d.index = Some(ix);
+            diags.push(d);
+        }
+        if !structurally_ok {
+            // out-of-range rows would poison the binding table
+            continue;
+        }
+        if let Some((parity, rows)) = v_rows_touched(instr) {
+            for row in rows.into_iter().flatten() {
+                match first_touch[row] {
+                    None => first_touch[row] = Some((parity, ix)),
+                    Some((p0, ix0)) if p0 != parity && !reported[row] => {
+                        reported[row] = true;
+                        diags.push(Diagnostic::at(
+                            ix,
+                            RuleCode::ParityConflict,
+                            format!(
+                                "V row {row} touched as {parity:?} but bound to \
+                                 {p0:?} since #{ix0}; each row is dedicated to \
+                                 one staggered alignment"
+                            ),
+                        ));
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::WriteMaskMode;
+
+    #[test]
+    fn instruction_rules_fire() {
+        assert_eq!(
+            check_instruction(&Instruction::AccW2V {
+                w_row: 128,
+                v_src: 0,
+                v_dst: 0,
+                parity: Parity::Odd,
+            })
+            .unwrap_err()
+            .code,
+            RuleCode::WRowRange
+        );
+        assert_eq!(
+            check_instruction(&Instruction::ReadV {
+                v_row: 32,
+                parity: Parity::Odd,
+            })
+            .unwrap_err()
+            .code,
+            RuleCode::VRowRange
+        );
+        assert_eq!(
+            check_instruction(&Instruction::AccV2V {
+                src_a: 3,
+                src_b: 3,
+                dst: 3,
+                parity: Parity::Odd,
+                mask: WriteMaskMode::All,
+            })
+            .unwrap_err()
+            .code,
+            RuleCode::AccV2VSameSrc
+        );
+        assert_eq!(
+            check_instruction(&Instruction::SpikeCheck {
+                v_row: 5,
+                thr_row: 5,
+                parity: Parity::Even,
+            })
+            .unwrap_err()
+            .code,
+            RuleCode::SpikeCheckSelf
+        );
+    }
+
+    #[test]
+    fn value_rules_fire() {
+        assert_eq!(
+            check_instruction_values(&Instruction::WriteV {
+                v_row: 0,
+                parity: Parity::Odd,
+                values: [5000, 0, 0, 0, 0, 0],
+            })
+            .unwrap_err()
+            .code,
+            RuleCode::ValueRange
+        );
+        assert_eq!(
+            check_instruction_values(&Instruction::WriteW {
+                w_row: 0,
+                weights: [64; 12],
+            })
+            .unwrap_err()
+            .code,
+            RuleCode::ValueRange
+        );
+        assert!(check_instruction_values(&Instruction::WriteW {
+            w_row: 0,
+            weights: [31; 12],
+        })
+        .is_ok());
+    }
+
+    #[test]
+    fn fused_stream_rules_fire() {
+        // lane table too wide
+        let wide: Vec<usize> = (0..33).collect();
+        assert_eq!(
+            check_fused_stream(&[], &wide).unwrap_err().code,
+            RuleCode::FusedLaneCount
+        );
+        // lane row out of range / duplicated
+        assert_eq!(
+            check_fused_stream(&[], &[99]).unwrap_err().code,
+            RuleCode::VRowRange
+        );
+        assert_eq!(
+            check_fused_stream(&[], &[0, 2, 0]).unwrap_err().code,
+            RuleCode::FusedLaneDup
+        );
+        // union row out of range, over-wide mask, ordering
+        assert_eq!(
+            check_fused_stream(&[(200, 1)], &[0]).unwrap_err().code,
+            RuleCode::WRowRange
+        );
+        assert_eq!(
+            check_fused_stream(&[(0, 0b10)], &[0]).unwrap_err().code,
+            RuleCode::FusedMaskWidth
+        );
+        let d = check_fused_stream(&[(4, 1), (4, 1)], &[0]).unwrap_err();
+        assert_eq!(d.code, RuleCode::FusedRowOrder);
+        assert_eq!(d.index, Some(1));
+        assert_eq!(
+            check_fused_stream(&[(7, 1), (3, 1)], &[0]).unwrap_err().code,
+            RuleCode::FusedRowOrder
+        );
+        // the canonical shape passes
+        assert!(check_fused_stream(&[(0, 0b11), (5, 0b01)], &[0, 2]).is_ok());
+        assert!(check_fused_stream(&[], &[]).is_ok());
+    }
+
+    #[test]
+    fn parity_binding_conflict_detected_once() {
+        let instrs = vec![
+            Instruction::WriteV {
+                v_row: 4,
+                parity: Parity::Odd,
+                values: [0; 6],
+            },
+            Instruction::ReadV {
+                v_row: 4,
+                parity: Parity::Even,
+            },
+            Instruction::ReadV {
+                v_row: 4,
+                parity: Parity::Even,
+            },
+        ];
+        let mut diags = Vec::new();
+        check_stream(&instrs, &mut diags);
+        let conflicts: Vec<_> = diags
+            .iter()
+            .filter(|d| d.code == RuleCode::ParityConflict)
+            .collect();
+        assert_eq!(conflicts.len(), 1, "{diags:?}");
+        assert_eq!(conflicts[0].index, Some(1));
+    }
+}

@@ -10,7 +10,8 @@
 //!   triple-row decoder, fused W_MEM/V_MEM geometry).
 //! - [`periph`] — reconfigurable column peripherals (SINV, BLFA, CMUX,
 //!   CWD, spike buffers) composing the in-array ripple-carry adders.
-//! - [`isa`] — the in-memory SNN instruction set and neuron sequences.
+//! - [`isa`] — the in-memory SNN instruction set, neuron sequences, and
+//!   the static program analyzer ([`isa::verify`], `docs/VALIDATION.md`).
 //! - [`macro_sim`] — the IMPULSE macro: decoder + array + peripherals
 //!   executing instruction streams, with cycle/energy tracing.
 //! - [`neuron`] — functional golden neuron models (IF/LIF/RMP) with
@@ -39,6 +40,11 @@
 //! - [`metrics`], [`config`], [`bench_harness`], [`proptest_lite`] —
 //!   supporting infrastructure (reporting, TOML-subset config, offline
 //!   bench/property-test harnesses).
+
+// Every unsafe operation must sit in its own `unsafe` block with a
+// `// SAFETY:` justification, even inside `unsafe fn` (CI greps for
+// the comments; see the unsafe-audit job).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod baselines;
 pub mod bench_harness;

@@ -6,6 +6,7 @@ use crate::bitcell::{
     TripleRowDecoder, COL_MASK, FIELD_WIDTH, VALUES_PER_ROW, V_ROWS, W_ROWS,
 };
 use crate::bits::{wrap11, V_BITS};
+use crate::isa::verify;
 use crate::isa::{Instruction, InstructionKind, NeuronConfigRows, NeuronType, WriteMaskMode};
 use crate::periph::{ColumnAdder, ConditionalWriteDriver, SpikeBuffers, WriteGate};
 use anyhow::{bail, Result};
@@ -36,9 +37,7 @@ pub(crate) fn compare(mode: ComparatorMode, v: i64, neg_thr: i64) -> bool {
     }
 }
 
-/// Maximum batch lanes a fused AccW2V stream can address (bounded by
-/// the u32 lane mask; the mapper's V_MEM budget is the tighter limit).
-pub const MAX_FUSED_LANES: usize = 32;
+pub use crate::isa::verify::MAX_FUSED_LANES;
 
 fn parity_ix(p: Parity) -> usize {
     match p {
@@ -215,9 +214,6 @@ impl BitLevelEngine {
                 })
             }
             Instruction::WriteW { w_row, weights } => {
-                if w_row >= W_ROWS {
-                    bail!("W row {w_row} out of range");
-                }
                 self.wmem.set_row(w_row, encode_weight_row(&weights));
                 Ok(ExecOutput::default())
             }
@@ -286,8 +282,10 @@ impl FastEngine {
 
     /// Prevalidated straight-line runner for a fused union-AccW2V
     /// stream: the caller (see [`ImpulseMacro::acc_w2v_fused`]) has
-    /// already bounds-checked every weight row, lane mask, and lane V
-    /// row, so this path issues no per-instruction enum dispatch and
+    /// already proven the stream against the shared
+    /// [`verify::check_fused_stream`] contract (row ranges, lane
+    /// masks, distinct lanes, strictly ascending union rows), so this
+    /// path issues no per-instruction enum dispatch and
     /// constructs no `Result` or [`ExecOutput`] — per union row it is
     /// one SWAR add per masked lane, and per touched lane one
     /// pack/add/unpack round-trip against V_MEM.
@@ -322,14 +320,10 @@ impl FastEngine {
         }
     }
 
-    #[inline]
-    fn check_v(row: usize) -> Result<()> {
-        if row >= V_ROWS {
-            bail!("V row {row} out of range");
-        }
-        Ok(())
-    }
-
+    /// Execute one instruction. Structural validity (row ranges,
+    /// source aliasing) is the caller's contract —
+    /// [`ImpulseMacro::execute`] gates every instruction through
+    /// [`verify::check_instruction`] before any engine runs.
     fn exec(&mut self, instr: &Instruction) -> Result<ExecOutput> {
         match *instr {
             Instruction::AccW2V {
@@ -338,11 +332,6 @@ impl FastEngine {
                 v_dst,
                 parity,
             } => {
-                if w_row >= W_ROWS {
-                    bail!("W row {w_row} out of range");
-                }
-                Self::check_v(v_src)?;
-                Self::check_v(v_dst)?;
                 // SWAR: all six fields accumulate their weight in one
                 // pack → add-wrap → unpack round-trip.
                 let st = parity.stagger();
@@ -368,12 +357,6 @@ impl FastEngine {
                 parity,
                 mask,
             } => {
-                Self::check_v(src_a)?;
-                Self::check_v(src_b)?;
-                Self::check_v(dst)?;
-                if src_a == src_b {
-                    bail!("AccV2V with identical source rows");
-                }
                 let st = parity.stagger();
                 let wrapped = swar::add_wrap(
                     swar::pack(self.vmem[src_a] >> st),
@@ -403,11 +386,6 @@ impl FastEngine {
                 thr_row,
                 parity,
             } => {
-                Self::check_v(v_row)?;
-                Self::check_v(thr_row)?;
-                if v_row == thr_row {
-                    bail!("SpikeCheck with v_row == thr_row");
-                }
                 let st = parity.stagger();
                 let sum = swar::pack(self.vmem[v_row] >> st)
                     + swar::pack(self.vmem[thr_row] >> st);
@@ -427,8 +405,6 @@ impl FastEngine {
                 dst,
                 parity,
             } => {
-                Self::check_v(reset_row)?;
-                Self::check_v(dst)?;
                 let st = parity.stagger();
                 let spikes = self.spikebuf[parity_ix(parity)].bits();
                 let gate = swar::expand_mask(swar::indicators_from_flags(spikes)) << st;
@@ -444,7 +420,6 @@ impl FastEngine {
                 })
             }
             Instruction::ReadV { v_row, parity } => {
-                Self::check_v(v_row)?;
                 let lanes = swar::pack(self.vmem[v_row] >> parity.stagger());
                 let mut read = [0i64; 6];
                 for (g, r) in read.iter_mut().enumerate() {
@@ -460,7 +435,6 @@ impl FastEngine {
                 parity,
                 values,
             } => {
-                Self::check_v(v_row)?;
                 let mut row = self.vmem[v_row];
                 for g in 0..VALUES_PER_ROW {
                     assert!(
@@ -477,9 +451,6 @@ impl FastEngine {
                 })
             }
             Instruction::WriteW { w_row, weights } => {
-                if w_row >= W_ROWS {
-                    bail!("W row {w_row} out of range");
-                }
                 for &w in weights.iter() {
                     assert!(
                         crate::bits::fits(w, crate::bits::W_BITS),
@@ -568,7 +539,13 @@ impl ImpulseMacro {
     }
 
     /// Execute one instruction; returns its architectural effects.
+    ///
+    /// Every instruction first passes the shared structural validator
+    /// ([`verify::check_instruction`]) — one contract for the
+    /// bit-level engine, the fast engine, and lockstep. A rejected
+    /// instruction leaves state, counters, and trace untouched.
     pub fn execute(&mut self, instr: &Instruction) -> Result<ExecOutput> {
+        verify::check_instruction(instr)?;
         let out = self.exec_engines(instr)?;
         let k = instr.kind();
         self.counts[kind_ix(k)] += 1;
@@ -621,19 +598,17 @@ impl ImpulseMacro {
             }
             return Ok(());
         }
-        let f = self.fast.as_mut().expect("fast engine");
-        if v_row >= V_ROWS {
-            bail!("V row {v_row} out of range");
+        verify::check_v_row(v_row)?;
+        for &w_row in w_rows {
+            verify::check_w_row(w_row)?;
         }
+        let f = self.fast.as_mut().expect("fast engine");
         // SWAR accumulation: one add-wrap per spiking row folds all six
         // fields' weights at once (mod-2048 per add commutes with the
         // single final wrap of the scalar path).
         let pix = parity_ix(parity);
         let mut acc = 0u128;
         for &w_row in w_rows {
-            if w_row >= W_ROWS {
-                bail!("W row {w_row} out of range");
-            }
             acc = swar::add_wrap(acc, f.w_swar[w_row][pix]);
         }
         let st = parity.stagger();
@@ -665,26 +640,12 @@ impl ImpulseMacro {
         lane_v_rows: &[usize],
         parity: Parity,
     ) -> Result<()> {
-        let lanes = lane_v_rows.len();
-        if lanes > MAX_FUSED_LANES {
-            bail!("fused batch of {lanes} lanes exceeds {MAX_FUSED_LANES}");
-        }
-        for &v in lane_v_rows {
-            if v >= V_ROWS {
-                bail!("V row {v} out of range");
-            }
-        }
         // Validate the whole stream before touching any state, so a
         // malformed entry cannot leave earlier rows committed (keeps
-        // post-error state identical across engines).
-        for &(w_row, mask) in rows {
-            if w_row >= W_ROWS {
-                bail!("W row {w_row} out of range");
-            }
-            if lanes < 32 && (mask >> lanes) != 0 {
-                bail!("lane mask {mask:#x} references a lane >= {lanes}");
-            }
-        }
+        // post-error state identical across engines). The contract —
+        // lane count/range/uniqueness, mask width, strictly ascending
+        // union rows — is the shared fused-stream precondition set.
+        verify::check_fused_stream(rows, lane_v_rows)?;
         let fast_only = self.bit.is_none() && !self.config.trace;
         if !fast_only {
             // Bit-level / lockstep / tracing path: run the per-lane
@@ -762,13 +723,10 @@ impl ImpulseMacro {
             }
             return Ok(self.spikes(parity));
         }
+        for instr in &seq {
+            verify::check_instruction(instr)?;
+        }
         let f = self.fast.as_mut().expect("fast engine");
-        if v_row >= V_ROWS || neg_thr_row >= V_ROWS {
-            bail!("V row out of range ({v_row}, {neg_thr_row})");
-        }
-        if v_row == neg_thr_row {
-            bail!("SpikeCheck with v_row == thr_row");
-        }
         // SWAR: one lane-wise add yields both the spike decision (sign
         // or carry-guard bit per lane) and the soft-reset sum; spiking
         // lanes select the wrapped sum via the expanded gate mask.
@@ -824,13 +782,10 @@ impl ImpulseMacro {
             }
             return Ok(self.spikes(parity));
         }
+        for instr in &seq {
+            verify::check_instruction(instr)?;
+        }
         let f = self.fast.as_mut().expect("fast engine");
-        if v_row >= V_ROWS || neg_thr_row >= V_ROWS || reset_row >= V_ROWS {
-            bail!("V row out of range ({v_row}, {neg_thr_row}, {reset_row})");
-        }
-        if v_row == neg_thr_row {
-            bail!("SpikeCheck with v_row == thr_row");
-        }
         // SWAR: spike decision per lane from one add; hard reset is a
         // raw field-bit copy of the reset row under the expanded gate,
         // exactly like ResetV.
@@ -893,18 +848,10 @@ impl ImpulseMacro {
             }
             return Ok(self.spikes(parity));
         }
+        for instr in &seq {
+            verify::check_instruction(instr)?;
+        }
         let f = self.fast.as_mut().expect("fast engine");
-        if v_row >= V_ROWS || neg_thr_row >= V_ROWS || reset_row >= V_ROWS
-            || neg_leak_row >= V_ROWS
-        {
-            bail!("V row out of range ({v_row}, {neg_thr_row}, {reset_row}, {neg_leak_row})");
-        }
-        if v_row == neg_leak_row {
-            bail!("AccV2V with identical source rows");
-        }
-        if v_row == neg_thr_row {
-            bail!("SpikeCheck with v_row == thr_row");
-        }
         // SWAR: leak all six lanes with one add-wrap, derive the spike
         // decision from a second lane-wise add, then hard-reset the
         // spiking lanes by raw field-bit copy. In the unfused sequence

@@ -7,6 +7,8 @@
 //!
 //! Subcommands:
 //!   report   --fig {2|6|7|8|9a|11b} | --table 1   regenerate paper artifacts
+//!   check    [--model M] [--json]                 static-validate the built-in
+//!                                                 ISA streams (docs/VALIDATION.md)
 //!   infer    --text "w1 w2 …" | --sample N        classify via the macro pool
 //!            [--stream [--addr ADDR]]             …or word-by-word over a
 //!                                                 pinned streaming session
@@ -48,6 +50,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "infer" => cli::infer::run(rest),
         "eval" => cli::eval::run(rest),
         "bench" => cli::bench::run(rest),
+        "check" => cli::check::run(rest),
         "serve" => cli::serve::run(rest),
         "replay" => cli::replay::run(rest),
         "loadgen" => cli::loadgen::run(rest),
@@ -83,6 +86,13 @@ COMMANDS:
                                     StreamAppend frames; ephemeral local
                                     server unless --addr targets a running
                                     impulse serve --listen)
+    check [--model sentiment|digits|all] [--timesteps T] [--seed S]
+          [--json]                  statically validate the built-in ISA
+                                    streams (neuron sequences + one tile
+                                    schedule per network layer) with the
+                                    shared structural + dataflow linter
+                                    (docs/VALIDATION.md); exits nonzero
+                                    on any Error-severity diagnostic
     eval [--max N] [--xla-check]    evaluate the test set on the macro pool
     bench [--json PATH] [--quick]   macro-throughput + sparsity + streaming
                                     sweeps; --json writes machine-readable

@@ -42,6 +42,10 @@ extern "C" fn on_signal(signum: i32) {
         // Second signal while the drain is still running: restore the
         // default action and re-deliver, so an operator can force-quit
         // a wedged shutdown with a second Ctrl+C instead of SIGKILL.
+        // SAFETY: `signal` and `raise` are both on the POSIX
+        // async-signal-safe list, so they may be called from handler
+        // context; SIG_DFL is a valid disposition for any signal and
+        // `signum` is the signal currently being delivered.
         unsafe {
             ffi::signal(signum, ffi::SIG_DFL);
             ffi::raise(signum);
@@ -54,6 +58,11 @@ extern "C" fn on_signal(signum: i32) {
 /// — see the `impulse serve` listen loop.
 pub fn install_shutdown_handler() -> &'static AtomicBool {
     #[cfg(unix)]
+    // SAFETY: `on_signal` is an `extern "C" fn(i32)` — the exact shape
+    // `signal(2)` expects for a handler address — and it only touches
+    // async-signal-safe state (one atomic plus `signal`/`raise`).
+    // Re-installing over a previous registration is defined behavior,
+    // which keeps this entry point idempotent.
     unsafe {
         ffi::signal(ffi::SIGINT, on_signal as usize);
         ffi::signal(ffi::SIGTERM, on_signal as usize);
@@ -78,6 +87,10 @@ mod tests {
     fn sigterm_sets_the_shutdown_flag() {
         let flag = install_shutdown_handler();
         assert!(!flag.load(Ordering::SeqCst), "flag must start clear");
+        // SAFETY: `raise` is always safe to call with a valid signal
+        // number; the handler installed above is the process-wide
+        // disposition, so delivery lands in `on_signal`, which only
+        // flips the atomic on a first signal.
         unsafe {
             ffi::raise(ffi::SIGTERM);
         }

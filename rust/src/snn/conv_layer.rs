@@ -2,7 +2,7 @@
 
 use super::{LayerParams, LayerStats, SpikeMap};
 use crate::bitcell::Parity;
-use crate::isa::neuron_sequence;
+use crate::isa::{neuron_sequence, Instruction, Program};
 use crate::macro_sim::{ImpulseMacro, MacroConfig};
 use crate::mapper::{ConvLayout, OUTPUTS_PER_TILE};
 use crate::Result;
@@ -437,15 +437,105 @@ impl ConvLayer {
             m.fold_vmem_digest(h);
         }
     }
-}
 
-// Convenience accessors (the layout's field names are h/w-ambiguous).
-impl ConvLayout {
-    pub fn h(&self) -> usize {
-        self.height
-    }
-    pub fn w(&self) -> usize {
-        self.width
+    /// Emit macro 0's full instruction schedule as a [`Program`]:
+    /// kernel-tap programming, per-parity constants, pixel-row
+    /// zeroing, then `timesteps` dense timesteps — for each output
+    /// pixel this macro owns, every window tap accumulated under both
+    /// parities (the all-spiking worst case) followed by the
+    /// per-parity neuron-update sequence — ending with a membrane
+    /// readout per pixel. Tap *values* are emitted as zeros; row
+    /// structure, constants, and ordering mirror
+    /// [`ConvLayer::step`]'s issue order exactly, so the static
+    /// analyzer (`impulse check`) can prove the conv stream
+    /// hazard-free. Every macro in the pool runs the same shape of
+    /// schedule over its own pixel set.
+    pub fn schedule_program(&self, timesteps: usize) -> Program {
+        let l = &self.layout;
+        let mut b = Program::new();
+        for ky in 0..l.ksize {
+            for kx in 0..l.ksize {
+                for c in 0..l.c_in {
+                    b.push(Instruction::WriteW {
+                        w_row: l.tap_row(ky, kx, c),
+                        weights: [0; 12],
+                    });
+                }
+            }
+        }
+        let cr = l.const_rows;
+        for parity in Parity::BOTH {
+            let r = cr.for_parity(parity);
+            b.push(Instruction::WriteV {
+                v_row: r.neg_threshold,
+                parity,
+                values: [-self.params.threshold; 6],
+            });
+            b.push(Instruction::WriteV {
+                v_row: r.reset,
+                parity,
+                values: [self.params.reset; 6],
+            });
+            b.push(Instruction::WriteV {
+                v_row: r.neg_leak,
+                parity,
+                values: [-self.params.leak; 6],
+            });
+        }
+        for p in 0..cr.first_row() / 2 {
+            b.push(Instruction::WriteV {
+                v_row: 2 * p,
+                parity: Parity::Odd,
+                values: [0; 6],
+            });
+            b.push(Instruction::WriteV {
+                v_row: 2 * p + 1,
+                parity: Parity::Even,
+                values: [0; 6],
+            });
+        }
+        // pixels whose channel-group-0 assignment lands on macro 0
+        let pixels: Vec<(usize, usize)> = (0..l.height)
+            .flat_map(|y| (0..l.width).map(move |x| (y, x)))
+            .filter(|&(y, x)| l.assign(y, x, 0).macro_id == 0)
+            .collect();
+        for _ in 0..timesteps {
+            for &(y, x) in &pixels {
+                let a = l.assign(y, x, 0);
+                for (parity, v) in
+                    [(Parity::Odd, a.v_row_odd), (Parity::Even, a.v_row_even)]
+                {
+                    for (w_row, _, _, _) in l.window(y, x) {
+                        b.push(Instruction::AccW2V {
+                            w_row,
+                            v_src: v,
+                            v_dst: v,
+                            parity,
+                        });
+                    }
+                }
+                for (parity, v) in
+                    [(Parity::Odd, a.v_row_odd), (Parity::Even, a.v_row_even)]
+                {
+                    let rows = cr.for_parity(parity);
+                    for instr in neuron_sequence(self.params.neuron, v, rows, parity) {
+                        b.push(instr);
+                    }
+                }
+            }
+        }
+        for &(y, x) in &pixels {
+            let a = l.assign(y, x, 0);
+            b.push(Instruction::ReadV {
+                v_row: a.v_row_odd,
+                parity: Parity::Odd,
+            });
+            b.push(Instruction::ReadV {
+                v_row: a.v_row_even,
+                parity: Parity::Even,
+            });
+        }
+        b
     }
 }
 

@@ -81,6 +81,18 @@ impl DigitsNetwork {
             + self.fc2.num_macros()
     }
 
+    /// One representative tile schedule per on-macro layer, labeled —
+    /// the input to `impulse check` and the validator property tests.
+    /// The encoder (conv1) runs off-macro and emits no ISA stream.
+    pub fn schedule_programs(&self, timesteps: usize) -> Vec<(String, crate::isa::Program)> {
+        vec![
+            ("conv2".into(), self.conv2.schedule_program(timesteps)),
+            ("conv3".into(), self.conv3.schedule_program(timesteps)),
+            ("fc1".into(), self.fc1.schedule_program(timesteps)),
+            ("fc2".into(), self.fc2.schedule_program(timesteps)),
+        ]
+    }
+
     pub fn reset_state(&mut self) -> Result<()> {
         self.conv2.reset_state()?;
         self.conv3.reset_state()?;

@@ -2,7 +2,7 @@
 
 use super::{LayerParams, SpikePlane};
 use crate::bitcell::Parity;
-use crate::isa::{neuron_sequence, InstructionKind};
+use crate::isa::{neuron_sequence, Instruction, InstructionKind, Program};
 use crate::macro_sim::{ImpulseMacro, MacroConfig};
 use crate::mapper::FcLayout;
 use crate::Result;
@@ -480,6 +480,78 @@ impl FcLayer {
     /// The layer's neuron parameters.
     pub fn params(&self) -> LayerParams {
         self.params
+    }
+
+    /// Emit one tile's full instruction schedule as a [`Program`]:
+    /// weight/constant programming, membrane zeroing, then
+    /// `timesteps` dense timesteps (every input row accumulated under
+    /// both parities — the all-spiking worst case — followed by the
+    /// per-parity neuron-update sequence unless the layer is
+    /// output-only), ending with a membrane readout. All tiles share
+    /// the same row assignment, so one tile's schedule stands for the
+    /// layer's. Weight *values* are emitted as zeros (the layer does
+    /// not retain its dense matrix); row structure, constants, and
+    /// ordering are exactly what [`FcLayer::new`] + [`FcLayer::step`]
+    /// issue, so the static analyzer (`impulse check`) can prove the
+    /// layer's stream hazard-free.
+    pub fn schedule_program(&self, timesteps: usize) -> Program {
+        let mut b = Program::new();
+        for w_row in 0..self.layout.fan_in {
+            b.push(Instruction::WriteW {
+                w_row,
+                weights: [0; 12],
+            });
+        }
+        let c = self.layout.const_rows;
+        for (parity, v_row) in [(Parity::Odd, 0usize), (Parity::Even, 1usize)] {
+            let r = c.for_parity(parity);
+            b.push(Instruction::WriteV {
+                v_row: r.neg_threshold,
+                parity,
+                values: [-self.params.threshold; 6],
+            });
+            b.push(Instruction::WriteV {
+                v_row: r.reset,
+                parity,
+                values: [self.params.reset; 6],
+            });
+            b.push(Instruction::WriteV {
+                v_row: r.neg_leak,
+                parity,
+                values: [-self.params.leak; 6],
+            });
+            b.push(Instruction::WriteV {
+                v_row,
+                parity,
+                values: [0; 6],
+            });
+        }
+        for _ in 0..timesteps {
+            for (parity, v_row) in [(Parity::Odd, 0usize), (Parity::Even, 1usize)] {
+                for w_row in 0..self.layout.fan_in {
+                    b.push(Instruction::AccW2V {
+                        w_row,
+                        v_src: v_row,
+                        v_dst: v_row,
+                        parity,
+                    });
+                }
+            }
+            if !self.output_only {
+                for instr in self.seq_odd.iter().chain(self.seq_even.iter()) {
+                    b.push(*instr);
+                }
+            }
+        }
+        b.push(Instruction::ReadV {
+            v_row: 0,
+            parity: Parity::Odd,
+        });
+        b.push(Instruction::ReadV {
+            v_row: 1,
+            parity: Parity::Even,
+        });
+        b
     }
 }
 

@@ -63,6 +63,17 @@ impl SentimentNetwork {
         self.fc1.num_macros() + self.fc2.num_macros() + self.out.num_macros()
     }
 
+    /// One representative tile schedule per mapped layer, labeled —
+    /// the input to `impulse check` and the validator property tests
+    /// (see [`FcLayer::schedule_program`]).
+    pub fn schedule_programs(&self, timesteps: usize) -> Vec<(String, crate::isa::Program)> {
+        vec![
+            ("fc1".into(), self.fc1.schedule_program(timesteps)),
+            ("fc2".into(), self.fc2.schedule_program(timesteps)),
+            ("out".into(), self.out.schedule_program(timesteps)),
+        ]
+    }
+
     /// Trainable-parameter count of the mapped model (paper: 29.3K).
     pub fn num_params(&self) -> usize {
         self.fc1.fan_in() * self.fc1.width()

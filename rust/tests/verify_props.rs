@@ -1,0 +1,357 @@
+//! Property tests for the static program analyzer (`isa::verify`).
+//!
+//! Two families:
+//!
+//! - **Clean streams stay clean**: every built-in stream — the Fig 6
+//!   neuron sequences and the schedule builders of both model networks
+//!   — validates with zero diagnostics under the strict validator.
+//! - **Mutations are caught**: seeded single-instruction mutations of a
+//!   known-clean schedule (row knocked out of range, parity flipped,
+//!   spike-gate order swapped) each produce the documented rule code.
+
+use impulse::bitcell::Parity;
+use impulse::bits::XorShiftRng;
+use impulse::data::{DigitsArtifacts, SentimentArtifacts};
+use impulse::isa::verify::{check_fused_stream, RuleCode};
+use impulse::isa::{neuron_sequence, Instruction, NeuronType, Program, ProgramValidator};
+use impulse::macro_sim::MacroConfig;
+use impulse::mapper::ConstRows;
+use impulse::snn::{DigitsNetwork, FcLayer, LayerParams, SentimentNetwork};
+
+fn strict() -> ProgramValidator {
+    ProgramValidator::new()
+}
+
+fn fragment() -> ProgramValidator {
+    ProgramValidator::new().assume_initialized(true)
+}
+
+/// A small known-clean LIF layer whose schedule exercises every
+/// instruction kind and all three constant rows each timestep.
+fn lif_fixture() -> FcLayer {
+    let weights: Vec<Vec<i64>> = (0..8).map(|i| vec![(i % 5) - 2; 4]).collect();
+    FcLayer::new(&weights, LayerParams::lif(20, 1), MacroConfig::fast()).unwrap()
+}
+
+fn instrs_of(p: &Program) -> Vec<Instruction> {
+    p.iter().copied().collect()
+}
+
+fn other(p: Parity) -> Parity {
+    match p {
+        Parity::Odd => Parity::Even,
+        Parity::Even => Parity::Odd,
+    }
+}
+
+// ---------------------------------------------------------------- clean
+
+#[test]
+fn neuron_sequences_validate_clean() {
+    let cr = ConstRows::default();
+    for parity in Parity::BOTH {
+        for (ty, v_row) in [
+            (NeuronType::IF, 0),
+            (NeuronType::LIF, 2),
+            (NeuronType::RMP, 4),
+        ] {
+            let v_row = match parity {
+                Parity::Odd => v_row,
+                Parity::Even => v_row + 1,
+            };
+            let seq = neuron_sequence(ty, v_row, cr.for_parity(parity), parity);
+            let report = fragment().validate_instrs(&seq);
+            assert!(report.is_clean(), "{ty:?}/{parity:?}: {report}");
+        }
+    }
+}
+
+#[test]
+fn fc_schedules_validate_clean_for_every_neuron_type() {
+    let weights: Vec<Vec<i64>> = (0..6).map(|_| vec![1; 3]).collect();
+    for params in [
+        LayerParams::if_(10),
+        LayerParams::lif(10, 1),
+        LayerParams::rmp(10),
+    ] {
+        let layer = FcLayer::new(&weights, params, MacroConfig::fast()).unwrap();
+        let report = strict().validate(&layer.schedule_program(3));
+        assert!(report.is_clean(), "{:?}: {report}", params.neuron);
+    }
+    // output-only layers skip the neuron sequence but still read out
+    let out = FcLayer::new(&weights, LayerParams::rmp(10), MacroConfig::fast())
+        .unwrap()
+        .output_only();
+    let report = strict().validate(&out.schedule_program(3));
+    assert!(report.is_clean(), "output_only: {report}");
+}
+
+#[test]
+fn sentiment_schedules_validate_clean() {
+    let a = SentimentArtifacts::synthetic(7);
+    let net = SentimentNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+    let programs = net.schedule_programs(3);
+    assert_eq!(programs.len(), 3);
+    for (label, prog) in programs {
+        let report = strict().validate(&prog);
+        assert!(report.is_clean(), "sentiment/{label}: {report}");
+        assert!(!prog.is_empty(), "sentiment/{label}: empty schedule");
+    }
+}
+
+#[test]
+fn digits_schedules_validate_clean() {
+    let a = DigitsArtifacts::synthetic(7);
+    let net = DigitsNetwork::from_artifacts(&a, MacroConfig::fast()).unwrap();
+    let programs = net.schedule_programs(2);
+    assert_eq!(programs.len(), 4);
+    for (label, prog) in programs {
+        let report = strict().validate(&prog);
+        assert!(report.is_clean(), "digits/{label}: {report}");
+        assert!(!prog.is_empty(), "digits/{label}: empty schedule");
+    }
+}
+
+// ------------------------------------------------------------ mutations
+
+/// Knock one row operand out of range; returns the rule that must fire.
+fn bump_row(instr: &mut Instruction) -> RuleCode {
+    match instr {
+        Instruction::AccW2V { w_row, .. } | Instruction::WriteW { w_row, .. } => {
+            *w_row = 128;
+            RuleCode::WRowRange
+        }
+        Instruction::AccV2V { dst, .. } | Instruction::ResetV { dst, .. } => {
+            *dst = 32;
+            RuleCode::VRowRange
+        }
+        Instruction::SpikeCheck { v_row, .. }
+        | Instruction::ReadV { v_row, .. }
+        | Instruction::WriteV { v_row, .. } => {
+            *v_row = 32;
+            RuleCode::VRowRange
+        }
+    }
+}
+
+#[test]
+fn mutated_row_out_of_range_is_caught() {
+    let base = instrs_of(&lif_fixture().schedule_program(2));
+    let mut rng = XorShiftRng::new(0x5eed_0001);
+    for _ in 0..32 {
+        let mut instrs = base.clone();
+        let ix = rng.gen_range(instrs.len() as u64) as usize;
+        let expected = bump_row(&mut instrs[ix]);
+        let report = strict().validate_instrs(&instrs);
+        assert!(report.has(expected), "mutation at #{ix}: {report}");
+        assert!(!report.passes(), "mutation at #{ix} must be an error");
+    }
+}
+
+/// Flip the parity of a V-touching instruction (WriteW has none).
+fn flip_parity(instr: &mut Instruction) -> bool {
+    match instr {
+        Instruction::AccW2V { parity, .. }
+        | Instruction::AccV2V { parity, .. }
+        | Instruction::SpikeCheck { parity, .. }
+        | Instruction::ResetV { parity, .. }
+        | Instruction::ReadV { parity, .. }
+        | Instruction::WriteV { parity, .. } => {
+            *parity = other(*parity);
+            true
+        }
+        Instruction::WriteW { .. } => false,
+    }
+}
+
+#[test]
+fn mutated_parity_flip_is_caught() {
+    // In a LIF schedule every V row an instruction touches (membranes
+    // and all three constants) is touched again under the same parity,
+    // so flipping any single instruction's parity must conflict.
+    let base = instrs_of(&lif_fixture().schedule_program(2));
+    let mut rng = XorShiftRng::new(0x5eed_0002);
+    let mut applied = 0;
+    while applied < 32 {
+        let mut instrs = base.clone();
+        let ix = rng.gen_range(instrs.len() as u64) as usize;
+        if !flip_parity(&mut instrs[ix]) {
+            continue;
+        }
+        applied += 1;
+        let report = strict().validate_instrs(&instrs);
+        assert!(
+            report.has(RuleCode::ParityConflict),
+            "parity flip at #{ix}: {report}"
+        );
+        assert!(!report.passes(), "parity flip at #{ix} must be an error");
+    }
+}
+
+#[test]
+fn swapped_gate_order_is_caught() {
+    // Move the SpikeCheck after its gated partner: the gated op then
+    // issues against a never-latched spike buffer.
+    let cr = ConstRows::default();
+    let mut rng = XorShiftRng::new(0x5eed_0003);
+    for _ in 0..16 {
+        let parity = if rng.gen_bool(0.5) { Parity::Odd } else { Parity::Even };
+        let ty = match rng.gen_range(3) {
+            0 => NeuronType::IF,
+            1 => NeuronType::LIF,
+            _ => NeuronType::RMP,
+        };
+        let v_row = match parity {
+            Parity::Odd => 0,
+            Parity::Even => 1,
+        };
+        let mut seq = neuron_sequence(ty, v_row, cr.for_parity(parity), parity);
+        let check_ix = seq
+            .iter()
+            .position(|i| matches!(i, Instruction::SpikeCheck { .. }))
+            .expect("every sequence latches the spike buffer");
+        assert!(check_ix + 1 < seq.len(), "SpikeCheck must gate a successor");
+        seq.swap(check_ix, check_ix + 1);
+        let report = fragment().validate_instrs(&seq);
+        assert!(
+            report.has(RuleCode::GateNeverLatched),
+            "{ty:?}/{parity:?}: {report}"
+        );
+        assert!(!report.passes(), "{ty:?}/{parity:?} must be an error");
+    }
+}
+
+// ----------------------------------------------------- targeted hazards
+
+#[test]
+fn stale_gate_is_flagged() {
+    let instrs = [
+        Instruction::SpikeCheck {
+            v_row: 0,
+            thr_row: 28,
+            parity: Parity::Odd,
+        },
+        // rewriting the checked row invalidates the latched comparison
+        Instruction::AccV2V {
+            src_a: 0,
+            src_b: 26,
+            dst: 0,
+            parity: Parity::Odd,
+            mask: impulse::isa::WriteMaskMode::All,
+        },
+        Instruction::ResetV {
+            reset_row: 30,
+            dst: 0,
+            parity: Parity::Odd,
+        },
+    ];
+    let report = fragment().validate_instrs(&instrs);
+    assert!(report.has(RuleCode::GateStale), "{report}");
+    assert!(report.passes(), "stale gate is a warning: {report}");
+    assert!(!report.is_clean());
+}
+
+#[test]
+fn dead_store_is_flagged_at_the_overwritten_index() {
+    let instrs = [
+        Instruction::WriteV {
+            v_row: 3,
+            parity: Parity::Odd,
+            values: [1; 6],
+        },
+        Instruction::WriteV {
+            v_row: 3,
+            parity: Parity::Odd,
+            values: [2; 6],
+        },
+        Instruction::ReadV {
+            v_row: 3,
+            parity: Parity::Odd,
+        },
+    ];
+    let report = strict().validate_instrs(&instrs);
+    let dead: Vec<_> = report
+        .diagnostics()
+        .iter()
+        .filter(|d| d.code == RuleCode::DeadStore)
+        .collect();
+    assert_eq!(dead.len(), 1, "{report}");
+    assert_eq!(dead[0].index, Some(0), "{report}");
+    assert!(report.passes());
+}
+
+#[test]
+fn use_before_init_only_in_strict_mode() {
+    let instrs = [Instruction::ReadV {
+        v_row: 4,
+        parity: Parity::Odd,
+    }];
+    let report = strict().validate_instrs(&instrs);
+    assert!(report.has(RuleCode::UseBeforeInit), "{report}");
+    assert!(report.passes(), "use-before-init is a warning");
+    assert!(fragment().validate_instrs(&instrs).is_clean());
+}
+
+#[test]
+fn const_row_clobber_is_an_error() {
+    let instrs = [
+        Instruction::WriteV {
+            v_row: 5,
+            parity: Parity::Odd,
+            values: [1; 6],
+        },
+        // a CIM write landing on the row later used as −θ
+        Instruction::AccW2V {
+            w_row: 0,
+            v_src: 5,
+            v_dst: 28,
+            parity: Parity::Odd,
+        },
+        Instruction::SpikeCheck {
+            v_row: 5,
+            thr_row: 28,
+            parity: Parity::Odd,
+        },
+    ];
+    let report = strict().validate_instrs(&instrs);
+    assert!(report.has(RuleCode::ConstClobber), "{report}");
+    assert!(!report.passes());
+}
+
+// ------------------------------------------------- fused-stream contract
+
+#[test]
+fn fused_stream_preconditions_each_have_a_code() {
+    let too_many: Vec<usize> = (0..33).collect();
+    let cases: Vec<(Vec<(usize, u32)>, Vec<usize>, RuleCode)> = vec![
+        (vec![], too_many, RuleCode::FusedLaneCount),
+        (vec![], vec![32], RuleCode::VRowRange),
+        (vec![], vec![0, 2, 0], RuleCode::FusedLaneDup),
+        (vec![(128, 1)], vec![0], RuleCode::WRowRange),
+        (vec![(0, 0b100)], vec![0, 2], RuleCode::FusedMaskWidth),
+        (vec![(9, 1), (4, 1)], vec![0], RuleCode::FusedRowOrder),
+        (vec![(4, 1), (4, 1)], vec![0], RuleCode::FusedRowOrder),
+    ];
+    for (rows, lanes, expected) in cases {
+        let err = check_fused_stream(&rows, &lanes)
+            .expect_err(&format!("{rows:?}/{lanes:?} must be rejected"));
+        assert_eq!(err.code, expected, "{rows:?}/{lanes:?}: {err}");
+    }
+    // the canonical sorted-unique shape passes
+    check_fused_stream(&[(0, 0b11), (5, 0b01), (90, 0b10)], &[0, 2]).unwrap();
+}
+
+// ----------------------------------------------------------- rendering
+
+#[test]
+fn json_report_carries_stable_codes() {
+    let instrs = [Instruction::ReadV {
+        v_row: 32,
+        parity: Parity::Odd,
+    }];
+    let json = strict().validate_instrs(&instrs).to_json();
+    assert!(json.contains("\"errors\":1"), "{json}");
+    assert!(json.contains("\"code\":\"S002\""), "{json}");
+    assert!(json.contains("\"rule\":\"v-row-range\""), "{json}");
+    assert!(json.contains("\"index\":0"), "{json}");
+}
