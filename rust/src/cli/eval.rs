@@ -61,9 +61,14 @@ pub fn run(args: &[String]) -> Result<()> {
     let failed = responses.iter().filter(|r| r.err.is_some()).count();
     if failed > 0 {
         for r in responses.iter().filter(|r| r.err.is_some()).take(5) {
-            eprintln!("review {} failed: {}", r.id, r.err.as_deref().unwrap_or(""));
+            impulse::warn!(
+                "eval",
+                "review {} failed: {}",
+                r.id,
+                r.err.as_deref().unwrap_or("")
+            );
         }
-        eprintln!("{failed}/{n} reviews failed; accuracy is over the rest");
+        impulse::warn!("eval", "{failed}/{n} reviews failed; accuracy is over the rest");
     }
     let ok = n - failed;
     let correct = responses
@@ -136,7 +141,10 @@ fn run_digits(args: &[String]) -> Result<()> {
     let a = Arc::new(if artifacts_available() {
         DigitsArtifacts::load(artifacts_dir())?
     } else {
-        eprintln!("(artifacts not built — evaluating on the synthetic digits bundle)");
+        impulse::info!(
+            "eval",
+            "artifacts not built — evaluating on the synthetic digits bundle"
+        );
         DigitsArtifacts::synthetic(2024)
     });
     anyhow::ensure!(!a.test_x.is_empty(), "digits bundle has no test images");
@@ -172,9 +180,14 @@ fn run_digits(args: &[String]) -> Result<()> {
     let failed = responses.iter().filter(|r| r.err.is_some()).count();
     if failed > 0 {
         for r in responses.iter().filter(|r| r.err.is_some()).take(5) {
-            eprintln!("image {} failed: {}", r.id, r.err.as_deref().unwrap_or(""));
+            impulse::warn!(
+                "eval",
+                "image {} failed: {}",
+                r.id,
+                r.err.as_deref().unwrap_or("")
+            );
         }
-        eprintln!("{failed}/{n} images failed; accuracy is over the rest");
+        impulse::warn!("eval", "{failed}/{n} images failed; accuracy is over the rest");
     }
     let ok = n - failed;
     let correct = responses

@@ -7,13 +7,22 @@
 //! running `impulse serve --listen` instance; the envelope's p99 check
 //! reads the server's own `StatsRequest` telemetry, as a delta across
 //! the run. Exits nonzero when the envelope is violated.
+//!
+//! `--trace-dir <dir>` records one client-side span per operation
+//! (submit → answer wall time, as the generator observed it) to a
+//! Chrome trace-event JSON file in `<dir>` — line these up against a
+//! server traced with `impulse serve --trace-dir` to see where
+//! client-observed latency goes (`docs/OBSERVABILITY.md`).
 
-use impulse::replay::loadgen::{run_scenario, Scenario, BUILTIN_SCENARIOS};
+use impulse::obs::trace::{write_rotation, TraceRecorder};
+use impulse::replay::loadgen::{run_scenario_traced, Scenario, BUILTIN_SCENARIOS};
 use impulse::Result;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 pub fn run(args: &[String]) -> Result<()> {
     let flags = super::Flags::parse(args);
+    impulse::obs::log::init(flags.get("log-level"));
     let which = args.first().filter(|a| !a.starts_with("--")).ok_or_else(|| {
         anyhow::anyhow!(
             "usage: impulse loadgen <scenario> --addr HOST:PORT\n  builtin scenarios: {}",
@@ -29,8 +38,9 @@ pub fn run(args: &[String]) -> Result<()> {
             BUILTIN_SCENARIOS.join(", ")
         ),
     };
-    eprintln!(
-        "impulse loadgen: scenario '{}' (seed {}) against {addr}: {} conn × {} req, \
+    impulse::info!(
+        "loadgen",
+        "scenario '{}' (seed {}) against {addr}: {} conn × {} req, \
          {} stream(s)/conn × {} append(s), mix_digits {:.2}, ramp {}ms, \
          {} slow-loris, {} fuzz frame(s)",
         scenario.name,
@@ -44,7 +54,20 @@ pub fn run(args: &[String]) -> Result<()> {
         scenario.slow_loris,
         scenario.fuzz_frames,
     );
-    let report = run_scenario(addr, &scenario)?;
+    let trace_dir = flags.get("trace-dir").map(PathBuf::from);
+    let trace = trace_dir.as_ref().map(|_| Arc::new(TraceRecorder::new()));
+    let report = run_scenario_traced(addr, &scenario, trace.clone())?;
+    if let (Some(dir), Some(tr)) = (&trace_dir, &trace) {
+        let spans = tr.drain();
+        let path = write_rotation(dir, 0, &spans)?;
+        impulse::info!(
+            "loadgen",
+            "wrote {} client span(s) to {} (inspect with `impulse trace {}`)",
+            spans.len(),
+            path.display(),
+            dir.display()
+        );
+    }
     println!(
         "loadgen '{}': {} ok, {} error frame(s), {} transport error(s); \
          error rate {:.3}, p99 {}us, {:.1} op/s",

@@ -10,6 +10,7 @@ pub mod replay;
 pub mod report;
 pub mod serve;
 pub mod stats;
+pub mod trace;
 
 use impulse::config::RunConfig;
 use impulse::Result;
@@ -106,5 +107,19 @@ pub fn run_config(flags: &Flags) -> Result<RunConfig> {
     if let Some(n) = flags.get_usize("max") {
         cfg.max_samples = n;
     }
+    if let Some(dir) = flags.get("trace-dir") {
+        cfg.trace_dir = Some(dir.to_string());
+    }
+    if let Some(l) = flags.get("log-level") {
+        anyhow::ensure!(
+            impulse::obs::log::parse_level(l).is_some(),
+            "unknown --log-level '{l}' (error|warn|info|debug)"
+        );
+        cfg.log_level = Some(l.to_string());
+    }
+    // initialize the stderr logger here so every config-driven
+    // subcommand gets leveled logging (--log-level wins, then
+    // IMPULSE_LOG, then info)
+    impulse::obs::log::init(cfg.log_level.as_deref());
     Ok(cfg)
 }

@@ -13,17 +13,23 @@
 //! capture recorded on the SWAR fast path must replay bit-identically
 //! on the bit-level engine (and vice versa) — the cross-engine
 //! equivalence claim, now checkable on real recorded traffic.
+//!
+//! `--trace-dir <dir>` records the replayed requests' server-side
+//! lifecycle spans (decode/queue/batch/execute/write) to a Chrome
+//! trace-event JSON file — a way to profile a production capture's
+//! timing offline (`docs/OBSERVABILITY.md`).
 
 use super::serve::parse_engine;
 use super::Flags;
 use impulse::config::RunConfig;
 use impulse::data::{artifacts_dir, DigitsArtifacts, SentimentArtifacts};
 use impulse::macro_sim::ComparatorMode;
+use impulse::obs::trace::{write_rotation, TraceRecorder};
 use impulse::replay::{runner::replay_capture, Capture};
 use impulse::serve::ServeCore;
 use impulse::snn::{DigitsNetwork, SentimentNetwork};
 use impulse::Result;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 pub fn run(args: &[String]) -> Result<()> {
@@ -34,10 +40,14 @@ pub fn run(args: &[String]) -> Result<()> {
             anyhow::anyhow!("usage: impulse replay <capture-dir> [--engine fast|bit|lockstep]")
         })?;
     let flags = Flags::parse(args);
+    impulse::obs::log::init(flags.get("log-level"));
     let capture = Capture::load(Path::new(dir))?;
-    let core = core_for(&capture, &flags)?;
-    eprintln!(
-        "impulse replay: {} events from {dir} ({} / {} / engine {})",
+    let trace_dir = flags.get("trace-dir").map(PathBuf::from);
+    let trace = trace_dir.as_ref().map(|_| Arc::new(TraceRecorder::new()));
+    let core = core_for(&capture, &flags, trace.clone())?;
+    impulse::info!(
+        "replay",
+        "{} events from {dir} ({} / {} / engine {})",
         capture.events.len(),
         capture.meta_value("model").unwrap_or("sentiment"),
         capture.meta_value("source").unwrap_or("artifacts"),
@@ -47,6 +57,17 @@ pub fn run(args: &[String]) -> Result<()> {
     );
     let report = replay_capture(&capture, &core)?;
     core.shutdown();
+    if let (Some(tdir), Some(tr)) = (&trace_dir, &trace) {
+        let spans = tr.drain();
+        let path = write_rotation(tdir, 0, &spans)?;
+        impulse::info!(
+            "replay",
+            "wrote {} span(s) to {} (inspect with `impulse trace {}`)",
+            spans.len(),
+            path.display(),
+            tdir.display()
+        );
+    }
     println!(
         "replayed {} connection(s): {} bytes in, {} response frame(s) and {} V-digest(s) compared",
         report.connections, report.bytes_in, report.frames_out, report.digests
@@ -61,8 +82,13 @@ pub fn run(args: &[String]) -> Result<()> {
 }
 
 /// Rebuild the serving core a capture was recorded against, from its
-/// metadata (with `--engine` as the one allowed override).
-fn core_for(capture: &Capture, flags: &Flags) -> Result<Arc<ServeCore>> {
+/// metadata (with `--engine` as the one allowed override). A span
+/// recorder, when given, traces every replayed request's lifecycle.
+fn core_for(
+    capture: &Capture,
+    flags: &Flags,
+    trace: Option<Arc<TraceRecorder>>,
+) -> Result<Arc<ServeCore>> {
     let mut cfg = RunConfig {
         workers: 1,
         batch: 1,
@@ -91,6 +117,7 @@ fn core_for(capture: &Capture, flags: &Flags) -> Result<Arc<ServeCore>> {
     let mac = cfg.macro_config();
     let mut opts = cfg.server_options();
     opts.capture_digests = true;
+    opts.trace = trace;
     let synthetic = match capture.meta_value("source") {
         Some(s) if s.starts_with("synthetic:") => Some(
             s["synthetic:".len()..]

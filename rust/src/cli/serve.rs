@@ -26,11 +26,19 @@
 //! `--pipeline` runs unbatched requests through the wavefront layer
 //! pipeline. Response `cycles` are the request's honest share of its
 //! fused batch (per-request attribution, not an even split).
+//!
+//! `--trace-dir <dir>` records every request's lifecycle
+//! (decode/queue/batch/execute/write spans) as Chrome trace-event
+//! JSON rotations in `<dir>` — summarize with `impulse trace <dir>`
+//! or load a rotation into Perfetto (`docs/OBSERVABILITY.md`).
+//! `--log-level <error|warn|info|debug>` (or `IMPULSE_LOG`) sets the
+//! stderr log verbosity.
 
 use super::Flags;
 use impulse::coordinator::{Response, WorkloadKind};
 use impulse::data::{artifacts_dir, DigitsArtifacts, SentimentArtifacts};
 use impulse::macro_sim::{ComparatorMode, Engine};
+use impulse::obs::trace::{TraceFlusher, TraceRecorder};
 use impulse::replay::Recorder;
 use impulse::serve::{
     install_shutdown_handler, serve_tcp, ClientSession, ServeCore, TcpServeHandle,
@@ -131,6 +139,22 @@ pub fn run(args: &[String]) -> Result<()> {
     // listener, the stdio loop, and the metrics endpoint all share it
     let telemetry = Arc::new(Telemetry::new(cfg.telemetry_config()));
     opts.telemetry = Some(Arc::clone(&telemetry));
+    // --trace-dir <dir>: per-request lifecycle tracing
+    // (docs/OBSERVABILITY.md). Spans flush to Chrome trace-event JSON
+    // rotations in the directory; inspect with `impulse trace <dir>`
+    // or load a rotation into Perfetto / chrome://tracing.
+    let trace_flusher = match cfg.trace_dir.as_deref() {
+        Some(dir) => {
+            let rec = Arc::new(TraceRecorder::new());
+            opts.trace = Some(Arc::clone(&rec));
+            impulse::info!(
+                "serve",
+                "tracing request lifecycles to {dir} (inspect with `impulse trace {dir}`)"
+            );
+            Some(TraceFlusher::start(rec, PathBuf::from(dir)))
+        }
+        None => None,
+    };
     let model = flags.get("model").unwrap_or("sentiment");
     // --synthetic SEED serves the deterministic synthetic bundle
     // instead of the compiled artifacts: meaningful only for
@@ -197,9 +221,9 @@ pub fn run(args: &[String]) -> Result<()> {
             let (rec, path) = Recorder::to_dir(dir, &meta)?;
             let rec = Arc::new(rec);
             core.set_recorder(Arc::clone(&rec));
-            eprintln!(
-                "impulse serve: recording wire traffic + V-digests to {} \
-                 (replay with `impulse replay {}`)",
+            impulse::info!(
+                "serve",
+                "recording wire traffic + V-digests to {} (replay with `impulse replay {}`)",
                 path.display(),
                 dir.display()
             );
@@ -211,8 +235,9 @@ pub fn run(args: &[String]) -> Result<()> {
     let metrics = match cfg.metrics_listen.as_deref() {
         Some(addr) => {
             let h = serve_metrics(addr, Arc::clone(&telemetry))?;
-            eprintln!(
-                "impulse serve: metrics (Prometheus text) on http://{}/metrics",
+            impulse::info!(
+                "serve",
+                "metrics (Prometheus text) on http://{}/metrics (liveness on /healthz)",
                 h.local_addr()
             );
             Some(h)
@@ -222,8 +247,9 @@ pub fn run(args: &[String]) -> Result<()> {
     match cfg.listen.as_deref() {
         Some(addr) => {
             let handle = serve_tcp(addr, Arc::clone(&core))?;
-            eprintln!(
-                "impulse serve: {} {model} workers on tcp://{} ({batching}{}); \
+            impulse::info!(
+                "serve",
+                "{} {model} workers on tcp://{} ({batching}{}); \
                  binary frame protocol v{} (docs/PROTOCOL.md); \
                  `impulse stats {}` for live telemetry; \
                  SIGINT/SIGTERM drains and exits",
@@ -237,8 +263,9 @@ pub fn run(args: &[String]) -> Result<()> {
         }
         None => {
             let session = core.client()?;
-            eprintln!(
-                "impulse serve: {} workers on stdio ({batching}{}); \
+            impulse::info!(
+                "serve",
+                "{} workers on stdio ({batching}{}); \
                  send `<id> <word_id>…` lines, `quit` to stop",
                 opts.workers,
                 if opts.pipeline { ", pipelined" } else { "" },
@@ -251,9 +278,14 @@ pub fn run(args: &[String]) -> Result<()> {
         h.stop();
     }
     core.shutdown();
+    // stop tracing after the core drains so every in-flight request's
+    // spans make the final rotation
+    if let Some(f) = trace_flusher {
+        f.stop();
+    }
     if let Some(rec) = recorder {
         rec.flush()?;
-        eprintln!("impulse serve: capture complete ({} events)", rec.len());
+        impulse::info!("serve", "capture complete ({} events)", rec.len());
     }
     Ok(())
 }
@@ -268,10 +300,10 @@ fn serve_until_signalled(handle: TcpServeHandle) {
         std::thread::sleep(Duration::from_millis(50));
     }
     if stop.load(Ordering::SeqCst) {
-        eprintln!("impulse serve: shutdown signal — draining in-flight requests…");
+        impulse::info!("serve", "shutdown signal — draining in-flight requests…");
     }
     handle.stop();
-    eprintln!("impulse serve: stopped");
+    impulse::info!("serve", "stopped");
 }
 
 /// The line-oriented stdin/stdout loop over a shared-core session.
@@ -297,13 +329,13 @@ fn run_stdio(session: &ClientSession, telemetry: &Telemetry) -> Result<()> {
         let id: u64 = match it.next().unwrap().parse() {
             Ok(v) => v,
             Err(_) => {
-                eprintln!("bad id in: {line}");
+                impulse::warn!("serve", "bad id in: {line}");
                 continue;
             }
         };
         let word_ids: Vec<i64> = it.filter_map(|w| w.parse::<i64>().ok()).collect();
         if word_ids.is_empty() {
-            eprintln!("request {id}: no word ids");
+            impulse::warn!("serve", "request {id}: no word ids");
             continue;
         }
         if let Err(e) = session.submit(id, &word_ids) {

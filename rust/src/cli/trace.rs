@@ -1,0 +1,308 @@
+//! `impulse trace` — summarize an exported trace directory offline.
+//!
+//! Loads every `trace-*.json` rotation written by `impulse serve
+//! --trace-dir` (or `loadgen`/`replay` with the same flag), prints a
+//! per-phase latency table (count, p50, p99, max over span durations)
+//! and the slowest complete traces with their per-phase breakdown and
+//! execute-span cost attributes. `--slowest N` widens the listing
+//! (default 5); `--json` emits the same summary as one machine-
+//! readable JSON object. The files themselves stay Chrome trace-event
+//! documents — load them in Perfetto for the visual timeline
+//! (`docs/OBSERVABILITY.md`).
+
+use impulse::obs::trace::{load_trace_dir, Phase, TraceEvent};
+use impulse::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let dir = args.first().filter(|a| !a.starts_with("--")).ok_or_else(|| {
+        anyhow::anyhow!("usage: impulse trace <trace-dir> [--slowest N] [--json]")
+    })?;
+    let flags = super::Flags::parse(args);
+    let slowest = flags.get_usize("slowest").unwrap_or(5);
+    let events = load_trace_dir(Path::new(dir))?;
+    anyhow::ensure!(!events.is_empty(), "no trace events under {dir} (expected trace-*.json)");
+    let summary = summarize(&events, slowest);
+    if flags.has("json") {
+        println!("{}", summary.to_json());
+    } else {
+        print!("{}", summary.render(dir));
+    }
+    Ok(())
+}
+
+/// Phase-name display order: the request lifecycle first, then the
+/// auxiliary span kinds, then anything a foreign trace file added.
+const PHASE_ORDER: [&str; 7] =
+    ["decode", "queue", "batch", "execute", "write", "stream_append", "client"];
+
+fn phase_rank(name: &str) -> usize {
+    PHASE_ORDER.iter().position(|p| *p == name).unwrap_or(PHASE_ORDER.len())
+}
+
+/// Per-phase duration statistics over every event with that name.
+struct PhaseStats {
+    name: String,
+    count: usize,
+    p50_us: u64,
+    p99_us: u64,
+    max_us: u64,
+}
+
+/// One trace's rollup: which request it served and where its time went.
+struct TraceRollup {
+    trace_id: u64,
+    request_id: u64,
+    conn: u64,
+    total_us: u64,
+    /// `(phase name, summed duration)` in display order.
+    phases: Vec<(String, u64)>,
+    worker: u64,
+    batch: u64,
+    cycles: u64,
+    energy_fj: u64,
+    ok: bool,
+}
+
+struct Summary {
+    events: usize,
+    traces: usize,
+    phases: Vec<PhaseStats>,
+    slowest: Vec<TraceRollup>,
+}
+
+/// Index into a sorted sample at quantile `q`/100 (rounded rank).
+fn pct(sorted: &[u64], q: u64) -> u64 {
+    match sorted.len() {
+        0 => 0,
+        n => sorted[((n as u64 - 1) * q + 50) as usize / 100],
+    }
+}
+
+fn summarize(events: &[TraceEvent], slowest: usize) -> Summary {
+    let mut by_phase: BTreeMap<&str, Vec<u64>> = BTreeMap::new();
+    let mut by_trace: BTreeMap<u64, TraceRollup> = BTreeMap::new();
+    for e in events {
+        by_phase.entry(&e.name).or_default().push(e.dur);
+        let t = by_trace.entry(e.trace_id).or_insert_with(|| TraceRollup {
+            trace_id: e.trace_id,
+            request_id: e.request_id,
+            conn: e.conn,
+            total_us: 0,
+            phases: Vec::new(),
+            worker: 0,
+            batch: 0,
+            cycles: 0,
+            energy_fj: 0,
+            ok: true,
+        });
+        t.total_us += e.dur;
+        t.ok &= e.ok;
+        match t.phases.iter_mut().find(|(n, _)| *n == e.name) {
+            Some((_, d)) => *d += e.dur,
+            None => t.phases.push((e.name.clone(), e.dur)),
+        }
+        if e.name == Phase::Execute.name() {
+            t.worker = e.worker;
+            t.batch = e.batch;
+            t.cycles += e.cycles;
+            t.energy_fj += e.energy_fj;
+        }
+    }
+    let mut phases: Vec<PhaseStats> = by_phase
+        .into_iter()
+        .map(|(name, mut durs)| {
+            durs.sort_unstable();
+            PhaseStats {
+                name: name.to_string(),
+                count: durs.len(),
+                p50_us: pct(&durs, 50),
+                p99_us: pct(&durs, 99),
+                max_us: *durs.last().unwrap_or(&0),
+            }
+        })
+        .collect();
+    phases.sort_by_key(|p| (phase_rank(&p.name), p.name.clone()));
+    let traces = by_trace.len();
+    let mut rollups: Vec<TraceRollup> = by_trace.into_values().collect();
+    for t in &mut rollups {
+        t.phases.sort_by_key(|(n, _)| (phase_rank(n), n.clone()));
+    }
+    rollups.sort_by(|a, b| b.total_us.cmp(&a.total_us).then(a.trace_id.cmp(&b.trace_id)));
+    rollups.truncate(slowest);
+    Summary { events: events.len(), traces, phases, slowest: rollups }
+}
+
+impl Summary {
+    fn render(&self, dir: &str) -> String {
+        let mut out = format!(
+            "{} event(s) across {} trace(s) from {dir}\n\n\
+             {:<14} {:>8} {:>10} {:>10} {:>10}\n",
+            self.events, self.traces, "phase", "count", "p50_us", "p99_us", "max_us"
+        );
+        for p in &self.phases {
+            out.push_str(&format!(
+                "{:<14} {:>8} {:>10} {:>10} {:>10}\n",
+                p.name, p.count, p.p50_us, p.p99_us, p.max_us
+            ));
+        }
+        if !self.slowest.is_empty() {
+            out.push_str(&format!("\nslowest {} trace(s):\n", self.slowest.len()));
+        }
+        for t in &self.slowest {
+            let breakdown = t
+                .phases
+                .iter()
+                .map(|(n, d)| format!("{n} {d}"))
+                .collect::<Vec<_>>()
+                .join("  ");
+            out.push_str(&format!(
+                "  trace {} req {} conn {}: {}us ({breakdown}) \
+                 worker {} width {} cycles {} energy_fj {}{}\n",
+                t.trace_id,
+                t.request_id,
+                t.conn,
+                t.total_us,
+                t.worker,
+                t.batch,
+                t.cycles,
+                t.energy_fj,
+                if t.ok { "" } else { " ERR" },
+            ));
+        }
+        out
+    }
+
+    fn to_json(&self) -> String {
+        let phases = self
+            .phases
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"name\":\"{}\",\"count\":{},\"p50_us\":{},\"p99_us\":{},\"max_us\":{}}}",
+                    p.name, p.count, p.p50_us, p.p99_us, p.max_us
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        let slowest = self
+            .slowest
+            .iter()
+            .map(|t| {
+                let breakdown = t
+                    .phases
+                    .iter()
+                    .map(|(n, d)| format!("\"{n}\":{d}"))
+                    .collect::<Vec<_>>()
+                    .join(",");
+                format!(
+                    "{{\"trace\":{},\"req\":{},\"conn\":{},\"total_us\":{},\
+                     \"phases\":{{{breakdown}}},\"worker\":{},\"batch\":{},\
+                     \"cycles\":{},\"energy_fj\":{},\"ok\":{}}}",
+                    t.trace_id,
+                    t.request_id,
+                    t.conn,
+                    t.total_us,
+                    t.worker,
+                    t.batch,
+                    t.cycles,
+                    t.energy_fj,
+                    t.ok
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"events\":{},\"traces\":{},\"phases\":[{phases}],\"slowest\":[{slowest}]}}",
+            self.events, self.traces
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use impulse::obs::json::JsonValue;
+
+    fn ev(name: &str, trace_id: u64, dur: u64) -> TraceEvent {
+        TraceEvent {
+            name: name.to_string(),
+            ph: "X".to_string(),
+            dur,
+            trace_id,
+            request_id: trace_id + 10,
+            conn: 1,
+            ..TraceEvent::default()
+        }
+    }
+
+    fn lifecycle(trace_id: u64, scale: u64) -> Vec<TraceEvent> {
+        let mut out: Vec<TraceEvent> = Phase::LIFECYCLE
+            .iter()
+            .enumerate()
+            .map(|(i, p)| ev(p.name(), trace_id, (i as u64 + 1) * scale))
+            .collect();
+        let x = out.iter_mut().find(|e| e.name == "execute").unwrap();
+        x.worker = 2;
+        x.batch = 4;
+        x.cycles = 100 * scale;
+        x.energy_fj = 7 * scale;
+        out
+    }
+
+    #[test]
+    fn summarize_rolls_up_phases_and_ranks_traces() {
+        let mut events = lifecycle(1, 1);
+        events.extend(lifecycle(2, 10));
+        let s = summarize(&events, 1);
+        assert_eq!(s.events, 10);
+        assert_eq!(s.traces, 2);
+        assert_eq!(s.phases.len(), 5, "five lifecycle phases");
+        assert_eq!(s.phases[0].name, "decode", "lifecycle display order");
+        assert_eq!(s.phases[3].name, "execute");
+        assert_eq!(s.phases[3].count, 2);
+        assert_eq!(s.phases[3].max_us, 40);
+        assert_eq!(s.slowest.len(), 1, "--slowest truncates");
+        let t = &s.slowest[0];
+        assert_eq!(t.trace_id, 2, "slowest trace wins");
+        assert_eq!(t.total_us, (1 + 2 + 3 + 4 + 5) * 10);
+        assert_eq!(t.cycles, 1000);
+        assert_eq!(t.energy_fj, 70);
+        assert_eq!(t.worker, 2);
+        assert!(t.ok);
+    }
+
+    #[test]
+    fn percentiles_use_rounded_rank() {
+        let sorted: Vec<u64> = (1..=100).collect();
+        assert_eq!(pct(&sorted, 50), 51);
+        assert_eq!(pct(&sorted, 99), 99);
+        assert_eq!(pct(&sorted, 100), 100);
+        assert_eq!(pct(&[], 50), 0);
+        assert_eq!(pct(&[7], 99), 7);
+    }
+
+    #[test]
+    fn json_output_parses_and_carries_the_rollup() {
+        let s = summarize(&lifecycle(9, 3), 5);
+        let doc = JsonValue::parse(&s.to_json()).expect("summary JSON must parse");
+        assert_eq!(doc.get("traces").and_then(JsonValue::as_u64), Some(1));
+        let slow = doc.get("slowest").and_then(JsonValue::as_arr).unwrap();
+        assert_eq!(slow.len(), 1);
+        assert_eq!(slow[0].get("trace").and_then(JsonValue::as_u64), Some(9));
+        assert_eq!(
+            slow[0].get("phases").and_then(|p| p.get("execute")).and_then(JsonValue::as_u64),
+            Some(12)
+        );
+    }
+
+    #[test]
+    fn failed_phases_mark_the_trace() {
+        let mut events = lifecycle(3, 1);
+        events[3].ok = false;
+        let s = summarize(&events, 5);
+        assert!(!s.slowest[0].ok);
+        assert!(s.render("d").contains(" ERR"));
+    }
+}

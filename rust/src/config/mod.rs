@@ -52,6 +52,13 @@ pub struct RunConfig {
     pub max_samples: usize,
     /// Timesteps per word (sentiment) / per image (digits).
     pub timesteps: usize,
+    /// Directory for per-request lifecycle traces (Chrome trace-event
+    /// JSON rotations, `docs/OBSERVABILITY.md`); `None` disables
+    /// tracing entirely.
+    pub trace_dir: Option<String>,
+    /// Stderr log verbosity (`error`/`warn`/`info`/`debug`); `None`
+    /// defers to the `IMPULSE_LOG` environment variable, then `info`.
+    pub log_level: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -76,6 +83,8 @@ impl Default for RunConfig {
             stream_ttl_s: 120,
             max_samples: 0,
             timesteps: 10,
+            trace_dir: None,
+            log_level: None,
         }
     }
 }
@@ -151,6 +160,16 @@ impl RunConfig {
         if let Some(v) = doc.get_i64("run", "timesteps") {
             self.timesteps = v.clamp(1, 1000) as usize;
         }
+        if let Some(v) = doc.get_str("run", "trace_dir") {
+            self.trace_dir = Some(v.to_string());
+        }
+        if let Some(v) = doc.get_str("run", "log_level") {
+            anyhow::ensure!(
+                crate::obs::log::parse_level(v).is_some(),
+                "unknown log_level '{v}' (error|warn|info|debug)"
+            );
+            self.log_level = Some(v.to_string());
+        }
         Ok(())
     }
 
@@ -224,6 +243,8 @@ mod tests {
             stream_ttl_s = 15
             max_samples = 100
             timesteps = 5
+            trace_dir = "/tmp/impulse-trace"
+            log_level = "debug"
             "#,
         )
         .unwrap();
@@ -245,6 +266,8 @@ mod tests {
         assert_eq!(c.stream_ttl_s, 15);
         assert_eq!(c.max_samples, 100);
         assert_eq!(c.timesteps, 5);
+        assert_eq!(c.trace_dir.as_deref(), Some("/tmp/impulse-trace"));
+        assert_eq!(c.log_level.as_deref(), Some("debug"));
         let t = c.telemetry_config();
         assert_eq!(t.vdd, 1.2);
         assert_eq!(t.freq_hz, 500e6);
@@ -272,6 +295,12 @@ mod tests {
     #[test]
     fn bad_enum_value_errors() {
         let doc = TomlDoc::parse("[macro]\nengine = \"warp\"\n").unwrap();
+        assert!(RunConfig::default().apply(&doc).is_err());
+    }
+
+    #[test]
+    fn bad_log_level_errors() {
+        let doc = TomlDoc::parse("[run]\nlog_level = \"verbose\"\n").unwrap();
         assert!(RunConfig::default().apply(&doc).is_err());
     }
 }

@@ -22,6 +22,7 @@
 
 use super::workload::{Workload, WorkloadInput, WorkloadKind};
 use crate::metrics::LatencyStats;
+use crate::obs::trace::{elapsed_us, Phase, Span, TraceCtx, TraceRecorder, TraceSummary};
 use crate::telemetry::Telemetry;
 use crate::Result;
 use std::collections::VecDeque;
@@ -35,17 +36,21 @@ pub struct Request {
     pub id: u64,
     /// The workload-tagged input (word ids or an image).
     pub input: WorkloadInput,
+    /// Trace context from the transport's decode chokepoint, so the
+    /// queue/batch/execute spans correlate with the listener-side
+    /// ones. `None` (the constructors' default) records nothing.
+    pub trace: Option<TraceCtx>,
 }
 
 impl Request {
     /// A sentiment request over a word-id sequence.
     pub fn words(id: u64, word_ids: Vec<i64>) -> Request {
-        Request { id, input: WorkloadInput::Words(word_ids) }
+        Request { id, input: WorkloadInput::Words(word_ids), trace: None }
     }
 
     /// A digits request over an `h`×`w` image (row-major pixels).
     pub fn image(id: u64, h: usize, w: usize, pixels: Vec<f32>) -> Request {
-        Request { id, input: WorkloadInput::Image { h, w, pixels } }
+        Request { id, input: WorkloadInput::Image { h, w, pixels }, trace: None }
     }
 }
 
@@ -76,6 +81,11 @@ pub struct Response {
     /// serialized onto the wire — this is the record/replay
     /// checkpoint's server-side tap.
     pub v_digest: Option<u64>,
+    /// Per-phase timing summary, present only when the request carried
+    /// a [`TraceCtx`] and the server is tracing. The transport uses it
+    /// to record the write span under the right trace id and to answer
+    /// trace-echo requests. Never serialized onto the wire directly.
+    pub trace: Option<TraceSummary>,
 }
 
 /// Aggregated server statistics.
@@ -130,6 +140,10 @@ pub struct ServerOptions {
     /// walks every macro's V_MEM); `impulse serve --record` and the
     /// replay runner turn it on.
     pub capture_digests: bool,
+    /// Per-request span recorder (`impulse serve --trace-dir`),
+    /// threaded through exactly like `telemetry`. `None` (the default)
+    /// records nothing and costs one branch per chokepoint.
+    pub trace: Option<Arc<TraceRecorder>>,
 }
 
 impl ServerOptions {
@@ -159,6 +173,7 @@ impl Default for ServerOptions {
             max_streams: 8,
             stream_ttl: Duration::from_secs(120),
             capture_digests: false,
+            trace: None,
         }
     }
 }
@@ -167,6 +182,10 @@ impl Default for ServerOptions {
 struct Queued {
     req: Request,
     t0: Instant,
+    /// When the batcher picked this request into a batch (initialized
+    /// to `t0`; overwritten at batch formation when tracing is on, so
+    /// queue wait and batch formation separate into distinct spans).
+    t_batched: Instant,
 }
 
 /// Shared submit path of [`InferenceServer`] and [`Submitter`] — the
@@ -186,10 +205,8 @@ fn submit_inner(
     if let Some(t) = telemetry {
         t.record_submit(kind);
     }
-    match tx.send(Queued {
-        req,
-        t0: Instant::now(),
-    }) {
+    let now = Instant::now();
+    match tx.send(Queued { req, t0: now, t_batched: now }) {
         Ok(()) => Ok(()),
         Err(_) => {
             inflight.fetch_sub(1, Ordering::SeqCst);
@@ -387,6 +404,14 @@ impl InferenceServer {
                             }
                         }
                     }
+                    if opts.trace.is_some() {
+                        // one stamp for the whole batch: formation ends
+                        // for every member when the batch is sealed
+                        let tb = Instant::now();
+                        for q in &mut batch {
+                            q.t_batched = tb;
+                        }
+                    }
                     let weight = batch.len();
                     router.push(batch, weight);
                 }
@@ -405,7 +430,7 @@ impl InferenceServer {
                 let mut net = match factory() {
                     Ok(n) => n,
                     Err(e) => {
-                        eprintln!("worker {w}: failed to build network: {e}");
+                        crate::error!("worker", "failed to build network worker={w} err={e:#}");
                         return;
                     }
                 };
@@ -538,6 +563,10 @@ fn serve_batch<W: Workload>(
 ) {
     let n = batch.len();
     let tele = opts.telemetry.as_deref();
+    let tr = opts.trace.as_deref();
+    // one stamp for the whole batch: queue/batch phases end and the
+    // execute phase begins when the worker picks the batch up
+    let t_serve = tr.map(|_| Instant::now());
     if let Some(t) = tele {
         t.record_batch(n as u64, net.max_batch_lanes() as u64);
         for q in &batch {
@@ -568,10 +597,11 @@ fn serve_batch<W: Workload>(
                 crate::metrics::apportion(&weights, total)
             });
             for (i, (q, r)) in batch.iter().zip(results).enumerate() {
+                let e = energy_fj.as_ref().map_or(0, |v| v[i]);
                 if let Some(t) = tele {
-                    let e = energy_fj.as_ref().map_or(0, |v| v[i]);
                     t.record_response(q.req.input.kind(), r.cycles, e, true);
                 }
+                let trace = record_request_spans(tr, q, worker, n, t_serve, r.cycles, e, true);
                 // decrement before publishing so inflight() == 0 is
                 // observable once every response has been received
                 inflight.fetch_sub(1, Ordering::SeqCst);
@@ -587,18 +617,21 @@ fn serve_batch<W: Workload>(
                     batch_size: n,
                     err: None,
                     v_digest,
+                    trace,
                 });
             }
         }
         Err(e) if n == 1 => {
-            if let Some(t) = tele {
+            let e_fj = tele.map_or(0, |t| {
                 // the failed attempt's instruction spend is real; fold
                 // it into the error response's attribution
                 let e_fj = record_batch_energy(net, t);
                 t.record_response(batch[0].req.input.kind(), 0, e_fj, false);
-            }
+                e_fj
+            });
+            let trace = record_request_spans(tr, &batch[0], worker, n, t_serve, 0, e_fj, false);
             inflight.fetch_sub(1, Ordering::SeqCst);
-            let _ = tx_out.send(err_response(&batch[0], worker, &e));
+            let _ = tx_out.send(err_response(&batch[0], worker, &e, trace));
         }
         Err(_) => {
             // A bad request poisons the fused batch; retry each request
@@ -613,14 +646,25 @@ fn serve_batch<W: Workload>(
             });
             for (i, q) in batch.iter().enumerate() {
                 let res = net.run_one(&q.req.input);
-                if let Some(t) = tele {
+                let e_fj = tele.map_or(0, |t| {
                     let e_fj =
                         record_batch_energy(net, t) + poisoned_fj.get(i).copied().unwrap_or(0);
                     match &res {
                         Ok(r) => t.record_response(q.req.input.kind(), r.cycles, e_fj, true),
                         Err(_) => t.record_response(q.req.input.kind(), 0, e_fj, false),
                     }
-                }
+                    e_fj
+                });
+                let trace = record_request_spans(
+                    tr,
+                    q,
+                    worker,
+                    1,
+                    t_serve,
+                    res.as_ref().map_or(0, |r| r.cycles),
+                    e_fj,
+                    res.is_ok(),
+                );
                 inflight.fetch_sub(1, Ordering::SeqCst);
                 let resp = match res {
                     Ok(r) => Response {
@@ -635,8 +679,9 @@ fn serve_batch<W: Workload>(
                         batch_size: 1,
                         err: None,
                         v_digest: if opts.capture_digests { net.v_digest() } else { None },
+                        trace,
                     },
-                    Err(e) => err_response(q, worker, &e),
+                    Err(e) => err_response(q, worker, &e, trace),
                 };
                 let _ = tx_out.send(resp);
             }
@@ -645,7 +690,12 @@ fn serve_batch<W: Workload>(
 }
 
 /// An error response for a failed request (numeric fields zeroed).
-fn err_response(q: &Queued, worker: usize, e: &anyhow::Error) -> Response {
+fn err_response(
+    q: &Queued,
+    worker: usize,
+    e: &anyhow::Error,
+    trace: Option<TraceSummary>,
+) -> Response {
     Response {
         id: q.req.id,
         kind: q.req.input.kind(),
@@ -658,7 +708,73 @@ fn err_response(q: &Queued, worker: usize, e: &anyhow::Error) -> Response {
         batch_size: 1,
         err: Some(format!("{e:#}")),
         v_digest: None,
+        trace,
     }
+}
+
+/// Record one request's queue/batch/execute spans and fold the phase
+/// durations into the [`TraceSummary`] the transport needs for write
+/// spans and trace-echo trailers. A no-op returning `None` unless the
+/// server is tracing *and* the request carried a [`TraceCtx`] (solo
+/// [`InferenceServer::submit`] callers pass `trace: None` and pay one
+/// `Option` branch here).
+#[allow(clippy::too_many_arguments)]
+fn record_request_spans(
+    tr: Option<&TraceRecorder>,
+    q: &Queued,
+    worker: usize,
+    batch: usize,
+    t_exec: Option<Instant>,
+    cycles: u64,
+    energy_fj: u64,
+    ok: bool,
+) -> Option<TraceSummary> {
+    let tr = tr?;
+    let ctx = q.req.trace?;
+    let t_exec = t_exec?;
+    let queue_start = tr.us_of(q.t0);
+    let batch_start = tr.us_of(q.t_batched);
+    let exec_start = tr.us_of(t_exec);
+    let queue_us = batch_start.saturating_sub(queue_start);
+    let batch_us = exec_start.saturating_sub(batch_start);
+    let execute_us = elapsed_us(t_exec);
+    tr.record(Span::new(
+        Phase::Queue,
+        ctx.trace_id,
+        ctx.request_id,
+        ctx.conn,
+        queue_start,
+        queue_us,
+    ));
+    tr.record(Span::new(
+        Phase::Batch,
+        ctx.trace_id,
+        ctx.request_id,
+        ctx.conn,
+        batch_start,
+        batch_us,
+    ));
+    tr.record(
+        Span::new(
+            Phase::Execute,
+            ctx.trace_id,
+            ctx.request_id,
+            ctx.conn,
+            exec_start,
+            execute_us,
+        )
+        .with_worker(worker as u32, batch as u32)
+        .with_cost(cycles, energy_fj)
+        .with_ok(ok),
+    );
+    Some(TraceSummary {
+        trace_id: ctx.trace_id,
+        decode_us: ctx.decode_us,
+        queue_us,
+        batch_us,
+        execute_us,
+        echo: ctx.echo,
+    })
 }
 
 #[cfg(test)]

@@ -26,6 +26,9 @@
 //! - [`telemetry`] — live serving telemetry: the lock-free registry,
 //!   `StatsRequest`/`StatsResponse` snapshots, Prometheus exposition,
 //!   and backpressure signalling.
+//! - [`obs`] — per-request lifecycle tracing (span recorder, Chrome
+//!   trace-event export, `docs/OBSERVABILITY.md`) and the leveled
+//!   structured logger behind [`error!`]/[`warn!`]/[`info!`]/[`debug!`].
 //! - [`replay`] — deterministic record/replay of serve traffic (wire
 //!   taps + per-request V_MEM digests, `docs/REPLAY.md`) and the
 //!   scripted scenario load generator.
@@ -59,6 +62,7 @@ pub mod macro_sim;
 pub mod mapper;
 pub mod metrics;
 pub mod neuron;
+pub mod obs;
 pub mod periph;
 pub mod proptest_lite;
 pub mod replay;

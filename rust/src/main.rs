@@ -25,6 +25,8 @@
 //!                                                 frames + V-digests
 //!   loadgen  SCENARIO --addr ADDR                 scripted load + envelope
 //!                                                 assertions via telemetry
+//!   trace    DIR [--slowest N] [--json]           summarize a --trace-dir
+//!                                                 span export offline
 //!   stats    ADDR                                 live telemetry of a server
 //!   shmoo                                         print the Fig 8 grid
 //!   sweep    [--neuron rmp|if|lif]                EDP vs sparsity (Fig 11b)
@@ -57,6 +59,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "stats" => cli::stats::run(rest),
         "shmoo" => cli::report::shmoo(),
         "sweep" => cli::report::sweep(rest),
+        "trace" => cli::trace::run(rest),
         "trace-vmem" => cli::infer::trace_vmem(rest),
         "info" => cli::info::run(),
         "help" | "--help" | "-h" => {
@@ -134,7 +137,13 @@ COMMANDS:
                                     deterministic synthetic bundle
                                     instead of compiled artifacts;
                                     --engine overrides the execution
-                                    engine (fast|bit|lockstep)
+                                    engine (fast|bit|lockstep);
+                                    --trace-dir DIR records per-request
+                                    lifecycle spans as Chrome trace JSON
+                                    rotations (docs/OBSERVABILITY.md);
+                                    --log-level error|warn|info|debug
+                                    sets stderr log verbosity (also
+                                    IMPULSE_LOG)
     replay DIR [--engine E]         re-execute a capture against a core
                                     rebuilt from its metadata; diffs
                                     response frames and V-digests,
@@ -142,13 +151,21 @@ COMMANDS:
                                     (docs/REPLAY.md). --engine replays
                                     on a different engine — cross-
                                     engine bit-identity on recorded
-                                    traffic
+                                    traffic; --trace-dir records the
+                                    replayed requests' lifecycle spans
     loadgen SCENARIO --addr ADDR    drive a scripted scenario (smoke,
                                     burst, ramp, mixed, stream,
                                     slowloris, fuzz, or a TOML file) at
                                     a live server; asserts min-ok /
                                     error-rate / p99 envelopes via the
-                                    server's own StatsRequest telemetry
+                                    server's own StatsRequest telemetry;
+                                    --trace-dir records client-observed
+                                    per-operation spans
+    trace DIR [--slowest N] [--json]
+                                    summarize a --trace-dir export:
+                                    per-phase p50/p99/max and the
+                                    slowest traces with their phase
+                                    breakdown (docs/OBSERVABILITY.md)
     stats ADDR                      fetch a running server's live
                                     telemetry (StatsRequest over the
                                     frame protocol): requests, energy,

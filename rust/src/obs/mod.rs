@@ -1,0 +1,20 @@
+//! Observability: per-request lifecycle tracing and structured
+//! logging for the serving stack.
+//!
+//! Three zero-dependency pieces:
+//!
+//! - [`trace`] — the span recorder ([`trace::TraceRecorder`]), the
+//!   Chrome trace-event JSON export behind `impulse serve
+//!   --trace-dir`, and the reader used by `impulse trace`.
+//! - [`log`] — the leveled stderr logger behind the crate-level
+//!   [`crate::error!`] / [`crate::warn!`] / [`crate::info!`] /
+//!   [`crate::debug!`] macros.
+//! - [`json`] — the minimal JSON parser/escaper the trace reader is
+//!   built on (the crate has no serde).
+//!
+//! The span model, trace-event schema, wire negotiation and log line
+//! format are documented in `docs/OBSERVABILITY.md`.
+
+pub mod json;
+pub mod log;
+pub mod trace;

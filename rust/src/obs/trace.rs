@@ -1,0 +1,650 @@
+//! Per-request lifecycle tracing: the span recorder and Chrome-trace
+//! export.
+//!
+//! A [`TraceRecorder`] captures one span tree per served request
+//! across the five serving chokepoints — frame **decode** in the TCP
+//! listener, **queue** wait and **batch** formation in the
+//! coordinator, engine **execute** in `serve_batch` (with the
+//! instruction-histogram cycle/energy delta attached as attributes),
+//! and the response **write** inside the connection writer lock — plus
+//! stream-table appends and loadgen's client-observed operations.
+//! Spans carry the wire `request_id` and a process-unique trace id, so
+//! the phases of one request correlate across threads.
+//!
+//! Recording mirrors the sharded-histogram trick
+//! (`telemetry/histogram.rs`): spans are striped across
+//! cache-line-aligned shards with a stable per-thread shard index, so
+//! the worker, reader and responder threads never contend on one
+//! buffer (each push is an uncontended short critical section on the
+//! caller's own stripe). When nothing drains the recorder, each shard
+//! caps its buffer and counts drops instead of growing without bound.
+//!
+//! Export is the Chrome trace-event JSON format — complete (`"ph":
+//! "X"`) events with microsecond `ts`/`dur` — loadable in
+//! `chrome://tracing` and Perfetto, summarized offline by
+//! `impulse trace`. See `docs/OBSERVABILITY.md`.
+
+use crate::obs::json::JsonValue;
+use crate::Result;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Stripe count (matches the telemetry histogram: comfortably covers
+/// the worker + reader + responder thread population).
+const N_SHARDS: usize = 8;
+
+/// Per-shard buffered-span cap: past it, new spans are dropped and
+/// counted. 64Ki spans ≈ 6 MiB per shard worst case — a bound, not a
+/// budget; the flusher drains every rotation interval.
+const SHARD_CAP: usize = 64 * 1024;
+
+/// How often the [`TraceFlusher`] drains the recorder into a new
+/// rotation file.
+const FLUSH_INTERVAL: Duration = Duration::from_millis(500);
+
+/// A lifecycle phase — the `name` of the exported trace event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    /// Frame + payload decode in the TCP listener's reader thread.
+    Decode,
+    /// Submit until the batcher picked the request into a batch.
+    Queue,
+    /// Batch formation until a worker began executing the batch.
+    Batch,
+    /// Engine execution of the (possibly fused) batch.
+    Execute,
+    /// Response encode + socket write inside the writer lock.
+    Write,
+    /// One stream-table append (pinned-lane integration).
+    StreamAppend,
+    /// A client-observed operation (loadgen's `--trace-dir`).
+    Client,
+}
+
+impl Phase {
+    /// The five phases every one-shot request passes through, in
+    /// lifecycle order.
+    pub const LIFECYCLE: [Phase; 5] =
+        [Phase::Decode, Phase::Queue, Phase::Batch, Phase::Execute, Phase::Write];
+
+    /// The stable event name this phase exports as.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Decode => "decode",
+            Phase::Queue => "queue",
+            Phase::Batch => "batch",
+            Phase::Execute => "execute",
+            Phase::Write => "write",
+            Phase::StreamAppend => "stream_append",
+            Phase::Client => "client",
+        }
+    }
+
+    /// Parse an exported event name back into a phase.
+    pub fn from_name(s: &str) -> Option<Phase> {
+        match s {
+            "decode" => Some(Phase::Decode),
+            "queue" => Some(Phase::Queue),
+            "batch" => Some(Phase::Batch),
+            "execute" => Some(Phase::Execute),
+            "write" => Some(Phase::Write),
+            "stream_append" => Some(Phase::StreamAppend),
+            "client" => Some(Phase::Client),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded span: a phase of one request's lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    /// The process-unique trace id correlating this request's phases.
+    pub trace_id: u64,
+    /// The wire request id (client-chosen; unique per connection only).
+    pub request_id: u64,
+    /// The serving connection id (loadgen: the connection index).
+    pub conn: u64,
+    /// Which lifecycle phase this span covers.
+    pub phase: Phase,
+    /// Start, in microseconds since the recorder's epoch.
+    pub start_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// Worker that executed the batch (execute spans; 0 otherwise).
+    pub worker: u32,
+    /// Fused batch width (execute spans; 0 otherwise).
+    pub batch: u32,
+    /// Attributed macro cycles (execute/stream-append spans).
+    pub cycles: u64,
+    /// Attributed energy in femtojoules (execute spans).
+    pub energy_fj: u64,
+    /// Whether the phase completed successfully.
+    pub ok: bool,
+}
+
+impl Span {
+    /// A span with the cost/worker attributes zeroed and `ok` set.
+    pub fn new(
+        phase: Phase,
+        trace_id: u64,
+        request_id: u64,
+        conn: u64,
+        start_us: u64,
+        dur_us: u64,
+    ) -> Span {
+        Span {
+            trace_id,
+            request_id,
+            conn,
+            phase,
+            start_us,
+            dur_us,
+            worker: 0,
+            batch: 0,
+            cycles: 0,
+            energy_fj: 0,
+            ok: true,
+        }
+    }
+
+    /// Attach the executing worker and fused batch width.
+    pub fn with_worker(mut self, worker: u32, batch: u32) -> Span {
+        self.worker = worker;
+        self.batch = batch;
+        self
+    }
+
+    /// Attach the attributed cycle and energy cost.
+    pub fn with_cost(mut self, cycles: u64, energy_fj: u64) -> Span {
+        self.cycles = cycles;
+        self.energy_fj = energy_fj;
+        self
+    }
+
+    /// Set the success flag.
+    pub fn with_ok(mut self, ok: bool) -> Span {
+        self.ok = ok;
+        self
+    }
+}
+
+/// Trace context attached to a request as it crosses the listener →
+/// coordinator seam, so the router-side spans correlate with the
+/// listener-side ones.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceCtx {
+    /// The process-unique trace id minted at decode time.
+    pub trace_id: u64,
+    /// The serving connection id.
+    pub conn: u64,
+    /// The wire request id (the client's correlation key).
+    pub request_id: u64,
+    /// Duration of the decode phase, µs (carried for the wire echo).
+    pub decode_us: u64,
+    /// Whether the client requested the timing-breakdown echo
+    /// (`FLAG_TRACE_ECHO` on the request of a `CAP_TRACE_ECHO`
+    /// negotiated connection).
+    pub echo: bool,
+}
+
+/// Phase timings carried back on a [`crate::coordinator::Response`] so
+/// the responder can record the write span under the right trace id
+/// and answer trace-echo requests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceSummary {
+    /// The trace id minted at decode time.
+    pub trace_id: u64,
+    /// Decode-phase duration, µs.
+    pub decode_us: u64,
+    /// Queue-phase duration, µs.
+    pub queue_us: u64,
+    /// Batch-formation duration, µs.
+    pub batch_us: u64,
+    /// Execute-phase duration, µs.
+    pub execute_us: u64,
+    /// Whether the response should carry the wire timing echo.
+    pub echo: bool,
+}
+
+/// One cache-line-aligned stripe of the span buffer.
+#[repr(align(128))]
+struct Shard {
+    spans: Mutex<Vec<Span>>,
+}
+
+/// The stable per-thread shard index (round-robin on first use — no
+/// hashing on the hot path; same idiom as the telemetry histogram).
+fn shard_index() -> usize {
+    use std::cell::Cell;
+    thread_local! {
+        static IDX: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    IDX.with(|c| {
+        let mut v = c.get();
+        if v == usize::MAX {
+            static NEXT: AtomicUsize = AtomicUsize::new(0);
+            v = NEXT.fetch_add(1, Ordering::Relaxed);
+            c.set(v);
+        }
+        v % N_SHARDS
+    })
+}
+
+/// The span recorder: sharded per-thread buffers, a monotonic trace-id
+/// counter, and a single time epoch all spans are measured against.
+///
+/// Threaded through `ServerOptions` as an `Option<Arc<TraceRecorder>>`
+/// exactly like the telemetry registry: `None` (the default) costs one
+/// `Option` branch per chokepoint and records nothing.
+pub struct TraceRecorder {
+    epoch: Instant,
+    next_trace: AtomicU64,
+    dropped: AtomicU64,
+    shards: Vec<Shard>,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder::new()
+    }
+}
+
+impl TraceRecorder {
+    /// A fresh recorder; its construction instant is the `ts` epoch
+    /// for every span it records.
+    pub fn new() -> TraceRecorder {
+        TraceRecorder {
+            epoch: Instant::now(),
+            next_trace: AtomicU64::new(1),
+            dropped: AtomicU64::new(0),
+            shards: (0..N_SHARDS).map(|_| Shard { spans: Mutex::new(Vec::new()) }).collect(),
+        }
+    }
+
+    /// Mint a process-unique trace id.
+    pub fn next_trace_id(&self) -> u64 {
+        self.next_trace.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Microseconds between the recorder epoch and `t` (0 if `t`
+    /// precedes the epoch).
+    pub fn us_of(&self, t: Instant) -> u64 {
+        saturating_us(t.saturating_duration_since(self.epoch))
+    }
+
+    /// Record one span into the caller's shard.
+    pub fn record(&self, span: Span) {
+        let mut g = self.shards[shard_index()].spans.lock().expect("trace shard poisoned");
+        if g.len() >= SHARD_CAP {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        g.push(span);
+    }
+
+    /// Take every buffered span (ordered by start time across shards).
+    pub fn drain(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.append(&mut s.spans.lock().expect("trace shard poisoned"));
+        }
+        out.sort_by_key(|s| (s.start_us, s.trace_id));
+        out
+    }
+
+    /// Spans currently buffered across all shards.
+    pub fn pending(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.spans.lock().expect("trace shard poisoned").len())
+            .sum()
+    }
+
+    /// Spans dropped at the shard cap since construction.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// A duration as saturating microseconds.
+pub fn saturating_us(d: Duration) -> u64 {
+    u64::try_from(d.as_micros()).unwrap_or(u64::MAX)
+}
+
+/// Microseconds elapsed since `t0`.
+pub fn elapsed_us(t0: Instant) -> u64 {
+    saturating_us(t0.elapsed())
+}
+
+// ---------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------
+
+/// Serialize spans as a Chrome trace-event JSON document
+/// (`{"traceEvents": [...]}`): complete events (`"ph": "X"`) with
+/// microsecond `ts`/`dur`, `pid` = the server process id, `tid` = the
+/// serving connection id, and the request attribution under `args`.
+pub fn chrome_trace_json(spans: &[Span]) -> String {
+    let pid = std::process::id();
+    let mut out = String::with_capacity(64 + spans.len() * 160);
+    out.push_str("{\"traceEvents\":[");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n{{\"name\":\"{}\",\"cat\":\"impulse\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":{},\"tid\":{},\"args\":{{\"trace\":{},\"req\":{},\"conn\":{},\
+             \"worker\":{},\"batch\":{},\"cycles\":{},\"energy_fj\":{},\"ok\":{}}}}}",
+            s.phase.name(),
+            s.start_us,
+            s.dur_us,
+            pid,
+            s.conn,
+            s.trace_id,
+            s.request_id,
+            s.conn,
+            s.worker,
+            s.batch,
+            s.cycles,
+            s.energy_fj,
+            s.ok,
+        ));
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// One event read back from an exported trace file.
+#[derive(Clone, Debug, Default)]
+pub struct TraceEvent {
+    /// The phase name (`decode`, `queue`, …).
+    pub name: String,
+    /// The event type — always `"X"` (complete) from our writer.
+    pub ph: String,
+    /// Start, µs since the recorder epoch.
+    pub ts: u64,
+    /// Duration, µs.
+    pub dur: u64,
+    /// Writing process id.
+    pub pid: u64,
+    /// Thread/track id (the serving connection id).
+    pub tid: u64,
+    /// The process-unique trace id (`args.trace`).
+    pub trace_id: u64,
+    /// The wire request id (`args.req`).
+    pub request_id: u64,
+    /// The serving connection id (`args.conn`).
+    pub conn: u64,
+    /// Executing worker (`args.worker`).
+    pub worker: u64,
+    /// Fused batch width (`args.batch`).
+    pub batch: u64,
+    /// Attributed cycles (`args.cycles`).
+    pub cycles: u64,
+    /// Attributed energy in femtojoules (`args.energy_fj`).
+    pub energy_fj: u64,
+    /// Success flag (`args.ok`).
+    pub ok: bool,
+}
+
+/// Parse a Chrome trace-event document (either the `{"traceEvents":
+/// [...]}` object form our writer emits or a bare event array).
+pub fn parse_chrome_trace(text: &str) -> Result<Vec<TraceEvent>> {
+    let doc = JsonValue::parse(text)?;
+    let events = match &doc {
+        JsonValue::Arr(_) => &doc,
+        _ => doc
+            .get("traceEvents")
+            .ok_or_else(|| anyhow::anyhow!("not a Chrome trace: no traceEvents array"))?,
+    };
+    let items = events
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("traceEvents is not an array"))?;
+    let mut out = Vec::with_capacity(items.len());
+    for (i, e) in items.iter().enumerate() {
+        let field = |k: &str| e.get(k).and_then(JsonValue::as_u64).unwrap_or(0);
+        let arg = |k: &str| e.get("args").and_then(|a| a.get(k)).and_then(JsonValue::as_u64);
+        anyhow::ensure!(
+            e.get("name").and_then(JsonValue::as_str).is_some(),
+            "event {i} has no name"
+        );
+        out.push(TraceEvent {
+            name: e.get("name").and_then(JsonValue::as_str).unwrap_or("").to_string(),
+            ph: e.get("ph").and_then(JsonValue::as_str).unwrap_or("").to_string(),
+            ts: field("ts"),
+            dur: field("dur"),
+            pid: field("pid"),
+            tid: field("tid"),
+            trace_id: arg("trace").unwrap_or(0),
+            request_id: arg("req").unwrap_or(0),
+            conn: arg("conn").unwrap_or(0),
+            worker: arg("worker").unwrap_or(0),
+            batch: arg("batch").unwrap_or(0),
+            cycles: arg("cycles").unwrap_or(0),
+            energy_fj: arg("energy_fj").unwrap_or(0),
+            ok: e
+                .get("args")
+                .and_then(|a| a.get("ok"))
+                .and_then(JsonValue::as_bool)
+                .unwrap_or(true),
+        });
+    }
+    Ok(out)
+}
+
+/// Write one rotation file (`trace-NNNNNN.json`) into `dir` and return
+/// its path. Each rotation is a complete, independently loadable
+/// Chrome trace document.
+pub fn write_rotation(dir: &Path, seq: u64, spans: &[Span]) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("trace-{seq:06}.json"));
+    std::fs::write(&path, chrome_trace_json(spans))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+    Ok(path)
+}
+
+/// Load every `trace-*.json` rotation in `dir` (sorted by name, i.e.
+/// by rotation sequence) into one event list.
+pub fn load_trace_dir(dir: &Path) -> Result<Vec<TraceEvent>> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading trace dir {}: {e}", dir.display()))?
+        .filter_map(|r| r.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("trace-") && n.ends_with(".json"))
+                .unwrap_or(false)
+        })
+        .collect();
+    files.sort();
+    let mut out = Vec::new();
+    for f in &files {
+        let text = std::fs::read_to_string(f)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", f.display()))?;
+        out.extend(
+            parse_chrome_trace(&text)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", f.display()))?,
+        );
+    }
+    Ok(out)
+}
+
+/// The background flusher behind `impulse serve --trace-dir`: drains
+/// the recorder every [`FLUSH_INTERVAL`] and writes each non-empty
+/// drain as its own rotation file; [`TraceFlusher::stop`] performs the
+/// final drain so shutdown loses nothing.
+pub struct TraceFlusher {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TraceFlusher {
+    /// Spawn the flusher over `recorder`, rotating into `dir`.
+    pub fn start(recorder: Arc<TraceRecorder>, dir: PathBuf) -> TraceFlusher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut seq = 0u64;
+                loop {
+                    let stopping = stop.load(Ordering::SeqCst);
+                    let spans = recorder.drain();
+                    if !spans.is_empty() {
+                        match write_rotation(&dir, seq, &spans) {
+                            Ok(_) => seq += 1,
+                            Err(e) => {
+                                crate::error!("trace", "rotation write failed err={e:#}");
+                            }
+                        }
+                    }
+                    if stopping {
+                        break;
+                    }
+                    std::thread::sleep(FLUSH_INTERVAL);
+                }
+                let dropped = recorder.dropped();
+                if dropped > 0 {
+                    crate::warn!("trace", "spans dropped at shard cap dropped={dropped}");
+                }
+            })
+        };
+        TraceFlusher { stop, thread: Some(thread) }
+    }
+
+    /// Signal the flusher, wait for its final drain, and join it.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(phase: Phase, trace_id: u64, start: u64, dur: u64) -> Span {
+        Span::new(phase, trace_id, trace_id + 100, 1, start, dur)
+    }
+
+    #[test]
+    fn recorder_drains_what_it_records() {
+        let tr = TraceRecorder::new();
+        assert_eq!(tr.pending(), 0);
+        tr.record(span(Phase::Decode, 1, 10, 5));
+        tr.record(span(Phase::Execute, 1, 20, 7).with_cost(123, 456).with_worker(2, 4));
+        assert_eq!(tr.pending(), 2);
+        let spans = tr.drain();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(tr.pending(), 0, "drain must empty the buffers");
+        assert_eq!(spans[0].phase, Phase::Decode);
+        assert_eq!(spans[1].cycles, 123);
+        assert_eq!(spans[1].energy_fj, 456);
+        assert_eq!(spans[1].worker, 2);
+        assert_eq!(tr.dropped(), 0);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_across_threads() {
+        let tr = Arc::new(TraceRecorder::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let tr = Arc::clone(&tr);
+                std::thread::spawn(move || {
+                    (0..100).map(|_| tr.next_trace_id()).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let mut seen = std::collections::HashSet::new();
+        for h in handles {
+            for id in h.join().unwrap() {
+                assert!(seen.insert(id), "trace id {id} minted twice");
+            }
+        }
+    }
+
+    #[test]
+    fn chrome_export_roundtrips_through_the_parser() {
+        let spans = vec![
+            span(Phase::Decode, 7, 100, 12),
+            span(Phase::Execute, 7, 130, 40).with_cost(999, 1234).with_worker(1, 2),
+            span(Phase::Write, 7, 171, 3).with_ok(false),
+        ];
+        let doc = chrome_trace_json(&spans);
+        let events = parse_chrome_trace(&doc).unwrap();
+        assert_eq!(events.len(), 3);
+        for (e, s) in events.iter().zip(&spans) {
+            assert_eq!(e.ph, "X");
+            assert_eq!(e.name, s.phase.name());
+            assert_eq!(e.ts, s.start_us);
+            assert_eq!(e.dur, s.dur_us);
+            assert_eq!(e.pid, u64::from(std::process::id()));
+            assert_eq!(e.trace_id, 7);
+            assert_eq!(e.cycles, s.cycles);
+            assert_eq!(e.energy_fj, s.energy_fj);
+            assert_eq!(e.ok, s.ok);
+        }
+        // a bare array (foreign tooling) parses too
+        let bare = parse_chrome_trace("[{\"name\":\"x\",\"ph\":\"X\",\"ts\":1}]").unwrap();
+        assert_eq!(bare.len(), 1);
+    }
+
+    #[test]
+    fn rotations_write_and_load_in_sequence() {
+        let dir = std::env::temp_dir().join(format!("impulse-trace-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_rotation(&dir, 0, &[span(Phase::Decode, 1, 5, 2)]).unwrap();
+        write_rotation(&dir, 1, &[span(Phase::Write, 1, 9, 1)]).unwrap();
+        let events = load_trace_dir(&dir).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].name, "decode");
+        assert_eq!(events[1].name, "write");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flusher_rotates_and_final_drains() {
+        let dir = std::env::temp_dir().join(format!("impulse-flush-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let tr = Arc::new(TraceRecorder::new());
+        let flusher = TraceFlusher::start(Arc::clone(&tr), dir.clone());
+        tr.record(span(Phase::Decode, 1, 1, 1));
+        flusher.stop();
+        let events = load_trace_dir(&dir).unwrap();
+        assert_eq!(events.len(), 1, "stop must flush buffered spans");
+        assert_eq!(tr.pending(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shard_cap_drops_instead_of_growing() {
+        let tr = TraceRecorder::new();
+        // all from one thread → one shard; fill it past the cap
+        for i in 0..(SHARD_CAP + 10) {
+            tr.record(span(Phase::Client, i as u64, i as u64, 1));
+        }
+        assert_eq!(tr.pending(), SHARD_CAP);
+        assert_eq!(tr.dropped(), 10);
+    }
+
+    #[test]
+    fn phase_names_roundtrip() {
+        for p in [
+            Phase::Decode,
+            Phase::Queue,
+            Phase::Batch,
+            Phase::Execute,
+            Phase::Write,
+            Phase::StreamAppend,
+            Phase::Client,
+        ] {
+            assert_eq!(Phase::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Phase::from_name("nope"), None);
+    }
+}

@@ -17,11 +17,13 @@
 use crate::bits::XorShiftRng;
 use crate::config::TomlDoc;
 use crate::coordinator::WorkloadInput;
+use crate::obs::trace::{elapsed_us, Phase, Span, TraceRecorder};
 use crate::serve::{FrameClient, ServerError};
 use crate::telemetry::{Transport, TransportStats};
 use crate::Result;
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 pub use crate::telemetry::StatsSnapshot;
@@ -302,7 +304,7 @@ fn random_image(rng: &mut XorShiftRng) -> WorkloadInput {
 /// Run one request connection: `requests_per_conn` one-shot calls in
 /// the scenario's kind mix, then `streams_per_conn` streaming sessions
 /// with random chunk splits.
-fn run_conn(addr: &str, sc: &Scenario, idx: usize) -> Tally {
+fn run_conn(addr: &str, sc: &Scenario, idx: usize, trace: Option<&TraceRecorder>) -> Tally {
     let mut tally = Tally::default();
     let mut rng = XorShiftRng::new(sc.seed ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
     let mut client = match FrameClient::connect(addr) {
@@ -316,13 +318,30 @@ fn run_conn(addr: &str, sc: &Scenario, idx: usize) -> Tally {
         tally.transport += 1;
         return tally;
     }
-    for _ in 0..sc.requests_per_conn {
+    for op in 0..sc.requests_per_conn {
         let input = if rng.gen_f64() < sc.mix_digits {
             random_image(&mut rng)
         } else {
             WorkloadInput::Words(random_words(&mut rng))
         };
+        let t0 = trace.map(|_| Instant::now());
         let outcome = client.call(&input).and_then(|p| client.wait(&p));
+        // one client-side span per one-shot op: wall time from submit
+        // to answer, as this client observed it (conn = generator
+        // thread, request id = op index)
+        if let (Some(tr), Some(t0)) = (trace, t0) {
+            tr.record(
+                Span::new(
+                    Phase::Client,
+                    tr.next_trace_id(),
+                    op as u64,
+                    idx as u64,
+                    tr.us_of(t0),
+                    elapsed_us(t0),
+                )
+                .with_ok(outcome.is_ok()),
+            );
+        }
         tally.count(&outcome);
     }
     for _ in 0..sc.streams_per_conn {
@@ -353,11 +372,27 @@ fn run_conn(addr: &str, sc: &Scenario, idx: usize) -> Tally {
 /// A slow-loris connection: one valid request trickled byte-by-byte.
 /// A correct server answers once the frame completes; its other
 /// clients never notice.
-fn run_slow_loris(addr: &str, sc: &Scenario, idx: usize) -> Tally {
+fn run_slow_loris(addr: &str, sc: &Scenario, idx: usize, trace: Option<&TraceRecorder>) -> Tally {
     let mut tally = Tally::default();
     let mut rng =
         XorShiftRng::new(sc.seed ^ 0x510F ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let t0 = trace.map(|_| Instant::now());
     let outcome = slow_loris_once(addr, &mut rng);
+    // conn ids continue past the request connections so trickle spans
+    // never collide with run_conn's in a Perfetto lane
+    if let (Some(tr), Some(t0)) = (trace, t0) {
+        tr.record(
+            Span::new(
+                Phase::Client,
+                tr.next_trace_id(),
+                0,
+                (sc.connections + idx) as u64,
+                tr.us_of(t0),
+                elapsed_us(t0),
+            )
+            .with_ok(outcome.is_ok()),
+        );
+    }
     tally.count(&outcome);
     tally
 }
@@ -480,6 +515,20 @@ fn tcp_delta(before: &StatsSnapshot, after: &StatsSnapshot) -> Option<TransportS
 /// its envelope. The report's `violations` list is empty on a pass;
 /// the CLI exits nonzero otherwise.
 pub fn run_scenario(addr: &str, scenario: &Scenario) -> Result<LoadgenReport> {
+    run_scenario_traced(addr, scenario, None)
+}
+
+/// [`run_scenario`] with client-side span recording: each one-shot
+/// request and slow-loris trickle records one `client` phase span
+/// (submit → answer, as this generator observed it). Pass `None` for
+/// the untraced behavior; the caller owns exporting the recorder
+/// (`impulse loadgen --trace-dir`). Fuzz shots are not traced — their
+/// timing measures the mutation schedule, not the server.
+pub fn run_scenario_traced(
+    addr: &str,
+    scenario: &Scenario,
+    trace: Option<Arc<TraceRecorder>>,
+) -> Result<LoadgenReport> {
     let mut stats_client = FrameClient::connect(addr)
         .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e} (is `impulse serve` up?)"))?;
     stats_client.hello()?;
@@ -490,19 +539,23 @@ pub fn run_scenario(addr: &str, scenario: &Scenario) -> Result<LoadgenReport> {
     for idx in 0..scenario.connections {
         let addr = addr.to_string();
         let sc = scenario.clone();
+        let trace = trace.clone();
         threads.push(std::thread::spawn(move || {
             if sc.ramp_ms > 0 && sc.connections > 1 {
                 // stagger starts across the ramp window
                 let delay = sc.ramp_ms * idx as u64 / sc.connections as u64;
                 std::thread::sleep(Duration::from_millis(delay));
             }
-            run_conn(&addr, &sc, idx)
+            run_conn(&addr, &sc, idx, trace.as_deref())
         }));
     }
     for idx in 0..scenario.slow_loris {
         let addr = addr.to_string();
         let sc = scenario.clone();
-        threads.push(std::thread::spawn(move || run_slow_loris(&addr, &sc, idx)));
+        let trace = trace.clone();
+        threads.push(std::thread::spawn(move || {
+            run_slow_loris(&addr, &sc, idx, trace.as_deref())
+        }));
     }
     if scenario.fuzz_frames > 0 {
         let addr = addr.to_string();

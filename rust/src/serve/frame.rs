@@ -42,23 +42,32 @@ pub const MAX_PAYLOAD: usize = 1 << 20;
 // ---------------------------------------------------------------------
 //
 // v1 reserved the word as all-zero. The telemetry subsystem defines
-// the first (and so far only) nonzero use: when bit 15 is set, the
-// word is a backpressure advertisement on a server→client frame. Any
-// other nonzero pattern is still rejected as Malformed, and servers
-// only emit nonzero flags to clients that negotiated the capability in
-// their Hello — so all-zero v1 traffic is preserved byte-for-byte.
+// the first nonzero use: when bit 15 is set, the word is a telemetry
+// flags word — a backpressure advertisement on server→client frames,
+// or (bit 13, tracing) a trace-echo request on client→server infer
+// frames. Any pattern without bit 15 is still rejected as Malformed,
+// and nonzero flags only flow between peers that negotiated the
+// matching capability in their Hello — so all-zero v1 traffic is
+// preserved byte-for-byte.
 
-/// Flags bit 15: the word carries a telemetry/backpressure
-/// advertisement (server→client only; negotiated via Hello caps).
+/// Flags bit 15: the word carries a telemetry flags word (negotiated
+/// via Hello caps; without this bit, nonzero flags are Malformed).
 pub const FLAG_TELEMETRY: u16 = 0x8000;
 
 /// Flags bit 14: the server's queue depth is at or over its soft
 /// limit — clients should slow their submission rate.
 pub const FLAG_SOFT_LIMIT: u16 = 0x4000;
 
-/// Flags bits 0–13: the server's queue depth, saturating at
+/// Flags bit 13: trace echo. On a client→server infer request (from a
+/// connection that negotiated `CAP_TRACE_ECHO`), asks the server to
+/// append its per-phase timing breakdown to the response payload; on
+/// the server→client response, marks that the trailer is present. See
+/// `docs/OBSERVABILITY.md`.
+pub const FLAG_TRACE_ECHO: u16 = 0x2000;
+
+/// Flags bits 0–12: the server's queue depth, saturating at
 /// [`FLAG_DEPTH_MASK`].
-pub const FLAG_DEPTH_MASK: u16 = 0x3FFF;
+pub const FLAG_DEPTH_MASK: u16 = 0x1FFF;
 
 /// A decoded backpressure advertisement from a frame's flags word.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -15,13 +15,17 @@
 //!
 //! [`ClientSession`]: super::ClientSession
 
-use super::frame::{encode_backpressure, ErrorCode, Frame, FrameReader, PayloadType, WireError};
+use super::frame::{
+    encode_backpressure, ErrorCode, Frame, FrameReader, PayloadType, WireError, FLAG_TRACE_ECHO,
+};
 use super::session::{
-    decode_digits_request, decode_infer_request, decode_stream_append, decode_stream_ref,
-    encode_stats_response, encode_stream_ack, error_frame, negotiate, response_frame, ServeCore,
-    WireDigitsResponse, WirePayload, WireResponse, CAP_BACKPRESSURE,
+    attach_trace_echo, decode_digits_request, decode_infer_request, decode_stream_append,
+    decode_stream_ref, encode_stats_response, encode_stream_ack, error_frame, negotiate,
+    response_frame, ServeCore, WireDigitsResponse, WirePayload, WireResponse, CAP_BACKPRESSURE,
+    CAP_TRACE_ECHO,
 };
 use crate::coordinator::{WorkloadInput, WorkloadKind};
+use crate::obs::trace::{elapsed_us, Phase, Span, TraceCtx, TraceRecorder};
 use crate::replay::{Recorder, TapRead};
 use crate::telemetry::{Telemetry, Transport};
 use crate::Result;
@@ -106,7 +110,7 @@ pub fn serve_tcp(addr: &str, core: Arc<ServeCore>) -> Result<TcpServeHandle> {
                         let stop = Arc::clone(&stop);
                         conns.push(std::thread::spawn(move || {
                             if let Err(e) = handle_conn(stream, &core, &stop) {
-                                eprintln!("impulse serve: connection error: {e:#}");
+                                crate::error!("serve", "connection error: {e:#}");
                             }
                         }));
                         conns.retain(|h| !h.is_finished());
@@ -118,7 +122,7 @@ pub fn serve_tcp(addr: &str, core: Arc<ServeCore>) -> Result<TcpServeHandle> {
                         std::thread::sleep(Duration::from_millis(20));
                     }
                     Err(e) => {
-                        eprintln!("impulse serve: accept failed: {e}");
+                        crate::error!("serve", "accept failed: {e}");
                         break;
                     }
                 }
@@ -141,17 +145,46 @@ pub fn serve_tcp(addr: &str, core: Arc<ServeCore>) -> Result<TcpServeHandle> {
 struct ConnWriter {
     stream: Arc<Mutex<TcpStream>>,
     tap: Option<(Arc<Recorder>, u64)>,
+    /// Span recorder + this connection's id, for write spans (lock
+    /// wait included — writer-lock contention is part of the phase).
+    trace: Option<(Arc<TraceRecorder>, u64)>,
 }
 
 impl ConnWriter {
     fn write(&self, f: &Frame) -> std::io::Result<()> {
+        self.write_inner(f, None)
+    }
+
+    /// Write a response frame, recording the write span under the
+    /// request's `trace_id` when tracing is on.
+    fn write_traced(&self, f: &Frame, trace_id: u64) -> std::io::Result<()> {
+        self.write_inner(f, Some(trace_id))
+    }
+
+    fn write_inner(&self, f: &Frame, span: Option<u64>) -> std::io::Result<()> {
         use std::io::Write;
         let bytes = f.encode();
+        let t0 = if self.trace.is_some() && span.is_some() { Some(Instant::now()) } else { None };
         let mut g = self.stream.lock().expect("writer poisoned");
         if let Some((rec, conn)) = &self.tap {
             rec.frame_out(*conn, &bytes);
         }
-        g.write_all(&bytes)
+        let res = g.write_all(&bytes);
+        drop(g);
+        if let (Some((tr, conn)), Some(trace_id), Some(t0)) = (&self.trace, span, t0) {
+            tr.record(
+                Span::new(
+                    Phase::Write,
+                    trace_id,
+                    f.request_id,
+                    *conn,
+                    tr.us_of(t0),
+                    elapsed_us(t0),
+                )
+                .with_ok(res.is_ok()),
+            );
+        }
+        res
     }
 
     fn shutdown_write(&self) {
@@ -159,6 +192,12 @@ impl ConnWriter {
             let _ = g.shutdown(Shutdown::Write);
         }
     }
+}
+
+/// Write one reader-side frame (acks and inline errors) through the
+/// shared writer; these are not response frames, so no write span.
+fn write_frame(writer: &ConnWriter, f: &Frame) -> std::io::Result<()> {
+    writer.write(f)
 }
 
 /// The flags word for the next server→client frame: a live
@@ -185,9 +224,14 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
     // decoder, outbound frames under the write lock, V-digests per
     // answered request — all keyed by this connection id
     let recorder = core.recorder().map(|r| (r, conn_id));
+    // per-request lifecycle tracing (docs/OBSERVABILITY.md): decode
+    // spans are recorded here in the reader, write spans in the
+    // responder via the shared writer
+    let trace = core.trace().cloned();
     let writer = ConnWriter {
         stream: Arc::new(Mutex::new(stream.try_clone()?)),
         tap: recorder.clone(),
+        trace: trace.clone().map(|t| (t, conn_id)),
     };
     let done = Arc::new(AtomicBool::new(false));
     let outstanding = Arc::new(AtomicU64::new(0));
@@ -212,8 +256,17 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
                         if let (Some((rec, conn)), Some(d)) = (&recorder, r.v_digest) {
                             rec.digest(*conn, r.id, d);
                         }
-                        let f = response_frame(&r).with_flags(frame_flags(&backpressure, &tele));
-                        if writer.write(&f).is_err() {
+                        let mut f = response_frame(&r);
+                        let mut flags = frame_flags(&backpressure, &tele);
+                        if let Some(s) = r.trace.as_ref().filter(|s| s.echo) {
+                            flags |= attach_trace_echo(&mut f, s);
+                        }
+                        let f = f.with_flags(flags);
+                        let wrote = match r.trace.as_ref() {
+                            Some(s) => writer.write_traced(&f, s.trace_id),
+                            None => writer.write(&f),
+                        };
+                        if wrote.is_err() {
                             break;
                         }
                     }
@@ -240,6 +293,9 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
     // traffic is captured verbatim, exactly as it arrived
     let mut reader = FrameReader::new(TapRead::new(stream, recorder.clone()));
     let mut negotiated = super::frame::PROTOCOL_VERSION; // implicit v1 until Hello
+    // whether this client negotiated the trace-echo capability (only
+    // the reader consults it, so no cross-thread sharing needed)
+    let mut trace_echo_cap = false;
     loop {
         if stop.load(Ordering::SeqCst) {
             break;
@@ -263,6 +319,7 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
                 Ok(n) => {
                     negotiated = n.version;
                     backpressure.store(n.caps & CAP_BACKPRESSURE != 0, Ordering::Relaxed);
+                    trace_echo_cap = n.caps & CAP_TRACE_ECHO != 0;
                     // a 2-byte v1 hello gets the pinned 1-byte ack; an
                     // extended hello gets [version, granted caps]
                     let ack_payload = if frame.payload.len() == 3 {
@@ -328,6 +385,7 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
                     continue;
                 }
                 // decode per payload type into the workload-tagged input
+                let t_dec = trace.as_deref().map(|_| Instant::now());
                 let input = match frame.payload_type {
                     PayloadType::InferRequest => match decode_infer_request(&frame.payload) {
                         Ok(ids) if ids.is_empty() => {
@@ -361,11 +419,35 @@ fn handle_conn(stream: TcpStream, core: &ServeCore, stop: &Arc<AtomicBool>) -> R
                         }
                     },
                 };
+                // decode span: payload decode only — socket wait is
+                // idle time, not part of any request's lifecycle
+                let ctx = match (trace.as_deref(), t_dec) {
+                    (Some(tr), Some(t_dec)) => {
+                        let trace_id = tr.next_trace_id();
+                        let decode_us = elapsed_us(t_dec);
+                        tr.record(Span::new(
+                            Phase::Decode,
+                            trace_id,
+                            frame.request_id,
+                            conn_id,
+                            tr.us_of(t_dec),
+                            decode_us,
+                        ));
+                        Some(TraceCtx {
+                            trace_id,
+                            conn: conn_id,
+                            request_id: frame.request_id,
+                            decode_us,
+                            echo: trace_echo_cap && frame.flags & FLAG_TRACE_ECHO != 0,
+                        })
+                    }
+                    _ => None,
+                };
                 // count before submitting: the response may land (and
                 // be decremented by the responder) the instant submit
                 // returns
                 outstanding.fetch_add(1, Ordering::SeqCst);
-                match sender.submit_input(frame.request_id, input) {
+                match sender.submit_input_traced(frame.request_id, input, ctx) {
                     Ok(()) => {}
                     Err(e) => {
                         outstanding.fetch_sub(1, Ordering::SeqCst);

@@ -43,21 +43,22 @@ pub mod stream;
 pub use frame::{
     crc32, decode_backpressure, encode_backpressure, Backpressure, Decoded, ErrorCode, Frame,
     FrameReader, PayloadType, WireError, CRC_LEN, FLAG_DEPTH_MASK, FLAG_SOFT_LIMIT,
-    FLAG_TELEMETRY, HEADER_LEN, MAGIC, MAX_PAYLOAD, PROTOCOL_VERSION,
+    FLAG_TELEMETRY, FLAG_TRACE_ECHO, HEADER_LEN, MAGIC, MAX_PAYLOAD, PROTOCOL_VERSION,
 };
 pub use listener::{serve_tcp, TcpServeHandle};
 pub use session::{
-    decode_digits_request, decode_digits_response, decode_error, decode_infer_request,
-    decode_infer_response, decode_stats_response, decode_stream_ack, decode_stream_append,
-    decode_stream_ref, encode_digits_request, encode_infer_request, encode_stats_request,
-    encode_stats_response, encode_stream_ack, encode_stream_append, encode_stream_ref,
-    error_frame, error_payload, hello_caps_payload, hello_payload, negotiate, response_frame,
-    ClientSession, FrameClient, ImagePayload, Negotiated, Pacer, PayloadError, Pending,
-    ServeCore, ServerError, SessionSender, StreamAppendPayload, StreamClosePayload,
-    StreamHandle, StreamOpenPayload, StreamReadOutPayload, WireDigitsResponse, WirePayload,
-    WireResponse, WireStreamAck, WordsPayload, CAP_BACKPRESSURE, MAX_WORDS_PER_REQUEST,
+    attach_trace_echo, decode_digits_request, decode_digits_response, decode_error,
+    decode_infer_request, decode_infer_response, decode_stats_response, decode_stream_ack,
+    decode_stream_append, decode_stream_ref, encode_digits_request, encode_infer_request,
+    encode_stats_request, encode_stats_response, encode_stream_ack, encode_stream_append,
+    encode_stream_ref, encode_trace_echo, error_frame, error_payload, hello_caps_payload,
+    hello_payload, negotiate, response_frame, split_trace_echo, ClientSession, FrameClient,
+    ImagePayload, Negotiated, Pacer, PayloadError, Pending, ServeCore, ServerError,
+    SessionSender, StreamAppendPayload, StreamClosePayload, StreamHandle, StreamOpenPayload,
+    StreamReadOutPayload, TraceEcho, WireDigitsResponse, WirePayload, WireResponse,
+    WireStreamAck, WordsPayload, CAP_BACKPRESSURE, CAP_TRACE_ECHO, MAX_WORDS_PER_REQUEST,
     STREAM_KIND_IMAGE, STREAM_KIND_WORDS, STREAM_OP_APPEND, STREAM_OP_CLOSE, STREAM_OP_OPEN,
-    SUPPORTED_CAPS,
+    SUPPORTED_CAPS, TRACE_ECHO_LEN,
 };
 pub use signal::{install_shutdown_handler, shutdown_requested};
 pub use stream::{EngineFactory, StreamError, StreamTable};

@@ -88,9 +88,17 @@ pub struct WireResponse {
 /// bit) into the flags word of its frames on this connection.
 pub const CAP_BACKPRESSURE: u8 = 0x01;
 
+/// Capability bit a client may request in an extended `Hello`: infer
+/// requests on this connection may set
+/// [`super::frame::FLAG_TRACE_ECHO`], asking the server to append its
+/// per-phase timing breakdown ([`TraceEcho`]) to the response payload.
+/// The server only honours the echo when it is itself tracing
+/// (`--trace-dir`) — otherwise no measurements exist to echo.
+pub const CAP_TRACE_ECHO: u8 = 0x02;
+
 /// All capability bits this server grants; unknown requested bits are
 /// masked off in the `HelloAck`, never granted.
-pub const SUPPORTED_CAPS: u8 = CAP_BACKPRESSURE;
+pub const SUPPORTED_CAPS: u8 = CAP_BACKPRESSURE | CAP_TRACE_ECHO;
 
 /// Outcome of a successful `Hello` negotiation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -573,6 +581,89 @@ pub fn decode_infer_response(
 }
 
 // ---------------------------------------------------------------------
+// Trace echo (docs/OBSERVABILITY.md)
+// ---------------------------------------------------------------------
+
+/// Length of the trace-echo trailer a server appends to a successful
+/// infer response when the request asked for it: four u32 phase
+/// durations, big-endian.
+pub const TRACE_ECHO_LEN: usize = 16;
+
+/// The server-side timing breakdown echoed on a response, in
+/// microseconds per phase (each saturating at `u32::MAX`). The write
+/// phase is absent by construction — it has not happened yet when the
+/// response is encoded.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceEcho {
+    /// Frame + payload decode in the listener.
+    pub decode_us: u32,
+    /// Queue wait from submit until batch pickup.
+    pub queue_us: u32,
+    /// Batch formation until a worker began executing.
+    pub batch_us: u32,
+    /// Engine execution of the request's batch.
+    pub execute_us: u32,
+}
+
+/// Encode a [`TraceEcho`] trailer ([`TRACE_ECHO_LEN`] bytes).
+pub fn encode_trace_echo(e: &TraceEcho) -> [u8; TRACE_ECHO_LEN] {
+    let mut out = [0u8; TRACE_ECHO_LEN];
+    out[0..4].copy_from_slice(&e.decode_us.to_be_bytes());
+    out[4..8].copy_from_slice(&e.queue_us.to_be_bytes());
+    out[8..12].copy_from_slice(&e.batch_us.to_be_bytes());
+    out[12..16].copy_from_slice(&e.execute_us.to_be_bytes());
+    out
+}
+
+/// Split a response payload into its body and (when the frame's flags
+/// carry [`super::frame::FLAG_TRACE_ECHO`] and the payload is long
+/// enough) the decoded trace-echo trailer. Payloads without the flag
+/// pass through untouched — the body codecs never see the trailer.
+pub fn split_trace_echo(flags: u16, payload: &[u8]) -> (&[u8], Option<TraceEcho>) {
+    use super::frame::{FLAG_TELEMETRY, FLAG_TRACE_ECHO};
+    let flagged = flags & FLAG_TELEMETRY != 0 && flags & FLAG_TRACE_ECHO != 0;
+    if !flagged || payload.len() < TRACE_ECHO_LEN {
+        return (payload, None);
+    }
+    let at = payload.len() - TRACE_ECHO_LEN;
+    let t = &payload[at..];
+    let u32_at = |o: usize| u32::from_be_bytes([t[o], t[o + 1], t[o + 2], t[o + 3]]);
+    (
+        &payload[..at],
+        Some(TraceEcho {
+            decode_us: u32_at(0),
+            queue_us: u32_at(4),
+            batch_us: u32_at(8),
+            execute_us: u32_at(12),
+        }),
+    )
+}
+
+/// Saturate a µs count into the u32 the echo trailer carries.
+fn echo_us(us: u64) -> u32 {
+    us.min(u32::MAX as u64) as u32
+}
+
+/// Append the trace-echo trailer to a *successful* response frame and
+/// mark it in the flags word. Error frames are left untouched (their
+/// codec rejects trailing bytes on older clients). Returns the flag
+/// bits to OR into the frame's flags word.
+pub fn attach_trace_echo(f: &mut Frame, s: &crate::obs::trace::TraceSummary) -> u16 {
+    use super::frame::{FLAG_TELEMETRY, FLAG_TRACE_ECHO};
+    if f.payload_type == PayloadType::Error {
+        return 0;
+    }
+    let echo = TraceEcho {
+        decode_us: echo_us(s.decode_us),
+        queue_us: echo_us(s.queue_us),
+        batch_us: echo_us(s.batch_us),
+        execute_us: echo_us(s.execute_us),
+    };
+    f.payload.extend_from_slice(&encode_trace_echo(&echo));
+    FLAG_TELEMETRY | FLAG_TRACE_ECHO
+}
+
+// ---------------------------------------------------------------------
 // Stream session payloads (docs/PROTOCOL.md §4.10–4.14)
 // ---------------------------------------------------------------------
 
@@ -1044,6 +1135,7 @@ pub struct ServeCore {
     streams: Arc<StreamTable>,
     next_conn: AtomicU64,
     recorder: Mutex<Option<Arc<crate::replay::Recorder>>>,
+    trace: Option<Arc<crate::obs::trace::TraceRecorder>>,
 }
 
 impl ServeCore {
@@ -1070,6 +1162,9 @@ impl ServeCore {
                 t
             }
         };
+        // tracing stays None unless the caller wired a recorder — the
+        // disabled path must stay bit-identical to a build without it
+        let trace = opts.trace.clone();
         let factory = Arc::new(factory);
         let streams = Arc::new(StreamTable::new(
             {
@@ -1080,6 +1175,7 @@ impl ServeCore {
             opts.stream_ttl,
             vocab,
             Arc::clone(&telemetry),
+            trace.clone(),
         ));
         let server = InferenceServer::start_with(opts, move || factory())?;
         let submitter = server.submitter();
@@ -1122,6 +1218,7 @@ impl ServeCore {
             streams,
             next_conn: AtomicU64::new(1),
             recorder: Mutex::new(None),
+            trace,
         })
     }
 
@@ -1157,6 +1254,13 @@ impl ServeCore {
     /// backpressure flags word are answered from.
     pub fn telemetry(&self) -> &Arc<Telemetry> {
         &self.telemetry
+    }
+
+    /// The span recorder wired through [`ServerOptions::trace`], if
+    /// any. Transports clone it per connection; `None` means tracing
+    /// is off and every chokepoint takes its single disabled branch.
+    pub fn trace(&self) -> Option<&Arc<crate::obs::trace::TraceRecorder>> {
+        self.trace.as_ref()
     }
 
     /// Open a session (one logical client). Sessions may live on any
@@ -1224,6 +1328,20 @@ impl SessionSender {
     /// normalization applied: word ids clamped into `[0, vocab)`,
     /// image shapes validated.
     pub fn submit_input(&self, external_id: u64, input: WorkloadInput) -> Result<()> {
+        self.submit_input_traced(external_id, input, None)
+    }
+
+    /// [`SessionSender::submit_input`] with a trace context attached:
+    /// the coordinator's queue/batch/execute spans are recorded under
+    /// `trace.trace_id` and the timing summary rides back on the
+    /// [`Response`]. `None` is the untraced path, bit-identical to
+    /// [`SessionSender::submit_input`].
+    pub fn submit_input_traced(
+        &self,
+        external_id: u64,
+        input: WorkloadInput,
+        trace: Option<crate::obs::trace::TraceCtx>,
+    ) -> Result<()> {
         let input = match input {
             WorkloadInput::Words(ids) => {
                 anyhow::ensure!(!ids.is_empty(), "request {external_id}: no word ids");
@@ -1257,7 +1375,7 @@ impl SessionSender {
                 }),
             },
         );
-        match self.submitter.submit(Request { id: internal, input }) {
+        match self.submitter.submit(Request { id: internal, input, trace }) {
             Ok(()) => Ok(()),
             Err(e) => {
                 self.pending.lock().expect("pending poisoned").remove(&internal);
@@ -1352,30 +1470,43 @@ impl StreamHandle {
 }
 
 /// Decode a typed-surface response frame into a [`WorkloadOutput`]
+/// plus the trace-echo trailer when the frame carries one
 /// (`InferResponse` or `DigitsInferResponse`); `Error` frames bail
 /// with a downcastable [`ServerError`].
-fn decode_output(f: &Frame) -> Result<WorkloadOutput> {
+fn decode_output_traced(f: &Frame) -> Result<(WorkloadOutput, Option<TraceEcho>)> {
+    let (body, echo) = split_trace_echo(f.flags, &f.payload);
     match f.payload_type {
         PayloadType::InferResponse => {
-            let r = WireResponse::decode(&f.payload).map_err(anyhow::Error::from)?;
-            Ok(WorkloadOutput {
-                pred: r.pred,
-                v_out: r.v_out,
-                v_all: vec![r.v_out],
-                cycles: r.cycles,
-            })
+            let r = WireResponse::decode(body).map_err(anyhow::Error::from)?;
+            Ok((
+                WorkloadOutput {
+                    pred: r.pred,
+                    v_out: r.v_out,
+                    v_all: vec![r.v_out],
+                    cycles: r.cycles,
+                },
+                echo,
+            ))
         }
         PayloadType::DigitsInferResponse => {
-            let r = WireDigitsResponse::decode(&f.payload).map_err(anyhow::Error::from)?;
+            let r = WireDigitsResponse::decode(body).map_err(anyhow::Error::from)?;
             let v_out = r.v_all.get(r.pred as usize).copied().unwrap_or_default();
-            Ok(WorkloadOutput { pred: r.pred, v_out, v_all: r.v_all, cycles: r.cycles })
+            Ok((WorkloadOutput { pred: r.pred, v_out, v_all: r.v_all, cycles: r.cycles }, echo))
         }
         PayloadType::Error => {
+            // error frames never carry the trailer (attach_trace_echo
+            // skips them), so decode the payload as sent
             let e = ServerError::decode(&f.payload).map_err(anyhow::Error::from)?;
             Err(anyhow::Error::new(e))
         }
         other => anyhow::bail!("unexpected frame type {other:?} for request {}", f.request_id),
     }
+}
+
+/// Decode a typed-surface response frame, dropping any trace-echo
+/// trailer.
+fn decode_output(f: &Frame) -> Result<WorkloadOutput> {
+    decode_output_traced(f).map(|(out, _)| out)
 }
 
 /// A blocking TCP client for the framed protocol — used by the
@@ -1393,6 +1524,7 @@ pub struct FrameClient {
     next_id: u64,
     stash: HashMap<u64, Frame>,
     pacer: Option<Pacer>,
+    trace_echo: bool,
 }
 
 impl FrameClient {
@@ -1407,6 +1539,7 @@ impl FrameClient {
             next_id: 1,
             stash: HashMap::new(),
             pacer: None,
+            trace_echo: false,
         })
     }
 
@@ -1449,6 +1582,17 @@ impl FrameClient {
         self.pacer.map(|p| p.delay()).unwrap_or(Duration::ZERO)
     }
 
+    /// Ask the server to echo its per-phase timing breakdown on every
+    /// subsequent [`FrameClient::call`] response. Negotiate
+    /// [`CAP_TRACE_ECHO`] first (via [`FrameClient::hello_with_caps`])
+    /// — without the grant the server ignores the request flag — and
+    /// read the echo back with [`FrameClient::wait_with_trace`]. The
+    /// echo is only populated when the server itself is tracing
+    /// (`--trace-dir`).
+    pub fn set_trace_echo(&mut self, on: bool) {
+        self.trace_echo = on;
+    }
+
     /// Submit one request of any workload kind on the typed surface.
     /// Assigns a request id, writes the matching wire payload (words →
     /// `InferRequest`, image → `DigitsInferRequest`), and returns a
@@ -1471,7 +1615,12 @@ impl FrameClient {
                 encode_digits_request(*h, *w, pixels).map_err(anyhow::Error::from)?,
             ),
         };
-        Frame::new(ty, id, payload).write_to(&mut self.w)?;
+        let mut f = Frame::new(ty, id, payload);
+        if self.trace_echo {
+            use super::frame::{FLAG_TELEMETRY, FLAG_TRACE_ECHO};
+            f = f.with_flags(FLAG_TELEMETRY | FLAG_TRACE_ECHO);
+        }
+        f.write_to(&mut self.w)?;
         Ok(Pending { id, _out: std::marker::PhantomData })
     }
 
@@ -1482,6 +1631,18 @@ impl FrameClient {
     pub fn wait(&mut self, pending: &Pending<WorkloadOutput>) -> Result<WorkloadOutput> {
         let f = self.frame_for(pending.id)?;
         decode_output(&f)
+    }
+
+    /// Like [`FrameClient::wait`], but also returns the trace-echo
+    /// trailer when the response carries one (requires
+    /// [`FrameClient::set_trace_echo`] and a [`CAP_TRACE_ECHO`] grant;
+    /// `None` when the server is not tracing).
+    pub fn wait_with_trace(
+        &mut self,
+        pending: &Pending<WorkloadOutput>,
+    ) -> Result<(WorkloadOutput, Option<TraceEcho>)> {
+        let f = self.frame_for(pending.id)?;
+        decode_output_traced(&f)
     }
 
     /// Read frames until `id`'s response shows up, stashing frames
@@ -1846,6 +2007,7 @@ mod tests {
             batch_size: 4,
             err: None,
             v_digest: None,
+            trace: None,
         };
         let f = response_frame(&r);
         assert_eq!(f.payload_type, PayloadType::DigitsInferResponse);
@@ -1998,6 +2160,7 @@ mod tests {
             batch_size: 3,
             err: None,
             v_digest: None,
+            trace: None,
         };
         let f = response_frame(&ok);
         assert_eq!(f.payload_type, PayloadType::InferResponse);
@@ -2088,6 +2251,83 @@ mod tests {
 
         let ack = WireStreamAck { op: STREAM_OP_OPEN, stream_id: 1, lane: 0, cycles: 0 };
         assert_eq!(ack.frame(1).unwrap().payload_type, PayloadType::StreamAck);
+    }
+
+    #[test]
+    fn trace_echo_trailer_roundtrips_and_gates_on_flags() {
+        use super::super::frame::{FLAG_TELEMETRY, FLAG_TRACE_ECHO};
+        use crate::obs::trace::TraceSummary;
+
+        let ok = Response {
+            id: 4,
+            kind: WorkloadKind::Sentiment,
+            pred: 1,
+            v_out: -17,
+            v_all: vec![-17],
+            cycles: 42,
+            latency: Duration::from_micros(181),
+            worker: 2,
+            batch_size: 3,
+            err: None,
+            v_digest: None,
+            trace: None,
+        };
+        let summary = TraceSummary {
+            trace_id: 9,
+            decode_us: 5,
+            queue_us: 120,
+            batch_us: 40,
+            execute_us: 800,
+            echo: true,
+        };
+        let mut f = response_frame(&ok);
+        let body_len = f.payload.len();
+        let bits = attach_trace_echo(&mut f, &summary);
+        assert_eq!(bits, FLAG_TELEMETRY | FLAG_TRACE_ECHO);
+        assert_eq!(f.payload.len(), body_len + TRACE_ECHO_LEN);
+        let f = f.with_flags(bits);
+
+        let (body, echo) = split_trace_echo(f.flags, &f.payload);
+        assert_eq!(body.len(), body_len);
+        assert_eq!(
+            echo,
+            Some(TraceEcho { decode_us: 5, queue_us: 120, batch_us: 40, execute_us: 800 })
+        );
+        // the stripped body still decodes as a plain response
+        assert_eq!(decode_infer_response(body).unwrap().cycles, 42);
+        // and the typed decode path strips it too
+        let (out, echo2) = decode_output_traced(&f).unwrap();
+        assert_eq!(out.cycles, 42);
+        assert_eq!(echo2, echo);
+
+        // without the flag the payload passes through untouched, even
+        // if it happens to be ≥ 16 bytes
+        let (body, none) = split_trace_echo(0, &f.payload);
+        assert_eq!(body.len(), f.payload.len());
+        assert_eq!(none, None);
+        // a backpressure-only flags word does not strip either
+        let bp = super::super::frame::encode_backpressure(3, true);
+        assert_eq!(split_trace_echo(bp, &f.payload).1, None);
+
+        // error frames never gain a trailer
+        let bad = Response { err: Some("boom".into()), ..ok };
+        let mut ef = response_frame(&bad);
+        let elen = ef.payload.len();
+        assert_eq!(attach_trace_echo(&mut ef, &summary), 0);
+        assert_eq!(ef.payload.len(), elen);
+    }
+
+    #[test]
+    fn trace_echo_cap_is_granted_and_masked() {
+        assert_eq!(SUPPORTED_CAPS, CAP_BACKPRESSURE | CAP_TRACE_ECHO);
+        assert_eq!(
+            negotiate(&hello_caps_payload(1, 1, CAP_TRACE_ECHO)).unwrap().caps,
+            CAP_TRACE_ECHO
+        );
+        assert_eq!(
+            negotiate(&hello_caps_payload(1, 1, CAP_BACKPRESSURE)).unwrap().caps,
+            CAP_BACKPRESSURE
+        );
     }
 
     #[test]

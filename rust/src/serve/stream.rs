@@ -33,6 +33,7 @@
 use super::frame::ErrorCode;
 use super::session::{WireStreamAck, STREAM_OP_APPEND, STREAM_OP_CLOSE, STREAM_OP_OPEN};
 use crate::coordinator::{Workload, WorkloadInput, WorkloadKind, WorkloadOutput};
+use crate::obs::trace::{elapsed_us, Phase, Span, TraceRecorder};
 use crate::telemetry::Telemetry;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -98,6 +99,7 @@ pub struct StreamTable {
     ttl: Duration,
     vocab: i64,
     telemetry: Arc<Telemetry>,
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 impl std::fmt::Debug for StreamTable {
@@ -120,6 +122,7 @@ impl StreamTable {
         ttl: Duration,
         vocab: i64,
         telemetry: Arc<Telemetry>,
+        trace: Option<Arc<TraceRecorder>>,
     ) -> StreamTable {
         StreamTable {
             inner: Mutex::new(TableInner { lanes: Vec::new(), by_key: HashMap::new() }),
@@ -128,6 +131,7 @@ impl StreamTable {
             ttl,
             vocab,
             telemetry,
+            trace,
         }
     }
 
@@ -198,6 +202,7 @@ impl StreamTable {
         stream_id: u64,
         chunk: &WorkloadInput,
     ) -> Result<WireStreamAck, StreamError> {
+        let t0 = self.trace.as_deref().map(|_| Instant::now());
         let chunk = self.normalize(chunk);
         let mut t = self.lock();
         self.sweep_locked(&mut t, Instant::now());
@@ -211,6 +216,7 @@ impl StreamTable {
                 t.lanes[lane].owner = None;
                 t.by_key.remove(&key);
                 self.telemetry.record_stream_closed();
+                self.record_append_span(conn, stream_id, t0, 0, false);
                 return Err(StreamError::new(
                     ErrorCode::InferenceFailed,
                     format!("stream append failed: {e:#}"),
@@ -223,7 +229,36 @@ impl StreamTable {
         owner.cycles = cycles;
         self.telemetry.record_stream_append();
         self.telemetry.record_input(&chunk);
+        drop(t);
+        self.record_append_span(conn, stream_id, t0, cycles, true);
         Ok(WireStreamAck { op: STREAM_OP_APPEND, stream_id, lane: lane as u16, cycles })
+    }
+
+    /// Record one stream-append span (`request_id` = the stream id,
+    /// `cycles` = the session's cumulative cycles at ack time). A
+    /// no-op when tracing is off.
+    fn record_append_span(
+        &self,
+        conn: u64,
+        stream_id: u64,
+        t0: Option<Instant>,
+        cycles: u64,
+        ok: bool,
+    ) {
+        if let (Some(tr), Some(t0)) = (self.trace.as_deref(), t0) {
+            tr.record(
+                Span::new(
+                    Phase::StreamAppend,
+                    tr.next_trace_id(),
+                    stream_id,
+                    conn,
+                    tr.us_of(t0),
+                    elapsed_us(t0),
+                )
+                .with_cost(cycles, 0)
+                .with_ok(ok),
+            );
+        }
     }
 
     /// Read the current prediction out of a live stream without ending
@@ -419,6 +454,7 @@ mod tests {
             ttl,
             100,
             Arc::new(Telemetry::new(TelemetryConfig::default())),
+            None,
         )
     }
 

@@ -2,10 +2,13 @@
 //!
 //! A dedicated thread serves the registry in the Prometheus text
 //! format (version 0.0.4) over bare HTTP — no dependencies, no TLS,
-//! one short-lived connection per scrape. Any `GET` path answers with
-//! the full metrics page ([`StatsSnapshot::to_prometheus`]); anything
-//! else is answered `400` and closed. This endpoint is for scrapers
-//! and `curl`; the request/response path for programs is the
+//! one short-lived connection per scrape. `GET /healthz` answers a
+//! bare `200 ok` for load-balancer liveness probes; any other `GET`
+//! path answers with the full metrics page
+//! ([`StatsSnapshot::to_prometheus`] plus the
+//! `impulse_build_info{version,git_rev}` gauge); anything else is
+//! answered `400` and closed. This endpoint is for scrapers and
+//! `curl`; the request/response path for programs is the
 //! `StatsRequest`/`StatsResponse` frames of the binary protocol.
 //!
 //! [`StatsSnapshot::to_prometheus`]: super::StatsSnapshot::to_prometheus
@@ -15,7 +18,7 @@ use crate::Result;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
 /// A running metrics exposition endpoint.
@@ -65,7 +68,7 @@ pub fn serve_metrics(addr: &str, telemetry: Arc<Telemetry>) -> Result<MetricsHan
                         std::thread::sleep(Duration::from_millis(20));
                     }
                     Err(e) => {
-                        eprintln!("impulse metrics: accept failed: {e}");
+                        crate::error!("metrics", "accept failed: {e}");
                         break;
                     }
                 }
@@ -92,11 +95,19 @@ fn answer_scrape(mut stream: TcpStream, telemetry: &Telemetry) -> std::io::Resul
         }
     }
     let is_get = head.starts_with(b"GET ");
-    let (status, body) = if is_get {
+    let path = request_path(&head);
+    let (status, body) = if is_get && path == "/healthz" {
+        // bare liveness answer: reaching this handler at all proves
+        // the exposition thread is accepting, which is the probe's
+        // whole question — no registry walk on the probe path
+        ("200 OK", "ok\n".to_string())
+    } else if is_get {
         // the pinned StatsSnapshot page, plus the stream-session
         // counters (registry-only — not part of the stats wire struct)
+        // and the constant build-info gauge
         let mut page = telemetry.snapshot().to_prometheus();
         page.push_str(&telemetry.stream_stats().to_prometheus());
+        page.push_str(build_info_line());
         ("200 OK", page)
     } else {
         ("400 Bad Request", "metrics endpoint: GET only\n".to_string())
@@ -111,6 +122,48 @@ fn answer_scrape(mut stream: TcpStream, telemetry: &Telemetry) -> std::io::Resul
     stream.write_all(response.as_bytes())?;
     let _ = stream.shutdown(std::net::Shutdown::Both);
     Ok(())
+}
+
+/// The request path from an HTTP request head (`""` if unparsable).
+fn request_path(head: &[u8]) -> &str {
+    let line = head.split(|&b| b == b'\r').next().unwrap_or(b"");
+    std::str::from_utf8(line)
+        .ok()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .unwrap_or("")
+}
+
+/// The constant `impulse_build_info` gauge: version and revision as
+/// labels, value pinned to 1 (the standard Prometheus idiom for
+/// exposing build metadata). Computed once — `git rev-parse` forks.
+fn build_info_line() -> &'static str {
+    static LINE: OnceLock<String> = OnceLock::new();
+    LINE.get_or_init(|| {
+        format!(
+            "# HELP impulse_build_info Build metadata as labels (value is always 1).\n\
+             # TYPE impulse_build_info gauge\n\
+             impulse_build_info{{version=\"{}\",git_rev=\"{}\"}} 1\n",
+            env!("CARGO_PKG_VERSION"),
+            git_rev()
+        )
+    })
+}
+
+/// Best-effort revision stamp: CI's `GITHUB_SHA`, else `git
+/// rev-parse`, else "unknown".
+fn git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".into())
 }
 
 #[cfg(test)]
@@ -139,9 +192,32 @@ mod tests {
         assert!(page.contains("impulse_requests_submitted_total{kind=\"digits\"} 1"));
         assert!(page.contains("impulse_queue_depth 0"));
         assert!(page.contains("impulse_streams_active 0"));
+        assert!(page.contains("impulse_build_info{version=\""), "{page}");
+        assert!(page.contains("git_rev=\""), "{page}");
+        assert!(page.contains("\"} 1"), "{page}");
 
         let bad = http_get(h.local_addr(), b"POST /metrics HTTP/1.0\r\n\r\n");
         assert!(bad.starts_with("HTTP/1.0 400"), "{bad}");
         h.stop();
+    }
+
+    #[test]
+    fn healthz_answers_bare_ok_without_a_metrics_page() {
+        let t = Arc::new(Telemetry::default());
+        let h = serve_metrics("127.0.0.1:0", Arc::clone(&t)).unwrap();
+        let page = http_get(h.local_addr(), b"GET /healthz HTTP/1.0\r\n\r\n");
+        assert!(page.starts_with("HTTP/1.0 200 OK"), "{page}");
+        assert!(page.ends_with("ok\n"), "{page}");
+        assert!(!page.contains("impulse_"), "healthz must not walk the registry: {page}");
+        h.stop();
+    }
+
+    #[test]
+    fn request_path_parses_the_head_defensively() {
+        assert_eq!(request_path(b"GET /healthz HTTP/1.0\r\n\r\n"), "/healthz");
+        assert_eq!(request_path(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n"), "/metrics");
+        assert_eq!(request_path(b"GET"), "");
+        assert_eq!(request_path(b""), "");
+        assert_eq!(request_path(&[0xFF, 0xFE]), "");
     }
 }

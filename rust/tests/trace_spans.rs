@@ -1,0 +1,278 @@
+//! End-to-end tests of per-request lifecycle tracing: a traced server
+//! records one complete span tree (decode → queue → batch → execute →
+//! write) per served request, the span counts reconcile with the
+//! telemetry response counters, the Chrome trace-event export
+//! round-trips through the reader, tracing-off serving stays
+//! bit-identical for non-negotiating clients, and the trace-echo
+//! capability returns the server's own timing breakdown to the client.
+
+use impulse::coordinator::{ServerOptions, WorkloadInput};
+use impulse::data::SentimentArtifacts;
+use impulse::macro_sim::MacroConfig;
+use impulse::obs::trace::{load_trace_dir, write_rotation, Phase, Span, TraceRecorder};
+use impulse::serve::{
+    serve_tcp, FrameClient, ServeCore, TcpServeHandle, CAP_BACKPRESSURE, CAP_TRACE_ECHO,
+    PROTOCOL_VERSION,
+};
+use impulse::snn::SentimentNetwork;
+use impulse::telemetry::{Telemetry, TelemetryConfig};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const VOCAB: i64 = 20; // SentimentArtifacts::synthetic vocabulary
+
+fn start_core(seed: u64, opts: ServerOptions) -> (Arc<ServeCore>, TcpServeHandle) {
+    let a = SentimentArtifacts::synthetic(seed);
+    let core = Arc::new(
+        ServeCore::start_with(opts, VOCAB, move || {
+            SentimentNetwork::from_artifacts(&a, MacroConfig::fast())
+        })
+        .unwrap(),
+    );
+    let handle = serve_tcp("127.0.0.1:0", Arc::clone(&core)).unwrap();
+    (core, handle)
+}
+
+/// Drive `n` word requests over one framed connection and wait for
+/// every response; returns when the server has closed after drain (so
+/// all server-side spans, including the write phase, are recorded).
+fn serve_requests(addr: std::net::SocketAddr, n: usize) {
+    let mut client = FrameClient::connect(addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    assert_eq!(client.hello().unwrap(), PROTOCOL_VERSION);
+    for i in 0..n {
+        client.send_infer(i as u64, &[(i as i64) % VOCAB, 5, 7]).unwrap();
+    }
+    for _ in 0..n {
+        let (id, res) = client.next_result().unwrap().expect("stream ended early");
+        res.unwrap_or_else(|(c, m)| panic!("req {id} failed ({c}): {m}"));
+    }
+    client.finish_writes().unwrap();
+    assert!(client.next_frame().unwrap().is_none(), "server must close after drain");
+}
+
+/// The tentpole contract: every request served while tracing is on
+/// leaves exactly one span per lifecycle phase, all sharing one trace
+/// id, with plausible timing (sequential phase starts, total duration
+/// bounded by the observed wall time).
+#[test]
+fn traced_request_records_all_five_lifecycle_phases() {
+    let recorder = Arc::new(TraceRecorder::new());
+    let (core, handle) = start_core(
+        31,
+        ServerOptions {
+            workers: 2,
+            batch_size: 2,
+            batch_deadline: Duration::from_millis(2),
+            trace: Some(Arc::clone(&recorder)),
+            ..ServerOptions::default()
+        },
+    );
+    let n = 4usize;
+    let t0 = Instant::now();
+    serve_requests(handle.local_addr(), n);
+    let wall_us = u64::try_from(t0.elapsed().as_micros()).unwrap();
+    handle.stop();
+    core.shutdown();
+
+    let spans = recorder.drain();
+    assert_eq!(recorder.dropped(), 0);
+    assert_eq!(spans.len(), n * Phase::LIFECYCLE.len(), "five spans per request");
+
+    let mut by_trace: BTreeMap<u64, Vec<Span>> = BTreeMap::new();
+    for s in &spans {
+        by_trace.entry(s.trace_id).or_default().push(*s);
+    }
+    assert_eq!(by_trace.len(), n, "one trace id per request");
+    for (trace_id, tree) in by_trace {
+        // exactly one span per lifecycle phase, starting in order
+        // (starts can collide at µs resolution, hence <=)
+        let mut ordered = Vec::new();
+        for p in Phase::LIFECYCLE {
+            let hits: Vec<&Span> = tree.iter().filter(|s| s.phase == p).collect();
+            assert_eq!(hits.len(), 1, "trace {trace_id}: phase {p:?} must appear exactly once");
+            ordered.push(*hits[0]);
+        }
+        for w in ordered.windows(2) {
+            assert!(
+                w[0].start_us <= w[1].start_us,
+                "trace {trace_id}: {:?} must not start after {:?}",
+                w[0].phase,
+                w[1].phase
+            );
+        }
+        let total: u64 = tree.iter().map(|s| s.dur_us).sum();
+        assert!(
+            total <= wall_us,
+            "trace {trace_id}: phase durations ({total}us) exceed wall time ({wall_us}us)"
+        );
+        let exec = tree.iter().find(|s| s.phase == Phase::Execute).unwrap();
+        assert!(exec.ok, "trace {trace_id}: successful request must mark execute ok");
+        assert!(exec.cycles > 0, "trace {trace_id}: execute span missing cycle cost");
+        assert!(exec.batch >= 1, "trace {trace_id}: execute span missing batch width");
+        for w in tree.windows(2) {
+            assert_eq!(w[0].trace_id, w[1].trace_id);
+            assert_eq!(w[0].request_id, w[1].request_id, "phases must share the wire id");
+        }
+    }
+}
+
+/// Reconciliation: the recorder's execute spans and the telemetry
+/// registry count the same population — one per response, ok and
+/// error alike (a digits payload on a sentiment server errors inside
+/// the engine, so it must still leave an execute span).
+#[test]
+fn execute_span_count_matches_telemetry_responses() {
+    let recorder = Arc::new(TraceRecorder::new());
+    let tele = Arc::new(Telemetry::new(TelemetryConfig::default()));
+    let (core, handle) = start_core(
+        37,
+        ServerOptions {
+            trace: Some(Arc::clone(&recorder)),
+            telemetry: Some(Arc::clone(&tele)),
+            ..ServerOptions::default()
+        },
+    );
+    let mut client = FrameClient::connect(handle.local_addr()).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    assert_eq!(client.hello().unwrap(), PROTOCOL_VERSION);
+    for i in 0..3u64 {
+        client.send_infer(i, &[3, 1]).unwrap();
+    }
+    client.send_digits_infer(99, 28, 28, &[0.0; 784]).unwrap();
+    let mut errs = 0;
+    for _ in 0..4 {
+        let (_, res) = client.next_result().unwrap().expect("stream ended early");
+        errs += usize::from(res.is_err());
+    }
+    assert_eq!(errs, 1, "exactly the digits request must fail on this server");
+    client.finish_writes().unwrap();
+    assert!(client.next_frame().unwrap().is_none());
+    handle.stop();
+    core.shutdown();
+
+    let spans = recorder.drain();
+    let execs: Vec<&Span> = spans.iter().filter(|s| s.phase == Phase::Execute).collect();
+    let snap = tele.snapshot();
+    let (ok, err) = snap.kinds.iter().fold((0u64, 0u64), |(o, e), k| (o + k.ok, e + k.err));
+    assert_eq!(execs.len() as u64, ok + err, "one execute span per telemetry response");
+    assert_eq!(execs.iter().filter(|s| !s.ok).count() as u64, err);
+    assert!(
+        execs.iter().filter(|s| s.ok).all(|s| s.energy_fj > 0),
+        "telemetry-attributed energy must ride on successful execute spans"
+    );
+}
+
+/// The export pipeline: drained spans written as a rotation parse
+/// back as a valid Chrome trace-event document with every field the
+/// writer attached.
+#[test]
+fn chrome_trace_export_roundtrips_through_the_reader() {
+    let recorder = Arc::new(TraceRecorder::new());
+    let (core, handle) = start_core(
+        41,
+        ServerOptions {
+            trace: Some(Arc::clone(&recorder)),
+            ..ServerOptions::default()
+        },
+    );
+    serve_requests(handle.local_addr(), 3);
+    handle.stop();
+    core.shutdown();
+    let spans = recorder.drain();
+    assert!(!spans.is_empty());
+
+    let dir = std::env::temp_dir().join(format!("impulse-trace-spans-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = write_rotation(&dir, 0, &spans).unwrap();
+    assert!(path.file_name().unwrap().to_str().unwrap().starts_with("trace-"));
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.starts_with("{\"traceEvents\":["), "must be a Chrome trace document");
+
+    let events = load_trace_dir(&dir).unwrap();
+    assert_eq!(events.len(), spans.len());
+    for (e, s) in events.iter().zip(&spans) {
+        assert_eq!(e.ph, "X", "writer emits complete events");
+        assert_eq!(Phase::from_name(&e.name), Some(s.phase));
+        assert_eq!(e.ts, s.start_us);
+        assert_eq!(e.dur, s.dur_us);
+        assert_eq!(e.trace_id, s.trace_id);
+        assert_eq!(e.request_id, s.request_id);
+        assert_eq!(e.conn, s.conn);
+        assert_eq!(e.cycles, s.cycles);
+        assert_eq!(e.energy_fj, s.energy_fj);
+        assert_eq!(e.ok, s.ok);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The disabled path: for a client that negotiated nothing, a server
+/// with tracing on answers bit-identically to one with `trace: None`
+/// — same payload type, flags word, and payload bytes. Tracing must
+/// not perturb the wire.
+#[test]
+fn tracing_is_invisible_to_non_negotiating_clients() {
+    let seed = 43;
+    let reqs: Vec<Vec<i64>> = vec![vec![3, 7, 5], vec![19], vec![2, 11, 6, 13]];
+    let answers = |opts: ServerOptions| -> Vec<(u8, u64, u16, Vec<u8>)> {
+        let (core, handle) = start_core(seed, opts);
+        let mut client = FrameClient::connect(handle.local_addr()).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        assert_eq!(client.hello().unwrap(), PROTOCOL_VERSION);
+        for (i, r) in reqs.iter().enumerate() {
+            client.send_infer(i as u64, r).unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..reqs.len() {
+            let f = client.next_frame().unwrap().expect("stream ended early");
+            got.push((f.payload_type as u8, f.request_id, f.flags, f.payload.clone()));
+        }
+        client.finish_writes().unwrap();
+        assert!(client.next_frame().unwrap().is_none());
+        handle.stop();
+        core.shutdown();
+        got.sort_by_key(|(_, id, _, _)| *id);
+        got
+    };
+    let plain = answers(ServerOptions::default());
+    let traced = answers(ServerOptions {
+        trace: Some(Arc::new(TraceRecorder::new())),
+        ..ServerOptions::default()
+    });
+    assert_eq!(plain, traced, "tracing must not change a single wire byte");
+    assert!(plain.iter().all(|(_, _, flags, _)| *flags == 0));
+}
+
+/// The negotiated path: a client that was granted `CAP_TRACE_ECHO`
+/// and flags its requests gets the per-phase timing trailer back on a
+/// traced server — and `None` on an untraced one.
+#[test]
+fn trace_echo_returns_the_servers_timing_breakdown() {
+    let run = |trace: Option<Arc<TraceRecorder>>| {
+        let (core, handle) = start_core(
+            47,
+            ServerOptions {
+                trace,
+                ..ServerOptions::default()
+            },
+        );
+        let mut client = FrameClient::connect(handle.local_addr()).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let (version, granted) =
+            client.hello_with_caps(CAP_BACKPRESSURE | CAP_TRACE_ECHO).unwrap();
+        assert_eq!(version, PROTOCOL_VERSION);
+        assert_ne!(granted & CAP_TRACE_ECHO, 0, "server must grant the echo capability");
+        client.set_trace_echo(true);
+        let p = client.call(&WorkloadInput::Words(vec![3, 7, 5])).unwrap();
+        let (out, echo) = client.wait_with_trace(&p).unwrap();
+        assert!(out.cycles > 0, "response must carry cost accounting");
+        handle.stop();
+        core.shutdown();
+        echo
+    };
+    run(Some(Arc::new(TraceRecorder::new())))
+        .expect("traced server must echo the timing breakdown");
+    assert!(run(None).is_none(), "an untraced server has no breakdown to echo");
+}
