@@ -13,12 +13,22 @@
 //! Chrome trace-event JSON file in `<dir>` — line these up against a
 //! server traced with `impulse serve --trace-dir` to see where
 //! client-observed latency goes (`docs/OBSERVABILITY.md`).
+//!
+//! `--chaos kill|stall|blackhole` schedules one mid-run fault
+//! (`docs/PROXY.md`): `stall` and `blackhole` degrade the traffic
+//! path through an interposed relay from `--chaos-after-ms` (default
+//! 500) for `--chaos-for-ms` (default 1000); `kill` sends `kill -9`
+//! to `--chaos-kill-pid` — typically one backend behind an
+//! `impulse proxy`, so the envelope asserts failover.
 
 use impulse::obs::trace::{write_rotation, TraceRecorder};
-use impulse::replay::loadgen::{run_scenario_traced, Scenario, BUILTIN_SCENARIOS};
+use impulse::replay::loadgen::{
+    run_scenario_chaos, ChaosMode, ChaosSpec, Scenario, BUILTIN_SCENARIOS,
+};
 use impulse::Result;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 pub fn run(args: &[String]) -> Result<()> {
     let flags = super::Flags::parse(args);
@@ -54,9 +64,43 @@ pub fn run(args: &[String]) -> Result<()> {
         scenario.slow_loris,
         scenario.fuzz_frames,
     );
+    let chaos = match flags.get("chaos") {
+        None => None,
+        Some(which) => {
+            let mode = match which {
+                "kill" => {
+                    let pid = flags.get_usize("chaos-kill-pid").ok_or_else(|| {
+                        anyhow::anyhow!("--chaos kill requires --chaos-kill-pid <pid>")
+                    })?;
+                    ChaosMode::Kill { pid: pid as u32 }
+                }
+                "stall" => ChaosMode::Stall,
+                "blackhole" => ChaosMode::Blackhole,
+                other => {
+                    anyhow::bail!("unknown --chaos '{other}' (kill|stall|blackhole)")
+                }
+            };
+            let after = flags.get_usize("chaos-after-ms").unwrap_or(500) as u64;
+            let duration = flags.get_usize("chaos-for-ms").unwrap_or(1000) as u64;
+            impulse::info!(
+                "loadgen",
+                "chaos: {mode:?} at +{after}ms{}",
+                if matches!(mode, ChaosMode::Kill { .. }) {
+                    String::new()
+                } else {
+                    format!(" for {duration}ms (path via interposed relay)")
+                }
+            );
+            Some(ChaosSpec {
+                mode,
+                after: Duration::from_millis(after),
+                duration: Duration::from_millis(duration),
+            })
+        }
+    };
     let trace_dir = flags.get("trace-dir").map(PathBuf::from);
     let trace = trace_dir.as_ref().map(|_| Arc::new(TraceRecorder::new()));
-    let report = run_scenario_traced(addr, &scenario, trace.clone())?;
+    let report = run_scenario_chaos(addr, &scenario, trace.clone(), chaos)?;
     if let (Some(dir), Some(tr)) = (&trace_dir, &trace) {
         let spans = tr.drain();
         let path = write_rotation(dir, 0, &spans)?;

@@ -6,6 +6,7 @@ pub mod eval;
 pub mod infer;
 pub mod info;
 pub mod loadgen;
+pub mod proxy;
 pub mod replay;
 pub mod report;
 pub mod serve;
@@ -43,6 +44,16 @@ impl Flags {
             .iter()
             .find(|(k, _)| k == key)
             .and_then(|(_, v)| v.as_deref())
+    }
+
+    /// Every value given for a repeatable flag, in order (e.g. the
+    /// proxy's `--backend a:1 --backend a:2`).
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.pairs
+            .iter()
+            .filter(|(k, _)| k == key)
+            .filter_map(|(_, v)| v.as_deref())
+            .collect()
     }
 
     pub fn has(&self, key: &str) -> bool {

@@ -1,0 +1,139 @@
+//! `impulse proxy` — the fault-tolerant front tier.
+//!
+//! Speaks the binary frame protocol of `docs/PROTOCOL.md` on both
+//! sides: clients point at `--listen` exactly as they would at a
+//! single `impulse serve --listen` backend, and the proxy routes over
+//! the `--backend` fleet — least-loaded for one-shots, pinned for
+//! streaming sessions, with active health checks, transparent
+//! re-submission of idempotent work when a backend dies, and honest
+//! `BackendLost` errors when recovery is impossible. Full semantics
+//! in `docs/PROXY.md`.
+//!
+//! `--metrics-listen` serves the backends' per-fleet counters
+//! (`impulse_proxy_*`) alongside the standard registry page;
+//! `--trace-dir` records one `proxy_hop` span per request
+//! (accepted → relayed) as Chrome trace rotations.
+
+use super::Flags;
+use impulse::obs::trace::{TraceFlusher, TraceRecorder};
+use impulse::proxy::{serve_proxy, ProxyCore, ProxyOptions, ProxyServeHandle};
+use impulse::serve::install_shutdown_handler;
+use impulse::telemetry::{serve_metrics_with, Telemetry};
+use impulse::Result;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args);
+    if let Some(l) = flags.get("log-level") {
+        anyhow::ensure!(
+            impulse::obs::log::parse_level(l).is_some(),
+            "unknown --log-level '{l}' (error|warn|info|debug)"
+        );
+    }
+    impulse::obs::log::init(flags.get("log-level"));
+    let listen = flags
+        .get("listen")
+        .ok_or_else(|| anyhow::anyhow!("impulse proxy requires --listen <addr>"))?
+        .to_string();
+    let backends: Vec<String> =
+        flags.get_all("backend").into_iter().map(str::to_string).collect();
+    anyhow::ensure!(
+        !backends.is_empty(),
+        "impulse proxy requires at least one --backend <addr> (repeatable)"
+    );
+
+    let mut opts = ProxyOptions::new(backends);
+    if let Some(ms) = flags.get_usize("health-interval-ms") {
+        opts.health_interval = Duration::from_millis((ms as u64).max(1));
+    }
+    if let Some(ms) = flags.get_usize("health-timeout-ms") {
+        opts.health_timeout = Duration::from_millis((ms as u64).max(1));
+    }
+    if let Some(n) = flags.get_usize("retry-max") {
+        opts.retry_max = n as u32;
+    }
+    if let Some(ms) = flags.get_usize("request-deadline-ms") {
+        opts.request_deadline = Duration::from_millis((ms as u64).max(1));
+    }
+    if let Some(ms) = flags.get_usize("reconnect-base-ms") {
+        opts.reconnect_base = Duration::from_millis((ms as u64).max(1));
+    }
+
+    // --trace-dir <dir>: one proxy_hop span per request (accepted →
+    // response relayed); inspect with `impulse trace <dir>`
+    let trace_flusher = match flags.get("trace-dir") {
+        Some(dir) => {
+            let rec = Arc::new(TraceRecorder::new());
+            opts.trace = Some(Arc::clone(&rec));
+            impulse::info!(
+                "proxy",
+                "tracing proxy hops to {dir} (inspect with `impulse trace {dir}`)"
+            );
+            Some(TraceFlusher::start(rec, PathBuf::from(dir)))
+        }
+        None => None,
+    };
+
+    let core = ProxyCore::start(opts)?;
+
+    // the proxy has no local inference registry; its metrics page is
+    // the (empty) standard pages plus the per-backend fleet counters
+    let metrics = match flags.get("metrics-listen") {
+        Some(addr) => {
+            let page_core = Arc::clone(&core);
+            let h = serve_metrics_with(
+                addr,
+                Arc::new(Telemetry::default()),
+                Arc::new(move || page_core.stats().to_prometheus()),
+            )?;
+            impulse::info!(
+                "proxy",
+                "metrics (Prometheus text) on http://{}/metrics (liveness on /healthz)",
+                h.local_addr()
+            );
+            Some(h)
+        }
+        None => None,
+    };
+
+    let handle = serve_proxy(&listen, Arc::clone(&core))?;
+    impulse::info!(
+        "proxy",
+        "proxying tcp://{} over {} backend(s): {}; \
+         binary frame protocol v{} (docs/PROTOCOL.md, docs/PROXY.md); \
+         SIGINT/SIGTERM drains and exits",
+        handle.local_addr(),
+        core.backend_addrs().len(),
+        core.backend_addrs().join(", "),
+        impulse::serve::PROTOCOL_VERSION,
+    );
+    serve_until_signalled(handle);
+
+    if let Some(h) = metrics {
+        h.stop();
+    }
+    core.shutdown();
+    // stop tracing after shutdown so in-flight hops make the final
+    // rotation
+    if let Some(f) = trace_flusher {
+        f.stop();
+    }
+    Ok(())
+}
+
+/// Serve until SIGINT/SIGTERM arrives or the accept loop fails on its
+/// own (the serve CLI's loop, retyped for the proxy's handle).
+fn serve_until_signalled(handle: ProxyServeHandle) {
+    let stop = install_shutdown_handler();
+    while !stop.load(Ordering::SeqCst) && !handle.is_finished() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    if stop.load(Ordering::SeqCst) {
+        impulse::info!("proxy", "shutdown signal — winding down…");
+    }
+    handle.stop();
+    impulse::info!("proxy", "stopped");
+}

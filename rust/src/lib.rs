@@ -23,6 +23,10 @@
 //! - [`serve`] — the serving front-end: binary frame codec
 //!   (`docs/PROTOCOL.md`), multi-client TCP listener, and the
 //!   transport-agnostic session path shared with the stdio loop.
+//! - [`proxy`] — the fault-tolerant front tier (`docs/PROXY.md`):
+//!   health-checked least-loaded routing over a backend fleet,
+//!   stream pinning, transparent re-submission of idempotent work on
+//!   backend death, and a fault-injection relay for chaos testing.
 //! - [`telemetry`] — live serving telemetry: the lock-free registry,
 //!   `StatsRequest`/`StatsResponse` snapshots, Prometheus exposition,
 //!   and backpressure signalling.
@@ -65,6 +69,7 @@ pub mod neuron;
 pub mod obs;
 pub mod periph;
 pub mod proptest_lite;
+pub mod proxy;
 pub mod replay;
 pub mod runtime;
 pub mod serve;

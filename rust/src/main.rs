@@ -21,6 +21,10 @@
 //!            [--metrics-listen ADDR]              Prometheus text endpoint
 //!            [--queue-soft-limit N]               backpressure threshold
 //!            [--record DIR] [--synthetic SEED]    deterministic capture mode
+//!   proxy    --listen ADDR --backend ADDR…        fault-tolerant front tier:
+//!            [--metrics-listen ADDR]              health-checked routing,
+//!            [--retry-max N]                      failover with re-submission
+//!                                                 (docs/PROXY.md)
 //!   replay   DIR [--engine fast|bit|lockstep]     re-execute a capture, diff
 //!                                                 frames + V-digests
 //!   loadgen  SCENARIO --addr ADDR                 scripted load + envelope
@@ -54,6 +58,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "bench" => cli::bench::run(rest),
         "check" => cli::check::run(rest),
         "serve" => cli::serve::run(rest),
+        "proxy" => cli::proxy::run(rest),
         "replay" => cli::replay::run(rest),
         "loadgen" => cli::loadgen::run(rest),
         "stats" => cli::stats::run(rest),
@@ -144,6 +149,24 @@ COMMANDS:
                                     --log-level error|warn|info|debug
                                     sets stderr log verbosity (also
                                     IMPULSE_LOG)
+    proxy --listen ADDR --backend ADDR [--backend ADDR…]
+          [--metrics-listen ADDR] [--health-interval-ms MS]
+          [--health-timeout-ms MS] [--retry-max N]
+          [--request-deadline-ms MS] [--reconnect-base-ms MS]
+          [--trace-dir DIR] [--log-level L]
+                                    fault-tolerant front tier over a
+                                    backend fleet (docs/PROXY.md):
+                                    least-loaded routing with health
+                                    probes every --health-interval-ms;
+                                    streaming sessions pin to one
+                                    backend for their life; when a
+                                    backend dies, in-flight idempotent
+                                    requests re-submit to a survivor
+                                    (up to --retry-max, within
+                                    --request-deadline-ms) and pinned
+                                    streams answer BackendLost; the
+                                    metrics page adds per-backend
+                                    impulse_proxy_* counters
     replay DIR [--engine E]         re-execute a capture against a core
                                     rebuilt from its metadata; diffs
                                     response frames and V-digests,
@@ -160,7 +183,14 @@ COMMANDS:
                                     error-rate / p99 envelopes via the
                                     server's own StatsRequest telemetry;
                                     --trace-dir records client-observed
-                                    per-operation spans
+                                    per-operation spans;
+                                    --chaos kill|stall|blackhole
+                                    schedules one mid-run fault
+                                    (--chaos-after-ms, --chaos-for-ms,
+                                    --chaos-kill-pid) — stall/blackhole
+                                    degrade the path via an interposed
+                                    relay, kill SIGKILLs a pid (e.g.
+                                    one backend behind impulse proxy)
     trace DIR [--slowest N] [--json]
                                     summarize a --trace-dir export:
                                     per-phase p50/p99/max and the

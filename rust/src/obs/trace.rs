@@ -61,6 +61,10 @@ pub enum Phase {
     StreamAppend,
     /// A client-observed operation (loadgen's `--trace-dir`).
     Client,
+    /// One request's dwell inside a proxy tier: forwarded upstream
+    /// until the backend's response was relayed back to the client
+    /// (`impulse proxy --trace-dir`).
+    ProxyHop,
 }
 
 impl Phase {
@@ -79,6 +83,7 @@ impl Phase {
             Phase::Write => "write",
             Phase::StreamAppend => "stream_append",
             Phase::Client => "client",
+            Phase::ProxyHop => "proxy_hop",
         }
     }
 
@@ -92,6 +97,7 @@ impl Phase {
             "write" => Some(Phase::Write),
             "stream_append" => Some(Phase::StreamAppend),
             "client" => Some(Phase::Client),
+            "proxy_hop" => Some(Phase::ProxyHop),
             _ => None,
         }
     }
@@ -642,6 +648,7 @@ mod tests {
             Phase::Write,
             Phase::StreamAppend,
             Phase::Client,
+            Phase::ProxyHop,
         ] {
             assert_eq!(Phase::from_name(p.name()), Some(p));
         }

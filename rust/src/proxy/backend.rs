@@ -1,0 +1,184 @@
+//! Per-backend upstream link state: the shared write half, the
+//! in-flight table, and the reader thread that relays responses back
+//! to their clients.
+//!
+//! Every client request that reaches a backend lives in exactly one
+//! link's `pending` table while it is in flight, keyed by the
+//! *upstream* request id the proxy assigned (see
+//! [`ProxyCore::forward`]). The link's reader thread removes the
+//! entry when the response arrives; [`ProxyCore::link_down`] drains
+//! whatever is left when the link dies and decides, per entry,
+//! between re-submission and an honest `BackendLost` answer.
+//!
+//! [`ProxyCore::forward`]: super::ProxyCore
+//! [`ProxyCore::link_down`]: super::ProxyCore
+
+use std::collections::{HashMap, HashSet};
+use std::io::ErrorKind;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::serve::{decode_backpressure, Frame, FrameReader, PayloadType, WireError};
+
+use super::ProxyCore;
+
+/// What a proxied request is, for failover purposes. The split is the
+/// heart of the proxy's honesty contract: only work whose re-execution
+/// is observably identical to a first execution may be re-submitted
+/// behind the client's back.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqKind {
+    /// A stateless request (`InferRequest`, `DigitsInferRequest`,
+    /// `StatsRequest`): idempotent, safe to transparently re-submit
+    /// to a surviving backend if the routed one dies holding it.
+    OneShot,
+    /// A `StreamOpen`: pins its upstream request id (which becomes
+    /// the stream id) to the chosen backend. Re-submittable while
+    /// unacknowledged — no client-visible state existed yet.
+    StreamOpen,
+    /// An operation on an already-open stream (append, read-out,
+    /// close). Never re-submitted: the membrane state it addresses
+    /// lives on exactly one backend.
+    StreamOp {
+        /// The upstream stream id the operation addresses (the first
+        /// 8 payload bytes).
+        stream_id: u64,
+    },
+}
+
+/// One proxied request while it is in flight to a backend.
+pub struct ProxyPending {
+    /// The request's payload type, replayed verbatim on re-submission.
+    pub(crate) ty: PayloadType,
+    /// The client's flags word, forwarded verbatim upstream (carries
+    /// the telemetry/trace-echo request bits).
+    pub(crate) flags: u16,
+    /// The request payload, forwarded verbatim.
+    pub(crate) payload: Vec<u8>,
+    /// The request id the client used — responses are re-keyed back
+    /// to it before relay.
+    pub(crate) external_id: u64,
+    /// The client connection to answer (`None` for proxy-initiated
+    /// janitorial frames, e.g. closing streams of a vanished client).
+    pub(crate) client: Option<ClientHandle>,
+    /// Times this request has already been (re-)submitted.
+    pub(crate) attempts: u32,
+    /// Hard per-request deadline; re-submission never crosses it.
+    pub(crate) deadline: Instant,
+    /// When the proxy accepted the request (starts the proxy-hop span).
+    pub(crate) enqueued: Instant,
+    /// Failover classification.
+    pub(crate) kind: ReqKind,
+}
+
+/// One client connection's shared write half plus the bookkeeping the
+/// proxy needs to clean up after it: the connection id (for trace
+/// spans) and the set of upstream stream ids it opened.
+#[derive(Clone)]
+pub struct ClientHandle {
+    pub(crate) stream: Arc<Mutex<TcpStream>>,
+    pub(crate) conn_id: u64,
+    pub(crate) streams: Arc<Mutex<HashSet<u64>>>,
+}
+
+impl ClientHandle {
+    /// Write one frame to the client. The mutex keeps frames
+    /// contiguous on the wire — link readers and the client's own
+    /// reader thread all answer through here.
+    pub(crate) fn write(&self, f: &Frame) -> std::io::Result<()> {
+        let mut g = self.stream.lock().expect("client writer poisoned");
+        f.write_to(&mut *g)
+    }
+}
+
+/// The proxy's upstream link to one backend. The lifecycle state and
+/// in-flight gauge live in [`ProxyStats`] (single source of truth for
+/// routing and the metrics page); this struct holds what the wire
+/// needs: the socket, the pending table, and the freshest
+/// backpressure advertisement.
+///
+/// `generation` increments each time a new connection is installed;
+/// reader threads and death reports carry the generation they belong
+/// to, so a stale report can never tear down a newer link.
+///
+/// [`ProxyStats`]: crate::telemetry::ProxyStats
+pub struct BackendLink {
+    /// The backend address, as given on the command line.
+    pub addr: String,
+    pub(crate) writer: Mutex<Option<TcpStream>>,
+    pub(crate) pending: Mutex<HashMap<u64, ProxyPending>>,
+    pub(crate) generation: AtomicU64,
+    pub(crate) soft_limited: AtomicBool,
+    pub(crate) depth: AtomicU64,
+    pub(crate) health_fails: AtomicU32,
+}
+
+impl BackendLink {
+    /// A link with no connection yet (state starts Down; the
+    /// reconnect loop brings it up).
+    pub(crate) fn new(addr: String) -> BackendLink {
+        BackendLink {
+            addr,
+            writer: Mutex::new(None),
+            pending: Mutex::new(HashMap::new()),
+            generation: AtomicU64::new(0),
+            soft_limited: AtomicBool::new(false),
+            depth: AtomicU64::new(0),
+            health_fails: AtomicU32::new(0),
+        }
+    }
+
+    /// Fold a response frame's backpressure advertisement (if any)
+    /// into the link's routing inputs.
+    pub(crate) fn observe_flags(&self, flags: u16) {
+        if let Some(bp) = decode_backpressure(flags) {
+            self.depth.store(bp.queue_depth as u64, Ordering::Relaxed);
+            self.soft_limited.store(bp.soft_limited, Ordering::Relaxed);
+        }
+    }
+
+    /// Routing load estimate: our own in-flight count (precise, but
+    /// blind to the backend's other clients) weighted double, plus
+    /// the backend's advertised queue depth (global, but stale).
+    pub(crate) fn load(&self, in_flight: u64) -> u64 {
+        in_flight * 2 + self.depth.load(Ordering::Relaxed)
+    }
+}
+
+/// The per-link reader thread body: relay upstream frames back to
+/// their clients until the link dies, a newer generation replaces it,
+/// or the proxy stops.
+pub(crate) fn link_reader(
+    core: Arc<ProxyCore>,
+    idx: usize,
+    generation: u64,
+    mut reader: FrameReader<TcpStream>,
+) {
+    loop {
+        if core.stopped() {
+            return;
+        }
+        if core.links[idx].generation.load(Ordering::SeqCst) != generation {
+            return; // a newer link owns this backend now
+        }
+        match reader.next_frame() {
+            Ok(Some(f)) => core.on_upstream_frame(idx, f),
+            Ok(None) => {
+                core.link_down(idx, generation, "backend closed the connection");
+                return;
+            }
+            Err(WireError::Io(e))
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                // read-timeout tick: partial frames survive in the
+                // reader's carry buffer; loop to recheck stop/generation
+            }
+            Err(e) => {
+                core.link_down(idx, generation, &format!("read failed: {e}"));
+                return;
+            }
+        }
+    }
+}

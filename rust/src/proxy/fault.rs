@@ -1,0 +1,294 @@
+//! Fault injection: a byte-level TCP relay that can kill, stall, or
+//! black-hole the path to a backend mid-run.
+//!
+//! Tests (and `impulse loadgen --chaos`) put a [`FaultRelay`] between
+//! the proxy and a backend, drive traffic, then flip the fault mode —
+//! so failover is exercised against the three failure shapes that
+//! matter operationally:
+//!
+//! - **kill** — connections reset and the port stops answering, like
+//!   `kill -9` on the backend: passive detection (link reader I/O
+//!   error) fires immediately;
+//! - **stall** — bytes stop being read, like a wedged process under
+//!   an intact TCP session: nothing errors, kernel buffers fill;
+//! - **black hole** — bytes are read and discarded, like a process
+//!   looping with its threads parked: the connection looks perfectly
+//!   healthy and only the active `StatsRequest` probe can tell.
+//!
+//! The relay is deliberately dumb — it never parses frames — so it
+//! cannot mask protocol bugs.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::Result;
+
+use super::resolve;
+
+/// What the relay does with bytes in both directions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Copy bytes through unmodified (healthy path).
+    Pass,
+    /// Stop reading entirely: the peer's writes eventually block
+    /// (kernel buffers full) but nothing errors.
+    Stall,
+    /// Read and discard: both sides see a live, silent connection.
+    Blackhole,
+}
+
+impl FaultMode {
+    fn as_u8(self) -> u8 {
+        match self {
+            FaultMode::Pass => 0,
+            FaultMode::Stall => 1,
+            FaultMode::Blackhole => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> FaultMode {
+        match v {
+            1 => FaultMode::Stall,
+            2 => FaultMode::Blackhole,
+            _ => FaultMode::Pass,
+        }
+    }
+}
+
+/// A running fault-injection relay in front of one target address.
+pub struct FaultRelay {
+    addr: SocketAddr,
+    mode: Arc<AtomicU8>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FaultRelay {
+    /// Bind an ephemeral local port relaying to `target`, starting in
+    /// [`FaultMode::Pass`]. Point the proxy's `--backend` (or a
+    /// client's `--addr`) at [`FaultRelay::local_addr`].
+    pub fn start(target: &str) -> Result<FaultRelay> {
+        let target = resolve(target)?;
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let mode = Arc::new(AtomicU8::new(FaultMode::Pass.as_u8()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let mode = Arc::clone(&mode);
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            std::thread::spawn(move || {
+                loop {
+                    if stop.load(Ordering::SeqCst) {
+                        break; // drops the listener: the port stops answering
+                    }
+                    match listener.accept() {
+                        Ok((client, _peer)) => {
+                            let upstream = match TcpStream::connect_timeout(
+                                &target,
+                                Duration::from_secs(2),
+                            ) {
+                                Ok(u) => u,
+                                Err(_) => {
+                                    let _ = client.shutdown(Shutdown::Both);
+                                    continue;
+                                }
+                            };
+                            let _ = client.set_nonblocking(false);
+                            track(&conns, &client);
+                            track(&conns, &upstream);
+                            spawn_pump(
+                                client.try_clone(),
+                                upstream.try_clone(),
+                                Arc::clone(&mode),
+                                Arc::clone(&stop),
+                            );
+                            spawn_pump(Ok(upstream), Ok(client), Arc::clone(&mode), Arc::clone(&stop));
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+        };
+        Ok(FaultRelay { addr, mode, stop, conns, accept: Some(accept) })
+    }
+
+    /// The relay's client-facing address.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Switch fault modes; applies to live connections immediately.
+    pub fn set_mode(&self, mode: FaultMode) {
+        self.mode.store(mode.as_u8(), Ordering::SeqCst);
+    }
+
+    /// Simulate `kill -9`: reset every live connection and stop
+    /// answering the port. Unlike [`FaultRelay::set_mode`] this is
+    /// not reversible — like the process it imitates.
+    pub fn kill(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let conns = std::mem::take(&mut *self.conns.lock().expect("relay conns poisoned"));
+        for c in conns {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Kill (if not already) and join the accept loop.
+    pub fn stop(mut self) {
+        self.kill();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultRelay {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Remember a connection so [`FaultRelay::kill`] can reset it.
+fn track(conns: &Arc<Mutex<Vec<TcpStream>>>, s: &TcpStream) {
+    if let Ok(c) = s.try_clone() {
+        conns.lock().expect("relay conns poisoned").push(c);
+    }
+}
+
+/// One direction's pump thread: move bytes `from` → `to` per the
+/// current fault mode until either side dies or the relay stops.
+fn spawn_pump(
+    from: std::io::Result<TcpStream>,
+    to: std::io::Result<TcpStream>,
+    mode: Arc<AtomicU8>,
+    stop: Arc<AtomicBool>,
+) {
+    let (mut from, mut to) = match (from, to) {
+        (Ok(f), Ok(t)) => (f, t),
+        _ => return,
+    };
+    if from.set_read_timeout(Some(Duration::from_millis(50))).is_err() {
+        return;
+    }
+    let _ = to.set_write_timeout(Some(Duration::from_secs(5)));
+    std::thread::spawn(move || {
+        let mut buf = [0u8; 4096];
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match FaultMode::from_u8(mode.load(Ordering::SeqCst)) {
+                FaultMode::Stall => {
+                    // don't touch the socket: bytes pile up in kernel
+                    // buffers exactly as behind a wedged process
+                    std::thread::sleep(Duration::from_millis(50));
+                    continue;
+                }
+                FaultMode::Pass | FaultMode::Blackhole => {}
+            }
+            match from.read(&mut buf) {
+                Ok(0) => break, // peer closed
+                Ok(n) => {
+                    let discard =
+                        FaultMode::from_u8(mode.load(Ordering::SeqCst)) == FaultMode::Blackhole;
+                    if !discard && to.write_all(&buf[..n]).is_err() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+                Err(_) => break,
+            }
+        }
+        let _ = from.shutdown(Shutdown::Both);
+        let _ = to.shutdown(Shutdown::Both);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A one-connection echo server for exercising the relay.
+    fn echo_server() -> (SocketAddr, std::thread::JoinHandle<()>) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            if let Ok((mut s, _)) = l.accept() {
+                let mut buf = [0u8; 256];
+                while let Ok(n) = s.read(&mut buf) {
+                    if n == 0 || s.write_all(&buf[..n]).is_err() {
+                        break;
+                    }
+                }
+            }
+        });
+        (addr, t)
+    }
+
+    #[test]
+    fn pass_mode_relays_bytes_both_ways() {
+        let (addr, server) = echo_server();
+        let relay = FaultRelay::start(&addr.to_string()).unwrap();
+        let mut c = TcpStream::connect(relay.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        c.write_all(b"spike").unwrap();
+        let mut got = [0u8; 5];
+        c.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"spike");
+        drop(c);
+        relay.stop();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn kill_resets_live_connections_and_refuses_new_ones() {
+        let (addr, server) = echo_server();
+        let relay = FaultRelay::start(&addr.to_string()).unwrap();
+        let mut c = TcpStream::connect(relay.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        c.write_all(b"spike").unwrap();
+        let mut got = [0u8; 5];
+        c.read_exact(&mut got).unwrap();
+
+        let dead_port = relay.local_addr();
+        relay.kill();
+        // the live connection dies: reads answer EOF or a reset
+        let n = c.read(&mut got);
+        assert!(matches!(n, Ok(0) | Err(_)), "killed relay must sever the connection: {n:?}");
+        // and (within the accept loop's poll tick) new connects fail
+        std::thread::sleep(Duration::from_millis(100));
+        let again = TcpStream::connect_timeout(
+            &dead_port,
+            Duration::from_millis(500),
+        );
+        assert!(again.is_err(), "killed relay must stop answering its port");
+        relay.stop();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn blackhole_swallows_bytes_without_erroring() {
+        let (addr, server) = echo_server();
+        let relay = FaultRelay::start(&addr.to_string()).unwrap();
+        let mut c = TcpStream::connect(relay.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_millis(300))).unwrap();
+        relay.set_mode(FaultMode::Blackhole);
+        std::thread::sleep(Duration::from_millis(60)); // let pumps see the mode
+        c.write_all(b"spike").unwrap();
+        let mut got = [0u8; 5];
+        let r = c.read(&mut got);
+        assert!(r.is_err(), "black-holed echo must never answer: {r:?}");
+        relay.stop();
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,152 @@
+//! Active health checking: `StatsRequest` probes on fresh
+//! connections, on a configurable interval.
+//!
+//! The per-link reader threads already provide *passive* health — an
+//! I/O error on the link reports the backend down immediately. The
+//! active prober covers what passive detection cannot see:
+//!
+//! - a backend that accepts bytes but stopped answering (black-holed
+//!   or wedged): the link reader just waits forever, the probe times
+//!   out;
+//! - recovery of a `Draining` backend — nothing else ever promotes it
+//!   back to `Up`.
+//!
+//! Probes use a *fresh* connection per probe rather than riding the
+//! request link, so a probe exercises the full accept → hello →
+//! answer path (the same thing a new client would experience) and a
+//! wedged request link cannot make a healthy backend look alive.
+//!
+//! State machine (per backend): one failed probe demotes `Up` to
+//! `Draining` (finishes in-flight work, sheds new work to peers);
+//! [`HEALTH_FAILS_TO_DOWN`] consecutive failures declare it `Down`
+//! outright, which drains its in-flight table through the normal
+//! failover path. A probe success resets the failure count and
+//! promotes `Draining` back to `Up`. `Down` backends are skipped —
+//! the reconnect loop owns their recovery.
+
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::serve::{
+    encode_stats_request, hello_payload, Frame, FrameReader, PayloadType, PROTOCOL_VERSION,
+};
+use crate::telemetry::{BACKEND_DOWN, BACKEND_DRAINING, BACKEND_UP};
+use crate::Result;
+
+use super::{resolve, sleep_while_running, ProxyCore};
+
+/// Consecutive probe failures before a backend is declared `Down`
+/// outright (covers black-holed links whose reader never errors).
+pub const HEALTH_FAILS_TO_DOWN: u32 = 2;
+
+/// The health thread body: probe every non-`Down` backend each
+/// interval until the proxy stops.
+pub(crate) fn health_loop(core: Arc<ProxyCore>) {
+    loop {
+        if !sleep_while_running(&core, core.opts.health_interval) {
+            return;
+        }
+        for idx in 0..core.links.len() {
+            if core.stopped() {
+                return;
+            }
+            let state = core.stats().state(idx);
+            if state == BACKEND_DOWN {
+                continue; // the reconnect loop owns recovery
+            }
+            let link = &core.links[idx];
+            match probe(&link.addr, core.opts.health_timeout) {
+                Ok(()) => {
+                    link.health_fails.store(0, Ordering::SeqCst);
+                    if core.stats().transition(idx, BACKEND_DRAINING, BACKEND_UP) {
+                        crate::info!("proxy", "backend {} answers again; back up", link.addr);
+                    }
+                }
+                Err(e) => {
+                    core.stats().record_health_failure(idx);
+                    let fails = link.health_fails.fetch_add(1, Ordering::SeqCst) + 1;
+                    crate::warn!(
+                        "proxy",
+                        "backend {} failed health probe ({fails} consecutive): {e:#}",
+                        link.addr
+                    );
+                    if fails >= HEALTH_FAILS_TO_DOWN {
+                        // repeated failure: declare it dead even if the
+                        // request link never errored (black hole) — the
+                        // generation guard makes a stale report harmless
+                        let generation = link.generation.load(Ordering::SeqCst);
+                        core.link_down(
+                            idx,
+                            generation,
+                            &format!("{fails} consecutive health probes failed"),
+                        );
+                    } else {
+                        // first strike: stop routing new work its way,
+                        // let in-flight work finish (never resurrects a
+                        // concurrently-declared-Down backend)
+                        core.stats().transition(idx, BACKEND_UP, BACKEND_DRAINING);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One active probe: fresh TCP connection, v1 hello, one
+/// `StatsRequest` answered within `timeout`. Public so the CLI (and
+/// tests) can reuse it as a backend readiness check.
+pub fn probe(addr: &str, timeout: Duration) -> Result<()> {
+    let sa = resolve(addr)?;
+    let stream = TcpStream::connect_timeout(&sa, timeout)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let mut w = stream.try_clone()?;
+    let mut reader = FrameReader::new(stream);
+    Frame::new(PayloadType::Hello, 0, hello_payload(PROTOCOL_VERSION, PROTOCOL_VERSION))
+        .write_to(&mut w)?;
+    expect(&mut reader, PayloadType::HelloAck)?;
+    Frame::new(PayloadType::StatsRequest, 1, encode_stats_request()).write_to(&mut w)?;
+    expect(&mut reader, PayloadType::StatsResponse)?;
+    Ok(())
+}
+
+/// Read one frame and require it to be of type `want`.
+fn expect(reader: &mut FrameReader<TcpStream>, want: PayloadType) -> Result<()> {
+    match reader.next_frame() {
+        Ok(Some(f)) if f.payload_type == want => Ok(()),
+        Ok(Some(f)) => anyhow::bail!("expected {want:?}, got {:?}", f.payload_type),
+        Ok(None) => anyhow::bail!("connection closed awaiting {want:?}"),
+        Err(e) => anyhow::bail!("awaiting {want:?}: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_fails_fast_against_a_closed_port() {
+        // bind-then-drop guarantees an unserved port
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        drop(l);
+        assert!(probe(&addr, Duration::from_millis(250)).is_err());
+    }
+
+    #[test]
+    fn probe_times_out_against_a_silent_listener() {
+        // accepts but never answers: the hello-ack read must time out
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let _conn = l.accept();
+            std::thread::sleep(Duration::from_millis(600));
+        });
+        let err = probe(&addr, Duration::from_millis(150));
+        assert!(err.is_err(), "silent listener must fail the probe");
+        t.join().unwrap();
+    }
+}

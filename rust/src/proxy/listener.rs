@@ -1,0 +1,324 @@
+//! The proxy's client-facing TCP accept loop.
+//!
+//! Each accepted connection gets a reader thread (the connection's
+//! spawned thread) that decodes request frames, classifies them into
+//! [`ReqKind`]s, and hands them to [`ProxyCore::submit`]. There is no
+//! per-connection responder thread: responses are written by the
+//! per-*backend* link readers straight through the connection's
+//! shared [`ClientHandle`] — the same shared-write-half discipline
+//! the serve listener's `ConnWriter` uses.
+//!
+//! Hello negotiation is answered *locally* (the proxy is the client's
+//! protocol peer); the upstream links run their own hello with both
+//! capability bits, and response flags are relayed verbatim, so a
+//! client that negotiated backpressure or trace-echo sees exactly
+//! what the backend stamped.
+//!
+//! [`ReqKind`]: super::backend::ReqKind
+//! [`ProxyCore::submit`]: super::ProxyCore
+//! [`ClientHandle`]: super::backend::ClientHandle
+
+use std::collections::HashSet;
+use std::io::ErrorKind;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::serve::{
+    error_frame, negotiate, ErrorCode, Frame, FrameReader, PayloadType, WireError,
+    PROTOCOL_VERSION,
+};
+use crate::Result;
+
+use super::backend::{ClientHandle, ProxyPending, ReqKind};
+use super::{ProxyCore, POLL, WRITE_TIMEOUT};
+
+/// A running proxy front-end (accept loop + client connections).
+pub struct ProxyServeHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ProxyServeHandle {
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the accept loop and all client connections to wind
+    /// down, then join them.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the accept loop exits.
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Whether the accept loop has already exited — lets a supervisor
+    /// poll without blocking, as the CLI's signal loop does.
+    pub fn is_finished(&self) -> bool {
+        self.accept.as_ref().map(|h| h.is_finished()).unwrap_or(true)
+    }
+}
+
+/// Bind `addr` (port `0` for ephemeral) and serve framed requests
+/// over the proxy core until [`ProxyServeHandle::stop`].
+pub fn serve_proxy(addr: &str, core: Arc<ProxyCore>) -> Result<ProxyServeHandle> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            loop {
+                if stop.load(Ordering::SeqCst) || core.stopped() {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if stream.set_nonblocking(false).is_err() {
+                            continue;
+                        }
+                        let core = Arc::clone(&core);
+                        let stop = Arc::clone(&stop);
+                        conns.push(std::thread::spawn(move || {
+                            handle_conn(stream, &core, &stop);
+                        }));
+                        conns.retain(|h| !h.is_finished());
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    }
+                    Err(e) => {
+                        crate::error!("proxy", "accept failed: {e}");
+                        break;
+                    }
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        })
+    };
+    Ok(ProxyServeHandle { addr: local, stop, accept: Some(accept) })
+}
+
+/// Drive one client connection: read frames until EOF, a framing
+/// error, or stop; then close whatever streams it still has pinned.
+fn handle_conn(stream: TcpStream, core: &Arc<ProxyCore>, stop: &Arc<AtomicBool>) {
+    stream.set_nodelay(true).ok();
+    if stream.set_read_timeout(Some(POLL)).is_err()
+        || stream.set_write_timeout(Some(WRITE_TIMEOUT)).is_err()
+    {
+        return;
+    }
+    let writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let conn_id = core.next_conn_id();
+    let handle = ClientHandle {
+        stream: Arc::new(Mutex::new(writer)),
+        conn_id,
+        streams: Arc::new(Mutex::new(HashSet::new())),
+    };
+    let mut reader = FrameReader::new(stream);
+    let mut negotiated = PROTOCOL_VERSION; // implicit v1 until Hello
+    loop {
+        if stop.load(Ordering::SeqCst) || core.stopped() {
+            break;
+        }
+        let frame = match reader.next_frame() {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // clean EOF
+            Err(WireError::Io(e))
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => {
+                // alignment is lost; answer once (request id 0) and close
+                let _ = handle.write(&error_frame(0, e.code(), &e.to_string()));
+                break;
+            }
+        };
+        match frame.payload_type {
+            PayloadType::Hello => match negotiate(&frame.payload) {
+                Ok(n) => {
+                    negotiated = n.version;
+                    // grant locally: the upstream links negotiated both
+                    // capabilities, so whatever subset the client asked
+                    // for flows through end to end
+                    let ack_payload = if frame.payload.len() == 3 {
+                        vec![n.version, n.caps]
+                    } else {
+                        vec![n.version]
+                    };
+                    let ack = Frame::new(PayloadType::HelloAck, frame.request_id, ack_payload);
+                    if handle.write(&ack).is_err() {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ = handle.write(&error_frame(frame.request_id, e.code, &e.msg));
+                    break; // failed negotiation closes the connection
+                }
+            },
+            PayloadType::InferRequest
+            | PayloadType::DigitsInferRequest
+            | PayloadType::StatsRequest
+            | PayloadType::StreamOpen
+            | PayloadType::StreamAppend
+            | PayloadType::StreamReadOut
+            | PayloadType::StreamClose => {
+                if frame.version != negotiated {
+                    let msg =
+                        format!("frame version {} after negotiating v{negotiated}", frame.version);
+                    let _ = handle.write(&error_frame(
+                        frame.request_id,
+                        ErrorCode::UnsupportedVersion,
+                        &msg,
+                    ));
+                    continue;
+                }
+                let kind = match classify(&frame) {
+                    Ok(kind) => kind,
+                    Err(msg) => {
+                        // local decode error: the payload cannot even be
+                        // routed; the connection stays up
+                        let _ = handle.write(&error_frame(
+                            frame.request_id,
+                            ErrorCode::Malformed,
+                            &msg,
+                        ));
+                        continue;
+                    }
+                };
+                let now = Instant::now();
+                core.submit(ProxyPending {
+                    ty: frame.payload_type,
+                    flags: frame.flags,
+                    payload: frame.payload,
+                    external_id: frame.request_id,
+                    client: Some(handle.clone()),
+                    attempts: 0,
+                    deadline: now + core.opts.request_deadline,
+                    enqueued: now,
+                    kind,
+                });
+            }
+            // server→client types are invalid from a client
+            PayloadType::HelloAck
+            | PayloadType::InferResponse
+            | PayloadType::DigitsInferResponse
+            | PayloadType::StatsResponse
+            | PayloadType::StreamAck
+            | PayloadType::Error => {
+                let _ = handle.write(&error_frame(
+                    frame.request_id,
+                    ErrorCode::Malformed,
+                    &format!("{:?} frames are server-to-client only", frame.payload_type),
+                ));
+            }
+        }
+    }
+    // a vanished client releases its pinned backend lanes — the proxy
+    // closes them upstream so no stream outlives its transport
+    let open: Vec<u64> = {
+        let g = handle.streams.lock().expect("stream set poisoned");
+        g.iter().copied().collect()
+    };
+    core.close_client_streams(open);
+    if let Ok(g) = handle.stream.lock() {
+        let _ = g.shutdown(Shutdown::Write);
+    }
+}
+
+/// Classify a routable frame into its failover kind, extracting the
+/// stream id stream operations are pinned by.
+fn classify(frame: &Frame) -> std::result::Result<ReqKind, String> {
+    match frame.payload_type {
+        PayloadType::InferRequest | PayloadType::DigitsInferRequest | PayloadType::StatsRequest => {
+            Ok(ReqKind::OneShot)
+        }
+        PayloadType::StreamOpen => Ok(ReqKind::StreamOpen),
+        PayloadType::StreamAppend => {
+            // append payload: stream_id u64 BE + kind byte + chunk
+            if frame.payload.len() < 9 {
+                return Err(format!(
+                    "stream append payload must be at least 9 bytes, got {}",
+                    frame.payload.len()
+                ));
+            }
+            Ok(ReqKind::StreamOp { stream_id: be_u64(&frame.payload[..8]) })
+        }
+        PayloadType::StreamReadOut | PayloadType::StreamClose => {
+            if frame.payload.len() != 8 {
+                return Err(format!(
+                    "stream ref payload must be 8 bytes, got {}",
+                    frame.payload.len()
+                ));
+            }
+            Ok(ReqKind::StreamOp { stream_id: be_u64(&frame.payload[..8]) })
+        }
+        other => Err(format!("{other:?} is not routable")),
+    }
+}
+
+/// Big-endian u64 from an 8-byte slice.
+fn be_u64(b: &[u8]) -> u64 {
+    u64::from_be_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(ty: PayloadType, payload: Vec<u8>) -> Frame {
+        Frame::new(ty, 7, payload)
+    }
+
+    #[test]
+    fn classify_splits_one_shots_from_stream_ops() {
+        assert_eq!(
+            classify(&frame(PayloadType::InferRequest, vec![0, 1])),
+            Ok(ReqKind::OneShot)
+        );
+        assert_eq!(classify(&frame(PayloadType::StatsRequest, vec![])), Ok(ReqKind::OneShot));
+        assert_eq!(classify(&frame(PayloadType::StreamOpen, vec![])), Ok(ReqKind::StreamOpen));
+    }
+
+    #[test]
+    fn classify_extracts_the_pinning_stream_id() {
+        let mut append = 42u64.to_be_bytes().to_vec();
+        append.push(0); // kind byte
+        append.push(9); // one chunk byte
+        assert_eq!(
+            classify(&frame(PayloadType::StreamAppend, append)),
+            Ok(ReqKind::StreamOp { stream_id: 42 })
+        );
+        let close = 42u64.to_be_bytes().to_vec();
+        assert_eq!(
+            classify(&frame(PayloadType::StreamClose, close)),
+            Ok(ReqKind::StreamOp { stream_id: 42 })
+        );
+    }
+
+    #[test]
+    fn classify_rejects_undersized_stream_payloads() {
+        assert!(classify(&frame(PayloadType::StreamAppend, vec![1, 2, 3])).is_err());
+        assert!(classify(&frame(PayloadType::StreamReadOut, vec![1, 2, 3])).is_err());
+        assert!(classify(&frame(PayloadType::Error, vec![])).is_err());
+    }
+}

@@ -1,0 +1,610 @@
+//! The fault-tolerant proxy tier (`impulse proxy`).
+//!
+//! A front tier that speaks the framed protocol of `docs/PROTOCOL.md`
+//! on both sides: clients connect to the proxy exactly as they would
+//! to a single `impulse serve --listen` backend, and the proxy fans
+//! their requests out over a fleet of backends — re-keying request
+//! ids onto shared per-backend links the same way [`ServeCore`]
+//! re-keys client sessions onto its batcher queue. Full semantics in
+//! `docs/PROXY.md`; the pieces:
+//!
+//! - [`backend`] — the per-backend upstream link: shared write half,
+//!   the in-flight [`ProxyPending`] table, and the reader thread that
+//!   relays responses back to their clients.
+//! - [`router`] — routing policy: least-loaded within health-tiered
+//!   preference (healthy first, soft-limited next, draining last),
+//!   with spill accounting when a constrained backend sheds work.
+//! - [`health`] — active `StatsRequest` probes on fresh connections;
+//!   one failure demotes `Up → Draining`, repeated failure declares
+//!   `Down` (catches black-holed backends passive detection misses).
+//! - [`listener`] — the client-facing accept loop ([`serve_proxy`]):
+//!   local hello negotiation, per-frame classification into
+//!   [`ReqKind`], stream-id extraction for pin routing.
+//! - [`fault`] — the fault-injection relay ([`FaultRelay`]) tests and
+//!   `impulse loadgen --chaos` use to kill, stall, or black-hole a
+//!   backend mid-run.
+//!
+//! Failover contract: when a backend dies, in-flight **idempotent**
+//! requests (one-shots, unacknowledged opens) are transparently
+//! re-submitted to a survivor, bounded by `retry_max` attempts and
+//! the per-request `request_deadline`; stream-pinned requests are
+//! answered with [`ErrorCode::BackendLost`] — an honest error, never
+//! a hang — because the membrane state they address died with the
+//! backend. Streams (`StreamOpen`..`StreamAck`) pin to one backend
+//! for their whole life; everything else balances per request.
+//!
+//! [`ServeCore`]: crate::serve::ServeCore
+//! [`ErrorCode::BackendLost`]: crate::serve::ErrorCode::BackendLost
+//! [`ProxyPending`]: backend::ProxyPending
+//! [`ReqKind`]: backend::ReqKind
+//! [`serve_proxy`]: listener::serve_proxy
+//! [`FaultRelay`]: fault::FaultRelay
+
+#![warn(missing_docs)]
+
+pub mod backend;
+pub mod fault;
+pub mod health;
+pub mod listener;
+pub mod router;
+
+pub use backend::{BackendLink, ClientHandle, ProxyPending, ReqKind};
+pub use fault::{FaultMode, FaultRelay};
+pub use health::{probe, HEALTH_FAILS_TO_DOWN};
+pub use listener::{serve_proxy, ProxyServeHandle};
+pub use router::pick_backend;
+
+use std::collections::{HashMap, HashSet};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::obs::trace::{elapsed_us, Phase, Span, TraceRecorder};
+use crate::serve::{
+    error_frame, hello_caps_payload, ErrorCode, Frame, FrameReader, PayloadType,
+    PROTOCOL_VERSION, SUPPORTED_CAPS,
+};
+use crate::telemetry::{ProxyStats, BACKEND_DOWN, BACKEND_UP};
+use crate::Result;
+
+/// How long blocking reads poll before rechecking stop conditions
+/// (same cadence as the serve listener).
+const POLL: Duration = Duration::from_millis(50);
+
+/// Upper bound on one blocking socket write (see the serve listener's
+/// rationale: a peer that stops reading must not wedge a thread).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Configuration for [`ProxyCore::start`].
+#[derive(Clone)]
+pub struct ProxyOptions {
+    /// Backend addresses (at least one).
+    pub backends: Vec<String>,
+    /// Interval between active health-probe rounds.
+    pub health_interval: Duration,
+    /// Per-probe timeout (also bounds backend connect attempts).
+    pub health_timeout: Duration,
+    /// Maximum transparent re-submissions per idempotent request.
+    pub retry_max: u32,
+    /// Hard per-request deadline; re-submission never crosses it.
+    pub request_deadline: Duration,
+    /// First reconnect delay after a backend death (doubles per
+    /// failure up to `reconnect_max`).
+    pub reconnect_base: Duration,
+    /// Reconnect backoff ceiling.
+    pub reconnect_max: Duration,
+    /// Span recorder for `ProxyHop` spans (`--trace-dir`).
+    pub trace: Option<Arc<TraceRecorder>>,
+}
+
+impl ProxyOptions {
+    /// Defaults for `backends`: 500 ms health interval, 1 s probe
+    /// timeout, 2 retries, 10 s request deadline, 100 ms–5 s
+    /// reconnect backoff, no tracing.
+    pub fn new(backends: Vec<String>) -> ProxyOptions {
+        ProxyOptions {
+            backends,
+            health_interval: Duration::from_millis(500),
+            health_timeout: Duration::from_secs(1),
+            retry_max: 2,
+            request_deadline: Duration::from_secs(10),
+            reconnect_base: Duration::from_millis(100),
+            reconnect_max: Duration::from_secs(5),
+            trace: None,
+        }
+    }
+}
+
+/// The proxy's shared state: one [`BackendLink`] per backend, the
+/// stream pin map, and the failover machinery. One `ProxyCore` serves
+/// every client connection of one `impulse proxy` process.
+pub struct ProxyCore {
+    pub(crate) opts: ProxyOptions,
+    pub(crate) links: Vec<BackendLink>,
+    stats: Arc<ProxyStats>,
+    /// Upstream request-id generator. Global (not per-link) so a
+    /// stream id stays unique even if its open is re-submitted to a
+    /// different backend — and because backend stream tables are
+    /// scoped per connection, and all proxied clients share one
+    /// upstream connection per backend.
+    next_upstream_id: AtomicU64,
+    /// Upstream stream id → backend index, for the life of the stream.
+    pins: Mutex<HashMap<u64, usize>>,
+    /// Streams whose backend died: subsequent operations answer
+    /// `BackendLost` (not `StreamExpired` — the client should know
+    /// the state is gone through no fault of its own). Entries are
+    /// dropped when the owning client disconnects.
+    lost_streams: Mutex<HashSet<u64>>,
+    next_conn: AtomicU64,
+    stop: Arc<AtomicBool>,
+    trace: Option<Arc<TraceRecorder>>,
+    health: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ProxyCore {
+    /// Build the links (all starting `Down`), then spawn the
+    /// reconnect loops (which bring backends `Up`) and the health
+    /// prober. Returns immediately — callers that need a routable
+    /// fleet poll [`ProxyCore::up_backends`].
+    pub fn start(opts: ProxyOptions) -> Result<Arc<ProxyCore>> {
+        anyhow::ensure!(!opts.backends.is_empty(), "proxy needs at least one backend");
+        let stats = Arc::new(ProxyStats::new(&opts.backends));
+        let links = opts.backends.iter().map(|a| BackendLink::new(a.clone())).collect();
+        let trace = opts.trace.clone();
+        let core = Arc::new(ProxyCore {
+            opts,
+            links,
+            stats,
+            next_upstream_id: AtomicU64::new(1),
+            pins: Mutex::new(HashMap::new()),
+            lost_streams: Mutex::new(HashSet::new()),
+            next_conn: AtomicU64::new(1),
+            stop: Arc::new(AtomicBool::new(false)),
+            trace,
+            health: Mutex::new(None),
+        });
+        for idx in 0..core.links.len() {
+            spawn_reconnect(Arc::clone(&core), idx, Duration::ZERO);
+        }
+        let h = {
+            let core = Arc::clone(&core);
+            std::thread::spawn(move || health::health_loop(core))
+        };
+        *core.health.lock().expect("health handle poisoned") = Some(h);
+        Ok(core)
+    }
+
+    /// The per-backend counters (also the routing state source).
+    pub fn stats(&self) -> &ProxyStats {
+        &self.stats
+    }
+
+    /// Backends currently `Up` (routable and unconstrained or not).
+    pub fn up_backends(&self) -> usize {
+        self.stats.up_count()
+    }
+
+    /// The backend fleet, as given in [`ProxyOptions::backends`].
+    pub fn backend_addrs(&self) -> &[String] {
+        &self.opts.backends
+    }
+
+    /// Whether [`ProxyCore::shutdown`] has been called.
+    pub(crate) fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Take a fresh client connection id.
+    pub(crate) fn next_conn_id(&self) -> u64 {
+        self.next_conn.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Stop the health prober and reconnect loops and tear down every
+    /// upstream link. Reader threads notice within one poll tick.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for link in &self.links {
+            if let Some(s) = link.writer.lock().expect("writer poisoned").take() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        if let Some(h) = self.health.lock().expect("health handle poisoned").take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Route one client request. Stream operations follow their pin;
+    /// everything else loops over [`pick_backend`] until a forward
+    /// sticks, retries are exhausted, or no backend is left — in
+    /// which case the client gets an honest `BackendLost` answer.
+    pub(crate) fn submit(self: &Arc<Self>, mut p: ProxyPending) {
+        match p.kind {
+            ReqKind::StreamOp { stream_id } => {
+                let idx = self.pins.lock().expect("pins poisoned").get(&stream_id).copied();
+                match idx {
+                    Some(idx) => {
+                        if let Err(p) = self.forward(idx, p) {
+                            // the write tore the link down; this
+                            // stream's state died with it
+                            self.answer_backend_lost(&p, "backend died holding the stream");
+                        }
+                    }
+                    None if self.lost_streams.lock().expect("lost set poisoned").contains(&stream_id) => {
+                        self.answer_backend_lost(
+                            &p,
+                            &format!("stream {stream_id}'s backend died; re-open and replay"),
+                        );
+                    }
+                    None => {
+                        // never pinned here (or already closed): same
+                        // answer a backend gives for an unknown stream
+                        let msg = format!("stream {stream_id} is not open on this proxy");
+                        self.answer_error(&p, ErrorCode::StreamExpired, &msg);
+                    }
+                }
+            }
+            ReqKind::OneShot | ReqKind::StreamOpen => loop {
+                let Some(idx) = router::pick_backend(&self.links, &self.stats) else {
+                    self.stats.record_no_backend();
+                    self.answer_backend_lost(&p, "no healthy backend");
+                    return;
+                };
+                match self.forward(idx, p) {
+                    Ok(()) => return,
+                    Err(back) => {
+                        p = back;
+                        p.attempts += 1;
+                        if p.attempts > self.opts.retry_max || Instant::now() >= p.deadline {
+                            self.answer_backend_lost(&p, "retries exhausted");
+                            return;
+                        }
+                        self.stats.record_retry(idx);
+                    }
+                }
+            },
+        }
+    }
+
+    /// Re-key the request onto a fresh upstream id, register it in
+    /// the link's pending table, and write it. On a write failure the
+    /// pending entry is reclaimed (`Err`) and the link reported down;
+    /// `Ok` after a failed write means a concurrent death report
+    /// already drained the entry and owns its fate.
+    pub(crate) fn forward(self: &Arc<Self>, idx: usize, p: ProxyPending) -> std::result::Result<(), ProxyPending> {
+        let link = &self.links[idx];
+        let uid = self.next_upstream_id.fetch_add(1, Ordering::SeqCst);
+        if matches!(p.kind, ReqKind::StreamOpen) {
+            // provisional pin: retracted if the open errors or its
+            // backend dies before acknowledging
+            self.pins.lock().expect("pins poisoned").insert(uid, idx);
+            if let Some(c) = &p.client {
+                c.streams.lock().expect("stream set poisoned").insert(uid);
+            }
+        }
+        let frame = Frame::new(p.ty, uid, p.payload.clone()).with_flags(p.flags);
+        link.pending.lock().expect("pending poisoned").insert(uid, p);
+        self.stats.record_request(idx);
+        let generation = link.generation.load(Ordering::SeqCst);
+        let wrote = {
+            let mut g = link.writer.lock().expect("writer poisoned");
+            match g.as_mut() {
+                Some(s) => frame.write_to(s).is_ok(),
+                None => false,
+            }
+        };
+        if wrote {
+            return Ok(());
+        }
+        let reclaimed = link.pending.lock().expect("pending poisoned").remove(&uid);
+        if let Some(p) = &reclaimed {
+            self.stats.record_done(idx);
+            if matches!(p.kind, ReqKind::StreamOpen) {
+                self.pins.lock().expect("pins poisoned").remove(&uid);
+                if let Some(c) = &p.client {
+                    c.streams.lock().expect("stream set poisoned").remove(&uid);
+                }
+            }
+        }
+        self.link_down(idx, generation, "write failed");
+        match reclaimed {
+            Some(p) => Err(p),
+            None => Ok(()), // a concurrent death report drained it first
+        }
+    }
+
+    /// A response frame arrived on backend `idx`'s link: fold in its
+    /// backpressure advertisement, match it to its pending request,
+    /// maintain the pin map, re-key it to the client's request id and
+    /// relay it.
+    pub(crate) fn on_upstream_frame(&self, idx: usize, f: Frame) {
+        let link = &self.links[idx];
+        link.observe_flags(f.flags);
+        let p = match link.pending.lock().expect("pending poisoned").remove(&f.request_id) {
+            Some(p) => p,
+            None => return, // stale answer from before a failover — drop
+        };
+        self.stats.record_done(idx);
+        let is_error = f.payload_type == PayloadType::Error;
+        match p.kind {
+            ReqKind::StreamOpen => {
+                if is_error {
+                    // the open failed (e.g. stream cap): retract the pin
+                    self.pins.lock().expect("pins poisoned").remove(&f.request_id);
+                    if let Some(c) = &p.client {
+                        c.streams.lock().expect("stream set poisoned").remove(&f.request_id);
+                    }
+                }
+            }
+            ReqKind::StreamOp { stream_id } => {
+                let gone = if p.ty == PayloadType::StreamClose {
+                    // closed (or errored while closing): the pin is done
+                    true
+                } else if is_error {
+                    // only errors that actually evict backend state end
+                    // the pin — a Malformed append leaves the lane alive
+                    matches!(
+                        crate::serve::decode_error(&f.payload),
+                        Ok((code, _))
+                            if code == ErrorCode::StreamExpired.as_u16()
+                                || code == ErrorCode::InferenceFailed.as_u16()
+                    )
+                } else {
+                    false
+                };
+                if gone {
+                    self.pins.lock().expect("pins poisoned").remove(&stream_id);
+                    self.lost_streams.lock().expect("lost set poisoned").remove(&stream_id);
+                    if let Some(c) = &p.client {
+                        c.streams.lock().expect("stream set poisoned").remove(&stream_id);
+                    }
+                }
+            }
+            ReqKind::OneShot => {}
+        }
+        if let Some(c) = &p.client {
+            let mut out = f;
+            out.request_id = p.external_id;
+            // flags (backpressure advertisement, trace-echo bit) are
+            // relayed verbatim — the backend's word is the truth the
+            // client negotiated for
+            let _ = c.write(&out);
+        }
+        self.record_hop(&p, !is_error);
+    }
+
+    /// Backend `idx`'s link (of generation `generation`) died. Tear
+    /// the socket down, fail over its streams, drain its in-flight
+    /// table — re-submitting idempotent work, answering the rest with
+    /// `BackendLost` — and start the reconnect loop. Idempotent: the
+    /// generation check and the `Down` swap make concurrent reports
+    /// (reader error, failed write, health prober) collapse to one.
+    pub(crate) fn link_down(self: &Arc<Self>, idx: usize, generation: u64, cause: &str) {
+        if self.stopped() {
+            return;
+        }
+        let link = &self.links[idx];
+        if link.generation.load(Ordering::SeqCst) != generation {
+            return; // a newer link already replaced the one that died
+        }
+        let prior = self.stats.set_state(idx, BACKEND_DOWN);
+        if prior == BACKEND_DOWN {
+            return; // another report got here first
+        }
+        self.stats.record_failover(idx);
+        crate::warn!("proxy", "backend {} down ({cause}); failing over", link.addr);
+        if let Some(s) = link.writer.lock().expect("writer poisoned").take() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        link.soft_limited.store(false, Ordering::Relaxed);
+        link.depth.store(0, Ordering::Relaxed);
+        link.health_fails.store(0, Ordering::SeqCst);
+        // streams pinned here lost their membrane state with the backend
+        let mut lost: HashSet<u64> = {
+            let mut pins = self.pins.lock().expect("pins poisoned");
+            let ids: Vec<u64> =
+                pins.iter().filter(|&(_, &i)| i == idx).map(|(&s, _)| s).collect();
+            for s in &ids {
+                pins.remove(s);
+            }
+            ids.into_iter().collect()
+        };
+        // drain in-flight work: re-submit what is provably safe
+        // (stateless one-shots; opens never acknowledged), answer the
+        // rest honestly
+        let drained: Vec<(u64, ProxyPending)> = {
+            let mut pend = link.pending.lock().expect("pending poisoned");
+            pend.drain().collect()
+        };
+        let now = Instant::now();
+        for (uid, mut p) in drained {
+            self.stats.record_done(idx);
+            let retryable = matches!(p.kind, ReqKind::OneShot | ReqKind::StreamOpen);
+            if retryable && p.attempts < self.opts.retry_max && now < p.deadline {
+                if matches!(p.kind, ReqKind::StreamOpen) {
+                    // the open never surfaced to the client: retract its
+                    // provisional bookkeeping and let it pin fresh
+                    lost.remove(&uid);
+                    if let Some(c) = &p.client {
+                        c.streams.lock().expect("stream set poisoned").remove(&uid);
+                    }
+                }
+                p.attempts += 1;
+                self.stats.record_retry(idx);
+                self.submit(p);
+            } else {
+                self.answer_backend_lost(&p, cause);
+            }
+        }
+        if !lost.is_empty() {
+            crate::warn!(
+                "proxy",
+                "backend {}: {} pinned stream(s) lost their membrane state",
+                link.addr,
+                lost.len()
+            );
+            let mut set = self.lost_streams.lock().expect("lost set poisoned");
+            for s in lost {
+                set.insert(s);
+                self.stats.record_stream_lost(idx);
+            }
+        }
+        spawn_reconnect(Arc::clone(self), idx, self.opts.reconnect_base);
+    }
+
+    /// A client connection vanished: close its still-pinned streams
+    /// on their backends (fire-and-forget janitorial frames — the
+    /// backend TTL sweep is the backstop) and drop its lost-stream
+    /// tombstones.
+    pub(crate) fn close_client_streams(self: &Arc<Self>, ids: Vec<u64>) {
+        let now = Instant::now();
+        for sid in ids {
+            self.lost_streams.lock().expect("lost set poisoned").remove(&sid);
+            let idx = self.pins.lock().expect("pins poisoned").get(&sid).copied();
+            let Some(idx) = idx else { continue };
+            let p = ProxyPending {
+                ty: PayloadType::StreamClose,
+                flags: 0,
+                payload: crate::serve::encode_stream_ref(sid),
+                external_id: 0,
+                client: None,
+                attempts: self.opts.retry_max, // never re-submitted
+                deadline: now,
+                enqueued: now,
+                kind: ReqKind::StreamOp { stream_id: sid },
+            };
+            let _ = self.forward(idx, p);
+        }
+    }
+
+    /// Answer a request with an `Error` frame (when it has a client
+    /// to answer) and close out its proxy-hop span.
+    fn answer_error(&self, p: &ProxyPending, code: ErrorCode, msg: &str) {
+        if let Some(c) = &p.client {
+            let _ = c.write(&error_frame(p.external_id, code, msg));
+        }
+        self.record_hop(p, false);
+    }
+
+    /// The honest failover answer: the backend this request (or its
+    /// stream) was routed to is gone and transparent recovery was not
+    /// possible.
+    fn answer_backend_lost(&self, p: &ProxyPending, why: &str) {
+        self.answer_error(p, ErrorCode::BackendLost, &format!("backend lost: {why}"));
+    }
+
+    /// Record this request's dwell inside the proxy as a `ProxyHop`
+    /// span (request accepted → response relayed / error answered).
+    fn record_hop(&self, p: &ProxyPending, ok: bool) {
+        if let Some(tr) = self.trace.as_deref() {
+            let conn = p.client.as_ref().map(|c| c.conn_id).unwrap_or(0);
+            tr.record(
+                Span::new(
+                    Phase::ProxyHop,
+                    tr.next_trace_id(),
+                    p.external_id,
+                    conn,
+                    tr.us_of(p.enqueued),
+                    elapsed_us(p.enqueued),
+                )
+                .with_ok(ok),
+            );
+        }
+    }
+
+    /// Dial backend `idx`, run the extended hello (both capability
+    /// bits, so backpressure advertisements and trace-echo trailers
+    /// flow through the link), install the writer, and spawn the
+    /// link's reader thread under a fresh generation.
+    fn connect_link(self: &Arc<Self>, idx: usize) -> Result<()> {
+        let link = &self.links[idx];
+        let sa = resolve(&link.addr)?;
+        let stream = TcpStream::connect_timeout(&sa, self.opts.health_timeout)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(self.opts.health_timeout))?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+        let mut w = stream.try_clone()?;
+        Frame::new(
+            PayloadType::Hello,
+            0,
+            hello_caps_payload(PROTOCOL_VERSION, PROTOCOL_VERSION, SUPPORTED_CAPS),
+        )
+        .write_to(&mut w)?;
+        let mut reader = FrameReader::new(stream.try_clone()?);
+        match reader.next_frame() {
+            Ok(Some(f)) if f.payload_type == PayloadType::HelloAck => {}
+            Ok(Some(f)) => {
+                anyhow::bail!("backend {} answered hello with {:?}", link.addr, f.payload_type)
+            }
+            Ok(None) => anyhow::bail!("backend {} closed during hello", link.addr),
+            Err(e) => anyhow::bail!("backend {} hello failed: {e}", link.addr),
+        }
+        // socket options are shared across the clones: from here the
+        // reader polls at the listener cadence
+        stream.set_read_timeout(Some(POLL))?;
+        let generation = link.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        *link.writer.lock().expect("writer poisoned") = Some(w);
+        link.soft_limited.store(false, Ordering::Relaxed);
+        link.depth.store(0, Ordering::Relaxed);
+        link.health_fails.store(0, Ordering::SeqCst);
+        self.stats.set_state(idx, BACKEND_UP);
+        crate::info!("proxy", "backend {} up (generation {generation})", link.addr);
+        let core = Arc::clone(self);
+        std::thread::spawn(move || backend::link_reader(core, idx, generation, reader));
+        Ok(())
+    }
+}
+
+/// Spawn the reconnect loop for backend `idx`: try after
+/// `initial_delay`, then back off exponentially (base → ×2 → capped)
+/// until the link connects or the proxy stops.
+fn spawn_reconnect(core: Arc<ProxyCore>, idx: usize, initial_delay: Duration) {
+    std::thread::spawn(move || {
+        let mut delay = initial_delay;
+        loop {
+            if delay > Duration::ZERO && !sleep_while_running(&core, delay) {
+                return;
+            }
+            if core.stopped() {
+                return;
+            }
+            match core.connect_link(idx) {
+                Ok(()) => return,
+                Err(e) => {
+                    crate::debug!(
+                        "proxy",
+                        "backend {} connect failed: {e:#}",
+                        core.links[idx].addr
+                    );
+                    delay = if delay.is_zero() {
+                        core.opts.reconnect_base
+                    } else {
+                        (delay * 2).min(core.opts.reconnect_max)
+                    };
+                }
+            }
+        }
+    });
+}
+
+/// Sleep `total` in short slices, waking early on shutdown. Returns
+/// `false` when the proxy stopped mid-sleep.
+pub(crate) fn sleep_while_running(core: &ProxyCore, total: Duration) -> bool {
+    let mut left = total;
+    while left > Duration::ZERO {
+        if core.stopped() {
+            return false;
+        }
+        let slice = left.min(Duration::from_millis(25));
+        std::thread::sleep(slice);
+        left = left.saturating_sub(slice);
+    }
+    !core.stopped()
+}
+
+/// Resolve an address string to its first socket address.
+pub(crate) fn resolve(addr: &str) -> Result<SocketAddr> {
+    addr.to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("cannot resolve '{addr}'"))
+}

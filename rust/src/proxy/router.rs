@@ -1,0 +1,126 @@
+//! Routing policy: least-loaded within health-tiered preference.
+//!
+//! New (un-pinned) requests go to the least-loaded backend of the
+//! best available health tier:
+//!
+//! 1. `Up` and not soft-limited — healthy, unconstrained;
+//! 2. `Up` but advertising the soft limit — answering, asked us to
+//!    slow down;
+//! 3. `Draining` — suspect (one failed health probe), finishes what
+//!    it has, takes new work only when every peer is worse.
+//!
+//! `Down` backends are never routable. Stream-pinned requests bypass
+//! this entirely — the pin map in [`ProxyCore`] owns them.
+//!
+//! [`ProxyCore`]: super::ProxyCore
+
+use std::sync::atomic::Ordering;
+
+use crate::telemetry::{ProxyStats, BACKEND_DOWN, BACKEND_DRAINING, BACKEND_UP};
+
+use super::backend::BackendLink;
+
+/// The health tier a backend routes in right now (lower is better),
+/// or `None` when it is not routable at all.
+fn tier(link: &BackendLink, state: u8) -> Option<u8> {
+    match state {
+        BACKEND_UP if !link.soft_limited.load(Ordering::Relaxed) => Some(0),
+        BACKEND_UP => Some(1),
+        BACKEND_DRAINING => Some(2),
+        _ => None, // BACKEND_DOWN
+    }
+}
+
+/// Pick the backend index for a new request, or `None` when every
+/// backend is down. Records a spill against each constrained backend
+/// that plain least-loaded routing would have chosen (equal-or-lower
+/// load, worse tier) — the observable trace of soft-limit shedding.
+pub fn pick_backend(links: &[BackendLink], stats: &ProxyStats) -> Option<usize> {
+    let mut best: Option<(u8, u64, usize)> = None;
+    for (idx, link) in links.iter().enumerate() {
+        let Some(t) = tier(link, stats.state(idx)) else { continue };
+        let load = link.load(stats.in_flight(idx));
+        let better = match best {
+            None => true,
+            Some((bt, bl, _)) => (t, load) < (bt, bl),
+        };
+        if better {
+            best = Some((t, load, idx));
+        }
+    }
+    let (pick_tier, pick_load, pick) = best?;
+    for (idx, link) in links.iter().enumerate() {
+        if idx == pick {
+            continue;
+        }
+        let Some(t) = tier(link, stats.state(idx)) else { continue };
+        if t > pick_tier && link.load(stats.in_flight(idx)) <= pick_load {
+            stats.record_spill(idx);
+        }
+    }
+    Some(pick)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: usize) -> (Vec<BackendLink>, ProxyStats) {
+        let addrs: Vec<String> = (0..n).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect();
+        let links = addrs.iter().map(|a| BackendLink::new(a.clone())).collect();
+        (links, ProxyStats::new(&addrs))
+    }
+
+    #[test]
+    fn all_down_routes_nowhere() {
+        let (links, stats) = fleet(2);
+        assert_eq!(pick_backend(&links, &stats), None);
+    }
+
+    #[test]
+    fn least_loaded_wins_within_the_healthy_tier() {
+        let (links, stats) = fleet(3);
+        for i in 0..3 {
+            stats.set_state(i, BACKEND_UP);
+        }
+        stats.record_request(0);
+        stats.record_request(0);
+        stats.record_request(2);
+        assert_eq!(pick_backend(&links, &stats), Some(1));
+    }
+
+    #[test]
+    fn advertised_depth_counts_toward_load() {
+        let (links, stats) = fleet(2);
+        stats.set_state(0, BACKEND_UP);
+        stats.set_state(1, BACKEND_UP);
+        // backend 0 advertised a deep queue; 1 is idle
+        links[0].depth.store(10, Ordering::Relaxed);
+        assert_eq!(pick_backend(&links, &stats), Some(1));
+    }
+
+    #[test]
+    fn soft_limited_backends_shed_new_work_and_the_spill_is_counted() {
+        let (links, stats) = fleet(2);
+        stats.set_state(0, BACKEND_UP);
+        stats.set_state(1, BACKEND_UP);
+        links[0].soft_limited.store(true, Ordering::Relaxed);
+        // 0 is less loaded, but soft-limited: 1 gets the work
+        stats.record_request(1);
+        assert_eq!(pick_backend(&links, &stats), Some(1));
+        assert_eq!(stats.snapshot()[0].spills, 1);
+    }
+
+    #[test]
+    fn draining_is_routable_only_as_a_last_resort() {
+        let (links, stats) = fleet(2);
+        stats.set_state(0, BACKEND_DRAINING);
+        stats.set_state(1, BACKEND_UP);
+        // the draining backend is idle, the up one loaded — up still wins
+        stats.record_request(1);
+        assert_eq!(pick_backend(&links, &stats), Some(1));
+        // with the up one gone, draining beats nothing
+        stats.set_state(1, BACKEND_DOWN);
+        assert_eq!(pick_backend(&links, &stats), Some(0));
+    }
+}

@@ -13,11 +13,18 @@
 //! Scenarios are deterministic: every random choice (request mix,
 //! chunk sizes, fuzz mutations) flows from the scenario seed through
 //! [`XorShiftRng`], so a failing run reproduces with the same seed.
+//!
+//! `--chaos` schedules one mid-run fault on top of any scenario
+//! ([`run_scenario_chaos`]): stall or black-hole the path through an
+//! interposed [`FaultRelay`], or `kill -9` a process (typically one
+//! backend behind an `impulse proxy`) — then judge the same envelope,
+//! so resilience claims are asserted, not assumed.
 
 use crate::bits::XorShiftRng;
 use crate::config::TomlDoc;
 use crate::coordinator::WorkloadInput;
 use crate::obs::trace::{elapsed_us, Phase, Span, TraceRecorder};
+use crate::proxy::{FaultMode, FaultRelay};
 use crate::serve::{FrameClient, ServerError};
 use crate::telemetry::{Transport, TransportStats};
 use crate::Result;
@@ -45,6 +52,50 @@ impl Default for Envelope {
     fn default() -> Envelope {
         Envelope { min_ok: 1, max_error_rate: 0.0, max_p99_us: 0 }
     }
+}
+
+/// What `--chaos` does to the traffic path mid-run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosMode {
+    /// `kill -9` the given pid — typically one backend behind an
+    /// `impulse proxy`, so the run asserts failover, not survival of
+    /// the process itself. Not restored; death is not reversible.
+    Kill {
+        /// The process id to kill.
+        pid: u32,
+    },
+    /// Stall the interposed relay: bytes stop moving in both
+    /// directions but nothing errors — a wedged process under an
+    /// intact TCP session.
+    Stall,
+    /// Black-hole the interposed relay: bytes are read and silently
+    /// discarded — the connection looks healthy and only an answer
+    /// timeout can tell.
+    Blackhole,
+}
+
+impl ChaosMode {
+    /// The relay mode this chaos shape maps to (`None` for kill,
+    /// which targets a process, not the relay).
+    fn fault_mode(self) -> Option<FaultMode> {
+        match self {
+            ChaosMode::Kill { .. } => None,
+            ChaosMode::Stall => Some(FaultMode::Stall),
+            ChaosMode::Blackhole => Some(FaultMode::Blackhole),
+        }
+    }
+}
+
+/// One scheduled mid-run fault (`impulse loadgen --chaos`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosSpec {
+    /// The fault to inject.
+    pub mode: ChaosMode,
+    /// How long after traffic starts the fault fires.
+    pub after: Duration,
+    /// How long the fault lasts before the path is restored. Ignored
+    /// by [`ChaosMode::Kill`].
+    pub duration: Duration,
 }
 
 /// One scripted traffic scenario.
@@ -307,7 +358,9 @@ fn random_image(rng: &mut XorShiftRng) -> WorkloadInput {
 fn run_conn(addr: &str, sc: &Scenario, idx: usize, trace: Option<&TraceRecorder>) -> Tally {
     let mut tally = Tally::default();
     let mut rng = XorShiftRng::new(sc.seed ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-    let mut client = match FrameClient::connect(addr) {
+    // ride out a momentary refusal (proxy failover window, backend
+    // restart) instead of charging a transport error on first contact
+    let mut client = match FrameClient::connect_with_backoff(addr, 4, Duration::from_millis(50)) {
         Ok(c) => c,
         Err(_) => {
             tally.transport += 1;
@@ -529,15 +582,68 @@ pub fn run_scenario_traced(
     scenario: &Scenario,
     trace: Option<Arc<TraceRecorder>>,
 ) -> Result<LoadgenReport> {
+    run_scenario_chaos(addr, scenario, trace, None)
+}
+
+/// [`run_scenario_traced`] with one scheduled mid-run fault. For
+/// [`ChaosMode::Stall`] and [`ChaosMode::Blackhole`] the traffic is
+/// driven through an interposed [`FaultRelay`] whose mode flips to
+/// the fault `after` into the run and back to pass-through `duration`
+/// later — the server is untouched, the *path* degrades, so the run
+/// measures client (or proxy) resilience. [`ChaosMode::Kill`] sends
+/// `kill -9` to the given pid instead. The envelope's before/after
+/// stats are always read from `addr` directly, never through the
+/// relay, and the post-run liveness probe runs after the fault window
+/// has closed.
+pub fn run_scenario_chaos(
+    addr: &str,
+    scenario: &Scenario,
+    trace: Option<Arc<TraceRecorder>>,
+    chaos: Option<ChaosSpec>,
+) -> Result<LoadgenReport> {
+    let relay = match chaos.as_ref().and_then(|c| c.mode.fault_mode()) {
+        Some(_) => Some(Arc::new(FaultRelay::start(addr)?)),
+        None => None,
+    };
+    // stall/blackhole interpose the relay on the traffic path; kill
+    // (and no chaos at all) drive the server directly
+    let target = match &relay {
+        Some(r) => r.local_addr().to_string(),
+        None => addr.to_string(),
+    };
+
     let mut stats_client = FrameClient::connect(addr)
         .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e} (is `impulse serve` up?)"))?;
     stats_client.hello()?;
     let (before, _) = stats_client.stats()?;
 
     let t0 = Instant::now();
+    // the fault clock starts with the traffic
+    let chaos_timer = chaos.map(|spec| {
+        let relay = relay.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(spec.after);
+            match (spec.mode, relay) {
+                (ChaosMode::Kill { pid }, _) => {
+                    let _ = std::process::Command::new("kill")
+                        .args(["-9", &pid.to_string()])
+                        .status();
+                }
+                (mode, Some(relay)) => {
+                    if let Some(m) = mode.fault_mode() {
+                        relay.set_mode(m);
+                        std::thread::sleep(spec.duration);
+                        relay.set_mode(FaultMode::Pass);
+                    }
+                }
+                (_, None) => {}
+            }
+        })
+    });
+
     let mut threads: Vec<std::thread::JoinHandle<Tally>> = Vec::new();
     for idx in 0..scenario.connections {
-        let addr = addr.to_string();
+        let addr = target.clone();
         let sc = scenario.clone();
         let trace = trace.clone();
         threads.push(std::thread::spawn(move || {
@@ -550,7 +656,7 @@ pub fn run_scenario_traced(
         }));
     }
     for idx in 0..scenario.slow_loris {
-        let addr = addr.to_string();
+        let addr = target.clone();
         let sc = scenario.clone();
         let trace = trace.clone();
         threads.push(std::thread::spawn(move || {
@@ -558,7 +664,7 @@ pub fn run_scenario_traced(
         }));
     }
     if scenario.fuzz_frames > 0 {
-        let addr = addr.to_string();
+        let addr = target.clone();
         let sc = scenario.clone();
         threads.push(std::thread::spawn(move || run_fuzz(&addr, &sc)));
     }
@@ -572,9 +678,16 @@ pub fn run_scenario_traced(
     }
     let elapsed = t0.elapsed();
 
-    // liveness probe: after fuzz/slow-loris abuse a fresh client must
-    // still be served normally
-    let mut probe = FrameClient::connect(addr)?;
+    // the fault window is part of the run: wait until the path is
+    // restored (or the kill has fired) before judging liveness
+    if let Some(t) = chaos_timer {
+        let _ = t.join();
+    }
+
+    // liveness probe: after fuzz/slow-loris/chaos abuse a fresh client
+    // must still be served normally (through the restored relay when
+    // one is interposed)
+    let mut probe = FrameClient::connect(target.as_str())?;
     probe.hello()?;
     let pending = probe.call(&WorkloadInput::Words(vec![1, 2, 3]))?;
     let live = probe.wait(&pending);
@@ -658,6 +771,21 @@ mod tests {
         // unspecified keys keep the smoke defaults
         assert_eq!(s.requests_per_conn, Scenario::default().requests_per_conn);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn chaos_modes_map_to_relay_faults() {
+        assert_eq!(ChaosMode::Stall.fault_mode(), Some(FaultMode::Stall));
+        assert_eq!(ChaosMode::Blackhole.fault_mode(), Some(FaultMode::Blackhole));
+        // kill targets a process, not the relay
+        assert_eq!(ChaosMode::Kill { pid: 1 }.fault_mode(), None);
+        let spec = ChaosSpec {
+            mode: ChaosMode::Stall,
+            after: Duration::from_millis(500),
+            duration: Duration::from_millis(1000),
+        };
+        let copy = spec;
+        assert_eq!(spec, copy);
     }
 
     #[test]

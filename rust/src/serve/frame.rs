@@ -213,6 +213,13 @@ pub enum ErrorCode {
     /// The server's stream table is full (`--max-streams`); the open
     /// was rejected. The connection stays usable.
     StreamLimit,
+    /// A proxy tier lost the backend this request (or the stream it
+    /// belonged to) was routed to, and could not transparently
+    /// re-submit it — non-idempotent, out of retries, or past its
+    /// deadline. Streams must be re-opened (the membrane state died
+    /// with the backend); one-shots may simply be retried. The
+    /// connection to the proxy stays usable.
+    BackendLost,
 }
 
 impl ErrorCode {
@@ -231,6 +238,7 @@ impl ErrorCode {
             ErrorCode::RequestTooLarge => 10,
             ErrorCode::StreamExpired => 11,
             ErrorCode::StreamLimit => 12,
+            ErrorCode::BackendLost => 13,
         }
     }
 
@@ -249,6 +257,7 @@ impl ErrorCode {
             10 => Some(ErrorCode::RequestTooLarge),
             11 => Some(ErrorCode::StreamExpired),
             12 => Some(ErrorCode::StreamLimit),
+            13 => Some(ErrorCode::BackendLost),
             _ => None,
         }
     }

@@ -16,7 +16,7 @@
 //! as the byte-identical implementation the trait delegates to.
 
 use super::frame::{decode_backpressure, ErrorCode, Frame, FrameReader, PayloadType,
-    PROTOCOL_VERSION};
+    WireError, PROTOCOL_VERSION};
 use super::stream::StreamTable;
 use crate::coordinator::{
     InferenceServer, Request, Response, ServerOptions, Submitter, Workload, WorkloadInput,
@@ -31,7 +31,7 @@ use std::collections::HashMap;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------
 // Payload codecs (see docs/PROTOCOL.md §4)
@@ -1543,6 +1543,36 @@ impl FrameClient {
         })
     }
 
+    /// Connect with bounded retries and exponential backoff: up to
+    /// `attempts` connection attempts, sleeping `base` after the first
+    /// failure and doubling (capped at 5 s) between the rest. Lets a
+    /// client ride out a proxy or backend restart instead of erroring
+    /// on the first refused connection.
+    pub fn connect_with_backoff(
+        addr: impl std::net::ToSocketAddrs + Clone,
+        attempts: u32,
+        base: Duration,
+    ) -> Result<FrameClient> {
+        let attempts = attempts.max(1);
+        let mut delay = base;
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..attempts {
+            match FrameClient::connect(addr.clone()) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    last = Some(e);
+                    if attempt + 1 < attempts {
+                        std::thread::sleep(delay);
+                        delay = (delay * 2).min(Duration::from_secs(5));
+                    }
+                }
+            }
+        }
+        Err(last
+            .expect("at least one attempt was made")
+            .context(format!("connect failed after {attempts} attempt(s)")))
+    }
+
     /// Set the socket read timeout (both halves share the socket).
     pub fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
         self.w.set_read_timeout(d)?;
@@ -1643,6 +1673,79 @@ impl FrameClient {
     ) -> Result<(WorkloadOutput, Option<TraceEcho>)> {
         let f = self.frame_for(pending.id)?;
         decode_output_traced(&f)
+    }
+
+    /// Like [`FrameClient::wait`], but with a per-request deadline:
+    /// bails if `pending`'s response has not arrived within `timeout`.
+    /// The connection stays usable after a deadline miss — a partial
+    /// frame's bytes are preserved by the reader's carry buffer, and a
+    /// later wait (or [`FrameClient::wait_timeout`] retry) picks up
+    /// where the read left off. The previously configured socket read
+    /// timeout is restored on every exit path.
+    pub fn wait_timeout(
+        &mut self,
+        pending: &Pending<WorkloadOutput>,
+        timeout: Duration,
+    ) -> Result<WorkloadOutput> {
+        let f = self.frame_for_deadline(pending.id, timeout)?;
+        decode_output(&f)
+    }
+
+    /// [`FrameClient::frame_for`] with a deadline: polls the socket in
+    /// short read-timeout slices (the frame reader's carry buffer
+    /// keeps partial frames across slices) and bails once `timeout`
+    /// has elapsed without `id`'s response.
+    fn frame_for_deadline(&mut self, id: u64, timeout: Duration) -> Result<Frame> {
+        if let Some(f) = self.stash.remove(&id) {
+            return Ok(f);
+        }
+        let deadline = Instant::now() + timeout;
+        let prev = self.w.read_timeout().ok().flatten();
+        let restore = |w: &TcpStream| {
+            w.set_read_timeout(prev).ok();
+        };
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                restore(&self.w);
+                anyhow::bail!(
+                    "request {id}: no response within {}ms",
+                    timeout.as_millis()
+                );
+            }
+            if self.w.set_read_timeout(Some(left.min(Duration::from_millis(50)))).is_err() {
+                restore(&self.w);
+                anyhow::bail!("request {id}: failed to arm the read timeout");
+            }
+            match self.reader.next_frame() {
+                Ok(None) => {
+                    restore(&self.w);
+                    anyhow::bail!("connection closed while awaiting request {id}");
+                }
+                Ok(Some(f)) => {
+                    if let Some(p) = self.pacer.as_mut() {
+                        p.observe(f.flags);
+                    }
+                    if f.request_id == id {
+                        restore(&self.w);
+                        return Ok(f);
+                    }
+                    self.stash.insert(f.request_id, f);
+                }
+                // a read-timeout slice elapsed mid-frame: the carry
+                // buffer holds what arrived; keep polling until the
+                // overall deadline
+                Err(WireError::Io(e))
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) => {}
+                Err(e) => {
+                    restore(&self.w);
+                    return Err(anyhow::Error::from(e));
+                }
+            }
+        }
     }
 
     /// Read frames until `id`'s response shows up, stashing frames

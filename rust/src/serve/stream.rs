@@ -156,6 +156,13 @@ impl StreamTable {
         }
         if t.by_key.len() >= self.max_streams {
             self.telemetry.record_stream_rejected();
+            crate::warn!(
+                "stream",
+                "rejected stream open conn={conn} stream_id={stream_id} \
+                 live={} cap={} reason=cap",
+                t.by_key.len(),
+                self.max_streams
+            );
             return Err(StreamError::new(
                 ErrorCode::StreamLimit,
                 format!("stream limit reached ({} live sessions)", self.max_streams),
@@ -354,17 +361,26 @@ impl StreamTable {
 
     fn sweep_locked(&self, t: &mut TableInner, now: Instant) {
         let ttl = self.ttl;
-        let dead: Vec<(u64, u64)> = t
+        let dead: Vec<(u64, u64, Duration)> = t
             .lanes
             .iter()
             .filter_map(|l| l.owner.as_ref())
             .filter(|o| now.duration_since(o.last_used) >= ttl)
-            .map(|o| (o.conn, o.id))
+            .map(|o| (o.conn, o.id, now.duration_since(o.last_used)))
             .collect();
-        for key in dead {
-            if let Some(lane) = t.by_key.remove(&key) {
+        for (conn, id, idle) in dead {
+            if let Some(lane) = t.by_key.remove(&(conn, id)) {
                 t.lanes[lane].owner = None;
                 self.telemetry.record_stream_expired();
+                // the client only discovers the eviction on its next
+                // append (StreamExpired) — leave the operator a trail
+                crate::warn!(
+                    "stream",
+                    "evicted idle stream conn={conn} stream_id={id} \
+                     idle_ms={} ttl_ms={} reason=ttl",
+                    idle.as_millis(),
+                    ttl.as_millis()
+                );
             }
         }
     }

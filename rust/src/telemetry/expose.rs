@@ -43,10 +43,27 @@ impl MetricsHandle {
     }
 }
 
+/// A per-scrape hook appending extra Prometheus text to the metrics
+/// page (e.g. the proxy tier's per-backend counters). Called once per
+/// scrape, after the registry pages.
+pub type ExtraPage = Arc<dyn Fn() -> String + Send + Sync>;
+
 /// Bind `addr` (e.g. `127.0.0.1:9200`, port `0` for ephemeral) and
 /// serve the registry as Prometheus text until
 /// [`MetricsHandle::stop`].
 pub fn serve_metrics(addr: &str, telemetry: Arc<Telemetry>) -> Result<MetricsHandle> {
+    serve_metrics_with(addr, telemetry, Arc::new(String::new))
+}
+
+/// [`serve_metrics`] with an [`ExtraPage`] hook: every scrape appends
+/// `extra()`'s output after the registry pages (and before the
+/// build-info gauge). `/healthz` is unaffected — liveness probes never
+/// walk the registry or the hook.
+pub fn serve_metrics_with(
+    addr: &str,
+    telemetry: Arc<Telemetry>,
+    extra: ExtraPage,
+) -> Result<MetricsHandle> {
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     let local = listener.local_addr()?;
@@ -62,7 +79,7 @@ pub fn serve_metrics(addr: &str, telemetry: Arc<Telemetry>) -> Result<MetricsHan
                     Ok((stream, _peer)) => {
                         // scrapes are tiny and rare: handle inline so a
                         // single thread bounds resource use
-                        let _ = answer_scrape(stream, &telemetry);
+                        let _ = answer_scrape(stream, &telemetry, &*extra);
                     }
                     Err(e) if e.kind() == ErrorKind::WouldBlock => {
                         std::thread::sleep(Duration::from_millis(20));
@@ -79,7 +96,11 @@ pub fn serve_metrics(addr: &str, telemetry: Arc<Telemetry>) -> Result<MetricsHan
 }
 
 /// Read one HTTP request head and answer it with the metrics page.
-fn answer_scrape(mut stream: TcpStream, telemetry: &Telemetry) -> std::io::Result<()> {
+fn answer_scrape(
+    mut stream: TcpStream,
+    telemetry: &Telemetry,
+    extra: &(dyn Fn() -> String + Send + Sync),
+) -> std::io::Result<()> {
     stream.set_nonblocking(false)?;
     stream.set_read_timeout(Some(Duration::from_secs(2)))?;
     stream.set_write_timeout(Some(Duration::from_secs(5)))?;
@@ -107,6 +128,7 @@ fn answer_scrape(mut stream: TcpStream, telemetry: &Telemetry) -> std::io::Resul
         // and the constant build-info gauge
         let mut page = telemetry.snapshot().to_prometheus();
         page.push_str(&telemetry.stream_stats().to_prometheus());
+        page.push_str(&extra());
         page.push_str(build_info_line());
         ("200 OK", page)
     } else {

@@ -33,10 +33,14 @@
 
 pub mod expose;
 pub mod histogram;
+pub mod proxy;
 pub mod registry;
 pub mod snapshot;
 
-pub use expose::{serve_metrics, MetricsHandle};
+pub use expose::{serve_metrics, serve_metrics_with, ExtraPage, MetricsHandle};
+pub use proxy::{
+    BackendSnapshot, ProxyStats, BACKEND_DOWN, BACKEND_DRAINING, BACKEND_UP,
+};
 pub use histogram::{
     bucket_index, bucket_upper_us, HistogramSummary, ShardedHistogram, N_LATENCY_BUCKETS,
 };

@@ -1,0 +1,384 @@
+//! Per-backend counters for the proxy tier (`impulse proxy`).
+//!
+//! The proxy's health/failover machinery keeps its own accounting,
+//! separate from the per-process [`Telemetry`] registry: the numbers
+//! here describe the *fleet* (which backend is up, where requests
+//! went, what was re-submitted after a death), not one engine's
+//! workload counters. They are deliberately **not** part of the
+//! pinned `StatsResponse` wire struct — the proxy exposes them only
+//! on its Prometheus page, via the [`ExtraPage`] hook of
+//! [`serve_metrics_with`].
+//!
+//! [`Telemetry`]: super::Telemetry
+//! [`ExtraPage`]: super::ExtraPage
+//! [`serve_metrics_with`]: super::serve_metrics_with
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+/// State code for a healthy backend taking new work.
+pub const BACKEND_UP: u8 = 0;
+/// State code for a suspect backend: finishes what it has, gets new
+/// work only when every `Up` peer is worse.
+pub const BACKEND_DRAINING: u8 = 1;
+/// State code for a dead backend: link torn down, reconnect loop
+/// running, never routed to.
+pub const BACKEND_DOWN: u8 = 2;
+
+/// One backend's cells. All plain atomics — updated from the client
+/// listener, the per-link reader threads, and the health prober
+/// without coordination.
+struct BackendCells {
+    addr: String,
+    state: AtomicU8,
+    in_flight: AtomicU64,
+    requests: AtomicU64,
+    retries: AtomicU64,
+    failovers: AtomicU64,
+    spills: AtomicU64,
+    health_failures: AtomicU64,
+    streams_lost: AtomicU64,
+}
+
+/// A point-in-time copy of one backend's cells (see
+/// [`ProxyStats::snapshot`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BackendSnapshot {
+    /// The backend's address as given on the command line.
+    pub addr: String,
+    /// Lifecycle state code ([`BACKEND_UP`] / [`BACKEND_DRAINING`] /
+    /// [`BACKEND_DOWN`]).
+    pub state: u8,
+    /// Requests currently forwarded and awaiting a response.
+    pub in_flight: u64,
+    /// Requests ever forwarded to this backend (including
+    /// re-submissions that landed here).
+    pub requests: u64,
+    /// In-flight requests this backend lost (died holding them) that
+    /// were re-submitted to a peer.
+    pub retries: u64,
+    /// Times this backend's link died while it was not already down.
+    pub failovers: u64,
+    /// New requests diverted *away* from this backend because it was
+    /// soft-limited or draining while a healthier peer had capacity.
+    pub spills: u64,
+    /// Active health probes that failed.
+    pub health_failures: u64,
+    /// Pinned streams whose membrane state died with this backend.
+    pub streams_lost: u64,
+}
+
+/// The proxy tier's per-backend accounting (see module docs).
+pub struct ProxyStats {
+    backends: Vec<BackendCells>,
+    /// Requests answered with `BackendLost` because no healthy
+    /// backend remained (not attributable to any one backend).
+    no_backend: AtomicU64,
+}
+
+impl ProxyStats {
+    /// Cells for `addrs`, all starting [`BACKEND_DOWN`] with zeroed
+    /// counters — backends count as up only once their link connects.
+    pub fn new(addrs: &[String]) -> ProxyStats {
+        ProxyStats {
+            backends: addrs
+                .iter()
+                .map(|a| BackendCells {
+                    addr: a.clone(),
+                    state: AtomicU8::new(BACKEND_DOWN),
+                    in_flight: AtomicU64::new(0),
+                    requests: AtomicU64::new(0),
+                    retries: AtomicU64::new(0),
+                    failovers: AtomicU64::new(0),
+                    spills: AtomicU64::new(0),
+                    health_failures: AtomicU64::new(0),
+                    streams_lost: AtomicU64::new(0),
+                })
+                .collect(),
+            no_backend: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of backends tracked.
+    pub fn len(&self) -> usize {
+        self.backends.len()
+    }
+
+    /// True when no backends are tracked (never the case for a
+    /// running proxy — the CLI requires at least one `--backend`).
+    pub fn is_empty(&self) -> bool {
+        self.backends.is_empty()
+    }
+
+    /// Swap backend `idx`'s state code, returning the previous one.
+    /// The swap is the proxy's idempotence guard: concurrent death
+    /// reports race here and only the first transition acts.
+    pub fn set_state(&self, idx: usize, state: u8) -> u8 {
+        self.backends[idx].state.swap(state, Ordering::SeqCst)
+    }
+
+    /// Backend `idx`'s current state code.
+    pub fn state(&self, idx: usize) -> u8 {
+        self.backends[idx].state.load(Ordering::SeqCst)
+    }
+
+    /// Move backend `idx` from `from` to `to` only if it is still in
+    /// `from` — the health prober's guard against resurrecting (or
+    /// demoting) a backend whose state changed under it.
+    pub fn transition(&self, idx: usize, from: u8, to: u8) -> bool {
+        self.backends[idx]
+            .state
+            .compare_exchange(from, to, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+    }
+
+    /// Backends currently [`BACKEND_UP`].
+    pub fn up_count(&self) -> usize {
+        self.backends
+            .iter()
+            .filter(|b| b.state.load(Ordering::SeqCst) == BACKEND_UP)
+            .count()
+    }
+
+    /// A request was forwarded to backend `idx`.
+    pub fn record_request(&self, idx: usize) {
+        self.backends[idx].requests.fetch_add(1, Ordering::Relaxed);
+        self.backends[idx].in_flight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A forwarded request to backend `idx` completed (answered,
+    /// re-submitted elsewhere, or failed).
+    pub fn record_done(&self, idx: usize) {
+        self.backends[idx].in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Requests currently in flight to backend `idx`.
+    pub fn in_flight(&self, idx: usize) -> u64 {
+        self.backends[idx].in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Backend `idx` died holding a request that was re-submitted.
+    pub fn record_retry(&self, idx: usize) {
+        self.backends[idx].retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Backend `idx`'s link died (counted once per death).
+    pub fn record_failover(&self, idx: usize) {
+        self.backends[idx].failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A new request avoided backend `idx` (soft-limited/draining).
+    pub fn record_spill(&self, idx: usize) {
+        self.backends[idx].spills.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An active health probe of backend `idx` failed.
+    pub fn record_health_failure(&self, idx: usize) {
+        self.backends[idx].health_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A stream pinned to backend `idx` died with it.
+    pub fn record_stream_lost(&self, idx: usize) {
+        self.backends[idx].streams_lost.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was answered `BackendLost` with no healthy backend
+    /// left to blame.
+    pub fn record_no_backend(&self) {
+        self.no_backend.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copies of every backend's cells.
+    pub fn snapshot(&self) -> Vec<BackendSnapshot> {
+        self.backends
+            .iter()
+            .map(|b| BackendSnapshot {
+                addr: b.addr.clone(),
+                state: b.state.load(Ordering::SeqCst),
+                in_flight: b.in_flight.load(Ordering::Relaxed),
+                requests: b.requests.load(Ordering::Relaxed),
+                retries: b.retries.load(Ordering::Relaxed),
+                failovers: b.failovers.load(Ordering::Relaxed),
+                spills: b.spills.load(Ordering::Relaxed),
+                health_failures: b.health_failures.load(Ordering::Relaxed),
+                streams_lost: b.streams_lost.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Render the fleet as Prometheus text (0.0.4), one labelled line
+    /// per backend per metric. Appended to the proxy's metrics page
+    /// after the registry pages.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let snaps = self.snapshot();
+        let mut out = String::with_capacity(1024);
+        out.push_str(
+            "# HELP impulse_proxy_backend_up Whether the backend is routable (1 = up, 0 = draining or down).\n\
+             # TYPE impulse_proxy_backend_up gauge\n",
+        );
+        for s in &snaps {
+            let up = if s.state == BACKEND_UP { 1 } else { 0 };
+            let _ = writeln!(out, "impulse_proxy_backend_up{{backend=\"{}\"}} {}", s.addr, up);
+        }
+        out.push_str(
+            "# HELP impulse_proxy_backend_state Lifecycle state code (0 = up, 1 = draining, 2 = down).\n\
+             # TYPE impulse_proxy_backend_state gauge\n",
+        );
+        for s in &snaps {
+            let _ =
+                writeln!(out, "impulse_proxy_backend_state{{backend=\"{}\"}} {}", s.addr, s.state);
+        }
+        out.push_str(
+            "# HELP impulse_proxy_in_flight Requests forwarded and awaiting a backend response.\n\
+             # TYPE impulse_proxy_in_flight gauge\n",
+        );
+        for s in &snaps {
+            let _ =
+                writeln!(out, "impulse_proxy_in_flight{{backend=\"{}\"}} {}", s.addr, s.in_flight);
+        }
+        out.push_str(
+            "# HELP impulse_proxy_requests_total Requests forwarded to the backend (including re-submissions that landed there).\n\
+             # TYPE impulse_proxy_requests_total counter\n",
+        );
+        for s in &snaps {
+            let _ =
+                writeln!(out, "impulse_proxy_requests_total{{backend=\"{}\"}} {}", s.addr, s.requests);
+        }
+        out.push_str(
+            "# HELP impulse_proxy_retries_total In-flight requests the backend died holding that were re-submitted to a peer.\n\
+             # TYPE impulse_proxy_retries_total counter\n",
+        );
+        for s in &snaps {
+            let _ =
+                writeln!(out, "impulse_proxy_retries_total{{backend=\"{}\"}} {}", s.addr, s.retries);
+        }
+        out.push_str(
+            "# HELP impulse_proxy_failovers_total Times the backend's link died while it held Up or Draining state.\n\
+             # TYPE impulse_proxy_failovers_total counter\n",
+        );
+        for s in &snaps {
+            let _ = writeln!(
+                out,
+                "impulse_proxy_failovers_total{{backend=\"{}\"}} {}",
+                s.addr, s.failovers
+            );
+        }
+        out.push_str(
+            "# HELP impulse_proxy_spills_total New requests diverted away from the backend while it was soft-limited or draining.\n\
+             # TYPE impulse_proxy_spills_total counter\n",
+        );
+        for s in &snaps {
+            let _ = writeln!(out, "impulse_proxy_spills_total{{backend=\"{}\"}} {}", s.addr, s.spills);
+        }
+        out.push_str(
+            "# HELP impulse_proxy_health_failures_total Active health probes that failed.\n\
+             # TYPE impulse_proxy_health_failures_total counter\n",
+        );
+        for s in &snaps {
+            let _ = writeln!(
+                out,
+                "impulse_proxy_health_failures_total{{backend=\"{}\"}} {}",
+                s.addr, s.health_failures
+            );
+        }
+        out.push_str(
+            "# HELP impulse_proxy_streams_lost_total Pinned streams whose membrane state died with the backend.\n\
+             # TYPE impulse_proxy_streams_lost_total counter\n",
+        );
+        for s in &snaps {
+            let _ = writeln!(
+                out,
+                "impulse_proxy_streams_lost_total{{backend=\"{}\"}} {}",
+                s.addr, s.streams_lost
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP impulse_proxy_no_backend_total Requests answered BackendLost with no healthy backend left.\n\
+             # TYPE impulse_proxy_no_backend_total counter\n\
+             impulse_proxy_no_backend_total {}",
+            self.no_backend.load(Ordering::Relaxed)
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect()
+    }
+
+    #[test]
+    fn backends_start_down_with_zeroed_counters() {
+        let s = ProxyStats::new(&addrs(2));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.up_count(), 0);
+        for b in s.snapshot() {
+            assert_eq!(b.state, BACKEND_DOWN);
+            assert_eq!(
+                (b.in_flight, b.requests, b.retries, b.failovers, b.spills),
+                (0, 0, 0, 0, 0)
+            );
+        }
+    }
+
+    #[test]
+    fn set_state_swaps_and_reports_the_prior_state() {
+        let s = ProxyStats::new(&addrs(1));
+        assert_eq!(s.set_state(0, BACKEND_UP), BACKEND_DOWN);
+        assert_eq!(s.up_count(), 1);
+        // the swap is the idempotence guard: a second death report
+        // sees Down and must not double-fire
+        assert_eq!(s.set_state(0, BACKEND_DOWN), BACKEND_UP);
+        assert_eq!(s.set_state(0, BACKEND_DOWN), BACKEND_DOWN);
+    }
+
+    #[test]
+    fn transition_is_a_guarded_cas() {
+        let s = ProxyStats::new(&addrs(1));
+        assert!(s.transition(0, BACKEND_DOWN, BACKEND_UP));
+        // stale transitions (wrong `from`) must not fire
+        assert!(!s.transition(0, BACKEND_DOWN, BACKEND_DRAINING));
+        assert_eq!(s.state(0), BACKEND_UP);
+    }
+
+    #[test]
+    fn request_and_done_track_in_flight() {
+        let s = ProxyStats::new(&addrs(1));
+        s.record_request(0);
+        s.record_request(0);
+        assert_eq!(s.in_flight(0), 2);
+        s.record_done(0);
+        assert_eq!(s.in_flight(0), 1);
+        let snap = &s.snapshot()[0];
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.in_flight, 1);
+    }
+
+    #[test]
+    fn prometheus_page_labels_every_backend_and_parses_cleanly() {
+        let s = ProxyStats::new(&addrs(2));
+        s.set_state(0, BACKEND_UP);
+        s.record_request(0);
+        s.record_retry(1);
+        s.record_failover(1);
+        s.record_spill(1);
+        s.record_no_backend();
+        let page = s.to_prometheus();
+        assert!(page.contains("impulse_proxy_backend_up{backend=\"127.0.0.1:9000\"} 1"), "{page}");
+        assert!(page.contains("impulse_proxy_backend_up{backend=\"127.0.0.1:9001\"} 0"), "{page}");
+        assert!(page.contains("impulse_proxy_requests_total{backend=\"127.0.0.1:9000\"} 1"));
+        assert!(page.contains("impulse_proxy_retries_total{backend=\"127.0.0.1:9001\"} 1"));
+        assert!(page.contains("impulse_proxy_failovers_total{backend=\"127.0.0.1:9001\"} 1"));
+        assert!(page.contains("impulse_proxy_spills_total{backend=\"127.0.0.1:9001\"} 1"));
+        assert!(page.contains("impulse_proxy_no_backend_total 1"));
+        // same shape rule the registry pages follow: every sample line
+        // is `name{labels} value` with no internal spaces
+        for line in page.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad sample line: {line}");
+        }
+    }
+}

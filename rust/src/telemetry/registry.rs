@@ -112,8 +112,21 @@ impl StreamStats {
              # TYPE impulse_streams_rejected_total counter\n\
              impulse_streams_rejected_total {}\n\
              # TYPE impulse_stream_appends_total counter\n\
-             impulse_stream_appends_total {}\n",
-            self.active, self.opened, self.closed, self.expired, self.rejected, self.appends,
+             impulse_stream_appends_total {}\n\
+             # HELP impulse_streams_evicted_reason Streams lost to pressure, by reason: \
+             ttl = idle sessions evicted by the TTL sweep, cap = opens rejected at the \
+             max-streams cap.\n\
+             # TYPE impulse_streams_evicted_reason counter\n\
+             impulse_streams_evicted_reason{{reason=\"ttl\"}} {}\n\
+             impulse_streams_evicted_reason{{reason=\"cap\"}} {}\n",
+            self.active,
+            self.opened,
+            self.closed,
+            self.expired,
+            self.rejected,
+            self.appends,
+            self.expired,
+            self.rejected,
         )
     }
 }

@@ -1,0 +1,334 @@
+//! End-to-end tests of the fault-tolerant proxy tier: route-through
+//! parity with a direct connection (bit-identical outputs, flags and
+//! trace-echo trailers passing through), zero lost idempotent
+//! one-shots when a backend is killed mid-burst, stream pinning
+//! across a balanced fleet, honest `BackendLost` answers (never a
+//! hang) when a pinned backend dies, and soft-limit spill routing.
+
+use impulse::coordinator::{ServerOptions, WorkloadInput};
+use impulse::data::SentimentArtifacts;
+use impulse::macro_sim::MacroConfig;
+use impulse::obs::trace::TraceRecorder;
+use impulse::proxy::{
+    serve_proxy, FaultRelay, ProxyCore, ProxyOptions, ProxyServeHandle,
+};
+use impulse::serve::{
+    decode_backpressure, serve_tcp, ErrorCode, FrameClient, ServeCore, ServerError,
+    TcpServeHandle, CAP_BACKPRESSURE, CAP_TRACE_ECHO, PROTOCOL_VERSION,
+};
+use impulse::snn::SentimentNetwork;
+use impulse::telemetry::{Telemetry, TelemetryConfig};
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const VOCAB: i64 = 20; // SentimentArtifacts::synthetic vocabulary
+
+fn start_backend(seed: u64, opts: ServerOptions) -> (Arc<ServeCore>, TcpServeHandle) {
+    let a = SentimentArtifacts::synthetic(seed);
+    let core = Arc::new(
+        ServeCore::start_with(opts, VOCAB, move || {
+            SentimentNetwork::from_artifacts(&a, MacroConfig::fast())
+        })
+        .unwrap(),
+    );
+    let handle = serve_tcp("127.0.0.1:0", Arc::clone(&core)).unwrap();
+    (core, handle)
+}
+
+/// Proxy options tightened for tests: fast health rounds and
+/// reconnect attempts so failure detection fits a test budget.
+fn start_proxy(backends: Vec<String>) -> (Arc<ProxyCore>, ProxyServeHandle) {
+    let mut opts = ProxyOptions::new(backends);
+    opts.health_interval = Duration::from_millis(100);
+    opts.health_timeout = Duration::from_millis(750);
+    opts.reconnect_base = Duration::from_millis(50);
+    let core = ProxyCore::start(opts).unwrap();
+    let handle = serve_proxy("127.0.0.1:0", Arc::clone(&core)).unwrap();
+    (core, handle)
+}
+
+/// Block until the proxy reports `n` backends `Up` (links connect
+/// asynchronously after [`ProxyCore::start`]).
+fn wait_up(core: &ProxyCore, n: usize) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while core.up_backends() < n {
+        assert!(
+            Instant::now() < deadline,
+            "only {}/{n} backends came up within 10s",
+            core.up_backends()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn connect(addr: SocketAddr) -> FrameClient {
+    let mut c = FrameClient::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    c.hello().unwrap();
+    c
+}
+
+/// A deterministic sentiment request derived from `i`.
+fn words(i: i64) -> WorkloadInput {
+    WorkloadInput::Words(vec![(i * 7 + 3) % VOCAB, (i * 5 + 1) % VOCAB, i % VOCAB])
+}
+
+/// Route-through parity: the same requests through the proxy and
+/// straight at the backend produce bit-identical outputs, the
+/// backend's backpressure advertisement survives the hop, and the
+/// trace-echo trailer a tracing backend attaches reaches the client.
+#[test]
+fn proxied_requests_are_bit_identical_and_flags_flow_through() {
+    let seed = 71;
+    let trace = Arc::new(TraceRecorder::new());
+    let (bcore, bhandle) = start_backend(
+        seed,
+        ServerOptions { trace: Some(Arc::clone(&trace)), ..ServerOptions::default() },
+    );
+    let (pcore, phandle) = start_proxy(vec![bhandle.local_addr().to_string()]);
+    wait_up(&pcore, 1);
+
+    let mut direct = connect(bhandle.local_addr());
+    let mut proxied = FrameClient::connect(phandle.local_addr()).unwrap();
+    proxied.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    // the proxy negotiates hello locally, granting the full cap set
+    let (ver, caps) = proxied.hello_with_caps(CAP_BACKPRESSURE | CAP_TRACE_ECHO).unwrap();
+    assert_eq!(ver, PROTOCOL_VERSION);
+    assert_eq!(caps, CAP_BACKPRESSURE | CAP_TRACE_ECHO);
+
+    for i in 0..8 {
+        let input = words(i);
+        let d = direct.call(&input).and_then(|p| direct.wait(&p)).unwrap();
+        let x = proxied.call(&input).and_then(|p| proxied.wait(&p)).unwrap();
+        assert_eq!(
+            (d.pred, d.v_out, &d.v_all, d.cycles),
+            (x.pred, x.v_out, &x.v_all, x.cycles),
+            "request {i}: proxied result differs from direct"
+        );
+    }
+
+    // the backend's backpressure advertisement is relayed verbatim
+    let (snap, flags) = proxied.stats().unwrap();
+    assert!(
+        decode_backpressure(flags).is_some(),
+        "stats flags {flags:#06x} lost the backpressure advertisement at the proxy hop"
+    );
+    assert!(snap.kinds.iter().map(|k| k.submitted).sum::<u64>() >= 16);
+
+    // the trace-echo trailer flows through too (the backend traces)
+    proxied.set_trace_echo(true);
+    let p = proxied.call(&words(3)).unwrap();
+    let (_, echo) = proxied.wait_with_trace(&p).unwrap();
+    assert!(echo.is_some(), "trace-echo trailer dropped at the proxy hop");
+
+    phandle.stop();
+    pcore.shutdown();
+    bhandle.stop();
+    bcore.shutdown();
+}
+
+/// The acceptance criterion: kill one of two backends mid-burst and
+/// every idempotent one-shot still gets its answer — in-flight work
+/// on the dead backend is transparently re-submitted to the survivor.
+#[test]
+fn backend_kill_mid_burst_loses_no_idempotent_one_shots() {
+    let seed = 83;
+    let (a_core, a_handle) = start_backend(seed, ServerOptions::default());
+    let (b_core, b_handle) = start_backend(seed, ServerOptions::default());
+    // backend B sits behind the fault relay so it can be "kill -9"ed
+    let relay = FaultRelay::start(&b_handle.local_addr().to_string()).unwrap();
+    let (pcore, phandle) = start_proxy(vec![
+        a_handle.local_addr().to_string(),
+        relay.local_addr().to_string(),
+    ]);
+    wait_up(&pcore, 2);
+
+    let mut client = connect(phandle.local_addr());
+    let n = 40;
+    let mut pendings = Vec::with_capacity(n);
+    for i in 0..n {
+        pendings.push(client.call(&words(i as i64)).unwrap());
+        if i == n / 2 {
+            // connections reset, port stops answering — mid-burst
+            relay.kill();
+        }
+    }
+    for (i, p) in pendings.iter().enumerate() {
+        let out = client
+            .wait_timeout(p, Duration::from_secs(30))
+            .unwrap_or_else(|e| panic!("request {i} lost in the failover: {e:#}"));
+        assert!(out.cycles > 0, "request {i}: missing cost accounting");
+    }
+
+    let snap = pcore.stats().snapshot();
+    assert!(snap[1].failovers >= 1, "the dead backend's failover was never recorded: {snap:?}");
+    assert!(snap[0].requests > 0, "the survivor served nothing: {snap:?}");
+
+    phandle.stop();
+    pcore.shutdown();
+    relay.stop();
+    a_handle.stop();
+    a_core.shutdown();
+    b_handle.stop();
+    b_core.shutdown();
+}
+
+/// Streams pin to one backend for their whole life: interleaved with
+/// load-balanced one-shots (which spread over both backends), every
+/// append/read-out/close reaches the backend holding that stream's
+/// membrane state. A closed stream answers `StreamExpired`, proving
+/// the pin was released.
+#[test]
+fn streams_stay_pinned_across_a_balanced_fleet() {
+    let seed = 91;
+    let (a_core, a_handle) = start_backend(seed, ServerOptions::default());
+    let (b_core, b_handle) = start_backend(seed, ServerOptions::default());
+    let (pcore, phandle) = start_proxy(vec![
+        a_handle.local_addr().to_string(),
+        b_handle.local_addr().to_string(),
+    ]);
+    wait_up(&pcore, 2);
+
+    let mut client = connect(phandle.local_addr());
+    // keep one-shots in flight while opening, so the least-loaded
+    // picks spread opens (and traffic) over both backends
+    let mut pendings = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..4i64 {
+        pendings.push(client.call(&words(i)).unwrap());
+        handles.push(client.stream_open().unwrap());
+    }
+    for p in &pendings {
+        client.wait(p).unwrap();
+    }
+
+    for round in 0..5i64 {
+        for (i, h) in handles.iter().enumerate() {
+            let ack = client
+                .stream_append(h, &words(round * 4 + i as i64))
+                .unwrap_or_else(|e| panic!("round {round} stream {i}: append mis-routed: {e:#}"));
+            assert_eq!(ack.stream_id, h.id(), "ack for the wrong stream");
+        }
+    }
+    for (i, h) in handles.iter().enumerate() {
+        let out = client.stream_read_out(h).unwrap();
+        assert_eq!(out.v_all.len(), 1, "stream {i}: sentiment read-out shape");
+        let ack = client.stream_close(h).unwrap();
+        assert!(ack.cycles > 0, "stream {i}: missing cumulative cycles");
+    }
+
+    // both backends took part — the pins were genuinely spread
+    let snap = pcore.stats().snapshot();
+    assert!(
+        snap.iter().all(|b| b.requests > 0),
+        "traffic never spread over the fleet: {snap:?}"
+    );
+
+    // a closed stream's pin is gone: the proxy answers StreamExpired
+    // itself (same contract a backend honors for unknown streams)
+    let err = client.stream_append(&handles[0], &words(1)).unwrap_err();
+    let se = err.downcast_ref::<ServerError>().expect("an error frame, not a transport failure");
+    assert_eq!(se.error_code(), Some(ErrorCode::StreamExpired), "{se}");
+
+    phandle.stop();
+    pcore.shutdown();
+    a_handle.stop();
+    a_core.shutdown();
+    b_handle.stop();
+    b_core.shutdown();
+}
+
+/// When the backend holding a pinned stream dies, later operations on
+/// that stream answer `BackendLost` — an honest error, never a hang —
+/// and one-shots with no backend left get the same honest refusal.
+#[test]
+fn pinned_stream_death_answers_backend_lost_not_a_hang() {
+    let seed = 77;
+    let (b_core, b_handle) = start_backend(seed, ServerOptions::default());
+    let relay = FaultRelay::start(&b_handle.local_addr().to_string()).unwrap();
+    let (pcore, phandle) = start_proxy(vec![relay.local_addr().to_string()]);
+    wait_up(&pcore, 1);
+
+    let mut client = connect(phandle.local_addr());
+    let h = client.stream_open().unwrap();
+    client.stream_append(&h, &words(1)).unwrap();
+
+    relay.kill();
+    // the failover must record the pinned stream's loss
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while pcore.stats().snapshot()[0].streams_lost == 0 {
+        assert!(Instant::now() < deadline, "stream loss never recorded after the kill");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let err = client.stream_append(&h, &words(2)).unwrap_err();
+    let se = err.downcast_ref::<ServerError>().expect("an error frame, not a transport failure");
+    assert_eq!(se.error_code(), Some(ErrorCode::BackendLost), "{se}");
+
+    // a one-shot with every backend down is refused the same way
+    let p = client.call(&words(3)).unwrap();
+    let err = client.wait_timeout(&p, Duration::from_secs(10)).unwrap_err();
+    let se = err.downcast_ref::<ServerError>().expect("an error frame, not a timeout");
+    assert_eq!(se.error_code(), Some(ErrorCode::BackendLost), "{se}");
+
+    let snap = pcore.stats().snapshot();
+    assert!(snap[0].failovers >= 1 && snap[0].streams_lost >= 1, "{snap:?}");
+
+    phandle.stop();
+    pcore.shutdown();
+    relay.stop();
+    b_handle.stop();
+    b_core.shutdown();
+}
+
+/// A backend advertising the soft limit sheds new one-shots to its
+/// unconstrained peer, and the diversion is counted as a spill.
+#[test]
+fn soft_limited_backend_spills_new_work_to_its_peer() {
+    let seed = 67;
+    // backend A advertises the soft limit on every response (limit 0
+    // = always, the drain convention)
+    let tel = Arc::new(Telemetry::new(TelemetryConfig {
+        queue_soft_limit: 0,
+        ..TelemetryConfig::default()
+    }));
+    let (a_core, a_handle) = start_backend(
+        seed,
+        ServerOptions { telemetry: Some(tel), ..ServerOptions::default() },
+    );
+    let (b_core, b_handle) = start_backend(seed, ServerOptions::default());
+    let (pcore, phandle) = start_proxy(vec![
+        a_handle.local_addr().to_string(),
+        b_handle.local_addr().to_string(),
+    ]);
+    wait_up(&pcore, 2);
+
+    let mut client = connect(phandle.local_addr());
+    // prime: with both backends idle the tie-break picks the first —
+    // its response carries the soft-limit advertisement the proxy
+    // folds into its routing state
+    client.call(&words(0)).and_then(|p| client.wait(&p)).unwrap();
+    let snap = pcore.stats().snapshot();
+    assert_eq!(snap[0].requests, 1, "the idle tie-break must pick the first backend: {snap:?}");
+
+    // every later one-shot sheds to B, charging a spill against A
+    for i in 1..=6i64 {
+        client.call(&words(i)).and_then(|p| client.wait(&p)).unwrap();
+    }
+    let snap = pcore.stats().snapshot();
+    assert_eq!(snap[0].requests, 1, "the soft-limited backend kept taking work: {snap:?}");
+    assert!(snap[1].requests >= 6, "{snap:?}");
+    assert!(snap[0].spills >= 6, "the shed work was not counted as spills: {snap:?}");
+
+    // and the fleet counters expose it on the metrics page
+    let page = pcore.stats().to_prometheus();
+    assert!(page.contains("impulse_proxy_spills_total"), "{page}");
+
+    phandle.stop();
+    pcore.shutdown();
+    a_handle.stop();
+    a_core.shutdown();
+    b_handle.stop();
+    b_core.shutdown();
+}
